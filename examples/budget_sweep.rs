@@ -1,0 +1,63 @@
+//! Budget-sweep demo (paper E2): scan the tree node budget M and depth
+//! bound D_max on a small code-profile workload and print the
+//! throughput/acceptance trade-off — the non-monotonic "sweet spot"
+//! behaviour of Table 2 / Fig 4, at example scale.
+//!
+//! ```bash
+//! cargo run --release --example budget_sweep -- [conversations]
+//! ```
+
+use anyhow::Result;
+use eagle_pangu::config::RunConfig;
+use eagle_pangu::coordinator::{run_workload, BackendSpec, CoordinatorConfig};
+use eagle_pangu::util::stats::Summary;
+use eagle_pangu::workload::WorkloadSpec;
+use std::path::PathBuf;
+
+fn main() -> Result<()> {
+    let conversations: usize =
+        std::env::args().nth(1).and_then(|a| a.parse().ok()).unwrap_or(6);
+    let backend = if PathBuf::from("artifacts/manifest.json").exists() {
+        BackendSpec::Pjrt { artifact_dir: "artifacts".into() }
+    } else {
+        BackendSpec::Sim { agree_pct: 85 }
+    };
+    let mut workload = WorkloadSpec::default();
+    workload.code_conversations = conversations;
+    workload.chat_conversations = 0;
+    workload.prompt_mean = 48;
+
+    let coord = |run: RunConfig, tag: String, baseline: bool, ea: bool| CoordinatorConfig {
+        world_size: 2,
+        run,
+        workload: workload.clone(),
+        backend: backend.clone(),
+        trace_dir: PathBuf::from(format!("results/budget_sweep_example/{tag}")),
+        run_baseline: baseline,
+        run_ea: ea,
+        verbose: false,
+    };
+
+    let mut base_run = RunConfig::default();
+    base_run.max_new_tokens = 48;
+    let recs = run_workload(&coord(base_run.clone(), "base".into(), true, false))?;
+    let base = Summary::from(&recs.iter().map(|r| r.tok_s).collect::<Vec<_>>()).mean;
+    println!("baseline: {base:.2} Tok/s\n");
+    println!("{:>6} {:>6} | {:>10} {:>8} {:>10}", "M", "Dmax", "EA Tok/s", "speedup", "accept_L");
+
+    for (m, d) in [(4usize, 4usize), (8, 6), (16, 10), (32, 10), (64, 10), (64, 4), (64, 16)] {
+        let mut run = base_run.clone();
+        run.tree.budget = m;
+        run.tree.depth_max = d;
+        let recs = run_workload(&coord(run, format!("m{m}_d{d}"), false, true))?;
+        let tok = Summary::from(&recs.iter().map(|r| r.tok_s).collect::<Vec<_>>()).mean;
+        let accepts: Vec<f64> = recs
+            .iter()
+            .flat_map(|r| r.accept_lens.iter().map(|a| *a as f64))
+            .collect();
+        println!("{:>6} {:>6} | {:>10.2} {:>7.2}x {:>10.2}",
+                 m, d, tok, tok / base.max(1e-9), Summary::from(&accepts).mean);
+    }
+    println!("\nnon-monotonic in both axes — the paper's configuration-dependent sweet spot");
+    Ok(())
+}

@@ -1,0 +1,64 @@
+//! Trace tooling demo: run a tiny workload, then post-process the
+//! structured traces the way the paper's analysis pipeline does —
+//! merge rank files, pair baseline/EA turns, and print the throughput
+//! report plus a per-stage timing digest (paper §4.3's "reproducible
+//! benchmarking and post-hoc diagnosis without ad-hoc logs").
+//!
+//! ```bash
+//! cargo run --release --example trace_inspect
+//! ```
+
+use anyhow::Result;
+use eagle_pangu::config::RunConfig;
+use eagle_pangu::coordinator::{run_workload, BackendSpec, CoordinatorConfig};
+use eagle_pangu::metrics::{pair_turns, ThroughputReport};
+use eagle_pangu::trace::merge_rank_files;
+use eagle_pangu::util::stats::Summary;
+use eagle_pangu::workload::WorkloadSpec;
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+fn main() -> Result<()> {
+    let dir = PathBuf::from("results/trace_inspect_example");
+    let backend = if PathBuf::from("artifacts/manifest.json").exists() {
+        BackendSpec::Pjrt { artifact_dir: "artifacts".into() }
+    } else {
+        BackendSpec::Sim { agree_pct: 85 }
+    };
+    let mut run = RunConfig::default();
+    run.max_new_tokens = 32;
+    run.instrument = true; // per-stage timers -> stage_seconds in traces
+    let cfg = CoordinatorConfig {
+        world_size: 3,
+        run,
+        workload: WorkloadSpec::smoke(),
+        backend,
+        trace_dir: dir.clone(),
+        run_baseline: true,
+        run_ea: true,
+        verbose: false,
+    };
+    run_workload(&cfg)?;
+
+    // --- post-hoc analysis purely from the trace files ---
+    let records = merge_rank_files(&dir)?;
+    println!("merged {} records from {} ranks\n", records.len(), cfg.world_size);
+
+    let report = ThroughputReport::from_pairs(&pair_turns(&records));
+    println!("{}", report.table1());
+
+    // per-stage digest across EA turns (Fig-5-style, from traces alone)
+    let mut stages: BTreeMap<String, Vec<f64>> = BTreeMap::new();
+    for r in records.iter().filter(|r| r.kind == "ea") {
+        for (k, v) in &r.stage_seconds {
+            stages.entry(k.clone()).or_default().push(*v * 1e3);
+        }
+    }
+    println!("per-stage ms/turn (EA):");
+    for (stage, xs) in &stages {
+        let s = Summary::from(xs);
+        println!("  {:<14} mean {:>8.2}  p99 {:>8.2}", stage, s.mean, s.p99);
+    }
+    println!("\nraw traces: {}", dir.join("trace_merged.jsonl").display());
+    Ok(())
+}

@@ -1,0 +1,269 @@
+"""AOT export: lower every (role, mode, S) model variant to HLO *text*.
+
+HLO text — NOT `lowered.compiler_ir("hlo")` protos and NOT `.serialize()` —
+is the interchange format: jax >= 0.5 emits HloModuleProto with 64-bit
+instruction ids which the rust `xla` crate's xla_extension 0.5.1 rejects
+(`proto.id() <= INT_MAX`). The text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/gen_hlo.py).
+
+Checkpoint weights are baked into the HLO as constants: the rust runtime
+then feeds only per-call tensors (tokens/positions/mask/caches), keeping
+the FFI surface small and the request path free of parameter shuffling.
+
+Also emits:
+  * artifacts/manifest.json — dims/contract constants + artifact table
+    (validated by the rust runtime at load time) + grammar parity vectors.
+  * artifacts/golden.json — procedurally-seeded input/output fixtures for
+    the rust runtime smoke tests (inputs are regenerated in rust from the
+    same splitmix64 stream; outputs compared against these values).
+
+Python runs ONCE at build time; never on the request path.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import grammar
+from .config import (
+    CACHE_CAP,
+    DRAFT,
+    DRAFT_S_VARIANTS,
+    FEAT_DIM,
+    TEACHER,
+    TEACHER_S_VARIANTS,
+    VOCAB,
+)
+from .kernels.ref import NEG_INF
+from .model import draft_block_forward, load_params, teacher_block_forward
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True: the default elides big weight constants as
+    # `constant({...})`, which silently destroys the baked-in checkpoint on
+    # the text round-trip. (Found the hard way; see DESIGN.md §7.)
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+# ----------------------------------------------------------------------
+# Module builders
+# ----------------------------------------------------------------------
+
+def _device_params(params):
+    return jax.tree_util.tree_map(jnp.asarray, params)
+
+
+def teacher_fn(params, fused: bool, probe: bool):
+    params = _device_params(params)
+
+    def fn(tokens, positions, mask, k_cache, v_cache):
+        return teacher_block_forward(params, tokens, positions, mask, k_cache,
+                                     v_cache, fused=fused, with_probe=probe)
+    return fn
+
+
+def draft_fn(params, probe: bool):
+    params = _device_params(params)
+
+    def fn(tokens, feats_in, positions, mask, k_cache, v_cache):
+        return draft_block_forward(params, tokens, feats_in, positions, mask,
+                                   k_cache, v_cache, with_probe=probe)
+    return fn
+
+
+def teacher_specs(s: int):
+    d = TEACHER
+    return (
+        jax.ShapeDtypeStruct((s,), I32),                                 # tokens
+        jax.ShapeDtypeStruct((s,), I32),                                 # positions
+        jax.ShapeDtypeStruct((s, CACHE_CAP + s), F32),                   # mask
+        jax.ShapeDtypeStruct((d.layers, CACHE_CAP, d.heads, d.d_head), F32),
+        jax.ShapeDtypeStruct((d.layers, CACHE_CAP, d.heads, d.d_head), F32),
+    )
+
+
+def draft_specs(s: int):
+    d = DRAFT
+    return (
+        jax.ShapeDtypeStruct((s,), I32),
+        jax.ShapeDtypeStruct((s, FEAT_DIM), F32),
+        jax.ShapeDtypeStruct((s,), I32),
+        jax.ShapeDtypeStruct((s, CACHE_CAP + s), F32),
+        jax.ShapeDtypeStruct((d.layers, CACHE_CAP, d.heads, d.d_head), F32),
+        jax.ShapeDtypeStruct((d.layers, CACHE_CAP, d.heads, d.d_head), F32),
+    )
+
+
+# ----------------------------------------------------------------------
+# Golden fixtures (rust smoke tests regenerate the same inputs)
+# ----------------------------------------------------------------------
+
+MASK64 = (1 << 64) - 1
+
+
+class Stream:
+    """splitmix64 stream; mirrored in rust/src/runtime/golden.rs."""
+
+    def __init__(self, seed: int):
+        self.state = seed & MASK64
+
+    def next_u64(self) -> int:
+        self.state = (self.state + 0x9E3779B97F4A7C15) & MASK64
+        z = self.state
+        z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK64
+        z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK64
+        return (z ^ (z >> 31)) & MASK64
+
+    def f32(self) -> float:
+        return (self.next_u64() >> 40) / float(1 << 24) * 2.0 - 1.0
+
+    def f32s(self, *shape) -> np.ndarray:
+        n = int(np.prod(shape))
+        return np.asarray([self.f32() for _ in range(n)], np.float32).reshape(shape)
+
+    def token(self) -> int:
+        return 2 + self.next_u64() % (VOCAB - 2)
+
+
+GOLDEN_S = 8
+GOLDEN_PREFIX = 16
+GOLDEN_SEED = 0x5EED
+
+
+def golden_inputs(role: str):
+    """Procedural inputs for the S=8 golden case: committed prefix t=16,
+    8 new tokens in a causal chain (a degenerate tree)."""
+    st = Stream(GOLDEN_SEED)
+    s, t = GOLDEN_S, GOLDEN_PREFIX
+    d = TEACHER if role == "teacher" else DRAFT
+    tokens = np.asarray([st.token() for _ in range(s)], np.int32)
+    k_cache = st.f32s(d.layers, CACHE_CAP, d.heads, d.d_head)
+    v_cache = st.f32s(d.layers, CACHE_CAP, d.heads, d.d_head)
+    feats = st.f32s(s, FEAT_DIM) if role == "draft" else None
+    positions = np.arange(t, t + s, dtype=np.int32)
+    mask = np.full((s, CACHE_CAP + s), NEG_INF, np.float32)
+    mask[:, :t] = 0.0
+    for i in range(s):
+        for j in range(i + 1):
+            mask[i, CACHE_CAP + j] = 0.0
+    return tokens, feats, positions, mask, k_cache, v_cache
+
+
+def golden_record(name: str, fn, args) -> dict:
+    outs = jax.jit(fn)(*args)
+    logits = np.asarray(outs[0])
+    feats = np.asarray(outs[1])
+    k_new = np.asarray(outs[2])
+    return {
+        "module": name,
+        "seed": GOLDEN_SEED,
+        "prefix_len": GOLDEN_PREFIX,
+        "s": GOLDEN_S,
+        "logits_sample": [float(x) for x in logits[0, :8]],
+        "logits_sum": float(logits.sum()),
+        "logits_argmax_row0": int(logits[0].argmax()),
+        "feats_sum": float(feats.sum()),
+        "k_new_sum": float(k_new.sum()),
+    }
+
+
+# ----------------------------------------------------------------------
+# Entry
+# ----------------------------------------------------------------------
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None, help="comma-separated module names")
+    args = ap.parse_args()
+    out_dir = args.out_dir
+    os.makedirs(out_dir, exist_ok=True)
+
+    teacher = load_params(os.path.join(out_dir, "weights_teacher.npz"))
+    draft = load_params(os.path.join(out_dir, "weights_draft.npz"))
+
+    modules = {}
+    for s in TEACHER_S_VARIANTS:
+        modules[f"teacher_fused_s{s}"] = (teacher_fn(teacher, fused=True, probe=False), teacher_specs(s))
+        modules[f"teacher_eager_s{s}"] = (teacher_fn(teacher, fused=False, probe=False), teacher_specs(s))
+    for s in DRAFT_S_VARIANTS:
+        modules[f"draft_s{s}"] = (draft_fn(draft, probe=False), draft_specs(s))
+    # Analysis-only probe variants (paper Fig 7 attention evidence).
+    modules["draft_probe_s8"] = (draft_fn(draft, probe=True), draft_specs(8))
+    modules["draft_probe_s32"] = (draft_fn(draft, probe=True), draft_specs(32))
+
+    only = set(args.only.split(",")) if args.only else None
+    artifact_table = []
+    for name, (fn, specs) in modules.items():
+        if only and name not in only:
+            continue
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        with open(path, "w") as f:
+            f.write(text)
+        digest = hashlib.sha256(text.encode()).hexdigest()[:16]
+        artifact_table.append({
+            "name": name,
+            "file": f"{name}.hlo.txt",
+            "sha256_16": digest,
+            "bytes": len(text),
+            "inputs": [list(sp.shape) for sp in specs],
+        })
+        print(f"wrote {path} ({len(text) / 1e6:.1f} MB)")
+
+    # Golden fixtures for the rust runtime smoke test.
+    tk, _, pos, msk, kc, vc = golden_inputs("teacher")
+    dtk, dfe, dpos, dmsk, dkc, dvc = golden_inputs("draft")
+    goldens = [
+        golden_record("teacher_fused_s8", teacher_fn(teacher, True, False), (tk, pos, msk, kc, vc)),
+        golden_record("teacher_eager_s8", teacher_fn(teacher, False, False), (tk, pos, msk, kc, vc)),
+        golden_record("draft_s8", draft_fn(draft, False), (dtk, dfe, dpos, dmsk, dkc, dvc)),
+    ]
+    with open(os.path.join(out_dir, "golden.json"), "w") as f:
+        json.dump(goldens, f, indent=2)
+
+    manifest = {
+        "contract": {
+            "vocab": VOCAB,
+            "cache_cap": CACHE_CAP,
+            "feat_dim": FEAT_DIM,
+            "teacher": {"layers": TEACHER.layers, "d_model": TEACHER.d_model,
+                        "heads": TEACHER.heads, "d_head": TEACHER.d_head},
+            "draft": {"layers": DRAFT.layers, "d_model": DRAFT.d_model,
+                      "heads": DRAFT.heads, "d_head": DRAFT.d_head},
+            "teacher_s_variants": list(TEACHER_S_VARIANTS),
+            "draft_s_variants": list(DRAFT_S_VARIANTS),
+            "neg_inf": NEG_INF,
+            "teacher_inputs": ["tokens[s]i32", "positions[s]i32", "mask[s,cap+s]f32",
+                               "k_cache[L,cap,H,Dh]f32", "v_cache[L,cap,H,Dh]f32"],
+            "teacher_outputs": ["logits[s,V]", "feats[s,F]", "k_new[L,s,H,Dh]", "v_new[L,s,H,Dh]"],
+            "draft_inputs": ["tokens[s]i32", "feats_in[s,F]f32", "positions[s]i32",
+                             "mask[s,cap+s]f32", "k_cache[L,cap,H,Dh]f32", "v_cache[L,cap,H,Dh]f32"],
+            "draft_outputs": ["logits[s,V]", "hidden[s,F]", "k_new[L,s,H,Dh]", "v_new[L,s,H,Dh]"],
+        },
+        "artifacts": artifact_table,
+        "grammar_vectors": grammar.grammar_test_vectors(),
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote manifest ({len(artifact_table)} modules) + golden fixtures")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,71 @@
+"""Shared numeric configuration for the EAGLE-Pangu reproduction.
+
+These constants define the static-shape AOT contract between the python
+compile path (L1/L2) and the rust coordinator (L3). The rust side mirrors
+them in `rust/src/config/model.rs`; `aot.py` additionally dumps them into
+`artifacts/manifest.json` so the rust runtime can validate at load time.
+"""
+
+import os
+from dataclasses import dataclass
+
+
+VOCAB = 512
+PAD_ID = 0
+BOS_ID = 1
+# First "real" grammar token id (0 = pad, 1 = bos).
+FIRST_TOKEN = 2
+
+# KV-cache capacity (committed prefix + committed generation), per sequence.
+# Baked into every artifact and recorded in the manifest; the rust runtime
+# adopts whatever the manifest says. 512 fits the CPU-scaled two-turn
+# workload while keeping the per-call KV literal transfer affordable
+# (see DESIGN.md §Perf); must be a multiple of KV_CHUNK.
+CACHE_CAP = int(os.environ.get("EAGLE_CACHE_CAP", "512"))
+
+# Token-block (S) variants compiled per role. The teacher's largest variant
+# must cover the largest speculative node budget in the paper's budget sweep
+# (M = 256, Table 2) plus prefill chunking (S = 128).
+TEACHER_S_VARIANTS = (8, 16, 32, 64, 128, 256)
+DRAFT_S_VARIANTS = (8, 32, 64)
+
+# KV columns fed to the fused kernel are padded up to a multiple of this so
+# the Pallas kernel sees a uniform chunk grid.
+KV_CHUNK = 128
+
+
+@dataclass(frozen=True)
+class ModelDims:
+    """Transformer dimensions (decoder-only, RoPE, pre-LN)."""
+
+    layers: int
+    d_model: int
+    heads: int
+    d_head: int
+    d_ff: int
+    vocab: int = VOCAB
+
+    @property
+    def kv_heads(self) -> int:  # no GQA in this reproduction
+        return self.heads
+
+
+# Teacher ("TinyPangu"): stands in for the Pangu teacher backend.
+TEACHER = ModelDims(layers=4, d_model=128, heads=4, d_head=32, d_ff=512)
+
+# Draft ("TinyEagle"): EAGLE-style feature-conditioned drafter.
+DRAFT = ModelDims(layers=1, d_model=64, heads=2, d_head=32, d_ff=256)
+
+# Dimension of the feature channel the teacher exports for the draft
+# (EAGLE's f_i). The teacher projects its last hidden state to this size;
+# the draft consumes it alongside the token embedding and emits its own
+# hidden state in the same space for depth >= 2 self-conditioning.
+FEAT_DIM = DRAFT.d_model
+
+ROPE_BASE = 10000.0
+
+
+def padded_kv_len(s: int, cache_cap: int = CACHE_CAP, chunk: int = KV_CHUNK) -> int:
+    """Total KV columns (cache + new tokens), padded to the kernel chunk."""
+    t = cache_cap + s
+    return ((t + chunk - 1) // chunk) * chunk

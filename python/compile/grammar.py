@@ -1,0 +1,192 @@
+"""Seeded stochastic token grammar — the synthetic corpus substrate.
+
+The paper evaluates on MT-Bench conversational prompts and HumanEval-style
+coding prompts. Neither is available here (repro band 0), so we substitute a
+deterministic hash-derived grammar over token ids, engineered so that the
+paper's *dynamics* are reproducible:
+
+  * **Learnable**: the context space is small (~4k entries: previous token
+    x 8 topics), so the 1.1M-param teacher memorizes it nearly perfectly
+    while the 0.13M-param draft only partially does — producing the
+    teacher/draft agreement gap that drives accept_L ~ 3.
+  * **Local structure**: the candidate set for the next token depends on
+    the previous token `b` and the sequence topic; the *preference order*
+    additionally rotates with the second-previous token `a` — an order-2
+    effect cheap to represent but impossible to ignore.
+  * **Long-range structure**: the topic is carried by the single token at
+    position 1 (right after BOS). A drafter whose context is truncated to
+    a recent window loses the topic and its proposals collapse — the
+    mechanism behind the paper's E4 negative result and the Fig-7
+    "top-1 attention in far history" evidence.
+  * Two profiles mirror the benchmark families: "code" (HumanEval-style,
+    mostly deterministic) and "chat" (MT-Bench-style, broader branching).
+
+Everything is derived from splitmix64 hashing so python (training corpus)
+and rust (workload generator, rust/src/workload/grammar.rs) produce the
+same language bit-for-bit; `grammar_test_vectors()` emits parity fixtures
+checked by both test suites.
+"""
+
+from __future__ import annotations
+
+from .config import BOS_ID, FIRST_TOKEN, VOCAB
+
+MASK64 = (1 << 64) - 1
+NUM_TOPICS = 8
+
+# Per-profile seeds and branching tables. branch_w64[i] = weight (out of 64)
+# of a context having (i+1) candidate continuations.
+PROFILES = {
+    "code": {"seed": 0x9E3779B97F4A7C15, "branch_w64": (44, 16, 4, 0)},
+    "chat": {"seed": 0xC2B2AE3D27D4EB4F, "branch_w64": (22, 22, 13, 7)},
+}
+
+# Candidate probability profiles by candidate-set size, in 1/256 units,
+# applied to the rotated preference order.
+PROB_W256 = {
+    1: (256,),
+    2: (204, 52),
+    3: (179, 51, 26),
+    4: (153, 51, 31, 21),
+}
+
+
+def splitmix64(x: int) -> int:
+    """Standard splitmix64 finalizer; mirrored exactly in rust."""
+    x = (x + 0x9E3779B97F4A7C15) & MASK64
+    z = x
+    z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK64
+    z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK64
+    return (z ^ (z >> 31)) & MASK64
+
+
+def topic_of(topic_token: int) -> int:
+    return topic_token % NUM_TOPICS
+
+
+def context_hash(b: int, topic_id: int, profile: str) -> int:
+    seed = PROFILES[profile]["seed"]
+    return splitmix64((b * 0x100000001B3 ^ topic_id * 0x1000193 ^ seed) & MASK64)
+
+
+def base_candidates(b: int, topic_id: int, profile: str) -> list[int]:
+    """Unrotated candidate set for context (b, topic)."""
+    h = context_hash(b, topic_id, profile)
+    sel = h & 63
+    n = 1
+    acc = 0
+    for i, w in enumerate(PROFILES[profile]["branch_w64"]):
+        acc += w
+        if sel < acc:
+            n = i + 1
+            break
+    toks = []
+    hh = h
+    for i in range(n):
+        hh = splitmix64(hh ^ (i + 1))
+        t = FIRST_TOKEN + (hh % (VOCAB - FIRST_TOKEN))
+        while t in toks:  # linear probe on collision
+            t = FIRST_TOKEN + ((t - FIRST_TOKEN + 1) % (VOCAB - FIRST_TOKEN))
+        toks.append(t)
+    return toks
+
+
+def dist(a: int, b: int, topic_id: int, profile: str) -> tuple[list[int], list[int]]:
+    """Next-token candidates in preference order, with weights (1/256).
+
+    The preference order is the base candidate list rotated by `a mod n`,
+    so the most likely continuation depends on the second-previous token —
+    an order-2 dependency over an order-1-sized context table.
+    """
+    toks = base_candidates(b, topic_id, profile)
+    n = len(toks)
+    rot = a % n
+    toks = toks[rot:] + toks[:rot]
+    return toks, list(PROB_W256[n])
+
+
+def greedy_next(a: int, b: int, topic_id: int, profile: str) -> int:
+    return dist(a, b, topic_id, profile)[0][0]
+
+
+def sample_next(a: int, b: int, topic_id: int, profile: str, rng_state: int) -> tuple[int, int]:
+    toks, w256 = dist(a, b, topic_id, profile)
+    rng_state = splitmix64(rng_state)
+    r = rng_state & 255
+    acc = 0
+    for t, w in zip(toks, w256):
+        acc += w
+        if r < acc:
+            return t, rng_state
+    return toks[-1], rng_state
+
+
+def sample_topic_token(rng_state: int) -> tuple[int, int]:
+    rng_state = splitmix64(rng_state)
+    return FIRST_TOKEN + rng_state % (VOCAB - FIRST_TOKEN), rng_state
+
+
+def sample_sequence(length: int, profile: str, seed: int,
+                    topic_token: int | None = None) -> list[int]:
+    """Sample `[BOS, topic, ...]` totalling `length` tokens."""
+    state = splitmix64(seed ^ PROFILES[profile]["seed"])
+    out = [BOS_ID]
+    if topic_token is None:
+        topic_token, state = sample_topic_token(state)
+    if length > 1:
+        out.append(topic_token)
+    tid = topic_of(topic_token)
+    a, b = BOS_ID, topic_token
+    while len(out) < length:
+        t, state = sample_next(a, b, tid, profile, state)
+        out.append(t)
+        a, b = b, t
+    return out
+
+
+def continue_sequence(prefix: list[int], n: int, profile: str, seed: int) -> list[int]:
+    """Sample n more tokens continuing `prefix` (prefix[1] carries topic)."""
+    assert len(prefix) >= 2, "need BOS + topic"
+    tid = topic_of(prefix[1])
+    a, b = prefix[-2], prefix[-1]
+    state = splitmix64(seed ^ 0xA5A5A5A5)
+    out = []
+    for _ in range(n):
+        t, state = sample_next(a, b, tid, profile, state)
+        out.append(t)
+        a, b = b, t
+    return out
+
+
+def greedy_continuation(prefix: list[int], n: int, profile: str) -> list[int]:
+    """Most-likely continuation under the grammar (oracle for tests)."""
+    assert len(prefix) >= 2, "need BOS + topic"
+    tid = topic_of(prefix[1])
+    a, b = prefix[-2], prefix[-1]
+    out = []
+    for _ in range(n):
+        t = greedy_next(a, b, tid, profile)
+        out.append(t)
+        a, b = b, t
+    return out
+
+
+def corpus(num_seqs: int, seq_len: int, profile: str, seed: int) -> list[list[int]]:
+    return [sample_sequence(seq_len, profile, splitmix64(seed ^ i)) for i in range(num_seqs)]
+
+
+def grammar_test_vectors() -> dict:
+    """Cross-language parity fixtures (also checked by rust unit tests)."""
+    vec = {"splitmix64": [], "dist": [], "sequence": []}
+    for x in (0, 1, 42, 0xDEADBEEF):
+        vec["splitmix64"].append({"x": x, "y": splitmix64(x)})
+    for (a, b, tid, p) in ((1, 2, 0, "code"), (1, 2, 0, "chat"),
+                           (17, 305, 3, "code"), (444, 2, 7, "chat"),
+                           (305, 17, 5, "chat")):
+        toks, w = dist(a, b, tid, p)
+        vec["dist"].append({"a": a, "b": b, "topic": tid, "profile": p,
+                            "toks": toks, "w256": w})
+    for (p, seed) in (("code", 11), ("chat", 12)):
+        vec["sequence"].append({"profile": p, "seed": seed,
+                                "seq": sample_sequence(24, p, seed)})
+    return vec

@@ -1,0 +1,45 @@
+"""Pure-jnp tree-masked attention — the "eager fallback" and pytest oracle.
+
+This is the reproduction's analogue of the paper's eager attention path
+(PANGU_DISABLE_NPU_FUSED=1): a forgiving reference implementation with no
+tiling/alignment constraints, used (a) as the numeric oracle for the Pallas
+kernel, and (b) lowered into the `teacher_eager_s*` artifacts that back the
+rust runtime's `--mode eager` reference execution path.
+"""
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def tree_attention_ref(q, k, v, mask):
+    """Masked multi-head attention over a flat KV sequence.
+
+    Args:
+      q:    [S, H, Dh] queries for the S new (speculative) tokens.
+      k:    [T, H, Dh] keys   (committed cache rows + the S new rows).
+      v:    [T, H, Dh] values (same layout as k).
+      mask: [S, T] additive mask (0 = visible, NEG_INF = hidden). Rows
+            encode prefix visibility + the ancestor-only tree predicate.
+
+    Returns:
+      [S, H, Dh] attention outputs.
+    """
+    s, h, dh = q.shape
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dh, dtype=q.dtype))
+    # [H, S, T]
+    logits = jnp.einsum("shd,thd->hst", q, k) * scale
+    logits = logits + mask[None, :, :]
+    # Contract for fully-masked rows (padded node slots): emit zeros.
+    # Softmax over an all -inf row would be NaN; padded slots are discarded
+    # by the rust side via the validity mask, so their value only needs to
+    # be finite and leak-free ("no leakage to padded slots", §3.3). The
+    # fused kernel implements the same zero-row contract.
+    row_max = jnp.max(logits, axis=-1, keepdims=True)
+    dead = row_max <= NEG_INF / 2
+    safe = jnp.where(dead, 0.0, logits - row_max)
+    w = jnp.exp(safe)
+    w = jnp.where(dead, 0.0, w)
+    denom = jnp.sum(w, axis=-1, keepdims=True)
+    w = w / jnp.where(denom == 0.0, 1.0, denom)
+    return jnp.einsum("hst,thd->shd", w, v)

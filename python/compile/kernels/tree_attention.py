@@ -1,0 +1,146 @@
+"""L1: fused tree-masked attention as a Pallas kernel.
+
+This is the reproduction's analogue of the Ascend fused attention kernel the
+paper targets (§3.3). The hardware adaptation (DESIGN.md §4) re-thinks the
+Ascend kernel for a TPU-shaped memory system rather than porting it:
+
+  * The speculative query block (S ≤ 256 rows) stays VMEM-resident for the
+    whole kernel instance; KV and the additive tree mask are streamed in
+    KV_CHUNK-column tiles via the grid + BlockSpec index maps — the
+    BlockSpec analogue of the Ascend kernel's tiled mask consumption.
+  * Softmax is computed online (flash-style): per-chunk partial max /
+    normalizer / weighted-value accumulators are carried in VMEM scratch
+    across the innermost (sequential) grid dimension.
+  * Contractions are shaped [S, Dh] x [Dh, CHUNK] so the MXU sees wide lane
+    tiles; Dh = 32 is padded into lanes by the compiler.
+
+Strictness contract (what makes this the "fused" path): T must be a
+multiple of KV_CHUNK, the mask must be pre-broadcast to [S, T], and every
+gather feeding this kernel must be in-bounds — exactly the class of
+requirements the paper attributes to fused kernels (§1, §2.5). The rust
+tree tensorizer guarantees them by construction.
+
+interpret=True everywhere: the CPU PJRT client cannot execute Mosaic
+custom-calls, so the kernel lowers to plain HLO for execution while keeping
+the Pallas block structure for the §Perf VMEM/MXU estimates.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+KV_CHUNK = 128
+
+
+def _tree_attn_kernel(q_ref, k_ref, v_ref, mask_ref, o_ref, acc_ref, m_ref, l_ref):
+    """One (head, kv-chunk) grid step of online-softmax tree attention.
+
+    Refs (VMEM blocks):
+      q_ref:    [1, S, Dh]     — query block for this head (grid-invariant).
+      k_ref:    [1, CHUNK, Dh] — KV chunk j for this head.
+      v_ref:    [1, CHUNK, Dh]
+      mask_ref: [S, CHUNK]     — additive mask columns for chunk j.
+      o_ref:    [1, S, Dh]     — output block (written on the last chunk).
+      acc_ref:  [S, Dh] f32 scratch — running weighted-value accumulator.
+      m_ref:    [S, 1]  f32 scratch — running row max.
+      l_ref:    [S, 1]  f32 scratch — running normalizer.
+    """
+    j = pl.program_id(1)
+    nchunks = pl.num_programs(1)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0]  # [S, Dh]
+    k = k_ref[0]  # [CHUNK, Dh]
+    v = v_ref[0]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], dtype=jnp.float32))
+
+    # [S, CHUNK] chunk logits with the additive tree/prefix mask.
+    s_chunk = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale + mask_ref[...]
+
+    m_prev = m_ref[...]            # [S, 1]
+    m_cur = jnp.max(s_chunk, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    # Keep the running max finite for fully-masked rows (padded node slots)
+    # so exp() below never sees (-inf) - (-inf).
+    m_safe = jnp.where(m_new <= NEG_INF / 2, 0.0, m_new)
+
+    p = jnp.exp(s_chunk - m_safe)                     # [S, CHUNK]
+    alpha = jnp.exp(jnp.where(m_prev <= NEG_INF / 2, NEG_INF, m_prev) - m_safe)
+    alpha = jnp.where(m_prev <= NEG_INF / 2, 0.0, alpha)  # first contribution
+
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    pv = jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    acc_ref[...] = acc_ref[...] * alpha + pv
+    m_ref[...] = m_new
+
+    @pl.when(j == nchunks - 1)
+    def _finalize():
+        # Fully-masked rows have l == 0; emit zeros (finite, discarded by
+        # the validity mask on the rust side — "no leakage to padded slots").
+        l = l_ref[...]
+        denom = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, :, :] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+def tree_attention_fused(q, k, v, mask):
+    """Fused tree attention: same contract as kernels.ref.tree_attention_ref.
+
+    Args:
+      q:    [S, H, Dh]
+      k:    [T, H, Dh] with T % KV_CHUNK == 0 (caller pads, mask = NEG_INF).
+      v:    [T, H, Dh]
+      mask: [S, T] additive mask.
+    Returns:
+      [S, H, Dh]
+    """
+    s, h, dh = q.shape
+    t = k.shape[0]
+    assert t % KV_CHUNK == 0, f"fused kernel requires T % {KV_CHUNK} == 0, got {t}"
+    nchunks = t // KV_CHUNK
+
+    # Head-major layout so each grid step owns one head's tiles.
+    qh = jnp.transpose(q, (1, 0, 2))  # [H, S, Dh]
+    kh = jnp.transpose(k, (1, 0, 2))  # [H, T, Dh]
+    vh = jnp.transpose(v, (1, 0, 2))
+
+    out = pl.pallas_call(
+        _tree_attn_kernel,
+        grid=(h, nchunks),
+        in_specs=[
+            pl.BlockSpec((1, s, dh), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, KV_CHUNK, dh), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, KV_CHUNK, dh), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((s, KV_CHUNK), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((1, s, dh), lambda i, j: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, s, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((s, dh), jnp.float32),
+            pltpu.VMEM((s, 1), jnp.float32),
+            pltpu.VMEM((s, 1), jnp.float32),
+        ],
+        interpret=True,
+    )(qh, kh, vh, mask)
+    return jnp.transpose(out, (1, 0, 2))
+
+
+def vmem_estimate_bytes(s: int, dh: int, chunk: int = KV_CHUNK) -> int:
+    """Static VMEM footprint of one kernel instance (for DESIGN.md §Perf)."""
+    f32 = 4
+    q = s * dh * f32
+    kv = 2 * chunk * dh * f32
+    msk = s * chunk * f32
+    scratch = (s * dh + 2 * s) * f32
+    out = s * dh * f32
+    return q + kv + msk + scratch + out

@@ -1,0 +1,291 @@
+"""L2: TinyPangu teacher + TinyEagle draft in JAX.
+
+Two forward flavours share one set of per-layer weights:
+
+  * `*_block_forward` — the **serving contract** lowered to HLO for the rust
+    runtime: static token-block size S, cache capacity C, explicit
+    `[S, C+S]` additive mask input, cache-in/KV-out (the model NEVER
+    mutates a cache — the rust cache manager owns all writes; see
+    DESIGN.md §2). Attention runs either through the fused Pallas kernel
+    (kernels.tree_attention) or the eager jnp reference (kernels.ref),
+    mirroring the paper's two-mode execution protocol (§4.1).
+
+  * `*_train_forward` — batched causal forward used only by train.py.
+
+Feature channel (EAGLE coupling): the teacher exports `feats[S, FEAT_DIM]`
+(final hidden, layer-normed, projected D -> FEAT_DIM). The draft consumes a
+feature per input token — the teacher feature of the *previous* position
+for committed tokens, or the parent draft hidden for speculative depth >= 2
+nodes — and emits its own hidden in the same space (EAGLE's recursive
+feature surrogate).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .config import (
+    DRAFT,
+    FEAT_DIM,
+    ModelDims,
+    ROPE_BASE,
+    TEACHER,
+    padded_kv_len,
+)
+from .kernels.ref import NEG_INF, tree_attention_ref
+from .kernels.tree_attention import tree_attention_fused
+
+
+# --------------------------------------------------------------------------
+# Parameters
+# --------------------------------------------------------------------------
+
+def init_layer(rng: np.random.Generator, d: ModelDims) -> dict:
+    s_attn = 1.0 / np.sqrt(d.d_model)
+    s_ff = 1.0 / np.sqrt(d.d_ff)
+    dm, nh, dh, ff = d.d_model, d.heads, d.d_head, d.d_ff
+    return {
+        "wq": rng.normal(0, s_attn, (dm, nh * dh)).astype(np.float32),
+        "wk": rng.normal(0, s_attn, (dm, nh * dh)).astype(np.float32),
+        "wv": rng.normal(0, s_attn, (dm, nh * dh)).astype(np.float32),
+        "wo": rng.normal(0, s_attn, (nh * dh, dm)).astype(np.float32),
+        "w1": rng.normal(0, s_attn, (dm, ff)).astype(np.float32),
+        "w2": rng.normal(0, s_ff, (ff, dm)).astype(np.float32),
+        "ln1": np.ones(dm, np.float32),
+        "ln2": np.ones(dm, np.float32),
+    }
+
+
+def init_teacher(seed: int = 0) -> dict:
+    rng = np.random.default_rng(seed)
+    d = TEACHER
+    return {
+        "embed": rng.normal(0, 0.02, (d.vocab, d.d_model)).astype(np.float32),
+        "layers": [init_layer(rng, d) for _ in range(d.layers)],
+        "ln_f": np.ones(d.d_model, np.float32),
+        "head": rng.normal(0, 1 / np.sqrt(d.d_model), (d.d_model, d.vocab)).astype(np.float32),
+        "w_feat": rng.normal(0, 1 / np.sqrt(d.d_model), (d.d_model, FEAT_DIM)).astype(np.float32),
+    }
+
+
+def init_draft(seed: int = 1) -> dict:
+    rng = np.random.default_rng(seed)
+    d = DRAFT
+    return {
+        "embed": rng.normal(0, 0.02, (d.vocab, d.d_model)).astype(np.float32),
+        # fuse (token embedding, incoming feature) -> model width
+        "w_in": rng.normal(0, 1 / np.sqrt(2 * d.d_model), (d.d_model + FEAT_DIM, d.d_model)).astype(np.float32),
+        "layers": [init_layer(rng, d) for _ in range(d.layers)],
+        "ln_f": np.ones(d.d_model, np.float32),
+        "head": rng.normal(0, 1 / np.sqrt(d.d_model), (d.d_model, d.vocab)).astype(np.float32),
+    }
+
+
+def flatten_params(params, prefix="") -> dict:
+    out = {}
+    if isinstance(params, dict):
+        for k, v in params.items():
+            out.update(flatten_params(v, f"{prefix}{k}."))
+    elif isinstance(params, list):
+        for i, v in enumerate(params):
+            out.update(flatten_params(v, f"{prefix}{i}."))
+    else:
+        out[prefix[:-1]] = np.asarray(params)
+    return out
+
+
+def unflatten_params(flat: dict):
+    """Inverse of flatten_params (dict/list structure from key paths)."""
+    root: dict = {}
+    for key, val in flat.items():
+        parts = key.split(".")
+        cur = root
+        for p in parts[:-1]:
+            cur = cur.setdefault(p, {})
+        cur[parts[-1]] = val
+
+    def fix(node):
+        if not isinstance(node, dict):
+            return node
+        if node and all(k.isdigit() for k in node):
+            return [fix(node[str(i)]) for i in range(len(node))]
+        return {k: fix(v) for k, v in node.items()}
+
+    return fix(root)
+
+
+def save_params(path: str, params) -> None:
+    np.savez(path, **flatten_params(params))
+
+
+def load_params(path: str):
+    with np.load(path) as z:
+        return unflatten_params({k: z[k] for k in z.files})
+
+
+# --------------------------------------------------------------------------
+# Building blocks
+# --------------------------------------------------------------------------
+
+def rms_norm(x, g):
+    return x * g / jnp.sqrt(jnp.mean(jnp.square(x), axis=-1, keepdims=True) + 1e-6)
+
+
+def rope(x, positions):
+    """Rotary embedding. x: [..., S, H, Dh], positions: [S] int32."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = 1.0 / (ROPE_BASE ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[:, None] * freqs[None, :]  # [S, half]
+    cos = jnp.cos(ang)[..., None, :]  # [S, 1, half] broadcast over heads
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def _qkv(layer, x, d: ModelDims):
+    s = x.shape[0]
+    q = (x @ layer["wq"]).reshape(s, d.heads, d.d_head)
+    k = (x @ layer["wk"]).reshape(s, d.heads, d.d_head)
+    v = (x @ layer["wv"]).reshape(s, d.heads, d.d_head)
+    return q, k, v
+
+
+def _ffn(layer, x):
+    return jax.nn.gelu(x @ layer["w1"]) @ layer["w2"]
+
+
+# --------------------------------------------------------------------------
+# Serving (block) forward — the AOT contract
+# --------------------------------------------------------------------------
+
+def _block_layers(params, d: ModelDims, h, positions, mask, k_cache, v_cache, fused: bool):
+    """Shared cache-in / KV-out layer stack.
+
+    h:        [S, D] input activations
+    mask:     [S, C+S] additive
+    k_cache:  [L, C, H, Dh] (post-RoPE keys; rows >= committed length are
+              garbage but masked out by the rust-built mask)
+    returns: (h_final, k_new [L,S,H,Dh], v_new [L,S,H,Dh], attn_top1 [S,H])
+    """
+    s = h.shape[0]
+    cap = k_cache.shape[1]
+    t_pad = padded_kv_len(s, cap)
+    pad_cols = t_pad - (cap + s)
+    attn_fn = tree_attention_fused if fused else tree_attention_ref
+    k_news, v_news = [], []
+    attn_top1 = None
+    for li in range(d.layers):
+        layer = params["layers"][li]
+        xn = rms_norm(h, layer["ln1"])
+        q, k, v = _qkv(layer, xn, d)
+        q = rope(q, positions)
+        k = rope(k, positions)
+        k_news.append(k)
+        v_news.append(v)
+        k_full = jnp.concatenate([k_cache[li], k], axis=0)  # [C+S, H, Dh]
+        v_full = jnp.concatenate([v_cache[li], v], axis=0)
+        m = mask
+        if fused and pad_cols > 0:
+            # Fused kernel requires T % KV_CHUNK == 0: pad KV with zero rows
+            # and the mask with NEG_INF columns (invisible by construction).
+            k_in = jnp.pad(k_full, ((0, pad_cols), (0, 0), (0, 0)))
+            v_in = jnp.pad(v_full, ((0, pad_cols), (0, 0), (0, 0)))
+            m = jnp.pad(mask, ((0, 0), (0, pad_cols)), constant_values=NEG_INF)
+        else:
+            k_in, v_in = k_full, v_full
+        o = attn_fn(q, k_in, v_in, m)  # [S, H, Dh]
+        if li == d.layers - 1:
+            # Analysis-only probe (paper Fig 7): per-head top-1 attention
+            # column of the last layer, from masked logits (cheap argmax).
+            scale = 1.0 / jnp.sqrt(jnp.asarray(d.d_head, jnp.float32))
+            lg = jnp.einsum("shd,thd->sht", q, k_full) * scale
+            lg = lg + mask[:, None, :]
+            attn_top1 = jnp.argmax(lg, axis=-1).astype(jnp.int32)  # [S, H]
+        h = h + o.reshape(s, d.heads * d.d_head) @ layer["wo"]
+        h = h + _ffn(layer, rms_norm(h, layer["ln2"]))
+    return h, jnp.stack(k_news), jnp.stack(v_news), attn_top1
+
+
+def teacher_block_forward(params, tokens, positions, mask, k_cache, v_cache,
+                          fused: bool, with_probe: bool = False):
+    """Teacher serving step.
+
+    tokens[S] i32, positions[S] i32, mask[S, C+S] f32,
+    k_cache/v_cache [L, C, H, Dh] f32
+    -> logits [S, V], feats [S, FEAT_DIM], k_new/v_new [L, S, H, Dh]
+       (+ attn_top1 [S, H] when with_probe)
+    """
+    d = TEACHER
+    h = params["embed"][tokens]
+    h, k_new, v_new, top1 = _block_layers(params, d, h, positions, mask, k_cache, v_cache, fused)
+    hn = rms_norm(h, params["ln_f"])
+    logits = hn @ params["head"]
+    feats = hn @ params["w_feat"]
+    if with_probe:
+        return logits, feats, k_new, v_new, top1
+    return logits, feats, k_new, v_new
+
+
+def draft_block_forward(params, tokens, feats_in, positions, mask, k_cache, v_cache,
+                        with_probe: bool = False):
+    """Draft serving step (eager attention only — the drafter is cheap).
+
+    feats_in [S, FEAT_DIM]: teacher feature of the previous position
+    (committed tokens) or parent draft hidden (speculative nodes).
+    -> logits [S, V], hidden feats [S, FEAT_DIM], k_new/v_new [L, S, H, Dh]
+    """
+    d = DRAFT
+    e = params["embed"][tokens]
+    h = jnp.concatenate([e, feats_in], axis=-1) @ params["w_in"]
+    h, k_new, v_new, top1 = _block_layers(params, d, h, positions, mask, k_cache, v_cache, fused=False)
+    hn = rms_norm(h, params["ln_f"])
+    logits = hn @ params["head"]
+    if with_probe:
+        return logits, hn, k_new, v_new, top1
+    return logits, hn, k_new, v_new
+
+
+# --------------------------------------------------------------------------
+# Training forward (batched, causal) — build-time only
+# --------------------------------------------------------------------------
+
+def _train_layers(params, d: ModelDims, h):
+    """Batched causal layer stack. h: [B, L, D] -> [B, L, D]."""
+    b, l, _ = h.shape
+    pos = jnp.arange(l, dtype=jnp.int32)
+    causal = jnp.where(pos[None, :] <= pos[:, None], 0.0, NEG_INF)  # [L, L]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d.d_head, jnp.float32))
+    for layer in params["layers"]:
+        xn = rms_norm(h, layer["ln1"])
+        q = (xn @ layer["wq"]).reshape(b, l, d.heads, d.d_head)
+        k = (xn @ layer["wk"]).reshape(b, l, d.heads, d.d_head)
+        v = (xn @ layer["wv"]).reshape(b, l, d.heads, d.d_head)
+        q = rope(q, pos)
+        k = rope(k, pos)
+        lg = jnp.einsum("bshd,bthd->bhst", q, k) * scale + causal[None, None]
+        w = jax.nn.softmax(lg, axis=-1)
+        o = jnp.einsum("bhst,bthd->bshd", w, v).reshape(b, l, d.heads * d.d_head)
+        h = h + o @ layer["wo"]
+        h = h + _ffn(layer, rms_norm(h, layer["ln2"]))
+    return h
+
+
+def teacher_train_forward(params, tokens):
+    """tokens [B, L] -> logits [B, L, V], feats [B, L, FEAT_DIM]."""
+    h = params["embed"][tokens]
+    h = _train_layers(params, TEACHER, h)
+    hn = rms_norm(h, params["ln_f"])
+    return hn @ params["head"], hn @ params["w_feat"]
+
+
+def draft_train_forward(params, tokens, feats_prev):
+    """tokens [B, L], feats_prev [B, L, FEAT_DIM] (teacher feat of position
+    i-1, zeros at i=0) -> logits [B, L, V]."""
+    e = params["embed"][tokens]
+    h = jnp.concatenate([e, feats_prev], axis=-1) @ params["w_in"]
+    h = _train_layers(params, DRAFT, h)
+    hn = rms_norm(h, params["ln_f"])
+    return hn @ params["head"]

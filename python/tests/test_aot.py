@@ -1,0 +1,93 @@
+"""AOT export-path tests: HLO text properties, golden input parity, and
+manifest completeness. Uses tiny random weights (never retrains)."""
+
+import json
+import os
+
+import numpy as np
+import jax
+import pytest
+
+from compile import aot, grammar
+from compile.config import CACHE_CAP, DRAFT, FEAT_DIM, TEACHER, VOCAB
+from compile.model import init_draft, init_teacher
+
+
+def test_hlo_text_contains_full_constants():
+    """The text round-trip must carry the checkpoint: elided constants
+    (`constant({...})`) would silently destroy the weights."""
+    params = init_teacher(0)
+    lowered = jax.jit(aot.teacher_fn(params, fused=False, probe=False)).lower(
+        *aot.teacher_specs(8))
+    text = aot.to_hlo_text(lowered)
+    assert "constant({...})" not in text
+    assert len(text) > 5_000_000  # ~1.1M f32 weights in text form
+    assert "ENTRY" in text
+
+
+def test_teacher_specs_shapes():
+    specs = aot.teacher_specs(16)
+    assert specs[0].shape == (16,)
+    assert specs[2].shape == (16, CACHE_CAP + 16)
+    assert specs[3].shape == (TEACHER.layers, CACHE_CAP, TEACHER.heads, TEACHER.d_head)
+
+
+def test_draft_specs_include_feats():
+    specs = aot.draft_specs(8)
+    assert specs[1].shape == (8, FEAT_DIM)
+    assert specs[4].shape == (DRAFT.layers, CACHE_CAP, DRAFT.heads, DRAFT.d_head)
+
+
+def test_golden_inputs_deterministic_stream():
+    a = aot.golden_inputs("teacher")
+    b = aot.golden_inputs("teacher")
+    for x, y in zip(a, b):
+        if x is None:
+            assert y is None
+        else:
+            np.testing.assert_array_equal(x, y)
+    # the stream constants are mirrored in rust/src/runtime/golden.rs
+    st = aot.Stream(aot.GOLDEN_SEED)
+    assert a[0][0] == 2 + st.next_u64() % (VOCAB - 2)
+
+
+def test_stream_f32_matches_rust_convention():
+    st = aot.Stream(1)
+    v = st.f32()
+    assert -1.0 <= v < 1.0
+    # reproduce manually: (u >> 40) / 2^24 * 2 - 1
+    st2 = aot.Stream(1)
+    u = st2.next_u64()
+    assert v == (u >> 40) / float(1 << 24) * 2.0 - 1.0
+
+
+def test_probe_variant_has_fifth_output():
+    params = init_draft(0)
+    fn = aot.draft_fn(params, probe=True)
+    gi = aot.golden_inputs("draft")
+    outs = jax.jit(fn)(gi[0], gi[1], gi[2], gi[3], gi[4], gi[5])
+    assert len(outs) == 5
+    assert outs[4].shape == (aot.GOLDEN_S, DRAFT.heads)
+
+
+ARTIFACTS = os.path.abspath(
+    os.path.join(os.path.dirname(__file__), "..", "..", "artifacts"))
+
+
+@pytest.mark.skipif(not os.path.exists(os.path.join(ARTIFACTS, "manifest.json")),
+                    reason="artifacts not built")
+def test_built_manifest_is_complete():
+    with open(os.path.join(ARTIFACTS, "manifest.json")) as f:
+        m = json.load(f)
+    assert m["contract"]["vocab"] == VOCAB
+    assert m["contract"]["cache_cap"] == CACHE_CAP
+    names = {a["name"] for a in m["artifacts"]}
+    for s in m["contract"]["teacher_s_variants"]:
+        assert f"teacher_fused_s{s}" in names
+        assert f"teacher_eager_s{s}" in names
+    for s in m["contract"]["draft_s_variants"]:
+        assert f"draft_s{s}" in names
+    # grammar parity vectors present for the rust mirror
+    assert m["grammar_vectors"]["splitmix64"][0]["y"] == grammar.splitmix64(0)
+    for f_ in m["artifacts"]:
+        assert os.path.exists(os.path.join(ARTIFACTS, f_["file"]))

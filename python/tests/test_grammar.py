@@ -1,0 +1,121 @@
+"""Grammar substrate tests: determinism, profile shape, topic (long-range)
+structure, and cross-language parity vectors."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import grammar
+from compile.config import BOS_ID, FIRST_TOKEN, VOCAB
+
+
+def test_splitmix64_known_values():
+    # Reference value from the canonical splitmix64 (input 0).
+    assert grammar.splitmix64(0) == 0xE220A8397B1DCDAF
+
+
+def test_dist_deterministic():
+    assert grammar.dist(17, 305, 3, "code") == grammar.dist(17, 305, 3, "code")
+
+
+def test_dist_in_vocab_unique_weights():
+    for b in range(2, 120, 7):
+        for tid in range(grammar.NUM_TOPICS):
+            for p in ("code", "chat"):
+                toks, w = grammar.dist(5, b, tid, p)
+                assert len(toks) == len(set(toks))
+                assert len(toks) == len(w)
+                assert sum(w) == 256
+                assert all(FIRST_TOKEN <= t < VOCAB for t in toks)
+
+
+def test_rotation_depends_on_a():
+    """Order-2 effect: for a branching context, the preferred continuation
+    must change with the second-previous token."""
+    found = False
+    for b in range(2, 200):
+        for tid in range(4):
+            base = grammar.base_candidates(b, tid, "chat")
+            if len(base) >= 2:
+                t0 = grammar.greedy_next(0, b, tid, "chat")
+                t1 = grammar.greedy_next(1, b, tid, "chat")
+                assert t0 != t1
+                found = True
+                break
+        if found:
+            break
+    assert found
+
+
+def test_topic_changes_candidates():
+    """Long-range effect: different topic => (usually) different candidates."""
+    diffs = 0
+    for b in range(2, 60):
+        if grammar.base_candidates(b, 0, "code") != grammar.base_candidates(b, 1, "code"):
+            diffs += 1
+    assert diffs > 40  # almost every context differs across topics
+
+
+def test_profiles_differ_in_branching():
+    def mean_branching(profile):
+        ns = [len(grammar.base_candidates(b, tid, profile))
+              for b in range(2, 200) for tid in range(8)]
+        return np.mean(ns)
+
+    assert mean_branching("chat") > mean_branching("code") + 0.2
+
+
+def test_sample_sequence_shape_and_bos():
+    seq = grammar.sample_sequence(64, "chat", seed=7)
+    assert len(seq) == 64
+    assert seq[0] == BOS_ID
+    assert all(FIRST_TOKEN <= t < VOCAB for t in seq[1:])
+
+
+def test_sample_sequence_seeded_reproducible():
+    assert grammar.sample_sequence(64, "code", 3) == grammar.sample_sequence(64, "code", 3)
+    assert grammar.sample_sequence(64, "code", 3) != grammar.sample_sequence(64, "code", 4)
+
+
+def test_sample_sequence_fixed_topic():
+    seq = grammar.sample_sequence(32, "code", 5, topic_token=100)
+    assert seq[1] == 100
+
+
+@settings(max_examples=30, deadline=None)
+@given(a=st.integers(1, VOCAB - 1), b=st.integers(2, VOCAB - 1),
+       tid=st.integers(0, grammar.NUM_TOPICS - 1),
+       p=st.sampled_from(["code", "chat"]), seed=st.integers(0, 2**62))
+def test_sampled_token_is_a_candidate(a, b, tid, p, seed):
+    toks, _ = grammar.dist(a, b, tid, p)
+    t, _ = grammar.sample_next(a, b, tid, p, seed)
+    assert t in toks
+
+
+def test_greedy_continuation_follows_preference_order():
+    pre = [BOS_ID, 50, 9]
+    tid = grammar.topic_of(50)
+    cont = grammar.greedy_continuation(pre, 5, "code")
+    a, b = pre[-2], pre[-1]
+    for t in cont:
+        assert t == grammar.greedy_next(a, b, tid, "code")
+        a, b = b, t
+
+
+def test_continue_sequence_consistent_with_dist():
+    pre = grammar.sample_sequence(16, "chat", 9)
+    cont = grammar.continue_sequence(pre, 10, "chat", seed=3)
+    tid = grammar.topic_of(pre[1])
+    a, b = pre[-2], pre[-1]
+    for t in cont:
+        assert t in grammar.dist(a, b, tid, "chat")[0]
+        a, b = b, t
+
+
+def test_parity_vectors_stable():
+    vec = grammar.grammar_test_vectors()
+    assert vec["splitmix64"][0]["y"] == grammar.splitmix64(0)
+    for c in vec["dist"]:
+        toks, w = grammar.dist(c["a"], c["b"], c["topic"], c["profile"])
+        assert toks == c["toks"] and w == c["w256"]
+    for s in vec["sequence"]:
+        assert grammar.sample_sequence(24, s["profile"], s["seed"]) == s["seq"]

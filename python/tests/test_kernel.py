@@ -1,0 +1,120 @@
+"""L1 correctness: Pallas fused tree-attention vs the pure-jnp oracle.
+
+This is the core kernel-correctness signal: hypothesis sweeps shapes and
+mask structures; every case asserts allclose against kernels.ref.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.ref import NEG_INF, tree_attention_ref
+from compile.kernels.tree_attention import KV_CHUNK, tree_attention_fused, vmem_estimate_bytes
+
+
+def _rand(rng, *shape):
+    return jnp.asarray(rng.normal(size=shape), jnp.float32)
+
+
+def _run_both(rng, s, h, dh, t, mask):
+    q = _rand(rng, s, h, dh)
+    k = _rand(rng, t, h, dh)
+    v = _rand(rng, t, h, dh)
+    ref = np.asarray(tree_attention_ref(q, k, v, mask))
+    fused = np.asarray(tree_attention_fused(q, k, v, mask))
+    return ref, fused
+
+
+def test_unmasked_matches_ref():
+    rng = np.random.default_rng(0)
+    mask = jnp.zeros((16, 2 * KV_CHUNK), jnp.float32)
+    ref, fused = _run_both(rng, 16, 4, 32, 2 * KV_CHUNK, mask)
+    np.testing.assert_allclose(ref, fused, atol=1e-5)
+
+
+def test_prefix_plus_causal_tree_mask():
+    """The serving-shaped case: open prefix, causal speculative block."""
+    rng = np.random.default_rng(1)
+    s, t, prefix = 8, 2 * KV_CHUNK, 100
+    m = np.full((s, t), NEG_INF, np.float32)
+    m[:, :prefix] = 0.0
+    base = t - s
+    for i in range(s):
+        m[i, base:base + i + 1] = 0.0
+    ref, fused = _run_both(rng, s, 4, 32, t, jnp.asarray(m))
+    np.testing.assert_allclose(ref, fused, atol=1e-5)
+
+
+def test_fully_masked_rows_emit_zeros():
+    rng = np.random.default_rng(2)
+    s, t = 8, KV_CHUNK
+    m = np.zeros((s, t), np.float32)
+    m[3] = NEG_INF
+    m[7] = NEG_INF
+    ref, fused = _run_both(rng, s, 2, 32, t, jnp.asarray(m))
+    assert np.all(fused[3] == 0.0) and np.all(fused[7] == 0.0)
+    np.testing.assert_allclose(ref, fused, atol=1e-5)
+
+
+def test_masked_kv_values_cannot_leak():
+    """Poisoning masked KV rows must not change the output (no-leakage)."""
+    rng = np.random.default_rng(3)
+    s, h, dh, t = 8, 2, 32, 2 * KV_CHUNK
+    q = _rand(rng, s, h, dh)
+    k = np.array(_rand(rng, t, h, dh))
+    v = np.array(_rand(rng, t, h, dh))
+    m = np.zeros((s, t), np.float32)
+    m[:, 64:] = NEG_INF
+    out1 = np.asarray(tree_attention_fused(q, jnp.asarray(k), jnp.asarray(v), jnp.asarray(m)))
+    k[64:] = 1e6  # poison hidden region
+    v[64:] = -1e6
+    out2 = np.asarray(tree_attention_fused(q, jnp.asarray(k), jnp.asarray(v), jnp.asarray(m)))
+    np.testing.assert_allclose(out1, out2, atol=1e-5)
+
+
+def test_rejects_unaligned_t():
+    rng = np.random.default_rng(4)
+    with pytest.raises(AssertionError):
+        tree_attention_fused(
+            _rand(rng, 4, 2, 32), _rand(rng, 100, 2, 32),
+            _rand(rng, 100, 2, 32), jnp.zeros((4, 100), jnp.float32))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    s=st.sampled_from([1, 4, 8, 16, 32]),
+    h=st.sampled_from([1, 2, 4]),
+    dh=st.sampled_from([8, 16, 32]),
+    nchunks=st.integers(1, 3),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_random_tree_masks_match_ref(s, h, dh, nchunks, seed):
+    """Hypothesis sweep: random shapes x random ragged masks."""
+    rng = np.random.default_rng(seed)
+    t = nchunks * KV_CHUNK
+    m = np.where(rng.random((s, t)) < 0.5, 0.0, NEG_INF).astype(np.float32)
+    ref, fused = _run_both(rng, s, h, dh, t, jnp.asarray(m))
+    np.testing.assert_allclose(ref, fused, atol=2e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_softmax_stability_large_logits(seed):
+    """Online softmax must survive large-magnitude logits."""
+    rng = np.random.default_rng(seed)
+    s, h, dh, t = 8, 2, 16, 2 * KV_CHUNK
+    q = jnp.asarray(rng.normal(size=(s, h, dh)) * 30, jnp.float32)
+    k = jnp.asarray(rng.normal(size=(t, h, dh)) * 30, jnp.float32)
+    v = _rand(rng, t, h, dh)
+    m = jnp.zeros((s, t), jnp.float32)
+    ref = np.asarray(tree_attention_ref(q, k, v, m))
+    fused = np.asarray(tree_attention_fused(q, k, v, m))
+    assert np.isfinite(fused).all()
+    np.testing.assert_allclose(ref, fused, atol=1e-4)
+
+
+def test_vmem_estimate_within_budget():
+    """Static VMEM footprint of the largest variant stays under 16 MiB/core."""
+    worst = vmem_estimate_bytes(s=256, dh=32)
+    assert worst < 16 * 1024 * 1024, worst

@@ -1,0 +1,243 @@
+"""L2 semantic tests on the serving (block) forward contract.
+
+These validate — at the JAX level, with untrained weights — the properties
+the paper's §3.3 "correctness guarantee" relies on:
+
+  * chunked cache-in/KV-out execution == one-shot causal execution
+    (the foundation of the rust cache manager's commit-equivalence);
+  * batched tree evaluation under the tree mask == independent per-path
+    chain evaluation (context correctness / no cross-branch leakage);
+  * fused (Pallas) and eager paths agree numerically.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile.config import CACHE_CAP, DRAFT, FEAT_DIM, TEACHER
+from compile.kernels.ref import NEG_INF
+from compile.model import (
+    draft_block_forward,
+    init_draft,
+    init_teacher,
+    teacher_block_forward,
+    teacher_train_forward,
+    flatten_params,
+    unflatten_params,
+)
+
+TP = init_teacher(0)
+DP = init_draft(1)
+
+
+def causal_mask(s: int, t: int, cap: int = CACHE_CAP) -> jnp.ndarray:
+    """Mask for a chain of s tokens appended after a committed prefix t."""
+    m = np.full((s, cap + s), NEG_INF, np.float32)
+    m[:, :t] = 0.0
+    for i in range(s):
+        m[i, cap:cap + i + 1] = 0.0
+    return jnp.asarray(m)
+
+
+def empty_cache(dims):
+    shape = (dims.layers, CACHE_CAP, dims.heads, dims.d_head)
+    return jnp.zeros(shape, jnp.float32), jnp.zeros(shape, jnp.float32)
+
+
+def write_rows(cache, rows, at):
+    """Host-side scatter: mimic the rust cache manager's row writes.
+    cache [L, C, H, Dh], rows [L, S, H, Dh]."""
+    c = np.asarray(cache).copy()
+    c[:, at:at + rows.shape[1]] = np.asarray(rows)
+    return jnp.asarray(c)
+
+
+def run_chain(tokens, chunk_sizes, fused=False):
+    """Run tokens through teacher_block_forward in chunks, managing the
+    cache host-side exactly the way the rust runtime does."""
+    kc, vc = empty_cache(TEACHER)
+    t = 0
+    logits_all = []
+    for cs in chunk_sizes:
+        toks = jnp.asarray(tokens[t:t + cs], jnp.int32)
+        pos = jnp.arange(t, t + cs, dtype=jnp.int32)
+        mask = causal_mask(cs, t)
+        logits, feats, k_new, v_new = teacher_block_forward(
+            TP, toks, pos, mask, kc, vc, fused=fused)
+        kc = write_rows(kc, k_new, t)
+        vc = write_rows(vc, v_new, t)
+        logits_all.append(np.asarray(logits))
+        t += cs
+    return np.concatenate(logits_all, axis=0)
+
+
+@pytest.fixture(scope="module")
+def chain_tokens():
+    rng = np.random.default_rng(42)
+    return rng.integers(2, 512, size=24).astype(np.int32)
+
+
+def test_chunked_equals_oneshot(chain_tokens):
+    """Commit equivalence at L2: [24] one-shot == [8,8,8] == [16,8] chunks."""
+    full = run_chain(chain_tokens, [24])
+    a = run_chain(chain_tokens, [8, 8, 8])
+    b = run_chain(chain_tokens, [16, 8])
+    np.testing.assert_allclose(full, a, atol=2e-4)
+    np.testing.assert_allclose(full, b, atol=2e-4)
+
+
+def test_block_matches_train_forward(chain_tokens):
+    """Serving stack == training stack on the same causal chain."""
+    serve = run_chain(chain_tokens, [24])
+    train_logits, _ = teacher_train_forward(TP, jnp.asarray(chain_tokens)[None, :])
+    np.testing.assert_allclose(serve, np.asarray(train_logits)[0], atol=2e-4)
+
+
+def test_fused_equals_eager(chain_tokens):
+    f = run_chain(chain_tokens, [8, 16], fused=True)
+    e = run_chain(chain_tokens, [8, 16], fused=False)
+    np.testing.assert_allclose(f, e, atol=2e-4)
+
+
+def test_tree_eval_equals_per_path():
+    """Batched tree verification == independent per-path chains (§3.3
+    context correctness). Tree over prefix [p0,p1]:
+        root(committed) -> a -> b -> c   (path 1: a,b,c)
+                         \\-> d -> e      (path 2: d,e)
+    """
+    rng = np.random.default_rng(7)
+    prefix = rng.integers(2, 512, size=6).astype(np.int32)
+
+    # Prefill the committed prefix.
+    kc, vc = empty_cache(TEACHER)
+    pos = jnp.arange(6, dtype=jnp.int32)
+    _, _, k_new, v_new = teacher_block_forward(
+        TP, jnp.asarray(prefix), pos, causal_mask(6, 0), kc, vc, fused=False)
+    kc = write_rows(kc, k_new, 0)
+    vc = write_rows(vc, v_new, 0)
+    t = 6
+
+    # Tree nodes (linearized, dummy-root style): tokens + parent slots.
+    node_tok = np.asarray([100, 101, 102, 200, 201], np.int32)  # a b c d e
+    parent = np.asarray([-1, 0, 1, -1, 3])  # -1 = root(committed prefix)
+    depth = np.asarray([1, 2, 3, 1, 2])
+    s = 5
+    mask = np.full((s, CACHE_CAP + s), NEG_INF, np.float32)
+    mask[:, :t] = 0.0
+    for k in range(s):
+        mask[k, CACHE_CAP + k] = 0.0
+        pnt = parent[k]
+        while pnt != -1:
+            mask[k, CACHE_CAP + pnt] = 0.0
+            pnt = parent[pnt]
+    positions = jnp.asarray(t + depth - 1, jnp.int32)
+    tree_logits, _, _, _ = teacher_block_forward(
+        TP, jnp.asarray(node_tok), positions, jnp.asarray(mask), kc, vc, fused=False)
+    tree_logits = np.asarray(tree_logits)
+
+    # Per-path chains.
+    for path in ([0, 1, 2], [3, 4]):
+        toks = jnp.asarray(node_tok[path])
+        pos = jnp.arange(t, t + len(path), dtype=jnp.int32)
+        chain_logits, _, _, _ = teacher_block_forward(
+            TP, toks, pos, causal_mask(len(path), t), kc, vc, fused=False)
+        np.testing.assert_allclose(
+            tree_logits[path], np.asarray(chain_logits), atol=2e-4,
+            err_msg=f"path {path} diverges from batched tree eval")
+
+
+def test_tree_eval_fused_equals_eager_with_padding():
+    """Same tree, fused kernel path, with padded (invalid) node slots."""
+    rng = np.random.default_rng(8)
+    prefix = rng.integers(2, 512, size=5).astype(np.int32)
+    kc, vc = empty_cache(TEACHER)
+    _, _, k_new, v_new = teacher_block_forward(
+        TP, jnp.asarray(prefix), jnp.arange(5, dtype=jnp.int32),
+        causal_mask(5, 0), kc, vc, fused=False)
+    kc = write_rows(kc, k_new, 0)
+    vc = write_rows(vc, v_new, 0)
+    t = 5
+
+    s = 8  # 5 live nodes + 3 padded slots
+    node_tok = np.asarray([100, 101, 102, 200, 201, 0, 0, 0], np.int32)
+    parent = [-1, 0, 1, -1, 3]
+    mask = np.full((s, CACHE_CAP + s), NEG_INF, np.float32)
+    mask[:5, :t] = 0.0
+    for k in range(5):
+        mask[k, CACHE_CAP + k] = 0.0
+        pnt = parent[k]
+        while pnt != -1:
+            mask[k, CACHE_CAP + pnt] = 0.0
+            pnt = parent[pnt]
+    depth = np.asarray([1, 2, 3, 1, 2, 1, 1, 1])
+    positions = jnp.asarray(t + depth - 1, jnp.int32)
+
+    outs = {}
+    for fused in (True, False):
+        lg, _, _, _ = teacher_block_forward(
+            TP, jnp.asarray(node_tok), positions, jnp.asarray(mask), kc, vc, fused=fused)
+        outs[fused] = np.asarray(lg)
+    np.testing.assert_allclose(outs[True][:5], outs[False][:5], atol=2e-4)
+    assert np.isfinite(outs[True]).all()
+
+
+def test_padded_slot_tokens_cannot_leak():
+    """Changing the token id of a fully-masked pad slot must not change any
+    live node's logits ('no leakage to padded slots', §3.3)."""
+    rng = np.random.default_rng(9)
+    kc, vc = empty_cache(TEACHER)
+    t = 0
+    s = 4
+    mask = np.full((s, CACHE_CAP + s), NEG_INF, np.float32)
+    for i in range(3):  # 3 live chain nodes, slot 3 is padding
+        mask[i, CACHE_CAP:CACHE_CAP + i + 1] = 0.0
+    positions = jnp.asarray([0, 1, 2, 0], jnp.int32)
+
+    def run(pad_tok):
+        toks = jnp.asarray([10, 11, 12, pad_tok], jnp.int32)
+        lg, _, _, _ = teacher_block_forward(
+            TP, toks, positions, jnp.asarray(mask), kc, vc, fused=True)
+        return np.asarray(lg)
+
+    np.testing.assert_allclose(run(0)[:3], run(499)[:3], atol=1e-5)
+
+
+def test_draft_forward_shapes_and_feature_sensitivity():
+    rng = np.random.default_rng(10)
+    kc, vc = empty_cache(DRAFT)
+    s = 8
+    toks = jnp.asarray(rng.integers(2, 512, size=s), jnp.int32)
+    feats = jnp.asarray(rng.normal(size=(s, FEAT_DIM)), jnp.float32)
+    mask = causal_mask(s, 0)
+    pos = jnp.arange(s, dtype=jnp.int32)
+    logits, hidden, k_new, v_new = draft_block_forward(DP, toks, feats, pos, mask, kc, vc)
+    assert logits.shape == (s, 512)
+    assert hidden.shape == (s, FEAT_DIM)
+    assert k_new.shape == (DRAFT.layers, s, DRAFT.heads, DRAFT.d_head)
+    # Features must actually condition the logits (EAGLE coupling).
+    logits2, _, _, _ = draft_block_forward(DP, toks, feats * 0.0, pos, mask, kc, vc)
+    assert np.abs(np.asarray(logits) - np.asarray(logits2)).max() > 1e-3
+
+
+def test_probe_argmax_points_into_visible_region():
+    rng = np.random.default_rng(11)
+    kc, vc = empty_cache(DRAFT)
+    s = 8
+    toks = jnp.asarray(rng.integers(2, 512, size=s), jnp.int32)
+    feats = jnp.asarray(rng.normal(size=(s, FEAT_DIM)), jnp.float32)
+    t = 0
+    mask = causal_mask(s, t)
+    pos = jnp.arange(s, dtype=jnp.int32)
+    _, _, _, _, top1 = draft_block_forward(DP, toks, feats, pos, mask, kc, vc, with_probe=True)
+    top1 = np.asarray(top1)
+    assert top1.shape == (s, DRAFT.heads)
+    for i in range(s):
+        assert (top1[i] >= CACHE_CAP).all() and (top1[i] <= CACHE_CAP + i).all()
+
+
+def test_params_roundtrip_flatten():
+    flat = flatten_params(TP)
+    rebuilt = unflatten_params(flat)
+    for k, v in flatten_params(rebuilt).items():
+        np.testing.assert_array_equal(v, flat[k])

@@ -1,0 +1,79 @@
+//! Cache-management ablation bench (paper §3.1 / ablation (i)):
+//!
+//!   * branch replication: DeepCopy (`Replicate = deepcopy`) vs
+//!     SegmentShare;
+//!   * commit: length-based vs path-index full reorder vs the
+//!     prefix-sharing fast reorder (EA_FAST_CACHE_REORDER).
+//!
+//! Uses the real teacher cache geometry (L=4, C from the default
+//! contract, H=4, Dh=32) so byte counts match production.
+
+use eagle_pangu::cache::ManagedCache;
+use eagle_pangu::config::{CacheStrategy, Contract};
+use eagle_pangu::util::bench::{bench, black_box};
+
+fn rows(dims: eagle_pangu::config::Dims, s: usize, base: f32) -> Vec<f32> {
+    let rs = dims.heads * dims.d_head;
+    (0..dims.layers * s * rs)
+        .map(|i| base + (i % 97) as f32 * 0.01)
+        .collect()
+}
+
+fn main() {
+    let c = Contract::default();
+    let dims = c.teacher;
+    let cap = c.cache_cap;
+    println!("== branch replication + commit (paper §3.1), teacher cache [{},{},{},{}] ==",
+             dims.layers, cap, dims.heads, dims.d_head);
+
+    let t0 = 256; // committed prefix
+    let m = 17; // root + 16-node tree
+    let k_new = rows(dims, 32, 100.0);
+    let a = 5; // accepted path length incl. root
+
+    for strategy in [CacheStrategy::DeepCopy, CacheStrategy::SegmentShare] {
+        // full verification-round cache lifecycle: branch + append + commit
+        let mut cache = ManagedCache::new(dims, cap, strategy, true);
+        cache.append_committed(&rows(dims, 128, 1.0), &rows(dims, 128, 2.0), 128, 128).unwrap();
+        cache.append_committed(&rows(dims, 128, 3.0), &rows(dims, 128, 4.0), 128, 128).unwrap();
+        let path: Vec<usize> = (0..t0).chain((0..a).map(|i| t0 + i)).collect();
+        bench(&format!("round_{}_path_commit_fast", strategy.as_str()), 30.0, 7, || {
+            cache.begin_branch().unwrap();
+            cache.append_branch(&k_new, &k_new, 32, m).unwrap();
+            cache.commit_path(&path).unwrap();
+            // rewind so the next iteration sees the same state
+            unsafe_truncate(&mut cache, t0);
+            black_box(cache.len());
+        });
+
+        let mut cache2 = ManagedCache::new(dims, cap, strategy, false);
+        cache2.append_committed(&rows(dims, 128, 1.0), &rows(dims, 128, 2.0), 128, 128).unwrap();
+        cache2.append_committed(&rows(dims, 128, 3.0), &rows(dims, 128, 4.0), 128, 128).unwrap();
+        bench(&format!("round_{}_path_commit_full", strategy.as_str()), 30.0, 7, || {
+            cache2.begin_branch().unwrap();
+            cache2.append_branch(&k_new, &k_new, 32, m).unwrap();
+            cache2.commit_path(&path).unwrap();
+            unsafe_truncate(&mut cache2, t0);
+            black_box(cache2.len());
+        });
+
+        let mut cache3 = ManagedCache::new(dims, cap, strategy, true);
+        cache3.append_committed(&rows(dims, 128, 1.0), &rows(dims, 128, 2.0), 128, 128).unwrap();
+        cache3.append_committed(&rows(dims, 128, 3.0), &rows(dims, 128, 4.0), 128, 128).unwrap();
+        bench(&format!("round_{}_length_commit", strategy.as_str()), 30.0, 7, || {
+            cache3.begin_branch().unwrap();
+            cache3.append_branch(&k_new, &k_new, 32, m).unwrap();
+            cache3.commit_length(a).unwrap();
+            unsafe_truncate(&mut cache3, t0);
+            black_box(cache3.len());
+        });
+    }
+}
+
+/// Test-only rewind: re-run rounds from the same committed length.
+fn unsafe_truncate(cache: &mut ManagedCache, to: usize) {
+    // commit_path with an identity prefix acts as a truncation
+    cache.begin_branch().unwrap();
+    let path: Vec<usize> = (0..to).collect();
+    cache.commit_path(&path).unwrap();
+}

@@ -1,0 +1,62 @@
+//! End-to-end decode bench: one full turn, baseline vs EA, on the real
+//! artifacts when present (else the SimBackend). This is the per-turn
+//! version of E1 — `eagle-pangu bench-e1` regenerates the full Table 1.
+
+use eagle_pangu::backend::sim::SimBackend;
+use eagle_pangu::backend::ModelBackend;
+use eagle_pangu::config::{CacheStrategy, RunConfig};
+use eagle_pangu::engine::Engine;
+use eagle_pangu::runtime::PjrtBackend;
+use eagle_pangu::util::bench::{bench, black_box};
+use eagle_pangu::workload::Grammar;
+
+fn backend() -> Box<dyn ModelBackend> {
+    match PjrtBackend::load("artifacts") {
+        Ok(b) => Box::new(b),
+        Err(_) => {
+            eprintln!("note: artifacts/ missing, benching the SimBackend");
+            Box::new(SimBackend::new(85))
+        }
+    }
+}
+
+fn main() {
+    let prompt = Grammar::code().sample_sequence(48, 3, None);
+    let max_new = 48;
+
+    let mut b = backend();
+    let cfg = RunConfig::default();
+    let mut engine = Engine::new(&mut *b, cfg.clone());
+    bench("turn_baseline_48tok", 500.0, 3, || {
+        engine.reset();
+        let out = engine.generate_baseline(&prompt, max_new).unwrap();
+        black_box(out.tokens.len());
+    });
+
+    bench("turn_ea_m16_d10", 500.0, 3, || {
+        engine.reset();
+        let out = engine.generate_speculative(&prompt, max_new).unwrap();
+        black_box(out.tokens.len());
+    });
+
+    let mut cfg2 = cfg.clone();
+    cfg2.tree.budget = 8;
+    cfg2.tree.depth_max = 5;
+    let mut b2 = backend();
+    let mut engine2 = Engine::new(&mut *b2, cfg2);
+    bench("turn_ea_m8_d5", 500.0, 3, || {
+        engine2.reset();
+        let out = engine2.generate_speculative(&prompt, max_new).unwrap();
+        black_box(out.tokens.len());
+    });
+
+    let mut cfg3 = cfg;
+    cfg3.cache_strategy = CacheStrategy::DeepCopy;
+    let mut b3 = backend();
+    let mut engine3 = Engine::new(&mut *b3, cfg3);
+    bench("turn_ea_m16_deepcopy", 500.0, 3, || {
+        engine3.reset();
+        let out = engine3.generate_speculative(&prompt, max_new).unwrap();
+        black_box(out.tokens.len());
+    });
+}

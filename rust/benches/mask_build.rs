@@ -1,0 +1,57 @@
+//! Mask-construction micro-bench (paper §3.3 implementation note):
+//! dense ancestor-walk builder vs ancestor-table/bitset builder across
+//! speculative budgets — the paper's "dense vs structured masks"
+//! trade-off, plus the chain-mask fast path used by prefill/baseline.
+
+use eagle_pangu::tree::{MaskBuilder, SpecTree, Tensorized};
+use eagle_pangu::util::bench::{bench, black_box};
+use eagle_pangu::util::SplitMix64;
+
+fn random_tree(budget: usize, seed: u64) -> SpecTree {
+    let mut rng = SplitMix64::new(seed);
+    let mut tree = SpecTree::with_root(5);
+    let mut frontier = vec![0usize];
+    let mut added = 0;
+    while added < budget && !frontier.is_empty() {
+        let mut next = Vec::new();
+        for &p in &frontier {
+            for _ in 0..rng.range(1, 5) {
+                if added >= budget {
+                    break;
+                }
+                next.push(tree.add_child(p, rng.range(2, 512) as i32, -0.5));
+                added += 1;
+            }
+        }
+        frontier = next;
+    }
+    tree
+}
+
+fn main() {
+    println!("== mask construction: dense vs ancestor-table (paper §3.3) ==");
+    let cap = 512;
+    let mb = MaskBuilder::new(cap);
+    let t = 384; // committed prefix length
+    for (m, s_pad) in [(15, 16usize), (63, 64), (127, 128), (255, 256)] {
+        let tens = Tensorized::from_tree(&random_tree(m, 7), s_pad, true).unwrap();
+        let mut buf = Vec::new();
+        bench(&format!("mask_dense_m{m}_s{s_pad}"), 25.0, 7, || {
+            mb.build_dense(&mut buf, &tens, t, None);
+            black_box(buf.len());
+        });
+        bench(&format!("mask_table_m{m}_s{s_pad}"), 25.0, 7, || {
+            mb.build_table(&mut buf, &tens, t, None);
+            black_box(buf.len());
+        });
+    }
+    let mut buf = Vec::new();
+    bench("mask_chain_s8_prefill_row", 25.0, 7, || {
+        mb.build_chain(&mut buf, 8, 1, t, None);
+        black_box(buf.len());
+    });
+    bench("mask_chain_s128_prefill_chunk", 25.0, 7, || {
+        mb.build_chain(&mut buf, 128, 128, t, None);
+        black_box(buf.len());
+    });
+}

@@ -1,0 +1,47 @@
+//! Tensorization micro-bench: cost of the §3.2 safe-indexing scheme.
+//!
+//! Ablation axis (DESIGN.md §5): dummy-root tensorization *with* the
+//! structural invariant checks vs *without* — quantifying what the
+//! paper's "lightweight relative to a teacher forward" claim costs here.
+
+use eagle_pangu::tree::{SpecTree, Tensorized};
+use eagle_pangu::util::bench::{bench, black_box};
+use eagle_pangu::util::SplitMix64;
+
+fn random_tree(budget: usize, topk: usize, seed: u64) -> SpecTree {
+    let mut rng = SplitMix64::new(seed);
+    let mut tree = SpecTree::with_root(5);
+    let mut frontier = vec![0usize];
+    let mut added = 0;
+    while added < budget && !frontier.is_empty() {
+        let mut next = Vec::new();
+        for &p in &frontier {
+            for _ in 0..rng.range(1, topk as u64 + 1) {
+                if added >= budget {
+                    break;
+                }
+                next.push(tree.add_child(p, rng.range(2, 512) as i32, -0.5));
+                added += 1;
+            }
+        }
+        frontier = next;
+    }
+    tree
+}
+
+fn main() {
+    println!("== tensorize: dummy-root arrays + ancestor table (paper §3.2) ==");
+    for (m, s_pad) in [(15, 16usize), (63, 64), (255, 256)] {
+        let tree = random_tree(m, 4, 42);
+        bench(&format!("tensorize_checked_m{m}_s{s_pad}"), 20.0, 7, || {
+            black_box(Tensorized::from_tree(&tree, s_pad, true).unwrap());
+        });
+        bench(&format!("tensorize_unchecked_m{m}_s{s_pad}"), 20.0, 7, || {
+            black_box(Tensorized::from_tree(&tree, s_pad, false).unwrap());
+        });
+        let tens = Tensorized::from_tree(&tree, s_pad, false).unwrap();
+        bench(&format!("invariant_checks_only_m{m}"), 20.0, 7, || {
+            black_box(tens.check_invariants().unwrap());
+        });
+    }
+}

@@ -1,0 +1,85 @@
+//! Verification-path bench (paper §4.1 two-mode protocol): the cost of
+//! one teacher verification step under the fused (Pallas) vs eager
+//! artifacts, per S variant, plus draft-step cost — the per-call numbers
+//! that explain the end-to-end E1/E2 results.
+//!
+//! Requires `make artifacts`; skips gracefully otherwise.
+
+use eagle_pangu::backend::{KvView, ModelBackend, StepArgs};
+use eagle_pangu::config::contract::NEG_INF;
+use eagle_pangu::config::ExecMode;
+use eagle_pangu::runtime::PjrtBackend;
+use eagle_pangu::util::bench::{bench, black_box};
+use eagle_pangu::util::SplitMix64;
+
+fn main() {
+    let Ok(mut backend) = PjrtBackend::load("artifacts") else {
+        eprintln!("SKIP verify_path: artifacts/ missing (run `make artifacts`)");
+        return;
+    };
+    let c = backend.contract().clone();
+    let cap = c.cache_cap;
+    let mut rng = SplitMix64::new(1);
+    let kn = c.teacher.cache_elems(cap);
+    let k: Vec<f32> = (0..kn).map(|_| rng.f32_pm1() * 0.1).collect();
+    let v: Vec<f32> = (0..kn).map(|_| rng.f32_pm1() * 0.1).collect();
+    let dn = c.draft.cache_elems(cap);
+    let dk: Vec<f32> = (0..dn).map(|_| rng.f32_pm1() * 0.1).collect();
+    let dv: Vec<f32> = (0..dn).map(|_| rng.f32_pm1() * 0.1).collect();
+    let t = 256;
+
+    println!("== teacher verification per S variant, fused vs eager ==");
+    for s in [8usize, 16, 32, 64, 128] {
+        let tokens: Vec<i32> = (0..s).map(|_| rng.range(2, 512) as i32).collect();
+        let positions: Vec<i32> = (0..s).map(|i| (t + i) as i32).collect();
+        let w = cap + s;
+        let mut mask = vec![NEG_INF; s * w];
+        for i in 0..s {
+            mask[i * w..i * w + t].fill(0.0);
+            for j in 0..=i {
+                mask[i * w + cap + j] = 0.0;
+            }
+        }
+        for mode in [ExecMode::Fused, ExecMode::Eager] {
+            bench(&format!("teacher_{}_s{s}", mode.as_str()), 200.0, 5, || {
+                let out = backend
+                    .teacher_step(mode, StepArgs {
+                        tokens: &tokens,
+                        positions: &positions,
+                        mask: &mask,
+                        kv: KvView { k: &k, v: &v },
+                        feats_in: None,
+                        probe: false,
+                    })
+                    .unwrap();
+                black_box(out.logits[0]);
+            });
+        }
+    }
+
+    println!("== draft step per S variant ==");
+    for s in [8usize, 32, 64] {
+        let tokens: Vec<i32> = (0..s).map(|_| rng.range(2, 512) as i32).collect();
+        let positions: Vec<i32> = (0..s).map(|i| (t + i) as i32).collect();
+        let feats = vec![0.05f32; s * c.feat_dim];
+        let w = cap + s;
+        let mut mask = vec![NEG_INF; s * w];
+        for i in 0..s {
+            mask[i * w..i * w + t].fill(0.0);
+            mask[i * w + cap + i] = 0.0;
+        }
+        bench(&format!("draft_s{s}"), 200.0, 5, || {
+            let out = backend
+                .draft_step(StepArgs {
+                    tokens: &tokens,
+                    positions: &positions,
+                    mask: &mask,
+                    kv: KvView { k: &dk, v: &dv },
+                    feats_in: Some(&feats),
+                    probe: false,
+                })
+                .unwrap();
+            black_box(out.logits[0]);
+        });
+    }
+}

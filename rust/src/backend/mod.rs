@@ -1,0 +1,157 @@
+//! Model-backend abstraction: the engine talks to the teacher/draft through
+//! this trait, so the speculative engine, cache manager and coordinator are
+//! testable against a deterministic simulator ([`sim::SimBackend`]) and run
+//! in production against AOT artifacts ([`crate::runtime::PjrtBackend`]).
+//!
+//! The call contract mirrors the AOT modules (DESIGN.md §2): the backend
+//! *reads* a committed-prefix KV cache and *returns* the KV rows of the S
+//! new tokens; it never writes any cache — all cache mutation is owned by
+//! [`crate::cache::ManagedCache`] ("state safety", paper §3.3).
+
+pub mod sim;
+
+use crate::config::{Contract, ExecMode};
+use anyhow::Result;
+
+/// Read-only view of a KV cache buffer pair, layout `[L, cap, H, Dh]`.
+#[derive(Clone, Copy)]
+pub struct KvView<'a> {
+    pub k: &'a [f32],
+    pub v: &'a [f32],
+}
+
+/// Outputs of one teacher/draft step over an S-token block.
+#[derive(Clone, Debug)]
+pub struct StepOut {
+    /// Compiled block size of the call (padded slot count).
+    pub s: usize,
+    /// `[S, V]` next-token logits per slot.
+    pub logits: Vec<f32>,
+    /// `[S, F]` feature rows (teacher: exported EAGLE features; draft: its
+    /// own hidden states, used as parent features for deeper nodes).
+    pub feats: Vec<f32>,
+    /// `[L, S, H, Dh]` KV rows for the S new tokens.
+    pub k_new: Vec<f32>,
+    pub v_new: Vec<f32>,
+    /// `[S, H]` last-layer top-1 attention column per head (probe runs only).
+    pub attn_top1: Option<Vec<i32>>,
+}
+
+impl StepOut {
+    /// Logits row for slot `i`.
+    pub fn logits_row(&self, i: usize, vocab: usize) -> &[f32] {
+        &self.logits[i * vocab..(i + 1) * vocab]
+    }
+
+    /// Feature row for slot `i`.
+    pub fn feat_row(&self, i: usize, feat_dim: usize) -> &[f32] {
+        &self.feats[i * feat_dim..(i + 1) * feat_dim]
+    }
+}
+
+/// Inputs of one step. `tokens/positions` have exactly `s` entries
+/// (padded by the caller); `mask` is the `[s, cap+s]` additive mask.
+pub struct StepArgs<'a> {
+    pub tokens: &'a [i32],
+    pub positions: &'a [i32],
+    pub mask: &'a [f32],
+    pub kv: KvView<'a>,
+    /// Draft only: `[s, F]` incoming feature rows (EAGLE conditioning).
+    pub feats_in: Option<&'a [f32]>,
+    /// Request last-layer attention statistics (analysis-only).
+    pub probe: bool,
+}
+
+/// A teacher+draft pair the engine can decode with.
+///
+/// Implementations are single-threaded (PJRT handles are !Send); each
+/// coordinator worker owns its own backend instance (DESIGN.md §3.4).
+pub trait ModelBackend {
+    fn contract(&self) -> &Contract;
+
+    /// Teacher verification/prefill step under `mode` (fused or eager
+    /// artifact — the paper's two-mode protocol).
+    fn teacher_step(&mut self, mode: ExecMode, args: StepArgs) -> Result<StepOut>;
+
+    /// Draft step (chain refresh or tree-frontier expansion).
+    fn draft_step(&mut self, args: StepArgs) -> Result<StepOut>;
+
+    /// Human-readable backend id for manifests/traces.
+    fn name(&self) -> &'static str;
+}
+
+/// Greedy argmax over a logits row.
+pub fn argmax(row: &[f32]) -> usize {
+    let mut best = 0;
+    let mut best_v = f32::NEG_INFINITY;
+    for (i, v) in row.iter().enumerate() {
+        if *v > best_v {
+            best_v = *v;
+            best = i;
+        }
+    }
+    best
+}
+
+/// Top-k (index, value) pairs of a logits row, descending.
+pub fn topk(row: &[f32], k: usize) -> Vec<(usize, f32)> {
+    let mut idx: Vec<usize> = (0..row.len()).collect();
+    // partial selection: k is tiny (<= 16) vs V=512 — simple sort is fine,
+    // but avoid full sort: select_nth then sort the head.
+    if k < row.len() {
+        idx.select_nth_unstable_by(k, |a, b| row[*b].partial_cmp(&row[*a]).unwrap());
+        idx.truncate(k);
+    }
+    idx.sort_by(|a, b| row[*b].partial_cmp(&row[*a]).unwrap());
+    idx.into_iter().map(|i| (i, row[i])).collect()
+}
+
+/// log-softmax value of index `i` within a logits row.
+pub fn log_softmax_at(row: &[f32], i: usize) -> f64 {
+    let mx = row.iter().fold(f32::NEG_INFINITY, |a, b| a.max(*b)) as f64;
+    let z: f64 = row.iter().map(|x| ((*x as f64) - mx).exp()).sum();
+    (row[i] as f64 - mx) - z.ln()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_and_topk() {
+        let row = [0.1f32, 3.0, -1.0, 2.0];
+        assert_eq!(argmax(&row), 1);
+        let t = topk(&row, 2);
+        assert_eq!(t[0].0, 1);
+        assert_eq!(t[1].0, 3);
+    }
+
+    #[test]
+    fn topk_full_row() {
+        let row = [1.0f32, 2.0];
+        let t = topk(&row, 5.min(row.len()));
+        assert_eq!(t.len(), 2);
+        assert_eq!(t[0].0, 1);
+    }
+
+    #[test]
+    fn log_softmax_normalizes() {
+        let row = [1.0f32, 2.0, 3.0];
+        let total: f64 = (0..3).map(|i| log_softmax_at(&row, i).exp()).sum();
+        assert!((total - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn step_out_row_accessors() {
+        let out = StepOut {
+            s: 2,
+            logits: vec![0.0, 1.0, 2.0, 3.0],
+            feats: vec![9.0, 8.0],
+            k_new: vec![],
+            v_new: vec![],
+            attn_top1: None,
+        };
+        assert_eq!(out.logits_row(1, 2), &[2.0, 3.0]);
+        assert_eq!(out.feat_row(0, 1), &[9.0]);
+    }
+}

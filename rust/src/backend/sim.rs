@@ -1,0 +1,361 @@
+//! SimBackend — a deterministic "hash language model" implementing
+//! [`ModelBackend`] with *exact* context semantics.
+//!
+//! Purpose: every engine-level property the paper cares about — branch
+//! isolation, commit equivalence, greedy output equivalence between EA and
+//! baseline decoding, mask leakage, truncation sensitivity — can be tested
+//! in microseconds without PJRT or artifacts.
+//!
+//! Semantics: a step's logits for slot `i` depend **only** on the visible
+//! context of that slot — reconstructed the way real attention would see
+//! it: tokens are read from the KV cache through the additive mask (the
+//! sim writes each row's token id and position into its KV row), plus the
+//! visible speculative slots of the current call. The context is hashed
+//! and the hash determines a deterministic top-candidate list.
+//!
+//! * The sim **teacher**'s candidates come from the context hash.
+//! * The sim **draft** computes the same hash on *its own* visible
+//!   context (so a truncated drafter window changes its context and
+//!   collapses agreement, reproducing E4), then agrees with the teacher's
+//!   top-1 with probability `agree_pct` (a per-context deterministic
+//!   coin), else swaps its top two candidates.
+//!
+//! Because the sim reads context strictly through mask + cache, any
+//! masking bug, cache-write bug or commit bug in the engine changes its
+//! outputs and is caught by the equivalence tests.
+
+use super::{ModelBackend, StepArgs, StepOut};
+use crate::config::contract::{FIRST_TOKEN, VOCAB};
+use crate::config::{Contract, ExecMode};
+use crate::util::rng::splitmix64;
+use anyhow::Result;
+
+/// Number of distinguished candidates per context.
+const TOP_N: usize = 8;
+
+pub struct SimBackend {
+    contract: Contract,
+    /// Probability (percent) that the draft's top-1 equals the teacher's.
+    pub agree_pct: u64,
+    /// Calls observed (per role) — used by tests and the harness.
+    pub teacher_calls: u64,
+    pub draft_calls: u64,
+}
+
+impl SimBackend {
+    pub fn new(agree_pct: u64) -> Self {
+        Self { contract: Contract::default(), agree_pct, teacher_calls: 0, draft_calls: 0 }
+    }
+
+    /// Context hash for slot `i`: fold (position, token) pairs of every
+    /// visible column, sorted by position (stable on column order).
+    fn context_hash(&self, i: usize, args: &StepArgs) -> u64 {
+        let cap = self.contract.cache_cap;
+        let s = args.tokens.len();
+        let w = cap + s;
+        let row = &args.mask[i * w..(i + 1) * w];
+        let mut seen: Vec<(i64, i64)> = Vec::new();
+        // cache columns: token at element 0, position at element 1 of the
+        // layer-0 row (the sim's own KV encoding).
+        let rs = self.contract.teacher.heads * self.contract.teacher.d_head; // == draft rs? no!
+        let _ = rs;
+        for (j, mval) in row.iter().take(cap).enumerate() {
+            if *mval == 0.0 {
+                let tok = args.kv.k[j * self.row_stride(args)] as i64;
+                let pos = args.kv.k[j * self.row_stride(args) + 1] as i64;
+                seen.push((pos, tok));
+            }
+        }
+        for (j, mval) in row[cap..cap + s].iter().enumerate() {
+            if *mval == 0.0 {
+                seen.push((args.positions[j] as i64, args.tokens[j] as i64));
+            }
+        }
+        seen.sort_by_key(|(p, _)| *p);
+        let mut h = 0x5151_5151u64;
+        for (p, t) in seen {
+            h = splitmix64(h.wrapping_mul(31) ^ ((t as u64) << 16) ^ (p as u64));
+        }
+        h
+    }
+
+    /// Element stride of one cache row in layer 0 — derived from buffer
+    /// size so the same code serves teacher- and draft-shaped caches.
+    fn row_stride(&self, args: &StepArgs) -> usize {
+        // kv buffer is [L, cap, H, Dh]; we address layer 0 rows only.
+        let per_layer = args.kv.k.len()
+            / match args.kv.k.len() {
+                n if n == self.contract.teacher.cache_elems(self.contract.cache_cap) => {
+                    self.contract.teacher.layers
+                }
+                _ => self.contract.draft.layers,
+            };
+        per_layer / self.contract.cache_cap
+    }
+
+    /// Deterministic candidate list for a context.
+    fn candidates(ctx: u64) -> Vec<i32> {
+        let span = (VOCAB - FIRST_TOKEN as usize) as u64;
+        let mut out: Vec<i32> = Vec::with_capacity(TOP_N);
+        for i in 0..TOP_N {
+            let mut t = FIRST_TOKEN + (splitmix64(ctx ^ ((i as u64 + 1) * 0x9E37)) % span) as i32;
+            while out.contains(&t) {
+                t = FIRST_TOKEN + ((t - FIRST_TOKEN + 1) % span as i32);
+            }
+            out.push(t);
+        }
+        out
+    }
+
+    fn logits_from(cands: &[i32], vocab: usize) -> Vec<f32> {
+        let mut row = vec![-4.0f32; vocab];
+        for (i, c) in cands.iter().enumerate() {
+            row[*c as usize] = 6.0 - i as f32 * 0.75;
+        }
+        row
+    }
+
+    fn kv_rows(&self, args: &StepArgs, layers: usize, heads: usize, d_head: usize) -> Vec<f32> {
+        let s = args.tokens.len();
+        let rs = heads * d_head;
+        let mut out = vec![0.0f32; layers * s * rs];
+        for l in 0..layers {
+            for i in 0..s {
+                let off = (l * s + i) * rs;
+                out[off] = args.tokens[i] as f32;
+                out[off + 1] = args.positions[i] as f32;
+            }
+        }
+        out
+    }
+
+    fn feats(&self, args: &StepArgs) -> Vec<f32> {
+        let s = args.tokens.len();
+        let f = self.contract.feat_dim;
+        let mut out = vec![0.0f32; s * f];
+        for i in 0..s {
+            out[i * f] = args.tokens[i] as f32;
+            out[i * f + 1] = args.positions[i] as f32;
+        }
+        out
+    }
+
+    fn probe(&self, args: &StepArgs, heads: usize) -> Option<Vec<i32>> {
+        if !args.probe {
+            return None;
+        }
+        let cap = self.contract.cache_cap;
+        let s = args.tokens.len();
+        let w = cap + s;
+        let mut out = vec![0i32; s * heads];
+        for i in 0..s {
+            let row = &args.mask[i * w..(i + 1) * w];
+            let first = row.iter().position(|m| *m == 0.0).unwrap_or(0);
+            let last = w - 1 - row.iter().rev().position(|m| *m == 0.0).unwrap_or(0);
+            for h in 0..heads {
+                // even heads look far back (the "topic" dependency that
+                // Fig 7 surfaces), odd heads look local.
+                out[i * heads + h] = if h % 2 == 0 { first as i32 } else { last as i32 };
+            }
+        }
+        Some(out)
+    }
+}
+
+impl ModelBackend for SimBackend {
+    fn contract(&self) -> &Contract {
+        &self.contract
+    }
+
+    fn teacher_step(&mut self, _mode: ExecMode, args: StepArgs) -> Result<StepOut> {
+        self.teacher_calls += 1;
+        let s = args.tokens.len();
+        let v = self.contract.vocab;
+        let mut logits = Vec::with_capacity(s * v);
+        for i in 0..s {
+            let ctx = self.context_hash(i, &args);
+            logits.extend(Self::logits_from(&Self::candidates(ctx), v));
+        }
+        let d = self.contract.teacher;
+        Ok(StepOut {
+            s,
+            logits,
+            feats: self.feats(&args),
+            k_new: self.kv_rows(&args, d.layers, d.heads, d.d_head),
+            v_new: self.kv_rows(&args, d.layers, d.heads, d.d_head),
+            attn_top1: self.probe(&args, d.heads),
+        })
+    }
+
+    fn draft_step(&mut self, args: StepArgs) -> Result<StepOut> {
+        self.draft_calls += 1;
+        let s = args.tokens.len();
+        let v = self.contract.vocab;
+        let mut logits = Vec::with_capacity(s * v);
+        for i in 0..s {
+            let ctx = self.context_hash(i, &args);
+            // Deterministic agreement coin per context: an agreeing draft
+            // proposes the teacher's own candidate list; a disagreeing one
+            // proposes an unrelated list (a *bad* draft — merely swapping
+            // the top-2 would be rescued by the tree's top-k children,
+            // which is exactly the point of tree speculation).
+            let cands = if splitmix64(ctx ^ 0xD15A_6EE2) % 100 < self.agree_pct {
+                Self::candidates(ctx)
+            } else {
+                Self::candidates(splitmix64(ctx ^ 0xBAD_D4AF7))
+            };
+            logits.extend(Self::logits_from(&cands, v));
+        }
+        let d = self.contract.draft;
+        Ok(StepOut {
+            s,
+            logits,
+            feats: self.feats(&args),
+            k_new: self.kv_rows(&args, d.layers, d.heads, d.d_head),
+            v_new: self.kv_rows(&args, d.layers, d.heads, d.d_head),
+            attn_top1: self.probe(&args, d.heads),
+        })
+    }
+
+    fn name(&self) -> &'static str {
+        "sim"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::{argmax, KvView};
+    use crate::config::contract::{CACHE_CAP, NEG_INF};
+
+    fn empty_cache(c: &Contract) -> (Vec<f32>, Vec<f32>) {
+        let n = c.teacher.cache_elems(c.cache_cap);
+        (vec![0.0; n], vec![0.0; n])
+    }
+
+    fn chain_mask(s: usize, live: usize, t: usize) -> Vec<f32> {
+        let w = CACHE_CAP + s;
+        let mut m = vec![NEG_INF; s * w];
+        for i in 0..live {
+            for j in 0..t {
+                m[i * w + j] = 0.0;
+            }
+            for j in 0..=i {
+                m[i * w + CACHE_CAP + j] = 0.0;
+            }
+        }
+        m
+    }
+
+    #[test]
+    fn teacher_is_deterministic_and_context_sensitive() {
+        let mut b = SimBackend::new(100);
+        let (k, v) = empty_cache(b.contract());
+        let mask = chain_mask(8, 3, 0);
+        let toks = [5i32, 6, 7, 0, 0, 0, 0, 0];
+        let pos = [0i32, 1, 2, 0, 0, 0, 0, 0];
+        let mk_args = |tokens: &'static [i32; 8]| StepArgs {
+            tokens, positions: &pos, mask: &mask,
+            kv: KvView { k: &k, v: &v }, feats_in: None, probe: false,
+        };
+        let o1 = b.teacher_step(ExecMode::Fused, mk_args(&[5, 6, 7, 0, 0, 0, 0, 0])).unwrap();
+        let o2 = b.teacher_step(ExecMode::Eager, mk_args(&[5, 6, 7, 0, 0, 0, 0, 0])).unwrap();
+        assert_eq!(o1.logits, o2.logits, "mode must not change sim semantics");
+        let o3 = b.teacher_step(ExecMode::Fused, mk_args(&[5, 6, 9, 0, 0, 0, 0, 0])).unwrap();
+        assert_ne!(
+            argmax(o1.logits_row(2, VOCAB)),
+            argmax(o3.logits_row(2, VOCAB)),
+            "changing a visible token must change the slot's distribution"
+        );
+        let _ = toks;
+    }
+
+    #[test]
+    fn masked_slots_do_not_influence_context() {
+        let mut b = SimBackend::new(100);
+        let (k, v) = empty_cache(b.contract());
+        let mask = chain_mask(8, 2, 0);
+        let pos = [0i32, 1, 0, 0, 0, 0, 0, 0];
+        let run = |b: &mut SimBackend, t2: i32| {
+            let tokens = [5, 6, t2, 0, 0, 0, 0, 0];
+            let out = b
+                .teacher_step(ExecMode::Fused, StepArgs {
+                    tokens: &tokens, positions: &pos, mask: &mask,
+                    kv: KvView { k: &k, v: &v }, feats_in: None, probe: false,
+                })
+                .unwrap();
+            out.logits_row(1, VOCAB).to_vec()
+        };
+        assert_eq!(run(&mut b, 100), run(&mut b, 200), "masked slot token leaked");
+    }
+
+    #[test]
+    fn draft_agreement_controls_top1_match() {
+        let mut t = SimBackend::new(100);
+        let mut d_always = SimBackend::new(100);
+        let mut d_never = SimBackend::new(0);
+        let (k, v) = empty_cache(t.contract());
+        let mask = chain_mask(8, 4, 0);
+        let tokens = [5i32, 9, 3, 7, 0, 0, 0, 0];
+        let pos = [0i32, 1, 2, 3, 0, 0, 0, 0];
+        let args = || StepArgs {
+            tokens: &tokens, positions: &pos, mask: &mask,
+            kv: KvView { k: &k, v: &v }, feats_in: None, probe: false,
+        };
+        let to = t.teacher_step(ExecMode::Fused, args()).unwrap();
+        let da = d_always.draft_step(args()).unwrap();
+        let dn = d_never.draft_step(args()).unwrap();
+        for i in 0..4 {
+            assert_eq!(
+                argmax(to.logits_row(i, VOCAB)),
+                argmax(da.logits_row(i, VOCAB)),
+                "agree_pct=100 must match teacher"
+            );
+            assert_ne!(
+                argmax(to.logits_row(i, VOCAB)),
+                argmax(dn.logits_row(i, VOCAB)),
+                "agree_pct=0 must differ"
+            );
+        }
+    }
+
+    #[test]
+    fn kv_rows_encode_token_and_position() {
+        let mut b = SimBackend::new(100);
+        let (k, v) = empty_cache(b.contract());
+        let mask = chain_mask(8, 2, 0);
+        let tokens = [42i32, 43, 0, 0, 0, 0, 0, 0];
+        let pos = [7i32, 8, 0, 0, 0, 0, 0, 0];
+        let out = b
+            .teacher_step(ExecMode::Fused, StepArgs {
+                tokens: &tokens, positions: &pos, mask: &mask,
+                kv: KvView { k: &k, v: &v }, feats_in: None, probe: false,
+            })
+            .unwrap();
+        let rs = b.contract().teacher.heads * b.contract().teacher.d_head;
+        assert_eq!(out.k_new[0], 42.0);
+        assert_eq!(out.k_new[1], 7.0);
+        assert_eq!(out.k_new[rs], 43.0);
+        assert_eq!(out.k_new[rs + 1], 8.0);
+    }
+
+    #[test]
+    fn probe_reports_far_and_near_columns() {
+        let mut b = SimBackend::new(100);
+        let (k, v) = empty_cache(b.contract());
+        let mask = chain_mask(8, 2, 5); // prefix of 5 visible
+        let tokens = [1i32, 2, 0, 0, 0, 0, 0, 0];
+        let pos = [5i32, 6, 0, 0, 0, 0, 0, 0];
+        let out = b
+            .draft_step(StepArgs {
+                tokens: &tokens, positions: &pos, mask: &mask,
+                kv: KvView { k: &k, v: &v }, feats_in: None, probe: true,
+            })
+            .unwrap();
+        let top1 = out.attn_top1.unwrap();
+        let heads = b.contract().draft.heads;
+        assert_eq!(top1[0], 0, "even head looks at the far history (topic)");
+        assert_eq!(top1[1], (CACHE_CAP + 0) as i32, "odd head looks local");
+        let _ = heads;
+    }
+}

@@ -1,0 +1,605 @@
+//! The branchable/commit KV-cache manager — paper §3.1, implemented as a
+//! real memory-owning subsystem (the AOT models never write caches; every
+//! KV row lands here).
+//!
+//! State machine per cache:
+//!
+//! ```text
+//!   committed [0, len)  --begin_branch-->  branch region [len, len+b)
+//!        ^                                        |
+//!        |---- commit_length / commit_path <------|----- rollback
+//! ```
+//!
+//! * [`crate::config::CacheStrategy::DeepCopy`] — the paper's conservative
+//!   `Replicate(·) = deepcopy`: `begin_branch` clones the full committed
+//!   buffers and all speculative writes and reads go through the clone.
+//!   Correct and isolated, but moves `2 * L*cap*H*Dh * 4` bytes per
+//!   verification step (the ablation baseline).
+//! * [`crate::config::CacheStrategy::SegmentShare`] — branches share the
+//!   committed prefix read-only; speculative rows are appended *past*
+//!   `len` in the main buffers. Isolation holds because `len` only
+//!   advances at commit, and every row past `len` is invisible to
+//!   committed-state readers.
+//!
+//! Commit modes (paper §3.1):
+//! * **length-based** — adopt the first `A` branch rows;
+//! * **path-index-based** — rebuild the sequence as
+//!   `rows[path_indices[i]]`; with `fast_reorder`, a prefix-preserving
+//!   `path_indices` (the common case) skips the full gather and copies
+//!   only the accepted tail (the paper's `EA_FAST_CACHE_REORDER`),
+//!   falling back to the general gather on any inconsistency.
+
+use crate::config::{CacheStrategy, Dims};
+use anyhow::{bail, Result};
+
+/// Movement/commit counters for the §3.1 ablations and §Perf.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct CacheStats {
+    pub branches: u64,
+    pub commits: u64,
+    pub rollbacks: u64,
+    /// Bytes copied by branch replication (deepcopy only).
+    pub replicate_bytes: u64,
+    /// Bytes copied by speculative row appends.
+    pub append_bytes: u64,
+    /// Bytes moved by commits.
+    pub commit_bytes: u64,
+    /// Path-index commits served by the prefix-sharing fast reorder.
+    pub fast_reorders: u64,
+    /// Fast-reorder attempts that fell back to the full gather.
+    pub fast_fallbacks: u64,
+    /// Full-gather path-index commits.
+    pub full_reorders: u64,
+}
+
+/// One KV cache (teacher or draft side) with branch/commit semantics.
+pub struct ManagedCache {
+    pub dims: Dims,
+    pub cap: usize,
+    strategy: CacheStrategy,
+    fast_reorder: bool,
+    /// Committed length t.
+    len: usize,
+    /// Main buffers `[L, cap, H, Dh]`.
+    k: Vec<f32>,
+    v: Vec<f32>,
+    /// DeepCopy working replica (None when no branch is open or when the
+    /// strategy is SegmentShare).
+    branch_k: Option<Vec<f32>>,
+    branch_v: Option<Vec<f32>>,
+    /// Speculative rows appended in the open branch.
+    branch_rows: usize,
+    branch_open: bool,
+    pub stats: CacheStats,
+}
+
+impl ManagedCache {
+    pub fn new(dims: Dims, cap: usize, strategy: CacheStrategy, fast_reorder: bool) -> Self {
+        let n = dims.cache_elems(cap);
+        Self {
+            dims,
+            cap,
+            strategy,
+            fast_reorder,
+            len: 0,
+            k: vec![0.0; n],
+            v: vec![0.0; n],
+            branch_k: None,
+            branch_v: None,
+            branch_rows: 0,
+            branch_open: false,
+            stats: CacheStats::default(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn strategy(&self) -> CacheStrategy {
+        self.strategy
+    }
+
+    pub fn branch_rows(&self) -> usize {
+        self.branch_rows
+    }
+
+    /// Free committed capacity.
+    pub fn headroom(&self) -> usize {
+        self.cap - self.len
+    }
+
+    /// Reset to an empty committed state (new conversation).
+    pub fn reset(&mut self) {
+        self.len = 0;
+        self.branch_rows = 0;
+        self.branch_open = false;
+        self.branch_k = None;
+        self.branch_v = None;
+    }
+
+    /// Layer stride in elements within a `[L, cap, H, Dh]` buffer.
+    #[inline]
+    fn lstride(&self) -> usize {
+        self.cap * self.dims.heads * self.dims.d_head
+    }
+
+    /// Row stride (one sequence position within a layer).
+    #[inline]
+    fn rstride(&self) -> usize {
+        self.dims.heads * self.dims.d_head
+    }
+
+    // ------------------------------------------------------------------
+    // Committed writes (prefill / baseline decode — no branching)
+    // ------------------------------------------------------------------
+
+    /// Append `count` committed rows directly from a StepOut KV block
+    /// (`rows` laid out `[L, s, H, Dh]`). Used by prefill and the
+    /// baseline decoder where no speculation is in flight.
+    pub fn append_committed(&mut self, k_rows: &[f32], v_rows: &[f32], s: usize, count: usize)
+        -> Result<()> {
+        if self.branch_open {
+            bail!("append_committed while a branch is open");
+        }
+        if self.len + count > self.cap {
+            bail!("cache overflow: len {} + {count} > cap {}", self.len, self.cap);
+        }
+        let at = self.len;
+        copy_rows_seq(&mut self.k, k_rows, self.dims, self.cap, s, at, count);
+        copy_rows_seq(&mut self.v, v_rows, self.dims, self.cap, s, at, count);
+        self.len += count;
+        self.stats.append_bytes += (2 * count * self.rstride() * self.dims.layers * 4) as u64;
+        Ok(())
+    }
+
+    // ------------------------------------------------------------------
+    // Branch lifecycle (speculative decode)
+    // ------------------------------------------------------------------
+
+    /// Open a branch. DeepCopy: replicate the committed buffers (the
+    /// paper's `B_i <- Replicate(C*)`).
+    pub fn begin_branch(&mut self) -> Result<()> {
+        if self.branch_open {
+            bail!("begin_branch: branch already open");
+        }
+        self.branch_open = true;
+        self.branch_rows = 0;
+        self.stats.branches += 1;
+        if self.strategy == CacheStrategy::DeepCopy {
+            // Full replica — measured, intentionally expensive.
+            self.branch_k = Some(self.k.clone());
+            self.branch_v = Some(self.v.clone());
+            self.stats.replicate_bytes += (2 * self.k.len() * 4) as u64;
+        }
+        Ok(())
+    }
+
+    /// Append `count` speculative rows (from a StepOut `[L, s, H, Dh]`
+    /// block, taking rows `[0, count)`) into the open branch at offset
+    /// `branch_rows`. The committed region `[0, len)` is never written.
+    pub fn append_branch(&mut self, k_rows: &[f32], v_rows: &[f32], s: usize, count: usize)
+        -> Result<()> {
+        if !self.branch_open {
+            bail!("append_branch without begin_branch");
+        }
+        let at = self.len + self.branch_rows;
+        if at + count > self.cap {
+            bail!("branch overflow: {} + {count} > cap {}", at, self.cap);
+        }
+        let dims = self.dims;
+        let cap = self.cap;
+        let (kbuf, vbuf) = match (&mut self.branch_k, &mut self.branch_v) {
+            (Some(bk), Some(bv)) => (bk, bv),
+            _ => (&mut self.k, &mut self.v),
+        };
+        copy_rows_seq(kbuf, k_rows, dims, cap, s, at, count);
+        copy_rows_seq(vbuf, v_rows, dims, cap, s, at, count);
+        self.branch_rows += count;
+        self.stats.append_bytes += (2 * count * self.rstride() * self.dims.layers * 4) as u64;
+        Ok(())
+    }
+
+    /// The buffers a model step must read as its cache input: the branch
+    /// replica when one exists (DeepCopy), else the shared main buffers.
+    pub fn kv_view(&self) -> (&[f32], &[f32]) {
+        match (&self.branch_k, &self.branch_v) {
+            (Some(bk), Some(bv)) => (bk, bv),
+            _ => (&self.k, &self.v),
+        }
+    }
+
+    /// Discard the open branch (speculation rejected wholesale or round
+    /// finished with the draft-side cache).
+    pub fn rollback(&mut self) {
+        if self.branch_open {
+            self.branch_open = false;
+            self.branch_rows = 0;
+            self.branch_k = None;
+            self.branch_v = None;
+            self.stats.rollbacks += 1;
+        }
+    }
+
+    /// Length-based commit (paper §3.1): adopt the first `a` branch rows.
+    pub fn commit_length(&mut self, a: usize) -> Result<()> {
+        if !self.branch_open {
+            bail!("commit_length without an open branch");
+        }
+        if a > self.branch_rows {
+            bail!("commit_length: a = {a} > branch rows {}", self.branch_rows);
+        }
+        match self.strategy {
+            CacheStrategy::SegmentShare => {
+                // Rows already sit at [len, len+a) in the main buffers —
+                // zero copy; just advance the committed length.
+            }
+            CacheStrategy::DeepCopy => {
+                let at = self.len;
+                let n = a * self.rstride();
+                let ls = self.lstride();
+                let bk = self.branch_k.take().unwrap();
+                let bv = self.branch_v.take().unwrap();
+                for l in 0..self.dims.layers {
+                    let off = l * ls + at * self.rstride();
+                    self.k[off..off + n].copy_from_slice(&bk[off..off + n]);
+                    self.v[off..off + n].copy_from_slice(&bv[off..off + n]);
+                }
+                self.stats.commit_bytes += (2 * self.dims.layers * n * 4) as u64;
+            }
+        }
+        self.len += a;
+        self.branch_open = false;
+        self.branch_rows = 0;
+        self.branch_k = None;
+        self.branch_v = None;
+        self.stats.commits += 1;
+        Ok(())
+    }
+
+    /// Path-index commit (paper §3.1): the new committed sequence is
+    /// `branch_view[path_indices[i]]` for `i in 0..path_indices.len()`.
+    /// Indices address the branch view `[0, len + branch_rows)`.
+    ///
+    /// With `fast_reorder` and a prefix-preserving mapping
+    /// (`path_indices[i] == i` for `i < len`), only the accepted tail is
+    /// copied; any inconsistency falls back to the full gather.
+    pub fn commit_path(&mut self, path_indices: &[usize]) -> Result<()> {
+        if !self.branch_open {
+            bail!("commit_path without an open branch");
+        }
+        let view_len = self.len + self.branch_rows;
+        if path_indices.len() > view_len {
+            bail!("commit_path: {} indices exceed branch view {view_len}", path_indices.len());
+        }
+        if let Some(bad) = path_indices.iter().find(|i| **i >= view_len) {
+            bail!("commit_path: index {bad} out of branch view {view_len}");
+        }
+        let prefix_preserved =
+            path_indices.len() >= self.len && (0..self.len).all(|i| path_indices[i] == i);
+
+        if self.fast_reorder && prefix_preserved {
+            self.commit_path_fast(path_indices)?;
+            self.stats.fast_reorders += 1;
+        } else {
+            if self.fast_reorder {
+                self.stats.fast_fallbacks += 1;
+            }
+            self.commit_path_full(path_indices)?;
+            self.stats.full_reorders += 1;
+        }
+        self.len = path_indices.len();
+        self.branch_open = false;
+        self.branch_rows = 0;
+        self.branch_k = None;
+        self.branch_v = None;
+        self.stats.commits += 1;
+        Ok(())
+    }
+
+    /// Prefix-sharing fast reorder: gather only rows `[len, new_len)`.
+    fn commit_path_fast(&mut self, path_indices: &[usize]) -> Result<()> {
+        let rs = self.rstride();
+        let ls = self.lstride();
+        let dims = self.dims;
+        let (src_k, src_v) = match (&self.branch_k, &self.branch_v) {
+            (Some(bk), Some(bv)) => (bk.as_slice(), bv.as_slice()),
+            _ => (&self.k[..], &self.v[..]),
+        };
+        // Gather the accepted tail into a scratch (tail is tiny: <= M rows).
+        let tail = &path_indices[self.len..];
+        let mut tail_k = vec![0.0f32; dims.layers * tail.len() * rs];
+        let mut tail_v = vec![0.0f32; dims.layers * tail.len() * rs];
+        for l in 0..dims.layers {
+            for (i, &src) in tail.iter().enumerate() {
+                let s_off = l * ls + src * rs;
+                let d_off = (l * tail.len() + i) * rs;
+                tail_k[d_off..d_off + rs].copy_from_slice(&src_k[s_off..s_off + rs]);
+                tail_v[d_off..d_off + rs].copy_from_slice(&src_v[s_off..s_off + rs]);
+            }
+        }
+        for l in 0..dims.layers {
+            for i in 0..tail.len() {
+                let d_off = l * ls + (self.len + i) * rs;
+                let s_off = (l * tail.len() + i) * rs;
+                self.k[d_off..d_off + rs].copy_from_slice(&tail_k[s_off..s_off + rs]);
+                self.v[d_off..d_off + rs].copy_from_slice(&tail_v[s_off..s_off + rs]);
+            }
+        }
+        self.stats.commit_bytes += (4 * dims.layers * tail.len() * rs * 4) as u64;
+        Ok(())
+    }
+
+    /// General full reorder: rebuild the entire committed sequence by
+    /// gathering every row (the paper's to_legacy/from_legacy path).
+    fn commit_path_full(&mut self, path_indices: &[usize]) -> Result<()> {
+        let rs = self.rstride();
+        let ls = self.lstride();
+        let dims = self.dims;
+        let (src_k, src_v) = match (&self.branch_k, &self.branch_v) {
+            (Some(bk), Some(bv)) => (bk.clone(), bv.clone()),
+            _ => (self.k.clone(), self.v.clone()),
+        };
+        for l in 0..dims.layers {
+            for (i, &src) in path_indices.iter().enumerate() {
+                let s_off = l * ls + src * rs;
+                let d_off = l * ls + i * rs;
+                self.k[d_off..d_off + rs].copy_from_slice(&src_k[s_off..s_off + rs]);
+                self.v[d_off..d_off + rs].copy_from_slice(&src_v[s_off..s_off + rs]);
+            }
+        }
+        // clone + gather, k and v
+        self.stats.commit_bytes +=
+            (2 * (src_k.len() + dims.layers * path_indices.len() * rs) * 4) as u64;
+        Ok(())
+    }
+
+    // ------------------------------------------------------------------
+    // Introspection for tests ("commit equivalence", isolation)
+    // ------------------------------------------------------------------
+
+    /// Copy of a committed row `[L * H * Dh]` (k side), for equivalence
+    /// tests and the SimBackend context reconstruction.
+    pub fn committed_row_k(&self, row: usize) -> Vec<f32> {
+        assert!(row < self.len);
+        let rs = self.rstride();
+        let ls = self.lstride();
+        let mut out = Vec::with_capacity(self.dims.layers * rs);
+        for l in 0..self.dims.layers {
+            let off = l * ls + row * rs;
+            out.extend_from_slice(&self.k[off..off + rs]);
+        }
+        out
+    }
+
+    /// Raw main-buffer checksum over the committed region (isolation tests).
+    pub fn committed_checksum(&self) -> f64 {
+        let rs = self.rstride();
+        let ls = self.lstride();
+        let mut acc = 0.0f64;
+        for l in 0..self.dims.layers {
+            for r in 0..self.len {
+                let off = l * ls + r * rs;
+                for x in &self.k[off..off + rs] {
+                    acc += *x as f64;
+                }
+                for x in &self.v[off..off + rs] {
+                    acc += *x as f64;
+                }
+            }
+        }
+        acc
+    }
+}
+
+/// Copy rows `[0, count)` of a `[L, s, H, Dh]` step-output block into a
+/// `[L, cap, H, Dh]` cache buffer at row offset `at`.
+fn copy_rows_seq(
+    dst: &mut [f32],
+    rows: &[f32],
+    dims: Dims,
+    cap: usize,
+    s: usize,
+    at: usize,
+    count: usize,
+) {
+    let rs = dims.heads * dims.d_head;
+    debug_assert_eq!(rows.len(), dims.layers * s * rs);
+    for l in 0..dims.layers {
+        let src = l * s * rs;
+        let dst_off = l * cap * rs + at * rs;
+        dst[dst_off..dst_off + count * rs]
+            .copy_from_slice(&rows[src..src + count * rs]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::CacheStrategy;
+    use crate::util::prop;
+
+    const DIMS: Dims = Dims { layers: 2, d_model: 8, heads: 2, d_head: 2 };
+    const CAP: usize = 16;
+
+    /// A `[L, s, H, Dh]` block whose row r carries the value `base + r`
+    /// in every element — rows are distinguishable and layer-consistent.
+    fn block(s: usize, base: f32) -> Vec<f32> {
+        let rs = DIMS.heads * DIMS.d_head;
+        let mut out = vec![0.0; DIMS.layers * s * rs];
+        for l in 0..DIMS.layers {
+            for r in 0..s {
+                for e in 0..rs {
+                    out[(l * s + r) * rs + e] = base + r as f32;
+                }
+            }
+        }
+        out
+    }
+
+    fn row_value(c: &ManagedCache, row: usize) -> f32 {
+        c.committed_row_k(row)[0]
+    }
+
+    fn mk(strategy: CacheStrategy, fast: bool) -> ManagedCache {
+        ManagedCache::new(DIMS, CAP, strategy, fast)
+    }
+
+    #[test]
+    fn append_committed_and_read_back() {
+        let mut c = mk(CacheStrategy::SegmentShare, true);
+        c.append_committed(&block(4, 100.0), &block(4, 200.0), 4, 3).unwrap();
+        assert_eq!(c.len(), 3);
+        assert_eq!(row_value(&c, 0), 100.0);
+        assert_eq!(row_value(&c, 2), 102.0);
+    }
+
+    #[test]
+    fn overflow_rejected() {
+        let mut c = mk(CacheStrategy::SegmentShare, true);
+        assert!(c.append_committed(&block(CAP + 1, 0.0), &block(CAP + 1, 0.0), CAP + 1, CAP + 1).is_err());
+    }
+
+    #[test]
+    fn isolation_branch_never_mutates_committed() {
+        for strategy in [CacheStrategy::DeepCopy, CacheStrategy::SegmentShare] {
+            let mut c = mk(strategy, true);
+            c.append_committed(&block(4, 10.0), &block(4, 10.0), 4, 4).unwrap();
+            let before = c.committed_checksum();
+            c.begin_branch().unwrap();
+            c.append_branch(&block(8, 500.0), &block(8, 500.0), 8, 6).unwrap();
+            assert_eq!(c.committed_checksum(), before, "{strategy:?}");
+            c.rollback();
+            assert_eq!(c.committed_checksum(), before, "{strategy:?} after rollback");
+            assert_eq!(c.len(), 4);
+        }
+    }
+
+    #[test]
+    fn commit_length_adopts_prefix_rows() {
+        for strategy in [CacheStrategy::DeepCopy, CacheStrategy::SegmentShare] {
+            let mut c = mk(strategy, true);
+            c.append_committed(&block(4, 10.0), &block(4, 10.0), 4, 2).unwrap();
+            c.begin_branch().unwrap();
+            c.append_branch(&block(8, 50.0), &block(8, 50.0), 8, 5).unwrap();
+            c.commit_length(3).unwrap();
+            assert_eq!(c.len(), 5, "{strategy:?}");
+            assert_eq!(row_value(&c, 2), 50.0);
+            assert_eq!(row_value(&c, 4), 52.0);
+        }
+    }
+
+    #[test]
+    fn commit_path_fast_and_full_agree() {
+        // Same scenario committed through both reorder paths must produce
+        // identical committed state ("commit equivalence").
+        let build = |fast: bool, strategy: CacheStrategy| {
+            let mut c = mk(strategy, fast);
+            c.append_committed(&block(4, 10.0), &block(4, 10.0), 4, 3).unwrap();
+            c.begin_branch().unwrap();
+            c.append_branch(&block(8, 100.0), &block(8, 100.0), 8, 6).unwrap();
+            // prefix preserved + accept branch rows 1 and 4 (slots 3+1, 3+4)
+            c.commit_path(&[0, 1, 2, 4, 7]).unwrap();
+            c
+        };
+        for strategy in [CacheStrategy::DeepCopy, CacheStrategy::SegmentShare] {
+            let f = build(true, strategy);
+            let g = build(false, strategy);
+            assert_eq!(f.len(), 5);
+            assert_eq!(g.len(), 5);
+            for r in 0..5 {
+                assert_eq!(f.committed_row_k(r), g.committed_row_k(r), "{strategy:?} row {r}");
+            }
+            assert_eq!(row_value(&f, 3), 101.0);
+            assert_eq!(row_value(&f, 4), 104.0);
+            assert_eq!(f.stats.fast_reorders, 1);
+            assert_eq!(g.stats.full_reorders, 1);
+        }
+    }
+
+    #[test]
+    fn fast_reorder_falls_back_on_non_prefix_mapping() {
+        let mut c = mk(CacheStrategy::SegmentShare, true);
+        c.append_committed(&block(4, 10.0), &block(4, 10.0), 4, 3).unwrap();
+        c.begin_branch().unwrap();
+        c.append_branch(&block(8, 100.0), &block(8, 100.0), 8, 2).unwrap();
+        // reorders the committed prefix itself -> must fall back
+        c.commit_path(&[2, 1, 0, 3]).unwrap();
+        assert_eq!(c.stats.fast_fallbacks, 1);
+        assert_eq!(c.stats.full_reorders, 1);
+        assert_eq!(row_value(&c, 0), 12.0);
+        assert_eq!(row_value(&c, 3), 100.0);
+    }
+
+    #[test]
+    fn commit_path_rejects_out_of_range() {
+        let mut c = mk(CacheStrategy::SegmentShare, true);
+        c.append_committed(&block(4, 0.0), &block(4, 0.0), 4, 2).unwrap();
+        c.begin_branch().unwrap();
+        assert!(c.commit_path(&[0, 1, 5]).is_err());
+    }
+
+    #[test]
+    fn lifecycle_misuse_rejected() {
+        let mut c = mk(CacheStrategy::SegmentShare, true);
+        assert!(c.append_branch(&block(8, 0.0), &block(8, 0.0), 8, 1).is_err());
+        assert!(c.commit_length(0).is_err());
+        c.begin_branch().unwrap();
+        assert!(c.begin_branch().is_err());
+        assert!(c.append_committed(&block(4, 0.0), &block(4, 0.0), 4, 1).is_err());
+    }
+
+    #[test]
+    fn deepcopy_counts_replication_bytes() {
+        let mut c = mk(CacheStrategy::DeepCopy, true);
+        c.begin_branch().unwrap();
+        assert!(c.stats.replicate_bytes > 0);
+        let mut s = mk(CacheStrategy::SegmentShare, true);
+        s.begin_branch().unwrap();
+        assert_eq!(s.stats.replicate_bytes, 0);
+    }
+
+    #[test]
+    fn property_commit_equivalence_random_paths() {
+        // For random branch contents and random accepted subsets, the
+        // committed state equals the sequential construction:
+        // rows = [committed rows] ++ [branch rows at chosen offsets].
+        prop::for_cases(120, 0xCAFE, |g| {
+            let strategy = *g.choose(&[CacheStrategy::DeepCopy, CacheStrategy::SegmentShare]);
+            let fast = g.bool_p(0.5);
+            let t0 = g.usize_in(0, 6);
+            let b = g.usize_in(1, 8);
+            let mut c = mk(strategy, fast);
+            if t0 > 0 {
+                c.append_committed(&block(8, 10.0), &block(8, 10.0), 8, t0).unwrap();
+            }
+            c.begin_branch().unwrap();
+            c.append_branch(&block(8, 100.0), &block(8, 100.0), 8, b).unwrap();
+            // choose an increasing subset of branch rows
+            let mut accepted = Vec::new();
+            for i in 0..b {
+                if g.bool_p(0.6) {
+                    accepted.push(i);
+                }
+            }
+            let path: Vec<usize> =
+                (0..t0).chain(accepted.iter().map(|i| t0 + i)).collect();
+            c.commit_path(&path).unwrap();
+            assert_eq!(c.len(), t0 + accepted.len());
+            for (j, &src) in accepted.iter().enumerate() {
+                assert_eq!(
+                    row_value(&c, t0 + j),
+                    100.0 + src as f32,
+                    "strategy {strategy:?} fast {fast}"
+                );
+            }
+            for r in 0..t0 {
+                assert_eq!(row_value(&c, r), 10.0 + r as f32);
+            }
+        });
+    }
+}

@@ -1,0 +1,5 @@
+//! Branchable KV-cache management (paper §3.1).
+
+pub mod manager;
+
+pub use manager::{CacheStats, ManagedCache};

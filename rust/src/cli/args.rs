@@ -1,0 +1,133 @@
+//! Minimal argument parser: positional args, `--key value` flags and
+//! `--switch` booleans. Unknown-flag detection is done per-command via
+//! [`Args::ensure_known`] so typos fail fast instead of being ignored.
+
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+    switches: Vec<String>,
+}
+
+/// Flags that take a value (everything else starting with `--` is a switch).
+const VALUED: &[&str] = &[
+    "mode", "budget", "depth", "topk", "cache-strategy", "commit-mode",
+    "draft-window", "max-new", "workers", "seed", "out-dir", "artifacts",
+    "backend", "agree", "temperature", "trace-dir", "prompt-len", "turns",
+    "conversations", "profile", "requests", "rate", "servers",
+];
+
+impl Args {
+    pub fn parse(argv: impl Iterator<Item = String>) -> Result<Self> {
+        let mut out = Args::default();
+        let mut argv = argv.peekable();
+        while let Some(a) = argv.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if VALUED.contains(&name) {
+                    match argv.next() {
+                        Some(v) if !v.starts_with("--") => {
+                            out.flags.insert(name.to_string(), v);
+                        }
+                        _ => bail!("flag --{name} requires a value"),
+                    }
+                } else {
+                    out.switches.push(name.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(String::as_str)
+    }
+
+    pub fn get_usize(&self, key: &str) -> Result<Option<usize>> {
+        self.get(key)
+            .map(|v| v.parse().map_err(|e| anyhow::anyhow!("--{key} {v}: {e}")))
+            .transpose()
+    }
+
+    pub fn get_u64(&self, key: &str) -> Result<Option<u64>> {
+        self.get(key)
+            .map(|v| v.parse().map_err(|e| anyhow::anyhow!("--{key} {v}: {e}")))
+            .transpose()
+    }
+
+    pub fn get_f64(&self, key: &str) -> Result<Option<f64>> {
+        self.get(key)
+            .map(|v| v.parse().map_err(|e| anyhow::anyhow!("--{key} {v}: {e}")))
+            .transpose()
+    }
+
+    pub fn has(&self, switch: &str) -> bool {
+        self.switches.iter().any(|s| s == switch)
+    }
+
+    /// Reject unknown switches/flags for a command.
+    pub fn ensure_known(&self, switches: &[&str], flags: &[&str]) -> Result<()> {
+        for s in &self.switches {
+            if !switches.contains(&s.as_str()) {
+                bail!("unknown switch --{s}");
+            }
+        }
+        for k in self.flags.keys() {
+            if !flags.contains(&k.as_str()) {
+                bail!("unknown flag --{k}");
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(str::to_string)).unwrap()
+    }
+
+    #[test]
+    fn positional_flags_switches() {
+        let a = parse("bench-e1 --mode eager --budget 32 --quick");
+        assert_eq!(a.positional, vec!["bench-e1"]);
+        assert_eq!(a.get("mode"), Some("eager"));
+        assert_eq!(a.get_usize("budget").unwrap(), Some(32));
+        assert!(a.has("quick"));
+        assert!(!a.has("verbose"));
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = parse("serve --max-new=64 --seed=7");
+        assert_eq!(a.get_usize("max-new").unwrap(), Some(64));
+        assert_eq!(a.get_u64("seed").unwrap(), Some(7));
+    }
+
+    #[test]
+    fn missing_value_fails() {
+        assert!(Args::parse(["x".into(), "--mode".into()].into_iter()).is_err());
+    }
+
+    #[test]
+    fn ensure_known_rejects_typos() {
+        let a = parse("cmd --quick --mode fused");
+        assert!(a.ensure_known(&["quick"], &["mode"]).is_ok());
+        assert!(a.ensure_known(&[], &["mode"]).is_err());
+        assert!(a.ensure_known(&["quick"], &[]).is_err());
+    }
+
+    #[test]
+    fn bad_number_reported() {
+        let a = parse("cmd --budget abc");
+        assert!(a.get_usize("budget").is_err());
+    }
+}

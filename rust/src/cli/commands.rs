@@ -1,0 +1,361 @@
+//! Subcommand dispatch — the leader entrypoint of the rust coordinator.
+
+use super::args::Args;
+use crate::config::{CacheStrategy, CommitMode, ExecMode, RunConfig};
+use crate::coordinator::{run_workload, BackendSpec, CoordinatorConfig};
+use crate::engine::Engine;
+use crate::harness::{run_e1, run_e2, run_e3, run_e4, HarnessConfig};
+use crate::metrics::{pair_turns, ThroughputReport};
+use crate::runtime::golden::{load_goldens, verify_golden};
+use crate::runtime::PjrtBackend;
+use crate::trace::merge_rank_files;
+use crate::workload::{Grammar, Profile, WorkloadSpec};
+use anyhow::{bail, Context, Result};
+use std::path::PathBuf;
+
+const USAGE: &str = "eagle-pangu — accelerator-safe tree speculative decoding (EAGLE-Pangu reproduction)
+
+USAGE: eagle-pangu <command> [flags]
+
+COMMANDS
+  generate    decode one grammar prompt (EA vs baseline) and print stats
+  serve       run the full workload through the multi-worker coordinator
+  bench-e1    Table 1 + Fig 1/2a/2b/3 — end-to-end throughput
+  bench-e2    Table 2 + Fig 4        — tree budget sweep (code-only)
+  bench-e3    Fig 5                  — instrumented stage breakdown
+  bench-e4    Table 3 + Fig 6/7      — drafter context truncation
+  load        serving-like load evaluation: --requests N --rate R --servers K
+  goldens     verify rust PJRT execution against python golden fixtures
+  traces      merge + report rank trace files: traces <dir>
+
+COMMON FLAGS
+  --backend sim|pjrt      model backend (default pjrt when artifacts/ exists)
+  --artifacts DIR         artifact directory (default ./artifacts)
+  --agree N               sim backend draft/teacher agreement %% (default 85)
+  --mode fused|eager      execution path (paper two-mode protocol)
+  --budget M --depth D --topk K    tree configuration
+  --cache-strategy deepcopy|segment   branch replication (§3.1 ablation)
+  --commit-mode length|path-index     commit mode (§3.1)
+  --no-fast-reorder       disable the prefix-sharing fast reorder
+  --unsafe-indexing       skip §3.2 invariant checks (ablation)
+  --adaptive              adaptive tree-budget policy (E2 takeaway)
+  --draft-window W        truncate drafter context (E4)
+  --max-new N             tokens per turn
+  --temperature T         0 = greedy (default)
+  --workers N             world size (default 2)
+  --seed S  --out-dir DIR  --quick  --verbose  --attention-stats
+";
+
+const RUN_FLAGS: &[&str] = &[
+    "backend", "artifacts", "agree", "mode", "budget", "depth", "topk",
+    "cache-strategy", "commit-mode", "draft-window", "max-new", "temperature",
+    "workers", "seed", "out-dir", "trace-dir", "prompt-len", "conversations",
+    "profile", "turns", "requests", "rate", "servers",
+];
+const RUN_SWITCHES: &[&str] = &[
+    "quick", "verbose", "no-fast-reorder", "unsafe-indexing", "attention-stats",
+    "instrument", "baseline-only", "ea-only", "adaptive", "help",
+];
+
+pub fn main_entry() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1))?;
+    dispatch(&args)
+}
+
+pub fn dispatch(args: &Args) -> Result<()> {
+    let Some(cmd) = args.positional.first().map(String::as_str) else {
+        println!("{USAGE}");
+        return Ok(());
+    };
+    if args.has("help") {
+        println!("{USAGE}");
+        return Ok(());
+    }
+    args.ensure_known(RUN_SWITCHES, RUN_FLAGS)?;
+    match cmd {
+        "generate" => cmd_generate(args),
+        "serve" => cmd_serve(args),
+        "bench-e1" => harness(args)?.pipe(|h| run_e1(&h).map(|_| ())),
+        "bench-e2" => harness(args)?.pipe(|h| run_e2(&h).map(|_| ())),
+        "bench-e3" => harness(args)?.pipe(|h| run_e3(&h).map(|_| ())),
+        "bench-e4" => {
+            let h = harness(args)?;
+            run_e4(&h, args.has("attention-stats")).map(|_| ())
+        }
+        "load" => cmd_load(args),
+        "goldens" => cmd_goldens(args),
+        "traces" => cmd_traces(args),
+        other => bail!("unknown command '{other}'\n{USAGE}"),
+    }
+}
+
+trait Pipe: Sized {
+    fn pipe<T>(self, f: impl FnOnce(Self) -> Result<T>) -> Result<T> {
+        f(self)
+    }
+}
+impl<T> Pipe for T {}
+
+// ----------------------------------------------------------------------
+// Shared flag -> config plumbing
+// ----------------------------------------------------------------------
+
+pub fn run_config(args: &Args) -> Result<RunConfig> {
+    let mut cfg = RunConfig::default();
+    if let Some(m) = args.get("mode") {
+        cfg.mode = ExecMode::parse(m)?;
+    }
+    if let Some(b) = args.get_usize("budget")? {
+        cfg.tree.budget = b;
+    }
+    if let Some(d) = args.get_usize("depth")? {
+        cfg.tree.depth_max = d;
+    }
+    if let Some(k) = args.get_usize("topk")? {
+        cfg.tree.topk = k;
+    }
+    if let Some(s) = args.get("cache-strategy") {
+        cfg.cache_strategy = CacheStrategy::parse(s)?;
+    }
+    if let Some(c) = args.get("commit-mode") {
+        cfg.commit_mode = CommitMode::parse(c)?;
+    }
+    cfg.fast_reorder = !args.has("no-fast-reorder");
+    cfg.check_invariants = !args.has("unsafe-indexing");
+    if let Some(w) = args.get_usize("draft-window")? {
+        cfg.draft_window = Some(w);
+    }
+    if let Some(n) = args.get_usize("max-new")? {
+        cfg.max_new_tokens = n;
+    }
+    if let Some(t) = args.get_f64("temperature")? {
+        cfg.temperature = t;
+    }
+    if let Some(s) = args.get_u64("seed")? {
+        cfg.seed = s;
+    }
+    cfg.instrument = args.has("instrument");
+    cfg.attention_stats = args.has("attention-stats");
+    cfg.adaptive_budget = args.has("adaptive");
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+pub fn backend_spec(args: &Args) -> Result<BackendSpec> {
+    let artifacts = PathBuf::from(args.get("artifacts").unwrap_or("artifacts"));
+    match args.get("backend") {
+        Some("sim") => Ok(BackendSpec::Sim {
+            agree_pct: args.get_u64("agree")?.unwrap_or(85),
+        }),
+        Some("pjrt") | None if artifacts.join("manifest.json").exists() => {
+            Ok(BackendSpec::Pjrt { artifact_dir: artifacts })
+        }
+        Some("pjrt") => bail!("--backend pjrt but {artifacts:?} has no manifest.json — run `make artifacts`"),
+        None => {
+            eprintln!("note: no artifacts found, falling back to the sim backend");
+            Ok(BackendSpec::Sim { agree_pct: args.get_u64("agree")?.unwrap_or(85) })
+        }
+        Some(other) => bail!("unknown backend '{other}'"),
+    }
+}
+
+fn harness(args: &Args) -> Result<HarnessConfig> {
+    Ok(HarnessConfig {
+        backend: backend_spec(args)?,
+        out_dir: PathBuf::from(args.get("out-dir").unwrap_or("results")),
+        world_size: args.get_usize("workers")?.unwrap_or(2),
+        run: run_config(args)?,
+        quick: args.has("quick"),
+        verbose: args.has("verbose"),
+    })
+}
+
+// ----------------------------------------------------------------------
+// Commands
+// ----------------------------------------------------------------------
+
+fn cmd_generate(args: &Args) -> Result<()> {
+    let cfg = run_config(args)?;
+    let prompt_len = args.get_usize("prompt-len")?.unwrap_or(48);
+    let profile = args
+        .get("profile")
+        .map(|p| Profile::parse(p).context(format!("bad profile '{p}'")))
+        .transpose()?
+        .unwrap_or(Profile::Code);
+    let prompt = Grammar::new(profile).sample_sequence(prompt_len, cfg.seed, None);
+    let spec = backend_spec(args)?;
+    println!("backend: {} | mode: {} | prompt: {} tokens ({})",
+             spec.describe(), cfg.mode.as_str(), prompt.len(), profile.as_str());
+
+    let mut b_ea = spec.build_boxed()?;
+    let mut e_ea = Engine::new(&mut *b_ea, cfg.clone());
+    e_ea.warmup()?;
+    let ea = e_ea.generate_speculative(&prompt, cfg.max_new_tokens)?;
+
+    let mut b_base = spec.build_boxed()?;
+    let mut e_base = Engine::new(&mut *b_base, cfg.clone());
+    e_base.warmup()?;
+    let base = e_base.generate_baseline(&prompt, ea.tokens.len())?;
+
+    anyhow::ensure!(ea.tokens == base.tokens,
+                    "EA output diverged from teacher-greedy — decoding bug");
+    println!("output ({} tokens, identical EA vs baseline): {:?}...",
+             ea.tokens.len(), &ea.tokens[..ea.tokens.len().min(16)]);
+    println!("  baseline: {:>8.2} tok/s  ({} teacher calls)",
+             base.tok_per_sec(), base.teacher_calls);
+    println!("  EA:       {:>8.2} tok/s  ({} teacher calls, {} draft calls, accept_L mean {:.2})",
+             ea.tok_per_sec(), ea.teacher_calls, ea.draft_calls, ea.mean_accept_len());
+    println!("  speedup:  {:>8.2}x", ea.tok_per_sec() / base.tok_per_sec().max(1e-9));
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let run = run_config(args)?;
+    let mut workload = if args.has("quick") {
+        WorkloadSpec::smoke()
+    } else {
+        WorkloadSpec::default()
+    };
+    if let Some(n) = args.get_usize("conversations")? {
+        workload.code_conversations = n / 2;
+        workload.chat_conversations = n - n / 2;
+    }
+    workload.seed = run.seed;
+    let cfg = CoordinatorConfig {
+        world_size: args.get_usize("workers")?.unwrap_or(2),
+        run,
+        workload,
+        backend: backend_spec(args)?,
+        trace_dir: PathBuf::from(args.get("trace-dir").unwrap_or("results/serve")),
+        run_baseline: !args.has("ea-only"),
+        run_ea: !args.has("baseline-only"),
+        verbose: args.has("verbose") || !args.has("quick"),
+    };
+    let records = run_workload(&cfg)?;
+    let pairs = pair_turns(&records);
+    if !pairs.is_empty() {
+        println!("{}", ThroughputReport::from_pairs(&pairs).table1());
+    } else {
+        println!("{} turn records written to {}", records.len(), cfg.trace_dir.display());
+    }
+    Ok(())
+}
+
+fn cmd_load(args: &Args) -> Result<()> {
+    use crate::coordinator::{run_load, LoadSpec};
+    let run = run_config(args)?;
+    let mut spec = LoadSpec::default();
+    if let Some(n) = args.get_usize("requests")? {
+        spec.requests = n;
+    }
+    if let Some(r) = args.get_f64("rate")? {
+        spec.arrival_rate = r;
+    }
+    if let Some(s) = args.get_usize("servers")? {
+        spec.servers = s;
+    }
+    if let Some(p) = args.get_usize("prompt-len")? {
+        spec.prompt_len = p;
+    }
+    spec.max_new = run.max_new_tokens.min(96);
+    spec.seed = run.seed;
+    let report = run_load(&backend_spec(args)?, &run, &spec)?;
+    println!("{}", report.render());
+    Ok(())
+}
+
+fn cmd_goldens(args: &Args) -> Result<()> {
+    let dir = PathBuf::from(args.get("artifacts").unwrap_or("artifacts"));
+    let mut backend = PjrtBackend::load(&dir)?;
+    let goldens = load_goldens(&dir)?;
+    for rec in &goldens {
+        verify_golden(&mut backend, rec)?;
+        println!("golden OK: {}", rec.module);
+    }
+    println!("{} golden fixtures verified against python outputs", goldens.len());
+    Ok(())
+}
+
+fn cmd_traces(args: &Args) -> Result<()> {
+    let dir = args
+        .positional
+        .get(1)
+        .map(PathBuf::from)
+        .or_else(|| args.get("trace-dir").map(PathBuf::from))
+        .context("usage: traces <dir>")?;
+    let records = merge_rank_files(&dir)?;
+    println!("merged {} records -> {}", records.len(),
+             dir.join("trace_merged.jsonl").display());
+    let pairs = pair_turns(&records);
+    if !pairs.is_empty() {
+        println!("{}", ThroughputReport::from_pairs(&pairs).table1());
+    }
+    Ok(())
+}
+
+impl BackendSpec {
+    /// Boxed build for single-engine commands.
+    pub fn build_boxed(&self) -> Result<Box<dyn crate::backend::ModelBackend>> {
+        match self {
+            BackendSpec::Sim { agree_pct } => {
+                Ok(Box::new(crate::backend::sim::SimBackend::new(*agree_pct)))
+            }
+            BackendSpec::Pjrt { artifact_dir } => Ok(Box::new(PjrtBackend::load(artifact_dir)?)),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(str::to_string)).unwrap()
+    }
+
+    #[test]
+    fn run_config_from_flags() {
+        let a = parse("serve --mode eager --budget 32 --depth 6 --cache-strategy deepcopy \
+                       --commit-mode length --no-fast-reorder --draft-window 64 \
+                       --max-new 10 --seed 3 --unsafe-indexing");
+        let c = run_config(&a).unwrap();
+        assert_eq!(c.mode, ExecMode::Eager);
+        assert_eq!(c.tree.budget, 32);
+        assert_eq!(c.tree.depth_max, 6);
+        assert_eq!(c.cache_strategy, CacheStrategy::DeepCopy);
+        assert_eq!(c.commit_mode, CommitMode::Length);
+        assert!(!c.fast_reorder);
+        assert!(!c.check_invariants);
+        assert_eq!(c.draft_window, Some(64));
+        assert_eq!(c.max_new_tokens, 10);
+        assert_eq!(c.seed, 3);
+    }
+
+    #[test]
+    fn sim_backend_selected_explicitly() {
+        let a = parse("serve --backend sim --agree 70");
+        match backend_spec(&a).unwrap() {
+            BackendSpec::Sim { agree_pct } => assert_eq!(agree_pct, 70),
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn unknown_command_errors() {
+        let a = parse("frobnicate");
+        assert!(dispatch(&a).is_err());
+    }
+
+    #[test]
+    fn generate_on_sim_backend_works_end_to_end() {
+        let a = parse("generate --backend sim --agree 90 --max-new 12 --prompt-len 16 --quick");
+        dispatch(&a).unwrap();
+    }
+
+    #[test]
+    fn invalid_flag_combinations_fail() {
+        assert!(run_config(&parse("serve --budget 0")).is_err());
+        assert!(run_config(&parse("serve --mode turbo")).is_err());
+        assert!(backend_spec(&parse("serve --backend quantum")).is_err());
+    }
+}

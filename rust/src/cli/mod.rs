@@ -1,0 +1,7 @@
+//! Command-line interface (hand-rolled flag parser — no clap offline).
+
+pub mod args;
+pub mod commands;
+
+pub use args::Args;
+pub use commands::main_entry;

@@ -1,0 +1,219 @@
+//! The static-shape AOT contract shared with `python/compile/config.py`.
+
+use crate::json::Json;
+use anyhow::{bail, Context, Result};
+
+pub const VOCAB: usize = 512;
+pub const PAD_ID: i32 = 0;
+pub const BOS_ID: i32 = 1;
+pub const FIRST_TOKEN: i32 = 2;
+pub const CACHE_CAP: usize = 1024;
+pub const FEAT_DIM: usize = 64;
+pub const NEG_INF: f32 = -1.0e30;
+pub const TEACHER_S_VARIANTS: &[usize] = &[8, 16, 32, 64, 128, 256];
+pub const DRAFT_S_VARIANTS: &[usize] = &[8, 32, 64];
+
+/// Transformer dimensions of one role (teacher/draft).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Dims {
+    pub layers: usize,
+    pub d_model: usize,
+    pub heads: usize,
+    pub d_head: usize,
+}
+
+impl Dims {
+    /// Flat element count of a full KV cache buffer [L, C, H, Dh].
+    pub fn cache_elems(&self, cap: usize) -> usize {
+        self.layers * cap * self.heads * self.d_head
+    }
+
+    /// Elements of one sequence row across all layers [L, 1, H, Dh].
+    pub fn row_elems(&self) -> usize {
+        self.layers * self.heads * self.d_head
+    }
+}
+
+/// Execution mode — the paper's two-mode protocol (§4.1):
+/// `Fused` loads the Pallas-kernel artifacts (performance path),
+/// `Eager` the pure-jnp ones (reference/debug path).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ExecMode {
+    Fused,
+    Eager,
+}
+
+impl ExecMode {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ExecMode::Fused => "fused",
+            ExecMode::Eager => "eager",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "fused" => Ok(ExecMode::Fused),
+            "eager" => Ok(ExecMode::Eager),
+            other => bail!("unknown exec mode '{other}' (expected fused|eager)"),
+        }
+    }
+}
+
+/// The full L2/L3 contract. `default()` mirrors python's config.py; when
+/// artifacts are present, `from_manifest` cross-checks every field.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Contract {
+    pub vocab: usize,
+    pub cache_cap: usize,
+    pub feat_dim: usize,
+    pub teacher: Dims,
+    pub draft: Dims,
+    pub teacher_s: Vec<usize>,
+    pub draft_s: Vec<usize>,
+    pub neg_inf: f32,
+}
+
+impl Default for Contract {
+    fn default() -> Self {
+        Self {
+            vocab: VOCAB,
+            cache_cap: CACHE_CAP,
+            feat_dim: FEAT_DIM,
+            teacher: Dims { layers: 4, d_model: 128, heads: 4, d_head: 32 },
+            draft: Dims { layers: 1, d_model: 64, heads: 2, d_head: 32 },
+            teacher_s: TEACHER_S_VARIANTS.to_vec(),
+            draft_s: DRAFT_S_VARIANTS.to_vec(),
+            neg_inf: NEG_INF,
+        }
+    }
+}
+
+impl Contract {
+    /// Parse + validate the `contract` section of artifacts/manifest.json.
+    pub fn from_manifest(manifest: &Json) -> Result<Self> {
+        let c = manifest.get("contract").context("manifest missing 'contract'")?;
+        let dims = |key: &str| -> Result<Dims> {
+            let d = c.get(key).with_context(|| format!("contract missing '{key}'"))?;
+            Ok(Dims {
+                layers: d.get("layers").and_then(Json::as_usize).context("layers")?,
+                d_model: d.get("d_model").and_then(Json::as_usize).context("d_model")?,
+                heads: d.get("heads").and_then(Json::as_usize).context("heads")?,
+                d_head: d.get("d_head").and_then(Json::as_usize).context("d_head")?,
+            })
+        };
+        let usizes = |key: &str| -> Result<Vec<usize>> {
+            Ok(c.get(key)
+                .and_then(Json::as_arr)
+                .with_context(|| format!("contract missing '{key}'"))?
+                .iter()
+                .filter_map(Json::as_usize)
+                .collect())
+        };
+        let got = Self {
+            vocab: c.get("vocab").and_then(Json::as_usize).context("vocab")?,
+            cache_cap: c.get("cache_cap").and_then(Json::as_usize).context("cache_cap")?,
+            feat_dim: c.get("feat_dim").and_then(Json::as_usize).context("feat_dim")?,
+            teacher: dims("teacher")?,
+            draft: dims("draft")?,
+            teacher_s: usizes("teacher_s_variants")?,
+            draft_s: usizes("draft_s_variants")?,
+            neg_inf: c.get("neg_inf").and_then(Json::as_f64).context("neg_inf")? as f32,
+        };
+        // cache capacity is a build-time knob carried by the manifest
+        // (EAGLE_CACHE_CAP); everything else must match this crate.
+        if got.cache_cap < 256 || got.cache_cap % 128 != 0 {
+            bail!("manifest cache_cap {} must be a multiple of 128 and >= 256", got.cache_cap);
+        }
+        let expect = Self { cache_cap: got.cache_cap, ..Self::default() };
+        if got != expect {
+            bail!(
+                "artifact manifest contract does not match the compiled-in contract:\n  \
+                 manifest: {got:?}\n  expected: {expect:?}\n  \
+                 (rebuild artifacts with `make artifacts` or update rust/src/config/contract.rs)"
+            );
+        }
+        Ok(got)
+    }
+
+    /// Smallest compiled S variant that can hold `n` tokens for a role.
+    pub fn pick_s(&self, variants: &[usize], n: usize) -> Result<usize> {
+        variants
+            .iter()
+            .copied()
+            .filter(|s| *s >= n)
+            .min()
+            .with_context(|| format!("no compiled S variant holds {n} tokens (have {variants:?})"))
+    }
+
+    pub fn teacher_variant(&self, n: usize) -> Result<usize> {
+        self.pick_s(&self.teacher_s, n)
+    }
+
+    pub fn draft_variant(&self, n: usize) -> Result<usize> {
+        self.pick_s(&self.draft_s, n)
+    }
+
+    /// Largest teacher block = prefill chunk size.
+    pub fn prefill_chunk(&self) -> usize {
+        128
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::json;
+
+    #[test]
+    fn pick_s_rounds_up() {
+        let c = Contract::default();
+        assert_eq!(c.teacher_variant(1).unwrap(), 8);
+        assert_eq!(c.teacher_variant(8).unwrap(), 8);
+        assert_eq!(c.teacher_variant(9).unwrap(), 16);
+        assert_eq!(c.teacher_variant(200).unwrap(), 256);
+        assert!(c.teacher_variant(300).is_err());
+        assert_eq!(c.draft_variant(20).unwrap(), 32);
+    }
+
+    #[test]
+    fn manifest_roundtrip_matches_default() {
+        // A manifest fragment identical to what aot.py writes.
+        let text = r#"{"contract": {
+            "vocab": 512, "cache_cap": 1024, "feat_dim": 64,
+            "teacher": {"layers": 4, "d_model": 128, "heads": 4, "d_head": 32},
+            "draft": {"layers": 1, "d_model": 64, "heads": 2, "d_head": 32},
+            "teacher_s_variants": [8, 16, 32, 64, 128, 256],
+            "draft_s_variants": [8, 32, 64],
+            "neg_inf": -1e+30}}"#;
+        let m = json::parse(text).unwrap();
+        let c = Contract::from_manifest(&m).unwrap();
+        assert_eq!(c, Contract::default());
+    }
+
+    #[test]
+    fn manifest_mismatch_fails() {
+        let text = r#"{"contract": {
+            "vocab": 1024, "cache_cap": 1024, "feat_dim": 64,
+            "teacher": {"layers": 4, "d_model": 128, "heads": 4, "d_head": 32},
+            "draft": {"layers": 1, "d_model": 64, "heads": 2, "d_head": 32},
+            "teacher_s_variants": [8], "draft_s_variants": [8],
+            "neg_inf": -1e+30}}"#;
+        let m = json::parse(text).unwrap();
+        assert!(Contract::from_manifest(&m).is_err());
+    }
+
+    #[test]
+    fn cache_elems() {
+        let c = Contract::default();
+        assert_eq!(c.teacher.cache_elems(c.cache_cap), 4 * 1024 * 4 * 32);
+        assert_eq!(c.teacher.row_elems(), 4 * 4 * 32);
+    }
+
+    #[test]
+    fn mode_parse() {
+        assert_eq!(ExecMode::parse("fused").unwrap(), ExecMode::Fused);
+        assert_eq!(ExecMode::parse("eager").unwrap(), ExecMode::Eager);
+        assert!(ExecMode::parse("npu").is_err());
+    }
+}

@@ -1,0 +1,10 @@
+//! Typed configuration system: the L2/L3 shape contract, engine/runtime
+//! options, and validation. Mirrors `python/compile/config.py`; the values
+//! baked into `artifacts/manifest.json` are validated against this at load
+//! time so a stale artifact set fails fast instead of miscomputing.
+
+pub mod contract;
+pub mod run;
+
+pub use contract::{Contract, Dims, ExecMode};
+pub use run::{CacheStrategy, CommitMode, RunConfig, TreeConfig};

@@ -1,0 +1,240 @@
+//! Run-level configuration: tree budgets, cache strategy, execution flags.
+//!
+//! These knobs correspond 1:1 to the paper's experiment axes:
+//!   * `TreeConfig { budget, depth_max, topk }` — E2 budget sweeps;
+//!   * `CacheStrategy` / `CommitMode` / `fast_reorder` — §3.1 ablations
+//!     (deepcopy-replicate vs segment-share, length vs path-index commit,
+//!     prefix-sharing fast reorder == EA_FAST_CACHE_REORDER);
+//!   * `ExecMode` — §4.1 two-mode protocol (fused vs eager artifacts);
+//!   * `draft_window` — E4 drafter-context truncation;
+//!   * `check_invariants` — §3.2 structural invariant enforcement.
+
+use super::contract::ExecMode;
+use crate::json::Json;
+use anyhow::{bail, Result};
+
+/// Speculative tree budget (paper §2.3, E2 sweep axes).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TreeConfig {
+    /// Node budget M: max speculative nodes per verification (excl. root).
+    pub budget: usize,
+    /// Depth bound D_max.
+    pub depth_max: usize,
+    /// Top-k children considered per expanded node.
+    pub topk: usize,
+}
+
+impl Default for TreeConfig {
+    fn default() -> Self {
+        // The paper's measured sweet spot: M=16, D_max=10 (Table 2).
+        Self { budget: 16, depth_max: 10, topk: 4 }
+    }
+}
+
+impl TreeConfig {
+    pub fn validate(&self) -> Result<()> {
+        if self.budget == 0 || self.budget > 256 {
+            bail!("tree budget M must be in 1..=256 (largest compiled variant), got {}", self.budget);
+        }
+        if self.depth_max == 0 || self.depth_max > 64 {
+            bail!("depth_max must be in 1..=64, got {}", self.depth_max);
+        }
+        if self.topk == 0 || self.topk > 16 {
+            bail!("topk must be in 1..=16, got {}", self.topk);
+        }
+        Ok(())
+    }
+}
+
+/// Branch-cache replication strategy (paper §3.1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CacheStrategy {
+    /// `Replicate(·) = deepcopy` — the paper's robust/conservative mode:
+    /// every verification works on a full copy of the committed buffers.
+    DeepCopy,
+    /// Branches share the committed prefix read-only; speculative KV rows
+    /// live in a per-branch segment buffer (fast path).
+    SegmentShare,
+}
+
+impl CacheStrategy {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            CacheStrategy::DeepCopy => "deepcopy",
+            CacheStrategy::SegmentShare => "segment",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "deepcopy" => Ok(CacheStrategy::DeepCopy),
+            "segment" => Ok(CacheStrategy::SegmentShare),
+            other => bail!("unknown cache strategy '{other}' (expected deepcopy|segment)"),
+        }
+    }
+}
+
+/// Commit mode after acceptance (paper §3.1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CommitMode {
+    /// Keep the first A new rows of the selected branch.
+    Length,
+    /// Rebuild by gathering rows according to explicit path indices.
+    PathIndex,
+}
+
+impl CommitMode {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            CommitMode::Length => "length",
+            CommitMode::PathIndex => "path-index",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "length" => Ok(CommitMode::Length),
+            "path-index" => Ok(CommitMode::PathIndex),
+            other => bail!("unknown commit mode '{other}' (expected length|path-index)"),
+        }
+    }
+}
+
+/// Everything a decode run needs to know.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    pub mode: ExecMode,
+    pub tree: TreeConfig,
+    pub cache_strategy: CacheStrategy,
+    pub commit_mode: CommitMode,
+    /// Prefix-sharing fast reorder (paper's EA_FAST_CACHE_REORDER flag).
+    pub fast_reorder: bool,
+    /// §3.2 structural invariant checks before every launch.
+    pub check_invariants: bool,
+    /// Adaptive tree-budget policy (paper E2 takeaway / future work):
+    /// MIMD controller on M driven by recent budget utilization.
+    pub adaptive_budget: bool,
+    /// Drafter context window W (None = untruncated) — E4.
+    pub draft_window: Option<usize>,
+    /// Greedy (temperature=0) vs stochastic acceptance.
+    pub temperature: f64,
+    pub max_new_tokens: usize,
+    /// Per-stage timing instrumentation (perturbs wall-clock; E3 only).
+    pub instrument: bool,
+    /// Collect last-layer attention top-1 statistics via probe artifacts
+    /// (analysis-only; Fig 7).
+    pub attention_stats: bool,
+    pub seed: u64,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        Self {
+            mode: ExecMode::Fused,
+            tree: TreeConfig::default(),
+            cache_strategy: CacheStrategy::SegmentShare,
+            commit_mode: CommitMode::PathIndex,
+            fast_reorder: true,
+            check_invariants: true,
+            adaptive_budget: false,
+            draft_window: None,
+            temperature: 0.0,
+            max_new_tokens: 256,
+            instrument: false,
+            attention_stats: false,
+            seed: 0,
+        }
+    }
+}
+
+impl RunConfig {
+    pub fn validate(&self) -> Result<()> {
+        self.tree.validate()?;
+        if self.max_new_tokens == 0 {
+            bail!("max_new_tokens must be > 0");
+        }
+        if let Some(w) = self.draft_window {
+            if w < 4 {
+                bail!("draft window below 4 tokens cannot carry grammar context");
+            }
+        }
+        if !(0.0..=2.0).contains(&self.temperature) {
+            bail!("temperature out of range: {}", self.temperature);
+        }
+        Ok(())
+    }
+
+    /// Manifest fragment for traces (§4.3).
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.push("mode", self.mode.as_str())
+            .push("tree_budget", self.tree.budget)
+            .push("tree_depth_max", self.tree.depth_max)
+            .push("tree_topk", self.tree.topk)
+            .push("cache_strategy", self.cache_strategy.as_str())
+            .push("commit_mode", self.commit_mode.as_str())
+            .push("fast_reorder", self.fast_reorder)
+            .push("check_invariants", self.check_invariants)
+            .push("adaptive_budget", self.adaptive_budget)
+            .push(
+                "draft_window",
+                self.draft_window.map(|w| Json::Num(w as f64)).unwrap_or(Json::Null),
+            )
+            .push("temperature", self.temperature)
+            .push("max_new_tokens", self.max_new_tokens)
+            .push("instrument", self.instrument)
+            .push("attention_stats", self.attention_stats)
+            .push("seed", self.seed);
+        o
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_valid_and_paper_sweet_spot() {
+        let c = RunConfig::default();
+        c.validate().unwrap();
+        assert_eq!(c.tree.budget, 16);
+        assert_eq!(c.tree.depth_max, 10);
+    }
+
+    #[test]
+    fn rejects_bad_budgets() {
+        let mut c = RunConfig::default();
+        c.tree.budget = 0;
+        assert!(c.validate().is_err());
+        c.tree.budget = 257;
+        assert!(c.validate().is_err());
+        c.tree.budget = 256;
+        assert!(c.validate().is_ok());
+    }
+
+    #[test]
+    fn rejects_tiny_draft_window() {
+        let mut c = RunConfig::default();
+        c.draft_window = Some(2);
+        assert!(c.validate().is_err());
+        c.draft_window = Some(32);
+        assert!(c.validate().is_ok());
+    }
+
+    #[test]
+    fn json_includes_every_axis() {
+        let j = RunConfig::default().to_json();
+        for key in ["mode", "tree_budget", "cache_strategy", "commit_mode",
+                    "fast_reorder", "draft_window", "max_new_tokens"] {
+            assert!(j.get(key).is_some(), "missing {key}");
+        }
+    }
+
+    #[test]
+    fn strategy_and_commit_parse() {
+        assert_eq!(CacheStrategy::parse("deepcopy").unwrap(), CacheStrategy::DeepCopy);
+        assert_eq!(CommitMode::parse("path-index").unwrap(), CommitMode::PathIndex);
+        assert!(CacheStrategy::parse("x").is_err());
+        assert!(CommitMode::parse("x").is_err());
+    }
+}

@@ -1,0 +1,8 @@
+//! The serving coordinator (paper §4.4): deterministic prompt sharding
+//! across worker threads, per-rank trace files, rank-0 merge.
+
+pub mod load;
+pub mod runner;
+
+pub use load::{run_load, LoadReport, LoadSpec};
+pub use runner::{run_workload, BackendSpec, CoordinatorConfig};

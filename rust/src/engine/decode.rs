@@ -1,0 +1,846 @@
+//! The decode engine: wires backend calls, the cache manager, tree
+//! tensorization, mask construction and acceptance into the paper's
+//! decode loop.
+//!
+//! Round structure (speculative path):
+//!
+//! ```text
+//!  r0 = argmax(pending_logits)            # the pending root token
+//!  draft chain-refresh over newly committed tokens (incl. r0)
+//!  tree expansion: depth-synchronous draft calls, top-k per node,
+//!                  global top-M by cumulative draft log-prob
+//!  tensorize (+ §3.2 invariants)  ->  tree mask  ->  teacher verify
+//!  acceptance walk (greedy/stochastic)  ->  bonus token
+//!  commit: teacher cache adopts [root] + accepted path rows
+//! ```
+//!
+//! Every round commits `1 + accept_L` tokens against exactly one teacher
+//! call; under greedy acceptance the committed text is bit-identical to
+//! teacher-only greedy decoding (asserted in tests — the paper's "matched
+//! decoding configuration" claim).
+
+use crate::backend::{argmax, log_softmax_at, topk, KvView, ModelBackend, StepArgs};
+use crate::cache::ManagedCache;
+use crate::config::contract::NEG_INF;
+use crate::config::{CommitMode, Contract, RunConfig};
+use crate::engine::output::{attention_distance_buckets, GenOut};
+use crate::spec::{greedy_walk, select_children, stochastic_walk, AdaptiveBudget, Candidate};
+use crate::tree::{MaskBuilder, SpecTree, Tensorized};
+use crate::util::stats::{AcceptPos, Histogram};
+use crate::util::{SplitMix64, StageTimer};
+use anyhow::{bail, Context, Result};
+use std::time::Instant;
+
+/// Largest draft frontier evaluated in one call.
+const FRONTIER_CAP: usize = 64;
+
+struct FrontierNode {
+    slot: usize,
+    logits: Vec<f32>,
+    hidden: Vec<f32>,
+}
+
+/// Running statistics of one generation call.
+#[derive(Default)]
+struct RunStats {
+    teacher_calls: u64,
+    draft_calls: u64,
+    rounds: u64,
+    accept_lens: Vec<usize>,
+    accept_pos: AcceptPos,
+}
+
+pub struct Engine<'a> {
+    backend: &'a mut dyn ModelBackend,
+    pub cfg: RunConfig,
+    contract: Contract,
+    t_cache: ManagedCache,
+    d_cache: ManagedCache,
+    mb: MaskBuilder,
+    mask_buf: Vec<f32>,
+    /// Teacher logits row predicting the next token.
+    pending_logits: Vec<f32>,
+    /// Teacher feature of the last committed token (feat_prev of the next).
+    feat_last: Vec<f32>,
+    /// Committed tokens not yet present in the draft cache, with the
+    /// feature of their *predecessor* position (EAGLE input contract).
+    uncharted: Vec<(i32, Vec<f32>)>,
+    pub timers: StageTimer,
+    attn_hist: Histogram,
+    rng: SplitMix64,
+    /// Baseline runs skip all draft-side work.
+    use_draft: bool,
+    /// Adaptive budget controller (None when `cfg.adaptive_budget` is off).
+    adaptive: Option<AdaptiveBudget>,
+}
+
+impl<'a> Engine<'a> {
+    pub fn new(backend: &'a mut dyn ModelBackend, mut cfg: RunConfig) -> Self {
+        let contract = backend.contract().clone();
+        // The verification call holds 1 root + M nodes; clamp M so it fits
+        // the largest compiled variant (e.g. the paper's M=256 sweep point
+        // runs as 255 nodes + root here).
+        let max_nodes = contract.teacher_s.iter().copied().max().unwrap_or(8) - 1;
+        cfg.tree.budget = cfg.tree.budget.min(max_nodes);
+        let t_cache = ManagedCache::new(
+            contract.teacher, contract.cache_cap, cfg.cache_strategy, cfg.fast_reorder);
+        let d_cache = ManagedCache::new(
+            contract.draft, contract.cache_cap, cfg.cache_strategy, cfg.fast_reorder);
+        let mb = MaskBuilder::new(contract.cache_cap);
+        let timers = StageTimer::new(cfg.instrument);
+        let rng = SplitMix64::new(cfg.seed ^ 0xE151);
+        let adaptive = cfg.adaptive_budget.then(|| {
+            // growth headroom up to the largest compiled tree variant
+            let max = (cfg.tree.budget * 4).clamp(cfg.tree.budget, 255);
+            AdaptiveBudget::new(cfg.tree.budget, 4, max)
+        });
+        Self {
+            backend,
+            cfg,
+            contract,
+            t_cache,
+            d_cache,
+            mb,
+            mask_buf: Vec::new(),
+            pending_logits: Vec::new(),
+            feat_last: Vec::new(),
+            uncharted: Vec::new(),
+            timers,
+            attn_hist: attention_distance_buckets(),
+            rng,
+            use_draft: true,
+            adaptive,
+        }
+    }
+
+    /// Current tree node budget (adaptive or configured).
+    pub fn current_budget(&self) -> usize {
+        self.adaptive.as_ref().map_or(self.cfg.tree.budget, AdaptiveBudget::budget)
+    }
+
+    /// Largest budget this configuration can ever use.
+    fn max_budget(&self) -> usize {
+        self.adaptive.as_ref().map_or(self.cfg.tree.budget, |a| a.max_budget)
+    }
+
+    /// Pre-execute every (role, mode, S) variant this config will touch,
+    /// with dummy inputs. PJRT compiles modules lazily (~seconds per
+    /// module for 13 MB HLO text); timed runs call this first so compile
+    /// cost never lands inside a measured turn.
+    pub fn warmup(&mut self) -> Result<()> {
+        let c = self.contract.clone();
+        let kzero = vec![0.0f32; c.teacher.cache_elems(c.cache_cap)];
+        // Any variant <= prefill_chunk can appear (prompt-tail chunks),
+        // plus the tree-verification variant for the largest budget this
+        // config can reach (adaptive growth included).
+        let verify_s = c.teacher_variant(1 + self.max_budget())?;
+        let mut teacher_sizes: Vec<usize> = c
+            .teacher_s
+            .iter()
+            .copied()
+            .filter(|s| *s <= c.prefill_chunk() || *s == verify_s)
+            .collect();
+        teacher_sizes.sort_unstable();
+        teacher_sizes.dedup();
+        for s in teacher_sizes {
+            let tokens = vec![0i32; s];
+            let positions = vec![0i32; s];
+            let mask = vec![NEG_INF; s * (c.cache_cap + s)];
+            self.backend.teacher_step(self.cfg.mode, StepArgs {
+                tokens: &tokens,
+                positions: &positions,
+                mask: &mask,
+                kv: KvView { k: &kzero, v: &kzero },
+                feats_in: None,
+                probe: false,
+            })?;
+        }
+        let dzero = vec![0.0f32; c.draft.cache_elems(c.cache_cap)];
+        for &s in &c.draft_s.clone() {
+            let tokens = vec![0i32; s];
+            let positions = vec![0i32; s];
+            let mask = vec![NEG_INF; s * (c.cache_cap + s)];
+            let feats = vec![0.0f32; s * c.feat_dim];
+            self.backend.draft_step(StepArgs {
+                tokens: &tokens,
+                positions: &positions,
+                mask: &mask,
+                kv: KvView { k: &dzero, v: &dzero },
+                feats_in: Some(&feats),
+                probe: false,
+            })?;
+        }
+        Ok(())
+    }
+
+    /// Reset all decode state (new conversation).
+    pub fn reset(&mut self) {
+        self.t_cache.reset();
+        self.d_cache.reset();
+        self.pending_logits.clear();
+        self.feat_last.clear();
+        self.uncharted.clear();
+        self.attn_hist = attention_distance_buckets();
+    }
+
+    /// Committed teacher context length (prompt + generated).
+    pub fn context_len(&self) -> usize {
+        self.t_cache.len()
+    }
+
+    // ------------------------------------------------------------------
+    // Prefill
+    // ------------------------------------------------------------------
+
+    /// Feed `prompt` tokens through the teacher (chunked) and, for
+    /// speculative runs, mirror them into the draft cache with their
+    /// teacher features. Leaves `pending_logits` predicting the next
+    /// token. Works both for a fresh conversation and for appending a
+    /// later chat turn to existing context.
+    fn prefill(&mut self, prompt: &[i32], stats: &mut RunStats) -> Result<()> {
+        if prompt.is_empty() {
+            bail!("empty prompt");
+        }
+        let chunk_max = self.contract.prefill_chunk();
+        let mut feat_prev = if self.feat_last.is_empty() {
+            vec![0.0f32; self.contract.feat_dim]
+        } else {
+            self.feat_last.clone()
+        };
+        let t0 = Instant::now();
+        for chunk in prompt.chunks(chunk_max) {
+            let n = chunk.len();
+            let s = self.contract.teacher_variant(n)?;
+            let t = self.t_cache.len();
+            if t + n > self.contract.cache_cap {
+                bail!("prompt overflows cache capacity at {t}+{n}");
+            }
+            let mut tokens = vec![0i32; s];
+            tokens[..n].copy_from_slice(chunk);
+            let positions: Vec<i32> =
+                (0..s).map(|i| (t + i.min(n.saturating_sub(1))) as i32).collect();
+            self.mb.build_chain(&mut self.mask_buf, s, n, t, None);
+            let (k, v) = self.t_cache.kv_view();
+            let out = self.backend.teacher_step(self.cfg.mode, StepArgs {
+                tokens: &tokens,
+                positions: &positions,
+                mask: &self.mask_buf,
+                kv: KvView { k, v },
+                feats_in: None,
+                probe: false,
+            })?;
+            stats.teacher_calls += 1;
+            self.t_cache.append_committed(&out.k_new, &out.v_new, s, n)?;
+            let f = self.contract.feat_dim;
+            for (i, tok) in chunk.iter().enumerate() {
+                if self.use_draft {
+                    self.uncharted.push((*tok, feat_prev.clone()));
+                }
+                feat_prev = out.feat_row(i, f).to_vec();
+            }
+            self.pending_logits = out.logits_row(n - 1, self.contract.vocab).to_vec();
+        }
+        self.feat_last = feat_prev;
+        if self.use_draft {
+            self.drain_uncharted(stats)?;
+        }
+        self.timers.add("prefill", t0.elapsed().as_secs_f64());
+        Ok(())
+    }
+
+    // ------------------------------------------------------------------
+    // Draft-side cache refresh (chain calls)
+    // ------------------------------------------------------------------
+
+    /// Flush `uncharted` committed tokens into the draft cache. Returns
+    /// the draft logits + hidden of the *last* flushed token (the root
+    /// expansion signal) when anything was flushed.
+    fn drain_uncharted(&mut self, stats: &mut RunStats) -> Result<Option<(Vec<f32>, Vec<f32>)>> {
+        let mut last = None;
+        while !self.uncharted.is_empty() {
+            let take = self.uncharted.len().min(*self.contract.draft_s.last().unwrap());
+            let batch: Vec<(i32, Vec<f32>)> = self.uncharted.drain(..take).collect();
+            let n = batch.len();
+            let s = self.contract.draft_variant(n)?;
+            let d = self.d_cache.len();
+            if d + n > self.contract.cache_cap {
+                bail!("draft cache overflow at {d}+{n}");
+            }
+            let f = self.contract.feat_dim;
+            let mut tokens = vec![0i32; s];
+            let mut feats_in = vec![0.0f32; s * f];
+            for (i, (tok, fp)) in batch.iter().enumerate() {
+                tokens[i] = *tok;
+                feats_in[i * f..(i + 1) * f].copy_from_slice(fp);
+            }
+            let positions: Vec<i32> =
+                (0..s).map(|i| (d + i.min(n - 1)) as i32).collect();
+            self.mb.build_chain(&mut self.mask_buf, s, n, d, self.cfg.draft_window);
+            let (k, v) = self.d_cache.kv_view();
+            let out = self.backend.draft_step(StepArgs {
+                tokens: &tokens,
+                positions: &positions,
+                mask: &self.mask_buf,
+                kv: KvView { k, v },
+                feats_in: Some(&feats_in),
+                probe: self.cfg.attention_stats,
+            })?;
+            stats.draft_calls += 1;
+            self.d_cache.append_committed(&out.k_new, &out.v_new, s, n)?;
+            if let Some(top1) = &out.attn_top1 {
+                self.record_attention(top1, n, d, self.contract.draft.heads);
+            }
+            last = Some((
+                out.logits_row(n - 1, self.contract.vocab).to_vec(),
+                out.feat_row(n - 1, f).to_vec(),
+            ));
+        }
+        Ok(last)
+    }
+
+    /// Fig-7 evidence: bucket top-1 attention columns by token distance.
+    fn record_attention(&mut self, top1: &[i32], live: usize, d_len: usize, heads: usize) {
+        let cap = self.contract.cache_cap;
+        for i in 0..live {
+            let pos = d_len + i;
+            for h in 0..heads {
+                let col = top1[i * heads + h] as usize;
+                let col_pos = if col < cap { col } else { d_len + (col - cap) };
+                let dist = pos.saturating_sub(col_pos);
+                self.attn_hist.add(dist as f64);
+            }
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // Baseline: teacher-only greedy decoding
+    // ------------------------------------------------------------------
+
+    pub fn generate_baseline(&mut self, prompt: &[i32], max_new: usize) -> Result<GenOut> {
+        self.use_draft = false;
+        let wall0 = Instant::now();
+        let mut stats = RunStats::default();
+        self.prefill(prompt, &mut stats)?;
+        let mut out_tokens = Vec::with_capacity(max_new);
+        let s = *self.contract.teacher_s.first().unwrap();
+        while out_tokens.len() < max_new && self.t_cache.headroom() > s {
+            let r0 = argmax(&self.pending_logits) as i32;
+            let t = self.t_cache.len();
+            let mut tokens = vec![0i32; s];
+            tokens[0] = r0;
+            let positions: Vec<i32> = (0..s).map(|_| t as i32).collect();
+            let tm = Instant::now();
+            self.mb.build_chain(&mut self.mask_buf, s, 1, t, None);
+            self.timers.add("mask_build", tm.elapsed().as_secs_f64());
+            let tv = Instant::now();
+            let (k, v) = self.t_cache.kv_view();
+            let step = self.backend.teacher_step(self.cfg.mode, StepArgs {
+                tokens: &tokens,
+                positions: &positions,
+                mask: &self.mask_buf,
+                kv: KvView { k, v },
+                feats_in: None,
+                probe: false,
+            })?;
+            self.timers.add("verify", tv.elapsed().as_secs_f64());
+            stats.teacher_calls += 1;
+            stats.rounds += 1;
+            let tc = Instant::now();
+            self.t_cache.append_committed(&step.k_new, &step.v_new, s, 1)?;
+            self.timers.add("commit", tc.elapsed().as_secs_f64());
+            self.pending_logits = step.logits_row(0, self.contract.vocab).to_vec();
+            self.feat_last = step.feat_row(0, self.contract.feat_dim).to_vec();
+            out_tokens.push(r0);
+        }
+        Ok(self.finish(out_tokens, prompt.len(), stats, wall0))
+    }
+
+    // ------------------------------------------------------------------
+    // Speculative decoding
+    // ------------------------------------------------------------------
+
+    pub fn generate_speculative(&mut self, prompt: &[i32], max_new: usize) -> Result<GenOut> {
+        self.use_draft = true;
+        self.cfg.validate()?;
+        let wall0 = Instant::now();
+        let mut stats = RunStats::default();
+        self.prefill(prompt, &mut stats)?;
+        let mut out_tokens: Vec<i32> = Vec::with_capacity(max_new + self.cfg.tree.depth_max);
+        let reserve = 1 + self.max_budget();
+        // `max_new` is a soft cap: a round commits 1 + accept_L tokens
+        // atomically, so EA may overshoot by at most depth_max tokens
+        // (the committed text stays a prefix-exact teacher-greedy stream,
+        // and multi-turn context therefore remains consistent).
+        while out_tokens.len() < max_new
+            && self.t_cache.headroom() > reserve
+            && self.d_cache.headroom() > reserve
+        {
+            let committed = self.spec_round(&mut stats)?;
+            out_tokens.extend(committed);
+        }
+        Ok(self.finish(out_tokens, prompt.len(), stats, wall0))
+    }
+
+    /// One speculative round; returns the committed tokens (root + accepted).
+    fn spec_round(&mut self, stats: &mut RunStats) -> Result<Vec<i32>> {
+        stats.rounds += 1;
+        let vocab = self.contract.vocab;
+        let f = self.contract.feat_dim;
+
+        // 1. Pending root token + draft chain refresh.
+        let r0 = argmax(&self.pending_logits) as i32;
+        self.uncharted.push((r0, self.feat_last.clone()));
+        let td = Instant::now();
+        let (root_logits, root_hidden) = self
+            .drain_uncharted(stats)?
+            .context("drain_uncharted returned nothing despite pending root")?;
+
+        // 2. Tree expansion (depth-synchronous, global top-M).
+        let mut tree = SpecTree::with_root(r0);
+        self.d_cache.begin_branch()?;
+        // tree slot -> draft branch row (for ancestor visibility); the root
+        // lives in the committed draft cache at d_len - 1.
+        let mut branch_row_of: Vec<Option<usize>> = vec![None];
+        let mut frontier =
+            vec![FrontierNode { slot: 0, logits: root_logits, hidden: root_hidden }];
+        let round_budget = self.current_budget();
+        let mut budget_left = round_budget;
+        let mut depth = 0usize;
+        while budget_left > 0 && depth < self.cfg.tree.depth_max && !frontier.is_empty() {
+            depth += 1;
+            let mut pool: Vec<Candidate> = Vec::new();
+            for (row, node) in frontier.iter().enumerate() {
+                let base_lp = tree.slots()[node.slot].logprob;
+                for (tok, _) in topk(&node.logits, self.cfg.tree.topk) {
+                    pool.push(Candidate {
+                        parent: node.slot,
+                        token: tok as i32,
+                        cum_logprob: base_lp + log_softmax_at(&node.logits, tok),
+                        parent_row: row,
+                    });
+                }
+            }
+            let sel = select_children(pool, budget_left, FRONTIER_CAP);
+            if sel.is_empty() {
+                break;
+            }
+            let mut new_slots = Vec::with_capacity(sel.len());
+            for c in &sel {
+                let slot = tree.add_child(c.parent, c.token, c.cum_logprob);
+                branch_row_of.push(None);
+                new_slots.push(slot);
+            }
+            budget_left -= sel.len();
+            if budget_left == 0 || depth == self.cfg.tree.depth_max {
+                break; // leaves don't need a draft evaluation
+            }
+            frontier = self.eval_frontier(&tree, &sel, &new_slots, &frontier,
+                                          &mut branch_row_of, depth, stats)?;
+        }
+        self.timers.add("draft_expand", td.elapsed().as_secs_f64());
+
+        // 3. Tensorize + §3.2 invariants.
+        let tt = Instant::now();
+        let s_pad = self.contract.teacher_variant(tree.num_slots())?;
+        let tens = Tensorized::from_tree(&tree, s_pad, self.cfg.check_invariants)
+            .map_err(|e| anyhow::anyhow!("tree invariant violation: {e}"))?;
+        self.timers.add("tensorize", tt.elapsed().as_secs_f64());
+
+        // 4. Tree mask.
+        let tm = Instant::now();
+        let t_len = self.t_cache.len();
+        self.mb.build_auto(&mut self.mask_buf, &tens, t_len, None);
+        self.timers.add("mask_build", tm.elapsed().as_secs_f64());
+
+        // 5. Teacher verification (single batched call).
+        let tv = Instant::now();
+        let positions = tens.positions(t_len);
+        self.t_cache.begin_branch()?;
+        let (k, v) = self.t_cache.kv_view();
+        let step = self.backend.teacher_step(self.cfg.mode, StepArgs {
+            tokens: &tens.tokens,
+            positions: &positions,
+            mask: &self.mask_buf,
+            kv: KvView { k, v },
+            feats_in: None,
+            probe: false,
+        })?;
+        stats.teacher_calls += 1;
+        self.t_cache.append_branch(&step.k_new, &step.v_new, s_pad, tens.live)?;
+        self.timers.add("verify", tv.elapsed().as_secs_f64());
+
+        // 6. Acceptance.
+        let ta = Instant::now();
+        let logits_of = |slot: usize| step.logits_row(slot, vocab).to_vec();
+        let acc = if self.cfg.temperature == 0.0 {
+            greedy_walk(&tree, &logits_of)
+        } else {
+            stochastic_walk(&tree, &logits_of, self.cfg.temperature, &mut self.rng)
+        };
+        stats.accept_lens.push(acc.accept_len());
+        stats.accept_pos.record(acc.accept_len(), acc.offered);
+        if let Some(adaptive) = &mut self.adaptive {
+            adaptive.observe(acc.accept_len(), round_budget);
+        }
+        self.timers.add("accept", ta.elapsed().as_secs_f64());
+
+        // 7. Commit.
+        let tc = Instant::now();
+        let a = acc.accept_len();
+        let contiguous = acc.path.iter().enumerate().all(|(i, s)| *s == i + 1);
+        match self.cfg.commit_mode {
+            CommitMode::Length if contiguous => {
+                // root (branch row 0) + accepted rows 1..=A
+                self.t_cache.commit_length(1 + a)?;
+            }
+            _ => {
+                let mut path: Vec<usize> = (0..t_len).collect();
+                path.push(t_len); // root slot 0
+                path.extend(acc.path.iter().map(|s| t_len + s));
+                self.t_cache.commit_path(&path)?;
+            }
+        }
+        // Features of newly committed tokens feed the next chain refresh.
+        let mut committed = vec![r0];
+        let mut prev_slot = 0usize;
+        for &slot in &acc.path {
+            let tok = tree.slots()[slot].token;
+            self.uncharted.push((tok, step.feat_row(prev_slot, f).to_vec()));
+            committed.push(tok);
+            prev_slot = slot;
+        }
+        self.feat_last = step.feat_row(acc.bonus_slot, f).to_vec();
+        self.pending_logits = step.logits_row(acc.bonus_slot, vocab).to_vec();
+        self.d_cache.rollback();
+        self.timers.add("commit", tc.elapsed().as_secs_f64());
+        Ok(committed)
+    }
+
+    /// Evaluate a freshly selected frontier with one draft call: feature
+    /// inputs chain from parent hiddens, the mask opens committed prefix
+    /// (optionally windowed), ancestor branch rows and the self slot.
+    #[allow(clippy::too_many_arguments)]
+    fn eval_frontier(
+        &mut self,
+        tree: &SpecTree,
+        sel: &[Candidate],
+        new_slots: &[usize],
+        parents: &[FrontierNode],
+        branch_row_of: &mut [Option<usize>],
+        depth: usize,
+        stats: &mut RunStats,
+    ) -> Result<Vec<FrontierNode>> {
+        let n = sel.len();
+        let s = self.contract.draft_variant(n)?;
+        let f = self.contract.feat_dim;
+        let cap = self.contract.cache_cap;
+        let d_len = self.d_cache.len();
+        if d_len + self.d_cache.branch_rows() + n > cap {
+            bail!("draft branch overflow during expansion");
+        }
+        let mut tokens = vec![0i32; s];
+        let mut feats_in = vec![0.0f32; s * f];
+        for (i, c) in sel.iter().enumerate() {
+            tokens[i] = c.token;
+            feats_in[i * f..(i + 1) * f].copy_from_slice(&parents[c.parent_row].hidden);
+        }
+        // every frontier node of this depth sits at the same position
+        let pos = (d_len - 1 + depth) as i32;
+        let positions = vec![pos; s];
+        // mask: custom rows (committed prefix + ancestor branch rows + self)
+        let w = cap + s;
+        self.mask_buf.clear();
+        self.mask_buf.resize(s * w, NEG_INF);
+        let lo = self.cfg.draft_window.map_or(0, |win| d_len.saturating_sub(win));
+        for (i, c) in sel.iter().enumerate() {
+            let row = &mut self.mask_buf[i * w..(i + 1) * w];
+            row[lo..d_len].fill(0.0);
+            for &anc in &tree.ancestors(c.parent) {
+                if anc == 0 {
+                    continue; // root = last committed token, already open
+                }
+                let br = branch_row_of[anc]
+                    .with_context(|| format!("ancestor slot {anc} has no draft row"))?;
+                row[d_len + br] = 0.0;
+            }
+            row[cap + i] = 0.0; // self
+        }
+        let (k, v) = self.d_cache.kv_view();
+        let out = self.backend.draft_step(StepArgs {
+            tokens: &tokens,
+            positions: &positions,
+            mask: &self.mask_buf,
+            kv: KvView { k, v },
+            feats_in: Some(&feats_in),
+            probe: false,
+        })?;
+        stats.draft_calls += 1;
+        let base_row = self.d_cache.branch_rows();
+        self.d_cache.append_branch(&out.k_new, &out.v_new, s, n)?;
+        for (i, &slot) in new_slots.iter().enumerate() {
+            branch_row_of[slot] = Some(base_row + i);
+        }
+        Ok(sel
+            .iter()
+            .enumerate()
+            .map(|(i, _)| FrontierNode {
+                slot: new_slots[i],
+                logits: out.logits_row(i, self.contract.vocab).to_vec(),
+                hidden: out.feat_row(i, f).to_vec(),
+            })
+            .collect())
+    }
+
+    fn finish(&mut self, tokens: Vec<i32>, prompt_len: usize, stats: RunStats,
+              wall0: Instant) -> GenOut {
+        GenOut {
+            tokens,
+            wall_secs: wall0.elapsed().as_secs_f64(),
+            teacher_calls: stats.teacher_calls,
+            draft_calls: stats.draft_calls,
+            rounds: stats.rounds,
+            accept_lens: stats.accept_lens,
+            accept_pos: stats.accept_pos,
+            timers: std::mem::replace(&mut self.timers, StageTimer::new(self.cfg.instrument)),
+            attn_hist: std::mem::replace(&mut self.attn_hist, attention_distance_buckets()),
+            teacher_cache: self.t_cache.stats.clone(),
+            draft_cache: self.d_cache.stats.clone(),
+            prompt_len,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::sim::SimBackend;
+    use crate::config::{CacheStrategy, ExecMode};
+
+    fn prompt(n: usize, seed: u64) -> Vec<i32> {
+        let mut rng = SplitMix64::new(seed);
+        let mut p = vec![1i32]; // BOS
+        for _ in 1..n {
+            p.push(rng.range(2, 512) as i32);
+        }
+        p
+    }
+
+    fn run_baseline(cfg: &RunConfig, p: &[i32], max_new: usize) -> GenOut {
+        let mut b = SimBackend::new(90);
+        let mut e = Engine::new(&mut b, cfg.clone());
+        e.generate_baseline(p, max_new).unwrap()
+    }
+
+    fn run_spec(cfg: &RunConfig, p: &[i32], max_new: usize, agree: u64) -> GenOut {
+        let mut b = SimBackend::new(agree);
+        let mut e = Engine::new(&mut b, cfg.clone());
+        e.generate_speculative(p, max_new).unwrap()
+    }
+
+    #[test]
+    fn baseline_produces_deterministic_tokens() {
+        let cfg = RunConfig::default();
+        let p = prompt(12, 1);
+        let a = run_baseline(&cfg, &p, 20);
+        let b = run_baseline(&cfg, &p, 20);
+        assert_eq!(a.tokens, b.tokens);
+        assert_eq!(a.tokens.len(), 20);
+        assert_eq!(a.teacher_calls as usize, 20 + 1); // +1 prefill chunk
+    }
+
+    #[test]
+    fn speculative_output_equals_baseline_greedy() {
+        // The paper's core quality claim: EA with greedy acceptance commits
+        // exactly the teacher-greedy sequence, across every cache config.
+        let p = prompt(17, 2);
+        let base = run_baseline(&RunConfig::default(), &p, 48);
+        for strategy in [CacheStrategy::SegmentShare, CacheStrategy::DeepCopy] {
+            for commit in [CommitMode::PathIndex, CommitMode::Length] {
+                for fast in [true, false] {
+                    for agree in [0, 60, 100] {
+                        let mut cfg = RunConfig::default();
+                        cfg.cache_strategy = strategy;
+                        cfg.commit_mode = commit;
+                        cfg.fast_reorder = fast;
+                        let ea = run_spec(&cfg, &p, 32, agree);
+                        assert!(ea.tokens.len() >= 32);
+                        assert_eq!(
+                            ea.tokens[..],
+                            base.tokens[..ea.tokens.len()],
+                            "strategy={strategy:?} commit={commit:?} fast={fast} agree={agree}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn eager_and_fused_modes_agree() {
+        let p = prompt(9, 3);
+        let mut cfg = RunConfig::default();
+        cfg.mode = ExecMode::Fused;
+        let a = run_spec(&cfg, &p, 16, 85);
+        cfg.mode = ExecMode::Eager;
+        let b = run_spec(&cfg, &p, 16, 85);
+        assert_eq!(a.tokens, b.tokens);
+    }
+
+    #[test]
+    fn high_agreement_yields_long_accepts_and_fewer_calls() {
+        let p = prompt(10, 4);
+        let cfg = RunConfig::default();
+        let hi = run_spec(&cfg, &p, 48, 100);
+        let lo = run_spec(&cfg, &p, 48, 0);
+        assert!(hi.mean_accept_len() > 1.5, "hi accept {}", hi.mean_accept_len());
+        assert!(lo.mean_accept_len() < 0.5, "lo accept {}", lo.mean_accept_len());
+        assert!(
+            hi.teacher_calls < lo.teacher_calls,
+            "accepts must reduce teacher calls: {} vs {}",
+            hi.teacher_calls,
+            lo.teacher_calls
+        );
+        // speculation must never change the committed text
+        let n = hi.tokens.len().min(lo.tokens.len());
+        assert_eq!(hi.tokens[..n], lo.tokens[..n]);
+    }
+
+    #[test]
+    fn drafter_truncation_reduces_acceptance() {
+        // E4 shape: a windowed drafter loses far context (the sim's context
+        // hash changes), so its proposals diverge from the teacher's.
+        let p = prompt(40, 5);
+        let mut cfg = RunConfig::default();
+        let full = run_spec(&cfg, &p, 40, 100);
+        cfg.draft_window = Some(8);
+        let trunc = run_spec(&cfg, &p, 40, 100);
+        assert!(
+            trunc.mean_accept_len() < full.mean_accept_len() * 0.6,
+            "truncation should collapse acceptance: {} vs {}",
+            trunc.mean_accept_len(),
+            full.mean_accept_len()
+        );
+        let n = trunc.tokens.len().min(full.tokens.len());
+        assert_eq!(trunc.tokens[..n], full.tokens[..n], "output must stay teacher-greedy");
+    }
+
+    #[test]
+    fn accept_pos_rates_populated_and_decaying_shape() {
+        let p = prompt(12, 6);
+        let out = run_spec(&RunConfig::default(), &p, 64, 90);
+        let rates = out.accept_pos.rates();
+        assert!(!rates.is_empty());
+        assert!(rates[0] > 0.5, "depth-1 acceptance should be high: {rates:?}");
+    }
+
+    #[test]
+    fn multi_turn_continuation_keeps_cache() {
+        let mut b = SimBackend::new(90);
+        let mut e = Engine::new(&mut b, RunConfig::default());
+        let p1 = prompt(10, 7);
+        let o1 = e.generate_speculative(&p1, 12).unwrap();
+        let len_after_t1 = e.context_len();
+        assert!(len_after_t1 >= 10 + 12);
+        let p2 = prompt(6, 8);
+        let o2 = e.generate_speculative(&p2, 12).unwrap();
+        assert!(e.context_len() > len_after_t1);
+        assert!(o1.tokens.len() >= 12);
+        assert!(o2.tokens.len() >= 12);
+        // reset clears everything
+        e.reset();
+        assert_eq!(e.context_len(), 0);
+    }
+
+    #[test]
+    fn multi_turn_equals_concatenated_context() {
+        // Decoding turn 2 after turn 1 must equal baseline decoding over
+        // the concatenated context (cache-commit equivalence end-to-end).
+        let p1 = prompt(8, 9);
+        let max1 = 10;
+        let mut b1 = SimBackend::new(90);
+        let mut e1 = Engine::new(&mut b1, RunConfig::default());
+        let o1 = e1.generate_speculative(&p1, max1).unwrap();
+        let p2 = prompt(5, 10);
+        let o2 = e1.generate_speculative(&p2, 10).unwrap();
+
+        let mut ctx: Vec<i32> = p1.clone();
+        ctx.extend(&o1.tokens);
+        ctx.extend(&p2);
+        let mut b2 = SimBackend::new(90);
+        let mut e2 = Engine::new(&mut b2, RunConfig::default());
+        let base = e2.generate_baseline(&ctx, o2.tokens.len()).unwrap();
+        assert_eq!(o2.tokens, base.tokens);
+    }
+
+    #[test]
+    fn budget_one_degenerates_to_linear_speculation() {
+        let p = prompt(8, 11);
+        let mut cfg = RunConfig::default();
+        cfg.tree.budget = 1;
+        let out = run_spec(&cfg, &p, 16, 100);
+        let base = run_baseline(&RunConfig::default(), &p, 18);
+        assert_eq!(out.tokens[..], base.tokens[..out.tokens.len()]);
+        assert!(out.accept_lens.iter().all(|a| *a <= 1));
+    }
+
+    #[test]
+    fn instrumented_run_records_all_stages() {
+        let p = prompt(8, 12);
+        let mut cfg = RunConfig::default();
+        cfg.instrument = true;
+        let mut b = SimBackend::new(90);
+        let mut e = Engine::new(&mut b, cfg);
+        let out = e.generate_speculative(&p, 16).unwrap();
+        for stage in ["prefill", "draft_expand", "tensorize", "mask_build", "verify",
+                      "accept", "commit"] {
+            assert!(out.timers.seconds.contains_key(stage), "missing stage {stage}");
+        }
+    }
+
+    #[test]
+    fn attention_stats_histogram_fills_on_probe_runs() {
+        let p = prompt(80, 13);
+        let mut cfg = RunConfig::default();
+        cfg.attention_stats = true;
+        let out = run_spec(&cfg, &p, 16, 90);
+        assert!(out.attn_hist.total > 0);
+        // the sim's even heads always attend to the earliest visible token,
+        // so the far bucket must be populated (Fig-7 shape).
+        assert!(out.attn_hist.counts[2] + out.attn_hist.counts[3] > 0);
+    }
+
+    #[test]
+    fn adaptive_budget_tracks_draft_quality() {
+        // good draft -> budget grows; bad draft -> budget shrinks; output
+        // stays teacher-greedy either way.
+        let p = prompt(12, 15);
+        let mut cfg = RunConfig::default();
+        cfg.adaptive_budget = true;
+        cfg.tree.budget = 8;
+        let mut good = SimBackend::new(100);
+        let mut e = Engine::new(&mut good, cfg.clone());
+        let out_good = e.generate_speculative(&p, 120).unwrap();
+        let grown = e.current_budget();
+        assert!(grown > 8, "high acceptance should grow the budget: {grown}");
+
+        let mut bad = SimBackend::new(0);
+        let mut e2 = Engine::new(&mut bad, cfg.clone());
+        let out_bad = e2.generate_speculative(&p, 120).unwrap();
+        assert!(e2.current_budget() < 8,
+                "zero acceptance should shrink the budget: {}", e2.current_budget());
+        let n = out_good.tokens.len().min(out_bad.tokens.len());
+        assert_eq!(out_good.tokens[..n], out_bad.tokens[..n]);
+    }
+
+    #[test]
+    fn cache_stats_reflect_strategy() {
+        let p = prompt(8, 14);
+        let mut cfg = RunConfig::default();
+        cfg.cache_strategy = CacheStrategy::DeepCopy;
+        let dc = run_spec(&cfg, &p, 12, 90);
+        assert!(dc.teacher_cache.replicate_bytes > 0);
+        cfg.cache_strategy = CacheStrategy::SegmentShare;
+        let ss = run_spec(&cfg, &p, 12, 90);
+        assert_eq!(ss.teacher_cache.replicate_bytes, 0);
+    }
+}

@@ -1,0 +1,8 @@
+//! The decode engine: prefill, baseline greedy decoding and EAGLE-style
+//! tree-speculative decoding over any [`crate::backend::ModelBackend`].
+
+pub mod decode;
+pub mod output;
+
+pub use decode::Engine;
+pub use output::GenOut;

@@ -1,0 +1,102 @@
+//! Generation outputs + per-turn statistics (the signals every paper
+//! table/figure aggregates).
+
+use crate::cache::CacheStats;
+use crate::util::stats::{AcceptPos, Histogram};
+use crate::util::StageTimer;
+
+/// Far-history buckets for the Fig-7 attention-evidence histogram
+/// (token distance from the current position).
+pub fn attention_distance_buckets() -> Histogram {
+    Histogram::new(vec![15.0, 63.0, 255.0])
+}
+
+pub const ATTN_BUCKET_LABELS: &[&str] = &["0_15", "16_63", "64_255", "256_plus"];
+
+/// Result of one generation call (one turn).
+#[derive(Clone, Debug)]
+pub struct GenOut {
+    /// Committed output tokens (prompt excluded).
+    pub tokens: Vec<i32>,
+    /// Wall-clock of the full generation call, seconds.
+    pub wall_secs: f64,
+    pub teacher_calls: u64,
+    pub draft_calls: u64,
+    /// Verification rounds (speculative) or decode steps (baseline).
+    pub rounds: u64,
+    /// accept_L samples, one per verification round.
+    pub accept_lens: Vec<usize>,
+    /// Position-wise acceptance counters (Fig 3).
+    pub accept_pos: AcceptPos,
+    /// Per-stage timing (instrumented runs only).
+    pub timers: StageTimer,
+    /// Draft attention top-1 distance histogram (probe runs only).
+    pub attn_hist: Histogram,
+    pub teacher_cache: CacheStats,
+    pub draft_cache: CacheStats,
+    /// Prompt length (tokens) for trace records.
+    pub prompt_len: usize,
+}
+
+impl GenOut {
+    pub fn tok_per_sec(&self) -> f64 {
+        if self.wall_secs <= 0.0 {
+            0.0
+        } else {
+            self.tokens.len() as f64 / self.wall_secs
+        }
+    }
+
+    pub fn mean_accept_len(&self) -> f64 {
+        if self.accept_lens.is_empty() {
+            0.0
+        } else {
+            self.accept_lens.iter().sum::<usize>() as f64 / self.accept_lens.len() as f64
+        }
+    }
+
+    /// Time per output token (TPOT), seconds.
+    pub fn tpot(&self) -> f64 {
+        if self.tokens.is_empty() {
+            0.0
+        } else {
+            self.wall_secs / self.tokens.len() as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn blank() -> GenOut {
+        GenOut {
+            tokens: vec![1, 2, 3, 4],
+            wall_secs: 2.0,
+            teacher_calls: 2,
+            draft_calls: 3,
+            rounds: 2,
+            accept_lens: vec![1, 3],
+            accept_pos: AcceptPos::default(),
+            timers: StageTimer::new(false),
+            attn_hist: attention_distance_buckets(),
+            teacher_cache: CacheStats::default(),
+            draft_cache: CacheStats::default(),
+            prompt_len: 10,
+        }
+    }
+
+    #[test]
+    fn throughput_metrics() {
+        let g = blank();
+        assert!((g.tok_per_sec() - 2.0).abs() < 1e-12);
+        assert!((g.tpot() - 0.5).abs() < 1e-12);
+        assert!((g.mean_accept_len() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn attention_buckets_match_labels() {
+        let h = attention_distance_buckets();
+        assert_eq!(h.counts.len(), ATTN_BUCKET_LABELS.len());
+    }
+}

@@ -1,0 +1,390 @@
+//! E1-E4 experiment runners (paper §5).
+//!
+//! Each runner executes live decoding through the coordinator, prints the
+//! paper-shaped table to stdout, and writes machine-readable series
+//! (CSV/JSON) into the output directory:
+//!
+//! * **E1** (Table 1, Fig 1/2a/2b/3): end-to-end throughput, batch 1.
+//! * **E2** (Table 2, Fig 4): budget sweep over M and D_max,
+//!   HumanEval(code)-only, shorter generations.
+//! * **E3** (Fig 5): instrumented stage breakdown (analysis-only).
+//! * **E4** (Table 3, Fig 6, Fig 7): drafter context truncation.
+//!
+//! Lengths are CPU-scaled versions of the paper's settings (DESIGN.md §1):
+//! max_new 1024 -> 128, sweep max_new 256 -> 64, windows {128,256,512} ->
+//! {32,64,128} against the ~4x-shorter contexts.
+
+use crate::coordinator::{run_workload, BackendSpec, CoordinatorConfig};
+use crate::config::RunConfig;
+use crate::engine::output::ATTN_BUCKET_LABELS;
+use crate::json::Json;
+use crate::metrics::report::{
+    accept_pos_csv, lengths_csv, speedup_hist_csv, speedup_vs_lk_csv,
+};
+use crate::metrics::{pair_turns, ThroughputReport};
+use crate::trace::TurnRecord;
+use crate::util::stats::Summary;
+use crate::workload::WorkloadSpec;
+use anyhow::Result;
+use std::fmt::Write as _;
+use std::path::PathBuf;
+
+#[derive(Clone, Debug)]
+pub struct HarnessConfig {
+    pub backend: BackendSpec,
+    pub out_dir: PathBuf,
+    pub world_size: usize,
+    pub run: RunConfig,
+    /// Shrink the workload for smoke runs / CI.
+    pub quick: bool,
+    pub verbose: bool,
+}
+
+impl HarnessConfig {
+    fn workload(&self) -> WorkloadSpec {
+        if self.quick {
+            WorkloadSpec::smoke()
+        } else {
+            WorkloadSpec::default()
+        }
+    }
+
+    /// Code(HumanEval)-only subset for E2 (paper: "humaneval-only sweep").
+    fn workload_code_only(&self) -> WorkloadSpec {
+        let mut w = self.workload();
+        w.chat_conversations = 0;
+        if !self.quick {
+            w.code_conversations = 24; // sweep cost is (#settings x workload)
+        }
+        w
+    }
+
+    fn coord(&self, run: RunConfig, workload: WorkloadSpec, tag: &str,
+             baseline: bool, ea: bool) -> CoordinatorConfig {
+        CoordinatorConfig {
+            world_size: self.world_size,
+            run,
+            workload,
+            backend: self.backend.clone(),
+            trace_dir: self.out_dir.join(tag),
+            run_baseline: baseline,
+            run_ea: ea,
+            verbose: self.verbose,
+        }
+    }
+}
+
+fn write(dir: &PathBuf, name: &str, content: &str) -> Result<()> {
+    std::fs::create_dir_all(dir)?;
+    std::fs::write(dir.join(name), content)?;
+    Ok(())
+}
+
+// ----------------------------------------------------------------------
+// E1 — end-to-end throughput (Table 1, Fig 1, 2a, 2b, 3)
+// ----------------------------------------------------------------------
+
+pub fn run_e1(cfg: &HarnessConfig) -> Result<ThroughputReport> {
+    let mut run = cfg.run.clone();
+    run.max_new_tokens = if cfg.quick { 24 } else { 128 };
+    let coord = cfg.coord(run, cfg.workload(), "e1", true, true);
+    let records = run_workload(&coord)?;
+    let pairs = pair_turns(&records);
+    let report = ThroughputReport::from_pairs(&pairs);
+    println!("{}", report.table1());
+    write(&cfg.out_dir, "e1_report.json", &report.to_json().to_string_pretty())?;
+    write(&cfg.out_dir, "fig1_lengths.csv", &lengths_csv(&records))?;
+    write(&cfg.out_dir, "fig2a_speedup_hist.csv", &speedup_hist_csv(&pairs))?;
+    write(&cfg.out_dir, "fig2b_speedup_vs_lk.csv", &speedup_vs_lk_csv(&pairs))?;
+    write(&cfg.out_dir, "fig3_accept_pos.csv", &accept_pos_csv(&report))?;
+    Ok(report)
+}
+
+// ----------------------------------------------------------------------
+// E2 — budget sensitivity sweep (Table 2, Fig 4)
+// ----------------------------------------------------------------------
+
+pub struct SweepRow {
+    pub sweep: &'static str,
+    pub setting: String,
+    pub ea_tok_s: f64,
+    pub speedup: f64,
+}
+
+pub fn run_e2(cfg: &HarnessConfig) -> Result<Vec<SweepRow>> {
+    let workload = cfg.workload_code_only();
+    let max_new = if cfg.quick { 16 } else { 64 };
+
+    // Baseline once (shared across sweep settings).
+    let mut base_run = cfg.run.clone();
+    base_run.max_new_tokens = max_new;
+    let base_records =
+        run_workload(&cfg.coord(base_run.clone(), workload.clone(), "e2_base", true, false))?;
+    let base_tok: Vec<f64> =
+        base_records.iter().filter(|r| r.kind == "baseline").map(|r| r.tok_s).collect();
+    let base_mean = Summary::from(&base_tok).mean;
+
+    let m_axis: Vec<usize> =
+        if cfg.quick { vec![8, 16] } else { vec![16, 32, 64, 128, 256] };
+    let d_axis: Vec<usize> = if cfg.quick { vec![4, 10] } else { vec![4, 8, 10, 12, 16] };
+
+    let mut rows: Vec<SweepRow> = Vec::new();
+    for m in &m_axis {
+        let mut run = base_run.clone();
+        run.tree.budget = *m;
+        run.tree.depth_max = 10;
+        let recs = run_workload(&cfg.coord(run, workload.clone(),
+                                           &format!("e2_m{m}"), false, true))?;
+        rows.push(sweep_row("scan_M", format!("M={m}"), &recs, base_mean));
+    }
+    for d in &d_axis {
+        let mut run = base_run.clone();
+        run.tree.budget = 64.min(if cfg.quick { 8 } else { 64 });
+        run.tree.depth_max = *d;
+        let recs = run_workload(&cfg.coord(run, workload.clone(),
+                                           &format!("e2_d{d}"), false, true))?;
+        rows.push(sweep_row("scan_Dmax", format!("Dmax={d}"), &recs, base_mean));
+    }
+
+    // Table 2
+    let mut table = String::new();
+    writeln!(table, "Table 2: budget sweep (code-only, max_new={max_new}, baseline {base_mean:.2} Tok/s)").ok();
+    writeln!(table, "| Sweep     | Setting   | EA Tok/s (mean) | Speedup (mean) |").ok();
+    writeln!(table, "|-----------|-----------|-----------------|----------------|").ok();
+    for r in &rows {
+        writeln!(table, "| {:<9} | {:<9} | {:>15.2} | {:>14.2} |",
+                 r.sweep, r.setting, r.ea_tok_s, r.speedup).ok();
+    }
+    println!("{table}");
+    write(&cfg.out_dir, "table2_budget_sweep.txt", &table)?;
+    let mut csv = String::from("sweep,setting,ea_tok_s,speedup\n");
+    for r in &rows {
+        writeln!(csv, "{},{},{:.4},{:.4}", r.sweep, r.setting, r.ea_tok_s, r.speedup).ok();
+    }
+    write(&cfg.out_dir, "fig4_budget_sweep.csv", &csv)?;
+    Ok(rows)
+}
+
+fn sweep_row(sweep: &'static str, setting: String, recs: &[TurnRecord], base_mean: f64)
+    -> SweepRow {
+    let tok: Vec<f64> = recs.iter().filter(|r| r.kind == "ea").map(|r| r.tok_s).collect();
+    let mean = Summary::from(&tok).mean;
+    SweepRow {
+        sweep,
+        setting,
+        ea_tok_s: mean,
+        speedup: if base_mean > 0.0 { mean / base_mean } else { 0.0 },
+    }
+}
+
+// ----------------------------------------------------------------------
+// E3 — stage breakdown (Fig 5; instrumented, analysis-only)
+// ----------------------------------------------------------------------
+
+pub fn run_e3(cfg: &HarnessConfig) -> Result<Json> {
+    let mut run = cfg.run.clone();
+    run.instrument = true;
+    run.max_new_tokens = if cfg.quick { 16 } else { 96 };
+    let mut workload = cfg.workload();
+    if !cfg.quick {
+        // instrumentation perturbs timing; a subset suffices for diagnosis
+        workload.code_conversations = 16;
+        workload.chat_conversations = 16;
+    }
+    let records = run_workload(&cfg.coord(run, workload, "e3", false, true))?;
+
+    // aggregate per-stage totals + per-call means across turns
+    let mut totals: std::collections::BTreeMap<String, Vec<f64>> = Default::default();
+    for r in &records {
+        for (stage, secs) in &r.stage_seconds {
+            totals.entry(stage.clone()).or_default().push(*secs * 1e3); // ms
+        }
+    }
+    let mut table = String::from(
+        "Fig 5: stage breakdown (instrumented, ms per turn)\n\
+         | Stage        |     mean |      p50 |      p90 |      p99 |\n\
+         |--------------|----------|----------|----------|----------|\n",
+    );
+    let mut j = Json::obj();
+    for (stage, samples) in &totals {
+        let s = Summary::from(samples);
+        writeln!(table, "| {:<12} | {:>8.2} | {:>8.2} | {:>8.2} | {:>8.2} |",
+                 stage, s.mean, s.p50, s.p90, s.p99).ok();
+        let mut o = Json::obj();
+        o.push("mean_ms", s.mean).push("p50_ms", s.p50).push("p90_ms", s.p90)
+            .push("p99_ms", s.p99);
+        j.push(stage, o);
+    }
+    println!("{table}");
+    write(&cfg.out_dir, "fig5_stage_breakdown.txt", &table)?;
+    write(&cfg.out_dir, "fig5_stage_breakdown.json", &j.to_string_pretty())?;
+    Ok(j)
+}
+
+// ----------------------------------------------------------------------
+// E4 — drafter truncation (Table 3, Fig 6, Fig 7)
+// ----------------------------------------------------------------------
+
+pub struct TruncRow {
+    pub window: String,
+    pub ea_tok_s: f64,
+    pub speedup: f64,
+    pub accept_mean: f64,
+    pub accept_p90: f64,
+}
+
+pub fn run_e4(cfg: &HarnessConfig, attention_stats: bool) -> Result<Vec<TruncRow>> {
+    let mut workload = cfg.workload();
+    if !cfg.quick {
+        // 4 windows x workload: a 96-turn subset keeps the sweep
+        // affordable on this testbed while preserving effect sizes.
+        workload.code_conversations = 32;
+        workload.chat_conversations = 32;
+    }
+    let max_new = if cfg.quick { 24 } else { 128 };
+    let mut base_run = cfg.run.clone();
+    base_run.max_new_tokens = max_new;
+    let base_records =
+        run_workload(&cfg.coord(base_run.clone(), workload.clone(), "e4_base", true, false))?;
+    let base_mean = Summary::from(
+        &base_records.iter().filter(|r| r.kind == "baseline").map(|r| r.tok_s)
+            .collect::<Vec<_>>(),
+    )
+    .mean;
+
+    // paper windows {none,128,256,512} at context ~1400; CPU-scaled here.
+    let windows: Vec<Option<usize>> = if cfg.quick {
+        vec![None, Some(8)]
+    } else {
+        vec![None, Some(32), Some(64), Some(128)]
+    };
+    let mut rows = Vec::new();
+    let mut attn_json = Json::obj();
+    for w in &windows {
+        let mut run = base_run.clone();
+        run.draft_window = *w;
+        run.attention_stats = attention_stats;
+        let tag = match w {
+            None => "e4_wnone".to_string(),
+            Some(x) => format!("e4_w{x}"),
+        };
+        let recs = run_workload(&cfg.coord(run, workload.clone(), &tag, false, true))?;
+        let ea: Vec<&TurnRecord> = recs.iter().filter(|r| r.kind == "ea").collect();
+        let tok = Summary::from(&ea.iter().map(|r| r.tok_s).collect::<Vec<_>>());
+        let accepts: Vec<f64> = ea
+            .iter()
+            .flat_map(|r| r.accept_lens.iter().map(|a| *a as f64))
+            .collect();
+        let acc = Summary::from(&accepts);
+        let label = w.map_or("none".to_string(), |x| x.to_string());
+        rows.push(TruncRow {
+            window: label.clone(),
+            ea_tok_s: tok.mean,
+            speedup: if base_mean > 0.0 { tok.mean / base_mean } else { 0.0 },
+            accept_mean: acc.mean,
+            accept_p90: acc.p90,
+        });
+        if attention_stats {
+            // Fig 7: aggregate attention-distance buckets
+            let mut buckets = vec![0u64; ATTN_BUCKET_LABELS.len()];
+            for r in &ea {
+                for (i, c) in r.attn_buckets.iter().enumerate() {
+                    if i < buckets.len() {
+                        buckets[i] += c;
+                    }
+                }
+            }
+            let total: u64 = buckets.iter().sum::<u64>().max(1);
+            let mut o = Json::obj();
+            for (i, lab) in ATTN_BUCKET_LABELS.iter().enumerate() {
+                o.push(lab, buckets[i] as f64 / total as f64);
+            }
+            attn_json.push(&format!("window_{label}"), o);
+        }
+    }
+
+    let mut table = String::new();
+    writeln!(table, "Table 3: drafter-only fixed-window truncation (max_new={max_new}, baseline {base_mean:.2} Tok/s)").ok();
+    writeln!(table, "| Window W | EA Tok/s (mean) | Speedup (mean) | accept_L mean | accept_L p90 |").ok();
+    writeln!(table, "|----------|-----------------|----------------|---------------|--------------|").ok();
+    for r in &rows {
+        writeln!(table, "| {:<8} | {:>15.2} | {:>14.2} | {:>13.2} | {:>12.2} |",
+                 r.window, r.ea_tok_s, r.speedup, r.accept_mean, r.accept_p90).ok();
+    }
+    println!("{table}");
+    write(&cfg.out_dir, "table3_truncation.txt", &table)?;
+    let mut csv = String::from("window,ea_tok_s,speedup,accept_mean,accept_p90\n");
+    for r in &rows {
+        writeln!(csv, "{},{:.4},{:.4},{:.4},{:.4}",
+                 r.window, r.ea_tok_s, r.speedup, r.accept_mean, r.accept_p90).ok();
+    }
+    write(&cfg.out_dir, "fig6_truncation.csv", &csv)?;
+    if attention_stats {
+        write(&cfg.out_dir, "fig7_attention_buckets.json", &attn_json.to_string_pretty())?;
+        println!("Fig 7 attention buckets: {}", attn_json.to_string());
+    }
+    Ok(rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(tag: &str) -> HarnessConfig {
+        let d = std::env::temp_dir()
+            .join(format!("eagle_harness_test_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        HarnessConfig {
+            backend: BackendSpec::Sim { agree_pct: 90 },
+            out_dir: d,
+            world_size: 2,
+            run: RunConfig::default(),
+            quick: true,
+            verbose: false,
+        }
+    }
+
+    #[test]
+    fn e1_quick_produces_all_artifacts() {
+        let c = cfg("e1");
+        let rep = run_e1(&c).unwrap();
+        assert_eq!(rep.turns, 9);
+        for f in ["e1_report.json", "fig1_lengths.csv", "fig2a_speedup_hist.csv",
+                  "fig2b_speedup_vs_lk.csv", "fig3_accept_pos.csv"] {
+            assert!(c.out_dir.join(f).exists(), "{f}");
+        }
+        let _ = std::fs::remove_dir_all(&c.out_dir);
+    }
+
+    #[test]
+    fn e2_quick_sweeps_both_axes() {
+        let c = cfg("e2");
+        let rows = run_e2(&c).unwrap();
+        assert_eq!(rows.len(), 4); // 2 M-settings + 2 D-settings
+        assert!(rows.iter().all(|r| r.ea_tok_s > 0.0));
+        assert!(c.out_dir.join("fig4_budget_sweep.csv").exists());
+        let _ = std::fs::remove_dir_all(&c.out_dir);
+    }
+
+    #[test]
+    fn e3_quick_reports_stages() {
+        let c = cfg("e3");
+        let j = run_e3(&c).unwrap();
+        for stage in ["verify", "commit", "mask_build", "tensorize"] {
+            assert!(j.get(stage).is_some(), "missing {stage}");
+        }
+        let _ = std::fs::remove_dir_all(&c.out_dir);
+    }
+
+    #[test]
+    fn e4_quick_shows_truncation_damage() {
+        let c = cfg("e4");
+        let rows = run_e4(&c, true).unwrap();
+        assert_eq!(rows.len(), 2);
+        assert!(rows[0].accept_mean > rows[1].accept_mean,
+                "window must reduce acceptance: {} vs {}",
+                rows[0].accept_mean, rows[1].accept_mean);
+        assert!(c.out_dir.join("fig7_attention_buckets.json").exists());
+        let _ = std::fs::remove_dir_all(&c.out_dir);
+    }
+}

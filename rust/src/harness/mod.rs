@@ -1,0 +1,7 @@
+//! Experiment harness: regenerates every table and figure of the paper's
+//! evaluation section (§5) from live runs — see DESIGN.md §5 for the
+//! experiment-to-artifact index.
+
+pub mod experiments;
+
+pub use experiments::{run_e1, run_e2, run_e3, run_e4, HarnessConfig};

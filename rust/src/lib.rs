@@ -1,0 +1,37 @@
+//! EAGLE-Pangu: accelerator-safe tree speculative decoding.
+//!
+//! Rust reproduction of "EAGLE-Pangu: Accelerator-Safe Tree Speculative
+//! Decoding on Ascend NPUs" (Han, Hu, Liu, 2026). This crate is the L3
+//! coordinator of a three-layer stack:
+//!
+//! * **L1** — a Pallas fused tree-attention kernel (build-time python,
+//!   `python/compile/kernels/`), the stand-in for the Ascend fused kernel;
+//! * **L2** — TinyPangu teacher + TinyEagle draft JAX models AOT-lowered to
+//!   HLO text (`python/compile/`, `make artifacts`);
+//! * **L3** — this crate: the paper's system contribution. It owns the
+//!   branchable KV-cache manager ([`cache`]), accelerator-safe tree
+//!   tensorization ([`tree`]), the speculative decode engine ([`spec`]),
+//!   the serving coordinator ([`coordinator`]), plus every substrate the
+//!   paper depends on (workload generation, tracing, metrics, a JSON
+//!   codec, a CLI, and a property-testing harness — the image has no
+//!   tokio/serde/clap/criterion, so these are built in-repo).
+//!
+//! Python never runs on the request path: after `make artifacts`, the rust
+//! binary is self-contained, loading `artifacts/*.hlo.txt` through the PJRT
+//! CPU client ([`runtime`]).
+
+pub mod backend;
+pub mod cache;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod engine;
+pub mod harness;
+pub mod json;
+pub mod metrics;
+pub mod runtime;
+pub mod spec;
+pub mod trace;
+pub mod tree;
+pub mod util;
+pub mod workload;

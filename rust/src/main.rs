@@ -1,0 +1,3 @@
+fn main() -> anyhow::Result<()> {
+    eagle_pangu::cli::main_entry()
+}

@@ -1,0 +1,6 @@
+//! Metric aggregation: turns paired baseline/EA trace records into the
+//! paper's tables and figure series (Table 1-3, Fig 1-4, Fig 5-7 inputs).
+
+pub mod report;
+
+pub use report::{pair_turns, ThroughputReport};

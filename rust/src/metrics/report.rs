@@ -1,0 +1,244 @@
+//! Throughput/acceptance report construction (paper Table 1 + Fig 2/3).
+
+use crate::json::Json;
+use crate::trace::TurnRecord;
+use crate::util::stats::{AcceptPos, Summary};
+use std::collections::BTreeMap;
+
+/// A matched baseline/EA pair for one turn.
+#[derive(Clone, Debug)]
+pub struct TurnPair {
+    pub key: (usize, usize),
+    pub baseline: TurnRecord,
+    pub ea: TurnRecord,
+}
+
+impl TurnPair {
+    pub fn speedup(&self) -> f64 {
+        if self.baseline.tok_s <= 0.0 {
+            0.0
+        } else {
+            self.ea.tok_s / self.baseline.tok_s
+        }
+    }
+}
+
+/// Pair `kind == "baseline"` with `kind == "ea"` records per (conv, turn).
+pub fn pair_turns(records: &[TurnRecord]) -> Vec<TurnPair> {
+    let mut base: BTreeMap<(usize, usize), &TurnRecord> = BTreeMap::new();
+    let mut ea: BTreeMap<(usize, usize), &TurnRecord> = BTreeMap::new();
+    for r in records {
+        let key = (r.conversation_id, r.turn_idx);
+        match r.kind.as_str() {
+            "baseline" => {
+                base.insert(key, r);
+            }
+            "ea" => {
+                ea.insert(key, r);
+            }
+            _ => {}
+        }
+    }
+    base.iter()
+        .filter_map(|(key, b)| {
+            ea.get(key).map(|e| TurnPair {
+                key: *key,
+                baseline: (*b).clone(),
+                ea: (*e).clone(),
+            })
+        })
+        .collect()
+}
+
+/// Table-1-shaped report.
+#[derive(Clone, Debug)]
+pub struct ThroughputReport {
+    pub turns: usize,
+    pub baseline_tok_s: Summary,
+    pub ea_tok_s: Summary,
+    pub speedup: Summary,
+    pub accept_l: Summary,
+    pub accept_pos: AcceptPos,
+}
+
+impl ThroughputReport {
+    pub fn from_pairs(pairs: &[TurnPair]) -> Self {
+        let b: Vec<f64> = pairs.iter().map(|p| p.baseline.tok_s).collect();
+        let e: Vec<f64> = pairs.iter().map(|p| p.ea.tok_s).collect();
+        let s: Vec<f64> = pairs.iter().map(TurnPair::speedup).collect();
+        // accept_L flattened across all EA verification steps (paper Table 1)
+        let mut al: Vec<f64> = Vec::new();
+        let mut pos = AcceptPos::default();
+        for p in pairs {
+            al.extend(p.ea.accept_lens.iter().map(|x| *x as f64));
+            pos.merge(&AcceptPos {
+                offered: p.ea.accept_offered.clone(),
+                accepted: p.ea.accept_accepted.clone(),
+            });
+        }
+        Self {
+            turns: pairs.len(),
+            baseline_tok_s: Summary::from(&b),
+            ea_tok_s: Summary::from(&e),
+            speedup: Summary::from(&s),
+            accept_l: Summary::from(&al),
+            accept_pos: pos,
+        }
+    }
+
+    /// Render the paper's Table-1 layout.
+    pub fn table1(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "Table 1: throughput microbenchmark ({} turns)\n", self.turns));
+        out.push_str("| Metric          |     mean |      p50 |      p90 |      p99 |\n");
+        out.push_str("|-----------------|----------|----------|----------|----------|\n");
+        let row = |name: &str, s: &Summary| {
+            format!(
+                "| {:<15} | {:>8.2} | {:>8.2} | {:>8.2} | {:>8.2} |\n",
+                name, s.mean, s.p50, s.p90, s.p99
+            )
+        };
+        out.push_str(&row("Baseline Tok/s", &self.baseline_tok_s));
+        out.push_str(&row("EA Tok/s", &self.ea_tok_s));
+        out.push_str(&row("Speedup (x)", &self.speedup));
+        out.push_str(&row("accept_L (L_k)", &self.accept_l));
+        out
+    }
+
+    pub fn to_json(&self) -> Json {
+        let summary = |s: &Summary| {
+            let mut o = Json::obj();
+            o.push("mean", s.mean).push("p50", s.p50).push("p90", s.p90).push("p99", s.p99);
+            o
+        };
+        let mut o = Json::obj();
+        o.push("turns", self.turns)
+            .push("baseline_tok_s", summary(&self.baseline_tok_s))
+            .push("ea_tok_s", summary(&self.ea_tok_s))
+            .push("speedup", summary(&self.speedup))
+            .push("accept_l", summary(&self.accept_l))
+            .push("accept_pos", Json::from_f64_slice(&self.accept_pos.rates()));
+        o
+    }
+}
+
+/// Fig-2b series: per-turn (mean L_k, speedup) pairs as CSV.
+pub fn speedup_vs_lk_csv(pairs: &[TurnPair]) -> String {
+    let mut out = String::from("conversation_id,turn_idx,mean_lk,speedup\n");
+    for p in pairs {
+        out.push_str(&format!(
+            "{},{},{:.4},{:.4}\n",
+            p.key.0,
+            p.key.1,
+            p.ea.mean_accept(),
+            p.speedup()
+        ));
+    }
+    out
+}
+
+/// Fig-2a series: speedup histogram as CSV (bucket, count).
+pub fn speedup_hist_csv(pairs: &[TurnPair]) -> String {
+    let mut buckets: BTreeMap<i64, u64> = BTreeMap::new();
+    for p in pairs {
+        let b = (p.speedup() / 0.1).floor() as i64;
+        *buckets.entry(b).or_insert(0) += 1;
+    }
+    let mut out = String::from("speedup_bucket_low,count\n");
+    for (b, c) in buckets {
+        out.push_str(&format!("{:.1},{}\n", b as f64 * 0.1, c));
+    }
+    out
+}
+
+/// Fig-3 series: position-wise acceptance rates as CSV.
+pub fn accept_pos_csv(report: &ThroughputReport) -> String {
+    let mut out = String::from("draft_position,accept_rate,offered\n");
+    for (i, r) in report.accept_pos.rates().iter().enumerate() {
+        out.push_str(&format!("{},{:.4},{}\n", i + 1, r, report.accept_pos.offered[i]));
+    }
+    out
+}
+
+/// Fig-1 series: prompt/output length distributions as CSV.
+pub fn lengths_csv(records: &[TurnRecord]) -> String {
+    let mut out = String::from("kind,conversation_id,turn_idx,prompt_len,output_len\n");
+    for r in records {
+        out.push_str(&format!(
+            "{},{},{},{},{}\n",
+            r.kind, r.conversation_id, r.turn_idx, r.prompt_len, r.output_len
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::BTreeMap as Map;
+
+    fn rec(conv: usize, kind: &str, tok_s: f64, accepts: Vec<usize>) -> TurnRecord {
+        TurnRecord {
+            conversation_id: conv,
+            turn_idx: 0,
+            rank: 0,
+            profile: "code".into(),
+            kind: kind.into(),
+            prompt_len: 10,
+            output_len: 20,
+            wall_secs: 20.0 / tok_s,
+            tok_s,
+            teacher_calls: 10,
+            draft_calls: 20,
+            rounds: 10,
+            accept_lens: accepts.clone(),
+            accept_offered: vec![accepts.len() as u64; 3],
+            accept_accepted: vec![accepts.iter().filter(|a| **a >= 1).count() as u64, 0, 0],
+            stage_seconds: Map::new(),
+            attn_buckets: vec![],
+        }
+    }
+
+    #[test]
+    fn pairing_and_speedup() {
+        let records = vec![
+            rec(0, "baseline", 10.0, vec![]),
+            rec(0, "ea", 15.0, vec![2, 3]),
+            rec(1, "baseline", 10.0, vec![]),
+            rec(1, "ea", 20.0, vec![4]),
+            rec(2, "ea", 99.0, vec![]), // unmatched — dropped
+        ];
+        let pairs = pair_turns(&records);
+        assert_eq!(pairs.len(), 2);
+        assert!((pairs[0].speedup() - 1.5).abs() < 1e-12);
+        let rep = ThroughputReport::from_pairs(&pairs);
+        assert_eq!(rep.turns, 2);
+        assert!((rep.speedup.mean - 1.75).abs() < 1e-12);
+        assert!((rep.accept_l.mean - 3.0).abs() < 1e-12);
+        let t = rep.table1();
+        assert!(t.contains("Baseline Tok/s") && t.contains("Speedup"));
+    }
+
+    #[test]
+    fn csv_outputs_have_headers_and_rows() {
+        let records =
+            vec![rec(0, "baseline", 10.0, vec![]), rec(0, "ea", 12.0, vec![1])];
+        let pairs = pair_turns(&records);
+        let rep = ThroughputReport::from_pairs(&pairs);
+        assert!(speedup_vs_lk_csv(&pairs).lines().count() == 2);
+        assert!(speedup_hist_csv(&pairs).starts_with("speedup_bucket_low"));
+        assert!(accept_pos_csv(&rep).lines().count() >= 2);
+        assert!(lengths_csv(&records).lines().count() == 3);
+    }
+
+    #[test]
+    fn report_json_shape() {
+        let records =
+            vec![rec(0, "baseline", 10.0, vec![]), rec(0, "ea", 12.0, vec![1])];
+        let rep = ThroughputReport::from_pairs(&pair_turns(&records));
+        let j = rep.to_json();
+        assert!(j.at("speedup.mean").is_some());
+        assert!(j.get("accept_pos").is_some());
+    }
+}

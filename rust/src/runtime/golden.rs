@@ -1,0 +1,169 @@
+//! Golden-fixture verification: regenerate the procedural inputs that
+//! `python/compile/aot.py` used (same splitmix64 stream, bit-for-bit) and
+//! compare the rust-side PJRT execution against the python-recorded
+//! outputs. This is the cross-language integration signal: if literal
+//! layout, input ordering, mask convention or the HLO round-trip drifts,
+//! these checks fail loudly.
+
+use crate::backend::{KvView, ModelBackend, StepArgs};
+use crate::config::contract::NEG_INF;
+use crate::config::{Contract, ExecMode};
+use crate::json::Json;
+use crate::util::SplitMix64;
+use anyhow::{bail, Context, Result};
+
+pub const GOLDEN_S: usize = 8;
+pub const GOLDEN_PREFIX: usize = 16;
+pub const GOLDEN_SEED: u64 = 0x5EED;
+
+/// Procedurally generated golden inputs (parity with `aot.py::golden_inputs`).
+pub struct GoldenInputs {
+    pub tokens: Vec<i32>,
+    pub feats: Option<Vec<f32>>,
+    pub positions: Vec<i32>,
+    pub mask: Vec<f32>,
+    pub k_cache: Vec<f32>,
+    pub v_cache: Vec<f32>,
+}
+
+pub fn golden_inputs(contract: &Contract, role: &str) -> GoldenInputs {
+    let mut st = SplitMix64::new(GOLDEN_SEED);
+    let (s, t) = (GOLDEN_S, GOLDEN_PREFIX);
+    let d = if role == "teacher" { contract.teacher } else { contract.draft };
+    let cap = contract.cache_cap;
+    let tokens: Vec<i32> =
+        (0..s).map(|_| 2 + (st.next_u64() % (contract.vocab as u64 - 2)) as i32).collect();
+    let n = d.cache_elems(cap);
+    let k_cache: Vec<f32> = (0..n).map(|_| st.f32_pm1()).collect();
+    let v_cache: Vec<f32> = (0..n).map(|_| st.f32_pm1()).collect();
+    let feats = if role == "draft" {
+        Some((0..s * contract.feat_dim).map(|_| st.f32_pm1()).collect())
+    } else {
+        None
+    };
+    let positions: Vec<i32> = (0..s).map(|i| (t + i) as i32).collect();
+    let w = cap + s;
+    let mut mask = vec![NEG_INF; s * w];
+    for i in 0..s {
+        mask[i * w..i * w + t].fill(0.0);
+        for j in 0..=i {
+            mask[i * w + cap + j] = 0.0;
+        }
+    }
+    GoldenInputs { tokens, feats, positions, mask, k_cache, v_cache }
+}
+
+/// One golden record from artifacts/golden.json.
+#[derive(Debug)]
+pub struct GoldenRecord {
+    pub module: String,
+    pub logits_sample: Vec<f64>,
+    pub logits_sum: f64,
+    pub logits_argmax_row0: usize,
+    pub feats_sum: f64,
+    pub k_new_sum: f64,
+}
+
+pub fn load_goldens(dir: &std::path::Path) -> Result<Vec<GoldenRecord>> {
+    let text = std::fs::read_to_string(dir.join("golden.json")).context("reading golden.json")?;
+    let v = crate::json::parse(&text).map_err(|e| anyhow::anyhow!("golden.json: {e}"))?;
+    let arr = v.as_arr().context("golden.json not an array")?;
+    arr.iter()
+        .map(|g| {
+            Ok(GoldenRecord {
+                module: g.get("module").and_then(Json::as_str).context("module")?.to_string(),
+                logits_sample: g
+                    .get("logits_sample")
+                    .and_then(Json::as_arr)
+                    .context("logits_sample")?
+                    .iter()
+                    .filter_map(Json::as_f64)
+                    .collect(),
+                logits_sum: g.get("logits_sum").and_then(Json::as_f64).context("logits_sum")?,
+                logits_argmax_row0: g
+                    .get("logits_argmax_row0")
+                    .and_then(Json::as_usize)
+                    .context("argmax")?,
+                feats_sum: g.get("feats_sum").and_then(Json::as_f64).context("feats_sum")?,
+                k_new_sum: g.get("k_new_sum").and_then(Json::as_f64).context("k_new_sum")?,
+            })
+        })
+        .collect()
+}
+
+/// Run one golden record against the backend; error on mismatch.
+pub fn verify_golden(backend: &mut dyn ModelBackend, rec: &GoldenRecord) -> Result<()> {
+    let contract = backend.contract().clone();
+    let (role, mode) = match rec.module.as_str() {
+        "teacher_fused_s8" => ("teacher", ExecMode::Fused),
+        "teacher_eager_s8" => ("teacher", ExecMode::Eager),
+        "draft_s8" => ("draft", ExecMode::Fused),
+        other => bail!("unknown golden module {other}"),
+    };
+    let gi = golden_inputs(&contract, role);
+    let args = StepArgs {
+        tokens: &gi.tokens,
+        positions: &gi.positions,
+        mask: &gi.mask,
+        kv: KvView { k: &gi.k_cache, v: &gi.v_cache },
+        feats_in: gi.feats.as_deref(),
+        probe: false,
+    };
+    let out = if role == "teacher" {
+        backend.teacher_step(mode, args)?
+    } else {
+        backend.draft_step(args)?
+    };
+    let close = |a: f64, b: f64, tol: f64, what: &str| -> Result<()> {
+        // relative-ish tolerance: sums accumulate over thousands of f32 ops
+        if (a - b).abs() > tol * (1.0 + b.abs()) {
+            bail!("{}: {what} mismatch: rust {a} vs python {b}", rec.module);
+        }
+        Ok(())
+    };
+    for (i, expect) in rec.logits_sample.iter().enumerate() {
+        close(out.logits[i] as f64, *expect, 2e-4, &format!("logits_sample[{i}]"))?;
+    }
+    let lsum: f64 = out.logits.iter().map(|x| *x as f64).sum();
+    close(lsum, rec.logits_sum, 1e-3, "logits_sum")?;
+    let fsum: f64 = out.feats.iter().map(|x| *x as f64).sum();
+    close(fsum, rec.feats_sum, 1e-3, "feats_sum")?;
+    let ksum: f64 = out.k_new.iter().map(|x| *x as f64).sum();
+    close(ksum, rec.k_new_sum, 1e-3, "k_new_sum")?;
+    let am = crate::backend::argmax(out.logits_row(0, contract.vocab));
+    if am != rec.logits_argmax_row0 {
+        bail!("{}: argmax row0 {am} vs python {}", rec.module, rec.logits_argmax_row0);
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn golden_inputs_are_deterministic_and_shaped() {
+        let c = Contract::default();
+        let a = golden_inputs(&c, "teacher");
+        let b = golden_inputs(&c, "teacher");
+        assert_eq!(a.tokens, b.tokens);
+        assert_eq!(a.k_cache.len(), c.teacher.cache_elems(c.cache_cap));
+        assert_eq!(a.mask.len(), GOLDEN_S * (c.cache_cap + GOLDEN_S));
+        assert!(a.feats.is_none());
+        let d = golden_inputs(&c, "draft");
+        assert_eq!(d.feats.as_ref().unwrap().len(), GOLDEN_S * c.feat_dim);
+        assert!(a.tokens.iter().all(|t| (2..512).contains(t)));
+    }
+
+    #[test]
+    fn mask_is_prefix_plus_causal() {
+        let c = Contract::default();
+        let g = golden_inputs(&c, "teacher");
+        let w = c.cache_cap + GOLDEN_S;
+        assert_eq!(g.mask[0], 0.0);
+        assert_eq!(g.mask[GOLDEN_PREFIX], NEG_INF);
+        assert_eq!(g.mask[c.cache_cap], 0.0); // self
+        assert_eq!(g.mask[c.cache_cap + 1], NEG_INF);
+        assert_eq!(g.mask[w + c.cache_cap + 1], 0.0); // row 1 sees slot 1
+    }
+}

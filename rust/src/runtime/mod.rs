@@ -1,0 +1,15 @@
+//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt`) through
+//! the `xla` crate's PJRT CPU client and exposes them as a
+//! [`crate::backend::ModelBackend`].
+//!
+//! HLO **text** is the interchange format: jax >= 0.5 emits protos with
+//! 64-bit instruction ids which xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see `python/compile/aot.py`). Executables are
+//! compiled lazily per (role, mode, S) variant and cached for the process
+//! lifetime. PJRT handles are !Send — each coordinator worker owns its own
+//! backend instance.
+
+pub mod golden;
+pub mod pjrt;
+
+pub use pjrt::PjrtBackend;

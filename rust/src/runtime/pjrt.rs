@@ -1,0 +1,215 @@
+//! The production backend: artifact registry + PJRT execution.
+
+use crate::backend::{ModelBackend, StepArgs, StepOut};
+use crate::config::{Contract, ExecMode};
+use crate::json;
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+/// Statistics about artifact loading / execution (surfaced in manifests
+/// and the §Perf logs).
+#[derive(Clone, Debug, Default)]
+pub struct RuntimeStats {
+    pub compiles: u64,
+    pub compile_secs: f64,
+    pub executions: u64,
+    pub execute_secs: f64,
+    /// Host->device bytes shipped as literals (per-call tensors).
+    pub upload_bytes: u64,
+}
+
+pub struct PjrtBackend {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    contract: Contract,
+    exes: HashMap<String, xla::PjRtLoadedExecutable>,
+    pub stats: RuntimeStats,
+    /// Probe-capable draft variants present in the artifact set.
+    probe_variants: Vec<usize>,
+}
+
+impl PjrtBackend {
+    /// Open an artifact directory: parse + validate the manifest, create
+    /// the PJRT CPU client. Executables compile lazily on first use.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {manifest_path:?} — run `make artifacts` first"))?;
+        let manifest = json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("parsing {manifest_path:?}: {e}"))?;
+        let contract = Contract::from_manifest(&manifest)?;
+        let probe_variants = manifest
+            .get("artifacts")
+            .and_then(json::Json::as_arr)
+            .map(|arts| {
+                arts.iter()
+                    .filter_map(|a| a.get("name").and_then(json::Json::as_str))
+                    .filter_map(|n| n.strip_prefix("draft_probe_s").and_then(|s| s.parse().ok()))
+                    .collect()
+            })
+            .unwrap_or_default();
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self {
+            client,
+            dir,
+            contract,
+            exes: HashMap::new(),
+            stats: RuntimeStats::default(),
+            probe_variants,
+        })
+    }
+
+    pub fn artifact_dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Lazily compile a module by artifact name (e.g. `teacher_fused_s16`).
+    fn exe(&mut self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.exes.contains_key(name) {
+            let path = self.dir.join(format!("{name}.hlo.txt"));
+            let t0 = Instant::now();
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("artifact path not utf-8")?,
+            )
+            .map_err(|e| anyhow::anyhow!("parsing {path:?}: {e:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow::anyhow!("compiling {name}: {e:?}"))?;
+            self.stats.compiles += 1;
+            self.stats.compile_secs += t0.elapsed().as_secs_f64();
+            self.exes.insert(name.to_string(), exe);
+        }
+        Ok(&self.exes[name])
+    }
+
+    /// Pre-compile the variants a run will need (avoids first-call jitter
+    /// in timed benchmarks).
+    pub fn warmup(&mut self, mode: ExecMode, teacher_s: &[usize], draft_s: &[usize]) -> Result<()> {
+        for s in teacher_s {
+            self.exe(&format!("teacher_{}_s{s}", mode.as_str()))?;
+        }
+        for s in draft_s {
+            self.exe(&format!("draft_s{s}"))?;
+        }
+        Ok(())
+    }
+
+    /// Upload one host tensor as an owned device buffer.
+    ///
+    /// NOTE: we deliberately avoid `PjRtLoadedExecutable::execute` (the
+    /// literal-taking variant): its C shim converts every input literal to
+    /// a device buffer with `.release()` and never frees it — a ~4 MB/call
+    /// leak that OOM-killed early end-to-end runs. `buffer_from_host_buffer`
+    /// returns a `PjRtBuffer` whose Drop does free, and `execute_b` borrows.
+    fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .map_err(|e| anyhow::anyhow!("uploading f32 {dims:?}: {e:?}"))
+    }
+
+    fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .map_err(|e| anyhow::anyhow!("uploading i32 {dims:?}: {e:?}"))
+    }
+
+    fn run_module(
+        &mut self,
+        name: &str,
+        inputs: &[xla::PjRtBuffer],
+        upload_bytes: u64,
+        want_probe: bool,
+    ) -> Result<StepOut> {
+        let s_probe = want_probe; // tuple arity changes with probe outputs
+        let t0 = Instant::now();
+        let exe = self.exe(name)?;
+        let result = exe
+            .execute_b::<&xla::PjRtBuffer>(&inputs.iter().collect::<Vec<_>>())
+            .map_err(|e| anyhow::anyhow!("executing {name}: {e:?}"))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetching {name} outputs: {e:?}"))?;
+        let mut parts = tuple
+            .to_tuple()
+            .map_err(|e| anyhow::anyhow!("untupling {name} outputs: {e:?}"))?;
+        let expect = if s_probe { 5 } else { 4 };
+        if parts.len() != expect {
+            bail!("{name}: expected {expect} outputs, got {}", parts.len());
+        }
+        let attn_top1 = if s_probe {
+            let l = parts.pop().unwrap();
+            Some(l.to_vec::<i32>().map_err(|e| anyhow::anyhow!("attn_top1: {e:?}"))?)
+        } else {
+            None
+        };
+        let v_new = parts.pop().unwrap().to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e:?}"))?;
+        let k_new = parts.pop().unwrap().to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e:?}"))?;
+        let feats = parts.pop().unwrap().to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e:?}"))?;
+        let logits = parts.pop().unwrap().to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e:?}"))?;
+        let s = logits.len() / self.contract.vocab;
+        self.stats.executions += 1;
+        self.stats.execute_secs += t0.elapsed().as_secs_f64();
+        self.stats.upload_bytes += upload_bytes;
+        Ok(StepOut { s, logits, feats, k_new, v_new, attn_top1 })
+    }
+}
+
+impl ModelBackend for PjrtBackend {
+    fn contract(&self) -> &Contract {
+        &self.contract
+    }
+
+    fn teacher_step(&mut self, mode: ExecMode, args: StepArgs) -> Result<StepOut> {
+        let s = args.tokens.len();
+        if !self.contract.teacher_s.contains(&s) {
+            bail!("teacher_step: {s} is not a compiled S variant");
+        }
+        let d = self.contract.teacher;
+        let cap = self.contract.cache_cap;
+        let name = format!("teacher_{}_s{s}", mode.as_str());
+        let cache_dims = [d.layers, cap, d.heads, d.d_head];
+        let inputs = vec![
+            self.upload_i32(args.tokens, &[s])?,
+            self.upload_i32(args.positions, &[s])?,
+            self.upload_f32(args.mask, &[s, cap + s])?,
+            self.upload_f32(args.kv.k, &cache_dims)?,
+            self.upload_f32(args.kv.v, &cache_dims)?,
+        ];
+        let upload = (args.mask.len() + args.kv.k.len() + args.kv.v.len()) * 4 + s * 8;
+        self.run_module(&name, &inputs, upload as u64, false)
+    }
+
+    fn draft_step(&mut self, args: StepArgs) -> Result<StepOut> {
+        let s = args.tokens.len();
+        if !self.contract.draft_s.contains(&s) {
+            bail!("draft_step: {s} is not a compiled S variant");
+        }
+        let d = self.contract.draft;
+        let cap = self.contract.cache_cap;
+        let feats = args.feats_in.context("draft_step requires feats_in")?;
+        // probe variants exist only for a subset of S
+        let probe = args.probe && self.probe_variants.contains(&s);
+        let name = if probe { format!("draft_probe_s{s}") } else { format!("draft_s{s}") };
+        let cache_dims = [d.layers, cap, d.heads, d.d_head];
+        let inputs = vec![
+            self.upload_i32(args.tokens, &[s])?,
+            self.upload_f32(feats, &[s, self.contract.feat_dim])?,
+            self.upload_i32(args.positions, &[s])?,
+            self.upload_f32(args.mask, &[s, cap + s])?,
+            self.upload_f32(args.kv.k, &cache_dims)?,
+            self.upload_f32(args.kv.v, &cache_dims)?,
+        ];
+        let upload =
+            (args.mask.len() + args.kv.k.len() + args.kv.v.len() + feats.len()) * 4 + s * 8;
+        self.run_module(&name, &inputs, upload as u64, probe)
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt-cpu"
+    }
+}

@@ -1,0 +1,231 @@
+//! Tree acceptance rules.
+//!
+//! The verification call produced, for every tree slot, the teacher's
+//! next-token distribution *under that slot's ancestral context* (the tree
+//! mask guarantees this — paper §3.3 "context correctness"). Acceptance
+//! walks the tree from the root:
+//!
+//! * **greedy** (temperature = 0, all paper benchmarks): descend into the
+//!   child whose token equals the teacher argmax at the current slot;
+//!   stop otherwise. The committed sequence is therefore *identical* to
+//!   teacher-only greedy decoding — speculation changes wall-clock, never
+//!   output (asserted by engine tests).
+//! * **stochastic**: sample from the teacher softmax at the current slot;
+//!   descend if the sample matches a child. Because every committed token
+//!   is an exact teacher-distribution sample given its prefix, the output
+//!   marginal matches ancestral teacher sampling (the lossless property
+//!   of [1]'s scheme specialized to sampled-token matching).
+//!
+//! Both rules return the *bonus* token — the teacher's own prediction at
+//! the deepest accepted slot — which is committed "for free" each round.
+
+use crate::backend::argmax;
+use crate::tree::SpecTree;
+use crate::util::SplitMix64;
+
+/// Result of an acceptance walk.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Acceptance {
+    /// Accepted tree slots in root-to-leaf order (excluding the root).
+    pub path: Vec<usize>,
+    /// The teacher's next token at the deepest accepted slot.
+    pub bonus_token: i32,
+    /// Slot whose logits predicted the bonus (root if nothing accepted).
+    pub bonus_slot: usize,
+    /// Number of walk steps where the tree *offered* candidates
+    /// (denominator for the Fig-3 position-wise acceptance curve).
+    pub offered: usize,
+}
+
+impl Acceptance {
+    /// accept_L: number of accepted draft tokens (paper Table 1).
+    pub fn accept_len(&self) -> usize {
+        self.path.len()
+    }
+}
+
+/// Greedy acceptance (temperature = 0).
+///
+/// `logits_of(slot)` returns the teacher logits row for a tree slot.
+pub fn greedy_walk(tree: &SpecTree, logits_of: &dyn Fn(usize) -> Vec<f32>) -> Acceptance {
+    let mut cur = 0usize;
+    let mut path = Vec::new();
+    let mut offered = 0usize;
+    loop {
+        let teacher_tok = argmax(&logits_of(cur)) as i32;
+        let children: Vec<usize> = tree.children(cur).collect();
+        if children.is_empty() {
+            return Acceptance { path, bonus_token: teacher_tok, bonus_slot: cur, offered };
+        }
+        offered += 1;
+        match children.iter().find(|c| tree.slots()[**c].token == teacher_tok) {
+            Some(&hit) => {
+                path.push(hit);
+                cur = hit;
+            }
+            None => {
+                return Acceptance { path, bonus_token: teacher_tok, bonus_slot: cur, offered };
+            }
+        }
+    }
+}
+
+/// Stochastic acceptance: at each slot, sample from the teacher softmax
+/// (with `temperature`); accept a child iff the sample equals its token.
+pub fn stochastic_walk(
+    tree: &SpecTree,
+    logits_of: &dyn Fn(usize) -> Vec<f32>,
+    temperature: f64,
+    rng: &mut SplitMix64,
+) -> Acceptance {
+    let temp = temperature.max(1e-6);
+    let mut cur = 0usize;
+    let mut path = Vec::new();
+    let mut offered = 0usize;
+    loop {
+        let row = logits_of(cur);
+        let sampled = sample_softmax(&row, temp, rng) as i32;
+        let children: Vec<usize> = tree.children(cur).collect();
+        if children.is_empty() {
+            return Acceptance { path, bonus_token: sampled, bonus_slot: cur, offered };
+        }
+        offered += 1;
+        match children.iter().find(|c| tree.slots()[**c].token == sampled) {
+            Some(&hit) => {
+                path.push(hit);
+                cur = hit;
+            }
+            None => {
+                return Acceptance { path, bonus_token: sampled, bonus_slot: cur, offered };
+            }
+        }
+    }
+}
+
+/// Sample an index from softmax(logits / temp).
+pub fn sample_softmax(row: &[f32], temp: f64, rng: &mut SplitMix64) -> usize {
+    let mx = row.iter().fold(f32::NEG_INFINITY, |a, b| a.max(*b)) as f64;
+    let weights: Vec<f64> = row.iter().map(|x| ((*x as f64 - mx) / temp).exp()).collect();
+    rng.weighted(&weights)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    /// Tree: root -> a(5) -> b(7); root -> c(9).
+    fn tree() -> SpecTree {
+        let mut t = SpecTree::with_root(1);
+        let a = t.add_child(0, 5, -0.1);
+        t.add_child(0, 9, -0.9);
+        t.add_child(a, 7, -0.2);
+        t
+    }
+
+    fn const_logits(winner: &'static [i32]) -> impl Fn(usize) -> Vec<f32> {
+        move |slot| {
+            let mut row = vec![0.0f32; 16];
+            row[winner[slot] as usize] = 10.0;
+            row
+        }
+    }
+
+    #[test]
+    fn greedy_accepts_full_chain() {
+        // teacher at root predicts 5, at a predicts 7, at b predicts 3
+        let walk = greedy_walk(&tree(), &const_logits(&[5, 7, 0, 3]));
+        assert_eq!(walk.path, vec![1, 3]);
+        assert_eq!(walk.bonus_token, 3);
+        assert_eq!(walk.bonus_slot, 3);
+        assert_eq!(walk.offered, 2);
+        assert_eq!(walk.accept_len(), 2);
+    }
+
+    #[test]
+    fn greedy_stops_on_mismatch_with_bonus() {
+        // teacher at root predicts 9 (sibling branch), at c predicts 2
+        let walk = greedy_walk(&tree(), &const_logits(&[9, 0, 2, 0]));
+        assert_eq!(walk.path, vec![2]);
+        assert_eq!(walk.bonus_token, 2);
+        assert_eq!(walk.offered, 1); // only the root had candidates (c is a leaf)
+    }
+
+    #[test]
+    fn greedy_rejects_everything_cleanly() {
+        let walk = greedy_walk(&tree(), &const_logits(&[4, 0, 0, 0]));
+        assert!(walk.path.is_empty());
+        assert_eq!(walk.bonus_token, 4);
+        assert_eq!(walk.bonus_slot, 0);
+        assert_eq!(walk.offered, 1);
+    }
+
+    #[test]
+    fn stochastic_low_temp_equals_greedy() {
+        let logits = const_logits(&[5, 7, 0, 3]);
+        let mut rng = SplitMix64::new(1);
+        let s = stochastic_walk(&tree(), &logits, 1e-6, &mut rng);
+        let g = greedy_walk(&tree(), &logits);
+        assert_eq!(s.path, g.path);
+        assert_eq!(s.bonus_token, g.bonus_token);
+    }
+
+    #[test]
+    fn stochastic_matches_softmax_marginals_at_root() {
+        // Root logits put ~73%/27% on tokens 5 and 9; acceptance of child
+        // `a` should track the softmax probability of token 5.
+        let logits = |_slot: usize| {
+            let mut row = vec![-30.0f32; 16];
+            row[5] = 1.0;
+            row[9] = 0.0;
+            row
+        };
+        let mut rng = SplitMix64::new(7);
+        let n = 4000;
+        let mut hits = 0;
+        for _ in 0..n {
+            let w = stochastic_walk(&tree(), &logits, 1.0, &mut rng);
+            if w.path.first() == Some(&1) {
+                hits += 1;
+            }
+        }
+        let p = hits as f64 / n as f64;
+        let expect = (1.0f64).exp() / ((1.0f64).exp() + 1.0);
+        assert!((p - expect).abs() < 0.03, "p = {p}, expect {expect}");
+    }
+
+    #[test]
+    fn property_path_is_always_a_valid_chain() {
+        prop::for_cases(100, 0xACCE, |g| {
+            // random tree + random teacher predictions
+            let mut t = SpecTree::with_root(1);
+            let mut frontier = vec![0usize];
+            for _ in 0..g.usize_in(1, 12) {
+                let mut next = Vec::new();
+                for &p in &frontier.clone() {
+                    for _ in 0..g.usize_in(0, 3) {
+                        next.push(t.add_child(p, g.usize_in(2, 14) as i32, 0.0));
+                    }
+                }
+                if next.is_empty() {
+                    break;
+                }
+                frontier = next;
+            }
+            let preds: Vec<i32> =
+                (0..t.num_slots()).map(|_| g.usize_in(2, 14) as i32).collect();
+            let walk = greedy_walk(&t, &move |s| {
+                let mut row = vec![0.0f32; 16];
+                row[preds[s] as usize] = 1.0;
+                row
+            });
+            // path must be a parent-linked chain starting under the root
+            let mut cur = 0usize;
+            for &s in &walk.path {
+                assert_eq!(t.slots()[s].parent, cur);
+                cur = s;
+            }
+            assert_eq!(walk.bonus_slot, cur);
+        });
+    }
+}

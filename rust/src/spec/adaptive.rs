@@ -1,0 +1,139 @@
+//! Adaptive tree-budget policy.
+//!
+//! The paper's E2 takeaway: "tree speculation has a configuration-
+//! dependent sweet spot; lightweight budget sweeps **or adaptive
+//! policies** are necessary for stable performance in deployment", and
+//! its conclusion lists adaptive branching policies as future work. This
+//! module implements that policy: a multiplicative-increase /
+//! multiplicative-decrease controller on the node budget M driven by the
+//! recent *budget utilization* (accepted draft tokens per offered node).
+//!
+//! Rationale from the E2 economics: the marginal verification cost grows
+//! with the padded S variant while the marginal benefit is the extra
+//! acceptance probability at deeper/wider positions. When recent rounds
+//! accept a large fraction of the offered budget, a larger tree likely
+//! pays for itself; when acceptance is sparse, a smaller tree cuts
+//! mask/tensorize/verify overhead without losing accepted tokens.
+
+use std::collections::VecDeque;
+
+#[derive(Clone, Debug)]
+pub struct AdaptiveBudget {
+    pub min_budget: usize,
+    pub max_budget: usize,
+    /// Utilization above this doubles the budget.
+    pub grow_at: f64,
+    /// Utilization below this halves the budget.
+    pub shrink_at: f64,
+    /// Rounds averaged per decision.
+    pub window: usize,
+    current: usize,
+    history: VecDeque<(usize, usize)>, // (accept_len, budget_offered)
+}
+
+impl AdaptiveBudget {
+    pub fn new(initial: usize, min_budget: usize, max_budget: usize) -> Self {
+        Self {
+            min_budget,
+            max_budget,
+            grow_at: 0.22,
+            shrink_at: 0.06,
+            window: 8,
+            current: initial.clamp(min_budget, max_budget),
+            history: VecDeque::new(),
+        }
+    }
+
+    /// Budget to use for the next round.
+    pub fn budget(&self) -> usize {
+        self.current
+    }
+
+    /// Record a round's outcome and possibly adapt.
+    pub fn observe(&mut self, accept_len: usize, budget_offered: usize) {
+        self.history.push_back((accept_len, budget_offered));
+        if self.history.len() < self.window {
+            return;
+        }
+        while self.history.len() > self.window {
+            self.history.pop_front();
+        }
+        let (acc, off): (usize, usize) = self
+            .history
+            .iter()
+            .fold((0, 0), |(a, o), (ai, oi)| (a + ai, o + oi));
+        if off == 0 {
+            return;
+        }
+        let utilization = acc as f64 / off as f64;
+        let next = if utilization > self.grow_at {
+            (self.current * 2).min(self.max_budget)
+        } else if utilization < self.shrink_at {
+            (self.current / 2).max(self.min_budget)
+        } else {
+            self.current
+        };
+        if next != self.current {
+            self.current = next;
+            self.history.clear(); // fresh evidence at the new operating point
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grows_under_high_utilization() {
+        let mut a = AdaptiveBudget::new(8, 4, 64);
+        for _ in 0..16 {
+            a.observe(4, a.budget()); // 50% utilization at M=8
+        }
+        assert!(a.budget() > 8, "should grow: {}", a.budget());
+        assert!(a.budget() <= 64);
+    }
+
+    #[test]
+    fn shrinks_under_sparse_acceptance() {
+        let mut a = AdaptiveBudget::new(64, 4, 64);
+        for _ in 0..32 {
+            a.observe(0, a.budget());
+        }
+        assert_eq!(a.budget(), 4);
+    }
+
+    #[test]
+    fn stable_in_the_dead_band() {
+        let mut a = AdaptiveBudget::new(16, 4, 64);
+        for _ in 0..32 {
+            a.observe(2, 16); // 12.5% — between shrink_at and grow_at
+        }
+        assert_eq!(a.budget(), 16);
+    }
+
+    #[test]
+    fn respects_bounds() {
+        let mut a = AdaptiveBudget::new(64, 4, 64);
+        for _ in 0..64 {
+            a.observe(40, a.budget());
+        }
+        assert_eq!(a.budget(), 64);
+        let mut b = AdaptiveBudget::new(4, 4, 64);
+        for _ in 0..64 {
+            b.observe(0, b.budget());
+        }
+        assert_eq!(b.budget(), 4);
+    }
+
+    #[test]
+    fn decisions_wait_for_a_full_window() {
+        let mut a = AdaptiveBudget::new(16, 4, 64);
+        for _ in 0..7 {
+            a.observe(16, 16);
+        }
+        assert_eq!(a.budget(), 16, "no decision before the window fills");
+        a.observe(16, 16);
+        assert!(a.budget() > 16);
+    }
+}

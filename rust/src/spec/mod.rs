@@ -1,0 +1,14 @@
+//! Speculative-decoding policy: tree acceptance (paper §2.2/§2.3) and
+//! draft candidate selection (EAGLE-style dynamic tree growth).
+//!
+//! These are pure functions over [`crate::tree::SpecTree`] + logits
+//! accessors, so every decision rule is unit-testable without a backend;
+//! [`crate::engine`] wires them to real model calls.
+
+pub mod accept;
+pub mod adaptive;
+pub mod select;
+
+pub use accept::{greedy_walk, stochastic_walk, Acceptance};
+pub use adaptive::AdaptiveBudget;
+pub use select::{select_children, Candidate};

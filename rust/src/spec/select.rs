@@ -1,0 +1,112 @@
+//! Draft candidate selection — EAGLE-style dynamic tree growth.
+//!
+//! At each expansion depth the draft scored top-k continuations per
+//! frontier node; the global policy keeps the best candidates by
+//! *cumulative* draft log-probability, subject to the remaining node
+//! budget and the frontier cap (the largest compiled draft S variant).
+
+/// One scored child candidate.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Candidate {
+    /// Parent tree slot.
+    pub parent: usize,
+    pub token: i32,
+    /// Cumulative draft log-prob along the root path.
+    pub cum_logprob: f64,
+    /// Row index of the parent in the draft eval batch (for feature
+    /// chaining: the child's feats_in = parent's hidden row).
+    pub parent_row: usize,
+}
+
+/// Keep the globally best candidates: at most `budget` and at most
+/// `frontier_cap`, sorted by cumulative log-prob descending. Duplicate
+/// (parent, token) pairs are rejected (defense-in-depth: a draft should
+/// not propose them, but a malformed top-k must not corrupt the tree).
+pub fn select_children(
+    mut pool: Vec<Candidate>,
+    budget: usize,
+    frontier_cap: usize,
+) -> Vec<Candidate> {
+    pool.sort_by(|a, b| {
+        b.cum_logprob
+            .partial_cmp(&a.cum_logprob)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.parent.cmp(&b.parent))
+            .then(a.token.cmp(&b.token))
+    });
+    let mut out: Vec<Candidate> = Vec::new();
+    for c in pool {
+        if out.len() >= budget.min(frontier_cap) {
+            break;
+        }
+        if out.iter().any(|o| o.parent == c.parent && o.token == c.token) {
+            continue;
+        }
+        out.push(c);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    fn c(parent: usize, token: i32, lp: f64) -> Candidate {
+        Candidate { parent, token, cum_logprob: lp, parent_row: parent }
+    }
+
+    #[test]
+    fn keeps_best_by_cumulative_logprob() {
+        let sel = select_children(
+            vec![c(0, 5, -0.5), c(0, 6, -0.1), c(1, 7, -0.3)],
+            2,
+            16,
+        );
+        assert_eq!(sel.len(), 2);
+        assert_eq!(sel[0].token, 6);
+        assert_eq!(sel[1].token, 7);
+    }
+
+    #[test]
+    fn respects_frontier_cap() {
+        let pool = (0..10).map(|i| c(0, i as i32 + 2, -(i as f64))).collect();
+        let sel = select_children(pool, 100, 3);
+        assert_eq!(sel.len(), 3);
+    }
+
+    #[test]
+    fn rejects_duplicate_parent_token() {
+        let sel = select_children(
+            vec![c(0, 5, -0.1), c(0, 5, -0.2), c(0, 6, -0.3)],
+            8,
+            8,
+        );
+        assert_eq!(sel.len(), 2);
+    }
+
+    #[test]
+    fn deterministic_order_on_ties() {
+        let a = select_children(vec![c(1, 9, -0.5), c(0, 3, -0.5)], 2, 2);
+        let b = select_children(vec![c(0, 3, -0.5), c(1, 9, -0.5)], 2, 2);
+        assert_eq!(a, b);
+        assert_eq!(a[0].parent, 0);
+    }
+
+    #[test]
+    fn property_selection_sorted_and_bounded() {
+        prop::for_cases(100, 0x5E1E, |g| {
+            let n = g.usize_in(0, 40);
+            let pool: Vec<Candidate> = (0..n)
+                .map(|_| c(g.usize_in(0, 6), g.usize_in(2, 50) as i32, -(g.f32_pm1().abs() as f64)))
+                .collect();
+            let budget = g.usize_in(1, 20);
+            let cap = g.usize_in(1, 20);
+            let sel = select_children(pool, budget, cap);
+            assert!(sel.len() <= budget.min(cap));
+            for w in sel.windows(2) {
+                assert!(w[0].cum_logprob >= w[1].cum_logprob);
+            }
+        });
+    }
+}

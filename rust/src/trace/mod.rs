@@ -1,0 +1,8 @@
+//! Structured traces and debug artifacts (paper §4.3): run manifests,
+//! per-turn JSONL records, failure dumps, and the rank-0 merge (§4.4).
+
+pub mod record;
+pub mod writer;
+
+pub use record::TurnRecord;
+pub use writer::{merge_rank_files, FailureDump, TraceWriter};

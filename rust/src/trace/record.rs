@@ -1,0 +1,177 @@
+//! The per-turn trace record — the unit every experiment aggregates.
+//! Captures the execution-facing signals of paper §4.3: decoding config
+//! linkage, speculative-tree statistics, acceptance summaries and
+//! per-stage timing.
+
+use crate::engine::GenOut;
+use crate::json::Json;
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct TurnRecord {
+    pub conversation_id: usize,
+    pub turn_idx: usize,
+    pub rank: usize,
+    pub profile: String,
+    /// "baseline" or "ea".
+    pub kind: String,
+    pub prompt_len: usize,
+    pub output_len: usize,
+    pub wall_secs: f64,
+    pub tok_s: f64,
+    pub teacher_calls: u64,
+    pub draft_calls: u64,
+    pub rounds: u64,
+    pub accept_lens: Vec<usize>,
+    pub accept_offered: Vec<u64>,
+    pub accept_accepted: Vec<u64>,
+    pub stage_seconds: BTreeMap<String, f64>,
+    /// Fig-7 attention-distance bucket counts (probe runs; else empty).
+    pub attn_buckets: Vec<u64>,
+}
+
+impl TurnRecord {
+    pub fn from_gen(
+        conversation_id: usize,
+        turn_idx: usize,
+        rank: usize,
+        profile: &str,
+        kind: &str,
+        out: &GenOut,
+    ) -> Self {
+        Self {
+            conversation_id,
+            turn_idx,
+            rank,
+            profile: profile.to_string(),
+            kind: kind.to_string(),
+            prompt_len: out.prompt_len,
+            output_len: out.tokens.len(),
+            wall_secs: out.wall_secs,
+            tok_s: out.tok_per_sec(),
+            teacher_calls: out.teacher_calls,
+            draft_calls: out.draft_calls,
+            rounds: out.rounds,
+            accept_lens: out.accept_lens.clone(),
+            accept_offered: out.accept_pos.offered.clone(),
+            accept_accepted: out.accept_pos.accepted.clone(),
+            stage_seconds: out.timers.seconds.clone(),
+            attn_buckets: if out.attn_hist.total > 0 { out.attn_hist.counts.clone() } else { vec![] },
+        }
+    }
+
+    pub fn mean_accept(&self) -> f64 {
+        if self.accept_lens.is_empty() {
+            0.0
+        } else {
+            self.accept_lens.iter().sum::<usize>() as f64 / self.accept_lens.len() as f64
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.push("conversation_id", self.conversation_id)
+            .push("turn_idx", self.turn_idx)
+            .push("rank", self.rank)
+            .push("profile", self.profile.as_str())
+            .push("kind", self.kind.as_str())
+            .push("prompt_len", self.prompt_len)
+            .push("output_len", self.output_len)
+            .push("wall_secs", self.wall_secs)
+            .push("tok_s", self.tok_s)
+            .push("teacher_calls", self.teacher_calls)
+            .push("draft_calls", self.draft_calls)
+            .push("rounds", self.rounds)
+            .push("accept_lens",
+                  Json::Arr(self.accept_lens.iter().map(|a| Json::Num(*a as f64)).collect()))
+            .push("accept_offered", Json::from_u64_slice(&self.accept_offered))
+            .push("accept_accepted", Json::from_u64_slice(&self.accept_accepted))
+            .push("stage_seconds", Json::from_str_map(&self.stage_seconds))
+            .push("attn_buckets", Json::from_u64_slice(&self.attn_buckets));
+        o
+    }
+
+    pub fn from_json(j: &Json) -> Option<Self> {
+        let u = |k: &str| j.get(k).and_then(Json::as_usize);
+        let f = |k: &str| j.get(k).and_then(Json::as_f64);
+        let s = |k: &str| j.get(k).and_then(Json::as_str).map(str::to_string);
+        let arr_u64 = |k: &str| -> Vec<u64> {
+            j.get(k)
+                .and_then(Json::as_arr)
+                .map(|a| a.iter().filter_map(|x| x.as_f64().map(|v| v as u64)).collect())
+                .unwrap_or_default()
+        };
+        let stage_seconds = j
+            .get("stage_seconds")
+            .and_then(Json::as_obj)
+            .map(|pairs| {
+                pairs
+                    .iter()
+                    .filter_map(|(k, v)| v.as_f64().map(|x| (k.clone(), x)))
+                    .collect::<BTreeMap<_, _>>()
+            })
+            .unwrap_or_default();
+        Some(Self {
+            conversation_id: u("conversation_id")?,
+            turn_idx: u("turn_idx")?,
+            rank: u("rank")?,
+            profile: s("profile")?,
+            kind: s("kind")?,
+            prompt_len: u("prompt_len")?,
+            output_len: u("output_len")?,
+            wall_secs: f("wall_secs")?,
+            tok_s: f("tok_s")?,
+            teacher_calls: f("teacher_calls")? as u64,
+            draft_calls: f("draft_calls")? as u64,
+            rounds: f("rounds")? as u64,
+            accept_lens: arr_u64("accept_lens").into_iter().map(|x| x as usize).collect(),
+            accept_offered: arr_u64("accept_offered"),
+            accept_accepted: arr_u64("accept_accepted"),
+            stage_seconds,
+            attn_buckets: arr_u64("attn_buckets"),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::json;
+
+    fn sample() -> TurnRecord {
+        let mut stage = BTreeMap::new();
+        stage.insert("verify".into(), 1.25);
+        TurnRecord {
+            conversation_id: 3,
+            turn_idx: 1,
+            rank: 2,
+            profile: "chat".into(),
+            kind: "ea".into(),
+            prompt_len: 96,
+            output_len: 224,
+            wall_secs: 10.0,
+            tok_s: 22.4,
+            teacher_calls: 70,
+            draft_calls: 400,
+            rounds: 70,
+            accept_lens: vec![3, 2, 4],
+            accept_offered: vec![3, 3, 2],
+            accept_accepted: vec![3, 2, 1],
+            stage_seconds: stage,
+            attn_buckets: vec![1, 2, 3, 4],
+        }
+    }
+
+    #[test]
+    fn json_roundtrip_exact() {
+        let r = sample();
+        let text = r.to_json().to_string();
+        let back = TurnRecord::from_json(&json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, r);
+    }
+
+    #[test]
+    fn mean_accept() {
+        assert!((sample().mean_accept() - 3.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,213 @@
+//! Trace writing, failure dumps, and the rank-0 merge (paper §4.3/§4.4).
+//!
+//! Each rank writes `trace_rank{r}.jsonl` independently; after the run,
+//! rank 0 merges them into a globally ordered `trace_merged.jsonl`. Every
+//! run directory also carries a `run_manifest.json` (hyperparameters,
+//! execution flags, backend id, seed) so any number can be traced back to
+//! its exact configuration.
+
+use super::record::TurnRecord;
+use crate::json::{self, Json};
+use anyhow::{Context, Result};
+use std::fs::{self, File};
+use std::io::{BufWriter, Write};
+use std::path::{Path, PathBuf};
+
+pub struct TraceWriter {
+    dir: PathBuf,
+    rank: usize,
+    file: BufWriter<File>,
+    pub records_written: u64,
+}
+
+impl TraceWriter {
+    pub fn create(dir: impl AsRef<Path>, rank: usize) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        fs::create_dir_all(&dir)?;
+        let path = dir.join(format!("trace_rank{rank}.jsonl"));
+        let file = BufWriter::new(File::create(&path).with_context(|| format!("{path:?}"))?);
+        Ok(Self { dir, rank, file, records_written: 0 })
+    }
+
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    pub fn write(&mut self, rec: &TurnRecord) -> Result<()> {
+        writeln!(self.file, "{}", rec.to_json().to_string())?;
+        self.records_written += 1;
+        Ok(())
+    }
+
+    pub fn flush(&mut self) -> Result<()> {
+        self.file.flush()?;
+        Ok(())
+    }
+
+    /// Compact failure dump (paper §4.3): enough context to reproduce.
+    pub fn failure(&self, dump: &FailureDump) -> Result<PathBuf> {
+        let path = self
+            .dir
+            .join(format!("failure_rank{}_{}.json", self.rank, dump.conversation_id));
+        fs::write(&path, dump.to_json().to_string_pretty())?;
+        Ok(path)
+    }
+}
+
+/// Write the run manifest (config + environment identifiers).
+pub fn write_manifest(dir: impl AsRef<Path>, fields: Json) -> Result<PathBuf> {
+    let dir = dir.as_ref();
+    fs::create_dir_all(dir)?;
+    let path = dir.join("run_manifest.json");
+    fs::write(&path, fields.to_string_pretty())?;
+    Ok(path)
+}
+
+/// Minimal reproduction context emitted on abnormal termination.
+#[derive(Clone, Debug)]
+pub struct FailureDump {
+    pub conversation_id: usize,
+    pub turn_idx: usize,
+    pub rank: usize,
+    pub error: String,
+    pub prompt: Vec<i32>,
+    pub context_len: usize,
+    pub config: Json,
+}
+
+impl FailureDump {
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.push("conversation_id", self.conversation_id)
+            .push("turn_idx", self.turn_idx)
+            .push("rank", self.rank)
+            .push("error", self.error.as_str())
+            .push("prompt", Json::Arr(self.prompt.iter().map(|t| Json::Num(*t as f64)).collect()))
+            .push("context_len", self.context_len)
+            .push("config", self.config.clone());
+        o
+    }
+}
+
+/// Rank-0 merge: read every `trace_rank*.jsonl` in `dir`, sort globally by
+/// (conversation_id, turn_idx, kind) and write `trace_merged.jsonl`.
+/// Returns the merged records.
+pub fn merge_rank_files(dir: impl AsRef<Path>) -> Result<Vec<TurnRecord>> {
+    let dir = dir.as_ref();
+    let mut records: Vec<TurnRecord> = Vec::new();
+    for entry in fs::read_dir(dir)? {
+        let path = entry?.path();
+        let name = path.file_name().and_then(|n| n.to_str()).unwrap_or("");
+        if !(name.starts_with("trace_rank") && name.ends_with(".jsonl")) {
+            continue;
+        }
+        let text = fs::read_to_string(&path)?;
+        for (ln, line) in text.lines().enumerate() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let v = json::parse(line)
+                .map_err(|e| anyhow::anyhow!("{path:?}:{}: {e}", ln + 1))?;
+            records.push(
+                TurnRecord::from_json(&v)
+                    .with_context(|| format!("{path:?}:{} malformed record", ln + 1))?,
+            );
+        }
+    }
+    records.sort_by_key(|r| (r.conversation_id, r.turn_idx, r.kind.clone()));
+    let merged = dir.join("trace_merged.jsonl");
+    let mut f = BufWriter::new(File::create(&merged)?);
+    for r in &records {
+        writeln!(f, "{}", r.to_json().to_string())?;
+    }
+    f.flush()?;
+    Ok(records)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::BTreeMap;
+
+    fn rec(conv: usize, turn: usize, rank: usize, kind: &str) -> TurnRecord {
+        TurnRecord {
+            conversation_id: conv,
+            turn_idx: turn,
+            rank,
+            profile: "code".into(),
+            kind: kind.into(),
+            prompt_len: 8,
+            output_len: 4,
+            wall_secs: 0.5,
+            tok_s: 8.0,
+            teacher_calls: 4,
+            draft_calls: 6,
+            rounds: 4,
+            accept_lens: vec![1],
+            accept_offered: vec![1],
+            accept_accepted: vec![1],
+            stage_seconds: BTreeMap::new(),
+            attn_buckets: vec![],
+        }
+    }
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("eagle_trace_test_{tag}_{}", std::process::id()));
+        let _ = fs::remove_dir_all(&d);
+        fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn write_and_merge_across_ranks() {
+        let dir = tmpdir("merge");
+        {
+            let mut w0 = TraceWriter::create(&dir, 0).unwrap();
+            w0.write(&rec(2, 0, 0, "ea")).unwrap();
+            w0.write(&rec(0, 0, 0, "ea")).unwrap();
+            w0.flush().unwrap();
+            let mut w1 = TraceWriter::create(&dir, 1).unwrap();
+            w1.write(&rec(1, 1, 1, "ea")).unwrap();
+            w1.write(&rec(1, 0, 1, "baseline")).unwrap();
+            w1.flush().unwrap();
+        }
+        let merged = merge_rank_files(&dir).unwrap();
+        assert_eq!(merged.len(), 4);
+        let keys: Vec<(usize, usize)> =
+            merged.iter().map(|r| (r.conversation_id, r.turn_idx)).collect();
+        assert_eq!(keys, vec![(0, 0), (1, 0), (1, 1), (2, 0)]);
+        assert!(dir.join("trace_merged.jsonl").exists());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn failure_dump_written_and_parsable() {
+        let dir = tmpdir("fail");
+        let w = TraceWriter::create(&dir, 0).unwrap();
+        let dump = FailureDump {
+            conversation_id: 7,
+            turn_idx: 0,
+            rank: 0,
+            error: "tree invariant violation: range".into(),
+            prompt: vec![1, 2, 3],
+            context_len: 42,
+            config: Json::obj(),
+        };
+        let path = w.failure(&dump).unwrap();
+        let parsed = json::parse(&fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(parsed.get("conversation_id").unwrap().as_usize(), Some(7));
+        assert!(parsed.get("error").unwrap().as_str().unwrap().contains("invariant"));
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn manifest_written() {
+        let dir = tmpdir("manifest");
+        let mut j = Json::obj();
+        j.push("mode", "fused").push("seed", 7u64);
+        let p = write_manifest(&dir, j).unwrap();
+        let v = json::parse(&fs::read_to_string(&p).unwrap()).unwrap();
+        assert_eq!(v.get("mode").unwrap().as_str(), Some("fused"));
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

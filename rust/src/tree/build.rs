@@ -1,0 +1,154 @@
+//! Speculative tree structure (paper §2.3).
+//!
+//! Slots are linearized parent-before-child (the draft expands depth-
+//! synchronously, so BFS order holds by construction). Slot 0 is the
+//! *root*: the pending token whose KV the teacher has not yet computed —
+//! it rides along in the verification call at depth 0. Draft proposals
+//! occupy slots `1..=M`.
+
+/// One node of the speculative tree.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SpecNode {
+    /// Proposed token id (root: the pending committed token).
+    pub token: i32,
+    /// Parent slot index. The root self-references 0 — the paper's
+    /// "dummy-root" convention: no sentinel value ever exists.
+    pub parent: usize,
+    /// Edges from the root (root = 0).
+    pub depth: usize,
+    /// Cumulative draft log-probability along the path (root = 0).
+    pub logprob: f64,
+}
+
+/// Rooted speculative tree with BFS-ordered slots.
+#[derive(Clone, Debug)]
+pub struct SpecTree {
+    slots: Vec<SpecNode>,
+}
+
+impl SpecTree {
+    /// A tree holding only the pending root token.
+    pub fn with_root(token: i32) -> Self {
+        Self { slots: vec![SpecNode { token, parent: 0, depth: 0, logprob: 0.0 }] }
+    }
+
+    /// Append a child under `parent` (must already exist and respect BFS
+    /// order — children are only added to the current deepest frontier).
+    pub fn add_child(&mut self, parent: usize, token: i32, logprob: f64) -> usize {
+        assert!(parent < self.slots.len(), "parent slot {parent} out of range");
+        let depth = self.slots[parent].depth + 1;
+        assert!(
+            self.slots.last().map_or(true, |last| depth >= last.depth),
+            "children must be appended depth-synchronously (BFS order)"
+        );
+        self.slots.push(SpecNode { token, parent, depth, logprob });
+        self.slots.len() - 1
+    }
+
+    /// All slots including the root.
+    pub fn slots(&self) -> &[SpecNode] {
+        &self.slots
+    }
+
+    /// Number of speculative nodes M (excluding the root).
+    pub fn num_nodes(&self) -> usize {
+        self.slots.len() - 1
+    }
+
+    /// Total slots (root + nodes) — the S the verification call must hold.
+    pub fn num_slots(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn max_depth(&self) -> usize {
+        self.slots.iter().map(|n| n.depth).max().unwrap_or(0)
+    }
+
+    /// Child slots of `slot`, in insertion (= draft preference) order.
+    pub fn children(&self, slot: usize) -> impl Iterator<Item = usize> + '_ {
+        self.slots
+            .iter()
+            .enumerate()
+            .skip(1)
+            .filter(move |(i, n)| n.parent == slot && *i != slot)
+            .map(|(i, _)| i)
+    }
+
+    /// Ancestor chain of `slot` up to (and including) the root, nearest
+    /// first. The root yields `[0]`.
+    pub fn ancestors(&self, slot: usize) -> Vec<usize> {
+        let mut out = Vec::with_capacity(self.slots[slot].depth + 1);
+        let mut cur = slot;
+        loop {
+            out.push(cur);
+            if cur == 0 {
+                break;
+            }
+            cur = self.slots[cur].parent;
+        }
+        out
+    }
+
+    /// Root-to-slot token path (paper's `path(u)`), excluding the root.
+    pub fn token_path(&self, slot: usize) -> Vec<i32> {
+        let mut chain = self.ancestors(slot);
+        chain.reverse();
+        chain.into_iter().skip(1).map(|s| self.slots[s].token).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> SpecTree {
+        // root -> a(1) -> b(2) ; root -> c(3) ; b -> d(4)
+        let mut t = SpecTree::with_root(10);
+        let a = t.add_child(0, 11, -0.1);
+        let c = t.add_child(0, 13, -0.5);
+        let b = t.add_child(a, 12, -0.3);
+        let _d = t.add_child(b, 14, -0.9);
+        assert_eq!(c, 2);
+        t
+    }
+
+    #[test]
+    fn bfs_order_and_depths() {
+        let t = sample();
+        assert_eq!(t.num_nodes(), 4);
+        assert_eq!(t.slots()[3].depth, 2);
+        assert_eq!(t.max_depth(), 3);
+    }
+
+    #[test]
+    fn ancestors_nearest_first() {
+        let t = sample();
+        assert_eq!(t.ancestors(4), vec![4, 3, 1, 0]);
+        assert_eq!(t.ancestors(0), vec![0]);
+    }
+
+    #[test]
+    fn token_path_excludes_root() {
+        let t = sample();
+        assert_eq!(t.token_path(4), vec![11, 12, 14]);
+        assert_eq!(t.token_path(0), Vec::<i32>::new());
+    }
+
+    #[test]
+    fn children_in_insertion_order() {
+        let t = sample();
+        let kids: Vec<usize> = t.children(0).collect();
+        assert_eq!(kids, vec![1, 2]);
+    }
+
+    #[test]
+    #[should_panic(expected = "BFS order")]
+    fn rejects_out_of_order_insertion() {
+        let mut t = SpecTree::with_root(1);
+        let a = t.add_child(0, 2, 0.0);
+        let b = t.add_child(a, 3, 0.0);
+        let _ = b;
+        // depth-1 child after a depth-2 child violates BFS
+        t.add_child(0, 4, 0.0);
+    }
+}

@@ -1,0 +1,296 @@
+//! Tree attention mask construction (paper §2.4, §3.3).
+//!
+//! Produces the `[S, cap + S]` additive row mask the AOT modules consume:
+//! columns `[0, cap)` address the committed-prefix cache, columns
+//! `[cap, cap+S)` the speculative block. Row `k` opens:
+//!
+//!   * prefix columns `[lo, t)` where `lo = max(0, t - W)` under a drafter
+//!     window `W` (E4 truncation; teacher masks always use `lo = 0`);
+//!   * speculative column `j` iff `Anc(j, k)` and both slots are valid.
+//!
+//! Padded slots are force-masked in *both* directions ("no leakage to
+//! padded slots", §3.3). Two builders produce bit-identical output:
+//! the dense ancestor-walk (reference) and the ancestor-table builder
+//! (used for larger budgets) — mirroring the paper's dense-vs-structured
+//! mask note; `verify_path` benches compare their cost.
+
+use super::tensorize::Tensorized;
+use crate::config::contract::NEG_INF;
+
+/// Reusable mask buffer + build strategies.
+pub struct MaskBuilder {
+    pub cache_cap: usize,
+    /// Budget threshold above which the ancestor-table builder is used
+    /// by [`MaskBuilder::build_auto`] (paper: "selects the mask
+    /// construction strategy based on the speculative budget").
+    pub table_threshold: usize,
+}
+
+impl MaskBuilder {
+    pub fn new(cache_cap: usize) -> Self {
+        Self { cache_cap, table_threshold: 64 }
+    }
+
+    /// Row width of a mask for block size `s`.
+    pub fn width(&self, s: usize) -> usize {
+        self.cache_cap + s
+    }
+
+    /// Reset + size `out` for block size `s`, all columns masked.
+    fn prepare<'a>(&self, out: &'a mut Vec<f32>, s: usize) -> &'a mut [f32] {
+        let n = s * self.width(s);
+        out.clear();
+        out.resize(n, NEG_INF);
+        &mut out[..]
+    }
+
+    /// Open prefix columns `[lo, t)` for every valid row.
+    fn open_prefix(&self, m: &mut [f32], tens: &Tensorized, t: usize, window: Option<usize>) {
+        let w = self.width(tens.s);
+        let lo = window.map_or(0, |win| t.saturating_sub(win));
+        for k in 0..tens.live {
+            if tens.valid[k] {
+                m[k * w + lo..k * w + t].fill(0.0);
+            }
+        }
+    }
+
+    /// Dense builder: per-row ancestor walk (O(M * D_max) opens).
+    pub fn build_dense(
+        &self,
+        out: &mut Vec<f32>,
+        tens: &Tensorized,
+        t: usize,
+        window: Option<usize>,
+    ) {
+        let s = tens.s;
+        let w = self.width(s);
+        let m = self.prepare(out, s);
+        self.open_prefix(m, tens, t, window);
+        for k in 0..tens.live {
+            if !tens.valid[k] {
+                continue;
+            }
+            // walk the parent chain: self, parent, ..., root
+            let mut cur = k;
+            loop {
+                if tens.valid[cur] {
+                    m[k * w + self.cache_cap + cur] = 0.0;
+                }
+                if cur == 0 {
+                    break;
+                }
+                cur = tens.parent[cur] as usize;
+            }
+        }
+    }
+
+    /// Ancestor-table builder: bitset visibility propagated parent->child
+    /// in linearization order (O(M * S/64) words), then expanded to f32.
+    pub fn build_table(
+        &self,
+        out: &mut Vec<f32>,
+        tens: &Tensorized,
+        t: usize,
+        window: Option<usize>,
+    ) {
+        let s = tens.s;
+        let w = self.width(s);
+        let words = s.div_ceil(64);
+        // visibility bitsets: vis[k] = vis[parent[k]] | bit(k)
+        let mut vis = vec![0u64; tens.live * words];
+        for k in 0..tens.live {
+            if k > 0 {
+                let p = tens.parent[k] as usize;
+                let (lo, rest) = vis.split_at_mut(k * words);
+                rest[..words].copy_from_slice(&lo[p * words..p * words + words]);
+            }
+            vis[k * words + k / 64] |= 1u64 << (k % 64);
+        }
+        let m = self.prepare(out, s);
+        self.open_prefix(m, tens, t, window);
+        for k in 0..tens.live {
+            if !tens.valid[k] {
+                continue;
+            }
+            let row = &mut m[k * w + self.cache_cap..k * w + self.cache_cap + s];
+            for wd in 0..words {
+                let mut bits = vis[k * words + wd];
+                while bits != 0 {
+                    let b = bits.trailing_zeros() as usize;
+                    let j = wd * 64 + b;
+                    if tens.valid[j] {
+                        row[j] = 0.0;
+                    }
+                    bits &= bits - 1;
+                }
+            }
+        }
+    }
+
+    /// Strategy selection by budget (the paper's implementation note).
+    pub fn build_auto(
+        &self,
+        out: &mut Vec<f32>,
+        tens: &Tensorized,
+        t: usize,
+        window: Option<usize>,
+    ) {
+        if tens.live > self.table_threshold {
+            self.build_table(out, tens, t, window)
+        } else {
+            self.build_dense(out, tens, t, window)
+        }
+    }
+
+    /// Mask for a *causal chain* block (prefill chunks, baseline decode,
+    /// draft chain refresh): `live` rows appended after prefix `t`, row i
+    /// sees `[lo, t)` + chain slots `0..=i`.
+    pub fn build_chain(
+        &self,
+        out: &mut Vec<f32>,
+        s: usize,
+        live: usize,
+        t: usize,
+        window: Option<usize>,
+    ) {
+        let w = self.width(s);
+        let n = s * w;
+        out.clear();
+        out.resize(n, NEG_INF);
+        let lo = window.map_or(0, |win| t.saturating_sub(win));
+        for i in 0..live {
+            out[i * w + lo..i * w + t].fill(0.0);
+            for j in 0..=i {
+                out[i * w + self.cache_cap + j] = 0.0;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tree::build::SpecTree;
+    use crate::util::prop;
+
+    const CAP: usize = 64; // small cap for test readability
+
+    fn sample() -> Tensorized {
+        let mut t = SpecTree::with_root(10);
+        let a = t.add_child(0, 11, -0.1);
+        let c = t.add_child(0, 13, -0.4);
+        let b = t.add_child(a, 12, -0.2);
+        t.add_child(c, 14, -0.6);
+        let _ = b;
+        Tensorized::from_tree(&t, 8, true).unwrap()
+    }
+
+    fn open(m: &[f32], w: usize, k: usize, col: usize) -> bool {
+        m[k * w + col] == 0.0
+    }
+
+    #[test]
+    fn dense_mask_semantics() {
+        let mb = MaskBuilder::new(CAP);
+        let tens = sample();
+        let mut m = Vec::new();
+        mb.build_dense(&mut m, &tens, 10, None);
+        let w = mb.width(8);
+        // prefix open for valid rows
+        assert!(open(&m, w, 0, 0) && open(&m, w, 0, 9));
+        assert!(!open(&m, w, 0, 10)); // beyond committed length
+        // root sees itself only in the spec block
+        assert!(open(&m, w, 0, CAP));
+        assert!(!open(&m, w, 0, CAP + 1));
+        // node 3 (b, child of a) sees root, a, itself; not c
+        assert!(open(&m, w, 3, CAP) && open(&m, w, 3, CAP + 1) && open(&m, w, 3, CAP + 3));
+        assert!(!open(&m, w, 3, CAP + 2));
+        // sibling isolation: c doesn't see a
+        assert!(!open(&m, w, 2, CAP + 1));
+        // padded rows fully masked
+        for col in 0..w {
+            assert!(!open(&m, w, 6, col));
+        }
+        // padded columns masked for all rows
+        for k in 0..5 {
+            assert!(!open(&m, w, k, CAP + 6));
+        }
+    }
+
+    #[test]
+    fn table_matches_dense() {
+        let mb = MaskBuilder::new(CAP);
+        let tens = sample();
+        let (mut a, mut b) = (Vec::new(), Vec::new());
+        mb.build_dense(&mut a, &tens, 7, None);
+        mb.build_table(&mut b, &tens, 7, None);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn window_truncates_prefix_only() {
+        let mb = MaskBuilder::new(CAP);
+        let tens = sample();
+        let mut m = Vec::new();
+        mb.build_dense(&mut m, &tens, 20, Some(5));
+        let w = mb.width(8);
+        assert!(!open(&m, w, 0, 14)); // outside window
+        assert!(open(&m, w, 0, 15) && open(&m, w, 0, 19));
+        assert!(open(&m, w, 0, CAP)); // spec self still open
+    }
+
+    #[test]
+    fn chain_mask_causal() {
+        let mb = MaskBuilder::new(CAP);
+        let mut m = Vec::new();
+        mb.build_chain(&mut m, 4, 3, 6, None);
+        let w = mb.width(4);
+        assert!(open(&m, w, 2, CAP + 2) && open(&m, w, 2, CAP) && !open(&m, w, 2, CAP + 3));
+        assert!(!open(&m, w, 0, CAP + 1));
+        // padded row 3 fully closed
+        for col in 0..w {
+            assert!(!open(&m, w, 3, col));
+        }
+    }
+
+    #[test]
+    fn property_builders_agree_on_random_trees() {
+        let mb = MaskBuilder::new(CAP);
+        prop::for_cases(100, 0xA5C3, |g| {
+            let mut tree = SpecTree::with_root(3);
+            let mut frontier = vec![0usize];
+            let budget = g.usize_in(1, 20);
+            let mut added = 0;
+            while added < budget && !frontier.is_empty() {
+                let mut next = Vec::new();
+                for &p in &frontier.clone() {
+                    for _ in 0..g.usize_in(0, 4) {
+                        if added >= budget {
+                            break;
+                        }
+                        next.push(tree.add_child(p, 5, 0.0));
+                        added += 1;
+                    }
+                }
+                frontier = next;
+            }
+            let s = tree.num_slots().next_power_of_two().max(8);
+            let tens = Tensorized::from_tree(&tree, s, true).unwrap();
+            let t = g.usize_in(0, CAP);
+            let win = if g.bool_p(0.5) { Some(g.usize_in(4, CAP)) } else { None };
+            let (mut a, mut b) = (Vec::new(), Vec::new());
+            mb.build_dense(&mut a, &tens, t, win);
+            mb.build_table(&mut b, &tens, t, win);
+            assert_eq!(a, b, "builders diverged");
+            // ancestor predicate cross-check against tree walk
+            let w = mb.width(s);
+            for k in 0..tens.live {
+                for j in 0..tens.live {
+                    let expect = tree.ancestors(k).contains(&j);
+                    assert_eq!(a[k * w + CAP + j] == 0.0, expect, "anc({j},{k})");
+                }
+            }
+        });
+    }
+}

@@ -1,0 +1,19 @@
+//! Accelerator-safe speculative-tree machinery (paper §3.2).
+//!
+//! * [`build`] — the speculative tree the draft expands (slot 0 is the
+//!   pending root token; nodes 1..=M are draft proposals);
+//! * [`tensorize`] — linearization into device arrays with dummy-root
+//!   (sentinel-free) indexing, ancestor tables, padding/validity, and the
+//!   unit-testable structural invariants of §3.2;
+//! * [`mask`] — tree attention mask construction (§2.4/§3.3): dense
+//!   ancestor-walk builder and the ancestor-table/bitset builder for
+//!   large budgets, both emitting the `[S, cap+S]` additive row layout
+//!   the AOT modules expect.
+
+pub mod build;
+pub mod mask;
+pub mod tensorize;
+
+pub use build::{SpecNode, SpecTree};
+pub use mask::MaskBuilder;
+pub use tensorize::{InvariantViolation, Tensorized};

@@ -1,0 +1,309 @@
+//! Tree tensorization with accelerator-safe (sentinel-free) indexing —
+//! the paper's §3.2 contribution, verbatim:
+//!
+//! * **Dummy-root shift**: the root occupies index 0 and every parent
+//!   pointer lives in `[0, M]`; a sentinel `-1` value never exists, so
+//!   every device-side gather is in-bounds *by construction*.
+//! * **Ancestor table** `A[l, k]`: `A[0,k] = k`, `A[l+1,k] = parent(A[l,k])`
+//!   — bounded, in-range, and reusable for mask construction and
+//!   path-feature gathers.
+//! * **Padding + validity**: slots `>= live` carry device-defined values
+//!   (`parent = 0`, `depth = 0`, `token = pad`) and `valid = false`; the
+//!   mask builder force-masks them so they cannot influence acceptance.
+//! * **Structural invariants** (§3.2 items 1-3) checked before launch:
+//!   range, acyclicity/depth-consistency, validity closure. Violations
+//!   return a structured error that flows into a trace failure dump
+//!   instead of undefined device behaviour.
+
+use super::build::SpecTree;
+use crate::config::contract::PAD_ID;
+use std::fmt;
+
+/// Structured §3.2 invariant violations (unit-testable, dump-friendly).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum InvariantViolation {
+    /// parent[k] outside [0, live).
+    Range { slot: usize, parent: usize, live: usize },
+    /// depth[parent[k]] >= depth[k] for a non-root slot.
+    DepthOrder { slot: usize, depth: usize, parent_depth: usize },
+    /// Repeated parent application failed to reach the root within
+    /// depth[k] steps.
+    Unrooted { slot: usize },
+    /// A valid slot has an invalid (padded) parent.
+    ValidityClosure { slot: usize, parent: usize },
+    /// Root slot malformed (depth != 0 or parent != 0).
+    BadRoot,
+    /// A token id outside the vocabulary.
+    TokenRange { slot: usize, token: i32 },
+}
+
+impl fmt::Display for InvariantViolation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Self::Range { slot, parent, live } => {
+                write!(f, "range: parent[{slot}] = {parent} outside [0, {live})")
+            }
+            Self::DepthOrder { slot, depth, parent_depth } => write!(
+                f,
+                "depth-order: depth[parent[{slot}]] = {parent_depth} >= depth[{slot}] = {depth}"
+            ),
+            Self::Unrooted { slot } => {
+                write!(f, "acyclicity: slot {slot} does not reach root within depth steps")
+            }
+            Self::ValidityClosure { slot, parent } => {
+                write!(f, "validity-closure: valid slot {slot} has padded parent {parent}")
+            }
+            Self::BadRoot => write!(f, "slot 0 is not a well-formed root"),
+            Self::TokenRange { slot, token } => {
+                write!(f, "token-range: tokens[{slot}] = {token} outside vocab")
+            }
+        }
+    }
+}
+
+impl std::error::Error for InvariantViolation {}
+
+/// Linearized, padded, gather-safe tree arrays (paper §3.2).
+#[derive(Clone, Debug)]
+pub struct Tensorized {
+    /// Padded slot count (a compiled S variant).
+    pub s: usize,
+    /// Live slots (root + M nodes); `live <= s`.
+    pub live: usize,
+    /// `[s]` token ids; padded slots hold `PAD_ID`.
+    pub tokens: Vec<i32>,
+    /// `[s]` shifted parent indices in `[0, live)`; `parent[0] == 0`
+    /// (dummy-root self-reference) and padded slots point at 0.
+    pub parent: Vec<u32>,
+    /// `[s]` depths; root 0, padded slots 0.
+    pub depth: Vec<u32>,
+    /// `[s]` validity mask.
+    pub valid: Vec<bool>,
+    /// Ancestor table, row-major `[(dmax+1) * s]`: `anc[l*s + k] = A[l,k]`.
+    /// Entries saturate at the root (0), staying in-range everywhere.
+    pub ancestors: Vec<u32>,
+    /// Max live depth D_max.
+    pub dmax: usize,
+}
+
+impl Tensorized {
+    /// Tensorize `tree` into `s_pad` slots. `s_pad` must be a compiled
+    /// variant >= `tree.num_slots()`; `checked` runs the §3.2 invariant
+    /// validation (the production default — benches may disable it to
+    /// measure its cost).
+    pub fn from_tree(tree: &SpecTree, s_pad: usize, checked: bool)
+        -> Result<Self, InvariantViolation> {
+        let live = tree.num_slots();
+        assert!(live <= s_pad, "tree has {live} slots, variant holds {s_pad}");
+        let mut tokens = vec![PAD_ID; s_pad];
+        let mut parent = vec![0u32; s_pad];
+        let mut depth = vec![0u32; s_pad];
+        let mut valid = vec![false; s_pad];
+        let mut dmax = 0usize;
+        for (k, n) in tree.slots().iter().enumerate() {
+            tokens[k] = n.token;
+            parent[k] = n.parent as u32;
+            depth[k] = n.depth as u32;
+            valid[k] = true;
+            dmax = dmax.max(n.depth);
+        }
+        // Ancestor table A: A[0,k] = k; A[l+1,k] = parent(A[l,k]).
+        let rows = dmax + 1;
+        let mut ancestors = vec![0u32; rows * s_pad];
+        for k in 0..s_pad {
+            ancestors[k] = k as u32;
+        }
+        for l in 0..dmax {
+            for k in 0..s_pad {
+                let up = ancestors[l * s_pad + k] as usize;
+                ancestors[(l + 1) * s_pad + k] = parent[up.min(s_pad - 1)];
+            }
+        }
+        let t = Self { s: s_pad, live, tokens, parent, depth, valid, ancestors, dmax };
+        if checked {
+            t.check_invariants()?;
+        }
+        Ok(t)
+    }
+
+    /// §3.2 structural invariants. Cheap relative to a teacher forward
+    /// (O(M * D_max)); run before every launch in production mode.
+    pub fn check_invariants(&self) -> Result<(), InvariantViolation> {
+        if self.live == 0 || self.depth[0] != 0 || self.parent[0] != 0 {
+            return Err(InvariantViolation::BadRoot);
+        }
+        for k in 0..self.s {
+            let p = self.parent[k] as usize;
+            // 1. Range: every parent pointer in-bounds (live region).
+            if p >= self.live.max(1) {
+                return Err(InvariantViolation::Range { slot: k, parent: p, live: self.live });
+            }
+            if k >= self.live {
+                // Padded slots: device-defined values only.
+                if self.valid[k] {
+                    return Err(InvariantViolation::ValidityClosure { slot: k, parent: p });
+                }
+                continue;
+            }
+            if !(0..512).contains(&self.tokens[k]) {
+                return Err(InvariantViolation::TokenRange { slot: k, token: self.tokens[k] });
+            }
+            if k == 0 {
+                continue;
+            }
+            // 2. Depth consistency + acyclicity.
+            if self.depth[p] >= self.depth[k] {
+                return Err(InvariantViolation::DepthOrder {
+                    slot: k,
+                    depth: self.depth[k] as usize,
+                    parent_depth: self.depth[p] as usize,
+                });
+            }
+            let mut cur = k;
+            let mut steps = 0usize;
+            while cur != 0 {
+                cur = self.parent[cur] as usize;
+                steps += 1;
+                if steps > self.depth[k] as usize {
+                    return Err(InvariantViolation::Unrooted { slot: k });
+                }
+            }
+            // 3. Validity closure.
+            if self.valid[k] && !self.valid[p] {
+                return Err(InvariantViolation::ValidityClosure { slot: k, parent: p });
+            }
+        }
+        Ok(())
+    }
+
+    /// Ancestor predicate via the table: is `j` an ancestor of `k`
+    /// (including `j == k`)? Mirrors the paper's Anc(j, k) definition.
+    pub fn is_ancestor(&self, j: usize, k: usize) -> bool {
+        for l in 0..=self.dmax {
+            if self.ancestors[l * self.s + k] as usize == j {
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Per-slot RoPE positions for a committed prefix of length `t`:
+    /// root sits at `t`, a depth-d node at `t + d`. Padded slots get `t`
+    /// (masked, value irrelevant but in-range — device-defined padding).
+    pub fn positions(&self, t: usize) -> Vec<i32> {
+        (0..self.s)
+            .map(|k| if self.valid[k] { (t + self.depth[k] as usize) as i32 } else { t as i32 })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tree::build::SpecTree;
+    use crate::util::prop;
+
+    fn sample_tree() -> SpecTree {
+        let mut t = SpecTree::with_root(10);
+        let a = t.add_child(0, 11, -0.1);
+        let c = t.add_child(0, 13, -0.4);
+        let b = t.add_child(a, 12, -0.2);
+        t.add_child(c, 14, -0.6);
+        t.add_child(b, 15, -0.8);
+        t
+    }
+
+    #[test]
+    fn arrays_are_sentinel_free() {
+        let t = Tensorized::from_tree(&sample_tree(), 8, true).unwrap();
+        assert_eq!(t.live, 6);
+        assert!(t.parent.iter().all(|p| (*p as usize) < t.live));
+        assert!(t.ancestors.iter().all(|a| (*a as usize) < t.s));
+        assert_eq!(t.tokens[6], PAD_ID);
+        assert!(!t.valid[6]);
+    }
+
+    #[test]
+    fn ancestor_table_matches_walk() {
+        let tree = sample_tree();
+        let t = Tensorized::from_tree(&tree, 8, true).unwrap();
+        for k in 0..t.live {
+            for j in 0..t.live {
+                let walk = tree.ancestors(k).contains(&j);
+                assert_eq!(t.is_ancestor(j, k), walk, "anc({j},{k})");
+            }
+        }
+        // padded slot is its own ancestor chain to root
+        assert!(t.is_ancestor(0, 7) || t.is_ancestor(7, 7));
+    }
+
+    #[test]
+    fn positions_offset_by_depth() {
+        let t = Tensorized::from_tree(&sample_tree(), 8, true).unwrap();
+        let pos = t.positions(100);
+        assert_eq!(pos[0], 100); // root
+        assert_eq!(pos[1], 101); // depth 1
+        assert_eq!(pos[5], 103); // depth 3
+        assert_eq!(pos[7], 100); // padded
+    }
+
+    #[test]
+    fn detects_range_violation() {
+        let mut t = Tensorized::from_tree(&sample_tree(), 8, true).unwrap();
+        t.parent[2] = 7; // points into padding
+        assert!(matches!(t.check_invariants(), Err(InvariantViolation::Range { .. })));
+    }
+
+    #[test]
+    fn detects_cycle_as_depth_violation() {
+        let mut t = Tensorized::from_tree(&sample_tree(), 8, true).unwrap();
+        // 3 <-> 1 cycle: parent[1] = 3 while depth says 1 is shallower
+        t.parent[1] = 3;
+        assert!(matches!(t.check_invariants(), Err(InvariantViolation::DepthOrder { .. })));
+    }
+
+    #[test]
+    fn detects_validity_closure_violation() {
+        let mut t = Tensorized::from_tree(&sample_tree(), 8, true).unwrap();
+        t.valid[7] = true; // padded slot claims validity
+        assert!(matches!(t.check_invariants(), Err(InvariantViolation::ValidityClosure { .. })));
+    }
+
+    #[test]
+    fn detects_bad_root() {
+        let mut t = Tensorized::from_tree(&sample_tree(), 8, true).unwrap();
+        t.depth[0] = 1;
+        assert_eq!(t.check_invariants(), Err(InvariantViolation::BadRoot));
+    }
+
+    #[test]
+    fn property_random_trees_always_pass_checks() {
+        prop::for_cases(200, 0x7ee1, |g| {
+            let mut tree = SpecTree::with_root(g.usize_in(2, 512) as i32);
+            let budget = g.usize_in(1, 24);
+            // depth-synchronous random growth
+            let mut frontier = vec![0usize];
+            let mut added = 0;
+            while added < budget && !frontier.is_empty() {
+                let mut next = Vec::new();
+                for &p in &frontier {
+                    let kids = g.usize_in(0, 4);
+                    for _ in 0..kids {
+                        if added >= budget {
+                            break;
+                        }
+                        let slot = tree.add_child(p, g.usize_in(2, 512) as i32, -0.5);
+                        next.push(slot);
+                        added += 1;
+                    }
+                }
+                frontier = next;
+            }
+            let s_pad = tree.num_slots().next_power_of_two().max(8);
+            let t = Tensorized::from_tree(&tree, s_pad, true).unwrap();
+            t.check_invariants().unwrap();
+            // dummy-root: all gathers in range
+            assert!(t.parent.iter().all(|p| (*p as usize) < t.live));
+        });
+    }
+}

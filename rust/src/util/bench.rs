@@ -1,0 +1,107 @@
+//! Minimal benchmark harness (the image has no `criterion`): warmup +
+//! timed iterations, median-of-samples reporting, and a `BENCH_FILTER`
+//! env filter. Used by every target under `rust/benches/`.
+
+use std::time::Instant;
+
+/// One benchmark case result.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub min_ns: f64,
+}
+
+impl BenchResult {
+    pub fn per_iter(&self) -> String {
+        fmt_ns(self.median_ns)
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Runs `f` repeatedly: a few warmup calls, then `samples` timed batches
+/// sized so each batch takes ~`target_batch_ms`. Prints one line.
+pub fn bench(name: &str, target_batch_ms: f64, samples: usize, mut f: impl FnMut()) -> Option<BenchResult> {
+    if let Ok(filter) = std::env::var("BENCH_FILTER") {
+        if !name.contains(&filter) {
+            return None;
+        }
+    }
+    // warmup + calibration
+    let t0 = Instant::now();
+    f();
+    let once = t0.elapsed().as_secs_f64().max(1e-9);
+    let per_batch = ((target_batch_ms / 1e3 / once).ceil() as u64).clamp(1, 1_000_000);
+    for _ in 0..per_batch.min(3) {
+        f();
+    }
+    let mut times: Vec<f64> = Vec::with_capacity(samples);
+    let mut total_iters = 0u64;
+    for _ in 0..samples {
+        let t = Instant::now();
+        for _ in 0..per_batch {
+            f();
+        }
+        times.push(t.elapsed().as_secs_f64() / per_batch as f64 * 1e9);
+        total_iters += per_batch;
+    }
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let result = BenchResult {
+        name: name.to_string(),
+        iters: total_iters,
+        mean_ns: times.iter().sum::<f64>() / times.len() as f64,
+        median_ns: times[times.len() / 2],
+        min_ns: times[0],
+    };
+    println!(
+        "{:<56} {:>12}/iter  (min {:>10}, {} iters)",
+        result.name,
+        result.per_iter(),
+        fmt_ns(result.min_ns),
+        result.iters
+    );
+    Some(result)
+}
+
+/// Black-box: defeat the optimizer without nightly intrinsics.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    // std::hint::black_box is stable since 1.66
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_reasonable_numbers() {
+        let r = bench("noop_add", 1.0, 3, || {
+            black_box(1 + 1);
+        })
+        .unwrap();
+        assert!(r.median_ns < 1e6);
+        assert!(r.iters > 0);
+    }
+
+    #[test]
+    fn fmt_ns_ranges() {
+        assert!(fmt_ns(12.0).contains("ns"));
+        assert!(fmt_ns(12.0e3).contains("µs"));
+        assert!(fmt_ns(12.0e6).contains("ms"));
+        assert!(fmt_ns(12.0e9).contains("s"));
+    }
+}

@@ -1,0 +1,13 @@
+//! Small shared substrates: deterministic RNG, percentile summaries,
+//! stage timers, and a seed-reporting randomized-testing helper
+//! (the image has no `rand`/`proptest`/`criterion`).
+
+pub mod bench;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod timer;
+
+pub use rng::SplitMix64;
+pub use stats::Summary;
+pub use timer::StageTimer;

@@ -1,0 +1,102 @@
+//! Minimal property-testing substrate (the image has no `proptest`).
+//!
+//! `for_cases(n, seed, |g| ...)` runs `n` randomized cases; on failure the
+//! panic message carries the case seed so the exact case replays with
+//! `replay(seed, |g| ...)`. No shrinking — cases are kept small instead.
+
+use super::rng::{splitmix64, SplitMix64};
+
+/// Case generator handed to property bodies.
+pub struct Gen {
+    pub rng: SplitMix64,
+    pub seed: u64,
+}
+
+impl Gen {
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        self.rng.range(lo as u64, hi as u64) as usize
+    }
+
+    pub fn bool_p(&mut self, p: f64) -> bool {
+        self.rng.f64_unit() < p
+    }
+
+    pub fn f32_pm1(&mut self) -> f32 {
+        self.rng.f32_pm1()
+    }
+
+    /// A vector of length in [lo_len, hi_len) with elements in [lo, hi).
+    pub fn vec_usize(&mut self, lo_len: usize, hi_len: usize, lo: usize, hi: usize) -> Vec<usize> {
+        let n = self.usize_in(lo_len, hi_len);
+        (0..n).map(|_| self.usize_in(lo, hi)).collect()
+    }
+
+    /// Pick one element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.usize_in(0, xs.len())]
+    }
+}
+
+/// Run `n` randomized cases of a property. Panics (with the replay seed in
+/// the message) as soon as one case panics.
+pub fn for_cases(n: usize, seed: u64, mut body: impl FnMut(&mut Gen)) {
+    for i in 0..n {
+        let case_seed = splitmix64(seed ^ (i as u64).wrapping_mul(0x9E37_79B9));
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut g = Gen { rng: SplitMix64::new(case_seed), seed: case_seed };
+            body(&mut g);
+        }));
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!("property failed on case {i} (replay seed {case_seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Replay a single failing case by seed.
+pub fn replay(case_seed: u64, mut body: impl FnMut(&mut Gen)) {
+    let mut g = Gen { rng: SplitMix64::new(case_seed), seed: case_seed };
+    body(&mut g);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cases_are_deterministic_per_seed() {
+        let mut seen = Vec::new();
+        for_cases(5, 42, |g| seen.push(g.rng.next_u64()));
+        let mut seen2 = Vec::new();
+        for_cases(5, 42, |g| seen2.push(g.rng.next_u64()));
+        assert_eq!(seen, seen2);
+    }
+
+    #[test]
+    fn failure_reports_replay_seed() {
+        let err = std::panic::catch_unwind(|| {
+            for_cases(50, 7, |g| {
+                let v = g.usize_in(0, 100);
+                assert!(v < 5, "v was {v}");
+            })
+        })
+        .unwrap_err();
+        let msg = err.downcast_ref::<String>().unwrap();
+        assert!(msg.contains("replay seed"), "{msg}");
+    }
+
+    #[test]
+    fn gen_ranges_hold() {
+        for_cases(50, 1, |g| {
+            let v = g.usize_in(3, 9);
+            assert!((3..9).contains(&v));
+            let xs = g.vec_usize(1, 4, 10, 20);
+            assert!(!xs.is_empty() && xs.len() < 4);
+            assert!(xs.iter().all(|x| (10..20).contains(x)));
+        });
+    }
+}

@@ -1,0 +1,119 @@
+//! splitmix64 — the single deterministic randomness source of the repo.
+//!
+//! Bit-identical to `python/compile/grammar.py::splitmix64` and
+//! `python/compile/aot.py::Stream`: the grammar workload, the golden
+//! fixtures and every randomized test depend on this parity (checked by
+//! `workload::grammar` tests against `artifacts/manifest.json`).
+
+/// Stateless splitmix64 finalizer.
+#[inline]
+pub fn splitmix64(x: u64) -> u64 {
+    let x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut z = x;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// A splitmix64 sequential stream (mirrors `aot.py::Stream`).
+#[derive(Clone, Debug)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform f32 in [-1, 1) — parity with `aot.py::Stream.f32`.
+    #[inline]
+    pub fn f32_pm1(&mut self) -> f32 {
+        ((self.next_u64() >> 40) as f64 / (1u64 << 24) as f64 * 2.0 - 1.0) as f32
+    }
+
+    /// Uniform f64 in [0, 1).
+    #[inline]
+    pub fn f64_unit(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Uniform integer in [0, n).
+    #[inline]
+    pub fn below(&mut self, n: u64) -> u64 {
+        self.next_u64() % n.max(1)
+    }
+
+    /// Uniform integer in [lo, hi).
+    #[inline]
+    pub fn range(&mut self, lo: u64, hi: u64) -> u64 {
+        lo + self.below(hi.saturating_sub(lo))
+    }
+
+    /// Sample an index from unnormalized non-negative weights.
+    pub fn weighted(&mut self, weights: &[f64]) -> usize {
+        let total: f64 = weights.iter().sum();
+        let mut r = self.f64_unit() * total;
+        for (i, w) in weights.iter().enumerate() {
+            r -= w;
+            if r < 0.0 {
+                return i;
+            }
+        }
+        weights.len().saturating_sub(1)
+    }
+
+    /// Normal-ish sample (sum of uniforms; adequate for synthetic jitter).
+    pub fn gauss(&mut self) -> f64 {
+        let mut s = 0.0;
+        for _ in 0..12 {
+            s += self.f64_unit();
+        }
+        s - 6.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_value_matches_reference() {
+        // canonical splitmix64(0) first output; also asserted in python.
+        assert_eq!(splitmix64(0), 0xE220_A839_7B1D_CDAF);
+    }
+
+    #[test]
+    fn stream_matches_stateless_chain() {
+        let mut s = SplitMix64::new(7);
+        let a = s.next_u64();
+        assert_eq!(a, splitmix64(7));
+    }
+
+    #[test]
+    fn f32_pm1_in_range() {
+        let mut s = SplitMix64::new(3);
+        for _ in 0..1000 {
+            let v = s.f32_pm1();
+            assert!((-1.0..1.0).contains(&v));
+        }
+    }
+
+    #[test]
+    fn weighted_respects_zero_weights() {
+        let mut s = SplitMix64::new(9);
+        for _ in 0..100 {
+            let i = s.weighted(&[0.0, 1.0, 0.0]);
+            assert_eq!(i, 1);
+        }
+    }
+}

@@ -1,0 +1,192 @@
+//! Percentile summaries and histograms — the statistics the paper reports
+//! (mean / p50 / p90 / p99 across turns, accept_L and accept_pos series).
+
+/// A mean/percentile summary over a sample set.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub p50: f64,
+    pub p90: f64,
+    pub p99: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Summary {
+    /// Build from raw samples. Empty input yields an all-zero summary.
+    pub fn from(samples: &[f64]) -> Self {
+        if samples.is_empty() {
+            return Self { n: 0, mean: 0.0, p50: 0.0, p90: 0.0, p99: 0.0, min: 0.0, max: 0.0 };
+        }
+        let mut v: Vec<f64> = samples.iter().copied().filter(|x| x.is_finite()).collect();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mean = v.iter().sum::<f64>() / v.len() as f64;
+        Self {
+            n: v.len(),
+            mean,
+            p50: percentile_sorted(&v, 0.50),
+            p90: percentile_sorted(&v, 0.90),
+            p99: percentile_sorted(&v, 0.99),
+            min: v[0],
+            max: v[v.len() - 1],
+        }
+    }
+
+    /// One row of the paper-style table: `mean p50 p90 p99`.
+    pub fn row(&self) -> String {
+        format!("{:>8.2} {:>8.2} {:>8.2} {:>8.2}", self.mean, self.p50, self.p90, self.p99)
+    }
+}
+
+/// Linear-interpolated percentile over a pre-sorted slice, q in [0, 1].
+pub fn percentile_sorted(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let pos = q.clamp(0.0, 1.0) * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    let frac = pos - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+/// Fixed-bucket histogram (used for accept_pos, length distributions,
+/// and the Fig-7 attention-location buckets).
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    pub edges: Vec<f64>,
+    pub counts: Vec<u64>,
+    pub total: u64,
+}
+
+impl Histogram {
+    /// `edges` are the upper bounds of each bucket; a final overflow
+    /// bucket catches everything above the last edge.
+    pub fn new(edges: Vec<f64>) -> Self {
+        let n = edges.len() + 1;
+        Self { edges, counts: vec![0; n], total: 0 }
+    }
+
+    pub fn add(&mut self, x: f64) {
+        let idx = self.edges.iter().position(|e| x <= *e).unwrap_or(self.edges.len());
+        self.counts[idx] += 1;
+        self.total += 1;
+    }
+
+    pub fn fraction(&self, idx: usize) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.counts[idx] as f64 / self.total as f64
+        }
+    }
+}
+
+/// Position-indexed acceptance counter: accept_pos[i] = P(accept | position i)
+/// — paper Fig 3. `offered[i]` counts verification steps whose tree had a
+/// depth-(i+1) candidate on the accepted path's continuation.
+#[derive(Clone, Debug, Default)]
+pub struct AcceptPos {
+    pub offered: Vec<u64>,
+    pub accepted: Vec<u64>,
+}
+
+impl AcceptPos {
+    pub fn record(&mut self, accepted_len: usize, offered_depth: usize) {
+        if self.offered.len() < offered_depth {
+            self.offered.resize(offered_depth, 0);
+            self.accepted.resize(offered_depth, 0);
+        }
+        for i in 0..offered_depth {
+            self.offered[i] += 1;
+            if i < accepted_len {
+                self.accepted[i] += 1;
+            }
+        }
+    }
+
+    pub fn merge(&mut self, other: &AcceptPos) {
+        if self.offered.len() < other.offered.len() {
+            self.offered.resize(other.offered.len(), 0);
+            self.accepted.resize(other.offered.len(), 0);
+        }
+        for i in 0..other.offered.len() {
+            self.offered[i] += other.offered[i];
+            self.accepted[i] += other.accepted[i];
+        }
+    }
+
+    pub fn rates(&self) -> Vec<f64> {
+        self.offered
+            .iter()
+            .zip(&self.accepted)
+            .map(|(o, a)| if *o == 0 { 0.0 } else { *a as f64 / *o as f64 })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basic() {
+        let s = Summary::from(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.n, 5);
+        assert!((s.mean - 3.0).abs() < 1e-12);
+        assert!((s.p50 - 3.0).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+    }
+
+    #[test]
+    fn summary_empty_is_zero() {
+        let s = Summary::from(&[]);
+        assert_eq!(s.n, 0);
+        assert_eq!(s.mean, 0.0);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let v = [0.0, 10.0];
+        assert!((percentile_sorted(&v, 0.5) - 5.0).abs() < 1e-12);
+        assert!((percentile_sorted(&v, 0.9) - 9.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_buckets_and_overflow() {
+        let mut h = Histogram::new(vec![16.0, 64.0, 256.0]);
+        for x in [1.0, 20.0, 100.0, 1000.0, 5.0] {
+            h.add(x);
+        }
+        assert_eq!(h.counts, vec![2, 1, 1, 1]);
+        assert!((h.fraction(0) - 0.4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn accept_pos_rates() {
+        let mut a = AcceptPos::default();
+        a.record(2, 4); // accepted first 2 of 4 offered depths
+        a.record(1, 4);
+        let r = a.rates();
+        assert_eq!(r.len(), 4);
+        assert!((r[0] - 1.0).abs() < 1e-12);
+        assert!((r[1] - 0.5).abs() < 1e-12);
+        assert_eq!(r[3], 0.0);
+    }
+
+    #[test]
+    fn accept_pos_merge() {
+        let mut a = AcceptPos::default();
+        a.record(1, 2);
+        let mut b = AcceptPos::default();
+        b.record(3, 3);
+        a.merge(&b);
+        assert_eq!(a.offered, vec![2, 2, 1]);
+        assert_eq!(a.accepted, vec![2, 1, 1]);
+    }
+}

@@ -1,0 +1,114 @@
+//! Per-stage wall-clock timers — the instrumentation behind the paper's E3
+//! overhead breakdown (Fig 5). Stage names are stable identifiers that flow
+//! into the structured traces.
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+/// The decode-loop stages the paper's E3 experiment attributes time to.
+pub const STAGES: &[&str] = &[
+    "prefill",
+    "draft_expand",
+    "tensorize",
+    "mask_build",
+    "verify",
+    "accept",
+    "commit",
+];
+
+/// Accumulates per-stage durations (seconds) and call counts.
+#[derive(Clone, Debug, Default)]
+pub struct StageTimer {
+    pub seconds: BTreeMap<String, f64>,
+    pub calls: BTreeMap<String, u64>,
+    enabled: bool,
+}
+
+impl StageTimer {
+    pub fn new(enabled: bool) -> Self {
+        Self { enabled, ..Default::default() }
+    }
+
+    /// Time a closure under a stage label.
+    pub fn time<T>(&mut self, stage: &str, f: impl FnOnce() -> T) -> T {
+        if !self.enabled {
+            return f();
+        }
+        let t0 = Instant::now();
+        let out = f();
+        self.add(stage, t0.elapsed().as_secs_f64());
+        out
+    }
+
+    pub fn add(&mut self, stage: &str, secs: f64) {
+        if !self.enabled {
+            return;
+        }
+        *self.seconds.entry(stage.to_string()).or_insert(0.0) += secs;
+        *self.calls.entry(stage.to_string()).or_insert(0) += 1;
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    pub fn merge(&mut self, other: &StageTimer) {
+        for (k, v) in &other.seconds {
+            *self.seconds.entry(k.clone()).or_insert(0.0) += v;
+        }
+        for (k, v) in &other.calls {
+            *self.calls.entry(k.clone()).or_insert(0) += v;
+        }
+    }
+
+    pub fn total(&self) -> f64 {
+        self.seconds.values().sum()
+    }
+
+    /// Mean seconds per call for a stage (0 if never hit).
+    pub fn mean(&self, stage: &str) -> f64 {
+        let s = self.seconds.get(stage).copied().unwrap_or(0.0);
+        let c = self.calls.get(stage).copied().unwrap_or(0);
+        if c == 0 {
+            0.0
+        } else {
+            s / c as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_timer_is_free_and_empty() {
+        let mut t = StageTimer::new(false);
+        let v = t.time("verify", || 41 + 1);
+        assert_eq!(v, 42);
+        assert!(t.seconds.is_empty());
+    }
+
+    #[test]
+    fn accumulates_and_counts() {
+        let mut t = StageTimer::new(true);
+        t.add("commit", 0.25);
+        t.add("commit", 0.75);
+        assert_eq!(t.calls["commit"], 2);
+        assert!((t.seconds["commit"] - 1.0).abs() < 1e-12);
+        assert!((t.mean("commit") - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn merge_adds_both_maps() {
+        let mut a = StageTimer::new(true);
+        a.add("verify", 1.0);
+        let mut b = StageTimer::new(true);
+        b.add("verify", 2.0);
+        b.add("commit", 3.0);
+        a.merge(&b);
+        assert!((a.seconds["verify"] - 3.0).abs() < 1e-12);
+        assert_eq!(a.calls["commit"], 1);
+        assert!((a.total() - 6.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,260 @@
+//! Rust mirror of `python/compile/grammar.py` — the seeded stochastic
+//! grammar the teacher was trained on. Must stay bit-for-bit identical to
+//! the python side: prompts sampled here are in-distribution for the
+//! trained checkpoint, and the parity vectors in `artifacts/manifest.json`
+//! are asserted by integration tests.
+
+use crate::config::contract::{BOS_ID, FIRST_TOKEN, VOCAB};
+use crate::util::rng::splitmix64;
+
+pub const NUM_TOPICS: u64 = 8;
+
+/// Benchmark-family profile (paper §5.1): `Code` = HumanEval-style
+/// (mostly deterministic), `Chat` = MT-Bench-style (broader branching).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Profile {
+    Code,
+    Chat,
+}
+
+impl Profile {
+    pub fn seed(&self) -> u64 {
+        match self {
+            Profile::Code => 0x9E37_79B9_7F4A_7C15,
+            Profile::Chat => 0xC2B2_AE3D_27D4_EB4F,
+        }
+    }
+
+    fn branch_w64(&self) -> [u64; 4] {
+        match self {
+            Profile::Code => [44, 16, 4, 0],
+            Profile::Chat => [22, 22, 13, 7],
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Profile::Code => "code",
+            Profile::Chat => "chat",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "code" => Some(Profile::Code),
+            "chat" => Some(Profile::Chat),
+            _ => None,
+        }
+    }
+}
+
+const PROB_W256: [&[u64]; 4] = [&[256], &[204, 52], &[179, 51, 26], &[153, 51, 31, 21]];
+
+#[derive(Clone, Copy, Debug)]
+pub struct Grammar {
+    pub profile: Profile,
+}
+
+impl Grammar {
+    pub fn new(profile: Profile) -> Self {
+        Self { profile }
+    }
+
+    pub fn code() -> Self {
+        Self::new(Profile::Code)
+    }
+
+    pub fn chat() -> Self {
+        Self::new(Profile::Chat)
+    }
+
+    pub fn topic_of(topic_token: i32) -> u64 {
+        topic_token as u64 % NUM_TOPICS
+    }
+
+    fn context_hash(&self, b: i32, topic_id: u64) -> u64 {
+        splitmix64(
+            (b as u64)
+                .wrapping_mul(0x0000_0100_0000_01B3)
+                ^ topic_id.wrapping_mul(0x0100_0193)
+                ^ self.profile.seed(),
+        )
+    }
+
+    /// Unrotated candidate set for context (b, topic).
+    pub fn base_candidates(&self, b: i32, topic_id: u64) -> Vec<i32> {
+        let h = self.context_hash(b, topic_id);
+        let sel = h & 63;
+        let mut n = 1usize;
+        let mut acc = 0u64;
+        for (i, w) in self.profile.branch_w64().iter().enumerate() {
+            acc += w;
+            if sel < acc {
+                n = i + 1;
+                break;
+            }
+        }
+        let span = (VOCAB - FIRST_TOKEN as usize) as u64;
+        let mut toks: Vec<i32> = Vec::with_capacity(n);
+        let mut hh = h;
+        for i in 0..n {
+            hh = splitmix64(hh ^ (i as u64 + 1));
+            let mut t = FIRST_TOKEN + (hh % span) as i32;
+            while toks.contains(&t) {
+                t = FIRST_TOKEN + ((t - FIRST_TOKEN + 1) % span as i32);
+            }
+            toks.push(t);
+        }
+        toks
+    }
+
+    /// Candidates in preference order (rotated by `a mod n`) + weights/256.
+    pub fn dist(&self, a: i32, b: i32, topic_id: u64) -> (Vec<i32>, &'static [u64]) {
+        let toks = self.base_candidates(b, topic_id);
+        let n = toks.len();
+        let rot = (a as usize) % n;
+        let rotated: Vec<i32> = toks[rot..].iter().chain(&toks[..rot]).copied().collect();
+        (rotated, PROB_W256[n - 1])
+    }
+
+    pub fn greedy_next(&self, a: i32, b: i32, topic_id: u64) -> i32 {
+        self.dist(a, b, topic_id).0[0]
+    }
+
+    pub fn sample_next(&self, a: i32, b: i32, topic_id: u64, state: u64) -> (i32, u64) {
+        let (toks, w256) = self.dist(a, b, topic_id);
+        let state = splitmix64(state);
+        let r = state & 255;
+        let mut acc = 0u64;
+        for (t, w) in toks.iter().zip(w256) {
+            acc += w;
+            if r < acc {
+                return (*t, state);
+            }
+        }
+        (*toks.last().unwrap(), state)
+    }
+
+    pub fn sample_topic_token(state: u64) -> (i32, u64) {
+        let state = splitmix64(state);
+        (FIRST_TOKEN + (state % (VOCAB - FIRST_TOKEN as usize) as u64) as i32, state)
+    }
+
+    /// `[BOS, topic, ...]` of `length` tokens (parity with python).
+    pub fn sample_sequence(&self, length: usize, seed: u64, topic_token: Option<i32>) -> Vec<i32> {
+        let mut state = splitmix64(seed ^ self.profile.seed());
+        let mut out = vec![BOS_ID];
+        let topic = match topic_token {
+            Some(t) => t,
+            None => {
+                let (t, s) = Self::sample_topic_token(state);
+                state = s;
+                t
+            }
+        };
+        if length > 1 {
+            out.push(topic);
+        }
+        let tid = Self::topic_of(topic);
+        let (mut a, mut b) = (BOS_ID, topic);
+        while out.len() < length {
+            let (t, s) = self.sample_next(a, b, tid, state);
+            state = s;
+            out.push(t);
+            a = b;
+            b = t;
+        }
+        out
+    }
+
+    /// Sample `n` more tokens continuing a context whose last two tokens
+    /// are `(a, b)` under `topic_token` (parity with python
+    /// `continue_sequence`, generalized to any context tail).
+    pub fn continue_from(&self, a: i32, b: i32, topic_token: i32, n: usize, seed: u64) -> Vec<i32> {
+        let tid = Self::topic_of(topic_token);
+        let mut state = splitmix64(seed ^ 0xA5A5_A5A5);
+        let (mut a, mut b) = (a, b);
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            let (t, s) = self.sample_next(a, b, tid, state);
+            state = s;
+            out.push(t);
+            a = b;
+            b = t;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splitmix_parity_with_python() {
+        assert_eq!(splitmix64(0), 0xE220_A839_7B1D_CDAF);
+    }
+
+    #[test]
+    fn sequences_are_deterministic_and_bos_prefixed() {
+        let g = Grammar::chat();
+        let a = g.sample_sequence(32, 7, None);
+        let b = g.sample_sequence(32, 7, None);
+        assert_eq!(a, b);
+        assert_eq!(a[0], BOS_ID);
+        assert_eq!(a.len(), 32);
+        assert!(a[1..].iter().all(|t| (FIRST_TOKEN..VOCAB as i32).contains(t)));
+    }
+
+    #[test]
+    fn topic_token_respected() {
+        let g = Grammar::code();
+        let s = g.sample_sequence(16, 3, Some(100));
+        assert_eq!(s[1], 100);
+    }
+
+    #[test]
+    fn rotation_gives_order2_dependence() {
+        let g = Grammar::chat();
+        let mut found = false;
+        for b in 2..200 {
+            if g.base_candidates(b, 0).len() >= 2 {
+                assert_ne!(g.greedy_next(0, b, 0), g.greedy_next(1, b, 0));
+                found = true;
+                break;
+            }
+        }
+        assert!(found);
+    }
+
+    #[test]
+    fn profiles_differ_in_branching() {
+        let mean = |g: Grammar| {
+            let mut n = 0usize;
+            let mut c = 0usize;
+            for b in 2..200 {
+                for tid in 0..8 {
+                    n += g.base_candidates(b, tid).len();
+                    c += 1;
+                }
+            }
+            n as f64 / c as f64
+        };
+        assert!(mean(Grammar::chat()) > mean(Grammar::code()) + 0.2);
+    }
+
+    #[test]
+    fn continue_from_consistent_with_dist() {
+        let g = Grammar::chat();
+        let seq = g.sample_sequence(16, 9, None);
+        let topic = seq[1];
+        let cont = g.continue_from(seq[14], seq[15], topic, 10, 3);
+        let tid = Grammar::topic_of(topic);
+        let (mut a, mut b) = (seq[14], seq[15]);
+        for t in cont {
+            assert!(g.dist(a, b, tid).0.contains(&t));
+            a = b;
+            b = t;
+        }
+    }
+}

@@ -1,0 +1,9 @@
+//! Synthetic workload substrate: the rust mirror of the python grammar
+//! (bit-for-bit parity) and the MT-Bench/HumanEval-style prompt generator
+//! used by every experiment (paper §5.1, Fig 1).
+
+pub mod grammar;
+pub mod prompts;
+
+pub use grammar::{Grammar, Profile};
+pub use prompts::{ConversationSpec, WorkloadSpec};

@@ -1,0 +1,183 @@
+//! Prompt-set generation — the evaluation workload of paper §5.1:
+//! 80 HumanEval-style single-turn prompts + 80 MT-Bench-style two-turn
+//! conversations = 240 turns. Lengths are drawn from seeded distributions;
+//! the default is CPU-scaled (the paper's absolute lengths — mean prompt
+//! ~501, output ~891 — exceed this build's C=1024 cache with generation,
+//! so the *shape* is preserved at ~1/4 scale; see DESIGN.md §1).
+//!
+//! Turn-1 prompts are sampled from the grammar directly. Follow-up turn
+//! prompts must continue the *live* conversation context (which includes
+//! generated tokens), so they are materialized at run time by the
+//! coordinator via [`ConversationSpec::followup_prompt`].
+
+use super::grammar::{Grammar, Profile};
+use crate::util::SplitMix64;
+
+/// Workload-level configuration.
+#[derive(Clone, Debug)]
+pub struct WorkloadSpec {
+    /// Single-turn code-profile conversations (HumanEval-style).
+    pub code_conversations: usize,
+    /// Two-turn chat-profile conversations (MT-Bench-style).
+    pub chat_conversations: usize,
+    /// Mean turn-1 prompt length (tokens); actual lengths jitter ±~40%.
+    pub prompt_mean: usize,
+    /// Mean follow-up prompt length.
+    pub followup_mean: usize,
+    pub seed: u64,
+}
+
+impl Default for WorkloadSpec {
+    fn default() -> Self {
+        // 80 + 80 conversations -> 240 turns, matching the paper's count.
+        // Lengths sized so a two-turn conversation (2 prompts + 2
+        // generations + tree headroom) fits the C=512 artifact cache.
+        Self {
+            code_conversations: 80,
+            chat_conversations: 80,
+            prompt_mean: 64,
+            followup_mean: 32,
+            seed: 0,
+        }
+    }
+}
+
+impl WorkloadSpec {
+    /// A small smoke-sized workload (tests, examples).
+    pub fn smoke() -> Self {
+        Self { code_conversations: 3, chat_conversations: 3, prompt_mean: 32,
+               followup_mean: 16, seed: 0 }
+    }
+
+    pub fn total_turns(&self) -> usize {
+        self.code_conversations + 2 * self.chat_conversations
+    }
+
+    /// Materialize the conversation specs (deterministic in `seed`).
+    pub fn conversations(&self) -> Vec<ConversationSpec> {
+        let mut out = Vec::with_capacity(self.code_conversations + self.chat_conversations);
+        let mut id = 0usize;
+        for i in 0..self.code_conversations {
+            out.push(self.spec(id, Profile::Code, 1, self.seed ^ (0xC0DE + i as u64)));
+            id += 1;
+        }
+        for i in 0..self.chat_conversations {
+            out.push(self.spec(id, Profile::Chat, 2, self.seed ^ (0xCAA7 + i as u64)));
+            id += 1;
+        }
+        out
+    }
+
+    fn spec(&self, id: usize, profile: Profile, turns: usize, seed: u64) -> ConversationSpec {
+        let mut rng = SplitMix64::new(seed);
+        let jitter = |rng: &mut SplitMix64, mean: usize| -> usize {
+            let lo = (mean as f64 * 0.6) as u64;
+            let hi = (mean as f64 * 1.5) as u64;
+            rng.range(lo.max(4), hi.max(lo + 1)) as usize
+        };
+        let mut prompt_lens = vec![jitter(&mut rng, self.prompt_mean)];
+        for _ in 1..turns {
+            prompt_lens.push(jitter(&mut rng, self.followup_mean));
+        }
+        ConversationSpec { id, profile, prompt_lens, seed: rng.next_u64() }
+    }
+}
+
+/// One conversation: 1 turn (code) or 2 turns (chat).
+#[derive(Clone, Debug)]
+pub struct ConversationSpec {
+    pub id: usize,
+    pub profile: Profile,
+    /// Prompt length per turn.
+    pub prompt_lens: Vec<usize>,
+    pub seed: u64,
+}
+
+impl ConversationSpec {
+    pub fn turns(&self) -> usize {
+        self.prompt_lens.len()
+    }
+
+    pub fn grammar(&self) -> Grammar {
+        Grammar::new(self.profile)
+    }
+
+    /// Turn-1 prompt: `[BOS, topic, ...]`.
+    pub fn first_prompt(&self) -> Vec<i32> {
+        self.grammar().sample_sequence(self.prompt_lens[0], self.seed, None)
+    }
+
+    /// The conversation topic token (position 1 of turn 1).
+    pub fn topic_token(&self) -> i32 {
+        self.first_prompt()[1]
+    }
+
+    /// A follow-up turn prompt continuing the live context whose last two
+    /// tokens are `(a, b)` (committed prompt+generation so far).
+    pub fn followup_prompt(&self, turn: usize, a: i32, b: i32) -> Vec<i32> {
+        assert!(turn >= 1 && turn < self.turns());
+        self.grammar().continue_from(
+            a,
+            b,
+            self.topic_token(),
+            self.prompt_lens[turn],
+            self.seed ^ (turn as u64).wrapping_mul(0x7EA7),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_matches_paper_turn_count() {
+        let w = WorkloadSpec::default();
+        assert_eq!(w.total_turns(), 240);
+        let convs = w.conversations();
+        assert_eq!(convs.len(), 160);
+        assert_eq!(convs.iter().filter(|c| c.profile == Profile::Code).count(), 80);
+        assert!(convs.iter().filter(|c| c.profile == Profile::Chat).all(|c| c.turns() == 2));
+        assert!(convs.iter().filter(|c| c.profile == Profile::Code).all(|c| c.turns() == 1));
+    }
+
+    #[test]
+    fn deterministic_in_seed() {
+        let a = WorkloadSpec::default().conversations();
+        let b = WorkloadSpec::default().conversations();
+        assert_eq!(a[17].first_prompt(), b[17].first_prompt());
+        let mut w = WorkloadSpec::default();
+        w.seed = 1;
+        let c = w.conversations();
+        assert_ne!(a[17].first_prompt(), c[17].first_prompt());
+    }
+
+    #[test]
+    fn prompt_lengths_jitter_around_mean() {
+        let w = WorkloadSpec::default();
+        let lens: Vec<usize> =
+            w.conversations().iter().map(|c| c.prompt_lens[0]).collect();
+        let mean = lens.iter().sum::<usize>() as f64 / lens.len() as f64;
+        assert!((mean - w.prompt_mean as f64).abs() < w.prompt_mean as f64 * 0.25,
+                "mean {mean}");
+        assert!(lens.iter().any(|l| *l != lens[0]), "lengths must vary");
+    }
+
+    #[test]
+    fn followup_continues_topic() {
+        let w = WorkloadSpec::smoke();
+        let conv = w.conversations().into_iter().find(|c| c.turns() == 2).unwrap();
+        let p1 = conv.first_prompt();
+        let f = conv.followup_prompt(1, p1[p1.len() - 2], p1[p1.len() - 1]);
+        assert_eq!(f.len(), conv.prompt_lens[1]);
+        // every follow-up token is a grammar-valid continuation
+        let g = conv.grammar();
+        let tid = Grammar::topic_of(conv.topic_token());
+        let (mut a, mut b) = (p1[p1.len() - 2], p1[p1.len() - 1]);
+        for t in f {
+            assert!(g.dist(a, b, tid).0.contains(&t));
+            a = b;
+            b = t;
+        }
+    }
+}

@@ -1,0 +1,27 @@
+//! Cross-module integration tests on the SimBackend (no artifacts needed).
+use eagle_pangu::config::RunConfig;
+use eagle_pangu::coordinator::{run_workload, BackendSpec, CoordinatorConfig};
+use eagle_pangu::metrics::{pair_turns, ThroughputReport};
+use eagle_pangu::workload::WorkloadSpec;
+
+#[test]
+fn coordinator_to_report_pipeline() {
+    let mut run = RunConfig::default();
+    run.max_new_tokens = 10;
+    let dir = std::env::temp_dir().join(format!("eagle_it_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let cfg = CoordinatorConfig {
+        world_size: 2,
+        run,
+        workload: WorkloadSpec::smoke(),
+        backend: BackendSpec::Sim { agree_pct: 85 },
+        trace_dir: dir.clone(),
+        run_baseline: true,
+        run_ea: true,
+        verbose: false,
+    };
+    let records = run_workload(&cfg).unwrap();
+    let report = ThroughputReport::from_pairs(&pair_turns(&records));
+    assert_eq!(report.turns, 9);
+    let _ = std::fs::remove_dir_all(&dir);
+}
