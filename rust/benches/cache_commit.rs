@@ -67,6 +67,23 @@ fn main() {
             unsafe_truncate(&mut cache3, t0);
             black_box(cache3.len());
         });
+
+        // Prefix-relative tail commit (the engine's steady-state fast
+        // path): no identity-prefix vector, no gather scratch — compare
+        // against round_*_path_commit_fast above.
+        let mut cache4 = ManagedCache::new(dims, cap, strategy, true);
+        cache4.append_committed(&rows(dims, 128, 1.0), &rows(dims, 128, 2.0), 128, 128).unwrap();
+        cache4.append_committed(&rows(dims, 128, 3.0), &rows(dims, 128, 4.0), 128, 128).unwrap();
+        // non-identity increasing tail: forces real row moves (an identity
+        // tail would hit the `o == i` no-op fast-out under SegmentShare)
+        let tail: Vec<usize> = (0..a).map(|i| i * 3 + (i > 0) as usize).collect();
+        bench(&format!("round_{}_path_commit_tail", strategy.as_str()), 30.0, 7, || {
+            cache4.begin_branch().unwrap();
+            cache4.append_branch(&k_new, &k_new, 32, m).unwrap();
+            cache4.commit_path_tail(&tail).unwrap();
+            unsafe_truncate(&mut cache4, t0);
+            black_box(cache4.len());
+        });
     }
 }
 

@@ -1,14 +1,27 @@
 //! End-to-end decode bench: one full turn, baseline vs EA, on the real
 //! artifacts when present (else the SimBackend). This is the per-turn
 //! version of E1 — `eagle-pangu bench-e1` regenerates the full Table 1.
+//!
+//! Also emits `BENCH_hotpath.json` — machine-readable rounds/sec,
+//! tokens/sec and bytes-allocated/round for the EA steady state, so the
+//! perf trajectory of the hot path is tracked across PRs (compare against
+//! the previous PR's file).
 
 use eagle_pangu::backend::sim::SimBackend;
 use eagle_pangu::backend::ModelBackend;
 use eagle_pangu::config::{CacheStrategy, RunConfig};
 use eagle_pangu::engine::Engine;
+use eagle_pangu::json::Json;
 use eagle_pangu::runtime::PjrtBackend;
 use eagle_pangu::util::bench::{bench, black_box};
 use eagle_pangu::workload::Grammar;
+use eagle_pangu::util::alloc_count::CountingAlloc;
+use std::time::Instant;
+
+// Count every allocation (threshold 0): the bytes-allocated/round series
+// in BENCH_hotpath.json.
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc::new(0);
 
 fn backend() -> Box<dyn ModelBackend> {
     match PjrtBackend::load("artifacts") {
@@ -25,8 +38,10 @@ fn main() {
     let max_new = 48;
 
     let mut b = backend();
+    let backend_name = b.name();
     let cfg = RunConfig::default();
     let mut engine = Engine::new(&mut *b, cfg.clone());
+    engine.warmup().unwrap();
     bench("turn_baseline_48tok", 500.0, 3, || {
         engine.reset();
         let out = engine.generate_baseline(&prompt, max_new).unwrap();
@@ -38,6 +53,50 @@ fn main() {
         let out = engine.generate_speculative(&prompt, max_new).unwrap();
         black_box(out.tokens.len());
     });
+
+    // ---- hot-path steady-state measurement (machine-readable) ----
+    // Warm every buffer to its high-water mark, then measure a sustained
+    // run: rounds/sec, tokens/sec and allocator traffic per round.
+    engine.reset();
+    engine.generate_speculative(&prompt, max_new).unwrap();
+    engine.reset();
+    let bytes0 = ALLOC.bytes();
+    let calls0 = ALLOC.allocs();
+    let t0 = Instant::now();
+    let mut rounds = 0u64;
+    let mut tokens = 0u64;
+    let mut turns = 0u64;
+    while t0.elapsed().as_secs_f64() < 2.0 {
+        engine.reset();
+        let out = engine.generate_speculative(&prompt, max_new).unwrap();
+        rounds += out.rounds;
+        tokens += out.tokens.len() as u64;
+        turns += 1;
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    let bytes = ALLOC.bytes() - bytes0;
+    let calls = ALLOC.allocs() - calls0;
+    let rounds_per_sec = rounds as f64 / secs;
+    let tokens_per_sec = tokens as f64 / secs;
+    let bytes_per_round = bytes as f64 / rounds.max(1) as f64;
+    let allocs_per_round = calls as f64 / rounds.max(1) as f64;
+    println!(
+        "hotpath: {rounds_per_sec:.0} rounds/s  {tokens_per_sec:.0} tok/s  \
+         {bytes_per_round:.0} B alloc/round  {allocs_per_round:.1} allocs/round \
+         ({turns} turns)"
+    );
+    let mut j = Json::obj();
+    j.push("bench", "end_to_end_hotpath")
+        .push("backend", backend_name)
+        .push("mode", engine.cfg.mode.as_str())
+        .push("turns", turns)
+        .push("rounds", rounds)
+        .push("rounds_per_sec", rounds_per_sec)
+        .push("tokens_per_sec", tokens_per_sec)
+        .push("bytes_allocated_per_round", bytes_per_round)
+        .push("allocs_per_round", allocs_per_round);
+    std::fs::write("BENCH_hotpath.json", j.to_string_pretty()).unwrap();
+    println!("wrote BENCH_hotpath.json");
 
     let mut cfg2 = cfg.clone();
     cfg2.tree.budget = 8;

@@ -1,9 +1,11 @@
 //! Mask-construction micro-bench (paper §3.3 implementation note):
-//! dense ancestor-walk builder vs ancestor-table/bitset builder across
-//! speculative budgets — the paper's "dense vs structured masks"
-//! trade-off, plus the chain-mask fast path used by prefill/baseline.
+//! dense ancestor-walk builder vs ancestor-table/bitset builder vs the
+//! incremental builder across speculative budgets — the paper's "dense vs
+//! structured masks" trade-off plus this repo's `O(S*Δt + S*S)`
+//! incremental path — and the chain-mask fast path used by
+//! prefill/baseline, full vs incremental.
 
-use eagle_pangu::tree::{MaskBuilder, SpecTree, Tensorized};
+use eagle_pangu::tree::{MaskBuilder, MaskStream, SpecTree, Tensorized};
 use eagle_pangu::util::bench::{bench, black_box};
 use eagle_pangu::util::SplitMix64;
 
@@ -29,9 +31,9 @@ fn random_tree(budget: usize, seed: u64) -> SpecTree {
 }
 
 fn main() {
-    println!("== mask construction: dense vs ancestor-table (paper §3.3) ==");
+    println!("== mask construction: dense vs ancestor-table vs incremental (paper §3.3) ==");
     let cap = 512;
-    let mb = MaskBuilder::new(cap);
+    let mut mb = MaskBuilder::new(cap);
     let t = 384; // committed prefix length
     for (m, s_pad) in [(15, 16usize), (63, 64), (127, 128), (255, 256)] {
         let tens = Tensorized::from_tree(&random_tree(m, 7), s_pad, true).unwrap();
@@ -44,7 +46,33 @@ fn main() {
             mb.build_table(&mut buf, &tens, t, None);
             black_box(buf.len());
         });
+        // steady state: prefix unchanged between rounds (Δt amortized by
+        // the growing-prefix sweep below), spec block rewritten
+        bench(&format!("mask_incr_steady_m{m}_s{s_pad}"), 25.0, 7, || {
+            let inc = mb.tree_incremental(MaskStream::TeacherTree, &tens, t, None);
+            black_box(inc.len());
+        });
     }
+
+    println!("== growing-prefix sweep: full rebuild vs incremental delta (Δt=3/round) ==");
+    for (m, s_pad) in [(15, 16usize), (63, 64), (127, 128), (255, 256)] {
+        let tens = Tensorized::from_tree(&random_tree(m, 11), s_pad, true).unwrap();
+        let mut buf = Vec::new();
+        let mut t_full = 0usize;
+        bench(&format!("mask_full_grow_m{m}"), 25.0, 7, || {
+            t_full = if t_full + 3 >= cap { 0 } else { t_full + 3 };
+            mb.build_auto(&mut buf, &tens, t_full, None);
+            black_box(buf.len());
+        });
+        let mut t_inc = 0usize;
+        bench(&format!("mask_incr_grow_m{m}"), 25.0, 7, || {
+            t_inc = if t_inc + 3 >= cap { 0 } else { t_inc + 3 };
+            let inc = mb.tree_incremental(MaskStream::TeacherTree, &tens, t_inc, None);
+            black_box(inc.len());
+        });
+    }
+
+    println!("== chain masks (prefill/baseline/draft refresh) ==");
     let mut buf = Vec::new();
     bench("mask_chain_s8_prefill_row", 25.0, 7, || {
         mb.build_chain(&mut buf, 8, 1, t, None);
@@ -53,5 +81,11 @@ fn main() {
     bench("mask_chain_s128_prefill_chunk", 25.0, 7, || {
         mb.build_chain(&mut buf, 128, 128, t, None);
         black_box(buf.len());
+    });
+    let mut t_chain = 0usize;
+    bench("mask_chain_incr_s8_decode_step", 25.0, 7, || {
+        t_chain = if t_chain + 1 >= cap { 0 } else { t_chain + 1 };
+        let inc = mb.chain_incremental(MaskStream::TeacherChain, 8, 1, t_chain, None);
+        black_box(inc.len());
     });
 }

@@ -5,7 +5,7 @@
 //!
 //! Requires `make artifacts`; skips gracefully otherwise.
 
-use eagle_pangu::backend::{KvView, ModelBackend, StepArgs};
+use eagle_pangu::backend::{KvView, ModelBackend, StepArgs, StepScratch};
 use eagle_pangu::config::contract::NEG_INF;
 use eagle_pangu::config::ExecMode;
 use eagle_pangu::runtime::PjrtBackend;
@@ -40,9 +40,10 @@ fn main() {
                 mask[i * w + cap + j] = 0.0;
             }
         }
+        let mut out = StepScratch::new();
         for mode in [ExecMode::Fused, ExecMode::Eager] {
             bench(&format!("teacher_{}_s{s}", mode.as_str()), 200.0, 5, || {
-                let out = backend
+                backend
                     .teacher_step(mode, StepArgs {
                         tokens: &tokens,
                         positions: &positions,
@@ -50,7 +51,7 @@ fn main() {
                         kv: KvView { k: &k, v: &v },
                         feats_in: None,
                         probe: false,
-                    })
+                    }, &mut out)
                     .unwrap();
                 black_box(out.logits[0]);
             });
@@ -68,8 +69,9 @@ fn main() {
             mask[i * w..i * w + t].fill(0.0);
             mask[i * w + cap + i] = 0.0;
         }
+        let mut out = StepScratch::new();
         bench(&format!("draft_s{s}"), 200.0, 5, || {
-            let out = backend
+            backend
                 .draft_step(StepArgs {
                     tokens: &tokens,
                     positions: &positions,
@@ -77,7 +79,7 @@ fn main() {
                     kv: KvView { k: &dk, v: &dv },
                     feats_in: Some(&feats),
                     probe: false,
-                })
+                }, &mut out)
                 .unwrap();
             black_box(out.logits[0]);
         });

@@ -4,49 +4,53 @@
 //! in production against AOT artifacts ([`crate::runtime::PjrtBackend`]).
 //!
 //! The call contract mirrors the AOT modules (DESIGN.md §2): the backend
-//! *reads* a committed-prefix KV cache and *returns* the KV rows of the S
-//! new tokens; it never writes any cache — all cache mutation is owned by
+//! *reads* a committed-prefix KV cache and *writes* the logits/features/KV
+//! rows of the S new tokens into a caller-provided [`StepScratch`]; it
+//! never writes any cache — all cache mutation is owned by
 //! [`crate::cache::ManagedCache`] ("state safety", paper §3.3).
+//!
+//! # Scratch-buffer output contract
+//!
+//! Steps used to return a freshly allocated `StepOut` (four vocab- or
+//! cache-row-sized `Vec`s per call — dozens of heap allocations per
+//! speculative round). They now fill a reusable [`StepScratch`] arena:
+//!
+//! * **Ownership** — the caller owns the scratch and its lifetime; the
+//!   backend must call [`StepScratch::prepare`] with the step's `s` and
+//!   its role dimensions, then overwrite every element it reports.
+//!   Buffers only grow to the high-water mark of the largest compiled S
+//!   variant; steady-state rounds are allocation-free.
+//! * **Aliasing** — `args` (tokens/positions/mask/KV views) and the
+//!   scratch are disjoint by construction: `StepArgs` holds shared
+//!   borrows, the scratch an exclusive one, so a backend can never read
+//!   its own partial outputs. The engine keeps *two* draft scratches and
+//!   ping-pongs them across tree-expansion depths because a frontier
+//!   call's inputs (parent hidden rows) live in the previous call's
+//!   scratch.
+//! * **Validity** — contents are defined only for the `s` slots of the
+//!   *most recent* step, and only until the next `prepare`. Padded-slot
+//!   values are backend-defined garbage; the tree mask force-masks them.
+//! * **PJRT** — the PJRT client currently materializes outputs as host
+//!   literal `Vec`s (an allocation per output inside the binding) before
+//!   a bounded `copy_from_slice` into the scratch, so today the
+//!   zero-allocation guarantee holds for [`sim::SimBackend`] (what the
+//!   allocation-regression test asserts) but not yet for PJRT. Output
+//!   buffer donation — `to_literal` into a preallocated host buffer —
+//!   removes both the binding-side allocation and the copy, and the
+//!   scratch API makes that a backend-local change (ROADMAP open item).
 
 pub mod sim;
 
 use crate::config::{Contract, ExecMode};
 use anyhow::Result;
 
+pub use crate::util::arena::StepScratch;
+
 /// Read-only view of a KV cache buffer pair, layout `[L, cap, H, Dh]`.
 #[derive(Clone, Copy)]
 pub struct KvView<'a> {
     pub k: &'a [f32],
     pub v: &'a [f32],
-}
-
-/// Outputs of one teacher/draft step over an S-token block.
-#[derive(Clone, Debug)]
-pub struct StepOut {
-    /// Compiled block size of the call (padded slot count).
-    pub s: usize,
-    /// `[S, V]` next-token logits per slot.
-    pub logits: Vec<f32>,
-    /// `[S, F]` feature rows (teacher: exported EAGLE features; draft: its
-    /// own hidden states, used as parent features for deeper nodes).
-    pub feats: Vec<f32>,
-    /// `[L, S, H, Dh]` KV rows for the S new tokens.
-    pub k_new: Vec<f32>,
-    pub v_new: Vec<f32>,
-    /// `[S, H]` last-layer top-1 attention column per head (probe runs only).
-    pub attn_top1: Option<Vec<i32>>,
-}
-
-impl StepOut {
-    /// Logits row for slot `i`.
-    pub fn logits_row(&self, i: usize, vocab: usize) -> &[f32] {
-        &self.logits[i * vocab..(i + 1) * vocab]
-    }
-
-    /// Feature row for slot `i`.
-    pub fn feat_row(&self, i: usize, feat_dim: usize) -> &[f32] {
-        &self.feats[i * feat_dim..(i + 1) * feat_dim]
-    }
 }
 
 /// Inputs of one step. `tokens/positions` have exactly `s` entries
@@ -70,11 +74,13 @@ pub trait ModelBackend {
     fn contract(&self) -> &Contract;
 
     /// Teacher verification/prefill step under `mode` (fused or eager
-    /// artifact — the paper's two-mode protocol).
-    fn teacher_step(&mut self, mode: ExecMode, args: StepArgs) -> Result<StepOut>;
+    /// artifact — the paper's two-mode protocol). Outputs land in `out`
+    /// per the scratch-buffer contract above.
+    fn teacher_step(&mut self, mode: ExecMode, args: StepArgs, out: &mut StepScratch)
+        -> Result<()>;
 
     /// Draft step (chain refresh or tree-frontier expansion).
-    fn draft_step(&mut self, args: StepArgs) -> Result<StepOut>;
+    fn draft_step(&mut self, args: StepArgs, out: &mut StepScratch) -> Result<()>;
 
     /// Human-readable backend id for manifests/traces.
     fn name(&self) -> &'static str;
@@ -93,17 +99,42 @@ pub fn argmax(row: &[f32]) -> usize {
     best
 }
 
-/// Top-k (index, value) pairs of a logits row, descending.
+/// Top-k (index, value) pairs of a logits row, descending by value (ties:
+/// lowest index first). Single pass with a k-sized insertion buffer — no
+/// vocab-sized index scratch, so the hot expansion loop stays
+/// allocation-small (k <= 16). A NaN logit panics loudly (backend numeric
+/// corruption must not silently degrade the speculation tree).
 pub fn topk(row: &[f32], k: usize) -> Vec<(usize, f32)> {
-    let mut idx: Vec<usize> = (0..row.len()).collect();
-    // partial selection: k is tiny (<= 16) vs V=512 — simple sort is fine,
-    // but avoid full sort: select_nth then sort the head.
-    if k < row.len() {
-        idx.select_nth_unstable_by(k, |a, b| row[*b].partial_cmp(&row[*a]).unwrap());
-        idx.truncate(k);
+    // (index i, value v) ranks above (oi, ov): higher value, ties by
+    // lower index. Total order; panics on NaN like the old sort did.
+    fn beats(i: usize, v: f32, oi: usize, ov: f32) -> bool {
+        match v.partial_cmp(&ov).expect("NaN in logits row") {
+            std::cmp::Ordering::Greater => true,
+            std::cmp::Ordering::Equal => i < oi,
+            std::cmp::Ordering::Less => false,
+        }
     }
-    idx.sort_by(|a, b| row[*b].partial_cmp(&row[*a]).unwrap());
-    idx.into_iter().map(|i| (i, row[i])).collect()
+    let k = k.min(row.len());
+    if k == 0 {
+        return Vec::new();
+    }
+    let mut out: Vec<(usize, f32)> = Vec::with_capacity(k);
+    for (i, &v) in row.iter().enumerate() {
+        if out.len() == k {
+            let (wi, wv) = out[k - 1];
+            if !beats(i, v, wi, wv) {
+                continue;
+            }
+            out.pop();
+        }
+        // insertion position: after every strictly-better entry
+        let pos = out
+            .iter()
+            .position(|&(oi, ov)| beats(i, v, oi, ov))
+            .unwrap_or(out.len());
+        out.insert(pos, (i, v));
+    }
+    out
 }
 
 /// log-softmax value of index `i` within a logits row.
@@ -135,6 +166,19 @@ mod tests {
     }
 
     #[test]
+    #[should_panic(expected = "NaN in logits row")]
+    fn topk_panics_on_nan() {
+        topk(&[1.0f32, f32::NAN, 2.0], 2);
+    }
+
+    #[test]
+    fn topk_breaks_ties_by_lowest_index() {
+        let row = [1.0f32, 2.0, 2.0, 1.0, 2.0];
+        let t = topk(&row, 3);
+        assert_eq!(t, vec![(1, 2.0), (2, 2.0), (4, 2.0)]);
+    }
+
+    #[test]
     fn log_softmax_normalizes() {
         let row = [1.0f32, 2.0, 3.0];
         let total: f64 = (0..3).map(|i| log_softmax_at(&row, i).exp()).sum();
@@ -142,16 +186,12 @@ mod tests {
     }
 
     #[test]
-    fn step_out_row_accessors() {
-        let out = StepOut {
-            s: 2,
-            logits: vec![0.0, 1.0, 2.0, 3.0],
-            feats: vec![9.0, 8.0],
-            k_new: vec![],
-            v_new: vec![],
-            attn_top1: None,
-        };
-        assert_eq!(out.logits_row(1, 2), &[2.0, 3.0]);
-        assert_eq!(out.feat_row(0, 1), &[9.0]);
+    fn scratch_row_accessors() {
+        let mut out = StepScratch::new();
+        out.prepare(2, 2, 1, 1, 1, 1, false);
+        out.logits.copy_from_slice(&[0.0, 1.0, 2.0, 3.0]);
+        out.feats.copy_from_slice(&[9.0, 8.0]);
+        assert_eq!(out.logits_row(1), &[2.0, 3.0]);
+        assert_eq!(out.feat_row(0), &[9.0]);
     }
 }

@@ -23,8 +23,12 @@
 //! Because the sim reads context strictly through mask + cache, any
 //! masking bug, cache-write bug or commit bug in the engine changes its
 //! outputs and is caught by the equivalence tests.
+//!
+//! Like every backend, the sim writes its outputs into the caller's
+//! [`StepScratch`]; the only per-call state it owns is a reusable
+//! context-reconstruction buffer, so steady-state calls allocate nothing.
 
-use super::{ModelBackend, StepArgs, StepOut};
+use super::{ModelBackend, StepArgs, StepScratch};
 use crate::config::contract::{FIRST_TOKEN, VOCAB};
 use crate::config::{Contract, ExecMode};
 use crate::util::rng::splitmix64;
@@ -40,41 +44,50 @@ pub struct SimBackend {
     /// Calls observed (per role) — used by tests and the harness.
     pub teacher_calls: u64,
     pub draft_calls: u64,
+    /// Reusable (position, token) scratch for context reconstruction —
+    /// grows once to the visible-context high-water mark.
+    seen: Vec<(i64, i64)>,
 }
 
 impl SimBackend {
     pub fn new(agree_pct: u64) -> Self {
-        Self { contract: Contract::default(), agree_pct, teacher_calls: 0, draft_calls: 0 }
+        let contract = Contract::default();
+        let seen = Vec::with_capacity(contract.cache_cap + 64);
+        Self { contract, agree_pct, teacher_calls: 0, draft_calls: 0, seen }
     }
 
     /// Context hash for slot `i`: fold (position, token) pairs of every
     /// visible column, sorted by position (stable on column order).
-    fn context_hash(&self, i: usize, args: &StepArgs) -> u64 {
+    /// `stride` is the per-row element stride of the KV buffer's layer 0
+    /// (hoisted out of the per-column loop by the caller).
+    fn context_hash(&mut self, i: usize, args: &StepArgs, stride: usize) -> u64 {
         let cap = self.contract.cache_cap;
         let s = args.tokens.len();
         let w = cap + s;
         let row = &args.mask[i * w..(i + 1) * w];
-        let mut seen: Vec<(i64, i64)> = Vec::new();
+        self.seen.clear();
         // cache columns: token at element 0, position at element 1 of the
         // layer-0 row (the sim's own KV encoding).
-        let rs = self.contract.teacher.heads * self.contract.teacher.d_head; // == draft rs? no!
-        let _ = rs;
         for (j, mval) in row.iter().take(cap).enumerate() {
             if *mval == 0.0 {
-                let tok = args.kv.k[j * self.row_stride(args)] as i64;
-                let pos = args.kv.k[j * self.row_stride(args) + 1] as i64;
-                seen.push((pos, tok));
+                let tok = args.kv.k[j * stride] as i64;
+                let pos = args.kv.k[j * stride + 1] as i64;
+                self.seen.push((pos, tok));
             }
         }
         for (j, mval) in row[cap..cap + s].iter().enumerate() {
             if *mval == 0.0 {
-                seen.push((args.positions[j] as i64, args.tokens[j] as i64));
+                self.seen.push((args.positions[j] as i64, args.tokens[j] as i64));
             }
         }
-        seen.sort_by_key(|(p, _)| *p);
+        // positions are unique across visible columns (committed prefix,
+        // tree ancestors and chain slots are all position-distinct), so
+        // the unstable sort is deterministic — and allocation-free, unlike
+        // the stable sort's merge buffer.
+        self.seen.sort_unstable_by_key(|(p, _)| *p);
         let mut h = 0x5151_5151u64;
-        for (p, t) in seen {
-            h = splitmix64(h.wrapping_mul(31) ^ ((t as u64) << 16) ^ (p as u64));
+        for (p, t) in &self.seen {
+            h = splitmix64(h.wrapping_mul(31) ^ ((*t as u64) << 16) ^ (*p as u64));
         }
         h
     }
@@ -94,60 +107,58 @@ impl SimBackend {
     }
 
     /// Deterministic candidate list for a context.
-    fn candidates(ctx: u64) -> Vec<i32> {
+    fn candidates(ctx: u64) -> [i32; TOP_N] {
         let span = (VOCAB - FIRST_TOKEN as usize) as u64;
-        let mut out: Vec<i32> = Vec::with_capacity(TOP_N);
+        let mut out = [0i32; TOP_N];
         for i in 0..TOP_N {
             let mut t = FIRST_TOKEN + (splitmix64(ctx ^ ((i as u64 + 1) * 0x9E37)) % span) as i32;
-            while out.contains(&t) {
+            while out[..i].contains(&t) {
                 t = FIRST_TOKEN + ((t - FIRST_TOKEN + 1) % span as i32);
             }
-            out.push(t);
+            out[i] = t;
         }
         out
     }
 
-    fn logits_from(cands: &[i32], vocab: usize) -> Vec<f32> {
-        let mut row = vec![-4.0f32; vocab];
+    fn write_logits(row: &mut [f32], cands: &[i32; TOP_N]) {
+        row.fill(-4.0);
         for (i, c) in cands.iter().enumerate() {
             row[*c as usize] = 6.0 - i as f32 * 0.75;
         }
-        row
     }
 
-    fn kv_rows(&self, args: &StepArgs, layers: usize, heads: usize, d_head: usize) -> Vec<f32> {
+    fn write_kv(args: &StepArgs, layers: usize, rs: usize, k_new: &mut [f32], v_new: &mut [f32]) {
         let s = args.tokens.len();
-        let rs = heads * d_head;
-        let mut out = vec![0.0f32; layers * s * rs];
+        k_new.fill(0.0);
+        v_new.fill(0.0);
         for l in 0..layers {
             for i in 0..s {
                 let off = (l * s + i) * rs;
-                out[off] = args.tokens[i] as f32;
-                out[off + 1] = args.positions[i] as f32;
+                k_new[off] = args.tokens[i] as f32;
+                k_new[off + 1] = args.positions[i] as f32;
+                v_new[off] = args.tokens[i] as f32;
+                v_new[off + 1] = args.positions[i] as f32;
             }
         }
-        out
     }
 
-    fn feats(&self, args: &StepArgs) -> Vec<f32> {
+    fn write_feats(&self, args: &StepArgs, out: &mut StepScratch) {
         let s = args.tokens.len();
         let f = self.contract.feat_dim;
-        let mut out = vec![0.0f32; s * f];
+        out.feats.fill(0.0);
         for i in 0..s {
-            out[i * f] = args.tokens[i] as f32;
-            out[i * f + 1] = args.positions[i] as f32;
+            out.feats[i * f] = args.tokens[i] as f32;
+            out.feats[i * f + 1] = args.positions[i] as f32;
         }
-        out
     }
 
-    fn probe(&self, args: &StepArgs, heads: usize) -> Option<Vec<i32>> {
+    fn write_probe(&self, args: &StepArgs, heads: usize, out: &mut StepScratch) {
         if !args.probe {
-            return None;
+            return;
         }
         let cap = self.contract.cache_cap;
         let s = args.tokens.len();
         let w = cap + s;
-        let mut out = vec![0i32; s * heads];
         for i in 0..s {
             let row = &args.mask[i * w..(i + 1) * w];
             let first = row.iter().position(|m| *m == 0.0).unwrap_or(0);
@@ -155,10 +166,38 @@ impl SimBackend {
             for h in 0..heads {
                 // even heads look far back (the "topic" dependency that
                 // Fig 7 surfaces), odd heads look local.
-                out[i * heads + h] = if h % 2 == 0 { first as i32 } else { last as i32 };
+                out.attn_top1[i * heads + h] = if h % 2 == 0 { first as i32 } else { last as i32 };
             }
         }
-        Some(out)
+    }
+
+    fn step(&mut self, args: StepArgs, teacher: bool, out: &mut StepScratch) -> Result<()> {
+        let s = args.tokens.len();
+        let v = self.contract.vocab;
+        let d = if teacher { self.contract.teacher } else { self.contract.draft };
+        out.prepare(s, v, self.contract.feat_dim, d.layers, d.heads, d.d_head, args.probe);
+        let stride = self.row_stride(&args);
+        for i in 0..s {
+            let ctx = self.context_hash(i, &args, stride);
+            let cands = if teacher {
+                Self::candidates(ctx)
+            } else if splitmix64(ctx ^ 0xD15A_6EE2) % 100 < self.agree_pct {
+                // Deterministic agreement coin per context: an agreeing
+                // draft proposes the teacher's own candidate list; a
+                // disagreeing one proposes an unrelated list (a *bad*
+                // draft — merely swapping the top-2 would be rescued by
+                // the tree's top-k children, which is exactly the point
+                // of tree speculation).
+                Self::candidates(ctx)
+            } else {
+                Self::candidates(splitmix64(ctx ^ 0xBAD_D4AF7))
+            };
+            Self::write_logits(out.logits_row_mut(i), &cands);
+        }
+        self.write_feats(&args, out);
+        Self::write_kv(&args, d.layers, d.heads * d.d_head, &mut out.k_new, &mut out.v_new);
+        self.write_probe(&args, d.heads, out);
+        Ok(())
     }
 }
 
@@ -167,54 +206,15 @@ impl ModelBackend for SimBackend {
         &self.contract
     }
 
-    fn teacher_step(&mut self, _mode: ExecMode, args: StepArgs) -> Result<StepOut> {
+    fn teacher_step(&mut self, _mode: ExecMode, args: StepArgs, out: &mut StepScratch)
+        -> Result<()> {
         self.teacher_calls += 1;
-        let s = args.tokens.len();
-        let v = self.contract.vocab;
-        let mut logits = Vec::with_capacity(s * v);
-        for i in 0..s {
-            let ctx = self.context_hash(i, &args);
-            logits.extend(Self::logits_from(&Self::candidates(ctx), v));
-        }
-        let d = self.contract.teacher;
-        Ok(StepOut {
-            s,
-            logits,
-            feats: self.feats(&args),
-            k_new: self.kv_rows(&args, d.layers, d.heads, d.d_head),
-            v_new: self.kv_rows(&args, d.layers, d.heads, d.d_head),
-            attn_top1: self.probe(&args, d.heads),
-        })
+        self.step(args, true, out)
     }
 
-    fn draft_step(&mut self, args: StepArgs) -> Result<StepOut> {
+    fn draft_step(&mut self, args: StepArgs, out: &mut StepScratch) -> Result<()> {
         self.draft_calls += 1;
-        let s = args.tokens.len();
-        let v = self.contract.vocab;
-        let mut logits = Vec::with_capacity(s * v);
-        for i in 0..s {
-            let ctx = self.context_hash(i, &args);
-            // Deterministic agreement coin per context: an agreeing draft
-            // proposes the teacher's own candidate list; a disagreeing one
-            // proposes an unrelated list (a *bad* draft — merely swapping
-            // the top-2 would be rescued by the tree's top-k children,
-            // which is exactly the point of tree speculation).
-            let cands = if splitmix64(ctx ^ 0xD15A_6EE2) % 100 < self.agree_pct {
-                Self::candidates(ctx)
-            } else {
-                Self::candidates(splitmix64(ctx ^ 0xBAD_D4AF7))
-            };
-            logits.extend(Self::logits_from(&cands, v));
-        }
-        let d = self.contract.draft;
-        Ok(StepOut {
-            s,
-            logits,
-            feats: self.feats(&args),
-            k_new: self.kv_rows(&args, d.layers, d.heads, d.d_head),
-            v_new: self.kv_rows(&args, d.layers, d.heads, d.d_head),
-            attn_top1: self.probe(&args, d.heads),
-        })
+        self.step(args, false, out)
     }
 
     fn name(&self) -> &'static str {
@@ -252,22 +252,25 @@ mod tests {
         let mut b = SimBackend::new(100);
         let (k, v) = empty_cache(b.contract());
         let mask = chain_mask(8, 3, 0);
-        let toks = [5i32, 6, 7, 0, 0, 0, 0, 0];
         let pos = [0i32, 1, 2, 0, 0, 0, 0, 0];
-        let mk_args = |tokens: &'static [i32; 8]| StepArgs {
-            tokens, positions: &pos, mask: &mask,
-            kv: KvView { k: &k, v: &v }, feats_in: None, probe: false,
+        let run = |b: &mut SimBackend, mode: ExecMode, tokens: [i32; 8]| {
+            let mut out = StepScratch::new();
+            b.teacher_step(mode, StepArgs {
+                tokens: &tokens, positions: &pos, mask: &mask,
+                kv: KvView { k: &k, v: &v }, feats_in: None, probe: false,
+            }, &mut out)
+            .unwrap();
+            out
         };
-        let o1 = b.teacher_step(ExecMode::Fused, mk_args(&[5, 6, 7, 0, 0, 0, 0, 0])).unwrap();
-        let o2 = b.teacher_step(ExecMode::Eager, mk_args(&[5, 6, 7, 0, 0, 0, 0, 0])).unwrap();
+        let o1 = run(&mut b, ExecMode::Fused, [5, 6, 7, 0, 0, 0, 0, 0]);
+        let o2 = run(&mut b, ExecMode::Eager, [5, 6, 7, 0, 0, 0, 0, 0]);
         assert_eq!(o1.logits, o2.logits, "mode must not change sim semantics");
-        let o3 = b.teacher_step(ExecMode::Fused, mk_args(&[5, 6, 9, 0, 0, 0, 0, 0])).unwrap();
+        let o3 = run(&mut b, ExecMode::Fused, [5, 6, 9, 0, 0, 0, 0, 0]);
         assert_ne!(
-            argmax(o1.logits_row(2, VOCAB)),
-            argmax(o3.logits_row(2, VOCAB)),
+            argmax(o1.logits_row(2)),
+            argmax(o3.logits_row(2)),
             "changing a visible token must change the slot's distribution"
         );
-        let _ = toks;
     }
 
     #[test]
@@ -278,13 +281,13 @@ mod tests {
         let pos = [0i32, 1, 0, 0, 0, 0, 0, 0];
         let run = |b: &mut SimBackend, t2: i32| {
             let tokens = [5, 6, t2, 0, 0, 0, 0, 0];
-            let out = b
-                .teacher_step(ExecMode::Fused, StepArgs {
-                    tokens: &tokens, positions: &pos, mask: &mask,
-                    kv: KvView { k: &k, v: &v }, feats_in: None, probe: false,
-                })
-                .unwrap();
-            out.logits_row(1, VOCAB).to_vec()
+            let mut out = StepScratch::new();
+            b.teacher_step(ExecMode::Fused, StepArgs {
+                tokens: &tokens, positions: &pos, mask: &mask,
+                kv: KvView { k: &k, v: &v }, feats_in: None, probe: false,
+            }, &mut out)
+            .unwrap();
+            out.logits_row(1).to_vec()
         };
         assert_eq!(run(&mut b, 100), run(&mut b, 200), "masked slot token leaked");
     }
@@ -302,18 +305,21 @@ mod tests {
             tokens: &tokens, positions: &pos, mask: &mask,
             kv: KvView { k: &k, v: &v }, feats_in: None, probe: false,
         };
-        let to = t.teacher_step(ExecMode::Fused, args()).unwrap();
-        let da = d_always.draft_step(args()).unwrap();
-        let dn = d_never.draft_step(args()).unwrap();
+        let mut to = StepScratch::new();
+        t.teacher_step(ExecMode::Fused, args(), &mut to).unwrap();
+        let mut da = StepScratch::new();
+        d_always.draft_step(args(), &mut da).unwrap();
+        let mut dn = StepScratch::new();
+        d_never.draft_step(args(), &mut dn).unwrap();
         for i in 0..4 {
             assert_eq!(
-                argmax(to.logits_row(i, VOCAB)),
-                argmax(da.logits_row(i, VOCAB)),
+                argmax(to.logits_row(i)),
+                argmax(da.logits_row(i)),
                 "agree_pct=100 must match teacher"
             );
             assert_ne!(
-                argmax(to.logits_row(i, VOCAB)),
-                argmax(dn.logits_row(i, VOCAB)),
+                argmax(to.logits_row(i)),
+                argmax(dn.logits_row(i)),
                 "agree_pct=0 must differ"
             );
         }
@@ -326,12 +332,12 @@ mod tests {
         let mask = chain_mask(8, 2, 0);
         let tokens = [42i32, 43, 0, 0, 0, 0, 0, 0];
         let pos = [7i32, 8, 0, 0, 0, 0, 0, 0];
-        let out = b
-            .teacher_step(ExecMode::Fused, StepArgs {
-                tokens: &tokens, positions: &pos, mask: &mask,
-                kv: KvView { k: &k, v: &v }, feats_in: None, probe: false,
-            })
-            .unwrap();
+        let mut out = StepScratch::new();
+        b.teacher_step(ExecMode::Fused, StepArgs {
+            tokens: &tokens, positions: &pos, mask: &mask,
+            kv: KvView { k: &k, v: &v }, feats_in: None, probe: false,
+        }, &mut out)
+        .unwrap();
         let rs = b.contract().teacher.heads * b.contract().teacher.d_head;
         assert_eq!(out.k_new[0], 42.0);
         assert_eq!(out.k_new[1], 7.0);
@@ -346,16 +352,33 @@ mod tests {
         let mask = chain_mask(8, 2, 5); // prefix of 5 visible
         let tokens = [1i32, 2, 0, 0, 0, 0, 0, 0];
         let pos = [5i32, 6, 0, 0, 0, 0, 0, 0];
-        let out = b
-            .draft_step(StepArgs {
-                tokens: &tokens, positions: &pos, mask: &mask,
-                kv: KvView { k: &k, v: &v }, feats_in: None, probe: true,
-            })
-            .unwrap();
-        let top1 = out.attn_top1.unwrap();
-        let heads = b.contract().draft.heads;
+        let mut out = StepScratch::new();
+        b.draft_step(StepArgs {
+            tokens: &tokens, positions: &pos, mask: &mask,
+            kv: KvView { k: &k, v: &v }, feats_in: None, probe: true,
+        }, &mut out)
+        .unwrap();
+        let top1 = out.attn_top1().unwrap();
         assert_eq!(top1[0], 0, "even head looks at the far history (topic)");
-        assert_eq!(top1[1], (CACHE_CAP + 0) as i32, "odd head looks local");
-        let _ = heads;
+        assert_eq!(top1[1], CACHE_CAP as i32, "odd head looks local");
+    }
+
+    #[test]
+    fn repeated_calls_reuse_scratch_capacity() {
+        let mut b = SimBackend::new(90);
+        let (k, v) = empty_cache(b.contract());
+        let mask = chain_mask(8, 3, 0);
+        let tokens = [5i32, 6, 7, 0, 0, 0, 0, 0];
+        let pos = [0i32, 1, 2, 0, 0, 0, 0, 0];
+        let mut out = StepScratch::new();
+        for _ in 0..3 {
+            b.teacher_step(ExecMode::Fused, StepArgs {
+                tokens: &tokens, positions: &pos, mask: &mask,
+                kv: KvView { k: &k, v: &v }, feats_in: None, probe: false,
+            }, &mut out)
+            .unwrap();
+        }
+        assert_eq!(out.s(), 8);
+        assert_eq!(out.logits.len(), 8 * VOCAB);
     }
 }

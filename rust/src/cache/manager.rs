@@ -70,6 +70,11 @@ pub struct ManagedCache {
     /// Speculative rows appended in the open branch.
     branch_rows: usize,
     branch_open: bool,
+    /// Reusable gather scratch for the general prefix-preserving fast
+    /// reorder (tail rows are tiny: <= M per commit). Kept across commits
+    /// so the steady-state round performs no heap allocation.
+    gather_k: Vec<f32>,
+    gather_v: Vec<f32>,
     pub stats: CacheStats,
 }
 
@@ -88,6 +93,8 @@ impl ManagedCache {
             branch_v: None,
             branch_rows: 0,
             branch_open: false,
+            gather_k: Vec::new(),
+            gather_v: Vec::new(),
             stats: CacheStats::default(),
         }
     }
@@ -113,13 +120,16 @@ impl ManagedCache {
         self.cap - self.len
     }
 
-    /// Reset to an empty committed state (new conversation).
+    /// Reset to an empty committed state (new conversation). Also zeroes
+    /// the stats counters: `GenOut` reports per-generation cache stats,
+    /// and a reused engine must match a fresh one field for field.
     pub fn reset(&mut self) {
         self.len = 0;
         self.branch_rows = 0;
         self.branch_open = false;
         self.branch_k = None;
         self.branch_v = None;
+        self.stats = CacheStats::default();
     }
 
     /// Layer stride in elements within a `[L, cap, H, Dh]` buffer.
@@ -138,7 +148,7 @@ impl ManagedCache {
     // Committed writes (prefill / baseline decode — no branching)
     // ------------------------------------------------------------------
 
-    /// Append `count` committed rows directly from a StepOut KV block
+    /// Append `count` committed rows directly from a step-output KV block
     /// (`rows` laid out `[L, s, H, Dh]`). Used by prefill and the
     /// baseline decoder where no speculation is in flight.
     pub fn append_committed(&mut self, k_rows: &[f32], v_rows: &[f32], s: usize, count: usize)
@@ -179,7 +189,7 @@ impl ManagedCache {
         Ok(())
     }
 
-    /// Append `count` speculative rows (from a StepOut `[L, s, H, Dh]`
+    /// Append `count` speculative rows (from a step-output `[L, s, H, Dh]`
     /// block, taking rows `[0, count)`) into the open branch at offset
     /// `branch_rows`. The committed region `[0, len)` is never written.
     pub fn append_branch(&mut self, k_rows: &[f32], v_rows: &[f32], s: usize, count: usize)
@@ -302,35 +312,121 @@ impl ManagedCache {
     }
 
     /// Prefix-sharing fast reorder: gather only rows `[len, new_len)`.
+    /// Uses the persistent `gather_*` scratch (no per-commit allocation).
     fn commit_path_fast(&mut self, path_indices: &[usize]) -> Result<()> {
         let rs = self.rstride();
         let ls = self.lstride();
         let dims = self.dims;
-        let (src_k, src_v) = match (&self.branch_k, &self.branch_v) {
-            (Some(bk), Some(bv)) => (bk.as_slice(), bv.as_slice()),
-            _ => (&self.k[..], &self.v[..]),
-        };
-        // Gather the accepted tail into a scratch (tail is tiny: <= M rows).
         let tail = &path_indices[self.len..];
-        let mut tail_k = vec![0.0f32; dims.layers * tail.len() * rs];
-        let mut tail_v = vec![0.0f32; dims.layers * tail.len() * rs];
-        for l in 0..dims.layers {
-            for (i, &src) in tail.iter().enumerate() {
-                let s_off = l * ls + src * rs;
-                let d_off = (l * tail.len() + i) * rs;
-                tail_k[d_off..d_off + rs].copy_from_slice(&src_k[s_off..s_off + rs]);
-                tail_v[d_off..d_off + rs].copy_from_slice(&src_v[s_off..s_off + rs]);
+        let n = dims.layers * tail.len() * rs;
+        self.gather_k.resize(n, 0.0);
+        self.gather_v.resize(n, 0.0);
+        {
+            let (src_k, src_v) = match (&self.branch_k, &self.branch_v) {
+                (Some(bk), Some(bv)) => (bk.as_slice(), bv.as_slice()),
+                _ => (&self.k[..], &self.v[..]),
+            };
+            // Gather the accepted tail (tail is tiny: <= M rows).
+            for l in 0..dims.layers {
+                for (i, &src) in tail.iter().enumerate() {
+                    let s_off = l * ls + src * rs;
+                    let d_off = (l * tail.len() + i) * rs;
+                    self.gather_k[d_off..d_off + rs].copy_from_slice(&src_k[s_off..s_off + rs]);
+                    self.gather_v[d_off..d_off + rs].copy_from_slice(&src_v[s_off..s_off + rs]);
+                }
             }
         }
         for l in 0..dims.layers {
             for i in 0..tail.len() {
                 let d_off = l * ls + (self.len + i) * rs;
                 let s_off = (l * tail.len() + i) * rs;
-                self.k[d_off..d_off + rs].copy_from_slice(&tail_k[s_off..s_off + rs]);
-                self.v[d_off..d_off + rs].copy_from_slice(&tail_v[s_off..s_off + rs]);
+                self.k[d_off..d_off + rs].copy_from_slice(&self.gather_k[s_off..s_off + rs]);
+                self.v[d_off..d_off + rs].copy_from_slice(&self.gather_v[s_off..s_off + rs]);
             }
         }
         self.stats.commit_bytes += (4 * dims.layers * tail.len() * rs * 4) as u64;
+        Ok(())
+    }
+
+    /// Prefix-relative path commit — the steady-state fast path.
+    ///
+    /// `tail_offsets` are *branch-row* indices (0-based within the open
+    /// branch, strictly increasing); the committed prefix `[0, len)` is
+    /// implicitly preserved, so the caller never materializes the
+    /// `(0..len).collect()` identity vector that the absolute-index
+    /// [`ManagedCache::commit_path`] requires. Equivalent to
+    /// `commit_path(&[0, 1, .., len-1, len+tail[0], len+tail[1], ..])` —
+    /// property-tested against it.
+    ///
+    /// Because offsets are strictly increasing, every source row sits at
+    /// or after its destination and the SegmentShare gather runs in-place
+    /// front-to-back (`copy_within`), with no scratch at all.
+    ///
+    /// `commit_bytes` counts rows *actually moved* (already-in-place rows
+    /// are free). Note this is lower than the legacy `commit_path` fast
+    /// path reported for the same commit: that path double-moves every
+    /// tail row through a gather scratch and counts both moves.
+    pub fn commit_path_tail(&mut self, tail_offsets: &[usize]) -> Result<()> {
+        if !self.branch_open {
+            bail!("commit_path_tail without an open branch");
+        }
+        let mut prev: Option<usize> = None;
+        for &o in tail_offsets {
+            if o >= self.branch_rows {
+                bail!("commit_path_tail: offset {o} out of branch rows {}", self.branch_rows);
+            }
+            if let Some(p) = prev {
+                if o <= p {
+                    bail!("commit_path_tail: offsets must be strictly increasing ({p} then {o})");
+                }
+            }
+            prev = Some(o);
+        }
+        let rs = self.rstride();
+        let ls = self.lstride();
+        let dims = self.dims;
+        let len = self.len;
+        let mut moved_rows = 0usize;
+        match (&self.branch_k, &self.branch_v) {
+            (Some(bk), Some(bv)) => {
+                // DeepCopy: gather from the branch replica into the main
+                // buffers — disjoint, plain copies (every row moves).
+                for l in 0..dims.layers {
+                    for (i, &o) in tail_offsets.iter().enumerate() {
+                        let s_off = l * ls + (len + o) * rs;
+                        let d_off = l * ls + (len + i) * rs;
+                        self.k[d_off..d_off + rs].copy_from_slice(&bk[s_off..s_off + rs]);
+                        self.v[d_off..d_off + rs].copy_from_slice(&bv[s_off..s_off + rs]);
+                        moved_rows += 1;
+                    }
+                }
+            }
+            _ => {
+                // SegmentShare: in-place forward gather. Strictly
+                // increasing offsets give `o >= i`, so the source row is
+                // never overwritten before it is read.
+                for l in 0..dims.layers {
+                    for (i, &o) in tail_offsets.iter().enumerate() {
+                        if o == i {
+                            continue;
+                        }
+                        let s_off = l * ls + (len + o) * rs;
+                        let d_off = l * ls + (len + i) * rs;
+                        self.k.copy_within(s_off..s_off + rs, d_off);
+                        self.v.copy_within(s_off..s_off + rs, d_off);
+                        moved_rows += 1;
+                    }
+                }
+            }
+        }
+        self.stats.commit_bytes += (2 * moved_rows * rs * 4) as u64;
+        self.stats.fast_reorders += 1;
+        self.len += tail_offsets.len();
+        self.branch_open = false;
+        self.branch_rows = 0;
+        self.branch_k = None;
+        self.branch_v = None;
+        self.stats.commits += 1;
         Ok(())
     }
 
@@ -561,6 +657,86 @@ mod tests {
         let mut s = mk(CacheStrategy::SegmentShare, true);
         s.begin_branch().unwrap();
         assert_eq!(s.stats.replicate_bytes, 0);
+    }
+
+    #[test]
+    fn commit_path_tail_equals_identity_prefix_commit_path() {
+        for strategy in [CacheStrategy::DeepCopy, CacheStrategy::SegmentShare] {
+            let build = |tail: bool| {
+                let mut c = mk(strategy, true);
+                c.append_committed(&block(4, 10.0), &block(4, 10.0), 4, 3).unwrap();
+                c.begin_branch().unwrap();
+                c.append_branch(&block(8, 100.0), &block(8, 100.0), 8, 6).unwrap();
+                if tail {
+                    c.commit_path_tail(&[0, 2, 5]).unwrap();
+                } else {
+                    let path: Vec<usize> = vec![0, 1, 2, 3, 5, 8];
+                    c.commit_path(&path).unwrap();
+                }
+                c
+            };
+            let a = build(true);
+            let b = build(false);
+            assert_eq!(a.len(), b.len(), "{strategy:?}");
+            for r in 0..a.len() {
+                assert_eq!(a.committed_row_k(r), b.committed_row_k(r), "{strategy:?} row {r}");
+            }
+            assert_eq!(a.stats.fast_reorders, 1);
+        }
+    }
+
+    #[test]
+    fn commit_path_tail_rejects_bad_offsets() {
+        let mut c = mk(CacheStrategy::SegmentShare, true);
+        c.append_committed(&block(4, 0.0), &block(4, 0.0), 4, 2).unwrap();
+        assert!(c.commit_path_tail(&[0]).is_err(), "no branch open");
+        c.begin_branch().unwrap();
+        c.append_branch(&block(8, 1.0), &block(8, 1.0), 8, 3).unwrap();
+        assert!(c.commit_path_tail(&[3]).is_err(), "offset out of branch");
+        assert!(c.commit_path_tail(&[1, 1]).is_err(), "not strictly increasing");
+        c.commit_path_tail(&[0, 2]).unwrap();
+        assert_eq!(c.len(), 4);
+    }
+
+    #[test]
+    fn property_commit_path_tail_matches_commit_path() {
+        // The tentpole fast path vs the reference oracle: for random
+        // committed lengths, branch sizes and accepted subsets, the
+        // prefix-relative tail commit must produce the exact committed
+        // state of the absolute-index commit_path.
+        prop::for_cases(120, 0x7A11, |g| {
+            let strategy = *g.choose(&[CacheStrategy::DeepCopy, CacheStrategy::SegmentShare]);
+            let t0 = g.usize_in(0, 6);
+            let b = g.usize_in(1, 8);
+            let mut offs = Vec::new();
+            for i in 0..b {
+                if g.bool_p(0.6) {
+                    offs.push(i);
+                }
+            }
+            let build = |tail: bool| {
+                let mut c = mk(strategy, true);
+                if t0 > 0 {
+                    c.append_committed(&block(8, 10.0), &block(8, 10.0), 8, t0).unwrap();
+                }
+                c.begin_branch().unwrap();
+                c.append_branch(&block(8, 100.0), &block(8, 100.0), 8, b).unwrap();
+                if tail {
+                    c.commit_path_tail(&offs).unwrap();
+                } else {
+                    let path: Vec<usize> =
+                        (0..t0).chain(offs.iter().map(|o| t0 + o)).collect();
+                    c.commit_path(&path).unwrap();
+                }
+                c
+            };
+            let x = build(true);
+            let y = build(false);
+            assert_eq!(x.len(), y.len(), "{strategy:?}");
+            for r in 0..x.len() {
+                assert_eq!(x.committed_row_k(r), y.committed_row_k(r), "{strategy:?} row {r}");
+            }
+        });
     }
 
     #[test]

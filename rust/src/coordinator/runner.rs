@@ -9,10 +9,16 @@
 //! * rank 0 merges them into a globally sorted `trace_merged.jsonl`.
 //!
 //! Each conversation is decoded under the requested kinds ("baseline",
-//! "ea") with a fresh engine per kind; two-turn conversations keep cache
-//! state across turns and materialize follow-up prompts from the live
-//! context (MT-Bench protocol). Abnormal turns produce a failure dump and
-//! the run continues (§4.3).
+//! "ea") on **one warmed engine per worker**, `Engine::reset` between
+//! (conversation, kind) pairs: constructing a fresh engine per
+//! conversation re-allocated both multi-MB KV cache buffers, every
+//! scratch arena and the incremental mask slots, which dominated
+//! short-turn serving cost. Reset restores bit-identical fresh-engine
+//! behaviour (asserted by the engine's reuse-equivalence test), so the
+//! records are unchanged. Two-turn conversations keep cache state across
+//! turns and materialize follow-up prompts from the live context
+//! (MT-Bench protocol). Abnormal turns produce a failure dump and the run
+//! continues (§4.3).
 
 use crate::backend::{sim::SimBackend, ModelBackend};
 use crate::config::RunConfig;
@@ -119,8 +125,12 @@ fn worker(
     total: usize,
 ) -> Result<()> {
     let mut backend = cfg.backend.build().with_context(|| format!("rank {rank} backend"))?;
-    // Absorb lazy PJRT module compilation before any timed turn.
-    Engine::new(&mut *backend, cfg.run.clone()).warmup()?;
+    // One engine per worker, reused across every (conversation, kind):
+    // warmup absorbs lazy PJRT module compilation AND brings every
+    // reusable buffer (KV caches, scratch arenas, mask slots) to its
+    // high-water capacity before any timed turn.
+    let mut engine = Engine::new(&mut *backend, cfg.run.clone());
+    engine.warmup()?;
     let mut writer = TraceWriter::create(&cfg.trace_dir, rank)?;
     let kinds: Vec<&str> = [("baseline", cfg.run_baseline), ("ea", cfg.run_ea)]
         .iter()
@@ -129,7 +139,8 @@ fn worker(
         .collect();
     for conv in convs {
         for kind in &kinds {
-            if let Err(e) = run_conversation(&mut *backend, cfg, &conv, kind, rank, &mut writer) {
+            engine.reset();
+            if let Err(e) = run_conversation(&mut engine, cfg, &conv, kind, rank, &mut writer) {
                 let dump = FailureDump {
                     conversation_id: conv.id,
                     turn_idx: 0,
@@ -154,14 +165,13 @@ fn worker(
 }
 
 fn run_conversation(
-    backend: &mut dyn ModelBackend,
+    engine: &mut Engine,
     cfg: &CoordinatorConfig,
     conv: &ConversationSpec,
     kind: &str,
     rank: usize,
     writer: &mut TraceWriter,
 ) -> Result<()> {
-    let mut engine = Engine::new(backend, cfg.run.clone());
     // committed text so far (prompts + generations) for follow-up prompts
     let mut ctx: Vec<i32> = Vec::new();
     for turn in 0..conv.turns() {

@@ -18,6 +18,27 @@
 //! call; under greedy acceptance the committed text is bit-identical to
 //! teacher-only greedy decoding (asserted in tests — the paper's "matched
 //! decoding configuration" claim).
+//!
+//! # Zero-allocation steady state
+//!
+//! After warmup, a speculative round performs no vocab- or cap-sized heap
+//! allocation (asserted by `tests/alloc_regression.rs`):
+//!
+//! * backend outputs land in reusable [`StepScratch`] arenas — two draft
+//!   scratches ping-pong across expansion depths because a frontier
+//!   call's feature inputs are the *previous* call's hidden rows;
+//! * `pending_logits`/`feat_last` are copied into fixed buffers instead
+//!   of `.to_vec()`-cloned; the `uncharted` chain-refresh queue is a
+//!   [`FeatRing`] with inline feature storage;
+//! * masks come from the incremental [`MaskBuilder`] slots
+//!   (`O(S * Δt + S * S)` per round instead of `O(S * (cap + S))`);
+//! * commits use the prefix-relative [`ManagedCache::commit_path_tail`]
+//!   fast path — no `(0..t).collect()` identity vector, no gather
+//!   scratch;
+//! * token/position/feature staging buffers and the candidate pool are
+//!   engine fields reused across rounds, and [`Engine::reset`] restores a
+//!   fresh-engine state *without* dropping any of these capacities, so
+//!   the coordinator reuses one warmed engine across conversations.
 
 use crate::backend::{argmax, log_softmax_at, topk, KvView, ModelBackend, StepArgs};
 use crate::cache::ManagedCache;
@@ -25,7 +46,8 @@ use crate::config::contract::NEG_INF;
 use crate::config::{CommitMode, Contract, RunConfig};
 use crate::engine::output::{attention_distance_buckets, GenOut};
 use crate::spec::{greedy_walk, select_children, stochastic_walk, AdaptiveBudget, Candidate};
-use crate::tree::{MaskBuilder, SpecTree, Tensorized};
+use crate::tree::{MaskBuilder, MaskStream, SpecTree, Tensorized};
+use crate::util::arena::{FeatRing, StepScratch};
 use crate::util::stats::{AcceptPos, Histogram};
 use crate::util::{SplitMix64, StageTimer};
 use anyhow::{bail, Context, Result};
@@ -33,12 +55,6 @@ use std::time::Instant;
 
 /// Largest draft frontier evaluated in one call.
 const FRONTIER_CAP: usize = 64;
-
-struct FrontierNode {
-    slot: usize,
-    logits: Vec<f32>,
-    hidden: Vec<f32>,
-}
 
 /// Running statistics of one generation call.
 #[derive(Default)]
@@ -57,14 +73,29 @@ pub struct Engine<'a> {
     t_cache: ManagedCache,
     d_cache: ManagedCache,
     mb: MaskBuilder,
-    mask_buf: Vec<f32>,
-    /// Teacher logits row predicting the next token.
+    /// Teacher step outputs (prefill, baseline decode, verification).
+    t_scratch: StepScratch,
+    /// Draft step outputs, ping-ponged across expansion depths: the
+    /// frontier at depth d reads rows from `d_scratch[d_cur]` while the
+    /// depth d+1 call writes `d_scratch[1 - d_cur]`.
+    d_scratch: [StepScratch; 2],
+    d_cur: usize,
+    /// Teacher logits row predicting the next token (fixed vocab-sized
+    /// buffer, copied into — never reallocated in steady state).
     pending_logits: Vec<f32>,
     /// Teacher feature of the last committed token (feat_prev of the next).
     feat_last: Vec<f32>,
     /// Committed tokens not yet present in the draft cache, with the
     /// feature of their *predecessor* position (EAGLE input contract).
-    uncharted: Vec<(i32, Vec<f32>)>,
+    uncharted: FeatRing,
+    /// Reusable step-staging buffers.
+    tok_buf: Vec<i32>,
+    pos_buf: Vec<i32>,
+    feats_buf: Vec<f32>,
+    /// Reusable candidate pool for tree expansion.
+    cand_pool: Vec<Candidate>,
+    /// Reusable accepted-tail buffer for prefix-relative commits.
+    path_tail: Vec<usize>,
     pub timers: StageTimer,
     attn_hist: Histogram,
     rng: SplitMix64,
@@ -72,6 +103,12 @@ pub struct Engine<'a> {
     use_draft: bool,
     /// Adaptive budget controller (None when `cfg.adaptive_budget` is off).
     adaptive: Option<AdaptiveBudget>,
+}
+
+/// Copy a row into a reusable buffer without reallocating in steady state.
+fn copy_into(dst: &mut Vec<f32>, src: &[f32]) {
+    dst.clear();
+    dst.extend_from_slice(src);
 }
 
 impl<'a> Engine<'a> {
@@ -89,11 +126,8 @@ impl<'a> Engine<'a> {
         let mb = MaskBuilder::new(contract.cache_cap);
         let timers = StageTimer::new(cfg.instrument);
         let rng = SplitMix64::new(cfg.seed ^ 0xE151);
-        let adaptive = cfg.adaptive_budget.then(|| {
-            // growth headroom up to the largest compiled tree variant
-            let max = (cfg.tree.budget * 4).clamp(cfg.tree.budget, 255);
-            AdaptiveBudget::new(cfg.tree.budget, 4, max)
-        });
+        let adaptive = Self::make_adaptive(&cfg);
+        let uncharted = FeatRing::with_capacity(contract.cache_cap, contract.feat_dim);
         Self {
             backend,
             cfg,
@@ -101,16 +135,31 @@ impl<'a> Engine<'a> {
             t_cache,
             d_cache,
             mb,
-            mask_buf: Vec::new(),
+            t_scratch: StepScratch::new(),
+            d_scratch: [StepScratch::new(), StepScratch::new()],
+            d_cur: 0,
             pending_logits: Vec::new(),
             feat_last: Vec::new(),
-            uncharted: Vec::new(),
+            uncharted,
+            tok_buf: Vec::new(),
+            pos_buf: Vec::new(),
+            feats_buf: Vec::new(),
+            cand_pool: Vec::new(),
+            path_tail: Vec::new(),
             timers,
             attn_hist: attention_distance_buckets(),
             rng,
             use_draft: true,
             adaptive,
         }
+    }
+
+    fn make_adaptive(cfg: &RunConfig) -> Option<AdaptiveBudget> {
+        cfg.adaptive_budget.then(|| {
+            // growth headroom up to the largest compiled tree variant
+            let max = (cfg.tree.budget * 4).clamp(cfg.tree.budget, 255);
+            AdaptiveBudget::new(cfg.tree.budget, 4, max)
+        })
     }
 
     /// Current tree node budget (adaptive or configured).
@@ -126,7 +175,8 @@ impl<'a> Engine<'a> {
     /// Pre-execute every (role, mode, S) variant this config will touch,
     /// with dummy inputs. PJRT compiles modules lazily (~seconds per
     /// module for 13 MB HLO text); timed runs call this first so compile
-    /// cost never lands inside a measured turn.
+    /// cost never lands inside a measured turn. Also brings every scratch
+    /// arena to its high-water capacity.
     pub fn warmup(&mut self) -> Result<()> {
         let c = self.contract.clone();
         let kzero = vec![0.0f32; c.teacher.cache_elems(c.cache_cap)];
@@ -153,10 +203,10 @@ impl<'a> Engine<'a> {
                 kv: KvView { k: &kzero, v: &kzero },
                 feats_in: None,
                 probe: false,
-            })?;
+            }, &mut self.t_scratch)?;
         }
         let dzero = vec![0.0f32; c.draft.cache_elems(c.cache_cap)];
-        for &s in &c.draft_s.clone() {
+        for &s in &c.draft_s {
             let tokens = vec![0i32; s];
             let positions = vec![0i32; s];
             let mask = vec![NEG_INF; s * (c.cache_cap + s)];
@@ -168,12 +218,40 @@ impl<'a> Engine<'a> {
                 kv: KvView { k: &dzero, v: &dzero },
                 feats_in: Some(&feats),
                 probe: false,
-            })?;
+            }, &mut self.d_scratch[0])?;
         }
+        // Bring the second (ping-pong) draft scratch to capacity too.
+        let d = c.draft;
+        let s_max = *c.draft_s.last().unwrap();
+        self.d_scratch[1].prepare(s_max, c.vocab, c.feat_dim, d.layers, d.heads, d.d_head, false);
+        // Pre-create every incremental mask slot this config can reach and
+        // pre-size the staging buffers: a rarer S variant appearing for
+        // the first time mid-run must not allocate in a steady-state round.
+        for &s in &c.teacher_s {
+            if s <= c.prefill_chunk() || s == verify_s {
+                self.mb.incremental(MaskStream::TeacherChain, s);
+            }
+            if s <= verify_s {
+                self.mb.incremental(MaskStream::TeacherTree, s);
+            }
+        }
+        for &s in &c.draft_s {
+            self.mb.incremental(MaskStream::DraftChain, s);
+            self.mb.incremental(MaskStream::DraftFrontier, s);
+        }
+        let stage_max = c.prefill_chunk().max(verify_s).max(s_max);
+        self.tok_buf.reserve(stage_max);
+        self.pos_buf.reserve(stage_max);
+        self.feats_buf.reserve(s_max * c.feat_dim);
         Ok(())
     }
 
-    /// Reset all decode state (new conversation).
+    /// Reset all decode state (new conversation), keeping every buffer
+    /// capacity: the warmed engine is reused instead of reconstructed —
+    /// and with it both multi-MB KV cache buffers, the scratch arenas and
+    /// the incremental mask slots. After `reset`, decoding is
+    /// bit-identical to a freshly constructed engine (asserted by
+    /// `tests/alloc_regression.rs`).
     pub fn reset(&mut self) {
         self.t_cache.reset();
         self.d_cache.reset();
@@ -181,6 +259,10 @@ impl<'a> Engine<'a> {
         self.feat_last.clear();
         self.uncharted.clear();
         self.attn_hist = attention_distance_buckets();
+        self.rng = SplitMix64::new(self.cfg.seed ^ 0xE151);
+        self.timers = StageTimer::new(self.cfg.instrument);
+        self.adaptive = Self::make_adaptive(&self.cfg);
+        self.d_cur = 0;
     }
 
     /// Committed teacher context length (prompt + generated).
@@ -202,11 +284,12 @@ impl<'a> Engine<'a> {
             bail!("empty prompt");
         }
         let chunk_max = self.contract.prefill_chunk();
-        let mut feat_prev = if self.feat_last.is_empty() {
-            vec![0.0f32; self.contract.feat_dim]
-        } else {
-            self.feat_last.clone()
-        };
+        let f = self.contract.feat_dim;
+        if self.feat_last.len() != f {
+            // fresh conversation: zero predecessor feature
+            self.feat_last.clear();
+            self.feat_last.resize(f, 0.0);
+        }
         let t0 = Instant::now();
         for chunk in prompt.chunks(chunk_max) {
             let n = chunk.len();
@@ -215,32 +298,35 @@ impl<'a> Engine<'a> {
             if t + n > self.contract.cache_cap {
                 bail!("prompt overflows cache capacity at {t}+{n}");
             }
-            let mut tokens = vec![0i32; s];
-            tokens[..n].copy_from_slice(chunk);
-            let positions: Vec<i32> =
-                (0..s).map(|i| (t + i.min(n.saturating_sub(1))) as i32).collect();
-            self.mb.build_chain(&mut self.mask_buf, s, n, t, None);
+            self.tok_buf.clear();
+            self.tok_buf.resize(s, 0);
+            self.tok_buf[..n].copy_from_slice(chunk);
+            self.pos_buf.clear();
+            self.pos_buf.extend((0..s).map(|i| (t + i.min(n.saturating_sub(1))) as i32));
+            let mask = self.mb.chain_incremental(MaskStream::TeacherChain, s, n, t, None);
             let (k, v) = self.t_cache.kv_view();
-            let out = self.backend.teacher_step(self.cfg.mode, StepArgs {
-                tokens: &tokens,
-                positions: &positions,
-                mask: &self.mask_buf,
+            self.backend.teacher_step(self.cfg.mode, StepArgs {
+                tokens: &self.tok_buf,
+                positions: &self.pos_buf,
+                mask,
                 kv: KvView { k, v },
                 feats_in: None,
                 probe: false,
-            })?;
+            }, &mut self.t_scratch)?;
             stats.teacher_calls += 1;
-            self.t_cache.append_committed(&out.k_new, &out.v_new, s, n)?;
-            let f = self.contract.feat_dim;
-            for (i, tok) in chunk.iter().enumerate() {
-                if self.use_draft {
-                    self.uncharted.push((*tok, feat_prev.clone()));
+            self.t_cache.append_committed(&self.t_scratch.k_new, &self.t_scratch.v_new, s, n)?;
+            if self.use_draft {
+                for (i, tok) in chunk.iter().enumerate() {
+                    if i == 0 {
+                        self.uncharted.push(*tok, &self.feat_last);
+                    } else {
+                        self.uncharted.push(*tok, self.t_scratch.feat_row(i - 1));
+                    }
                 }
-                feat_prev = out.feat_row(i, f).to_vec();
             }
-            self.pending_logits = out.logits_row(n - 1, self.contract.vocab).to_vec();
+            copy_into(&mut self.feat_last, self.t_scratch.feat_row(n - 1));
+            copy_into(&mut self.pending_logits, self.t_scratch.logits_row(n - 1));
         }
-        self.feat_last = feat_prev;
         if self.use_draft {
             self.drain_uncharted(stats)?;
         }
@@ -253,61 +339,79 @@ impl<'a> Engine<'a> {
     // ------------------------------------------------------------------
 
     /// Flush `uncharted` committed tokens into the draft cache. Returns
-    /// the draft logits + hidden of the *last* flushed token (the root
-    /// expansion signal) when anything was flushed.
-    fn drain_uncharted(&mut self, stats: &mut RunStats) -> Result<Option<(Vec<f32>, Vec<f32>)>> {
+    /// the scratch row (in `d_scratch[d_cur]`) of the *last* flushed
+    /// token — the root expansion signal — when anything was flushed.
+    fn drain_uncharted(&mut self, stats: &mut RunStats) -> Result<Option<usize>> {
         let mut last = None;
+        let max_take = *self.contract.draft_s.last().unwrap();
         while !self.uncharted.is_empty() {
-            let take = self.uncharted.len().min(*self.contract.draft_s.last().unwrap());
-            let batch: Vec<(i32, Vec<f32>)> = self.uncharted.drain(..take).collect();
-            let n = batch.len();
-            let s = self.contract.draft_variant(n)?;
+            let take = self.uncharted.len().min(max_take);
+            let s = self.contract.draft_variant(take)?;
             let d = self.d_cache.len();
-            if d + n > self.contract.cache_cap {
-                bail!("draft cache overflow at {d}+{n}");
+            if d + take > self.contract.cache_cap {
+                bail!("draft cache overflow at {d}+{take}");
             }
             let f = self.contract.feat_dim;
-            let mut tokens = vec![0i32; s];
-            let mut feats_in = vec![0.0f32; s * f];
-            for (i, (tok, fp)) in batch.iter().enumerate() {
-                tokens[i] = *tok;
-                feats_in[i * f..(i + 1) * f].copy_from_slice(fp);
+            self.tok_buf.clear();
+            self.tok_buf.resize(s, 0);
+            self.feats_buf.clear();
+            self.feats_buf.resize(s * f, 0.0);
+            for i in 0..take {
+                let (tok, feat) = self.uncharted.pop_front().expect("ring drained early");
+                self.tok_buf[i] = tok;
+                self.feats_buf[i * f..(i + 1) * f].copy_from_slice(feat);
             }
-            let positions: Vec<i32> =
-                (0..s).map(|i| (d + i.min(n - 1)) as i32).collect();
-            self.mb.build_chain(&mut self.mask_buf, s, n, d, self.cfg.draft_window);
+            self.pos_buf.clear();
+            self.pos_buf.extend((0..s).map(|i| (d + i.min(take - 1)) as i32));
+            let mask =
+                self.mb.chain_incremental(MaskStream::DraftChain, s, take, d, self.cfg.draft_window);
             let (k, v) = self.d_cache.kv_view();
-            let out = self.backend.draft_step(StepArgs {
-                tokens: &tokens,
-                positions: &positions,
-                mask: &self.mask_buf,
+            self.backend.draft_step(StepArgs {
+                tokens: &self.tok_buf,
+                positions: &self.pos_buf,
+                mask,
                 kv: KvView { k, v },
-                feats_in: Some(&feats_in),
+                feats_in: Some(&self.feats_buf),
                 probe: self.cfg.attention_stats,
-            })?;
+            }, &mut self.d_scratch[self.d_cur])?;
             stats.draft_calls += 1;
-            self.d_cache.append_committed(&out.k_new, &out.v_new, s, n)?;
-            if let Some(top1) = &out.attn_top1 {
-                self.record_attention(top1, n, d, self.contract.draft.heads);
+            self.d_cache.append_committed(
+                &self.d_scratch[self.d_cur].k_new,
+                &self.d_scratch[self.d_cur].v_new,
+                s,
+                take,
+            )?;
+            if let Some(top1) = self.d_scratch[self.d_cur].attn_top1() {
+                Self::record_attention(
+                    &mut self.attn_hist,
+                    self.contract.cache_cap,
+                    top1,
+                    take,
+                    d,
+                    self.contract.draft.heads,
+                );
             }
-            last = Some((
-                out.logits_row(n - 1, self.contract.vocab).to_vec(),
-                out.feat_row(n - 1, f).to_vec(),
-            ));
+            last = Some(take - 1);
         }
         Ok(last)
     }
 
     /// Fig-7 evidence: bucket top-1 attention columns by token distance.
-    fn record_attention(&mut self, top1: &[i32], live: usize, d_len: usize, heads: usize) {
-        let cap = self.contract.cache_cap;
+    fn record_attention(
+        hist: &mut Histogram,
+        cap: usize,
+        top1: &[i32],
+        live: usize,
+        d_len: usize,
+        heads: usize,
+    ) {
         for i in 0..live {
             let pos = d_len + i;
             for h in 0..heads {
                 let col = top1[i * heads + h] as usize;
                 let col_pos = if col < cap { col } else { d_len + (col - cap) };
                 let dist = pos.saturating_sub(col_pos);
-                self.attn_hist.add(dist as f64);
+                hist.add(dist as f64);
             }
         }
     }
@@ -326,30 +430,32 @@ impl<'a> Engine<'a> {
         while out_tokens.len() < max_new && self.t_cache.headroom() > s {
             let r0 = argmax(&self.pending_logits) as i32;
             let t = self.t_cache.len();
-            let mut tokens = vec![0i32; s];
-            tokens[0] = r0;
-            let positions: Vec<i32> = (0..s).map(|_| t as i32).collect();
+            self.tok_buf.clear();
+            self.tok_buf.resize(s, 0);
+            self.tok_buf[0] = r0;
+            self.pos_buf.clear();
+            self.pos_buf.resize(s, t as i32);
             let tm = Instant::now();
-            self.mb.build_chain(&mut self.mask_buf, s, 1, t, None);
+            let mask = self.mb.chain_incremental(MaskStream::TeacherChain, s, 1, t, None);
             self.timers.add("mask_build", tm.elapsed().as_secs_f64());
             let tv = Instant::now();
             let (k, v) = self.t_cache.kv_view();
-            let step = self.backend.teacher_step(self.cfg.mode, StepArgs {
-                tokens: &tokens,
-                positions: &positions,
-                mask: &self.mask_buf,
+            self.backend.teacher_step(self.cfg.mode, StepArgs {
+                tokens: &self.tok_buf,
+                positions: &self.pos_buf,
+                mask,
                 kv: KvView { k, v },
                 feats_in: None,
                 probe: false,
-            })?;
+            }, &mut self.t_scratch)?;
             self.timers.add("verify", tv.elapsed().as_secs_f64());
             stats.teacher_calls += 1;
             stats.rounds += 1;
             let tc = Instant::now();
-            self.t_cache.append_committed(&step.k_new, &step.v_new, s, 1)?;
+            self.t_cache.append_committed(&self.t_scratch.k_new, &self.t_scratch.v_new, s, 1)?;
             self.timers.add("commit", tc.elapsed().as_secs_f64());
-            self.pending_logits = step.logits_row(0, self.contract.vocab).to_vec();
-            self.feat_last = step.feat_row(0, self.contract.feat_dim).to_vec();
+            copy_into(&mut self.pending_logits, self.t_scratch.logits_row(0));
+            copy_into(&mut self.feat_last, self.t_scratch.feat_row(0));
             out_tokens.push(r0);
         }
         Ok(self.finish(out_tokens, prompt.len(), stats, wall0))
@@ -384,14 +490,12 @@ impl<'a> Engine<'a> {
     /// One speculative round; returns the committed tokens (root + accepted).
     fn spec_round(&mut self, stats: &mut RunStats) -> Result<Vec<i32>> {
         stats.rounds += 1;
-        let vocab = self.contract.vocab;
-        let f = self.contract.feat_dim;
 
         // 1. Pending root token + draft chain refresh.
         let r0 = argmax(&self.pending_logits) as i32;
-        self.uncharted.push((r0, self.feat_last.clone()));
+        self.uncharted.push(r0, &self.feat_last);
         let td = Instant::now();
-        let (root_logits, root_hidden) = self
+        let root_row = self
             .drain_uncharted(stats)?
             .context("drain_uncharted returned nothing despite pending root")?;
 
@@ -401,41 +505,47 @@ impl<'a> Engine<'a> {
         // tree slot -> draft branch row (for ancestor visibility); the root
         // lives in the committed draft cache at d_len - 1.
         let mut branch_row_of: Vec<Option<usize>> = vec![None];
-        let mut frontier =
-            vec![FrontierNode { slot: 0, logits: root_logits, hidden: root_hidden }];
+        // (tree slot, row in d_scratch[d_cur]) per frontier node
+        let mut frontier: Vec<(usize, usize)> = vec![(0, root_row)];
+        let mut new_slots: Vec<usize> = Vec::new();
         let round_budget = self.current_budget();
         let mut budget_left = round_budget;
         let mut depth = 0usize;
         while budget_left > 0 && depth < self.cfg.tree.depth_max && !frontier.is_empty() {
             depth += 1;
-            let mut pool: Vec<Candidate> = Vec::new();
-            for (row, node) in frontier.iter().enumerate() {
-                let base_lp = tree.slots()[node.slot].logprob;
-                for (tok, _) in topk(&node.logits, self.cfg.tree.topk) {
-                    pool.push(Candidate {
-                        parent: node.slot,
-                        token: tok as i32,
-                        cum_logprob: base_lp + log_softmax_at(&node.logits, tok),
-                        parent_row: row,
-                    });
+            self.cand_pool.clear();
+            {
+                let read = &self.d_scratch[self.d_cur];
+                for (row_i, &(slot, row)) in frontier.iter().enumerate() {
+                    let base_lp = tree.slots()[slot].logprob;
+                    let logits = read.logits_row(row);
+                    for (tok, _) in topk(logits, self.cfg.tree.topk) {
+                        self.cand_pool.push(Candidate {
+                            parent: slot,
+                            token: tok as i32,
+                            cum_logprob: base_lp + log_softmax_at(logits, tok),
+                            parent_row: row_i,
+                        });
+                    }
                 }
             }
-            let sel = select_children(pool, budget_left, FRONTIER_CAP);
-            if sel.is_empty() {
+            select_children(&mut self.cand_pool, budget_left, FRONTIER_CAP);
+            if self.cand_pool.is_empty() {
                 break;
             }
-            let mut new_slots = Vec::with_capacity(sel.len());
-            for c in &sel {
+            new_slots.clear();
+            for c in &self.cand_pool {
                 let slot = tree.add_child(c.parent, c.token, c.cum_logprob);
                 branch_row_of.push(None);
                 new_slots.push(slot);
             }
-            budget_left -= sel.len();
+            budget_left -= self.cand_pool.len();
             if budget_left == 0 || depth == self.cfg.tree.depth_max {
                 break; // leaves don't need a draft evaluation
             }
-            frontier = self.eval_frontier(&tree, &sel, &new_slots, &frontier,
-                                          &mut branch_row_of, depth, stats)?;
+            self.eval_frontier(&tree, &new_slots, &frontier, &mut branch_row_of, depth, stats)?;
+            frontier.clear();
+            frontier.extend(new_slots.iter().enumerate().map(|(i, &slot)| (slot, i)));
         }
         self.timers.add("draft_expand", td.elapsed().as_secs_f64());
 
@@ -446,36 +556,39 @@ impl<'a> Engine<'a> {
             .map_err(|e| anyhow::anyhow!("tree invariant violation: {e}"))?;
         self.timers.add("tensorize", tt.elapsed().as_secs_f64());
 
-        // 4. Tree mask.
+        // 4. Tree mask (incremental: prefix delta + spec block rewrite).
         let tm = Instant::now();
         let t_len = self.t_cache.len();
-        self.mb.build_auto(&mut self.mask_buf, &tens, t_len, None);
+        let mask = self.mb.tree_incremental(MaskStream::TeacherTree, &tens, t_len, None);
         self.timers.add("mask_build", tm.elapsed().as_secs_f64());
 
         // 5. Teacher verification (single batched call).
         let tv = Instant::now();
-        let positions = tens.positions(t_len);
+        tens.positions_into(t_len, &mut self.pos_buf);
         self.t_cache.begin_branch()?;
         let (k, v) = self.t_cache.kv_view();
-        let step = self.backend.teacher_step(self.cfg.mode, StepArgs {
+        self.backend.teacher_step(self.cfg.mode, StepArgs {
             tokens: &tens.tokens,
-            positions: &positions,
-            mask: &self.mask_buf,
+            positions: &self.pos_buf,
+            mask,
             kv: KvView { k, v },
             feats_in: None,
             probe: false,
-        })?;
+        }, &mut self.t_scratch)?;
         stats.teacher_calls += 1;
-        self.t_cache.append_branch(&step.k_new, &step.v_new, s_pad, tens.live)?;
+        self.t_cache.append_branch(&self.t_scratch.k_new, &self.t_scratch.v_new, s_pad, tens.live)?;
         self.timers.add("verify", tv.elapsed().as_secs_f64());
 
-        // 6. Acceptance.
+        // 6. Acceptance (over borrowed scratch rows — no cloning).
         let ta = Instant::now();
-        let logits_of = |slot: usize| step.logits_row(slot, vocab).to_vec();
-        let acc = if self.cfg.temperature == 0.0 {
-            greedy_walk(&tree, &logits_of)
-        } else {
-            stochastic_walk(&tree, &logits_of, self.cfg.temperature, &mut self.rng)
+        let acc = {
+            let scratch = &self.t_scratch;
+            let logits_of = |slot: usize| scratch.logits_row(slot);
+            if self.cfg.temperature == 0.0 {
+                greedy_walk(&tree, &logits_of)
+            } else {
+                stochastic_walk(&tree, &logits_of, self.cfg.temperature, &mut self.rng)
+            }
         };
         stats.accept_lens.push(acc.accept_len());
         stats.accept_pos.record(acc.accept_len(), acc.offered);
@@ -493,44 +606,60 @@ impl<'a> Engine<'a> {
                 // root (branch row 0) + accepted rows 1..=A
                 self.t_cache.commit_length(1 + a)?;
             }
+            _ if self.cfg.fast_reorder => {
+                // Prefix-relative fast commit: branch row r holds tree
+                // slot r, so the accepted tail is [0 (root)] ++ path —
+                // strictly increasing by BFS construction. The committed
+                // prefix is implicit: no identity vector, no gather
+                // scratch.
+                self.path_tail.clear();
+                self.path_tail.push(0);
+                self.path_tail.extend_from_slice(&acc.path);
+                self.t_cache.commit_path_tail(&self.path_tail)?;
+            }
             _ => {
-                let mut path: Vec<usize> = (0..t_len).collect();
+                // §3.1 ablation path: absolute path indices through the
+                // general commit (measured, intentionally expensive).
+                let mut path: Vec<usize> = Vec::with_capacity(t_len + 1 + a);
+                path.extend(0..t_len);
                 path.push(t_len); // root slot 0
                 path.extend(acc.path.iter().map(|s| t_len + s));
                 self.t_cache.commit_path(&path)?;
             }
         }
         // Features of newly committed tokens feed the next chain refresh.
-        let mut committed = vec![r0];
+        let mut committed = Vec::with_capacity(1 + a);
+        committed.push(r0);
         let mut prev_slot = 0usize;
         for &slot in &acc.path {
             let tok = tree.slots()[slot].token;
-            self.uncharted.push((tok, step.feat_row(prev_slot, f).to_vec()));
+            self.uncharted.push(tok, self.t_scratch.feat_row(prev_slot));
             committed.push(tok);
             prev_slot = slot;
         }
-        self.feat_last = step.feat_row(acc.bonus_slot, f).to_vec();
-        self.pending_logits = step.logits_row(acc.bonus_slot, vocab).to_vec();
+        copy_into(&mut self.feat_last, self.t_scratch.feat_row(acc.bonus_slot));
+        copy_into(&mut self.pending_logits, self.t_scratch.logits_row(acc.bonus_slot));
         self.d_cache.rollback();
         self.timers.add("commit", tc.elapsed().as_secs_f64());
         Ok(committed)
     }
 
-    /// Evaluate a freshly selected frontier with one draft call: feature
-    /// inputs chain from parent hiddens, the mask opens committed prefix
+    /// Evaluate the freshly selected frontier (the candidates currently in
+    /// `cand_pool`) with one draft call: feature inputs chain from parent
+    /// hidden rows in the read scratch, the mask opens committed prefix
     /// (optionally windowed), ancestor branch rows and the self slot.
-    #[allow(clippy::too_many_arguments)]
+    /// Outputs land in the write scratch, which then becomes the read
+    /// scratch for the next depth.
     fn eval_frontier(
         &mut self,
         tree: &SpecTree,
-        sel: &[Candidate],
         new_slots: &[usize],
-        parents: &[FrontierNode],
+        frontier: &[(usize, usize)],
         branch_row_of: &mut [Option<usize>],
         depth: usize,
         stats: &mut RunStats,
-    ) -> Result<Vec<FrontierNode>> {
-        let n = sel.len();
+    ) -> Result<()> {
+        let n = self.cand_pool.len();
         let s = self.contract.draft_variant(n)?;
         let f = self.contract.feat_dim;
         let cap = self.contract.cache_cap;
@@ -538,57 +667,72 @@ impl<'a> Engine<'a> {
         if d_len + self.d_cache.branch_rows() + n > cap {
             bail!("draft branch overflow during expansion");
         }
-        let mut tokens = vec![0i32; s];
-        let mut feats_in = vec![0.0f32; s * f];
-        for (i, c) in sel.iter().enumerate() {
-            tokens[i] = c.token;
-            feats_in[i * f..(i + 1) * f].copy_from_slice(&parents[c.parent_row].hidden);
+        self.tok_buf.clear();
+        self.tok_buf.resize(s, 0);
+        self.feats_buf.clear();
+        self.feats_buf.resize(s * f, 0.0);
+        {
+            let read = &self.d_scratch[self.d_cur];
+            for (i, c) in self.cand_pool.iter().enumerate() {
+                self.tok_buf[i] = c.token;
+                let parent_row = frontier[c.parent_row].1;
+                self.feats_buf[i * f..(i + 1) * f].copy_from_slice(read.feat_row(parent_row));
+            }
         }
         // every frontier node of this depth sits at the same position
         let pos = (d_len - 1 + depth) as i32;
-        let positions = vec![pos; s];
-        // mask: custom rows (committed prefix + ancestor branch rows + self)
-        let w = cap + s;
-        self.mask_buf.clear();
-        self.mask_buf.resize(s * w, NEG_INF);
+        self.pos_buf.clear();
+        self.pos_buf.resize(s, pos);
+        // mask: committed prefix (windowed) + ancestor branch rows (cache
+        // columns past d_len) + the self slot — built on the persistent
+        // frontier slot with exact-revert bookkeeping.
         let lo = self.cfg.draft_window.map_or(0, |win| d_len.saturating_sub(win));
-        for (i, c) in sel.iter().enumerate() {
-            let row = &mut self.mask_buf[i * w..(i + 1) * w];
-            row[lo..d_len].fill(0.0);
-            for &anc in &tree.ancestors(c.parent) {
-                if anc == 0 {
-                    continue; // root = last committed token, already open
+        {
+            let slot_mask = self.mb.incremental(MaskStream::DraftFrontier, s);
+            slot_mask.clear_spec();
+            for i in 0..s {
+                if i < n {
+                    slot_mask.set_prefix(i, lo, d_len);
+                } else {
+                    slot_mask.set_prefix(i, 0, 0);
                 }
-                let br = branch_row_of[anc]
-                    .with_context(|| format!("ancestor slot {anc} has no draft row"))?;
-                row[d_len + br] = 0.0;
             }
-            row[cap + i] = 0.0; // self
+            for (i, c) in self.cand_pool.iter().enumerate() {
+                for &anc in &tree.ancestors(c.parent) {
+                    if anc == 0 {
+                        continue; // root = last committed token, already open
+                    }
+                    let br = branch_row_of[anc]
+                        .with_context(|| format!("ancestor slot {anc} has no draft row"))?;
+                    slot_mask.open_col(i, d_len + br);
+                }
+                slot_mask.open_spec(i, i); // self
+            }
         }
+        let write_idx = 1 - self.d_cur;
+        let mask = self.mb.incremental(MaskStream::DraftFrontier, s).as_slice();
         let (k, v) = self.d_cache.kv_view();
-        let out = self.backend.draft_step(StepArgs {
-            tokens: &tokens,
-            positions: &positions,
-            mask: &self.mask_buf,
+        self.backend.draft_step(StepArgs {
+            tokens: &self.tok_buf,
+            positions: &self.pos_buf,
+            mask,
             kv: KvView { k, v },
-            feats_in: Some(&feats_in),
+            feats_in: Some(&self.feats_buf),
             probe: false,
-        })?;
+        }, &mut self.d_scratch[write_idx])?;
         stats.draft_calls += 1;
         let base_row = self.d_cache.branch_rows();
-        self.d_cache.append_branch(&out.k_new, &out.v_new, s, n)?;
+        self.d_cache.append_branch(
+            &self.d_scratch[write_idx].k_new,
+            &self.d_scratch[write_idx].v_new,
+            s,
+            n,
+        )?;
         for (i, &slot) in new_slots.iter().enumerate() {
             branch_row_of[slot] = Some(base_row + i);
         }
-        Ok(sel
-            .iter()
-            .enumerate()
-            .map(|(i, _)| FrontierNode {
-                slot: new_slots[i],
-                logits: out.logits_row(i, self.contract.vocab).to_vec(),
-                hidden: out.feat_row(i, f).to_vec(),
-            })
-            .collect())
+        self.d_cur = write_idx;
+        Ok(())
     }
 
     fn finish(&mut self, tokens: Vec<i32>, prompt_len: usize, stats: RunStats,
@@ -773,6 +917,30 @@ mod tests {
     }
 
     #[test]
+    fn reused_engine_after_reset_matches_fresh_engine() {
+        // The coordinator reuses one warmed engine per worker; reset must
+        // restore exact fresh-engine behaviour (tokens AND accept shape).
+        let p1 = prompt(14, 21);
+        let p2 = prompt(9, 22);
+        let mut b = SimBackend::new(85);
+        let mut e = Engine::new(&mut b, RunConfig::default());
+        let first = e.generate_speculative(&p1, 24).unwrap();
+        e.reset();
+        let second = e.generate_speculative(&p2, 24).unwrap();
+        e.reset();
+        let first_again = e.generate_speculative(&p1, 24).unwrap();
+
+        let mut fb = SimBackend::new(85);
+        let mut fe = Engine::new(&mut fb, RunConfig::default());
+        let fresh2 = fe.generate_speculative(&p2, 24).unwrap();
+
+        assert_eq!(second.tokens, fresh2.tokens, "reused engine diverged from fresh");
+        assert_eq!(second.accept_lens, fresh2.accept_lens);
+        assert_eq!(first.tokens, first_again.tokens, "reset is not idempotent");
+        assert_eq!(first.accept_lens, first_again.accept_lens);
+    }
+
+    #[test]
     fn budget_one_degenerates_to_linear_speculation() {
         let p = prompt(8, 11);
         let mut cfg = RunConfig::default();
@@ -830,6 +998,20 @@ mod tests {
                 "zero acceptance should shrink the budget: {}", e2.current_budget());
         let n = out_good.tokens.len().min(out_bad.tokens.len());
         assert_eq!(out_good.tokens[..n], out_bad.tokens[..n]);
+    }
+
+    #[test]
+    fn adaptive_budget_restored_by_reset() {
+        let p = prompt(12, 16);
+        let mut cfg = RunConfig::default();
+        cfg.adaptive_budget = true;
+        cfg.tree.budget = 8;
+        let mut b = SimBackend::new(100);
+        let mut e = Engine::new(&mut b, cfg);
+        e.generate_speculative(&p, 120).unwrap();
+        assert!(e.current_budget() > 8);
+        e.reset();
+        assert_eq!(e.current_budget(), 8, "reset must restore the initial budget");
     }
 
     #[test]

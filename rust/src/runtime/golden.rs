@@ -5,7 +5,7 @@
 //! layout, input ordering, mask convention or the HLO round-trip drifts,
 //! these checks fail loudly.
 
-use crate::backend::{KvView, ModelBackend, StepArgs};
+use crate::backend::{KvView, ModelBackend, StepArgs, StepScratch};
 use crate::config::contract::NEG_INF;
 use crate::config::{Contract, ExecMode};
 use crate::json::Json;
@@ -109,11 +109,12 @@ pub fn verify_golden(backend: &mut dyn ModelBackend, rec: &GoldenRecord) -> Resu
         feats_in: gi.feats.as_deref(),
         probe: false,
     };
-    let out = if role == "teacher" {
-        backend.teacher_step(mode, args)?
+    let mut out = StepScratch::new();
+    if role == "teacher" {
+        backend.teacher_step(mode, args, &mut out)?;
     } else {
-        backend.draft_step(args)?
-    };
+        backend.draft_step(args, &mut out)?;
+    }
     let close = |a: f64, b: f64, tol: f64, what: &str| -> Result<()> {
         // relative-ish tolerance: sums accumulate over thousands of f32 ops
         if (a - b).abs() > tol * (1.0 + b.abs()) {
@@ -130,7 +131,7 @@ pub fn verify_golden(backend: &mut dyn ModelBackend, rec: &GoldenRecord) -> Resu
     close(fsum, rec.feats_sum, 1e-3, "feats_sum")?;
     let ksum: f64 = out.k_new.iter().map(|x| *x as f64).sum();
     close(ksum, rec.k_new_sum, 1e-3, "k_new_sum")?;
-    let am = crate::backend::argmax(out.logits_row(0, contract.vocab));
+    let am = crate::backend::argmax(out.logits_row(0));
     if am != rec.logits_argmax_row0 {
         bail!("{}: argmax row0 {am} vs python {}", rec.module, rec.logits_argmax_row0);
     }

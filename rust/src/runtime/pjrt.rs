@@ -1,7 +1,7 @@
 //! The production backend: artifact registry + PJRT execution.
 
-use crate::backend::{ModelBackend, StepArgs, StepOut};
-use crate::config::{Contract, ExecMode};
+use crate::backend::{ModelBackend, StepArgs, StepScratch};
+use crate::config::{Contract, Dims, ExecMode};
 use crate::json;
 use anyhow::{bail, Context, Result};
 use std::collections::HashMap;
@@ -118,13 +118,23 @@ impl PjrtBackend {
             .map_err(|e| anyhow::anyhow!("uploading i32 {dims:?}: {e:?}"))
     }
 
+    /// Execute a compiled module and land its outputs in the caller's
+    /// scratch. The binding's `to_vec` still allocates one host `Vec`
+    /// per output before the bounded `copy_from_slice` into the
+    /// (pre-sized, reusable) scratch — so PJRT steps are *not* yet
+    /// allocation-free, only scratch-stable. Output buffer donation
+    /// (`to_literal` into a preallocated host buffer) removes both the
+    /// intermediate `Vec`s and the copy; the scratch API keeps that a
+    /// backend-local change (tracked in ROADMAP "Open items").
     fn run_module(
         &mut self,
         name: &str,
         inputs: &[xla::PjRtBuffer],
         upload_bytes: u64,
         want_probe: bool,
-    ) -> Result<StepOut> {
+        dims: Dims,
+        out: &mut StepScratch,
+    ) -> Result<()> {
         let s_probe = want_probe; // tuple arity changes with probe outputs
         let t0 = Instant::now();
         let exe = self.exe(name)?;
@@ -152,10 +162,37 @@ impl PjrtBackend {
         let feats = parts.pop().unwrap().to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e:?}"))?;
         let logits = parts.pop().unwrap().to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e:?}"))?;
         let s = logits.len() / self.contract.vocab;
+        out.prepare(
+            s,
+            self.contract.vocab,
+            self.contract.feat_dim,
+            dims.layers,
+            dims.heads,
+            dims.d_head,
+            attn_top1.is_some(),
+        );
+        let check = |got: usize, want: usize, what: &str| -> Result<()> {
+            if got != want {
+                bail!("{name}: {what} size {got} != expected {want}");
+            }
+            Ok(())
+        };
+        check(logits.len(), out.logits.len(), "logits")?;
+        check(feats.len(), out.feats.len(), "feats")?;
+        check(k_new.len(), out.k_new.len(), "k_new")?;
+        check(v_new.len(), out.v_new.len(), "v_new")?;
+        out.logits.copy_from_slice(&logits);
+        out.feats.copy_from_slice(&feats);
+        out.k_new.copy_from_slice(&k_new);
+        out.v_new.copy_from_slice(&v_new);
+        if let Some(a) = attn_top1 {
+            check(a.len(), out.attn_top1.len(), "attn_top1")?;
+            out.attn_top1.copy_from_slice(&a);
+        }
         self.stats.executions += 1;
         self.stats.execute_secs += t0.elapsed().as_secs_f64();
         self.stats.upload_bytes += upload_bytes;
-        Ok(StepOut { s, logits, feats, k_new, v_new, attn_top1 })
+        Ok(())
     }
 }
 
@@ -164,7 +201,8 @@ impl ModelBackend for PjrtBackend {
         &self.contract
     }
 
-    fn teacher_step(&mut self, mode: ExecMode, args: StepArgs) -> Result<StepOut> {
+    fn teacher_step(&mut self, mode: ExecMode, args: StepArgs, out: &mut StepScratch)
+        -> Result<()> {
         let s = args.tokens.len();
         if !self.contract.teacher_s.contains(&s) {
             bail!("teacher_step: {s} is not a compiled S variant");
@@ -181,10 +219,10 @@ impl ModelBackend for PjrtBackend {
             self.upload_f32(args.kv.v, &cache_dims)?,
         ];
         let upload = (args.mask.len() + args.kv.k.len() + args.kv.v.len()) * 4 + s * 8;
-        self.run_module(&name, &inputs, upload as u64, false)
+        self.run_module(&name, &inputs, upload as u64, false, d, out)
     }
 
-    fn draft_step(&mut self, args: StepArgs) -> Result<StepOut> {
+    fn draft_step(&mut self, args: StepArgs, out: &mut StepScratch) -> Result<()> {
         let s = args.tokens.len();
         if !self.contract.draft_s.contains(&s) {
             bail!("draft_step: {s} is not a compiled S variant");
@@ -206,7 +244,7 @@ impl ModelBackend for PjrtBackend {
         ];
         let upload =
             (args.mask.len() + args.kv.k.len() + args.kv.v.len() + feats.len()) * 4 + s * 8;
-        self.run_module(&name, &inputs, upload as u64, probe)
+        self.run_module(&name, &inputs, upload as u64, probe, d, out)
     }
 
     fn name(&self) -> &'static str {

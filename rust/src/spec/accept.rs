@@ -18,6 +18,11 @@
 //!
 //! Both rules return the *bonus* token — the teacher's own prediction at
 //! the deepest accepted slot — which is committed "for free" each round.
+//!
+//! `logits_of` hands out **borrowed rows** (slices into the verification
+//! scratch) rather than cloned `Vec`s, and the softmax sampler runs
+//! two-pass without a weights buffer, so acceptance is allocation-free
+//! beyond the (depth-bounded) path vector.
 
 use crate::backend::argmax;
 use crate::tree::SpecTree;
@@ -44,24 +49,30 @@ impl Acceptance {
     }
 }
 
-/// Greedy acceptance (temperature = 0).
-///
-/// `logits_of(slot)` returns the teacher logits row for a tree slot.
-pub fn greedy_walk(tree: &SpecTree, logits_of: &dyn Fn(usize) -> Vec<f32>) -> Acceptance {
+/// Shared walk skeleton: `pick(slot)` returns the teacher's token choice
+/// at a slot (argmax or a softmax sample).
+fn walk(tree: &SpecTree, mut pick: impl FnMut(usize) -> i32) -> Acceptance {
     let mut cur = 0usize;
     let mut path = Vec::new();
     let mut offered = 0usize;
     loop {
-        let teacher_tok = argmax(&logits_of(cur)) as i32;
-        let children: Vec<usize> = tree.children(cur).collect();
-        if children.is_empty() {
-            return Acceptance { path, bonus_token: teacher_tok, bonus_slot: cur, offered };
+        let teacher_tok = pick(cur);
+        let mut hit = None;
+        let mut has_children = false;
+        for child in tree.children(cur) {
+            has_children = true;
+            if tree.slots()[child].token == teacher_tok {
+                hit = Some(child);
+                break;
+            }
         }
-        offered += 1;
-        match children.iter().find(|c| tree.slots()[**c].token == teacher_tok) {
-            Some(&hit) => {
-                path.push(hit);
-                cur = hit;
+        if has_children {
+            offered += 1;
+        }
+        match hit {
+            Some(h) => {
+                path.push(h);
+                cur = h;
             }
             None => {
                 return Acceptance { path, bonus_token: teacher_tok, bonus_slot: cur, offered };
@@ -70,43 +81,45 @@ pub fn greedy_walk(tree: &SpecTree, logits_of: &dyn Fn(usize) -> Vec<f32>) -> Ac
     }
 }
 
+/// Greedy acceptance (temperature = 0).
+///
+/// `logits_of(slot)` returns the teacher logits row for a tree slot
+/// (a borrowed slice — typically into the verification scratch).
+pub fn greedy_walk<'a>(tree: &SpecTree, logits_of: &dyn Fn(usize) -> &'a [f32]) -> Acceptance {
+    walk(tree, |slot| argmax(logits_of(slot)) as i32)
+}
+
 /// Stochastic acceptance: at each slot, sample from the teacher softmax
 /// (with `temperature`); accept a child iff the sample equals its token.
-pub fn stochastic_walk(
+pub fn stochastic_walk<'a>(
     tree: &SpecTree,
-    logits_of: &dyn Fn(usize) -> Vec<f32>,
+    logits_of: &dyn Fn(usize) -> &'a [f32],
     temperature: f64,
     rng: &mut SplitMix64,
 ) -> Acceptance {
     let temp = temperature.max(1e-6);
-    let mut cur = 0usize;
-    let mut path = Vec::new();
-    let mut offered = 0usize;
-    loop {
-        let row = logits_of(cur);
-        let sampled = sample_softmax(&row, temp, rng) as i32;
-        let children: Vec<usize> = tree.children(cur).collect();
-        if children.is_empty() {
-            return Acceptance { path, bonus_token: sampled, bonus_slot: cur, offered };
-        }
-        offered += 1;
-        match children.iter().find(|c| tree.slots()[**c].token == sampled) {
-            Some(&hit) => {
-                path.push(hit);
-                cur = hit;
-            }
-            None => {
-                return Acceptance { path, bonus_token: sampled, bonus_slot: cur, offered };
-            }
-        }
-    }
+    walk(tree, |slot| sample_softmax(logits_of(slot), temp, rng) as i32)
 }
 
-/// Sample an index from softmax(logits / temp).
+/// Sample an index from softmax(logits / temp). Two-pass (normalizer,
+/// then cumulative scan against one uniform draw) — no weights buffer.
+/// The second pass recomputes each `exp` rather than caching it: that
+/// doubles the transcendental work per sampled slot, a deliberate trade
+/// for keeping the stochastic path (off the paper's greedy hot path)
+/// allocation-free without threading a scratch buffer through the walk.
+/// Consumes exactly one RNG draw, bit-identical to `rng.weighted` over a
+/// materialized weights vector.
 pub fn sample_softmax(row: &[f32], temp: f64, rng: &mut SplitMix64) -> usize {
     let mx = row.iter().fold(f32::NEG_INFINITY, |a, b| a.max(*b)) as f64;
-    let weights: Vec<f64> = row.iter().map(|x| ((*x as f64 - mx) / temp).exp()).collect();
-    rng.weighted(&weights)
+    let total: f64 = row.iter().map(|x| ((*x as f64 - mx) / temp).exp()).sum();
+    let mut r = rng.f64_unit() * total;
+    for (i, x) in row.iter().enumerate() {
+        r -= ((*x as f64 - mx) / temp).exp();
+        if r < 0.0 {
+            return i;
+        }
+    }
+    row.len().saturating_sub(1)
 }
 
 #[cfg(test)]
@@ -123,18 +136,23 @@ mod tests {
         t
     }
 
-    fn const_logits(winner: &'static [i32]) -> impl Fn(usize) -> Vec<f32> {
-        move |slot| {
-            let mut row = vec![0.0f32; 16];
-            row[winner[slot] as usize] = 10.0;
-            row
-        }
+    /// Materialized per-slot rows where slot s's argmax is `winner[s]`.
+    fn const_rows(winner: &[i32]) -> Vec<Vec<f32>> {
+        winner
+            .iter()
+            .map(|w| {
+                let mut row = vec![0.0f32; 16];
+                row[*w as usize] = 10.0;
+                row
+            })
+            .collect()
     }
 
     #[test]
     fn greedy_accepts_full_chain() {
         // teacher at root predicts 5, at a predicts 7, at b predicts 3
-        let walk = greedy_walk(&tree(), &const_logits(&[5, 7, 0, 3]));
+        let rows = const_rows(&[5, 7, 0, 3]);
+        let walk = greedy_walk(&tree(), &|s| rows[s].as_slice());
         assert_eq!(walk.path, vec![1, 3]);
         assert_eq!(walk.bonus_token, 3);
         assert_eq!(walk.bonus_slot, 3);
@@ -145,7 +163,8 @@ mod tests {
     #[test]
     fn greedy_stops_on_mismatch_with_bonus() {
         // teacher at root predicts 9 (sibling branch), at c predicts 2
-        let walk = greedy_walk(&tree(), &const_logits(&[9, 0, 2, 0]));
+        let rows = const_rows(&[9, 0, 2, 0]);
+        let walk = greedy_walk(&tree(), &|s| rows[s].as_slice());
         assert_eq!(walk.path, vec![2]);
         assert_eq!(walk.bonus_token, 2);
         assert_eq!(walk.offered, 1); // only the root had candidates (c is a leaf)
@@ -153,7 +172,8 @@ mod tests {
 
     #[test]
     fn greedy_rejects_everything_cleanly() {
-        let walk = greedy_walk(&tree(), &const_logits(&[4, 0, 0, 0]));
+        let rows = const_rows(&[4, 0, 0, 0]);
+        let walk = greedy_walk(&tree(), &|s| rows[s].as_slice());
         assert!(walk.path.is_empty());
         assert_eq!(walk.bonus_token, 4);
         assert_eq!(walk.bonus_slot, 0);
@@ -162,7 +182,8 @@ mod tests {
 
     #[test]
     fn stochastic_low_temp_equals_greedy() {
-        let logits = const_logits(&[5, 7, 0, 3]);
+        let rows = const_rows(&[5, 7, 0, 3]);
+        let logits = |s: usize| rows[s].as_slice();
         let mut rng = SplitMix64::new(1);
         let s = stochastic_walk(&tree(), &logits, 1e-6, &mut rng);
         let g = greedy_walk(&tree(), &logits);
@@ -174,12 +195,10 @@ mod tests {
     fn stochastic_matches_softmax_marginals_at_root() {
         // Root logits put ~73%/27% on tokens 5 and 9; acceptance of child
         // `a` should track the softmax probability of token 5.
-        let logits = |_slot: usize| {
-            let mut row = vec![-30.0f32; 16];
-            row[5] = 1.0;
-            row[9] = 0.0;
-            row
-        };
+        let mut row = vec![-30.0f32; 16];
+        row[5] = 1.0;
+        row[9] = 0.0;
+        let logits = |_slot: usize| row.as_slice();
         let mut rng = SplitMix64::new(7);
         let n = 4000;
         let mut hits = 0;
@@ -212,13 +231,10 @@ mod tests {
                 }
                 frontier = next;
             }
-            let preds: Vec<i32> =
-                (0..t.num_slots()).map(|_| g.usize_in(2, 14) as i32).collect();
-            let walk = greedy_walk(&t, &move |s| {
-                let mut row = vec![0.0f32; 16];
-                row[preds[s] as usize] = 1.0;
-                row
-            });
+            let rows = const_rows(
+                &(0..t.num_slots()).map(|_| g.usize_in(2, 14) as i32).collect::<Vec<_>>(),
+            );
+            let walk = greedy_walk(&t, &|s| rows[s].as_slice());
             // path must be a parent-linked chain starting under the root
             let mut cur = 0usize;
             for &s in &walk.path {

@@ -18,33 +18,36 @@ pub struct Candidate {
     pub parent_row: usize,
 }
 
-/// Keep the globally best candidates: at most `budget` and at most
-/// `frontier_cap`, sorted by cumulative log-prob descending. Duplicate
-/// (parent, token) pairs are rejected (defense-in-depth: a draft should
-/// not propose them, but a malformed top-k must not corrupt the tree).
-pub fn select_children(
-    mut pool: Vec<Candidate>,
-    budget: usize,
-    frontier_cap: usize,
-) -> Vec<Candidate> {
-    pool.sort_by(|a, b| {
+/// Keep the globally best candidates **in place**: at most `budget` and
+/// at most `frontier_cap`, sorted by cumulative log-prob descending.
+/// Duplicate (parent, token) pairs are rejected (defense-in-depth: a
+/// draft should not propose them, but a malformed top-k must not corrupt
+/// the tree). In-place so the engine's reusable candidate pool never
+/// reallocates in steady state.
+pub fn select_children(pool: &mut Vec<Candidate>, budget: usize, frontier_cap: usize) {
+    // unstable sort: no merge buffer, and the (logprob, parent, token)
+    // key is total up to exact duplicates (which dedup removes below),
+    // so the result is deterministic.
+    pool.sort_unstable_by(|a, b| {
         b.cum_logprob
             .partial_cmp(&a.cum_logprob)
             .unwrap_or(std::cmp::Ordering::Equal)
             .then(a.parent.cmp(&b.parent))
             .then(a.token.cmp(&b.token))
     });
-    let mut out: Vec<Candidate> = Vec::new();
-    for c in pool {
-        if out.len() >= budget.min(frontier_cap) {
+    let limit = budget.min(frontier_cap);
+    let mut kept = 0usize;
+    for i in 0..pool.len() {
+        if kept >= limit {
             break;
         }
-        if out.iter().any(|o| o.parent == c.parent && o.token == c.token) {
+        if pool[..kept].iter().any(|o| o.parent == pool[i].parent && o.token == pool[i].token) {
             continue;
         }
-        out.push(c);
+        pool.swap(kept, i);
+        kept += 1;
     }
-    out
+    pool.truncate(kept);
 }
 
 #[cfg(test)]
@@ -56,13 +59,14 @@ mod tests {
         Candidate { parent, token, cum_logprob: lp, parent_row: parent }
     }
 
+    fn select(mut pool: Vec<Candidate>, budget: usize, cap: usize) -> Vec<Candidate> {
+        select_children(&mut pool, budget, cap);
+        pool
+    }
+
     #[test]
     fn keeps_best_by_cumulative_logprob() {
-        let sel = select_children(
-            vec![c(0, 5, -0.5), c(0, 6, -0.1), c(1, 7, -0.3)],
-            2,
-            16,
-        );
+        let sel = select(vec![c(0, 5, -0.5), c(0, 6, -0.1), c(1, 7, -0.3)], 2, 16);
         assert_eq!(sel.len(), 2);
         assert_eq!(sel[0].token, 6);
         assert_eq!(sel[1].token, 7);
@@ -71,26 +75,33 @@ mod tests {
     #[test]
     fn respects_frontier_cap() {
         let pool = (0..10).map(|i| c(0, i as i32 + 2, -(i as f64))).collect();
-        let sel = select_children(pool, 100, 3);
+        let sel = select(pool, 100, 3);
         assert_eq!(sel.len(), 3);
     }
 
     #[test]
     fn rejects_duplicate_parent_token() {
-        let sel = select_children(
-            vec![c(0, 5, -0.1), c(0, 5, -0.2), c(0, 6, -0.3)],
-            8,
-            8,
-        );
+        let sel = select(vec![c(0, 5, -0.1), c(0, 5, -0.2), c(0, 6, -0.3)], 8, 8);
         assert_eq!(sel.len(), 2);
     }
 
     #[test]
     fn deterministic_order_on_ties() {
-        let a = select_children(vec![c(1, 9, -0.5), c(0, 3, -0.5)], 2, 2);
-        let b = select_children(vec![c(0, 3, -0.5), c(1, 9, -0.5)], 2, 2);
+        let a = select(vec![c(1, 9, -0.5), c(0, 3, -0.5)], 2, 2);
+        let b = select(vec![c(0, 3, -0.5), c(1, 9, -0.5)], 2, 2);
         assert_eq!(a, b);
         assert_eq!(a[0].parent, 0);
+    }
+
+    #[test]
+    fn selection_reuses_the_pool_allocation() {
+        let mut pool: Vec<Candidate> = (0..10).map(|i| c(0, i as i32 + 2, -(i as f64))).collect();
+        let ptr = pool.as_ptr();
+        let cap = pool.capacity();
+        select_children(&mut pool, 4, 16);
+        assert_eq!(pool.len(), 4);
+        assert_eq!(pool.as_ptr(), ptr, "selection must not reallocate");
+        assert_eq!(pool.capacity(), cap);
     }
 
     #[test]
@@ -102,7 +113,7 @@ mod tests {
                 .collect();
             let budget = g.usize_in(1, 20);
             let cap = g.usize_in(1, 20);
-            let sel = select_children(pool, budget, cap);
+            let sel = select(pool, budget, cap);
             assert!(sel.len() <= budget.min(cap));
             for w in sel.windows(2) {
                 assert!(w[0].cum_logprob >= w[1].cum_logprob);

@@ -9,26 +9,231 @@
 //!   * speculative column `j` iff `Anc(j, k)` and both slots are valid.
 //!
 //! Padded slots are force-masked in *both* directions ("no leakage to
-//! padded slots", §3.3). Two builders produce bit-identical output:
+//! padded slots", §3.3). Two full builders produce bit-identical output:
 //! the dense ancestor-walk (reference) and the ancestor-table builder
 //! (used for larger budgets) — mirroring the paper's dense-vs-structured
 //! mask note; `verify_path` benches compare their cost.
+//!
+//! # Incremental construction
+//!
+//! Rebuilding the full `[S, cap+S]` buffer every round costs
+//! `O(S * (cap + S))` writes even though, between rounds, only two things
+//! change: the committed prefix length `t` grows by the accepted tokens,
+//! and the (small) speculative block takes a new tree shape. The
+//! incremental path ([`MaskBuilder::chain_incremental`],
+//! [`MaskBuilder::tree_incremental`], and the [`IncrementalMask`] slots
+//! backing them) keeps one persistent buffer per (stream, S) and edits
+//! only the delta:
+//!
+//!   * per-row prefix intervals `[lo, t)` are diffed against the previous
+//!     round — cost `O(S * Δt)`;
+//!   * the spec block is rewritten per round — cost `O(S * S)` (or `O(1)`
+//!     for chain masks whose causal triangle shape repeats);
+//!
+//! turning per-round mask cost from `O(S * (cap + S))` into
+//! `O(S * Δt + S * S)`. `build_dense`/`build_table` remain the reference
+//! oracle; property tests assert bit-identical equivalence over random
+//! build sequences (growing *and* shrinking prefixes, window toggling).
 
 use super::tensorize::Tensorized;
 use crate::config::contract::NEG_INF;
+use std::collections::HashMap;
 
-/// Reusable mask buffer + build strategies.
+/// Independent incremental-state streams. Masks for different purposes
+/// (teacher vs draft, chain vs tree vs custom frontier rows) evolve
+/// against different prefix clocks; keying slots by stream keeps each
+/// delta small.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum MaskStream {
+    TeacherChain,
+    TeacherTree,
+    DraftChain,
+    DraftFrontier,
+}
+
+/// One persistent `[s, cap+s]` mask buffer with enough bookkeeping to be
+/// edited incrementally and reverted exactly.
+#[derive(Clone, Debug)]
+pub struct IncrementalMask {
+    cap: usize,
+    s: usize,
+    w: usize,
+    buf: Vec<f32>,
+    /// Open prefix interval `[row_lo[k], row_hi[k])` per row (prefix
+    /// columns only, `< cap`).
+    row_lo: Vec<usize>,
+    row_hi: Vec<usize>,
+    /// Rows whose spec block may contain opens written in "block" mode.
+    spec_rows: usize,
+    /// Signature of the current spec-block content, when it was produced
+    /// by a shape-cacheable writer (chain triangles): `Some(live)`.
+    spec_sig: Option<u64>,
+    /// Individually recorded spec opens (custom/frontier mode).
+    spec_opens: Vec<(u32, u32)>,
+    /// Individually recorded extra opens at absolute row columns — used
+    /// by the frontier mask for ancestor *branch rows*, which live in the
+    /// cache region past the committed prefix. Must stay outside every
+    /// row's tracked prefix interval (asserted in debug builds).
+    extra_opens: Vec<(u32, u32)>,
+}
+
+impl IncrementalMask {
+    fn new(cap: usize, s: usize) -> Self {
+        Self {
+            cap,
+            s,
+            w: cap + s,
+            buf: vec![NEG_INF; s * (cap + s)],
+            row_lo: vec![0; s],
+            row_hi: vec![0; s],
+            spec_rows: 0,
+            spec_sig: None,
+            // worst case per round: every row opens its full ancestor
+            // chain — reserve once so recording never reallocates mid-run
+            spec_opens: Vec::with_capacity(1024),
+            extra_opens: Vec::with_capacity(1024),
+        }
+    }
+
+    /// Block size this slot serves.
+    pub fn s(&self) -> usize {
+        self.s
+    }
+
+    /// The current mask contents.
+    pub fn as_slice(&self) -> &[f32] {
+        &self.buf
+    }
+
+    /// Set row `k`'s open prefix interval to `[lo, hi)` (`hi <= cap`),
+    /// writing only the diff against the row's previous interval.
+    pub fn set_prefix(&mut self, k: usize, lo: usize, hi: usize) {
+        debug_assert!(hi <= self.cap && lo <= hi, "prefix interval [{lo},{hi}) out of range");
+        let (olo, ohi) = (self.row_lo[k], self.row_hi[k]);
+        if olo == lo && ohi == hi {
+            return;
+        }
+        let row = &mut self.buf[k * self.w..k * self.w + self.cap];
+        if lo >= ohi || hi <= olo {
+            // disjoint (covers either side being empty)
+            row[olo..ohi].fill(NEG_INF);
+            row[lo..hi].fill(0.0);
+        } else {
+            // overlapping: adjust the two edges only
+            match olo.cmp(&lo) {
+                std::cmp::Ordering::Less => row[olo..lo].fill(NEG_INF),
+                std::cmp::Ordering::Greater => row[lo..olo].fill(0.0),
+                std::cmp::Ordering::Equal => {}
+            }
+            match ohi.cmp(&hi) {
+                std::cmp::Ordering::Less => row[ohi..hi].fill(0.0),
+                std::cmp::Ordering::Greater => row[hi..ohi].fill(NEG_INF),
+                std::cmp::Ordering::Equal => {}
+            }
+        }
+        self.row_lo[k] = lo;
+        self.row_hi[k] = hi;
+    }
+
+    /// Close every recorded open outside the prefix intervals (block-mode
+    /// spec rows, custom spec opens, and extra cache-column opens),
+    /// restoring the mask to "prefix intervals only".
+    pub fn clear_spec(&mut self) {
+        for k in 0..self.spec_rows {
+            self.buf[k * self.w + self.cap..(k + 1) * self.w].fill(NEG_INF);
+        }
+        self.spec_rows = 0;
+        self.spec_sig = None;
+        for &(k, j) in &self.spec_opens {
+            self.buf[k as usize * self.w + self.cap + j as usize] = NEG_INF;
+        }
+        self.spec_opens.clear();
+        for &(k, col) in &self.extra_opens {
+            self.buf[k as usize * self.w + col as usize] = NEG_INF;
+        }
+        self.extra_opens.clear();
+    }
+
+    /// Open spec column `j` for row `k`, recording the edit for exact
+    /// reversal by the next [`IncrementalMask::clear_spec`].
+    pub fn open_spec(&mut self, k: usize, j: usize) {
+        debug_assert!(k < self.s && j < self.s);
+        self.buf[k * self.w + self.cap + j] = 0.0;
+        self.spec_opens.push((k as u32, j as u32));
+    }
+
+    /// Open an absolute column `col` of row `k` (cache region), recording
+    /// the edit for exact reversal. The column must lie outside the row's
+    /// tracked prefix interval, or the revert would punch a hole in it.
+    pub fn open_col(&mut self, k: usize, col: usize) {
+        debug_assert!(k < self.s && col < self.w);
+        debug_assert!(
+            col >= self.row_hi[k] || col < self.row_lo[k],
+            "extra open at {col} inside tracked prefix [{}, {})",
+            self.row_lo[k],
+            self.row_hi[k]
+        );
+        self.buf[k * self.w + col] = 0.0;
+        self.extra_opens.push((k as u32, col as u32));
+    }
+
+    /// Write the causal chain triangle (row `i` sees spec slots `0..=i`)
+    /// for `live` rows. Shape-cached: a repeated `live` is free.
+    fn set_spec_chain(&mut self, live: usize) {
+        if self.spec_sig == Some(live as u64)
+            && self.spec_opens.is_empty()
+            && self.extra_opens.is_empty()
+        {
+            return;
+        }
+        self.clear_spec();
+        for i in 0..live {
+            let off = i * self.w + self.cap;
+            self.buf[off..off + i + 1].fill(0.0);
+        }
+        self.spec_rows = live;
+        self.spec_sig = Some(live as u64);
+    }
+
+    /// Write the spec block for a tensorized tree: row `k` opens every
+    /// valid ancestor column (per-row parent walk, `O(live * D_max)`).
+    fn set_spec_tree(&mut self, tens: &Tensorized) {
+        self.clear_spec();
+        for k in 0..tens.live {
+            if !tens.valid[k] {
+                continue;
+            }
+            let off = k * self.w + self.cap;
+            let mut cur = k;
+            loop {
+                if tens.valid[cur] {
+                    self.buf[off + cur] = 0.0;
+                }
+                if cur == 0 {
+                    break;
+                }
+                cur = tens.parent[cur] as usize;
+            }
+        }
+        self.spec_rows = tens.live;
+        self.spec_sig = None;
+    }
+}
+
+/// Reusable mask buffers + build strategies.
 pub struct MaskBuilder {
     pub cache_cap: usize,
     /// Budget threshold above which the ancestor-table builder is used
     /// by [`MaskBuilder::build_auto`] (paper: "selects the mask
     /// construction strategy based on the speculative budget").
     pub table_threshold: usize,
+    /// Persistent incremental slots, keyed by (stream, block size).
+    slots: HashMap<(MaskStream, usize), IncrementalMask>,
 }
 
 impl MaskBuilder {
     pub fn new(cache_cap: usize) -> Self {
-        Self { cache_cap, table_threshold: 64 }
+        Self { cache_cap, table_threshold: 64, slots: HashMap::new() }
     }
 
     /// Row width of a mask for block size `s`.
@@ -145,7 +350,8 @@ impl MaskBuilder {
 
     /// Mask for a *causal chain* block (prefill chunks, baseline decode,
     /// draft chain refresh): `live` rows appended after prefix `t`, row i
-    /// sees `[lo, t)` + chain slots `0..=i`.
+    /// sees `[lo, t)` + chain slots `0..=i`. Full (non-incremental)
+    /// reference form.
     pub fn build_chain(
         &self,
         out: &mut Vec<f32>,
@@ -166,6 +372,58 @@ impl MaskBuilder {
             }
         }
     }
+
+    /// Persistent incremental slot for `(stream, s)`, created on first use.
+    pub fn incremental(&mut self, stream: MaskStream, s: usize) -> &mut IncrementalMask {
+        let cap = self.cache_cap;
+        self.slots.entry((stream, s)).or_insert_with(|| IncrementalMask::new(cap, s))
+    }
+
+    /// Incremental chain mask — bit-identical to [`MaskBuilder::build_chain`],
+    /// at `O(live * Δt)` steady-state cost.
+    pub fn chain_incremental(
+        &mut self,
+        stream: MaskStream,
+        s: usize,
+        live: usize,
+        t: usize,
+        window: Option<usize>,
+    ) -> &[f32] {
+        let lo = window.map_or(0, |win| t.saturating_sub(win));
+        let slot = self.incremental(stream, s);
+        for i in 0..s {
+            if i < live {
+                slot.set_prefix(i, lo, t);
+            } else {
+                slot.set_prefix(i, 0, 0);
+            }
+        }
+        slot.set_spec_chain(live);
+        slot.as_slice()
+    }
+
+    /// Incremental tree mask — bit-identical to [`MaskBuilder::build_dense`]
+    /// (and [`build_auto`](MaskBuilder::build_auto)), at
+    /// `O(S * Δt + S * S)` steady-state cost.
+    pub fn tree_incremental(
+        &mut self,
+        stream: MaskStream,
+        tens: &Tensorized,
+        t: usize,
+        window: Option<usize>,
+    ) -> &[f32] {
+        let lo = window.map_or(0, |win| t.saturating_sub(win));
+        let slot = self.incremental(stream, tens.s);
+        for k in 0..tens.s {
+            if k < tens.live && tens.valid[k] {
+                slot.set_prefix(k, lo, t);
+            } else {
+                slot.set_prefix(k, 0, 0);
+            }
+        }
+        slot.set_spec_tree(tens);
+        slot.as_slice()
+    }
 }
 
 #[cfg(test)]
@@ -184,6 +442,26 @@ mod tests {
         t.add_child(c, 14, -0.6);
         let _ = b;
         Tensorized::from_tree(&t, 8, true).unwrap()
+    }
+
+    fn random_tree(g: &mut prop::Gen, budget: usize) -> SpecTree {
+        let mut tree = SpecTree::with_root(3);
+        let mut frontier = vec![0usize];
+        let mut added = 0;
+        while added < budget && !frontier.is_empty() {
+            let mut next = Vec::new();
+            for &p in &frontier.clone() {
+                for _ in 0..g.usize_in(0, 4) {
+                    if added >= budget {
+                        break;
+                    }
+                    next.push(tree.add_child(p, 5, 0.0));
+                    added += 1;
+                }
+            }
+            frontier = next;
+        }
+        tree
     }
 
     fn open(m: &[f32], w: usize, k: usize, col: usize) -> bool {
@@ -255,26 +533,58 @@ mod tests {
     }
 
     #[test]
+    fn incremental_chain_matches_full_across_growth() {
+        let mut mb = MaskBuilder::new(CAP);
+        let mut full = Vec::new();
+        // grow t, vary live, toggle window, then shrink t (new conversation)
+        for (s, live, t, win) in [
+            (8usize, 1usize, 0usize, None),
+            (8, 1, 5, None),
+            (8, 3, 9, None),
+            (8, 3, 9, Some(4)),
+            (8, 2, 20, Some(4)),
+            (8, 1, 2, None), // shrinking prefix (reset)
+            (8, 8, 40, None),
+        ] {
+            mb.build_chain(&mut full, s, live, t, win);
+            let inc = mb.chain_incremental(MaskStream::DraftChain, s, live, t, win);
+            assert_eq!(inc, &full[..], "s={s} live={live} t={t} win={win:?}");
+        }
+    }
+
+    #[test]
+    fn incremental_tree_matches_dense() {
+        let mut mb = MaskBuilder::new(CAP);
+        let tens = sample();
+        let mut full = Vec::new();
+        for t in [3usize, 10, 10, 25, 4] {
+            mb.build_dense(&mut full, &tens, t, None);
+            let inc = mb.tree_incremental(MaskStream::TeacherTree, &tens, t, None);
+            assert_eq!(inc, &full[..], "t={t}");
+        }
+    }
+
+    #[test]
+    fn incremental_custom_opens_revert_exactly() {
+        let mut mb = MaskBuilder::new(CAP);
+        let slot = mb.incremental(MaskStream::DraftFrontier, 4);
+        slot.set_prefix(0, 0, 6);
+        slot.open_spec(0, 0);
+        slot.open_spec(0, 2);
+        slot.open_col(0, 9); // ancestor branch row in the cache region
+        assert!(slot.as_slice()[CAP] == 0.0 && slot.as_slice()[CAP + 2] == 0.0);
+        assert!(slot.as_slice()[9] == 0.0);
+        slot.clear_spec();
+        slot.set_prefix(0, 0, 0);
+        assert!(slot.as_slice().iter().all(|x| *x == NEG_INF));
+    }
+
+    #[test]
     fn property_builders_agree_on_random_trees() {
         let mb = MaskBuilder::new(CAP);
         prop::for_cases(100, 0xA5C3, |g| {
-            let mut tree = SpecTree::with_root(3);
-            let mut frontier = vec![0usize];
             let budget = g.usize_in(1, 20);
-            let mut added = 0;
-            while added < budget && !frontier.is_empty() {
-                let mut next = Vec::new();
-                for &p in &frontier.clone() {
-                    for _ in 0..g.usize_in(0, 4) {
-                        if added >= budget {
-                            break;
-                        }
-                        next.push(tree.add_child(p, 5, 0.0));
-                        added += 1;
-                    }
-                }
-                frontier = next;
-            }
+            let tree = random_tree(g, budget);
             let s = tree.num_slots().next_power_of_two().max(8);
             let tens = Tensorized::from_tree(&tree, s, true).unwrap();
             let t = g.usize_in(0, CAP);
@@ -291,6 +601,53 @@ mod tests {
                     assert_eq!(a[k * w + CAP + j] == 0.0, expect, "anc({j},{k})");
                 }
             }
+        });
+    }
+
+    #[test]
+    fn property_incremental_matches_dense_on_random_sequences() {
+        // The tentpole equivalence claim: against ONE long-lived builder,
+        // a random sequence of tree builds (random shapes, growing and
+        // shrinking prefixes, window changes) is bit-identical to a fresh
+        // full rebuild at every step. >= 100 random trees total.
+        let mut mb = MaskBuilder::new(CAP);
+        let mut t_cur = 0usize;
+        let mut full = Vec::new();
+        prop::for_cases(120, 0x1C4E, |g| {
+            let budget = g.usize_in(1, 20);
+            let tree = random_tree(g, budget);
+            let s = tree.num_slots().next_power_of_two().max(8);
+            let tens = Tensorized::from_tree(&tree, s, true).unwrap();
+            // mostly-growing prefix with occasional resets (new conv)
+            t_cur = if g.bool_p(0.15) {
+                g.usize_in(0, 8)
+            } else {
+                (t_cur + g.usize_in(0, 6)).min(CAP)
+            };
+            let win = if g.bool_p(0.3) { Some(g.usize_in(4, CAP)) } else { None };
+            mb.build_dense(&mut full, &tens, t_cur, win);
+            let inc = mb.tree_incremental(MaskStream::TeacherTree, &tens, t_cur, win);
+            assert_eq!(inc, &full[..], "s={s} t={t_cur} win={win:?}");
+        });
+    }
+
+    #[test]
+    fn property_incremental_chain_random_sequences() {
+        let mut mb = MaskBuilder::new(CAP);
+        let mut t_cur = 0usize;
+        let mut full = Vec::new();
+        prop::for_cases(120, 0xC4A1, |g| {
+            let s = *g.choose(&[4usize, 8, 16]);
+            let live = g.usize_in(1, s + 1);
+            t_cur = if g.bool_p(0.15) {
+                0
+            } else {
+                (t_cur + g.usize_in(0, 5)).min(CAP)
+            };
+            let win = if g.bool_p(0.3) { Some(g.usize_in(4, CAP)) } else { None };
+            mb.build_chain(&mut full, s, live, t_cur, win);
+            let inc = mb.chain_incremental(MaskStream::DraftChain, s, live, t_cur, win);
+            assert_eq!(inc, &full[..], "s={s} live={live} t={t_cur} win={win:?}");
         });
     }
 }

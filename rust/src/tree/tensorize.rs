@@ -191,9 +191,22 @@ impl Tensorized {
     /// root sits at `t`, a depth-d node at `t + d`. Padded slots get `t`
     /// (masked, value irrelevant but in-range — device-defined padding).
     pub fn positions(&self, t: usize) -> Vec<i32> {
-        (0..self.s)
-            .map(|k| if self.valid[k] { (t + self.depth[k] as usize) as i32 } else { t as i32 })
-            .collect()
+        let mut out = Vec::new();
+        self.positions_into(t, &mut out);
+        out
+    }
+
+    /// Allocation-free form of [`Tensorized::positions`]: writes into a
+    /// caller-reused buffer (the engine's hot path).
+    pub fn positions_into(&self, t: usize, out: &mut Vec<i32>) {
+        out.clear();
+        out.extend((0..self.s).map(|k| {
+            if self.valid[k] {
+                (t + self.depth[k] as usize) as i32
+            } else {
+                t as i32
+            }
+        }));
     }
 }
 

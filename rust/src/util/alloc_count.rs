@@ -1,0 +1,79 @@
+//! Counting global-allocator shim shared by the allocation-regression
+//! test and the hot-path bench (one definition, two thresholds — the
+//! counting rule must not drift between them).
+//!
+//! Install in a binary/test crate with:
+//!
+//! ```ignore
+//! #[global_allocator]
+//! static ALLOC: CountingAlloc = CountingAlloc::new(2048);
+//! ```
+//!
+//! Counts every `alloc`/`realloc` whose (new) size is at least
+//! `threshold` bytes; `threshold = 0` counts everything.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+pub struct CountingAlloc {
+    threshold: usize,
+    allocs: AtomicU64,
+    bytes: AtomicU64,
+}
+
+impl CountingAlloc {
+    pub const fn new(threshold: usize) -> Self {
+        Self { threshold, allocs: AtomicU64::new(0), bytes: AtomicU64::new(0) }
+    }
+
+    fn record(&self, size: usize) {
+        if size >= self.threshold {
+            self.allocs.fetch_add(1, Ordering::Relaxed);
+            self.bytes.fetch_add(size as u64, Ordering::Relaxed);
+        }
+    }
+
+    /// Number of counted allocations since process start.
+    pub fn allocs(&self) -> u64 {
+        self.allocs.load(Ordering::Relaxed)
+    }
+
+    /// Bytes requested by counted allocations since process start.
+    pub fn bytes(&self) -> u64 {
+        self.bytes.load(Ordering::Relaxed)
+    }
+}
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        self.record(layout.size());
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        self.record(new_size);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn thresholded_counting() {
+        let c = CountingAlloc::new(100);
+        c.record(99);
+        c.record(100);
+        c.record(5000);
+        assert_eq!(c.allocs(), 2);
+        assert_eq!(c.bytes(), 5100);
+        let all = CountingAlloc::new(0);
+        all.record(0);
+        assert_eq!(all.allocs(), 1);
+    }
+}

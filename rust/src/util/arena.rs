@@ -1,0 +1,213 @@
+//! Reusable output arenas for the zero-allocation steady-state decode
+//! path.
+//!
+//! * [`StepScratch`] — the caller-owned output block a
+//!   [`crate::backend::ModelBackend`] step writes into (logits, features,
+//!   new KV rows, optional probe output). Buffers grow to the high-water
+//!   mark of the largest compiled S variant once and are reused for every
+//!   subsequent call, so a steady-state speculative round performs no
+//!   vocab- or cache-row-sized heap allocation.
+//! * [`FeatRing`] — a fixed-capacity (token, feature-row) ring buffer
+//!   replacing the old `Vec<(i32, Vec<f32>)>` "uncharted" queue, which
+//!   cloned a `feat_dim` vector per committed token per round.
+//!
+//! These live in `util` (a leaf module) so both the backend layer and the
+//! engine can depend on them without a layering cycle.
+
+/// Caller-provided reusable output block for one teacher/draft step.
+///
+/// Layouts mirror the AOT module outputs: `logits [S, V]`,
+/// `feats [S, F]`, `k_new`/`v_new [L, S, H, Dh]`, `attn_top1 [S, H]`
+/// (probe builds only). See `backend/mod.rs` for the ownership and
+/// aliasing contract.
+#[derive(Clone, Debug, Default)]
+pub struct StepScratch {
+    s: usize,
+    vocab: usize,
+    feat_dim: usize,
+    has_probe: bool,
+    pub logits: Vec<f32>,
+    pub feats: Vec<f32>,
+    pub k_new: Vec<f32>,
+    pub v_new: Vec<f32>,
+    pub attn_top1: Vec<i32>,
+}
+
+impl StepScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Resize for an `s`-slot step. Buffers only ever grow in capacity;
+    /// after the first call at the largest variant this is allocation-free.
+    /// Contents are unspecified afterwards — the backend must write every
+    /// live element it reports (padded-slot values are backend-defined).
+    #[allow(clippy::too_many_arguments)]
+    pub fn prepare(
+        &mut self,
+        s: usize,
+        vocab: usize,
+        feat_dim: usize,
+        layers: usize,
+        heads: usize,
+        d_head: usize,
+        probe: bool,
+    ) {
+        self.s = s;
+        self.vocab = vocab;
+        self.feat_dim = feat_dim;
+        self.has_probe = probe;
+        let kv_row = heads * d_head;
+        self.logits.resize(s * vocab, 0.0);
+        self.feats.resize(s * feat_dim, 0.0);
+        self.k_new.resize(layers * s * kv_row, 0.0);
+        self.v_new.resize(layers * s * kv_row, 0.0);
+        self.attn_top1.resize(if probe { s * heads } else { 0 }, 0);
+    }
+
+    /// Padded slot count of the last step written into this scratch.
+    pub fn s(&self) -> usize {
+        self.s
+    }
+
+    /// Logits row of slot `i`.
+    pub fn logits_row(&self, i: usize) -> &[f32] {
+        &self.logits[i * self.vocab..(i + 1) * self.vocab]
+    }
+
+    pub fn logits_row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.logits[i * self.vocab..(i + 1) * self.vocab]
+    }
+
+    /// Feature row of slot `i`.
+    pub fn feat_row(&self, i: usize) -> &[f32] {
+        &self.feats[i * self.feat_dim..(i + 1) * self.feat_dim]
+    }
+
+    pub fn feat_row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.feats[i * self.feat_dim..(i + 1) * self.feat_dim]
+    }
+
+    /// Probe output (`[S, H]` top-1 attention columns), when requested.
+    pub fn attn_top1(&self) -> Option<&[i32]> {
+        if self.has_probe {
+            Some(&self.attn_top1)
+        } else {
+            None
+        }
+    }
+}
+
+/// Fixed-capacity FIFO of (token, feature-row) pairs with inline feature
+/// storage — the draft chain-refresh queue.
+#[derive(Clone, Debug)]
+pub struct FeatRing {
+    feat_dim: usize,
+    cap: usize,
+    tokens: Vec<i32>,
+    feats: Vec<f32>,
+    head: usize,
+    len: usize,
+}
+
+impl FeatRing {
+    /// `cap` must cover the worst-case backlog (the committed-cache
+    /// capacity bounds it: every queued token is a committed token).
+    pub fn with_capacity(cap: usize, feat_dim: usize) -> Self {
+        Self {
+            feat_dim,
+            cap,
+            tokens: vec![0; cap],
+            feats: vec![0.0; cap * feat_dim],
+            head: 0,
+            len: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn clear(&mut self) {
+        self.head = 0;
+        self.len = 0;
+    }
+
+    /// Copy `feat` (must be `feat_dim` long) into the next slot.
+    pub fn push(&mut self, token: i32, feat: &[f32]) {
+        assert!(self.len < self.cap, "FeatRing overflow: cap {}", self.cap);
+        assert_eq!(feat.len(), self.feat_dim, "feature row width mismatch");
+        let idx = (self.head + self.len) % self.cap;
+        self.tokens[idx] = token;
+        self.feats[idx * self.feat_dim..(idx + 1) * self.feat_dim].copy_from_slice(feat);
+        self.len += 1;
+    }
+
+    /// Pop the front entry; the feature slice stays valid until the next
+    /// `push` (pops never overwrite).
+    pub fn pop_front(&mut self) -> Option<(i32, &[f32])> {
+        if self.len == 0 {
+            return None;
+        }
+        let idx = self.head;
+        self.head = (self.head + 1) % self.cap;
+        self.len -= 1;
+        let f = &self.feats[idx * self.feat_dim..(idx + 1) * self.feat_dim];
+        Some((self.tokens[idx], f))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scratch_rows_and_reuse() {
+        let mut s = StepScratch::new();
+        s.prepare(2, 3, 2, 1, 1, 4, false);
+        s.logits.copy_from_slice(&[0.0, 1.0, 2.0, 3.0, 4.0, 5.0]);
+        s.feats.copy_from_slice(&[9.0, 8.0, 7.0, 6.0]);
+        assert_eq!(s.logits_row(1), &[3.0, 4.0, 5.0]);
+        assert_eq!(s.feat_row(0), &[9.0, 8.0]);
+        assert!(s.attn_top1().is_none());
+        assert_eq!(s.s(), 2);
+        // shrink then regrow: no new capacity needed
+        let cap_before = s.logits.capacity();
+        s.prepare(1, 3, 2, 1, 1, 4, true);
+        assert_eq!(s.logits.len(), 3);
+        assert!(s.attn_top1().is_some());
+        s.prepare(2, 3, 2, 1, 1, 4, false);
+        assert_eq!(s.logits.capacity(), cap_before);
+    }
+
+    #[test]
+    fn ring_fifo_and_wraparound() {
+        let mut r = FeatRing::with_capacity(3, 2);
+        r.push(10, &[1.0, 2.0]);
+        r.push(11, &[3.0, 4.0]);
+        assert_eq!(r.len(), 2);
+        {
+            let (t, f) = r.pop_front().unwrap();
+            assert_eq!(t, 10);
+            assert_eq!(f, &[1.0, 2.0]);
+        }
+        r.push(12, &[5.0, 6.0]);
+        r.push(13, &[7.0, 8.0]); // wraps
+        assert_eq!(r.len(), 3);
+        let order: Vec<i32> = std::iter::from_fn(|| r.pop_front().map(|(t, _)| t)).collect();
+        assert_eq!(order, vec![11, 12, 13]);
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "overflow")]
+    fn ring_rejects_overflow() {
+        let mut r = FeatRing::with_capacity(1, 1);
+        r.push(1, &[0.0]);
+        r.push(2, &[0.0]);
+    }
+}

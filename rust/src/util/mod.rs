@@ -2,12 +2,15 @@
 //! stage timers, and a seed-reporting randomized-testing helper
 //! (the image has no `rand`/`proptest`/`criterion`).
 
+pub mod alloc_count;
+pub mod arena;
 pub mod bench;
 pub mod prop;
 pub mod rng;
 pub mod stats;
 pub mod timer;
 
+pub use arena::{FeatRing, StepScratch};
 pub use rng::SplitMix64;
 pub use stats::Summary;
 pub use timer::StageTimer;

@@ -1,0 +1,108 @@
+//! Allocation-regression tests for the zero-allocation steady-state
+//! decode path, plus the engine-reuse equivalence guarantee.
+//!
+//! A counting global allocator (test-binary-local — integration tests are
+//! separate crates, so this does not affect other test binaries) records
+//! every allocation at or above `BIG` bytes. A vocab-sized logits row is
+//! `512 * 4 = 2048` bytes and a cap-sized index/float vector is at least
+//! that, so `BIG = 2048` catches exactly the classes of allocation the
+//! tentpole eliminates (backend output blocks, mask rebuilds, logits/
+//! feature clones, identity-prefix commit vectors) while ignoring small
+//! bounded bookkeeping (tree nodes, accept paths, per-turn stats).
+
+use eagle_pangu::backend::sim::SimBackend;
+use eagle_pangu::config::RunConfig;
+use eagle_pangu::engine::Engine;
+use eagle_pangu::util::SplitMix64;
+use eagle_pangu::util::alloc_count::CountingAlloc;
+
+/// Vocab row = 512 * 4 B = 2048 B; cap-sized = 1024 elements >= 4096 B.
+const BIG: usize = 2048;
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc::new(BIG);
+
+fn prompt(n: usize, seed: u64) -> Vec<i32> {
+    let mut rng = SplitMix64::new(seed);
+    let mut p = vec![1i32]; // BOS
+    for _ in 1..n {
+        p.push(rng.range(2, 512) as i32);
+    }
+    p
+}
+
+#[test]
+fn steady_state_speculative_rounds_are_allocation_free() {
+    let mut b = SimBackend::new(85);
+    let mut e = Engine::new(&mut b, RunConfig::default());
+    e.warmup().unwrap();
+    // Warmup turn: brings every reusable buffer (scratches, mask slots,
+    // staging buffers, candidate pool, pending/feat rows) to its
+    // high-water mark.
+    let p = prompt(17, 3);
+    let first = e.generate_speculative(&p, 32).unwrap();
+    assert!(first.rounds > 0);
+
+    // Steady state: continue the same conversation. Every speculative
+    // round must run without a single vocab- or cap-sized allocation.
+    let snapshot = ALLOC.allocs();
+    let cont = prompt(2, 4);
+    let second = e.generate_speculative(&cont, 32).unwrap();
+    assert!(second.rounds >= 4, "expected a sustained run, got {} rounds", second.rounds);
+    let grew = ALLOC.allocs() - snapshot;
+    assert_eq!(
+        grew,
+        0,
+        "steady-state decode performed {grew} vocab/cap-sized allocations \
+         ({} bytes) across {} rounds — the hot path regressed",
+        ALLOC.bytes(),
+        second.rounds
+    );
+}
+
+#[test]
+fn steady_state_baseline_rounds_are_allocation_free() {
+    let mut b = SimBackend::new(85);
+    let mut e = Engine::new(&mut b, RunConfig::default());
+    e.warmup().unwrap();
+    let p = prompt(12, 5);
+    e.generate_baseline(&p, 24).unwrap();
+    let snapshot = ALLOC.allocs();
+    let cont = prompt(2, 6);
+    let out = e.generate_baseline(&cont, 24).unwrap();
+    assert_eq!(out.tokens.len(), 24);
+    let grew = ALLOC.allocs() - snapshot;
+    assert_eq!(grew, 0, "baseline decode hot path allocated ({grew} big allocations)");
+}
+
+#[test]
+fn reused_engine_emits_bit_identical_tokens_to_fresh_engine() {
+    // Equivalence side of engine reuse: a `reset` engine (the
+    // coordinator's per-worker reuse pattern) must emit exactly the
+    // tokens a freshly constructed engine emits, for both kinds.
+    let p_warm = prompt(15, 7);
+    let p = prompt(11, 8);
+
+    let mut rb = SimBackend::new(85);
+    let mut reused = Engine::new(&mut rb, RunConfig::default());
+    reused.generate_speculative(&p_warm, 20).unwrap();
+    reused.reset();
+    let ea_reused = reused.generate_speculative(&p, 20).unwrap();
+    reused.reset();
+    let base_reused = reused.generate_baseline(&p, 20).unwrap();
+
+    let mut fb = SimBackend::new(85);
+    let mut fresh = Engine::new(&mut fb, RunConfig::default());
+    let ea_fresh = fresh.generate_speculative(&p, 20).unwrap();
+    let mut fb2 = SimBackend::new(85);
+    let mut fresh2 = Engine::new(&mut fb2, RunConfig::default());
+    let base_fresh = fresh2.generate_baseline(&p, 20).unwrap();
+
+    assert_eq!(ea_reused.tokens, ea_fresh.tokens, "speculative reuse diverged");
+    assert_eq!(ea_reused.accept_lens, ea_fresh.accept_lens);
+    assert_eq!(base_reused.tokens, base_fresh.tokens, "baseline reuse diverged");
+    // per-generation cache stats must also match a fresh engine (reset
+    // zeroes the counters — GenOut reports one generation, not a lifetime)
+    assert_eq!(ea_reused.teacher_cache, ea_fresh.teacher_cache);
+    assert_eq!(ea_reused.draft_cache, ea_fresh.draft_cache);
+}

@@ -39,11 +39,12 @@ fn fused_and_eager_artifacts_agree_on_goldens() {
     // numerics on the same inputs (the eager path is the reference).
     let Some(dir) = artifact_dir() else { return };
     let mut backend = PjrtBackend::load(&dir).expect("load artifacts");
-    use eagle_pangu::backend::{KvView, StepArgs};
+    use eagle_pangu::backend::{KvView, StepArgs, StepScratch};
     use eagle_pangu::runtime::golden::golden_inputs;
     let contract = backend.contract().clone();
     let gi = golden_inputs(&contract, "teacher");
     let run = |b: &mut PjrtBackend, mode: ExecMode| {
+        let mut out = StepScratch::new();
         b.teacher_step(mode, StepArgs {
             tokens: &gi.tokens,
             positions: &gi.positions,
@@ -51,8 +52,9 @@ fn fused_and_eager_artifacts_agree_on_goldens() {
             kv: KvView { k: &gi.k_cache, v: &gi.v_cache },
             feats_in: None,
             probe: false,
-        })
-        .unwrap()
+        }, &mut out)
+        .unwrap();
+        out
     };
     let f = run(&mut backend, ExecMode::Fused);
     let e = run(&mut backend, ExecMode::Eager);

@@ -1,0 +1,189 @@
+//! Minimal in-repo reimplementation of the `anyhow` API surface this
+//! repository uses: `Error`, `Result`, the `anyhow!`/`bail!`/`ensure!`
+//! macros and the `Context` extension trait for `Result` and `Option`.
+//!
+//! The build image has no crates.io access (DESIGN.md: every substrate is
+//! built in-repo), so this vendored crate stands in for the real one.
+//! Semantics match where the repo depends on them:
+//!
+//! * `{}` displays the outermost context (most recent `.context(...)`);
+//! * `{:#}` displays the whole chain, outermost first, `": "`-joined —
+//!   the format the coordinator's failure dumps rely on;
+//! * any `std::error::Error + Send + Sync + 'static` converts via `?`,
+//!   with its `source()` chain flattened into the message chain.
+
+use std::fmt;
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A dynamic error: an outermost-first chain of messages.
+pub struct Error {
+    /// `chain[0]` is the outermost (most recently attached) context;
+    /// the last entry is the root cause.
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Build from a printable message (the `anyhow!` entry point).
+    pub fn msg(msg: impl fmt::Display) -> Self {
+        Self { chain: vec![msg.to_string()] }
+    }
+
+    /// Attach an outer context message.
+    pub fn context(mut self, c: impl fmt::Display) -> Self {
+        self.chain.insert(0, c.to_string());
+        self
+    }
+
+    /// The message chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(String::as_str)
+    }
+
+    /// The innermost (root cause) message.
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().map(String::as_str).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain.first().map(String::as_str).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // `fn main() -> anyhow::Result<()>` prints through Debug: show the
+        // full chain the way the real anyhow does.
+        write!(f, "{}", self.chain.join(": "))
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Self {
+        let mut chain = vec![e.to_string()];
+        let mut src: Option<&(dyn std::error::Error + 'static)> = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Self { chain }
+    }
+}
+
+/// Context-attachment extension for `Result` and `Option`.
+pub trait Context<T> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, c: C) -> Result<T>;
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, c: C) -> Result<T> {
+        self.map_err(|e| e.into().context(c))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, c: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(c))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<()> {
+        std::fs::read_to_string("/definitely/not/a/file").context("reading config")?;
+        Ok(())
+    }
+
+    #[test]
+    fn context_chain_formats() {
+        let e = io_fail().unwrap_err();
+        assert_eq!(format!("{e}"), "reading config");
+        let full = format!("{e:#}");
+        assert!(full.starts_with("reading config: "), "{full}");
+    }
+
+    #[test]
+    fn option_context_and_macros() {
+        let v: Option<u32> = None;
+        let e = v.context("missing").unwrap_err();
+        assert_eq!(e.root_cause(), "missing");
+        let x = 3;
+        let e2 = anyhow!("bad value {x}");
+        assert_eq!(format!("{e2}"), "bad value 3");
+        let e3 = anyhow!("bad value {}", 4);
+        assert_eq!(format!("{e3}"), "bad value 4");
+    }
+
+    #[test]
+    fn bail_and_ensure() {
+        fn f(ok: bool) -> Result<u32> {
+            ensure!(ok, "precondition {} failed", "p");
+            if !ok {
+                bail!("unreachable");
+            }
+            Ok(7)
+        }
+        assert_eq!(f(true).unwrap(), 7);
+        assert_eq!(format!("{}", f(false).unwrap_err()), "precondition p failed");
+    }
+}
