@@ -35,6 +35,7 @@ fn main() -> Result<()> {
         trace_dir: PathBuf::from(format!("results/budget_sweep_example/{tag}")),
         run_baseline: baseline,
         run_ea: ea,
+        max_batch: 1,
         verbose: false,
     };
 

@@ -35,14 +35,18 @@ fn main() -> Result<()> {
     println!("prompt: {} tokens, topic token {}", prompt.len(), prompt[1]);
 
     // 3. Tree-speculative decoding (the paper's EA path, fused kernels).
+    //    The engine owns per-conversation state only; the backend is
+    //    passed per call (`StepScratch` outputs land in reusable arenas,
+    //    and one warmed engine is reused across runs via `reset`).
     let cfg = RunConfig::default(); // M=16, D_max=10 — the paper's sweet spot
-    let mut engine = Engine::new(&mut *backend, cfg.clone());
-    engine.warmup()?; // absorb lazy PJRT compilation before timing
-    let ea = engine.generate_speculative(&prompt, 96)?;
+    let mut engine = Engine::new(&*backend, cfg.clone());
+    engine.warmup(&mut *backend)?; // absorb lazy PJRT compilation before timing
+    let ea = engine.generate_speculative(&mut *backend, &prompt, 96)?;
     engine.reset();
 
-    // 4. Baseline: teacher-only greedy decoding of the same prompt.
-    let base = engine.generate_baseline(&prompt, ea.tokens.len())?;
+    // 4. Baseline: teacher-only greedy decoding of the same prompt, on
+    //    the same warmed engine.
+    let base = engine.generate_baseline(&mut *backend, &prompt, ea.tokens.len())?;
 
     // 5. Greedy tree speculation never changes the output — only the clock.
     assert_eq!(ea.tokens, base.tokens, "speculation must preserve the output");

@@ -6,7 +6,7 @@
 //! latency/throughput in the paper's Table-1 format.
 //!
 //! ```bash
-//! make artifacts && cargo run --release --example serve -- [turns] [workers]
+//! make artifacts && cargo run --release --example serve -- [conversations] [workers] [batch]
 //! ```
 
 use anyhow::Result;
@@ -21,6 +21,13 @@ fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().collect();
     let conversations: usize = args.get(1).and_then(|a| a.parse().ok()).unwrap_or(12);
     let workers: usize = args.get(2).and_then(|a| a.parse().ok()).unwrap_or(2);
+    // Conversations resident per worker: EA tree verifications are fused
+    // across them into one padded teacher launch per tick (token-identical
+    // to sequential serving — see docs/ARCHITECTURE.md). Defaults to 4 on
+    // the sim backend (true fused teacher_step_batch); on PJRT the fused
+    // call is still the sequential trait fallback, so batching buys
+    // nothing there yet and the default stays 1.
+    let explicit_batch: Option<usize> = args.get(3).and_then(|a| a.parse().ok());
 
     let backend = if PathBuf::from("artifacts/manifest.json").exists() {
         BackendSpec::Pjrt { artifact_dir: "artifacts".into() }
@@ -28,6 +35,10 @@ fn main() -> Result<()> {
         eprintln!("artifacts/ missing — using SimBackend (run `make artifacts` for the real model)");
         BackendSpec::Sim { agree_pct: 85 }
     };
+    let max_batch = explicit_batch.unwrap_or(match &backend {
+        BackendSpec::Sim { .. } => 4,
+        BackendSpec::Pjrt { .. } => 1,
+    });
 
     let mut run = RunConfig::default();
     run.max_new_tokens = 96;
@@ -43,10 +54,12 @@ fn main() -> Result<()> {
         trace_dir: "results/serve_example".into(),
         run_baseline: true,
         run_ea: true,
+        max_batch,
         verbose: true,
     };
-    println!("serving {} conversations ({} turns) across {} workers...",
-             conversations, cfg.workload.total_turns(), workers);
+    println!("serving {} conversations ({} turns) across {} workers, \
+              EA batch width {}...",
+             conversations, cfg.workload.total_turns(), workers, max_batch);
     let records = run_workload(&cfg)?;
 
     let pairs = pair_turns(&records);

@@ -36,6 +36,7 @@ fn main() -> Result<()> {
         trace_dir: dir.clone(),
         run_baseline: true,
         run_ea: true,
+        max_batch: 1,
         verbose: false,
     };
     run_workload(&cfg)?;

@@ -3,20 +3,38 @@
 //! version of E1 — `eagle-pangu bench-e1` regenerates the full Table 1.
 //!
 //! Also emits `BENCH_hotpath.json` — machine-readable rounds/sec,
-//! tokens/sec and bytes-allocated/round for the EA steady state, so the
-//! perf trajectory of the hot path is tracked across PRs (compare against
-//! the previous PR's file).
+//! tokens/sec and bytes-allocated/round for the EA steady state, plus the
+//! cross-request batching sweep (B in {1, 2, 4, 8}) — so the perf
+//! trajectory of the hot path is tracked across PRs (compare against the
+//! previous PR's file).
+//!
+//! # Batching sweep methodology
+//!
+//! The sweep decodes the same 8-conversation workload under scheduler
+//! fusion widths B in {1, 2, 4, 8} (B = 1 is the sequential baseline:
+//! every request verified in its own launch) and reports aggregate
+//! request-rounds per second. It runs on the SimBackend with the
+//! **teacher launch-cost model** enabled (1.5 ms spin per teacher
+//! launch): on real accelerators the fixed host-dispatch + kernel-launch
+//! latency of the fused teacher module is the quantity cross-request
+//! batching amortizes, and the sim's compute is otherwise too cheap to
+//! expose it. The model is applied identically at every B (including the
+//! B = 1 baseline), so the reported speedup measures launch amortization
+//! only — tokens decoded are bit-identical across B by the batching
+//! contract. `launch_cost_us` is recorded in the JSON so the number is
+//! reproducible and honest.
 
 use eagle_pangu::backend::sim::SimBackend;
 use eagle_pangu::backend::ModelBackend;
 use eagle_pangu::config::{CacheStrategy, RunConfig};
+use eagle_pangu::coordinator::{decode_speculative_batch, BatchScheduler};
 use eagle_pangu::engine::Engine;
 use eagle_pangu::json::Json;
 use eagle_pangu::runtime::PjrtBackend;
+use eagle_pangu::util::alloc_count::CountingAlloc;
 use eagle_pangu::util::bench::{bench, black_box};
 use eagle_pangu::workload::Grammar;
-use eagle_pangu::util::alloc_count::CountingAlloc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 // Count every allocation (threshold 0): the bytes-allocated/round series
 // in BENCH_hotpath.json.
@@ -40,17 +58,17 @@ fn main() {
     let mut b = backend();
     let backend_name = b.name();
     let cfg = RunConfig::default();
-    let mut engine = Engine::new(&mut *b, cfg.clone());
-    engine.warmup().unwrap();
+    let mut engine = Engine::new(&*b, cfg.clone());
+    engine.warmup(&mut *b).unwrap();
     bench("turn_baseline_48tok", 500.0, 3, || {
         engine.reset();
-        let out = engine.generate_baseline(&prompt, max_new).unwrap();
+        let out = engine.generate_baseline(&mut *b, &prompt, max_new).unwrap();
         black_box(out.tokens.len());
     });
 
     bench("turn_ea_m16_d10", 500.0, 3, || {
         engine.reset();
-        let out = engine.generate_speculative(&prompt, max_new).unwrap();
+        let out = engine.generate_speculative(&mut *b, &prompt, max_new).unwrap();
         black_box(out.tokens.len());
     });
 
@@ -58,7 +76,7 @@ fn main() {
     // Warm every buffer to its high-water mark, then measure a sustained
     // run: rounds/sec, tokens/sec and allocator traffic per round.
     engine.reset();
-    engine.generate_speculative(&prompt, max_new).unwrap();
+    engine.generate_speculative(&mut *b, &prompt, max_new).unwrap();
     engine.reset();
     let bytes0 = ALLOC.bytes();
     let calls0 = ALLOC.allocs();
@@ -68,7 +86,7 @@ fn main() {
     let mut turns = 0u64;
     while t0.elapsed().as_secs_f64() < 2.0 {
         engine.reset();
-        let out = engine.generate_speculative(&prompt, max_new).unwrap();
+        let out = engine.generate_speculative(&mut *b, &prompt, max_new).unwrap();
         rounds += out.rounds;
         tokens += out.tokens.len() as u64;
         turns += 1;
@@ -85,6 +103,61 @@ fn main() {
          {bytes_per_round:.0} B alloc/round  {allocs_per_round:.1} allocs/round \
          ({turns} turns)"
     );
+
+    // ---- cross-request batching sweep (sim + launch-cost model) ----
+    let launch_cost_us: u64 = 1500;
+    let sweep_convs = 8usize;
+    let sweep_max_new = 24usize;
+    let sweep_prompts: Vec<Vec<i32>> = (0..sweep_convs)
+        .map(|i| Grammar::code().sample_sequence(32, 100 + i as u64, None))
+        .collect();
+    let mut batch_json = Json::obj();
+    let mut rps_b1 = 0.0f64;
+    let mut rps_b4 = 0.0f64;
+    for bsz in [1usize, 2, 4, 8] {
+        let mut sim = SimBackend::new(85)
+            .with_teacher_launch(Duration::from_micros(launch_cost_us));
+        let mut engines: Vec<Engine> =
+            (0..sweep_convs).map(|_| Engine::new(&sim, cfg.clone())).collect();
+        for e in engines.iter_mut() {
+            e.warmup(&mut sim).unwrap();
+        }
+        let cap = sim.contract().cache_cap;
+        let mut sched = BatchScheduler::new(bsz, cap);
+        // warm drive (fused staging to high-water), then timed drives
+        decode_speculative_batch(&mut sim, &mut engines, &sweep_prompts, sweep_max_new,
+                                 &mut sched)
+            .unwrap();
+        let t0 = Instant::now();
+        let mut sweep_rounds = 0u64;
+        let mut iters = 0u64;
+        while t0.elapsed().as_secs_f64() < 1.5 {
+            for e in engines.iter_mut() {
+                e.reset();
+            }
+            let outs = decode_speculative_batch(
+                &mut sim, &mut engines, &sweep_prompts, sweep_max_new, &mut sched)
+                .unwrap();
+            sweep_rounds += outs.iter().map(|o| o.rounds).sum::<u64>();
+            iters += 1;
+        }
+        let rps = sweep_rounds as f64 / t0.elapsed().as_secs_f64();
+        if bsz == 1 {
+            rps_b1 = rps;
+        }
+        if bsz == 4 {
+            rps_b4 = rps;
+        }
+        println!(
+            "batch sweep B={bsz}: {rps:.0} request-rounds/s \
+             ({} launches, {iters} sweeps)",
+            sim.teacher_calls
+        );
+        batch_json.push(&format!("B{bsz}_rounds_per_sec"), rps);
+    }
+    let b4_speedup = if rps_b1 > 0.0 { rps_b4 / rps_b1 } else { 0.0 };
+    println!("batch sweep: B=4 speedup over sequential B=1: {b4_speedup:.2}x");
+
     let mut j = Json::obj();
     j.push("bench", "end_to_end_hotpath")
         .push("backend", backend_name)
@@ -94,7 +167,11 @@ fn main() {
         .push("rounds_per_sec", rounds_per_sec)
         .push("tokens_per_sec", tokens_per_sec)
         .push("bytes_allocated_per_round", bytes_per_round)
-        .push("allocs_per_round", allocs_per_round);
+        .push("allocs_per_round", allocs_per_round)
+        .push("batch_sweep", batch_json)
+        .push("batch_sweep_launch_cost_us", launch_cost_us)
+        .push("batch_sweep_conversations", sweep_convs)
+        .push("b4_speedup_vs_b1", b4_speedup);
     std::fs::write("BENCH_hotpath.json", j.to_string_pretty()).unwrap();
     println!("wrote BENCH_hotpath.json");
 
@@ -102,20 +179,22 @@ fn main() {
     cfg2.tree.budget = 8;
     cfg2.tree.depth_max = 5;
     let mut b2 = backend();
-    let mut engine2 = Engine::new(&mut *b2, cfg2);
+    let mut engine2 = Engine::new(&*b2, cfg2);
+    engine2.warmup(&mut *b2).unwrap();
     bench("turn_ea_m8_d5", 500.0, 3, || {
         engine2.reset();
-        let out = engine2.generate_speculative(&prompt, max_new).unwrap();
+        let out = engine2.generate_speculative(&mut *b2, &prompt, max_new).unwrap();
         black_box(out.tokens.len());
     });
 
     let mut cfg3 = cfg;
     cfg3.cache_strategy = CacheStrategy::DeepCopy;
     let mut b3 = backend();
-    let mut engine3 = Engine::new(&mut *b3, cfg3);
+    let mut engine3 = Engine::new(&*b3, cfg3);
+    engine3.warmup(&mut *b3).unwrap();
     bench("turn_ea_m16_deepcopy", 500.0, 3, || {
         engine3.reset();
-        let out = engine3.generate_speculative(&prompt, max_new).unwrap();
+        let out = engine3.generate_speculative(&mut *b3, &prompt, max_new).unwrap();
         black_box(out.tokens.len());
     });
 }

@@ -38,6 +38,35 @@
 //!   buffer donation — `to_literal` into a preallocated host buffer —
 //!   removes both the binding-side allocation and the copy, and the
 //!   scratch API makes that a backend-local change (ROADMAP open item).
+//!
+//! # Batched verification contract
+//!
+//! [`ModelBackend::teacher_step_batch`] fuses the tree-verification steps
+//! of `B` independent requests into **one launch** (the serving-layer
+//! batching of SpecInfer-style systems: teacher invocation cost is
+//! amortized across requests as well as across speculated tokens). The
+//! fused input layout is documented in `docs/ARCHITECTURE.md`; in brief:
+//!
+//! * every request is padded to the group's largest compiled variant
+//!   `S_max`; `tokens`/`positions` are `[B * S_max]` with request `b`
+//!   owning rows `[b*S_max, (b+1)*S_max)`;
+//! * the additive mask is `[B, S_max, cap + S_max]`: each request's rows
+//!   address **its own** KV cache (`reqs[b].kv`) in the first `cap`
+//!   columns and its own speculative block in the last `S_max` columns —
+//!   there is no cross-request column space, so cross-request isolation
+//!   is structural, not a masking convention;
+//! * **padding rows are never attended**: a request padded from
+//!   `S_req < S_max` has rows `[S_req, S_max)` fully masked in both
+//!   directions, and callers never read those output rows back
+//!   ([`StepScratch::scatter_from`] copies only `S_req` rows);
+//! * outputs land in a scratch prepared with
+//!   [`StepScratch::prepare_batch`]; live rows must be **bit-identical**
+//!   to `B` sequential [`ModelBackend::teacher_step`] calls on the same
+//!   per-request inputs (property-tested in `tests/batched.rs`).
+//!
+//! The default implementation is that sequential loop (correct for every
+//! backend, one launch per request, allocates a temporary scratch);
+//! [`sim::SimBackend`] overrides it with a true single-pass fused step.
 
 pub mod sim;
 
@@ -49,16 +78,22 @@ pub use crate::util::arena::StepScratch;
 /// Read-only view of a KV cache buffer pair, layout `[L, cap, H, Dh]`.
 #[derive(Clone, Copy)]
 pub struct KvView<'a> {
+    /// Key cache buffer.
     pub k: &'a [f32],
+    /// Value cache buffer.
     pub v: &'a [f32],
 }
 
 /// Inputs of one step. `tokens/positions` have exactly `s` entries
 /// (padded by the caller); `mask` is the `[s, cap+s]` additive mask.
 pub struct StepArgs<'a> {
+    /// Token ids of the `s` (padded) slots.
     pub tokens: &'a [i32],
+    /// RoPE positions of the `s` slots.
     pub positions: &'a [i32],
+    /// `[s, cap + s]` additive attention mask (0 = open, `NEG_INF` = closed).
     pub mask: &'a [f32],
+    /// The committed-prefix KV cache the step reads.
     pub kv: KvView<'a>,
     /// Draft only: `[s, F]` incoming feature rows (EAGLE conditioning).
     pub feats_in: Option<&'a [f32]>,
@@ -66,11 +101,39 @@ pub struct StepArgs<'a> {
     pub probe: bool,
 }
 
+/// One request inside a fused batched verification step.
+#[derive(Clone, Copy)]
+pub struct BatchRequest<'a> {
+    /// This request's own committed-prefix KV cache.
+    pub kv: KvView<'a>,
+    /// Rows the caller will read back (the request's own padded variant
+    /// `S_req <= S_max`); rows `[live, S_max)` are padding the backend
+    /// may skip entirely.
+    pub live: usize,
+}
+
+/// Inputs of one fused `B`-request verification step (see the *Batched
+/// verification contract* in the module docs for the layout invariants).
+pub struct BatchStepArgs<'a, 'b> {
+    /// Padded slots per request (the group's largest compiled S variant).
+    pub s_max: usize,
+    /// `[B * s_max]` token ids; request `b` owns `[b*s_max, (b+1)*s_max)`.
+    pub tokens: &'a [i32],
+    /// `[B * s_max]` RoPE positions, same row ownership.
+    pub positions: &'a [i32],
+    /// `[B, s_max, cap + s_max]` additive mask block; each request's rows
+    /// address that request's own cache columns and spec block.
+    pub mask: &'a [f32],
+    /// Per-request cache views + live row counts, length `B`.
+    pub reqs: &'b [BatchRequest<'a>],
+}
+
 /// A teacher+draft pair the engine can decode with.
 ///
 /// Implementations are single-threaded (PJRT handles are !Send); each
 /// coordinator worker owns its own backend instance (DESIGN.md §3.4).
 pub trait ModelBackend {
+    /// The static shape contract this backend was built for.
     fn contract(&self) -> &Contract;
 
     /// Teacher verification/prefill step under `mode` (fused or eager
@@ -81,6 +144,49 @@ pub trait ModelBackend {
 
     /// Draft step (chain refresh or tree-frontier expansion).
     fn draft_step(&mut self, args: StepArgs, out: &mut StepScratch) -> Result<()>;
+
+    /// Fused teacher verification over `B` requests in one launch; live
+    /// output rows must be bit-identical to `B` sequential
+    /// [`ModelBackend::teacher_step`] calls (see the module docs).
+    ///
+    /// The default implementation *is* that sequential loop: one launch
+    /// per request through a temporary scratch, copied into the fused
+    /// layout. It is correct for any backend (PJRT runs it unchanged —
+    /// true fused `[B, S]` modules are a compile-side follow-up) but does
+    /// not amortize launches and allocates the temporary; fused backends
+    /// should override it.
+    fn teacher_step_batch(
+        &mut self,
+        mode: ExecMode,
+        args: BatchStepArgs,
+        out: &mut StepScratch,
+    ) -> Result<()> {
+        let (vocab, feat_dim, d, cap) = {
+            let c = self.contract();
+            (c.vocab, c.feat_dim, c.teacher, c.cache_cap)
+        };
+        let b = args.reqs.len();
+        let s = args.s_max;
+        let w = cap + s;
+        out.prepare_batch(b, s, vocab, feat_dim, d.layers, d.heads, d.d_head, false);
+        let mut tmp = StepScratch::new();
+        for (bi, req) in args.reqs.iter().enumerate() {
+            self.teacher_step(
+                mode,
+                StepArgs {
+                    tokens: &args.tokens[bi * s..(bi + 1) * s],
+                    positions: &args.positions[bi * s..(bi + 1) * s],
+                    mask: &args.mask[bi * s * w..(bi + 1) * s * w],
+                    kv: req.kv,
+                    feats_in: None,
+                    probe: false,
+                },
+                &mut tmp,
+            )?;
+            out.copy_request_from(bi, &tmp);
+        }
+        Ok(())
+    }
 
     /// Human-readable backend id for manifests/traces.
     fn name(&self) -> &'static str;

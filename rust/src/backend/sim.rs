@@ -27,57 +27,120 @@
 //! Like every backend, the sim writes its outputs into the caller's
 //! [`StepScratch`]; the only per-call state it owns is a reusable
 //! context-reconstruction buffer, so steady-state calls allocate nothing.
+//!
+//! # Fused batched verification
+//!
+//! The sim's [`ModelBackend::teacher_step_batch`] is a true fused
+//! implementation: one pass over all `B` requests' live rows, **one**
+//! launch counted and **one** launch-cost charge. Because each row's
+//! logits depend only on that row's visible context (own cache + own
+//! spec block — the fused mask has no cross-request columns), the fused
+//! outputs are bit-identical to `B` sequential
+//! [`ModelBackend::teacher_step`] calls; padding rows
+//! (`i >= reqs[b].live`) are skipped entirely and left backend-defined.
+//!
+//! # Launch-cost model
+//!
+//! Real accelerators charge a fixed host-side dispatch + kernel-launch
+//! latency per teacher invocation — the quantity that cross-request
+//! batching amortizes (and that the paper's per-round "one teacher call"
+//! economics rest on). [`SimBackend::teacher_launch`] models it as a
+//! busy-wait charged once per teacher *launch* (fused or not). It
+//! defaults to zero so equivalence tests stay instant; the end-to-end
+//! bench sets it to measure the B-sweep amortization honestly.
 
-use super::{ModelBackend, StepArgs, StepScratch};
+use super::{BatchStepArgs, ModelBackend, StepArgs, StepScratch};
 use crate::config::contract::{FIRST_TOKEN, VOCAB};
 use crate::config::{Contract, ExecMode};
 use crate::util::rng::splitmix64;
 use anyhow::Result;
+use std::time::{Duration, Instant};
 
 /// Number of distinguished candidates per context.
 const TOP_N: usize = 8;
 
+/// Deterministic simulator backend (see the module docs).
 pub struct SimBackend {
     contract: Contract,
     /// Probability (percent) that the draft's top-1 equals the teacher's.
     pub agree_pct: u64,
-    /// Calls observed (per role) — used by tests and the harness.
+    /// Teacher *launches* observed (a fused batched step counts once).
     pub teacher_calls: u64,
+    /// Draft launches observed.
     pub draft_calls: u64,
+    /// Simulated per-launch dispatch cost of the teacher module (spin-
+    /// waited once per launch, fused or not). Zero (the default) disables
+    /// the model.
+    pub teacher_launch: Duration,
     /// Reusable (position, token) scratch for context reconstruction —
     /// grows once to the visible-context high-water mark.
     seen: Vec<(i64, i64)>,
 }
 
 impl SimBackend {
+    /// A sim with the given draft/teacher agreement percentage and no
+    /// launch-cost model.
     pub fn new(agree_pct: u64) -> Self {
         let contract = Contract::default();
         let seen = Vec::with_capacity(contract.cache_cap + 64);
-        Self { contract, agree_pct, teacher_calls: 0, draft_calls: 0, seen }
+        Self {
+            contract,
+            agree_pct,
+            teacher_calls: 0,
+            draft_calls: 0,
+            teacher_launch: Duration::ZERO,
+            seen,
+        }
     }
 
-    /// Context hash for slot `i`: fold (position, token) pairs of every
+    /// Builder: set the simulated per-launch teacher dispatch cost.
+    pub fn with_teacher_launch(mut self, cost: Duration) -> Self {
+        self.teacher_launch = cost;
+        self
+    }
+
+    /// Spin for the configured launch cost (no syscall, so the wait is
+    /// accurate at microsecond scale and deterministic in ordering).
+    fn spend_launch_cost(&self) {
+        if self.teacher_launch.is_zero() {
+            return;
+        }
+        let t0 = Instant::now();
+        while t0.elapsed() < self.teacher_launch {
+            std::hint::spin_loop();
+        }
+    }
+
+    /// Context hash of one row: fold (position, token) pairs of every
     /// visible column, sorted by position (stable on column order).
-    /// `stride` is the per-row element stride of the KV buffer's layer 0
-    /// (hoisted out of the per-column loop by the caller).
-    fn context_hash(&mut self, i: usize, args: &StepArgs, stride: usize) -> u64 {
+    /// `mask_row` is that row's `[cap + s]` mask slice, `tokens` /
+    /// `positions` the `s` speculative slots of the row's own request,
+    /// `kv_k` that request's key-cache buffer, and `stride` the per-row
+    /// element stride of the buffer's layer 0.
+    fn hash_row(
+        &mut self,
+        mask_row: &[f32],
+        tokens: &[i32],
+        positions: &[i32],
+        kv_k: &[f32],
+        stride: usize,
+    ) -> u64 {
         let cap = self.contract.cache_cap;
-        let s = args.tokens.len();
-        let w = cap + s;
-        let row = &args.mask[i * w..(i + 1) * w];
+        let s = tokens.len();
+        debug_assert_eq!(mask_row.len(), cap + s, "mask row width mismatch");
         self.seen.clear();
         // cache columns: token at element 0, position at element 1 of the
         // layer-0 row (the sim's own KV encoding).
-        for (j, mval) in row.iter().take(cap).enumerate() {
+        for (j, mval) in mask_row.iter().take(cap).enumerate() {
             if *mval == 0.0 {
-                let tok = args.kv.k[j * stride] as i64;
-                let pos = args.kv.k[j * stride + 1] as i64;
+                let tok = kv_k[j * stride] as i64;
+                let pos = kv_k[j * stride + 1] as i64;
                 self.seen.push((pos, tok));
             }
         }
-        for (j, mval) in row[cap..cap + s].iter().enumerate() {
+        for (j, mval) in mask_row[cap..cap + s].iter().enumerate() {
             if *mval == 0.0 {
-                self.seen.push((args.positions[j] as i64, args.tokens[j] as i64));
+                self.seen.push((positions[j] as i64, tokens[j] as i64));
             }
         }
         // positions are unique across visible columns (committed prefix,
@@ -94,16 +157,14 @@ impl SimBackend {
 
     /// Element stride of one cache row in layer 0 — derived from buffer
     /// size so the same code serves teacher- and draft-shaped caches.
-    fn row_stride(&self, args: &StepArgs) -> usize {
+    fn stride_of(&self, kv_len: usize) -> usize {
         // kv buffer is [L, cap, H, Dh]; we address layer 0 rows only.
-        let per_layer = args.kv.k.len()
-            / match args.kv.k.len() {
-                n if n == self.contract.teacher.cache_elems(self.contract.cache_cap) => {
-                    self.contract.teacher.layers
-                }
-                _ => self.contract.draft.layers,
-            };
-        per_layer / self.contract.cache_cap
+        let layers = if kv_len == self.contract.teacher.cache_elems(self.contract.cache_cap) {
+            self.contract.teacher.layers
+        } else {
+            self.contract.draft.layers
+        };
+        kv_len / layers / self.contract.cache_cap
     }
 
     /// Deterministic candidate list for a context.
@@ -176,9 +237,16 @@ impl SimBackend {
         let v = self.contract.vocab;
         let d = if teacher { self.contract.teacher } else { self.contract.draft };
         out.prepare(s, v, self.contract.feat_dim, d.layers, d.heads, d.d_head, args.probe);
-        let stride = self.row_stride(&args);
+        let stride = self.stride_of(args.kv.k.len());
+        let w = self.contract.cache_cap + s;
         for i in 0..s {
-            let ctx = self.context_hash(i, &args, stride);
+            let ctx = self.hash_row(
+                &args.mask[i * w..(i + 1) * w],
+                args.tokens,
+                args.positions,
+                args.kv.k,
+                stride,
+            );
             let cands = if teacher {
                 Self::candidates(ctx)
             } else if splitmix64(ctx ^ 0xD15A_6EE2) % 100 < self.agree_pct {
@@ -209,12 +277,72 @@ impl ModelBackend for SimBackend {
     fn teacher_step(&mut self, _mode: ExecMode, args: StepArgs, out: &mut StepScratch)
         -> Result<()> {
         self.teacher_calls += 1;
+        self.spend_launch_cost();
         self.step(args, true, out)
     }
 
     fn draft_step(&mut self, args: StepArgs, out: &mut StepScratch) -> Result<()> {
         self.draft_calls += 1;
         self.step(args, false, out)
+    }
+
+    /// True fused implementation: one pass, one launch counted, one
+    /// launch-cost charge. Live rows are bit-identical to sequential
+    /// [`ModelBackend::teacher_step`] calls; padding rows (`i >= live`)
+    /// are skipped and left backend-defined (never read back by
+    /// contract).
+    fn teacher_step_batch(
+        &mut self,
+        _mode: ExecMode,
+        args: BatchStepArgs,
+        out: &mut StepScratch,
+    ) -> Result<()> {
+        self.teacher_calls += 1;
+        self.spend_launch_cost();
+        let b = args.reqs.len();
+        let s = args.s_max;
+        let cap = self.contract.cache_cap;
+        let w = cap + s;
+        let d = self.contract.teacher;
+        let f = self.contract.feat_dim;
+        let rs = d.heads * d.d_head;
+        out.prepare_batch(b, s, self.contract.vocab, f, d.layers, d.heads, d.d_head, false);
+        debug_assert_eq!(args.tokens.len(), b * s, "fused tokens length");
+        debug_assert_eq!(args.positions.len(), b * s, "fused positions length");
+        debug_assert_eq!(args.mask.len(), b * s * w, "fused mask length");
+        let rows = b * s;
+        for (bi, req) in args.reqs.iter().enumerate() {
+            let stride = self.stride_of(req.kv.k.len());
+            let base = bi * s;
+            for i in 0..req.live.min(s) {
+                let row = base + i;
+                let ctx = self.hash_row(
+                    &args.mask[row * w..(row + 1) * w],
+                    &args.tokens[base..base + s],
+                    &args.positions[base..base + s],
+                    req.kv.k,
+                    stride,
+                );
+                let cands = Self::candidates(ctx);
+                Self::write_logits(out.logits_row_mut(row), &cands);
+                let (tok, pos) =
+                    (args.tokens[row] as f32, args.positions[row] as f32);
+                let fr = out.feat_row_mut(row);
+                fr.fill(0.0);
+                fr[0] = tok;
+                fr[1] = pos;
+                for l in 0..d.layers {
+                    let off = (l * rows + row) * rs;
+                    out.k_new[off..off + rs].fill(0.0);
+                    out.v_new[off..off + rs].fill(0.0);
+                    out.k_new[off] = tok;
+                    out.k_new[off + 1] = pos;
+                    out.v_new[off] = tok;
+                    out.v_new[off + 1] = pos;
+                }
+            }
+        }
+        Ok(())
     }
 
     fn name(&self) -> &'static str {
@@ -225,7 +353,7 @@ impl ModelBackend for SimBackend {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::backend::{argmax, KvView};
+    use crate::backend::{argmax, BatchRequest, KvView};
     use crate::config::contract::{CACHE_CAP, NEG_INF};
 
     fn empty_cache(c: &Contract) -> (Vec<f32>, Vec<f32>) {
@@ -380,5 +508,116 @@ mod tests {
         }
         assert_eq!(out.s(), 8);
         assert_eq!(out.logits.len(), 8 * VOCAB);
+    }
+
+    /// The backend-level bit-identity claim: a fused 2-request step (with
+    /// ragged per-request variants padded to S_max) reproduces the exact
+    /// live output rows of two sequential single-request steps, and is
+    /// counted as ONE teacher launch.
+    #[test]
+    fn fused_batch_matches_sequential_rows_exactly() {
+        let contract = Contract::default();
+        let (k0, v0) = {
+            let n = contract.teacher.cache_elems(contract.cache_cap);
+            // distinct caches: encode (token, position) rows the sim reads
+            let mut k = vec![0.0; n];
+            let mut v = vec![0.0; n];
+            let rs = contract.teacher.heads * contract.teacher.d_head;
+            for row in 0..4 {
+                k[row * rs] = (10 + row) as f32; // token
+                k[row * rs + 1] = row as f32; // position
+                v[row * rs] = (10 + row) as f32;
+                v[row * rs + 1] = row as f32;
+            }
+            (k, v)
+        };
+        let (k1, v1) = empty_cache(&contract);
+
+        // request 0: s_req = 8, prefix of 4, 3 live chain slots
+        let tok0 = [5i32, 6, 7, 0, 0, 0, 0, 0];
+        let pos0 = [4i32, 5, 6, 4, 4, 4, 4, 4];
+        let mask0 = chain_mask(8, 3, 4);
+        // request 1: s_req = 8, no prefix, 2 live slots
+        let tok1 = [9i32, 3, 0, 0, 0, 0, 0, 0];
+        let pos1 = [0i32, 1, 0, 0, 0, 0, 0, 0];
+        let mask1 = chain_mask(8, 2, 0);
+
+        // sequential reference
+        let mut seq = SimBackend::new(100);
+        let mut out0 = StepScratch::new();
+        seq.teacher_step(ExecMode::Fused, StepArgs {
+            tokens: &tok0, positions: &pos0, mask: &mask0,
+            kv: KvView { k: &k0, v: &v0 }, feats_in: None, probe: false,
+        }, &mut out0).unwrap();
+        let mut out1 = StepScratch::new();
+        seq.teacher_step(ExecMode::Fused, StepArgs {
+            tokens: &tok1, positions: &pos1, mask: &mask1,
+            kv: KvView { k: &k1, v: &v1 }, feats_in: None, probe: false,
+        }, &mut out1).unwrap();
+        assert_eq!(seq.teacher_calls, 2);
+
+        // fused: both requests in one [2, 8, cap+8] block
+        let s = 8usize;
+        let w = CACHE_CAP + s;
+        let mut tokens = vec![0i32; 2 * s];
+        tokens[..s].copy_from_slice(&tok0);
+        tokens[s..].copy_from_slice(&tok1);
+        let mut positions = vec![0i32; 2 * s];
+        positions[..s].copy_from_slice(&pos0);
+        positions[s..].copy_from_slice(&pos1);
+        let mut mask = vec![NEG_INF; 2 * s * w];
+        mask[..s * w].copy_from_slice(&mask0);
+        mask[s * w..].copy_from_slice(&mask1);
+        let reqs = [
+            BatchRequest { kv: KvView { k: &k0, v: &v0 }, live: 8 },
+            BatchRequest { kv: KvView { k: &k1, v: &v1 }, live: 8 },
+        ];
+        let mut fused_b = SimBackend::new(100);
+        let mut fused = StepScratch::new();
+        fused_b.teacher_step_batch(ExecMode::Fused, BatchStepArgs {
+            s_max: s, tokens: &tokens, positions: &positions, mask: &mask, reqs: &reqs,
+        }, &mut fused).unwrap();
+        assert_eq!(fused_b.teacher_calls, 1, "fused batch is one launch");
+
+        let mut got0 = StepScratch::new();
+        got0.scatter_from(&fused, 0, 8);
+        let mut got1 = StepScratch::new();
+        got1.scatter_from(&fused, 1, 8);
+        assert_eq!(got0.logits, out0.logits, "request 0 logits diverged");
+        assert_eq!(got1.logits, out1.logits, "request 1 logits diverged");
+        assert_eq!(got0.feats, out0.feats);
+        assert_eq!(got1.feats, out1.feats);
+        assert_eq!(got0.k_new, out0.k_new);
+        assert_eq!(got1.k_new, out1.k_new);
+        assert_eq!(got0.v_new, out0.v_new);
+        assert_eq!(got1.v_new, out1.v_new);
+    }
+
+    #[test]
+    fn launch_cost_is_charged_per_launch() {
+        let cost = Duration::from_millis(2);
+        let mut b = SimBackend::new(100).with_teacher_launch(cost);
+        let (k, v) = empty_cache(b.contract());
+        let mask = chain_mask(8, 1, 0);
+        let tokens = [5i32, 0, 0, 0, 0, 0, 0, 0];
+        let pos = [0i32; 8];
+        let mut out = StepScratch::new();
+        let t0 = Instant::now();
+        b.teacher_step(ExecMode::Fused, StepArgs {
+            tokens: &tokens, positions: &pos, mask: &mask,
+            kv: KvView { k: &k, v: &v }, feats_in: None, probe: false,
+        }, &mut out)
+        .unwrap();
+        assert!(t0.elapsed() >= cost, "launch cost must be spent");
+        // draft launches are free under the model (the tiny draft's
+        // dispatch is negligible next to the fused teacher module)
+        let t1 = Instant::now();
+        let feats = vec![0.0f32; 8 * b.contract().feat_dim];
+        b.draft_step(StepArgs {
+            tokens: &tokens, positions: &pos, mask: &mask,
+            kv: KvView { k: &k, v: &v }, feats_in: Some(&feats), probe: false,
+        }, &mut out)
+        .unwrap();
+        assert!(t1.elapsed() < cost, "draft must not pay the teacher launch cost");
     }
 }

@@ -35,8 +35,11 @@ use anyhow::{bail, Result};
 /// Movement/commit counters for the §3.1 ablations and §Perf.
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct CacheStats {
+    /// Branches opened (`begin_branch` calls).
     pub branches: u64,
+    /// Commits of any mode.
     pub commits: u64,
+    /// Branches discarded without committing.
     pub rollbacks: u64,
     /// Bytes copied by branch replication (deepcopy only).
     pub replicate_bytes: u64,
@@ -54,7 +57,9 @@ pub struct CacheStats {
 
 /// One KV cache (teacher or draft side) with branch/commit semantics.
 pub struct ManagedCache {
+    /// Transformer dimensions of the role this cache serves.
     pub dims: Dims,
+    /// Sequence capacity (rows per layer).
     pub cap: usize,
     strategy: CacheStrategy,
     fast_reorder: bool,
@@ -75,10 +80,12 @@ pub struct ManagedCache {
     /// so the steady-state round performs no heap allocation.
     gather_k: Vec<f32>,
     gather_v: Vec<f32>,
+    /// Movement/commit counters (§3.1 ablations; reset with the cache).
     pub stats: CacheStats,
 }
 
 impl ManagedCache {
+    /// An empty cache of `cap` rows for a role with dimensions `dims`.
     pub fn new(dims: Dims, cap: usize, strategy: CacheStrategy, fast_reorder: bool) -> Self {
         let n = dims.cache_elems(cap);
         Self {
@@ -99,18 +106,22 @@ impl ManagedCache {
         }
     }
 
+    /// Committed sequence length `t`.
     pub fn len(&self) -> usize {
         self.len
     }
 
+    /// Whether nothing has been committed yet.
     pub fn is_empty(&self) -> bool {
         self.len == 0
     }
 
+    /// The configured branch-replication strategy.
     pub fn strategy(&self) -> CacheStrategy {
         self.strategy
     }
 
+    /// Speculative rows appended in the currently open branch.
     pub fn branch_rows(&self) -> usize {
         self.branch_rows
     }

@@ -5,8 +5,10 @@
 use anyhow::{bail, Result};
 use std::collections::BTreeMap;
 
+/// Parsed command line: positionals, `--key value` flags, `--switch`es.
 #[derive(Clone, Debug, Default)]
 pub struct Args {
+    /// Positional arguments in order (the first is the subcommand).
     pub positional: Vec<String>,
     flags: BTreeMap<String, String>,
     switches: Vec<String>,
@@ -15,12 +17,13 @@ pub struct Args {
 /// Flags that take a value (everything else starting with `--` is a switch).
 const VALUED: &[&str] = &[
     "mode", "budget", "depth", "topk", "cache-strategy", "commit-mode",
-    "draft-window", "max-new", "workers", "seed", "out-dir", "artifacts",
+    "draft-window", "max-new", "workers", "batch", "seed", "out-dir", "artifacts",
     "backend", "agree", "temperature", "trace-dir", "prompt-len", "turns",
     "conversations", "profile", "requests", "rate", "servers",
 ];
 
 impl Args {
+    /// Parse an argv iterator (without the program name).
     pub fn parse(argv: impl Iterator<Item = String>) -> Result<Self> {
         let mut out = Args::default();
         let mut argv = argv.peekable();
@@ -45,28 +48,33 @@ impl Args {
         Ok(out)
     }
 
+    /// Raw value of a `--key value` flag.
     pub fn get(&self, key: &str) -> Option<&str> {
         self.flags.get(key).map(String::as_str)
     }
 
+    /// Flag value parsed as usize (error on malformed input).
     pub fn get_usize(&self, key: &str) -> Result<Option<usize>> {
         self.get(key)
             .map(|v| v.parse().map_err(|e| anyhow::anyhow!("--{key} {v}: {e}")))
             .transpose()
     }
 
+    /// Flag value parsed as u64 (error on malformed input).
     pub fn get_u64(&self, key: &str) -> Result<Option<u64>> {
         self.get(key)
             .map(|v| v.parse().map_err(|e| anyhow::anyhow!("--{key} {v}: {e}")))
             .transpose()
     }
 
+    /// Flag value parsed as f64 (error on malformed input).
     pub fn get_f64(&self, key: &str) -> Result<Option<f64>> {
         self.get(key)
             .map(|v| v.parse().map_err(|e| anyhow::anyhow!("--{key} {v}: {e}")))
             .transpose()
     }
 
+    /// Whether a boolean `--switch` was passed.
     pub fn has(&self, switch: &str) -> bool {
         self.switches.iter().any(|s| s == switch)
     }

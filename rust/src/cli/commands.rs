@@ -43,13 +43,14 @@ COMMON FLAGS
   --max-new N             tokens per turn
   --temperature T         0 = greedy (default)
   --workers N             world size (default 2)
+  --batch B               conversations fused per verification launch (serve; default 1)
   --seed S  --out-dir DIR  --quick  --verbose  --attention-stats
 ";
 
 const RUN_FLAGS: &[&str] = &[
     "backend", "artifacts", "agree", "mode", "budget", "depth", "topk",
     "cache-strategy", "commit-mode", "draft-window", "max-new", "temperature",
-    "workers", "seed", "out-dir", "trace-dir", "prompt-len", "conversations",
+    "workers", "batch", "seed", "out-dir", "trace-dir", "prompt-len", "conversations",
     "profile", "turns", "requests", "rate", "servers",
 ];
 const RUN_SWITCHES: &[&str] = &[
@@ -57,11 +58,14 @@ const RUN_SWITCHES: &[&str] = &[
     "instrument", "baseline-only", "ea-only", "adaptive", "help",
 ];
 
+/// Binary entry point: parse `std::env::args` and dispatch.
 pub fn main_entry() -> Result<()> {
     let args = Args::parse(std::env::args().skip(1))?;
     dispatch(&args)
 }
 
+/// Dispatch a parsed command line to its subcommand (prints usage when
+/// no command or `--help` is given).
 pub fn dispatch(args: &Args) -> Result<()> {
     let Some(cmd) = args.positional.first().map(String::as_str) else {
         println!("{USAGE}");
@@ -100,6 +104,7 @@ impl<T> Pipe for T {}
 // Shared flag -> config plumbing
 // ----------------------------------------------------------------------
 
+/// Build the [`RunConfig`] from command-line flags (validated).
 pub fn run_config(args: &Args) -> Result<RunConfig> {
     let mut cfg = RunConfig::default();
     if let Some(m) = args.get("mode") {
@@ -141,6 +146,8 @@ pub fn run_config(args: &Args) -> Result<RunConfig> {
     Ok(cfg)
 }
 
+/// Select the backend from flags: explicit `--backend`, else PJRT when
+/// artifacts exist, else the simulator.
 pub fn backend_spec(args: &Args) -> Result<BackendSpec> {
     let artifacts = PathBuf::from(args.get("artifacts").unwrap_or("artifacts"));
     match args.get("backend") {
@@ -188,14 +195,14 @@ fn cmd_generate(args: &Args) -> Result<()> {
              spec.describe(), cfg.mode.as_str(), prompt.len(), profile.as_str());
 
     let mut b_ea = spec.build_boxed()?;
-    let mut e_ea = Engine::new(&mut *b_ea, cfg.clone());
-    e_ea.warmup()?;
-    let ea = e_ea.generate_speculative(&prompt, cfg.max_new_tokens)?;
+    let mut e_ea = Engine::new(&*b_ea, cfg.clone());
+    e_ea.warmup(&mut *b_ea)?;
+    let ea = e_ea.generate_speculative(&mut *b_ea, &prompt, cfg.max_new_tokens)?;
 
     let mut b_base = spec.build_boxed()?;
-    let mut e_base = Engine::new(&mut *b_base, cfg.clone());
-    e_base.warmup()?;
-    let base = e_base.generate_baseline(&prompt, ea.tokens.len())?;
+    let mut e_base = Engine::new(&*b_base, cfg.clone());
+    e_base.warmup(&mut *b_base)?;
+    let base = e_base.generate_baseline(&mut *b_base, &prompt, ea.tokens.len())?;
 
     anyhow::ensure!(ea.tokens == base.tokens,
                     "EA output diverged from teacher-greedy — decoding bug");
@@ -229,6 +236,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         trace_dir: PathBuf::from(args.get("trace-dir").unwrap_or("results/serve")),
         run_baseline: !args.has("ea-only"),
         run_ea: !args.has("baseline-only"),
+        max_batch: args.get_usize("batch")?.unwrap_or(1),
         verbose: args.has("verbose") || !args.has("quick"),
     };
     let records = run_workload(&cfg)?;

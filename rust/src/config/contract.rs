@@ -3,22 +3,35 @@
 use crate::json::Json;
 use anyhow::{bail, Context, Result};
 
+/// Vocabulary size of the tiny models.
 pub const VOCAB: usize = 512;
+/// Padding token id.
 pub const PAD_ID: i32 = 0;
+/// Beginning-of-sequence token id.
 pub const BOS_ID: i32 = 1;
+/// First ordinary (non-special) token id.
 pub const FIRST_TOKEN: i32 = 2;
+/// Default KV-cache capacity (rows per layer).
 pub const CACHE_CAP: usize = 1024;
+/// EAGLE feature dimension (draft conditioning rows).
 pub const FEAT_DIM: usize = 64;
+/// Additive-mask "closed" value (matches the AOT modules).
 pub const NEG_INF: f32 = -1.0e30;
+/// Compiled teacher block sizes S.
 pub const TEACHER_S_VARIANTS: &[usize] = &[8, 16, 32, 64, 128, 256];
+/// Compiled draft block sizes S.
 pub const DRAFT_S_VARIANTS: &[usize] = &[8, 32, 64];
 
 /// Transformer dimensions of one role (teacher/draft).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct Dims {
+    /// Transformer layer count L.
     pub layers: usize,
+    /// Model width (not used by the cache math; kept for the manifest).
     pub d_model: usize,
+    /// Attention head count H.
     pub heads: usize,
+    /// Per-head dimension Dh.
     pub d_head: usize,
 }
 
@@ -39,11 +52,14 @@ impl Dims {
 /// `Eager` the pure-jnp ones (reference/debug path).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum ExecMode {
+    /// Pallas fused-kernel artifacts (performance path).
     Fused,
+    /// Pure-jnp artifacts (reference/debug path).
     Eager,
 }
 
 impl ExecMode {
+    /// Stable string form (manifests, artifact names).
     pub fn as_str(&self) -> &'static str {
         match self {
             ExecMode::Fused => "fused",
@@ -51,6 +67,7 @@ impl ExecMode {
         }
     }
 
+    /// Parse the string form (`fused` | `eager`).
     pub fn parse(s: &str) -> Result<Self> {
         match s {
             "fused" => Ok(ExecMode::Fused),
@@ -64,13 +81,21 @@ impl ExecMode {
 /// artifacts are present, `from_manifest` cross-checks every field.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Contract {
+    /// Vocabulary size V.
     pub vocab: usize,
+    /// KV-cache capacity (rows per layer).
     pub cache_cap: usize,
+    /// EAGLE feature dimension F.
     pub feat_dim: usize,
+    /// Teacher model dimensions.
     pub teacher: Dims,
+    /// Draft model dimensions.
     pub draft: Dims,
+    /// Compiled teacher block sizes, ascending.
     pub teacher_s: Vec<usize>,
+    /// Compiled draft block sizes, ascending.
     pub draft_s: Vec<usize>,
+    /// Additive-mask "closed" value the modules were compiled with.
     pub neg_inf: f32,
 }
 
@@ -146,10 +171,12 @@ impl Contract {
             .with_context(|| format!("no compiled S variant holds {n} tokens (have {variants:?})"))
     }
 
+    /// Smallest compiled teacher variant holding `n` tokens.
     pub fn teacher_variant(&self, n: usize) -> Result<usize> {
         self.pick_s(&self.teacher_s, n)
     }
 
+    /// Smallest compiled draft variant holding `n` tokens.
     pub fn draft_variant(&self, n: usize) -> Result<usize> {
         self.pick_s(&self.draft_s, n)
     }

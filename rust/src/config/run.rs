@@ -32,6 +32,7 @@ impl Default for TreeConfig {
 }
 
 impl TreeConfig {
+    /// Reject out-of-range budgets/depths/branching.
     pub fn validate(&self) -> Result<()> {
         if self.budget == 0 || self.budget > 256 {
             bail!("tree budget M must be in 1..=256 (largest compiled variant), got {}", self.budget);
@@ -58,6 +59,7 @@ pub enum CacheStrategy {
 }
 
 impl CacheStrategy {
+    /// Stable string form (flags, manifests).
     pub fn as_str(&self) -> &'static str {
         match self {
             CacheStrategy::DeepCopy => "deepcopy",
@@ -65,6 +67,7 @@ impl CacheStrategy {
         }
     }
 
+    /// Parse the string form (`deepcopy` | `segment`).
     pub fn parse(s: &str) -> Result<Self> {
         match s {
             "deepcopy" => Ok(CacheStrategy::DeepCopy),
@@ -84,6 +87,7 @@ pub enum CommitMode {
 }
 
 impl CommitMode {
+    /// Stable string form (flags, manifests).
     pub fn as_str(&self) -> &'static str {
         match self {
             CommitMode::Length => "length",
@@ -91,6 +95,7 @@ impl CommitMode {
         }
     }
 
+    /// Parse the string form (`length` | `path-index`).
     pub fn parse(s: &str) -> Result<Self> {
         match s {
             "length" => Ok(CommitMode::Length),
@@ -103,9 +108,13 @@ impl CommitMode {
 /// Everything a decode run needs to know.
 #[derive(Clone, Debug)]
 pub struct RunConfig {
+    /// Artifact flavor: fused kernels vs eager reference.
     pub mode: ExecMode,
+    /// Speculative tree shape (budget M, depth bound, branching).
     pub tree: TreeConfig,
+    /// Branch replication strategy (§3.1 ablation axis).
     pub cache_strategy: CacheStrategy,
+    /// Commit mode after acceptance (§3.1 ablation axis).
     pub commit_mode: CommitMode,
     /// Prefix-sharing fast reorder (paper's EA_FAST_CACHE_REORDER flag).
     pub fast_reorder: bool,
@@ -118,12 +127,14 @@ pub struct RunConfig {
     pub draft_window: Option<usize>,
     /// Greedy (temperature=0) vs stochastic acceptance.
     pub temperature: f64,
+    /// Tokens generated per turn (soft cap for EA — see the engine docs).
     pub max_new_tokens: usize,
     /// Per-stage timing instrumentation (perturbs wall-clock; E3 only).
     pub instrument: bool,
     /// Collect last-layer attention top-1 statistics via probe artifacts
     /// (analysis-only; Fig 7).
     pub attention_stats: bool,
+    /// Seed for stochastic acceptance and workload sampling.
     pub seed: u64,
 }
 
@@ -148,6 +159,7 @@ impl Default for RunConfig {
 }
 
 impl RunConfig {
+    /// Reject invalid combinations before any decoding starts.
     pub fn validate(&self) -> Result<()> {
         self.tree.validate()?;
         if self.max_new_tokens == 0 {

@@ -1,0 +1,304 @@
+//! Cross-request batched verification: the serving-layer scheduler that
+//! fuses several conversations' tree-verification calls into **one**
+//! padded teacher launch.
+//!
+//! The paper amortizes teacher invocations across *speculated tokens*
+//! (one call verifies a whole tree); this module amortizes them across
+//! *requests* as well — the dominant remaining lever once per-step
+//! allocation is gone, and the batching mode SpecInfer-style serving
+//! systems rely on. Per tick the scheduler:
+//!
+//! 1. gathers up to `max_batch` **ready** conversations (engines whose
+//!    in-flight generation wants another round);
+//! 2. has each run its *per-request* draft half
+//!    ([`Engine::prepare_verify`]: chain refresh, tree expansion,
+//!    tensorize, incremental mask);
+//! 3. pads every request to the group's largest compiled variant
+//!    `S_max`, assembles the fused `[B, S_max, cap + S_max]` mask block
+//!    ([`BatchMask`]) and `[B * S_max]` token/position rows, and launches
+//!    **one** [`ModelBackend::teacher_step_batch`];
+//! 4. scatters each request's output rows back into its engine's own
+//!    scratch ([`Engine::scatter_verify`]) and finishes the round
+//!    per-request ([`Engine::finish_verify`]: acceptance + commit).
+//!
+//! Acceptance and cache commits never cross requests, so batched decoding
+//! is **bit-identical** to sequential decoding — `tests/batched.rs`
+//! property-tests this over random ragged batches (mixed tree budgets,
+//! context lengths and `max_new`, including one-token stragglers).
+//! Conversations that finish simply drop out of the ready set, so the
+//! batch shrinks naturally (ragged completion).
+//!
+//! All gather/scatter staging (`tokens`, `positions`, the mask block and
+//! the fused output scratch) lives in the scheduler and only ever grows,
+//! keeping steady-state batched rounds allocation-free (asserted by
+//! `tests/alloc_regression.rs`).
+
+use crate::backend::{BatchRequest, BatchStepArgs, ModelBackend, StepScratch};
+use crate::engine::{Engine, GenOut};
+use crate::tree::BatchMask;
+use anyhow::Result;
+use std::time::Instant;
+
+/// Fuses up to `max_batch` ready conversations' verification steps per
+/// tick (see the module docs for the full protocol).
+pub struct BatchScheduler {
+    max_batch: usize,
+    /// Fused `[B * S_max]` token staging.
+    tokens: Vec<i32>,
+    /// Fused `[B * S_max]` position staging.
+    positions: Vec<i32>,
+    /// Fused `[B, S_max, cap + S_max]` mask block.
+    mask: BatchMask,
+    /// Fused teacher outputs, scattered per-request after the launch.
+    out: StepScratch,
+}
+
+impl BatchScheduler {
+    /// A scheduler fusing up to `max_batch` requests per launch, for
+    /// caches of capacity `cache_cap`.
+    pub fn new(max_batch: usize, cache_cap: usize) -> Self {
+        Self {
+            max_batch: max_batch.max(1),
+            tokens: Vec::new(),
+            positions: Vec::new(),
+            mask: BatchMask::new(cache_cap),
+            out: StepScratch::new(),
+        }
+    }
+
+    /// The configured fusion width.
+    pub fn max_batch(&self) -> usize {
+        self.max_batch
+    }
+
+    /// Drive every engine with an in-flight generation to completion,
+    /// fusing up to `max_batch` verifications per tick. Engines without
+    /// an in-flight generation (or already done) are skipped, so ragged
+    /// groups shrink naturally. On return, every previously in-flight
+    /// engine is ready for [`Engine::take_output`].
+    pub fn run(&mut self, backend: &mut dyn ModelBackend, engines: &mut [Engine]) -> Result<()> {
+        loop {
+            // ready set of this tick (tiny: <= engines.len() indices)
+            let ready: Vec<usize> =
+                (0..engines.len()).filter(|&i| engines[i].needs_more()).collect();
+            if ready.is_empty() {
+                return Ok(());
+            }
+            for group in ready.chunks(self.max_batch) {
+                for &i in group {
+                    engines[i].prepare_verify(backend)?;
+                }
+                self.fused_verify(backend, engines, group)?;
+                for &i in group {
+                    engines[i].finish_verify()?;
+                }
+            }
+        }
+    }
+
+    /// One fused verification over `group` (indices into `engines`), all
+    /// of which must have a prepared round: pad to the group's largest
+    /// (S, ctx), launch once, scatter per-request logits/features/KV rows
+    /// back into each engine's scratch.
+    fn fused_verify(
+        &mut self,
+        backend: &mut dyn ModelBackend,
+        engines: &mut [Engine],
+        group: &[usize],
+    ) -> Result<()> {
+        debug_assert!(!group.is_empty());
+        let mode = engines[group[0]].cfg.mode;
+        // pad to the largest compiled variant in the group (variants come
+        // from one contract, so the max is itself a compiled variant)
+        let mut s_max = 0usize;
+        for &i in group {
+            s_max = s_max.max(engines[i].verify_payload()?.s);
+        }
+        let b = group.len();
+        self.tokens.clear();
+        self.tokens.resize(b * s_max, 0);
+        self.positions.clear();
+        self.positions.resize(b * s_max, 0);
+        self.mask.begin(b, s_max);
+        let mut reqs: Vec<BatchRequest> = Vec::with_capacity(b);
+        for (bi, &i) in group.iter().enumerate() {
+            anyhow::ensure!(engines[i].cfg.mode == mode, "mixed exec modes in one batch");
+            let p = engines[i].verify_payload()?;
+            self.tokens[bi * s_max..bi * s_max + p.s].copy_from_slice(p.tokens);
+            self.positions[bi * s_max..bi * s_max + p.s].copy_from_slice(p.positions);
+            self.mask.fill_request(bi, p.mask, p.s);
+            reqs.push(BatchRequest { kv: p.kv, live: p.s });
+        }
+        let t0 = Instant::now();
+        backend.teacher_step_batch(
+            mode,
+            BatchStepArgs {
+                s_max,
+                tokens: &self.tokens,
+                positions: &self.positions,
+                mask: self.mask.as_slice(),
+                reqs: &reqs,
+            },
+            &mut self.out,
+        )?;
+        // attribute the fused launch evenly across the group (timers are
+        // instrumentation, not accounting — see docs/ARCHITECTURE.md)
+        let secs = t0.elapsed().as_secs_f64() / b as f64;
+        drop(reqs);
+        for (bi, &i) in group.iter().enumerate() {
+            engines[i].scatter_verify(&self.out, bi)?;
+            engines[i].add_stage_time("verify", secs);
+        }
+        Ok(())
+    }
+}
+
+/// Convenience driver: begin a speculative generation on every engine
+/// (engine `i` decodes `prompts[i]`), drive them to completion with fused
+/// verification, and return the per-request outputs in input order.
+///
+/// For per-request `max_new` (ragged deadlines), call
+/// [`Engine::begin_speculative`] yourself, then [`BatchScheduler::run`]
+/// and [`Engine::take_output`] — this helper is the uniform-deadline
+/// common case.
+pub fn decode_speculative_batch(
+    backend: &mut dyn ModelBackend,
+    engines: &mut [Engine],
+    prompts: &[Vec<i32>],
+    max_new: usize,
+    sched: &mut BatchScheduler,
+) -> Result<Vec<GenOut>> {
+    anyhow::ensure!(
+        engines.len() == prompts.len(),
+        "engines ({}) and prompts ({}) must pair up",
+        engines.len(),
+        prompts.len()
+    );
+    for (e, p) in engines.iter_mut().zip(prompts) {
+        e.begin_speculative(backend, p, max_new)?;
+    }
+    sched.run(backend, engines)?;
+    engines.iter_mut().map(Engine::take_output).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::sim::SimBackend;
+    use crate::config::RunConfig;
+    use crate::util::SplitMix64;
+
+    fn prompt(n: usize, seed: u64) -> Vec<i32> {
+        let mut rng = SplitMix64::new(seed);
+        let mut p = vec![1i32]; // BOS
+        for _ in 1..n {
+            p.push(rng.range(2, 512) as i32);
+        }
+        p
+    }
+
+    fn sequential(cfgs: &[RunConfig], prompts: &[Vec<i32>], max_new: usize, agree: u64)
+        -> Vec<GenOut> {
+        prompts
+            .iter()
+            .zip(cfgs)
+            .map(|(p, cfg)| {
+                let mut b = SimBackend::new(agree);
+                let mut e = Engine::new(&b, cfg.clone());
+                e.generate_speculative(&mut b, p, max_new).unwrap()
+            })
+            .collect()
+    }
+
+    fn batched(cfgs: &[RunConfig], prompts: &[Vec<i32>], max_new: usize, agree: u64,
+               max_batch: usize) -> Vec<GenOut> {
+        let mut b = SimBackend::new(agree);
+        let mut engines: Vec<Engine> =
+            cfgs.iter().map(|cfg| Engine::new(&b, cfg.clone())).collect();
+        let cap = b.contract().cache_cap;
+        let mut sched = BatchScheduler::new(max_batch, cap);
+        decode_speculative_batch(&mut b, &mut engines, prompts, max_new, &mut sched).unwrap()
+    }
+
+    #[test]
+    fn batched_matches_sequential_uniform_group() {
+        let cfgs = vec![RunConfig::default(); 4];
+        let prompts: Vec<Vec<i32>> = (0..4).map(|i| prompt(10 + i * 3, 40 + i as u64)).collect();
+        let seq = sequential(&cfgs, &prompts, 20, 85);
+        let bat = batched(&cfgs, &prompts, 20, 85, 4);
+        for (s, b) in seq.iter().zip(&bat) {
+            assert_eq!(s.tokens, b.tokens, "batched tokens diverged");
+            assert_eq!(s.accept_lens, b.accept_lens, "accept shape diverged");
+            assert_eq!(s.teacher_calls, b.teacher_calls, "per-request call accounting");
+        }
+    }
+
+    #[test]
+    fn batched_matches_sequential_ragged_budgets() {
+        // mixed tree budgets -> mixed padded variants within one fused
+        // launch (the ragged-batch case of the batching contract)
+        let mut cfgs = Vec::new();
+        for budget in [1usize, 5, 16, 40] {
+            let mut c = RunConfig::default();
+            c.tree.budget = budget;
+            cfgs.push(c);
+        }
+        let prompts: Vec<Vec<i32>> = (0..4).map(|i| prompt(8 + i * 7, 60 + i as u64)).collect();
+        let seq = sequential(&cfgs, &prompts, 16, 90);
+        let bat = batched(&cfgs, &prompts, 16, 90, 4);
+        for (s, b) in seq.iter().zip(&bat) {
+            assert_eq!(s.tokens, b.tokens);
+            assert_eq!(s.accept_lens, b.accept_lens);
+        }
+    }
+
+    #[test]
+    fn scheduler_amortizes_teacher_launches() {
+        let cfgs = vec![RunConfig::default(); 4];
+        let prompts: Vec<Vec<i32>> = (0..4).map(|i| prompt(12, 70 + i as u64)).collect();
+
+        let mut b_seq = SimBackend::new(90);
+        for (p, cfg) in prompts.iter().zip(&cfgs) {
+            let mut e = Engine::new(&b_seq, cfg.clone());
+            e.generate_speculative(&mut b_seq, p, 16).unwrap();
+        }
+        let seq_launches = b_seq.teacher_calls;
+
+        let mut b_bat = SimBackend::new(90);
+        let mut engines: Vec<Engine> =
+            cfgs.iter().map(|cfg| Engine::new(&b_bat, cfg.clone())).collect();
+        let cap = b_bat.contract().cache_cap;
+        let mut sched = BatchScheduler::new(4, cap);
+        decode_speculative_batch(&mut b_bat, &mut engines, &prompts, 16, &mut sched).unwrap();
+        let bat_launches = b_bat.teacher_calls;
+
+        assert!(
+            bat_launches * 2 < seq_launches,
+            "fusion must amortize launches: {bat_launches} vs {seq_launches}"
+        );
+    }
+
+    #[test]
+    fn run_with_no_inflight_generations_is_a_noop() {
+        let b = SimBackend::new(90);
+        let mut engines = vec![Engine::new(&b, RunConfig::default())];
+        let cap = b.contract().cache_cap;
+        let mut sched = BatchScheduler::new(2, cap);
+        let mut b = b;
+        sched.run(&mut b, &mut engines).unwrap();
+        assert!(engines[0].take_output().is_err(), "nothing was in flight");
+    }
+
+    #[test]
+    fn singleton_batches_equal_plain_generation() {
+        // max_batch = 1 drives each request through the fused path alone;
+        // output must still equal generate_speculative exactly.
+        let cfgs = vec![RunConfig::default(); 2];
+        let prompts = vec![prompt(9, 91), prompt(14, 92)];
+        let seq = sequential(&cfgs, &prompts, 12, 80);
+        let bat = batched(&cfgs, &prompts, 12, 80, 1);
+        for (s, b) in seq.iter().zip(&bat) {
+            assert_eq!(s.tokens, b.tokens);
+        }
+    }
+}

@@ -20,15 +20,20 @@ use crate::util::SplitMix64;
 use crate::workload::{Grammar, Profile};
 use anyhow::Result;
 
+/// Configuration of one serving-load evaluation.
 #[derive(Clone, Debug)]
 pub struct LoadSpec {
+    /// Total requests to decode and replay.
     pub requests: usize,
     /// Offered load, requests/second (Poisson arrivals).
     pub arrival_rate: f64,
     /// Number of simulated servers (each = one engine + artifact set).
     pub servers: usize,
+    /// Prompt length per request (tokens).
     pub prompt_len: usize,
+    /// Tokens generated per request.
     pub max_new: usize,
+    /// Arrival-process / prompt-sampling seed.
     pub seed: u64,
 }
 
@@ -39,11 +44,16 @@ impl Default for LoadSpec {
     }
 }
 
+/// Latency/throughput report of one load evaluation.
 #[derive(Clone, Debug)]
 pub struct LoadReport {
+    /// Queue wait per request, seconds.
     pub queue_wait: Summary,
+    /// Time to first token (wait + measured prefill), seconds.
     pub ttft: Summary,
+    /// Time per output token, milliseconds.
     pub tpot_ms: Summary,
+    /// End-to-end latency (wait + service), seconds.
     pub e2e: Summary,
     /// Fraction of busy server-time over the makespan.
     pub utilization: f64,
@@ -54,6 +64,7 @@ pub struct LoadReport {
 }
 
 impl LoadReport {
+    /// Human-readable table of the report.
     pub fn render(&self) -> String {
         format!(
             "serving-load report\n\
@@ -84,8 +95,8 @@ pub fn run_load(backend: &BackendSpec, run: &RunConfig, spec: &LoadSpec) -> Resu
     let mut b = backend_build(backend)?;
     let mut run_cfg = run.clone();
     run_cfg.instrument = true; // prefill timing feeds TTFT
-    let mut engine = Engine::new(&mut *b, run_cfg.clone());
-    engine.warmup()?;
+    let mut engine = Engine::new(&*b, run_cfg.clone());
+    engine.warmup(&mut *b)?;
     let mut rng = SplitMix64::new(spec.seed ^ 0x10AD);
     struct Served {
         arrival: f64,
@@ -102,7 +113,7 @@ pub fn run_load(backend: &BackendSpec, run: &RunConfig, spec: &LoadSpec) -> Resu
         let prompt = Grammar::new(profile).sample_sequence(
             spec.prompt_len, spec.seed ^ i as u64, None);
         engine.reset();
-        let out = engine.generate_speculative(&prompt, spec.max_new)?;
+        let out = engine.generate_speculative(&mut *b, &prompt, spec.max_new)?;
         served.push(Served {
             arrival: t_arrival,
             service: out.wall_secs,

@@ -1,8 +1,11 @@
 //! The serving coordinator (paper §4.4): deterministic prompt sharding
-//! across worker threads, per-rank trace files, rank-0 merge.
+//! across worker threads, cross-request batched verification
+//! ([`BatchScheduler`]), per-rank trace files, rank-0 merge.
 
+pub mod batch;
 pub mod load;
 pub mod runner;
 
+pub use batch::{decode_speculative_batch, BatchScheduler};
 pub use load::{run_load, LoadReport, LoadSpec};
 pub use runner::{run_workload, BackendSpec, CoordinatorConfig};

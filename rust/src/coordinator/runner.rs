@@ -9,19 +9,32 @@
 //! * rank 0 merges them into a globally sorted `trace_merged.jsonl`.
 //!
 //! Each conversation is decoded under the requested kinds ("baseline",
-//! "ea") on **one warmed engine per worker**, `Engine::reset` between
-//! (conversation, kind) pairs: constructing a fresh engine per
+//! "ea") on **warmed, reused engines**: constructing a fresh engine per
 //! conversation re-allocated both multi-MB KV cache buffers, every
 //! scratch arena and the incremental mask slots, which dominated
-//! short-turn serving cost. Reset restores bit-identical fresh-engine
-//! behaviour (asserted by the engine's reuse-equivalence test), so the
-//! records are unchanged. Two-turn conversations keep cache state across
-//! turns and materialize follow-up prompts from the live context
-//! (MT-Bench protocol). Abnormal turns produce a failure dump and the run
-//! continues (§4.3).
+//! short-turn serving cost. `Engine::reset` between conversations
+//! restores bit-identical fresh-engine behaviour (asserted by the
+//! engine's reuse-equivalence test), so the records are unchanged.
+//!
+//! With `max_batch > 1` a worker holds that many conversations resident
+//! (one engine each) and the EA kind decodes them **concurrently**: each
+//! tick fuses the group's tree verifications into one padded teacher
+//! launch through the [`BatchScheduler`] (the batching contract in
+//! `docs/ARCHITECTURE.md`). Token-level records are bit-identical to the
+//! sequential path — only wall-clock changes (asserted by a test below) —
+//! so `max_batch` is purely a throughput knob. Memory cost: one teacher +
+//! draft KV cache pair per slot.
+//!
+//! Two-turn conversations keep cache state across turns and materialize
+//! follow-up prompts from the live context (MT-Bench protocol). Abnormal
+//! turns produce a failure dump and the run continues (§4.3); in a
+//! batched group the dump granularity is the group (the fused launch is
+//! shared), each member conversation receiving a dump that names the
+//! error.
 
 use crate::backend::{sim::SimBackend, ModelBackend};
 use crate::config::RunConfig;
+use crate::coordinator::batch::BatchScheduler;
 use crate::engine::Engine;
 use crate::json::Json;
 use crate::runtime::PjrtBackend;
@@ -36,9 +49,15 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 #[derive(Clone, Debug)]
 pub enum BackendSpec {
     /// Deterministic simulator (tests, CI, harness dry runs).
-    Sim { agree_pct: u64 },
+    Sim {
+        /// Draft/teacher top-1 agreement percentage.
+        agree_pct: u64,
+    },
     /// Real AOT artifacts through PJRT.
-    Pjrt { artifact_dir: PathBuf },
+    Pjrt {
+        /// Directory holding `manifest.json` + `*.hlo.txt` artifacts.
+        artifact_dir: PathBuf,
+    },
 }
 
 impl BackendSpec {
@@ -49,6 +68,7 @@ impl BackendSpec {
         })
     }
 
+    /// Human-readable description for manifests and logs.
     pub fn describe(&self) -> String {
         match self {
             BackendSpec::Sim { agree_pct } => format!("sim(agree={agree_pct})"),
@@ -57,20 +77,32 @@ impl BackendSpec {
     }
 }
 
+/// Everything a coordinator run needs to know.
 #[derive(Clone, Debug)]
 pub struct CoordinatorConfig {
+    /// Worker thread count (the paper's world size).
     pub world_size: usize,
+    /// Per-engine decode configuration.
     pub run: RunConfig,
+    /// The conversation workload to decode.
     pub workload: WorkloadSpec,
+    /// Backend each worker builds.
     pub backend: BackendSpec,
+    /// Directory receiving trace files + run manifest.
     pub trace_dir: PathBuf,
+    /// Decode every conversation with teacher-only greedy ("baseline").
     pub run_baseline: bool,
+    /// Decode every conversation with tree speculation ("ea").
     pub run_ea: bool,
+    /// Conversations resident per worker; EA verification is fused
+    /// across them per tick when > 1 (token-identical, faster wall).
+    pub max_batch: usize,
     /// Print progress lines to stderr.
     pub verbose: bool,
 }
 
 impl CoordinatorConfig {
+    /// The run-manifest fragment written next to the traces.
     pub fn manifest(&self) -> Json {
         let mut o = Json::obj();
         o.push("world_size", self.world_size)
@@ -79,6 +111,7 @@ impl CoordinatorConfig {
             .push("turns", self.workload.total_turns())
             .push("run_baseline", self.run_baseline)
             .push("run_ea", self.run_ea)
+            .push("max_batch", self.max_batch)
             .push("workload_seed", self.workload.seed);
         o
     }
@@ -125,46 +158,94 @@ fn worker(
     total: usize,
 ) -> Result<()> {
     let mut backend = cfg.backend.build().with_context(|| format!("rank {rank} backend"))?;
-    // One engine per worker, reused across every (conversation, kind):
-    // warmup absorbs lazy PJRT module compilation AND brings every
-    // reusable buffer (KV caches, scratch arenas, mask slots) to its
-    // high-water capacity before any timed turn.
-    let mut engine = Engine::new(&mut *backend, cfg.run.clone());
-    engine.warmup()?;
+    // One engine per resident-conversation slot, reused across every
+    // (conversation, kind): warmup absorbs lazy PJRT module compilation
+    // AND brings every reusable buffer (KV caches, scratch arenas, mask
+    // slots) to its high-water capacity before any timed turn.
+    let slots = cfg.max_batch.max(1);
+    let mut engines: Vec<Engine> =
+        (0..slots).map(|_| Engine::new(&*backend, cfg.run.clone())).collect();
+    for e in engines.iter_mut() {
+        e.warmup(&mut *backend)?;
+    }
+    let mut sched = BatchScheduler::new(slots, backend.contract().cache_cap);
     let mut writer = TraceWriter::create(&cfg.trace_dir, rank)?;
-    let kinds: Vec<&str> = [("baseline", cfg.run_baseline), ("ea", cfg.run_ea)]
-        .iter()
-        .filter(|(_, on)| *on)
-        .map(|(k, _)| *k)
-        .collect();
-    for conv in convs {
-        for kind in &kinds {
-            engine.reset();
-            if let Err(e) = run_conversation(&mut engine, cfg, &conv, kind, rank, &mut writer) {
-                let dump = FailureDump {
-                    conversation_id: conv.id,
-                    turn_idx: 0,
-                    rank,
-                    error: format!("{e:#}"),
-                    prompt: conv.first_prompt(),
-                    context_len: 0,
-                    config: cfg.run.to_json(),
-                };
-                let path = writer.failure(&dump)?;
-                eprintln!("[rank {rank}] conversation {} ({kind}) failed: {e:#} (dump: {})",
-                          conv.id, path.display());
+    for chunk in convs.chunks(slots) {
+        if cfg.run_baseline {
+            for conv in chunk {
+                engines[0].reset();
+                if let Err(e) = run_conversation(
+                    &mut *backend, &mut engines[0], cfg, conv, "baseline", rank, &mut writer)
+                {
+                    dump_failure(&writer, conv, "baseline", rank, cfg, &e);
+                }
             }
         }
-        let n = done.fetch_add(1, Ordering::Relaxed) + 1;
-        if cfg.verbose && (n % 10 == 0 || n == total) {
-            eprintln!("[coordinator] {n}/{total} conversations done");
+        if cfg.run_ea {
+            if slots <= 1 {
+                for conv in chunk {
+                    engines[0].reset();
+                    if let Err(e) = run_conversation(
+                        &mut *backend, &mut engines[0], cfg, conv, "ea", rank, &mut writer)
+                    {
+                        dump_failure(&writer, conv, "ea", rank, cfg, &e);
+                    }
+                }
+            } else if let Err(e) =
+                run_group_ea(&mut *backend, &mut engines, &mut sched, cfg, chunk, rank, &mut writer)
+            {
+                // the fused launch is shared: dump the error for every
+                // member so each conversation stays traceable
+                for conv in chunk {
+                    dump_failure(&writer, conv, "ea", rank, cfg, &e);
+                }
+            }
+        }
+        for _ in chunk {
+            let n = done.fetch_add(1, Ordering::Relaxed) + 1;
+            if cfg.verbose && (n % 10 == 0 || n == total) {
+                eprintln!("[coordinator] {n}/{total} conversations done");
+            }
         }
     }
     writer.flush()?;
     Ok(())
 }
 
+fn dump_failure(
+    writer: &TraceWriter,
+    conv: &ConversationSpec,
+    kind: &str,
+    rank: usize,
+    cfg: &CoordinatorConfig,
+    err: &anyhow::Error,
+) {
+    let dump = FailureDump {
+        conversation_id: conv.id,
+        turn_idx: 0,
+        rank,
+        error: format!("{err:#}"),
+        prompt: conv.first_prompt(),
+        context_len: 0,
+        config: cfg.run.to_json(),
+    };
+    match writer.failure(&dump) {
+        Ok(path) => eprintln!(
+            "[rank {rank}] conversation {} ({kind}) failed: {err:#} (dump: {})",
+            conv.id,
+            path.display()
+        ),
+        Err(we) => eprintln!(
+            "[rank {rank}] conversation {} ({kind}) failed: {err:#} (dump write failed: {we:#})",
+            conv.id
+        ),
+    }
+}
+
+/// Decode one conversation (all turns) with one kind on one engine —
+/// the sequential path.
 fn run_conversation(
+    backend: &mut dyn ModelBackend,
     engine: &mut Engine,
     cfg: &CoordinatorConfig,
     conv: &ConversationSpec,
@@ -183,14 +264,64 @@ fn run_conversation(
             conv.followup_prompt(turn, a, b)
         };
         let out = if kind == "baseline" {
-            engine.generate_baseline(&prompt, cfg.run.max_new_tokens)?
+            engine.generate_baseline(backend, &prompt, cfg.run.max_new_tokens)?
         } else {
-            engine.generate_speculative(&prompt, cfg.run.max_new_tokens)?
+            engine.generate_speculative(backend, &prompt, cfg.run.max_new_tokens)?
         };
         ctx.extend(&prompt);
         ctx.extend(&out.tokens);
         let rec = TurnRecord::from_gen(conv.id, turn, rank, conv.profile.as_str(), kind, &out);
         writer.write(&rec)?;
+    }
+    Ok(())
+}
+
+/// Decode a group of conversations concurrently under the EA kind:
+/// turn-by-turn, each turn's speculative rounds fused across the group
+/// by the scheduler. Token-level records are bit-identical to the
+/// sequential path.
+fn run_group_ea(
+    backend: &mut dyn ModelBackend,
+    engines: &mut [Engine],
+    sched: &mut BatchScheduler,
+    cfg: &CoordinatorConfig,
+    convs: &[ConversationSpec],
+    rank: usize,
+    writer: &mut TraceWriter,
+) -> Result<()> {
+    let n = convs.len();
+    debug_assert!(n <= engines.len());
+    for e in engines[..n].iter_mut() {
+        e.reset();
+    }
+    let mut ctxs: Vec<Vec<i32>> = vec![Vec::new(); n];
+    let max_turns = convs.iter().map(ConversationSpec::turns).max().unwrap_or(0);
+    for turn in 0..max_turns {
+        let mut active: Vec<usize> = Vec::new();
+        for (i, conv) in convs.iter().enumerate() {
+            if turn >= conv.turns() {
+                continue; // shorter conversation: slot idles this turn
+            }
+            let prompt = if turn == 0 {
+                conv.first_prompt()
+            } else {
+                let c = &ctxs[i];
+                conv.followup_prompt(turn, c[c.len() - 2], c[c.len() - 1])
+            };
+            engines[i].begin_speculative(backend, &prompt, cfg.run.max_new_tokens)?;
+            ctxs[i].extend(&prompt);
+            active.push(i);
+        }
+        // engines without an in-flight generation are skipped by the
+        // scheduler, so driving the whole slice is safe
+        sched.run(backend, &mut engines[..n])?;
+        for &i in &active {
+            let out = engines[i].take_output()?;
+            ctxs[i].extend(&out.tokens);
+            let rec = TurnRecord::from_gen(
+                convs[i].id, turn, rank, convs[i].profile.as_str(), "ea", &out);
+            writer.write(&rec)?;
+        }
     }
     Ok(())
 }
@@ -218,6 +349,7 @@ mod tests {
             trace_dir: tmpdir(tag),
             run_baseline: true,
             run_ea: true,
+            max_batch: 1,
             verbose: false,
         }
     }
@@ -257,6 +389,31 @@ mod tests {
     }
 
     #[test]
+    fn batched_serving_is_token_identical_to_sequential() {
+        // The serving-layer claim: max_batch only fuses launches, it
+        // never changes what is decoded — record-for-record token
+        // equality against the sequential path.
+        let cfg1 = base_cfg("batch_seq");
+        let seq = run_workload(&cfg1).unwrap();
+        let mut cfg4 = base_cfg("batch_fused");
+        cfg4.max_batch = 4;
+        let bat = run_workload(&cfg4).unwrap();
+        assert_eq!(seq.len(), bat.len());
+        for (a, b) in seq.iter().zip(&bat) {
+            assert_eq!(a.conversation_id, b.conversation_id);
+            assert_eq!(a.turn_idx, b.turn_idx);
+            assert_eq!(a.kind, b.kind);
+            assert_eq!(a.output_len, b.output_len, "conv {} turn {}", a.conversation_id,
+                       a.turn_idx);
+            assert_eq!(a.accept_lens, b.accept_lens);
+            assert_eq!(a.teacher_calls, b.teacher_calls);
+            assert_eq!(a.rounds, b.rounds);
+        }
+        let _ = std::fs::remove_dir_all(&cfg1.trace_dir);
+        let _ = std::fs::remove_dir_all(&cfg4.trace_dir);
+    }
+
+    #[test]
     fn manifest_written_with_config() {
         let cfg = base_cfg("manifest");
         run_workload(&cfg).unwrap();
@@ -264,6 +421,7 @@ mod tests {
             std::fs::read_to_string(cfg.trace_dir.join("run_manifest.json")).unwrap();
         let j = crate::json::parse(&text).unwrap();
         assert_eq!(j.get("world_size").unwrap().as_usize(), Some(2));
+        assert_eq!(j.get("max_batch").unwrap().as_usize(), Some(1));
         assert!(j.at("run.tree_budget").is_some());
         let _ = std::fs::remove_dir_all(&cfg.trace_dir);
     }

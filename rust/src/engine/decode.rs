@@ -19,6 +19,39 @@
 //! teacher-only greedy decoding (asserted in tests — the paper's "matched
 //! decoding configuration" claim).
 //!
+//! # Backend decoupling and the split round
+//!
+//! The engine holds **no backend reference**: [`Engine::new`] reads the
+//! shape [`Contract`] once, and every decoding entry point takes
+//! `&mut dyn ModelBackend` per call. This is what makes multi-request
+//! residency possible — a coordinator worker owns *one* backend and `B`
+//! engines (one per resident conversation), and the
+//! [`crate::coordinator::BatchScheduler`] fuses their verification steps
+//! into one launch.
+//!
+//! For that, the speculative round is split into externally drivable
+//! phases (the single-request [`Engine::generate_speculative`] is built
+//! on exactly the same pieces, so the two paths cannot drift):
+//!
+//! ```text
+//!  begin_speculative(backend, prompt, max_new)     # prefill
+//!  while needs_more():
+//!      prepare_verify(backend)     # draft expand + tensorize + mask,
+//!                                  # leaves a pending round
+//!      -- either --
+//!      (internal single-request teacher call)      # generate_speculative
+//!      -- or --
+//!      verify_payload() -> gathered by the scheduler into one fused
+//!      launch; scatter_verify(fused, b) copies this request's rows back
+//!      -- then --
+//!      finish_verify()             # acceptance + commit (per-request)
+//!  take_output() -> GenOut
+//! ```
+//!
+//! Acceptance and commit stay strictly per-request; only the teacher
+//! launch is shared. Batched decoding is therefore bit-identical to
+//! sequential decoding (property-tested in `tests/batched.rs`).
+//!
 //! # Zero-allocation steady state
 //!
 //! After warmup, a speculative round performs no vocab- or cap-sized heap
@@ -38,7 +71,7 @@
 //! * token/position/feature staging buffers and the candidate pool are
 //!   engine fields reused across rounds, and [`Engine::reset`] restores a
 //!   fresh-engine state *without* dropping any of these capacities, so
-//!   the coordinator reuses one warmed engine across conversations.
+//!   the coordinator reuses warmed engines across conversations.
 
 use crate::backend::{argmax, log_softmax_at, topk, KvView, ModelBackend, StepArgs};
 use crate::cache::ManagedCache;
@@ -66,8 +99,61 @@ struct RunStats {
     accept_pos: AcceptPos,
 }
 
-pub struct Engine<'a> {
-    backend: &'a mut dyn ModelBackend,
+/// A prepared-but-uncommitted speculative round (between
+/// [`Engine::prepare_verify`] and [`Engine::finish_verify`]).
+struct RoundState {
+    /// The pending root token riding along at depth 0.
+    r0: i32,
+    /// The speculative tree the draft expanded this round.
+    tree: SpecTree,
+    /// Its tensorized (padded, gather-safe) form.
+    tens: Tensorized,
+    /// Padded teacher variant holding the tree (`tens.s`).
+    s_pad: usize,
+    /// Committed teacher context length when the round was prepared.
+    t_len: usize,
+    /// Node budget offered this round (adaptive-budget bookkeeping).
+    round_budget: usize,
+    /// Whether `t_scratch` holds this round's teacher outputs (written by
+    /// the internal verify step or by [`Engine::scatter_verify`]).
+    verified: bool,
+}
+
+/// One in-flight generation (between [`Engine::begin_speculative`] and
+/// [`Engine::take_output`]).
+struct InFlight {
+    stats: RunStats,
+    out_tokens: Vec<i32>,
+    prompt_len: usize,
+    wall0: Instant,
+    max_new: usize,
+    round: Option<RoundState>,
+}
+
+/// Borrowed view of a prepared round's verification inputs — what the
+/// [`crate::coordinator::BatchScheduler`] gathers into one fused launch.
+pub struct VerifyPayload<'e> {
+    /// `[s]` padded token ids of the tensorized tree.
+    pub tokens: &'e [i32],
+    /// `[s]` RoPE positions (committed length + node depth).
+    pub positions: &'e [i32],
+    /// `[s, cap + s]` additive tree mask.
+    pub mask: &'e [f32],
+    /// This request's committed-prefix teacher cache.
+    pub kv: KvView<'e>,
+    /// Padded slot count (this request's compiled teacher variant).
+    pub s: usize,
+    /// Live tree slots (root + nodes); `live <= s`.
+    pub live: usize,
+    /// Committed teacher context length of this request.
+    pub ctx_len: usize,
+}
+
+/// The decode engine: all per-conversation state (KV caches, scratch
+/// arenas, mask slots, pending logits), with the model backend passed
+/// into each call.
+pub struct Engine {
+    /// Run configuration (public: harnesses tweak and inspect it).
     pub cfg: RunConfig,
     contract: Contract,
     t_cache: ManagedCache,
@@ -96,6 +182,7 @@ pub struct Engine<'a> {
     cand_pool: Vec<Candidate>,
     /// Reusable accepted-tail buffer for prefix-relative commits.
     path_tail: Vec<usize>,
+    /// Per-stage timers of the current generation (instrumented runs).
     pub timers: StageTimer,
     attn_hist: Histogram,
     rng: SplitMix64,
@@ -103,6 +190,8 @@ pub struct Engine<'a> {
     use_draft: bool,
     /// Adaptive budget controller (None when `cfg.adaptive_budget` is off).
     adaptive: Option<AdaptiveBudget>,
+    /// The in-flight generation, when one is active.
+    inflight: Option<InFlight>,
 }
 
 /// Copy a row into a reusable buffer without reallocating in steady state.
@@ -111,8 +200,11 @@ fn copy_into(dst: &mut Vec<f32>, src: &[f32]) {
     dst.extend_from_slice(src);
 }
 
-impl<'a> Engine<'a> {
-    pub fn new(backend: &'a mut dyn ModelBackend, mut cfg: RunConfig) -> Self {
+impl Engine {
+    /// Construct an engine for `backend`'s shape contract. The backend is
+    /// only *read* here (contract clone); every decoding call takes it
+    /// again as `&mut`, so one backend can serve many engines.
+    pub fn new(backend: &dyn ModelBackend, mut cfg: RunConfig) -> Self {
         let contract = backend.contract().clone();
         // The verification call holds 1 root + M nodes; clamp M so it fits
         // the largest compiled variant (e.g. the paper's M=256 sweep point
@@ -129,7 +221,6 @@ impl<'a> Engine<'a> {
         let adaptive = Self::make_adaptive(&cfg);
         let uncharted = FeatRing::with_capacity(contract.cache_cap, contract.feat_dim);
         Self {
-            backend,
             cfg,
             contract,
             t_cache,
@@ -151,6 +242,7 @@ impl<'a> Engine<'a> {
             rng,
             use_draft: true,
             adaptive,
+            inflight: None,
         }
     }
 
@@ -177,7 +269,7 @@ impl<'a> Engine<'a> {
     /// module for 13 MB HLO text); timed runs call this first so compile
     /// cost never lands inside a measured turn. Also brings every scratch
     /// arena to its high-water capacity.
-    pub fn warmup(&mut self) -> Result<()> {
+    pub fn warmup(&mut self, backend: &mut dyn ModelBackend) -> Result<()> {
         let c = self.contract.clone();
         let kzero = vec![0.0f32; c.teacher.cache_elems(c.cache_cap)];
         // Any variant <= prefill_chunk can appear (prompt-tail chunks),
@@ -196,7 +288,7 @@ impl<'a> Engine<'a> {
             let tokens = vec![0i32; s];
             let positions = vec![0i32; s];
             let mask = vec![NEG_INF; s * (c.cache_cap + s)];
-            self.backend.teacher_step(self.cfg.mode, StepArgs {
+            backend.teacher_step(self.cfg.mode, StepArgs {
                 tokens: &tokens,
                 positions: &positions,
                 mask: &mask,
@@ -211,7 +303,7 @@ impl<'a> Engine<'a> {
             let positions = vec![0i32; s];
             let mask = vec![NEG_INF; s * (c.cache_cap + s)];
             let feats = vec![0.0f32; s * c.feat_dim];
-            self.backend.draft_step(StepArgs {
+            backend.draft_step(StepArgs {
                 tokens: &tokens,
                 positions: &positions,
                 mask: &mask,
@@ -251,7 +343,7 @@ impl<'a> Engine<'a> {
     /// and with it both multi-MB KV cache buffers, the scratch arenas and
     /// the incremental mask slots. After `reset`, decoding is
     /// bit-identical to a freshly constructed engine (asserted by
-    /// `tests/alloc_regression.rs`).
+    /// `tests/alloc_regression.rs`). Any in-flight generation is dropped.
     pub fn reset(&mut self) {
         self.t_cache.reset();
         self.d_cache.reset();
@@ -263,11 +355,18 @@ impl<'a> Engine<'a> {
         self.timers = StageTimer::new(self.cfg.instrument);
         self.adaptive = Self::make_adaptive(&self.cfg);
         self.d_cur = 0;
+        self.inflight = None;
     }
 
     /// Committed teacher context length (prompt + generated).
     pub fn context_len(&self) -> usize {
         self.t_cache.len()
+    }
+
+    /// Add `secs` to a stage timer (instrumented runs only). Public so
+    /// the batch scheduler can attribute fused-launch time per request.
+    pub fn add_stage_time(&mut self, stage: &str, secs: f64) {
+        self.timers.add(stage, secs);
     }
 
     // ------------------------------------------------------------------
@@ -279,7 +378,12 @@ impl<'a> Engine<'a> {
     /// teacher features. Leaves `pending_logits` predicting the next
     /// token. Works both for a fresh conversation and for appending a
     /// later chat turn to existing context.
-    fn prefill(&mut self, prompt: &[i32], stats: &mut RunStats) -> Result<()> {
+    fn prefill(
+        &mut self,
+        backend: &mut dyn ModelBackend,
+        prompt: &[i32],
+        stats: &mut RunStats,
+    ) -> Result<()> {
         if prompt.is_empty() {
             bail!("empty prompt");
         }
@@ -305,7 +409,7 @@ impl<'a> Engine<'a> {
             self.pos_buf.extend((0..s).map(|i| (t + i.min(n.saturating_sub(1))) as i32));
             let mask = self.mb.chain_incremental(MaskStream::TeacherChain, s, n, t, None);
             let (k, v) = self.t_cache.kv_view();
-            self.backend.teacher_step(self.cfg.mode, StepArgs {
+            backend.teacher_step(self.cfg.mode, StepArgs {
                 tokens: &self.tok_buf,
                 positions: &self.pos_buf,
                 mask,
@@ -328,7 +432,7 @@ impl<'a> Engine<'a> {
             copy_into(&mut self.pending_logits, self.t_scratch.logits_row(n - 1));
         }
         if self.use_draft {
-            self.drain_uncharted(stats)?;
+            self.drain_uncharted(backend, stats)?;
         }
         self.timers.add("prefill", t0.elapsed().as_secs_f64());
         Ok(())
@@ -341,7 +445,11 @@ impl<'a> Engine<'a> {
     /// Flush `uncharted` committed tokens into the draft cache. Returns
     /// the scratch row (in `d_scratch[d_cur]`) of the *last* flushed
     /// token — the root expansion signal — when anything was flushed.
-    fn drain_uncharted(&mut self, stats: &mut RunStats) -> Result<Option<usize>> {
+    fn drain_uncharted(
+        &mut self,
+        backend: &mut dyn ModelBackend,
+        stats: &mut RunStats,
+    ) -> Result<Option<usize>> {
         let mut last = None;
         let max_take = *self.contract.draft_s.last().unwrap();
         while !self.uncharted.is_empty() {
@@ -366,7 +474,7 @@ impl<'a> Engine<'a> {
             let mask =
                 self.mb.chain_incremental(MaskStream::DraftChain, s, take, d, self.cfg.draft_window);
             let (k, v) = self.d_cache.kv_view();
-            self.backend.draft_step(StepArgs {
+            backend.draft_step(StepArgs {
                 tokens: &self.tok_buf,
                 positions: &self.pos_buf,
                 mask,
@@ -420,11 +528,19 @@ impl<'a> Engine<'a> {
     // Baseline: teacher-only greedy decoding
     // ------------------------------------------------------------------
 
-    pub fn generate_baseline(&mut self, prompt: &[i32], max_new: usize) -> Result<GenOut> {
+    /// Teacher-only greedy decoding (the paper's baseline): one teacher
+    /// call per committed token.
+    pub fn generate_baseline(
+        &mut self,
+        backend: &mut dyn ModelBackend,
+        prompt: &[i32],
+        max_new: usize,
+    ) -> Result<GenOut> {
+        anyhow::ensure!(self.inflight.is_none(), "a generation is already in flight");
         self.use_draft = false;
         let wall0 = Instant::now();
         let mut stats = RunStats::default();
-        self.prefill(prompt, &mut stats)?;
+        self.prefill(backend, prompt, &mut stats)?;
         let mut out_tokens = Vec::with_capacity(max_new);
         let s = *self.contract.teacher_s.first().unwrap();
         while out_tokens.len() < max_new && self.t_cache.headroom() > s {
@@ -440,7 +556,7 @@ impl<'a> Engine<'a> {
             self.timers.add("mask_build", tm.elapsed().as_secs_f64());
             let tv = Instant::now();
             let (k, v) = self.t_cache.kv_view();
-            self.backend.teacher_step(self.cfg.mode, StepArgs {
+            backend.teacher_step(self.cfg.mode, StepArgs {
                 tokens: &self.tok_buf,
                 positions: &self.pos_buf,
                 mask,
@@ -465,38 +581,95 @@ impl<'a> Engine<'a> {
     // Speculative decoding
     // ------------------------------------------------------------------
 
-    pub fn generate_speculative(&mut self, prompt: &[i32], max_new: usize) -> Result<GenOut> {
+    /// Tree-speculative decoding of one turn: prefill + rounds until
+    /// `max_new` tokens are committed (soft cap — a round commits
+    /// `1 + accept_L` tokens atomically, so EA may overshoot by at most
+    /// `depth_max`; the committed text stays a prefix-exact teacher-greedy
+    /// stream, so multi-turn context remains consistent).
+    pub fn generate_speculative(
+        &mut self,
+        backend: &mut dyn ModelBackend,
+        prompt: &[i32],
+        max_new: usize,
+    ) -> Result<GenOut> {
+        self.begin_speculative(backend, prompt, max_new)?;
+        while self.needs_more() {
+            self.prepare_verify(backend)?;
+            self.verify_own(backend)?;
+            self.finish_verify()?;
+        }
+        self.take_output()
+    }
+
+    /// Start a speculative generation: validate the config, prefill
+    /// `prompt`, and leave the engine ready for rounds
+    /// ([`Engine::prepare_verify`] / [`Engine::finish_verify`]). In
+    /// batched serving the per-request wall clock reported by
+    /// [`Engine::take_output`] spans the whole co-scheduled drive, peers
+    /// included — it is honest arrival-to-completion latency, not pure
+    /// compute time.
+    pub fn begin_speculative(
+        &mut self,
+        backend: &mut dyn ModelBackend,
+        prompt: &[i32],
+        max_new: usize,
+    ) -> Result<()> {
+        anyhow::ensure!(self.inflight.is_none(), "a generation is already in flight");
         self.use_draft = true;
         self.cfg.validate()?;
         let wall0 = Instant::now();
         let mut stats = RunStats::default();
-        self.prefill(prompt, &mut stats)?;
-        let mut out_tokens: Vec<i32> = Vec::with_capacity(max_new + self.cfg.tree.depth_max);
-        let reserve = 1 + self.max_budget();
-        // `max_new` is a soft cap: a round commits 1 + accept_L tokens
-        // atomically, so EA may overshoot by at most depth_max tokens
-        // (the committed text stays a prefix-exact teacher-greedy stream,
-        // and multi-turn context therefore remains consistent).
-        while out_tokens.len() < max_new
-            && self.t_cache.headroom() > reserve
-            && self.d_cache.headroom() > reserve
-        {
-            let committed = self.spec_round(&mut stats)?;
-            out_tokens.extend(committed);
-        }
-        Ok(self.finish(out_tokens, prompt.len(), stats, wall0))
+        self.prefill(backend, prompt, &mut stats)?;
+        self.inflight = Some(InFlight {
+            stats,
+            out_tokens: Vec::with_capacity(max_new + self.cfg.tree.depth_max),
+            prompt_len: prompt.len(),
+            wall0,
+            max_new,
+            round: None,
+        });
+        Ok(())
     }
 
-    /// One speculative round; returns the committed tokens (root + accepted).
-    fn spec_round(&mut self, stats: &mut RunStats) -> Result<Vec<i32>> {
-        stats.rounds += 1;
+    /// Whether the in-flight generation wants another speculative round
+    /// (tokens still owed and cache headroom for one more tree). False if
+    /// no generation is in flight. Must not be called with a round
+    /// pending (prepare/finish pairs are atomic as far as scheduling is
+    /// concerned).
+    pub fn needs_more(&self) -> bool {
+        let Some(fl) = &self.inflight else { return false };
+        let reserve = 1 + self.max_budget();
+        fl.out_tokens.len() < fl.max_new
+            && self.t_cache.headroom() > reserve
+            && self.d_cache.headroom() > reserve
+    }
+
+    /// Run the draft-side half of one speculative round: root + chain
+    /// refresh, tree expansion, tensorization, tree-mask build, position
+    /// staging, and opening the teacher cache branch. Leaves a pending
+    /// round whose verification inputs are exposed by
+    /// [`Engine::verify_payload`].
+    pub fn prepare_verify(&mut self, backend: &mut dyn ModelBackend) -> Result<()> {
+        let mut fl = self.inflight.take().context("prepare_verify without begin_speculative")?;
+        let r = self.prepare_verify_inner(backend, &mut fl);
+        self.inflight = Some(fl);
+        r
+    }
+
+    fn prepare_verify_inner(
+        &mut self,
+        backend: &mut dyn ModelBackend,
+        fl: &mut InFlight,
+    ) -> Result<()> {
+        anyhow::ensure!(fl.round.is_none(), "prepare_verify with a round already pending");
+        fl.stats.rounds += 1;
 
         // 1. Pending root token + draft chain refresh.
         let r0 = argmax(&self.pending_logits) as i32;
         self.uncharted.push(r0, &self.feat_last);
         let td = Instant::now();
         let root_row = self
-            .drain_uncharted(stats)?
+            .drain_uncharted(backend, &mut fl.stats)?
             .context("drain_uncharted returned nothing despite pending root")?;
 
         // 2. Tree expansion (depth-synchronous, global top-M).
@@ -543,7 +716,15 @@ impl<'a> Engine<'a> {
             if budget_left == 0 || depth == self.cfg.tree.depth_max {
                 break; // leaves don't need a draft evaluation
             }
-            self.eval_frontier(&tree, &new_slots, &frontier, &mut branch_row_of, depth, stats)?;
+            self.eval_frontier(
+                backend,
+                &tree,
+                &new_slots,
+                &frontier,
+                &mut branch_row_of,
+                depth,
+                &mut fl.stats,
+            )?;
             frontier.clear();
             frontier.extend(new_slots.iter().enumerate().map(|(i, &slot)| (slot, i)));
         }
@@ -556,26 +737,132 @@ impl<'a> Engine<'a> {
             .map_err(|e| anyhow::anyhow!("tree invariant violation: {e}"))?;
         self.timers.add("tensorize", tt.elapsed().as_secs_f64());
 
-        // 4. Tree mask (incremental: prefix delta + spec block rewrite).
+        // 4. Tree mask (incremental: prefix delta + spec block rewrite),
+        // built into the persistent (TeacherTree, s_pad) slot that
+        // `verify_payload` re-borrows.
         let tm = Instant::now();
         let t_len = self.t_cache.len();
-        let mask = self.mb.tree_incremental(MaskStream::TeacherTree, &tens, t_len, None);
+        let _ = self.mb.tree_incremental(MaskStream::TeacherTree, &tens, t_len, None);
         self.timers.add("mask_build", tm.elapsed().as_secs_f64());
 
-        // 5. Teacher verification (single batched call).
-        let tv = Instant::now();
+        // 5. Stage positions + open the teacher branch; verification may
+        // now run (fused or single) against `verify_payload`.
         tens.positions_into(t_len, &mut self.pos_buf);
         self.t_cache.begin_branch()?;
+        fl.round = Some(RoundState {
+            r0,
+            tree,
+            tens,
+            s_pad,
+            t_len,
+            round_budget,
+            verified: false,
+        });
+        Ok(())
+    }
+
+    /// Borrowed verification inputs of the pending round (tokens,
+    /// positions, mask, cache view). The batch scheduler gathers these
+    /// across engines into one fused launch.
+    pub fn verify_payload(&self) -> Result<VerifyPayload<'_>> {
+        let fl = self.inflight.as_ref().context("no generation in flight")?;
+        let round = fl.round.as_ref().context("verify_payload without a prepared round")?;
+        let mask = self
+            .mb
+            .peek(MaskStream::TeacherTree, round.s_pad)
+            .context("teacher tree mask slot missing")?
+            .as_slice();
         let (k, v) = self.t_cache.kv_view();
-        self.backend.teacher_step(self.cfg.mode, StepArgs {
-            tokens: &tens.tokens,
+        Ok(VerifyPayload {
+            tokens: &round.tens.tokens,
             positions: &self.pos_buf,
             mask,
             kv: KvView { k, v },
-            feats_in: None,
-            probe: false,
-        }, &mut self.t_scratch)?;
-        stats.teacher_calls += 1;
+            s: round.s_pad,
+            live: round.tens.live,
+            ctx_len: round.t_len,
+        })
+    }
+
+    /// Single-request verification: one teacher call on the pending
+    /// round's payload, outputs into the engine's own scratch.
+    fn verify_own(&mut self, backend: &mut dyn ModelBackend) -> Result<()> {
+        let tv = Instant::now();
+        {
+            let fl = self.inflight.as_ref().context("no generation in flight")?;
+            let round = fl.round.as_ref().context("verify without a prepared round")?;
+            let mask = self
+                .mb
+                .peek(MaskStream::TeacherTree, round.s_pad)
+                .context("teacher tree mask slot missing")?
+                .as_slice();
+            let (k, v) = self.t_cache.kv_view();
+            backend.teacher_step(self.cfg.mode, StepArgs {
+                tokens: &round.tens.tokens,
+                positions: &self.pos_buf,
+                mask,
+                kv: KvView { k, v },
+                feats_in: None,
+                probe: false,
+            }, &mut self.t_scratch)?;
+        }
+        self.timers.add("verify", tv.elapsed().as_secs_f64());
+        if let Some(fl) = self.inflight.as_mut() {
+            if let Some(r) = fl.round.as_mut() {
+                r.verified = true;
+            }
+        }
+        Ok(())
+    }
+
+    /// Copy this request's rows out of a fused batched scratch into the
+    /// engine's own verification scratch (`b` = this request's index in
+    /// the fused launch). Marks the pending round as verified.
+    pub fn scatter_verify(&mut self, fused: &StepScratch, b: usize) -> Result<()> {
+        let s_pad = {
+            let fl = self.inflight.as_ref().context("no generation in flight")?;
+            let round = fl.round.as_ref().context("scatter_verify without a prepared round")?;
+            round.s_pad
+        };
+        anyhow::ensure!(
+            s_pad <= fused.s(),
+            "fused scratch rows {} cannot hold request variant {s_pad}",
+            fused.s()
+        );
+        self.t_scratch.scatter_from(fused, b, s_pad);
+        if let Some(fl) = self.inflight.as_mut() {
+            if let Some(r) = fl.round.as_mut() {
+                r.verified = true;
+            }
+        }
+        Ok(())
+    }
+
+    /// Per-request second half of a round: adopt the verified KV rows
+    /// into the teacher branch, run the acceptance walk, and commit
+    /// `1 + accept_L` tokens. Requires verification outputs in the
+    /// engine's scratch (via the internal step or
+    /// [`Engine::scatter_verify`]).
+    pub fn finish_verify(&mut self) -> Result<()> {
+        let mut fl = self.inflight.take().context("finish_verify without begin_speculative")?;
+        let r = self.finish_verify_inner(&mut fl);
+        self.inflight = Some(fl);
+        r
+    }
+
+    fn finish_verify_inner(&mut self, fl: &mut InFlight) -> Result<()> {
+        {
+            let round = fl.round.as_ref().context("finish_verify without a prepared round")?;
+            anyhow::ensure!(
+                round.verified,
+                "finish_verify before verification outputs were written"
+            );
+        }
+        let round = fl.round.take().expect("round presence just checked");
+        let RoundState { r0, tree, tens, s_pad, t_len, round_budget, .. } = round;
+        fl.stats.teacher_calls += 1;
+
+        let tv = Instant::now();
         self.t_cache.append_branch(&self.t_scratch.k_new, &self.t_scratch.v_new, s_pad, tens.live)?;
         self.timers.add("verify", tv.elapsed().as_secs_f64());
 
@@ -590,8 +877,8 @@ impl<'a> Engine<'a> {
                 stochastic_walk(&tree, &logits_of, self.cfg.temperature, &mut self.rng)
             }
         };
-        stats.accept_lens.push(acc.accept_len());
-        stats.accept_pos.record(acc.accept_len(), acc.offered);
+        fl.stats.accept_lens.push(acc.accept_len());
+        fl.stats.accept_pos.record(acc.accept_len(), acc.offered);
         if let Some(adaptive) = &mut self.adaptive {
             adaptive.observe(acc.accept_len(), round_budget);
         }
@@ -628,20 +915,27 @@ impl<'a> Engine<'a> {
             }
         }
         // Features of newly committed tokens feed the next chain refresh.
-        let mut committed = Vec::with_capacity(1 + a);
-        committed.push(r0);
+        fl.out_tokens.push(r0);
         let mut prev_slot = 0usize;
         for &slot in &acc.path {
             let tok = tree.slots()[slot].token;
             self.uncharted.push(tok, self.t_scratch.feat_row(prev_slot));
-            committed.push(tok);
+            fl.out_tokens.push(tok);
             prev_slot = slot;
         }
         copy_into(&mut self.feat_last, self.t_scratch.feat_row(acc.bonus_slot));
         copy_into(&mut self.pending_logits, self.t_scratch.logits_row(acc.bonus_slot));
         self.d_cache.rollback();
         self.timers.add("commit", tc.elapsed().as_secs_f64());
-        Ok(committed)
+        Ok(())
+    }
+
+    /// Close the in-flight generation and return its [`GenOut`]. Call
+    /// only with no round pending.
+    pub fn take_output(&mut self) -> Result<GenOut> {
+        let fl = self.inflight.take().context("take_output without an active generation")?;
+        anyhow::ensure!(fl.round.is_none(), "take_output with a round still pending");
+        Ok(self.finish(fl.out_tokens, fl.prompt_len, fl.stats, fl.wall0))
     }
 
     /// Evaluate the freshly selected frontier (the candidates currently in
@@ -650,8 +944,10 @@ impl<'a> Engine<'a> {
     /// (optionally windowed), ancestor branch rows and the self slot.
     /// Outputs land in the write scratch, which then becomes the read
     /// scratch for the next depth.
+    #[allow(clippy::too_many_arguments)]
     fn eval_frontier(
         &mut self,
+        backend: &mut dyn ModelBackend,
         tree: &SpecTree,
         new_slots: &[usize],
         frontier: &[(usize, usize)],
@@ -712,7 +1008,7 @@ impl<'a> Engine<'a> {
         let write_idx = 1 - self.d_cur;
         let mask = self.mb.incremental(MaskStream::DraftFrontier, s).as_slice();
         let (k, v) = self.d_cache.kv_view();
-        self.backend.draft_step(StepArgs {
+        backend.draft_step(StepArgs {
             tokens: &self.tok_buf,
             positions: &self.pos_buf,
             mask,
@@ -771,14 +1067,14 @@ mod tests {
 
     fn run_baseline(cfg: &RunConfig, p: &[i32], max_new: usize) -> GenOut {
         let mut b = SimBackend::new(90);
-        let mut e = Engine::new(&mut b, cfg.clone());
-        e.generate_baseline(p, max_new).unwrap()
+        let mut e = Engine::new(&b, cfg.clone());
+        e.generate_baseline(&mut b, p, max_new).unwrap()
     }
 
     fn run_spec(cfg: &RunConfig, p: &[i32], max_new: usize, agree: u64) -> GenOut {
         let mut b = SimBackend::new(agree);
-        let mut e = Engine::new(&mut b, cfg.clone());
-        e.generate_speculative(p, max_new).unwrap()
+        let mut e = Engine::new(&b, cfg.clone());
+        e.generate_speculative(&mut b, p, max_new).unwrap()
     }
 
     #[test]
@@ -880,13 +1176,13 @@ mod tests {
     #[test]
     fn multi_turn_continuation_keeps_cache() {
         let mut b = SimBackend::new(90);
-        let mut e = Engine::new(&mut b, RunConfig::default());
+        let mut e = Engine::new(&b, RunConfig::default());
         let p1 = prompt(10, 7);
-        let o1 = e.generate_speculative(&p1, 12).unwrap();
+        let o1 = e.generate_speculative(&mut b, &p1, 12).unwrap();
         let len_after_t1 = e.context_len();
         assert!(len_after_t1 >= 10 + 12);
         let p2 = prompt(6, 8);
-        let o2 = e.generate_speculative(&p2, 12).unwrap();
+        let o2 = e.generate_speculative(&mut b, &p2, 12).unwrap();
         assert!(e.context_len() > len_after_t1);
         assert!(o1.tokens.len() >= 12);
         assert!(o2.tokens.len() >= 12);
@@ -902,37 +1198,37 @@ mod tests {
         let p1 = prompt(8, 9);
         let max1 = 10;
         let mut b1 = SimBackend::new(90);
-        let mut e1 = Engine::new(&mut b1, RunConfig::default());
-        let o1 = e1.generate_speculative(&p1, max1).unwrap();
+        let mut e1 = Engine::new(&b1, RunConfig::default());
+        let o1 = e1.generate_speculative(&mut b1, &p1, max1).unwrap();
         let p2 = prompt(5, 10);
-        let o2 = e1.generate_speculative(&p2, 10).unwrap();
+        let o2 = e1.generate_speculative(&mut b1, &p2, 10).unwrap();
 
         let mut ctx: Vec<i32> = p1.clone();
         ctx.extend(&o1.tokens);
         ctx.extend(&p2);
         let mut b2 = SimBackend::new(90);
-        let mut e2 = Engine::new(&mut b2, RunConfig::default());
-        let base = e2.generate_baseline(&ctx, o2.tokens.len()).unwrap();
+        let mut e2 = Engine::new(&b2, RunConfig::default());
+        let base = e2.generate_baseline(&mut b2, &ctx, o2.tokens.len()).unwrap();
         assert_eq!(o2.tokens, base.tokens);
     }
 
     #[test]
     fn reused_engine_after_reset_matches_fresh_engine() {
-        // The coordinator reuses one warmed engine per worker; reset must
+        // The coordinator reuses warmed engines per worker; reset must
         // restore exact fresh-engine behaviour (tokens AND accept shape).
         let p1 = prompt(14, 21);
         let p2 = prompt(9, 22);
         let mut b = SimBackend::new(85);
-        let mut e = Engine::new(&mut b, RunConfig::default());
-        let first = e.generate_speculative(&p1, 24).unwrap();
+        let mut e = Engine::new(&b, RunConfig::default());
+        let first = e.generate_speculative(&mut b, &p1, 24).unwrap();
         e.reset();
-        let second = e.generate_speculative(&p2, 24).unwrap();
+        let second = e.generate_speculative(&mut b, &p2, 24).unwrap();
         e.reset();
-        let first_again = e.generate_speculative(&p1, 24).unwrap();
+        let first_again = e.generate_speculative(&mut b, &p1, 24).unwrap();
 
         let mut fb = SimBackend::new(85);
-        let mut fe = Engine::new(&mut fb, RunConfig::default());
-        let fresh2 = fe.generate_speculative(&p2, 24).unwrap();
+        let mut fe = Engine::new(&fb, RunConfig::default());
+        let fresh2 = fe.generate_speculative(&mut fb, &p2, 24).unwrap();
 
         assert_eq!(second.tokens, fresh2.tokens, "reused engine diverged from fresh");
         assert_eq!(second.accept_lens, fresh2.accept_lens);
@@ -957,8 +1253,8 @@ mod tests {
         let mut cfg = RunConfig::default();
         cfg.instrument = true;
         let mut b = SimBackend::new(90);
-        let mut e = Engine::new(&mut b, cfg);
-        let out = e.generate_speculative(&p, 16).unwrap();
+        let mut e = Engine::new(&b, cfg);
+        let out = e.generate_speculative(&mut b, &p, 16).unwrap();
         for stage in ["prefill", "draft_expand", "tensorize", "mask_build", "verify",
                       "accept", "commit"] {
             assert!(out.timers.seconds.contains_key(stage), "missing stage {stage}");
@@ -986,14 +1282,14 @@ mod tests {
         cfg.adaptive_budget = true;
         cfg.tree.budget = 8;
         let mut good = SimBackend::new(100);
-        let mut e = Engine::new(&mut good, cfg.clone());
-        let out_good = e.generate_speculative(&p, 120).unwrap();
+        let mut e = Engine::new(&good, cfg.clone());
+        let out_good = e.generate_speculative(&mut good, &p, 120).unwrap();
         let grown = e.current_budget();
         assert!(grown > 8, "high acceptance should grow the budget: {grown}");
 
         let mut bad = SimBackend::new(0);
-        let mut e2 = Engine::new(&mut bad, cfg.clone());
-        let out_bad = e2.generate_speculative(&p, 120).unwrap();
+        let mut e2 = Engine::new(&bad, cfg.clone());
+        let out_bad = e2.generate_speculative(&mut bad, &p, 120).unwrap();
         assert!(e2.current_budget() < 8,
                 "zero acceptance should shrink the budget: {}", e2.current_budget());
         let n = out_good.tokens.len().min(out_bad.tokens.len());
@@ -1007,8 +1303,8 @@ mod tests {
         cfg.adaptive_budget = true;
         cfg.tree.budget = 8;
         let mut b = SimBackend::new(100);
-        let mut e = Engine::new(&mut b, cfg);
-        e.generate_speculative(&p, 120).unwrap();
+        let mut e = Engine::new(&b, cfg);
+        e.generate_speculative(&mut b, &p, 120).unwrap();
         assert!(e.current_budget() > 8);
         e.reset();
         assert_eq!(e.current_budget(), 8, "reset must restore the initial budget");
@@ -1024,5 +1320,31 @@ mod tests {
         cfg.cache_strategy = CacheStrategy::SegmentShare;
         let ss = run_spec(&cfg, &p, 12, 90);
         assert_eq!(ss.teacher_cache.replicate_bytes, 0);
+    }
+
+    #[test]
+    fn split_round_api_guards_misuse() {
+        let mut b = SimBackend::new(90);
+        let mut e = Engine::new(&b, RunConfig::default());
+        // no generation in flight
+        assert!(e.prepare_verify(&mut b).is_err());
+        assert!(e.finish_verify().is_err());
+        assert!(e.take_output().is_err());
+        assert!(e.verify_payload().is_err());
+        assert!(!e.needs_more());
+        // begin, then finishing without preparing must fail
+        let p = prompt(8, 30);
+        e.begin_speculative(&mut b, &p, 8).unwrap();
+        assert!(e.needs_more());
+        assert!(e.finish_verify().is_err(), "no round prepared");
+        // preparing twice must fail; finishing before verification too
+        e.prepare_verify(&mut b).unwrap();
+        assert!(e.prepare_verify(&mut b).is_err(), "round already pending");
+        assert!(e.finish_verify().is_err(), "round not verified yet");
+        assert!(e.take_output().is_err(), "round still pending");
+        // double-begin is rejected while in flight
+        assert!(e.begin_speculative(&mut b, &p, 8).is_err());
+        e.reset();
+        assert!(!e.needs_more());
     }
 }

@@ -4,5 +4,5 @@
 pub mod decode;
 pub mod output;
 
-pub use decode::Engine;
+pub use decode::{Engine, VerifyPayload};
 pub use output::GenOut;

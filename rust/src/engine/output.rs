@@ -11,6 +11,7 @@ pub fn attention_distance_buckets() -> Histogram {
     Histogram::new(vec![15.0, 63.0, 255.0])
 }
 
+/// Stable labels of the Fig-7 attention-distance buckets.
 pub const ATTN_BUCKET_LABELS: &[&str] = &["0_15", "16_63", "64_255", "256_plus"];
 
 /// Result of one generation call (one turn).
@@ -20,7 +21,9 @@ pub struct GenOut {
     pub tokens: Vec<i32>,
     /// Wall-clock of the full generation call, seconds.
     pub wall_secs: f64,
+    /// Teacher verification/prefill steps this request consumed.
     pub teacher_calls: u64,
+    /// Draft steps (chain refresh + frontier expansion).
     pub draft_calls: u64,
     /// Verification rounds (speculative) or decode steps (baseline).
     pub rounds: u64,
@@ -32,13 +35,16 @@ pub struct GenOut {
     pub timers: StageTimer,
     /// Draft attention top-1 distance histogram (probe runs only).
     pub attn_hist: Histogram,
+    /// Teacher-cache movement counters for this generation.
     pub teacher_cache: CacheStats,
+    /// Draft-cache movement counters for this generation.
     pub draft_cache: CacheStats,
     /// Prompt length (tokens) for trace records.
     pub prompt_len: usize,
 }
 
 impl GenOut {
+    /// Decode throughput, output tokens per second.
     pub fn tok_per_sec(&self) -> f64 {
         if self.wall_secs <= 0.0 {
             0.0
@@ -47,6 +53,7 @@ impl GenOut {
         }
     }
 
+    /// Mean accept_L across this generation's verification rounds.
     pub fn mean_accept_len(&self) -> f64 {
         if self.accept_lens.is_empty() {
             0.0

@@ -29,14 +29,20 @@ use anyhow::Result;
 use std::fmt::Write as _;
 use std::path::PathBuf;
 
+/// Shared configuration of the E1-E4 experiment runners.
 #[derive(Clone, Debug)]
 pub struct HarnessConfig {
+    /// Backend every worker builds.
     pub backend: BackendSpec,
+    /// Directory receiving tables/CSVs/traces.
     pub out_dir: PathBuf,
+    /// Coordinator worker count.
     pub world_size: usize,
+    /// Base decode configuration (experiments override axes).
     pub run: RunConfig,
     /// Shrink the workload for smoke runs / CI.
     pub quick: bool,
+    /// Print coordinator progress.
     pub verbose: bool,
 }
 
@@ -69,6 +75,7 @@ impl HarnessConfig {
             trace_dir: self.out_dir.join(tag),
             run_baseline: baseline,
             run_ea: ea,
+            max_batch: 1,
             verbose: self.verbose,
         }
     }
@@ -84,6 +91,7 @@ fn write(dir: &PathBuf, name: &str, content: &str) -> Result<()> {
 // E1 — end-to-end throughput (Table 1, Fig 1, 2a, 2b, 3)
 // ----------------------------------------------------------------------
 
+/// E1: end-to-end throughput (Table 1, Fig 1/2a/2b/3).
 pub fn run_e1(cfg: &HarnessConfig) -> Result<ThroughputReport> {
     let mut run = cfg.run.clone();
     run.max_new_tokens = if cfg.quick { 24 } else { 128 };
@@ -104,13 +112,19 @@ pub fn run_e1(cfg: &HarnessConfig) -> Result<ThroughputReport> {
 // E2 — budget sensitivity sweep (Table 2, Fig 4)
 // ----------------------------------------------------------------------
 
+/// One row of the E2 budget-sweep table.
 pub struct SweepRow {
+    /// Sweep axis identifier (`scan_M` | `scan_Dmax`).
     pub sweep: &'static str,
+    /// Human-readable setting (e.g. `M=32`).
     pub setting: String,
+    /// Mean EA throughput at this setting.
     pub ea_tok_s: f64,
+    /// Speedup over the shared baseline.
     pub speedup: f64,
 }
 
+/// E2: tree-budget sensitivity sweep (Table 2, Fig 4), code-only.
 pub fn run_e2(cfg: &HarnessConfig) -> Result<Vec<SweepRow>> {
     let workload = cfg.workload_code_only();
     let max_new = if cfg.quick { 16 } else { 64 };
@@ -181,6 +195,7 @@ fn sweep_row(sweep: &'static str, setting: String, recs: &[TurnRecord], base_mea
 // E3 — stage breakdown (Fig 5; instrumented, analysis-only)
 // ----------------------------------------------------------------------
 
+/// E3: instrumented per-stage timing breakdown (Fig 5).
 pub fn run_e3(cfg: &HarnessConfig) -> Result<Json> {
     let mut run = cfg.run.clone();
     run.instrument = true;
@@ -225,14 +240,21 @@ pub fn run_e3(cfg: &HarnessConfig) -> Result<Json> {
 // E4 — drafter truncation (Table 3, Fig 6, Fig 7)
 // ----------------------------------------------------------------------
 
+/// One row of the E4 drafter-truncation table.
 pub struct TruncRow {
+    /// Drafter window setting (`none` or the window size).
     pub window: String,
+    /// Mean EA throughput under this window.
     pub ea_tok_s: f64,
+    /// Speedup over the shared baseline.
     pub speedup: f64,
+    /// Mean accept_L under this window.
     pub accept_mean: f64,
+    /// p90 accept_L under this window.
     pub accept_p90: f64,
 }
 
+/// E4: drafter context truncation (Table 3, Fig 6, Fig 7).
 pub fn run_e4(cfg: &HarnessConfig, attention_stats: bool) -> Result<Vec<TruncRow>> {
     let mut workload = cfg.workload();
     if !cfg.quick {

@@ -10,19 +10,27 @@
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
 
+/// A JSON value. Numbers are f64; object key order is insertion order.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Json {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Any number (held as f64; integers round-trip up to 2^53).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Json>),
+    /// An object, as ordered key/value pairs.
     Obj(Vec<(String, Json)>),
 }
 
 impl Json {
     // ---------------- accessors ----------------
 
+    /// Object field lookup (None for non-objects / missing keys).
     pub fn get(&self, key: &str) -> Option<&Json> {
         match self {
             Json::Obj(pairs) => pairs.iter().find(|(k, _)| k == key).map(|(_, v)| v),
@@ -39,6 +47,7 @@ impl Json {
         Some(cur)
     }
 
+    /// Numeric value (None for non-numbers).
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(x) => Some(*x),
@@ -46,14 +55,17 @@ impl Json {
         }
     }
 
+    /// Numeric value truncated to usize.
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().map(|x| x as usize)
     }
 
+    /// Numeric value truncated to i64.
     pub fn as_i64(&self) -> Option<i64> {
         self.as_f64().map(|x| x as i64)
     }
 
+    /// String value (None for non-strings).
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -61,6 +73,7 @@ impl Json {
         }
     }
 
+    /// Boolean value (None for non-booleans).
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Json::Bool(b) => Some(*b),
@@ -68,6 +81,7 @@ impl Json {
         }
     }
 
+    /// Array elements (None for non-arrays).
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(v) => Some(v),
@@ -75,6 +89,7 @@ impl Json {
         }
     }
 
+    /// Object key/value pairs in insertion order (None for non-objects).
     pub fn as_obj(&self) -> Option<&[(String, Json)]> {
         match self {
             Json::Obj(v) => Some(v),
@@ -84,10 +99,12 @@ impl Json {
 
     // ---------------- constructors ----------------
 
+    /// An empty object.
     pub fn obj() -> Self {
         Json::Obj(Vec::new())
     }
 
+    /// Append a key/value pair (no-op on non-objects); chainable.
     pub fn push(&mut self, key: &str, value: impl Into<Json>) -> &mut Self {
         if let Json::Obj(pairs) = self {
             pairs.push((key.to_string(), value.into()));
@@ -95,26 +112,31 @@ impl Json {
         self
     }
 
+    /// Array of numbers from an f64 slice.
     pub fn from_f64_slice(xs: &[f64]) -> Json {
         Json::Arr(xs.iter().map(|x| Json::Num(*x)).collect())
     }
 
+    /// Array of numbers from a u64 slice.
     pub fn from_u64_slice(xs: &[u64]) -> Json {
         Json::Arr(xs.iter().map(|x| Json::Num(*x as f64)).collect())
     }
 
+    /// Object of numbers from a string-keyed map.
     pub fn from_str_map(m: &BTreeMap<String, f64>) -> Json {
         Json::Obj(m.iter().map(|(k, v)| (k.clone(), Json::Num(*v))).collect())
     }
 
     // ---------------- writer ----------------
 
+    /// Compact serialization (single line, no spaces).
     pub fn to_string(&self) -> String {
         let mut s = String::new();
         self.write(&mut s);
         s
     }
 
+    /// Pretty serialization (two-space indent, trailing newline).
     pub fn to_string_pretty(&self) -> String {
         let mut s = String::new();
         self.write_pretty(&mut s, 0);
@@ -226,6 +248,7 @@ fn write_escaped(out: &mut String, s: &str) {
 
 // ---------------- parser ----------------
 
+/// Parse a complete JSON document (trailing garbage is an error).
 pub fn parse(text: &str) -> Result<Json, String> {
     let bytes = text.as_bytes();
     let mut p = Parser { b: bytes, i: 0 };

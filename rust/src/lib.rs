@@ -10,15 +10,43 @@
 //!   HLO text (`python/compile/`, `make artifacts`);
 //! * **L3** — this crate: the paper's system contribution. It owns the
 //!   branchable KV-cache manager ([`cache`]), accelerator-safe tree
-//!   tensorization ([`tree`]), the speculative decode engine ([`spec`]),
-//!   the serving coordinator ([`coordinator`]), plus every substrate the
-//!   paper depends on (workload generation, tracing, metrics, a JSON
-//!   codec, a CLI, and a property-testing harness — the image has no
-//!   tokio/serde/clap/criterion, so these are built in-repo).
+//!   tensorization ([`tree`]), the speculative decode engine ([`engine`])
+//!   and its policies ([`spec`]), the serving coordinator with
+//!   cross-request batched verification ([`coordinator`]), plus every
+//!   substrate the paper depends on (workload generation, tracing,
+//!   metrics, a JSON codec, a CLI, and a property-testing harness — the
+//!   image has no tokio/serde/clap/criterion, so these are built
+//!   in-repo).
 //!
 //! Python never runs on the request path: after `make artifacts`, the rust
 //! binary is self-contained, loading `artifacts/*.hlo.txt` through the PJRT
 //! CPU client ([`runtime`]).
+//!
+//! # Dataflow in one paragraph
+//!
+//! A prompt is prefilled through the teacher in chunks; each speculative
+//! round then drafts a token tree ([`tree::SpecTree`] →
+//! [`tree::Tensorized`]), builds the tree-attention mask
+//! ([`tree::MaskBuilder`]), verifies the whole tree in **one** teacher
+//! call (per request — or one *fused* call for a whole batch of requests
+//! through [`coordinator::BatchScheduler`]), walks acceptance
+//! ([`spec::greedy_walk`]) and commits `1 + accept_L` tokens into the
+//! managed KV cache ([`cache::ManagedCache`]). Under greedy acceptance
+//! the committed text is bit-identical to teacher-only decoding; only the
+//! wall-clock changes. `docs/ARCHITECTURE.md` walks the full pipeline
+//! module by module, including the batching/padding contract;
+//! `docs/TRACE_FORMAT.md` documents the structured trace schema.
+//!
+//! # Where to start reading
+//!
+//! * [`engine::Engine`] — the decode loop and the split-round API that
+//!   batched serving drives;
+//! * [`backend::ModelBackend`] — the scratch-buffer step contract (sim
+//!   and PJRT implementations);
+//! * [`coordinator::BatchScheduler`] — cross-request fused verification;
+//! * [`cache::ManagedCache`] — branch/commit semantics (paper §3.1).
+
+#![warn(missing_docs)]
 
 pub mod backend;
 pub mod cache;

@@ -8,12 +8,16 @@ use std::collections::BTreeMap;
 /// A matched baseline/EA pair for one turn.
 #[derive(Clone, Debug)]
 pub struct TurnPair {
+    /// `(conversation_id, turn_idx)` identifying the turn.
     pub key: (usize, usize),
+    /// The teacher-only record of this turn.
     pub baseline: TurnRecord,
+    /// The tree-speculation record of this turn.
     pub ea: TurnRecord,
 }
 
 impl TurnPair {
+    /// EA-over-baseline throughput ratio of this turn.
     pub fn speedup(&self) -> f64 {
         if self.baseline.tok_s <= 0.0 {
             0.0
@@ -53,15 +57,22 @@ pub fn pair_turns(records: &[TurnRecord]) -> Vec<TurnPair> {
 /// Table-1-shaped report.
 #[derive(Clone, Debug)]
 pub struct ThroughputReport {
+    /// Number of paired turns aggregated.
     pub turns: usize,
+    /// Baseline tokens/second across turns.
     pub baseline_tok_s: Summary,
+    /// EA tokens/second across turns.
     pub ea_tok_s: Summary,
+    /// Per-turn speedup distribution.
     pub speedup: Summary,
+    /// accept_L distribution across all verification rounds.
     pub accept_l: Summary,
+    /// Position-wise acceptance counters (Fig 3).
     pub accept_pos: AcceptPos,
 }
 
 impl ThroughputReport {
+    /// Aggregate matched pairs into the Table-1 statistics.
     pub fn from_pairs(pairs: &[TurnPair]) -> Self {
         let b: Vec<f64> = pairs.iter().map(|p| p.baseline.tok_s).collect();
         let e: Vec<f64> = pairs.iter().map(|p| p.ea.tok_s).collect();
@@ -106,6 +117,7 @@ impl ThroughputReport {
         out
     }
 
+    /// Machine-readable form of the report.
     pub fn to_json(&self) -> Json {
         let summary = |s: &Summary| {
             let mut o = Json::obj();

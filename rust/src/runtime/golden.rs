@@ -12,20 +12,31 @@ use crate::json::Json;
 use crate::util::SplitMix64;
 use anyhow::{bail, Context, Result};
 
+/// Block size of the golden fixtures.
 pub const GOLDEN_S: usize = 8;
+/// Committed-prefix length of the golden fixtures.
 pub const GOLDEN_PREFIX: usize = 16;
+/// Seed of the golden input stream (shared with `aot.py`).
 pub const GOLDEN_SEED: u64 = 0x5EED;
 
 /// Procedurally generated golden inputs (parity with `aot.py::golden_inputs`).
 pub struct GoldenInputs {
+    /// `[GOLDEN_S]` token ids.
     pub tokens: Vec<i32>,
+    /// `[GOLDEN_S, F]` feature rows (draft role only).
     pub feats: Option<Vec<f32>>,
+    /// `[GOLDEN_S]` RoPE positions.
     pub positions: Vec<i32>,
+    /// `[GOLDEN_S, cap + GOLDEN_S]` prefix-plus-causal mask.
     pub mask: Vec<f32>,
+    /// Random-filled key cache.
     pub k_cache: Vec<f32>,
+    /// Random-filled value cache.
     pub v_cache: Vec<f32>,
 }
 
+/// Regenerate the golden inputs for `role` (`teacher` | `draft`),
+/// bit-for-bit identical to the python generator.
 pub fn golden_inputs(contract: &Contract, role: &str) -> GoldenInputs {
     let mut st = SplitMix64::new(GOLDEN_SEED);
     let (s, t) = (GOLDEN_S, GOLDEN_PREFIX);
@@ -56,14 +67,21 @@ pub fn golden_inputs(contract: &Contract, role: &str) -> GoldenInputs {
 /// One golden record from artifacts/golden.json.
 #[derive(Debug)]
 pub struct GoldenRecord {
+    /// Artifact module name (e.g. `teacher_fused_s8`).
     pub module: String,
+    /// First logits values recorded by python.
     pub logits_sample: Vec<f64>,
+    /// Sum over all logits.
     pub logits_sum: f64,
+    /// Argmax of row 0 (greedy-equivalence check).
     pub logits_argmax_row0: usize,
+    /// Sum over the feature block.
     pub feats_sum: f64,
+    /// Sum over the new K rows.
     pub k_new_sum: f64,
 }
 
+/// Parse `golden.json` from an artifact directory.
 pub fn load_goldens(dir: &std::path::Path) -> Result<Vec<GoldenRecord>> {
     let text = std::fs::read_to_string(dir.join("golden.json")).context("reading golden.json")?;
     let v = crate::json::parse(&text).map_err(|e| anyhow::anyhow!("golden.json: {e}"))?;

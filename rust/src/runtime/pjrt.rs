@@ -12,19 +12,28 @@ use std::time::Instant;
 /// and the §Perf logs).
 #[derive(Clone, Debug, Default)]
 pub struct RuntimeStats {
+    /// Modules compiled (lazily, on first use).
     pub compiles: u64,
+    /// Total compile wall time, seconds.
     pub compile_secs: f64,
+    /// Module executions.
     pub executions: u64,
+    /// Total execution wall time, seconds.
     pub execute_secs: f64,
     /// Host->device bytes shipped as literals (per-call tensors).
     pub upload_bytes: u64,
 }
 
+/// The production [`ModelBackend`]: AOT HLO artifacts executed through
+/// the PJRT CPU client. Fused batched verification currently uses the
+/// trait's sequential fallback (true `[B, S]` modules are a compile-side
+/// follow-up).
 pub struct PjrtBackend {
     client: xla::PjRtClient,
     dir: PathBuf,
     contract: Contract,
     exes: HashMap<String, xla::PjRtLoadedExecutable>,
+    /// Compile/execute/upload counters (surfaced in manifests).
     pub stats: RuntimeStats,
     /// Probe-capable draft variants present in the artifact set.
     probe_variants: Vec<usize>,
@@ -62,6 +71,7 @@ impl PjrtBackend {
         })
     }
 
+    /// The artifact directory this backend was loaded from.
     pub fn artifact_dir(&self) -> &Path {
         &self.dir
     }

@@ -17,9 +17,13 @@
 
 use std::collections::VecDeque;
 
+/// Multiplicative-increase / multiplicative-decrease controller on the
+/// tree node budget M, driven by recent budget utilization.
 #[derive(Clone, Debug)]
 pub struct AdaptiveBudget {
+    /// Smallest budget the controller may choose.
     pub min_budget: usize,
+    /// Largest budget the controller may choose.
     pub max_budget: usize,
     /// Utilization above this doubles the budget.
     pub grow_at: f64,
@@ -32,6 +36,7 @@ pub struct AdaptiveBudget {
 }
 
 impl AdaptiveBudget {
+    /// A controller starting at `initial`, clamped to the given bounds.
     pub fn new(initial: usize, min_budget: usize, max_budget: usize) -> Self {
         Self {
             min_budget,

@@ -10,6 +10,7 @@
 pub struct Candidate {
     /// Parent tree slot.
     pub parent: usize,
+    /// Proposed token id.
     pub token: i32,
     /// Cumulative draft log-prob along the root path.
     pub cum_logprob: f64,

@@ -7,30 +7,48 @@ use crate::engine::GenOut;
 use crate::json::Json;
 use std::collections::BTreeMap;
 
+/// One decoded turn, as serialized into `trace_rank{r}.jsonl` (the full
+/// schema, field by field, is documented in `docs/TRACE_FORMAT.md`).
 #[derive(Clone, Debug, PartialEq)]
 pub struct TurnRecord {
+    /// Conversation this turn belongs to.
     pub conversation_id: usize,
+    /// Zero-based turn index within the conversation.
     pub turn_idx: usize,
+    /// Worker rank that decoded the turn.
     pub rank: usize,
+    /// Workload profile (`code` | `chat`).
     pub profile: String,
     /// "baseline" or "ea".
     pub kind: String,
+    /// Prompt length of this turn, tokens.
     pub prompt_len: usize,
+    /// Generated tokens this turn.
     pub output_len: usize,
+    /// Wall-clock of the generation call, seconds.
     pub wall_secs: f64,
+    /// Output tokens per second.
     pub tok_s: f64,
+    /// Teacher steps consumed.
     pub teacher_calls: u64,
+    /// Draft steps consumed.
     pub draft_calls: u64,
+    /// Verification rounds (EA) or decode steps (baseline).
     pub rounds: u64,
+    /// accept_L per verification round (EA only).
     pub accept_lens: Vec<usize>,
+    /// Fig-3 denominators: rounds offering a depth-(i+1) candidate.
     pub accept_offered: Vec<u64>,
+    /// Fig-3 numerators: rounds accepting through depth i+1.
     pub accept_accepted: Vec<u64>,
+    /// Per-stage seconds (instrumented runs; else empty).
     pub stage_seconds: BTreeMap<String, f64>,
     /// Fig-7 attention-distance bucket counts (probe runs; else empty).
     pub attn_buckets: Vec<u64>,
 }
 
 impl TurnRecord {
+    /// Build a record from one generation's [`GenOut`].
     pub fn from_gen(
         conversation_id: usize,
         turn_idx: usize,
@@ -60,6 +78,7 @@ impl TurnRecord {
         }
     }
 
+    /// Mean accept_L of this turn (0 for baseline records).
     pub fn mean_accept(&self) -> f64 {
         if self.accept_lens.is_empty() {
             0.0
@@ -68,6 +87,7 @@ impl TurnRecord {
         }
     }
 
+    /// Serialize to the JSONL object form (`docs/TRACE_FORMAT.md`).
     pub fn to_json(&self) -> Json {
         let mut o = Json::obj();
         o.push("conversation_id", self.conversation_id)
@@ -91,6 +111,8 @@ impl TurnRecord {
         o
     }
 
+    /// Parse a record back from its JSON object form (None when a
+    /// required field is missing or mistyped).
     pub fn from_json(j: &Json) -> Option<Self> {
         let u = |k: &str| j.get(k).and_then(Json::as_usize);
         let f = |k: &str| j.get(k).and_then(Json::as_f64);

@@ -13,14 +13,17 @@ use std::fs::{self, File};
 use std::io::{BufWriter, Write};
 use std::path::{Path, PathBuf};
 
+/// Buffered per-rank JSONL trace writer (`trace_rank{r}.jsonl`).
 pub struct TraceWriter {
     dir: PathBuf,
     rank: usize,
     file: BufWriter<File>,
+    /// Records written so far.
     pub records_written: u64,
 }
 
 impl TraceWriter {
+    /// Create (truncate) this rank's trace file under `dir`.
     pub fn create(dir: impl AsRef<Path>, rank: usize) -> Result<Self> {
         let dir = dir.as_ref().to_path_buf();
         fs::create_dir_all(&dir)?;
@@ -29,16 +32,19 @@ impl TraceWriter {
         Ok(Self { dir, rank, file, records_written: 0 })
     }
 
+    /// The rank this writer serves.
     pub fn rank(&self) -> usize {
         self.rank
     }
 
+    /// Append one turn record as a JSONL line.
     pub fn write(&mut self, rec: &TurnRecord) -> Result<()> {
         writeln!(self.file, "{}", rec.to_json().to_string())?;
         self.records_written += 1;
         Ok(())
     }
 
+    /// Flush buffered records to disk.
     pub fn flush(&mut self) -> Result<()> {
         self.file.flush()?;
         Ok(())
@@ -66,16 +72,24 @@ pub fn write_manifest(dir: impl AsRef<Path>, fields: Json) -> Result<PathBuf> {
 /// Minimal reproduction context emitted on abnormal termination.
 #[derive(Clone, Debug)]
 pub struct FailureDump {
+    /// Conversation that failed.
     pub conversation_id: usize,
+    /// Turn index at failure.
     pub turn_idx: usize,
+    /// Worker rank.
     pub rank: usize,
+    /// Rendered error chain.
     pub error: String,
+    /// The turn's prompt tokens (reproduction input).
     pub prompt: Vec<i32>,
+    /// Committed context length at failure.
     pub context_len: usize,
+    /// The run configuration in effect.
     pub config: Json,
 }
 
 impl FailureDump {
+    /// Serialize the dump for `failure_rank{r}_{conv}.json`.
     pub fn to_json(&self) -> Json {
         let mut o = Json::obj();
         o.push("conversation_id", self.conversation_id)

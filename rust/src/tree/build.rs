@@ -60,6 +60,7 @@ impl SpecTree {
         self.slots.len()
     }
 
+    /// Deepest node depth in the tree (root = 0).
     pub fn max_depth(&self) -> usize {
         self.slots.iter().map(|n| n.depth).max().unwrap_or(0)
     }

@@ -34,6 +34,26 @@
 //! `O(S * Δt + S * S)`. `build_dense`/`build_table` remain the reference
 //! oracle; property tests assert bit-identical equivalence over random
 //! build sequences (growing *and* shrinking prefixes, window toggling).
+//!
+//! # Batched mask block
+//!
+//! [`BatchMask`] assembles `B` per-request masks into one padded
+//! `[B, S_max, cap + S_max]` block for a fused verification launch
+//! (`docs/ARCHITECTURE.md` has the full contract). Key invariants:
+//!
+//! * request `b` owns rows `[b*S_max, (b+1)*S_max)`; each of its rows
+//!   addresses *that request's own* KV cache in columns `[0, cap)` and
+//!   its own speculative block in columns `[cap, cap + S_max)` — the
+//!   block has no cross-request column space, so isolation is structural;
+//! * a request padded from `S_req < S_max` keeps rows `[S_req, S_max)`
+//!   and columns `[cap + S_req, cap + S_max)` fully closed ("padding is
+//!   never attended"): [`BatchMask::begin`] closes everything, and
+//!   [`BatchMask::fill_request`] only copies the request's own
+//!   `[S_req, cap + S_req]` rows (a re-stride, since per-request row
+//!   width is `cap + S_req` but the fused row width is `cap + S_max`);
+//! * per-request masks keep coming from the *incremental* slots — the
+//!   fused block is a bounded per-round copy on top, not a rebuild of
+//!   the per-request masks.
 
 use super::tensorize::Tensorized;
 use crate::config::contract::NEG_INF;
@@ -45,9 +65,13 @@ use std::collections::HashMap;
 /// delta small.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum MaskStream {
+    /// Teacher chain masks (prefill chunks, baseline decode steps).
     TeacherChain,
+    /// Teacher tree-verification masks.
     TeacherTree,
+    /// Draft chain-refresh masks.
     DraftChain,
+    /// Draft tree-frontier masks (custom per-row opens).
     DraftFrontier,
 }
 
@@ -220,8 +244,67 @@ impl IncrementalMask {
     }
 }
 
+/// One padded `[B, S_max, cap + S_max]` fused mask block (see the module
+/// docs for the batching invariants). The buffer persists across rounds
+/// and only ever grows, so steady-state assembly is allocation-free.
+#[derive(Clone, Debug)]
+pub struct BatchMask {
+    cap: usize,
+    batch: usize,
+    s_max: usize,
+    buf: Vec<f32>,
+}
+
+impl BatchMask {
+    /// An empty block for caches of capacity `cap`.
+    pub fn new(cap: usize) -> Self {
+        Self { cap, batch: 0, s_max: 0, buf: Vec::new() }
+    }
+
+    /// Start a round: size the block for `batch` requests padded to
+    /// `s_max` slots and close every column ("padding is never attended"
+    /// holds for anything `fill_request` does not explicitly reopen).
+    pub fn begin(&mut self, batch: usize, s_max: usize) {
+        self.batch = batch;
+        self.s_max = s_max;
+        let n = batch * s_max * (self.cap + s_max);
+        // clear + resize writes NEG_INF into every live element while
+        // reusing the existing capacity (no allocation once warmed).
+        self.buf.clear();
+        self.buf.resize(n, NEG_INF);
+    }
+
+    /// Copy request `b`'s own `[s_req, cap + s_req]` mask into its row
+    /// block, re-striding from per-request row width `cap + s_req` to the
+    /// fused row width `cap + s_max`. Rows `[s_req, s_max)` and columns
+    /// `[cap + s_req, cap + s_max)` stay closed from [`BatchMask::begin`].
+    pub fn fill_request(&mut self, b: usize, req_mask: &[f32], s_req: usize) {
+        assert!(b < self.batch, "request {b} out of batch {}", self.batch);
+        assert!(s_req <= self.s_max, "s_req {s_req} exceeds s_max {}", self.s_max);
+        let w_req = self.cap + s_req;
+        assert_eq!(req_mask.len(), s_req * w_req, "request mask shape mismatch");
+        let w = self.cap + self.s_max;
+        for k in 0..s_req {
+            let dst = (b * self.s_max + k) * w;
+            let src = k * w_req;
+            self.buf[dst..dst + w_req].copy_from_slice(&req_mask[src..src + w_req]);
+        }
+    }
+
+    /// The assembled `[batch * s_max, cap + s_max]` block.
+    pub fn as_slice(&self) -> &[f32] {
+        &self.buf
+    }
+
+    /// Fused row width `cap + s_max` of the current round.
+    pub fn width(&self) -> usize {
+        self.cap + self.s_max
+    }
+}
+
 /// Reusable mask buffers + build strategies.
 pub struct MaskBuilder {
+    /// Committed-cache capacity (prefix column count of every mask).
     pub cache_cap: usize,
     /// Budget threshold above which the ancestor-table builder is used
     /// by [`MaskBuilder::build_auto`] (paper: "selects the mask
@@ -232,6 +315,7 @@ pub struct MaskBuilder {
 }
 
 impl MaskBuilder {
+    /// A builder for caches of capacity `cache_cap` (no slots yet).
     pub fn new(cache_cap: usize) -> Self {
         Self { cache_cap, table_threshold: 64, slots: HashMap::new() }
     }
@@ -377,6 +461,13 @@ impl MaskBuilder {
     pub fn incremental(&mut self, stream: MaskStream, s: usize) -> &mut IncrementalMask {
         let cap = self.cache_cap;
         self.slots.entry((stream, s)).or_insert_with(|| IncrementalMask::new(cap, s))
+    }
+
+    /// Read-only view of an existing incremental slot (None if the
+    /// `(stream, s)` slot was never built). Used by the batch scheduler
+    /// to gather a request's current mask without mutating it.
+    pub fn peek(&self, stream: MaskStream, s: usize) -> Option<&IncrementalMask> {
+        self.slots.get(&(stream, s))
     }
 
     /// Incremental chain mask — bit-identical to [`MaskBuilder::build_chain`],
@@ -629,6 +720,76 @@ mod tests {
             let inc = mb.tree_incremental(MaskStream::TeacherTree, &tens, t_cur, win);
             assert_eq!(inc, &full[..], "s={s} t={t_cur} win={win:?}");
         });
+    }
+
+    #[test]
+    fn peek_returns_existing_slot_only() {
+        let mut mb = MaskBuilder::new(CAP);
+        assert!(mb.peek(MaskStream::TeacherTree, 8).is_none());
+        mb.incremental(MaskStream::TeacherTree, 8);
+        assert_eq!(mb.peek(MaskStream::TeacherTree, 8).unwrap().s(), 8);
+        assert!(mb.peek(MaskStream::TeacherChain, 8).is_none());
+    }
+
+    #[test]
+    fn batch_mask_restrides_requests_and_closes_padding() {
+        let mut mb = MaskBuilder::new(CAP);
+        let tens = sample(); // s_req = 8
+        let mut req8 = Vec::new();
+        mb.build_dense(&mut req8, &tens, 10, None);
+        let mut req_chain = Vec::new();
+        mb.build_chain(&mut req_chain, 8, 2, 3, None);
+
+        let mut bm = BatchMask::new(CAP);
+        bm.begin(2, 16); // pad both to S_max = 16
+        bm.fill_request(0, &req8, 8);
+        bm.fill_request(1, &req_chain, 8);
+        let w = bm.width();
+        assert_eq!(w, CAP + 16);
+        let m = bm.as_slice();
+        assert_eq!(m.len(), 2 * 16 * w);
+
+        // request 0 rows/cols map exactly onto the per-request mask
+        let w_req = CAP + 8;
+        for k in 0..8 {
+            for c in 0..w_req {
+                assert_eq!(m[k * w + c], req8[k * w_req + c], "req0 row {k} col {c}");
+            }
+            // padded spec columns [cap+8, cap+16) stay closed
+            for c in CAP + 8..w {
+                assert_eq!(m[k * w + c], NEG_INF, "req0 padded col {c}");
+            }
+        }
+        // padding rows [8, 16) of request 0 fully closed
+        for k in 8..16 {
+            assert!(m[k * w..(k + 1) * w].iter().all(|x| *x == NEG_INF), "req0 pad row {k}");
+        }
+        // request 1 block starts at row 16
+        for k in 0..8 {
+            for c in 0..w_req {
+                assert_eq!(m[(16 + k) * w + c], req_chain[k * w_req + c], "req1 row {k} col {c}");
+            }
+        }
+        for k in 8..16 {
+            assert!(
+                m[(16 + k) * w..(16 + k + 1) * w].iter().all(|x| *x == NEG_INF),
+                "req1 pad row {k}"
+            );
+        }
+    }
+
+    #[test]
+    fn batch_mask_begin_resets_previous_round() {
+        let mut mb = MaskBuilder::new(CAP);
+        let mut req = Vec::new();
+        mb.build_chain(&mut req, 8, 8, CAP, None); // everything open
+        let mut bm = BatchMask::new(CAP);
+        bm.begin(1, 8);
+        bm.fill_request(0, &req, 8);
+        assert!(bm.as_slice().iter().any(|x| *x == 0.0));
+        // next round, smaller batch: every element closed again
+        bm.begin(1, 8);
+        assert!(bm.as_slice().iter().all(|x| *x == NEG_INF));
     }
 
     #[test]

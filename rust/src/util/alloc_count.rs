@@ -15,6 +15,7 @@
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
 
+/// Counting wrapper around the system allocator (see the module docs).
 pub struct CountingAlloc {
     threshold: usize,
     allocs: AtomicU64,
@@ -22,6 +23,7 @@ pub struct CountingAlloc {
 }
 
 impl CountingAlloc {
+    /// A counter recording allocations of at least `threshold` bytes.
     pub const fn new(threshold: usize) -> Self {
         Self { threshold, allocs: AtomicU64::new(0), bytes: AtomicU64::new(0) }
     }

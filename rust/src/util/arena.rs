@@ -13,35 +13,68 @@
 //!
 //! These live in `util` (a leaf module) so both the backend layer and the
 //! engine can depend on them without a layering cycle.
+//!
+//! # Batched layout
+//!
+//! A scratch can hold the outputs of a **fused multi-request step**
+//! ([`StepScratch::prepare_batch`] with `batch > 1`): the row axis of
+//! every buffer becomes `batch * s` rows, request `b` owning the
+//! contiguous row block `[b*s, (b+1)*s)` (its *row offset* is `b * s`,
+//! see [`StepScratch::row_offset`]). Layouts:
+//!
+//! ```text
+//! logits  [B*S, V]          feats [B*S, F]
+//! k_new   [L, B*S, H*Dh]    v_new [L, B*S, H*Dh]
+//! ```
+//!
+//! [`StepScratch::scatter_from`] copies one request's rows out of a fused
+//! scratch into a single-request scratch (the per-engine view), and
+//! [`StepScratch::copy_request_from`] is the inverse (used by the default
+//! sequential fallback of
+//! [`crate::backend::ModelBackend::teacher_step_batch`]). Both are bounded
+//! `copy_from_slice` loops over pre-sized buffers — no allocation.
 
-/// Caller-provided reusable output block for one teacher/draft step.
+/// Caller-provided reusable output block for one teacher/draft step
+/// (single-request) or one fused batched step.
 ///
-/// Layouts mirror the AOT module outputs: `logits [S, V]`,
-/// `feats [S, F]`, `k_new`/`v_new [L, S, H, Dh]`, `attn_top1 [S, H]`
-/// (probe builds only). See `backend/mod.rs` for the ownership and
-/// aliasing contract.
+/// Layouts mirror the AOT module outputs: `logits [B*S, V]`,
+/// `feats [B*S, F]`, `k_new`/`v_new [L, B*S, H, Dh]`, `attn_top1 [B*S, H]`
+/// (probe builds only); `B = 1` for ordinary single-request steps. See
+/// `backend/mod.rs` for the ownership and aliasing contract.
 #[derive(Clone, Debug, Default)]
 pub struct StepScratch {
+    batch: usize,
     s: usize,
     vocab: usize,
     feat_dim: usize,
+    layers: usize,
+    heads: usize,
+    d_head: usize,
     has_probe: bool,
+    /// Teacher/draft logits, row-major `[batch * s, vocab]`.
     pub logits: Vec<f32>,
+    /// Hidden feature rows, row-major `[batch * s, feat_dim]`.
     pub feats: Vec<f32>,
+    /// New K rows, `[layers, batch * s, heads * d_head]`.
     pub k_new: Vec<f32>,
+    /// New V rows, `[layers, batch * s, heads * d_head]`.
     pub v_new: Vec<f32>,
+    /// Probe output (`[batch * s, heads]` top-1 attention columns);
+    /// empty unless the step requested probing.
     pub attn_top1: Vec<i32>,
 }
 
 impl StepScratch {
+    /// An empty scratch; the first [`StepScratch::prepare`] sizes it.
     pub fn new() -> Self {
         Self::default()
     }
 
-    /// Resize for an `s`-slot step. Buffers only ever grow in capacity;
-    /// after the first call at the largest variant this is allocation-free.
-    /// Contents are unspecified afterwards — the backend must write every
-    /// live element it reports (padded-slot values are backend-defined).
+    /// Resize for a single-request `s`-slot step. Buffers only ever grow
+    /// in capacity; after the first call at the largest variant this is
+    /// allocation-free. Contents are unspecified afterwards — the backend
+    /// must write every live element it reports (padded-slot values are
+    /// backend-defined).
     #[allow(clippy::too_many_arguments)]
     pub fn prepare(
         &mut self,
@@ -53,47 +86,161 @@ impl StepScratch {
         d_head: usize,
         probe: bool,
     ) {
+        self.prepare_batch(1, s, vocab, feat_dim, layers, heads, d_head, probe);
+    }
+
+    /// Resize for a fused `batch`-request step of `s` padded slots per
+    /// request. Same growth/overwrite rules as [`StepScratch::prepare`];
+    /// request `b` owns rows `[b*s, (b+1)*s)` of every buffer.
+    #[allow(clippy::too_many_arguments)]
+    pub fn prepare_batch(
+        &mut self,
+        batch: usize,
+        s: usize,
+        vocab: usize,
+        feat_dim: usize,
+        layers: usize,
+        heads: usize,
+        d_head: usize,
+        probe: bool,
+    ) {
+        assert!(batch >= 1, "batch must be >= 1");
+        self.batch = batch;
         self.s = s;
         self.vocab = vocab;
         self.feat_dim = feat_dim;
+        self.layers = layers;
+        self.heads = heads;
+        self.d_head = d_head;
         self.has_probe = probe;
+        let rows = batch * s;
         let kv_row = heads * d_head;
-        self.logits.resize(s * vocab, 0.0);
-        self.feats.resize(s * feat_dim, 0.0);
-        self.k_new.resize(layers * s * kv_row, 0.0);
-        self.v_new.resize(layers * s * kv_row, 0.0);
-        self.attn_top1.resize(if probe { s * heads } else { 0 }, 0);
+        self.logits.resize(rows * vocab, 0.0);
+        self.feats.resize(rows * feat_dim, 0.0);
+        self.k_new.resize(layers * rows * kv_row, 0.0);
+        self.v_new.resize(layers * rows * kv_row, 0.0);
+        self.attn_top1.resize(if probe { rows * heads } else { 0 }, 0);
     }
 
-    /// Padded slot count of the last step written into this scratch.
+    /// Padded slot count *per request* of the last step written into this
+    /// scratch.
     pub fn s(&self) -> usize {
         self.s
     }
 
-    /// Logits row of slot `i`.
+    /// Number of fused requests of the last step (1 for ordinary steps).
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    /// First row owned by request `b` (the per-request row offset of the
+    /// batching contract: request `b` owns rows `[b*s, (b+1)*s)`).
+    pub fn row_offset(&self, b: usize) -> usize {
+        debug_assert!(b < self.batch.max(1));
+        b * self.s
+    }
+
+    /// Logits row of (global) slot `i`; for batched scratches slot `i` of
+    /// request `b` lives at `row_offset(b) + i`.
     pub fn logits_row(&self, i: usize) -> &[f32] {
         &self.logits[i * self.vocab..(i + 1) * self.vocab]
     }
 
+    /// Mutable form of [`StepScratch::logits_row`].
     pub fn logits_row_mut(&mut self, i: usize) -> &mut [f32] {
         &mut self.logits[i * self.vocab..(i + 1) * self.vocab]
     }
 
-    /// Feature row of slot `i`.
+    /// Feature row of (global) slot `i`.
     pub fn feat_row(&self, i: usize) -> &[f32] {
         &self.feats[i * self.feat_dim..(i + 1) * self.feat_dim]
     }
 
+    /// Mutable form of [`StepScratch::feat_row`].
     pub fn feat_row_mut(&mut self, i: usize) -> &mut [f32] {
         &mut self.feats[i * self.feat_dim..(i + 1) * self.feat_dim]
     }
 
-    /// Probe output (`[S, H]` top-1 attention columns), when requested.
+    /// Probe output (`[B*S, H]` top-1 attention columns), when requested.
     pub fn attn_top1(&self) -> Option<&[i32]> {
         if self.has_probe {
             Some(&self.attn_top1)
         } else {
             None
+        }
+    }
+
+    /// Copy request `b`'s first `s_req` rows out of a fused batched
+    /// scratch into `self`, re-preparing `self` exactly as if the backend
+    /// had run that request alone at padded size `s_req`.
+    ///
+    /// `s_req <= fused.s()` (the request was padded up to the group's
+    /// `S_max`); rows `[s_req, fused.s())` of the fused block are padding
+    /// and are *not* copied — by the batching contract they were never
+    /// attended and carry backend-defined garbage.
+    pub fn scatter_from(&mut self, fused: &StepScratch, b: usize, s_req: usize) {
+        assert!(b < fused.batch, "request {b} out of fused batch {}", fused.batch);
+        assert!(s_req <= fused.s, "s_req {s_req} exceeds fused s {}", fused.s);
+        self.prepare(
+            s_req,
+            fused.vocab,
+            fused.feat_dim,
+            fused.layers,
+            fused.heads,
+            fused.d_head,
+            fused.has_probe,
+        );
+        let src0 = fused.row_offset(b);
+        self.logits
+            .copy_from_slice(&fused.logits[src0 * fused.vocab..(src0 + s_req) * fused.vocab]);
+        self.feats
+            .copy_from_slice(&fused.feats[src0 * fused.feat_dim..(src0 + s_req) * fused.feat_dim]);
+        let row = fused.heads * fused.d_head;
+        let fused_rows = fused.batch * fused.s;
+        for l in 0..fused.layers {
+            let src = (l * fused_rows + src0) * row;
+            let dst = l * s_req * row;
+            self.k_new[dst..dst + s_req * row]
+                .copy_from_slice(&fused.k_new[src..src + s_req * row]);
+            self.v_new[dst..dst + s_req * row]
+                .copy_from_slice(&fused.v_new[src..src + s_req * row]);
+        }
+        if fused.has_probe {
+            let h = fused.heads;
+            self.attn_top1
+                .copy_from_slice(&fused.attn_top1[src0 * h..(src0 + s_req) * h]);
+        }
+    }
+
+    /// Inverse of [`StepScratch::scatter_from`]: copy a single-request
+    /// scratch (`src.batch() == 1`, `src.s() == self.s()`) into request
+    /// `b`'s row block of this fused scratch. Used by the sequential
+    /// fallback of [`crate::backend::ModelBackend::teacher_step_batch`].
+    pub fn copy_request_from(&mut self, b: usize, src: &StepScratch) {
+        assert_eq!(src.batch, 1, "source must be a single-request scratch");
+        assert_eq!(src.s, self.s, "source rows {} != fused rows-per-request {}", src.s, self.s);
+        assert_eq!((src.vocab, src.feat_dim), (self.vocab, self.feat_dim), "dims mismatch");
+        assert_eq!(
+            (src.layers, src.heads, src.d_head),
+            (self.layers, self.heads, self.d_head),
+            "KV dims mismatch"
+        );
+        assert!(b < self.batch, "request {b} out of fused batch {}", self.batch);
+        let dst0 = self.row_offset(b);
+        let s = self.s;
+        self.logits[dst0 * self.vocab..(dst0 + s) * self.vocab].copy_from_slice(&src.logits);
+        self.feats[dst0 * self.feat_dim..(dst0 + s) * self.feat_dim].copy_from_slice(&src.feats);
+        let row = self.heads * self.d_head;
+        let rows = self.batch * self.s;
+        for l in 0..self.layers {
+            let dst = (l * rows + dst0) * row;
+            let srco = l * s * row;
+            self.k_new[dst..dst + s * row].copy_from_slice(&src.k_new[srco..srco + s * row]);
+            self.v_new[dst..dst + s * row].copy_from_slice(&src.v_new[srco..srco + s * row]);
+        }
+        if self.has_probe && src.has_probe {
+            let h = self.heads;
+            self.attn_top1[dst0 * h..(dst0 + s) * h].copy_from_slice(&src.attn_top1);
         }
     }
 }
@@ -124,14 +271,17 @@ impl FeatRing {
         }
     }
 
+    /// Number of queued entries.
     pub fn len(&self) -> usize {
         self.len
     }
 
+    /// Whether the queue is empty.
     pub fn is_empty(&self) -> bool {
         self.len == 0
     }
 
+    /// Drop every entry (capacity kept).
     pub fn clear(&mut self) {
         self.head = 0;
         self.len = 0;
@@ -175,6 +325,7 @@ mod tests {
         assert_eq!(s.feat_row(0), &[9.0, 8.0]);
         assert!(s.attn_top1().is_none());
         assert_eq!(s.s(), 2);
+        assert_eq!(s.batch(), 1);
         // shrink then regrow: no new capacity needed
         let cap_before = s.logits.capacity();
         s.prepare(1, 3, 2, 1, 1, 4, true);
@@ -182,6 +333,75 @@ mod tests {
         assert!(s.attn_top1().is_some());
         s.prepare(2, 3, 2, 1, 1, 4, false);
         assert_eq!(s.logits.capacity(), cap_before);
+    }
+
+    #[test]
+    fn batched_scratch_row_offsets() {
+        let mut s = StepScratch::new();
+        s.prepare_batch(3, 2, 2, 1, 1, 1, false);
+        assert_eq!(s.batch(), 3);
+        assert_eq!(s.s(), 2);
+        assert_eq!(s.row_offset(2), 4);
+        assert_eq!(s.logits.len(), 3 * 2 * 2);
+        // write request 1's first row through the global accessor
+        s.logits_row_mut(s.row_offset(1)).copy_from_slice(&[7.0, 8.0]);
+        assert_eq!(s.logits_row(2), &[7.0, 8.0]);
+    }
+
+    #[test]
+    fn scatter_and_copy_request_roundtrip() {
+        // fused scratch: B=2, S=2, V=2, F=1, L=2, H=1, Dh=1
+        let mut fused = StepScratch::new();
+        fused.prepare_batch(2, 2, 2, 1, 2, 1, 1, false);
+        for (i, x) in fused.logits.iter_mut().enumerate() {
+            *x = i as f32;
+        }
+        for (i, x) in fused.feats.iter_mut().enumerate() {
+            *x = 100.0 + i as f32;
+        }
+        for (i, x) in fused.k_new.iter_mut().enumerate() {
+            *x = 200.0 + i as f32;
+        }
+        for (i, x) in fused.v_new.iter_mut().enumerate() {
+            *x = 300.0 + i as f32;
+        }
+        // request 1, full s_req = 2
+        let mut one = StepScratch::new();
+        one.scatter_from(&fused, 1, 2);
+        assert_eq!(one.batch(), 1);
+        assert_eq!(one.s(), 2);
+        // logits rows 2..4 of the fused block
+        assert_eq!(one.logits, &[4.0, 5.0, 6.0, 7.0]);
+        assert_eq!(one.feats, &[102.0, 103.0]);
+        // k_new: fused layout [L=2, B*S=4, row=1]; request 1 rows are
+        // global rows {2, 3} per layer -> elements {2, 3, 6, 7}
+        assert_eq!(one.k_new, &[202.0, 203.0, 206.0, 207.0]);
+        assert_eq!(one.v_new, &[302.0, 303.0, 306.0, 307.0]);
+
+        // round-trip back into a fresh fused block at the same offset
+        let mut fused2 = StepScratch::new();
+        fused2.prepare_batch(2, 2, 2, 1, 2, 1, 1, false);
+        fused2.logits.fill(-1.0);
+        fused2.k_new.fill(-1.0);
+        fused2.copy_request_from(1, &one);
+        assert_eq!(&fused2.logits[4..8], &[4.0, 5.0, 6.0, 7.0]);
+        assert_eq!(fused2.logits[0], -1.0, "request 0 untouched");
+        assert_eq!(fused2.k_new[2], 202.0);
+        assert_eq!(fused2.k_new[6], 206.0);
+        assert_eq!(fused2.k_new[0], -1.0);
+    }
+
+    #[test]
+    fn scatter_truncates_to_requested_rows() {
+        let mut fused = StepScratch::new();
+        fused.prepare_batch(2, 4, 2, 1, 1, 1, 1, false);
+        for (i, x) in fused.logits.iter_mut().enumerate() {
+            *x = i as f32;
+        }
+        let mut one = StepScratch::new();
+        one.scatter_from(&fused, 0, 2); // only 2 of 4 padded rows
+        assert_eq!(one.s(), 2);
+        assert_eq!(one.logits, &[0.0, 1.0, 2.0, 3.0]);
     }
 
     #[test]

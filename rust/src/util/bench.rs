@@ -7,19 +7,26 @@ use std::time::Instant;
 /// One benchmark case result.
 #[derive(Clone, Debug)]
 pub struct BenchResult {
+    /// Benchmark case name.
     pub name: String,
+    /// Total timed iterations.
     pub iters: u64,
+    /// Mean ns/iteration across sample batches.
     pub mean_ns: f64,
+    /// Median ns/iteration across sample batches.
     pub median_ns: f64,
+    /// Fastest sample batch, ns/iteration.
     pub min_ns: f64,
 }
 
 impl BenchResult {
+    /// Human-readable median time per iteration.
     pub fn per_iter(&self) -> String {
         fmt_ns(self.median_ns)
     }
 }
 
+/// Format a nanosecond count with an adaptive unit (ns/µs/ms/s).
 pub fn fmt_ns(ns: f64) -> String {
     if ns < 1e3 {
         format!("{ns:.0} ns")

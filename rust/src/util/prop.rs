@@ -8,19 +8,24 @@ use super::rng::{splitmix64, SplitMix64};
 
 /// Case generator handed to property bodies.
 pub struct Gen {
+    /// The case's deterministic stream (use directly for raw draws).
     pub rng: SplitMix64,
+    /// The case's replay seed (printed on failure).
     pub seed: u64,
 }
 
 impl Gen {
+    /// Uniform usize in `[lo, hi)`.
     pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
         self.rng.range(lo as u64, hi as u64) as usize
     }
 
+    /// Bernoulli draw with probability `p`.
     pub fn bool_p(&mut self, p: f64) -> bool {
         self.rng.f64_unit() < p
     }
 
+    /// Uniform f32 in `[-1, 1)`.
     pub fn f32_pm1(&mut self) -> f32 {
         self.rng.f32_pm1()
     }

@@ -4,12 +4,19 @@
 /// A mean/percentile summary over a sample set.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Summary {
+    /// Finite samples aggregated.
     pub n: usize,
+    /// Arithmetic mean.
     pub mean: f64,
+    /// Median (interpolated).
     pub p50: f64,
+    /// 90th percentile (interpolated).
     pub p90: f64,
+    /// 99th percentile (interpolated).
     pub p99: f64,
+    /// Smallest sample.
     pub min: f64,
+    /// Largest sample.
     pub max: f64,
 }
 
@@ -58,8 +65,11 @@ pub fn percentile_sorted(sorted: &[f64], q: f64) -> f64 {
 /// and the Fig-7 attention-location buckets).
 #[derive(Clone, Debug)]
 pub struct Histogram {
+    /// Upper bound of each bucket (ascending).
     pub edges: Vec<f64>,
+    /// Per-bucket counts; the final bucket is the overflow.
     pub counts: Vec<u64>,
+    /// Total samples added.
     pub total: u64,
 }
 
@@ -71,12 +81,14 @@ impl Histogram {
         Self { edges, counts: vec![0; n], total: 0 }
     }
 
+    /// Add one sample to its bucket.
     pub fn add(&mut self, x: f64) {
         let idx = self.edges.iter().position(|e| x <= *e).unwrap_or(self.edges.len());
         self.counts[idx] += 1;
         self.total += 1;
     }
 
+    /// Fraction of samples in bucket `idx` (0 when empty).
     pub fn fraction(&self, idx: usize) -> f64 {
         if self.total == 0 {
             0.0
@@ -91,11 +103,15 @@ impl Histogram {
 /// depth-(i+1) candidate on the accepted path's continuation.
 #[derive(Clone, Debug, Default)]
 pub struct AcceptPos {
+    /// Rounds whose tree offered a candidate at depth i+1.
     pub offered: Vec<u64>,
+    /// Rounds that accepted through depth i+1.
     pub accepted: Vec<u64>,
 }
 
 impl AcceptPos {
+    /// Record one round: accepted `accepted_len` of `offered_depth`
+    /// offered positions.
     pub fn record(&mut self, accepted_len: usize, offered_depth: usize) {
         if self.offered.len() < offered_depth {
             self.offered.resize(offered_depth, 0);
@@ -109,6 +125,7 @@ impl AcceptPos {
         }
     }
 
+    /// Merge another counter set into this one (index-wise sums).
     pub fn merge(&mut self, other: &AcceptPos) {
         if self.offered.len() < other.offered.len() {
             self.offered.resize(other.offered.len(), 0);
@@ -120,6 +137,7 @@ impl AcceptPos {
         }
     }
 
+    /// Per-position acceptance rates `accepted[i] / offered[i]`.
     pub fn rates(&self) -> Vec<f64> {
         self.offered
             .iter()

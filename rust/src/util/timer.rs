@@ -19,12 +19,15 @@ pub const STAGES: &[&str] = &[
 /// Accumulates per-stage durations (seconds) and call counts.
 #[derive(Clone, Debug, Default)]
 pub struct StageTimer {
+    /// Accumulated seconds per stage name.
     pub seconds: BTreeMap<String, f64>,
+    /// Accumulation count per stage name.
     pub calls: BTreeMap<String, u64>,
     enabled: bool,
 }
 
 impl StageTimer {
+    /// A timer; disabled timers record nothing and cost nothing.
     pub fn new(enabled: bool) -> Self {
         Self { enabled, ..Default::default() }
     }
@@ -40,6 +43,7 @@ impl StageTimer {
         out
     }
 
+    /// Add `secs` to a stage (no-op when disabled).
     pub fn add(&mut self, stage: &str, secs: f64) {
         if !self.enabled {
             return;
@@ -48,10 +52,12 @@ impl StageTimer {
         *self.calls.entry(stage.to_string()).or_insert(0) += 1;
     }
 
+    /// Whether this timer records anything.
     pub fn enabled(&self) -> bool {
         self.enabled
     }
 
+    /// Merge another timer's totals and call counts into this one.
     pub fn merge(&mut self, other: &StageTimer) {
         for (k, v) in &other.seconds {
             *self.seconds.entry(k.clone()).or_insert(0.0) += v;
@@ -61,6 +67,7 @@ impl StageTimer {
         }
     }
 
+    /// Sum of all stage totals, seconds.
     pub fn total(&self) -> f64 {
         self.seconds.values().sum()
     }

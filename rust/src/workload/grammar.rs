@@ -7,6 +7,7 @@
 use crate::config::contract::{BOS_ID, FIRST_TOKEN, VOCAB};
 use crate::util::rng::splitmix64;
 
+/// Number of grammar topics (conversation flavors).
 pub const NUM_TOPICS: u64 = 8;
 
 /// Benchmark-family profile (paper §5.1): `Code` = HumanEval-style
@@ -18,6 +19,7 @@ pub enum Profile {
 }
 
 impl Profile {
+    /// Profile-specific seed offset (keeps the two grammars disjoint).
     pub fn seed(&self) -> u64 {
         match self {
             Profile::Code => 0x9E37_79B9_7F4A_7C15,
@@ -32,6 +34,7 @@ impl Profile {
         }
     }
 
+    /// Stable string form (trace records, flags).
     pub fn as_str(&self) -> &'static str {
         match self {
             Profile::Code => "code",
@@ -39,6 +42,7 @@ impl Profile {
         }
     }
 
+    /// Parse the string form (`code` | `chat`).
     pub fn parse(s: &str) -> Option<Self> {
         match s {
             "code" => Some(Profile::Code),
@@ -50,24 +54,30 @@ impl Profile {
 
 const PROB_W256: [&[u64]; 4] = [&[256], &[204, 52], &[179, 51, 26], &[153, 51, 31, 21]];
 
+/// The seeded stochastic grammar (order-2 Markov with topic rotation).
 #[derive(Clone, Copy, Debug)]
 pub struct Grammar {
+    /// Which benchmark family this grammar mimics.
     pub profile: Profile,
 }
 
 impl Grammar {
+    /// A grammar for `profile`.
     pub fn new(profile: Profile) -> Self {
         Self { profile }
     }
 
+    /// The HumanEval-style (code) grammar.
     pub fn code() -> Self {
         Self::new(Profile::Code)
     }
 
+    /// The MT-Bench-style (chat) grammar.
     pub fn chat() -> Self {
         Self::new(Profile::Chat)
     }
 
+    /// Topic id of a topic token.
     pub fn topic_of(topic_token: i32) -> u64 {
         topic_token as u64 % NUM_TOPICS
     }
@@ -117,10 +127,12 @@ impl Grammar {
         (rotated, PROB_W256[n - 1])
     }
 
+    /// The grammar's most-likely continuation of context `(a, b)`.
     pub fn greedy_next(&self, a: i32, b: i32, topic_id: u64) -> i32 {
         self.dist(a, b, topic_id).0[0]
     }
 
+    /// Sample one continuation; returns `(token, next_state)`.
     pub fn sample_next(&self, a: i32, b: i32, topic_id: u64, state: u64) -> (i32, u64) {
         let (toks, w256) = self.dist(a, b, topic_id);
         let state = splitmix64(state);
@@ -135,6 +147,7 @@ impl Grammar {
         (*toks.last().unwrap(), state)
     }
 
+    /// Sample a topic token; returns `(token, next_state)`.
     pub fn sample_topic_token(state: u64) -> (i32, u64) {
         let state = splitmix64(state);
         (FIRST_TOKEN + (state % (VOCAB - FIRST_TOKEN as usize) as u64) as i32, state)

@@ -24,6 +24,7 @@ pub struct WorkloadSpec {
     pub prompt_mean: usize,
     /// Mean follow-up prompt length.
     pub followup_mean: usize,
+    /// Workload sampling seed (prompt lengths + contents).
     pub seed: u64,
 }
 
@@ -49,6 +50,7 @@ impl WorkloadSpec {
                followup_mean: 16, seed: 0 }
     }
 
+    /// Total turns across every conversation (code = 1, chat = 2).
     pub fn total_turns(&self) -> usize {
         self.code_conversations + 2 * self.chat_conversations
     }
@@ -86,18 +88,23 @@ impl WorkloadSpec {
 /// One conversation: 1 turn (code) or 2 turns (chat).
 #[derive(Clone, Debug)]
 pub struct ConversationSpec {
+    /// Globally unique conversation id (the sharding key).
     pub id: usize,
+    /// Benchmark-family profile of every turn.
     pub profile: Profile,
     /// Prompt length per turn.
     pub prompt_lens: Vec<usize>,
+    /// Per-conversation sampling seed.
     pub seed: u64,
 }
 
 impl ConversationSpec {
+    /// Number of turns (1 for code, 2 for chat).
     pub fn turns(&self) -> usize {
         self.prompt_lens.len()
     }
 
+    /// The grammar this conversation's prompts come from.
     pub fn grammar(&self) -> Grammar {
         Grammar::new(self.profile)
     }

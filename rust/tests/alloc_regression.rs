@@ -1,20 +1,24 @@
 //! Allocation-regression tests for the zero-allocation steady-state
-//! decode path, plus the engine-reuse equivalence guarantee.
+//! decode path (single-request and batched), plus the engine-reuse
+//! equivalence guarantee.
 //!
 //! A counting global allocator (test-binary-local — integration tests are
 //! separate crates, so this does not affect other test binaries) records
 //! every allocation at or above `BIG` bytes. A vocab-sized logits row is
 //! `512 * 4 = 2048` bytes and a cap-sized index/float vector is at least
 //! that, so `BIG = 2048` catches exactly the classes of allocation the
-//! tentpole eliminates (backend output blocks, mask rebuilds, logits/
-//! feature clones, identity-prefix commit vectors) while ignoring small
-//! bounded bookkeeping (tree nodes, accept paths, per-turn stats).
+//! hot path must not perform (backend output blocks, mask rebuilds,
+//! fused gather/scatter staging, logits/feature clones, identity-prefix
+//! commit vectors) while ignoring small bounded bookkeeping (tree nodes,
+//! accept paths, per-round scheduling lists, per-turn stats).
 
 use eagle_pangu::backend::sim::SimBackend;
+use eagle_pangu::backend::ModelBackend;
 use eagle_pangu::config::RunConfig;
+use eagle_pangu::coordinator::{decode_speculative_batch, BatchScheduler};
 use eagle_pangu::engine::Engine;
-use eagle_pangu::util::SplitMix64;
 use eagle_pangu::util::alloc_count::CountingAlloc;
+use eagle_pangu::util::SplitMix64;
 
 /// Vocab row = 512 * 4 B = 2048 B; cap-sized = 1024 elements >= 4096 B.
 const BIG: usize = 2048;
@@ -34,20 +38,20 @@ fn prompt(n: usize, seed: u64) -> Vec<i32> {
 #[test]
 fn steady_state_speculative_rounds_are_allocation_free() {
     let mut b = SimBackend::new(85);
-    let mut e = Engine::new(&mut b, RunConfig::default());
-    e.warmup().unwrap();
+    let mut e = Engine::new(&b, RunConfig::default());
+    e.warmup(&mut b).unwrap();
     // Warmup turn: brings every reusable buffer (scratches, mask slots,
     // staging buffers, candidate pool, pending/feat rows) to its
     // high-water mark.
     let p = prompt(17, 3);
-    let first = e.generate_speculative(&p, 32).unwrap();
+    let first = e.generate_speculative(&mut b, &p, 32).unwrap();
     assert!(first.rounds > 0);
 
     // Steady state: continue the same conversation. Every speculative
     // round must run without a single vocab- or cap-sized allocation.
     let snapshot = ALLOC.allocs();
     let cont = prompt(2, 4);
-    let second = e.generate_speculative(&cont, 32).unwrap();
+    let second = e.generate_speculative(&mut b, &cont, 32).unwrap();
     assert!(second.rounds >= 4, "expected a sustained run, got {} rounds", second.rounds);
     let grew = ALLOC.allocs() - snapshot;
     assert_eq!(
@@ -63,16 +67,52 @@ fn steady_state_speculative_rounds_are_allocation_free() {
 #[test]
 fn steady_state_baseline_rounds_are_allocation_free() {
     let mut b = SimBackend::new(85);
-    let mut e = Engine::new(&mut b, RunConfig::default());
-    e.warmup().unwrap();
+    let mut e = Engine::new(&b, RunConfig::default());
+    e.warmup(&mut b).unwrap();
     let p = prompt(12, 5);
-    e.generate_baseline(&p, 24).unwrap();
+    e.generate_baseline(&mut b, &p, 24).unwrap();
     let snapshot = ALLOC.allocs();
     let cont = prompt(2, 6);
-    let out = e.generate_baseline(&cont, 24).unwrap();
+    let out = e.generate_baseline(&mut b, &cont, 24).unwrap();
     assert_eq!(out.tokens.len(), 24);
     let grew = ALLOC.allocs() - snapshot;
     assert_eq!(grew, 0, "baseline decode hot path allocated ({grew} big allocations)");
+}
+
+#[test]
+fn steady_state_batched_rounds_are_allocation_free() {
+    // The batching-contract extension: once the scheduler's fused
+    // staging (tokens/positions, the [B, S_max, cap+S_max] mask block,
+    // the fused output scratch) and every engine's buffers are warmed,
+    // batched rounds must be as allocation-free as single-request ones.
+    const B: usize = 4;
+    let mut b = SimBackend::new(85);
+    let mut engines: Vec<Engine> =
+        (0..B).map(|_| Engine::new(&b, RunConfig::default())).collect();
+    for e in engines.iter_mut() {
+        e.warmup(&mut b).unwrap();
+    }
+    let mut sched = BatchScheduler::new(B, b.contract().cache_cap);
+    // Warmup drive: sizes the fused block to its high-water mark.
+    let warm_prompts: Vec<Vec<i32>> = (0..B).map(|i| prompt(15, 10 + i as u64)).collect();
+    let outs =
+        decode_speculative_batch(&mut b, &mut engines, &warm_prompts, 24, &mut sched).unwrap();
+    assert!(outs.iter().all(|o| o.rounds > 0));
+
+    // Steady state: continue all four conversations, fused.
+    let cont: Vec<Vec<i32>> = (0..B).map(|i| prompt(2, 20 + i as u64)).collect();
+    let snapshot = ALLOC.allocs();
+    let outs =
+        decode_speculative_batch(&mut b, &mut engines, &cont, 24, &mut sched).unwrap();
+    let rounds: u64 = outs.iter().map(|o| o.rounds).sum();
+    assert!(rounds >= 4 * B as u64, "expected a sustained batched run, got {rounds} rounds");
+    let grew = ALLOC.allocs() - snapshot;
+    assert_eq!(
+        grew,
+        0,
+        "steady-state batched decode performed {grew} vocab/cap-sized allocations \
+         across {rounds} fused rounds — the batching hot path regressed"
+    );
 }
 
 #[test]
@@ -84,19 +124,19 @@ fn reused_engine_emits_bit_identical_tokens_to_fresh_engine() {
     let p = prompt(11, 8);
 
     let mut rb = SimBackend::new(85);
-    let mut reused = Engine::new(&mut rb, RunConfig::default());
-    reused.generate_speculative(&p_warm, 20).unwrap();
+    let mut reused = Engine::new(&rb, RunConfig::default());
+    reused.generate_speculative(&mut rb, &p_warm, 20).unwrap();
     reused.reset();
-    let ea_reused = reused.generate_speculative(&p, 20).unwrap();
+    let ea_reused = reused.generate_speculative(&mut rb, &p, 20).unwrap();
     reused.reset();
-    let base_reused = reused.generate_baseline(&p, 20).unwrap();
+    let base_reused = reused.generate_baseline(&mut rb, &p, 20).unwrap();
 
     let mut fb = SimBackend::new(85);
-    let mut fresh = Engine::new(&mut fb, RunConfig::default());
-    let ea_fresh = fresh.generate_speculative(&p, 20).unwrap();
+    let mut fresh = Engine::new(&fb, RunConfig::default());
+    let ea_fresh = fresh.generate_speculative(&mut fb, &p, 20).unwrap();
     let mut fb2 = SimBackend::new(85);
-    let mut fresh2 = Engine::new(&mut fb2, RunConfig::default());
-    let base_fresh = fresh2.generate_baseline(&p, 20).unwrap();
+    let mut fresh2 = Engine::new(&fb2, RunConfig::default());
+    let base_fresh = fresh2.generate_baseline(&mut fb2, &p, 20).unwrap();
 
     assert_eq!(ea_reused.tokens, ea_fresh.tokens, "speculative reuse diverged");
     assert_eq!(ea_reused.accept_lens, ea_fresh.accept_lens);

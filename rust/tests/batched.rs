@@ -1,0 +1,147 @@
+//! Batched-vs-sequential bit-equality: the acceptance property of the
+//! batching contract (`docs/ARCHITECTURE.md`).
+//!
+//! For random ragged batches — B in 1..=8 engines with mixed tree
+//! budgets (hence mixed padded S variants inside one fused launch),
+//! mixed prompt lengths (mixed committed context), mixed `max_new`
+//! including one-token stragglers, optional drafter windows and adaptive
+//! budgets — decoding through the [`BatchScheduler`]'s fused teacher
+//! launches must produce **exactly** the tokens and acceptance shapes of
+//! B independent sequential `generate_speculative` runs.
+
+use eagle_pangu::backend::sim::SimBackend;
+use eagle_pangu::backend::ModelBackend;
+use eagle_pangu::config::{CacheStrategy, CommitMode, RunConfig};
+use eagle_pangu::coordinator::BatchScheduler;
+use eagle_pangu::engine::Engine;
+use eagle_pangu::util::prop;
+use eagle_pangu::util::SplitMix64;
+
+fn prompt(n: usize, seed: u64) -> Vec<i32> {
+    let mut rng = SplitMix64::new(seed);
+    let mut p = vec![1i32]; // BOS
+    for _ in 1..n.max(2) {
+        p.push(rng.range(2, 512) as i32);
+    }
+    p
+}
+
+/// One randomized request spec.
+struct Req {
+    cfg: RunConfig,
+    prompt: Vec<i32>,
+    max_new: usize,
+}
+
+fn random_request(g: &mut prop::Gen) -> Req {
+    let mut cfg = RunConfig::default();
+    cfg.tree.budget = g.usize_in(1, 33); // ragged padded variants
+    cfg.tree.depth_max = g.usize_in(2, 11);
+    cfg.tree.topk = g.usize_in(1, 5);
+    if g.bool_p(0.2) {
+        cfg.draft_window = Some(g.usize_in(4, 48));
+    }
+    if g.bool_p(0.2) {
+        cfg.adaptive_budget = true;
+    }
+    if g.bool_p(0.15) {
+        cfg.cache_strategy = CacheStrategy::DeepCopy;
+    }
+    if g.bool_p(0.25) {
+        cfg.commit_mode = CommitMode::Length;
+    }
+    if g.bool_p(0.15) {
+        cfg.fast_reorder = false;
+    }
+    let p_len = g.usize_in(4, 48);
+    // one-token stragglers: some requests finish after a single round
+    let max_new = if g.bool_p(0.25) { g.usize_in(1, 3) } else { g.usize_in(4, 25) };
+    Req { cfg, prompt: prompt(p_len, g.rng.next_u64()), max_new }
+}
+
+#[test]
+fn property_batched_decode_is_bit_identical_to_sequential() {
+    prop::for_cases(12, 0xBA7C4ED, |g| {
+        let b_count = g.usize_in(1, 9);
+        let agree = *g.choose(&[0u64, 60, 85, 100]);
+        let reqs: Vec<Req> = (0..b_count).map(|_| random_request(g)).collect();
+
+        // sequential reference: one fresh backend + engine per request
+        let seq: Vec<_> = reqs
+            .iter()
+            .map(|r| {
+                let mut b = SimBackend::new(agree);
+                let mut e = Engine::new(&b, r.cfg.clone());
+                e.generate_speculative(&mut b, &r.prompt, r.max_new).unwrap()
+            })
+            .collect();
+
+        // batched: ONE backend, B resident engines, fused verification;
+        // per-request max_new exercises the manual begin/run/take path
+        let mut bk = SimBackend::new(agree);
+        let mut engines: Vec<Engine> =
+            reqs.iter().map(|r| Engine::new(&bk, r.cfg.clone())).collect();
+        for (e, r) in engines.iter_mut().zip(&reqs) {
+            e.begin_speculative(&mut bk, &r.prompt, r.max_new).unwrap();
+        }
+        let cap = bk.contract().cache_cap;
+        let max_batch = g.usize_in(1, b_count + 1);
+        let mut sched = BatchScheduler::new(max_batch, cap);
+        sched.run(&mut bk, &mut engines).unwrap();
+
+        for (i, (e, s)) in engines.iter_mut().zip(&seq).enumerate() {
+            let out = e.take_output().unwrap();
+            assert_eq!(
+                out.tokens, s.tokens,
+                "request {i} tokens diverged (B={b_count}, fuse={max_batch}, agree={agree})"
+            );
+            assert_eq!(out.accept_lens, s.accept_lens, "request {i} acceptance diverged");
+            assert_eq!(out.rounds, s.rounds, "request {i} round count diverged");
+            assert_eq!(out.teacher_calls, s.teacher_calls, "request {i} call accounting");
+        }
+    });
+}
+
+#[test]
+fn batched_multi_turn_continuation_matches_sequential() {
+    // Two fused turns per conversation (context carried across turns),
+    // against two sequential turns on independent engines.
+    let agree = 85u64;
+    let cfgs = vec![RunConfig::default(); 3];
+    let p1: Vec<Vec<i32>> = (0..3).map(|i| prompt(10 + i * 5, 500 + i as u64)).collect();
+    let p2: Vec<Vec<i32>> = (0..3).map(|i| prompt(6, 600 + i as u64)).collect();
+
+    let seq: Vec<(Vec<i32>, Vec<i32>)> = (0..3)
+        .map(|i| {
+            let mut b = SimBackend::new(agree);
+            let mut e = Engine::new(&b, cfgs[i].clone());
+            let o1 = e.generate_speculative(&mut b, &p1[i], 14).unwrap();
+            let o2 = e.generate_speculative(&mut b, &p2[i], 14).unwrap();
+            (o1.tokens, o2.tokens)
+        })
+        .collect();
+
+    let mut bk = SimBackend::new(agree);
+    let mut engines: Vec<Engine> = cfgs.iter().map(|c| Engine::new(&bk, c.clone())).collect();
+    let cap = bk.contract().cache_cap;
+    let mut sched = BatchScheduler::new(3, cap);
+    // turn 1 fused
+    for (e, p) in engines.iter_mut().zip(&p1) {
+        e.begin_speculative(&mut bk, p, 14).unwrap();
+    }
+    sched.run(&mut bk, &mut engines).unwrap();
+    let t1: Vec<Vec<i32>> =
+        engines.iter_mut().map(|e| e.take_output().unwrap().tokens).collect();
+    // turn 2 fused, on the live per-engine context
+    for (e, p) in engines.iter_mut().zip(&p2) {
+        e.begin_speculative(&mut bk, p, 14).unwrap();
+    }
+    sched.run(&mut bk, &mut engines).unwrap();
+    let t2: Vec<Vec<i32>> =
+        engines.iter_mut().map(|e| e.take_output().unwrap().tokens).collect();
+
+    for i in 0..3 {
+        assert_eq!(t1[i], seq[i].0, "turn 1 diverged for conversation {i}");
+        assert_eq!(t2[i], seq[i].1, "turn 2 diverged for conversation {i}");
+    }
+}

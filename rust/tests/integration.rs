@@ -18,6 +18,7 @@ fn coordinator_to_report_pipeline() {
         trace_dir: dir.clone(),
         run_baseline: true,
         run_ea: true,
+        max_batch: 1,
         verbose: false,
     };
     let records = run_workload(&cfg).unwrap();

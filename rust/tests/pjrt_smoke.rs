@@ -78,12 +78,12 @@ fn end_to_end_speculative_decode_on_real_model() {
     let mut b1 = PjrtBackend::load(&dir).expect("load");
     let mut cfg = RunConfig::default();
     cfg.max_new_tokens = 24;
-    let mut e1 = Engine::new(&mut b1, cfg.clone());
-    let ea = e1.generate_speculative(&prompt, 24).expect("speculative");
+    let mut e1 = Engine::new(&b1, cfg.clone());
+    let ea = e1.generate_speculative(&mut b1, &prompt, 24).expect("speculative");
 
     let mut b2 = PjrtBackend::load(&dir).expect("load");
-    let mut e2 = Engine::new(&mut b2, cfg);
-    let base = e2.generate_baseline(&prompt, ea.tokens.len()).expect("baseline");
+    let mut e2 = Engine::new(&b2, cfg);
+    let base = e2.generate_baseline(&mut b2, &prompt, ea.tokens.len()).expect("baseline");
 
     assert_eq!(ea.tokens, base.tokens, "EA must reproduce teacher-greedy output");
     assert!(ea.mean_accept_len() > 0.3, "trained draft should earn accepts: {}",
