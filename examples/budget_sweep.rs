@@ -9,7 +9,7 @@
 
 use anyhow::Result;
 use eagle_pangu::config::RunConfig;
-use eagle_pangu::coordinator::{run_workload, BackendSpec, CoordinatorConfig};
+use eagle_pangu::coordinator::{run_workload, AdmissionPolicy, BackendSpec, CoordinatorConfig};
 use eagle_pangu::util::stats::Summary;
 use eagle_pangu::workload::WorkloadSpec;
 use std::path::PathBuf;
@@ -36,6 +36,7 @@ fn main() -> Result<()> {
         run_baseline: baseline,
         run_ea: ea,
         max_batch: 1,
+        scheduling: AdmissionPolicy::Continuous,
         verbose: false,
     };
 

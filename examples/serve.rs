@@ -11,7 +11,7 @@
 
 use anyhow::Result;
 use eagle_pangu::config::RunConfig;
-use eagle_pangu::coordinator::{run_workload, BackendSpec, CoordinatorConfig};
+use eagle_pangu::coordinator::{run_workload, AdmissionPolicy, BackendSpec, CoordinatorConfig};
 use eagle_pangu::metrics::{pair_turns, ThroughputReport};
 use eagle_pangu::util::stats::Summary;
 use eagle_pangu::workload::WorkloadSpec;
@@ -55,6 +55,9 @@ fn main() -> Result<()> {
         run_baseline: true,
         run_ea: true,
         max_batch,
+        // continuous admission: a retired conversation frees its slot for
+        // the next queued one at the same tick (see docs/ARCHITECTURE.md)
+        scheduling: AdmissionPolicy::Continuous,
         verbose: true,
     };
     println!("serving {} conversations ({} turns) across {} workers, \

@@ -10,7 +10,7 @@
 
 use anyhow::Result;
 use eagle_pangu::config::RunConfig;
-use eagle_pangu::coordinator::{run_workload, BackendSpec, CoordinatorConfig};
+use eagle_pangu::coordinator::{run_workload, AdmissionPolicy, BackendSpec, CoordinatorConfig};
 use eagle_pangu::metrics::{pair_turns, ThroughputReport};
 use eagle_pangu::trace::merge_rank_files;
 use eagle_pangu::util::stats::Summary;
@@ -37,6 +37,7 @@ fn main() -> Result<()> {
         run_baseline: true,
         run_ea: true,
         max_batch: 1,
+        scheduling: AdmissionPolicy::Continuous,
         verbose: false,
     };
     run_workload(&cfg)?;

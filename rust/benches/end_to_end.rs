@@ -23,11 +23,28 @@
 //! only — tokens decoded are bit-identical across B by the batching
 //! contract. `launch_cost_us` is recorded in the JSON so the number is
 //! reproducible and honest.
+//!
+//! # Straggler workload (continuous vs fixed grouping)
+//!
+//! The `straggler` entry decodes a ragged 16-conversation workload
+//! (twelve 2-token stragglers, four 48-token long turns) on 8 slots two
+//! ways: **fixed grouping** (chunks of 8 admitted together; each chunk
+//! drains to narrow launches while its long turns finish — the PR-2
+//! protocol) and **continuous admission** (retired conversations free
+//! their slot for the next queued one at the same tick, sustaining
+//! full-width launches). Tokens are bit-identical; only launch counts
+//! and wall-clock differ. The launch-cost model adds a small per-row
+//! compute charge (`row_cost_ns`) so the reported speedup cannot pretend
+//! row compute is amortizable — it measures launch amortization plus
+//! slot utilization only. `straggler_continuous_speedup` is gated in CI
+//! (`bench_gate`): continuous admission must keep beating fixed grouping.
 
 use eagle_pangu::backend::sim::SimBackend;
 use eagle_pangu::backend::ModelBackend;
 use eagle_pangu::config::{CacheStrategy, RunConfig};
-use eagle_pangu::coordinator::{decode_speculative_batch, BatchScheduler};
+use eagle_pangu::coordinator::{
+    decode_speculative_batch, Completion, ContinuousScheduler, Disposition, SlotRequest,
+};
 use eagle_pangu::engine::Engine;
 use eagle_pangu::json::Json;
 use eagle_pangu::runtime::PjrtBackend;
@@ -123,7 +140,7 @@ fn main() {
             e.warmup(&mut sim).unwrap();
         }
         let cap = sim.contract().cache_cap;
-        let mut sched = BatchScheduler::new(bsz, cap);
+        let mut sched = ContinuousScheduler::new(bsz, cap);
         // warm drive (fused staging to high-water), then timed drives
         decode_speculative_batch(&mut sim, &mut engines, &sweep_prompts, sweep_max_new,
                                  &mut sched)
@@ -158,6 +175,85 @@ fn main() {
     let b4_speedup = if rps_b1 > 0.0 { rps_b4 / rps_b1 } else { 0.0 };
     println!("batch sweep: B=4 speedup over sequential B=1: {b4_speedup:.2}x");
 
+    // ---- straggler workload: continuous admission vs fixed grouping ----
+    let row_cost_ns: u64 = 2_000;
+    let strag_convs = 16usize;
+    let strag_slots = 8usize;
+    let strag_prompts: Vec<Vec<i32>> = (0..strag_convs)
+        .map(|i| Grammar::code().sample_sequence(24, 300 + i as u64, None))
+        .collect();
+    // 3:1 stragglers to long turns — each fixed chunk of 8 holds two
+    // long turns that drain it to width-2 launches
+    let strag_max_new = |i: usize| if i % 4 == 3 { 48 } else { 2 };
+    let mut strag_json = Json::obj();
+    let mut rps_fixed = 0.0f64;
+    let mut rps_cont = 0.0f64;
+    for continuous in [false, true] {
+        let mut sim = SimBackend::new(85)
+            .with_teacher_launch(Duration::from_micros(launch_cost_us))
+            .with_row_cost(Duration::from_nanos(row_cost_ns));
+        let mut engines: Vec<Engine> =
+            (0..strag_slots).map(|_| Engine::new(&sim, cfg.clone())).collect();
+        for e in engines.iter_mut() {
+            e.warmup(&mut sim).unwrap();
+        }
+        let cap = sim.contract().cache_cap;
+        let mut sched = ContinuousScheduler::new(strag_slots, cap);
+        // fixed grouping = admit in chunks of `slots` and drain each
+        // chunk; continuous = one queue over all conversations
+        let admit_chunk = if continuous { strag_convs } else { strag_slots };
+        let ids: Vec<usize> = (0..strag_convs).collect();
+        let run_pass = |sim: &mut SimBackend,
+                            engines: &mut Vec<Engine>,
+                            sched: &mut ContinuousScheduler|
+         -> u64 {
+            let mut pass_rounds = 0u64;
+            for chunk in ids.chunks(admit_chunk) {
+                for &i in chunk {
+                    sched.submit(SlotRequest {
+                        id: i as u64,
+                        prompt: strag_prompts[i].clone(),
+                        max_new: strag_max_new(i),
+                        cfg: None,
+                    });
+                }
+                sched
+                    .run_to_idle(&mut *sim, &mut engines[..], &mut |c: Completion| {
+                        pass_rounds += c.out.rounds;
+                        Disposition::Release
+                    })
+                    .unwrap();
+            }
+            pass_rounds
+        };
+        // warm pass: sizes every buffer AND measures launches per pass
+        let launches_before = sim.teacher_calls;
+        run_pass(&mut sim, &mut engines, &mut sched);
+        let launches_per_pass = sim.teacher_calls - launches_before;
+        let t0 = Instant::now();
+        let mut strag_rounds = 0u64;
+        while t0.elapsed().as_secs_f64() < 1.5 {
+            strag_rounds += run_pass(&mut sim, &mut engines, &mut sched);
+        }
+        let rps = strag_rounds as f64 / t0.elapsed().as_secs_f64();
+        let tag = if continuous { "continuous" } else { "fixed" };
+        if continuous {
+            rps_cont = rps;
+        } else {
+            rps_fixed = rps;
+        }
+        println!(
+            "straggler B={strag_slots} {tag}: {rps:.0} request-rounds/s \
+             ({launches_per_pass} launches/pass)"
+        );
+        strag_json
+            .push(&format!("{tag}_b8_rounds_per_sec"), rps)
+            .push(&format!("{tag}_launches_per_pass"), launches_per_pass);
+    }
+    let strag_speedup = if rps_fixed > 0.0 { rps_cont / rps_fixed } else { 0.0 };
+    println!("straggler: continuous admission speedup over fixed grouping: {strag_speedup:.2}x");
+    strag_json.push("row_cost_ns", row_cost_ns);
+
     let mut j = Json::obj();
     j.push("bench", "end_to_end_hotpath")
         .push("backend", backend_name)
@@ -171,7 +267,9 @@ fn main() {
         .push("batch_sweep", batch_json)
         .push("batch_sweep_launch_cost_us", launch_cost_us)
         .push("batch_sweep_conversations", sweep_convs)
-        .push("b4_speedup_vs_b1", b4_speedup);
+        .push("b4_speedup_vs_b1", b4_speedup)
+        .push("straggler", strag_json)
+        .push("straggler_continuous_speedup", strag_speedup);
     std::fs::write("BENCH_hotpath.json", j.to_string_pretty()).unwrap();
     println!("wrote BENCH_hotpath.json");
 

@@ -44,10 +44,27 @@
 //! Real accelerators charge a fixed host-side dispatch + kernel-launch
 //! latency per teacher invocation — the quantity that cross-request
 //! batching amortizes (and that the paper's per-round "one teacher call"
-//! economics rest on). [`SimBackend::teacher_launch`] models it as a
-//! busy-wait charged once per teacher *launch* (fused or not). It
-//! defaults to zero so equivalence tests stay instant; the end-to-end
-//! bench sets it to measure the B-sweep amortization honestly.
+//! economics rest on) — plus compute that scales with the rows actually
+//! evaluated. The sim models both as a busy-wait charged per teacher
+//! *launch* (fused or not):
+//!
+//! ```text
+//! cost(launch) = teacher_launch  +  teacher_row_cost * padded_rows
+//! ```
+//!
+//! where `padded_rows` is `S` for a single step and `B * S_max` for a
+//! fused step — a real padded launch computes every row, so a ragged
+//! mixed-budget group is charged for its padding.
+//!
+//! The fixed part is what batching amortizes (one charge per fused
+//! group); the per-row part is what batching can *not* amortize (the
+//! rows still have to be computed), so speedups measured under the model
+//! stay honest instead of scaling like `B`. [`SimBackend::launches_by_width`]
+//! histograms every teacher launch by its fused width, which is how the
+//! bench shows continuous admission sustaining full-width launches where
+//! fixed grouping degrades to narrow ones. Both costs default to zero so
+//! equivalence tests stay instant; the end-to-end bench sets them to
+//! measure the B-sweep and the straggler workload honestly.
 
 use super::{BatchStepArgs, ModelBackend, StepArgs, StepScratch};
 use crate::config::contract::{FIRST_TOKEN, VOCAB};
@@ -72,6 +89,14 @@ pub struct SimBackend {
     /// waited once per launch, fused or not). Zero (the default) disables
     /// the model.
     pub teacher_launch: Duration,
+    /// Simulated per-live-row compute cost of a teacher launch — the
+    /// share of launch cost batching cannot amortize. Zero by default.
+    pub teacher_row_cost: Duration,
+    /// Histogram of teacher launches by fused width: `launches_by_width[b]`
+    /// counts launches that verified `b` requests (single-request steps
+    /// count under width 1). Continuous-batching benches read this to
+    /// show admission sustaining full-width launches.
+    pub launches_by_width: Vec<u64>,
     /// Reusable (position, token) scratch for context reconstruction —
     /// grows once to the visible-context high-water mark.
     seen: Vec<(i64, i64)>,
@@ -89,6 +114,8 @@ impl SimBackend {
             teacher_calls: 0,
             draft_calls: 0,
             teacher_launch: Duration::ZERO,
+            teacher_row_cost: Duration::ZERO,
+            launches_by_width: Vec::new(),
             seen,
         }
     }
@@ -99,14 +126,28 @@ impl SimBackend {
         self
     }
 
-    /// Spin for the configured launch cost (no syscall, so the wait is
-    /// accurate at microsecond scale and deterministic in ordering).
-    fn spend_launch_cost(&self) {
-        if self.teacher_launch.is_zero() {
+    /// Builder: set the simulated per-live-row teacher compute cost.
+    pub fn with_row_cost(mut self, cost: Duration) -> Self {
+        self.teacher_row_cost = cost;
+        self
+    }
+
+    /// Account one teacher launch of `width` fused requests computing
+    /// `rows` padded rows, and spin for its modeled cost (no syscall, so
+    /// the wait is accurate at microsecond scale and deterministic in
+    /// ordering).
+    fn record_launch(&mut self, width: usize, rows: usize) {
+        self.teacher_calls += 1;
+        if self.launches_by_width.len() <= width {
+            self.launches_by_width.resize(width + 1, 0);
+        }
+        self.launches_by_width[width] += 1;
+        let cost = self.teacher_launch + self.teacher_row_cost * rows as u32;
+        if cost.is_zero() {
             return;
         }
         let t0 = Instant::now();
-        while t0.elapsed() < self.teacher_launch {
+        while t0.elapsed() < cost {
             std::hint::spin_loop();
         }
     }
@@ -276,8 +317,7 @@ impl ModelBackend for SimBackend {
 
     fn teacher_step(&mut self, _mode: ExecMode, args: StepArgs, out: &mut StepScratch)
         -> Result<()> {
-        self.teacher_calls += 1;
-        self.spend_launch_cost();
+        self.record_launch(1, args.tokens.len());
         self.step(args, true, out)
     }
 
@@ -297,9 +337,11 @@ impl ModelBackend for SimBackend {
         args: BatchStepArgs,
         out: &mut StepScratch,
     ) -> Result<()> {
-        self.teacher_calls += 1;
-        self.spend_launch_cost();
         let b = args.reqs.len();
+        // a real fused [B, S_max] launch computes every padded row, not
+        // just the live ones — charge what the hardware would charge, so
+        // ragged mixed-budget groups don't look cheaper than they are
+        self.record_launch(b, b * args.s_max);
         let s = args.s_max;
         let cap = self.contract.cache_cap;
         let w = cap + s;
@@ -591,6 +633,48 @@ mod tests {
         assert_eq!(got1.k_new, out1.k_new);
         assert_eq!(got0.v_new, out0.v_new);
         assert_eq!(got1.v_new, out1.v_new);
+    }
+
+    #[test]
+    fn launch_width_histogram_and_row_cost() {
+        let mut b = SimBackend::new(100).with_row_cost(Duration::from_micros(50));
+        let (k, v) = empty_cache(b.contract());
+        let mask = chain_mask(8, 2, 0);
+        let tokens = [5i32, 6, 0, 0, 0, 0, 0, 0];
+        let pos = [0i32, 1, 0, 0, 0, 0, 0, 0];
+        let mut out = StepScratch::new();
+        let t0 = Instant::now();
+        b.teacher_step(ExecMode::Fused, StepArgs {
+            tokens: &tokens, positions: &pos, mask: &mask,
+            kv: KvView { k: &k, v: &v }, feats_in: None, probe: false,
+        }, &mut out)
+        .unwrap();
+        // 8 padded rows at 50us each
+        assert!(t0.elapsed() >= Duration::from_micros(8 * 50), "row cost must be spent");
+        assert_eq!(b.launches_by_width.get(1), Some(&1));
+
+        // a fused width-2 launch lands in bucket 2
+        let w = CACHE_CAP + 8;
+        let mut m2 = vec![NEG_INF; 2 * 8 * w];
+        m2[..8 * w].copy_from_slice(&mask);
+        m2[8 * w..].copy_from_slice(&mask);
+        let mut t2 = vec![0i32; 16];
+        t2[..8].copy_from_slice(&tokens);
+        t2[8..].copy_from_slice(&tokens);
+        let mut p2 = vec![0i32; 16];
+        p2[..8].copy_from_slice(&pos);
+        p2[8..].copy_from_slice(&pos);
+        let reqs = [
+            BatchRequest { kv: KvView { k: &k, v: &v }, live: 2 },
+            BatchRequest { kv: KvView { k: &k, v: &v }, live: 2 },
+        ];
+        let mut fused = StepScratch::new();
+        b.teacher_step_batch(ExecMode::Fused, BatchStepArgs {
+            s_max: 8, tokens: &t2, positions: &p2, mask: &m2, reqs: &reqs,
+        }, &mut fused)
+        .unwrap();
+        assert_eq!(b.launches_by_width.get(2), Some(&1));
+        assert_eq!(b.teacher_calls, 2);
     }
 
     #[test]

@@ -1,0 +1,238 @@
+//! CI bench-regression gate: compare the bench's `BENCH_hotpath.json`
+//! against the committed `BENCH_baseline.json` and fail (exit 1) on a
+//! regression.
+//!
+//! ```text
+//! bench_gate <BENCH_baseline.json> <BENCH_hotpath.json>
+//! ```
+//!
+//! Rules, applied to every numeric leaf of the *baseline* (walked
+//! recursively, so the `batch_sweep` and `straggler` entries are gated
+//! per-B; baseline-only keys define the contract — new keys in the
+//! current file are ignored until they are pinned):
+//!
+//! * throughput (`*rounds_per_sec`, `tokens_per_sec`): current must be
+//!   `>= TOLERANCE * baseline` — i.e. a >15% rounds/s regression at any
+//!   B fails the job under the default tolerance of 0.85;
+//! * speedups (`*_speedup`, `b4_speedup_vs_b1`): current must be
+//!   `>= max(1.0, TOLERANCE * baseline)` — batching/continuous admission
+//!   must never *lose* to its baseline, regardless of runner speed;
+//! * allocation traffic (`bytes_allocated_per_round`,
+//!   `allocs_per_round`): current must be `<= baseline * 2 + slack` — a
+//!   machine-independent tripwire for the zero-allocation hot path;
+//! * a metric present in the baseline but missing from the current file
+//!   fails (dropping a gated metric is a coverage regression).
+//!
+//! Absolute rounds/s floors are machine-dependent: the committed
+//! baseline pins *conservative floors* (well below a healthy run on any
+//! recent runner) so the gate trips on catastrophic regressions without
+//! flaking on runner variance. Re-pin by copying a green run's
+//! `BENCH_hotpath.json` artifact over `BENCH_baseline.json` (and review
+//! the diff like any other perf change). `BENCH_GATE_TOLERANCE`
+//! overrides the 0.85 factor.
+
+use eagle_pangu::json::{parse, Json};
+use std::process::ExitCode;
+
+/// Default regression tolerance: current >= 0.85 * baseline passes.
+const DEFAULT_TOLERANCE: f64 = 0.85;
+
+/// One gated comparison outcome.
+struct Finding {
+    path: String,
+    ok: bool,
+    detail: String,
+}
+
+/// Which gate rule a metric key falls under.
+enum Rule {
+    /// Higher is better; fail below `tolerance * baseline`.
+    Throughput,
+    /// Ratio that must stay a win: fail below `max(1.0, tol * baseline)`.
+    Speedup,
+    /// Lower is better; fail above `2 * baseline + slack`.
+    Alloc {
+        /// Absolute slack added on top of the doubled baseline.
+        slack: f64,
+    },
+}
+
+fn rule_for(leaf: &str) -> Option<Rule> {
+    if leaf == "tokens_per_sec" || leaf.ends_with("rounds_per_sec") {
+        return Some(Rule::Throughput);
+    }
+    if leaf.ends_with("_speedup") || leaf == "b4_speedup_vs_b1" {
+        return Some(Rule::Speedup);
+    }
+    if leaf == "bytes_allocated_per_round" {
+        return Some(Rule::Alloc { slack: 512.0 });
+    }
+    if leaf == "allocs_per_round" {
+        return Some(Rule::Alloc { slack: 4.0 });
+    }
+    None
+}
+
+/// Walk every numeric leaf of `baseline`, compare against the same path
+/// in `current` under the key's rule, and append findings.
+fn gate(baseline: &Json, current: &Json, tol: f64, path: &str, out: &mut Vec<Finding>) {
+    if let Some(obj) = baseline.as_obj() {
+        for (k, v) in obj {
+            let sub = if path.is_empty() { k.clone() } else { format!("{path}.{k}") };
+            gate(v, current.get(k).unwrap_or(&Json::Null), tol, &sub, out);
+        }
+        return;
+    }
+    let leaf = path.rsplit('.').next().unwrap_or(path);
+    let Some(rule) = rule_for(leaf) else { return };
+    let Some(base) = baseline.as_f64() else { return };
+    let Some(cur) = current.as_f64() else {
+        out.push(Finding {
+            path: path.to_string(),
+            ok: false,
+            detail: format!("missing from current bench output (baseline {base:.2})"),
+        });
+        return;
+    };
+    let (ok, detail) = match rule {
+        Rule::Throughput => {
+            let floor = tol * base;
+            (cur >= floor, format!("{cur:.1} vs baseline {base:.1} (floor {floor:.1})"))
+        }
+        Rule::Speedup => {
+            let floor = (tol * base).max(1.0);
+            (cur >= floor, format!("{cur:.3}x vs baseline {base:.3}x (floor {floor:.3}x)"))
+        }
+        Rule::Alloc { slack } => {
+            let ceil = base * 2.0 + slack;
+            (cur <= ceil, format!("{cur:.1} vs baseline {base:.1} (ceiling {ceil:.1})"))
+        }
+    };
+    out.push(Finding { path: path.to_string(), ok, detail });
+}
+
+/// Run the gate over two parsed bench files; returns the findings.
+fn run_gate(baseline: &Json, current: &Json, tol: f64) -> Vec<Finding> {
+    let mut out = Vec::new();
+    gate(baseline, current, tol, "", &mut out);
+    out
+}
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().collect();
+    if args.len() != 3 {
+        eprintln!("usage: bench_gate <BENCH_baseline.json> <BENCH_hotpath.json>");
+        return ExitCode::from(2);
+    }
+    let tol = std::env::var("BENCH_GATE_TOLERANCE")
+        .ok()
+        .and_then(|s| s.parse::<f64>().ok())
+        .unwrap_or(DEFAULT_TOLERANCE);
+    let read = |p: &str| -> Result<Json, String> {
+        let text = std::fs::read_to_string(p).map_err(|e| format!("{p}: {e}"))?;
+        parse(&text).map_err(|e| format!("{p}: {e}"))
+    };
+    let (baseline, current) = match (read(&args[1]), read(&args[2])) {
+        (Ok(b), Ok(c)) => (b, c),
+        (Err(e), _) | (_, Err(e)) => {
+            eprintln!("bench_gate: {e}");
+            return ExitCode::from(2);
+        }
+    };
+    let findings = run_gate(&baseline, &current, tol);
+    if findings.is_empty() {
+        eprintln!("bench_gate: baseline {} defines no gated metrics", args[1]);
+        return ExitCode::from(2);
+    }
+    let mut failed = 0usize;
+    for f in &findings {
+        let mark = if f.ok { "OK  " } else { "FAIL" };
+        println!("{mark} {}: {}", f.path, f.detail);
+        if !f.ok {
+            failed += 1;
+        }
+    }
+    if failed > 0 {
+        eprintln!(
+            "bench_gate: {failed}/{} gated metrics regressed beyond tolerance {tol}",
+            findings.len()
+        );
+        return ExitCode::FAILURE;
+    }
+    println!("bench_gate: all {} gated metrics within tolerance {tol}", findings.len());
+    ExitCode::SUCCESS
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn bench_json(rps: f64, b8: f64, speedup: f64, bytes: f64) -> Json {
+        let mut sweep = Json::obj();
+        sweep.push("B1_rounds_per_sec", 400.0).push("B8_rounds_per_sec", b8);
+        let mut j = Json::obj();
+        j.push("rounds_per_sec", rps)
+            .push("tokens_per_sec", rps * 3.0)
+            .push("bytes_allocated_per_round", bytes)
+            .push("batch_sweep", sweep)
+            .push("straggler_continuous_speedup", speedup)
+            .push("backend", "sim"); // non-numeric: ignored
+        j
+    }
+
+    #[test]
+    fn equal_runs_pass() {
+        let b = bench_json(1000.0, 2000.0, 1.3, 100.0);
+        let findings = run_gate(&b, &b, 0.85);
+        assert!(findings.iter().all(|f| f.ok), "identical run must pass");
+        // every gated key visited, including the nested sweep
+        assert!(findings.iter().any(|f| f.path == "batch_sweep.B8_rounds_per_sec"));
+        assert!(findings.iter().any(|f| f.path == "straggler_continuous_speedup"));
+    }
+
+    #[test]
+    fn fifteen_percent_regression_at_any_b_fails() {
+        let base = bench_json(1000.0, 2000.0, 1.3, 100.0);
+        // >15% down at B=8 only
+        let cur = bench_json(1000.0, 1600.0, 1.3, 100.0);
+        let findings = run_gate(&base, &cur, 0.85);
+        let b8 = findings.iter().find(|f| f.path == "batch_sweep.B8_rounds_per_sec").unwrap();
+        assert!(!b8.ok, "16%+ regression at B=8 must fail");
+        // a 10% dip elsewhere stays green
+        let cur2 = bench_json(920.0, 2000.0, 1.3, 100.0);
+        let findings2 = run_gate(&base, &cur2, 0.85);
+        assert!(findings2.iter().all(|f| f.ok), "10% is within tolerance");
+    }
+
+    #[test]
+    fn speedup_must_stay_a_win() {
+        let base = bench_json(1000.0, 2000.0, 1.1, 100.0);
+        // tolerance would allow 0.93, but a speedup below 1.0 means
+        // continuous admission lost to fixed grouping — always a failure
+        let cur = bench_json(1000.0, 2000.0, 0.97, 100.0);
+        let findings = run_gate(&base, &cur, 0.85);
+        let s = findings.iter().find(|f| f.path == "straggler_continuous_speedup").unwrap();
+        assert!(!s.ok, "sub-1.0 speedup must fail");
+    }
+
+    #[test]
+    fn missing_gated_metric_fails() {
+        let base = bench_json(1000.0, 2000.0, 1.3, 100.0);
+        let mut cur = Json::obj();
+        cur.push("rounds_per_sec", 1000.0);
+        let findings = run_gate(&base, &cur, 0.85);
+        assert!(
+            findings.iter().any(|f| !f.ok && f.detail.contains("missing")),
+            "dropped metrics must fail the gate"
+        );
+    }
+
+    #[test]
+    fn alloc_tripwire_catches_regrowth() {
+        let base = bench_json(1000.0, 2000.0, 1.3, 100.0);
+        let cur = bench_json(1000.0, 2000.0, 1.3, 10_000.0);
+        let findings = run_gate(&base, &cur, 0.85);
+        let a = findings.iter().find(|f| f.path == "bytes_allocated_per_round").unwrap();
+        assert!(!a.ok, "alloc regrowth must fail");
+    }
+}

@@ -17,8 +17,8 @@ pub struct Args {
 /// Flags that take a value (everything else starting with `--` is a switch).
 const VALUED: &[&str] = &[
     "mode", "budget", "depth", "topk", "cache-strategy", "commit-mode",
-    "draft-window", "max-new", "workers", "batch", "seed", "out-dir", "artifacts",
-    "backend", "agree", "temperature", "trace-dir", "prompt-len", "turns",
+    "draft-window", "max-new", "workers", "batch", "scheduling", "seed", "out-dir",
+    "artifacts", "backend", "agree", "temperature", "trace-dir", "prompt-len", "turns",
     "conversations", "profile", "requests", "rate", "servers",
 ];
 

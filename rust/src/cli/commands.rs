@@ -2,7 +2,7 @@
 
 use super::args::Args;
 use crate::config::{CacheStrategy, CommitMode, ExecMode, RunConfig};
-use crate::coordinator::{run_workload, BackendSpec, CoordinatorConfig};
+use crate::coordinator::{run_workload, AdmissionPolicy, BackendSpec, CoordinatorConfig};
 use crate::engine::Engine;
 use crate::harness::{run_e1, run_e2, run_e3, run_e4, HarnessConfig};
 use crate::metrics::{pair_turns, ThroughputReport};
@@ -43,15 +43,19 @@ COMMON FLAGS
   --max-new N             tokens per turn
   --temperature T         0 = greedy (default)
   --workers N             world size (default 2)
-  --batch B               conversations fused per verification launch (serve; default 1)
+  --batch B               engine slots (fused launch width) per worker (serve; default 1;
+                          0 is rejected — the config contract requires B >= 1)
+  --scheduling P          serve group formation: continuous (default; retired conversations
+                          free their slot for the next queued one mid-flight) | chunked
+                          (PR-2 fixed groups, kept for A/B comparison)
   --seed S  --out-dir DIR  --quick  --verbose  --attention-stats
 ";
 
 const RUN_FLAGS: &[&str] = &[
     "backend", "artifacts", "agree", "mode", "budget", "depth", "topk",
     "cache-strategy", "commit-mode", "draft-window", "max-new", "temperature",
-    "workers", "batch", "seed", "out-dir", "trace-dir", "prompt-len", "conversations",
-    "profile", "turns", "requests", "rate", "servers",
+    "workers", "batch", "scheduling", "seed", "out-dir", "trace-dir", "prompt-len",
+    "conversations", "profile", "turns", "requests", "rate", "servers",
 ];
 const RUN_SWITCHES: &[&str] = &[
     "quick", "verbose", "no-fast-reorder", "unsafe-indexing", "attention-stats",
@@ -237,6 +241,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
         run_baseline: !args.has("ea-only"),
         run_ea: !args.has("baseline-only"),
         max_batch: args.get_usize("batch")?.unwrap_or(1),
+        scheduling: args
+            .get("scheduling")
+            .map(AdmissionPolicy::parse)
+            .transpose()?
+            .unwrap_or(AdmissionPolicy::Continuous),
         verbose: args.has("verbose") || !args.has("quick"),
     };
     let records = run_workload(&cfg)?;
@@ -365,5 +374,29 @@ mod tests {
         assert!(run_config(&parse("serve --budget 0")).is_err());
         assert!(run_config(&parse("serve --mode turbo")).is_err());
         assert!(backend_spec(&parse("serve --backend quantum")).is_err());
+    }
+
+    #[test]
+    fn serve_rejects_zero_batch_with_contract_error() {
+        // --batch 0 must fail loudly instead of silently degenerating to
+        // sequential serving (and must not touch the trace directory).
+        let a = parse("serve --backend sim --quick --batch 0 --max-new 4");
+        let err = dispatch(&a).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("max_batch"),
+            "error must name the config contract: {err:#}"
+        );
+    }
+
+    #[test]
+    fn scheduling_flag_parses_and_rejects_unknown() {
+        assert_eq!(
+            AdmissionPolicy::parse("continuous").unwrap(),
+            AdmissionPolicy::Continuous
+        );
+        assert_eq!(AdmissionPolicy::parse("chunked").unwrap(), AdmissionPolicy::Chunked);
+        assert!(AdmissionPolicy::parse("warp").is_err());
+        let a = parse("serve --backend sim --quick --scheduling warp");
+        assert!(dispatch(&a).is_err());
     }
 }

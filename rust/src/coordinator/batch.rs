@@ -1,48 +1,89 @@
-//! Cross-request batched verification: the serving-layer scheduler that
+//! Continuous cross-request batching: the serving-layer scheduler that
 //! fuses several conversations' tree-verification calls into **one**
-//! padded teacher launch.
+//! padded teacher launch per tick, and — unlike a fixed group — admits
+//! newly-ready conversations into the *running* group whenever a slot
+//! frees up.
 //!
 //! The paper amortizes teacher invocations across *speculated tokens*
 //! (one call verifies a whole tree); this module amortizes them across
-//! *requests* as well — the dominant remaining lever once per-step
-//! allocation is gone, and the batching mode SpecInfer-style serving
-//! systems rely on. Per tick the scheduler:
+//! *requests* as well, and keeps that amortization high under ragged real
+//! traffic: a one-token straggler retiring early no longer shrinks the
+//! launch width for the rest of its group, because the next queued
+//! conversation takes its slot at the very next tick (SpecInfer-style
+//! continuous batching).
 //!
-//! 1. gathers up to `max_batch` **ready** conversations (engines whose
-//!    in-flight generation wants another round);
-//! 2. has each run its *per-request* draft half
-//!    ([`Engine::prepare_verify`]: chain refresh, tree expansion,
-//!    tensorize, incremental mask);
-//! 3. pads every request to the group's largest compiled variant
-//!    `S_max`, assembles the fused `[B, S_max, cap + S_max]` mask block
-//!    ([`BatchMask`]) and `[B * S_max]` token/position rows, and launches
-//!    **one** [`ModelBackend::teacher_step_batch`];
-//! 4. scatters each request's output rows back into its engine's own
-//!    scratch ([`Engine::scatter_verify`]) and finishes the round
-//!    per-request ([`Engine::finish_verify`]: acceptance + commit).
+//! # Slot lifecycle
 //!
-//! Acceptance and cache commits never cross requests, so batched decoding
-//! is **bit-identical** to sequential decoding — `tests/batched.rs`
-//! property-tests this over random ragged batches (mixed tree budgets,
-//! context lengths and `max_new`, including one-token stragglers).
-//! Conversations that finish simply drop out of the ready set, so the
-//! batch shrinks naturally (ragged completion).
+//! A [`ContinuousScheduler`] drives `E` resident engine *slots* (one
+//! conversation per slot) plus a FIFO admission queue:
+//!
+//! ```text
+//!  submit ──> [queue] ──admit──> [active] ──retire──> Completion
+//!                ^                  │  ^                   │
+//!                │                  │  └── Continue ───────┤ (next turn,
+//!                └──────────────────┘      (same slot,     │  context kept)
+//!                    slot freed by Release <───────────────┘
+//! ```
+//!
+//! Per [`ContinuousScheduler::tick`]:
+//!
+//! 1. **Retire** — every active slot whose engine no longer wants a round
+//!    (deadline reached *or* out of cache headroom, i.e. stalled) is
+//!    closed: `take_output` produces a [`Completion`] handed to the
+//!    caller, whose [`Disposition`] either releases the slot or begins
+//!    the conversation's next turn on the same engine (context kept —
+//!    multi-turn residency).
+//! 2. **Admit** — freed slots are filled from the queue in FIFO order:
+//!    no admission ever overtakes an earlier one (property-tested), so
+//!    a queued conversation's wait is bounded by the total remaining
+//!    turns of the conversations ahead of it. A [`Disposition::Continue`]
+//!    deliberately holds its slot across turns (context residency), so a
+//!    caller that continues a conversation forever starves the queue by
+//!    construction — finite-turn workloads (the runner's) cannot.
+//!    Admission resets the slot engine (or applies the request's own
+//!    [`RunConfig`] via [`Engine::set_config`] first) and prefills the
+//!    prompt.
+//! 3. **Verify** — one fused verification round over every ready slot:
+//!    each runs its per-request draft half ([`Engine::prepare_verify`]),
+//!    the group is padded to its largest compiled variant `S_max`, ONE
+//!    [`ModelBackend::teacher_step_batch`] launch runs, and each
+//!    request's output rows are scattered back
+//!    ([`Engine::scatter_verify`]) and finished per-request
+//!    ([`Engine::finish_verify`]).
+//!
+//! A conversation admitted at tick `T` joins tick `T`'s fused launch —
+//! the group is re-padded every tick ([`BatchMask::begin`] closes the
+//! whole block before requests are copied in), so membership changes
+//! mid-flight never leak padding (checked by
+//! [`BatchMask::padding_closed`] in debug builds).
+//!
+//! Acceptance and cache commits never cross requests, so continuous
+//! batched decoding is **bit-identical** to sequential decoding no matter
+//! when a conversation was admitted or who its slot-mates were —
+//! `tests/continuous.rs` property-tests this over randomized arrival
+//! schedules, and `tests/batched.rs` over random ragged groups.
 //!
 //! All gather/scatter staging (`tokens`, `positions`, the mask block and
-//! the fused output scratch) lives in the scheduler and only ever grows,
-//! keeping steady-state batched rounds allocation-free (asserted by
-//! `tests/alloc_regression.rs`).
+//! the fused output scratch, owned by the inner [`FusedVerifier`]) only
+//! ever grows, keeping steady-state batched rounds allocation-free
+//! (asserted by `tests/alloc_regression.rs`).
 
 use crate::backend::{BatchRequest, BatchStepArgs, ModelBackend, StepScratch};
+use crate::config::RunConfig;
 use crate::engine::{Engine, GenOut};
 use crate::tree::BatchMask;
-use anyhow::Result;
+use anyhow::{Context, Result};
+use std::collections::VecDeque;
 use std::time::Instant;
 
-/// Fuses up to `max_batch` ready conversations' verification steps per
-/// tick (see the module docs for the full protocol).
-pub struct BatchScheduler {
-    max_batch: usize,
+/// The gather → pad → launch → scatter half of one fused verification
+/// round. All *sized* staging (the fused token/position rows, the mask
+/// block, the output scratch) lives here and only ever grows; the one
+/// per-round allocation left is the `B`-element `Vec` of borrowed
+/// per-request cache views (pointer-sized entries, far below the
+/// alloc-regression gate's vocab/cap-sized threshold — it cannot be
+/// hoisted without self-borrowing the engines).
+pub struct FusedVerifier {
     /// Fused `[B * S_max]` token staging.
     tokens: Vec<i32>,
     /// Fused `[B * S_max]` position staging.
@@ -51,48 +92,20 @@ pub struct BatchScheduler {
     mask: BatchMask,
     /// Fused teacher outputs, scattered per-request after the launch.
     out: StepScratch,
+    /// Per-request padded variants of the current round (padding-invariant
+    /// bookkeeping, reused every round).
+    s_reqs: Vec<usize>,
 }
 
-impl BatchScheduler {
-    /// A scheduler fusing up to `max_batch` requests per launch, for
-    /// caches of capacity `cache_cap`.
-    pub fn new(max_batch: usize, cache_cap: usize) -> Self {
+impl FusedVerifier {
+    /// A verifier for caches of capacity `cache_cap`.
+    pub fn new(cache_cap: usize) -> Self {
         Self {
-            max_batch: max_batch.max(1),
             tokens: Vec::new(),
             positions: Vec::new(),
             mask: BatchMask::new(cache_cap),
             out: StepScratch::new(),
-        }
-    }
-
-    /// The configured fusion width.
-    pub fn max_batch(&self) -> usize {
-        self.max_batch
-    }
-
-    /// Drive every engine with an in-flight generation to completion,
-    /// fusing up to `max_batch` verifications per tick. Engines without
-    /// an in-flight generation (or already done) are skipped, so ragged
-    /// groups shrink naturally. On return, every previously in-flight
-    /// engine is ready for [`Engine::take_output`].
-    pub fn run(&mut self, backend: &mut dyn ModelBackend, engines: &mut [Engine]) -> Result<()> {
-        loop {
-            // ready set of this tick (tiny: <= engines.len() indices)
-            let ready: Vec<usize> =
-                (0..engines.len()).filter(|&i| engines[i].needs_more()).collect();
-            if ready.is_empty() {
-                return Ok(());
-            }
-            for group in ready.chunks(self.max_batch) {
-                for &i in group {
-                    engines[i].prepare_verify(backend)?;
-                }
-                self.fused_verify(backend, engines, group)?;
-                for &i in group {
-                    engines[i].finish_verify()?;
-                }
-            }
+            s_reqs: Vec::new(),
         }
     }
 
@@ -100,7 +113,7 @@ impl BatchScheduler {
     /// of which must have a prepared round: pad to the group's largest
     /// (S, ctx), launch once, scatter per-request logits/features/KV rows
     /// back into each engine's scratch.
-    fn fused_verify(
+    pub fn verify_group(
         &mut self,
         backend: &mut dyn ModelBackend,
         engines: &mut [Engine],
@@ -120,6 +133,7 @@ impl BatchScheduler {
         self.positions.clear();
         self.positions.resize(b * s_max, 0);
         self.mask.begin(b, s_max);
+        self.s_reqs.clear();
         let mut reqs: Vec<BatchRequest> = Vec::with_capacity(b);
         for (bi, &i) in group.iter().enumerate() {
             anyhow::ensure!(engines[i].cfg.mode == mode, "mixed exec modes in one batch");
@@ -127,8 +141,16 @@ impl BatchScheduler {
             self.tokens[bi * s_max..bi * s_max + p.s].copy_from_slice(p.tokens);
             self.positions[bi * s_max..bi * s_max + p.s].copy_from_slice(p.positions);
             self.mask.fill_request(bi, p.mask, p.s);
+            self.s_reqs.push(p.s);
             reqs.push(BatchRequest { kv: p.kv, live: p.s });
         }
+        // membership changed or shrank since last round? re-padding must
+        // still leave every padding row/column closed ("padding is never
+        // attended" — the invariant continuous admission leans on)
+        debug_assert!(
+            self.mask.padding_closed(&self.s_reqs),
+            "fused mask block leaked an open padding row/column"
+        );
         let t0 = Instant::now();
         backend.teacher_step_batch(
             mode,
@@ -153,20 +175,389 @@ impl BatchScheduler {
     }
 }
 
+/// One conversation handed to [`ContinuousScheduler::submit`], awaiting a
+/// free slot.
+pub struct SlotRequest {
+    /// Caller-chosen id, echoed back in the [`Completion`].
+    pub id: u64,
+    /// First-turn prompt tokens.
+    pub prompt: Vec<i32>,
+    /// Soft output-token deadline of the first turn.
+    pub max_new: usize,
+    /// Per-request run configuration applied to the slot engine at
+    /// admission ([`Engine::set_config`]); `None` keeps the slot engine's
+    /// current configuration (plain [`Engine::reset`]). Heterogeneous
+    /// configs may coexist in one running group — a fused launch must be
+    /// execution-mode-uniform, so the scheduler stable-partitions each
+    /// tick's ready set by mode (full-width fusion per mode) instead of
+    /// rejecting mixed modes.
+    pub cfg: Option<RunConfig>,
+}
+
+struct Pending {
+    id: u64,
+    prompt: Vec<i32>,
+    max_new: usize,
+    cfg: Option<RunConfig>,
+    arrived_tick: u64,
+}
+
+/// Per-slot lifecycle state (admit → active → retire).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Slot {
+    /// No conversation resident; admission resets the engine.
+    Free,
+    /// A conversation is resident and decoding.
+    Active { id: u64, admitted_tick: u64, waited_ticks: u64 },
+}
+
+/// A retired conversation turn: the output plus its admission timeline.
+pub struct Completion {
+    /// The id given at [`ContinuousScheduler::submit`].
+    pub id: u64,
+    /// Slot index the conversation decoded on (its engine still holds the
+    /// conversation context — a [`Disposition::Continue`] keeps using it).
+    pub slot: usize,
+    /// The turn's generation output.
+    pub out: GenOut,
+    /// Tick at which the conversation was admitted into the group.
+    pub admitted_tick: u64,
+    /// Tick at which this turn retired.
+    pub finished_tick: u64,
+    /// Ticks the conversation waited in the admission queue (0 when a
+    /// slot was free on arrival; bounded by FIFO admission — see the
+    /// fairness property in `tests/continuous.rs`).
+    pub waited_ticks: u64,
+}
+
+/// What to do with a slot after a [`Completion`].
+pub enum Disposition {
+    /// The conversation is done: free the slot for the admission queue.
+    Release,
+    /// Begin the conversation's next turn on the same slot (engine
+    /// context preserved — MT-Bench-style multi-turn residency).
+    Continue {
+        /// Follow-up prompt tokens of the next turn.
+        prompt: Vec<i32>,
+        /// Soft output-token deadline of the next turn.
+        max_new: usize,
+    },
+}
+
+/// Scheduler counters (cumulative over the scheduler's lifetime).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SchedulerStats {
+    /// Conversations submitted to the admission queue.
+    pub submitted: u64,
+    /// Conversations admitted into a slot.
+    pub admitted: u64,
+    /// Turn completions retired (multi-turn conversations retire once per
+    /// turn).
+    pub retired: u64,
+    /// Scheduler ticks executed.
+    pub ticks: u64,
+    /// Fused verification launches issued.
+    pub fused_launches: u64,
+    /// Largest queue wait (ticks between submit and admission) observed.
+    pub max_wait_ticks: u64,
+}
+
+/// Slot-based continuous-batching scheduler (see the module docs for the
+/// lifecycle and tick protocol).
+///
+/// Two driving styles share the same fused-verification core:
+///
+/// * **continuous** — [`ContinuousScheduler::submit`] conversations, then
+///   [`ContinuousScheduler::tick`] (or
+///   [`ContinuousScheduler::run_to_idle`]); the scheduler owns admission,
+///   retirement and multi-turn continuation via [`Disposition`]s;
+/// * **externally begun** — the caller runs
+///   [`Engine::begin_speculative`] itself and
+///   [`ContinuousScheduler::drive`] fuses every in-flight engine to
+///   completion (the PR-2 fixed-group protocol; callers then
+///   [`Engine::take_output`] themselves).
+pub struct ContinuousScheduler {
+    fuse_width: usize,
+    verifier: FusedVerifier,
+    queue: VecDeque<Pending>,
+    slots: Vec<Slot>,
+    tick_now: u64,
+    /// Reusable ready-set staging of the current tick.
+    ready: Vec<usize>,
+    /// Reusable staging for the mode partition: the current same-mode
+    /// group being launched, and the remainder carried to the next pass.
+    group_buf: Vec<usize>,
+    ready_alt: Vec<usize>,
+    /// Cumulative scheduler counters.
+    pub stats: SchedulerStats,
+}
+
+impl ContinuousScheduler {
+    /// A scheduler fusing up to `max_batch` requests per launch, for
+    /// caches of capacity `cache_cap`.
+    ///
+    /// # Panics
+    ///
+    /// Panics if `max_batch == 0` — a zero-width group is a config
+    /// contract violation (the serve path rejects it with a proper error
+    /// before constructing a scheduler).
+    pub fn new(max_batch: usize, cache_cap: usize) -> Self {
+        assert!(max_batch >= 1, "config contract: max_batch must be >= 1");
+        Self {
+            fuse_width: max_batch,
+            verifier: FusedVerifier::new(cache_cap),
+            queue: VecDeque::new(),
+            slots: Vec::new(),
+            tick_now: 0,
+            ready: Vec::new(),
+            group_buf: Vec::new(),
+            ready_alt: Vec::new(),
+            stats: SchedulerStats::default(),
+        }
+    }
+
+    /// The configured fusion width (largest request count per launch).
+    pub fn max_batch(&self) -> usize {
+        self.fuse_width
+    }
+
+    /// Queue a conversation for admission (FIFO).
+    pub fn submit(&mut self, req: SlotRequest) {
+        self.stats.submitted += 1;
+        self.queue.push_back(Pending {
+            id: req.id,
+            prompt: req.prompt,
+            max_new: req.max_new,
+            cfg: req.cfg,
+            arrived_tick: self.tick_now,
+        });
+    }
+
+    /// Conversations waiting in the admission queue.
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Slots currently holding an active conversation.
+    pub fn active(&self) -> usize {
+        self.slots.iter().filter(|s| matches!(s, Slot::Active { .. })).count()
+    }
+
+    /// Whether the scheduler has nothing queued and nothing active.
+    pub fn is_idle(&self) -> bool {
+        self.queue.is_empty() && self.slots.iter().all(|s| *s == Slot::Free)
+    }
+
+    /// The current tick index (starts at 0, advances once per
+    /// [`ContinuousScheduler::tick`]).
+    pub fn current_tick(&self) -> u64 {
+        self.tick_now
+    }
+
+    /// Error recovery after a failed drive: drop every queued
+    /// conversation and free every slot *without* retiring them (no
+    /// outputs are produced). Slot engines are left as-is — reset them
+    /// before reusing the scheduler, or their stale in-flight state will
+    /// poison the next drive.
+    pub fn abort_all(&mut self) {
+        self.queue.clear();
+        for s in self.slots.iter_mut() {
+            *s = Slot::Free;
+        }
+    }
+
+    fn ensure_slots(&mut self, n: usize) -> Result<()> {
+        if self.slots.len() < n {
+            self.slots.resize(n, Slot::Free);
+        }
+        anyhow::ensure!(
+            self.slots.len() == n,
+            "engine slice shrank under the scheduler: {} slots tracked, {} engines",
+            self.slots.len(),
+            n
+        );
+        Ok(())
+    }
+
+    /// One scheduler tick: retire finished/stalled conversations (calling
+    /// `on_done` for each), admit queued conversations into freed slots,
+    /// then run one fused verification round over every ready slot.
+    ///
+    /// `engines[i]` is slot `i`'s resident engine; the slice must keep
+    /// its length across ticks.
+    pub fn tick(
+        &mut self,
+        backend: &mut dyn ModelBackend,
+        engines: &mut [Engine],
+        on_done: &mut dyn FnMut(Completion) -> Disposition,
+    ) -> Result<()> {
+        self.ensure_slots(engines.len())?;
+        anyhow::ensure!(
+            !(engines.is_empty() && !self.queue.is_empty()),
+            "queued conversations but no engine slots"
+        );
+        // 1. Retire: close every active slot whose engine no longer wants
+        // a round (deadline reached or stalled out of cache headroom).
+        for si in 0..self.slots.len() {
+            let Slot::Active { id, admitted_tick, waited_ticks } = self.slots[si] else {
+                continue;
+            };
+            if engines[si].needs_more() {
+                continue;
+            }
+            anyhow::ensure!(
+                engines[si].has_inflight(),
+                "slot {si} lost its in-flight generation (engine driven outside the scheduler?)"
+            );
+            let out = engines[si].take_output()?;
+            self.stats.retired += 1;
+            let comp = Completion {
+                id,
+                slot: si,
+                out,
+                admitted_tick,
+                finished_tick: self.tick_now,
+                waited_ticks,
+            };
+            match on_done(comp) {
+                Disposition::Release => self.slots[si] = Slot::Free,
+                Disposition::Continue { prompt, max_new } => {
+                    // next turn of the same conversation: context (both KV
+                    // caches) is preserved, so no reset — the slot stays
+                    // active under the same id.
+                    engines[si].begin_speculative(backend, &prompt, max_new)?;
+                }
+            }
+        }
+        // 2. Admit: fill freed slots from the queue, FIFO.
+        for si in 0..self.slots.len() {
+            if self.queue.is_empty() {
+                break;
+            }
+            if self.slots[si] != Slot::Free {
+                continue;
+            }
+            let mut p = self.queue.pop_front().expect("queue checked non-empty");
+            match p.cfg.take() {
+                Some(cfg) => engines[si].set_config(cfg),
+                None => engines[si].reset(),
+            }
+            // name the request in the error chain: an invalid config or
+            // an over-long prompt fails *here*, after the pop, and the
+            // caller needs to know which submission was consumed
+            engines[si]
+                .begin_speculative(backend, &p.prompt, p.max_new)
+                .with_context(|| format!("admitting conversation {}", p.id))?;
+            let waited = self.tick_now - p.arrived_tick;
+            self.stats.admitted += 1;
+            self.stats.max_wait_ticks = self.stats.max_wait_ticks.max(waited);
+            self.slots[si] =
+                Slot::Active { id: p.id, admitted_tick: self.tick_now, waited_ticks: waited };
+        }
+        // 3. One fused verification round over every ready slot — a
+        // conversation admitted in step 2 joins this very launch.
+        self.fused_round(backend, engines)?;
+        self.stats.ticks += 1;
+        self.tick_now += 1;
+        Ok(())
+    }
+
+    /// Tick until the queue is empty and every slot is free. `on_done`
+    /// decides per completion whether the conversation continues (next
+    /// turn, same slot) or releases its slot.
+    pub fn run_to_idle(
+        &mut self,
+        backend: &mut dyn ModelBackend,
+        engines: &mut [Engine],
+        on_done: &mut dyn FnMut(Completion) -> Disposition,
+    ) -> Result<()> {
+        loop {
+            self.tick(backend, engines, on_done)?;
+            if self.is_idle() {
+                return Ok(());
+            }
+        }
+    }
+
+    /// Drive every engine with an in-flight generation to completion,
+    /// fusing up to `max_batch` verifications per tick — the
+    /// externally-begun protocol: the caller ran
+    /// [`Engine::begin_speculative`] and calls [`Engine::take_output`]
+    /// itself. Engines without an in-flight generation are skipped, so
+    /// ragged groups shrink naturally (no admission happens here; use
+    /// [`ContinuousScheduler::submit`] + [`ContinuousScheduler::tick`]
+    /// for continuous admission).
+    pub fn drive(&mut self, backend: &mut dyn ModelBackend, engines: &mut [Engine]) -> Result<()> {
+        while self.fused_round(backend, engines)? {}
+        Ok(())
+    }
+
+    /// Collect the ready set and run one fused verification round over
+    /// it, chunked by the fusion width. Returns whether any engine was
+    /// ready.
+    fn fused_round(
+        &mut self,
+        backend: &mut dyn ModelBackend,
+        engines: &mut [Engine],
+    ) -> Result<bool> {
+        self.ready.clear();
+        for (i, e) in engines.iter().enumerate() {
+            if e.needs_more() {
+                self.ready.push(i);
+            }
+        }
+        if self.ready.is_empty() {
+            return Ok(false);
+        }
+        // heterogeneous per-request configs may mix fused/eager execution,
+        // and a launch must be mode-uniform — stable-partition the ready
+        // set by mode (order preserved within a mode, so outputs are
+        // unchanged): same-mode slots fuse at full width no matter how
+        // the modes interleave across slots.
+        while !self.ready.is_empty() {
+            let mode = engines[self.ready[0]].cfg.mode;
+            self.group_buf.clear();
+            self.ready_alt.clear();
+            for &i in &self.ready {
+                if engines[i].cfg.mode == mode {
+                    self.group_buf.push(i);
+                } else {
+                    self.ready_alt.push(i);
+                }
+            }
+            for group in self.group_buf.chunks(self.fuse_width) {
+                for &i in group {
+                    engines[i].prepare_verify(backend)?;
+                }
+                self.verifier.verify_group(backend, engines, group)?;
+                self.stats.fused_launches += 1;
+                for &i in group {
+                    engines[i].finish_verify()?;
+                }
+            }
+            std::mem::swap(&mut self.ready, &mut self.ready_alt);
+        }
+        Ok(true)
+    }
+}
+
 /// Convenience driver: begin a speculative generation on every engine
 /// (engine `i` decodes `prompts[i]`), drive them to completion with fused
 /// verification, and return the per-request outputs in input order.
 ///
 /// For per-request `max_new` (ragged deadlines), call
-/// [`Engine::begin_speculative`] yourself, then [`BatchScheduler::run`]
-/// and [`Engine::take_output`] — this helper is the uniform-deadline
-/// common case.
+/// [`Engine::begin_speculative`] yourself, then
+/// [`ContinuousScheduler::drive`] and [`Engine::take_output`] — and for
+/// conversations that *arrive over time*, use
+/// [`ContinuousScheduler::submit`] + [`ContinuousScheduler::tick`]
+/// (continuous admission). This helper is the uniform-deadline,
+/// all-present common case.
 pub fn decode_speculative_batch(
     backend: &mut dyn ModelBackend,
     engines: &mut [Engine],
     prompts: &[Vec<i32>],
     max_new: usize,
-    sched: &mut BatchScheduler,
+    sched: &mut ContinuousScheduler,
 ) -> Result<Vec<GenOut>> {
     anyhow::ensure!(
         engines.len() == prompts.len(),
@@ -177,7 +568,7 @@ pub fn decode_speculative_batch(
     for (e, p) in engines.iter_mut().zip(prompts) {
         e.begin_speculative(backend, p, max_new)?;
     }
-    sched.run(backend, engines)?;
+    sched.drive(backend, engines)?;
     engines.iter_mut().map(Engine::take_output).collect()
 }
 
@@ -216,7 +607,7 @@ mod tests {
         let mut engines: Vec<Engine> =
             cfgs.iter().map(|cfg| Engine::new(&b, cfg.clone())).collect();
         let cap = b.contract().cache_cap;
-        let mut sched = BatchScheduler::new(max_batch, cap);
+        let mut sched = ContinuousScheduler::new(max_batch, cap);
         decode_speculative_batch(&mut b, &mut engines, prompts, max_new, &mut sched).unwrap()
     }
 
@@ -268,7 +659,7 @@ mod tests {
         let mut engines: Vec<Engine> =
             cfgs.iter().map(|cfg| Engine::new(&b_bat, cfg.clone())).collect();
         let cap = b_bat.contract().cache_cap;
-        let mut sched = BatchScheduler::new(4, cap);
+        let mut sched = ContinuousScheduler::new(4, cap);
         decode_speculative_batch(&mut b_bat, &mut engines, &prompts, 16, &mut sched).unwrap();
         let bat_launches = b_bat.teacher_calls;
 
@@ -279,13 +670,13 @@ mod tests {
     }
 
     #[test]
-    fn run_with_no_inflight_generations_is_a_noop() {
+    fn drive_with_no_inflight_generations_is_a_noop() {
         let b = SimBackend::new(90);
         let mut engines = vec![Engine::new(&b, RunConfig::default())];
         let cap = b.contract().cache_cap;
-        let mut sched = BatchScheduler::new(2, cap);
+        let mut sched = ContinuousScheduler::new(2, cap);
         let mut b = b;
-        sched.run(&mut b, &mut engines).unwrap();
+        sched.drive(&mut b, &mut engines).unwrap();
         assert!(engines[0].take_output().is_err(), "nothing was in flight");
     }
 
@@ -300,5 +691,121 @@ mod tests {
         for (s, b) in seq.iter().zip(&bat) {
             assert_eq!(s.tokens, b.tokens);
         }
+    }
+
+    #[test]
+    #[should_panic(expected = "max_batch must be >= 1")]
+    fn zero_width_scheduler_is_rejected() {
+        let _ = ContinuousScheduler::new(0, 64);
+    }
+
+    #[test]
+    fn continuous_admission_refills_straggler_slots() {
+        // 2 slots, 4 conversations, one a 1-token straggler: the queue
+        // must refill the freed slot without restarting the group, every
+        // output bit-identical to sequential, and the scheduler stats
+        // must account every admission and retirement.
+        let agree = 85u64;
+        let prompts: Vec<Vec<i32>> = (0..4).map(|i| prompt(8 + i * 3, 700 + i as u64)).collect();
+        let deadlines = [1usize, 18, 18, 12];
+
+        let seq: Vec<GenOut> = prompts
+            .iter()
+            .zip(deadlines)
+            .map(|(p, m)| {
+                let mut b = SimBackend::new(agree);
+                let mut e = Engine::new(&b, RunConfig::default());
+                e.generate_speculative(&mut b, p, m).unwrap()
+            })
+            .collect();
+
+        let mut bk = SimBackend::new(agree);
+        let mut engines: Vec<Engine> =
+            (0..2).map(|_| Engine::new(&bk, RunConfig::default())).collect();
+        let cap = bk.contract().cache_cap;
+        let mut sched = ContinuousScheduler::new(2, cap);
+        for (i, (p, m)) in prompts.iter().zip(deadlines).enumerate() {
+            sched.submit(SlotRequest {
+                id: i as u64,
+                prompt: p.clone(),
+                max_new: m,
+                cfg: None,
+            });
+        }
+        let mut outs: Vec<Option<GenOut>> = (0..4).map(|_| None).collect();
+        sched
+            .run_to_idle(&mut bk, &mut engines, &mut |c: Completion| {
+                outs[c.id as usize] = Some(c.out);
+                Disposition::Release
+            })
+            .unwrap();
+
+        for (i, s) in seq.iter().enumerate() {
+            let got = outs[i].as_ref().expect("every conversation completes");
+            assert_eq!(got.tokens, s.tokens, "conversation {i} diverged");
+            assert_eq!(got.accept_lens, s.accept_lens);
+        }
+        assert_eq!(sched.stats.submitted, 4);
+        assert_eq!(sched.stats.admitted, 4);
+        assert_eq!(sched.stats.retired, 4);
+        assert!(sched.is_idle());
+        assert!(sched.stats.fused_launches > 0);
+    }
+
+    #[test]
+    fn tick_on_idle_scheduler_is_a_noop() {
+        let mut b = SimBackend::new(90);
+        let cap = b.contract().cache_cap;
+        let mut engines = vec![Engine::new(&b, RunConfig::default())];
+        let mut sched = ContinuousScheduler::new(1, cap);
+        sched
+            .tick(&mut b, &mut engines, &mut |_c| Disposition::Release)
+            .unwrap();
+        assert!(sched.is_idle());
+        assert_eq!(sched.stats.retired, 0);
+        assert_eq!(sched.current_tick(), 1);
+    }
+
+    #[test]
+    fn per_request_config_is_applied_at_admission() {
+        // a request carrying its own RunConfig must decode exactly like a
+        // fresh engine built with that config, even though the slot
+        // engine was constructed (and previously used) with another one.
+        let agree = 90u64;
+        let p = prompt(11, 900);
+        let mut want_cfg = RunConfig::default();
+        want_cfg.tree.budget = 3;
+        want_cfg.tree.depth_max = 4;
+        // a cache-strategy change must rebuild the slot's managed caches
+        want_cfg.cache_strategy = crate::config::CacheStrategy::DeepCopy;
+
+        let mut rb = SimBackend::new(agree);
+        let mut re = Engine::new(&rb, want_cfg.clone());
+        let want = re.generate_speculative(&mut rb, &p, 16).unwrap();
+
+        let mut bk = SimBackend::new(agree);
+        let mut engines = vec![Engine::new(&bk, RunConfig::default())];
+        // burn a first conversation under the slot's default config
+        engines[0]
+            .generate_speculative(&mut bk, &prompt(7, 901), 6)
+            .unwrap();
+        let cap = bk.contract().cache_cap;
+        let mut sched = ContinuousScheduler::new(1, cap);
+        sched.submit(SlotRequest { id: 0, prompt: p, max_new: 16, cfg: Some(want_cfg) });
+        let mut got: Option<GenOut> = None;
+        sched
+            .run_to_idle(&mut bk, &mut engines, &mut |c: Completion| {
+                got = Some(c.out);
+                Disposition::Release
+            })
+            .unwrap();
+        let got = got.unwrap();
+        assert_eq!(got.tokens, want.tokens);
+        assert_eq!(got.accept_lens, want.accept_lens);
+        assert_eq!(
+            got.teacher_cache, want.teacher_cache,
+            "cache strategy change must rebuild the slot caches"
+        );
+        assert!(got.teacher_cache.replicate_bytes > 0, "DeepCopy must replicate");
     }
 }

@@ -1,11 +1,14 @@
 //! The serving coordinator (paper §4.4): deterministic prompt sharding
-//! across worker threads, cross-request batched verification
-//! ([`BatchScheduler`]), per-rank trace files, rank-0 merge.
+//! across worker threads, continuous cross-request batched verification
+//! ([`ContinuousScheduler`]), per-rank trace files, rank-0 merge.
 
 pub mod batch;
 pub mod load;
 pub mod runner;
 
-pub use batch::{decode_speculative_batch, BatchScheduler};
+pub use batch::{
+    decode_speculative_batch, Completion, ContinuousScheduler, Disposition, FusedVerifier,
+    SchedulerStats, SlotRequest,
+};
 pub use load::{run_load, LoadReport, LoadSpec};
-pub use runner::{run_workload, BackendSpec, CoordinatorConfig};
+pub use runner::{run_workload, AdmissionPolicy, BackendSpec, CoordinatorConfig};

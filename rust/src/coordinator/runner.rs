@@ -17,24 +17,32 @@
 //! engine's reuse-equivalence test), so the records are unchanged.
 //!
 //! With `max_batch > 1` a worker holds that many conversations resident
-//! (one engine each) and the EA kind decodes them **concurrently**: each
-//! tick fuses the group's tree verifications into one padded teacher
-//! launch through the [`BatchScheduler`] (the batching contract in
-//! `docs/ARCHITECTURE.md`). Token-level records are bit-identical to the
-//! sequential path — only wall-clock changes (asserted by a test below) —
-//! so `max_batch` is purely a throughput knob. Memory cost: one teacher +
-//! draft KV cache pair per slot.
+//! (one engine slot each) and the EA kind decodes them **concurrently**
+//! through the [`ContinuousScheduler`]: each tick fuses the live group's
+//! tree verifications into one padded teacher launch, retired
+//! conversations free their slot, and the next queued conversation is
+//! admitted at the same tick — so ragged traffic (one-token stragglers
+//! next to long turns) keeps launches at full width instead of draining
+//! the group (the batching contract + slot lifecycle in
+//! `docs/ARCHITECTURE.md`). `CoordinatorConfig::scheduling` selects
+//! [`AdmissionPolicy::Continuous`] (default) or
+//! [`AdmissionPolicy::Chunked`] fixed admission groups for A/B
+//! comparison.
+//! Token-level records are bit-identical to the sequential path either
+//! way — only wall-clock changes (asserted by a test below) — so
+//! `max_batch`/`scheduling` are purely throughput knobs. Memory cost:
+//! one teacher + draft KV cache pair per slot.
 //!
-//! Two-turn conversations keep cache state across turns and materialize
-//! follow-up prompts from the live context (MT-Bench protocol). Abnormal
-//! turns produce a failure dump and the run continues (§4.3); in a
-//! batched group the dump granularity is the group (the fused launch is
-//! shared), each member conversation receiving a dump that names the
-//! error.
+//! Two-turn conversations keep cache state across turns: a retiring turn
+//! *continues* on its slot (engine context preserved) instead of
+//! releasing it, and materializes its follow-up prompt from the live
+//! context (MT-Bench protocol). Abnormal turns produce a failure dump
+//! and the run continues (§4.3); a scheduler-level error dumps every
+//! conversation still in flight, each dump naming the error.
 
 use crate::backend::{sim::SimBackend, ModelBackend};
 use crate::config::RunConfig;
-use crate::coordinator::batch::BatchScheduler;
+use crate::coordinator::batch::{Completion, ContinuousScheduler, Disposition, SlotRequest};
 use crate::engine::Engine;
 use crate::json::Json;
 use crate::runtime::PjrtBackend;
@@ -77,6 +85,44 @@ impl BackendSpec {
     }
 }
 
+/// How a worker forms EA verification groups when `max_batch > 1`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AdmissionPolicy {
+    /// Slot-based continuous batching (the default): a retired
+    /// conversation frees its slot and the next queued conversation is
+    /// admitted at the same tick, so fused launches stay at full width
+    /// under ragged traffic.
+    Continuous,
+    /// Fixed admission groups (the A/B reference the bench measures
+    /// against): conversations are admitted in chunks of `max_batch`
+    /// and the next chunk starts only after the whole chunk retires —
+    /// a straggler-heavy chunk drains to narrow launches. Note this
+    /// reproduces PR-2's *admission* barrier, not its per-turn barrier:
+    /// within a chunk a finished turn continues into its next turn
+    /// immediately instead of waiting for slot-mates' current turns
+    /// (tokens are identical either way; only launch grouping differs).
+    Chunked,
+}
+
+impl AdmissionPolicy {
+    /// Parse a `--scheduling` flag value (`continuous` | `chunked`).
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "continuous" => Ok(Self::Continuous),
+            "chunked" => Ok(Self::Chunked),
+            other => anyhow::bail!("unknown scheduling policy '{other}' (continuous|chunked)"),
+        }
+    }
+
+    /// Stable name for manifests and logs.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Self::Continuous => "continuous",
+            Self::Chunked => "chunked",
+        }
+    }
+}
+
 /// Everything a coordinator run needs to know.
 #[derive(Clone, Debug)]
 pub struct CoordinatorConfig {
@@ -94,9 +140,12 @@ pub struct CoordinatorConfig {
     pub run_baseline: bool,
     /// Decode every conversation with tree speculation ("ea").
     pub run_ea: bool,
-    /// Conversations resident per worker; EA verification is fused
-    /// across them per tick when > 1 (token-identical, faster wall).
+    /// Engine slots resident per worker (the fused launch width); must be
+    /// `>= 1` — `run_workload` rejects 0 with a config-contract error
+    /// instead of silently degenerating to sequential serving.
     pub max_batch: usize,
+    /// Group-formation policy for the EA kind when `max_batch > 1`.
+    pub scheduling: AdmissionPolicy,
     /// Print progress lines to stderr.
     pub verbose: bool,
 }
@@ -112,6 +161,7 @@ impl CoordinatorConfig {
             .push("run_baseline", self.run_baseline)
             .push("run_ea", self.run_ea)
             .push("max_batch", self.max_batch)
+            .push("scheduling", self.scheduling.as_str())
             .push("workload_seed", self.workload.seed);
         o
     }
@@ -121,6 +171,11 @@ impl CoordinatorConfig {
 /// globally sorted records.
 pub fn run_workload(cfg: &CoordinatorConfig) -> Result<Vec<TurnRecord>> {
     anyhow::ensure!(cfg.world_size >= 1, "world_size must be >= 1");
+    anyhow::ensure!(
+        cfg.max_batch >= 1,
+        "config contract: max_batch must be >= 1 (got {}) — pass --batch 1 for sequential serving",
+        cfg.max_batch
+    );
     std::fs::create_dir_all(&cfg.trace_dir)?;
     crate::trace::writer::write_manifest(&cfg.trace_dir, cfg.manifest())?;
     let conversations = cfg.workload.conversations();
@@ -162,50 +217,68 @@ fn worker(
     // (conversation, kind): warmup absorbs lazy PJRT module compilation
     // AND brings every reusable buffer (KV caches, scratch arenas, mask
     // slots) to its high-water capacity before any timed turn.
-    let slots = cfg.max_batch.max(1);
+    let slots = cfg.max_batch;
     let mut engines: Vec<Engine> =
         (0..slots).map(|_| Engine::new(&*backend, cfg.run.clone())).collect();
     for e in engines.iter_mut() {
         e.warmup(&mut *backend)?;
     }
-    let mut sched = BatchScheduler::new(slots, backend.contract().cache_cap);
+    let mut sched = ContinuousScheduler::new(slots, backend.contract().cache_cap);
     let mut writer = TraceWriter::create(&cfg.trace_dir, rank)?;
-    for chunk in convs.chunks(slots) {
-        if cfg.run_baseline {
-            for conv in chunk {
+    let progress = || {
+        let n = done.fetch_add(1, Ordering::Relaxed) + 1;
+        if cfg.verbose && (n % 10 == 0 || n == total) {
+            eprintln!("[coordinator] {n}/{total} conversations done");
+        }
+    };
+    if cfg.run_baseline {
+        for conv in &convs {
+            engines[0].reset();
+            if let Err(e) = run_conversation(
+                &mut *backend, &mut engines[0], cfg, conv, "baseline", rank, &mut writer)
+            {
+                dump_failure(&writer, conv, "baseline", rank, cfg, &e);
+            }
+            if !cfg.run_ea {
+                progress();
+            }
+        }
+    }
+    if cfg.run_ea {
+        let mut progress = progress;
+        if slots <= 1 {
+            for conv in &convs {
                 engines[0].reset();
                 if let Err(e) = run_conversation(
-                    &mut *backend, &mut engines[0], cfg, conv, "baseline", rank, &mut writer)
+                    &mut *backend, &mut engines[0], cfg, conv, "ea", rank, &mut writer)
                 {
-                    dump_failure(&writer, conv, "baseline", rank, cfg, &e);
-                }
-            }
-        }
-        if cfg.run_ea {
-            if slots <= 1 {
-                for conv in chunk {
-                    engines[0].reset();
-                    if let Err(e) = run_conversation(
-                        &mut *backend, &mut engines[0], cfg, conv, "ea", rank, &mut writer)
-                    {
-                        dump_failure(&writer, conv, "ea", rank, cfg, &e);
-                    }
-                }
-            } else if let Err(e) =
-                run_group_ea(&mut *backend, &mut engines, &mut sched, cfg, chunk, rank, &mut writer)
-            {
-                // the fused launch is shared: dump the error for every
-                // member so each conversation stays traceable
-                for conv in chunk {
                     dump_failure(&writer, conv, "ea", rank, cfg, &e);
                 }
+                progress();
+            }
+        } else {
+            match cfg.scheduling {
+                AdmissionPolicy::Continuous => {
+                    // every conversation of this rank enters one admission
+                    // queue; slots refill as conversations retire
+                    run_group_ea(
+                        &mut *backend, &mut engines, &mut sched, cfg, &convs, rank,
+                        &mut writer, &mut progress,
+                    );
+                }
+                AdmissionPolicy::Chunked => {
+                    for chunk in convs.chunks(slots) {
+                        run_group_ea(
+                            &mut *backend, &mut engines, &mut sched, cfg, chunk, rank,
+                            &mut writer, &mut progress,
+                        );
+                    }
+                }
             }
         }
-        for _ in chunk {
-            let n = done.fetch_add(1, Ordering::Relaxed) + 1;
-            if cfg.verbose && (n % 10 == 0 || n == total) {
-                eprintln!("[coordinator] {n}/{total} conversations done");
-            }
+    } else if !cfg.run_baseline {
+        for _ in &convs {
+            progress();
         }
     }
     writer.flush()?;
@@ -276,54 +349,95 @@ fn run_conversation(
     Ok(())
 }
 
-/// Decode a group of conversations concurrently under the EA kind:
-/// turn-by-turn, each turn's speculative rounds fused across the group
-/// by the scheduler. Token-level records are bit-identical to the
-/// sequential path.
+/// Decode a set of conversations concurrently under the EA kind through
+/// the continuous scheduler: all members enter the admission queue, a
+/// retired conversation frees its slot for the next queued one at the
+/// same tick, and multi-turn conversations *continue* on their slot
+/// (engine context preserved) until their last turn retires. Token-level
+/// records are bit-identical to the sequential path.
+///
+/// Failure protocol (§4.3): a record-write failure dumps that
+/// conversation and releases its slot; a scheduler-drive error dumps
+/// every conversation that had not completed, and the worker continues
+/// with whatever comes next.
+#[allow(clippy::too_many_arguments)]
 fn run_group_ea(
     backend: &mut dyn ModelBackend,
     engines: &mut [Engine],
-    sched: &mut BatchScheduler,
+    sched: &mut ContinuousScheduler,
     cfg: &CoordinatorConfig,
     convs: &[ConversationSpec],
     rank: usize,
     writer: &mut TraceWriter,
-) -> Result<()> {
+    progress: &mut dyn FnMut(),
+) {
     let n = convs.len();
-    debug_assert!(n <= engines.len());
-    for e in engines[..n].iter_mut() {
-        e.reset();
-    }
     let mut ctxs: Vec<Vec<i32>> = vec![Vec::new(); n];
-    let max_turns = convs.iter().map(ConversationSpec::turns).max().unwrap_or(0);
-    for turn in 0..max_turns {
-        let mut active: Vec<usize> = Vec::new();
-        for (i, conv) in convs.iter().enumerate() {
-            if turn >= conv.turns() {
-                continue; // shorter conversation: slot idles this turn
-            }
-            let prompt = if turn == 0 {
-                conv.first_prompt()
-            } else {
-                let c = &ctxs[i];
-                conv.followup_prompt(turn, c[c.len() - 2], c[c.len() - 1])
-            };
-            engines[i].begin_speculative(backend, &prompt, cfg.run.max_new_tokens)?;
-            ctxs[i].extend(&prompt);
-            active.push(i);
+    let mut turn_of: Vec<usize> = vec![0; n];
+    let mut completed: Vec<bool> = vec![false; n];
+    for (i, conv) in convs.iter().enumerate() {
+        let p = conv.first_prompt();
+        ctxs[i].extend(&p);
+        sched.submit(SlotRequest {
+            id: i as u64,
+            prompt: p,
+            max_new: cfg.run.max_new_tokens,
+            cfg: None,
+        });
+    }
+    let res = sched.run_to_idle(backend, engines, &mut |comp: Completion| {
+        let i = comp.id as usize;
+        ctxs[i].extend(&comp.out.tokens);
+        let turn = turn_of[i];
+        let rec = TurnRecord::from_gen(
+            convs[i].id, turn, rank, convs[i].profile.as_str(), "ea", &comp.out);
+        if let Err(e) = writer.write(&rec) {
+            completed[i] = true;
+            dump_failure(writer, &convs[i], "ea", rank, cfg, &e);
+            progress();
+            return Disposition::Release;
         }
-        // engines without an in-flight generation are skipped by the
-        // scheduler, so driving the whole slice is safe
-        sched.run(backend, &mut engines[..n])?;
-        for &i in &active {
-            let out = engines[i].take_output()?;
-            ctxs[i].extend(&out.tokens);
-            let rec = TurnRecord::from_gen(
-                convs[i].id, turn, rank, convs[i].profile.as_str(), "ea", &out);
-            writer.write(&rec)?;
+        turn_of[i] += 1;
+        if turn_of[i] < convs[i].turns() {
+            let c = &ctxs[i];
+            let prompt = convs[i].followup_prompt(turn_of[i], c[c.len() - 2], c[c.len() - 1]);
+            ctxs[i].extend(&prompt);
+            Disposition::Continue { prompt, max_new: cfg.run.max_new_tokens }
+        } else {
+            completed[i] = true;
+            progress();
+            Disposition::Release
+        }
+    });
+    if let Err(e) = res {
+        // The fused drive is shared, so one bad request aborts the whole
+        // group drive. Bound the blast radius: clear the scheduler and
+        // engines, then retry every conversation that had written NO
+        // records yet in isolation on the sequential path (its own
+        // errors dump only itself). Conversations with partial records
+        // cannot be replayed without duplicating turns — dump those.
+        sched.abort_all();
+        for eng in engines.iter_mut() {
+            eng.reset();
+        }
+        for (i, conv) in convs.iter().enumerate() {
+            if completed[i] {
+                continue;
+            }
+            if turn_of[i] > 0 {
+                dump_failure(writer, conv, "ea", rank, cfg, &e);
+                progress();
+            } else {
+                engines[0].reset();
+                if let Err(e2) =
+                    run_conversation(backend, &mut engines[0], cfg, conv, "ea", rank, writer)
+                {
+                    dump_failure(writer, conv, "ea", rank, cfg, &e2);
+                }
+                progress();
+            }
         }
     }
-    Ok(())
 }
 
 #[cfg(test)]
@@ -350,6 +464,7 @@ mod tests {
             run_baseline: true,
             run_ea: true,
             max_batch: 1,
+            scheduling: AdmissionPolicy::Continuous,
             verbose: false,
         }
     }
@@ -390,27 +505,51 @@ mod tests {
 
     #[test]
     fn batched_serving_is_token_identical_to_sequential() {
-        // The serving-layer claim: max_batch only fuses launches, it
-        // never changes what is decoded — record-for-record token
-        // equality against the sequential path.
+        // The serving-layer claim: max_batch (under either admission
+        // policy) only changes how launches are grouped, never what is
+        // decoded — record-for-record token equality against the
+        // sequential path.
         let cfg1 = base_cfg("batch_seq");
         let seq = run_workload(&cfg1).unwrap();
-        let mut cfg4 = base_cfg("batch_fused");
-        cfg4.max_batch = 4;
-        let bat = run_workload(&cfg4).unwrap();
-        assert_eq!(seq.len(), bat.len());
-        for (a, b) in seq.iter().zip(&bat) {
-            assert_eq!(a.conversation_id, b.conversation_id);
-            assert_eq!(a.turn_idx, b.turn_idx);
-            assert_eq!(a.kind, b.kind);
-            assert_eq!(a.output_len, b.output_len, "conv {} turn {}", a.conversation_id,
-                       a.turn_idx);
-            assert_eq!(a.accept_lens, b.accept_lens);
-            assert_eq!(a.teacher_calls, b.teacher_calls);
-            assert_eq!(a.rounds, b.rounds);
+        for (tag, policy) in [
+            ("batch_cont", AdmissionPolicy::Continuous),
+            ("batch_chunk", AdmissionPolicy::Chunked),
+        ] {
+            let mut cfg4 = base_cfg(tag);
+            cfg4.max_batch = 4;
+            cfg4.scheduling = policy;
+            let bat = run_workload(&cfg4).unwrap();
+            assert_eq!(seq.len(), bat.len(), "{tag}");
+            for (a, b) in seq.iter().zip(&bat) {
+                assert_eq!(a.conversation_id, b.conversation_id, "{tag}");
+                assert_eq!(a.turn_idx, b.turn_idx, "{tag}");
+                assert_eq!(a.kind, b.kind, "{tag}");
+                assert_eq!(
+                    a.output_len, b.output_len,
+                    "{tag}: conv {} turn {}", a.conversation_id, a.turn_idx
+                );
+                assert_eq!(a.accept_lens, b.accept_lens, "{tag}");
+                assert_eq!(a.teacher_calls, b.teacher_calls, "{tag}");
+                assert_eq!(a.rounds, b.rounds, "{tag}");
+            }
+            let _ = std::fs::remove_dir_all(&cfg4.trace_dir);
         }
         let _ = std::fs::remove_dir_all(&cfg1.trace_dir);
-        let _ = std::fs::remove_dir_all(&cfg4.trace_dir);
+    }
+
+    #[test]
+    fn zero_max_batch_is_a_config_contract_error() {
+        let mut cfg = base_cfg("batch_zero");
+        cfg.max_batch = 0;
+        let err = run_workload(&cfg).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("max_batch"), "error must name the contract: {msg}");
+        // the run must not have produced any trace directory content
+        assert!(
+            !cfg.trace_dir.join("run_manifest.json").exists(),
+            "rejected run must not write a manifest"
+        );
+        let _ = std::fs::remove_dir_all(&cfg.trace_dir);
     }
 
     #[test]
@@ -422,6 +561,7 @@ mod tests {
         let j = crate::json::parse(&text).unwrap();
         assert_eq!(j.get("world_size").unwrap().as_usize(), Some(2));
         assert_eq!(j.get("max_batch").unwrap().as_usize(), Some(1));
+        assert_eq!(j.get("scheduling").unwrap().as_str(), Some("continuous"));
         assert!(j.at("run.tree_budget").is_some());
         let _ = std::fs::remove_dir_all(&cfg.trace_dir);
     }

@@ -26,8 +26,10 @@
 //! `&mut dyn ModelBackend` per call. This is what makes multi-request
 //! residency possible — a coordinator worker owns *one* backend and `B`
 //! engines (one per resident conversation), and the
-//! [`crate::coordinator::BatchScheduler`] fuses their verification steps
-//! into one launch.
+//! [`crate::coordinator::ContinuousScheduler`] fuses their verification
+//! steps into one launch — and, under continuous admission, swaps which
+//! conversation a slot engine serves at any tick ([`Engine::reset`] /
+//! [`Engine::set_config`] + [`Engine::begin_speculative`]).
 //!
 //! For that, the speculative round is split into externally drivable
 //! phases (the single-request [`Engine::generate_speculative`] is built
@@ -131,7 +133,8 @@ struct InFlight {
 }
 
 /// Borrowed view of a prepared round's verification inputs — what the
-/// [`crate::coordinator::BatchScheduler`] gathers into one fused launch.
+/// [`crate::coordinator::ContinuousScheduler`] gathers into one fused
+/// launch.
 pub struct VerifyPayload<'e> {
     /// `[s]` padded token ids of the tensorized tree.
     pub tokens: &'e [i32],
@@ -361,6 +364,48 @@ impl Engine {
     /// Committed teacher context length (prompt + generated).
     pub fn context_len(&self) -> usize {
         self.t_cache.len()
+    }
+
+    /// Whether a generation is in flight (between
+    /// [`Engine::begin_speculative`] and [`Engine::take_output`]).
+    /// Schedulers use this to tell a resident conversation from a slot
+    /// whose engine was driven (and drained) outside of them.
+    pub fn has_inflight(&self) -> bool {
+        self.inflight.is_some()
+    }
+
+    /// Replace this engine's run configuration and reset it — continuous
+    /// serving admits requests with *heterogeneous* configs onto
+    /// long-lived slot engines. Applies the same tree-budget clamp as
+    /// [`Engine::new`] and re-derives every config-dependent state (rng
+    /// stream, adaptive-budget controller, and — when the cache strategy
+    /// or fast-reorder flag changed — the managed caches themselves), so
+    /// the admitted request decodes bit-identically to a freshly
+    /// constructed engine with the same config. Buffer capacities are
+    /// kept (warmed slots stay warm) except on a cache-strategy change,
+    /// which reallocates the two KV buffers (an admission-boundary cost,
+    /// never a per-round one). Any in-flight generation is dropped.
+    pub fn set_config(&mut self, mut cfg: RunConfig) {
+        let max_nodes = self.contract.teacher_s.iter().copied().max().unwrap_or(8) - 1;
+        cfg.tree.budget = cfg.tree.budget.min(max_nodes);
+        if cfg.cache_strategy != self.cfg.cache_strategy
+            || cfg.fast_reorder != self.cfg.fast_reorder
+        {
+            self.t_cache = ManagedCache::new(
+                self.contract.teacher,
+                self.contract.cache_cap,
+                cfg.cache_strategy,
+                cfg.fast_reorder,
+            );
+            self.d_cache = ManagedCache::new(
+                self.contract.draft,
+                self.contract.cache_cap,
+                cfg.cache_strategy,
+                cfg.fast_reorder,
+            );
+        }
+        self.cfg = cfg;
+        self.reset();
     }
 
     /// Add `secs` to a stage timer (instrumented runs only). Public so

@@ -14,7 +14,7 @@
 //! max_new 1024 -> 128, sweep max_new 256 -> 64, windows {128,256,512} ->
 //! {32,64,128} against the ~4x-shorter contexts.
 
-use crate::coordinator::{run_workload, BackendSpec, CoordinatorConfig};
+use crate::coordinator::{run_workload, AdmissionPolicy, BackendSpec, CoordinatorConfig};
 use crate::config::RunConfig;
 use crate::engine::output::ATTN_BUCKET_LABELS;
 use crate::json::Json;
@@ -76,6 +76,7 @@ impl HarnessConfig {
             run_baseline: baseline,
             run_ea: ea,
             max_batch: 1,
+            scheduling: AdmissionPolicy::Continuous,
             verbose: self.verbose,
         }
     }

@@ -29,7 +29,7 @@
 //! [`tree::Tensorized`]), builds the tree-attention mask
 //! ([`tree::MaskBuilder`]), verifies the whole tree in **one** teacher
 //! call (per request — or one *fused* call for a whole batch of requests
-//! through [`coordinator::BatchScheduler`]), walks acceptance
+//! through [`coordinator::ContinuousScheduler`]), walks acceptance
 //! ([`spec::greedy_walk`]) and commits `1 + accept_L` tokens into the
 //! managed KV cache ([`cache::ManagedCache`]). Under greedy acceptance
 //! the committed text is bit-identical to teacher-only decoding; only the
@@ -43,7 +43,8 @@
 //!   batched serving drives;
 //! * [`backend::ModelBackend`] — the scratch-buffer step contract (sim
 //!   and PJRT implementations);
-//! * [`coordinator::BatchScheduler`] — cross-request fused verification;
+//! * [`coordinator::ContinuousScheduler`] — continuous cross-request
+//!   batching: fused verification plus slot-based admission/retirement;
 //! * [`cache::ManagedCache`] — branch/commit semantics (paper §3.1).
 
 #![warn(missing_docs)]

@@ -296,6 +296,39 @@ impl BatchMask {
         &self.buf
     }
 
+    /// Check the "padding is never attended" invariant for the current
+    /// round: given each request's live padded variant `s_reqs[b]`, every
+    /// padding row `[s_reqs[b], s_max)` and every padding column
+    /// `[cap + s_reqs[b], cap + s_max)` of request `b`'s block must be
+    /// fully closed. Continuous batching re-pads the block every tick as
+    /// group membership changes; the fused verifier asserts this in debug
+    /// builds so a stale open from a previous (larger) round can never
+    /// survive a [`BatchMask::begin`].
+    pub fn padding_closed(&self, s_reqs: &[usize]) -> bool {
+        if s_reqs.len() != self.batch {
+            return false;
+        }
+        let w = self.cap + self.s_max;
+        for (b, &sr) in s_reqs.iter().enumerate() {
+            if sr > self.s_max {
+                return false;
+            }
+            for k in 0..self.s_max {
+                let row = &self.buf[(b * self.s_max + k) * w..(b * self.s_max + k + 1) * w];
+                if k >= sr {
+                    // padding row: fully closed in both directions
+                    if row.iter().any(|x| *x != NEG_INF) {
+                        return false;
+                    }
+                } else if row[self.cap + sr..].iter().any(|x| *x != NEG_INF) {
+                    // live row: padded spec columns stay closed
+                    return false;
+                }
+            }
+        }
+        true
+    }
+
     /// Fused row width `cap + s_max` of the current round.
     pub fn width(&self) -> usize {
         self.cap + self.s_max
@@ -776,6 +809,47 @@ mod tests {
                 "req1 pad row {k}"
             );
         }
+    }
+
+    #[test]
+    fn batch_mask_padding_closed_tracks_membership_changes() {
+        // Continuous batching: group membership (and with it B and S_max)
+        // changes between rounds; every re-pad must leave padding fully
+        // closed, and the checker must catch a leaked open.
+        let mut mb = MaskBuilder::new(CAP);
+        let tens = sample(); // s_req = 8
+        let mut req8 = Vec::new();
+        mb.build_dense(&mut req8, &tens, 10, None);
+        let mut req_chain = Vec::new();
+        mb.build_chain(&mut req_chain, 8, 3, 5, None);
+
+        let mut bm = BatchMask::new(CAP);
+        // round 1: wide group, everything open somewhere
+        bm.begin(3, 16);
+        bm.fill_request(0, &req8, 8);
+        bm.fill_request(1, &req_chain, 8);
+        bm.fill_request(2, &req8, 8);
+        assert!(bm.padding_closed(&[8, 8, 8]));
+        // round 2: a straggler retired and a new conversation admitted —
+        // smaller batch, same re-padded width
+        bm.begin(2, 16);
+        bm.fill_request(0, &req_chain, 8);
+        bm.fill_request(1, &req8, 8);
+        assert!(bm.padding_closed(&[8, 8]));
+        // wrong live counts are rejected
+        assert!(!bm.padding_closed(&[8]), "batch size mismatch must fail");
+        assert!(!bm.padding_closed(&[8, 17]), "s_req > s_max must fail");
+        // a leaked open in a padding row must be caught
+        let w = bm.width();
+        let idx = (16 + 12) * w + 3; // request 1, padding row 12
+        let mut leaked = bm.clone();
+        leaked.buf[idx] = 0.0;
+        assert!(!leaked.padding_closed(&[8, 8]), "leaked padding row open not caught");
+        // ... and a leaked open in a live row's padded spec columns too
+        let idx2 = (16 + 2) * w + CAP + 10; // request 1, live row 2, col cap+10
+        let mut leaked2 = bm;
+        leaked2.buf[idx2] = 0.0;
+        assert!(!leaked2.padding_closed(&[8, 8]), "leaked padded column open not caught");
     }
 
     #[test]

@@ -15,7 +15,7 @@
 use eagle_pangu::backend::sim::SimBackend;
 use eagle_pangu::backend::ModelBackend;
 use eagle_pangu::config::RunConfig;
-use eagle_pangu::coordinator::{decode_speculative_batch, BatchScheduler};
+use eagle_pangu::coordinator::{decode_speculative_batch, ContinuousScheduler};
 use eagle_pangu::engine::Engine;
 use eagle_pangu::util::alloc_count::CountingAlloc;
 use eagle_pangu::util::SplitMix64;
@@ -92,7 +92,7 @@ fn steady_state_batched_rounds_are_allocation_free() {
     for e in engines.iter_mut() {
         e.warmup(&mut b).unwrap();
     }
-    let mut sched = BatchScheduler::new(B, b.contract().cache_cap);
+    let mut sched = ContinuousScheduler::new(B, b.contract().cache_cap);
     // Warmup drive: sizes the fused block to its high-water mark.
     let warm_prompts: Vec<Vec<i32>> = (0..B).map(|i| prompt(15, 10 + i as u64)).collect();
     let outs =

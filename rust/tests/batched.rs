@@ -5,14 +5,14 @@
 //! budgets (hence mixed padded S variants inside one fused launch),
 //! mixed prompt lengths (mixed committed context), mixed `max_new`
 //! including one-token stragglers, optional drafter windows and adaptive
-//! budgets — decoding through the [`BatchScheduler`]'s fused teacher
+//! budgets — decoding through the [`ContinuousScheduler`]'s fused teacher
 //! launches must produce **exactly** the tokens and acceptance shapes of
 //! B independent sequential `generate_speculative` runs.
 
 use eagle_pangu::backend::sim::SimBackend;
 use eagle_pangu::backend::ModelBackend;
 use eagle_pangu::config::{CacheStrategy, CommitMode, RunConfig};
-use eagle_pangu::coordinator::BatchScheduler;
+use eagle_pangu::coordinator::ContinuousScheduler;
 use eagle_pangu::engine::Engine;
 use eagle_pangu::util::prop;
 use eagle_pangu::util::SplitMix64;
@@ -86,8 +86,8 @@ fn property_batched_decode_is_bit_identical_to_sequential() {
         }
         let cap = bk.contract().cache_cap;
         let max_batch = g.usize_in(1, b_count + 1);
-        let mut sched = BatchScheduler::new(max_batch, cap);
-        sched.run(&mut bk, &mut engines).unwrap();
+        let mut sched = ContinuousScheduler::new(max_batch, cap);
+        sched.drive(&mut bk, &mut engines).unwrap();
 
         for (i, (e, s)) in engines.iter_mut().zip(&seq).enumerate() {
             let out = e.take_output().unwrap();
@@ -124,19 +124,19 @@ fn batched_multi_turn_continuation_matches_sequential() {
     let mut bk = SimBackend::new(agree);
     let mut engines: Vec<Engine> = cfgs.iter().map(|c| Engine::new(&bk, c.clone())).collect();
     let cap = bk.contract().cache_cap;
-    let mut sched = BatchScheduler::new(3, cap);
+    let mut sched = ContinuousScheduler::new(3, cap);
     // turn 1 fused
     for (e, p) in engines.iter_mut().zip(&p1) {
         e.begin_speculative(&mut bk, p, 14).unwrap();
     }
-    sched.run(&mut bk, &mut engines).unwrap();
+    sched.drive(&mut bk, &mut engines).unwrap();
     let t1: Vec<Vec<i32>> =
         engines.iter_mut().map(|e| e.take_output().unwrap().tokens).collect();
     // turn 2 fused, on the live per-engine context
     for (e, p) in engines.iter_mut().zip(&p2) {
         e.begin_speculative(&mut bk, p, 14).unwrap();
     }
-    sched.run(&mut bk, &mut engines).unwrap();
+    sched.drive(&mut bk, &mut engines).unwrap();
     let t2: Vec<Vec<i32>> =
         engines.iter_mut().map(|e| e.take_output().unwrap().tokens).collect();
 

@@ -1,0 +1,337 @@
+//! Continuous-batching acceptance properties (the tentpole claims of the
+//! slot-lifecycle batching contract, `docs/ARCHITECTURE.md`):
+//!
+//! 1. **Arrival-schedule bit-identity** — for random requests (mixed
+//!    configs, prompts, deadlines) arriving at random ticks into a
+//!    running group of B ∈ 1..=8 slots, every conversation's output is
+//!    exactly its sequential `generate_speculative` decode, no matter
+//!    when it was admitted or who its slot-mates were.
+//! 2. **Fairness / no starvation** — admission is FIFO (a conversation
+//!    never overtakes an earlier-submitted one) and every ready
+//!    conversation waits at most a workload-derived bounded number of
+//!    ticks for a slot.
+//! 3. **Multi-turn residency** — a retiring turn that *continues* on its
+//!    slot (engine context preserved) decodes its follow-up turn exactly
+//!    like a dedicated sequential engine.
+
+use eagle_pangu::backend::sim::SimBackend;
+use eagle_pangu::backend::ModelBackend;
+use eagle_pangu::config::{CacheStrategy, CommitMode, RunConfig};
+use eagle_pangu::coordinator::{Completion, ContinuousScheduler, Disposition, SlotRequest};
+use eagle_pangu::engine::{Engine, GenOut};
+use eagle_pangu::util::prop;
+use eagle_pangu::util::SplitMix64;
+
+fn prompt(n: usize, seed: u64) -> Vec<i32> {
+    let mut rng = SplitMix64::new(seed);
+    let mut p = vec![1i32]; // BOS
+    for _ in 1..n.max(2) {
+        p.push(rng.range(2, 512) as i32);
+    }
+    p
+}
+
+/// One randomized request spec (mirrors `tests/batched.rs`).
+struct Req {
+    cfg: RunConfig,
+    prompt: Vec<i32>,
+    max_new: usize,
+    arrival: u64,
+}
+
+fn random_request(g: &mut prop::Gen, max_arrival: u64) -> Req {
+    let mut cfg = RunConfig::default();
+    cfg.tree.budget = g.usize_in(1, 33); // ragged padded variants
+    cfg.tree.depth_max = g.usize_in(2, 11);
+    cfg.tree.topk = g.usize_in(1, 5);
+    if g.bool_p(0.2) {
+        cfg.draft_window = Some(g.usize_in(4, 48));
+    }
+    if g.bool_p(0.2) {
+        cfg.adaptive_budget = true;
+    }
+    if g.bool_p(0.15) {
+        cfg.cache_strategy = CacheStrategy::DeepCopy;
+    }
+    if g.bool_p(0.25) {
+        cfg.commit_mode = CommitMode::Length;
+    }
+    if g.bool_p(0.15) {
+        cfg.fast_reorder = false;
+    }
+    let p_len = g.usize_in(4, 48);
+    // one-token stragglers next to long turns: the ragged-traffic case
+    // continuous admission exists for
+    let max_new = if g.bool_p(0.3) { g.usize_in(1, 3) } else { g.usize_in(4, 25) };
+    let arrival = g.usize_in(0, max_arrival as usize + 1) as u64;
+    Req { cfg, prompt: prompt(p_len, g.rng.next_u64()), max_new, arrival }
+}
+
+/// Drive a scheduler over an arrival schedule until every request
+/// completes; returns (outputs by request index, completions in
+/// retirement order).
+fn drive_schedule(
+    agree: u64,
+    slots: usize,
+    reqs: &[Req],
+) -> (Vec<GenOut>, Vec<(u64, u64, u64)>) {
+    let mut bk = SimBackend::new(agree);
+    let mut engines: Vec<Engine> =
+        (0..slots).map(|_| Engine::new(&bk, RunConfig::default())).collect();
+    let cap = bk.contract().cache_cap;
+    let mut sched = ContinuousScheduler::new(slots, cap);
+
+    let n = reqs.len();
+    // submission order: by arrival tick, ties by request index
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by_key(|&i| reqs[i].arrival);
+    let mut next = 0usize;
+    let mut outs: Vec<Option<GenOut>> = (0..n).map(|_| None).collect();
+    // (id, admitted_tick, waited_ticks) in retirement order
+    let mut timeline: Vec<(u64, u64, u64)> = Vec::new();
+    let mut done = 0usize;
+    let mut safety = 0u32;
+    while done < n {
+        while next < n && reqs[order[next]].arrival <= sched.current_tick() {
+            let i = order[next];
+            sched.submit(SlotRequest {
+                id: i as u64,
+                prompt: reqs[i].prompt.clone(),
+                max_new: reqs[i].max_new,
+                cfg: Some(reqs[i].cfg.clone()),
+            });
+            next += 1;
+        }
+        sched
+            .tick(&mut bk, &mut engines, &mut |c: Completion| {
+                timeline.push((c.id, c.admitted_tick, c.waited_ticks));
+                outs[c.id as usize] = Some(c.out);
+                done += 1;
+                Disposition::Release
+            })
+            .unwrap();
+        safety += 1;
+        assert!(safety < 100_000, "scheduler failed to converge");
+    }
+    assert!(sched.is_idle());
+    assert_eq!(sched.stats.admitted, n as u64);
+    assert_eq!(sched.stats.retired, n as u64);
+    (outs.into_iter().map(|o| o.expect("request completed")).collect(), timeline)
+}
+
+#[test]
+fn property_arrival_schedules_are_bit_identical_to_sequential() {
+    prop::for_cases(10, 0xC0_7141, |g| {
+        let slots = g.usize_in(1, 9); // B in 1..=8
+        let n = g.usize_in(1, 13);
+        let agree = *g.choose(&[0u64, 60, 85, 100]);
+        let reqs: Vec<Req> = (0..n).map(|_| random_request(g, 12)).collect();
+
+        // sequential reference: one fresh backend + engine per request
+        let seq: Vec<GenOut> = reqs
+            .iter()
+            .map(|r| {
+                let mut b = SimBackend::new(agree);
+                let mut e = Engine::new(&b, r.cfg.clone());
+                e.generate_speculative(&mut b, &r.prompt, r.max_new).unwrap()
+            })
+            .collect();
+
+        let (outs, _) = drive_schedule(agree, slots, &reqs);
+        for (i, (got, want)) in outs.iter().zip(&seq).enumerate() {
+            assert_eq!(
+                got.tokens, want.tokens,
+                "request {i} tokens diverged (slots={slots}, n={n}, agree={agree}, \
+                 arrival={})",
+                reqs[i].arrival
+            );
+            assert_eq!(got.accept_lens, want.accept_lens, "request {i} acceptance diverged");
+            assert_eq!(got.rounds, want.rounds, "request {i} round count diverged");
+            assert_eq!(got.teacher_calls, want.teacher_calls, "request {i} call accounting");
+        }
+    });
+}
+
+#[test]
+fn property_admission_is_fifo_with_bounded_wait() {
+    prop::for_cases(10, 0xFA_1257, |g| {
+        let slots = g.usize_in(1, 5);
+        let n = g.usize_in(3, 21);
+        let max_new_max = 6usize;
+        let reqs: Vec<Req> = (0..n)
+            .map(|_| {
+                let mut r = random_request(g, 15);
+                r.max_new = g.usize_in(1, max_new_max + 1);
+                r.cfg = RunConfig::default(); // uniform config: isolate scheduling
+                r
+            })
+            .collect();
+
+        let (_, timeline) = drive_schedule(90, slots, &reqs);
+        assert_eq!(timeline.len(), n);
+
+        // submission order (arrival tick, ties by index) — the FIFO line
+        let mut order: Vec<usize> = (0..n).collect();
+        order.sort_by_key(|&i| reqs[i].arrival);
+        let mut admitted_of = vec![0u64; n];
+        let mut waited_of = vec![0u64; n];
+        for &(id, admitted, waited) in &timeline {
+            admitted_of[id as usize] = admitted;
+            waited_of[id as usize] = waited;
+        }
+        // 1. no overtaking: a later submission is never admitted before
+        //    an earlier one
+        for w in order.windows(2) {
+            assert!(
+                admitted_of[w[0]] <= admitted_of[w[1]],
+                "request {} (arrival {}) overtook request {} (arrival {})",
+                w[1], reqs[w[1]].arrival, w[0], reqs[w[0]].arrival
+            );
+        }
+        // 2. bounded wait: a slot turns over within max_new + 1 ticks
+        //    (every tick commits >= 1 token; retirement takes one more),
+        //    so FIFO admission bounds any wait by the queue ahead of it.
+        let bound = ((n as u64) / (slots as u64) + 2) * (max_new_max as u64 + 2);
+        for i in 0..n {
+            assert!(
+                waited_of[i] <= bound,
+                "request {i} waited {} ticks (> bound {bound}) — starvation",
+                waited_of[i]
+            );
+        }
+    });
+}
+
+#[test]
+fn mixed_exec_modes_coexist_in_one_running_group() {
+    // per-request configs may disagree on ExecMode; the scheduler must
+    // split launches at mode boundaries instead of erroring the drive,
+    // and every output stays bit-identical to sequential.
+    use eagle_pangu::config::ExecMode;
+    let agree = 85u64;
+    let reqs: Vec<Req> = (0..4)
+        .map(|i| {
+            let mut cfg = RunConfig::default();
+            cfg.mode = if i % 2 == 0 { ExecMode::Fused } else { ExecMode::Eager };
+            Req { cfg, prompt: prompt(10 + i, 4000 + i as u64), max_new: 10, arrival: 0 }
+        })
+        .collect();
+    let seq: Vec<GenOut> = reqs
+        .iter()
+        .map(|r| {
+            let mut b = SimBackend::new(agree);
+            let mut e = Engine::new(&b, r.cfg.clone());
+            e.generate_speculative(&mut b, &r.prompt, r.max_new).unwrap()
+        })
+        .collect();
+    let (outs, _) = drive_schedule(agree, 4, &reqs);
+    for (got, want) in outs.iter().zip(&seq) {
+        assert_eq!(got.tokens, want.tokens);
+        assert_eq!(got.accept_lens, want.accept_lens);
+    }
+}
+
+#[test]
+fn multi_turn_continuation_on_slots_matches_sequential() {
+    // Three 2-turn conversations over two slots: turn 2 begins via
+    // Disposition::Continue on the retiring slot (context preserved),
+    // while the third conversation is admitted into whichever slot frees
+    // first — outputs must equal dedicated sequential engines.
+    let agree = 85u64;
+    let p1: Vec<Vec<i32>> = (0..3).map(|i| prompt(10 + i * 5, 2100 + i as u64)).collect();
+    let p2: Vec<Vec<i32>> = (0..3).map(|i| prompt(6, 2200 + i as u64)).collect();
+
+    let seq: Vec<(Vec<i32>, Vec<i32>)> = (0..3)
+        .map(|i| {
+            let mut b = SimBackend::new(agree);
+            let mut e = Engine::new(&b, RunConfig::default());
+            let o1 = e.generate_speculative(&mut b, &p1[i], 14).unwrap();
+            let o2 = e.generate_speculative(&mut b, &p2[i], 14).unwrap();
+            (o1.tokens, o2.tokens)
+        })
+        .collect();
+
+    let mut bk = SimBackend::new(agree);
+    let mut engines: Vec<Engine> =
+        (0..2).map(|_| Engine::new(&bk, RunConfig::default())).collect();
+    let cap = bk.contract().cache_cap;
+    let mut sched = ContinuousScheduler::new(2, cap);
+    for (i, p) in p1.iter().enumerate() {
+        sched.submit(SlotRequest { id: i as u64, prompt: p.clone(), max_new: 14, cfg: None });
+    }
+    let mut turn_of = [0usize; 3];
+    let mut got: Vec<(Vec<i32>, Vec<i32>)> = vec![(Vec::new(), Vec::new()); 3];
+    sched
+        .run_to_idle(&mut bk, &mut engines, &mut |c: Completion| {
+            let i = c.id as usize;
+            if turn_of[i] == 0 {
+                got[i].0 = c.out.tokens;
+                turn_of[i] = 1;
+                Disposition::Continue { prompt: p2[i].clone(), max_new: 14 }
+            } else {
+                got[i].1 = c.out.tokens;
+                Disposition::Release
+            }
+        })
+        .unwrap();
+
+    for i in 0..3 {
+        assert_eq!(got[i].0, seq[i].0, "turn 1 diverged for conversation {i}");
+        assert_eq!(got[i].1, seq[i].1, "turn 2 diverged for conversation {i}");
+    }
+    // 3 admissions, 6 retirements (one per turn), continuations reuse slots
+    assert_eq!(sched.stats.admitted, 3);
+    assert_eq!(sched.stats.retired, 6);
+}
+
+#[test]
+fn continuous_admission_amortizes_launches_on_straggler_traffic() {
+    // The throughput claim behind the tentpole: under ragged deadlines
+    // (7 one-round stragglers + 1 long turn per 8 conversations), a
+    // continuously refilled group issues FEWER teacher launches than
+    // fixed chunked grouping, because freed slots are reused mid-flight
+    // instead of draining the group.
+    let agree = 90u64;
+    let n = 16usize;
+    let slots = 8usize;
+    let prompts: Vec<Vec<i32>> = (0..n).map(|i| prompt(16, 3000 + i as u64)).collect();
+    let deadline = |i: usize| if i % 8 == 7 { 24 } else { 1 };
+
+    let run = |continuous: bool| -> (u64, Vec<GenOut>) {
+        let mut bk = SimBackend::new(agree);
+        let mut engines: Vec<Engine> =
+            (0..slots).map(|_| Engine::new(&bk, RunConfig::default())).collect();
+        let cap = bk.contract().cache_cap;
+        let mut sched = ContinuousScheduler::new(slots, cap);
+        let mut outs: Vec<Option<GenOut>> = (0..n).map(|_| None).collect();
+        let chunk_size = if continuous { n } else { slots };
+        for chunk in (0..n).collect::<Vec<_>>().chunks(chunk_size) {
+            for &i in chunk {
+                sched.submit(SlotRequest {
+                    id: i as u64,
+                    prompt: prompts[i].clone(),
+                    max_new: deadline(i),
+                    cfg: None,
+                });
+            }
+            sched
+                .run_to_idle(&mut bk, &mut engines, &mut |c: Completion| {
+                    outs[c.id as usize] = Some(c.out);
+                    Disposition::Release
+                })
+                .unwrap();
+        }
+        (bk.teacher_calls, outs.into_iter().map(Option::unwrap).collect())
+    };
+
+    let (fixed_launches, fixed_outs) = run(false);
+    let (cont_launches, cont_outs) = run(true);
+    assert!(
+        cont_launches < fixed_launches,
+        "continuous admission must amortize launches: {cont_launches} vs {fixed_launches}"
+    );
+    // and of course: identical tokens either way
+    for (a, b) in fixed_outs.iter().zip(&cont_outs) {
+        assert_eq!(a.tokens, b.tokens);
+    }
+}

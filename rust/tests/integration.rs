@@ -1,6 +1,6 @@
 //! Cross-module integration tests on the SimBackend (no artifacts needed).
 use eagle_pangu::config::RunConfig;
-use eagle_pangu::coordinator::{run_workload, BackendSpec, CoordinatorConfig};
+use eagle_pangu::coordinator::{run_workload, AdmissionPolicy, BackendSpec, CoordinatorConfig};
 use eagle_pangu::metrics::{pair_turns, ThroughputReport};
 use eagle_pangu::workload::WorkloadSpec;
 
@@ -19,6 +19,7 @@ fn coordinator_to_report_pipeline() {
         run_baseline: true,
         run_ea: true,
         max_batch: 1,
+        scheduling: AdmissionPolicy::Continuous,
         verbose: false,
     };
     let records = run_workload(&cfg).unwrap();
