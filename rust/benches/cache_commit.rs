@@ -8,9 +8,11 @@
 //! Uses the real teacher cache geometry (L=4, C from the default
 //! contract, H=4, Dh=32) so byte counts match production.
 
-use eagle_pangu::cache::ManagedCache;
+use eagle_pangu::cache::{KvStore, ManagedCache, PagePool, PagedCache, BLOCK_ROWS};
 use eagle_pangu::config::{CacheStrategy, Contract};
 use eagle_pangu::util::bench::{bench, black_box};
+use std::cell::RefCell;
+use std::rc::Rc;
 
 fn rows(dims: eagle_pangu::config::Dims, s: usize, base: f32) -> Vec<f32> {
     let rs = dims.heads * dims.d_head;
@@ -85,6 +87,49 @@ fn main() {
             black_box(cache4.len());
         });
     }
+
+    // ---- paged layout: the block-table commit ----
+    // Same round shape on a PagedCache (SegmentShare): the tail commit
+    // moves only rows inside the partial boundary block and the table
+    // trim, so compare against round_segment_path_commit_tail above —
+    // and note the resident footprint next to the flat buffers.
+    println!("== paged layout (block size {BLOCK_ROWS}) ==");
+    let pool = Rc::new(RefCell::new(PagePool::new(dims, BLOCK_ROWS)));
+    pool.borrow_mut().ensure_headroom(cap);
+    let mut paged = PagedCache::new(dims, cap, CacheStrategy::SegmentShare, true, pool.clone());
+    paged.append_committed(&rows(dims, 128, 1.0), &rows(dims, 128, 2.0), 128, 128).unwrap();
+    paged.append_committed(&rows(dims, 128, 3.0), &rows(dims, 128, 4.0), 128, 128).unwrap();
+    let tail: Vec<usize> = (0..a).map(|i| i * 3 + (i > 0) as usize).collect();
+    bench("round_paged_path_commit_tail", 30.0, 7, || {
+        paged.begin_branch().unwrap();
+        paged.append_branch(&k_new, &k_new, 32, m).unwrap();
+        paged.commit_path_tail(&tail).unwrap();
+        paged_truncate(&mut paged, t0);
+        black_box(paged.len());
+    });
+    let mut paged2 = PagedCache::new(dims, cap, CacheStrategy::SegmentShare, true, pool.clone());
+    paged2.append_committed(&rows(dims, 128, 1.0), &rows(dims, 128, 2.0), 128, 128).unwrap();
+    paged2.append_committed(&rows(dims, 128, 3.0), &rows(dims, 128, 4.0), 128, 128).unwrap();
+    bench("round_paged_length_commit", 30.0, 7, || {
+        paged2.begin_branch().unwrap();
+        paged2.append_branch(&k_new, &k_new, 32, m).unwrap();
+        paged2.commit_length(a).unwrap();
+        paged_truncate(&mut paged2, t0);
+        black_box(paged2.len());
+    });
+    let flat_ref = ManagedCache::new(dims, cap, CacheStrategy::SegmentShare, true);
+    println!(
+        "resident bytes at t={t0}: paged {} vs flat {} (per conversation)",
+        paged.bytes_resident(),
+        KvStore::bytes_resident(&flat_ref)
+    );
+}
+
+/// Paged rewind: identity-prefix path commit truncates to `to` rows.
+fn paged_truncate(cache: &mut PagedCache, to: usize) {
+    cache.begin_branch().unwrap();
+    let path: Vec<usize> = (0..to).collect();
+    cache.commit_path(&path).unwrap();
 }
 
 /// Test-only rewind: re-run rounds from the same committed length.

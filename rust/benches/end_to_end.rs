@@ -38,10 +38,22 @@
 //! row compute is amortizable — it measures launch amortization plus
 //! slot utilization only. `straggler_continuous_speedup` is gated in CI
 //! (`bench_gate`): continuous admission must keep beating fixed grouping.
+//! The straggler workload runs under the **paged** cache layout so the
+//! gated speedup covers block-table caches on the serving hot path.
+//!
+//! # KV memory occupancy (`kv_resident`)
+//!
+//! A timing-free section decodes B ∈ {1, 2, 4, 8} resident conversations
+//! under both cache layouts and records the summed per-slot
+//! `kv_bytes_resident` (flat: pinned full-capacity buffers; paged:
+//! mapped blocks only). These bytes are machine-independent, so the CI
+//! gate holds them tight: paged must never exceed flat at B >= 4, and a
+//! paged-occupancy regression beyond 15% of the pinned baseline fails.
 
 use eagle_pangu::backend::sim::SimBackend;
 use eagle_pangu::backend::ModelBackend;
-use eagle_pangu::config::{CacheStrategy, RunConfig};
+use eagle_pangu::cache::CachePools;
+use eagle_pangu::config::{CacheLayout, CacheStrategy, RunConfig};
 use eagle_pangu::coordinator::{
     decode_speculative_batch, Completion, ContinuousScheduler, Disposition, SlotRequest,
 };
@@ -175,7 +187,45 @@ fn main() {
     let b4_speedup = if rps_b1 > 0.0 { rps_b4 / rps_b1 } else { 0.0 };
     println!("batch sweep: B=4 speedup over sequential B=1: {b4_speedup:.2}x");
 
+    // ---- KV memory occupancy: flat vs paged, B resident slots ----
+    // Deterministic (no timing): decode the sweep workload's first B
+    // conversations to completion on B resident slots under each layout,
+    // then sum per-slot `kv_bytes_resident`. Flat pins full-capacity
+    // buffers per slot; paged maps blocks for the committed context only.
+    // The CI memory gate (`bench_gate`) requires paged <= flat at B >= 4
+    // and bounds paged regressions against the pinned baseline.
+    let mut kv_json = Json::obj();
+    for layout in [CacheLayout::Flat, CacheLayout::Paged] {
+        for bsz in [1usize, 2, 4, 8] {
+            let mut sim = SimBackend::new(85);
+            let mut lcfg = cfg.clone();
+            lcfg.cache_layout = layout;
+            let pools = CachePools::new(sim.contract());
+            let mut engines: Vec<Engine> = (0..bsz)
+                .map(|_| Engine::with_pools(&sim, lcfg.clone(), &pools))
+                .collect();
+            let cap = sim.contract().cache_cap;
+            let mut sched = ContinuousScheduler::new(bsz, cap);
+            decode_speculative_batch(
+                &mut sim, &mut engines, &sweep_prompts[..bsz], sweep_max_new, &mut sched)
+                .unwrap();
+            let resident: u64 = engines.iter().map(Engine::kv_bytes_resident).sum();
+            println!(
+                "kv resident {} B={bsz}: {resident} bytes ({} per conversation)",
+                layout.as_str(),
+                resident / bsz as u64
+            );
+            kv_json.push(
+                &format!("{}_b{bsz}_kv_bytes_resident", layout.as_str()),
+                resident as f64,
+            );
+        }
+    }
+
     // ---- straggler workload: continuous admission vs fixed grouping ----
+    // Runs under the PAGED layout: the gated `straggler_continuous_speedup`
+    // must stay a win with block-table caches on the serving hot path
+    // (the flat-layout number is tracked by the batch sweep above).
     let row_cost_ns: u64 = 2_000;
     let strag_convs = 16usize;
     let strag_slots = 8usize;
@@ -188,12 +238,16 @@ fn main() {
     let mut strag_json = Json::obj();
     let mut rps_fixed = 0.0f64;
     let mut rps_cont = 0.0f64;
+    let mut strag_cfg = cfg.clone();
+    strag_cfg.cache_layout = CacheLayout::Paged;
     for continuous in [false, true] {
         let mut sim = SimBackend::new(85)
             .with_teacher_launch(Duration::from_micros(launch_cost_us))
             .with_row_cost(Duration::from_nanos(row_cost_ns));
-        let mut engines: Vec<Engine> =
-            (0..strag_slots).map(|_| Engine::new(&sim, cfg.clone())).collect();
+        let pools = CachePools::new(sim.contract());
+        let mut engines: Vec<Engine> = (0..strag_slots)
+            .map(|_| Engine::with_pools(&sim, strag_cfg.clone(), &pools))
+            .collect();
         for e in engines.iter_mut() {
             e.warmup(&mut sim).unwrap();
         }
@@ -253,6 +307,7 @@ fn main() {
     let strag_speedup = if rps_fixed > 0.0 { rps_cont / rps_fixed } else { 0.0 };
     println!("straggler: continuous admission speedup over fixed grouping: {strag_speedup:.2}x");
     strag_json.push("row_cost_ns", row_cost_ns);
+    strag_json.push("cache_layout", strag_cfg.cache_layout.as_str());
 
     let mut j = Json::obj();
     j.push("bench", "end_to_end_hotpath")
@@ -268,6 +323,7 @@ fn main() {
         .push("batch_sweep_launch_cost_us", launch_cost_us)
         .push("batch_sweep_conversations", sweep_convs)
         .push("b4_speedup_vs_b1", b4_speedup)
+        .push("kv_resident", kv_json)
         .push("straggler", strag_json)
         .push("straggler_continuous_speedup", strag_speedup);
     std::fs::write("BENCH_hotpath.json", j.to_string_pretty()).unwrap();

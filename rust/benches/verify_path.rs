@@ -48,7 +48,7 @@ fn main() {
                         tokens: &tokens,
                         positions: &positions,
                         mask: &mask,
-                        kv: KvView { k: &k, v: &v },
+                        kv: KvView::flat(&k, &v, cap),
                         feats_in: None,
                         probe: false,
                     }, &mut out)
@@ -76,7 +76,7 @@ fn main() {
                     tokens: &tokens,
                     positions: &positions,
                     mask: &mask,
-                    kv: KvView { k: &dk, v: &dv },
+                    kv: KvView::flat(&dk, &dv, cap),
                     feats_in: Some(&feats),
                     probe: false,
                 }, &mut out)

@@ -6,8 +6,12 @@
 //! The call contract mirrors the AOT modules (DESIGN.md §2): the backend
 //! *reads* a committed-prefix KV cache and *writes* the logits/features/KV
 //! rows of the S new tokens into a caller-provided [`StepScratch`]; it
-//! never writes any cache — all cache mutation is owned by
-//! [`crate::cache::ManagedCache`] ("state safety", paper §3.3).
+//! never writes any cache — all cache mutation is owned by the
+//! [`crate::cache::KvStore`] implementations ("state safety", paper §3.3).
+//! Cache reads go through the gather-aware [`KvView`]: mask columns are
+//! **logical** sequence rows, and [`KvView::row_start`] resolves them
+//! against flat `[L, rows, H, Dh]` buffers or a paged block table
+//! ([`KvIndex`]) — backends must never assume contiguous row storage.
 //!
 //! # Scratch-buffer output contract
 //!
@@ -75,13 +79,85 @@ use anyhow::Result;
 
 pub use crate::util::arena::StepScratch;
 
-/// Read-only view of a KV cache buffer pair, layout `[L, cap, H, Dh]`.
+/// How logical sequence rows map onto the physical storage of a
+/// [`KvView`] — the gather-aware half of the paged-KV contract.
+#[derive(Clone, Copy)]
+pub enum KvIndex<'a> {
+    /// Contiguous `[L, rows, H, Dh]` storage; logical row == physical
+    /// row. `rows` is the buffer's row capacity per layer (the cache
+    /// capacity for flat committed caches).
+    Flat {
+        /// Physical rows per layer in the buffers.
+        rows: usize,
+    },
+    /// Block-major pool storage: block `b` occupies
+    /// `[b * L * bs * H * Dh, ..)` laid out `[L, bs, H, Dh]`, and logical
+    /// row `j` lives in block `table[j / bs]` at in-block row `j % bs`.
+    Paged {
+        /// Logical-block → physical-block indirection.
+        table: &'a [u32],
+        /// Rows per block (`bs`).
+        block_size: usize,
+    },
+}
+
+/// Read-only, gather-aware view of a KV cache buffer pair. Flat views
+/// are the classic `[L, cap, H, Dh]` buffers; paged views address a
+/// shared block pool through a block table (see [`KvIndex`]). Backends
+/// must read rows through [`KvView::row_start`] instead of assuming a
+/// contiguous layout.
 #[derive(Clone, Copy)]
 pub struct KvView<'a> {
-    /// Key cache buffer.
+    /// Key storage (flat buffer or block pool).
     pub k: &'a [f32],
-    /// Value cache buffer.
+    /// Value storage (flat buffer or block pool).
     pub v: &'a [f32],
+    /// Logical-row → physical-offset mapping.
+    pub index: KvIndex<'a>,
+}
+
+impl<'a> KvView<'a> {
+    /// A flat `[L, rows, H, Dh]` view.
+    pub fn flat(k: &'a [f32], v: &'a [f32], rows: usize) -> Self {
+        Self { k, v, index: KvIndex::Flat { rows } }
+    }
+
+    /// A paged view over block-major pool storage.
+    pub fn paged(k: &'a [f32], v: &'a [f32], table: &'a [u32], block_size: usize) -> Self {
+        Self { k, v, index: KvIndex::Paged { table, block_size } }
+    }
+
+    /// Element offset of `(layer, logical row)` in `k`/`v`, for a role
+    /// with `layers` layers and per-row stride `rstride = H * Dh`.
+    /// Logical rows past the mapped region are a caller bug (the mask
+    /// must close them); debug builds assert.
+    #[inline]
+    pub fn row_start(&self, layers: usize, rstride: usize, layer: usize, row: usize) -> usize {
+        match self.index {
+            KvIndex::Flat { rows } => {
+                debug_assert!(row < rows, "logical row {row} out of flat rows {rows}");
+                (layer * rows + row) * rstride
+            }
+            KvIndex::Paged { table, block_size } => {
+                debug_assert!(
+                    row / block_size < table.len(),
+                    "logical row {row} beyond mapped blocks {}",
+                    table.len()
+                );
+                let b = table[row / block_size] as usize;
+                ((b * layers + layer) * block_size + row % block_size) * rstride
+            }
+        }
+    }
+
+    /// Logical rows the view can address (flat row capacity, or mapped
+    /// block rows for paged views).
+    pub fn mapped_rows(&self) -> usize {
+        match self.index {
+            KvIndex::Flat { rows } => rows,
+            KvIndex::Paged { table, block_size } => table.len() * block_size,
+        }
+    }
 }
 
 /// Inputs of one step. `tokens/positions` have exactly `s` entries
@@ -289,6 +365,25 @@ mod tests {
         let row = [1.0f32, 2.0, 3.0];
         let total: f64 = (0..3).map(|i| log_softmax_at(&row, i).exp()).sum();
         assert!((total - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn kv_view_row_math_flat_and_paged() {
+        // flat [L=2, rows=4, rs=3]
+        let buf = vec![0.0f32; 2 * 4 * 3];
+        let flat = KvView::flat(&buf, &buf, 4);
+        assert_eq!(flat.row_start(2, 3, 0, 1), 3);
+        assert_eq!(flat.row_start(2, 3, 1, 2), (4 + 2) * 3);
+        assert_eq!(flat.mapped_rows(), 4);
+        // paged: bs=2, blocks [3, 0] -> logical row 2 lives in block 0
+        let pool = vec![0.0f32; 4 * 2 * 2 * 3]; // 4 blocks, L=2, bs=2, rs=3
+        let table = [3u32, 0];
+        let paged = KvView::paged(&pool, &pool, &table, 2);
+        // logical row 0 -> block 3, in-block row 0, layer 0
+        assert_eq!(paged.row_start(2, 3, 0, 0), 3 * 2 * 2 * 3);
+        // logical row 3 -> block 0, in-block row 1, layer 1
+        assert_eq!(paged.row_start(2, 3, 1, 3), (2 + 1) * 3);
+        assert_eq!(paged.mapped_rows(), 4);
     }
 
     #[test]

@@ -156,15 +156,20 @@ impl SimBackend {
     /// visible column, sorted by position (stable on column order).
     /// `mask_row` is that row's `[cap + s]` mask slice, `tokens` /
     /// `positions` the `s` speculative slots of the row's own request,
-    /// `kv_k` that request's key-cache buffer, and `stride` the per-row
-    /// element stride of the buffer's layer 0.
+    /// `kv` that request's gather-aware cache view (flat or paged), and
+    /// `(layers, rstride)` the role's layer count and per-row stride.
+    /// Mask columns are **logical** rows; the paged layout resolves each
+    /// open column through the block table ([`super::KvView::row_start`]),
+    /// so any block-table bug changes the hash and is caught by the
+    /// flat-vs-paged bit-identity suite.
     fn hash_row(
         &mut self,
         mask_row: &[f32],
         tokens: &[i32],
         positions: &[i32],
-        kv_k: &[f32],
-        stride: usize,
+        kv: &super::KvView,
+        layers: usize,
+        rstride: usize,
     ) -> u64 {
         let cap = self.contract.cache_cap;
         let s = tokens.len();
@@ -174,8 +179,9 @@ impl SimBackend {
         // layer-0 row (the sim's own KV encoding).
         for (j, mval) in mask_row.iter().take(cap).enumerate() {
             if *mval == 0.0 {
-                let tok = kv_k[j * stride] as i64;
-                let pos = kv_k[j * stride + 1] as i64;
+                let off = kv.row_start(layers, rstride, 0, j);
+                let tok = kv.k[off] as i64;
+                let pos = kv.k[off + 1] as i64;
                 self.seen.push((pos, tok));
             }
         }
@@ -194,18 +200,6 @@ impl SimBackend {
             h = splitmix64(h.wrapping_mul(31) ^ ((*t as u64) << 16) ^ (*p as u64));
         }
         h
-    }
-
-    /// Element stride of one cache row in layer 0 — derived from buffer
-    /// size so the same code serves teacher- and draft-shaped caches.
-    fn stride_of(&self, kv_len: usize) -> usize {
-        // kv buffer is [L, cap, H, Dh]; we address layer 0 rows only.
-        let layers = if kv_len == self.contract.teacher.cache_elems(self.contract.cache_cap) {
-            self.contract.teacher.layers
-        } else {
-            self.contract.draft.layers
-        };
-        kv_len / layers / self.contract.cache_cap
     }
 
     /// Deterministic candidate list for a context.
@@ -278,15 +272,16 @@ impl SimBackend {
         let v = self.contract.vocab;
         let d = if teacher { self.contract.teacher } else { self.contract.draft };
         out.prepare(s, v, self.contract.feat_dim, d.layers, d.heads, d.d_head, args.probe);
-        let stride = self.stride_of(args.kv.k.len());
+        let rstride = d.heads * d.d_head;
         let w = self.contract.cache_cap + s;
         for i in 0..s {
             let ctx = self.hash_row(
                 &args.mask[i * w..(i + 1) * w],
                 args.tokens,
                 args.positions,
-                args.kv.k,
-                stride,
+                &args.kv,
+                d.layers,
+                rstride,
             );
             let cands = if teacher {
                 Self::candidates(ctx)
@@ -354,7 +349,6 @@ impl ModelBackend for SimBackend {
         debug_assert_eq!(args.mask.len(), b * s * w, "fused mask length");
         let rows = b * s;
         for (bi, req) in args.reqs.iter().enumerate() {
-            let stride = self.stride_of(req.kv.k.len());
             let base = bi * s;
             for i in 0..req.live.min(s) {
                 let row = base + i;
@@ -362,8 +356,9 @@ impl ModelBackend for SimBackend {
                     &args.mask[row * w..(row + 1) * w],
                     &args.tokens[base..base + s],
                     &args.positions[base..base + s],
-                    req.kv.k,
-                    stride,
+                    &req.kv,
+                    d.layers,
+                    rs,
                 );
                 let cands = Self::candidates(ctx);
                 Self::write_logits(out.logits_row_mut(row), &cands);
@@ -427,7 +422,7 @@ mod tests {
             let mut out = StepScratch::new();
             b.teacher_step(mode, StepArgs {
                 tokens: &tokens, positions: &pos, mask: &mask,
-                kv: KvView { k: &k, v: &v }, feats_in: None, probe: false,
+                kv: KvView::flat(&k, &v, CACHE_CAP), feats_in: None, probe: false,
             }, &mut out)
             .unwrap();
             out
@@ -454,7 +449,7 @@ mod tests {
             let mut out = StepScratch::new();
             b.teacher_step(ExecMode::Fused, StepArgs {
                 tokens: &tokens, positions: &pos, mask: &mask,
-                kv: KvView { k: &k, v: &v }, feats_in: None, probe: false,
+                kv: KvView::flat(&k, &v, CACHE_CAP), feats_in: None, probe: false,
             }, &mut out)
             .unwrap();
             out.logits_row(1).to_vec()
@@ -473,7 +468,7 @@ mod tests {
         let pos = [0i32, 1, 2, 3, 0, 0, 0, 0];
         let args = || StepArgs {
             tokens: &tokens, positions: &pos, mask: &mask,
-            kv: KvView { k: &k, v: &v }, feats_in: None, probe: false,
+            kv: KvView::flat(&k, &v, CACHE_CAP), feats_in: None, probe: false,
         };
         let mut to = StepScratch::new();
         t.teacher_step(ExecMode::Fused, args(), &mut to).unwrap();
@@ -505,7 +500,7 @@ mod tests {
         let mut out = StepScratch::new();
         b.teacher_step(ExecMode::Fused, StepArgs {
             tokens: &tokens, positions: &pos, mask: &mask,
-            kv: KvView { k: &k, v: &v }, feats_in: None, probe: false,
+            kv: KvView::flat(&k, &v, CACHE_CAP), feats_in: None, probe: false,
         }, &mut out)
         .unwrap();
         let rs = b.contract().teacher.heads * b.contract().teacher.d_head;
@@ -525,7 +520,7 @@ mod tests {
         let mut out = StepScratch::new();
         b.draft_step(StepArgs {
             tokens: &tokens, positions: &pos, mask: &mask,
-            kv: KvView { k: &k, v: &v }, feats_in: None, probe: true,
+            kv: KvView::flat(&k, &v, CACHE_CAP), feats_in: None, probe: true,
         }, &mut out)
         .unwrap();
         let top1 = out.attn_top1().unwrap();
@@ -544,7 +539,7 @@ mod tests {
         for _ in 0..3 {
             b.teacher_step(ExecMode::Fused, StepArgs {
                 tokens: &tokens, positions: &pos, mask: &mask,
-                kv: KvView { k: &k, v: &v }, feats_in: None, probe: false,
+                kv: KvView::flat(&k, &v, CACHE_CAP), feats_in: None, probe: false,
             }, &mut out)
             .unwrap();
         }
@@ -589,12 +584,12 @@ mod tests {
         let mut out0 = StepScratch::new();
         seq.teacher_step(ExecMode::Fused, StepArgs {
             tokens: &tok0, positions: &pos0, mask: &mask0,
-            kv: KvView { k: &k0, v: &v0 }, feats_in: None, probe: false,
+            kv: KvView::flat(&k0, &v0, CACHE_CAP), feats_in: None, probe: false,
         }, &mut out0).unwrap();
         let mut out1 = StepScratch::new();
         seq.teacher_step(ExecMode::Fused, StepArgs {
             tokens: &tok1, positions: &pos1, mask: &mask1,
-            kv: KvView { k: &k1, v: &v1 }, feats_in: None, probe: false,
+            kv: KvView::flat(&k1, &v1, CACHE_CAP), feats_in: None, probe: false,
         }, &mut out1).unwrap();
         assert_eq!(seq.teacher_calls, 2);
 
@@ -611,8 +606,8 @@ mod tests {
         mask[..s * w].copy_from_slice(&mask0);
         mask[s * w..].copy_from_slice(&mask1);
         let reqs = [
-            BatchRequest { kv: KvView { k: &k0, v: &v0 }, live: 8 },
-            BatchRequest { kv: KvView { k: &k1, v: &v1 }, live: 8 },
+            BatchRequest { kv: KvView::flat(&k0, &v0, CACHE_CAP), live: 8 },
+            BatchRequest { kv: KvView::flat(&k1, &v1, CACHE_CAP), live: 8 },
         ];
         let mut fused_b = SimBackend::new(100);
         let mut fused = StepScratch::new();
@@ -646,7 +641,7 @@ mod tests {
         let t0 = Instant::now();
         b.teacher_step(ExecMode::Fused, StepArgs {
             tokens: &tokens, positions: &pos, mask: &mask,
-            kv: KvView { k: &k, v: &v }, feats_in: None, probe: false,
+            kv: KvView::flat(&k, &v, CACHE_CAP), feats_in: None, probe: false,
         }, &mut out)
         .unwrap();
         // 8 padded rows at 50us each
@@ -665,8 +660,8 @@ mod tests {
         p2[..8].copy_from_slice(&pos);
         p2[8..].copy_from_slice(&pos);
         let reqs = [
-            BatchRequest { kv: KvView { k: &k, v: &v }, live: 2 },
-            BatchRequest { kv: KvView { k: &k, v: &v }, live: 2 },
+            BatchRequest { kv: KvView::flat(&k, &v, CACHE_CAP), live: 2 },
+            BatchRequest { kv: KvView::flat(&k, &v, CACHE_CAP), live: 2 },
         ];
         let mut fused = StepScratch::new();
         b.teacher_step_batch(ExecMode::Fused, BatchStepArgs {
@@ -689,7 +684,7 @@ mod tests {
         let t0 = Instant::now();
         b.teacher_step(ExecMode::Fused, StepArgs {
             tokens: &tokens, positions: &pos, mask: &mask,
-            kv: KvView { k: &k, v: &v }, feats_in: None, probe: false,
+            kv: KvView::flat(&k, &v, CACHE_CAP), feats_in: None, probe: false,
         }, &mut out)
         .unwrap();
         assert!(t0.elapsed() >= cost, "launch cost must be spent");
@@ -699,7 +694,7 @@ mod tests {
         let feats = vec![0.0f32; 8 * b.contract().feat_dim];
         b.draft_step(StepArgs {
             tokens: &tokens, positions: &pos, mask: &mask,
-            kv: KvView { k: &k, v: &v }, feats_in: Some(&feats), probe: false,
+            kv: KvView::flat(&k, &v, CACHE_CAP), feats_in: Some(&feats), probe: false,
         }, &mut out)
         .unwrap();
         assert!(t1.elapsed() < cost, "draft must not pay the teacher launch cost");

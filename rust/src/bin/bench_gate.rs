@@ -20,6 +20,13 @@
 //! * allocation traffic (`bytes_allocated_per_round`,
 //!   `allocs_per_round`): current must be `<= baseline * 2 + slack` — a
 //!   machine-independent tripwire for the zero-allocation hot path;
+//! * KV occupancy (`paged_*_kv_bytes_resident`): deterministic bytes;
+//!   current must be `<= 1.15 * baseline` (a >15% paged-residency
+//!   regression fails regardless of runner speed), and — when the
+//!   baseline pins a `kv_resident` section — the *current* file must
+//!   show `paged <= flat` at B in {4, 8} (the cross-layout rule: paging
+//!   must never cost more memory than the pinned flat buffers it
+//!   replaces);
 //! * a metric present in the baseline but missing from the current file
 //!   fails (dropping a gated metric is a coverage regression).
 //!
@@ -55,7 +62,15 @@ enum Rule {
         /// Absolute slack added on top of the doubled baseline.
         slack: f64,
     },
+    /// KV residency (bytes, machine-independent and deterministic):
+    /// lower is better; fail above `MEMORY_TOLERANCE * baseline` — a
+    /// paged-occupancy regression beyond 15% fails regardless of runner
+    /// speed.
+    Memory,
 }
+
+/// Memory-occupancy regression budget: current <= 1.15 * baseline.
+const MEMORY_TOLERANCE: f64 = 1.15;
 
 fn rule_for(leaf: &str) -> Option<Rule> {
     if leaf == "tokens_per_sec" || leaf.ends_with("rounds_per_sec") {
@@ -69,6 +84,12 @@ fn rule_for(leaf: &str) -> Option<Rule> {
     }
     if leaf == "allocs_per_round" {
         return Some(Rule::Alloc { slack: 4.0 });
+    }
+    if leaf.starts_with("paged_") && leaf.ends_with("_kv_bytes_resident") {
+        // flat_* entries are the comparator for the cross-layout rule,
+        // not gated against the baseline themselves (pinned buffers are
+        // a constant of the contract geometry).
+        return Some(Rule::Memory);
     }
     None
 }
@@ -107,14 +128,49 @@ fn gate(baseline: &Json, current: &Json, tol: f64, path: &str, out: &mut Vec<Fin
             let ceil = base * 2.0 + slack;
             (cur <= ceil, format!("{cur:.1} vs baseline {base:.1} (ceiling {ceil:.1})"))
         }
+        Rule::Memory => {
+            let ceil = base * MEMORY_TOLERANCE;
+            (cur <= ceil, format!("{cur:.0} B vs baseline {base:.0} B (ceiling {ceil:.0} B)"))
+        }
     };
     out.push(Finding { path: path.to_string(), ok, detail });
+}
+
+/// Cross-layout memory rule, read from the *current* file (both numbers
+/// are produced by the same bench run, deterministically): at B >= 4 the
+/// paged layout must never hold more KV bytes resident than flat —
+/// otherwise paging lost its reason to exist. Applied only when the
+/// baseline pins a `kv_resident` section (baseline defines the
+/// contract, like every other rule).
+fn gate_kv_cross(baseline: &Json, current: &Json, out: &mut Vec<Finding>) {
+    if baseline.get("kv_resident").is_none() {
+        return;
+    }
+    let cur = current.get("kv_resident");
+    for b in [4u32, 8] {
+        let path = format!("kv_resident.paged_vs_flat_b{b}");
+        let paged = cur
+            .and_then(|k| k.get(&format!("paged_b{b}_kv_bytes_resident")))
+            .and_then(Json::as_f64);
+        let flat = cur
+            .and_then(|k| k.get(&format!("flat_b{b}_kv_bytes_resident")))
+            .and_then(Json::as_f64);
+        let (ok, detail) = match (paged, flat) {
+            (Some(p), Some(f)) => (
+                p <= f,
+                format!("paged {p:.0} B vs flat {f:.0} B at B={b}"),
+            ),
+            _ => (false, format!("kv_resident entries missing from current output at B={b}")),
+        };
+        out.push(Finding { path, ok, detail });
+    }
 }
 
 /// Run the gate over two parsed bench files; returns the findings.
 fn run_gate(baseline: &Json, current: &Json, tol: f64) -> Vec<Finding> {
     let mut out = Vec::new();
     gate(baseline, current, tol, "", &mut out);
+    gate_kv_cross(baseline, current, &mut out);
     out
 }
 
@@ -168,13 +224,24 @@ mod tests {
     use super::*;
 
     fn bench_json(rps: f64, b8: f64, speedup: f64, bytes: f64) -> Json {
+        bench_json_kv(rps, b8, speedup, bytes, 400_000.0, 19_000_000.0)
+    }
+
+    fn bench_json_kv(rps: f64, b8: f64, speedup: f64, bytes: f64, paged_b4: f64, flat_b4: f64)
+        -> Json {
         let mut sweep = Json::obj();
         sweep.push("B1_rounds_per_sec", 400.0).push("B8_rounds_per_sec", b8);
+        let mut kv = Json::obj();
+        kv.push("flat_b4_kv_bytes_resident", flat_b4)
+            .push("paged_b4_kv_bytes_resident", paged_b4)
+            .push("flat_b8_kv_bytes_resident", flat_b4 * 2.0)
+            .push("paged_b8_kv_bytes_resident", paged_b4 * 2.0);
         let mut j = Json::obj();
         j.push("rounds_per_sec", rps)
             .push("tokens_per_sec", rps * 3.0)
             .push("bytes_allocated_per_round", bytes)
             .push("batch_sweep", sweep)
+            .push("kv_resident", kv)
             .push("straggler_continuous_speedup", speedup)
             .push("backend", "sim"); // non-numeric: ignored
         j
@@ -234,5 +301,74 @@ mod tests {
         let findings = run_gate(&base, &cur, 0.85);
         let a = findings.iter().find(|f| f.path == "bytes_allocated_per_round").unwrap();
         assert!(!a.ok, "alloc regrowth must fail");
+    }
+
+    #[test]
+    fn paged_occupancy_regression_beyond_fifteen_percent_fails() {
+        let base = bench_json(1000.0, 2000.0, 1.3, 100.0); // paged_b4 = 400k
+        // +10% stays green
+        let ok = bench_json_kv(1000.0, 2000.0, 1.3, 100.0, 440_000.0, 19_000_000.0);
+        let findings = run_gate(&base, &ok, 0.85);
+        let f = findings
+            .iter()
+            .find(|f| f.path == "kv_resident.paged_b4_kv_bytes_resident")
+            .unwrap();
+        assert!(f.ok, "10% residency growth is within the 15% budget: {}", f.detail);
+        // +20% fails
+        let bad = bench_json_kv(1000.0, 2000.0, 1.3, 100.0, 480_000.0, 19_000_000.0);
+        let findings = run_gate(&base, &bad, 0.85);
+        let f = findings
+            .iter()
+            .find(|f| f.path == "kv_resident.paged_b4_kv_bytes_resident")
+            .unwrap();
+        assert!(!f.ok, "20% residency growth must fail");
+        // flat entries are comparators, never gated per-leaf
+        assert!(
+            !findings.iter().any(|f| f.path == "kv_resident.flat_b4_kv_bytes_resident"),
+            "flat residency must not be baseline-gated"
+        );
+    }
+
+    #[test]
+    fn paged_must_not_exceed_flat_at_b4_or_b8() {
+        let base = bench_json(1000.0, 2000.0, 1.3, 100.0);
+        let good = bench_json(1000.0, 2000.0, 1.3, 100.0);
+        let findings = run_gate(&base, &good, 0.85);
+        for b in [4, 8] {
+            let f = findings
+                .iter()
+                .find(|f| f.path == format!("kv_resident.paged_vs_flat_b{b}"))
+                .unwrap();
+            assert!(f.ok, "paged below flat must pass at B={b}: {}", f.detail);
+        }
+        // paged above flat at B=4 fails even if it beats its own baseline
+        // tolerance x flat... (cross rule is absolute)
+        let inverted = bench_json_kv(1000.0, 2000.0, 1.3, 100.0, 20_000_000.0, 19_000_000.0);
+        let base_loose = bench_json_kv(1000.0, 2000.0, 1.3, 100.0, 30_000_000.0, 19_000_000.0);
+        let findings = run_gate(&base_loose, &inverted, 0.85);
+        let f = findings
+            .iter()
+            .find(|f| f.path == "kv_resident.paged_vs_flat_b4")
+            .unwrap();
+        assert!(!f.ok, "paged above flat at B=4 must fail");
+        // a baseline without a kv_resident section skips the cross rule
+        // (legacy baselines keep working)
+        let mut legacy = Json::obj();
+        legacy.push("rounds_per_sec", 1000.0);
+        let findings = run_gate(&legacy, &good, 0.85);
+        assert!(
+            !findings.iter().any(|f| f.path.starts_with("kv_resident.paged_vs_flat")),
+            "cross rule must be baseline-opt-in"
+        );
+        // ... and a current file missing the entries fails coverage
+        let mut stale = Json::obj();
+        stale.push("rounds_per_sec", 1000.0);
+        let findings = run_gate(&base, &stale, 0.85);
+        assert!(
+            findings
+                .iter()
+                .any(|f| f.path == "kv_resident.paged_vs_flat_b4" && !f.ok),
+            "missing kv entries in the current file must fail"
+        );
     }
 }

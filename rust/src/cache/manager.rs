@@ -29,6 +29,7 @@
 //!   only the accepted tail (the paper's `EA_FAST_CACHE_REORDER`),
 //!   falling back to the general gather on any inconsistency.
 
+use crate::cache::{KvGuard, KvStore};
 use crate::config::{CacheStrategy, Dims};
 use anyhow::{bail, Result};
 
@@ -134,6 +135,13 @@ impl ManagedCache {
     /// Reset to an empty committed state (new conversation). Also zeroes
     /// the stats counters: `GenOut` reports per-generation cache stats,
     /// and a reused engine must match a fresh one field for field.
+    ///
+    /// The persistent gather scratch is re-clamped to the *current*
+    /// capacity here: after a [`ManagedCache::set_capacity`] shrink it
+    /// may still hold rows laid out for the larger buffer, and a later
+    /// fast reorder must never index those stale rows (regression-tested
+    /// below). Truncation never allocates, so engine reuse stays
+    /// allocation-free.
     pub fn reset(&mut self) {
         self.len = 0;
         self.branch_rows = 0;
@@ -141,6 +149,40 @@ impl ManagedCache {
         self.branch_k = None;
         self.branch_v = None;
         self.stats = CacheStats::default();
+        let bound = self.dims.layers * self.cap * self.rstride();
+        self.gather_k.truncate(bound);
+        self.gather_v.truncate(bound);
+    }
+
+    /// Swap the branch strategy / reorder flag in place (continuous
+    /// admission applies per-request configs to long-lived slot caches)
+    /// and reset. Unlike reconstructing the cache, the multi-MB buffers
+    /// are kept — an admission-boundary optimization, behaviourally
+    /// identical because committed state is empty after the reset.
+    pub fn reconfigure(&mut self, strategy: CacheStrategy, fast_reorder: bool) {
+        self.strategy = strategy;
+        self.fast_reorder = fast_reorder;
+        self.reset();
+    }
+
+    /// Re-size the cache to `cap` rows per layer and reset. A shrink
+    /// re-lays the `[L, cap, H, Dh]` buffers (stride changes), truncates
+    /// the gather scratch to the new bound and drops any branch replica —
+    /// a shrunk cache must not be able to index rows of the old layout.
+    /// This is the operator-facing capacity knob (per-slot KV budget
+    /// reconfiguration between conversations); nothing on the decode hot
+    /// path calls it, but [`ManagedCache::reset`]'s scratch re-clamp
+    /// exists precisely so a shrink through here can never leave stale
+    /// larger-layout rows reachable.
+    pub fn set_capacity(&mut self, cap: usize) {
+        assert!(cap >= 1, "cache capacity must be >= 1");
+        self.cap = cap;
+        let n = self.dims.cache_elems(cap);
+        self.k.clear();
+        self.k.resize(n, 0.0);
+        self.v.clear();
+        self.v.resize(n, 0.0);
+        self.reset();
     }
 
     /// Layer stride in elements within a `[L, cap, H, Dh]` buffer.
@@ -503,6 +545,88 @@ impl ManagedCache {
     }
 }
 
+/// The layout-agnostic store contract, delegating to the inherent
+/// methods above (the flat manager is the reference implementation the
+/// paged cache is property-tested against).
+impl KvStore for ManagedCache {
+    fn len(&self) -> usize {
+        ManagedCache::len(self)
+    }
+
+    fn branch_rows(&self) -> usize {
+        ManagedCache::branch_rows(self)
+    }
+
+    fn headroom(&self) -> usize {
+        ManagedCache::headroom(self)
+    }
+
+    fn strategy(&self) -> CacheStrategy {
+        ManagedCache::strategy(self)
+    }
+
+    fn reset(&mut self) {
+        ManagedCache::reset(self)
+    }
+
+    fn reconfigure(&mut self, strategy: CacheStrategy, fast_reorder: bool) {
+        ManagedCache::reconfigure(self, strategy, fast_reorder)
+    }
+
+    fn append_committed(&mut self, k_rows: &[f32], v_rows: &[f32], s: usize, count: usize)
+        -> Result<()> {
+        ManagedCache::append_committed(self, k_rows, v_rows, s, count)
+    }
+
+    fn begin_branch(&mut self) -> Result<()> {
+        ManagedCache::begin_branch(self)
+    }
+
+    fn append_branch(&mut self, k_rows: &[f32], v_rows: &[f32], s: usize, count: usize)
+        -> Result<()> {
+        ManagedCache::append_branch(self, k_rows, v_rows, s, count)
+    }
+
+    fn rollback(&mut self) {
+        ManagedCache::rollback(self)
+    }
+
+    fn commit_length(&mut self, a: usize) -> Result<()> {
+        ManagedCache::commit_length(self, a)
+    }
+
+    fn commit_path(&mut self, path_indices: &[usize]) -> Result<()> {
+        ManagedCache::commit_path(self, path_indices)
+    }
+
+    fn commit_path_tail(&mut self, tail_offsets: &[usize]) -> Result<()> {
+        ManagedCache::commit_path_tail(self, tail_offsets)
+    }
+
+    fn kv_guard(&self) -> KvGuard<'_> {
+        let (k, v) = self.kv_view();
+        KvGuard::Flat { k, v, rows: self.cap }
+    }
+
+    fn committed_row_k(&self, row: usize) -> Vec<f32> {
+        ManagedCache::committed_row_k(self, row)
+    }
+
+    fn committed_checksum(&self) -> f64 {
+        ManagedCache::committed_checksum(self)
+    }
+
+    fn stats(&self) -> &CacheStats {
+        &self.stats
+    }
+
+    fn bytes_resident(&self) -> u64 {
+        let branch = self.branch_k.as_ref().map_or(0, Vec::len)
+            + self.branch_v.as_ref().map_or(0, Vec::len);
+        ((self.k.len() + self.v.len() + branch) * 4) as u64
+    }
+}
+
 /// Copy rows `[0, count)` of a `[L, s, H, Dh]` step-output block into a
 /// `[L, cap, H, Dh]` cache buffer at row offset `at`.
 fn copy_rows_seq(
@@ -748,6 +872,57 @@ mod tests {
                 assert_eq!(x.committed_row_k(r), y.committed_row_k(r), "{strategy:?} row {r}");
             }
         });
+    }
+
+    #[test]
+    fn reset_reclamps_gather_scratch_after_capacity_shrink() {
+        // Regression: a commit at the original capacity leaves the
+        // persistent gather scratch sized for that layout; a set_capacity
+        // shrink followed by reset must clamp it so no later fast reorder
+        // can index stale rows of the old stride.
+        let mut c = mk(CacheStrategy::SegmentShare, true);
+        c.append_committed(&block(4, 10.0), &block(4, 10.0), 4, 3).unwrap();
+        c.begin_branch().unwrap();
+        c.append_branch(&block(8, 100.0), &block(8, 100.0), 8, 8).unwrap();
+        // non-tail fast path -> populates gather_k/gather_v
+        c.commit_path(&[0, 1, 2, 4, 3, 7, 10, 9]).unwrap();
+        assert!(!c.gather_k.is_empty(), "fast reorder must have used the gather scratch");
+        let shrunk_cap = 2usize;
+        c.set_capacity(shrunk_cap);
+        let bound = DIMS.layers * shrunk_cap * DIMS.heads * DIMS.d_head;
+        assert!(
+            c.gather_k.len() <= bound && c.gather_v.len() <= bound,
+            "gather scratch not re-clamped: {} > bound {bound}",
+            c.gather_k.len()
+        );
+        assert_eq!(c.cap, shrunk_cap);
+        assert_eq!(c.len(), 0);
+        // the shrunk cache enforces its new capacity and still commits
+        assert!(c.append_committed(&block(4, 0.0), &block(4, 0.0), 4, 3).is_err());
+        c.append_committed(&block(4, 5.0), &block(4, 5.0), 4, 1).unwrap();
+        c.begin_branch().unwrap();
+        c.append_branch(&block(8, 9.0), &block(8, 9.0), 8, 1).unwrap();
+        c.commit_path(&[0, 1]).unwrap();
+        assert_eq!(row_value(&c, 1), 9.0);
+        // plain reset keeps the clamp invariant too
+        c.reset();
+        assert!(c.gather_k.len() <= bound);
+    }
+
+    #[test]
+    fn reconfigure_matches_fresh_cache() {
+        let mut c = mk(CacheStrategy::SegmentShare, true);
+        c.append_committed(&block(4, 10.0), &block(4, 10.0), 4, 3).unwrap();
+        c.reconfigure(CacheStrategy::DeepCopy, false);
+        assert_eq!(c.len(), 0);
+        assert_eq!(c.strategy(), CacheStrategy::DeepCopy);
+        c.append_committed(&block(4, 1.0), &block(4, 1.0), 4, 2).unwrap();
+        c.begin_branch().unwrap();
+        assert!(c.stats.replicate_bytes > 0, "DeepCopy must replicate after reconfigure");
+        c.rollback();
+        let mut f = mk(CacheStrategy::DeepCopy, false);
+        f.append_committed(&block(4, 1.0), &block(4, 1.0), 4, 2).unwrap();
+        assert_eq!(c.committed_checksum(), f.committed_checksum());
     }
 
     #[test]

@@ -1,5 +1,143 @@
-//! Branchable KV-cache management (paper §3.1).
+//! Branchable KV-cache management (paper §3.1) behind one layout-agnostic
+//! store contract.
+//!
+//! Two physical layouts implement [`KvStore`]:
+//!
+//! * [`ManagedCache`] — flat `[L, cap, H, Dh]` buffers (the paper's
+//!   original layout; every engine pins full capacity);
+//! * [`PagedCache`] — fixed-size blocks drawn from a shared per-worker
+//!   [`PagePool`], addressed through a block table (residency ∝ committed
+//!   tokens; commits remap the table).
+//!
+//! The two are bit-identical under the branch/commit state machine
+//! (property-tested in `tests/paged.rs`); [`crate::config::CacheLayout`]
+//! selects between them per run.
 
 pub mod manager;
+pub mod paged;
+
+use crate::backend::KvView;
+use crate::config::CacheStrategy;
+use anyhow::Result;
+use std::cell::Ref;
 
 pub use manager::{CacheStats, ManagedCache};
+pub use paged::{CachePools, PagePool, PagedCache, BLOCK_ROWS};
+
+/// A live borrow of a store's readable KV state, held for the duration of
+/// one backend step (or one fused launch across many requests).
+///
+/// Flat stores lend their buffers directly; paged stores hold a shared
+/// [`Ref`] on the worker's [`PagePool`] — many guards may be alive at
+/// once (a fused launch borrows every group member's cache), but **no
+/// cache mutation on the same pool may happen while any guard lives**
+/// (enforced by `RefCell` at runtime). The engine and scheduler scope
+/// guards strictly around backend calls.
+pub enum KvGuard<'a> {
+    /// Borrowed flat buffers (`rows` physical rows per layer).
+    Flat {
+        /// Key buffer.
+        k: &'a [f32],
+        /// Value buffer.
+        v: &'a [f32],
+        /// Physical rows per layer.
+        rows: usize,
+    },
+    /// Shared pool borrow plus this conversation's block table.
+    Paged {
+        /// The pool borrow keeping the storage alive.
+        pool: Ref<'a, PagePool>,
+        /// Logical-block → physical-block table of the branch view.
+        table: &'a [u32],
+        /// Rows per block.
+        block_size: usize,
+    },
+}
+
+impl KvGuard<'_> {
+    /// The backend-facing view of the guarded state.
+    pub fn view(&self) -> KvView<'_> {
+        match self {
+            KvGuard::Flat { k, v, rows } => KvView::flat(k, v, *rows),
+            KvGuard::Paged { pool, table, block_size } => {
+                let (k, v) = pool.storage();
+                KvView::paged(k, v, table, *block_size)
+            }
+        }
+    }
+}
+
+/// The branch/commit KV-store contract (paper §3.1) every cache layout
+/// implements. Semantics are defined by [`ManagedCache`] (the reference
+/// implementation, documented there); [`PagedCache`] must match it
+/// bit-for-bit on committed state for identical operation sequences.
+pub trait KvStore {
+    /// Committed sequence length `t` (logical rows — never a physical
+    /// pool coordinate; mask prefix intervals derive from this).
+    fn len(&self) -> usize;
+
+    /// Whether nothing has been committed yet.
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Speculative rows appended in the currently open branch.
+    fn branch_rows(&self) -> usize;
+
+    /// Free committed capacity (logical).
+    fn headroom(&self) -> usize;
+
+    /// The configured branch-replication strategy.
+    fn strategy(&self) -> CacheStrategy;
+
+    /// Reset to an empty committed state (new conversation); paged stores
+    /// return every mapped block to the pool.
+    fn reset(&mut self);
+
+    /// Swap the branch strategy / reorder flag (continuous admission with
+    /// heterogeneous configs) and reset. Keeps storage capacity.
+    fn reconfigure(&mut self, strategy: CacheStrategy, fast_reorder: bool);
+
+    /// Append `count` committed rows from a `[L, s, H, Dh]` step output.
+    fn append_committed(&mut self, k_rows: &[f32], v_rows: &[f32], s: usize, count: usize)
+        -> Result<()>;
+
+    /// Open a speculative branch.
+    fn begin_branch(&mut self) -> Result<()>;
+
+    /// Append `count` speculative rows into the open branch.
+    fn append_branch(&mut self, k_rows: &[f32], v_rows: &[f32], s: usize, count: usize)
+        -> Result<()>;
+
+    /// Discard the open branch.
+    fn rollback(&mut self);
+
+    /// Length-based commit: adopt the first `a` branch rows.
+    fn commit_length(&mut self, a: usize) -> Result<()>;
+
+    /// Path-index commit over the branch view (absolute indices).
+    fn commit_path(&mut self, path_indices: &[usize]) -> Result<()>;
+
+    /// Prefix-relative tail commit (strictly increasing branch-row
+    /// offsets) — the steady-state fast path.
+    fn commit_path_tail(&mut self, tail_offsets: &[usize]) -> Result<()>;
+
+    /// Borrow the readable KV state for a backend step (branch view when
+    /// a DeepCopy replica is open, else the main state).
+    fn kv_guard(&self) -> KvGuard<'_>;
+
+    /// Copy of committed row `row` (`[L * H * Dh]`, k side) — tests and
+    /// checksums.
+    fn committed_row_k(&self, row: usize) -> Vec<f32>;
+
+    /// Checksum over the committed region (bit-identity tests).
+    fn committed_checksum(&self) -> f64;
+
+    /// Movement/commit counters.
+    fn stats(&self) -> &CacheStats;
+
+    /// Bytes of KV memory this conversation keeps resident: full buffers
+    /// (+ any open replica) for flat stores, mapped blocks for paged
+    /// ones. The CI memory gate sums this across resident slots.
+    fn bytes_resident(&self) -> u64;
+}

@@ -1,0 +1,927 @@
+//! Paged KV cache: fixed-size KV blocks drawn from a per-worker
+//! [`PagePool`] and addressed through a per-conversation block table.
+//!
+//! The flat [`crate::cache::ManagedCache`] pins a full `[L, cap, H, Dh]`
+//! buffer pair per engine, so a worker holding `B` resident slots pays
+//! `B * cap` rows of memory even when every conversation is a few dozen
+//! tokens long — and `commit_path` physically gathers rows. Paging
+//! (SpecInfer / vLLM-style) replaces both:
+//!
+//! ```text
+//!            PagePool (one per role per worker)
+//!   blocks:  [ 0 ][ 1 ][ 2 ][ 3 ][ 4 ][ 5 ] ...   (block = bs rows x L)
+//!   free:    {2, 5}
+//!
+//!   conv A table: [0, 3]     logical rows 0..2bs  ->  blocks 0, 3
+//!   conv B table: [1, 4]     (parked: blocks stay mapped, slot is free)
+//! ```
+//!
+//! * residency is proportional to committed tokens (`mapped blocks * bs`),
+//!   not capacity — measured as `kv_bytes_resident` and gated in CI;
+//! * `commit_length` and the steady-state `commit_path_tail` touch only
+//!   rows inside the partial boundary block (whole accepted blocks are
+//!   already in place — the table *is* the commit);
+//! * a retired-but-resumable conversation parks as a block table
+//!   ([`crate::engine::Engine::park`]); its freed siblings' blocks return
+//!   to the pool for new admissions.
+//!
+//! [`PagedCache`] implements the exact branch/begin/append/rollback/
+//! commit contract of [`crate::cache::KvStore`] and is bit-identical to
+//! [`crate::cache::ManagedCache`] under every strategy/commit mode
+//! (property-tested in `tests/paged.rs` via `committed_checksum`).
+//! Isolation carries over unchanged: SegmentShare appends speculative
+//! rows past the committed length (the boundary block's tail is invisible
+//! to committed readers), DeepCopy replicates the *mapped* blocks into a
+//! branch replica table.
+//!
+//! Backends read through the gather-aware [`crate::backend::KvView`]
+//! (block-table indirection); the tree mask is untouched — its prefix
+//! columns address **logical** rows `[0, t)`, and `t` is the logical
+//! committed length, never a physical pool coordinate.
+
+use crate::cache::{CacheStats, KvGuard, KvStore};
+use crate::config::{CacheStrategy, Contract, Dims};
+use anyhow::{bail, Result};
+use std::cell::RefCell;
+use std::rc::Rc;
+
+/// Rows per KV block. 16 keeps the partial-boundary-block copy small
+/// (a commit moves < bs rows) while keeping tables short (cap/16 entries).
+pub const BLOCK_ROWS: usize = 16;
+
+/// A fixed-block KV arena shared by every conversation of one worker
+/// (one pool per model role — teacher and draft differ in `[L, H, Dh]`).
+///
+/// Storage is block-major: block `b` occupies
+/// `[b * L * bs * H * Dh, (b+1) * ..)`, laid out `[L, bs, H, Dh]`, so the
+/// pool grows by whole blocks without re-striding existing data.
+/// [`PagePool::ensure_headroom`] pre-reserves storage capacity so
+/// steady-state block mapping performs no heap allocation (the
+/// zero-allocation decode contract, asserted by
+/// `tests/alloc_regression.rs`).
+pub struct PagePool {
+    dims: Dims,
+    block_size: usize,
+    /// Total storage-backed blocks (mapped + free).
+    blocks: usize,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    /// LIFO free list of block ids.
+    free: Vec<u32>,
+}
+
+impl PagePool {
+    /// An empty pool for a role with dimensions `dims` (no blocks yet;
+    /// storage grows on demand and within reserved capacity).
+    pub fn new(dims: Dims, block_size: usize) -> Self {
+        assert!(block_size >= 1, "block_size must be >= 1");
+        Self { dims, block_size, blocks: 0, k: Vec::new(), v: Vec::new(), free: Vec::new() }
+    }
+
+    /// Rows per block.
+    pub fn block_size(&self) -> usize {
+        self.block_size
+    }
+
+    /// Total blocks the pool has ever created (mapped + free).
+    pub fn blocks(&self) -> usize {
+        self.blocks
+    }
+
+    /// Blocks currently on the free list.
+    pub fn free_blocks(&self) -> usize {
+        self.free.len()
+    }
+
+    /// Elements of one block across all layers (`L * bs * H * Dh`).
+    #[inline]
+    pub fn block_elems(&self) -> usize {
+        self.dims.layers * self.block_size * self.dims.heads * self.dims.d_head
+    }
+
+    /// Raw (k, v) block storage — what a paged [`KvView`] borrows.
+    pub fn storage(&self) -> (&[f32], &[f32]) {
+        (&self.k, &self.v)
+    }
+
+    /// Bytes of block storage the pool holds (k + v, high-water). This is
+    /// the pool's *footprint*; per-conversation residency is
+    /// [`KvStore::bytes_resident`] (mapped blocks only).
+    pub fn bytes_resident(&self) -> u64 {
+        ((self.k.len() + self.v.len()) * 4) as u64
+    }
+
+    /// Reserve storage so `rows` more logical rows can be mapped without
+    /// a heap allocation (beyond blocks already free or unbacked
+    /// capacity). Called by engine warmup so a warmed resident
+    /// conversation's steady-state decode never grows the pool vectors.
+    ///
+    /// Reservation is per call, not cumulative: a multi-slot worker's
+    /// pool grows (allocating) the first time its *combined* residency
+    /// exceeds what was reserved, then sits at that high-water mark —
+    /// the same warm-to-peak behaviour as every scratch arena. The
+    /// zero-allocation assertion (`tests/alloc_regression.rs`) covers
+    /// the single-resident case this guarantees outright.
+    pub fn ensure_headroom(&mut self, rows: usize) {
+        let need = rows.div_ceil(self.block_size);
+        let be = self.block_elems();
+        let capacity_blocks = self.k.capacity() / be.max(1);
+        let avail = self.free.len() + capacity_blocks.saturating_sub(self.blocks);
+        if avail < need {
+            // `Vec::reserve` is relative to *len* (= backed blocks), so
+            // the unbacked spare capacity must not be subtracted twice:
+            // capacity must reach (blocks + need - free) blocks total.
+            let extra = (need - self.free.len()) * be;
+            self.k.reserve(extra);
+            self.v.reserve(extra);
+        }
+        self.free.reserve(need);
+    }
+
+    /// Take a block from the free list, growing storage if none is free.
+    fn alloc_block(&mut self) -> u32 {
+        if let Some(b) = self.free.pop() {
+            return b;
+        }
+        let b = self.blocks as u32;
+        self.blocks += 1;
+        let n = self.blocks * self.block_elems();
+        self.k.resize(n, 0.0);
+        self.v.resize(n, 0.0);
+        b
+    }
+
+    /// Return a block to the free list.
+    fn release_block(&mut self, b: u32) {
+        debug_assert!((b as usize) < self.blocks, "release of unbacked block {b}");
+        debug_assert!(!self.free.contains(&b), "double free of block {b}");
+        self.free.push(b);
+    }
+
+    /// Element offset of `(block, layer, in-block row)` in the storage.
+    #[inline]
+    fn row_off(&self, b: u32, layer: usize, within: usize) -> usize {
+        let rs = self.dims.heads * self.dims.d_head;
+        (b as usize) * self.block_elems() + (layer * self.block_size + within) * rs
+    }
+}
+
+/// The per-worker pool pair (teacher + draft roles). Cloning shares the
+/// pools (`Rc`): a worker creates one `CachePools` and hands it to every
+/// slot engine so all resident conversations draw from the same arenas.
+#[derive(Clone)]
+pub struct CachePools {
+    /// Teacher-role block pool.
+    pub teacher: Rc<RefCell<PagePool>>,
+    /// Draft-role block pool.
+    pub draft: Rc<RefCell<PagePool>>,
+}
+
+impl CachePools {
+    /// Fresh (empty) pools for a backend contract.
+    pub fn new(contract: &Contract) -> Self {
+        Self {
+            teacher: Rc::new(RefCell::new(PagePool::new(contract.teacher, BLOCK_ROWS))),
+            draft: Rc::new(RefCell::new(PagePool::new(contract.draft, BLOCK_ROWS))),
+        }
+    }
+
+    /// Combined pool storage footprint in bytes (k + v, both roles).
+    pub fn bytes_resident(&self) -> u64 {
+        self.teacher.borrow().bytes_resident() + self.draft.borrow().bytes_resident()
+    }
+}
+
+/// One conversation's KV cache over a shared [`PagePool`]: a block table
+/// plus the branch/commit state machine of the flat manager. See the
+/// module docs for layout and the `KvStore` docs for the contract.
+pub struct PagedCache {
+    dims: Dims,
+    cap: usize,
+    strategy: CacheStrategy,
+    fast_reorder: bool,
+    block_size: usize,
+    pool: Rc<RefCell<PagePool>>,
+    /// Main block table: committed rows `[0, len)` plus (SegmentShare)
+    /// the open branch's speculative rows.
+    table: Vec<u32>,
+    /// DeepCopy branch replica table (committed clone + branch appends);
+    /// `None` when no branch is open or the strategy is SegmentShare.
+    replica: Option<Vec<u32>>,
+    len: usize,
+    branch_rows: usize,
+    branch_open: bool,
+    /// Reusable row-gather scratch for the general commit paths (the
+    /// ablation-grade full reorder; the steady-state tail commit is
+    /// scratch-free).
+    gather_k: Vec<f32>,
+    gather_v: Vec<f32>,
+    /// Movement/commit counters (same schema as the flat manager; byte
+    /// counts reflect rows *actually moved*, which paging makes fewer).
+    pub stats: CacheStats,
+}
+
+impl PagedCache {
+    /// An empty paged cache of logical capacity `cap` rows drawing blocks
+    /// from `pool` (which must serve the same role dimensions).
+    pub fn new(
+        dims: Dims,
+        cap: usize,
+        strategy: CacheStrategy,
+        fast_reorder: bool,
+        pool: Rc<RefCell<PagePool>>,
+    ) -> Self {
+        let block_size = {
+            let p = pool.borrow();
+            debug_assert_eq!(p.dims, dims, "pool role dimensions mismatch");
+            p.block_size()
+        };
+        Self {
+            dims,
+            cap,
+            strategy,
+            fast_reorder,
+            block_size,
+            pool,
+            table: Vec::new(),
+            replica: None,
+            len: 0,
+            branch_rows: 0,
+            branch_open: false,
+            gather_k: Vec::new(),
+            gather_v: Vec::new(),
+            stats: CacheStats::default(),
+        }
+    }
+
+    /// Blocks this cache currently maps (main table + branch replica) —
+    /// the free-list invariant `pool.blocks == pool.free + Σ mapped`
+    /// holds after every operation (property-tested).
+    pub fn mapped_blocks(&self) -> usize {
+        self.table.len() + self.replica.as_ref().map_or(0, Vec::len)
+    }
+
+    /// Per-row element stride (`H * Dh`).
+    #[inline]
+    fn rstride(&self) -> usize {
+        self.dims.heads * self.dims.d_head
+    }
+
+    /// Grow `table` (in `pool`) until it maps at least `rows` rows.
+    fn map_rows(pool: &mut PagePool, table: &mut Vec<u32>, rows: usize) {
+        let bs = pool.block_size();
+        while table.len() * bs < rows {
+            let b = pool.alloc_block();
+            table.push(b);
+        }
+    }
+
+    /// Shrink the main table to exactly cover `rows`, releasing trimmed
+    /// blocks.
+    fn trim_table(&mut self, rows: usize) {
+        let keep = rows.div_ceil(self.block_size);
+        let mut pool = self.pool.borrow_mut();
+        while self.table.len() > keep {
+            let b = self.table.pop().expect("table longer than keep");
+            pool.release_block(b);
+        }
+    }
+
+    /// Release every replica block (branch close).
+    fn drop_replica(&mut self) {
+        if let Some(rep) = self.replica.take() {
+            let mut pool = self.pool.borrow_mut();
+            for b in rep {
+                pool.release_block(b);
+            }
+        }
+    }
+
+    /// Copy `count` rows of a `[L, s, H, Dh]` step-output block into the
+    /// chosen table at logical offset `at`, mapping blocks as needed.
+    fn write_rows(
+        &mut self,
+        into_replica: bool,
+        at: usize,
+        k_rows: &[f32],
+        v_rows: &[f32],
+        s: usize,
+        count: usize,
+    ) {
+        let rs = self.rstride();
+        debug_assert_eq!(k_rows.len(), self.dims.layers * s * rs);
+        let mut pool = self.pool.borrow_mut();
+        let table = if into_replica {
+            self.replica.as_mut().expect("replica table missing")
+        } else {
+            &mut self.table
+        };
+        Self::map_rows(&mut pool, table, at + count);
+        let bs = pool.block_size();
+        for l in 0..self.dims.layers {
+            for r in 0..count {
+                let row = at + r;
+                let b = table[row / bs];
+                let dst = pool.row_off(b, l, row % bs);
+                let src = (l * s + r) * rs;
+                pool.k[dst..dst + rs].copy_from_slice(&k_rows[src..src + rs]);
+                pool.v[dst..dst + rs].copy_from_slice(&v_rows[src..src + rs]);
+            }
+        }
+    }
+
+    /// In-pool row copy: logical `src_row` of `src_table` → logical
+    /// `dst_row` of `dst_table` (tables may be the same; a row never
+    /// overlaps itself unless identical, in which case this is a no-op
+    /// for the caller to skip).
+    fn copy_row(pool: &mut PagePool, src_table: &[u32], src_row: usize, dst_table: &[u32],
+                dst_row: usize, layers: usize) {
+        let bs = pool.block_size();
+        for l in 0..layers {
+            let s_off = pool.row_off(src_table[src_row / bs], l, src_row % bs);
+            let d_off = pool.row_off(dst_table[dst_row / bs], l, dst_row % bs);
+            let rs = pool.dims.heads * pool.dims.d_head;
+            pool.k.copy_within(s_off..s_off + rs, d_off);
+            pool.v.copy_within(s_off..s_off + rs, d_off);
+        }
+    }
+
+    /// Close the branch state after a commit/rollback.
+    fn close_branch(&mut self) {
+        self.branch_open = false;
+        self.branch_rows = 0;
+        self.drop_replica();
+    }
+
+    /// The table a branch-view read goes through (replica when DeepCopy
+    /// has one open, else the main table).
+    fn view_table(&self) -> &[u32] {
+        match &self.replica {
+            Some(rep) => rep,
+            None => &self.table,
+        }
+    }
+
+    /// Gather logical `rows` of the branch view into the reusable
+    /// scratch, laid out `[L, rows.len(), H, Dh]`.
+    fn gather_rows(&mut self, rows: &[usize]) {
+        let rs = self.rstride();
+        let n = self.dims.layers * rows.len() * rs;
+        self.gather_k.resize(n, 0.0);
+        self.gather_v.resize(n, 0.0);
+        let pool = self.pool.borrow();
+        let table = match &self.replica {
+            Some(rep) => rep.as_slice(),
+            None => self.table.as_slice(),
+        };
+        let bs = pool.block_size();
+        for l in 0..self.dims.layers {
+            for (i, &src) in rows.iter().enumerate() {
+                let s_off = pool.row_off(table[src / bs], l, src % bs);
+                let d_off = (l * rows.len() + i) * rs;
+                self.gather_k[d_off..d_off + rs].copy_from_slice(&pool.k[s_off..s_off + rs]);
+                self.gather_v[d_off..d_off + rs].copy_from_slice(&pool.v[s_off..s_off + rs]);
+            }
+        }
+    }
+
+    /// Write the gathered scratch back as committed rows `[at, at+n)` of
+    /// the main table.
+    fn scatter_gathered(&mut self, at: usize, n: usize) {
+        let rs = self.rstride();
+        let mut pool = self.pool.borrow_mut();
+        Self::map_rows(&mut pool, &mut self.table, at + n);
+        let bs = pool.block_size();
+        for l in 0..self.dims.layers {
+            for i in 0..n {
+                let row = at + i;
+                let dst = pool.row_off(self.table[row / bs], l, row % bs);
+                let src = (l * n + i) * rs;
+                pool.k[dst..dst + rs].copy_from_slice(&self.gather_k[src..src + rs]);
+                pool.v[dst..dst + rs].copy_from_slice(&self.gather_v[src..src + rs]);
+            }
+        }
+    }
+}
+
+impl KvStore for PagedCache {
+    fn len(&self) -> usize {
+        self.len
+    }
+
+    fn branch_rows(&self) -> usize {
+        self.branch_rows
+    }
+
+    fn headroom(&self) -> usize {
+        self.cap - self.len
+    }
+
+    fn strategy(&self) -> CacheStrategy {
+        self.strategy
+    }
+
+    fn reset(&mut self) {
+        self.drop_replica();
+        self.trim_table(0);
+        self.len = 0;
+        self.branch_rows = 0;
+        self.branch_open = false;
+        self.stats = CacheStats::default();
+    }
+
+    fn reconfigure(&mut self, strategy: CacheStrategy, fast_reorder: bool) {
+        self.strategy = strategy;
+        self.fast_reorder = fast_reorder;
+        self.reset();
+    }
+
+    fn append_committed(&mut self, k_rows: &[f32], v_rows: &[f32], s: usize, count: usize)
+        -> Result<()> {
+        if self.branch_open {
+            bail!("append_committed while a branch is open");
+        }
+        if self.len + count > self.cap {
+            bail!("cache overflow: len {} + {count} > cap {}", self.len, self.cap);
+        }
+        let at = self.len;
+        self.write_rows(false, at, k_rows, v_rows, s, count);
+        self.len += count;
+        self.stats.append_bytes += (2 * count * self.rstride() * self.dims.layers * 4) as u64;
+        Ok(())
+    }
+
+    fn begin_branch(&mut self) -> Result<()> {
+        if self.branch_open {
+            bail!("begin_branch: branch already open");
+        }
+        self.branch_open = true;
+        self.branch_rows = 0;
+        self.stats.branches += 1;
+        if self.strategy == CacheStrategy::DeepCopy {
+            // Replicate the *mapped* blocks (not full capacity — the
+            // honest paged cost of the paper's conservative mode).
+            let mut pool = self.pool.borrow_mut();
+            let be = pool.block_elems();
+            let mut rep = Vec::with_capacity(self.table.len());
+            for &src in &self.table {
+                let dst = pool.alloc_block();
+                let s_off = (src as usize) * be;
+                let d_off = (dst as usize) * be;
+                pool.k.copy_within(s_off..s_off + be, d_off);
+                pool.v.copy_within(s_off..s_off + be, d_off);
+                rep.push(dst);
+            }
+            self.stats.replicate_bytes += (2 * rep.len() * be * 4) as u64;
+            self.replica = Some(rep);
+        }
+        Ok(())
+    }
+
+    fn append_branch(&mut self, k_rows: &[f32], v_rows: &[f32], s: usize, count: usize)
+        -> Result<()> {
+        if !self.branch_open {
+            bail!("append_branch without begin_branch");
+        }
+        let at = self.len + self.branch_rows;
+        if at + count > self.cap {
+            bail!("branch overflow: {at} + {count} > cap {}", self.cap);
+        }
+        let into_replica = self.replica.is_some();
+        self.write_rows(into_replica, at, k_rows, v_rows, s, count);
+        self.branch_rows += count;
+        self.stats.append_bytes += (2 * count * self.rstride() * self.dims.layers * 4) as u64;
+        Ok(())
+    }
+
+    fn rollback(&mut self) {
+        if self.branch_open {
+            self.close_branch();
+            // SegmentShare spec rows may have grown the main table past
+            // the committed boundary — give those blocks back.
+            let len = self.len;
+            self.trim_table(len);
+            self.stats.rollbacks += 1;
+        }
+    }
+
+    fn commit_length(&mut self, a: usize) -> Result<()> {
+        if !self.branch_open {
+            bail!("commit_length without an open branch");
+        }
+        if a > self.branch_rows {
+            bail!("commit_length: a = {a} > branch rows {}", self.branch_rows);
+        }
+        if let Some(rep) = self.replica.take() {
+            // DeepCopy: adopt rows [len, len+a) from the replica. Whole
+            // blocks past the committed boundary are *remapped* (the
+            // block-table commit); only rows sharing the partial boundary
+            // block are copied.
+            let len = self.len;
+            let bs = self.block_size;
+            let boundary = len.div_ceil(bs) * bs; // first whole-block row
+            let mut moved_rows = 0usize;
+            {
+                let mut pool = self.pool.borrow_mut();
+                for row in len..(len + a).min(boundary) {
+                    Self::map_rows(&mut pool, &mut self.table, row + 1);
+                    Self::copy_row(&mut pool, &rep, row, &self.table, row, self.dims.layers);
+                    moved_rows += 1;
+                }
+            }
+            // remap whole replica blocks holding rows [boundary, len+a):
+            // the main table maps nothing past the boundary (DeepCopy
+            // appends went to the replica), so adoption is a pure push —
+            // the block-table commit, zero row movement
+            let mut rep = rep;
+            if len + a > boundary {
+                let first_b = boundary / bs;
+                let last_b = (len + a - 1) / bs;
+                for bi in first_b..=last_b {
+                    debug_assert_eq!(self.table.len(), bi, "boundary block accounting");
+                    let blk = rep[bi];
+                    rep[bi] = u32::MAX; // mark adopted
+                    self.table.push(blk);
+                }
+            }
+            // release the replica blocks not adopted
+            {
+                let mut pool = self.pool.borrow_mut();
+                for b in rep {
+                    if b != u32::MAX {
+                        pool.release_block(b);
+                    }
+                }
+            }
+            self.stats.commit_bytes += (2 * moved_rows * self.rstride() * self.dims.layers * 4) as u64;
+            self.len += a;
+        } else {
+            // SegmentShare: rows already sit at [len, len+a) — advance
+            // the length and free the blocks past it. Zero copy.
+            self.len += a;
+        }
+        let len = self.len;
+        self.trim_table(len);
+        self.branch_open = false;
+        self.branch_rows = 0;
+        self.stats.commits += 1;
+        Ok(())
+    }
+
+    fn commit_path(&mut self, path_indices: &[usize]) -> Result<()> {
+        if !self.branch_open {
+            bail!("commit_path without an open branch");
+        }
+        let view_len = self.len + self.branch_rows;
+        if path_indices.len() > view_len {
+            bail!("commit_path: {} indices exceed branch view {view_len}", path_indices.len());
+        }
+        if let Some(bad) = path_indices.iter().find(|i| **i >= view_len) {
+            bail!("commit_path: index {bad} out of branch view {view_len}");
+        }
+        let prefix_preserved =
+            path_indices.len() >= self.len && (0..self.len).all(|i| path_indices[i] == i);
+        if self.fast_reorder && prefix_preserved {
+            // Gather only the accepted tail (arbitrary view indices are
+            // allowed here, unlike the strictly-increasing tail commit).
+            let tail: Vec<usize> = path_indices[self.len..].to_vec();
+            self.gather_rows(&tail);
+            let at = self.len;
+            self.drop_replica();
+            self.scatter_gathered(at, tail.len());
+            self.stats.commit_bytes +=
+                (4 * self.dims.layers * tail.len() * self.rstride() * 4) as u64;
+            self.stats.fast_reorders += 1;
+        } else {
+            if self.fast_reorder {
+                self.stats.fast_fallbacks += 1;
+            }
+            // Full reorder (ablation path): gather every accepted row,
+            // then rewrite the committed sequence from row 0.
+            self.gather_rows(path_indices);
+            self.drop_replica();
+            self.scatter_gathered(0, path_indices.len());
+            self.stats.commit_bytes +=
+                (4 * self.dims.layers * path_indices.len() * self.rstride() * 4) as u64;
+            self.stats.full_reorders += 1;
+        }
+        self.len = path_indices.len();
+        let len = self.len;
+        self.branch_open = false;
+        self.branch_rows = 0;
+        self.trim_table(len);
+        self.stats.commits += 1;
+        Ok(())
+    }
+
+    fn commit_path_tail(&mut self, tail_offsets: &[usize]) -> Result<()> {
+        if !self.branch_open {
+            bail!("commit_path_tail without an open branch");
+        }
+        let mut prev: Option<usize> = None;
+        for &o in tail_offsets {
+            if o >= self.branch_rows {
+                bail!("commit_path_tail: offset {o} out of branch rows {}", self.branch_rows);
+            }
+            if let Some(p) = prev {
+                if o <= p {
+                    bail!("commit_path_tail: offsets must be strictly increasing ({p} then {o})");
+                }
+            }
+            prev = Some(o);
+        }
+        let len = self.len;
+        let layers = self.dims.layers;
+        let mut moved_rows = 0usize;
+        match self.replica.take() {
+            Some(rep) => {
+                // DeepCopy: copy accepted rows from the replica into the
+                // main table (disjoint blocks — plain copies).
+                let mut pool = self.pool.borrow_mut();
+                for (i, &o) in tail_offsets.iter().enumerate() {
+                    Self::map_rows(&mut pool, &mut self.table, len + i + 1);
+                    Self::copy_row(&mut pool, &rep, len + o, &self.table, len + i, layers);
+                    moved_rows += 1;
+                }
+                for b in rep {
+                    pool.release_block(b);
+                }
+            }
+            None => {
+                // SegmentShare: in-place forward gather through the block
+                // table. Strictly increasing offsets give `o >= i`, so a
+                // source row is never overwritten before it is read —
+                // the same argument as the flat layout, independent of
+                // which physical blocks the rows land in.
+                let mut pool = self.pool.borrow_mut();
+                for (i, &o) in tail_offsets.iter().enumerate() {
+                    if o == i {
+                        continue;
+                    }
+                    Self::copy_row(&mut pool, &self.table, len + o, &self.table, len + i, layers);
+                    moved_rows += 1;
+                }
+            }
+        }
+        self.stats.commit_bytes += (2 * moved_rows * self.rstride() * layers * 4) as u64;
+        self.stats.fast_reorders += 1;
+        self.len += tail_offsets.len();
+        let new_len = self.len;
+        self.branch_open = false;
+        self.branch_rows = 0;
+        self.trim_table(new_len);
+        self.stats.commits += 1;
+        Ok(())
+    }
+
+    fn kv_guard(&self) -> KvGuard<'_> {
+        KvGuard::Paged {
+            pool: self.pool.borrow(),
+            table: self.view_table(),
+            block_size: self.block_size,
+        }
+    }
+
+    fn committed_row_k(&self, row: usize) -> Vec<f32> {
+        assert!(row < self.len);
+        let rs = self.rstride();
+        let pool = self.pool.borrow();
+        let bs = pool.block_size();
+        let mut out = Vec::with_capacity(self.dims.layers * rs);
+        for l in 0..self.dims.layers {
+            let off = pool.row_off(self.table[row / bs], l, row % bs);
+            out.extend_from_slice(&pool.k[off..off + rs]);
+        }
+        out
+    }
+
+    fn committed_checksum(&self) -> f64 {
+        let rs = self.rstride();
+        let pool = self.pool.borrow();
+        let bs = pool.block_size();
+        let mut acc = 0.0f64;
+        for l in 0..self.dims.layers {
+            for r in 0..self.len {
+                let off = pool.row_off(self.table[r / bs], l, r % bs);
+                for x in &pool.k[off..off + rs] {
+                    acc += *x as f64;
+                }
+                for x in &pool.v[off..off + rs] {
+                    acc += *x as f64;
+                }
+            }
+        }
+        acc
+    }
+
+    fn stats(&self) -> &CacheStats {
+        &self.stats
+    }
+
+    fn bytes_resident(&self) -> u64 {
+        let be = self.pool.borrow().block_elems();
+        (2 * self.mapped_blocks() * be * 4) as u64
+    }
+}
+
+impl Drop for PagedCache {
+    /// Return every mapped block to the pool — a dropped conversation
+    /// must not leak blocks (the free-list invariant).
+    fn drop(&mut self) {
+        self.drop_replica();
+        self.trim_table(0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const DIMS: Dims = Dims { layers: 2, d_model: 8, heads: 2, d_head: 2 };
+    const CAP: usize = 32;
+
+    fn pool() -> Rc<RefCell<PagePool>> {
+        Rc::new(RefCell::new(PagePool::new(DIMS, 4)))
+    }
+
+    fn mk(strategy: CacheStrategy, p: &Rc<RefCell<PagePool>>) -> PagedCache {
+        PagedCache::new(DIMS, CAP, strategy, true, p.clone())
+    }
+
+    /// `[L, s, H, Dh]` block whose row r carries `base + r` everywhere.
+    fn block(s: usize, base: f32) -> Vec<f32> {
+        let rs = DIMS.heads * DIMS.d_head;
+        let mut out = vec![0.0; DIMS.layers * s * rs];
+        for l in 0..DIMS.layers {
+            for r in 0..s {
+                for e in 0..rs {
+                    out[(l * s + r) * rs + e] = base + r as f32;
+                }
+            }
+        }
+        out
+    }
+
+    fn row_value(c: &PagedCache, row: usize) -> f32 {
+        c.committed_row_k(row)[0]
+    }
+
+    fn pool_invariant(p: &Rc<RefCell<PagePool>>, caches: &[&PagedCache]) {
+        let pl = p.borrow();
+        let mapped: usize = caches.iter().map(|c| c.mapped_blocks()).sum();
+        assert_eq!(
+            pl.blocks(),
+            pl.free_blocks() + mapped,
+            "pool invariant broken: {} blocks != {} free + {} mapped",
+            pl.blocks(),
+            pl.free_blocks(),
+            mapped
+        );
+    }
+
+    #[test]
+    fn append_commit_and_trim_blocks() {
+        let p = pool();
+        let mut c = mk(CacheStrategy::SegmentShare, &p);
+        c.append_committed(&block(8, 100.0), &block(8, 200.0), 8, 6).unwrap();
+        assert_eq!(c.len(), 6);
+        assert_eq!(c.mapped_blocks(), 2); // 6 rows over bs=4
+        assert_eq!(row_value(&c, 5), 105.0);
+        pool_invariant(&p, &[&c]);
+
+        c.begin_branch().unwrap();
+        c.append_branch(&block(8, 500.0), &block(8, 500.0), 8, 7).unwrap();
+        assert_eq!(c.mapped_blocks(), 4); // 13 rows
+        c.commit_length(3).unwrap();
+        assert_eq!(c.len(), 9);
+        assert_eq!(c.mapped_blocks(), 3); // trimmed back to 9 rows
+        assert_eq!(row_value(&c, 6), 500.0);
+        assert_eq!(row_value(&c, 8), 502.0);
+        pool_invariant(&p, &[&c]);
+    }
+
+    #[test]
+    fn rollback_returns_spec_blocks() {
+        let p = pool();
+        let mut c = mk(CacheStrategy::SegmentShare, &p);
+        c.append_committed(&block(8, 1.0), &block(8, 1.0), 8, 4).unwrap();
+        let before = c.committed_checksum();
+        c.begin_branch().unwrap();
+        c.append_branch(&block(8, 9.0), &block(8, 9.0), 8, 8).unwrap();
+        assert_eq!(c.committed_checksum(), before, "branch leaked into committed rows");
+        c.rollback();
+        assert_eq!(c.mapped_blocks(), 1);
+        assert_eq!(c.committed_checksum(), before);
+        pool_invariant(&p, &[&c]);
+    }
+
+    #[test]
+    fn deepcopy_replicates_mapped_blocks_only() {
+        let p = pool();
+        let mut c = mk(CacheStrategy::DeepCopy, &p);
+        c.append_committed(&block(8, 1.0), &block(8, 1.0), 8, 5).unwrap();
+        c.begin_branch().unwrap();
+        // replica of 2 mapped blocks, not cap/bs = 8
+        assert_eq!(c.mapped_blocks(), 4);
+        assert!(c.stats.replicate_bytes > 0);
+        c.append_branch(&block(8, 50.0), &block(8, 50.0), 8, 4).unwrap();
+        let before = c.committed_checksum();
+        c.commit_path_tail(&[1, 3]).unwrap();
+        assert_eq!(c.len(), 7);
+        assert_eq!(row_value(&c, 5), 51.0);
+        assert_eq!(row_value(&c, 6), 53.0);
+        assert!(c.committed_checksum() != before);
+        pool_invariant(&p, &[&c]);
+    }
+
+    #[test]
+    fn commit_guards_match_flat_semantics() {
+        let p = pool();
+        let mut c = mk(CacheStrategy::SegmentShare, &p);
+        assert!(c.commit_length(0).is_err());
+        assert!(c.commit_path(&[0]).is_err());
+        assert!(c.commit_path_tail(&[0]).is_err());
+        c.append_committed(&block(8, 0.0), &block(8, 0.0), 8, 2).unwrap();
+        c.begin_branch().unwrap();
+        assert!(c.begin_branch().is_err());
+        c.append_branch(&block(8, 1.0), &block(8, 1.0), 8, 3).unwrap();
+        assert!(c.commit_path_tail(&[3]).is_err(), "offset out of branch");
+        assert!(c.commit_path_tail(&[1, 1]).is_err(), "not strictly increasing");
+        assert!(c.commit_path(&[0, 9]).is_err(), "index out of view");
+        c.commit_path_tail(&[0, 2]).unwrap();
+        assert_eq!(c.len(), 4);
+        pool_invariant(&p, &[&c]);
+    }
+
+    #[test]
+    fn two_residents_share_one_pool_without_crosstalk() {
+        let p = pool();
+        let mut a = mk(CacheStrategy::SegmentShare, &p);
+        let mut b = mk(CacheStrategy::SegmentShare, &p);
+        a.append_committed(&block(8, 10.0), &block(8, 10.0), 8, 5).unwrap();
+        b.append_committed(&block(8, 90.0), &block(8, 90.0), 8, 3).unwrap();
+        let ca = a.committed_checksum();
+        b.begin_branch().unwrap();
+        b.append_branch(&block(8, 70.0), &block(8, 70.0), 8, 6).unwrap();
+        b.commit_length(6).unwrap();
+        assert_eq!(a.committed_checksum(), ca, "sibling commit corrupted resident A");
+        assert_eq!(row_value(&a, 4), 14.0);
+        assert_eq!(row_value(&b, 3), 70.0);
+        pool_invariant(&p, &[&a, &b]);
+        // dropping one resident returns its blocks
+        let blocks_before = p.borrow().blocks();
+        drop(a);
+        pool_invariant(&p, &[&b]);
+        assert_eq!(p.borrow().blocks(), blocks_before, "drop must not create blocks");
+        // freed blocks are reused, not regrown
+        let mut c = mk(CacheStrategy::SegmentShare, &p);
+        c.append_committed(&block(8, 5.0), &block(8, 5.0), 8, 4).unwrap();
+        assert_eq!(p.borrow().blocks(), blocks_before);
+        pool_invariant(&p, &[&b, &c]);
+    }
+
+    #[test]
+    fn ensure_headroom_prevents_storage_growth() {
+        let p = pool();
+        p.borrow_mut().ensure_headroom(CAP);
+        let cap_before = p.borrow().k.capacity();
+        assert!(cap_before >= CAP.div_ceil(4) * p.borrow().block_elems());
+        let mut c = mk(CacheStrategy::SegmentShare, &p);
+        c.append_committed(&block(8, 1.0), &block(8, 1.0), 8, 8).unwrap();
+        c.begin_branch().unwrap();
+        c.append_branch(&block(8, 2.0), &block(8, 2.0), 8, 8).unwrap();
+        c.commit_length(8).unwrap();
+        assert_eq!(
+            p.borrow().k.capacity(),
+            cap_before,
+            "mapping within reserved headroom must not reallocate the pool"
+        );
+        // headroom already satisfied -> idempotent
+        p.borrow_mut().ensure_headroom(CAP - 16);
+        assert_eq!(p.borrow().k.capacity(), cap_before);
+    }
+
+    #[test]
+    fn ensure_headroom_accounts_unbacked_spare_capacity() {
+        // Regression: `Vec::reserve` is relative to len, so unbacked
+        // spare capacity (left behind by amortized growth) must not be
+        // double-counted — after ensure_headroom(n), mapping n rows must
+        // never reallocate, whatever the pool's growth history.
+        let p = pool();
+        let mut c = mk(CacheStrategy::SegmentShare, &p);
+        // organic growth, one block at a time
+        c.append_committed(&block(8, 1.0), &block(8, 1.0), 8, 8).unwrap(); // 2 blocks
+        c.append_committed(&block(4, 2.0), &block(4, 2.0), 4, 4).unwrap(); // 3rd block
+        p.borrow_mut().ensure_headroom(8); // promise 2 more blocks
+        let cap_before = p.borrow().k.capacity();
+        c.begin_branch().unwrap();
+        c.append_branch(&block(8, 3.0), &block(8, 3.0), 8, 8).unwrap(); // maps 2 blocks
+        assert_eq!(
+            p.borrow().k.capacity(),
+            cap_before,
+            "reserved headroom must cover the mapped blocks without reallocating"
+        );
+        c.commit_length(8).unwrap();
+        pool_invariant(&p, &[&c]);
+    }
+}

@@ -1,7 +1,7 @@
 //! Subcommand dispatch — the leader entrypoint of the rust coordinator.
 
 use super::args::Args;
-use crate::config::{CacheStrategy, CommitMode, ExecMode, RunConfig};
+use crate::config::{CacheLayout, CacheStrategy, CommitMode, ExecMode, RunConfig};
 use crate::coordinator::{run_workload, AdmissionPolicy, BackendSpec, CoordinatorConfig};
 use crate::engine::Engine;
 use crate::harness::{run_e1, run_e2, run_e3, run_e4, HarnessConfig};
@@ -35,6 +35,10 @@ COMMON FLAGS
   --mode fused|eager      execution path (paper two-mode protocol)
   --budget M --depth D --topk K    tree configuration
   --cache-strategy deepcopy|segment   branch replication (§3.1 ablation)
+  --cache-layout flat|paged           physical KV layout: flat full-capacity buffers
+                          (default) | block-table paging over a shared per-worker pool
+                          (residency follows committed tokens; parked multi-turn
+                          conversations keep only their mapped blocks)
   --commit-mode length|path-index     commit mode (§3.1)
   --no-fast-reorder       disable the prefix-sharing fast reorder
   --unsafe-indexing       skip §3.2 invariant checks (ablation)
@@ -53,7 +57,7 @@ COMMON FLAGS
 
 const RUN_FLAGS: &[&str] = &[
     "backend", "artifacts", "agree", "mode", "budget", "depth", "topk",
-    "cache-strategy", "commit-mode", "draft-window", "max-new", "temperature",
+    "cache-strategy", "cache-layout", "commit-mode", "draft-window", "max-new", "temperature",
     "workers", "batch", "scheduling", "seed", "out-dir", "trace-dir", "prompt-len",
     "conversations", "profile", "turns", "requests", "rate", "servers",
 ];
@@ -125,6 +129,9 @@ pub fn run_config(args: &Args) -> Result<RunConfig> {
     }
     if let Some(s) = args.get("cache-strategy") {
         cfg.cache_strategy = CacheStrategy::parse(s)?;
+    }
+    if let Some(l) = args.get("cache-layout") {
+        cfg.cache_layout = CacheLayout::parse(l)?;
     }
     if let Some(c) = args.get("commit-mode") {
         cfg.commit_mode = CommitMode::parse(c)?;
@@ -333,13 +340,14 @@ mod tests {
     #[test]
     fn run_config_from_flags() {
         let a = parse("serve --mode eager --budget 32 --depth 6 --cache-strategy deepcopy \
-                       --commit-mode length --no-fast-reorder --draft-window 64 \
-                       --max-new 10 --seed 3 --unsafe-indexing");
+                       --cache-layout paged --commit-mode length --no-fast-reorder \
+                       --draft-window 64 --max-new 10 --seed 3 --unsafe-indexing");
         let c = run_config(&a).unwrap();
         assert_eq!(c.mode, ExecMode::Eager);
         assert_eq!(c.tree.budget, 32);
         assert_eq!(c.tree.depth_max, 6);
         assert_eq!(c.cache_strategy, CacheStrategy::DeepCopy);
+        assert_eq!(c.cache_layout, CacheLayout::Paged);
         assert_eq!(c.commit_mode, CommitMode::Length);
         assert!(!c.fast_reorder);
         assert!(!c.check_invariants);
@@ -373,7 +381,17 @@ mod tests {
     fn invalid_flag_combinations_fail() {
         assert!(run_config(&parse("serve --budget 0")).is_err());
         assert!(run_config(&parse("serve --mode turbo")).is_err());
+        assert!(run_config(&parse("serve --cache-layout sparse")).is_err());
         assert!(backend_spec(&parse("serve --backend quantum")).is_err());
+    }
+
+    #[test]
+    fn generate_on_paged_layout_works_end_to_end() {
+        let a = parse(
+            "generate --backend sim --agree 90 --max-new 12 --prompt-len 16 \
+             --cache-layout paged --quick",
+        );
+        dispatch(&a).unwrap();
     }
 
     #[test]

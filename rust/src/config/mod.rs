@@ -7,4 +7,4 @@ pub mod contract;
 pub mod run;
 
 pub use contract::{Contract, Dims, ExecMode};
-pub use run::{CacheStrategy, CommitMode, RunConfig, TreeConfig};
+pub use run::{CacheLayout, CacheStrategy, CommitMode, RunConfig, TreeConfig};

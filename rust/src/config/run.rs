@@ -77,6 +77,48 @@ impl CacheStrategy {
     }
 }
 
+/// Physical KV-cache layout behind the branch/commit contract.
+///
+/// Both layouts implement the same [`crate::cache::KvStore`] contract and
+/// decode bit-identically (property-tested in `tests/paged.rs`); they
+/// differ only in memory shape and commit cost:
+///
+/// * [`CacheLayout::Flat`] — one `[L, cap, H, Dh]` buffer pair per role
+///   per engine ([`crate::cache::ManagedCache`]): every slot pins full
+///   capacity even while its conversation idles.
+/// * [`CacheLayout::Paged`] — fixed-size KV blocks drawn from a
+///   per-worker [`crate::cache::PagePool`] and addressed through a block
+///   table ([`crate::cache::PagedCache`]): residency is proportional to
+///   the tokens actually committed, freed blocks return to the pool for
+///   other conversations, and path commits remap the table instead of
+///   gathering full rows.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CacheLayout {
+    /// Flat full-capacity buffers (the paper's original layout).
+    Flat,
+    /// Block-table paging over a shared per-worker pool.
+    Paged,
+}
+
+impl CacheLayout {
+    /// Stable string form (flags, manifests).
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            CacheLayout::Flat => "flat",
+            CacheLayout::Paged => "paged",
+        }
+    }
+
+    /// Parse the string form (`flat` | `paged`).
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "flat" => Ok(CacheLayout::Flat),
+            "paged" => Ok(CacheLayout::Paged),
+            other => bail!("unknown cache layout '{other}' (expected flat|paged)"),
+        }
+    }
+}
+
 /// Commit mode after acceptance (paper §3.1).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum CommitMode {
@@ -114,6 +156,9 @@ pub struct RunConfig {
     pub tree: TreeConfig,
     /// Branch replication strategy (§3.1 ablation axis).
     pub cache_strategy: CacheStrategy,
+    /// Physical KV layout: flat full-capacity buffers or block-table
+    /// paging over a shared per-worker pool (`--cache-layout`).
+    pub cache_layout: CacheLayout,
     /// Commit mode after acceptance (§3.1 ablation axis).
     pub commit_mode: CommitMode,
     /// Prefix-sharing fast reorder (paper's EA_FAST_CACHE_REORDER flag).
@@ -144,6 +189,7 @@ impl Default for RunConfig {
             mode: ExecMode::Fused,
             tree: TreeConfig::default(),
             cache_strategy: CacheStrategy::SegmentShare,
+            cache_layout: CacheLayout::Flat,
             commit_mode: CommitMode::PathIndex,
             fast_reorder: true,
             check_invariants: true,
@@ -184,6 +230,7 @@ impl RunConfig {
             .push("tree_depth_max", self.tree.depth_max)
             .push("tree_topk", self.tree.topk)
             .push("cache_strategy", self.cache_strategy.as_str())
+            .push("cache_layout", self.cache_layout.as_str())
             .push("commit_mode", self.commit_mode.as_str())
             .push("fast_reorder", self.fast_reorder)
             .push("check_invariants", self.check_invariants)
@@ -236,7 +283,7 @@ mod tests {
     #[test]
     fn json_includes_every_axis() {
         let j = RunConfig::default().to_json();
-        for key in ["mode", "tree_budget", "cache_strategy", "commit_mode",
+        for key in ["mode", "tree_budget", "cache_strategy", "cache_layout", "commit_mode",
                     "fast_reorder", "draft_window", "max_new_tokens"] {
             assert!(j.get(key).is_some(), "missing {key}");
         }
@@ -248,5 +295,14 @@ mod tests {
         assert_eq!(CommitMode::parse("path-index").unwrap(), CommitMode::PathIndex);
         assert!(CacheStrategy::parse("x").is_err());
         assert!(CommitMode::parse("x").is_err());
+    }
+
+    #[test]
+    fn cache_layout_parses_and_defaults_flat() {
+        assert_eq!(CacheLayout::parse("flat").unwrap(), CacheLayout::Flat);
+        assert_eq!(CacheLayout::parse("paged").unwrap(), CacheLayout::Paged);
+        assert!(CacheLayout::parse("sparse").is_err());
+        assert_eq!(RunConfig::default().cache_layout, CacheLayout::Flat);
+        assert_eq!(CacheLayout::Paged.as_str(), "paged");
     }
 }

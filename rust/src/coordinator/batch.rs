@@ -22,7 +22,11 @@
 //!                ^                  │  ^                   │
 //!                │                  │  └── Continue ───────┤ (next turn,
 //!                └──────────────────┘      (same slot,     │  context kept)
-//!                    slot freed by Release <───────────────┘
+//!                ^   slot freed by Release <───────────────┤
+//!                │                                         │ Park (slot freed,
+//!             resume <──────── [parked] <──────────────────┘  context resident
+//!         (next turn, no                                       as block tables)
+//!          re-prefill)
 //! ```
 //!
 //! Per [`ContinuousScheduler::tick`]:
@@ -69,19 +73,20 @@
 //! (asserted by `tests/alloc_regression.rs`).
 
 use crate::backend::{BatchRequest, BatchStepArgs, ModelBackend, StepScratch};
+use crate::cache::KvGuard;
 use crate::config::RunConfig;
-use crate::engine::{Engine, GenOut};
+use crate::engine::{Engine, GenOut, ParkedConversation};
 use crate::tree::BatchMask;
 use anyhow::{Context, Result};
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 use std::time::Instant;
 
 /// The gather → pad → launch → scatter half of one fused verification
 /// round. All *sized* staging (the fused token/position rows, the mask
-/// block, the output scratch) lives here and only ever grows; the one
-/// per-round allocation left is the `B`-element `Vec` of borrowed
-/// per-request cache views (pointer-sized entries, far below the
-/// alloc-regression gate's vocab/cap-sized threshold — it cannot be
+/// block, the output scratch) lives here and only ever grows; the only
+/// per-round allocations left are the two `B`-element `Vec`s of borrowed
+/// per-request cache guards/views (pointer-sized entries, far below the
+/// alloc-regression gate's vocab/cap-sized threshold — they cannot be
 /// hoisted without self-borrowing the engines).
 pub struct FusedVerifier {
     /// Fused `[B * S_max]` token staging.
@@ -134,7 +139,10 @@ impl FusedVerifier {
         self.positions.resize(b * s_max, 0);
         self.mask.begin(b, s_max);
         self.s_reqs.clear();
-        let mut reqs: Vec<BatchRequest> = Vec::with_capacity(b);
+        // Every group member's cache guard stays alive across the fused
+        // launch (paged caches share one pool — concurrent read borrows
+        // are fine; the guards drop before any per-request commit).
+        let mut guards: Vec<KvGuard> = Vec::with_capacity(b);
         for (bi, &i) in group.iter().enumerate() {
             anyhow::ensure!(engines[i].cfg.mode == mode, "mixed exec modes in one batch");
             let p = engines[i].verify_payload()?;
@@ -142,8 +150,13 @@ impl FusedVerifier {
             self.positions[bi * s_max..bi * s_max + p.s].copy_from_slice(p.positions);
             self.mask.fill_request(bi, p.mask, p.s);
             self.s_reqs.push(p.s);
-            reqs.push(BatchRequest { kv: p.kv, live: p.s });
+            guards.push(p.kv);
         }
+        let reqs: Vec<BatchRequest> = guards
+            .iter()
+            .zip(&self.s_reqs)
+            .map(|(g, &s)| BatchRequest { kv: g.view(), live: s })
+            .collect();
         // membership changed or shrank since last round? re-padding must
         // still leave every padding row/column closed ("padding is never
         // attended" — the invariant continuous admission leans on)
@@ -167,6 +180,7 @@ impl FusedVerifier {
         // instrumentation, not accounting — see docs/ARCHITECTURE.md)
         let secs = t0.elapsed().as_secs_f64() / b as f64;
         drop(reqs);
+        drop(guards);
         for (bi, &i) in group.iter().enumerate() {
             engines[i].scatter_verify(&self.out, bi)?;
             engines[i].add_stage_time("verify", secs);
@@ -199,6 +213,10 @@ struct Pending {
     prompt: Vec<i32>,
     max_new: usize,
     cfg: Option<RunConfig>,
+    /// A previously parked conversation being resumed: admission restores
+    /// its full decode state instead of resetting the slot engine, so the
+    /// turn continues on the preserved context without re-prefill.
+    parked: Option<ParkedConversation>,
     arrived_tick: u64,
 }
 
@@ -235,13 +253,22 @@ pub enum Disposition {
     /// The conversation is done: free the slot for the admission queue.
     Release,
     /// Begin the conversation's next turn on the same slot (engine
-    /// context preserved — MT-Bench-style multi-turn residency).
+    /// context preserved — MT-Bench-style multi-turn residency). Right
+    /// when the follow-up prompt is already known; holds the slot.
     Continue {
         /// Follow-up prompt tokens of the next turn.
         prompt: Vec<i32>,
         /// Soft output-token deadline of the next turn.
         max_new: usize,
     },
+    /// The conversation's next turn is not ready yet (user think-time):
+    /// lift it off the engine ([`Engine::park`]) and free the slot for
+    /// the admission queue, keeping the conversation resident — under the
+    /// paged layout this means its mapped KV blocks only, while the slot
+    /// serves other traffic. [`ContinuousScheduler::resume`] re-queues it
+    /// (FIFO, no overtaking) and its next turn continues on the preserved
+    /// context without re-prefill.
+    Park,
 }
 
 /// Scheduler counters (cumulative over the scheduler's lifetime).
@@ -254,6 +281,10 @@ pub struct SchedulerStats {
     /// Turn completions retired (multi-turn conversations retire once per
     /// turn).
     pub retired: u64,
+    /// Conversations parked off their slot ([`Disposition::Park`]).
+    pub parked: u64,
+    /// Parked conversations resumed ([`ContinuousScheduler::resume`]).
+    pub resumed: u64,
     /// Scheduler ticks executed.
     pub ticks: u64,
     /// Fused verification launches issued.
@@ -281,6 +312,9 @@ pub struct ContinuousScheduler {
     verifier: FusedVerifier,
     queue: VecDeque<Pending>,
     slots: Vec<Slot>,
+    /// Conversations lifted off their slots ([`Disposition::Park`]),
+    /// keyed by submission id, awaiting [`ContinuousScheduler::resume`].
+    parked: HashMap<u64, ParkedConversation>,
     tick_now: u64,
     /// Reusable ready-set staging of the current tick.
     ready: Vec<usize>,
@@ -308,6 +342,7 @@ impl ContinuousScheduler {
             verifier: FusedVerifier::new(cache_cap),
             queue: VecDeque::new(),
             slots: Vec::new(),
+            parked: HashMap::new(),
             tick_now: 0,
             ready: Vec::new(),
             group_buf: Vec::new(),
@@ -329,13 +364,43 @@ impl ContinuousScheduler {
             prompt: req.prompt,
             max_new: req.max_new,
             cfg: req.cfg,
+            parked: None,
             arrived_tick: self.tick_now,
         });
+    }
+
+    /// Re-queue a parked conversation's next turn (FIFO, same line as
+    /// fresh submissions — no overtaking). Admission restores its parked
+    /// state onto the freed slot and prefills only `prompt`; the
+    /// conversation's prior context is already resident (paged: its
+    /// mapped blocks never left the pool), so there is **no re-prefill**.
+    /// Errors if `id` was never parked (or was already resumed).
+    pub fn resume(&mut self, id: u64, prompt: Vec<i32>, max_new: usize) -> Result<()> {
+        let parked = self
+            .parked
+            .remove(&id)
+            .with_context(|| format!("resume: conversation {id} is not parked"))?;
+        self.stats.resumed += 1;
+        self.queue.push_back(Pending {
+            id,
+            prompt,
+            max_new,
+            cfg: None,
+            parked: Some(parked),
+            arrived_tick: self.tick_now,
+        });
+        Ok(())
     }
 
     /// Conversations waiting in the admission queue.
     pub fn pending(&self) -> usize {
         self.queue.len()
+    }
+
+    /// Conversations currently parked off their slots (resident block
+    /// tables awaiting [`ContinuousScheduler::resume`]).
+    pub fn parked_count(&self) -> usize {
+        self.parked.len()
     }
 
     /// Slots currently holding an active conversation.
@@ -344,6 +409,9 @@ impl ContinuousScheduler {
     }
 
     /// Whether the scheduler has nothing queued and nothing active.
+    /// Parked conversations do **not** block idleness — they are dormant
+    /// until the caller resumes them (so `run_to_idle` returns between a
+    /// park and its resume).
     pub fn is_idle(&self) -> bool {
         self.queue.is_empty() && self.slots.iter().all(|s| *s == Slot::Free)
     }
@@ -354,13 +422,15 @@ impl ContinuousScheduler {
         self.tick_now
     }
 
-    /// Error recovery after a failed drive: drop every queued
+    /// Error recovery after a failed drive: drop every queued and parked
     /// conversation and free every slot *without* retiring them (no
-    /// outputs are produced). Slot engines are left as-is — reset them
-    /// before reusing the scheduler, or their stale in-flight state will
-    /// poison the next drive.
+    /// outputs are produced; dropped parked caches return their blocks
+    /// to the pool). Slot engines are left as-is — reset them before
+    /// reusing the scheduler, or their stale in-flight state will poison
+    /// the next drive.
     pub fn abort_all(&mut self) {
         self.queue.clear();
+        self.parked.clear();
         for s in self.slots.iter_mut() {
             *s = Slot::Free;
         }
@@ -427,6 +497,15 @@ impl ContinuousScheduler {
                     // active under the same id.
                     engines[si].begin_speculative(backend, &prompt, max_new)?;
                 }
+                Disposition::Park => {
+                    // lift the conversation off the engine (paged: its
+                    // blocks stay mapped in the pool) and free the slot
+                    // for the admission queue.
+                    let parked = engines[si].park()?;
+                    self.parked.insert(id, parked);
+                    self.stats.parked += 1;
+                    self.slots[si] = Slot::Free;
+                }
             }
         }
         // 2. Admit: fill freed slots from the queue, FIFO.
@@ -438,9 +517,13 @@ impl ContinuousScheduler {
                 continue;
             }
             let mut p = self.queue.pop_front().expect("queue checked non-empty");
-            match p.cfg.take() {
-                Some(cfg) => engines[si].set_config(cfg),
-                None => engines[si].reset(),
+            match (p.parked.take(), p.cfg.take()) {
+                // resumed turn: restore the parked state wholesale (no
+                // reset, no config application — the conversation brings
+                // its own)
+                (Some(parked), _) => engines[si].resume(parked)?,
+                (None, Some(cfg)) => engines[si].set_config(cfg),
+                (None, None) => engines[si].reset(),
             }
             // name the request in the error chain: an invalid config or
             // an over-long prompt fails *here*, after the pop, and the

@@ -41,6 +41,7 @@
 //! conversation still in flight, each dump naming the error.
 
 use crate::backend::{sim::SimBackend, ModelBackend};
+use crate::cache::CachePools;
 use crate::config::RunConfig;
 use crate::coordinator::batch::{Completion, ContinuousScheduler, Disposition, SlotRequest};
 use crate::engine::Engine;
@@ -216,10 +217,14 @@ fn worker(
     // One engine per resident-conversation slot, reused across every
     // (conversation, kind): warmup absorbs lazy PJRT module compilation
     // AND brings every reusable buffer (KV caches, scratch arenas, mask
-    // slots) to its high-water capacity before any timed turn.
+    // slots) to its high-water capacity before any timed turn. All slots
+    // share one per-worker pool pair, so under the paged layout the
+    // worker's KV memory is one arena sized by actual residency, not
+    // `slots * cap` pinned buffers.
     let slots = cfg.max_batch;
+    let pools = CachePools::new(backend.contract());
     let mut engines: Vec<Engine> =
-        (0..slots).map(|_| Engine::new(&*backend, cfg.run.clone())).collect();
+        (0..slots).map(|_| Engine::with_pools(&*backend, cfg.run.clone(), &pools)).collect();
     for e in engines.iter_mut() {
         e.warmup(&mut *backend)?;
     }

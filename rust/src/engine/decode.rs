@@ -76,9 +76,9 @@
 //!   the coordinator reuses warmed engines across conversations.
 
 use crate::backend::{argmax, log_softmax_at, topk, KvView, ModelBackend, StepArgs};
-use crate::cache::ManagedCache;
+use crate::cache::{CachePools, KvGuard, KvStore, ManagedCache, PagedCache};
 use crate::config::contract::NEG_INF;
-use crate::config::{CommitMode, Contract, RunConfig};
+use crate::config::{CacheLayout, CacheStrategy, CommitMode, Contract, Dims, RunConfig};
 use crate::engine::output::{attention_distance_buckets, GenOut};
 use crate::spec::{greedy_walk, select_children, stochastic_walk, AdaptiveBudget, Candidate};
 use crate::tree::{MaskBuilder, MaskStream, SpecTree, Tensorized};
@@ -142,14 +142,47 @@ pub struct VerifyPayload<'e> {
     pub positions: &'e [i32],
     /// `[s, cap + s]` additive tree mask.
     pub mask: &'e [f32],
-    /// This request's committed-prefix teacher cache.
-    pub kv: KvView<'e>,
+    /// Live borrow of this request's committed-prefix teacher cache
+    /// (flat buffers or a shared-pool block-table view — see
+    /// [`KvGuard`]). The scheduler keeps the guards of a whole group
+    /// alive across its fused launch, then drops them before any cache
+    /// mutation.
+    pub kv: KvGuard<'e>,
     /// Padded slot count (this request's compiled teacher variant).
     pub s: usize,
     /// Live tree slots (root + nodes); `live <= s`.
     pub live: usize,
-    /// Committed teacher context length of this request.
+    /// Committed teacher context length of this request (logical rows).
     pub ctx_len: usize,
+}
+
+/// A conversation lifted off its slot engine with all decode state
+/// intact ([`Engine::park`]): both KV stores (for the paged layout, just
+/// block tables — the rows stay in the shared pool), the pending
+/// logits/feature rows, the chain-refresh queue, and every
+/// config-derived stream (rng, adaptive budget, attention histogram).
+/// [`Engine::resume`] restores it onto any engine sharing the same
+/// pools, bit-identically to a conversation that never left its slot
+/// (tested in `tests/paged.rs`).
+pub struct ParkedConversation {
+    cfg: RunConfig,
+    t_cache: Box<dyn KvStore>,
+    d_cache: Box<dyn KvStore>,
+    pending_logits: Vec<f32>,
+    feat_last: Vec<f32>,
+    uncharted: FeatRing,
+    rng: SplitMix64,
+    adaptive: Option<AdaptiveBudget>,
+    attn_hist: Histogram,
+    d_cur: usize,
+}
+
+impl ParkedConversation {
+    /// Bytes of KV memory the parked conversation keeps resident (mapped
+    /// blocks for the paged layout, full buffers for flat).
+    pub fn kv_bytes_resident(&self) -> u64 {
+        self.t_cache.bytes_resident() + self.d_cache.bytes_resident()
+    }
 }
 
 /// The decode engine: all per-conversation state (KV caches, scratch
@@ -159,8 +192,12 @@ pub struct Engine {
     /// Run configuration (public: harnesses tweak and inspect it).
     pub cfg: RunConfig,
     contract: Contract,
-    t_cache: ManagedCache,
-    d_cache: ManagedCache,
+    /// Per-worker KV block pools (shared across slot engines; unused by
+    /// the flat layout but kept so a `set_config` layout switch can
+    /// rebuild paged caches against the worker's pools).
+    pools: CachePools,
+    t_cache: Box<dyn KvStore>,
+    d_cache: Box<dyn KvStore>,
     mb: MaskBuilder,
     /// Teacher step outputs (prefill, baseline decode, verification).
     t_scratch: StepScratch,
@@ -203,21 +240,62 @@ fn copy_into(dst: &mut Vec<f32>, src: &[f32]) {
     dst.extend_from_slice(src);
 }
 
+/// Build a cache of the requested layout: flat buffers, or a paged cache
+/// drawing blocks from `pool`.
+fn build_cache(
+    layout: CacheLayout,
+    dims: Dims,
+    cap: usize,
+    strategy: CacheStrategy,
+    fast_reorder: bool,
+    pool: &std::rc::Rc<std::cell::RefCell<crate::cache::PagePool>>,
+) -> Box<dyn KvStore> {
+    match layout {
+        CacheLayout::Flat => Box::new(ManagedCache::new(dims, cap, strategy, fast_reorder)),
+        CacheLayout::Paged => {
+            Box::new(PagedCache::new(dims, cap, strategy, fast_reorder, pool.clone()))
+        }
+    }
+}
+
 impl Engine {
-    /// Construct an engine for `backend`'s shape contract. The backend is
-    /// only *read* here (contract clone); every decoding call takes it
-    /// again as `&mut`, so one backend can serve many engines.
-    pub fn new(backend: &dyn ModelBackend, mut cfg: RunConfig) -> Self {
+    /// Construct an engine for `backend`'s shape contract with its own
+    /// (unshared) block pools. The backend is only *read* here (contract
+    /// clone); every decoding call takes it again as `&mut`, so one
+    /// backend can serve many engines. Workers that hold several resident
+    /// slots should use [`Engine::with_pools`] so all slots draw from the
+    /// same KV arenas.
+    pub fn new(backend: &dyn ModelBackend, cfg: RunConfig) -> Self {
+        let pools = CachePools::new(backend.contract());
+        Self::with_pools(backend, cfg, &pools)
+    }
+
+    /// Construct an engine whose paged caches draw from the caller's
+    /// shared per-worker [`CachePools`] (no-op for the flat layout, but
+    /// the pools are retained for config-driven layout switches).
+    pub fn with_pools(backend: &dyn ModelBackend, mut cfg: RunConfig, pools: &CachePools) -> Self {
         let contract = backend.contract().clone();
         // The verification call holds 1 root + M nodes; clamp M so it fits
         // the largest compiled variant (e.g. the paper's M=256 sweep point
         // runs as 255 nodes + root here).
         let max_nodes = contract.teacher_s.iter().copied().max().unwrap_or(8) - 1;
         cfg.tree.budget = cfg.tree.budget.min(max_nodes);
-        let t_cache = ManagedCache::new(
-            contract.teacher, contract.cache_cap, cfg.cache_strategy, cfg.fast_reorder);
-        let d_cache = ManagedCache::new(
-            contract.draft, contract.cache_cap, cfg.cache_strategy, cfg.fast_reorder);
+        let t_cache = build_cache(
+            cfg.cache_layout,
+            contract.teacher,
+            contract.cache_cap,
+            cfg.cache_strategy,
+            cfg.fast_reorder,
+            &pools.teacher,
+        );
+        let d_cache = build_cache(
+            cfg.cache_layout,
+            contract.draft,
+            contract.cache_cap,
+            cfg.cache_strategy,
+            cfg.fast_reorder,
+            &pools.draft,
+        );
         let mb = MaskBuilder::new(contract.cache_cap);
         let timers = StageTimer::new(cfg.instrument);
         let rng = SplitMix64::new(cfg.seed ^ 0xE151);
@@ -226,6 +304,7 @@ impl Engine {
         Self {
             cfg,
             contract,
+            pools: pools.clone(),
             t_cache,
             d_cache,
             mb,
@@ -274,6 +353,17 @@ impl Engine {
     /// arena to its high-water capacity.
     pub fn warmup(&mut self, backend: &mut dyn ModelBackend) -> Result<()> {
         let c = self.contract.clone();
+        // Paged layout: reserve pool storage for one full-capacity
+        // conversation per role so this engine's steady-state block
+        // mapping never allocates (the zero-allocation contract,
+        // asserted single-resident). A multi-slot worker's shared pool
+        // instead grows to its combined-residency high-water mark the
+        // first time peak load is reached, then stays allocation-free —
+        // the warm-to-peak behaviour of every other arena.
+        if self.cfg.cache_layout == CacheLayout::Paged {
+            self.pools.teacher.borrow_mut().ensure_headroom(c.cache_cap);
+            self.pools.draft.borrow_mut().ensure_headroom(c.cache_cap);
+        }
         let kzero = vec![0.0f32; c.teacher.cache_elems(c.cache_cap)];
         // Any variant <= prefill_chunk can appear (prompt-tail chunks),
         // plus the tree-verification variant for the largest budget this
@@ -295,7 +385,7 @@ impl Engine {
                 tokens: &tokens,
                 positions: &positions,
                 mask: &mask,
-                kv: KvView { k: &kzero, v: &kzero },
+                kv: KvView::flat(&kzero, &kzero, c.cache_cap),
                 feats_in: None,
                 probe: false,
             }, &mut self.t_scratch)?;
@@ -310,7 +400,7 @@ impl Engine {
                 tokens: &tokens,
                 positions: &positions,
                 mask: &mask,
-                kv: KvView { k: &dzero, v: &dzero },
+                kv: KvView::flat(&dzero, &dzero, c.cache_cap),
                 feats_in: Some(&feats),
                 probe: false,
             }, &mut self.d_scratch[0])?;
@@ -382,27 +472,42 @@ impl Engine {
     /// or fast-reorder flag changed — the managed caches themselves), so
     /// the admitted request decodes bit-identically to a freshly
     /// constructed engine with the same config. Buffer capacities are
-    /// kept (warmed slots stay warm) except on a cache-strategy change,
-    /// which reallocates the two KV buffers (an admission-boundary cost,
-    /// never a per-round one). Any in-flight generation is dropped.
+    /// kept (warmed slots stay warm): a strategy/fast-reorder change
+    /// swaps the flags in place ([`KvStore::reconfigure`]), and only a
+    /// cache-*layout* change rebuilds the two stores against the worker
+    /// pools (an admission-boundary cost, never a per-round one). Any
+    /// in-flight generation is dropped.
     pub fn set_config(&mut self, mut cfg: RunConfig) {
         let max_nodes = self.contract.teacher_s.iter().copied().max().unwrap_or(8) - 1;
         cfg.tree.budget = cfg.tree.budget.min(max_nodes);
-        if cfg.cache_strategy != self.cfg.cache_strategy
-            || cfg.fast_reorder != self.cfg.fast_reorder
-        {
-            self.t_cache = ManagedCache::new(
+        if cfg.cache_layout != self.cfg.cache_layout {
+            // layout switch: rebuild against the worker's pools (the old
+            // caches drop, returning any mapped blocks)
+            self.t_cache = build_cache(
+                cfg.cache_layout,
                 self.contract.teacher,
                 self.contract.cache_cap,
                 cfg.cache_strategy,
                 cfg.fast_reorder,
+                &self.pools.teacher,
             );
-            self.d_cache = ManagedCache::new(
+            self.d_cache = build_cache(
+                cfg.cache_layout,
                 self.contract.draft,
                 self.contract.cache_cap,
                 cfg.cache_strategy,
                 cfg.fast_reorder,
+                &self.pools.draft,
             );
+        } else if cfg.cache_strategy != self.cfg.cache_strategy
+            || cfg.fast_reorder != self.cfg.fast_reorder
+        {
+            // same layout: swap the strategy in place, keeping the
+            // buffers/blocks warm (admission-boundary optimization;
+            // behaviourally identical to a rebuild since reset empties
+            // the committed state)
+            self.t_cache.reconfigure(cfg.cache_strategy, cfg.fast_reorder);
+            self.d_cache.reconfigure(cfg.cache_strategy, cfg.fast_reorder);
         }
         self.cfg = cfg;
         self.reset();
@@ -412,6 +517,105 @@ impl Engine {
     /// the batch scheduler can attribute fused-launch time per request.
     pub fn add_stage_time(&mut self, stage: &str, secs: f64) {
         self.timers.add(stage, secs);
+    }
+
+    /// Bytes of KV memory this engine's conversation keeps resident
+    /// (both roles): mapped blocks under the paged layout, full-capacity
+    /// buffers under flat. The end-to-end bench sums this across slots
+    /// into `kv_bytes_resident`, which the CI memory gate compares
+    /// between layouts.
+    pub fn kv_bytes_resident(&self) -> u64 {
+        self.t_cache.bytes_resident() + self.d_cache.bytes_resident()
+    }
+
+    /// Lift the resident conversation off this engine: both KV stores
+    /// (paged: just block tables — the rows stay put in the worker pool),
+    /// the pending logits/feature rows, the chain-refresh queue and every
+    /// config-derived stream move into the returned
+    /// [`ParkedConversation`]; the engine itself is reset to a fresh
+    /// state so the slot can admit another conversation immediately.
+    ///
+    /// Must be called between turns (no generation in flight). Under the
+    /// paged layout this is the multi-resident story: a parked multi-turn
+    /// conversation keeps only its mapped blocks while its slot serves
+    /// other traffic, and [`Engine::resume`] continues it without
+    /// re-prefilling its context. Under the *flat* layout the replacement
+    /// stores are fresh full-capacity buffers, so each park costs a
+    /// multi-MB allocation — parking is designed for (and cheap under)
+    /// `--cache-layout paged`.
+    pub fn park(&mut self) -> Result<ParkedConversation> {
+        anyhow::ensure!(self.inflight.is_none(), "cannot park with a generation in flight");
+        let c = &self.contract;
+        let fresh_t = build_cache(
+            self.cfg.cache_layout,
+            c.teacher,
+            c.cache_cap,
+            self.cfg.cache_strategy,
+            self.cfg.fast_reorder,
+            &self.pools.teacher,
+        );
+        let fresh_d = build_cache(
+            self.cfg.cache_layout,
+            c.draft,
+            c.cache_cap,
+            self.cfg.cache_strategy,
+            self.cfg.fast_reorder,
+            &self.pools.draft,
+        );
+        let parked = ParkedConversation {
+            cfg: self.cfg.clone(),
+            t_cache: std::mem::replace(&mut self.t_cache, fresh_t),
+            d_cache: std::mem::replace(&mut self.d_cache, fresh_d),
+            pending_logits: std::mem::take(&mut self.pending_logits),
+            feat_last: std::mem::take(&mut self.feat_last),
+            uncharted: std::mem::replace(
+                &mut self.uncharted,
+                FeatRing::with_capacity(c.cache_cap, c.feat_dim),
+            ),
+            rng: self.rng.clone(),
+            adaptive: self.adaptive.clone(),
+            attn_hist: self.attn_hist.clone(),
+            d_cur: self.d_cur,
+        };
+        self.reset();
+        Ok(parked)
+    }
+
+    /// Restore a parked conversation onto this engine (the inverse of
+    /// [`Engine::park`]): installs its config and every piece of decode
+    /// state, after which [`Engine::begin_speculative`] starts its next
+    /// turn on the preserved context — bit-identical to a conversation
+    /// that held its slot the whole time. The engine must share the
+    /// worker pools the conversation's blocks live in (any engine of the
+    /// same worker does); its previous caches drop here, returning their
+    /// blocks.
+    pub fn resume(&mut self, parked: ParkedConversation) -> Result<()> {
+        anyhow::ensure!(self.inflight.is_none(), "cannot resume over a generation in flight");
+        let ParkedConversation {
+            cfg,
+            t_cache,
+            d_cache,
+            pending_logits,
+            feat_last,
+            uncharted,
+            rng,
+            adaptive,
+            attn_hist,
+            d_cur,
+        } = parked;
+        self.cfg = cfg;
+        self.t_cache = t_cache;
+        self.d_cache = d_cache;
+        self.pending_logits = pending_logits;
+        self.feat_last = feat_last;
+        self.uncharted = uncharted;
+        self.rng = rng;
+        self.adaptive = adaptive;
+        self.attn_hist = attn_hist;
+        self.d_cur = d_cur;
+        self.timers = StageTimer::new(self.cfg.instrument);
+        self.inflight = None;
+        Ok(())
     }
 
     // ------------------------------------------------------------------
@@ -453,15 +657,16 @@ impl Engine {
             self.pos_buf.clear();
             self.pos_buf.extend((0..s).map(|i| (t + i.min(n.saturating_sub(1))) as i32));
             let mask = self.mb.chain_incremental(MaskStream::TeacherChain, s, n, t, None);
-            let (k, v) = self.t_cache.kv_view();
+            let guard = self.t_cache.kv_guard();
             backend.teacher_step(self.cfg.mode, StepArgs {
                 tokens: &self.tok_buf,
                 positions: &self.pos_buf,
                 mask,
-                kv: KvView { k, v },
+                kv: guard.view(),
                 feats_in: None,
                 probe: false,
             }, &mut self.t_scratch)?;
+            drop(guard);
             stats.teacher_calls += 1;
             self.t_cache.append_committed(&self.t_scratch.k_new, &self.t_scratch.v_new, s, n)?;
             if self.use_draft {
@@ -518,15 +723,16 @@ impl Engine {
             self.pos_buf.extend((0..s).map(|i| (d + i.min(take - 1)) as i32));
             let mask =
                 self.mb.chain_incremental(MaskStream::DraftChain, s, take, d, self.cfg.draft_window);
-            let (k, v) = self.d_cache.kv_view();
+            let guard = self.d_cache.kv_guard();
             backend.draft_step(StepArgs {
                 tokens: &self.tok_buf,
                 positions: &self.pos_buf,
                 mask,
-                kv: KvView { k, v },
+                kv: guard.view(),
                 feats_in: Some(&self.feats_buf),
                 probe: self.cfg.attention_stats,
             }, &mut self.d_scratch[self.d_cur])?;
+            drop(guard);
             stats.draft_calls += 1;
             self.d_cache.append_committed(
                 &self.d_scratch[self.d_cur].k_new,
@@ -600,15 +806,16 @@ impl Engine {
             let mask = self.mb.chain_incremental(MaskStream::TeacherChain, s, 1, t, None);
             self.timers.add("mask_build", tm.elapsed().as_secs_f64());
             let tv = Instant::now();
-            let (k, v) = self.t_cache.kv_view();
+            let guard = self.t_cache.kv_guard();
             backend.teacher_step(self.cfg.mode, StepArgs {
                 tokens: &self.tok_buf,
                 positions: &self.pos_buf,
                 mask,
-                kv: KvView { k, v },
+                kv: guard.view(),
                 feats_in: None,
                 probe: false,
             }, &mut self.t_scratch)?;
+            drop(guard);
             self.timers.add("verify", tv.elapsed().as_secs_f64());
             stats.teacher_calls += 1;
             stats.rounds += 1;
@@ -817,12 +1024,11 @@ impl Engine {
             .peek(MaskStream::TeacherTree, round.s_pad)
             .context("teacher tree mask slot missing")?
             .as_slice();
-        let (k, v) = self.t_cache.kv_view();
         Ok(VerifyPayload {
             tokens: &round.tens.tokens,
             positions: &self.pos_buf,
             mask,
-            kv: KvView { k, v },
+            kv: self.t_cache.kv_guard(),
             s: round.s_pad,
             live: round.tens.live,
             ctx_len: round.t_len,
@@ -841,12 +1047,12 @@ impl Engine {
                 .peek(MaskStream::TeacherTree, round.s_pad)
                 .context("teacher tree mask slot missing")?
                 .as_slice();
-            let (k, v) = self.t_cache.kv_view();
+            let guard = self.t_cache.kv_guard();
             backend.teacher_step(self.cfg.mode, StepArgs {
                 tokens: &round.tens.tokens,
                 positions: &self.pos_buf,
                 mask,
-                kv: KvView { k, v },
+                kv: guard.view(),
                 feats_in: None,
                 probe: false,
             }, &mut self.t_scratch)?;
@@ -1026,7 +1232,9 @@ impl Engine {
         self.pos_buf.resize(s, pos);
         // mask: committed prefix (windowed) + ancestor branch rows (cache
         // columns past d_len) + the self slot — built on the persistent
-        // frontier slot with exact-revert bookkeeping.
+        // frontier slot with exact-revert bookkeeping. All columns are
+        // logical rows; the paged layout resolves them through the block
+        // table inside the backend read.
         let lo = self.cfg.draft_window.map_or(0, |win| d_len.saturating_sub(win));
         {
             let slot_mask = self.mb.incremental(MaskStream::DraftFrontier, s);
@@ -1052,15 +1260,16 @@ impl Engine {
         }
         let write_idx = 1 - self.d_cur;
         let mask = self.mb.incremental(MaskStream::DraftFrontier, s).as_slice();
-        let (k, v) = self.d_cache.kv_view();
+        let guard = self.d_cache.kv_guard();
         backend.draft_step(StepArgs {
             tokens: &self.tok_buf,
             positions: &self.pos_buf,
             mask,
-            kv: KvView { k, v },
+            kv: guard.view(),
             feats_in: Some(&self.feats_buf),
             probe: false,
         }, &mut self.d_scratch[write_idx])?;
+        drop(guard);
         stats.draft_calls += 1;
         let base_row = self.d_cache.branch_rows();
         self.d_cache.append_branch(
@@ -1088,8 +1297,8 @@ impl Engine {
             accept_pos: stats.accept_pos,
             timers: std::mem::replace(&mut self.timers, StageTimer::new(self.cfg.instrument)),
             attn_hist: std::mem::replace(&mut self.attn_hist, attention_distance_buckets()),
-            teacher_cache: self.t_cache.stats.clone(),
-            draft_cache: self.d_cache.stats.clone(),
+            teacher_cache: self.t_cache.stats().clone(),
+            draft_cache: self.d_cache.stats().clone(),
             prompt_len,
         }
     }

@@ -4,5 +4,5 @@
 pub mod decode;
 pub mod output;
 
-pub use decode::{Engine, VerifyPayload};
+pub use decode::{Engine, ParkedConversation, VerifyPayload};
 pub use output::GenOut;

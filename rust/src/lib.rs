@@ -44,8 +44,13 @@
 //! * [`backend::ModelBackend`] — the scratch-buffer step contract (sim
 //!   and PJRT implementations);
 //! * [`coordinator::ContinuousScheduler`] — continuous cross-request
-//!   batching: fused verification plus slot-based admission/retirement;
-//! * [`cache::ManagedCache`] — branch/commit semantics (paper §3.1).
+//!   batching: fused verification plus slot-based admission/retirement
+//!   and park/resume multi-turn residency;
+//! * [`cache::KvStore`] — branch/commit semantics (paper §3.1) behind a
+//!   layout-agnostic contract: [`cache::ManagedCache`] (flat buffers)
+//!   and [`cache::PagedCache`] (block tables over a shared per-worker
+//!   [`cache::PagePool`]) decode bit-identically; `--cache-layout`
+//!   selects.
 
 #![warn(missing_docs)]
 

@@ -123,7 +123,7 @@ pub fn verify_golden(backend: &mut dyn ModelBackend, rec: &GoldenRecord) -> Resu
         tokens: &gi.tokens,
         positions: &gi.positions,
         mask: &gi.mask,
-        kv: KvView { k: &gi.k_cache, v: &gi.v_cache },
+        kv: KvView::flat(&gi.k_cache, &gi.v_cache, contract.cache_cap),
         feats_in: gi.feats.as_deref(),
         probe: false,
     };

@@ -1,6 +1,6 @@
 //! The production backend: artifact registry + PJRT execution.
 
-use crate::backend::{ModelBackend, StepArgs, StepScratch};
+use crate::backend::{KvIndex, KvView, ModelBackend, StepArgs, StepScratch};
 use crate::config::{Contract, Dims, ExecMode};
 use crate::json;
 use anyhow::{bail, Context, Result};
@@ -37,6 +37,14 @@ pub struct PjrtBackend {
     pub stats: RuntimeStats,
     /// Probe-capable draft variants present in the artifact set.
     probe_variants: Vec<usize>,
+    /// Persistent host staging for paged cache views: the AOT modules
+    /// take a contiguous `[L, cap, H, Dh]` cache input, so a block-table
+    /// view is gathered into these buffers before upload (the sequential
+    /// fallback of the paged layout — compiling gather-aware modules is a
+    /// compile-side follow-up). Sized once per role; steady-state calls
+    /// reuse them, preserving the scratch-stable contract.
+    kv_flat_k: Vec<f32>,
+    kv_flat_v: Vec<f32>,
 }
 
 impl PjrtBackend {
@@ -68,7 +76,33 @@ impl PjrtBackend {
             exes: HashMap::new(),
             stats: RuntimeStats::default(),
             probe_variants,
+            kv_flat_k: Vec::new(),
+            kv_flat_v: Vec::new(),
         })
+    }
+
+    /// Materialize a paged KV view into the persistent flat staging
+    /// buffers (`[L, cap, H, Dh]`), gathering every mapped logical row
+    /// through the block table. Unmapped rows are zeroed — the additive
+    /// mask closes them, but the uploaded tensor must still be fully
+    /// defined. Flat views skip this entirely.
+    fn materialize_kv(&mut self, kv: &KvView, dims: Dims) {
+        let cap = self.contract.cache_cap;
+        let rs = dims.heads * dims.d_head;
+        let n = dims.cache_elems(cap);
+        self.kv_flat_k.clear();
+        self.kv_flat_k.resize(n, 0.0);
+        self.kv_flat_v.clear();
+        self.kv_flat_v.resize(n, 0.0);
+        let rows = kv.mapped_rows().min(cap);
+        for l in 0..dims.layers {
+            for r in 0..rows {
+                let src = kv.row_start(dims.layers, rs, l, r);
+                let dst = (l * cap + r) * rs;
+                self.kv_flat_k[dst..dst + rs].copy_from_slice(&kv.k[src..src + rs]);
+                self.kv_flat_v[dst..dst + rs].copy_from_slice(&kv.v[src..src + rs]);
+            }
+        }
     }
 
     /// The artifact directory this backend was loaded from.
@@ -221,14 +255,21 @@ impl ModelBackend for PjrtBackend {
         let cap = self.contract.cache_cap;
         let name = format!("teacher_{}_s{s}", mode.as_str());
         let cache_dims = [d.layers, cap, d.heads, d.d_head];
+        if matches!(args.kv.index, KvIndex::Paged { .. }) {
+            self.materialize_kv(&args.kv, d);
+        }
+        let (ck, cv): (&[f32], &[f32]) = match args.kv.index {
+            KvIndex::Flat { .. } => (args.kv.k, args.kv.v),
+            KvIndex::Paged { .. } => (&self.kv_flat_k, &self.kv_flat_v),
+        };
         let inputs = vec![
             self.upload_i32(args.tokens, &[s])?,
             self.upload_i32(args.positions, &[s])?,
             self.upload_f32(args.mask, &[s, cap + s])?,
-            self.upload_f32(args.kv.k, &cache_dims)?,
-            self.upload_f32(args.kv.v, &cache_dims)?,
+            self.upload_f32(ck, &cache_dims)?,
+            self.upload_f32(cv, &cache_dims)?,
         ];
-        let upload = (args.mask.len() + args.kv.k.len() + args.kv.v.len()) * 4 + s * 8;
+        let upload = (args.mask.len() + ck.len() + cv.len()) * 4 + s * 8;
         self.run_module(&name, &inputs, upload as u64, false, d, out)
     }
 
@@ -244,16 +285,22 @@ impl ModelBackend for PjrtBackend {
         let probe = args.probe && self.probe_variants.contains(&s);
         let name = if probe { format!("draft_probe_s{s}") } else { format!("draft_s{s}") };
         let cache_dims = [d.layers, cap, d.heads, d.d_head];
+        if matches!(args.kv.index, KvIndex::Paged { .. }) {
+            self.materialize_kv(&args.kv, d);
+        }
+        let (ck, cv): (&[f32], &[f32]) = match args.kv.index {
+            KvIndex::Flat { .. } => (args.kv.k, args.kv.v),
+            KvIndex::Paged { .. } => (&self.kv_flat_k, &self.kv_flat_v),
+        };
         let inputs = vec![
             self.upload_i32(args.tokens, &[s])?,
             self.upload_f32(feats, &[s, self.contract.feat_dim])?,
             self.upload_i32(args.positions, &[s])?,
             self.upload_f32(args.mask, &[s, cap + s])?,
-            self.upload_f32(args.kv.k, &cache_dims)?,
-            self.upload_f32(args.kv.v, &cache_dims)?,
+            self.upload_f32(ck, &cache_dims)?,
+            self.upload_f32(cv, &cache_dims)?,
         ];
-        let upload =
-            (args.mask.len() + args.kv.k.len() + args.kv.v.len() + feats.len()) * 4 + s * 8;
+        let upload = (args.mask.len() + ck.len() + cv.len() + feats.len()) * 4 + s * 8;
         self.run_module(&name, &inputs, upload as u64, probe, d, out)
     }
 

@@ -2,7 +2,13 @@
 //!
 //! Produces the `[S, cap + S]` additive row mask the AOT modules consume:
 //! columns `[0, cap)` address the committed-prefix cache, columns
-//! `[cap, cap+S)` the speculative block. Row `k` opens:
+//! `[cap, cap+S)` the speculative block. Cache columns are **logical**
+//! sequence rows and the prefix length `t` is the logical committed
+//! length ([`crate::cache::KvStore::len`]) — never a physical storage
+//! coordinate: under the paged layout the backend resolves each open
+//! column through the block table
+//! ([`crate::backend::KvView::row_start`]), so mask construction is
+//! layout-agnostic by design. Row `k` opens:
 //!
 //!   * prefix columns `[lo, t)` where `lo = max(0, t - W)` under a drafter
 //!     window `W` (E4 truncation; teacher masks always use `lo = 0`);

@@ -65,6 +65,36 @@ fn steady_state_speculative_rounds_are_allocation_free() {
 }
 
 #[test]
+fn steady_state_paged_rounds_are_allocation_free() {
+    // The paged layout's half of the zero-allocation contract: after
+    // warmup reserves pool headroom for one full-capacity conversation,
+    // steady-state rounds map/free KV blocks purely through the free
+    // list and the reserved storage — no vocab-, cap- or block-sized
+    // heap allocation (block mapping is a table push + in-place writes).
+    let mut cfg = RunConfig::default();
+    cfg.cache_layout = eagle_pangu::config::CacheLayout::Paged;
+    let mut b = SimBackend::new(85);
+    let mut e = Engine::new(&b, cfg);
+    e.warmup(&mut b).unwrap();
+    let p = prompt(17, 7);
+    let first = e.generate_speculative(&mut b, &p, 32).unwrap();
+    assert!(first.rounds > 0);
+
+    let snapshot = ALLOC.allocs();
+    let cont = prompt(2, 8);
+    let second = e.generate_speculative(&mut b, &cont, 32).unwrap();
+    assert!(second.rounds >= 4, "expected a sustained run, got {} rounds", second.rounds);
+    let grew = ALLOC.allocs() - snapshot;
+    assert_eq!(
+        grew,
+        0,
+        "steady-state paged decode performed {grew} vocab/cap/block-sized allocations \
+         across {} rounds — the paged hot path regressed",
+        second.rounds
+    );
+}
+
+#[test]
 fn steady_state_baseline_rounds_are_allocation_free() {
     let mut b = SimBackend::new(85);
     let mut e = Engine::new(&b, RunConfig::default());

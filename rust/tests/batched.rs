@@ -11,11 +11,23 @@
 
 use eagle_pangu::backend::sim::SimBackend;
 use eagle_pangu::backend::ModelBackend;
-use eagle_pangu::config::{CacheStrategy, CommitMode, RunConfig};
+use eagle_pangu::config::{CacheLayout, CacheStrategy, CommitMode, RunConfig};
 use eagle_pangu::coordinator::ContinuousScheduler;
 use eagle_pangu::engine::Engine;
 use eagle_pangu::util::prop;
 use eagle_pangu::util::SplitMix64;
+
+/// Base config of the CI feature matrix: `EA_CACHE_LAYOUT` (flat | paged)
+/// selects the KV layout per matrix cell; unset (local runs) = flat. The
+/// whole suite is layout-agnostic by the `KvStore` bit-identity contract,
+/// so every property below must hold in every cell.
+fn base_cfg() -> RunConfig {
+    let mut cfg = RunConfig::default();
+    if let Ok(v) = std::env::var("EA_CACHE_LAYOUT") {
+        cfg.cache_layout = CacheLayout::parse(&v).expect("EA_CACHE_LAYOUT must be flat|paged");
+    }
+    cfg
+}
 
 fn prompt(n: usize, seed: u64) -> Vec<i32> {
     let mut rng = SplitMix64::new(seed);
@@ -34,7 +46,7 @@ struct Req {
 }
 
 fn random_request(g: &mut prop::Gen) -> Req {
-    let mut cfg = RunConfig::default();
+    let mut cfg = base_cfg();
     cfg.tree.budget = g.usize_in(1, 33); // ragged padded variants
     cfg.tree.depth_max = g.usize_in(2, 11);
     cfg.tree.topk = g.usize_in(1, 5);
@@ -107,7 +119,7 @@ fn batched_multi_turn_continuation_matches_sequential() {
     // Two fused turns per conversation (context carried across turns),
     // against two sequential turns on independent engines.
     let agree = 85u64;
-    let cfgs = vec![RunConfig::default(); 3];
+    let cfgs = vec![base_cfg(); 3];
     let p1: Vec<Vec<i32>> = (0..3).map(|i| prompt(10 + i * 5, 500 + i as u64)).collect();
     let p2: Vec<Vec<i32>> = (0..3).map(|i| prompt(6, 600 + i as u64)).collect();
 

@@ -16,11 +16,22 @@
 
 use eagle_pangu::backend::sim::SimBackend;
 use eagle_pangu::backend::ModelBackend;
-use eagle_pangu::config::{CacheStrategy, CommitMode, RunConfig};
+use eagle_pangu::config::{CacheLayout, CacheStrategy, CommitMode, RunConfig};
 use eagle_pangu::coordinator::{Completion, ContinuousScheduler, Disposition, SlotRequest};
 use eagle_pangu::engine::{Engine, GenOut};
 use eagle_pangu::util::prop;
 use eagle_pangu::util::SplitMix64;
+
+/// Base config of the CI feature matrix: `EA_CACHE_LAYOUT` (flat | paged)
+/// selects the KV layout per matrix cell; unset (local runs) = flat.
+/// Every scheduling property below must hold identically in every cell.
+fn base_cfg() -> RunConfig {
+    let mut cfg = RunConfig::default();
+    if let Ok(v) = std::env::var("EA_CACHE_LAYOUT") {
+        cfg.cache_layout = CacheLayout::parse(&v).expect("EA_CACHE_LAYOUT must be flat|paged");
+    }
+    cfg
+}
 
 fn prompt(n: usize, seed: u64) -> Vec<i32> {
     let mut rng = SplitMix64::new(seed);
@@ -40,7 +51,7 @@ struct Req {
 }
 
 fn random_request(g: &mut prop::Gen, max_arrival: u64) -> Req {
-    let mut cfg = RunConfig::default();
+    let mut cfg = base_cfg();
     cfg.tree.budget = g.usize_in(1, 33); // ragged padded variants
     cfg.tree.depth_max = g.usize_in(2, 11);
     cfg.tree.topk = g.usize_in(1, 5);
@@ -77,7 +88,7 @@ fn drive_schedule(
 ) -> (Vec<GenOut>, Vec<(u64, u64, u64)>) {
     let mut bk = SimBackend::new(agree);
     let mut engines: Vec<Engine> =
-        (0..slots).map(|_| Engine::new(&bk, RunConfig::default())).collect();
+        (0..slots).map(|_| Engine::new(&bk, base_cfg())).collect();
     let cap = bk.contract().cache_cap;
     let mut sched = ContinuousScheduler::new(slots, cap);
 
@@ -162,7 +173,7 @@ fn property_admission_is_fifo_with_bounded_wait() {
             .map(|_| {
                 let mut r = random_request(g, 15);
                 r.max_new = g.usize_in(1, max_new_max + 1);
-                r.cfg = RunConfig::default(); // uniform config: isolate scheduling
+                r.cfg = base_cfg(); // uniform config: isolate scheduling
                 r
             })
             .collect();
@@ -211,7 +222,7 @@ fn mixed_exec_modes_coexist_in_one_running_group() {
     let agree = 85u64;
     let reqs: Vec<Req> = (0..4)
         .map(|i| {
-            let mut cfg = RunConfig::default();
+            let mut cfg = base_cfg();
             cfg.mode = if i % 2 == 0 { ExecMode::Fused } else { ExecMode::Eager };
             Req { cfg, prompt: prompt(10 + i, 4000 + i as u64), max_new: 10, arrival: 0 }
         })
@@ -244,7 +255,7 @@ fn multi_turn_continuation_on_slots_matches_sequential() {
     let seq: Vec<(Vec<i32>, Vec<i32>)> = (0..3)
         .map(|i| {
             let mut b = SimBackend::new(agree);
-            let mut e = Engine::new(&b, RunConfig::default());
+            let mut e = Engine::new(&b, base_cfg());
             let o1 = e.generate_speculative(&mut b, &p1[i], 14).unwrap();
             let o2 = e.generate_speculative(&mut b, &p2[i], 14).unwrap();
             (o1.tokens, o2.tokens)
@@ -253,7 +264,7 @@ fn multi_turn_continuation_on_slots_matches_sequential() {
 
     let mut bk = SimBackend::new(agree);
     let mut engines: Vec<Engine> =
-        (0..2).map(|_| Engine::new(&bk, RunConfig::default())).collect();
+        (0..2).map(|_| Engine::new(&bk, base_cfg())).collect();
     let cap = bk.contract().cache_cap;
     let mut sched = ContinuousScheduler::new(2, cap);
     for (i, p) in p1.iter().enumerate() {
@@ -300,7 +311,7 @@ fn continuous_admission_amortizes_launches_on_straggler_traffic() {
     let run = |continuous: bool| -> (u64, Vec<GenOut>) {
         let mut bk = SimBackend::new(agree);
         let mut engines: Vec<Engine> =
-            (0..slots).map(|_| Engine::new(&bk, RunConfig::default())).collect();
+            (0..slots).map(|_| Engine::new(&bk, base_cfg())).collect();
         let cap = bk.contract().cache_cap;
         let mut sched = ContinuousScheduler::new(slots, cap);
         let mut outs: Vec<Option<GenOut>> = (0..n).map(|_| None).collect();
@@ -334,4 +345,62 @@ fn continuous_admission_amortizes_launches_on_straggler_traffic() {
     for (a, b) in fixed_outs.iter().zip(&cont_outs) {
         assert_eq!(a.tokens, b.tokens);
     }
+}
+
+#[test]
+fn matrix_cell_serving_is_token_identical_to_sequential() {
+    // The CI feature-matrix cell test: run the full workload runner under
+    // this cell's (EA_SCHEDULING, EA_CACHE_LAYOUT) combination at
+    // max_batch = 4 and require record-for-record token identity against
+    // the sequential (max_batch = 1) reference under the same layout.
+    use eagle_pangu::coordinator::{
+        run_workload, AdmissionPolicy, BackendSpec, CoordinatorConfig,
+    };
+    use eagle_pangu::workload::WorkloadSpec;
+    use std::path::PathBuf;
+
+    let scheduling = std::env::var("EA_SCHEDULING")
+        .map(|v| AdmissionPolicy::parse(&v).expect("EA_SCHEDULING must be continuous|chunked"))
+        .unwrap_or(AdmissionPolicy::Continuous);
+    let tmp = |tag: &str| -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("eagle_matrix_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    };
+    let mut run = base_cfg();
+    run.max_new_tokens = 12;
+    let cfg = |tag: &str, batch: usize, policy: AdmissionPolicy| CoordinatorConfig {
+        world_size: 2,
+        run: run.clone(),
+        workload: WorkloadSpec::smoke(),
+        backend: BackendSpec::Sim { agree_pct: 90 },
+        trace_dir: tmp(tag),
+        run_baseline: false,
+        run_ea: true,
+        max_batch: batch,
+        scheduling: policy,
+        verbose: false,
+    };
+    let seq_cfg = cfg("seq", 1, AdmissionPolicy::Continuous);
+    let seq = run_workload(&seq_cfg).unwrap();
+    let cell_cfg = cfg("cell", 4, scheduling);
+    let cell = run_workload(&cell_cfg).unwrap();
+    assert_eq!(seq.len(), cell.len(), "record count diverged in this matrix cell");
+    for (a, b) in seq.iter().zip(&cell) {
+        assert_eq!(a.conversation_id, b.conversation_id);
+        assert_eq!(a.turn_idx, b.turn_idx);
+        assert_eq!(
+            a.output_len, b.output_len,
+            "cell ({}, {}) diverged at conv {} turn {}",
+            cell_cfg.scheduling.as_str(),
+            run.cache_layout.as_str(),
+            a.conversation_id,
+            a.turn_idx
+        );
+        assert_eq!(a.accept_lens, b.accept_lens);
+        assert_eq!(a.teacher_calls, b.teacher_calls);
+    }
+    let _ = std::fs::remove_dir_all(&seq_cfg.trace_dir);
+    let _ = std::fs::remove_dir_all(&cell_cfg.trace_dir);
 }

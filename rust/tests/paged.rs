@@ -1,0 +1,412 @@
+//! Paged-vs-flat bit-identity: the acceptance property of the paged KV
+//! cache (`cache/paged.rs`).
+//!
+//! 1. **Cache-level equivalence** — for random operation sequences
+//!    (append/branch/append_branch/rollback/commit_length/
+//!    commit_path/commit_path_tail/reset) over both strategies, a
+//!    [`PagedCache`] and a [`ManagedCache`] driven identically hold
+//!    bit-identical committed state (`committed_checksum` +
+//!    `committed_row_k`), including with a *second* resident cache
+//!    interleaving its own sequence on the same pool (the park shape:
+//!    one conversation's blocks survive untouched while another maps and
+//!    frees its own).
+//! 2. **Free-list invariant** — after every operation,
+//!    `pool.blocks == pool.free + Σ mapped(live caches)`: no leak, no
+//!    double-free.
+//! 3. **Engine-level equivalence** — `cache_layout: Paged` decodes
+//!    bit-identically to `Flat` across strategies/commit modes, and
+//!    scheduler park/resume continues a multi-turn conversation exactly
+//!    like a dedicated engine (no re-prefill).
+
+use eagle_pangu::backend::sim::SimBackend;
+use eagle_pangu::backend::ModelBackend;
+use eagle_pangu::cache::{KvStore, ManagedCache, PagePool, PagedCache};
+use eagle_pangu::config::{CacheLayout, CacheStrategy, CommitMode, Dims, RunConfig};
+use eagle_pangu::coordinator::{Completion, ContinuousScheduler, Disposition, SlotRequest};
+use eagle_pangu::engine::{Engine, GenOut};
+use eagle_pangu::util::prop;
+use eagle_pangu::util::SplitMix64;
+use std::cell::RefCell;
+use std::rc::Rc;
+
+const DIMS: Dims = Dims { layers: 2, d_model: 8, heads: 2, d_head: 2 };
+const CAP: usize = 48;
+const BS: usize = 4;
+
+/// `[L, s, H, Dh]` step block whose row r carries `base + r` everywhere.
+fn block(s: usize, base: f32) -> Vec<f32> {
+    let rs = DIMS.heads * DIMS.d_head;
+    let mut out = vec![0.0; DIMS.layers * s * rs];
+    for l in 0..DIMS.layers {
+        for r in 0..s {
+            for e in 0..rs {
+                out[(l * s + r) * rs + e] = base + r as f32;
+            }
+        }
+    }
+    out
+}
+
+/// One twinned cache pair driven through identical operations.
+struct Twin {
+    flat: ManagedCache,
+    paged: PagedCache,
+    val: f32,
+}
+
+impl Twin {
+    fn new(strategy: CacheStrategy, fast: bool, pool: &Rc<RefCell<PagePool>>) -> Self {
+        Twin {
+            flat: ManagedCache::new(DIMS, CAP, strategy, fast),
+            paged: PagedCache::new(DIMS, CAP, strategy, fast, pool.clone()),
+            val: 1.0,
+        }
+    }
+
+    /// Apply one random operation to both caches; results (incl. errors)
+    /// must agree.
+    fn step(&mut self, g: &mut prop::Gen) {
+        self.val += 7.0;
+        let v = self.val;
+        match g.usize_in(0, 7) {
+            0 => {
+                let n = g.usize_in(1, 7);
+                let a = KvStore::append_committed(&mut self.flat, &block(8, v), &block(8, v), 8, n);
+                let b = self.paged.append_committed(&block(8, v), &block(8, v), 8, n);
+                assert_eq!(a.is_ok(), b.is_ok(), "append_committed outcome diverged");
+            }
+            1 => {
+                let a = KvStore::begin_branch(&mut self.flat);
+                let b = self.paged.begin_branch();
+                assert_eq!(a.is_ok(), b.is_ok(), "begin_branch outcome diverged");
+            }
+            2 => {
+                let n = g.usize_in(1, 9);
+                let a = KvStore::append_branch(&mut self.flat, &block(16, v), &block(16, v), 16, n);
+                let b = self.paged.append_branch(&block(16, v), &block(16, v), 16, n);
+                assert_eq!(a.is_ok(), b.is_ok(), "append_branch outcome diverged");
+            }
+            3 => {
+                KvStore::rollback(&mut self.flat);
+                self.paged.rollback();
+            }
+            4 => {
+                let a_rows = KvStore::branch_rows(&self.flat);
+                let take = g.usize_in(0, a_rows + 2);
+                let a = KvStore::commit_length(&mut self.flat, take);
+                let b = self.paged.commit_length(take);
+                assert_eq!(a.is_ok(), b.is_ok(), "commit_length outcome diverged");
+            }
+            5 => {
+                // random strictly-increasing subset of branch rows
+                let rows = KvStore::branch_rows(&self.flat);
+                let mut tail = Vec::new();
+                for i in 0..rows {
+                    if g.bool_p(0.5) {
+                        tail.push(i);
+                    }
+                }
+                let a = KvStore::commit_path_tail(&mut self.flat, &tail);
+                let b = self.paged.commit_path_tail(&tail);
+                assert_eq!(a.is_ok(), b.is_ok(), "commit_path_tail outcome diverged");
+            }
+            _ => {
+                // path commit over the branch view: keep the committed
+                // prefix with probability 0.7 (fast path), else a shuffled
+                // full reorder (fallback path)
+                let len = KvStore::len(&self.flat);
+                let rows = KvStore::branch_rows(&self.flat);
+                let view = len + rows;
+                if view == 0 {
+                    return;
+                }
+                let mut path: Vec<usize> = if g.bool_p(0.7) {
+                    let mut p: Vec<usize> = (0..len).collect();
+                    for i in 0..rows {
+                        if g.bool_p(0.6) {
+                            p.push(len + i);
+                        }
+                    }
+                    p
+                } else {
+                    (0..view).rev().collect()
+                };
+                if path.is_empty() {
+                    path.push(0);
+                }
+                let a = KvStore::commit_path(&mut self.flat, &path);
+                let b = self.paged.commit_path(&path);
+                assert_eq!(a.is_ok(), b.is_ok(), "commit_path outcome diverged");
+            }
+        }
+        self.check();
+    }
+
+    /// Committed state must be bit-identical.
+    fn check(&self) {
+        assert_eq!(KvStore::len(&self.flat), self.paged.len(), "committed length diverged");
+        assert_eq!(
+            KvStore::committed_checksum(&self.flat),
+            self.paged.committed_checksum(),
+            "committed checksum diverged at len {}",
+            self.paged.len()
+        );
+        for r in 0..self.paged.len() {
+            assert_eq!(
+                KvStore::committed_row_k(&self.flat, r),
+                self.paged.committed_row_k(r),
+                "committed row {r} diverged"
+            );
+        }
+    }
+}
+
+fn pool_invariant(pool: &Rc<RefCell<PagePool>>, caches: &[&PagedCache]) {
+    let p = pool.borrow();
+    let mapped: usize = caches.iter().map(|c| c.mapped_blocks()).sum();
+    assert_eq!(
+        p.blocks(),
+        p.free_blocks() + mapped,
+        "free-list invariant broken: {} blocks != {} free + {mapped} mapped",
+        p.blocks(),
+        p.free_blocks()
+    );
+}
+
+#[test]
+fn property_paged_cache_is_bit_identical_to_flat() {
+    prop::for_cases(60, 0x9A6E_D0, |g| {
+        let pool = Rc::new(RefCell::new(PagePool::new(DIMS, BS)));
+        let strategy = *g.choose(&[CacheStrategy::SegmentShare, CacheStrategy::DeepCopy]);
+        let fast = g.bool_p(0.7);
+        let mut twin = Twin::new(strategy, fast, &pool);
+        for _ in 0..g.usize_in(5, 40) {
+            twin.step(g);
+            pool_invariant(&pool, &[&twin.paged]);
+        }
+        // reset is part of the contract too: both go back to empty and
+        // the paged cache returns every block
+        KvStore::reset(&mut twin.flat);
+        twin.paged.reset();
+        twin.check();
+        assert_eq!(twin.paged.mapped_blocks(), 0);
+        pool_invariant(&pool, &[&twin.paged]);
+    });
+}
+
+#[test]
+fn property_parked_resident_survives_sibling_traffic() {
+    // The park shape at cache level: conversation A runs some ops, then
+    // "parks" (sits untouched) while conversation B runs a full random
+    // sequence on the SAME pool (mapping and freeing blocks); A must
+    // resume with bit-identical committed state, and the pool must
+    // account every block throughout.
+    prop::for_cases(40, 0x9A6E_D1, |g| {
+        let pool = Rc::new(RefCell::new(PagePool::new(DIMS, BS)));
+        let strategy = *g.choose(&[CacheStrategy::SegmentShare, CacheStrategy::DeepCopy]);
+        let mut a = Twin::new(strategy, true, &pool);
+        let mut b = Twin::new(strategy, true, &pool);
+        for _ in 0..g.usize_in(3, 12) {
+            a.step(g);
+        }
+        // only park between branches: roll back any open branch first
+        // (parking mid-branch is not part of the slot lifecycle)
+        KvStore::rollback(&mut a.flat);
+        a.paged.rollback();
+        a.check();
+        let parked_checksum = a.paged.committed_checksum();
+        let parked_len = a.paged.len();
+        // sibling traffic on the same pool
+        for _ in 0..g.usize_in(5, 30) {
+            b.step(g);
+            pool_invariant(&pool, &[&a.paged, &b.paged]);
+        }
+        // B retires: its blocks return to the pool
+        KvStore::reset(&mut b.flat);
+        b.paged.reset();
+        pool_invariant(&pool, &[&a.paged, &b.paged]);
+        // A resumes untouched and keeps operating correctly
+        assert_eq!(a.paged.len(), parked_len, "parked length changed");
+        assert_eq!(
+            a.paged.committed_checksum(),
+            parked_checksum,
+            "parked conversation corrupted by sibling traffic"
+        );
+        for _ in 0..g.usize_in(2, 10) {
+            a.step(g);
+            pool_invariant(&pool, &[&a.paged, &b.paged]);
+        }
+    });
+}
+
+// ---------------------------------------------------------------------
+// Engine-level equivalence
+// ---------------------------------------------------------------------
+
+fn prompt(n: usize, seed: u64) -> Vec<i32> {
+    let mut rng = SplitMix64::new(seed);
+    let mut p = vec![1i32]; // BOS
+    for _ in 1..n.max(2) {
+        p.push(rng.range(2, 512) as i32);
+    }
+    p
+}
+
+fn run_layout(cfg: &RunConfig, p: &[i32], max_new: usize, agree: u64) -> GenOut {
+    let mut b = SimBackend::new(agree);
+    let mut e = Engine::new(&b, cfg.clone());
+    e.generate_speculative(&mut b, p, max_new).unwrap()
+}
+
+#[test]
+fn paged_engine_decodes_bit_identical_to_flat() {
+    let p = prompt(17, 11);
+    for strategy in [CacheStrategy::SegmentShare, CacheStrategy::DeepCopy] {
+        for commit in [CommitMode::PathIndex, CommitMode::Length] {
+            for fast in [true, false] {
+                for agree in [0u64, 85, 100] {
+                    let mut cfg = RunConfig::default();
+                    cfg.cache_strategy = strategy;
+                    cfg.commit_mode = commit;
+                    cfg.fast_reorder = fast;
+                    cfg.cache_layout = CacheLayout::Flat;
+                    let flat = run_layout(&cfg, &p, 24, agree);
+                    cfg.cache_layout = CacheLayout::Paged;
+                    let paged = run_layout(&cfg, &p, 24, agree);
+                    assert_eq!(
+                        flat.tokens, paged.tokens,
+                        "tokens diverged: {strategy:?}/{commit:?}/fast={fast}/agree={agree}"
+                    );
+                    assert_eq!(flat.accept_lens, paged.accept_lens, "acceptance diverged");
+                    assert_eq!(flat.rounds, paged.rounds, "round count diverged");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn paged_residency_tracks_context_not_capacity() {
+    let p = prompt(20, 12);
+    let mut cfg = RunConfig::default();
+    cfg.cache_layout = CacheLayout::Paged;
+    let mut b = SimBackend::new(90);
+    let mut e = Engine::new(&b, cfg.clone());
+    let before = e.kv_bytes_resident();
+    assert_eq!(before, 0, "an idle paged engine must map no blocks");
+    e.generate_speculative(&mut b, &p, 16).unwrap();
+    let after = e.kv_bytes_resident();
+    assert!(after > 0);
+
+    let mut fcfg = cfg.clone();
+    fcfg.cache_layout = CacheLayout::Flat;
+    let fe = Engine::new(&b, fcfg);
+    assert!(
+        after < fe.kv_bytes_resident() / 4,
+        "paged residency ({after} B) must be far below the flat pinned buffers ({} B)",
+        fe.kv_bytes_resident()
+    );
+    // reset returns every block
+    e.reset();
+    assert_eq!(e.kv_bytes_resident(), 0);
+}
+
+#[test]
+fn scheduler_park_and_resume_matches_dedicated_engine() {
+    // Conversation 0 decodes turn 1, parks (its next prompt "isn't ready"),
+    // conversation 1 takes the single slot, then conversation 0 resumes
+    // turn 2 on its preserved context — outputs must equal a dedicated
+    // two-turn engine, with no re-prefill of turn-1 context.
+    for layout in [CacheLayout::Flat, CacheLayout::Paged] {
+        let agree = 85u64;
+        let p1 = prompt(12, 31);
+        let p2 = prompt(6, 32);
+        let other = prompt(9, 33);
+
+        // dedicated references
+        let mut rb = SimBackend::new(agree);
+        let mut cfg = RunConfig::default();
+        cfg.cache_layout = layout;
+        let mut re = Engine::new(&rb, cfg.clone());
+        let want1 = re.generate_speculative(&mut rb, &p1, 10).unwrap();
+        let want2 = re.generate_speculative(&mut rb, &p2, 10).unwrap();
+        let mut ob = SimBackend::new(agree);
+        let mut oe = Engine::new(&ob, cfg.clone());
+        let want_other = oe.generate_speculative(&mut ob, &other, 8).unwrap();
+
+        // one slot, park between the turns
+        let mut bk = SimBackend::new(agree);
+        let mut engines = vec![Engine::new(&bk, cfg.clone())];
+        let cap = bk.contract().cache_cap;
+        let mut sched = ContinuousScheduler::new(1, cap);
+        sched.submit(SlotRequest { id: 0, prompt: p1.clone(), max_new: 10, cfg: None });
+        let mut turn1: Option<GenOut> = None;
+        sched
+            .run_to_idle(&mut bk, &mut engines, &mut |c: Completion| {
+                turn1 = Some(c.out);
+                Disposition::Park
+            })
+            .unwrap();
+        assert_eq!(sched.parked_count(), 1);
+        assert_eq!(sched.stats.parked, 1);
+
+        // the freed slot serves someone else while 0 is parked
+        sched.submit(SlotRequest { id: 1, prompt: other.clone(), max_new: 8, cfg: None });
+        let mut got_other: Option<GenOut> = None;
+        sched
+            .run_to_idle(&mut bk, &mut engines, &mut |c: Completion| {
+                got_other = Some(c.out);
+                Disposition::Release
+            })
+            .unwrap();
+
+        // resume conversation 0's turn 2
+        sched.resume(0, p2.clone(), 10).unwrap();
+        assert_eq!(sched.parked_count(), 0);
+        let mut turn2: Option<GenOut> = None;
+        sched
+            .run_to_idle(&mut bk, &mut engines, &mut |c: Completion| {
+                turn2 = Some(c.out);
+                Disposition::Release
+            })
+            .unwrap();
+
+        let turn1 = turn1.unwrap();
+        let turn2 = turn2.unwrap();
+        assert_eq!(turn1.tokens, want1.tokens, "turn 1 diverged ({layout:?})");
+        assert_eq!(got_other.unwrap().tokens, want_other.tokens, "sibling diverged ({layout:?})");
+        assert_eq!(turn2.tokens, want2.tokens, "resumed turn diverged ({layout:?})");
+        assert_eq!(turn2.accept_lens, want2.accept_lens);
+        // no re-prefill: the resumed turn spends exactly the teacher
+        // calls of a turn whose context never left its engine (re-
+        // prefilling the turn-1 context would add prefill-chunk calls)
+        assert_eq!(
+            turn2.teacher_calls, want2.teacher_calls,
+            "resume must not re-prefill the parked context ({layout:?})"
+        );
+        assert_eq!(sched.stats.resumed, 1);
+        // resuming an unknown id is an error
+        assert!(sched.resume(99, p2.clone(), 4).is_err());
+    }
+}
+
+#[test]
+fn set_config_switches_layouts_bit_identically() {
+    // A slot engine built flat must, after set_config to paged, decode
+    // exactly like a fresh paged engine (and back).
+    let agree = 90u64;
+    let p = prompt(13, 41);
+    let mut want_cfg = RunConfig::default();
+    want_cfg.cache_layout = CacheLayout::Paged;
+    let mut rb = SimBackend::new(agree);
+    let mut re = Engine::new(&rb, want_cfg.clone());
+    let want = re.generate_speculative(&mut rb, &p, 14).unwrap();
+
+    let mut b = SimBackend::new(agree);
+    let mut e = Engine::new(&b, RunConfig::default());
+    e.generate_speculative(&mut b, &prompt(7, 42), 6).unwrap(); // burn a flat conversation
+    e.set_config(want_cfg);
+    let got = e.generate_speculative(&mut b, &p, 14).unwrap();
+    assert_eq!(got.tokens, want.tokens);
+    assert_eq!(got.accept_lens, want.accept_lens);
+}

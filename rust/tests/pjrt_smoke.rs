@@ -49,7 +49,7 @@ fn fused_and_eager_artifacts_agree_on_goldens() {
             tokens: &gi.tokens,
             positions: &gi.positions,
             mask: &gi.mask,
-            kv: KvView { k: &gi.k_cache, v: &gi.v_cache },
+            kv: KvView::flat(&gi.k_cache, &gi.v_cache, contract.cache_cap),
             feats_in: None,
             probe: false,
         }, &mut out)
