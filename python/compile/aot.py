@@ -86,6 +86,56 @@ def draft_fn(params, probe: bool):
     return fn
 
 
+def teacher_fused_batch_fn(params, b: int, s: int, fused: bool):
+    """Fused [B, S] teacher verification: one launch verifies B requests.
+
+    Input layout matches the rust FusedVerifier staging (ARCHITECTURE §10):
+    tokens/positions are flat [B*S] (request b owns rows [b*S, (b+1)*S)),
+    the mask is [B, S, cap+S], the caches are stacked per-request
+    [B, L, cap, H, Dh]. Outputs are re-laid to the fused StepScratch
+    layout: logits [B*S, V], feats [B*S, F], k/v_new [L, B*S, H, Dh].
+    Cross-request isolation is structural (vmap over the batch axis).
+    """
+    params = _device_params(params)
+
+    def fn(tokens, positions, mask, k_cache, v_cache):
+        tk = tokens.reshape(b, s)
+        ps = positions.reshape(b, s)
+
+        def one(t, p, m, kc, vc):
+            return teacher_block_forward(params, t, p, m, kc, vc,
+                                         fused=fused, with_probe=False)
+
+        logits, feats, k_new, v_new = jax.vmap(one)(tk, ps, mask, k_cache, v_cache)
+        logits = logits.reshape(b * s, logits.shape[-1])
+        feats = feats.reshape(b * s, feats.shape[-1])
+        # [B, L, S, H, Dh] -> [L, B*S, H, Dh]
+        layers, heads, d_head = k_new.shape[1], k_new.shape[3], k_new.shape[4]
+        k_new = jnp.transpose(k_new, (1, 0, 2, 3, 4)).reshape(layers, b * s, heads, d_head)
+        v_new = jnp.transpose(v_new, (1, 0, 2, 3, 4)).reshape(layers, b * s, heads, d_head)
+        return logits, feats, k_new, v_new
+    return fn
+
+
+def kv_append_fn():
+    """KV-session scatter update: write N delta rows into a resident cache.
+
+    Inputs: (k_cache [L, cap, H, Dh], v_cache, rows [N] i32 logical row
+    indices, delta_k [L, N, H, Dh], delta_v). Short deltas are padded by
+    repeating their last (row, data) pair — duplicate indices re-write
+    identical data, so padding is a no-op. Outputs the updated cache
+    pair; the rust runtime retains the result buffers device-side
+    (docs/ARCHITECTURE.md §10).
+    """
+
+    def fn(k_cache, v_cache, rows, delta_k, delta_v):
+        k = k_cache.at[:, rows, :, :].set(delta_k)
+        v = v_cache.at[:, rows, :, :].set(delta_v)
+        return k, v
+
+    return fn
+
+
 def teacher_specs(s: int):
     d = TEACHER
     return (
@@ -107,6 +157,35 @@ def draft_specs(s: int):
         jax.ShapeDtypeStruct((d.layers, CACHE_CAP, d.heads, d.d_head), F32),
         jax.ShapeDtypeStruct((d.layers, CACHE_CAP, d.heads, d.d_head), F32),
     )
+
+
+def teacher_batch_specs(b: int, s: int):
+    d = TEACHER
+    return (
+        jax.ShapeDtypeStruct((b * s,), I32),                              # tokens
+        jax.ShapeDtypeStruct((b * s,), I32),                              # positions
+        jax.ShapeDtypeStruct((b, s, CACHE_CAP + s), F32),                 # mask
+        jax.ShapeDtypeStruct((b, d.layers, CACHE_CAP, d.heads, d.d_head), F32),
+        jax.ShapeDtypeStruct((b, d.layers, CACHE_CAP, d.heads, d.d_head), F32),
+    )
+
+
+def kv_append_specs(dims, n: int):
+    return (
+        jax.ShapeDtypeStruct((dims.layers, CACHE_CAP, dims.heads, dims.d_head), F32),
+        jax.ShapeDtypeStruct((dims.layers, CACHE_CAP, dims.heads, dims.d_head), F32),
+        jax.ShapeDtypeStruct((n,), I32),                                  # row indices
+        jax.ShapeDtypeStruct((dims.layers, n, dims.heads, dims.d_head), F32),
+        jax.ShapeDtypeStruct((dims.layers, n, dims.heads, dims.d_head), F32),
+    )
+
+
+# Fused [B, S] teacher variants (rust: ModuleKey{b>1} -> teacher_fused_b{B}_s{S})
+# and KV-session scatter widths. Small set: each module bakes the full
+# weight constants (~MBs of HLO text), so only the serving sweet spots
+# are compiled; the rust FusedVerifier splits wider groups.
+FUSED_B_VARIANTS = [(2, 16), (4, 16), (4, 32)]
+KV_APPEND_N = 64
 
 
 # ----------------------------------------------------------------------
@@ -206,6 +285,17 @@ def main() -> None:
     # Analysis-only probe variants (paper Fig 7 attention evidence).
     modules["draft_probe_s8"] = (draft_fn(draft, probe=True), draft_specs(8))
     modules["draft_probe_s32"] = (draft_fn(draft, probe=True), draft_specs(32))
+    # Fused [B, S] verification variants (one launch per batched group).
+    for b, s in FUSED_B_VARIANTS:
+        modules[f"teacher_fused_b{b}_s{s}"] = (
+            teacher_fused_batch_fn(teacher, b, s, fused=True),
+            teacher_batch_specs(b, s),
+        )
+    # KV-session scatter-update modules (device-resident cache appends).
+    modules[f"kv_append_teacher_n{KV_APPEND_N}"] = (
+        kv_append_fn(), kv_append_specs(TEACHER, KV_APPEND_N))
+    modules[f"kv_append_draft_n{KV_APPEND_N}"] = (
+        kv_append_fn(), kv_append_specs(DRAFT, KV_APPEND_N))
 
     only = set(args.only.split(",")) if args.only else None
     artifact_table = []

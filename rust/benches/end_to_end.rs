@@ -65,6 +65,16 @@ use eagle_pangu::util::bench::{bench, black_box};
 use eagle_pangu::workload::Grammar;
 use std::time::{Duration, Instant};
 
+// # KV-session upload traffic (`upload`)
+//
+// A second timing-free section decodes a steady-state turn at B in
+// {1, 4} with KV sessions on vs off and records the sim's modeled
+// host->device `upload_bytes` per committed token. These bytes are
+// deterministic; `bench_gate` requires the session-on path to ship
+// <= 0.25x the session-off path at B >= 4 (the resident-session
+// contract: steady-state transfer must not scale with the cache
+// capacity).
+
 // Count every allocation (threshold 0): the bytes-allocated/round series
 // in BENCH_hotpath.json.
 #[global_allocator]
@@ -222,6 +232,47 @@ fn main() {
         }
     }
 
+    // ---- KV-session upload traffic: session-on vs session-off ----
+    // Deterministic bytes from the sim's host->device transfer model:
+    // without sessions every step re-ships the full [L, cap, H, Dh]
+    // cache pair; with sessions (default) each conversation cache is
+    // bound once and steps ship only dirty-row deltas. Steady state is
+    // the second turn of resident conversations (bind cost excluded —
+    // it is an admission-boundary cost, not a per-step one). The CI
+    // gate requires the resident-session path to upload <= 0.25x the
+    // full-upload path at B >= 4.
+    let mut upload_json = Json::obj();
+    for bsz in [1usize, 4] {
+        for sessions in [true, false] {
+            let mut sim = SimBackend::new(85);
+            let mut ucfg = cfg.clone();
+            ucfg.kv_sessions = sessions;
+            let pools = CachePools::new(sim.contract());
+            let mut engines: Vec<Engine> = (0..bsz)
+                .map(|_| Engine::with_pools(&sim, ucfg.clone(), &pools))
+                .collect();
+            let cap = sim.contract().cache_cap;
+            let mut sched = ContinuousScheduler::new(bsz, cap);
+            // warm turn: binds sessions, sizes every buffer
+            decode_speculative_batch(
+                &mut sim, &mut engines, &sweep_prompts[..bsz], sweep_max_new, &mut sched)
+                .unwrap();
+            // steady state: continue the same resident conversations
+            let cont: Vec<Vec<i32>> = (0..bsz)
+                .map(|i| Grammar::code().sample_sequence(2, 900 + i as u64, None))
+                .collect();
+            let snap = sim.upload_bytes;
+            let outs = decode_speculative_batch(
+                &mut sim, &mut engines, &cont, sweep_max_new, &mut sched)
+                .unwrap();
+            let toks: u64 = outs.iter().map(|o| o.tokens.len() as u64).sum();
+            let per_tok = (sim.upload_bytes - snap) as f64 / toks.max(1) as f64;
+            let tag = if sessions { "session_on" } else { "session_off" };
+            println!("upload {tag} B={bsz}: {per_tok:.0} B/token");
+            upload_json.push(&format!("{tag}_b{bsz}_upload_bytes_per_token"), per_tok);
+        }
+    }
+
     // ---- straggler workload: continuous admission vs fixed grouping ----
     // Runs under the PAGED layout: the gated `straggler_continuous_speedup`
     // must stay a win with block-table caches on the serving hot path
@@ -324,6 +375,7 @@ fn main() {
         .push("batch_sweep_conversations", sweep_convs)
         .push("b4_speedup_vs_b1", b4_speedup)
         .push("kv_resident", kv_json)
+        .push("upload", upload_json)
         .push("straggler", strag_json)
         .push("straggler_continuous_speedup", strag_speedup);
     std::fs::write("BENCH_hotpath.json", j.to_string_pretty()).unwrap();

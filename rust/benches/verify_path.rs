@@ -51,6 +51,7 @@ fn main() {
                         kv: KvView::flat(&k, &v, cap),
                         feats_in: None,
                         probe: false,
+                        session: None,
                     }, &mut out)
                     .unwrap();
                 black_box(out.logits[0]);
@@ -79,6 +80,7 @@ fn main() {
                     kv: KvView::flat(&dk, &dv, cap),
                     feats_in: Some(&feats),
                     probe: false,
+                    session: None,
                 }, &mut out)
                 .unwrap();
             black_box(out.logits[0]);

@@ -3,6 +3,37 @@
 //! testable against a deterministic simulator ([`sim::SimBackend`]) and run
 //! in production against AOT artifacts ([`crate::runtime::PjrtBackend`]).
 //!
+//! # Plan → bind → execute
+//!
+//! The contract has three phases, replacing the old string-keyed module
+//! addressing and `bail!`-on-shape entry points:
+//!
+//! 1. **Plan** — the caller states what it needs as a
+//!    [`plan::PlanRequest`]; [`ModelBackend::plan_step`] negotiates the
+//!    cheapest compiled variant from the backend's
+//!    [`ModelBackend::capabilities`] table (parsed from the artifact
+//!    manifest) into a typed [`plan::LaunchPlan`], or a typed
+//!    [`plan::PlanError`] ([`plan::PlanError::SplitRequired`] tells the
+//!    fused verifier to chunk a group; [`plan::PlanError::NoVariant`]
+//!    lists every variant the backend has).
+//! 2. **Bind** (optional) — [`ModelBackend::bind_kv`] creates a
+//!    backend-resident KV session mirroring one conversation cache;
+//!    subsequent steps carry a [`plan::SessionTicket`] and the backend
+//!    syncs only the rows past the cache's dirty watermark, so
+//!    steady-state per-step transfer no longer scales with the cache
+//!    capacity. Backends without session support return
+//!    [`plan::PlanError::SessionUnsupported`] and callers fall back to
+//!    full-view upload (the eager/debug path stays full-upload by
+//!    design).
+//! 3. **Execute** — [`ModelBackend::execute`] /
+//!    [`ModelBackend::execute_batch`] launch a resolved plan. The
+//!    classic [`ModelBackend::teacher_step`] /
+//!    [`ModelBackend::draft_step`] /
+//!    [`ModelBackend::teacher_step_batch`] entry points survive as thin
+//!    provided wrappers (plan, then execute), so call sites stay
+//!    ergonomic while every variant selection flows through the
+//!    negotiation.
+//!
 //! The call contract mirrors the AOT modules (DESIGN.md §2): the backend
 //! *reads* a committed-prefix KV cache and *writes* the logits/features/KV
 //! rows of the S new tokens into a caller-provided [`StepScratch`]; it
@@ -34,14 +65,12 @@
 //! * **Validity** — contents are defined only for the `s` slots of the
 //!   *most recent* step, and only until the next `prepare`. Padded-slot
 //!   values are backend-defined garbage; the tree mask force-masks them.
-//! * **PJRT** — the PJRT client currently materializes outputs as host
-//!   literal `Vec`s (an allocation per output inside the binding) before
-//!   a bounded `copy_from_slice` into the scratch, so today the
-//!   zero-allocation guarantee holds for [`sim::SimBackend`] (what the
-//!   allocation-regression test asserts) but not yet for PJRT. Output
-//!   buffer donation — `to_literal` into a preallocated host buffer —
-//!   removes both the binding-side allocation and the copy, and the
-//!   scratch API makes that a backend-local change (ROADMAP open item).
+//! * **PJRT** — module outputs land through `Literal::read_into`
+//!   directly into the prepared scratch slices (output donation to host
+//!   scratch): no intermediate per-output `Vec` is materialized. The
+//!   only remaining per-launch heap traffic is handle-sized (the tuple
+//!   literal handles and the artifact-name key), never vocab- or
+//!   cap-sized.
 //!
 //! # Batched verification contract
 //!
@@ -72,12 +101,15 @@
 //! backend, one launch per request, allocates a temporary scratch);
 //! [`sim::SimBackend`] overrides it with a true single-pass fused step.
 
+pub mod plan;
 pub mod sim;
 
 use crate::config::{Contract, ExecMode};
 use anyhow::Result;
 
+pub use crate::config::{Capabilities, ModuleKey, ModuleLayout, ModuleRole};
 pub use crate::util::arena::StepScratch;
+pub use plan::{negotiate, KvSession, LaunchPlan, PlanError, PlanRequest, SessionTicket};
 
 /// How logical sequence rows map onto the physical storage of a
 /// [`KvView`] — the gather-aware half of the paged-KV contract.
@@ -175,6 +207,11 @@ pub struct StepArgs<'a> {
     pub feats_in: Option<&'a [f32]>,
     /// Request last-layer attention statistics (analysis-only).
     pub probe: bool,
+    /// Resident-session binding of `kv`, when the conversation cache is
+    /// bound on this backend (see the *plan → bind → execute* protocol
+    /// in the module docs). `None` → the backend reads/uploads the full
+    /// view.
+    pub session: Option<SessionTicket>,
 }
 
 /// One request inside a fused batched verification step.
@@ -184,8 +221,21 @@ pub struct BatchRequest<'a> {
     pub kv: KvView<'a>,
     /// Rows the caller will read back (the request's own padded variant
     /// `S_req <= S_max`); rows `[live, S_max)` are padding the backend
-    /// may skip entirely.
+    /// may skip entirely. Group-padding requests have `live == 0` (and
+    /// an empty cache view — their mask rows/columns are fully closed).
     pub live: usize,
+    /// Resident-session binding of `kv` (same contract as
+    /// [`StepArgs::session`]).
+    pub session: Option<SessionTicket>,
+}
+
+/// The [`ModuleLayout`] a cache view presents (paged views negotiate a
+/// host-side gather when only flat modules are compiled).
+pub fn layout_of(kv: &KvView) -> ModuleLayout {
+    match kv.index {
+        KvIndex::Flat { .. } => ModuleLayout::Flat,
+        KvIndex::Paged { .. } => ModuleLayout::Paged,
+    }
 }
 
 /// Inputs of one fused `B`-request verification step (see the *Batched
@@ -208,30 +258,60 @@ pub struct BatchStepArgs<'a, 'b> {
 ///
 /// Implementations are single-threaded (PJRT handles are !Send); each
 /// coordinator worker owns its own backend instance (DESIGN.md §3.4).
+///
+/// Required methods are the *plan → bind → execute* primitives
+/// ([`ModelBackend::capabilities`], [`ModelBackend::execute`]); the
+/// classic step entry points are provided wrappers that negotiate a
+/// [`LaunchPlan`] first, so no implementation selects variants by string
+/// or fails on shape with an untyped error.
 pub trait ModelBackend {
     /// The static shape contract this backend was built for.
     fn contract(&self) -> &Contract;
 
-    /// Teacher verification/prefill step under `mode` (fused or eager
-    /// artifact — the paper's two-mode protocol). Outputs land in `out`
-    /// per the scratch-buffer contract above.
-    fn teacher_step(&mut self, mode: ExecMode, args: StepArgs, out: &mut StepScratch)
-        -> Result<()>;
+    /// The compiled module variants this backend can launch (parsed from
+    /// the artifact manifest, or synthesized for simulators).
+    fn capabilities(&self) -> &Capabilities;
 
-    /// Draft step (chain refresh or tree-frontier expansion).
-    fn draft_step(&mut self, args: StepArgs, out: &mut StepScratch) -> Result<()>;
+    /// Negotiate the cheapest compiled variant covering `req` (see
+    /// [`plan::negotiate`] for the cost model and fallback rules).
+    /// Backends with dynamic constraints may override.
+    fn plan_step(&self, req: &PlanRequest) -> Result<LaunchPlan, PlanError> {
+        negotiate(self.capabilities(), req)
+    }
 
-    /// Fused teacher verification over `B` requests in one launch; live
-    /// output rows must be bit-identical to `B` sequential
-    /// [`ModelBackend::teacher_step`] calls (see the module docs).
+    /// Launch a resolved single-request plan. Outputs land in `out` per
+    /// the scratch-buffer contract above; the scratch must be prepared
+    /// for `plan.key.s` slots (with the probe output iff
+    /// `plan.key.probe`).
+    fn execute(&mut self, plan: &LaunchPlan, args: StepArgs, out: &mut StepScratch) -> Result<()>;
+
+    /// Launch a resolved fused plan over `args.reqs.len()` requests
+    /// (`<= plan.key.b`; a backend launching a wider compiled variant
+    /// pads the missing request blocks itself) in **one** launch; live
+    /// output rows must be bit-identical to sequential
+    /// [`ModelBackend::execute`] calls on the same per-request inputs
+    /// (see the batching contract above).
     ///
-    /// The default implementation *is* that sequential loop: one launch
-    /// per request through a temporary scratch, copied into the fused
-    /// layout. It is correct for any backend (PJRT runs it unchanged —
-    /// true fused `[B, S]` modules are a compile-side follow-up) but does
-    /// not amortize launches and allocates the temporary; fused backends
-    /// should override it.
-    fn teacher_step_batch(
+    /// The default emulates sequentially (correct for any backend, one
+    /// launch per live request); backends with true fused modules
+    /// override it.
+    fn execute_batch(
+        &mut self,
+        plan: &LaunchPlan,
+        args: BatchStepArgs,
+        out: &mut StepScratch,
+    ) -> Result<()> {
+        self.emulate_batch(plan.key.mode, args, out)
+    }
+
+    /// Sequential emulation of a fused step: one single-request launch
+    /// per live request through a temporary scratch, copied into the
+    /// fused layout. Correct for every backend (used as the
+    /// [`ModelBackend::execute_batch`] default and as the
+    /// [`ModelBackend::teacher_step_batch`] fallback when no fused
+    /// variant covers the group at all); does not amortize launches and
+    /// allocates the temporary.
+    fn emulate_batch(
         &mut self,
         mode: ExecMode,
         args: BatchStepArgs,
@@ -247,6 +327,9 @@ pub trait ModelBackend {
         out.prepare_batch(b, s, vocab, feat_dim, d.layers, d.heads, d.d_head, false);
         let mut tmp = StepScratch::new();
         for (bi, req) in args.reqs.iter().enumerate() {
+            if req.live == 0 {
+                continue; // group padding: rows are never read back
+            }
             self.teacher_step(
                 mode,
                 StepArgs {
@@ -256,12 +339,117 @@ pub trait ModelBackend {
                     kv: req.kv,
                     feats_in: None,
                     probe: false,
+                    session: req.session,
                 },
                 &mut tmp,
             )?;
             out.copy_request_from(bi, &tmp);
         }
         Ok(())
+    }
+
+    /// Bind one conversation cache into a backend-resident KV session
+    /// (the *bind* phase): the backend copies rows `[0, rows)` of `view`
+    /// into its mirror once; later steps carrying a [`SessionTicket`]
+    /// sync only the dirty delta. Backends without session support
+    /// return [`PlanError::SessionUnsupported`] (the default) and
+    /// callers fall back to full-view steps.
+    fn bind_kv(
+        &mut self,
+        role: ModuleRole,
+        view: KvView,
+        rows: usize,
+    ) -> Result<KvSession, PlanError> {
+        let _ = (role, view, rows);
+        Err(PlanError::SessionUnsupported { backend: self.name() })
+    }
+
+    /// Re-synchronize an existing session from scratch (rows `[0, rows)`
+    /// of `view`), reusing its mirror storage — the admission-boundary
+    /// path when a slot engine switches conversations.
+    fn rebind_kv(
+        &mut self,
+        session: &KvSession,
+        view: KvView,
+        rows: usize,
+    ) -> Result<(), PlanError> {
+        let _ = (view, rows);
+        Err(PlanError::UnknownSession { id: session.id })
+    }
+
+    /// Release a session and its mirror storage.
+    fn unbind_kv(&mut self, session: KvSession) {
+        let _ = session;
+    }
+
+    /// Teacher verification/prefill step under `mode` (fused or eager
+    /// artifact — the paper's two-mode protocol): plans the smallest
+    /// covering variant, then executes it. Outputs land in `out` per the
+    /// scratch-buffer contract above.
+    fn teacher_step(
+        &mut self,
+        mode: ExecMode,
+        args: StepArgs,
+        out: &mut StepScratch,
+    ) -> Result<()> {
+        let req = PlanRequest {
+            role: ModuleRole::Teacher,
+            mode,
+            rows: args.tokens.len(),
+            batch: 1,
+            probe: args.probe,
+            layout: layout_of(&args.kv),
+        };
+        let plan = self.plan_step(&req)?;
+        self.execute(&plan, args, out)
+    }
+
+    /// Draft step (chain refresh or tree-frontier expansion): plans,
+    /// then executes. A probe request silently falls back to the
+    /// probe-less variant of the same shape when none is compiled
+    /// (probe output is analysis-only).
+    fn draft_step(&mut self, args: StepArgs, out: &mut StepScratch) -> Result<()> {
+        let req = PlanRequest {
+            role: ModuleRole::Draft,
+            mode: ExecMode::Fused,
+            rows: args.tokens.len(),
+            batch: 1,
+            probe: args.probe,
+            layout: layout_of(&args.kv),
+        };
+        let plan = self.plan_step(&req)?;
+        self.execute(&plan, args, out)
+    }
+
+    /// Fused teacher verification over `B` requests: plans the smallest
+    /// covering `(B, S)` variant and executes it as **one** launch; when
+    /// no fused variant exists at any width, falls back to the
+    /// sequential emulation (one launch per request — the
+    /// pre-fused-artifact behaviour). Callers that want to *split*
+    /// rather than emulate (keeping launches wide) should
+    /// [`ModelBackend::plan_step`] first and handle
+    /// [`PlanError::SplitRequired`] themselves, as the
+    /// [`crate::coordinator::FusedVerifier`] does.
+    fn teacher_step_batch(
+        &mut self,
+        mode: ExecMode,
+        args: BatchStepArgs,
+        out: &mut StepScratch,
+    ) -> Result<()> {
+        anyhow::ensure!(!args.reqs.is_empty(), "teacher_step_batch with an empty group");
+        let req = PlanRequest {
+            role: ModuleRole::Teacher,
+            mode,
+            rows: args.s_max,
+            batch: args.reqs.len(),
+            probe: false,
+            layout: layout_of(&args.reqs[0].kv),
+        };
+        match self.plan_step(&req) {
+            Ok(plan) => self.execute_batch(&plan, args, out),
+            Err(PlanError::SplitRequired { .. }) => self.emulate_batch(mode, args, out),
+            Err(e) => Err(e.into()),
+        }
     }
 
     /// Human-readable backend id for manifests/traces.

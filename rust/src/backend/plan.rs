@@ -1,0 +1,383 @@
+//! Launch planning: the *plan → bind → execute* half of the backend
+//! contract.
+//!
+//! A caller never names a compiled module. It states what it needs —
+//! role, mode, live rows, live requests, probe, cache layout — as a
+//! [`PlanRequest`]; [`negotiate`] resolves the cheapest compiled variant
+//! from the backend's [`Capabilities`] into a [`LaunchPlan`], or returns
+//! a typed [`PlanError`] that the caller can act on:
+//!
+//! * [`PlanError::SplitRequired`] — no fused variant covers the whole
+//!   group, but narrower ones exist: the
+//!   [`crate::coordinator::FusedVerifier`] splits the group into
+//!   `max_batch`-wide launches instead of failing;
+//! * [`PlanError::NoVariant`] — nothing covers the request at any width;
+//!   the error lists every variant the backend *does* have, so "no
+//!   compiled S variant" failures are diagnosable without rerunning.
+//!
+//! "Cheapest" = fewest padded rows `b * s` (the accelerator computes
+//! every padded row of a launch, so padded rows are the honest cost
+//! proxy), ties broken toward the smaller `b` then smaller `s`.
+//!
+//! # KV sessions
+//!
+//! [`KvSession`] is the *bind* half: an opaque handle to a
+//! backend-resident mirror of one conversation cache
+//! ([`crate::backend::ModelBackend::bind_kv`]). Each step carries a
+//! [`SessionTicket`] — the session id plus the cache's dirty watermark —
+//! and the backend syncs only rows `[dirty_lo, rows)` before launching,
+//! so steady-state per-step transfer no longer scales with the cache
+//! capacity. See the session lifecycle in `docs/ARCHITECTURE.md` §10.
+
+use crate::config::{Capabilities, ExecMode, ModuleKey, ModuleLayout, ModuleRole};
+use std::fmt;
+
+/// What a caller needs from one launch (the input of [`negotiate`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PlanRequest {
+    /// Teacher or draft step.
+    pub role: ModuleRole,
+    /// Artifact flavor (the paper's two-mode protocol). Draft requests
+    /// canonically use [`ExecMode::Fused`].
+    pub mode: ExecMode,
+    /// Padded slots the launch must hold per request (the caller's
+    /// token-block size; the plan's `s` is the smallest covering
+    /// variant).
+    pub rows: usize,
+    /// Live requests the launch must cover (1 for single-request steps).
+    pub batch: usize,
+    /// Whether the caller wants the attention-probe output. Negotiation
+    /// falls back to the probe-less variant of the same shape when no
+    /// probe variant is compiled (probe output is analysis-only).
+    pub probe: bool,
+    /// Physical layout of the caller's cache view. When no gather-aware
+    /// module is compiled, negotiation falls back to a
+    /// [`ModuleLayout::Flat`] module and sets
+    /// [`LaunchPlan::host_gather`].
+    pub layout: ModuleLayout,
+}
+
+impl PlanRequest {
+    /// A single-request teacher step request.
+    pub fn teacher(mode: ExecMode, rows: usize, layout: ModuleLayout) -> Self {
+        Self { role: ModuleRole::Teacher, mode, rows, batch: 1, probe: false, layout }
+    }
+
+    /// A fused `batch`-request teacher verification request.
+    pub fn teacher_batch(mode: ExecMode, rows: usize, batch: usize, layout: ModuleLayout) -> Self {
+        Self { role: ModuleRole::Teacher, mode, rows, batch, probe: false, layout }
+    }
+
+    /// A draft step request.
+    pub fn draft(rows: usize, probe: bool, layout: ModuleLayout) -> Self {
+        Self { role: ModuleRole::Draft, mode: ExecMode::Fused, rows, batch: 1, probe, layout }
+    }
+}
+
+impl fmt::Display for PlanRequest {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{}/{} rows={} batch={}{}{}",
+            self.role.as_str(),
+            self.mode.as_str(),
+            self.rows,
+            self.batch,
+            if self.probe { " probe" } else { "" },
+            if self.layout == ModuleLayout::Paged { " paged" } else { "" },
+        )
+    }
+}
+
+/// A resolved launch: which compiled variant to run and how the request
+/// maps onto it (the output of [`negotiate`], consumed by
+/// [`crate::backend::ModelBackend::execute`] /
+/// [`crate::backend::ModelBackend::execute_batch`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LaunchPlan {
+    /// The compiled variant to launch (`key.s >= rows`,
+    /// `key.b >= batch`).
+    pub key: ModuleKey,
+    /// Live padded slots per request the caller asked for.
+    pub rows: usize,
+    /// Live requests the caller asked for; rows of requests
+    /// `[batch, key.b)` are padding.
+    pub batch: usize,
+    /// The caller's cache is paged but the module consumes a flat cache:
+    /// the backend must materialize (gather) the view host-side before
+    /// upload.
+    pub host_gather: bool,
+}
+
+impl LaunchPlan {
+    /// Total padded rows the launch computes (`key.b * key.s`).
+    pub fn padded_rows(&self) -> usize {
+        self.key.b * self.key.s
+    }
+}
+
+/// Typed launch-planning / session errors — the replacement for the old
+/// string-keyed `bail!("… is not a compiled S variant")` paths.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum PlanError {
+    /// No compiled variant covers the request at any fused width. The
+    /// message lists every variant the backend has.
+    NoVariant {
+        /// The request that failed to resolve.
+        req: PlanRequest,
+        /// Compact summary of the compiled variants
+        /// ([`Capabilities::describe`]).
+        available: String,
+    },
+    /// No fused variant covers the whole group, but variants up to
+    /// `max_batch` wide do: the caller should split the group into
+    /// `max_batch`-sized launches.
+    SplitRequired {
+        /// Requested group width.
+        batch: usize,
+        /// Largest covering width the backend has compiled.
+        max_batch: usize,
+    },
+    /// The backend keeps no device-resident KV sessions (e.g. the
+    /// artifact set has no `kv_append` scatter-update module). Callers
+    /// fall back to full-view upload per step.
+    SessionUnsupported {
+        /// Backend name, for the error message.
+        backend: &'static str,
+    },
+    /// A [`SessionTicket`] referenced a session this backend does not
+    /// hold (stale handle or cross-backend mixup).
+    UnknownSession {
+        /// The unresolved session id.
+        id: u64,
+    },
+    /// A session operation was issued for the wrong role's session
+    /// (teacher ticket against a draft mirror or vice versa).
+    RoleMismatch {
+        /// The session's bound role.
+        bound: ModuleRole,
+        /// The role of the step that presented the ticket.
+        requested: ModuleRole,
+    },
+    /// Session initialization failed backend-side (device allocation or
+    /// upload error) — a hard error, not a capability gap.
+    SessionInit {
+        /// Backend-reported failure detail.
+        reason: String,
+    },
+}
+
+impl fmt::Display for PlanError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            PlanError::NoVariant { req, available } => {
+                write!(f, "no compiled variant covers [{req}]; available: {available}")
+            }
+            PlanError::SplitRequired { batch, max_batch } => write!(
+                f,
+                "no fused variant covers {batch} requests; split the group \
+                 (widest compiled variant: {max_batch})"
+            ),
+            PlanError::SessionUnsupported { backend } => {
+                write!(f, "backend '{backend}' does not support device-resident KV sessions")
+            }
+            PlanError::UnknownSession { id } => write!(f, "unknown KV session {id}"),
+            PlanError::RoleMismatch { bound, requested } => write!(
+                f,
+                "KV session bound for role {} used by a {} step",
+                bound.as_str(),
+                requested.as_str()
+            ),
+            PlanError::SessionInit { reason } => {
+                write!(f, "KV session initialization failed: {reason}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for PlanError {}
+
+/// Resolve the cheapest compiled variant covering `req` (see the module
+/// docs for the cost model and fallback rules).
+pub fn negotiate(caps: &Capabilities, req: &PlanRequest) -> Result<LaunchPlan, PlanError> {
+    // Draft requests are canonically Fused-mode (draft modules have one
+    // flavor); normalize so callers can pass either.
+    let mode = if req.role == ModuleRole::Draft { ExecMode::Fused } else { req.mode };
+    // Layout preference: exact match first, flat fallback with a
+    // host-side gather second.
+    let layouts: &[ModuleLayout] = if req.layout == ModuleLayout::Paged {
+        &[ModuleLayout::Paged, ModuleLayout::Flat]
+    } else {
+        &[ModuleLayout::Flat]
+    };
+    for &layout in layouts {
+        let best = caps
+            .keys()
+            .filter(|k| {
+                k.role == req.role
+                    && k.mode == mode
+                    && k.layout == layout
+                    && !k.probe
+                    && k.s >= req.rows
+                    && k.b >= req.batch
+            })
+            .min_by_key(|k| (k.b * k.s, k.b, k.s));
+        if let Some(&key) = best {
+            // Upgrade to the probe variant of the *same* shape when
+            // requested and compiled (never a different shape: probe is
+            // analysis-only and must not change padding).
+            let key = if req.probe && caps.contains(&ModuleKey { probe: true, ..key }) {
+                ModuleKey { probe: true, ..key }
+            } else {
+                key
+            };
+            return Ok(LaunchPlan {
+                key,
+                rows: req.rows,
+                batch: req.batch,
+                host_gather: req.layout == ModuleLayout::Paged && layout == ModuleLayout::Flat,
+            });
+        }
+    }
+    // No layout covers the full width — can narrower variants cover the
+    // rows? (Checked only after every layout failed, so a flat full-width
+    // plan always wins over a paged split.)
+    let max_b = layouts
+        .iter()
+        .map(|&l| caps.max_batch(req.role, mode, l, req.rows))
+        .max()
+        .unwrap_or(0);
+    if max_b >= 1 && req.batch > max_b {
+        return Err(PlanError::SplitRequired { batch: req.batch, max_batch: max_b });
+    }
+    Err(PlanError::NoVariant { req: *req, available: caps.describe() })
+}
+
+/// Opaque handle to a backend-resident KV session (a device/mirror copy
+/// of one conversation cache, bound via
+/// [`crate::backend::ModelBackend::bind_kv`]). The engine owns the
+/// handle; steps reference it through [`SessionTicket`]s.
+#[derive(Debug)]
+pub struct KvSession {
+    /// Backend-assigned session id.
+    pub id: u64,
+    /// The role whose cache this session mirrors.
+    pub role: ModuleRole,
+}
+
+/// Per-step session sync descriptor: which session a step's cache view is
+/// bound to, and which rows the backend must (re-)sync before launching.
+/// Built by the engine from the cache's dirty watermark
+/// ([`crate::cache::KvStore::dirty_lo`]).
+#[derive(Clone, Copy, Debug)]
+pub struct SessionTicket {
+    /// The bound session's id.
+    pub id: u64,
+    /// First readable row whose contents changed since the backend last
+    /// synced this session (`>= rows` when nothing changed).
+    pub dirty_lo: usize,
+    /// Rows readable through the step's cache view (committed +
+    /// open-branch rows); the mirror truncates/extends to this length.
+    pub rows: usize,
+}
+
+impl SessionTicket {
+    /// The half-open row range the backend must sync.
+    pub fn sync_range(&self) -> std::ops::Range<usize> {
+        self.dirty_lo.min(self.rows)..self.rows
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Contract;
+
+    fn caps() -> Capabilities {
+        Capabilities::synthetic(&Contract::default(), 4)
+    }
+
+    #[test]
+    fn negotiate_picks_smallest_covering_variant() {
+        let c = caps();
+        let p = negotiate(&c, &PlanRequest::teacher(ExecMode::Fused, 9, ModuleLayout::Flat))
+            .unwrap();
+        assert_eq!(p.key.s, 16);
+        assert_eq!(p.key.b, 1);
+        assert!(!p.host_gather);
+        let p = negotiate(
+            &c,
+            &PlanRequest::teacher_batch(ExecMode::Fused, 8, 3, ModuleLayout::Flat),
+        )
+        .unwrap();
+        assert_eq!((p.key.b, p.key.s), (3, 8));
+        assert_eq!(p.padded_rows(), 24);
+    }
+
+    #[test]
+    fn negotiate_reports_no_variant_with_listing() {
+        let c = caps();
+        let err = negotiate(&c, &PlanRequest::teacher(ExecMode::Fused, 300, ModuleLayout::Flat))
+            .unwrap_err();
+        match &err {
+            PlanError::NoVariant { available, .. } => {
+                assert!(available.contains("teacher/fused"), "{available}")
+            }
+            other => panic!("expected NoVariant, got {other:?}"),
+        }
+        assert!(format!("{err}").contains("rows=300"), "{err}");
+    }
+
+    #[test]
+    fn negotiate_requests_split_when_width_exceeds_variants() {
+        let c = caps(); // widths 1..=4
+        let err = negotiate(
+            &c,
+            &PlanRequest::teacher_batch(ExecMode::Fused, 8, 6, ModuleLayout::Flat),
+        )
+        .unwrap_err();
+        assert_eq!(err, PlanError::SplitRequired { batch: 6, max_batch: 4 });
+    }
+
+    #[test]
+    fn negotiate_probe_upgrades_same_shape_only() {
+        let c = caps();
+        let p = negotiate(&c, &PlanRequest::draft(9, true, ModuleLayout::Flat)).unwrap();
+        assert_eq!(p.key.s, 32);
+        assert!(p.key.probe, "synthetic caps have probe at every draft S");
+        // a table without probe variants falls back silently
+        let bare = Capabilities::from_keys(vec![ModuleKey::draft(32, false)]);
+        let p = negotiate(&bare, &PlanRequest::draft(9, true, ModuleLayout::Flat)).unwrap();
+        assert!(!p.key.probe);
+    }
+
+    #[test]
+    fn negotiate_paged_falls_back_to_flat_with_host_gather() {
+        let c = caps(); // flat-only table
+        let p = negotiate(&c, &PlanRequest::teacher(ExecMode::Fused, 8, ModuleLayout::Paged))
+            .unwrap();
+        assert_eq!(p.key.layout, ModuleLayout::Flat);
+        assert!(p.host_gather);
+        // a compiled gather-aware variant wins exactly
+        let mut keys: Vec<ModuleKey> = c.keys().copied().collect();
+        keys.push(ModuleKey {
+            layout: ModuleLayout::Paged,
+            ..ModuleKey::teacher(ExecMode::Fused, 8)
+        });
+        let c2 = Capabilities::from_keys(keys);
+        let p = negotiate(&c2, &PlanRequest::teacher(ExecMode::Fused, 8, ModuleLayout::Paged))
+            .unwrap();
+        assert_eq!(p.key.layout, ModuleLayout::Paged);
+        assert!(!p.host_gather);
+    }
+
+    #[test]
+    fn ticket_sync_range_clamps() {
+        let t = SessionTicket { id: 1, dirty_lo: usize::MAX, rows: 10 };
+        assert!(t.sync_range().is_empty());
+        let t = SessionTicket { id: 1, dirty_lo: 4, rows: 10 };
+        assert_eq!(t.sync_range(), 4..10);
+        let t = SessionTicket { id: 1, dirty_lo: 12, rows: 10 };
+        assert!(t.sync_range().is_empty());
+    }
+}

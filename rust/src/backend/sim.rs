@@ -28,16 +28,42 @@
 //! [`StepScratch`]; the only per-call state it owns is a reusable
 //! context-reconstruction buffer, so steady-state calls allocate nothing.
 //!
+//! # Plan / capabilities
+//!
+//! The sim's [`ModelBackend::capabilities`] table is synthesized from the
+//! contract: every compiled S variant, both teacher modes, fused widths
+//! up to a configurable bound ([`SimBackend::with_max_fused`], default
+//! [`DEFAULT_MAX_FUSED_B`]), and probe variants at every draft S. The
+//! width bound exists so tests can force the verifier's group-splitting
+//! path ([`crate::backend::PlanError::SplitRequired`]) on a simulator.
+//!
+//! # KV sessions and the upload model
+//!
+//! The sim implements the full session API over host slices: `bind_kv`
+//! copies the bound rows into a per-session mirror, each ticketed step
+//! syncs only the rows past the cache's dirty watermark, and the step
+//! then reads context **through the mirror** — so any stale-mirror bug
+//! (a missed dirty range on commit/rollback) changes the context hash
+//! and is caught by the session-vs-full-view bit-identity suite
+//! (`tests/backend_contract.rs`).
+//!
+//! [`SimBackend::upload_bytes`] models the host→device transfer a PJRT
+//! launch would ship for the same step: without a session the full
+//! `[L, cap, H, Dh]` cache pair plus the per-call tensors; with a
+//! session only the dirty delta rows plus the per-call tensors. The
+//! end-to-end bench reads this to report `upload_bytes_per_token` for
+//! the session-on vs session-off serving paths (gated in CI).
+//!
 //! # Fused batched verification
 //!
-//! The sim's [`ModelBackend::teacher_step_batch`] is a true fused
+//! The sim's [`ModelBackend::execute_batch`] is a true fused
 //! implementation: one pass over all `B` requests' live rows, **one**
 //! launch counted and **one** launch-cost charge. Because each row's
 //! logits depend only on that row's visible context (own cache + own
 //! spec block — the fused mask has no cross-request columns), the fused
-//! outputs are bit-identical to `B` sequential
-//! [`ModelBackend::teacher_step`] calls; padding rows
-//! (`i >= reqs[b].live`) are skipped entirely and left backend-defined.
+//! outputs are bit-identical to `B` sequential single-request steps;
+//! padding rows (`i >= reqs[b].live`) are skipped entirely and left
+//! backend-defined.
 //!
 //! # Launch-cost model
 //!
@@ -52,9 +78,10 @@
 //! cost(launch) = teacher_launch  +  teacher_row_cost * padded_rows
 //! ```
 //!
-//! where `padded_rows` is `S` for a single step and `B * S_max` for a
-//! fused step — a real padded launch computes every row, so a ragged
-//! mixed-budget group is charged for its padding.
+//! where `padded_rows` is `S` for a single step and the launched
+//! variant's `B_key * S_key` for a fused step — a real padded launch
+//! computes every row, so a ragged mixed-budget group is charged for its
+//! padding.
 //!
 //! The fixed part is what batching amortizes (one charge per fused
 //! group); the per-row part is what batching can *not* amortize (the
@@ -66,25 +93,119 @@
 //! equivalence tests stay instant; the end-to-end bench sets them to
 //! measure the B-sweep and the straggler workload honestly.
 
-use super::{BatchStepArgs, ModelBackend, StepArgs, StepScratch};
+use super::{
+    BatchStepArgs, KvSession, KvView, LaunchPlan, ModelBackend, ModuleRole, PlanError,
+    SessionTicket, StepArgs, StepScratch,
+};
 use crate::config::contract::{FIRST_TOKEN, VOCAB};
-use crate::config::{Contract, ExecMode};
+use crate::config::{Capabilities, Contract, Dims};
 use crate::util::rng::splitmix64;
 use anyhow::Result;
+use std::collections::HashMap;
 use std::time::{Duration, Instant};
 
 /// Number of distinguished candidates per context.
 const TOP_N: usize = 8;
 
+/// Default fused-width bound of the synthetic capabilities table (wide
+/// enough that no default-configured group ever splits).
+pub const DEFAULT_MAX_FUSED_B: usize = 64;
+
+/// Host-side mirror of one bound conversation cache (flat
+/// `[L, cap, H, Dh]`, logical-row indexed).
+struct SimSession {
+    role: ModuleRole,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    rows: usize,
+}
+
+/// Copy rows `[lo, rows)` of `kv` (gather-aware) into the mirror and
+/// record the mirror's new readable length.
+fn sync_rows(
+    sess: &mut SimSession,
+    kv: &KvView,
+    lo: usize,
+    rows: usize,
+    layers: usize,
+    rs: usize,
+    cap: usize,
+) {
+    for r in lo.min(rows)..rows {
+        for l in 0..layers {
+            let src = kv.row_start(layers, rs, l, r);
+            let dst = (l * cap + r) * rs;
+            sess.k[dst..dst + rs].copy_from_slice(&kv.k[src..src + rs]);
+            sess.v[dst..dst + rs].copy_from_slice(&kv.v[src..src + rs]);
+        }
+    }
+    sess.rows = rows;
+}
+
+/// Context hash of one row: fold (position, token) pairs of every
+/// visible column, sorted by position (stable on column order).
+/// `mask_row` is that row's `[cap + s]` mask slice, `tokens` /
+/// `positions` the `s` speculative slots of the row's own request,
+/// `kv` that request's gather-aware cache view (flat, paged, or a
+/// session mirror), and `(layers, rstride)` the role's layer count and
+/// per-row stride. Mask columns are **logical** rows; the paged layout
+/// resolves each open column through the block table
+/// ([`KvView::row_start`]), so any block-table bug changes the hash and
+/// is caught by the flat-vs-paged bit-identity suite.
+#[allow(clippy::too_many_arguments)]
+fn hash_ctx(
+    seen: &mut Vec<(i64, i64)>,
+    cap: usize,
+    mask_row: &[f32],
+    tokens: &[i32],
+    positions: &[i32],
+    kv: &KvView,
+    layers: usize,
+    rstride: usize,
+) -> u64 {
+    let s = tokens.len();
+    debug_assert_eq!(mask_row.len(), cap + s, "mask row width mismatch");
+    seen.clear();
+    // cache columns: token at element 0, position at element 1 of the
+    // layer-0 row (the sim's own KV encoding).
+    for (j, mval) in mask_row.iter().take(cap).enumerate() {
+        if *mval == 0.0 {
+            let off = kv.row_start(layers, rstride, 0, j);
+            let tok = kv.k[off] as i64;
+            let pos = kv.k[off + 1] as i64;
+            seen.push((pos, tok));
+        }
+    }
+    for (j, mval) in mask_row[cap..cap + s].iter().enumerate() {
+        if *mval == 0.0 {
+            seen.push((positions[j] as i64, tokens[j] as i64));
+        }
+    }
+    // positions are unique across visible columns (committed prefix,
+    // tree ancestors and chain slots are all position-distinct), so
+    // the unstable sort is deterministic — and allocation-free, unlike
+    // the stable sort's merge buffer.
+    seen.sort_unstable_by_key(|(p, _)| *p);
+    let mut h = 0x5151_5151u64;
+    for (p, t) in seen.iter() {
+        h = splitmix64(h.wrapping_mul(31) ^ ((*t as u64) << 16) ^ (*p as u64));
+    }
+    h
+}
+
 /// Deterministic simulator backend (see the module docs).
 pub struct SimBackend {
     contract: Contract,
+    caps: Capabilities,
     /// Probability (percent) that the draft's top-1 equals the teacher's.
     pub agree_pct: u64,
     /// Teacher *launches* observed (a fused batched step counts once).
     pub teacher_calls: u64,
     /// Draft launches observed.
     pub draft_calls: u64,
+    /// Modeled host→device bytes shipped (full view per step without a
+    /// session; dirty-delta rows with one — see the module docs).
+    pub upload_bytes: u64,
     /// Simulated per-launch dispatch cost of the teacher module (spin-
     /// waited once per launch, fused or not). Zero (the default) disables
     /// the model.
@@ -100,6 +221,9 @@ pub struct SimBackend {
     /// Reusable (position, token) scratch for context reconstruction —
     /// grows once to the visible-context high-water mark.
     seen: Vec<(i64, i64)>,
+    /// Bound KV-session mirrors, keyed by session id.
+    sessions: HashMap<u64, SimSession>,
+    next_session: u64,
 }
 
 impl SimBackend {
@@ -107,16 +231,21 @@ impl SimBackend {
     /// launch-cost model.
     pub fn new(agree_pct: u64) -> Self {
         let contract = Contract::default();
+        let caps = Capabilities::synthetic(&contract, DEFAULT_MAX_FUSED_B);
         let seen = Vec::with_capacity(contract.cache_cap + 64);
         Self {
             contract,
+            caps,
             agree_pct,
             teacher_calls: 0,
             draft_calls: 0,
+            upload_bytes: 0,
             teacher_launch: Duration::ZERO,
             teacher_row_cost: Duration::ZERO,
             launches_by_width: Vec::new(),
             seen,
+            sessions: HashMap::new(),
+            next_session: 0,
         }
     }
 
@@ -129,6 +258,14 @@ impl SimBackend {
     /// Builder: set the simulated per-live-row teacher compute cost.
     pub fn with_row_cost(mut self, cost: Duration) -> Self {
         self.teacher_row_cost = cost;
+        self
+    }
+
+    /// Builder: bound the synthetic capabilities table to fused widths
+    /// `<= max_b` — the way tests force the verifier's group-splitting
+    /// path on a simulator.
+    pub fn with_max_fused(mut self, max_b: usize) -> Self {
+        self.caps = Capabilities::synthetic(&self.contract, max_b);
         self
     }
 
@@ -150,56 +287,6 @@ impl SimBackend {
         while t0.elapsed() < cost {
             std::hint::spin_loop();
         }
-    }
-
-    /// Context hash of one row: fold (position, token) pairs of every
-    /// visible column, sorted by position (stable on column order).
-    /// `mask_row` is that row's `[cap + s]` mask slice, `tokens` /
-    /// `positions` the `s` speculative slots of the row's own request,
-    /// `kv` that request's gather-aware cache view (flat or paged), and
-    /// `(layers, rstride)` the role's layer count and per-row stride.
-    /// Mask columns are **logical** rows; the paged layout resolves each
-    /// open column through the block table ([`super::KvView::row_start`]),
-    /// so any block-table bug changes the hash and is caught by the
-    /// flat-vs-paged bit-identity suite.
-    fn hash_row(
-        &mut self,
-        mask_row: &[f32],
-        tokens: &[i32],
-        positions: &[i32],
-        kv: &super::KvView,
-        layers: usize,
-        rstride: usize,
-    ) -> u64 {
-        let cap = self.contract.cache_cap;
-        let s = tokens.len();
-        debug_assert_eq!(mask_row.len(), cap + s, "mask row width mismatch");
-        self.seen.clear();
-        // cache columns: token at element 0, position at element 1 of the
-        // layer-0 row (the sim's own KV encoding).
-        for (j, mval) in mask_row.iter().take(cap).enumerate() {
-            if *mval == 0.0 {
-                let off = kv.row_start(layers, rstride, 0, j);
-                let tok = kv.k[off] as i64;
-                let pos = kv.k[off + 1] as i64;
-                self.seen.push((pos, tok));
-            }
-        }
-        for (j, mval) in mask_row[cap..cap + s].iter().enumerate() {
-            if *mval == 0.0 {
-                self.seen.push((positions[j] as i64, tokens[j] as i64));
-            }
-        }
-        // positions are unique across visible columns (committed prefix,
-        // tree ancestors and chain slots are all position-distinct), so
-        // the unstable sort is deterministic — and allocation-free, unlike
-        // the stable sort's merge buffer.
-        self.seen.sort_unstable_by_key(|(p, _)| *p);
-        let mut h = 0x5151_5151u64;
-        for (p, t) in &self.seen {
-            h = splitmix64(h.wrapping_mul(31) ^ ((*t as u64) << 16) ^ (*p as u64));
-        }
-        h
     }
 
     /// Deterministic candidate list for a context.
@@ -248,8 +335,8 @@ impl SimBackend {
         }
     }
 
-    fn write_probe(&self, args: &StepArgs, heads: usize, out: &mut StepScratch) {
-        if !args.probe {
+    fn write_probe(&self, args: &StepArgs, heads: usize, probe: bool, out: &mut StepScratch) {
+        if !probe {
             return;
         }
         let cap = self.contract.cache_cap;
@@ -267,40 +354,99 @@ impl SimBackend {
         }
     }
 
-    fn step(&mut self, args: StepArgs, teacher: bool, out: &mut StepScratch) -> Result<()> {
+    /// Sync the ticketed session (if any) from the step's cache view and
+    /// return the modeled host→device cache transfer of this step: the
+    /// dirty-delta rows with a session, the full `[L, cap, H, Dh]` pair
+    /// without one.
+    fn sync_from_ticket(
+        &mut self,
+        ticket: Option<SessionTicket>,
+        kv: &KvView,
+        expect_role: ModuleRole,
+        dims: Dims,
+    ) -> Result<u64> {
+        let cap = self.contract.cache_cap;
+        let rs = dims.heads * dims.d_head;
+        let Some(t) = ticket else {
+            return Ok((2 * dims.cache_elems(cap) * 4) as u64);
+        };
+        let sess =
+            self.sessions.get_mut(&t.id).ok_or(PlanError::UnknownSession { id: t.id })?;
+        if sess.role != expect_role {
+            return Err(
+                PlanError::RoleMismatch { bound: sess.role, requested: expect_role }.into()
+            );
+        }
+        let range = t.sync_range();
+        let delta = range.len();
+        sync_rows(sess, kv, range.start, t.rows, dims.layers, rs, cap);
+        Ok((delta * 2 * dims.layers * rs * 4) as u64)
+    }
+
+    /// Resolve the cache view a step's context reads go through: the
+    /// session mirror when the step is ticketed, else the caller's view.
+    fn read_view<'a>(
+        sessions: &'a HashMap<u64, SimSession>,
+        ticket: Option<SessionTicket>,
+        fallback: KvView<'a>,
+        cap: usize,
+    ) -> KvView<'a> {
+        match ticket.and_then(|t| sessions.get(&t.id)) {
+            Some(sess) => KvView::flat(&sess.k, &sess.v, cap),
+            None => fallback,
+        }
+    }
+
+    fn step(
+        &mut self,
+        plan: &LaunchPlan,
+        args: StepArgs,
+        teacher: bool,
+        out: &mut StepScratch,
+    ) -> Result<()> {
         let s = args.tokens.len();
         let v = self.contract.vocab;
         let d = if teacher { self.contract.teacher } else { self.contract.draft };
-        out.prepare(s, v, self.contract.feat_dim, d.layers, d.heads, d.d_head, args.probe);
+        let probe = plan.key.probe && args.probe;
+        out.prepare(s, v, self.contract.feat_dim, d.layers, d.heads, d.d_head, probe);
         let rstride = d.heads * d.d_head;
-        let w = self.contract.cache_cap + s;
-        for i in 0..s {
-            let ctx = self.hash_row(
-                &args.mask[i * w..(i + 1) * w],
-                args.tokens,
-                args.positions,
-                &args.kv,
-                d.layers,
-                rstride,
-            );
-            let cands = if teacher {
-                Self::candidates(ctx)
-            } else if splitmix64(ctx ^ 0xD15A_6EE2) % 100 < self.agree_pct {
-                // Deterministic agreement coin per context: an agreeing
-                // draft proposes the teacher's own candidate list; a
-                // disagreeing one proposes an unrelated list (a *bad*
-                // draft — merely swapping the top-2 would be rescued by
-                // the tree's top-k children, which is exactly the point
-                // of tree speculation).
-                Self::candidates(ctx)
-            } else {
-                Self::candidates(splitmix64(ctx ^ 0xBAD_D4AF7))
-            };
-            Self::write_logits(out.logits_row_mut(i), &cands);
+        let cap = self.contract.cache_cap;
+        let w = cap + s;
+        let agree = self.agree_pct;
+        let mut seen = std::mem::take(&mut self.seen);
+        {
+            let kv = Self::read_view(&self.sessions, args.session, args.kv, cap);
+            for i in 0..s {
+                let ctx = hash_ctx(
+                    &mut seen,
+                    cap,
+                    &args.mask[i * w..(i + 1) * w],
+                    args.tokens,
+                    args.positions,
+                    &kv,
+                    d.layers,
+                    rstride,
+                );
+                let cands = if teacher {
+                    Self::candidates(ctx)
+                } else if splitmix64(ctx ^ 0xD15A_6EE2) % 100 < agree {
+                    // Deterministic agreement coin per context: an agreeing
+                    // draft proposes the teacher's own candidate list; a
+                    // disagreeing one proposes an unrelated list (a *bad*
+                    // draft — merely swapping the top-2 would be rescued by
+                    // the tree's top-k children, which is exactly the point
+                    // of tree speculation).
+                    Self::candidates(ctx)
+                } else {
+                    Self::candidates(splitmix64(ctx ^ 0xBAD_D4AF7))
+                };
+                Self::write_logits(out.logits_row_mut(i), &cands);
+            }
         }
+        self.seen = seen;
         self.write_feats(&args, out);
         Self::write_kv(&args, d.layers, d.heads * d.d_head, &mut out.k_new, &mut out.v_new);
-        self.write_probe(&args, d.heads, out);
+        self.write_probe(&args, d.heads, probe, out);
         Ok(())
     }
 }
@@ -310,60 +456,82 @@ impl ModelBackend for SimBackend {
         &self.contract
     }
 
-    fn teacher_step(&mut self, _mode: ExecMode, args: StepArgs, out: &mut StepScratch)
-        -> Result<()> {
-        self.record_launch(1, args.tokens.len());
-        self.step(args, true, out)
+    fn capabilities(&self) -> &Capabilities {
+        &self.caps
     }
 
-    fn draft_step(&mut self, args: StepArgs, out: &mut StepScratch) -> Result<()> {
-        self.draft_calls += 1;
-        self.step(args, false, out)
+    fn execute(&mut self, plan: &LaunchPlan, args: StepArgs, out: &mut StepScratch) -> Result<()> {
+        let teacher = plan.key.role == ModuleRole::Teacher;
+        let s = args.tokens.len();
+        let d = if teacher { self.contract.teacher } else { self.contract.draft };
+        if teacher {
+            self.record_launch(1, s);
+        } else {
+            self.draft_calls += 1;
+        }
+        let small = (s * 8 + args.mask.len() * 4 + args.feats_in.map_or(0, |f| f.len() * 4))
+            as u64;
+        let role = plan.key.role;
+        let cache = self.sync_from_ticket(args.session, &args.kv, role, d)?;
+        self.upload_bytes += small + cache;
+        self.step(plan, args, teacher, out)
     }
 
     /// True fused implementation: one pass, one launch counted, one
     /// launch-cost charge. Live rows are bit-identical to sequential
-    /// [`ModelBackend::teacher_step`] calls; padding rows (`i >= live`)
-    /// are skipped and left backend-defined (never read back by
-    /// contract).
-    fn teacher_step_batch(
+    /// single-request steps; padding rows (`i >= live`) are skipped and
+    /// left backend-defined (never read back by contract).
+    fn execute_batch(
         &mut self,
-        _mode: ExecMode,
+        plan: &LaunchPlan,
         args: BatchStepArgs,
         out: &mut StepScratch,
     ) -> Result<()> {
         let b = args.reqs.len();
-        // a real fused [B, S_max] launch computes every padded row, not
-        // just the live ones — charge what the hardware would charge, so
-        // ragged mixed-budget groups don't look cheaper than they are
-        self.record_launch(b, b * args.s_max);
+        // a real fused [B, S] launch computes every padded row of the
+        // *compiled* variant, not just the live ones — charge what the
+        // hardware would charge, so ragged mixed-budget groups don't
+        // look cheaper than they are
+        self.record_launch(b, plan.padded_rows());
         let s = args.s_max;
         let cap = self.contract.cache_cap;
         let w = cap + s;
         let d = self.contract.teacher;
         let f = self.contract.feat_dim;
         let rs = d.heads * d.d_head;
+        // transfer model: per-call tensors once, each request's cache by
+        // its own session state (padding requests have no session and an
+        // empty view — a real padded launch still ships a full-size zero
+        // cache block for them)
+        let mut upload = (args.tokens.len() * 8 + args.mask.len() * 4) as u64;
+        for req in args.reqs.iter() {
+            upload += self.sync_from_ticket(req.session, &req.kv, ModuleRole::Teacher, d)?;
+        }
+        self.upload_bytes += upload;
         out.prepare_batch(b, s, self.contract.vocab, f, d.layers, d.heads, d.d_head, false);
         debug_assert_eq!(args.tokens.len(), b * s, "fused tokens length");
         debug_assert_eq!(args.positions.len(), b * s, "fused positions length");
         debug_assert_eq!(args.mask.len(), b * s * w, "fused mask length");
         let rows = b * s;
+        let mut seen = std::mem::take(&mut self.seen);
         for (bi, req) in args.reqs.iter().enumerate() {
             let base = bi * s;
+            let kv = Self::read_view(&self.sessions, req.session, req.kv, cap);
             for i in 0..req.live.min(s) {
                 let row = base + i;
-                let ctx = self.hash_row(
+                let ctx = hash_ctx(
+                    &mut seen,
+                    cap,
                     &args.mask[row * w..(row + 1) * w],
                     &args.tokens[base..base + s],
                     &args.positions[base..base + s],
-                    &req.kv,
+                    &kv,
                     d.layers,
                     rs,
                 );
                 let cands = Self::candidates(ctx);
                 Self::write_logits(out.logits_row_mut(row), &cands);
-                let (tok, pos) =
-                    (args.tokens[row] as f32, args.positions[row] as f32);
+                let (tok, pos) = (args.tokens[row] as f32, args.positions[row] as f32);
                 let fr = out.feat_row_mut(row);
                 fr.fill(0.0);
                 fr[0] = tok;
@@ -379,7 +547,55 @@ impl ModelBackend for SimBackend {
                 }
             }
         }
+        self.seen = seen;
         Ok(())
+    }
+
+    fn bind_kv(
+        &mut self,
+        role: ModuleRole,
+        view: KvView,
+        rows: usize,
+    ) -> Result<KvSession, PlanError> {
+        let d = match role {
+            ModuleRole::Teacher => self.contract.teacher,
+            ModuleRole::Draft => self.contract.draft,
+        };
+        let cap = self.contract.cache_cap;
+        let rs = d.heads * d.d_head;
+        let n = d.cache_elems(cap);
+        let mut sess = SimSession { role, k: vec![0.0; n], v: vec![0.0; n], rows: 0 };
+        sync_rows(&mut sess, &view, 0, rows, d.layers, rs, cap);
+        self.upload_bytes += (rows * 2 * d.layers * rs * 4) as u64;
+        let id = self.next_session;
+        self.next_session += 1;
+        self.sessions.insert(id, sess);
+        Ok(KvSession { id, role })
+    }
+
+    fn rebind_kv(
+        &mut self,
+        session: &KvSession,
+        view: KvView,
+        rows: usize,
+    ) -> Result<(), PlanError> {
+        let d = match session.role {
+            ModuleRole::Teacher => self.contract.teacher,
+            ModuleRole::Draft => self.contract.draft,
+        };
+        let cap = self.contract.cache_cap;
+        let rs = d.heads * d.d_head;
+        let sess = self
+            .sessions
+            .get_mut(&session.id)
+            .ok_or(PlanError::UnknownSession { id: session.id })?;
+        sync_rows(sess, &view, 0, rows, d.layers, rs, cap);
+        self.upload_bytes += (rows * 2 * d.layers * rs * 4) as u64;
+        Ok(())
+    }
+
+    fn unbind_kv(&mut self, session: KvSession) {
+        self.sessions.remove(&session.id);
     }
 
     fn name(&self) -> &'static str {
@@ -392,6 +608,7 @@ mod tests {
     use super::*;
     use crate::backend::{argmax, BatchRequest, KvView};
     use crate::config::contract::{CACHE_CAP, NEG_INF};
+    use crate::config::ExecMode;
 
     fn empty_cache(c: &Contract) -> (Vec<f32>, Vec<f32>) {
         let n = c.teacher.cache_elems(c.cache_cap);
@@ -423,6 +640,7 @@ mod tests {
             b.teacher_step(mode, StepArgs {
                 tokens: &tokens, positions: &pos, mask: &mask,
                 kv: KvView::flat(&k, &v, CACHE_CAP), feats_in: None, probe: false,
+                session: None,
             }, &mut out)
             .unwrap();
             out
@@ -450,6 +668,7 @@ mod tests {
             b.teacher_step(ExecMode::Fused, StepArgs {
                 tokens: &tokens, positions: &pos, mask: &mask,
                 kv: KvView::flat(&k, &v, CACHE_CAP), feats_in: None, probe: false,
+                session: None,
             }, &mut out)
             .unwrap();
             out.logits_row(1).to_vec()
@@ -469,6 +688,7 @@ mod tests {
         let args = || StepArgs {
             tokens: &tokens, positions: &pos, mask: &mask,
             kv: KvView::flat(&k, &v, CACHE_CAP), feats_in: None, probe: false,
+            session: None,
         };
         let mut to = StepScratch::new();
         t.teacher_step(ExecMode::Fused, args(), &mut to).unwrap();
@@ -501,6 +721,7 @@ mod tests {
         b.teacher_step(ExecMode::Fused, StepArgs {
             tokens: &tokens, positions: &pos, mask: &mask,
             kv: KvView::flat(&k, &v, CACHE_CAP), feats_in: None, probe: false,
+            session: None,
         }, &mut out)
         .unwrap();
         let rs = b.contract().teacher.heads * b.contract().teacher.d_head;
@@ -521,6 +742,7 @@ mod tests {
         b.draft_step(StepArgs {
             tokens: &tokens, positions: &pos, mask: &mask,
             kv: KvView::flat(&k, &v, CACHE_CAP), feats_in: None, probe: true,
+            session: None,
         }, &mut out)
         .unwrap();
         let top1 = out.attn_top1().unwrap();
@@ -540,6 +762,7 @@ mod tests {
             b.teacher_step(ExecMode::Fused, StepArgs {
                 tokens: &tokens, positions: &pos, mask: &mask,
                 kv: KvView::flat(&k, &v, CACHE_CAP), feats_in: None, probe: false,
+                session: None,
             }, &mut out)
             .unwrap();
         }
@@ -585,11 +808,13 @@ mod tests {
         seq.teacher_step(ExecMode::Fused, StepArgs {
             tokens: &tok0, positions: &pos0, mask: &mask0,
             kv: KvView::flat(&k0, &v0, CACHE_CAP), feats_in: None, probe: false,
+            session: None,
         }, &mut out0).unwrap();
         let mut out1 = StepScratch::new();
         seq.teacher_step(ExecMode::Fused, StepArgs {
             tokens: &tok1, positions: &pos1, mask: &mask1,
             kv: KvView::flat(&k1, &v1, CACHE_CAP), feats_in: None, probe: false,
+            session: None,
         }, &mut out1).unwrap();
         assert_eq!(seq.teacher_calls, 2);
 
@@ -606,8 +831,8 @@ mod tests {
         mask[..s * w].copy_from_slice(&mask0);
         mask[s * w..].copy_from_slice(&mask1);
         let reqs = [
-            BatchRequest { kv: KvView::flat(&k0, &v0, CACHE_CAP), live: 8 },
-            BatchRequest { kv: KvView::flat(&k1, &v1, CACHE_CAP), live: 8 },
+            BatchRequest { kv: KvView::flat(&k0, &v0, CACHE_CAP), live: 8, session: None },
+            BatchRequest { kv: KvView::flat(&k1, &v1, CACHE_CAP), live: 8, session: None },
         ];
         let mut fused_b = SimBackend::new(100);
         let mut fused = StepScratch::new();
@@ -642,6 +867,7 @@ mod tests {
         b.teacher_step(ExecMode::Fused, StepArgs {
             tokens: &tokens, positions: &pos, mask: &mask,
             kv: KvView::flat(&k, &v, CACHE_CAP), feats_in: None, probe: false,
+            session: None,
         }, &mut out)
         .unwrap();
         // 8 padded rows at 50us each
@@ -660,8 +886,8 @@ mod tests {
         p2[..8].copy_from_slice(&pos);
         p2[8..].copy_from_slice(&pos);
         let reqs = [
-            BatchRequest { kv: KvView::flat(&k, &v, CACHE_CAP), live: 2 },
-            BatchRequest { kv: KvView::flat(&k, &v, CACHE_CAP), live: 2 },
+            BatchRequest { kv: KvView::flat(&k, &v, CACHE_CAP), live: 2, session: None },
+            BatchRequest { kv: KvView::flat(&k, &v, CACHE_CAP), live: 2, session: None },
         ];
         let mut fused = StepScratch::new();
         b.teacher_step_batch(ExecMode::Fused, BatchStepArgs {
@@ -685,6 +911,7 @@ mod tests {
         b.teacher_step(ExecMode::Fused, StepArgs {
             tokens: &tokens, positions: &pos, mask: &mask,
             kv: KvView::flat(&k, &v, CACHE_CAP), feats_in: None, probe: false,
+            session: None,
         }, &mut out)
         .unwrap();
         assert!(t0.elapsed() >= cost, "launch cost must be spent");
@@ -695,8 +922,117 @@ mod tests {
         b.draft_step(StepArgs {
             tokens: &tokens, positions: &pos, mask: &mask,
             kv: KvView::flat(&k, &v, CACHE_CAP), feats_in: Some(&feats), probe: false,
+            session: None,
         }, &mut out)
         .unwrap();
         assert!(t1.elapsed() < cost, "draft must not pay the teacher launch cost");
+    }
+
+    /// A ticketed step reading through a bound session mirror is
+    /// bit-identical to the same step reading the live view, and the
+    /// modeled upload drops from cap-scaled to delta-scaled.
+    #[test]
+    fn session_step_matches_full_view_and_shrinks_upload() {
+        let contract = Contract::default();
+        let rs = contract.teacher.heads * contract.teacher.d_head;
+        let n = contract.teacher.cache_elems(contract.cache_cap);
+        let mut k = vec![0.0f32; n];
+        let mut v = vec![0.0f32; n];
+        for row in 0..6 {
+            k[row * rs] = (20 + row) as f32;
+            k[row * rs + 1] = row as f32;
+            v[row * rs] = (20 + row) as f32;
+            v[row * rs + 1] = row as f32;
+        }
+        let mask = chain_mask(8, 2, 6);
+        let tokens = [3i32, 4, 0, 0, 0, 0, 0, 0];
+        let pos = [6i32, 7, 0, 0, 0, 0, 0, 0];
+
+        let mut plain = SimBackend::new(100);
+        let mut out_plain = StepScratch::new();
+        plain.teacher_step(ExecMode::Fused, StepArgs {
+            tokens: &tokens, positions: &pos, mask: &mask,
+            kv: KvView::flat(&k, &v, CACHE_CAP), feats_in: None, probe: false,
+            session: None,
+        }, &mut out_plain)
+        .unwrap();
+        let full_upload = plain.upload_bytes;
+
+        let mut sess_b = SimBackend::new(100);
+        let sess = sess_b
+            .bind_kv(ModuleRole::Teacher, KvView::flat(&k, &v, CACHE_CAP), 6)
+            .unwrap();
+        let bind_upload = sess_b.upload_bytes;
+        let mut out_sess = StepScratch::new();
+        sess_b.teacher_step(ExecMode::Fused, StepArgs {
+            tokens: &tokens, positions: &pos, mask: &mask,
+            kv: KvView::flat(&k, &v, CACHE_CAP), feats_in: None, probe: false,
+            session: Some(SessionTicket { id: sess.id, dirty_lo: usize::MAX, rows: 6 }),
+        }, &mut out_sess)
+        .unwrap();
+        assert_eq!(out_sess.logits, out_plain.logits, "mirror context diverged");
+        let step_upload = sess_b.upload_bytes - bind_upload;
+        assert!(
+            step_upload * 4 < full_upload,
+            "clean-session step must upload far less than a full view: \
+             {step_upload} vs {full_upload}"
+        );
+        sess_b.unbind_kv(sess);
+        // a dangling ticket fails typed
+        let err = sess_b
+            .teacher_step(ExecMode::Fused, StepArgs {
+                tokens: &tokens, positions: &pos, mask: &mask,
+                kv: KvView::flat(&k, &v, CACHE_CAP), feats_in: None, probe: false,
+                session: Some(SessionTicket { id: 99, dirty_lo: 0, rows: 6 }),
+            }, &mut out_sess)
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("unknown KV session"), "{err:#}");
+    }
+
+    /// A stale mirror row must change the context hash until the dirty
+    /// watermark re-syncs it — the property the engine's watermark
+    /// plumbing is tested against.
+    #[test]
+    fn session_dirty_watermark_resyncs_changed_rows() {
+        let contract = Contract::default();
+        let rs = contract.teacher.heads * contract.teacher.d_head;
+        let n = contract.teacher.cache_elems(contract.cache_cap);
+        let mut k = vec![0.0f32; n];
+        let mut v = vec![0.0f32; n];
+        k[0] = 7.0; // token of committed row 0
+        v[0] = 7.0;
+        let mask = chain_mask(8, 1, 1);
+        let tokens = [3i32, 0, 0, 0, 0, 0, 0, 0];
+        let pos = [1i32, 0, 0, 0, 0, 0, 0, 0];
+        let mut b = SimBackend::new(100);
+        let sess = b.bind_kv(ModuleRole::Teacher, KvView::flat(&k, &v, CACHE_CAP), 1).unwrap();
+        let run = |b: &mut SimBackend, k: &[f32], v: &[f32], dirty_lo: usize| {
+            let mut out = StepScratch::new();
+            b.teacher_step(ExecMode::Fused, StepArgs {
+                tokens: &tokens, positions: &pos, mask: &mask,
+                kv: KvView::flat(k, v, CACHE_CAP), feats_in: None, probe: false,
+                session: Some(SessionTicket { id: sess.id, dirty_lo, rows: 1 }),
+            }, &mut out)
+            .unwrap();
+            out.logits_row(0).to_vec()
+        };
+        let before = run(&mut b, &k, &v, usize::MAX);
+        // mutate the committed row host-side; a clean ticket keeps the
+        // stale mirror, a dirty one re-syncs
+        k[0] = 9.0;
+        let stale = run(&mut b, &k, &v, usize::MAX);
+        assert_eq!(stale, before, "clean ticket must read the mirror, not the live view");
+        let synced = run(&mut b, &k, &v, 0);
+        assert_ne!(synced, before, "dirty ticket must re-sync the changed row");
+    }
+
+    #[test]
+    fn capped_fused_width_reports_split() {
+        let b = SimBackend::new(100).with_max_fused(2);
+        use crate::backend::{ModuleLayout, PlanRequest};
+        let err = b
+            .plan_step(&PlanRequest::teacher_batch(ExecMode::Fused, 8, 4, ModuleLayout::Flat))
+            .unwrap_err();
+        assert_eq!(err, PlanError::SplitRequired { batch: 4, max_batch: 2 });
     }
 }

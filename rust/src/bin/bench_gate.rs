@@ -27,6 +27,11 @@
 //!   show `paged <= flat` at B in {4, 8} (the cross-layout rule: paging
 //!   must never cost more memory than the pinned flat buffers it
 //!   replaces);
+//! * KV-session upload (`upload.session_on_*_upload_bytes_per_token`):
+//!   deterministic bytes; gated `<= 1.15 * baseline`, and — when the
+//!   baseline pins an `upload` section — the *current* file must show
+//!   session-on `<= 0.25x` session-off at B = 4 (the resident-session
+//!   path must keep shipping deltas, not caches);
 //! * a metric present in the baseline but missing from the current file
 //!   fails (dropping a gated metric is a coverage regression).
 //!
@@ -89,6 +94,12 @@ fn rule_for(leaf: &str) -> Option<Rule> {
         // flat_* entries are the comparator for the cross-layout rule,
         // not gated against the baseline themselves (pinned buffers are
         // a constant of the contract geometry).
+        return Some(Rule::Memory);
+    }
+    if leaf.starts_with("session_on_") && leaf.ends_with("_upload_bytes_per_token") {
+        // session_off_* entries are the comparator for the 0.25x cross
+        // rule, not gated themselves (full upload is a constant of the
+        // contract geometry).
         return Some(Rule::Memory);
     }
     None
@@ -166,11 +177,47 @@ fn gate_kv_cross(baseline: &Json, current: &Json, out: &mut Vec<Finding>) {
     }
 }
 
+/// KV-session upload rule, read from the *current* file (both numbers
+/// come from the same deterministic bench section): at B >= 4 the
+/// resident-session path must ship at most [`UPLOAD_RATIO`] of the
+/// full-upload path's bytes per token — otherwise sessions stopped
+/// paying for themselves. Applied only when the baseline pins an
+/// `upload` section (baseline defines the contract).
+fn gate_upload_cross(baseline: &Json, current: &Json, out: &mut Vec<Finding>) {
+    if baseline.get("upload").is_none() {
+        return;
+    }
+    let cur = current.get("upload");
+    let path = "upload.session_on_vs_off_b4".to_string();
+    let on = cur
+        .and_then(|u| u.get("session_on_b4_upload_bytes_per_token"))
+        .and_then(Json::as_f64);
+    let off = cur
+        .and_then(|u| u.get("session_off_b4_upload_bytes_per_token"))
+        .and_then(Json::as_f64);
+    let (ok, detail) = match (on, off) {
+        (Some(on), Some(off)) => (
+            on <= UPLOAD_RATIO * off,
+            format!(
+                "session-on {on:.0} B/tok vs session-off {off:.0} B/tok at B=4 \
+                 (ceiling {:.0})",
+                UPLOAD_RATIO * off
+            ),
+        ),
+        _ => (false, "upload entries missing from current output at B=4".to_string()),
+    };
+    out.push(Finding { path, ok, detail });
+}
+
+/// Resident-session upload budget: session-on <= 0.25x session-off.
+const UPLOAD_RATIO: f64 = 0.25;
+
 /// Run the gate over two parsed bench files; returns the findings.
 fn run_gate(baseline: &Json, current: &Json, tol: f64) -> Vec<Finding> {
     let mut out = Vec::new();
     gate(baseline, current, tol, "", &mut out);
     gate_kv_cross(baseline, current, &mut out);
+    gate_upload_cross(baseline, current, &mut out);
     out
 }
 
@@ -327,6 +374,46 @@ mod tests {
             !findings.iter().any(|f| f.path == "kv_resident.flat_b4_kv_bytes_resident"),
             "flat residency must not be baseline-gated"
         );
+    }
+
+    #[test]
+    fn session_upload_must_stay_below_quarter_of_full() {
+        let mut up = Json::obj();
+        up.push("session_on_b1_upload_bytes_per_token", 100_000.0)
+            .push("session_off_b1_upload_bytes_per_token", 3_000_000.0)
+            .push("session_on_b4_upload_bytes_per_token", 100_000.0)
+            .push("session_off_b4_upload_bytes_per_token", 3_000_000.0);
+        let mut base = bench_json(1000.0, 2000.0, 1.3, 100.0);
+        base.push("upload", up.clone());
+        let mut good = bench_json(1000.0, 2000.0, 1.3, 100.0);
+        good.push("upload", up);
+        let findings = run_gate(&base, &good, 0.85);
+        let f = findings.iter().find(|f| f.path == "upload.session_on_vs_off_b4").unwrap();
+        assert!(f.ok, "{}", f.detail);
+        // session_on entries are baseline-gated (deterministic bytes);
+        // session_off is the comparator, never gated per-leaf
+        assert!(findings
+            .iter()
+            .any(|f| f.path == "upload.session_on_b4_upload_bytes_per_token"));
+        assert!(!findings
+            .iter()
+            .any(|f| f.path == "upload.session_off_b4_upload_bytes_per_token"));
+        // a run where the session path regressed to 0.5x full fails
+        let mut bad_up = Json::obj();
+        bad_up
+            .push("session_on_b1_upload_bytes_per_token", 100_000.0)
+            .push("session_off_b1_upload_bytes_per_token", 3_000_000.0)
+            .push("session_on_b4_upload_bytes_per_token", 1_500_000.0)
+            .push("session_off_b4_upload_bytes_per_token", 3_000_000.0);
+        let mut bad = bench_json(1000.0, 2000.0, 1.3, 100.0);
+        bad.push("upload", bad_up);
+        let findings = run_gate(&base, &bad, 0.85);
+        let f = findings.iter().find(|f| f.path == "upload.session_on_vs_off_b4").unwrap();
+        assert!(!f.ok, "0.5x of full upload must fail the 0.25x rule");
+        // a legacy baseline without an upload section skips the rule
+        let legacy = bench_json(1000.0, 2000.0, 1.3, 100.0);
+        let findings = run_gate(&legacy, &good, 0.85);
+        assert!(!findings.iter().any(|f| f.path.starts_with("upload.")));
     }
 
     #[test]

@@ -81,6 +81,10 @@ pub struct ManagedCache {
     /// so the steady-state round performs no heap allocation.
     gather_k: Vec<f32>,
     gather_v: Vec<f32>,
+    /// KV-session dirty watermark: first readable row whose contents may
+    /// have changed since `mark_synced` (`usize::MAX` = clean). Every
+    /// mutation lowers it conservatively via [`ManagedCache::taint`].
+    dirty_lo: usize,
     /// Movement/commit counters (§3.1 ablations; reset with the cache).
     pub stats: CacheStats,
 }
@@ -103,8 +107,16 @@ impl ManagedCache {
             branch_open: false,
             gather_k: Vec::new(),
             gather_v: Vec::new(),
+            dirty_lo: 0,
             stats: CacheStats::default(),
         }
+    }
+
+    /// Lower the session dirty watermark to `row`: a mutation may have
+    /// changed readable contents at or after it.
+    #[inline]
+    fn taint(&mut self, row: usize) {
+        self.dirty_lo = self.dirty_lo.min(row);
     }
 
     /// Committed sequence length `t`.
@@ -143,6 +155,7 @@ impl ManagedCache {
     /// below). Truncation never allocates, so engine reuse stays
     /// allocation-free.
     pub fn reset(&mut self) {
+        self.taint(0);
         self.len = 0;
         self.branch_rows = 0;
         self.branch_open = false;
@@ -213,6 +226,7 @@ impl ManagedCache {
             bail!("cache overflow: len {} + {count} > cap {}", self.len, self.cap);
         }
         let at = self.len;
+        self.taint(at);
         copy_rows_seq(&mut self.k, k_rows, self.dims, self.cap, s, at, count);
         copy_rows_seq(&mut self.v, v_rows, self.dims, self.cap, s, at, count);
         self.len += count;
@@ -254,6 +268,7 @@ impl ManagedCache {
         if at + count > self.cap {
             bail!("branch overflow: {} + {count} > cap {}", at, self.cap);
         }
+        self.taint(at);
         let dims = self.dims;
         let cap = self.cap;
         let (kbuf, vbuf) = match (&mut self.branch_k, &mut self.branch_v) {
@@ -280,6 +295,7 @@ impl ManagedCache {
     /// finished with the draft-side cache).
     pub fn rollback(&mut self) {
         if self.branch_open {
+            self.taint(self.len);
             self.branch_open = false;
             self.branch_rows = 0;
             self.branch_k = None;
@@ -296,6 +312,7 @@ impl ManagedCache {
         if a > self.branch_rows {
             bail!("commit_length: a = {a} > branch rows {}", self.branch_rows);
         }
+        self.taint(self.len);
         match self.strategy {
             CacheStrategy::SegmentShare => {
                 // Rows already sit at [len, len+a) in the main buffers —
@@ -344,6 +361,14 @@ impl ManagedCache {
         }
         let prefix_preserved =
             path_indices.len() >= self.len && (0..self.len).all(|i| path_indices[i] == i);
+
+        // session watermark: a prefix-preserving commit rewrites only the
+        // tail; the general gather may rebuild the whole sequence
+        if self.fast_reorder && prefix_preserved {
+            self.taint(self.len);
+        } else {
+            self.taint(0);
+        }
 
         if self.fast_reorder && prefix_preserved {
             self.commit_path_fast(path_indices)?;
@@ -439,6 +464,7 @@ impl ManagedCache {
         let ls = self.lstride();
         let dims = self.dims;
         let len = self.len;
+        self.taint(len);
         let mut moved_rows = 0usize;
         match (&self.branch_k, &self.branch_v) {
             (Some(bk), Some(bv)) => {
@@ -624,6 +650,14 @@ impl KvStore for ManagedCache {
         let branch = self.branch_k.as_ref().map_or(0, Vec::len)
             + self.branch_v.as_ref().map_or(0, Vec::len);
         ((self.k.len() + self.v.len() + branch) * 4) as u64
+    }
+
+    fn dirty_lo(&self) -> usize {
+        self.dirty_lo
+    }
+
+    fn mark_synced(&mut self) {
+        self.dirty_lo = usize::MAX;
     }
 }
 

@@ -126,6 +126,26 @@ pub trait KvStore {
     /// a DeepCopy replica is open, else the main state).
     fn kv_guard(&self) -> KvGuard<'_>;
 
+    /// Rows readable through [`KvStore::kv_guard`]: committed prefix plus
+    /// open-branch rows. Session tickets carry this as the mirror length.
+    fn view_rows(&self) -> usize {
+        self.len() + self.branch_rows()
+    }
+
+    /// First readable row whose *contents* may have changed since
+    /// [`KvStore::mark_synced`] (`usize::MAX` when nothing changed) — the
+    /// dirty watermark backing device-resident KV sessions: a bound
+    /// backend re-syncs only rows `[dirty_lo, view_rows)` per step
+    /// instead of re-uploading the whole cache. Implementations must be
+    /// conservative (taint at or below the lowest row a mutation could
+    /// have touched); staleness here is a correctness bug the
+    /// session-vs-full-view bit-identity suite exists to catch.
+    fn dirty_lo(&self) -> usize;
+
+    /// Declare the current readable state synced (a ticketed backend
+    /// step consumed the watermark). Clears [`KvStore::dirty_lo`].
+    fn mark_synced(&mut self);
+
     /// Copy of committed row `row` (`[L * H * Dh]`, k side) — tests and
     /// checksums.
     fn committed_row_k(&self, row: usize) -> Vec<f32>;

@@ -216,6 +216,12 @@ pub struct PagedCache {
     /// scratch-free).
     gather_k: Vec<f32>,
     gather_v: Vec<f32>,
+    /// KV-session dirty watermark: first readable *logical* row whose
+    /// contents may have changed since `mark_synced` (`usize::MAX` =
+    /// clean). Logical-row indexed — block remaps that preserve logical
+    /// content (table pushes) still taint conservatively at the commit
+    /// base, like the flat manager.
+    dirty_lo: usize,
     /// Movement/commit counters (same schema as the flat manager; byte
     /// counts reflect rows *actually moved*, which paging makes fewer).
     pub stats: CacheStats,
@@ -250,8 +256,16 @@ impl PagedCache {
             branch_open: false,
             gather_k: Vec::new(),
             gather_v: Vec::new(),
+            dirty_lo: 0,
             stats: CacheStats::default(),
         }
+    }
+
+    /// Lower the session dirty watermark to `row` (a mutation may have
+    /// changed readable contents at or after it).
+    #[inline]
+    fn taint(&mut self, row: usize) {
+        self.dirty_lo = self.dirty_lo.min(row);
     }
 
     /// Blocks this cache currently maps (main table + branch replica) —
@@ -422,6 +436,7 @@ impl KvStore for PagedCache {
     }
 
     fn reset(&mut self) {
+        self.taint(0);
         self.drop_replica();
         self.trim_table(0);
         self.len = 0;
@@ -445,6 +460,7 @@ impl KvStore for PagedCache {
             bail!("cache overflow: len {} + {count} > cap {}", self.len, self.cap);
         }
         let at = self.len;
+        self.taint(at);
         self.write_rows(false, at, k_rows, v_rows, s, count);
         self.len += count;
         self.stats.append_bytes += (2 * count * self.rstride() * self.dims.layers * 4) as u64;
@@ -487,6 +503,7 @@ impl KvStore for PagedCache {
         if at + count > self.cap {
             bail!("branch overflow: {at} + {count} > cap {}", self.cap);
         }
+        self.taint(at);
         let into_replica = self.replica.is_some();
         self.write_rows(into_replica, at, k_rows, v_rows, s, count);
         self.branch_rows += count;
@@ -496,6 +513,7 @@ impl KvStore for PagedCache {
 
     fn rollback(&mut self) {
         if self.branch_open {
+            self.taint(self.len);
             self.close_branch();
             // SegmentShare spec rows may have grown the main table past
             // the committed boundary — give those blocks back.
@@ -512,6 +530,7 @@ impl KvStore for PagedCache {
         if a > self.branch_rows {
             bail!("commit_length: a = {a} > branch rows {}", self.branch_rows);
         }
+        self.taint(self.len);
         if let Some(rep) = self.replica.take() {
             // DeepCopy: adopt rows [len, len+a) from the replica. Whole
             // blocks past the committed boundary are *remapped* (the
@@ -581,6 +600,13 @@ impl KvStore for PagedCache {
         }
         let prefix_preserved =
             path_indices.len() >= self.len && (0..self.len).all(|i| path_indices[i] == i);
+        // session watermark: a prefix-preserving commit rewrites only the
+        // tail; the general gather may rebuild the whole sequence
+        if self.fast_reorder && prefix_preserved {
+            self.taint(self.len);
+        } else {
+            self.taint(0);
+        }
         if self.fast_reorder && prefix_preserved {
             // Gather only the accepted tail (arbitrary view indices are
             // allowed here, unlike the strictly-increasing tail commit).
@@ -631,6 +657,7 @@ impl KvStore for PagedCache {
             prev = Some(o);
         }
         let len = self.len;
+        self.taint(len);
         let layers = self.dims.layers;
         let mut moved_rows = 0usize;
         match self.replica.take() {
@@ -721,6 +748,14 @@ impl KvStore for PagedCache {
     fn bytes_resident(&self) -> u64 {
         let be = self.pool.borrow().block_elems();
         (2 * self.mapped_blocks() * be * 4) as u64
+    }
+
+    fn dirty_lo(&self) -> usize {
+        self.dirty_lo
+    }
+
+    fn mark_synced(&mut self) {
+        self.dirty_lo = usize::MAX;
     }
 }
 

@@ -17,9 +17,9 @@ pub struct Args {
 /// Flags that take a value (everything else starting with `--` is a switch).
 const VALUED: &[&str] = &[
     "mode", "budget", "depth", "topk", "cache-strategy", "cache-layout", "commit-mode",
-    "draft-window", "max-new", "workers", "batch", "scheduling", "seed", "out-dir",
-    "artifacts", "backend", "agree", "temperature", "trace-dir", "prompt-len", "turns",
-    "conversations", "profile", "requests", "rate", "servers",
+    "kv-sessions", "draft-window", "max-new", "workers", "batch", "scheduling", "seed",
+    "out-dir", "artifacts", "backend", "agree", "temperature", "trace-dir", "prompt-len",
+    "turns", "conversations", "profile", "requests", "rate", "servers",
 ];
 
 impl Args {

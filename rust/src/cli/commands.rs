@@ -40,6 +40,10 @@ COMMON FLAGS
                           (residency follows committed tokens; parked multi-turn
                           conversations keep only their mapped blocks)
   --commit-mode length|path-index     commit mode (§3.1)
+  --kv-sessions on|off    device-resident KV sessions (default on): bind each
+                          conversation cache on the backend and stream only dirty-row
+                          deltas per step instead of re-uploading full caches (fused
+                          path only; eager stays full-upload for debuggability)
   --no-fast-reorder       disable the prefix-sharing fast reorder
   --unsafe-indexing       skip §3.2 invariant checks (ablation)
   --adaptive              adaptive tree-budget policy (E2 takeaway)
@@ -57,9 +61,9 @@ COMMON FLAGS
 
 const RUN_FLAGS: &[&str] = &[
     "backend", "artifacts", "agree", "mode", "budget", "depth", "topk",
-    "cache-strategy", "cache-layout", "commit-mode", "draft-window", "max-new", "temperature",
-    "workers", "batch", "scheduling", "seed", "out-dir", "trace-dir", "prompt-len",
-    "conversations", "profile", "turns", "requests", "rate", "servers",
+    "cache-strategy", "cache-layout", "commit-mode", "kv-sessions", "draft-window", "max-new",
+    "temperature", "workers", "batch", "scheduling", "seed", "out-dir", "trace-dir",
+    "prompt-len", "conversations", "profile", "turns", "requests", "rate", "servers",
 ];
 const RUN_SWITCHES: &[&str] = &[
     "quick", "verbose", "no-fast-reorder", "unsafe-indexing", "attention-stats",
@@ -135,6 +139,13 @@ pub fn run_config(args: &Args) -> Result<RunConfig> {
     }
     if let Some(c) = args.get("commit-mode") {
         cfg.commit_mode = CommitMode::parse(c)?;
+    }
+    if let Some(ks) = args.get("kv-sessions") {
+        cfg.kv_sessions = match ks {
+            "on" => true,
+            "off" => false,
+            other => bail!("unknown --kv-sessions value '{other}' (expected on|off)"),
+        };
     }
     cfg.fast_reorder = !args.has("no-fast-reorder");
     cfg.check_invariants = !args.has("unsafe-indexing");
@@ -382,7 +393,15 @@ mod tests {
         assert!(run_config(&parse("serve --budget 0")).is_err());
         assert!(run_config(&parse("serve --mode turbo")).is_err());
         assert!(run_config(&parse("serve --cache-layout sparse")).is_err());
+        assert!(run_config(&parse("serve --kv-sessions maybe")).is_err());
         assert!(backend_spec(&parse("serve --backend quantum")).is_err());
+    }
+
+    #[test]
+    fn kv_sessions_flag_parses() {
+        assert!(run_config(&parse("serve")).unwrap().kv_sessions, "sessions default on");
+        assert!(!run_config(&parse("serve --kv-sessions off")).unwrap().kv_sessions);
+        assert!(run_config(&parse("serve --kv-sessions on")).unwrap().kv_sessions);
     }
 
     #[test]

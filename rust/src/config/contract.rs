@@ -50,7 +50,7 @@ impl Dims {
 /// Execution mode — the paper's two-mode protocol (§4.1):
 /// `Fused` loads the Pallas-kernel artifacts (performance path),
 /// `Eager` the pure-jnp ones (reference/debug path).
-#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub enum ExecMode {
     /// Pallas fused-kernel artifacts (performance path).
     Fused,
@@ -158,6 +158,29 @@ impl Contract {
                  (rebuild artifacts with `make artifacts` or update rust/src/config/contract.rs)"
             );
         }
+        // Validate the artifact table against the typed naming schema
+        // (`teacher_{mode}[_b{B}]_s{S}`, `draft[_probe]_s{S}`,
+        // `kv_append_{role}_n{N}` — docs/ARCHITECTURE.md §10): a
+        // malformed name fails here, listing the variants that did
+        // parse, instead of surfacing as an unresolvable launch plan
+        // mid-decode. Every variant's S must be a compiled block size of
+        // this contract.
+        let caps = crate::config::modules::Capabilities::from_manifest(manifest)?;
+        for key in caps.keys() {
+            let variants = match key.role {
+                crate::config::modules::ModuleRole::Teacher => &got.teacher_s,
+                crate::config::modules::ModuleRole::Draft => &got.draft_s,
+            };
+            if !variants.contains(&key.s) {
+                bail!(
+                    "artifact '{key}' uses S={} which is not a compiled {} block size \
+                     (contract has {variants:?}); discovered variants: {}",
+                    key.s,
+                    key.role.as_str(),
+                    caps.describe()
+                );
+            }
+        }
         Ok(got)
     }
 
@@ -228,6 +251,34 @@ mod tests {
             "neg_inf": -1e+30}}"#;
         let m = json::parse(text).unwrap();
         assert!(Contract::from_manifest(&m).is_err());
+    }
+
+    #[test]
+    fn manifest_artifact_names_are_validated() {
+        let base = r#""contract": {
+            "vocab": 512, "cache_cap": 1024, "feat_dim": 64,
+            "teacher": {"layers": 4, "d_model": 128, "heads": 4, "d_head": 32},
+            "draft": {"layers": 1, "d_model": 64, "heads": 2, "d_head": 32},
+            "teacher_s_variants": [8, 16, 32, 64, 128, 256],
+            "draft_s_variants": [8, 32, 64],
+            "neg_inf": -1e+30}"#;
+        // well-formed names (incl. a fused batch variant) pass
+        let ok = format!(
+            r#"{{{base}, "artifacts": [
+                {{"name": "teacher_fused_s8"}},
+                {{"name": "teacher_fused_b4_s16"}},
+                {{"name": "kv_append_teacher_n64"}}
+            ]}}"#
+        );
+        assert!(Contract::from_manifest(&json::parse(&ok).unwrap()).is_ok());
+        // a malformed name fails with a schema pointer
+        let bad = format!(r#"{{{base}, "artifacts": [{{"name": "teacher_turbo_s8"}}]}}"#);
+        let err = Contract::from_manifest(&json::parse(&bad).unwrap()).unwrap_err();
+        assert!(format!("{err:#}").contains("naming schema"), "{err:#}");
+        // a fused variant outside the compiled S set fails
+        let off = format!(r#"{{{base}, "artifacts": [{{"name": "teacher_fused_b4_s24"}}]}}"#);
+        let err = Contract::from_manifest(&json::parse(&off).unwrap()).unwrap_err();
+        assert!(format!("{err:#}").contains("not a compiled teacher block size"), "{err:#}");
     }
 
     #[test]

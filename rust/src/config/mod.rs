@@ -4,7 +4,9 @@
 //! time so a stale artifact set fails fast instead of miscomputing.
 
 pub mod contract;
+pub mod modules;
 pub mod run;
 
 pub use contract::{Contract, Dims, ExecMode};
+pub use modules::{Capabilities, ModuleKey, ModuleLayout, ModuleRole};
 pub use run::{CacheLayout, CacheStrategy, CommitMode, RunConfig, TreeConfig};

@@ -1,0 +1,498 @@
+//! Typed compiled-module identity: the artifact naming contract shared
+//! with `python/compile/aot.py`, parsed into [`ModuleKey`]s and collected
+//! into a backend [`Capabilities`] table.
+//!
+//! Before this layer existed, backends addressed compiled variants with
+//! ad-hoc `format!("teacher_{mode}_s{s}")` strings and `bail!`-ed on a
+//! miss. Now every compiled artifact is a typed key, the full set of keys
+//! a backend can launch is its capabilities table, and variant selection
+//! is a *negotiation* over that table
+//! ([`crate::backend::plan::negotiate`]) returning typed
+//! [`crate::backend::PlanError`]s.
+//!
+//! # Artifact naming schema
+//!
+//! ```text
+//! teacher_{fused|eager}_s{S}          single-request teacher step
+//! teacher_{fused|eager}_b{B}_s{S}     fused B-request teacher step
+//! draft_s{S}                          draft step
+//! draft_probe_s{S}                    draft step + attention probe output
+//! <any of the above>_paged            gather-aware variant (takes the
+//!                                     block table as an input; ROADMAP)
+//! kv_append_{teacher|draft}_n{N}      KV-session scatter-update module
+//!                                     (device-resident cache append)
+//! ```
+//!
+//! `kv_append_*` modules are *session* utilities, not step variants: they
+//! are validated here but tracked outside [`ModuleKey`] (their I/O
+//! signature is cache-update, not step). See `docs/ARCHITECTURE.md` §10.
+
+use super::contract::{Contract, ExecMode};
+use crate::json::Json;
+use anyhow::{bail, Context, Result};
+use std::fmt;
+
+/// Which model a compiled module serves.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum ModuleRole {
+    /// The verification (teacher) model.
+    Teacher,
+    /// The speculation (EAGLE draft) model.
+    Draft,
+}
+
+impl ModuleRole {
+    /// Stable string form (artifact names, errors).
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ModuleRole::Teacher => "teacher",
+            ModuleRole::Draft => "draft",
+        }
+    }
+}
+
+/// Physical cache layout a compiled module consumes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum ModuleLayout {
+    /// Contiguous `[L, cap, H, Dh]` cache inputs (every module compiled
+    /// today): paged callers materialize a flat view host-side first.
+    Flat,
+    /// Gather-aware module taking the block table as an input (paged
+    /// attention reads on-device; none compiled yet — ROADMAP).
+    Paged,
+}
+
+impl ModuleLayout {
+    /// Stable string form (artifact names, errors).
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ModuleLayout::Flat => "flat",
+            ModuleLayout::Paged => "paged",
+        }
+    }
+}
+
+/// Typed identity of one compiled module variant — replaces the old
+/// string keys (`"teacher_fused_s16"`). The key round-trips through the
+/// artifact naming schema via [`ModuleKey::artifact_name`] /
+/// [`ModuleKey::parse`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct ModuleKey {
+    /// Teacher or draft.
+    pub role: ModuleRole,
+    /// Fused-kernel vs eager artifact flavor (draft modules are compiled
+    /// in one flavor only; their canonical key uses [`ExecMode::Fused`]).
+    pub mode: ExecMode,
+    /// Whether the module emits the attention-probe output.
+    pub probe: bool,
+    /// Cache layout the module consumes.
+    pub layout: ModuleLayout,
+    /// Fused request width B (1 for single-request modules).
+    pub b: usize,
+    /// Padded slot count S per request.
+    pub s: usize,
+}
+
+impl ModuleKey {
+    /// Key of a single-request teacher variant.
+    pub fn teacher(mode: ExecMode, s: usize) -> Self {
+        Self { role: ModuleRole::Teacher, mode, s, b: 1, probe: false, layout: ModuleLayout::Flat }
+    }
+
+    /// Key of a fused `b`-request teacher variant.
+    pub fn teacher_batch(mode: ExecMode, b: usize, s: usize) -> Self {
+        Self { role: ModuleRole::Teacher, mode, s, b, probe: false, layout: ModuleLayout::Flat }
+    }
+
+    /// Key of a draft variant (optionally probe-capable).
+    pub fn draft(s: usize, probe: bool) -> Self {
+        Self {
+            role: ModuleRole::Draft,
+            mode: ExecMode::Fused,
+            s,
+            b: 1,
+            probe,
+            layout: ModuleLayout::Flat,
+        }
+    }
+
+    /// Canonical artifact name of this key (the naming schema in the
+    /// module docs): inverse of [`ModuleKey::parse`].
+    pub fn artifact_name(&self) -> String {
+        let mut name = match self.role {
+            ModuleRole::Teacher => {
+                if self.b > 1 {
+                    format!("teacher_{}_b{}_s{}", self.mode.as_str(), self.b, self.s)
+                } else {
+                    format!("teacher_{}_s{}", self.mode.as_str(), self.s)
+                }
+            }
+            ModuleRole::Draft => {
+                if self.probe {
+                    format!("draft_probe_s{}", self.s)
+                } else {
+                    format!("draft_s{}", self.s)
+                }
+            }
+        };
+        if self.layout == ModuleLayout::Paged {
+            name.push_str("_paged");
+        }
+        name
+    }
+
+    /// Parse an artifact name into a key. Returns `None` for names
+    /// outside the step-module schema (e.g. `kv_append_*`, weights).
+    pub fn parse(name: &str) -> Option<Self> {
+        let (body, layout) = match name.strip_suffix("_paged") {
+            Some(b) => (b, ModuleLayout::Paged),
+            None => (name, ModuleLayout::Flat),
+        };
+        if let Some(rest) = body.strip_prefix("draft_probe_s") {
+            let s = rest.parse().ok()?;
+            return Some(Self { layout, ..Self::draft(s, true) });
+        }
+        if let Some(rest) = body.strip_prefix("draft_s") {
+            let s = rest.parse().ok()?;
+            return Some(Self { layout, ..Self::draft(s, false) });
+        }
+        let rest = body.strip_prefix("teacher_")?;
+        let (mode, rest) = if let Some(r) = rest.strip_prefix("fused_") {
+            (ExecMode::Fused, r)
+        } else if let Some(r) = rest.strip_prefix("eager_") {
+            (ExecMode::Eager, r)
+        } else {
+            return None;
+        };
+        let (b, rest) = if let Some(r) = rest.strip_prefix("b") {
+            let (num, tail) = r.split_once('_')?;
+            (num.parse().ok()?, tail)
+        } else {
+            (1usize, rest)
+        };
+        let s = rest.strip_prefix("s")?.parse().ok()?;
+        if b == 0 || s == 0 {
+            return None;
+        }
+        Some(Self { role: ModuleRole::Teacher, mode, s, b, probe: false, layout })
+    }
+}
+
+impl fmt::Display for ModuleKey {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.artifact_name())
+    }
+}
+
+/// The set of compiled module variants a backend can launch, plus the
+/// session scatter-update modules present (`kv_append_{role}_n{N}`).
+/// Built from the artifact manifest ([`Capabilities::from_manifest`]) or
+/// synthesized for simulator backends ([`Capabilities::synthetic`]);
+/// consumed by [`crate::backend::plan::negotiate`].
+#[derive(Clone, Debug, Default)]
+pub struct Capabilities {
+    /// Sorted, deduplicated step-module keys.
+    entries: Vec<ModuleKey>,
+    /// Available `kv_append` delta widths N per role: `(role, n)` pairs,
+    /// sorted ascending by `n` within a role.
+    kv_append: Vec<(ModuleRole, usize)>,
+}
+
+impl Capabilities {
+    /// Build a table from explicit keys (sorted + deduplicated).
+    pub fn from_keys(mut entries: Vec<ModuleKey>) -> Self {
+        entries.sort_unstable();
+        entries.dedup();
+        Self { entries, kv_append: Vec::new() }
+    }
+
+    /// Parse + validate the `artifacts` table of a manifest. Every entry
+    /// whose name starts with `teacher`, `draft` or `kv_append` must
+    /// follow the naming schema; a malformed name fails loudly, listing
+    /// the variants that did parse. Entries outside those prefixes
+    /// (weights, fixtures) are ignored. An absent `artifacts` table
+    /// yields an empty capabilities set.
+    pub fn from_manifest(manifest: &Json) -> Result<Self> {
+        let mut entries = Vec::new();
+        let mut kv_append = Vec::new();
+        let arts = match manifest.get("artifacts").and_then(Json::as_arr) {
+            Some(a) => a,
+            None => return Ok(Self::default()),
+        };
+        for a in arts {
+            let name = a
+                .get("name")
+                .and_then(Json::as_str)
+                .context("artifact entry missing 'name'")?;
+            if let Some(rest) = name.strip_prefix("kv_append_") {
+                let parsed = rest
+                    .split_once("_n")
+                    .and_then(|(role, n)| {
+                        let role = match role {
+                            "teacher" => ModuleRole::Teacher,
+                            "draft" => ModuleRole::Draft,
+                            _ => return None,
+                        };
+                        n.parse::<usize>().ok().filter(|n| *n > 0).map(|n| (role, n))
+                    });
+                match parsed {
+                    Some(p) => kv_append.push(p),
+                    None => bail!(
+                        "artifact '{name}' does not match the kv_append naming schema \
+                         kv_append_{{teacher|draft}}_n{{N}} (see docs/ARCHITECTURE.md §10)"
+                    ),
+                }
+                continue;
+            }
+            if name.starts_with("teacher") || name.starts_with("draft") {
+                match ModuleKey::parse(name) {
+                    Some(key) => entries.push(key),
+                    None => {
+                        let known: Vec<String> = arts
+                            .iter()
+                            .filter_map(|x| x.get("name").and_then(Json::as_str))
+                            .filter(|n| ModuleKey::parse(n).is_some())
+                            .map(str::to_string)
+                            .collect();
+                        bail!(
+                            "artifact '{name}' does not match the module naming schema \
+                             teacher_{{fused|eager}}[_b{{B}}]_s{{S}} | draft[_probe]_s{{S}} \
+                             [+ _paged] (see docs/ARCHITECTURE.md §10); \
+                             variants that did parse: [{}]",
+                            known.join(", ")
+                        );
+                    }
+                }
+            }
+        }
+        let mut caps = Self::from_keys(entries);
+        kv_append.sort_unstable();
+        kv_append.dedup();
+        caps.kv_append = kv_append;
+        Ok(caps)
+    }
+
+    /// Synthesize the capabilities of a simulator backend: every compiled
+    /// S variant of the contract, both teacher modes, fused widths up to
+    /// `max_fused_b`, probe variants for every draft S, and `kv_append`
+    /// at every width (a simulator appends host-side, so no N constraint
+    /// applies — modeled as `n = cache_cap`).
+    pub fn synthetic(contract: &Contract, max_fused_b: usize) -> Self {
+        let mut entries = Vec::new();
+        for &s in &contract.teacher_s {
+            for mode in [ExecMode::Fused, ExecMode::Eager] {
+                for b in 1..=max_fused_b.max(1) {
+                    entries.push(ModuleKey::teacher_batch(mode, b, s));
+                }
+            }
+        }
+        for &s in &contract.draft_s {
+            entries.push(ModuleKey::draft(s, false));
+            entries.push(ModuleKey::draft(s, true));
+        }
+        let mut caps = Self::from_keys(entries);
+        caps.kv_append = vec![
+            (ModuleRole::Teacher, contract.cache_cap),
+            (ModuleRole::Draft, contract.cache_cap),
+        ];
+        caps
+    }
+
+    /// Whether this exact key is compiled.
+    pub fn contains(&self, key: &ModuleKey) -> bool {
+        self.entries.binary_search(key).is_ok()
+    }
+
+    /// Iterate every compiled step-module key.
+    pub fn keys(&self) -> impl Iterator<Item = &ModuleKey> {
+        self.entries.iter()
+    }
+
+    /// Number of compiled step-module variants.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Whether no step-module variants are known.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Largest fused width `b` for which some `(role, mode, layout)`
+    /// variant covers `rows` padded slots (0 when nothing covers).
+    pub fn max_batch(
+        &self,
+        role: ModuleRole,
+        mode: ExecMode,
+        layout: ModuleLayout,
+        rows: usize,
+    ) -> usize {
+        self.entries
+            .iter()
+            .filter(|k| {
+                k.role == role && k.mode == mode && k.layout == layout && !k.probe && k.s >= rows
+            })
+            .map(|k| k.b)
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Smallest `kv_append` delta width covering `n` rows for `role`
+    /// (`None` when the role has no scatter-update module — sessions are
+    /// then unsupported on artifact backends).
+    pub fn kv_append_width(&self, role: ModuleRole, n: usize) -> Option<usize> {
+        self.kv_append
+            .iter()
+            .filter(|(r, w)| *r == role && *w >= n)
+            .map(|(_, w)| *w)
+            .min()
+            .or_else(|| {
+                // fall back to the largest width (caller chunks the delta)
+                self.kv_append.iter().filter(|(r, _)| *r == role).map(|(_, w)| *w).max()
+            })
+    }
+
+    /// Whether `role` has any session scatter-update module.
+    pub fn supports_kv_append(&self, role: ModuleRole) -> bool {
+        self.kv_append.iter().any(|(r, _)| *r == role)
+    }
+
+    /// Compact human-readable summary of the compiled variants, for
+    /// [`crate::backend::PlanError`] messages: one line per
+    /// `(role, mode, layout, probe)` group with its S and B sets.
+    pub fn describe(&self) -> String {
+        let mut lines: Vec<String> = Vec::new();
+        let mut i = 0;
+        while i < self.entries.len() {
+            let head = self.entries[i];
+            let group_of = |k: &ModuleKey| (k.role, k.mode, k.probe, k.layout);
+            let mut ss: Vec<usize> = Vec::new();
+            let mut bs: Vec<usize> = Vec::new();
+            let mut j = i;
+            while j < self.entries.len() && group_of(&self.entries[j]) == group_of(&head) {
+                ss.push(self.entries[j].s);
+                bs.push(self.entries[j].b);
+                j += 1;
+            }
+            ss.sort_unstable();
+            ss.dedup();
+            bs.sort_unstable();
+            bs.dedup();
+            let fmt_set = |v: &[usize]| -> String {
+                let strs: Vec<String> = v.iter().map(|x| x.to_string()).collect();
+                strs.join(",")
+            };
+            lines.push(format!(
+                "{}/{}{}{}: S{{{}}} B{{{}}}",
+                head.role.as_str(),
+                head.mode.as_str(),
+                if head.probe { "/probe" } else { "" },
+                if head.layout == ModuleLayout::Paged { "/paged" } else { "" },
+                fmt_set(&ss),
+                fmt_set(&bs),
+            ));
+            i = j;
+        }
+        if lines.is_empty() {
+            "no compiled variants".to_string()
+        } else {
+            lines.join("; ")
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::json;
+
+    #[test]
+    fn key_name_roundtrip() {
+        let keys = [
+            ModuleKey::teacher(ExecMode::Fused, 16),
+            ModuleKey::teacher(ExecMode::Eager, 256),
+            ModuleKey::teacher_batch(ExecMode::Fused, 4, 32),
+            ModuleKey::draft(8, false),
+            ModuleKey::draft(32, true),
+            ModuleKey { layout: ModuleLayout::Paged, ..ModuleKey::teacher(ExecMode::Fused, 16) },
+        ];
+        for k in keys {
+            let name = k.artifact_name();
+            assert_eq!(ModuleKey::parse(&name), Some(k), "{name} must round-trip");
+        }
+        assert_eq!(ModuleKey::teacher(ExecMode::Fused, 16).artifact_name(), "teacher_fused_s16");
+        assert_eq!(
+            ModuleKey::teacher_batch(ExecMode::Fused, 4, 32).artifact_name(),
+            "teacher_fused_b4_s32"
+        );
+    }
+
+    #[test]
+    fn parse_rejects_malformed_names() {
+        for bad in [
+            "teacher_s16",
+            "teacher_fused_sX",
+            "teacher_fused_b0_s16",
+            "teacher_fused_b4s16",
+            "draft_probe_s",
+            "weights_teacher",
+        ] {
+            assert_eq!(ModuleKey::parse(bad), None, "{bad} must not parse");
+        }
+    }
+
+    #[test]
+    fn manifest_capabilities_parse_and_validate() {
+        let text = r#"{"artifacts": [
+            {"name": "teacher_fused_s8"},
+            {"name": "teacher_fused_b4_s16"},
+            {"name": "teacher_eager_s8"},
+            {"name": "draft_s8"},
+            {"name": "draft_probe_s8"},
+            {"name": "kv_append_teacher_n64"},
+            {"name": "weights_teacher"}
+        ]}"#;
+        let caps = Capabilities::from_manifest(&json::parse(text).unwrap()).unwrap();
+        assert_eq!(caps.len(), 5);
+        assert!(caps.contains(&ModuleKey::teacher_batch(ExecMode::Fused, 4, 16)));
+        assert!(caps.contains(&ModuleKey::draft(8, true)));
+        assert!(caps.supports_kv_append(ModuleRole::Teacher));
+        assert!(!caps.supports_kv_append(ModuleRole::Draft));
+        assert_eq!(caps.kv_append_width(ModuleRole::Teacher, 10), Some(64));
+        assert_eq!(caps.kv_append_width(ModuleRole::Teacher, 100), Some(64));
+    }
+
+    #[test]
+    fn malformed_artifact_name_fails_listing_valid_ones() {
+        let text = r#"{"artifacts": [
+            {"name": "teacher_fused_s8"},
+            {"name": "teacher_warp_s8"}
+        ]}"#;
+        let err = Capabilities::from_manifest(&json::parse(text).unwrap()).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("teacher_warp_s8"), "{msg}");
+        assert!(msg.contains("teacher_fused_s8"), "must list parsed variants: {msg}");
+    }
+
+    #[test]
+    fn synthetic_covers_contract_and_widths() {
+        let c = Contract::default();
+        let caps = Capabilities::synthetic(&c, 8);
+        assert!(caps.contains(&ModuleKey::teacher_batch(ExecMode::Fused, 8, 256)));
+        assert!(caps.contains(&ModuleKey::teacher_batch(ExecMode::Eager, 3, 8)));
+        assert!(caps.contains(&ModuleKey::draft(64, true)));
+        assert!(!caps.contains(&ModuleKey::teacher_batch(ExecMode::Fused, 9, 8)));
+        assert_eq!(caps.max_batch(ModuleRole::Teacher, ExecMode::Fused, ModuleLayout::Flat, 16), 8);
+        assert_eq!(caps.max_batch(ModuleRole::Teacher, ExecMode::Fused, ModuleLayout::Flat, 300), 0);
+        assert!(caps.supports_kv_append(ModuleRole::Draft));
+    }
+
+    #[test]
+    fn describe_is_compact_and_nonempty() {
+        let caps = Capabilities::synthetic(&Contract::default(), 2);
+        let d = caps.describe();
+        assert!(d.contains("teacher/fused"), "{d}");
+        assert!(d.contains("draft/fused/probe"), "{d}");
+        assert!(Capabilities::default().describe().contains("no compiled variants"));
+    }
+}

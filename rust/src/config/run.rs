@@ -163,6 +163,14 @@ pub struct RunConfig {
     pub commit_mode: CommitMode,
     /// Prefix-sharing fast reorder (paper's EA_FAST_CACHE_REORDER flag).
     pub fast_reorder: bool,
+    /// Device-resident KV sessions (`--kv-sessions`): bind each
+    /// conversation cache on the backend once and stream only dirty-row
+    /// deltas per step, instead of re-uploading the full
+    /// `[L, cap, H, Dh]` buffers every call. Applies to the fused
+    /// performance path only — the eager/debug path always uploads full
+    /// views (the paper's two-mode design); backends without session
+    /// support fall back to full upload transparently.
+    pub kv_sessions: bool,
     /// §3.2 structural invariant checks before every launch.
     pub check_invariants: bool,
     /// Adaptive tree-budget policy (paper E2 takeaway / future work):
@@ -192,6 +200,7 @@ impl Default for RunConfig {
             cache_layout: CacheLayout::Flat,
             commit_mode: CommitMode::PathIndex,
             fast_reorder: true,
+            kv_sessions: true,
             check_invariants: true,
             adaptive_budget: false,
             draft_window: None,
@@ -233,6 +242,7 @@ impl RunConfig {
             .push("cache_layout", self.cache_layout.as_str())
             .push("commit_mode", self.commit_mode.as_str())
             .push("fast_reorder", self.fast_reorder)
+            .push("kv_sessions", self.kv_sessions)
             .push("check_invariants", self.check_invariants)
             .push("adaptive_budget", self.adaptive_budget)
             .push(

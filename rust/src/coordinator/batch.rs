@@ -72,35 +72,47 @@
 //! ever grows, keeping steady-state batched rounds allocation-free
 //! (asserted by `tests/alloc_regression.rs`).
 
-use crate::backend::{BatchRequest, BatchStepArgs, ModelBackend, StepScratch};
+use crate::backend::{
+    BatchRequest, BatchStepArgs, KvView, ModelBackend, ModuleLayout, PlanError, PlanRequest,
+    SessionTicket, StepScratch,
+};
 use crate::cache::KvGuard;
-use crate::config::RunConfig;
+use crate::config::{CacheLayout, RunConfig};
 use crate::engine::{Engine, GenOut, ParkedConversation};
 use crate::tree::BatchMask;
 use anyhow::{Context, Result};
 use std::collections::{HashMap, VecDeque};
 use std::time::Instant;
 
-/// The gather → pad → launch → scatter half of one fused verification
-/// round. All *sized* staging (the fused token/position rows, the mask
-/// block, the output scratch) lives here and only ever grows; the only
-/// per-round allocations left are the two `B`-element `Vec`s of borrowed
-/// per-request cache guards/views (pointer-sized entries, far below the
-/// alloc-regression gate's vocab/cap-sized threshold — they cannot be
-/// hoisted without self-borrowing the engines).
+/// The plan → gather → pad → launch → scatter half of one fused
+/// verification round. All *sized* staging (the fused token/position
+/// rows, the mask block, the output scratch) lives here and only ever
+/// grows; the only per-round allocations left are the two `B`-element
+/// `Vec`s of borrowed per-request cache guards/views (pointer-sized
+/// entries, far below the alloc-regression gate's vocab/cap-sized
+/// threshold — they cannot be hoisted without self-borrowing the
+/// engines).
 pub struct FusedVerifier {
-    /// Fused `[B * S_max]` token staging.
+    /// Fused `[B_key * S_key]` token staging.
     tokens: Vec<i32>,
-    /// Fused `[B * S_max]` position staging.
+    /// Fused `[B_key * S_key]` position staging.
     positions: Vec<i32>,
-    /// Fused `[B, S_max, cap + S_max]` mask block.
+    /// Fused `[B_key, S_key, cap + S_key]` mask block.
     mask: BatchMask,
     /// Fused teacher outputs, scattered per-request after the launch.
     out: StepScratch,
     /// Per-request padded variants of the current round (padding-invariant
-    /// bookkeeping, reused every round).
+    /// bookkeeping, reused every round; 0 for group-padding slots).
     s_reqs: Vec<usize>,
+    /// Per-request session tickets of the current round (reused).
+    tickets: Vec<Option<SessionTicket>>,
+    /// Cumulative fused launches issued (splits count each sub-launch).
+    pub launches: u64,
 }
+
+/// Empty cache view handed to group-padding requests (their mask block
+/// is fully closed, so no row is ever resolved through it).
+const EMPTY_KV: &[f32] = &[];
 
 impl FusedVerifier {
     /// A verifier for caches of capacity `cache_cap`.
@@ -111,13 +123,25 @@ impl FusedVerifier {
             mask: BatchMask::new(cache_cap),
             out: StepScratch::new(),
             s_reqs: Vec::new(),
+            tickets: Vec::new(),
+            launches: 0,
         }
     }
 
     /// One fused verification over `group` (indices into `engines`), all
-    /// of which must have a prepared round: pad to the group's largest
-    /// (S, ctx), launch once, scatter per-request logits/features/KV rows
-    /// back into each engine's scratch.
+    /// of which must have a prepared round.
+    ///
+    /// Launch-plan negotiation replaces the old pad-to-group-max rule:
+    /// the verifier asks the backend for the smallest compiled `(B, S)`
+    /// variant covering the group's live rows
+    /// ([`ModelBackend::plan_step`]); when the negotiation answers
+    /// [`PlanError::SplitRequired`] (no fused variant spans the whole
+    /// group) the group is split into `max_batch`-wide sub-launches
+    /// instead of collapsing to sequential emulation — launches stay as
+    /// wide as the artifact set allows. Requests beyond the group
+    /// (`plan.key.b > group.len()`) are padding: zero tokens, fully
+    /// closed mask rows, an empty cache view, and no live rows to
+    /// scatter back.
     pub fn verify_group(
         &mut self,
         backend: &mut dyn ModelBackend,
@@ -126,19 +150,47 @@ impl FusedVerifier {
     ) -> Result<()> {
         debug_assert!(!group.is_empty());
         let mode = engines[group[0]].cfg.mode;
-        // pad to the largest compiled variant in the group (variants come
-        // from one contract, so the max is itself a compiled variant)
         let mut s_max = 0usize;
         for &i in group {
             s_max = s_max.max(engines[i].verify_payload()?.s);
         }
         let b = group.len();
+        // heterogeneous layouts may share a group: any paged member makes
+        // the request paged (flat-only artifact sets then resolve a flat
+        // module + host gather, per-request, exactly as before)
+        let layout = if group.iter().any(|&i| engines[i].cfg.cache_layout == CacheLayout::Paged)
+        {
+            ModuleLayout::Paged
+        } else {
+            ModuleLayout::Flat
+        };
+        let plan = match backend.plan_step(&PlanRequest::teacher_batch(mode, s_max, b, layout)) {
+            Ok(plan) => plan,
+            Err(PlanError::SplitRequired { max_batch, .. }) => {
+                anyhow::ensure!(
+                    max_batch >= 1 && max_batch < b,
+                    "split negotiation returned non-splitting width {max_batch} for group {b}"
+                );
+                for chunk in group.chunks(max_batch) {
+                    self.verify_group(backend, engines, chunk)?;
+                }
+                return Ok(());
+            }
+            Err(e) => {
+                return Err(
+                    anyhow::Error::from(e).context("planning the fused verification launch")
+                )
+            }
+        };
+        let (bk, sk) = (plan.key.b, plan.key.s);
+        debug_assert!(bk >= b && sk >= s_max, "plan must cover the group");
         self.tokens.clear();
-        self.tokens.resize(b * s_max, 0);
+        self.tokens.resize(bk * sk, 0);
         self.positions.clear();
-        self.positions.resize(b * s_max, 0);
-        self.mask.begin(b, s_max);
+        self.positions.resize(bk * sk, 0);
+        self.mask.begin(bk, sk);
         self.s_reqs.clear();
+        self.tickets.clear();
         // Every group member's cache guard stays alive across the fused
         // launch (paged caches share one pool — concurrent read borrows
         // are fine; the guards drop before any per-request commit).
@@ -146,17 +198,30 @@ impl FusedVerifier {
         for (bi, &i) in group.iter().enumerate() {
             anyhow::ensure!(engines[i].cfg.mode == mode, "mixed exec modes in one batch");
             let p = engines[i].verify_payload()?;
-            self.tokens[bi * s_max..bi * s_max + p.s].copy_from_slice(p.tokens);
-            self.positions[bi * s_max..bi * s_max + p.s].copy_from_slice(p.positions);
+            self.tokens[bi * sk..bi * sk + p.s].copy_from_slice(p.tokens);
+            self.positions[bi * sk..bi * sk + p.s].copy_from_slice(p.positions);
             self.mask.fill_request(bi, p.mask, p.s);
             self.s_reqs.push(p.s);
+            self.tickets.push(p.session);
             guards.push(p.kv);
         }
-        let reqs: Vec<BatchRequest> = guards
+        for _ in b..bk {
+            self.s_reqs.push(0);
+            self.tickets.push(None);
+        }
+        let mut reqs: Vec<BatchRequest> = guards
             .iter()
-            .zip(&self.s_reqs)
-            .map(|(g, &s)| BatchRequest { kv: g.view(), live: s })
+            .enumerate()
+            .map(|(bi, g)| BatchRequest {
+                kv: g.view(),
+                live: self.s_reqs[bi],
+                session: self.tickets[bi],
+            })
             .collect();
+        for _ in b..bk {
+            let kv = KvView::flat(EMPTY_KV, EMPTY_KV, 0);
+            reqs.push(BatchRequest { kv, live: 0, session: None });
+        }
         // membership changed or shrank since last round? re-padding must
         // still leave every padding row/column closed ("padding is never
         // attended" — the invariant continuous admission leans on)
@@ -165,10 +230,10 @@ impl FusedVerifier {
             "fused mask block leaked an open padding row/column"
         );
         let t0 = Instant::now();
-        backend.teacher_step_batch(
-            mode,
+        backend.execute_batch(
+            &plan,
             BatchStepArgs {
-                s_max,
+                s_max: sk,
                 tokens: &self.tokens,
                 positions: &self.positions,
                 mask: self.mask.as_slice(),
@@ -176,6 +241,7 @@ impl FusedVerifier {
             },
             &mut self.out,
         )?;
+        self.launches += 1;
         // attribute the fused launch evenly across the group (timers are
         // instrumentation, not accounting — see docs/ARCHITECTURE.md)
         let secs = t0.elapsed().as_secs_f64() / b as f64;
@@ -612,8 +678,11 @@ impl ContinuousScheduler {
                 for &i in group {
                     engines[i].prepare_verify(backend)?;
                 }
+                let before = self.verifier.launches;
                 self.verifier.verify_group(backend, engines, group)?;
-                self.stats.fused_launches += 1;
+                // a split group issues several sub-launches; count what
+                // actually went to the accelerator
+                self.stats.fused_launches += self.verifier.launches - before;
                 for &i in group {
                     engines[i].finish_verify()?;
                 }

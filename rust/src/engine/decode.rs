@@ -75,10 +75,13 @@
 //!   fresh-engine state *without* dropping any of these capacities, so
 //!   the coordinator reuses warmed engines across conversations.
 
-use crate::backend::{argmax, log_softmax_at, topk, KvView, ModelBackend, StepArgs};
+use crate::backend::{
+    argmax, log_softmax_at, topk, KvSession, KvView, ModelBackend, ModuleRole, PlanError,
+    SessionTicket, StepArgs,
+};
 use crate::cache::{CachePools, KvGuard, KvStore, ManagedCache, PagedCache};
 use crate::config::contract::NEG_INF;
-use crate::config::{CacheLayout, CacheStrategy, CommitMode, Contract, Dims, RunConfig};
+use crate::config::{CacheLayout, CacheStrategy, CommitMode, Contract, Dims, ExecMode, RunConfig};
 use crate::engine::output::{attention_distance_buckets, GenOut};
 use crate::spec::{greedy_walk, select_children, stochastic_walk, AdaptiveBudget, Candidate};
 use crate::tree::{MaskBuilder, MaskStream, SpecTree, Tensorized};
@@ -154,6 +157,11 @@ pub struct VerifyPayload<'e> {
     pub live: usize,
     /// Committed teacher context length of this request (logical rows).
     pub ctx_len: usize,
+    /// Resident-session ticket for `kv` (the engine's bound teacher
+    /// session plus the cache's dirty watermark); `None` when the
+    /// backend keeps no sessions or sessions are configured off — the
+    /// fused launch then uploads the full view.
+    pub session: Option<SessionTicket>,
 }
 
 /// A conversation lifted off its slot engine with all decode state
@@ -230,6 +238,15 @@ pub struct Engine {
     use_draft: bool,
     /// Adaptive budget controller (None when `cfg.adaptive_budget` is off).
     adaptive: Option<AdaptiveBudget>,
+    /// Backend-resident teacher KV session bound to this slot (None:
+    /// backend has no session support, or sessions configured off).
+    t_session: Option<KvSession>,
+    /// Backend-resident draft KV session bound to this slot.
+    d_session: Option<KvSession>,
+    /// The bound sessions mirror a *previous* conversation's cache (set
+    /// by reset/park/resume/config changes): the next prefill re-syncs
+    /// them wholesale before any step ships a delta ticket.
+    sessions_stale: bool,
     /// The in-flight generation, when one is active.
     inflight: Option<InFlight>,
 }
@@ -256,6 +273,54 @@ fn build_cache(
             Box::new(PagedCache::new(dims, cap, strategy, fast_reorder, pool.clone()))
         }
     }
+}
+
+/// Bind (or wholesale re-sync) one cache's backend-resident session.
+/// `stale` → the bound mirror belongs to a previous conversation: rebind
+/// from row 0, reusing its storage; an unknown-session answer (backend
+/// swapped under the slot) falls through to a fresh bind. A backend
+/// without session support leaves `slot` empty — callers then send no
+/// tickets and the backend uploads full views.
+fn ensure_session(
+    backend: &mut dyn ModelBackend,
+    role: ModuleRole,
+    cache: &mut dyn KvStore,
+    slot: &mut Option<KvSession>,
+    stale: bool,
+) -> Result<()> {
+    let rows = cache.view_rows();
+    if let Some(sess) = slot.as_ref() {
+        if !stale {
+            return Ok(()); // same conversation: tickets keep the mirror current
+        }
+        let res = {
+            let guard = cache.kv_guard();
+            backend.rebind_kv(sess, guard.view(), rows)
+        };
+        match res {
+            Ok(()) => {
+                cache.mark_synced();
+                return Ok(());
+            }
+            Err(PlanError::UnknownSession { .. }) => {} // bind fresh below
+            Err(e) => return Err(e.into()),
+        }
+    }
+    let res = {
+        let guard = cache.kv_guard();
+        backend.bind_kv(role, guard.view(), rows)
+    };
+    match res {
+        Ok(s) => {
+            *slot = Some(s);
+            cache.mark_synced();
+        }
+        Err(PlanError::SessionUnsupported { .. }) => {
+            *slot = None;
+        }
+        Err(e) => return Err(e.into()),
+    }
+    Ok(())
 }
 
 impl Engine {
@@ -324,8 +389,65 @@ impl Engine {
             rng,
             use_draft: true,
             adaptive,
+            t_session: None,
+            d_session: None,
+            sessions_stale: true,
             inflight: None,
         }
+    }
+
+    /// Session ticket for the next step through `cache`: the bound
+    /// session's id plus the cache's dirty watermark and readable rows.
+    fn ticket(cache: &dyn KvStore, session: &Option<KvSession>) -> Option<SessionTicket> {
+        session.as_ref().map(|s| SessionTicket {
+            id: s.id,
+            dirty_lo: cache.dirty_lo(),
+            rows: cache.view_rows(),
+        })
+    }
+
+    /// Bind or refresh the engine's backend-resident KV sessions (the
+    /// *bind* phase of the plan → bind → execute protocol), called once
+    /// per conversation turn at prefill:
+    ///
+    /// * sessions wanted (`cfg.kv_sessions` and the fused path — the
+    ///   eager/debug path stays full-upload by the paper's two-mode
+    ///   design): bind fresh sessions, or re-sync the existing ones
+    ///   wholesale when they mirror a previous conversation
+    ///   (`sessions_stale`) — an admission-boundary cost that reuses the
+    ///   mirror storage ([`ModelBackend::rebind_kv`]);
+    /// * backend without session support: noted once per conversation
+    ///   (typed [`PlanError::SessionUnsupported`]), every step falls
+    ///   back to full-view upload;
+    /// * sessions configured off: any bound sessions are released.
+    fn ensure_sessions(&mut self, backend: &mut dyn ModelBackend) -> Result<()> {
+        let want = self.cfg.kv_sessions && self.cfg.mode == ExecMode::Fused;
+        if !want {
+            if let Some(s) = self.t_session.take() {
+                backend.unbind_kv(s);
+            }
+            if let Some(s) = self.d_session.take() {
+                backend.unbind_kv(s);
+            }
+            return Ok(());
+        }
+        let stale = self.sessions_stale;
+        ensure_session(
+            backend,
+            ModuleRole::Teacher,
+            self.t_cache.as_mut(),
+            &mut self.t_session,
+            stale,
+        )?;
+        ensure_session(
+            backend,
+            ModuleRole::Draft,
+            self.d_cache.as_mut(),
+            &mut self.d_session,
+            stale,
+        )?;
+        self.sessions_stale = false;
+        Ok(())
     }
 
     fn make_adaptive(cfg: &RunConfig) -> Option<AdaptiveBudget> {
@@ -388,6 +510,7 @@ impl Engine {
                 kv: KvView::flat(&kzero, &kzero, c.cache_cap),
                 feats_in: None,
                 probe: false,
+                session: None,
             }, &mut self.t_scratch)?;
         }
         let dzero = vec![0.0f32; c.draft.cache_elems(c.cache_cap)];
@@ -403,6 +526,7 @@ impl Engine {
                 kv: KvView::flat(&dzero, &dzero, c.cache_cap),
                 feats_in: Some(&feats),
                 probe: false,
+                session: None,
             }, &mut self.d_scratch[0])?;
         }
         // Bring the second (ping-pong) draft scratch to capacity too.
@@ -448,6 +572,9 @@ impl Engine {
         self.timers = StageTimer::new(self.cfg.instrument);
         self.adaptive = Self::make_adaptive(&self.cfg);
         self.d_cur = 0;
+        // bound sessions now mirror a dead conversation; the next
+        // prefill re-syncs them wholesale (storage reused)
+        self.sessions_stale = true;
         self.inflight = None;
     }
 
@@ -614,6 +741,9 @@ impl Engine {
         self.attn_hist = attn_hist;
         self.d_cur = d_cur;
         self.timers = StageTimer::new(self.cfg.instrument);
+        // the restored caches are a different conversation than the
+        // bound session mirrors — resync at the next prefill
+        self.sessions_stale = true;
         self.inflight = None;
         Ok(())
     }
@@ -636,6 +766,7 @@ impl Engine {
         if prompt.is_empty() {
             bail!("empty prompt");
         }
+        self.ensure_sessions(backend)?;
         let chunk_max = self.contract.prefill_chunk();
         let f = self.contract.feat_dim;
         if self.feat_last.len() != f {
@@ -657,6 +788,7 @@ impl Engine {
             self.pos_buf.clear();
             self.pos_buf.extend((0..s).map(|i| (t + i.min(n.saturating_sub(1))) as i32));
             let mask = self.mb.chain_incremental(MaskStream::TeacherChain, s, n, t, None);
+            let session = Self::ticket(self.t_cache.as_ref(), &self.t_session);
             let guard = self.t_cache.kv_guard();
             backend.teacher_step(self.cfg.mode, StepArgs {
                 tokens: &self.tok_buf,
@@ -665,8 +797,12 @@ impl Engine {
                 kv: guard.view(),
                 feats_in: None,
                 probe: false,
+                session,
             }, &mut self.t_scratch)?;
             drop(guard);
+            if session.is_some() {
+                self.t_cache.mark_synced();
+            }
             stats.teacher_calls += 1;
             self.t_cache.append_committed(&self.t_scratch.k_new, &self.t_scratch.v_new, s, n)?;
             if self.use_draft {
@@ -723,6 +859,7 @@ impl Engine {
             self.pos_buf.extend((0..s).map(|i| (d + i.min(take - 1)) as i32));
             let mask =
                 self.mb.chain_incremental(MaskStream::DraftChain, s, take, d, self.cfg.draft_window);
+            let session = Self::ticket(self.d_cache.as_ref(), &self.d_session);
             let guard = self.d_cache.kv_guard();
             backend.draft_step(StepArgs {
                 tokens: &self.tok_buf,
@@ -731,8 +868,12 @@ impl Engine {
                 kv: guard.view(),
                 feats_in: Some(&self.feats_buf),
                 probe: self.cfg.attention_stats,
+                session,
             }, &mut self.d_scratch[self.d_cur])?;
             drop(guard);
+            if session.is_some() {
+                self.d_cache.mark_synced();
+            }
             stats.draft_calls += 1;
             self.d_cache.append_committed(
                 &self.d_scratch[self.d_cur].k_new,
@@ -806,6 +947,7 @@ impl Engine {
             let mask = self.mb.chain_incremental(MaskStream::TeacherChain, s, 1, t, None);
             self.timers.add("mask_build", tm.elapsed().as_secs_f64());
             let tv = Instant::now();
+            let session = Self::ticket(self.t_cache.as_ref(), &self.t_session);
             let guard = self.t_cache.kv_guard();
             backend.teacher_step(self.cfg.mode, StepArgs {
                 tokens: &self.tok_buf,
@@ -814,8 +956,12 @@ impl Engine {
                 kv: guard.view(),
                 feats_in: None,
                 probe: false,
+                session,
             }, &mut self.t_scratch)?;
             drop(guard);
+            if session.is_some() {
+                self.t_cache.mark_synced();
+            }
             self.timers.add("verify", tv.elapsed().as_secs_f64());
             stats.teacher_calls += 1;
             stats.rounds += 1;
@@ -1032,6 +1178,7 @@ impl Engine {
             s: round.s_pad,
             live: round.tens.live,
             ctx_len: round.t_len,
+            session: Self::ticket(self.t_cache.as_ref(), &self.t_session),
         })
     }
 
@@ -1039,6 +1186,7 @@ impl Engine {
     /// round's payload, outputs into the engine's own scratch.
     fn verify_own(&mut self, backend: &mut dyn ModelBackend) -> Result<()> {
         let tv = Instant::now();
+        let session = Self::ticket(self.t_cache.as_ref(), &self.t_session);
         {
             let fl = self.inflight.as_ref().context("no generation in flight")?;
             let round = fl.round.as_ref().context("verify without a prepared round")?;
@@ -1055,7 +1203,11 @@ impl Engine {
                 kv: guard.view(),
                 feats_in: None,
                 probe: false,
+                session,
             }, &mut self.t_scratch)?;
+        }
+        if session.is_some() {
+            self.t_cache.mark_synced();
         }
         self.timers.add("verify", tv.elapsed().as_secs_f64());
         if let Some(fl) = self.inflight.as_mut() {
@@ -1081,6 +1233,11 @@ impl Engine {
             fused.s()
         );
         self.t_scratch.scatter_from(fused, b, s_pad);
+        // the fused launch consumed this request's session ticket (the
+        // verifier passes verify_payload().session straight through)
+        if self.t_session.is_some() {
+            self.t_cache.mark_synced();
+        }
         if let Some(fl) = self.inflight.as_mut() {
             if let Some(r) = fl.round.as_mut() {
                 r.verified = true;
@@ -1260,6 +1417,7 @@ impl Engine {
         }
         let write_idx = 1 - self.d_cur;
         let mask = self.mb.incremental(MaskStream::DraftFrontier, s).as_slice();
+        let session = Self::ticket(self.d_cache.as_ref(), &self.d_session);
         let guard = self.d_cache.kv_guard();
         backend.draft_step(StepArgs {
             tokens: &self.tok_buf,
@@ -1268,8 +1426,12 @@ impl Engine {
             kv: guard.view(),
             feats_in: Some(&self.feats_buf),
             probe: false,
+            session,
         }, &mut self.d_scratch[write_idx])?;
         drop(guard);
+        if session.is_some() {
+            self.d_cache.mark_synced();
+        }
         stats.draft_calls += 1;
         let base_row = self.d_cache.branch_rows();
         self.d_cache.append_branch(

@@ -126,6 +126,7 @@ pub fn verify_golden(backend: &mut dyn ModelBackend, rec: &GoldenRecord) -> Resu
         kv: KvView::flat(&gi.k_cache, &gi.v_cache, contract.cache_cap),
         feats_in: gi.feats.as_deref(),
         probe: false,
+        session: None,
     };
     let mut out = StepScratch::new();
     if role == "teacher" {

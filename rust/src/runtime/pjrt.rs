@@ -1,10 +1,46 @@
-//! The production backend: artifact registry + PJRT execution.
+//! The production backend: artifact registry + PJRT execution behind the
+//! plan → bind → execute protocol.
+//!
+//! * **Plan** — the capabilities table is parsed from the artifact
+//!   manifest ([`Capabilities::from_manifest`]); every launch resolves a
+//!   [`LaunchPlan`] whose [`ModuleKey`] names the artifact
+//!   (`teacher_fused_s16`, `teacher_fused_b4_s32`, …), so no shape ever
+//!   `bail!`s — an uncovered request surfaces as a typed
+//!   [`crate::backend::PlanError`] listing the compiled variants.
+//! * **Bind** — when the artifact set ships a `kv_append_{role}_n{N}`
+//!   scatter-update module, [`ModelBackend::bind_kv`] keeps a
+//!   conversation cache device-resident: the bound `[L, cap, H, Dh]`
+//!   buffers are uploaded once and retained ([`xla::PjRtBuffer`]s held
+//!   across launches); each ticketed step ships only the dirty-row delta
+//!   and applies it device-side through the scatter module, so
+//!   steady-state `upload_bytes` per step no longer scales with the
+//!   cache capacity. Without the scatter module, `bind_kv` answers
+//!   [`crate::backend::PlanError::SessionUnsupported`] and callers fall
+//!   back to full-view upload (the pre-session behaviour, and always the
+//!   eager/debug path's behaviour).
+//! * **Execute** — module outputs land through [`xla::Literal::read_into`]
+//!   directly in the prepared [`StepScratch`] slices (output donation to
+//!   host scratch): no intermediate per-output `Vec`. Fused
+//!   `teacher_{mode}_b{B}_s{S}` artifacts run a whole verification group
+//!   as **one** launch ([`ModelBackend::execute_batch`]); groups wider
+//!   than any compiled variant are split by the
+//!   [`crate::coordinator::FusedVerifier`], never silently emulated.
+//!
+//! Fused launches with bound sessions still upload the staged per-request
+//! caches (the fused modules take a stacked `[B, L, cap, H, Dh]` input;
+//! feeding retained per-conversation buffers needs the gather-aware
+//! modules tracked in ROADMAP) — the mirrors are kept in sync regardless,
+//! so the single-request steps around a fused tick stay delta-priced.
 
-use crate::backend::{KvIndex, KvView, ModelBackend, StepArgs, StepScratch};
-use crate::config::{Contract, Dims, ExecMode};
+use crate::backend::{
+    BatchStepArgs, KvIndex, KvSession, KvView, LaunchPlan, ModelBackend, ModuleKey, ModuleRole,
+    PlanError, SessionTicket, StepArgs, StepScratch,
+};
+use crate::config::{Capabilities, Contract, Dims, ExecMode};
 use crate::json;
 use anyhow::{bail, Context, Result};
 use std::collections::HashMap;
+use std::ops::Range;
 use std::path::{Path, PathBuf};
 use std::time::Instant;
 
@@ -16,40 +52,109 @@ pub struct RuntimeStats {
     pub compiles: u64,
     /// Total compile wall time, seconds.
     pub compile_secs: f64,
-    /// Module executions.
+    /// Module executions (fused batched verification counts once;
+    /// session scatter-updates count their own launches).
     pub executions: u64,
     /// Total execution wall time, seconds.
     pub execute_secs: f64,
-    /// Host->device bytes shipped as literals (per-call tensors).
+    /// Host->device bytes shipped (per-call tensors; bound sessions ship
+    /// dirty-row deltas instead of full caches).
     pub upload_bytes: u64,
 }
 
+/// Persistent host staging for one role's materialized paged views: the
+/// flat-cache modules take a contiguous `[L, cap, H, Dh]` input, so a
+/// block-table view is gathered here before upload. Sized once; each
+/// call re-gathers only the mapped rows and zeroes only rows a previous
+/// (larger) materialization left behind.
+#[derive(Default)]
+struct FlatStage {
+    k: Vec<f32>,
+    v: Vec<f32>,
+    /// Rows holding live gathered data from the previous call.
+    rows: usize,
+}
+
+/// One bound conversation cache: a host mirror plus retained device
+/// buffers updated through the `kv_append` scatter module.
+struct DeviceSession {
+    role: ModuleRole,
+    /// Host mirror, flat `[L, cap, H, Dh]` (logical-row indexed).
+    host_k: Vec<f32>,
+    host_v: Vec<f32>,
+    /// Mirrored readable rows.
+    rows: usize,
+    /// Device-resident (k, v) cache buffers; `None` after a device-side
+    /// failure — the next step uploads the mirror wholesale.
+    dev: Option<(xla::PjRtBuffer, xla::PjRtBuffer)>,
+}
+
 /// The production [`ModelBackend`]: AOT HLO artifacts executed through
-/// the PJRT CPU client. Fused batched verification currently uses the
-/// trait's sequential fallback (true `[B, S]` modules are a compile-side
-/// follow-up).
+/// the PJRT CPU client (see the module docs for the protocol).
 pub struct PjrtBackend {
     client: xla::PjRtClient,
     dir: PathBuf,
     contract: Contract,
+    caps: Capabilities,
     exes: HashMap<String, xla::PjRtLoadedExecutable>,
     /// Compile/execute/upload counters (surfaced in manifests).
     pub stats: RuntimeStats,
-    /// Probe-capable draft variants present in the artifact set.
-    probe_variants: Vec<usize>,
-    /// Persistent host staging for paged cache views: the AOT modules
-    /// take a contiguous `[L, cap, H, Dh]` cache input, so a block-table
-    /// view is gathered into these buffers before upload (the sequential
-    /// fallback of the paged layout — compiling gather-aware modules is a
-    /// compile-side follow-up). Sized once per role; steady-state calls
-    /// reuse them, preserving the scratch-stable contract.
-    kv_flat_k: Vec<f32>,
-    kv_flat_v: Vec<f32>,
+    /// Per-role paged-view materialization staging (teacher, draft).
+    stage: [FlatStage; 2],
+    /// Fused-batch cache staging (`[B, L, cap, H, Dh]`, both sides).
+    fused_k: Vec<f32>,
+    fused_v: Vec<f32>,
+    /// Live gathered rows per fused slot from the previous stacking
+    /// (stale-tail zeroing bound, like [`FlatStage::rows`]).
+    fused_rows: Vec<usize>,
+    /// Reusable launch-input vector (buffer handles; capacity reused).
+    inputs: Vec<xla::PjRtBuffer>,
+    /// Session delta staging (`[L, N, H, Dh]` + row indices).
+    delta_k: Vec<f32>,
+    delta_v: Vec<f32>,
+    delta_rows: Vec<i32>,
+    /// Bound KV sessions, keyed by session id.
+    sessions: HashMap<u64, DeviceSession>,
+    next_session: u64,
+}
+
+/// Staging-array index of a role.
+fn stage_idx(role: ModuleRole) -> usize {
+    match role {
+        ModuleRole::Teacher => 0,
+        ModuleRole::Draft => 1,
+    }
+}
+
+/// Gather logical rows `[lo, hi)` of a (gather-aware) view into flat
+/// `[L, cap, H, Dh]` destination storage — the one row-copy loop shared
+/// by mirror sync, session bind/rebind, paged-view materialization and
+/// fused-cache stacking.
+fn gather_rows_flat(
+    kv: &KvView,
+    dst_k: &mut [f32],
+    dst_v: &mut [f32],
+    lo: usize,
+    hi: usize,
+    layers: usize,
+    rs: usize,
+    cap: usize,
+) {
+    for r in lo..hi {
+        for l in 0..layers {
+            let src = kv.row_start(layers, rs, l, r);
+            let dst = (l * cap + r) * rs;
+            dst_k[dst..dst + rs].copy_from_slice(&kv.k[src..src + rs]);
+            dst_v[dst..dst + rs].copy_from_slice(&kv.v[src..src + rs]);
+        }
+    }
 }
 
 impl PjrtBackend {
-    /// Open an artifact directory: parse + validate the manifest, create
-    /// the PJRT CPU client. Executables compile lazily on first use.
+    /// Open an artifact directory: parse + validate the manifest
+    /// (contract fields *and* the artifact naming schema), build the
+    /// capabilities table, create the PJRT CPU client. Executables
+    /// compile lazily on first use.
     pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
         let dir = dir.as_ref().to_path_buf();
         let manifest_path = dir.join("manifest.json");
@@ -58,51 +163,66 @@ impl PjrtBackend {
         let manifest = json::parse(&text)
             .map_err(|e| anyhow::anyhow!("parsing {manifest_path:?}: {e}"))?;
         let contract = Contract::from_manifest(&manifest)?;
-        let probe_variants = manifest
-            .get("artifacts")
-            .and_then(json::Json::as_arr)
-            .map(|arts| {
-                arts.iter()
-                    .filter_map(|a| a.get("name").and_then(json::Json::as_str))
-                    .filter_map(|n| n.strip_prefix("draft_probe_s").and_then(|s| s.parse().ok()))
-                    .collect()
-            })
-            .unwrap_or_default();
+        let caps = Capabilities::from_manifest(&manifest)?;
         let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
         Ok(Self {
             client,
             dir,
             contract,
+            caps,
             exes: HashMap::new(),
             stats: RuntimeStats::default(),
-            probe_variants,
-            kv_flat_k: Vec::new(),
-            kv_flat_v: Vec::new(),
+            stage: [FlatStage::default(), FlatStage::default()],
+            fused_k: Vec::new(),
+            fused_v: Vec::new(),
+            fused_rows: Vec::new(),
+            inputs: Vec::new(),
+            delta_k: Vec::new(),
+            delta_v: Vec::new(),
+            delta_rows: Vec::new(),
+            sessions: HashMap::new(),
+            next_session: 0,
         })
     }
 
-    /// Materialize a paged KV view into the persistent flat staging
-    /// buffers (`[L, cap, H, Dh]`), gathering every mapped logical row
-    /// through the block table. Unmapped rows are zeroed — the additive
-    /// mask closes them, but the uploaded tensor must still be fully
-    /// defined. Flat views skip this entirely.
-    fn materialize_kv(&mut self, kv: &KvView, dims: Dims) {
+    /// Role dimensions of the contract.
+    fn dims_of(&self, role: ModuleRole) -> Dims {
+        match role {
+            ModuleRole::Teacher => self.contract.teacher,
+            ModuleRole::Draft => self.contract.draft,
+        }
+    }
+
+    /// Materialize a paged KV view into the role's persistent flat
+    /// staging (`[L, cap, H, Dh]`), gathering every mapped logical row
+    /// through the block table. The staging is sized **once** per role
+    /// and reused across calls; only rows past this call's mapped region
+    /// that a previous (larger) materialization wrote are re-zeroed —
+    /// not the whole buffer (the old per-call full zero-fill was pure
+    /// waste: `cap * L * H * Dh` writes per step).
+    fn materialize_kv(&mut self, kv: &KvView, role: ModuleRole) {
+        let dims = self.dims_of(role);
         let cap = self.contract.cache_cap;
         let rs = dims.heads * dims.d_head;
         let n = dims.cache_elems(cap);
-        self.kv_flat_k.clear();
-        self.kv_flat_k.resize(n, 0.0);
-        self.kv_flat_v.clear();
-        self.kv_flat_v.resize(n, 0.0);
+        let stage = &mut self.stage[stage_idx(role)];
+        if stage.k.len() < n {
+            stage.k.resize(n, 0.0);
+            stage.v.resize(n, 0.0);
+            stage.rows = 0;
+        }
         let rows = kv.mapped_rows().min(cap);
-        for l in 0..dims.layers {
-            for r in 0..rows {
-                let src = kv.row_start(dims.layers, rs, l, r);
-                let dst = (l * cap + r) * rs;
-                self.kv_flat_k[dst..dst + rs].copy_from_slice(&kv.k[src..src + rs]);
-                self.kv_flat_v[dst..dst + rs].copy_from_slice(&kv.v[src..src + rs]);
+        let prev = stage.rows.min(cap);
+        gather_rows_flat(kv, &mut stage.k, &mut stage.v, 0, rows, dims.layers, rs, cap);
+        if prev > rows {
+            for l in 0..dims.layers {
+                let z0 = (l * cap + rows) * rs;
+                let z1 = (l * cap + prev) * rs;
+                stage.k[z0..z1].fill(0.0);
+                stage.v[z0..z1].fill(0.0);
             }
         }
+        stage.rows = rows;
     }
 
     /// The artifact directory this backend was loaded from.
@@ -110,35 +230,37 @@ impl PjrtBackend {
         &self.dir
     }
 
-    /// Lazily compile a module by artifact name (e.g. `teacher_fused_s16`).
-    fn exe(&mut self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
-        if !self.exes.contains_key(name) {
-            let path = self.dir.join(format!("{name}.hlo.txt"));
-            let t0 = Instant::now();
-            let proto = xla::HloModuleProto::from_text_file(
-                path.to_str().context("artifact path not utf-8")?,
-            )
-            .map_err(|e| anyhow::anyhow!("parsing {path:?}: {e:?}"))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = self
-                .client
-                .compile(&comp)
-                .map_err(|e| anyhow::anyhow!("compiling {name}: {e:?}"))?;
-            self.stats.compiles += 1;
-            self.stats.compile_secs += t0.elapsed().as_secs_f64();
-            self.exes.insert(name.to_string(), exe);
+    /// Compile `name` if it is not already resident. The launch path
+    /// then does a single map lookup per call (the old
+    /// `contains_key` + index pair did two on every launch).
+    fn ensure_compiled(&mut self, name: &str) -> Result<()> {
+        if self.exes.contains_key(name) {
+            return Ok(());
         }
-        Ok(&self.exes[name])
+        let path = self.dir.join(format!("{name}.hlo.txt"));
+        let t0 = Instant::now();
+        let proto =
+            xla::HloModuleProto::from_text_file(path.to_str().context("artifact path not utf-8")?)
+                .map_err(|e| anyhow::anyhow!("parsing {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compiling {name}: {e:?}"))?;
+        self.stats.compiles += 1;
+        self.stats.compile_secs += t0.elapsed().as_secs_f64();
+        self.exes.insert(name.to_string(), exe);
+        Ok(())
     }
 
     /// Pre-compile the variants a run will need (avoids first-call jitter
     /// in timed benchmarks).
     pub fn warmup(&mut self, mode: ExecMode, teacher_s: &[usize], draft_s: &[usize]) -> Result<()> {
-        for s in teacher_s {
-            self.exe(&format!("teacher_{}_s{s}", mode.as_str()))?;
+        for &s in teacher_s {
+            self.ensure_compiled(&ModuleKey::teacher(mode, s).artifact_name())?;
         }
-        for s in draft_s {
-            self.exe(&format!("draft_s{s}"))?;
+        for &s in draft_s {
+            self.ensure_compiled(&ModuleKey::draft(s, false).artifact_name())?;
         }
         Ok(())
     }
@@ -162,81 +284,162 @@ impl PjrtBackend {
             .map_err(|e| anyhow::anyhow!("uploading i32 {dims:?}: {e:?}"))
     }
 
-    /// Execute a compiled module and land its outputs in the caller's
-    /// scratch. The binding's `to_vec` still allocates one host `Vec`
-    /// per output before the bounded `copy_from_slice` into the
-    /// (pre-sized, reusable) scratch — so PJRT steps are *not* yet
-    /// allocation-free, only scratch-stable. Output buffer donation
-    /// (`to_literal` into a preallocated host buffer) removes both the
-    /// intermediate `Vec`s and the copy; the scratch API keeps that a
-    /// backend-local change (tracked in ROADMAP "Open items").
-    fn run_module(
-        &mut self,
+    /// Land a launch's tuple outputs in the caller's **prepared** scratch
+    /// through `Literal::read_into` (output donation to host scratch: no
+    /// intermediate per-output `Vec`). `probe` selects the 5-output
+    /// arity.
+    fn read_outputs(
         name: &str,
-        inputs: &[xla::PjRtBuffer],
-        upload_bytes: u64,
-        want_probe: bool,
-        dims: Dims,
+        result: &[Vec<xla::PjRtBuffer>],
+        probe: bool,
         out: &mut StepScratch,
     ) -> Result<()> {
-        let s_probe = want_probe; // tuple arity changes with probe outputs
-        let t0 = Instant::now();
-        let exe = self.exe(name)?;
-        let result = exe
-            .execute_b::<&xla::PjRtBuffer>(&inputs.iter().collect::<Vec<_>>())
-            .map_err(|e| anyhow::anyhow!("executing {name}: {e:?}"))?;
-        let tuple = result[0][0]
+        let tuple = result
+            .first()
+            .and_then(|r| r.first())
+            .with_context(|| format!("{name}: empty execution result"))?
             .to_literal_sync()
             .map_err(|e| anyhow::anyhow!("fetching {name} outputs: {e:?}"))?;
-        let mut parts = tuple
+        let parts = tuple
             .to_tuple()
             .map_err(|e| anyhow::anyhow!("untupling {name} outputs: {e:?}"))?;
-        let expect = if s_probe { 5 } else { 4 };
+        let expect = if probe { 5 } else { 4 };
         if parts.len() != expect {
             bail!("{name}: expected {expect} outputs, got {}", parts.len());
         }
-        let attn_top1 = if s_probe {
-            let l = parts.pop().unwrap();
-            Some(l.to_vec::<i32>().map_err(|e| anyhow::anyhow!("attn_top1: {e:?}"))?)
-        } else {
-            None
+        let read = |i: usize, dst: &mut [f32], what: &str| -> Result<()> {
+            parts[i]
+                .read_into(dst)
+                .map_err(|e| anyhow::anyhow!("{name}: reading {what}: {e:?}"))
         };
-        let v_new = parts.pop().unwrap().to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e:?}"))?;
-        let k_new = parts.pop().unwrap().to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e:?}"))?;
-        let feats = parts.pop().unwrap().to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e:?}"))?;
-        let logits = parts.pop().unwrap().to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e:?}"))?;
-        let s = logits.len() / self.contract.vocab;
-        out.prepare(
-            s,
-            self.contract.vocab,
-            self.contract.feat_dim,
-            dims.layers,
-            dims.heads,
-            dims.d_head,
-            attn_top1.is_some(),
-        );
-        let check = |got: usize, want: usize, what: &str| -> Result<()> {
-            if got != want {
-                bail!("{name}: {what} size {got} != expected {want}");
-            }
-            Ok(())
-        };
-        check(logits.len(), out.logits.len(), "logits")?;
-        check(feats.len(), out.feats.len(), "feats")?;
-        check(k_new.len(), out.k_new.len(), "k_new")?;
-        check(v_new.len(), out.v_new.len(), "v_new")?;
-        out.logits.copy_from_slice(&logits);
-        out.feats.copy_from_slice(&feats);
-        out.k_new.copy_from_slice(&k_new);
-        out.v_new.copy_from_slice(&v_new);
-        if let Some(a) = attn_top1 {
-            check(a.len(), out.attn_top1.len(), "attn_top1")?;
-            out.attn_top1.copy_from_slice(&a);
+        read(0, &mut out.logits, "logits")?;
+        read(1, &mut out.feats, "feats")?;
+        read(2, &mut out.k_new, "k_new")?;
+        read(3, &mut out.v_new, "v_new")?;
+        if probe {
+            parts[4]
+                .read_into(&mut out.attn_top1)
+                .map_err(|e| anyhow::anyhow!("{name}: reading attn_top1: {e:?}"))?;
         }
-        self.stats.executions += 1;
-        self.stats.execute_secs += t0.elapsed().as_secs_f64();
-        self.stats.upload_bytes += upload_bytes;
         Ok(())
+    }
+
+    /// Sync a bound session with its cache's dirty delta: update the host
+    /// mirror from the (gather-aware) live view, then apply the same
+    /// rows device-side through the `kv_append_{role}_n{N}` scatter
+    /// module (chunked to the compiled delta width; short deltas pad by
+    /// repeating their last row — idempotent writes). Charges only the
+    /// delta bytes: this is the transfer that replaces the per-step full
+    /// cache upload.
+    fn sync_session(&mut self, t: &SessionTicket, kv: &KvView, role: ModuleRole) -> Result<()> {
+        let mut sess = self
+            .sessions
+            .remove(&t.id)
+            .ok_or(PlanError::UnknownSession { id: t.id })?;
+        if sess.role != role {
+            let bound = sess.role;
+            self.sessions.insert(t.id, sess);
+            return Err(PlanError::RoleMismatch { bound, requested: role }.into());
+        }
+        let dims = self.dims_of(role);
+        let cap = self.contract.cache_cap;
+        let rs = dims.heads * dims.d_head;
+        let range = t.sync_range();
+        gather_rows_flat(
+            kv,
+            &mut sess.host_k,
+            &mut sess.host_v,
+            range.start,
+            range.end,
+            dims.layers,
+            rs,
+            cap,
+        );
+        sess.rows = t.rows;
+        if !range.is_empty() {
+            if let Some((dk, dv)) = sess.dev.take() {
+                match self.kv_append(&sess, dk, dv, range.clone(), role) {
+                    Ok(pair) => sess.dev = Some(pair),
+                    Err(e) => {
+                        self.sessions.insert(t.id, sess);
+                        return Err(e);
+                    }
+                }
+            }
+            self.stats.upload_bytes += (range.len() * 2 * dims.layers * rs * 4) as u64;
+        }
+        self.sessions.insert(t.id, sess);
+        Ok(())
+    }
+
+    /// Apply mirror rows `range` to the retained device buffers through
+    /// the scatter-update module, returning the updated buffers.
+    fn kv_append(
+        &mut self,
+        sess: &DeviceSession,
+        mut dk: xla::PjRtBuffer,
+        mut dv: xla::PjRtBuffer,
+        range: Range<usize>,
+        role: ModuleRole,
+    ) -> Result<(xla::PjRtBuffer, xla::PjRtBuffer)> {
+        let dims = self.dims_of(role);
+        let cap = self.contract.cache_cap;
+        let rs = dims.heads * dims.d_head;
+        let n_var = self
+            .caps
+            .kv_append_width(role, range.len())
+            .with_context(|| format!("no kv_append module for role {}", role.as_str()))?;
+        let mut r0 = range.start;
+        while r0 < range.end {
+            let take = (range.end - r0).min(n_var);
+            self.delta_k.clear();
+            self.delta_k.resize(dims.layers * n_var * rs, 0.0);
+            self.delta_v.clear();
+            self.delta_v.resize(dims.layers * n_var * rs, 0.0);
+            self.delta_rows.clear();
+            self.delta_rows.resize(n_var, 0);
+            for i in 0..n_var {
+                // pad by repeating the last live row: duplicate indices
+                // re-write identical data, so padding is a no-op
+                let r = r0 + i.min(take - 1);
+                self.delta_rows[i] = r as i32;
+                for l in 0..dims.layers {
+                    let src = (l * cap + r) * rs;
+                    let dst = (l * n_var + i) * rs;
+                    self.delta_k[dst..dst + rs].copy_from_slice(&sess.host_k[src..src + rs]);
+                    self.delta_v[dst..dst + rs].copy_from_slice(&sess.host_v[src..src + rs]);
+                }
+            }
+            let name = format!("kv_append_{}_n{}", role.as_str(), n_var);
+            self.ensure_compiled(&name)?;
+            let rows_buf = self.upload_i32(&self.delta_rows, &[n_var])?;
+            let dkb =
+                self.upload_f32(&self.delta_k, &[dims.layers, n_var, dims.heads, dims.d_head])?;
+            let dvb =
+                self.upload_f32(&self.delta_v, &[dims.layers, n_var, dims.heads, dims.d_head])?;
+            let t0 = Instant::now();
+            let exe = self.exes.get(&name).expect("compiled above");
+            let refs: [&xla::PjRtBuffer; 5] = [&dk, &dv, &rows_buf, &dkb, &dvb];
+            let mut result = exe
+                .execute_b::<&xla::PjRtBuffer>(&refs)
+                .map_err(|e| anyhow::anyhow!("executing {name}: {e:?}"))?;
+            self.stats.executions += 1;
+            self.stats.execute_secs += t0.elapsed().as_secs_f64();
+            let tuple_buf = result
+                .first_mut()
+                .and_then(|r| r.pop())
+                .with_context(|| format!("{name}: empty execution result"))?;
+            let mut outs = tuple_buf
+                .destructure_tuple()
+                .map_err(|e| anyhow::anyhow!("{name}: destructuring outputs: {e:?}"))?;
+            if outs.len() != 2 {
+                bail!("{name}: expected 2 outputs, got {}", outs.len());
+            }
+            dv = outs.pop().expect("len checked");
+            dk = outs.pop().expect("len checked");
+            r0 += take;
+        }
+        Ok((dk, dv))
     }
 }
 
@@ -245,63 +448,334 @@ impl ModelBackend for PjrtBackend {
         &self.contract
     }
 
-    fn teacher_step(&mut self, mode: ExecMode, args: StepArgs, out: &mut StepScratch)
-        -> Result<()> {
-        let s = args.tokens.len();
-        if !self.contract.teacher_s.contains(&s) {
-            bail!("teacher_step: {s} is not a compiled S variant");
-        }
-        let d = self.contract.teacher;
-        let cap = self.contract.cache_cap;
-        let name = format!("teacher_{}_s{s}", mode.as_str());
-        let cache_dims = [d.layers, cap, d.heads, d.d_head];
-        if matches!(args.kv.index, KvIndex::Paged { .. }) {
-            self.materialize_kv(&args.kv, d);
-        }
-        let (ck, cv): (&[f32], &[f32]) = match args.kv.index {
-            KvIndex::Flat { .. } => (args.kv.k, args.kv.v),
-            KvIndex::Paged { .. } => (&self.kv_flat_k, &self.kv_flat_v),
-        };
-        let inputs = vec![
-            self.upload_i32(args.tokens, &[s])?,
-            self.upload_i32(args.positions, &[s])?,
-            self.upload_f32(args.mask, &[s, cap + s])?,
-            self.upload_f32(ck, &cache_dims)?,
-            self.upload_f32(cv, &cache_dims)?,
-        ];
-        let upload = (args.mask.len() + ck.len() + cv.len()) * 4 + s * 8;
-        self.run_module(&name, &inputs, upload as u64, false, d, out)
+    fn capabilities(&self) -> &Capabilities {
+        &self.caps
     }
 
-    fn draft_step(&mut self, args: StepArgs, out: &mut StepScratch) -> Result<()> {
-        let s = args.tokens.len();
-        if !self.contract.draft_s.contains(&s) {
-            bail!("draft_step: {s} is not a compiled S variant");
-        }
-        let d = self.contract.draft;
+    fn execute(&mut self, plan: &LaunchPlan, args: StepArgs, out: &mut StepScratch) -> Result<()> {
+        let role = plan.key.role;
+        let dims = self.dims_of(role);
         let cap = self.contract.cache_cap;
-        let feats = args.feats_in.context("draft_step requires feats_in")?;
-        // probe variants exist only for a subset of S
-        let probe = args.probe && self.probe_variants.contains(&s);
-        let name = if probe { format!("draft_probe_s{s}") } else { format!("draft_s{s}") };
-        let cache_dims = [d.layers, cap, d.heads, d.d_head];
-        if matches!(args.kv.index, KvIndex::Paged { .. }) {
-            self.materialize_kv(&args.kv, d);
-        }
-        let (ck, cv): (&[f32], &[f32]) = match args.kv.index {
-            KvIndex::Flat { .. } => (args.kv.k, args.kv.v),
-            KvIndex::Paged { .. } => (&self.kv_flat_k, &self.kv_flat_v),
+        let s = args.tokens.len();
+        let name = plan.key.artifact_name();
+        // the compiled module's input shapes are [key.s]/[key.s, cap+key.s]:
+        // a caller that planned but did not pad would otherwise surface as
+        // an opaque XLA argument-shape error deep inside the launch (and
+        // pass silently on the shape-agnostic sim)
+        anyhow::ensure!(
+            s == plan.key.s,
+            "inputs padded to {s} slots but the plan resolved '{name}' — callers must pad \
+             token/position/mask staging to the planned variant before executing"
+        );
+        // session sync first (mutable phase; may launch kv_append)
+        let ticket = match args.session {
+            Some(t) => {
+                self.sync_session(&t, &args.kv, role)?;
+                Some(t)
+            }
+            None => None,
         };
-        let inputs = vec![
-            self.upload_i32(args.tokens, &[s])?,
-            self.upload_f32(feats, &[s, self.contract.feat_dim])?,
-            self.upload_i32(args.positions, &[s])?,
-            self.upload_f32(args.mask, &[s, cap + s])?,
-            self.upload_f32(ck, &cache_dims)?,
-            self.upload_f32(cv, &cache_dims)?,
-        ];
-        let upload = (args.mask.len() + ck.len() + cv.len() + feats.len()) * 4 + s * 8;
-        self.run_module(&name, &inputs, upload as u64, probe, d, out)
+        // paged view without a session: gather into the role staging
+        if ticket.is_none() && matches!(args.kv.index, KvIndex::Paged { .. }) {
+            self.materialize_kv(&args.kv, role);
+        }
+        out.prepare(
+            s,
+            self.contract.vocab,
+            self.contract.feat_dim,
+            dims.layers,
+            dims.heads,
+            dims.d_head,
+            plan.key.probe,
+        );
+        let mut inputs = std::mem::take(&mut self.inputs);
+        inputs.clear();
+        let run = (|| -> Result<()> {
+            let mut upload = (s * 8 + args.mask.len() * 4) as u64;
+            inputs.push(self.upload_i32(args.tokens, &[s])?);
+            if role == ModuleRole::Draft {
+                let feats = args.feats_in.context("draft step requires feats_in")?;
+                inputs.push(self.upload_f32(feats, &[s, self.contract.feat_dim])?);
+                upload += (feats.len() * 4) as u64;
+            }
+            inputs.push(self.upload_i32(args.positions, &[s])?);
+            inputs.push(self.upload_f32(args.mask, &[s, cap + s])?);
+            let cache_dims = [dims.layers, cap, dims.heads, dims.d_head];
+            // cache inputs: retained device buffers > session mirror >
+            // (materialized) host view
+            let dev_resident = ticket
+                .map(|t| self.sessions.get(&t.id).is_some_and(|sess| sess.dev.is_some()))
+                .unwrap_or(false);
+            if !dev_resident {
+                let n = dims.cache_elems(cap);
+                let (ck, cv): (&[f32], &[f32]) = if let Some(t) = ticket {
+                    let sess = &self.sessions[&t.id];
+                    (&sess.host_k, &sess.host_v)
+                } else {
+                    match args.kv.index {
+                        KvIndex::Flat { .. } => (args.kv.k, args.kv.v),
+                        KvIndex::Paged { .. } => {
+                            let stage = &self.stage[stage_idx(role)];
+                            (&stage.k[..n], &stage.v[..n])
+                        }
+                    }
+                };
+                inputs.push(self.upload_f32(ck, &cache_dims)?);
+                inputs.push(self.upload_f32(cv, &cache_dims)?);
+                upload += ((ck.len() + cv.len()) * 4) as u64;
+            }
+            let t0 = Instant::now();
+            let exe = self.exes.get(&name).expect("compiled above");
+            let result = if dev_resident {
+                let t = ticket.expect("dev_resident implies ticket");
+                let (dk, dv) = self.sessions[&t.id].dev.as_ref().expect("dev checked");
+                let refs: Vec<&xla::PjRtBuffer> =
+                    inputs.iter().chain([dk, dv]).collect();
+                exe.execute_b::<&xla::PjRtBuffer>(&refs)
+            } else {
+                exe.execute_b::<xla::PjRtBuffer>(&inputs)
+            }
+            .map_err(|e| anyhow::anyhow!("executing {name}: {e:?}"))?;
+            Self::read_outputs(&name, &result, plan.key.probe, out)?;
+            self.stats.executions += 1;
+            self.stats.execute_secs += t0.elapsed().as_secs_f64();
+            self.stats.upload_bytes += upload;
+            Ok(())
+        })();
+        inputs.clear();
+        self.inputs = inputs;
+        run
+    }
+
+    /// True fused `[B, S]` dispatch: one `teacher_{mode}_b{B}_s{S}`
+    /// launch verifies the whole group. Inputs are the verifier-staged
+    /// `[B_key * S_key]` tokens/positions, the `[B_key, S_key, cap +
+    /// S_key]` mask block, and the per-request caches stacked into a
+    /// `[B_key, L, cap, H, Dh]` staging pair (group-padding requests
+    /// contribute zero blocks). A `B_key == 1` plan names the plain
+    /// single-request artifact, whose compiled input *ranks* differ from
+    /// the batched layout (`[S, cap+S]` mask, unstacked caches), so it is
+    /// routed through [`ModelBackend::execute`] instead.
+    fn execute_batch(
+        &mut self,
+        plan: &LaunchPlan,
+        args: BatchStepArgs,
+        out: &mut StepScratch,
+    ) -> Result<()> {
+        let (bk, sk) = (plan.key.b, plan.key.s);
+        anyhow::ensure!(!args.reqs.is_empty(), "execute_batch with an empty group");
+        if args.s_max != sk || args.tokens.len() != bk * sk || args.reqs.len() > bk {
+            // staging not padded to the planned variant (a direct
+            // `teacher_step_batch` caller rather than the FusedVerifier,
+            // which pads): run the correct sequential emulation instead
+            // of launching a mismatched module
+            return self.emulate_batch(plan.key.mode, args, out);
+        }
+        if bk == 1 {
+            // width-1 group: the plan names the single-request module
+            // (no batch axis compiled) — same data, unbatched ranks
+            let req = args.reqs[0];
+            return self.execute(
+                plan,
+                StepArgs {
+                    tokens: args.tokens,
+                    positions: args.positions,
+                    mask: args.mask,
+                    kv: req.kv,
+                    feats_in: None,
+                    probe: false,
+                    session: req.session,
+                },
+                out,
+            );
+        }
+        let dims = self.contract.teacher;
+        let cap = self.contract.cache_cap;
+        let rs = dims.heads * dims.d_head;
+        let name = plan.key.artifact_name();
+        self.ensure_compiled(&name)?;
+        // keep every ticketed mirror current (the ticket is consumed by
+        // this launch whether or not the fused module can read retained
+        // buffers — see the module docs)
+        for req in args.reqs.iter() {
+            if let Some(t) = req.session {
+                self.sync_session(&t, &req.kv, ModuleRole::Teacher)?;
+            }
+        }
+        // Stack per-request caches ([B_key, L, cap, H, Dh]). The staging
+        // is sized once and reused; like materialize_kv, each slot zeroes
+        // only rows a previous (larger) stacking left behind instead of
+        // memsetting the whole multi-MB pair every launch.
+        let n1 = dims.cache_elems(cap);
+        let total = bk * n1;
+        if self.fused_k.len() < total {
+            self.fused_k.resize(total, 0.0);
+            self.fused_v.resize(total, 0.0);
+        }
+        if self.fused_rows.len() < bk {
+            self.fused_rows.resize(bk, 0);
+        }
+        for bi in 0..bk {
+            let rows = args
+                .reqs
+                .get(bi)
+                .map(|req| req.kv.mapped_rows().min(cap))
+                .unwrap_or(0);
+            let base = bi * n1;
+            if let Some(req) = args.reqs.get(bi) {
+                gather_rows_flat(
+                    &req.kv,
+                    &mut self.fused_k[base..base + n1],
+                    &mut self.fused_v[base..base + n1],
+                    0,
+                    rows,
+                    dims.layers,
+                    rs,
+                    cap,
+                );
+            }
+            let prev = self.fused_rows[bi].min(cap);
+            if prev > rows {
+                for l in 0..dims.layers {
+                    let z0 = base + (l * cap + rows) * rs;
+                    let z1 = base + (l * cap + prev) * rs;
+                    self.fused_k[z0..z1].fill(0.0);
+                    self.fused_v[z0..z1].fill(0.0);
+                }
+            }
+            self.fused_rows[bi] = rows;
+        }
+        out.prepare_batch(
+            bk,
+            sk,
+            self.contract.vocab,
+            self.contract.feat_dim,
+            dims.layers,
+            dims.heads,
+            dims.d_head,
+            false,
+        );
+        let mut inputs = std::mem::take(&mut self.inputs);
+        inputs.clear();
+        let run = (|| -> Result<()> {
+            inputs.push(self.upload_i32(args.tokens, &[bk * sk])?);
+            inputs.push(self.upload_i32(args.positions, &[bk * sk])?);
+            inputs.push(self.upload_f32(args.mask, &[bk, sk, cap + sk])?);
+            let cache_dims = [bk, dims.layers, cap, dims.heads, dims.d_head];
+            // slice to this launch's extent: the staging may be larger
+            // after a previous wider group
+            inputs.push(self.upload_f32(&self.fused_k[..total], &cache_dims)?);
+            inputs.push(self.upload_f32(&self.fused_v[..total], &cache_dims)?);
+            let upload = (args.mask.len() * 4 + bk * sk * 8 + 2 * total * 4) as u64;
+            let t0 = Instant::now();
+            let exe = self.exes.get(&name).expect("compiled above");
+            let result = exe
+                .execute_b::<xla::PjRtBuffer>(&inputs)
+                .map_err(|e| anyhow::anyhow!("executing {name}: {e:?}"))?;
+            Self::read_outputs(&name, &result, false, out)?;
+            self.stats.executions += 1;
+            self.stats.execute_secs += t0.elapsed().as_secs_f64();
+            self.stats.upload_bytes += upload;
+            Ok(())
+        })();
+        inputs.clear();
+        self.inputs = inputs;
+        run
+    }
+
+    fn bind_kv(
+        &mut self,
+        role: ModuleRole,
+        view: KvView,
+        rows: usize,
+    ) -> Result<KvSession, PlanError> {
+        if !self.caps.supports_kv_append(role) {
+            // no scatter-update module in this artifact set: sessions
+            // would re-upload full caches anyway — fall back loudly
+            return Err(PlanError::SessionUnsupported { backend: "pjrt-cpu" });
+        }
+        let dims = self.dims_of(role);
+        let cap = self.contract.cache_cap;
+        let rs = dims.heads * dims.d_head;
+        let n = dims.cache_elems(cap);
+        let mut sess = DeviceSession {
+            role,
+            host_k: vec![0.0; n],
+            host_v: vec![0.0; n],
+            rows: 0,
+            dev: None,
+        };
+        gather_rows_flat(
+            &view,
+            &mut sess.host_k,
+            &mut sess.host_v,
+            0,
+            rows.min(cap),
+            dims.layers,
+            rs,
+            cap,
+        );
+        sess.rows = rows;
+        let cache_dims = [dims.layers, cap, dims.heads, dims.d_head];
+        let dk = self
+            .upload_f32(&sess.host_k, &cache_dims)
+            .map_err(|e| PlanError::SessionInit { reason: format!("{e:#}") })?;
+        let dv = self
+            .upload_f32(&sess.host_v, &cache_dims)
+            .map_err(|e| PlanError::SessionInit { reason: format!("{e:#}") })?;
+        sess.dev = Some((dk, dv));
+        self.stats.upload_bytes += (2 * n * 4) as u64;
+        let id = self.next_session;
+        self.next_session += 1;
+        self.sessions.insert(id, sess);
+        Ok(KvSession { id, role })
+    }
+
+    fn rebind_kv(
+        &mut self,
+        session: &KvSession,
+        view: KvView,
+        rows: usize,
+    ) -> Result<(), PlanError> {
+        let dims = self.dims_of(session.role);
+        let cap = self.contract.cache_cap;
+        let rs = dims.heads * dims.d_head;
+        {
+            let sess = self
+                .sessions
+                .get_mut(&session.id)
+                .ok_or(PlanError::UnknownSession { id: session.id })?;
+            gather_rows_flat(
+                &view,
+                &mut sess.host_k,
+                &mut sess.host_v,
+                0,
+                rows.min(cap),
+                dims.layers,
+                rs,
+                cap,
+            );
+            sess.rows = rows;
+            sess.dev = None;
+        }
+        let cache_dims = [dims.layers, cap, dims.heads, dims.d_head];
+        let (dk, dv) = {
+            let sess = &self.sessions[&session.id];
+            let dk = self
+                .upload_f32(&sess.host_k, &cache_dims)
+                .map_err(|e| PlanError::SessionInit { reason: format!("{e:#}") })?;
+            let dv = self
+                .upload_f32(&sess.host_v, &cache_dims)
+                .map_err(|e| PlanError::SessionInit { reason: format!("{e:#}") })?;
+            (dk, dv)
+        };
+        self.sessions.get_mut(&session.id).expect("present above").dev = Some((dk, dv));
+        self.stats.upload_bytes += (2 * dims.cache_elems(cap) * 4) as u64;
+        Ok(())
+    }
+
+    fn unbind_kv(&mut self, session: KvSession) {
+        self.sessions.remove(&session.id);
     }
 
     fn name(&self) -> &'static str {

@@ -1,0 +1,512 @@
+//! Backend-contract conformance suite: the plan → bind → execute
+//! protocol, run against the deterministic [`SimBackend`] (always) and
+//! the PJRT backend (artifact-gated smoke, like `tests/pjrt_smoke.rs`).
+//!
+//! Covered here:
+//!
+//! * **plan** — `plan_step` resolves the same variants the old
+//!   string-keyed paths picked, and failures are *typed*
+//!   (`PlanError::NoVariant` listing the compiled variants,
+//!   `PlanError::SplitRequired` carrying the widest usable width) rather
+//!   than `bail!` strings;
+//! * **bind/execute** — session-vs-full-view bit-identity under random
+//!   commit/rollback/park sequences, against both `KvStore` layouts and
+//!   both branch strategies: a ticketed step reading the backend-resident
+//!   mirror must reproduce the full-view step exactly, or the dirty
+//!   watermark missed a mutation;
+//! * **fused dispatch** — a B=4 verification tick is ONE launch when a
+//!   width-4 variant exists (`launches_by_width`), and a capped
+//!   capabilities table splits the group into the widest compiled
+//!   launches without changing a single output token.
+//!
+//! The CI feature matrix runs this suite in every
+//! (scheduling x cache-layout) cell; engine-level tests honor
+//! `EA_CACHE_LAYOUT` the way the other matrix suites do.
+
+use eagle_pangu::backend::sim::SimBackend;
+use eagle_pangu::backend::{
+    KvView, ModelBackend, ModuleLayout, ModuleRole, PlanError, PlanRequest, SessionTicket,
+    StepArgs, StepScratch,
+};
+use eagle_pangu::cache::{CachePools, KvStore, ManagedCache, PagedCache};
+use eagle_pangu::config::contract::NEG_INF;
+use eagle_pangu::config::{CacheLayout, CacheStrategy, Contract, Dims, ExecMode, RunConfig};
+use eagle_pangu::coordinator::{decode_speculative_batch, ContinuousScheduler};
+use eagle_pangu::engine::Engine;
+use eagle_pangu::util::SplitMix64;
+
+/// Base config of the CI feature matrix: `EA_CACHE_LAYOUT` (flat | paged)
+/// selects the KV layout for the engine-level tests of this suite.
+fn base_cfg() -> RunConfig {
+    let mut cfg = RunConfig::default();
+    if let Ok(v) = std::env::var("EA_CACHE_LAYOUT") {
+        cfg.cache_layout = CacheLayout::parse(&v).expect("EA_CACHE_LAYOUT must be flat|paged");
+    }
+    cfg
+}
+
+fn prompt(n: usize, seed: u64) -> Vec<i32> {
+    let mut rng = SplitMix64::new(seed);
+    let mut p = vec![1i32]; // BOS
+    for _ in 1..n {
+        p.push(rng.range(2, 512) as i32);
+    }
+    p
+}
+
+// ----------------------------------------------------------------------
+// Plan negotiation
+// ----------------------------------------------------------------------
+
+#[test]
+fn plan_resolves_exactly_the_old_variant_picks() {
+    let b = SimBackend::new(100);
+    let c = b.contract().clone();
+    for rows in [1usize, 7, 8, 9, 63, 200, 256] {
+        let plan = b
+            .plan_step(&PlanRequest::teacher(ExecMode::Fused, rows, ModuleLayout::Flat))
+            .unwrap();
+        assert_eq!(plan.key.s, c.teacher_variant(rows).unwrap(), "rows={rows}");
+        assert_eq!(plan.key.b, 1);
+    }
+    for rows in [1usize, 8, 20, 64] {
+        let plan = b.plan_step(&PlanRequest::draft(rows, false, ModuleLayout::Flat)).unwrap();
+        assert_eq!(plan.key.s, c.draft_variant(rows).unwrap(), "rows={rows}");
+    }
+}
+
+#[test]
+fn plan_failures_are_typed_with_variant_listing() {
+    let b = SimBackend::new(100);
+    let err = b
+        .plan_step(&PlanRequest::teacher(ExecMode::Fused, 300, ModuleLayout::Flat))
+        .unwrap_err();
+    match &err {
+        PlanError::NoVariant { available, .. } => {
+            assert!(available.contains("teacher/fused"), "listing missing: {available}");
+        }
+        other => panic!("expected NoVariant, got {other:?}"),
+    }
+    let err = b
+        .plan_step(&PlanRequest::draft(100, false, ModuleLayout::Flat))
+        .unwrap_err();
+    assert!(matches!(err, PlanError::NoVariant { .. }));
+    // capped width: typed split, carrying the widest usable launch
+    let capped = SimBackend::new(100).with_max_fused(3);
+    let err = capped
+        .plan_step(&PlanRequest::teacher_batch(ExecMode::Fused, 16, 8, ModuleLayout::Flat))
+        .unwrap_err();
+    assert_eq!(err, PlanError::SplitRequired { batch: 8, max_batch: 3 });
+}
+
+#[test]
+fn plan_paged_requests_fall_back_to_flat_with_host_gather() {
+    let b = SimBackend::new(100);
+    let plan = b
+        .plan_step(&PlanRequest::teacher(ExecMode::Fused, 16, ModuleLayout::Paged))
+        .unwrap();
+    assert_eq!(plan.key.layout, ModuleLayout::Flat);
+    assert!(plan.host_gather, "paged view over flat-only modules must host-gather");
+}
+
+// ----------------------------------------------------------------------
+// Session bit-identity under random op sequences (both stores)
+// ----------------------------------------------------------------------
+
+/// Build a `[L, s, H, Dh]` step-output block whose rows carry the
+/// (token, position) encoding the sim's context hash reads.
+fn rows_block(dims: Dims, s: usize, rows: &[(i32, i32)]) -> (Vec<f32>, Vec<f32>) {
+    let rs = dims.heads * dims.d_head;
+    let mut k = vec![0.0f32; dims.layers * s * rs];
+    for l in 0..dims.layers {
+        for (i, &(tok, pos)) in rows.iter().enumerate() {
+            let off = (l * s + i) * rs;
+            k[off] = tok as f32;
+            k[off + 1] = pos as f32;
+        }
+    }
+    let v = k.clone();
+    (k, v)
+}
+
+/// Compare a ticketed (mirror-reading) teacher step against the same
+/// step on the live view; both must be bit-identical.
+fn probe_store(
+    sim: &mut SimBackend,
+    store: &dyn KvStore,
+    ticket: SessionTicket,
+    cap: usize,
+) -> (Vec<f32>, Vec<f32>) {
+    let s = 8usize;
+    let w = cap + s;
+    let rows = store.view_rows();
+    let mut mask = vec![NEG_INF; s * w];
+    for j in 0..rows.min(cap) {
+        mask[j] = 0.0; // row 0 of the probe attends every readable row
+    }
+    mask[cap] = 0.0; // and itself
+    let tokens = [499i32, 0, 0, 0, 0, 0, 0, 0];
+    let positions = [4000i32, 0, 0, 0, 0, 0, 0, 0];
+    let run = |sim: &mut SimBackend, session: Option<SessionTicket>| {
+        let guard = store.kv_guard();
+        let mut out = StepScratch::new();
+        sim.teacher_step(
+            ExecMode::Fused,
+            StepArgs {
+                tokens: &tokens,
+                positions: &positions,
+                mask: &mask,
+                kv: guard.view(),
+                feats_in: None,
+                probe: false,
+                session,
+            },
+            &mut out,
+        )
+        .unwrap();
+        out.logits_row(0).to_vec()
+    };
+    let with_session = run(sim, Some(ticket));
+    let plain = run(sim, None);
+    (with_session, plain)
+}
+
+#[test]
+fn session_matches_full_view_under_random_commit_rollback_park() {
+    let contract = Contract::default();
+    let dims = contract.teacher;
+    let cap = contract.cache_cap;
+    for layout in [CacheLayout::Flat, CacheLayout::Paged] {
+        for strategy in [CacheStrategy::SegmentShare, CacheStrategy::DeepCopy] {
+            let pools = CachePools::new(&contract);
+            let mut store: Box<dyn KvStore> = match layout {
+                CacheLayout::Flat => Box::new(ManagedCache::new(dims, cap, strategy, true)),
+                CacheLayout::Paged => {
+                    Box::new(PagedCache::new(dims, cap, strategy, true, pools.teacher.clone()))
+                }
+            };
+            let mut sim = SimBackend::new(100);
+            let sess = {
+                let guard = store.kv_guard();
+                sim.bind_kv(ModuleRole::Teacher, guard.view(), store.view_rows()).unwrap()
+            };
+            store.mark_synced();
+            let mut rng = SplitMix64::new(0xC0_FF_EE ^ strategy as u64 ^ (layout as u64) << 8);
+            let mut next_tok = 2i32;
+            let mut branch_open = false;
+            for step in 0..160 {
+                let op = rng.range(0, 8);
+                match op {
+                    0 | 1 => {
+                        if !branch_open && store.headroom() > 8 {
+                            let n = rng.range(1, 4) as usize;
+                            let pos0 = store.len() as i32;
+                            let rows: Vec<(i32, i32)> =
+                                (0..n).map(|i| (next_tok + i as i32, pos0 + i as i32)).collect();
+                            next_tok = 2 + (next_tok + n as i32 - 2) % 500;
+                            let (k, v) = rows_block(dims, n, &rows);
+                            store.append_committed(&k, &v, n, n).unwrap();
+                        }
+                    }
+                    2 => {
+                        if !branch_open && store.headroom() > 16 {
+                            store.begin_branch().unwrap();
+                            branch_open = true;
+                        }
+                    }
+                    3 | 4 => {
+                        if branch_open && store.len() + store.branch_rows() + 8 < cap {
+                            let n = rng.range(1, 5) as usize;
+                            let pos0 = (store.len() + store.branch_rows()) as i32;
+                            let rows: Vec<(i32, i32)> = (0..n)
+                                .map(|i| (next_tok + i as i32, pos0 + i as i32))
+                                .collect();
+                            next_tok = 2 + (next_tok + n as i32 - 2) % 500;
+                            let (k, v) = rows_block(dims, n, &rows);
+                            store.append_branch(&k, &v, n, n).unwrap();
+                        }
+                    }
+                    5 => {
+                        if branch_open {
+                            store.rollback();
+                            branch_open = false;
+                        }
+                    }
+                    6 => {
+                        if branch_open {
+                            let br = store.branch_rows();
+                            if br == 0 || rng.range(0, 2) == 0 {
+                                store.commit_length(br.min(rng.range(0, 4) as usize)).unwrap();
+                            } else {
+                                // strictly-increasing random tail subset
+                                let tail: Vec<usize> =
+                                    (0..br).filter(|_| rng.range(0, 2) == 0).collect();
+                                if tail.is_empty() {
+                                    store.commit_length(0).unwrap();
+                                } else {
+                                    store.commit_path_tail(&tail).unwrap();
+                                }
+                            }
+                            branch_open = false;
+                        }
+                    }
+                    _ => {
+                        // "park/resume": the conversation left its slot and
+                        // came back — wholesale rebind, mirror storage reused
+                        let guard = store.kv_guard();
+                        sim.rebind_kv(&sess, guard.view(), store.view_rows()).unwrap();
+                        drop(guard);
+                        store.mark_synced();
+                    }
+                }
+                let ticket = SessionTicket {
+                    id: sess.id,
+                    dirty_lo: store.dirty_lo(),
+                    rows: store.view_rows(),
+                };
+                let (with_session, plain) = probe_store(&mut sim, store.as_ref(), ticket, cap);
+                assert_eq!(
+                    with_session, plain,
+                    "session mirror diverged from the live view at step {step} \
+                     (layout {layout:?}, strategy {strategy:?}, op {op})"
+                );
+                store.mark_synced();
+            }
+            sim.unbind_kv(sess);
+        }
+    }
+}
+
+#[test]
+fn stale_ticket_fails_typed_not_silently() {
+    let contract = Contract::default();
+    let n = contract.teacher.cache_elems(contract.cache_cap);
+    let (k, v) = (vec![0.0f32; n], vec![0.0f32; n]);
+    let mut sim = SimBackend::new(100);
+    let s = 8;
+    let w = contract.cache_cap + s;
+    let mask = vec![NEG_INF; s * w];
+    let tokens = [2i32; 8];
+    let positions = [0i32; 8];
+    let mut out = StepScratch::new();
+    let err = sim
+        .teacher_step(
+            ExecMode::Fused,
+            StepArgs {
+                tokens: &tokens,
+                positions: &positions,
+                mask: &mask,
+                kv: KvView::flat(&k, &v, contract.cache_cap),
+                feats_in: None,
+                probe: false,
+                session: Some(SessionTicket { id: 777, dirty_lo: 0, rows: 0 }),
+            },
+            &mut out,
+        )
+        .unwrap_err();
+    assert!(format!("{err:#}").contains("unknown KV session 777"), "{err:#}");
+    // role mismatch is typed too
+    let sess = sim
+        .bind_kv(ModuleRole::Draft, KvView::flat(&k, &v, contract.cache_cap), 0)
+        .unwrap();
+    let err = sim
+        .teacher_step(
+            ExecMode::Fused,
+            StepArgs {
+                tokens: &tokens,
+                positions: &positions,
+                mask: &mask,
+                kv: KvView::flat(&k, &v, contract.cache_cap),
+                feats_in: None,
+                probe: false,
+                session: Some(SessionTicket { id: sess.id, dirty_lo: 0, rows: 0 }),
+            },
+            &mut out,
+        )
+        .unwrap_err();
+    assert!(format!("{err:#}").contains("bound for role draft"), "{err:#}");
+}
+
+// ----------------------------------------------------------------------
+// Engine-level: sessions on/off bit-identity + upload scaling
+// ----------------------------------------------------------------------
+
+#[test]
+fn engine_tokens_identical_with_sessions_on_and_off() {
+    let p = prompt(14, 31);
+    let mut on_cfg = base_cfg();
+    on_cfg.kv_sessions = true;
+    let mut off_cfg = base_cfg();
+    off_cfg.kv_sessions = false;
+
+    let mut b_on = SimBackend::new(85);
+    let mut e_on = Engine::new(&b_on, on_cfg);
+    let out_on = e_on.generate_speculative(&mut b_on, &p, 24).unwrap();
+
+    let mut b_off = SimBackend::new(85);
+    let mut e_off = Engine::new(&b_off, off_cfg);
+    let out_off = e_off.generate_speculative(&mut b_off, &p, 24).unwrap();
+
+    assert_eq!(out_on.tokens, out_off.tokens, "sessions changed the committed text");
+    assert_eq!(out_on.accept_lens, out_off.accept_lens);
+    assert!(
+        b_on.upload_bytes < b_off.upload_bytes / 2,
+        "sessions must cut modeled upload traffic: {} vs {}",
+        b_on.upload_bytes,
+        b_off.upload_bytes
+    );
+}
+
+#[test]
+fn steady_state_session_upload_no_longer_scales_with_cap() {
+    // Steady state = the second turn of a resident conversation: with a
+    // bound session every step ships only its dirty delta, so the turn's
+    // upload stays far below even ONE full cache pair; without sessions
+    // every step re-ships the full [L, cap, H, Dh] buffers.
+    let full_pair = {
+        let c = Contract::default();
+        ((c.teacher.cache_elems(c.cache_cap) + c.draft.cache_elems(c.cache_cap)) * 2 * 4) as u64
+    };
+    let mut cfg = base_cfg();
+    cfg.kv_sessions = true;
+    let mut b = SimBackend::new(85);
+    let mut e = Engine::new(&b, cfg);
+    e.generate_speculative(&mut b, &prompt(12, 41), 16).unwrap();
+    let snap = b.upload_bytes;
+    let turn = e.generate_speculative(&mut b, &prompt(2, 42), 16).unwrap();
+    let per_token = (b.upload_bytes - snap) / turn.tokens.len().max(1) as u64;
+    assert!(
+        per_token < full_pair / 8,
+        "session steady-state upload still cap-scaled: {per_token} B/token \
+         vs full cache pair {full_pair} B"
+    );
+}
+
+#[test]
+fn eager_mode_stays_full_upload() {
+    // the paper's two-mode design: the eager/debug path never binds
+    // sessions, so its transfer is identical with the flag on or off
+    let p = prompt(10, 51);
+    let run = |kv_sessions: bool| {
+        let mut cfg = base_cfg();
+        cfg.mode = ExecMode::Eager;
+        cfg.kv_sessions = kv_sessions;
+        let mut b = SimBackend::new(85);
+        let mut e = Engine::new(&b, cfg);
+        let out = e.generate_speculative(&mut b, &p, 12).unwrap();
+        (out.tokens, b.upload_bytes)
+    };
+    let (t_on, u_on) = run(true);
+    let (t_off, u_off) = run(false);
+    assert_eq!(t_on, t_off);
+    assert_eq!(u_on, u_off, "eager path must not bind sessions");
+}
+
+// ----------------------------------------------------------------------
+// Fused dispatch: one launch per tick; splitting preserves outputs
+// ----------------------------------------------------------------------
+
+#[test]
+fn b4_verification_tick_is_one_launch() {
+    let cfgs = vec![base_cfg(); 4];
+    let prompts: Vec<Vec<i32>> = (0..4).map(|i| prompt(10 + i, 60 + i as u64)).collect();
+    let mut b = SimBackend::new(90);
+    let mut engines: Vec<Engine> = cfgs.iter().map(|c| Engine::new(&b, c.clone())).collect();
+    let cap = b.contract().cache_cap;
+    let mut sched = ContinuousScheduler::new(4, cap);
+    decode_speculative_batch(&mut b, &mut engines, &prompts, 12, &mut sched).unwrap();
+    let width4 = b.launches_by_width.get(4).copied().unwrap_or(0);
+    assert!(width4 > 0, "B=4 ticks must fuse into single width-4 launches");
+    assert!(
+        b.launches_by_width.len() <= 5,
+        "no launch may exceed the group width: {:?}",
+        b.launches_by_width
+    );
+}
+
+#[test]
+fn capped_width_splits_group_without_changing_tokens() {
+    let cfgs = vec![base_cfg(); 4];
+    let prompts: Vec<Vec<i32>> = (0..4).map(|i| prompt(9 + i * 2, 80 + i as u64)).collect();
+
+    // sequential reference
+    let seq: Vec<Vec<i32>> = prompts
+        .iter()
+        .map(|p| {
+            let mut b = SimBackend::new(88);
+            let mut e = Engine::new(&b, base_cfg());
+            e.generate_speculative(&mut b, p, 16).unwrap().tokens
+        })
+        .collect();
+
+    // width capped at 2: the verifier must split each B=4 tick into two
+    // width-2 launches (SplitRequired), never emulate sequentially
+    let mut b = SimBackend::new(88).with_max_fused(2);
+    let mut engines: Vec<Engine> = cfgs.iter().map(|c| Engine::new(&b, c.clone())).collect();
+    let cap = b.contract().cache_cap;
+    let mut sched = ContinuousScheduler::new(4, cap);
+    let outs = decode_speculative_batch(&mut b, &mut engines, &prompts, 16, &mut sched).unwrap();
+    for (o, s) in outs.iter().zip(&seq) {
+        assert_eq!(&o.tokens, s, "split launch changed tokens");
+    }
+    assert!(
+        b.launches_by_width.get(2).copied().unwrap_or(0) > 0,
+        "capped groups must fuse at the widest compiled width: {:?}",
+        b.launches_by_width
+    );
+    assert_eq!(
+        b.launches_by_width.get(3).copied().unwrap_or(0)
+            + b.launches_by_width.get(4).copied().unwrap_or(0),
+        0,
+        "no launch may exceed the capability cap: {:?}",
+        b.launches_by_width
+    );
+}
+
+// ----------------------------------------------------------------------
+// PJRT (artifact-gated smoke)
+// ----------------------------------------------------------------------
+
+#[test]
+fn pjrt_conformance_smoke() {
+    use eagle_pangu::runtime::PjrtBackend;
+    let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: artifacts/ missing — run `make artifacts`");
+        return;
+    }
+    let mut backend = PjrtBackend::load(&dir).expect("load artifacts");
+    // plan round-trips against the manifest-built capabilities table
+    let plan = backend
+        .plan_step(&PlanRequest::teacher(ExecMode::Fused, 9, ModuleLayout::Flat))
+        .expect("compiled teacher variant");
+    assert_eq!(plan.key.s, 16);
+    let err = backend
+        .plan_step(&PlanRequest::teacher(ExecMode::Fused, 10_000, ModuleLayout::Flat))
+        .unwrap_err();
+    assert!(matches!(err, PlanError::NoVariant { .. }));
+    // sessions require a kv_append artifact; without one the answer is a
+    // typed capability gap (callers fall back to full upload)
+    let c = backend.contract().clone();
+    let n = c.teacher.cache_elems(c.cache_cap);
+    let (k, v) = (vec![0.0f32; n], vec![0.0f32; n]);
+    let caps_has_append = backend.capabilities().supports_kv_append(ModuleRole::Teacher);
+    match backend.bind_kv(ModuleRole::Teacher, KvView::flat(&k, &v, c.cache_cap), 0) {
+        Ok(sess) => {
+            assert!(caps_has_append, "bind must require the scatter module");
+            backend.unbind_kv(sess);
+        }
+        Err(PlanError::SessionUnsupported { .. }) => {
+            assert!(!caps_has_append, "capability table disagrees with bind_kv");
+        }
+        Err(other) => panic!("unexpected bind error: {other:?}"),
+    }
+    // a B=4 fused plan resolves iff the artifact set ships a fused
+    // b-variant; when it does, executing it must be ONE module execution
+    if let Ok(plan) =
+        backend.plan_step(&PlanRequest::teacher_batch(ExecMode::Fused, 8, 4, ModuleLayout::Flat))
+    {
+        assert!(plan.key.b >= 4);
+        eprintln!("fused b{}_s{} artifact present", plan.key.b, plan.key.s);
+    }
+}

@@ -52,6 +52,7 @@ fn fused_and_eager_artifacts_agree_on_goldens() {
             kv: KvView::flat(&gi.k_cache, &gi.v_cache, contract.cache_cap),
             feats_in: None,
             probe: false,
+            session: None,
         }, &mut out)
         .unwrap();
         out

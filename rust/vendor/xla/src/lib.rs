@@ -9,7 +9,13 @@
 //! integration tests) fall back to the deterministic `SimBackend`.
 //!
 //! Swapping in the real binding is a one-line Cargo change: point the
-//! `xla` dependency at the actual crate; no source edits are required.
+//! `xla` dependency at the actual crate; no runtime-layer source edits
+//! are required. The binding must additionally provide the two
+//! donation/retention entry points this stub declares beyond the classic
+//! surface — `Literal::read_into` (readback into preallocated host
+//! scratch) and `PjRtBuffer::destructure_tuple` (split a tuple result
+//! into retainable per-output device buffers) — both thin wrappers over
+//! existing PJRT C-API calls.
 
 use std::fmt;
 
@@ -61,7 +67,10 @@ impl PjRtClient {
     }
 }
 
-/// Owned device buffer (stub). Drop frees in the real binding.
+/// Owned device buffer (stub). Drop frees in the real binding. Holding a
+/// `PjRtBuffer` across calls is the buffer-*retention* entry point the
+/// KV-session runtime relies on: a bound cache stays device-resident
+/// between launches instead of being re-uploaded.
 pub struct PjRtBuffer {
     _priv: (),
 }
@@ -69,6 +78,14 @@ pub struct PjRtBuffer {
 impl PjRtBuffer {
     pub fn to_literal_sync(&self) -> Result<Literal> {
         Err(unavailable("PjRtBuffer::to_literal_sync"))
+    }
+
+    /// Split a tuple-shaped result buffer into per-element device buffers
+    /// **without** a host round-trip — the retention entry point that
+    /// lets the KV-session scatter-update module's output buffers be fed
+    /// straight back in as the next launch's cache inputs.
+    pub fn destructure_tuple(self) -> Result<Vec<PjRtBuffer>> {
+        Err(unavailable("PjRtBuffer::destructure_tuple"))
     }
 }
 
@@ -122,6 +139,21 @@ impl Literal {
 
     pub fn to_vec<T>(&self) -> Result<Vec<T>> {
         Err(unavailable("Literal::to_vec"))
+    }
+
+    /// Output-donation readback: copy the literal's elements into a
+    /// caller-preallocated host slice (exactly `dst.len()` elements —
+    /// the real binding errors on a size mismatch). Removes the
+    /// per-output `Vec` the `to_vec` path materializes, which is what
+    /// keeps PJRT steps allocation-free under the scratch contract.
+    pub fn read_into<T: Copy>(&self, dst: &mut [T]) -> Result<()> {
+        let _ = dst;
+        Err(unavailable("Literal::read_into"))
+    }
+
+    /// Element count of the literal (shape product).
+    pub fn element_count(&self) -> Result<usize> {
+        Err(unavailable("Literal::element_count"))
     }
 }
 
