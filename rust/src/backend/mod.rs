@@ -238,6 +238,46 @@ pub fn layout_of(kv: &KvView) -> ModuleLayout {
     }
 }
 
+/// Handle to an in-flight fused launch started by
+/// [`ModelBackend::begin_execute_batch`] and completed by
+/// [`ModelBackend::await_batch`].
+///
+/// # Contract
+///
+/// * A token is single-use: exactly one `await_batch` call per token, on
+///   the backend that issued it. Backends reject unknown ids.
+/// * `id == 0` means the launch already completed inside `begin` (the
+///   synchronous default); `await_batch` on it is a no-op.
+/// * The output scratch passed to `begin` holds **undefined** contents
+///   until `await_batch` returns for that token — overlapped backends
+///   may defer both the device wait and the result readback to the
+///   await. Callers must not read the scratch, and must not reuse it
+///   for another launch, while the token is outstanding.
+/// * All borrowed inputs (`tokens`/`positions`/`mask`/KV views) are
+///   consumed — copied or uploaded — before `begin` returns, so the
+///   caller's borrows end with the `begin` call even though the launch
+///   is still in flight.
+#[derive(Debug)]
+#[must_use = "an in-flight launch must be completed with await_batch"]
+pub struct LaunchToken {
+    /// Backend-assigned launch id (`0` = completed eagerly at begin).
+    pub id: u64,
+}
+
+impl LaunchToken {
+    /// The token of a launch that completed inside `begin` (the
+    /// synchronous default path).
+    pub fn completed() -> Self {
+        Self { id: 0 }
+    }
+
+    /// Whether the launch already completed inside `begin` (awaiting it
+    /// is a no-op).
+    pub fn is_completed(&self) -> bool {
+        self.id == 0
+    }
+}
+
 /// Inputs of one fused `B`-request verification step (see the *Batched
 /// verification contract* in the module docs for the layout invariants).
 pub struct BatchStepArgs<'a, 'b> {
@@ -302,6 +342,47 @@ pub trait ModelBackend {
         out: &mut StepScratch,
     ) -> Result<()> {
         self.emulate_batch(plan.key.mode, args, out)
+    }
+
+    /// Start a resolved fused launch **without waiting for it**: consume
+    /// every borrowed input (copy or upload), dispatch the device work,
+    /// and return a [`LaunchToken`] the caller later passes to
+    /// [`ModelBackend::await_batch`]. Between begin and await the caller
+    /// may run arbitrary host work — including staging the *next* launch
+    /// into a different scratch — which an overlapped backend hides
+    /// behind the in-flight device time.
+    ///
+    /// The default is synchronous: it runs
+    /// [`ModelBackend::execute_batch`] eagerly and returns
+    /// [`LaunchToken::completed`], so third-party backends are correct
+    /// without opting in. Overlapped implementations:
+    /// [`sim::SimBackend`] (device-clock model, reports
+    /// `overlap_saved_secs`) and [`crate::runtime::PjrtBackend`]
+    /// (buffered execution, readback deferred to await).
+    fn begin_execute_batch(
+        &mut self,
+        plan: &LaunchPlan,
+        args: BatchStepArgs,
+        out: &mut StepScratch,
+    ) -> Result<LaunchToken> {
+        self.execute_batch(plan, args, out)?;
+        Ok(LaunchToken::completed())
+    }
+
+    /// Complete a launch started by [`ModelBackend::begin_execute_batch`]:
+    /// wait for the device and land the outputs in `out` (the same
+    /// scratch passed to begin — its contents are defined only after
+    /// this returns). A [`LaunchToken::completed`] token is a no-op;
+    /// that is the entire default implementation.
+    fn await_batch(&mut self, token: LaunchToken, out: &mut StepScratch) -> Result<()> {
+        let _ = out;
+        anyhow::ensure!(
+            token.is_completed(),
+            "await_batch: backend '{}' issued no overlapped launch token {}",
+            self.name(),
+            token.id
+        );
+        Ok(())
     }
 
     /// Sequential emulation of a fused step: one single-request launch

@@ -87,15 +87,36 @@
 //! group); the per-row part is what batching can *not* amortize (the
 //! rows still have to be computed), so speedups measured under the model
 //! stay honest instead of scaling like `B`. [`SimBackend::launches_by_width`]
-//! histograms every teacher launch by its fused width, which is how the
-//! bench shows continuous admission sustaining full-width launches where
-//! fixed grouping degrades to narrow ones. Both costs default to zero so
-//! equivalence tests stay instant; the end-to-end bench sets them to
-//! measure the B-sweep and the straggler workload honestly.
+//! histograms every teacher launch by its **executed** width — the number
+//! of live requests the dispatch actually verified, not the padded width
+//! of the compiled variant (a single-request step that negotiates a wider
+//! variant still counts under width 1, matching the PJRT single-request
+//! fallback dispatch) — which is how the bench shows continuous admission
+//! sustaining full-width launches where fixed grouping degrades to narrow
+//! ones. Both costs default to zero so equivalence tests stay instant;
+//! the end-to-end bench sets them to measure the B-sweep and the
+//! straggler workload honestly.
+//!
+//! # Overlapped launches (device-clock model)
+//!
+//! [`ModelBackend::begin_execute_batch`] / [`ModelBackend::await_batch`]
+//! are implemented over a **device clock**: a begun launch occupies the
+//! simulated accelerator from `max(now, device_free_at)` for its modeled
+//! cost, and the host spin is deferred to the await — which only spins
+//! for the *remaining* time to the device deadline. Host work performed
+//! between begin and await (draft expansion, staging the next launch) is
+//! therefore provably hidden; [`SimBackend::overlap_saved_secs`]
+//! accumulates exactly the device seconds the host did not have to wait,
+//! so benches and tests can assert the pipeline win instead of inferring
+//! it from wall clocks. The synchronous [`ModelBackend::execute_batch`]
+//! path charges the same clock eagerly, so mixing the two stays
+//! consistent. [`SimBackend::with_draft_cost`] gives the draft module a
+//! nonzero host-side dispatch cost — the work the pipelined scheduler
+//! hides.
 
 use super::{
-    BatchStepArgs, KvSession, KvView, LaunchPlan, ModelBackend, ModuleRole, PlanError,
-    SessionTicket, StepArgs, StepScratch,
+    BatchStepArgs, KvSession, KvView, LaunchPlan, LaunchToken, ModelBackend, ModuleRole,
+    PlanError, SessionTicket, StepArgs, StepScratch,
 };
 use crate::config::contract::{FIRST_TOKEN, VOCAB};
 use crate::config::{Capabilities, Contract, Dims};
@@ -213,11 +234,32 @@ pub struct SimBackend {
     /// Simulated per-live-row compute cost of a teacher launch — the
     /// share of launch cost batching cannot amortize. Zero by default.
     pub teacher_row_cost: Duration,
-    /// Histogram of teacher launches by fused width: `launches_by_width[b]`
-    /// counts launches that verified `b` requests (single-request steps
-    /// count under width 1). Continuous-batching benches read this to
-    /// show admission sustaining full-width launches.
+    /// Histogram of teacher launches by **executed** fused width:
+    /// `launches_by_width[b]` counts launches that verified `b` live
+    /// requests (single-request steps count under width 1, even when the
+    /// negotiated variant is padded wider). Continuous-batching benches
+    /// read this to show admission sustaining full-width launches.
     pub launches_by_width: Vec<u64>,
+    /// Device seconds hidden behind host work between
+    /// [`ModelBackend::begin_execute_batch`] and
+    /// [`ModelBackend::await_batch`] — the measured overlap win of the
+    /// pipelined scheduler (see the device-clock model in the module
+    /// docs).
+    pub overlap_saved_secs: f64,
+    /// Simulated per-launch host dispatch cost of the draft module.
+    /// Zero (the default) disables it; overlap tests/benches set it
+    /// nonzero so the host has real draft work to hide behind an
+    /// in-flight teacher launch.
+    pub draft_launch: Duration,
+    /// Device-clock model: when the simulated accelerator next becomes
+    /// free (`None` until the first costed launch).
+    device_free_at: Option<Instant>,
+    /// In-flight overlapped launches: (token id, device deadline,
+    /// modeled launch cost).
+    pending: Vec<(u64, Instant, Duration)>,
+    /// Monotonic overlapped-launch id source (0 is reserved for
+    /// [`LaunchToken::completed`]).
+    next_launch: u64,
     /// Reusable (position, token) scratch for context reconstruction —
     /// grows once to the visible-context high-water mark.
     seen: Vec<(i64, i64)>,
@@ -243,6 +285,11 @@ impl SimBackend {
             teacher_launch: Duration::ZERO,
             teacher_row_cost: Duration::ZERO,
             launches_by_width: Vec::new(),
+            overlap_saved_secs: 0.0,
+            draft_launch: Duration::ZERO,
+            device_free_at: None,
+            pending: Vec::new(),
+            next_launch: 0,
             seen,
             sessions: HashMap::new(),
             next_session: 0,
@@ -261,6 +308,14 @@ impl SimBackend {
         self
     }
 
+    /// Builder: set the simulated per-launch draft dispatch cost — the
+    /// host-side work a pipelined scheduler hides behind an in-flight
+    /// teacher launch.
+    pub fn with_draft_cost(mut self, cost: Duration) -> Self {
+        self.draft_launch = cost;
+        self
+    }
+
     /// Builder: bound the synthetic capabilities table to fused widths
     /// `<= max_b` — the way tests force the verifier's group-splitting
     /// path on a simulator.
@@ -269,24 +324,116 @@ impl SimBackend {
         self
     }
 
-    /// Account one teacher launch of `width` fused requests computing
-    /// `rows` padded rows, and spin for its modeled cost (no syscall, so
-    /// the wait is accurate at microsecond scale and deterministic in
-    /// ordering).
-    fn record_launch(&mut self, width: usize, rows: usize) {
+    /// Account one teacher launch of `width` executed fused requests
+    /// computing `rows` padded rows, and place it on the device clock:
+    /// the launch occupies the simulated accelerator from
+    /// `max(now, device_free_at)` for its modeled cost. Returns the
+    /// device deadline and the modeled cost; the caller decides whether
+    /// to spin now (synchronous path) or at await (overlapped path).
+    fn schedule_launch(&mut self, width: usize, rows: usize) -> (Instant, Duration) {
         self.teacher_calls += 1;
         if self.launches_by_width.len() <= width {
             self.launches_by_width.resize(width + 1, 0);
         }
         self.launches_by_width[width] += 1;
         let cost = self.teacher_launch + self.teacher_row_cost * rows as u32;
-        if cost.is_zero() {
-            return;
+        let now = Instant::now();
+        let start = self.device_free_at.map_or(now, |free| free.max(now));
+        let deadline = start + cost;
+        self.device_free_at = Some(deadline);
+        (deadline, cost)
+    }
+
+    /// Synchronous launch accounting: schedule on the device clock and
+    /// spin until the deadline (no syscall, so the wait is accurate at
+    /// microsecond scale and deterministic in ordering).
+    fn record_launch(&mut self, width: usize, rows: usize) {
+        let (deadline, cost) = self.schedule_launch(width, rows);
+        if !cost.is_zero() {
+            Self::spin_until(deadline);
         }
-        let t0 = Instant::now();
-        while t0.elapsed() < cost {
+    }
+
+    /// Busy-wait until the device-clock deadline.
+    fn spin_until(deadline: Instant) {
+        while Instant::now() < deadline {
             std::hint::spin_loop();
         }
+    }
+
+    /// The executed width of a fused dispatch: the live requests it
+    /// actually verifies. Group-padding requests (`live == 0`) appended
+    /// to fill a wider compiled variant are not part of the executed
+    /// width — a single-request launch padded to a `[4, S]` variant is
+    /// still a width-1 dispatch (the PJRT fallback literally routes it
+    /// through the single-request `execute`).
+    fn executed_width(reqs: &[super::BatchRequest]) -> usize {
+        reqs.iter().filter(|r| r.live > 0).count().max(1)
+    }
+
+    /// The fused "device" compute of one batched step — everything but
+    /// the launch-cost accounting, shared by the synchronous
+    /// `execute_batch` and the overlapped `begin_execute_batch` paths.
+    /// One pass over all live rows; outputs are bit-identical to
+    /// sequential single-request steps (see the module docs).
+    fn fused_compute(&mut self, args: BatchStepArgs, out: &mut StepScratch) -> Result<()> {
+        let b = args.reqs.len();
+        let s = args.s_max;
+        let cap = self.contract.cache_cap;
+        let w = cap + s;
+        let d = self.contract.teacher;
+        let f = self.contract.feat_dim;
+        let rs = d.heads * d.d_head;
+        // transfer model: per-call tensors once, each request's cache by
+        // its own session state (padding requests have no session and an
+        // empty view — a real padded launch still ships a full-size zero
+        // cache block for them)
+        let mut upload = (args.tokens.len() * 8 + args.mask.len() * 4) as u64;
+        for req in args.reqs.iter() {
+            upload += self.sync_from_ticket(req.session, &req.kv, ModuleRole::Teacher, d)?;
+        }
+        self.upload_bytes += upload;
+        out.prepare_batch(b, s, self.contract.vocab, f, d.layers, d.heads, d.d_head, false);
+        debug_assert_eq!(args.tokens.len(), b * s, "fused tokens length");
+        debug_assert_eq!(args.positions.len(), b * s, "fused positions length");
+        debug_assert_eq!(args.mask.len(), b * s * w, "fused mask length");
+        let rows = b * s;
+        let mut seen = std::mem::take(&mut self.seen);
+        for (bi, req) in args.reqs.iter().enumerate() {
+            let base = bi * s;
+            let kv = Self::read_view(&self.sessions, req.session, req.kv, cap);
+            for i in 0..req.live.min(s) {
+                let row = base + i;
+                let ctx = hash_ctx(
+                    &mut seen,
+                    cap,
+                    &args.mask[row * w..(row + 1) * w],
+                    &args.tokens[base..base + s],
+                    &args.positions[base..base + s],
+                    &kv,
+                    d.layers,
+                    rs,
+                );
+                let cands = Self::candidates(ctx);
+                Self::write_logits(out.logits_row_mut(row), &cands);
+                let (tok, pos) = (args.tokens[row] as f32, args.positions[row] as f32);
+                let fr = out.feat_row_mut(row);
+                fr.fill(0.0);
+                fr[0] = tok;
+                fr[1] = pos;
+                for l in 0..d.layers {
+                    let off = (l * rows + row) * rs;
+                    out.k_new[off..off + rs].fill(0.0);
+                    out.v_new[off..off + rs].fill(0.0);
+                    out.k_new[off] = tok;
+                    out.k_new[off + 1] = pos;
+                    out.v_new[off] = tok;
+                    out.v_new[off + 1] = pos;
+                }
+            }
+        }
+        self.seen = seen;
+        Ok(())
     }
 
     /// Deterministic candidate list for a context.
@@ -468,6 +615,14 @@ impl ModelBackend for SimBackend {
             self.record_launch(1, s);
         } else {
             self.draft_calls += 1;
+            // draft dispatch is host-side work under the overlap model:
+            // spin on the host clock, never on the device clock
+            if !self.draft_launch.is_zero() {
+                let t0 = Instant::now();
+                while t0.elapsed() < self.draft_launch {
+                    std::hint::spin_loop();
+                }
+            }
         }
         let small = (s * 8 + args.mask.len() * 4 + args.feats_in.map_or(0, |f| f.len() * 4))
             as u64;
@@ -487,70 +642,54 @@ impl ModelBackend for SimBackend {
         args: BatchStepArgs,
         out: &mut StepScratch,
     ) -> Result<()> {
-        let b = args.reqs.len();
         // a real fused [B, S] launch computes every padded row of the
         // *compiled* variant, not just the live ones — charge what the
         // hardware would charge, so ragged mixed-budget groups don't
-        // look cheaper than they are
-        self.record_launch(b, plan.padded_rows());
-        let s = args.s_max;
-        let cap = self.contract.cache_cap;
-        let w = cap + s;
-        let d = self.contract.teacher;
-        let f = self.contract.feat_dim;
-        let rs = d.heads * d.d_head;
-        // transfer model: per-call tensors once, each request's cache by
-        // its own session state (padding requests have no session and an
-        // empty view — a real padded launch still ships a full-size zero
-        // cache block for them)
-        let mut upload = (args.tokens.len() * 8 + args.mask.len() * 4) as u64;
-        for req in args.reqs.iter() {
-            upload += self.sync_from_ticket(req.session, &req.kv, ModuleRole::Teacher, d)?;
-        }
-        self.upload_bytes += upload;
-        out.prepare_batch(b, s, self.contract.vocab, f, d.layers, d.heads, d.d_head, false);
-        debug_assert_eq!(args.tokens.len(), b * s, "fused tokens length");
-        debug_assert_eq!(args.positions.len(), b * s, "fused positions length");
-        debug_assert_eq!(args.mask.len(), b * s * w, "fused mask length");
-        let rows = b * s;
-        let mut seen = std::mem::take(&mut self.seen);
-        for (bi, req) in args.reqs.iter().enumerate() {
-            let base = bi * s;
-            let kv = Self::read_view(&self.sessions, req.session, req.kv, cap);
-            for i in 0..req.live.min(s) {
-                let row = base + i;
-                let ctx = hash_ctx(
-                    &mut seen,
-                    cap,
-                    &args.mask[row * w..(row + 1) * w],
-                    &args.tokens[base..base + s],
-                    &args.positions[base..base + s],
-                    &kv,
-                    d.layers,
-                    rs,
-                );
-                let cands = Self::candidates(ctx);
-                Self::write_logits(out.logits_row_mut(row), &cands);
-                let (tok, pos) = (args.tokens[row] as f32, args.positions[row] as f32);
-                let fr = out.feat_row_mut(row);
-                fr.fill(0.0);
-                fr[0] = tok;
-                fr[1] = pos;
-                for l in 0..d.layers {
-                    let off = (l * rows + row) * rs;
-                    out.k_new[off..off + rs].fill(0.0);
-                    out.v_new[off..off + rs].fill(0.0);
-                    out.k_new[off] = tok;
-                    out.k_new[off + 1] = pos;
-                    out.v_new[off] = tok;
-                    out.v_new[off + 1] = pos;
-                }
-            }
-        }
-        self.seen = seen;
-        Ok(())
+        // look cheaper than they are; the histogram, by contrast,
+        // records the width actually dispatched (live requests only)
+        self.record_launch(Self::executed_width(args.reqs), plan.padded_rows());
+        self.fused_compute(args, out)
     }
 
+    /// Start a fused launch on the device clock without waiting for it:
+    /// the outputs are computed host-side eagerly (the sim's "device
+    /// work" is pure accounting), but the launch-cost spin is deferred
+    /// to [`ModelBackend::await_batch`], which only waits out the time
+    /// remaining to the device deadline.
+    fn begin_execute_batch(
+        &mut self,
+        plan: &LaunchPlan,
+        args: BatchStepArgs,
+        out: &mut StepScratch,
+    ) -> Result<LaunchToken> {
+        let (deadline, cost) =
+            self.schedule_launch(Self::executed_width(args.reqs), plan.padded_rows());
+        self.fused_compute(args, out)?;
+        self.next_launch += 1;
+        let id = self.next_launch;
+        self.pending.push((id, deadline, cost));
+        Ok(LaunchToken { id })
+    }
+
+    /// Complete an overlapped launch: spin only for the time remaining
+    /// to its device deadline, and bank the device seconds the host did
+    /// not have to wait into [`SimBackend::overlap_saved_secs`].
+    fn await_batch(&mut self, token: LaunchToken, out: &mut StepScratch) -> Result<()> {
+        let _ = out; // outputs landed host-side at begin
+        if token.is_completed() {
+            return Ok(());
+        }
+        let idx = self
+            .pending
+            .iter()
+            .position(|(id, _, _)| *id == token.id)
+            .ok_or_else(|| anyhow::anyhow!("await_batch: unknown sim launch token {}", token.id))?;
+        let (_, deadline, cost) = self.pending.swap_remove(idx);
+        let waited = deadline.saturating_duration_since(Instant::now());
+        self.overlap_saved_secs += cost.saturating_sub(waited).as_secs_f64();
+        Self::spin_until(deadline);
+        Ok(())
+    }
     fn bind_kv(
         &mut self,
         role: ModuleRole,
@@ -1034,5 +1173,109 @@ mod tests {
             .plan_step(&PlanRequest::teacher_batch(ExecMode::Fused, 8, 4, ModuleLayout::Flat))
             .unwrap_err();
         assert_eq!(err, PlanError::SplitRequired { batch: 4, max_batch: 2 });
+    }
+
+    /// An overlapped begin/await pair must (a) produce the same outputs
+    /// as the synchronous fused step, (b) spin only the device time the
+    /// host did not already cover, and (c) report the hidden seconds.
+    #[test]
+    fn begin_await_overlap_hides_host_work_and_reports_it() {
+        use crate::backend::{ModuleLayout, PlanRequest};
+        let launch = Duration::from_millis(20);
+        let mut b = SimBackend::new(100).with_teacher_launch(launch);
+        let (k, v) = empty_cache(b.contract());
+        let mask1 = chain_mask(8, 2, 0);
+        let w = CACHE_CAP + 8;
+        let mut mask = vec![NEG_INF; 2 * 8 * w];
+        mask[..8 * w].copy_from_slice(&mask1);
+        mask[8 * w..].copy_from_slice(&mask1);
+        let mut tokens = vec![0i32; 16];
+        tokens[..2].copy_from_slice(&[5, 6]);
+        tokens[8..10].copy_from_slice(&[5, 6]);
+        let mut positions = vec![0i32; 16];
+        positions[..2].copy_from_slice(&[0, 1]);
+        positions[8..10].copy_from_slice(&[0, 1]);
+        let s = 8usize;
+        let reqs = [
+            BatchRequest { kv: KvView::flat(&k, &v, CACHE_CAP), live: 2, session: None },
+            BatchRequest { kv: KvView::flat(&k, &v, CACHE_CAP), live: 2, session: None },
+        ];
+        let plan = b
+            .plan_step(&PlanRequest::teacher_batch(ExecMode::Fused, 8, 2, ModuleLayout::Flat))
+            .unwrap();
+
+        // synchronous reference
+        let mut sync_out = StepScratch::new();
+        b.execute_batch(&plan, BatchStepArgs {
+            s_max: s, tokens: &tokens, positions: &positions, mask: &mask, reqs: &reqs,
+        }, &mut sync_out)
+        .unwrap();
+
+        // overlapped: begin, do "host work" for half the launch cost,
+        // then await — the spin at await covers only the remainder
+        let mut out = StepScratch::new();
+        let t0 = Instant::now();
+        let token = b
+            .begin_execute_batch(&plan, BatchStepArgs {
+                s_max: s, tokens: &tokens, positions: &positions, mask: &mask, reqs: &reqs,
+            }, &mut out)
+            .unwrap();
+        assert!(!token.is_completed(), "sim must issue a real overlapped token");
+        let host0 = Instant::now();
+        while host0.elapsed() < launch / 2 {
+            std::hint::spin_loop();
+        }
+        b.await_batch(token, &mut out).unwrap();
+        assert!(t0.elapsed() >= launch, "device cost must still be fully paid");
+        assert!(
+            b.overlap_saved_secs >= launch.as_secs_f64() * 0.25,
+            "host work must be hidden behind the in-flight launch: saved {}",
+            b.overlap_saved_secs
+        );
+        assert_eq!(out.logits, sync_out.logits, "overlapped outputs diverged");
+        assert_eq!(out.k_new, sync_out.k_new);
+    }
+
+    #[test]
+    fn await_with_unknown_token_fails_typed() {
+        let mut b = SimBackend::new(100);
+        let mut out = StepScratch::new();
+        let err = b.await_batch(LaunchToken { id: 99 }, &mut out).unwrap_err();
+        assert!(format!("{err:#}").contains("unknown sim launch token"), "{err:#}");
+    }
+
+    /// A single live request padded to a wider compiled variant is still
+    /// a width-1 dispatch: the histogram records the executed width, not
+    /// the plan's padded width.
+    #[test]
+    fn histogram_records_executed_width_not_padded_plan_width() {
+        use crate::backend::{ModuleLayout, PlanRequest};
+        let mut b = SimBackend::new(100);
+        let (k, v) = empty_cache(b.contract());
+        let mask1 = chain_mask(8, 2, 0);
+        let w = CACHE_CAP + 8;
+        let mut mask = vec![NEG_INF; 2 * 8 * w];
+        mask[..8 * w].copy_from_slice(&mask1);
+        let mut tokens = vec![0i32; 16];
+        tokens[..2].copy_from_slice(&[5, 6]);
+        let mut positions = vec![0i32; 16];
+        positions[..2].copy_from_slice(&[0, 1]);
+        // request 1 is group padding (live == 0, empty view) filling a
+        // [2, 8] compiled variant around one live request
+        let reqs = [
+            BatchRequest { kv: KvView::flat(&k, &v, CACHE_CAP), live: 2, session: None },
+            BatchRequest { kv: KvView::flat(&[], &[], 0), live: 0, session: None },
+        ];
+        let plan = b
+            .plan_step(&PlanRequest::teacher_batch(ExecMode::Fused, 8, 2, ModuleLayout::Flat))
+            .unwrap();
+        let mut out = StepScratch::new();
+        b.execute_batch(&plan, BatchStepArgs {
+            s_max: 8, tokens: &tokens, positions: &positions, mask: &mask, reqs: &reqs,
+        }, &mut out)
+        .unwrap();
+        assert_eq!(plan.key.b, 2, "plan is padded to width 2");
+        assert_eq!(b.launches_by_width.get(1), Some(&1), "executed width is 1");
+        assert_eq!(b.launches_by_width.get(2).copied().unwrap_or(0), 0);
     }
 }

@@ -44,6 +44,11 @@ COMMON FLAGS
                           conversation cache on the backend and stream only dirty-row
                           deltas per step instead of re-uploading full caches (fused
                           path only; eager stays full-upload for debuggability)
+  --pipelining on|off     software-pipelined serve loop (default on): overlap draft
+                          expansion and retire/admit with the previous fused launch
+                          still in flight (begin/await half-ticks); off keeps the
+                          depth-synchronous reference path — outputs are bit-identical
+                          either way, this is a wall-clock A/B axis only
   --no-fast-reorder       disable the prefix-sharing fast reorder
   --unsafe-indexing       skip §3.2 invariant checks (ablation)
   --adaptive              adaptive tree-budget policy (E2 takeaway)
@@ -61,7 +66,8 @@ COMMON FLAGS
 
 const RUN_FLAGS: &[&str] = &[
     "backend", "artifacts", "agree", "mode", "budget", "depth", "topk",
-    "cache-strategy", "cache-layout", "commit-mode", "kv-sessions", "draft-window", "max-new",
+    "cache-strategy", "cache-layout", "commit-mode", "kv-sessions", "pipelining",
+    "draft-window", "max-new",
     "temperature", "workers", "batch", "scheduling", "seed", "out-dir", "trace-dir",
     "prompt-len", "conversations", "profile", "turns", "requests", "rate", "servers",
 ];
@@ -145,6 +151,13 @@ pub fn run_config(args: &Args) -> Result<RunConfig> {
             "on" => true,
             "off" => false,
             other => bail!("unknown --kv-sessions value '{other}' (expected on|off)"),
+        };
+    }
+    if let Some(p) = args.get("pipelining") {
+        cfg.pipelining = match p {
+            "on" => true,
+            "off" => false,
+            other => bail!("unknown --pipelining value '{other}' (expected on|off)"),
         };
     }
     cfg.fast_reorder = !args.has("no-fast-reorder");
@@ -394,7 +407,15 @@ mod tests {
         assert!(run_config(&parse("serve --mode turbo")).is_err());
         assert!(run_config(&parse("serve --cache-layout sparse")).is_err());
         assert!(run_config(&parse("serve --kv-sessions maybe")).is_err());
+        assert!(run_config(&parse("serve --pipelining maybe")).is_err());
         assert!(backend_spec(&parse("serve --backend quantum")).is_err());
+    }
+
+    #[test]
+    fn pipelining_flag_parses() {
+        assert!(run_config(&parse("serve")).unwrap().pipelining, "pipelining default on");
+        assert!(!run_config(&parse("serve --pipelining off")).unwrap().pipelining);
+        assert!(run_config(&parse("serve --pipelining on")).unwrap().pipelining);
     }
 
     #[test]

@@ -171,6 +171,15 @@ pub struct RunConfig {
     /// views (the paper's two-mode design); backends without session
     /// support fall back to full upload transparently.
     pub kv_sessions: bool,
+    /// Software-pipelined serve loop (`--pipelining`): overlap the host
+    /// half of a verification round (retire/admit + draft expansion +
+    /// staging) with the previous fused launch still in flight on the
+    /// device, via [`crate::backend::ModelBackend::begin_execute_batch`]
+    /// / [`crate::backend::ModelBackend::await_batch`]. Off keeps the
+    /// depth-synchronous reference path — bit-identical outputs either
+    /// way (acceptance and commits never cross requests), so this is a
+    /// pure wall-clock A/B axis.
+    pub pipelining: bool,
     /// §3.2 structural invariant checks before every launch.
     pub check_invariants: bool,
     /// Adaptive tree-budget policy (paper E2 takeaway / future work):
@@ -201,6 +210,7 @@ impl Default for RunConfig {
             commit_mode: CommitMode::PathIndex,
             fast_reorder: true,
             kv_sessions: true,
+            pipelining: true,
             check_invariants: true,
             adaptive_budget: false,
             draft_window: None,
@@ -243,6 +253,7 @@ impl RunConfig {
             .push("commit_mode", self.commit_mode.as_str())
             .push("fast_reorder", self.fast_reorder)
             .push("kv_sessions", self.kv_sessions)
+            .push("pipelining", self.pipelining)
             .push("check_invariants", self.check_invariants)
             .push("adaptive_budget", self.adaptive_budget)
             .push(
@@ -294,9 +305,15 @@ mod tests {
     fn json_includes_every_axis() {
         let j = RunConfig::default().to_json();
         for key in ["mode", "tree_budget", "cache_strategy", "cache_layout", "commit_mode",
-                    "fast_reorder", "draft_window", "max_new_tokens"] {
+                    "fast_reorder", "kv_sessions", "pipelining", "draft_window",
+                    "max_new_tokens"] {
             assert!(j.get(key).is_some(), "missing {key}");
         }
+    }
+
+    #[test]
+    fn pipelining_defaults_on() {
+        assert!(RunConfig::default().pipelining, "pipelining must default on");
     }
 
     #[test]

@@ -71,10 +71,32 @@
 //! the fused output scratch, owned by the inner [`FusedVerifier`]) only
 //! ever grows, keeping steady-state batched rounds allocation-free
 //! (asserted by `tests/alloc_regression.rs`).
+//!
+//! # Software pipelining (half-ticks)
+//!
+//! With [`ContinuousScheduler::set_pipelining`] on (the default,
+//! [`crate::config::RunConfig::pipelining`]), one fused verification
+//! round is split into two half-ticks that can be in flight
+//! simultaneously: [`FusedVerifier::stage`] (plan → gather → pad into a
+//! ping-pong buffer) and [`FusedVerifier::launch`] /
+//! [`FusedVerifier::resolve`] (begin / await + scatter). The scheduler
+//! partitions each tick's ready set into *waves*: while wave N's launch
+//! is in flight on the device, wave N+1 runs its host half — retire,
+//! admit, draft expansion ([`Engine::prepare_verify`]) and staging — and
+//! the in-flight launch is carried **across the tick boundary**, so the
+//! next tick's host work overlaps it too. Slots in an in-flight launch
+//! are *pinned* (never retired, admitted over, or re-drafted) from stage
+//! to resolve; everything staged is copied, so membership changes among
+//! unpinned slots can never corrupt a launch already in flight. Ordering
+//! within each conversation is untouched — acceptance and commits never
+//! cross requests — so the pipelined path is bit-identical to the
+//! synchronous one by construction (property-tested in
+//! `tests/continuous.rs`; `--pipelining off` keeps the depth-synchronous
+//! reference). See `docs/ARCHITECTURE.md` §12 for the timeline diagram.
 
 use crate::backend::{
-    BatchRequest, BatchStepArgs, KvView, ModelBackend, ModuleLayout, PlanError, PlanRequest,
-    SessionTicket, StepScratch,
+    BatchRequest, BatchStepArgs, KvView, LaunchPlan, LaunchToken, ModelBackend, ModuleLayout,
+    PlanError, PlanRequest, SessionTicket, StepScratch,
 };
 use crate::cache::KvGuard;
 use crate::config::{CacheLayout, RunConfig};
@@ -84,28 +106,101 @@ use anyhow::{Context, Result};
 use std::collections::{HashMap, VecDeque};
 use std::time::Instant;
 
-/// The plan → gather → pad → launch → scatter half of one fused
-/// verification round. All *sized* staging (the fused token/position
-/// rows, the mask block, the output scratch) lives here and only ever
-/// grows; the only per-round allocations left are the two `B`-element
-/// `Vec`s of borrowed per-request cache guards/views (pointer-sized
-/// entries, far below the alloc-regression gate's vocab/cap-sized
-/// threshold — they cannot be hoisted without self-borrowing the
-/// engines).
-pub struct FusedVerifier {
+/// One ping-pong staging buffer of the verifier: the fused input block
+/// (tokens/positions/mask), the output scratch its launch lands in, and
+/// the per-request bookkeeping the resolve half scatters by. Two of
+/// these alternate ([`FusedVerifier::stage`] flips between them), so
+/// launch N's outputs can still be in flight while launch N+1 stages —
+/// with no steady-state allocations on either path.
+struct StageBuf {
     /// Fused `[B_key * S_key]` token staging.
     tokens: Vec<i32>,
     /// Fused `[B_key * S_key]` position staging.
     positions: Vec<i32>,
     /// Fused `[B_key, S_key, cap + S_key]` mask block.
     mask: BatchMask,
-    /// Fused teacher outputs, scattered per-request after the launch.
+    /// Fused teacher outputs, scattered per-request at resolve.
     out: StepScratch,
-    /// Per-request padded variants of the current round (padding-invariant
-    /// bookkeeping, reused every round; 0 for group-padding slots).
+    /// Per-request padded variants (0 for group-padding slots).
     s_reqs: Vec<usize>,
-    /// Per-request session tickets of the current round (reused).
+    /// Per-request session tickets.
     tickets: Vec<Option<SessionTicket>>,
+    /// Engine indices of the staged group (resolve scatters to these).
+    group: Vec<usize>,
+}
+
+impl StageBuf {
+    fn new(cache_cap: usize) -> Self {
+        Self {
+            tokens: Vec::new(),
+            positions: Vec::new(),
+            mask: BatchMask::new(cache_cap),
+            out: StepScratch::new(),
+            s_reqs: Vec::new(),
+            tickets: Vec::new(),
+            group: Vec::new(),
+        }
+    }
+}
+
+/// A fully staged fused launch, ready to begin. Self-contained (every
+/// input was *copied* into its ping-pong buffer at staging; it holds no
+/// borrows), so the scheduler may retire/admit/draft *other* slots
+/// between staging and launching — its own members are pinned by the
+/// scheduler until resolve.
+pub struct StagedLaunch {
+    /// Ping-pong buffer index holding the staging.
+    buf: usize,
+    /// The negotiated launch plan.
+    plan: LaunchPlan,
+    /// Live group members (`<= plan.key.b`; the rest is padding).
+    b: usize,
+}
+
+/// An in-flight fused launch: the [`LaunchToken`] to await plus the
+/// timing needed to attribute host-blocked and host-hidden launch time
+/// at resolve. Holds no borrows, so it can be carried **across a tick
+/// boundary** — the cross-tick half of the software pipeline.
+pub struct InFlightLaunch {
+    buf: usize,
+    token: LaunchToken,
+    begin_secs: f64,
+    launched_at: Instant,
+    b: usize,
+}
+
+/// Outcome of [`FusedVerifier::stage`].
+pub enum StageOutcome {
+    /// The group was staged; begin it with [`FusedVerifier::launch`].
+    Staged(StagedLaunch),
+    /// No fused variant covers the whole group ([`PlanError::SplitRequired`]):
+    /// nothing was staged — re-stage in chunks of at most `max_batch`.
+    Split {
+        /// Widest compiled fused batch covering the group's rows.
+        max_batch: usize,
+    },
+}
+
+/// The plan → gather → pad → launch → scatter half of one fused
+/// verification round, split into the pipeline's two half-ticks:
+/// [`FusedVerifier::stage`] (host: plan + gather + pad into a ping-pong
+/// [`StageBuf`]) and [`FusedVerifier::launch`] /
+/// [`FusedVerifier::resolve`] (device: begin / await + scatter).
+/// [`FusedVerifier::verify_group`] is the synchronous composition of the
+/// three — the depth-synchronous reference path.
+///
+/// All *sized* staging (the fused token/position rows, the mask blocks,
+/// the output scratches) lives in the two [`StageBuf`]s and only ever
+/// grows; the only per-round allocations left are the two `B`-element
+/// `Vec`s of borrowed per-request cache guards/views inside `launch`
+/// (pointer-sized entries, far below the alloc-regression gate's
+/// vocab/cap-sized threshold — they cannot be hoisted without
+/// self-borrowing the engines).
+pub struct FusedVerifier {
+    /// Ping-pong staging buffers ([`FusedVerifier::stage`] alternates).
+    bufs: [StageBuf; 2],
+    /// Buffer index the most recent `stage` wrote into.
+    cur: usize,
     /// Cumulative fused launches issued (splits count each sub-launch).
     pub launches: u64,
 }
@@ -118,40 +213,43 @@ impl FusedVerifier {
     /// A verifier for caches of capacity `cache_cap`.
     pub fn new(cache_cap: usize) -> Self {
         Self {
-            tokens: Vec::new(),
-            positions: Vec::new(),
-            mask: BatchMask::new(cache_cap),
-            out: StepScratch::new(),
-            s_reqs: Vec::new(),
-            tickets: Vec::new(),
+            bufs: [StageBuf::new(cache_cap), StageBuf::new(cache_cap)],
+            cur: 0,
             launches: 0,
         }
     }
 
-    /// One fused verification over `group` (indices into `engines`), all
-    /// of which must have a prepared round.
+    /// Stage one fused verification over `group` (indices into `engines`,
+    /// all of which must have a prepared round): negotiate the launch
+    /// plan, then gather + pad every member's payload into the *other*
+    /// ping-pong buffer (the one not owned by a possibly in-flight
+    /// launch).
     ///
     /// Launch-plan negotiation replaces the old pad-to-group-max rule:
     /// the verifier asks the backend for the smallest compiled `(B, S)`
     /// variant covering the group's live rows
     /// ([`ModelBackend::plan_step`]); when the negotiation answers
     /// [`PlanError::SplitRequired`] (no fused variant spans the whole
-    /// group) the group is split into `max_batch`-wide sub-launches
-    /// instead of collapsing to sequential emulation — launches stay as
-    /// wide as the artifact set allows. Requests beyond the group
+    /// group) nothing is staged and [`StageOutcome::Split`] tells the
+    /// caller to re-stage in `max_batch`-wide sub-groups — launches stay
+    /// as wide as the artifact set allows, and sub-launches pipeline
+    /// within the pass. Requests beyond the group
     /// (`plan.key.b > group.len()`) are padding: zero tokens, fully
     /// closed mask rows, an empty cache view, and no live rows to
-    /// scatter back.
-    pub fn verify_group(
+    /// scatter back ([`BatchMask::padding_closed`] is asserted after the
+    /// gather, so interleaved membership changes can never leak an open
+    /// padding row).
+    pub fn stage(
         &mut self,
-        backend: &mut dyn ModelBackend,
-        engines: &mut [Engine],
+        backend: &dyn ModelBackend,
+        engines: &[Engine],
         group: &[usize],
-    ) -> Result<()> {
+    ) -> Result<StageOutcome> {
         debug_assert!(!group.is_empty());
         let mode = engines[group[0]].cfg.mode;
         let mut s_max = 0usize;
         for &i in group {
+            anyhow::ensure!(engines[i].cfg.mode == mode, "mixed exec modes in one batch");
             s_max = s_max.max(engines[i].verify_payload()?.s);
         }
         let b = group.len();
@@ -171,10 +269,7 @@ impl FusedVerifier {
                     max_batch >= 1 && max_batch < b,
                     "split negotiation returned non-splitting width {max_batch} for group {b}"
                 );
-                for chunk in group.chunks(max_batch) {
-                    self.verify_group(backend, engines, chunk)?;
-                }
-                return Ok(());
+                return Ok(StageOutcome::Split { max_batch });
             }
             Err(e) => {
                 return Err(
@@ -184,74 +279,154 @@ impl FusedVerifier {
         };
         let (bk, sk) = (plan.key.b, plan.key.s);
         debug_assert!(bk >= b && sk >= s_max, "plan must cover the group");
-        self.tokens.clear();
-        self.tokens.resize(bk * sk, 0);
-        self.positions.clear();
-        self.positions.resize(bk * sk, 0);
-        self.mask.begin(bk, sk);
-        self.s_reqs.clear();
-        self.tickets.clear();
-        // Every group member's cache guard stays alive across the fused
-        // launch (paged caches share one pool — concurrent read borrows
-        // are fine; the guards drop before any per-request commit).
-        let mut guards: Vec<KvGuard> = Vec::with_capacity(b);
+        self.cur ^= 1;
+        let buf = &mut self.bufs[self.cur];
+        buf.tokens.clear();
+        buf.tokens.resize(bk * sk, 0);
+        buf.positions.clear();
+        buf.positions.resize(bk * sk, 0);
+        buf.mask.begin(bk, sk);
+        buf.s_reqs.clear();
+        buf.tickets.clear();
+        buf.group.clear();
         for (bi, &i) in group.iter().enumerate() {
-            anyhow::ensure!(engines[i].cfg.mode == mode, "mixed exec modes in one batch");
             let p = engines[i].verify_payload()?;
-            self.tokens[bi * sk..bi * sk + p.s].copy_from_slice(p.tokens);
-            self.positions[bi * sk..bi * sk + p.s].copy_from_slice(p.positions);
-            self.mask.fill_request(bi, p.mask, p.s);
-            self.s_reqs.push(p.s);
-            self.tickets.push(p.session);
-            guards.push(p.kv);
+            buf.tokens[bi * sk..bi * sk + p.s].copy_from_slice(p.tokens);
+            buf.positions[bi * sk..bi * sk + p.s].copy_from_slice(p.positions);
+            buf.mask.fill_request(bi, p.mask, p.s);
+            buf.s_reqs.push(p.s);
+            buf.tickets.push(p.session);
+            buf.group.push(i);
         }
         for _ in b..bk {
-            self.s_reqs.push(0);
-            self.tickets.push(None);
+            buf.s_reqs.push(0);
+            buf.tickets.push(None);
+        }
+        // membership changed or shrank since last round? re-padding must
+        // still leave every padding row/column closed ("padding is never
+        // attended" — the invariant continuous admission leans on)
+        debug_assert!(
+            buf.mask.padding_closed(&buf.s_reqs),
+            "fused mask block leaked an open padding row/column"
+        );
+        Ok(StageOutcome::Staged(StagedLaunch { buf: self.cur, plan, b }))
+    }
+
+    /// Begin a staged launch on the backend and return the in-flight
+    /// handle to [`FusedVerifier::resolve`] it with.
+    ///
+    /// Every group member's cache guard lives exactly as long as the
+    /// `begin` call: the backend contract says all borrowed inputs are
+    /// consumed (copied or uploaded) before
+    /// [`ModelBackend::begin_execute_batch`] returns, so no guard
+    /// outlives the host half of the launch and cache mutation by
+    /// *other* slots (retire/admit/prepare while this launch flies) may
+    /// resume immediately.
+    pub fn launch(
+        &mut self,
+        backend: &mut dyn ModelBackend,
+        engines: &[Engine],
+        staged: StagedLaunch,
+    ) -> Result<InFlightLaunch> {
+        let StagedLaunch { buf: which, plan, b } = staged;
+        let (bk, sk) = (plan.key.b, plan.key.s);
+        let buf = &mut self.bufs[which];
+        debug_assert_eq!(buf.group.len(), b, "staged launch does not match its buffer");
+        let mut guards: Vec<KvGuard> = Vec::with_capacity(b);
+        for &i in buf.group.iter() {
+            guards.push(engines[i].verify_payload()?.kv);
         }
         let mut reqs: Vec<BatchRequest> = guards
             .iter()
             .enumerate()
             .map(|(bi, g)| BatchRequest {
                 kv: g.view(),
-                live: self.s_reqs[bi],
-                session: self.tickets[bi],
+                live: buf.s_reqs[bi],
+                session: buf.tickets[bi],
             })
             .collect();
         for _ in b..bk {
             let kv = KvView::flat(EMPTY_KV, EMPTY_KV, 0);
             reqs.push(BatchRequest { kv, live: 0, session: None });
         }
-        // membership changed or shrank since last round? re-padding must
-        // still leave every padding row/column closed ("padding is never
-        // attended" — the invariant continuous admission leans on)
-        debug_assert!(
-            self.mask.padding_closed(&self.s_reqs),
-            "fused mask block leaked an open padding row/column"
-        );
-        let t0 = Instant::now();
-        backend.execute_batch(
+        let launched_at = Instant::now();
+        let token = backend.begin_execute_batch(
             &plan,
             BatchStepArgs {
                 s_max: sk,
-                tokens: &self.tokens,
-                positions: &self.positions,
-                mask: self.mask.as_slice(),
+                tokens: &buf.tokens,
+                positions: &buf.positions,
+                mask: buf.mask.as_slice(),
                 reqs: &reqs,
             },
-            &mut self.out,
+            &mut buf.out,
         )?;
         self.launches += 1;
-        // attribute the fused launch evenly across the group (timers are
-        // instrumentation, not accounting — see docs/ARCHITECTURE.md)
-        let secs = t0.elapsed().as_secs_f64() / b as f64;
+        let begin_secs = launched_at.elapsed().as_secs_f64();
         drop(reqs);
         drop(guards);
-        for (bi, &i) in group.iter().enumerate() {
-            engines[i].scatter_verify(&self.out, bi)?;
-            engines[i].add_stage_time("verify", secs);
+        Ok(InFlightLaunch { buf: which, token, begin_secs, launched_at, b })
+    }
+
+    /// Await an in-flight launch and scatter its outputs back to the
+    /// group's engines. The caller still owes each member a
+    /// [`Engine::finish_verify`].
+    ///
+    /// Timer attribution (per member, its share of *this sub-launch
+    /// only*): `"verify"` is the host-blocked launch time (begin +
+    /// await), `"verify_hidden"` the in-flight window the host spent on
+    /// other slots' work instead of waiting — pipelining's measured
+    /// overlap, zero on the synchronous path where begin completes the
+    /// launch eagerly.
+    pub fn resolve(
+        &mut self,
+        backend: &mut dyn ModelBackend,
+        engines: &mut [Engine],
+        launch: InFlightLaunch,
+    ) -> Result<()> {
+        let InFlightLaunch { buf: which, token, begin_secs, launched_at, b } = launch;
+        let overlapped = !token.is_completed();
+        let buf = &mut self.bufs[which];
+        let await_start = Instant::now();
+        backend.await_batch(token, &mut buf.out)?;
+        let await_secs = await_start.elapsed().as_secs_f64();
+        let busy = (begin_secs + await_secs) / b as f64;
+        let hidden = (await_start.duration_since(launched_at).as_secs_f64() - begin_secs)
+            .max(0.0)
+            / b as f64;
+        for (bi, &i) in buf.group.iter().enumerate() {
+            engines[i].scatter_verify(&buf.out, bi)?;
+            engines[i].add_stage_time("verify", busy);
+            if overlapped {
+                engines[i].add_stage_time("verify_hidden", hidden);
+            }
         }
         Ok(())
+    }
+
+    /// One fused verification over `group`, synchronously: stage, begin,
+    /// await, scatter — the depth-synchronous composition of the
+    /// pipeline's half-ticks (and the `--pipelining off` reference
+    /// path). A [`StageOutcome::Split`] recurses over `max_batch`-wide
+    /// chunks, each sub-launch attributed to its own members only.
+    pub fn verify_group(
+        &mut self,
+        backend: &mut dyn ModelBackend,
+        engines: &mut [Engine],
+        group: &[usize],
+    ) -> Result<()> {
+        match self.stage(backend, engines, group)? {
+            StageOutcome::Split { max_batch } => {
+                for chunk in group.chunks(max_batch) {
+                    self.verify_group(backend, engines, chunk)?;
+                }
+                Ok(())
+            }
+            StageOutcome::Staged(staged) => {
+                let fl = self.launch(backend, engines, staged)?;
+                self.resolve(backend, engines, fl)
+            }
+        }
     }
 }
 
@@ -388,6 +563,15 @@ pub struct ContinuousScheduler {
     /// group being launched, and the remainder carried to the next pass.
     group_buf: Vec<usize>,
     ready_alt: Vec<usize>,
+    /// Software pipelining on/off ([`RunConfig::pipelining`]; on by
+    /// default, off = the depth-synchronous A/B reference path).
+    pipelining: bool,
+    /// The launch currently in flight on the device (pipelined path
+    /// only; carried across tick boundaries).
+    inflight: Option<InFlightLaunch>,
+    /// Slot indices pinned by `inflight` — excluded from retire, admit
+    /// and draft expansion until the launch resolves.
+    inflight_members: Vec<usize>,
     /// Cumulative scheduler counters.
     pub stats: SchedulerStats,
 }
@@ -413,6 +597,9 @@ impl ContinuousScheduler {
             ready: Vec::new(),
             group_buf: Vec::new(),
             ready_alt: Vec::new(),
+            pipelining: true,
+            inflight: None,
+            inflight_members: Vec::new(),
             stats: SchedulerStats::default(),
         }
     }
@@ -420,6 +607,27 @@ impl ContinuousScheduler {
     /// The configured fusion width (largest request count per launch).
     pub fn max_batch(&self) -> usize {
         self.fuse_width
+    }
+
+    /// Toggle the software pipeline ([`RunConfig::pipelining`]; on by
+    /// default). Off keeps the depth-synchronous reference path —
+    /// bit-identical outputs by construction, no overlap.
+    ///
+    /// # Panics
+    ///
+    /// Panics if a launch is in flight: toggle only between full drains
+    /// (the runner sets this once, right after construction).
+    pub fn set_pipelining(&mut self, on: bool) {
+        assert!(
+            self.inflight.is_none(),
+            "cannot toggle pipelining with a launch in flight"
+        );
+        self.pipelining = on;
+    }
+
+    /// Whether the software pipeline is enabled.
+    pub fn pipelining(&self) -> bool {
+        self.pipelining
     }
 
     /// Queue a conversation for admission (FIFO).
@@ -474,12 +682,14 @@ impl ContinuousScheduler {
         self.slots.iter().filter(|s| matches!(s, Slot::Active { .. })).count()
     }
 
-    /// Whether the scheduler has nothing queued and nothing active.
-    /// Parked conversations do **not** block idleness — they are dormant
-    /// until the caller resumes them (so `run_to_idle` returns between a
-    /// park and its resume).
+    /// Whether the scheduler has nothing queued, nothing active and
+    /// nothing in flight on the device. Parked conversations do **not**
+    /// block idleness — they are dormant until the caller resumes them
+    /// (so `run_to_idle` returns between a park and its resume).
     pub fn is_idle(&self) -> bool {
-        self.queue.is_empty() && self.slots.iter().all(|s| *s == Slot::Free)
+        self.inflight.is_none()
+            && self.queue.is_empty()
+            && self.slots.iter().all(|s| *s == Slot::Free)
     }
 
     /// The current tick index (starts at 0, advances once per
@@ -493,10 +703,15 @@ impl ContinuousScheduler {
     /// outputs are produced; dropped parked caches return their blocks
     /// to the pool). Slot engines are left as-is — reset them before
     /// reusing the scheduler, or their stale in-flight state will poison
-    /// the next drive.
+    /// the next drive. A device launch still in flight is abandoned
+    /// (its token is dropped un-awaited — the backend keeps the pending
+    /// entry, which a reused backend tolerates; outputs are discarded
+    /// along with the conversations that wanted them).
     pub fn abort_all(&mut self) {
         self.queue.clear();
         self.parked.clear();
+        self.inflight = None;
+        self.inflight_members.clear();
         for s in self.slots.iter_mut() {
             *s = Slot::Free;
         }
@@ -534,7 +749,15 @@ impl ContinuousScheduler {
         );
         // 1. Retire: close every active slot whose engine no longer wants
         // a round (deadline reached or stalled out of cache headroom).
+        // Slots pinned by an in-flight launch are untouchable until it
+        // resolves — their engines have a round pending, so neither
+        // `needs_more` nor retirement may be consulted here; this
+        // retire/admit work is exactly the host half the in-flight
+        // launch is hiding.
         for si in 0..self.slots.len() {
+            if self.inflight_members.contains(&si) {
+                continue;
+            }
             let Slot::Active { id, admitted_tick, waited_ticks } = self.slots[si] else {
                 continue;
             };
@@ -603,9 +826,16 @@ impl ContinuousScheduler {
             self.slots[si] =
                 Slot::Active { id: p.id, admitted_tick: self.tick_now, waited_ticks: waited };
         }
-        // 3. One fused verification round over every ready slot — a
-        // conversation admitted in step 2 joins this very launch.
-        self.fused_round(backend, engines)?;
+        // 3. One verification round over every ready slot — a
+        // conversation admitted in step 2 joins this very round.
+        // Pipelined: launch waves overlapping the in-flight one and
+        // carry the last wave across the tick boundary. Synchronous:
+        // one depth-synchronous fused round.
+        if self.pipelining {
+            self.pipelined_round(backend, engines)?;
+        } else {
+            self.fused_round(backend, engines)?;
+        }
         self.stats.ticks += 1;
         self.tick_now += 1;
         Ok(())
@@ -637,8 +867,16 @@ impl ContinuousScheduler {
     /// [`ContinuousScheduler::submit`] + [`ContinuousScheduler::tick`]
     /// for continuous admission).
     pub fn drive(&mut self, backend: &mut dyn ModelBackend, engines: &mut [Engine]) -> Result<()> {
-        while self.fused_round(backend, engines)? {}
-        Ok(())
+        loop {
+            let progressed = if self.pipelining {
+                self.pipelined_round(backend, engines)?
+            } else {
+                self.fused_round(backend, engines)?
+            };
+            if !progressed {
+                return Ok(());
+            }
+        }
     }
 
     /// Collect the ready set and run one fused verification round over
@@ -690,6 +928,145 @@ impl ContinuousScheduler {
             std::mem::swap(&mut self.ready, &mut self.ready_alt);
         }
         Ok(true)
+    }
+
+    /// One *pipelined* verification round: partition the unpinned ready
+    /// set into waves and, for each wave, run its host half (draft
+    /// expansion + staging) **while the previous wave's launch is still
+    /// in flight**, then resolve the previous launch and immediately
+    /// begin this wave's. The final wave's launch is left in flight
+    /// across the tick boundary, so the *next* tick's retire/admit/draft
+    /// work overlaps it too. Returns whether anything progressed (a
+    /// launch begun or resolved).
+    ///
+    /// Wave sizing: chunks of the fusion width, except that a chunk
+    /// staged with **nothing in flight** (pipeline cold — first tick, or
+    /// right after a drain) is halved to prime the pipeline; otherwise a
+    /// full-width wave would pin every slot and leave no host work to
+    /// overlap its own flight.
+    ///
+    /// When no unpinned slot is ready, the in-flight launch (if any) is
+    /// resolved and the ready set re-collected — freshly resolved slots
+    /// usually want another round, so a drain never wastes a tick.
+    fn pipelined_round(
+        &mut self,
+        backend: &mut dyn ModelBackend,
+        engines: &mut [Engine],
+    ) -> Result<bool> {
+        let mut progressed = false;
+        loop {
+            self.ready.clear();
+            for (i, e) in engines.iter().enumerate() {
+                if !self.inflight_members.contains(&i) && e.needs_more() {
+                    self.ready.push(i);
+                }
+            }
+            if self.ready.is_empty() {
+                if self.inflight.is_some() {
+                    self.resolve_inflight(backend, engines)?;
+                    progressed = true;
+                    // the slots just resolved may want another round in
+                    // this very tick — re-collect instead of returning
+                    continue;
+                }
+                return Ok(progressed);
+            }
+            // mode-uniform launches: stable-partition the ready set by
+            // execution mode, exactly as in the synchronous round
+            while !self.ready.is_empty() {
+                let mode = engines[self.ready[0]].cfg.mode;
+                self.group_buf.clear();
+                self.ready_alt.clear();
+                for &i in &self.ready {
+                    if engines[i].cfg.mode == mode {
+                        self.group_buf.push(i);
+                    } else {
+                        self.ready_alt.push(i);
+                    }
+                }
+                let n = self.group_buf.len();
+                let mut start = 0;
+                while start < n {
+                    let room = self.fuse_width.min(n - start);
+                    let take = if self.inflight.is_none() && room > 1 {
+                        room.div_ceil(2)
+                    } else {
+                        room
+                    };
+                    let end = start + take;
+                    // the host half of this wave — overlapped by the
+                    // launch currently in flight (if any)
+                    for idx in start..end {
+                        engines[self.group_buf[idx]].prepare_verify(backend)?;
+                    }
+                    self.stage_launch_range(backend, engines, start, end)?;
+                    start = end;
+                }
+                std::mem::swap(&mut self.ready, &mut self.ready_alt);
+            }
+            return Ok(true);
+        }
+    }
+
+    /// Stage `group_buf[start..end]`, resolve the previous in-flight
+    /// launch, and begin this one (which becomes the new in-flight
+    /// launch, its members pinned). A [`StageOutcome::Split`] recurses
+    /// over sub-ranges, so split sub-launches pipeline within the pass —
+    /// each sub-launch overlaps the previous one's flight.
+    fn stage_launch_range(
+        &mut self,
+        backend: &mut dyn ModelBackend,
+        engines: &mut [Engine],
+        start: usize,
+        end: usize,
+    ) -> Result<()> {
+        let outcome = self.verifier.stage(backend, engines, &self.group_buf[start..end])?;
+        match outcome {
+            StageOutcome::Split { max_batch } => {
+                anyhow::ensure!(
+                    max_batch >= 1 && max_batch < end - start,
+                    "split negotiation returned non-splitting width {max_batch} for group {}",
+                    end - start
+                );
+                let mut s = start;
+                while s < end {
+                    let e = (s + max_batch).min(end);
+                    self.stage_launch_range(backend, engines, s, e)?;
+                    s = e;
+                }
+                Ok(())
+            }
+            StageOutcome::Staged(staged) => {
+                // everything this launch needs was copied at stage —
+                // resolving the previous launch (scatter + per-request
+                // commits) cannot corrupt it
+                self.resolve_inflight(backend, engines)?;
+                let fl = self.verifier.launch(backend, engines, staged)?;
+                self.inflight_members.clear();
+                self.inflight_members.extend_from_slice(&self.group_buf[start..end]);
+                self.inflight = Some(fl);
+                self.stats.fused_launches += 1;
+                Ok(())
+            }
+        }
+    }
+
+    /// Await + scatter the in-flight launch (if any) and finish every
+    /// member's round, unpinning its slots. No-op when nothing is in
+    /// flight.
+    fn resolve_inflight(
+        &mut self,
+        backend: &mut dyn ModelBackend,
+        engines: &mut [Engine],
+    ) -> Result<()> {
+        let Some(fl) = self.inflight.take() else {
+            return Ok(());
+        };
+        self.verifier.resolve(backend, engines, fl)?;
+        for i in self.inflight_members.drain(..) {
+            engines[i].finish_verify()?;
+        }
+        Ok(())
     }
 }
 
@@ -807,11 +1184,15 @@ mod tests {
         }
         let seq_launches = b_seq.teacher_calls;
 
+        // synchronous path: one full-width fused launch per round, so
+        // fusion amortizes launches by at least the strict 2x the
+        // original contract promised
         let mut b_bat = SimBackend::new(90);
         let mut engines: Vec<Engine> =
             cfgs.iter().map(|cfg| Engine::new(&b_bat, cfg.clone())).collect();
         let cap = b_bat.contract().cache_cap;
         let mut sched = ContinuousScheduler::new(4, cap);
+        sched.set_pipelining(false);
         decode_speculative_batch(&mut b_bat, &mut engines, &prompts, 16, &mut sched).unwrap();
         let bat_launches = b_bat.teacher_calls;
 
@@ -819,6 +1200,54 @@ mod tests {
             bat_launches * 2 < seq_launches,
             "fusion must amortize launches: {bat_launches} vs {seq_launches}"
         );
+
+        // pipelined path (the default): waves are half-width, trading
+        // some launch amortization for overlap — it must still issue
+        // strictly fewer launches than sequential
+        let mut b_pipe = SimBackend::new(90);
+        let mut engines: Vec<Engine> =
+            cfgs.iter().map(|cfg| Engine::new(&b_pipe, cfg.clone())).collect();
+        let mut sched = ContinuousScheduler::new(4, cap);
+        assert!(sched.pipelining(), "pipelining must default on");
+        decode_speculative_batch(&mut b_pipe, &mut engines, &prompts, 16, &mut sched).unwrap();
+        assert!(
+            b_pipe.teacher_calls < seq_launches,
+            "pipelined fusion must still amortize launches: {} vs {seq_launches}",
+            b_pipe.teacher_calls
+        );
+    }
+
+    #[test]
+    fn pipelined_scheduler_matches_synchronous_reference() {
+        // the bit-identity A/B: same traffic driven with pipelining on
+        // and off must produce identical tokens, accept shapes and
+        // per-request call accounting (ragged deadlines force mid-drive
+        // retirement while a launch is in flight)
+        let cfgs = vec![RunConfig::default(); 4];
+        let prompts: Vec<Vec<i32>> = (0..4).map(|i| prompt(9 + i * 4, 300 + i as u64)).collect();
+        let deadlines = [3usize, 17, 9, 14];
+
+        let run = |pipelining: bool| -> Vec<GenOut> {
+            let mut bk = SimBackend::new(87);
+            let mut engines: Vec<Engine> =
+                cfgs.iter().map(|cfg| Engine::new(&bk, cfg.clone())).collect();
+            let cap = bk.contract().cache_cap;
+            let mut sched = ContinuousScheduler::new(4, cap);
+            sched.set_pipelining(pipelining);
+            for (e, (p, m)) in engines.iter_mut().zip(prompts.iter().zip(deadlines)) {
+                e.begin_speculative(&mut bk, p, m).unwrap();
+            }
+            sched.drive(&mut bk, &mut engines).unwrap();
+            engines.iter_mut().map(|e| e.take_output().unwrap()).collect()
+        };
+
+        let sync = run(false);
+        let pipe = run(true);
+        for (s, p) in sync.iter().zip(&pipe) {
+            assert_eq!(s.tokens, p.tokens, "pipelined tokens diverged");
+            assert_eq!(s.accept_lens, p.accept_lens, "accept shape diverged");
+            assert_eq!(s.teacher_calls, p.teacher_calls, "per-request call accounting");
+        }
     }
 
     #[test]

@@ -229,6 +229,7 @@ fn worker(
         e.warmup(&mut *backend)?;
     }
     let mut sched = ContinuousScheduler::new(slots, backend.contract().cache_cap);
+    sched.set_pipelining(cfg.run.pipelining);
     let mut writer = TraceWriter::create(&cfg.trace_dir, rank)?;
     let progress = || {
         let n = done.fetch_add(1, Ordering::Relaxed) + 1;

@@ -25,6 +25,12 @@
 //!   as **one** launch ([`ModelBackend::execute_batch`]); groups wider
 //!   than any compiled variant are split by the
 //!   [`crate::coordinator::FusedVerifier`], never silently emulated.
+//!   The overlapped pair [`ModelBackend::begin_execute_batch`] /
+//!   [`ModelBackend::await_batch`] splits the same launch into its
+//!   dispatch half (uploads + `execute_b`, result buffers retained) and
+//!   its readback half (`to_literal_sync` into the prepared scratch), so
+//!   the pipelined serve loop can run host work while a fused launch is
+//!   in flight.
 //!
 //! Fused launches with bound sessions still upload the staged per-request
 //! caches (the fused modules take a stacked `[B, L, cap, H, Dh]` input;
@@ -33,8 +39,8 @@
 //! so the single-request steps around a fused tick stay delta-priced.
 
 use crate::backend::{
-    BatchStepArgs, KvIndex, KvSession, KvView, LaunchPlan, ModelBackend, ModuleKey, ModuleRole,
-    PlanError, SessionTicket, StepArgs, StepScratch,
+    BatchStepArgs, KvIndex, KvSession, KvView, LaunchPlan, LaunchToken, ModelBackend, ModuleKey,
+    ModuleRole, PlanError, SessionTicket, StepArgs, StepScratch,
 };
 use crate::config::{Capabilities, Contract, Dims, ExecMode};
 use crate::json;
@@ -73,6 +79,21 @@ struct FlatStage {
     v: Vec<f32>,
     /// Rows holding live gathered data from the previous call.
     rows: usize,
+}
+
+/// One fused launch dispatched but not yet read back: the un-read
+/// device result buffers from `execute_b`, the input buffers kept alive
+/// until readback (PJRT may still be consuming them), and the readback
+/// dimensions. Held in [`PjrtBackend::pending`] between
+/// [`ModelBackend::begin_execute_batch`] and
+/// [`ModelBackend::await_batch`]; the eager
+/// [`ModelBackend::execute_batch`] path reads it back immediately.
+struct PendingLaunch {
+    name: String,
+    result: Vec<Vec<xla::PjRtBuffer>>,
+    inputs: Vec<xla::PjRtBuffer>,
+    bk: usize,
+    sk: usize,
 }
 
 /// One bound conversation cache: a host mirror plus retained device
@@ -116,6 +137,10 @@ pub struct PjrtBackend {
     /// Bound KV sessions, keyed by session id.
     sessions: HashMap<u64, DeviceSession>,
     next_session: u64,
+    /// Overlapped fused launches dispatched but not yet awaited, keyed
+    /// by [`LaunchToken`] id.
+    pending: HashMap<u64, PendingLaunch>,
+    next_launch: u64,
 }
 
 /// Staging-array index of a role.
@@ -182,6 +207,8 @@ impl PjrtBackend {
             delta_rows: Vec::new(),
             sessions: HashMap::new(),
             next_session: 0,
+            pending: HashMap::new(),
+            next_launch: 0,
         })
     }
 
@@ -441,6 +468,149 @@ impl PjrtBackend {
         }
         Ok((dk, dv))
     }
+
+    /// The dispatch half of a true fused `[B, S]` launch: session sync,
+    /// cache stacking, uploads and `execute_b` — everything up to (but
+    /// not including) the host-blocking tuple readback. Returns the
+    /// un-read [`PendingLaunch`]; the eager batch path reads it back
+    /// immediately ([`PjrtBackend::readback`]), the overlapped path
+    /// parks it in [`PjrtBackend::pending`] until the await. Shared so
+    /// the two paths cannot drift.
+    fn fused_dispatch(
+        &mut self,
+        plan: &LaunchPlan,
+        args: &BatchStepArgs,
+        out: &mut StepScratch,
+    ) -> Result<PendingLaunch> {
+        let (bk, sk) = (plan.key.b, plan.key.s);
+        let dims = self.contract.teacher;
+        let cap = self.contract.cache_cap;
+        let rs = dims.heads * dims.d_head;
+        let name = plan.key.artifact_name();
+        self.ensure_compiled(&name)?;
+        // keep every ticketed mirror current (the ticket is consumed by
+        // this launch whether or not the fused module can read retained
+        // buffers — see the module docs)
+        for req in args.reqs.iter() {
+            if let Some(t) = req.session {
+                self.sync_session(&t, &req.kv, ModuleRole::Teacher)?;
+            }
+        }
+        // Stack per-request caches ([B_key, L, cap, H, Dh]). The staging
+        // is sized once and reused; like materialize_kv, each slot zeroes
+        // only rows a previous (larger) stacking left behind instead of
+        // memsetting the whole multi-MB pair every launch.
+        let n1 = dims.cache_elems(cap);
+        let total = bk * n1;
+        if self.fused_k.len() < total {
+            self.fused_k.resize(total, 0.0);
+            self.fused_v.resize(total, 0.0);
+        }
+        if self.fused_rows.len() < bk {
+            self.fused_rows.resize(bk, 0);
+        }
+        for bi in 0..bk {
+            let rows = args
+                .reqs
+                .get(bi)
+                .map(|req| req.kv.mapped_rows().min(cap))
+                .unwrap_or(0);
+            let base = bi * n1;
+            if let Some(req) = args.reqs.get(bi) {
+                gather_rows_flat(
+                    &req.kv,
+                    &mut self.fused_k[base..base + n1],
+                    &mut self.fused_v[base..base + n1],
+                    0,
+                    rows,
+                    dims.layers,
+                    rs,
+                    cap,
+                );
+            }
+            let prev = self.fused_rows[bi].min(cap);
+            if prev > rows {
+                for l in 0..dims.layers {
+                    let z0 = base + (l * cap + rows) * rs;
+                    let z1 = base + (l * cap + prev) * rs;
+                    self.fused_k[z0..z1].fill(0.0);
+                    self.fused_v[z0..z1].fill(0.0);
+                }
+            }
+            self.fused_rows[bi] = rows;
+        }
+        out.prepare_batch(
+            bk,
+            sk,
+            self.contract.vocab,
+            self.contract.feat_dim,
+            dims.layers,
+            dims.heads,
+            dims.d_head,
+            false,
+        );
+        let mut inputs = std::mem::take(&mut self.inputs);
+        inputs.clear();
+        let run = (|| -> Result<Vec<Vec<xla::PjRtBuffer>>> {
+            inputs.push(self.upload_i32(args.tokens, &[bk * sk])?);
+            inputs.push(self.upload_i32(args.positions, &[bk * sk])?);
+            inputs.push(self.upload_f32(args.mask, &[bk, sk, cap + sk])?);
+            let cache_dims = [bk, dims.layers, cap, dims.heads, dims.d_head];
+            // slice to this launch's extent: the staging may be larger
+            // after a previous wider group
+            inputs.push(self.upload_f32(&self.fused_k[..total], &cache_dims)?);
+            inputs.push(self.upload_f32(&self.fused_v[..total], &cache_dims)?);
+            let upload = (args.mask.len() * 4 + bk * sk * 8 + 2 * total * 4) as u64;
+            let t0 = Instant::now();
+            let exe = self.exes.get(&name).expect("compiled above");
+            let result = exe
+                .execute_b::<xla::PjRtBuffer>(&inputs)
+                .map_err(|e| anyhow::anyhow!("executing {name}: {e:?}"))?;
+            self.stats.executions += 1;
+            self.stats.execute_secs += t0.elapsed().as_secs_f64();
+            self.stats.upload_bytes += upload;
+            Ok(result)
+        })();
+        match run {
+            Ok(result) => Ok(PendingLaunch { name, result, inputs, bk, sk }),
+            Err(e) => {
+                inputs.clear();
+                self.inputs = inputs;
+                Err(e)
+            }
+        }
+    }
+
+    /// The readback half of a fused launch: block on the result tuple,
+    /// land the outputs in the prepared scratch, recycle the input
+    /// buffer vector. Readback wall time is charged to
+    /// [`RuntimeStats::execute_secs`] — under the overlapped path this
+    /// is the residual wait the host did *not* manage to hide.
+    fn readback(&mut self, p: PendingLaunch, out: &mut StepScratch) -> Result<()> {
+        let PendingLaunch { name, result, mut inputs, bk, sk } = p;
+        let dims = self.contract.teacher;
+        // re-prepare defensively: the overlapped caller may have used the
+        // scratch between begin and await (prepare is idempotent on
+        // already-correct shapes, and outputs are fully overwritten)
+        out.prepare_batch(
+            bk,
+            sk,
+            self.contract.vocab,
+            self.contract.feat_dim,
+            dims.layers,
+            dims.heads,
+            dims.d_head,
+            false,
+        );
+        let t0 = Instant::now();
+        let res = Self::read_outputs(&name, &result, false, out);
+        self.stats.execute_secs += t0.elapsed().as_secs_f64();
+        inputs.clear();
+        if inputs.capacity() > self.inputs.capacity() {
+            self.inputs = inputs;
+        }
+        res
+    }
 }
 
 impl ModelBackend for PjrtBackend {
@@ -589,98 +759,46 @@ impl ModelBackend for PjrtBackend {
                 out,
             );
         }
-        let dims = self.contract.teacher;
-        let cap = self.contract.cache_cap;
-        let rs = dims.heads * dims.d_head;
-        let name = plan.key.artifact_name();
-        self.ensure_compiled(&name)?;
-        // keep every ticketed mirror current (the ticket is consumed by
-        // this launch whether or not the fused module can read retained
-        // buffers — see the module docs)
-        for req in args.reqs.iter() {
-            if let Some(t) = req.session {
-                self.sync_session(&t, &req.kv, ModuleRole::Teacher)?;
-            }
+        let p = self.fused_dispatch(plan, &args, out)?;
+        self.readback(p, out)
+    }
+
+    /// Overlapped fused dispatch: run the staging/upload/`execute_b`
+    /// half of the batch launch, retaining the un-read result buffers,
+    /// and defer the host-blocking tuple readback to
+    /// [`ModelBackend::await_batch`] — between the two, the PJRT runtime
+    /// owns the computation and the host is free to stage the next wave.
+    /// The `bk == 1` single-request route (the plan names the unbatched
+    /// module) and the staging-mismatch emulation route have no deferred
+    /// half and complete eagerly ([`LaunchToken::completed`]).
+    fn begin_execute_batch(
+        &mut self,
+        plan: &LaunchPlan,
+        args: BatchStepArgs,
+        out: &mut StepScratch,
+    ) -> Result<LaunchToken> {
+        let (bk, sk) = (plan.key.b, plan.key.s);
+        anyhow::ensure!(!args.reqs.is_empty(), "begin_execute_batch with an empty group");
+        if args.s_max != sk || args.tokens.len() != bk * sk || args.reqs.len() > bk || bk == 1 {
+            self.execute_batch(plan, args, out)?;
+            return Ok(LaunchToken::completed());
         }
-        // Stack per-request caches ([B_key, L, cap, H, Dh]). The staging
-        // is sized once and reused; like materialize_kv, each slot zeroes
-        // only rows a previous (larger) stacking left behind instead of
-        // memsetting the whole multi-MB pair every launch.
-        let n1 = dims.cache_elems(cap);
-        let total = bk * n1;
-        if self.fused_k.len() < total {
-            self.fused_k.resize(total, 0.0);
-            self.fused_v.resize(total, 0.0);
+        let p = self.fused_dispatch(plan, &args, out)?;
+        self.next_launch += 1;
+        let id = self.next_launch;
+        self.pending.insert(id, p);
+        Ok(LaunchToken { id })
+    }
+
+    fn await_batch(&mut self, token: LaunchToken, out: &mut StepScratch) -> Result<()> {
+        if token.is_completed() {
+            return Ok(());
         }
-        if self.fused_rows.len() < bk {
-            self.fused_rows.resize(bk, 0);
-        }
-        for bi in 0..bk {
-            let rows = args
-                .reqs
-                .get(bi)
-                .map(|req| req.kv.mapped_rows().min(cap))
-                .unwrap_or(0);
-            let base = bi * n1;
-            if let Some(req) = args.reqs.get(bi) {
-                gather_rows_flat(
-                    &req.kv,
-                    &mut self.fused_k[base..base + n1],
-                    &mut self.fused_v[base..base + n1],
-                    0,
-                    rows,
-                    dims.layers,
-                    rs,
-                    cap,
-                );
-            }
-            let prev = self.fused_rows[bi].min(cap);
-            if prev > rows {
-                for l in 0..dims.layers {
-                    let z0 = base + (l * cap + rows) * rs;
-                    let z1 = base + (l * cap + prev) * rs;
-                    self.fused_k[z0..z1].fill(0.0);
-                    self.fused_v[z0..z1].fill(0.0);
-                }
-            }
-            self.fused_rows[bi] = rows;
-        }
-        out.prepare_batch(
-            bk,
-            sk,
-            self.contract.vocab,
-            self.contract.feat_dim,
-            dims.layers,
-            dims.heads,
-            dims.d_head,
-            false,
-        );
-        let mut inputs = std::mem::take(&mut self.inputs);
-        inputs.clear();
-        let run = (|| -> Result<()> {
-            inputs.push(self.upload_i32(args.tokens, &[bk * sk])?);
-            inputs.push(self.upload_i32(args.positions, &[bk * sk])?);
-            inputs.push(self.upload_f32(args.mask, &[bk, sk, cap + sk])?);
-            let cache_dims = [bk, dims.layers, cap, dims.heads, dims.d_head];
-            // slice to this launch's extent: the staging may be larger
-            // after a previous wider group
-            inputs.push(self.upload_f32(&self.fused_k[..total], &cache_dims)?);
-            inputs.push(self.upload_f32(&self.fused_v[..total], &cache_dims)?);
-            let upload = (args.mask.len() * 4 + bk * sk * 8 + 2 * total * 4) as u64;
-            let t0 = Instant::now();
-            let exe = self.exes.get(&name).expect("compiled above");
-            let result = exe
-                .execute_b::<xla::PjRtBuffer>(&inputs)
-                .map_err(|e| anyhow::anyhow!("executing {name}: {e:?}"))?;
-            Self::read_outputs(&name, &result, false, out)?;
-            self.stats.executions += 1;
-            self.stats.execute_secs += t0.elapsed().as_secs_f64();
-            self.stats.upload_bytes += upload;
-            Ok(())
-        })();
-        inputs.clear();
-        self.inputs = inputs;
-        run
+        let p = self
+            .pending
+            .remove(&token.id)
+            .with_context(|| format!("await_batch: unknown pjrt launch token {}", token.id))?;
+        self.readback(p, out)
     }
 
     fn bind_kv(

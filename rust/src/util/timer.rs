@@ -6,12 +6,17 @@ use std::collections::BTreeMap;
 use std::time::Instant;
 
 /// The decode-loop stages the paper's E3 experiment attributes time to.
+/// `verify` is the host-blocked share of a fused launch (begin + await);
+/// `verify_hidden` is the in-flight window the pipelined serve loop
+/// spent on other slots' host work instead of waiting — overlap actually
+/// achieved, recorded only when a launch was truly overlapped.
 pub const STAGES: &[&str] = &[
     "prefill",
     "draft_expand",
     "tensorize",
     "mask_build",
     "verify",
+    "verify_hidden",
     "accept",
     "commit",
 ];

@@ -123,6 +123,10 @@ fn steady_state_batched_rounds_are_allocation_free() {
         e.warmup(&mut b).unwrap();
     }
     let mut sched = ContinuousScheduler::new(B, b.contract().cache_cap);
+    // this test pins the *synchronous* staging path (stage -> launch ->
+    // resolve inline); the pipelined double-buffered path has its own
+    // test below
+    sched.set_pipelining(false);
     // Warmup drive: sizes the fused block to its high-water mark.
     let warm_prompts: Vec<Vec<i32>> = (0..B).map(|i| prompt(15, 10 + i as u64)).collect();
     let outs =
@@ -142,6 +146,50 @@ fn steady_state_batched_rounds_are_allocation_free() {
         0,
         "steady-state batched decode performed {grew} vocab/cap-sized allocations \
          across {rounds} fused rounds — the batching hot path regressed"
+    );
+}
+
+#[test]
+fn pipelined_steady_state_rounds_are_allocation_free() {
+    // The pipelined serve loop's half of the batching contract:
+    // double-buffered staging means each wave stages into whichever
+    // ping-pong `StageBuf` (tokens/positions, mask block, output
+    // scratch) the in-flight launch is NOT holding. Once both buffers
+    // have hit their high-water mark, a steady pipelined round must be
+    // as allocation-free as a synchronous one.
+    const B: usize = 4;
+    let mut b = SimBackend::new(85);
+    let mut engines: Vec<Engine> =
+        (0..B).map(|_| Engine::new(&b, RunConfig::default())).collect();
+    for e in engines.iter_mut() {
+        e.warmup(&mut b).unwrap();
+    }
+    let mut sched = ContinuousScheduler::new(B, b.contract().cache_cap);
+    sched.set_pipelining(true);
+    // Two warmup drives: pipelined staging alternates between the two
+    // StageBufs every wave, so a sustained drive sizes both — and the
+    // second drive catches any buffer whose first use came late in the
+    // first (e.g. the drain wave at the end of a pass).
+    for w in 0..2u64 {
+        let warm: Vec<Vec<i32>> =
+            (0..B).map(|i| prompt(15, 40 + w * 10 + i as u64)).collect();
+        let outs =
+            decode_speculative_batch(&mut b, &mut engines, &warm, 24, &mut sched).unwrap();
+        assert!(outs.iter().all(|o| o.rounds > 0));
+    }
+
+    // Steady state: continue all four conversations, pipelined.
+    let cont: Vec<Vec<i32>> = (0..B).map(|i| prompt(2, 60 + i as u64)).collect();
+    let snapshot = ALLOC.allocs();
+    let outs = decode_speculative_batch(&mut b, &mut engines, &cont, 24, &mut sched).unwrap();
+    let rounds: u64 = outs.iter().map(|o| o.rounds).sum();
+    assert!(rounds >= 4 * B as u64, "expected a sustained pipelined run, got {rounds} rounds");
+    let grew = ALLOC.allocs() - snapshot;
+    assert_eq!(
+        grew,
+        0,
+        "steady-state pipelined decode performed {grew} vocab/cap-sized allocations \
+         across {rounds} rounds — the double-buffered staging path regressed"
     );
 }
 

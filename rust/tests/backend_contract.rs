@@ -414,6 +414,10 @@ fn b4_verification_tick_is_one_launch() {
     let mut engines: Vec<Engine> = cfgs.iter().map(|c| Engine::new(&b, c.clone())).collect();
     let cap = b.contract().cache_cap;
     let mut sched = ContinuousScheduler::new(4, cap);
+    // synchronous loop: this asserts the full-width one-launch-per-tick
+    // contract; the pipelined loop deliberately halves steady wave
+    // widths (tests/continuous.rs covers its width behaviour)
+    sched.set_pipelining(false);
     decode_speculative_batch(&mut b, &mut engines, &prompts, 12, &mut sched).unwrap();
     let width4 = b.launches_by_width.get(4).copied().unwrap_or(0);
     assert!(width4 > 0, "B=4 ticks must fuse into single width-4 launches");
@@ -445,6 +449,10 @@ fn capped_width_splits_group_without_changing_tokens() {
     let mut engines: Vec<Engine> = cfgs.iter().map(|c| Engine::new(&b, c.clone())).collect();
     let cap = b.contract().cache_cap;
     let mut sched = ContinuousScheduler::new(4, cap);
+    // synchronous loop: forces the width-4 stage -> SplitRequired path
+    // (pipelined waves at B=4 are already narrower than the cap; the
+    // pipelined split path is covered in tests/continuous.rs)
+    sched.set_pipelining(false);
     let outs = decode_speculative_batch(&mut b, &mut engines, &prompts, 16, &mut sched).unwrap();
     for (o, s) in outs.iter().zip(&seq) {
         assert_eq!(&o.tokens, s, "split launch changed tokens");
