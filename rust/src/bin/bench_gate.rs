@@ -32,6 +32,16 @@
 //!   baseline pins an `upload` section — the *current* file must show
 //!   session-on `<= 0.25x` session-off at B = 4 (the resident-session
 //!   path must keep shipping deltas, not caches);
+//! * trace-replay latency (`*_p50_ms` / `*_p95_ms` / `*_p99_ms`):
+//!   deterministic virtual-clock percentiles; current must be
+//!   `<= 1.15 * baseline`, and — when the baseline pins a
+//!   `latency.slo_ms` — every `*_p99_ms` leaf of the *current* `latency`
+//!   section must sit at or below that SLO (a hard p99 floor: virtual
+//!   clocks don't flake, so the ceiling is absolute, not relative);
+//! * shed rate (`*_shed_rate`): deterministic admission-layer outcome;
+//!   current must be `<= baseline + 0.05` (absolute slack — shedding a
+//!   few more requests under the pinned overload trace is creep, not
+//!   noise);
 //! * a metric present in the baseline but missing from the current file
 //!   fails (dropping a gated metric is a coverage regression).
 //!
@@ -72,10 +82,26 @@ enum Rule {
     /// paged-occupancy regression beyond 15% fails regardless of runner
     /// speed.
     Memory,
+    /// Trace-replay latency percentile (deterministic virtual-clock ms):
+    /// lower is better; fail above `LATENCY_TOLERANCE * baseline`.
+    Latency,
+    /// Shed rate (deterministic admission outcome in [0, 1]): lower is
+    /// better; fail above `baseline + slack` (absolute, not a ratio — a
+    /// 0.0 baseline must still admit pinning).
+    ShedRate {
+        /// Absolute slack on top of the baseline rate.
+        slack: f64,
+    },
 }
 
 /// Memory-occupancy regression budget: current <= 1.15 * baseline.
 const MEMORY_TOLERANCE: f64 = 1.15;
+
+/// Latency regression budget: current <= 1.15 * baseline (virtual ms).
+const LATENCY_TOLERANCE: f64 = 1.15;
+
+/// Shed-rate creep budget: current <= baseline + 0.05 (absolute).
+const SHED_RATE_SLACK: f64 = 0.05;
 
 fn rule_for(leaf: &str) -> Option<Rule> {
     if leaf == "tokens_per_sec" || leaf.ends_with("rounds_per_sec") {
@@ -101,6 +127,14 @@ fn rule_for(leaf: &str) -> Option<Rule> {
         // rule, not gated themselves (full upload is a constant of the
         // contract geometry).
         return Some(Rule::Memory);
+    }
+    if leaf.ends_with("_p50_ms") || leaf.ends_with("_p95_ms") || leaf.ends_with("_p99_ms") {
+        // `slo_ms` / `overload_target` are contract constants, not gated
+        // leaves — they parameterize the cross rule below.
+        return Some(Rule::Latency);
+    }
+    if leaf.ends_with("_shed_rate") {
+        return Some(Rule::ShedRate { slack: SHED_RATE_SLACK });
     }
     None
 }
@@ -142,6 +176,14 @@ fn gate(baseline: &Json, current: &Json, tol: f64, path: &str, out: &mut Vec<Fin
         Rule::Memory => {
             let ceil = base * MEMORY_TOLERANCE;
             (cur <= ceil, format!("{cur:.0} B vs baseline {base:.0} B (ceiling {ceil:.0} B)"))
+        }
+        Rule::Latency => {
+            let ceil = base * LATENCY_TOLERANCE;
+            (cur <= ceil, format!("{cur:.2} ms vs baseline {base:.2} ms (ceiling {ceil:.2} ms)"))
+        }
+        Rule::ShedRate { slack } => {
+            let ceil = base + slack;
+            (cur <= ceil, format!("{cur:.3} vs baseline {base:.3} (ceiling {ceil:.3})"))
         }
     };
     out.push(Finding { path: path.to_string(), ok, detail });
@@ -212,12 +254,55 @@ fn gate_upload_cross(baseline: &Json, current: &Json, out: &mut Vec<Finding>) {
 /// Resident-session upload budget: session-on <= 0.25x session-off.
 const UPLOAD_RATIO: f64 = 0.25;
 
+/// Hard p99 SLO floor over the *current* file's `latency` section: every
+/// `*_p99_ms` leaf must sit at or below the baseline's pinned
+/// `latency.slo_ms`. The percentiles are virtual-clock and deterministic,
+/// so the ceiling is absolute — no runner-speed tolerance applies.
+/// Applied only when the baseline pins `latency.slo_ms` (baseline
+/// defines the contract, like every other rule).
+fn gate_latency_slo(baseline: &Json, current: &Json, out: &mut Vec<Finding>) {
+    let Some(slo) =
+        baseline.get("latency").and_then(|l| l.get("slo_ms")).and_then(Json::as_f64)
+    else {
+        return;
+    };
+    let Some(cur) = current.get("latency").and_then(Json::as_obj) else {
+        out.push(Finding {
+            path: "latency.slo_floor".to_string(),
+            ok: false,
+            detail: format!("latency section missing from current output (SLO {slo:.0} ms)"),
+        });
+        return;
+    };
+    let mut seen = 0usize;
+    for (k, v) in cur {
+        if !k.ends_with("_p99_ms") {
+            continue;
+        }
+        let Some(p99) = v.as_f64() else { continue };
+        seen += 1;
+        out.push(Finding {
+            path: format!("latency.{k}.slo_floor"),
+            ok: p99 <= slo,
+            detail: format!("p99 {p99:.2} ms vs SLO floor {slo:.0} ms"),
+        });
+    }
+    if seen == 0 {
+        out.push(Finding {
+            path: "latency.slo_floor".to_string(),
+            ok: false,
+            detail: format!("no *_p99_ms leaves in current latency section (SLO {slo:.0} ms)"),
+        });
+    }
+}
+
 /// Run the gate over two parsed bench files; returns the findings.
 fn run_gate(baseline: &Json, current: &Json, tol: f64) -> Vec<Finding> {
     let mut out = Vec::new();
     gate(baseline, current, tol, "", &mut out);
     gate_kv_cross(baseline, current, &mut out);
     gate_upload_cross(baseline, current, &mut out);
+    gate_latency_slo(baseline, current, &mut out);
     out
 }
 
@@ -414,6 +499,77 @@ mod tests {
         let legacy = bench_json(1000.0, 2000.0, 1.3, 100.0);
         let findings = run_gate(&legacy, &good, 0.85);
         assert!(!findings.iter().any(|f| f.path.starts_with("upload.")));
+    }
+
+    fn latency_json(p99: f64, shed: f64, slo: f64) -> Json {
+        let mut lat = Json::obj();
+        lat.push("poisson_b4_p50_ms", p99 * 0.4)
+            .push("poisson_b4_p95_ms", p99 * 0.8)
+            .push("poisson_b4_p99_ms", p99)
+            .push("poisson_b4_shed_rate", 0.0)
+            .push("overload_shed_rate", shed)
+            .push("overload_target", 30.0)
+            .push("slo_ms", slo);
+        let mut j = bench_json(1000.0, 2000.0, 1.3, 100.0);
+        j.push("latency", lat);
+        j
+    }
+
+    #[test]
+    fn latency_regression_beyond_fifteen_percent_fails() {
+        let base = latency_json(80.0, 0.4, 250.0);
+        // +10% stays green
+        let findings = run_gate(&base, &latency_json(88.0, 0.4, 250.0), 0.85);
+        let f = findings.iter().find(|f| f.path == "latency.poisson_b4_p99_ms").unwrap();
+        assert!(f.ok, "10% latency growth is within the 15% budget: {}", f.detail);
+        // +20% fails
+        let findings = run_gate(&base, &latency_json(96.0, 0.4, 250.0), 0.85);
+        let f = findings.iter().find(|f| f.path == "latency.poisson_b4_p99_ms").unwrap();
+        assert!(!f.ok, "20% latency growth must fail");
+        // p50/p95 leaves are gated too
+        assert!(findings.iter().any(|f| f.path == "latency.poisson_b4_p50_ms"));
+        assert!(findings.iter().any(|f| f.path == "latency.poisson_b4_p95_ms"));
+        // the SLO constant itself is a contract parameter, never a leaf
+        assert!(!findings.iter().any(|f| f.path == "latency.slo_ms"));
+    }
+
+    #[test]
+    fn shed_rate_creep_beyond_absolute_slack_fails() {
+        let base = latency_json(80.0, 0.4, 250.0);
+        let findings = run_gate(&base, &latency_json(80.0, 0.44, 250.0), 0.85);
+        let f = findings.iter().find(|f| f.path == "latency.overload_shed_rate").unwrap();
+        assert!(f.ok, "+0.04 shed rate is within the 0.05 slack: {}", f.detail);
+        let findings = run_gate(&base, &latency_json(80.0, 0.46, 250.0), 0.85);
+        let f = findings.iter().find(|f| f.path == "latency.overload_shed_rate").unwrap();
+        assert!(!f.ok, "+0.06 shed rate must fail");
+    }
+
+    #[test]
+    fn p99_slo_floor_is_absolute() {
+        let base = latency_json(80.0, 0.4, 90.0);
+        // under the floor: passes
+        let findings = run_gate(&base, &latency_json(85.0, 0.4, 90.0), 0.85);
+        let f = findings
+            .iter()
+            .find(|f| f.path == "latency.poisson_b4_p99_ms.slo_floor")
+            .unwrap();
+        assert!(f.ok, "{}", f.detail);
+        // over the floor: fails even though it is within 1.15x of its own
+        // baseline (the SLO ceiling is absolute)
+        let findings = run_gate(&base, &latency_json(91.0, 0.4, 90.0), 0.85);
+        let f = findings
+            .iter()
+            .find(|f| f.path == "latency.poisson_b4_p99_ms.slo_floor")
+            .unwrap();
+        assert!(!f.ok, "p99 above the SLO floor must fail: {}", f.detail);
+        // a current file that dropped the latency section fails coverage
+        let stale = bench_json(1000.0, 2000.0, 1.3, 100.0);
+        let findings = run_gate(&base, &stale, 0.85);
+        assert!(findings.iter().any(|f| f.path == "latency.slo_floor" && !f.ok));
+        // a legacy baseline without latency.slo_ms skips the rule
+        let legacy = bench_json(1000.0, 2000.0, 1.3, 100.0);
+        let findings = run_gate(&legacy, &latency_json(85.0, 0.4, 90.0), 0.85);
+        assert!(!findings.iter().any(|f| f.path.contains("slo_floor")));
     }
 
     #[test]

@@ -2,14 +2,16 @@
 
 use super::args::Args;
 use crate::config::{CacheLayout, CacheStrategy, CommitMode, ExecMode, RunConfig};
-use crate::coordinator::{run_workload, AdmissionPolicy, BackendSpec, CoordinatorConfig};
+use crate::coordinator::{
+    run_workload, AdmissionPolicy, BackendSpec, CoordinatorConfig, SloAction, SloPolicy,
+};
 use crate::engine::Engine;
-use crate::harness::{run_e1, run_e2, run_e3, run_e4, HarnessConfig};
+use crate::harness::{replay, run_e1, run_e2, run_e3, run_e4, HarnessConfig, ReplayConfig};
 use crate::metrics::{pair_turns, ThroughputReport};
 use crate::runtime::golden::{load_goldens, verify_golden};
 use crate::runtime::PjrtBackend;
 use crate::trace::merge_rank_files;
-use crate::workload::{Grammar, Profile, WorkloadSpec};
+use crate::workload::{ArrivalKind, Grammar, Profile, TraceSpec, WorkloadSpec};
 use anyhow::{bail, Context, Result};
 use std::path::PathBuf;
 
@@ -25,6 +27,9 @@ COMMANDS
   bench-e3    Fig 5                  — instrumented stage breakdown
   bench-e4    Table 3 + Fig 6/7      — drafter context truncation
   load        serving-like load evaluation: --requests N --rate R --servers K
+  trace-replay  deterministic load replay through the scheduler: seeded Poisson or
+              bursty arrivals over mixed grammar prompts, virtual-clock latency
+              p50/p95/p99 + shed rate (--arrivals, --rate, --slots, --slo-ms)
   goldens     verify rust PJRT execution against python golden fixtures
   traces      merge + report rank trace files: traces <dir>
 
@@ -52,6 +57,21 @@ COMMON FLAGS
   --no-fast-reorder       disable the prefix-sharing fast reorder
   --unsafe-indexing       skip §3.2 invariant checks (ablation)
   --adaptive              adaptive tree-budget policy (E2 takeaway)
+  --adaptive-occupancy on|off  load-adaptive speculation (default off; requires
+                          --adaptive): the scheduler feeds live-slot occupancy into
+                          the budget controller each tick, shrinking the tree budget
+                          as the batch fills at fixed utilization; off is
+                          token-bit-identical to the plain adaptive controller
+  --slo-ms T              per-request latency SLO in virtual ms (trace-replay):
+                          attach a deadline to every replayed request
+  --slo-action shed|queue what an expired deadline does (default shed): shed drops
+                          the request pre-admission with a typed notice; queue
+                          keeps it waiting (deadline is observational)
+  --arrivals poisson|bursty  trace-replay arrival process (default poisson); bursty
+                          is a 2-state Markov-modulated Poisson (--rate low state,
+                          --rate-hi high state, --switch-p per-arrival flip chance)
+  --slots B               trace-replay engine slots (serving batch width, default 4)
+  --prompt-mean N         trace-replay mean prompt length (default 16)
   --draft-window W        truncate drafter context (E4)
   --max-new N             tokens per turn
   --temperature T         0 = greedy (default)
@@ -70,6 +90,8 @@ const RUN_FLAGS: &[&str] = &[
     "draft-window", "max-new",
     "temperature", "workers", "batch", "scheduling", "seed", "out-dir", "trace-dir",
     "prompt-len", "conversations", "profile", "turns", "requests", "rate", "servers",
+    "adaptive-occupancy", "slo-ms", "slo-action", "arrivals", "rate-hi", "switch-p",
+    "slots", "prompt-mean",
 ];
 const RUN_SWITCHES: &[&str] = &[
     "quick", "verbose", "no-fast-reorder", "unsafe-indexing", "attention-stats",
@@ -105,6 +127,7 @@ pub fn dispatch(args: &Args) -> Result<()> {
             run_e4(&h, args.has("attention-stats")).map(|_| ())
         }
         "load" => cmd_load(args),
+        "trace-replay" => cmd_trace_replay(args),
         "goldens" => cmd_goldens(args),
         "traces" => cmd_traces(args),
         other => bail!("unknown command '{other}'\n{USAGE}"),
@@ -177,6 +200,13 @@ pub fn run_config(args: &Args) -> Result<RunConfig> {
     cfg.instrument = args.has("instrument");
     cfg.attention_stats = args.has("attention-stats");
     cfg.adaptive_budget = args.has("adaptive");
+    if let Some(o) = args.get("adaptive-occupancy") {
+        cfg.adaptive_occupancy = match o {
+            "on" => true,
+            "off" => false,
+            other => bail!("unknown --adaptive-occupancy value '{other}' (expected on|off)"),
+        };
+    }
     cfg.validate()?;
     Ok(cfg)
 }
@@ -312,6 +342,79 @@ fn cmd_load(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Build the SLO policy from `--slo-ms` / `--slo-action` (None when no
+/// deadline is requested; `--slo-action` without `--slo-ms` is a
+/// contract error so a typo can't silently drop the deadline).
+fn slo_from_args(args: &Args) -> Result<Option<SloPolicy>> {
+    let Some(target_ms) = args.get_f64("slo-ms")? else {
+        if args.get("slo-action").is_some() {
+            bail!(
+                "config contract: --slo-action requires --slo-ms \
+                 (an action without a deadline does nothing)"
+            );
+        }
+        return Ok(None);
+    };
+    let action = args
+        .get("slo-action")
+        .map(SloAction::parse)
+        .transpose()?
+        .unwrap_or(SloAction::Shed);
+    let policy = SloPolicy { target_ms, action };
+    policy.validate()?;
+    Ok(Some(policy))
+}
+
+fn cmd_trace_replay(args: &Args) -> Result<()> {
+    let run = run_config(args)?;
+    let rate = args.get_f64("rate")?.unwrap_or(40.0);
+    let kind = match args.get("arrivals").unwrap_or("poisson") {
+        "poisson" => ArrivalKind::Poisson { rate_rps: rate },
+        "bursty" => ArrivalKind::Bursty {
+            rate_lo_rps: rate,
+            rate_hi_rps: args.get_f64("rate-hi")?.unwrap_or(rate * 8.0),
+            switch_p: args.get_f64("switch-p")?.unwrap_or(0.25),
+        },
+        other => bail!("unknown --arrivals value '{other}' (expected poisson|bursty)"),
+    };
+    let spec = TraceSpec {
+        requests: args.get_usize("requests")?.unwrap_or(48),
+        kind,
+        prompt_mean: args.get_usize("prompt-mean")?.unwrap_or(16),
+        max_new: args.get_usize("max-new")?.unwrap_or(6),
+        seed: run.seed,
+    };
+    let mut cfg = ReplayConfig::new(args.get_usize("slots")?.unwrap_or(4));
+    cfg.agree_pct = args.get_u64("agree")?.unwrap_or(90);
+    cfg.slo = slo_from_args(args)?;
+    cfg.run = run;
+    cfg.validate()?;
+    let trace = spec.generate()?;
+    let report = replay(&trace, &cfg)?;
+    let slo_desc = match cfg.slo {
+        Some(p) => format!("{:.1} ms / {}", p.target_ms, p.action.as_str()),
+        None => "none".to_string(),
+    };
+    println!(
+        "trace-replay: {} requests, {} slots, pipelining {}, SLO {}",
+        report.total,
+        cfg.slots,
+        if cfg.run.pipelining { "on" } else { "off" },
+        slo_desc,
+    );
+    println!(
+        "  completed {}  shed {}  (shed rate {:.1}%)",
+        report.completed,
+        report.shed,
+        report.shed_rate * 100.0
+    );
+    println!(
+        "  latency (virtual ms): mean {:.2}  p50 {:.2}  p95 {:.2}  p99 {:.2}",
+        report.mean_ms, report.p50_ms, report.p95_ms, report.p99_ms
+    );
+    Ok(())
+}
+
 fn cmd_goldens(args: &Args) -> Result<()> {
     let dir = PathBuf::from(args.get("artifacts").unwrap_or("artifacts"));
     let mut backend = PjrtBackend::load(&dir)?;
@@ -444,6 +547,61 @@ mod tests {
             format!("{err:#}").contains("max_batch"),
             "error must name the config contract: {err:#}"
         );
+    }
+
+    #[test]
+    fn adaptive_occupancy_flag_parses_and_requires_adaptive() {
+        assert!(
+            !run_config(&parse("serve")).unwrap().adaptive_occupancy,
+            "occupancy mode defaults off"
+        );
+        let c = run_config(&parse("serve --adaptive --adaptive-occupancy on")).unwrap();
+        assert!(c.adaptive_budget && c.adaptive_occupancy);
+        assert!(
+            !run_config(&parse("serve --adaptive --adaptive-occupancy off"))
+                .unwrap()
+                .adaptive_occupancy
+        );
+        let err = run_config(&parse("serve --adaptive-occupancy on")).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("--adaptive-occupancy"),
+            "error must name the flag: {err:#}"
+        );
+        assert!(run_config(&parse("serve --adaptive --adaptive-occupancy maybe")).is_err());
+    }
+
+    #[test]
+    fn trace_replay_smoke_runs_on_sim() {
+        let a = parse("trace-replay --requests 8 --rate 50 --slots 2 --max-new 4 --seed 7");
+        dispatch(&a).unwrap();
+        let a = parse(
+            "trace-replay --requests 8 --arrivals bursty --rate 20 --rate-hi 200 \
+             --switch-p 0.3 --slots 2 --max-new 4 --pipelining off \
+             --slo-ms 40 --slo-action shed --seed 7",
+        );
+        dispatch(&a).unwrap();
+    }
+
+    #[test]
+    fn trace_replay_rejects_degenerate_configs_by_flag_name() {
+        for (cli, flag) in [
+            ("trace-replay --slo-ms 0", "--slo-ms"),
+            ("trace-replay --slo-ms -5", "--slo-ms"),
+            ("trace-replay --requests 0", "--requests"),
+            ("trace-replay --rate 0", "--rate"),
+            ("trace-replay --slots 0", "--slots"),
+            ("trace-replay --arrivals bursty --rate 50 --rate-hi 10", "--rate-hi"),
+            ("trace-replay --arrivals bursty --switch-p 0", "--switch-p"),
+            ("trace-replay --slo-action shed", "--slo-action"),
+        ] {
+            let err = dispatch(&parse(cli)).unwrap_err();
+            assert!(
+                format!("{err:#}").contains(flag),
+                "`{cli}` must fail naming {flag}: {err:#}"
+            );
+        }
+        assert!(dispatch(&parse("trace-replay --arrivals chaotic")).is_err());
+        assert!(dispatch(&parse("trace-replay --slo-ms 40 --slo-action drop")).is_err());
     }
 
     #[test]

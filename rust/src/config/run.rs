@@ -185,6 +185,14 @@ pub struct RunConfig {
     /// Adaptive tree-budget policy (paper E2 takeaway / future work):
     /// MIMD controller on M driven by recent budget utilization.
     pub adaptive_budget: bool,
+    /// Occupancy-aware extension of the adaptive policy
+    /// (`--adaptive-occupancy`): the scheduler feeds live-slot occupancy
+    /// into the controller each tick, shrinking the budget cap as the
+    /// batch fills, and a per-slot acceptance-rate EWMA replaces the raw
+    /// window average. Requires `adaptive_budget`; off by default so the
+    /// existing controller (and the non-adaptive path) stays
+    /// bit-identical.
+    pub adaptive_occupancy: bool,
     /// Drafter context window W (None = untruncated) — E4.
     pub draft_window: Option<usize>,
     /// Greedy (temperature=0) vs stochastic acceptance.
@@ -213,6 +221,7 @@ impl Default for RunConfig {
             pipelining: true,
             check_invariants: true,
             adaptive_budget: false,
+            adaptive_occupancy: false,
             draft_window: None,
             temperature: 0.0,
             max_new_tokens: 256,
@@ -238,6 +247,13 @@ impl RunConfig {
         if !(0.0..=2.0).contains(&self.temperature) {
             bail!("temperature out of range: {}", self.temperature);
         }
+        if self.adaptive_occupancy && !self.adaptive_budget {
+            bail!(
+                "config contract: --adaptive-occupancy requires --adaptive \
+                 (occupancy caps the adaptive controller; there is no \
+                 controller to cap without it)"
+            );
+        }
         Ok(())
     }
 
@@ -256,6 +272,7 @@ impl RunConfig {
             .push("pipelining", self.pipelining)
             .push("check_invariants", self.check_invariants)
             .push("adaptive_budget", self.adaptive_budget)
+            .push("adaptive_occupancy", self.adaptive_occupancy)
             .push(
                 "draft_window",
                 self.draft_window.map(|w| Json::Num(w as f64)).unwrap_or(Json::Null),
@@ -314,6 +331,17 @@ mod tests {
     #[test]
     fn pipelining_defaults_on() {
         assert!(RunConfig::default().pipelining, "pipelining must default on");
+    }
+
+    #[test]
+    fn occupancy_requires_the_adaptive_controller() {
+        let mut c = RunConfig::default();
+        c.adaptive_occupancy = true;
+        let err = c.validate().unwrap_err().to_string();
+        assert!(err.contains("--adaptive-occupancy"), "error must name the flag: {err}");
+        c.adaptive_budget = true;
+        assert!(c.validate().is_ok());
+        assert!(!RunConfig::default().adaptive_occupancy, "occupancy must default off");
     }
 
     #[test]

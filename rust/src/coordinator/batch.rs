@@ -430,6 +430,85 @@ impl FusedVerifier {
     }
 }
 
+/// What to do with a request whose SLO deadline expires while it is
+/// still waiting in the admission queue.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SloAction {
+    /// Drop the request with a typed [`ShedNotice`] (never silently):
+    /// under overload, shedding over-deadline work protects the latency
+    /// of the requests that can still meet theirs.
+    Shed,
+    /// Keep the request queued no matter how late it is (FIFO position
+    /// preserved — the existing bounded-wait property still holds); the
+    /// deadline is advisory and the caller judges it from the
+    /// [`Completion`] timeline.
+    Queue,
+}
+
+impl SloAction {
+    /// Stable string form (flags, manifests).
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            SloAction::Shed => "shed",
+            SloAction::Queue => "queue",
+        }
+    }
+
+    /// Parse the string form (`shed` | `queue`).
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "shed" => Ok(SloAction::Shed),
+            "queue" => Ok(SloAction::Queue),
+            other => anyhow::bail!("unknown SLO action '{other}' (expected shed|queue)"),
+        }
+    }
+}
+
+/// Per-request service-level objective carried on
+/// [`ContinuousScheduler::submit`]: a latency target against the
+/// scheduler's virtual clock ([`ContinuousScheduler::advance_clock`])
+/// and the overload action taken when the target expires pre-admission.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SloPolicy {
+    /// Latency target in virtual milliseconds, measured from submit.
+    pub target_ms: f64,
+    /// What to do when the target expires while still queued.
+    pub action: SloAction,
+}
+
+impl SloPolicy {
+    /// Reject degenerate targets before they reach a scheduler.
+    pub fn validate(&self) -> Result<()> {
+        if !self.target_ms.is_finite() || self.target_ms <= 0.0 {
+            anyhow::bail!(
+                "config contract: --slo-ms must be a positive finite \
+                 millisecond target, got {}",
+                self.target_ms
+            );
+        }
+        Ok(())
+    }
+}
+
+/// A request dropped by its [`SloAction::Shed`] policy before admission:
+/// the typed overload outcome (a shed request is *never* silently
+/// dropped — every one is accounted here and in
+/// [`SchedulerStats::shed`]). Drain with
+/// [`ContinuousScheduler::drain_shed`].
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ShedNotice {
+    /// The id given at [`ContinuousScheduler::submit`].
+    pub id: u64,
+    /// Tick at which the request was submitted.
+    pub submitted_tick: u64,
+    /// Tick at which the shed decision was taken.
+    pub shed_tick: u64,
+    /// Virtual milliseconds the request had waited when shed.
+    pub waited_ms: f64,
+    /// The expired latency target.
+    pub target_ms: f64,
+}
+
 /// One conversation handed to [`ContinuousScheduler::submit`], awaiting a
 /// free slot.
 pub struct SlotRequest {
@@ -447,6 +526,14 @@ pub struct SlotRequest {
     /// tick's ready set by mode (full-width fusion per mode) instead of
     /// rejecting mixed modes.
     pub cfg: Option<RunConfig>,
+    /// Per-request SLO deadline (`None` = no deadline, the existing
+    /// behavior: the request waits however long FIFO admission takes).
+    /// With a policy attached, the tick's admission pass sheds or keeps
+    /// queueing over-deadline requests per [`SloAction`] — deadlines are
+    /// judged against the virtual clock, which never advances unless the
+    /// driver calls [`ContinuousScheduler::advance_clock`], so the
+    /// no-SLO path is bit-identical to before.
+    pub slo: Option<SloPolicy>,
 }
 
 struct Pending {
@@ -459,6 +546,8 @@ struct Pending {
     /// turn continues on the preserved context without re-prefill.
     parked: Option<ParkedConversation>,
     arrived_tick: u64,
+    arrived_ms: f64,
+    slo: Option<SloPolicy>,
 }
 
 /// Per-slot lifecycle state (admit → active → retire).
@@ -467,7 +556,7 @@ enum Slot {
     /// No conversation resident; admission resets the engine.
     Free,
     /// A conversation is resident and decoding.
-    Active { id: u64, admitted_tick: u64, waited_ticks: u64 },
+    Active { id: u64, admitted_tick: u64, waited_ticks: u64, submitted_tick: u64 },
 }
 
 /// A retired conversation turn: the output plus its admission timeline.
@@ -479,6 +568,8 @@ pub struct Completion {
     pub slot: usize,
     /// The turn's generation output.
     pub out: GenOut,
+    /// Tick at which the conversation was submitted to the queue.
+    pub submitted_tick: u64,
     /// Tick at which the conversation was admitted into the group.
     pub admitted_tick: u64,
     /// Tick at which this turn retired.
@@ -487,6 +578,9 @@ pub struct Completion {
     /// slot was free on arrival; bounded by FIFO admission — see the
     /// fairness property in `tests/continuous.rs`).
     pub waited_ticks: u64,
+    /// The SLO the request carried, echoed back so the driver can judge
+    /// the completion against its own clock (`None` = no deadline).
+    pub slo: Option<SloPolicy>,
 }
 
 /// What to do with a slot after a [`Completion`].
@@ -532,6 +626,8 @@ pub struct SchedulerStats {
     pub fused_launches: u64,
     /// Largest queue wait (ticks between submit and admission) observed.
     pub max_wait_ticks: u64,
+    /// Requests shed pre-admission by their [`SloAction::Shed`] policy.
+    pub shed: u64,
 }
 
 /// Slot-based continuous-batching scheduler (see the module docs for the
@@ -572,6 +668,17 @@ pub struct ContinuousScheduler {
     /// Slot indices pinned by `inflight` — excluded from retire, admit
     /// and draft expansion until the launch resolves.
     inflight_members: Vec<usize>,
+    /// Virtual clock in milliseconds: SLO deadlines are judged against
+    /// this, never against wall time. It advances only when the driver
+    /// calls [`ContinuousScheduler::advance_clock`] — a driver that
+    /// never does (every pre-SLO caller) gets a frozen clock and
+    /// bit-identical scheduling.
+    now_ms: f64,
+    /// Per-slot SLO of the resident conversation (parallel to `slots`;
+    /// kept outside [`Slot`] so the slot state stays `Copy + Eq`).
+    slot_slo: Vec<Option<SloPolicy>>,
+    /// Shed outcomes awaiting [`ContinuousScheduler::drain_shed`].
+    shed_notices: Vec<ShedNotice>,
     /// Cumulative scheduler counters.
     pub stats: SchedulerStats,
 }
@@ -600,8 +707,33 @@ impl ContinuousScheduler {
             pipelining: true,
             inflight: None,
             inflight_members: Vec::new(),
+            now_ms: 0.0,
+            slot_slo: Vec::new(),
+            shed_notices: Vec::new(),
             stats: SchedulerStats::default(),
         }
+    }
+
+    /// Advance the virtual clock by `delta_ms` milliseconds. SLO
+    /// deadlines are judged against this clock only — the scheduler
+    /// never reads wall time for admission decisions, so replay drivers
+    /// that model time deterministically stay deterministic. Negative
+    /// deltas are ignored (the clock is monotone).
+    pub fn advance_clock(&mut self, delta_ms: f64) {
+        if delta_ms > 0.0 {
+            self.now_ms += delta_ms;
+        }
+    }
+
+    /// The virtual clock, in milliseconds since scheduler construction.
+    pub fn now_ms(&self) -> f64 {
+        self.now_ms
+    }
+
+    /// Take the accumulated [`ShedNotice`]s (typed overload outcomes of
+    /// [`SloAction::Shed`] requests dropped pre-admission).
+    pub fn drain_shed(&mut self) -> Vec<ShedNotice> {
+        std::mem::take(&mut self.shed_notices)
     }
 
     /// The configured fusion width (largest request count per launch).
@@ -640,6 +772,8 @@ impl ContinuousScheduler {
             cfg: req.cfg,
             parked: None,
             arrived_tick: self.tick_now,
+            arrived_ms: self.now_ms,
+            slo: req.slo,
         });
     }
 
@@ -662,6 +796,8 @@ impl ContinuousScheduler {
             cfg: None,
             parked: Some(parked),
             arrived_tick: self.tick_now,
+            arrived_ms: self.now_ms,
+            slo: None,
         });
         Ok(())
     }
@@ -706,20 +842,29 @@ impl ContinuousScheduler {
     /// the next drive. A device launch still in flight is abandoned
     /// (its token is dropped un-awaited — the backend keeps the pending
     /// entry, which a reused backend tolerates; outputs are discarded
-    /// along with the conversations that wanted them).
+    /// along with the conversations that wanted them). Undrained shed
+    /// notices are dropped with the epoch they describe — a post-abort
+    /// [`ContinuousScheduler::drain_shed`] starts empty.
     pub fn abort_all(&mut self) {
         self.queue.clear();
         self.parked.clear();
         self.inflight = None;
         self.inflight_members.clear();
+        self.shed_notices.clear();
         for s in self.slots.iter_mut() {
             *s = Slot::Free;
+        }
+        for s in self.slot_slo.iter_mut() {
+            *s = None;
         }
     }
 
     fn ensure_slots(&mut self, n: usize) -> Result<()> {
         if self.slots.len() < n {
             self.slots.resize(n, Slot::Free);
+        }
+        if self.slot_slo.len() < self.slots.len() {
+            self.slot_slo.resize(self.slots.len(), None);
         }
         anyhow::ensure!(
             self.slots.len() == n,
@@ -728,6 +873,40 @@ impl ContinuousScheduler {
             n
         );
         Ok(())
+    }
+
+    /// Drop every queued [`SloAction::Shed`] request whose deadline has
+    /// expired on the virtual clock, each accounted by a typed
+    /// [`ShedNotice`]. FIFO order among the survivors is untouched, so
+    /// no admission ever overtakes an earlier surviving submission.
+    /// [`SloAction::Queue`] requests are never dropped here.
+    fn shed_expired(&mut self) {
+        if self.queue.is_empty() {
+            return;
+        }
+        let had = self.queue.len();
+        let q = std::mem::take(&mut self.queue);
+        for p in q {
+            let expired = matches!(
+                p.slo,
+                Some(SloPolicy { target_ms, action: SloAction::Shed })
+                    if self.now_ms - p.arrived_ms > target_ms
+            );
+            if expired {
+                let slo = p.slo.expect("matched Some above");
+                self.shed_notices.push(ShedNotice {
+                    id: p.id,
+                    submitted_tick: p.arrived_tick,
+                    shed_tick: self.tick_now,
+                    waited_ms: self.now_ms - p.arrived_ms,
+                    target_ms: slo.target_ms,
+                });
+                self.stats.shed += 1;
+            } else {
+                self.queue.push_back(p);
+            }
+        }
+        debug_assert!(self.queue.len() <= had, "shed sweep must not grow the queue");
     }
 
     /// One scheduler tick: retire finished/stalled conversations (calling
@@ -758,7 +937,8 @@ impl ContinuousScheduler {
             if self.inflight_members.contains(&si) {
                 continue;
             }
-            let Slot::Active { id, admitted_tick, waited_ticks } = self.slots[si] else {
+            let Slot::Active { id, admitted_tick, waited_ticks, submitted_tick } = self.slots[si]
+            else {
                 continue;
             };
             if engines[si].needs_more() {
@@ -774,12 +954,17 @@ impl ContinuousScheduler {
                 id,
                 slot: si,
                 out,
+                submitted_tick,
                 admitted_tick,
                 finished_tick: self.tick_now,
                 waited_ticks,
+                slo: self.slot_slo[si],
             };
             match on_done(comp) {
-                Disposition::Release => self.slots[si] = Slot::Free,
+                Disposition::Release => {
+                    self.slots[si] = Slot::Free;
+                    self.slot_slo[si] = None;
+                }
                 Disposition::Continue { prompt, max_new } => {
                     // next turn of the same conversation: context (both KV
                     // caches) is preserved, so no reset — the slot stays
@@ -794,10 +979,14 @@ impl ContinuousScheduler {
                     self.parked.insert(id, parked);
                     self.stats.parked += 1;
                     self.slots[si] = Slot::Free;
+                    self.slot_slo[si] = None;
                 }
             }
         }
-        // 2. Admit: fill freed slots from the queue, FIFO.
+        // 2. Shed: drop queued Shed-policy requests whose deadline has
+        // expired on the virtual clock (typed ShedNotice per drop), then
+        // admit — filling freed slots from the surviving queue, FIFO.
+        self.shed_expired();
         for si in 0..self.slots.len() {
             if self.queue.is_empty() {
                 break;
@@ -823,8 +1012,24 @@ impl ContinuousScheduler {
             let waited = self.tick_now - p.arrived_tick;
             self.stats.admitted += 1;
             self.stats.max_wait_ticks = self.stats.max_wait_ticks.max(waited);
-            self.slots[si] =
-                Slot::Active { id: p.id, admitted_tick: self.tick_now, waited_ticks: waited };
+            self.slot_slo[si] = p.slo;
+            self.slots[si] = Slot::Active {
+                id: p.id,
+                admitted_tick: self.tick_now,
+                waited_ticks: waited,
+                submitted_tick: p.arrived_tick,
+            };
+        }
+        // 2b. Occupancy feed: tell every active engine how full the batch
+        // is, so an occupancy-aware adaptive controller can cap its next
+        // round's tree budget. Inert (a field write behind two off-by-
+        // default flags) for every other configuration.
+        let live = self.active();
+        let total = self.slots.len();
+        for si in 0..self.slots.len() {
+            if matches!(self.slots[si], Slot::Active { .. }) {
+                engines[si].note_occupancy(live, total);
+            }
         }
         // 3. One verification round over every ready slot — a
         // conversation admitted in step 2 joins this very round.
@@ -1311,6 +1516,7 @@ mod tests {
                 prompt: p.clone(),
                 max_new: m,
                 cfg: None,
+                slo: None,
             });
         }
         let mut outs: Vec<Option<GenOut>> = (0..4).map(|_| None).collect();
@@ -1372,7 +1578,7 @@ mod tests {
             .unwrap();
         let cap = bk.contract().cache_cap;
         let mut sched = ContinuousScheduler::new(1, cap);
-        sched.submit(SlotRequest { id: 0, prompt: p, max_new: 16, cfg: Some(want_cfg) });
+        sched.submit(SlotRequest { id: 0, prompt: p, max_new: 16, cfg: Some(want_cfg), slo: None });
         let mut got: Option<GenOut> = None;
         sched
             .run_to_idle(&mut bk, &mut engines, &mut |c: Completion| {
@@ -1388,5 +1594,165 @@ mod tests {
             "cache strategy change must rebuild the slot caches"
         );
         assert!(got.teacher_cache.replicate_bytes > 0, "DeepCopy must replicate");
+    }
+
+    #[test]
+    fn slo_policy_validates_targets() {
+        assert!(SloPolicy { target_ms: 5.0, action: SloAction::Shed }.validate().is_ok());
+        for bad in [0.0, -1.0, f64::NAN, f64::INFINITY] {
+            let err = SloPolicy { target_ms: bad, action: SloAction::Queue }
+                .validate()
+                .unwrap_err()
+                .to_string();
+            assert!(err.contains("--slo-ms"), "error must name the flag: {err}");
+        }
+        assert_eq!(SloAction::parse("shed").unwrap(), SloAction::Shed);
+        assert_eq!(SloAction::parse("queue").unwrap(), SloAction::Queue);
+        assert!(SloAction::parse("drop").is_err());
+        assert_eq!(SloAction::Shed.as_str(), "shed");
+    }
+
+    #[test]
+    fn frozen_clock_never_sheds() {
+        // no advance_clock call => deadlines can never expire, even with
+        // an aggressive Shed policy: the no-SLO/no-clock path is inert.
+        let mut bk = SimBackend::new(90);
+        let mut engines = vec![Engine::new(&bk, RunConfig::default())];
+        let cap = bk.contract().cache_cap;
+        let mut sched = ContinuousScheduler::new(1, cap);
+        for i in 0..3u64 {
+            sched.submit(SlotRequest {
+                id: i,
+                prompt: prompt(8, 4400 + i),
+                max_new: 4,
+                cfg: None,
+                slo: Some(SloPolicy { target_ms: 0.001, action: SloAction::Shed }),
+            });
+        }
+        let mut done = 0usize;
+        sched
+            .run_to_idle(&mut bk, &mut engines, &mut |_c| {
+                done += 1;
+                Disposition::Release
+            })
+            .unwrap();
+        assert_eq!(done, 3, "every request completes when the clock is frozen");
+        assert_eq!(sched.stats.shed, 0);
+        assert!(sched.drain_shed().is_empty());
+    }
+
+    #[test]
+    fn expired_shed_requests_are_dropped_with_typed_notices() {
+        // one slot, three submissions: the first is admitted immediately;
+        // the other two wait. Advancing the clock past their target must
+        // shed exactly the queued ones, each with a ShedNotice.
+        let mut bk = SimBackend::new(90);
+        let mut engines = vec![Engine::new(&bk, RunConfig::default())];
+        let cap = bk.contract().cache_cap;
+        let mut sched = ContinuousScheduler::new(1, cap);
+        for i in 0..3u64 {
+            sched.submit(SlotRequest {
+                id: i,
+                prompt: prompt(8, 4500 + i),
+                max_new: 6,
+                cfg: None,
+                slo: Some(SloPolicy { target_ms: 10.0, action: SloAction::Shed }),
+            });
+        }
+        // first tick admits request 0 (clock at 0 — nothing expired)
+        let mut done: Vec<u64> = Vec::new();
+        sched
+            .tick(&mut bk, &mut engines, &mut |c| {
+                done.push(c.id);
+                Disposition::Release
+            })
+            .unwrap();
+        sched.advance_clock(50.0);
+        sched
+            .run_to_idle(&mut bk, &mut engines, &mut |c| {
+                done.push(c.id);
+                Disposition::Release
+            })
+            .unwrap();
+        assert_eq!(done, vec![0], "only the admitted request completes");
+        assert_eq!(sched.stats.shed, 2);
+        let shed = sched.drain_shed();
+        assert_eq!(shed.len(), 2);
+        let ids: Vec<u64> = shed.iter().map(|s| s.id).collect();
+        assert_eq!(ids, vec![1, 2]);
+        for s in &shed {
+            assert!(s.waited_ms > s.target_ms, "shed only past the target");
+            assert_eq!(s.target_ms, 10.0);
+        }
+        assert!(sched.drain_shed().is_empty(), "drain empties the notices");
+        assert!(sched.is_idle());
+    }
+
+    #[test]
+    fn queue_policy_requests_survive_deadline_expiry() {
+        let mut bk = SimBackend::new(90);
+        let mut engines = vec![Engine::new(&bk, RunConfig::default())];
+        let cap = bk.contract().cache_cap;
+        let mut sched = ContinuousScheduler::new(1, cap);
+        for i in 0..3u64 {
+            sched.submit(SlotRequest {
+                id: i,
+                prompt: prompt(8, 4600 + i),
+                max_new: 4,
+                cfg: None,
+                slo: Some(SloPolicy { target_ms: 0.5, action: SloAction::Queue }),
+            });
+        }
+        sched.advance_clock(100.0); // everything long past its target
+        let mut done: Vec<u64> = Vec::new();
+        sched
+            .run_to_idle(&mut bk, &mut engines, &mut |c| {
+                done.push(c.id);
+                assert!(c.slo.is_some(), "completion echoes the SLO policy");
+                Disposition::Release
+            })
+            .unwrap();
+        assert_eq!(done, vec![0, 1, 2], "Queue action keeps FIFO order, drops nothing");
+        assert_eq!(sched.stats.shed, 0);
+    }
+
+    #[test]
+    fn completion_timeline_includes_submit_tick() {
+        let mut bk = SimBackend::new(90);
+        let mut engines = vec![Engine::new(&bk, RunConfig::default())];
+        let cap = bk.contract().cache_cap;
+        let mut sched = ContinuousScheduler::new(1, cap);
+        // run a first request so tick_now > 0 when the second is submitted
+        sched.submit(SlotRequest {
+            id: 0,
+            prompt: prompt(8, 4700),
+            max_new: 3,
+            cfg: None,
+            slo: None,
+        });
+        sched
+            .run_to_idle(&mut bk, &mut engines, &mut |_c| Disposition::Release)
+            .unwrap();
+        let submit_at = sched.current_tick();
+        assert!(submit_at > 0);
+        sched.submit(SlotRequest {
+            id: 1,
+            prompt: prompt(8, 4701),
+            max_new: 3,
+            cfg: None,
+            slo: None,
+        });
+        let mut seen = false;
+        sched
+            .run_to_idle(&mut bk, &mut engines, &mut |c| {
+                assert_eq!(c.submitted_tick, submit_at);
+                assert!(c.admitted_tick >= c.submitted_tick);
+                assert!(c.finished_tick >= c.admitted_tick);
+                assert!(c.slo.is_none());
+                seen = true;
+                Disposition::Release
+            })
+            .unwrap();
+        assert!(seen);
     }
 }

@@ -8,7 +8,8 @@ pub mod runner;
 
 pub use batch::{
     decode_speculative_batch, Completion, ContinuousScheduler, Disposition, FusedVerifier,
-    InFlightLaunch, SchedulerStats, SlotRequest, StageOutcome, StagedLaunch,
+    InFlightLaunch, SchedulerStats, ShedNotice, SloAction, SloPolicy, SlotRequest, StageOutcome,
+    StagedLaunch,
 };
 pub use load::{run_load, LoadReport, LoadSpec};
 pub use runner::{run_workload, AdmissionPolicy, BackendSpec, CoordinatorConfig};

@@ -389,6 +389,7 @@ fn run_group_ea(
             prompt: p,
             max_new: cfg.run.max_new_tokens,
             cfg: None,
+            slo: None,
         });
     }
     let res = sched.run_to_idle(backend, engines, &mut |comp: Completion| {

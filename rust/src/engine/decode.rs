@@ -454,8 +454,23 @@ impl Engine {
         cfg.adaptive_budget.then(|| {
             // growth headroom up to the largest compiled tree variant
             let max = (cfg.tree.budget * 4).clamp(cfg.tree.budget, 255);
-            AdaptiveBudget::new(cfg.tree.budget, 4, max)
+            let a = AdaptiveBudget::new(cfg.tree.budget, 4, max);
+            if cfg.adaptive_occupancy {
+                a.with_occupancy()
+            } else {
+                a
+            }
         })
+    }
+
+    /// Feed the scheduler's occupancy signal (`live` decoding slots out
+    /// of `slots` total) into this engine's adaptive controller. Inert
+    /// unless the config enables both `adaptive_budget` and
+    /// `adaptive_occupancy`, so the default serve path is untouched.
+    pub fn note_occupancy(&mut self, live: usize, slots: usize) {
+        if let Some(adaptive) = &mut self.adaptive {
+            adaptive.observe_occupancy(live, slots);
+        }
     }
 
     /// Current tree node budget (adaptive or configured).

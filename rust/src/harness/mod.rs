@@ -3,5 +3,7 @@
 //! experiment-to-artifact index.
 
 pub mod experiments;
+pub mod replay;
 
 pub use experiments::{run_e1, run_e2, run_e3, run_e4, HarnessConfig};
+pub use replay::{replay, ReplayConfig, ReplayReport, RequestRecord};

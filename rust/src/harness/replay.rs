@@ -1,0 +1,265 @@
+//! Deterministic trace-replay load driver: replays a seeded arrival
+//! trace ([`crate::workload::TraceSpec`]) through the
+//! [`ContinuousScheduler`] under a modeled device clock, and reports the
+//! per-request latency distribution (p50/p95/p99) plus the shed rate.
+//!
+//! # The virtual clock
+//!
+//! Latency here is *virtual* milliseconds: each scheduler tick advances
+//! the clock by a fixed host cost plus a per-fused-launch device cost
+//! ([`ReplayConfig::tick_host_ms`] / [`ReplayConfig::launch_ms`] — the
+//! sim backend's device-clock model, scaled into milliseconds), and when
+//! the scheduler drains before the next arrival the clock jumps straight
+//! to that arrival. No wall-clock reading ever enters a latency or a
+//! shed decision, so the same trace replayed twice produces bit-identical
+//! percentiles — which is what lets `bench_gate` hold a p99 SLO floor
+//! without flaking (the paper's headline metric is a p99 speedup).
+//!
+//! # First token
+//!
+//! `first_token_tick` equals `admitted_tick`: admission prefills the
+//! prompt and the conversation joins that very tick's fused round, and
+//! every speculative round commits at least one token (the teacher's
+//! next-token fallback), so the first output token lands on the
+//! admission tick by construction.
+
+use crate::backend::sim::SimBackend;
+use crate::backend::ModelBackend;
+use crate::config::RunConfig;
+use crate::coordinator::{Completion, ContinuousScheduler, Disposition, SloPolicy, SlotRequest};
+use crate::engine::Engine;
+use crate::util::stats::percentile_sorted;
+use crate::workload::TraceRequest;
+use anyhow::{bail, Result};
+
+/// Replay-driver configuration.
+#[derive(Clone, Debug)]
+pub struct ReplayConfig {
+    /// Engine slots (the serving batch width B).
+    pub slots: usize,
+    /// Sim-backend draft/teacher agreement percentage.
+    pub agree_pct: u64,
+    /// SLO attached to every replayed request (`None` = no deadlines).
+    pub slo: Option<SloPolicy>,
+    /// Virtual milliseconds charged per scheduler tick (host half:
+    /// retire/admit churn + draft expansion + staging).
+    pub tick_host_ms: f64,
+    /// Virtual milliseconds charged per fused launch issued (device
+    /// half; wider traces pay for every split sub-launch).
+    pub launch_ms: f64,
+    /// Engine configuration for every slot.
+    pub run: RunConfig,
+}
+
+impl ReplayConfig {
+    /// A replay at batch width `slots` with the default cost model.
+    pub fn new(slots: usize) -> Self {
+        Self {
+            slots,
+            agree_pct: 90,
+            slo: None,
+            tick_host_ms: 1.0,
+            launch_ms: 2.0,
+            run: RunConfig::default(),
+        }
+    }
+
+    /// Reject degenerate replay configs (config-contract errors naming
+    /// the offending flag).
+    pub fn validate(&self) -> Result<()> {
+        if self.slots == 0 {
+            bail!("config contract: --slots must be >= 1 (got 0) — one slot is sequential replay");
+        }
+        if let Some(slo) = &self.slo {
+            slo.validate()?;
+        }
+        self.run.validate()?;
+        Ok(())
+    }
+}
+
+/// Per-request replay outcome (the latency-record fields of
+/// `docs/TRACE_FORMAT.md`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct RequestRecord {
+    /// Trace request id.
+    pub id: u64,
+    /// Tick the request was submitted on.
+    pub submitted_tick: u64,
+    /// Tick the request was admitted on (`None` if shed pre-admission).
+    pub admitted_tick: Option<u64>,
+    /// Tick the first output token landed (== admitted tick; see the
+    /// module docs). `None` if shed.
+    pub first_token_tick: Option<u64>,
+    /// Tick the request finished on (`None` if shed).
+    pub finished_tick: Option<u64>,
+    /// End-to-end virtual latency, arrival → completion (`None` if shed).
+    pub latency_ms: Option<f64>,
+    /// Whether the request was shed by its SLO policy (typed outcome —
+    /// shed requests are counted, never silently dropped).
+    pub shed: bool,
+}
+
+/// Aggregate replay result.
+#[derive(Clone, Debug)]
+pub struct ReplayReport {
+    /// Requests replayed (completed + shed).
+    pub total: usize,
+    /// Requests that completed decoding.
+    pub completed: usize,
+    /// Requests shed by their SLO policy.
+    pub shed: usize,
+    /// Shed fraction: `shed / total`.
+    pub shed_rate: f64,
+    /// Mean completion latency (virtual ms).
+    pub mean_ms: f64,
+    /// Median completion latency (virtual ms).
+    pub p50_ms: f64,
+    /// 95th-percentile completion latency (virtual ms).
+    pub p95_ms: f64,
+    /// 99th-percentile completion latency (virtual ms).
+    pub p99_ms: f64,
+    /// Per-request timeline records, in trace order.
+    pub records: Vec<RequestRecord>,
+}
+
+/// Replay `trace` through a fresh scheduler + sim backend under the
+/// virtual-clock model. Deterministic: same trace + same config =
+/// bit-identical report (property-tested in `tests/trace_replay.rs`).
+pub fn replay(trace: &[TraceRequest], cfg: &ReplayConfig) -> Result<ReplayReport> {
+    cfg.validate()?;
+    if trace.is_empty() {
+        bail!("config contract: --requests must be >= 1 (an empty trace replays nothing)");
+    }
+    let mut bk = SimBackend::new(cfg.agree_pct);
+    let mut engines: Vec<Engine> =
+        (0..cfg.slots).map(|_| Engine::new(&bk, cfg.run.clone())).collect();
+    let cap = bk.contract().cache_cap;
+    let mut sched = ContinuousScheduler::new(cfg.slots, cap);
+    sched.set_pipelining(cfg.run.pipelining);
+
+    let n = trace.len();
+    let mut records: Vec<RequestRecord> = trace
+        .iter()
+        .map(|r| RequestRecord {
+            id: r.id,
+            submitted_tick: 0,
+            admitted_tick: None,
+            first_token_tick: None,
+            finished_tick: None,
+            latency_ms: None,
+            shed: false,
+        })
+        .collect();
+    let mut next = 0usize;
+    let mut done = 0usize;
+    let mut finished_this_tick: Vec<(usize, u64, u64, u64)> = Vec::new();
+    let mut safety = 0u32;
+    while done < n {
+        // submit every arrival due at the current virtual time
+        while next < n && trace[next].arrival_ms <= sched.now_ms() {
+            let r = &trace[next];
+            records[next].submitted_tick = sched.current_tick();
+            sched.submit(SlotRequest {
+                id: r.id,
+                prompt: r.prompt.clone(),
+                max_new: r.max_new,
+                cfg: None,
+                slo: cfg.slo,
+            });
+            next += 1;
+        }
+        // drained before the next arrival: jump the clock to it instead
+        // of burning empty ticks
+        if sched.is_idle() && next < n {
+            let gap = trace[next].arrival_ms - sched.now_ms();
+            sched.advance_clock(gap.max(0.0) + 1e-9);
+            continue;
+        }
+        let launches_before = sched.stats.fused_launches;
+        finished_this_tick.clear();
+        sched.tick(&mut bk, &mut engines, &mut |c: Completion| {
+            finished_this_tick.push((
+                c.id as usize,
+                c.submitted_tick,
+                c.admitted_tick,
+                c.finished_tick,
+            ));
+            Disposition::Release
+        })?;
+        // charge the tick: host half + every fused launch it issued
+        let launches = sched.stats.fused_launches - launches_before;
+        sched.advance_clock(cfg.tick_host_ms + launches as f64 * cfg.launch_ms);
+        // stamp completions at the post-tick clock (the tick's work is
+        // what produced them)
+        for &(idx, submitted_tick, admitted_tick, finished_tick) in &finished_this_tick {
+            let rec = &mut records[idx];
+            rec.submitted_tick = submitted_tick;
+            rec.admitted_tick = Some(admitted_tick);
+            rec.first_token_tick = Some(admitted_tick);
+            rec.finished_tick = Some(finished_tick);
+            rec.latency_ms = Some(sched.now_ms() - trace[idx].arrival_ms);
+            done += 1;
+        }
+        for s in sched.drain_shed() {
+            let rec = &mut records[s.id as usize];
+            rec.shed = true;
+            done += 1;
+        }
+        safety += 1;
+        if safety >= 1_000_000 {
+            bail!("trace replay failed to converge after {safety} ticks");
+        }
+    }
+    let mut lats: Vec<f64> = records.iter().filter_map(|r| r.latency_ms).collect();
+    lats.sort_by(|a, b| a.partial_cmp(b).expect("virtual latencies are finite"));
+    let completed = lats.len();
+    let shed = records.iter().filter(|r| r.shed).count();
+    debug_assert_eq!(completed + shed, n, "every request completes or sheds, never vanishes");
+    let mean_ms =
+        if completed == 0 { 0.0 } else { lats.iter().sum::<f64>() / completed as f64 };
+    Ok(ReplayReport {
+        total: n,
+        completed,
+        shed,
+        shed_rate: shed as f64 / n as f64,
+        mean_ms,
+        p50_ms: percentile_sorted(&lats, 0.50),
+        p95_ms: percentile_sorted(&lats, 0.95),
+        p99_ms: percentile_sorted(&lats, 0.99),
+        records,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::TraceSpec;
+
+    #[test]
+    fn replay_completes_every_request_without_slo() {
+        let trace = TraceSpec::smoke_poisson(5).generate().unwrap();
+        let rep = replay(&trace, &ReplayConfig::new(4)).unwrap();
+        assert_eq!(rep.total, trace.len());
+        assert_eq!(rep.completed, trace.len());
+        assert_eq!(rep.shed, 0);
+        assert_eq!(rep.shed_rate, 0.0);
+        assert!(rep.p50_ms > 0.0 && rep.p99_ms >= rep.p95_ms && rep.p95_ms >= rep.p50_ms);
+        for r in &rep.records {
+            assert!(!r.shed);
+            assert_eq!(r.first_token_tick, r.admitted_tick);
+            assert!(r.finished_tick.unwrap() >= r.admitted_tick.unwrap());
+        }
+    }
+
+    #[test]
+    fn degenerate_replay_configs_are_rejected() {
+        let trace = TraceSpec::smoke_poisson(5).generate().unwrap();
+        let mut cfg = ReplayConfig::new(0);
+        let err = replay(&trace, &cfg).unwrap_err().to_string();
+        assert!(err.contains("--slots"), "error must name the flag: {err}");
+        cfg.slots = 2;
+        let err = replay(&[], &cfg).unwrap_err().to_string();
+        assert!(err.contains("--requests"), "error must name the flag: {err}");
+    }
+}

@@ -14,6 +14,15 @@
 //! accept a large fraction of the offered budget, a larger tree likely
 //! pays for itself; when acceptance is sparse, a smaller tree cuts
 //! mask/tensorize/verify overhead without losing accepted tokens.
+//!
+//! The occupancy-aware extension (Meta's at-scale result, PAPERS.md)
+//! composes a second signal: at fixed utilization, speculation loses its
+//! win as batch occupancy rises, because verification FLOPs for rejected
+//! nodes crowd out the other slots' throughput. In occupancy mode the
+//! controller (a) replaces the raw window average with a per-slot
+//! acceptance-rate EWMA, and (b) caps the MIMD operating point by a
+//! linear occupancy schedule: a lone slot may use the full budget range,
+//! a full batch is pinned near `min_budget`.
 
 use std::collections::VecDeque;
 
@@ -33,6 +42,18 @@ pub struct AdaptiveBudget {
     pub window: usize,
     current: usize,
     history: VecDeque<(usize, usize)>, // (accept_len, budget_offered)
+    // --- occupancy-aware mode (`adaptive_occupancy on`) ---
+    occupancy_aware: bool,
+    /// EWMA of per-round utilization (accept_len / budget_offered);
+    /// None until the first occupancy-mode observation.
+    ewma: Option<f64>,
+    /// EWMA smoothing factor (weight of the newest round).
+    ewma_alpha: f64,
+    /// Latest occupancy fraction in [0, 1]: 0 = lone slot, 1 = full batch.
+    occ_frac: f64,
+    /// Rounds since the last MIMD decision (occupancy mode decides on a
+    /// fixed cadence of `window` rounds instead of a sliding window).
+    since_decision: usize,
 }
 
 impl AdaptiveBudget {
@@ -46,16 +67,65 @@ impl AdaptiveBudget {
             window: 8,
             current: initial.clamp(min_budget, max_budget),
             history: VecDeque::new(),
+            occupancy_aware: false,
+            ewma: None,
+            ewma_alpha: 0.25,
+            occ_frac: 0.0,
+            since_decision: 0,
         }
+    }
+
+    /// Enable the occupancy-aware mode: per-slot acceptance-rate EWMA
+    /// replaces the raw window average, and [`AdaptiveBudget::budget`] is
+    /// capped by the latest occupancy fraction fed through
+    /// [`AdaptiveBudget::observe_occupancy`].
+    pub fn with_occupancy(mut self) -> Self {
+        self.occupancy_aware = true;
+        self
+    }
+
+    /// Whether the occupancy-aware mode is enabled.
+    pub fn occupancy_aware(&self) -> bool {
+        self.occupancy_aware
+    }
+
+    /// Feed the scheduler's occupancy signal: `live` slots currently
+    /// decoding out of `slots` total. No-op unless occupancy mode is on.
+    pub fn observe_occupancy(&mut self, live: usize, slots: usize) {
+        if !self.occupancy_aware {
+            return;
+        }
+        self.occ_frac = if slots <= 1 || live <= 1 {
+            0.0
+        } else {
+            ((live - 1) as f64 / (slots - 1) as f64).clamp(0.0, 1.0)
+        };
+    }
+
+    /// Largest budget the occupancy schedule allows right now: the full
+    /// `[min_budget, max_budget]` range for a lone slot, shrinking
+    /// linearly to `min_budget` at full occupancy.
+    fn occupancy_cap(&self) -> usize {
+        let span = (self.max_budget - self.min_budget) as f64;
+        let cut = (self.occ_frac * span).floor() as usize;
+        self.max_budget.saturating_sub(cut).max(self.min_budget)
     }
 
     /// Budget to use for the next round.
     pub fn budget(&self) -> usize {
-        self.current
+        if self.occupancy_aware {
+            self.current.min(self.occupancy_cap()).max(self.min_budget)
+        } else {
+            self.current
+        }
     }
 
     /// Record a round's outcome and possibly adapt.
     pub fn observe(&mut self, accept_len: usize, budget_offered: usize) {
+        if self.occupancy_aware {
+            self.observe_ewma(accept_len, budget_offered);
+            return;
+        }
         self.history.push_back((accept_len, budget_offered));
         if self.history.len() < self.window {
             return;
@@ -82,6 +152,33 @@ impl AdaptiveBudget {
             self.current = next;
             self.history.clear(); // fresh evidence at the new operating point
         }
+    }
+
+    /// Occupancy-mode observation path: exponentially-weighted per-slot
+    /// acceptance rate, MIMD decision every `window` rounds.
+    fn observe_ewma(&mut self, accept_len: usize, budget_offered: usize) {
+        if budget_offered == 0 {
+            return;
+        }
+        let u = accept_len as f64 / budget_offered as f64;
+        self.ewma = Some(match self.ewma {
+            None => u, // seed with the first sample
+            Some(prev) => self.ewma_alpha * u + (1.0 - self.ewma_alpha) * prev,
+        });
+        self.since_decision += 1;
+        if self.since_decision < self.window {
+            return;
+        }
+        self.since_decision = 0;
+        let utilization = self.ewma.unwrap_or(0.0);
+        let next = if utilization > self.grow_at {
+            (self.current * 2).min(self.max_budget)
+        } else if utilization < self.shrink_at {
+            (self.current / 2).max(self.min_budget)
+        } else {
+            self.current
+        };
+        self.current = next;
     }
 }
 
@@ -140,5 +237,50 @@ mod tests {
         assert_eq!(a.budget(), 16, "no decision before the window fills");
         a.observe(16, 16);
         assert!(a.budget() > 16);
+    }
+
+    #[test]
+    fn occupancy_caps_budget_at_fixed_utilization() {
+        // high utilization would drive the MIMD point to max; rising
+        // occupancy must still pull the effective budget down
+        let mut a = AdaptiveBudget::new(16, 4, 64).with_occupancy();
+        for _ in 0..32 {
+            a.observe(32, 64); // 50% utilization — grow regime
+        }
+        a.observe_occupancy(1, 8);
+        let lone = a.budget();
+        a.observe_occupancy(4, 8);
+        let mid = a.budget();
+        a.observe_occupancy(8, 8);
+        let full = a.budget();
+        assert!(
+            lone >= mid && mid >= full,
+            "budget must be monotone non-increasing in occupancy: {lone} {mid} {full}"
+        );
+        assert_eq!(full, 4, "full occupancy pins the budget at min_budget");
+        assert_eq!(lone, 64, "a lone slot keeps the full MIMD operating point");
+    }
+
+    #[test]
+    fn occupancy_mode_respects_bounds() {
+        let mut a = AdaptiveBudget::new(8, 4, 64).with_occupancy();
+        a.observe_occupancy(8, 8);
+        for _ in 0..64 {
+            a.observe(40, a.budget().max(1));
+            assert!((4..=64).contains(&a.budget()));
+        }
+        a.observe_occupancy(1, 8);
+        for _ in 0..64 {
+            a.observe(0, a.budget().max(1));
+            assert!((4..=64).contains(&a.budget()));
+        }
+    }
+
+    #[test]
+    fn occupancy_signal_is_inert_without_the_mode() {
+        let mut a = AdaptiveBudget::new(16, 4, 64);
+        a.observe_occupancy(8, 8); // no-op: occupancy mode off
+        assert_eq!(a.budget(), 16);
+        assert!(!a.occupancy_aware());
     }
 }

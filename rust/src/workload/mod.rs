@@ -4,6 +4,8 @@
 
 pub mod grammar;
 pub mod prompts;
+pub mod trace;
 
 pub use grammar::{Grammar, Profile};
 pub use prompts::{ConversationSpec, WorkloadSpec};
+pub use trace::{ArrivalKind, TraceRequest, TraceSpec};

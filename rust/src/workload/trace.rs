@@ -1,0 +1,262 @@
+//! Seeded arrival traces for the load-replay harness: Poisson and bursty
+//! (Markov-modulated Poisson) arrival processes over the mixed
+//! MT-Bench/HumanEval grammar prompt sets of [`super::prompts`].
+//!
+//! Everything here is a pure function of the [`TraceSpec`] seed — arrival
+//! times are virtual milliseconds, never wall-clock readings — so a trace
+//! replayed twice through [`crate::harness::replay`] produces identical
+//! latency distributions (property-tested in `tests/trace_replay.rs`).
+//! The paper's headline is a p99 number; deterministic traces are what
+//! let CI hold a p99 floor without flaking.
+
+use super::grammar::{Grammar, Profile};
+use crate::util::SplitMix64;
+use anyhow::{bail, Result};
+
+/// The arrival process shape.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ArrivalKind {
+    /// Memoryless arrivals at a fixed rate (requests per second).
+    Poisson {
+        /// Mean arrival rate in requests per second.
+        rate_rps: f64,
+    },
+    /// Two-state Markov-modulated Poisson process: arrivals alternate
+    /// between a calm and a burst rate, switching state after each
+    /// arrival with probability `switch_p` (geometric sojourn lengths).
+    Bursty {
+        /// Calm-state arrival rate (requests per second).
+        rate_lo_rps: f64,
+        /// Burst-state arrival rate (requests per second).
+        rate_hi_rps: f64,
+        /// Per-arrival probability of switching state, in (0, 1].
+        switch_p: f64,
+    },
+}
+
+/// A seeded arrival-trace specification (see the module docs).
+#[derive(Clone, Debug)]
+pub struct TraceSpec {
+    /// Number of requests in the trace.
+    pub requests: usize,
+    /// Arrival-process shape and rate(s).
+    pub kind: ArrivalKind,
+    /// Mean prompt length in tokens (lengths jitter ±~40% like
+    /// [`super::prompts::WorkloadSpec`]).
+    pub prompt_mean: usize,
+    /// Output-token deadline ceiling; per-request deadlines jitter in
+    /// `[max(1, max_new/2), max_new]`.
+    pub max_new: usize,
+    /// Trace seed (arrival times, prompt contents, deadlines).
+    pub seed: u64,
+}
+
+impl TraceSpec {
+    /// A smoke-sized Poisson trace (tests, CI).
+    pub fn smoke_poisson(seed: u64) -> Self {
+        Self {
+            requests: 24,
+            kind: ArrivalKind::Poisson { rate_rps: 40.0 },
+            prompt_mean: 16,
+            max_new: 6,
+            seed,
+        }
+    }
+
+    /// A smoke-sized bursty trace (tests, CI).
+    pub fn smoke_bursty(seed: u64) -> Self {
+        Self {
+            requests: 24,
+            kind: ArrivalKind::Bursty { rate_lo_rps: 10.0, rate_hi_rps: 120.0, switch_p: 0.25 },
+            prompt_mean: 16,
+            max_new: 6,
+            seed,
+        }
+    }
+
+    /// Reject degenerate traces with config-contract errors naming the
+    /// offending flag (the `--batch 0` precedent).
+    pub fn validate(&self) -> Result<()> {
+        if self.requests == 0 {
+            bail!("config contract: --requests must be >= 1 (an empty trace replays nothing)");
+        }
+        if self.prompt_mean < 4 {
+            bail!("config contract: --prompt-mean must be >= 4, got {}", self.prompt_mean);
+        }
+        if self.max_new == 0 {
+            bail!("config contract: --max-new must be >= 1, got 0");
+        }
+        match self.kind {
+            ArrivalKind::Poisson { rate_rps } => {
+                if !rate_rps.is_finite() || rate_rps <= 0.0 {
+                    bail!(
+                        "config contract: --rate must be a positive finite \
+                         arrival rate in requests/sec, got {rate_rps}"
+                    );
+                }
+            }
+            ArrivalKind::Bursty { rate_lo_rps, rate_hi_rps, switch_p } => {
+                if !rate_lo_rps.is_finite() || rate_lo_rps <= 0.0 {
+                    bail!(
+                        "config contract: --rate must be a positive finite \
+                         arrival rate in requests/sec, got {rate_lo_rps}"
+                    );
+                }
+                if !rate_hi_rps.is_finite() || rate_hi_rps < rate_lo_rps {
+                    bail!(
+                        "config contract: --rate-hi must be a finite burst rate \
+                         >= --rate ({rate_lo_rps}), got {rate_hi_rps}"
+                    );
+                }
+                if !(switch_p > 0.0 && switch_p <= 1.0) {
+                    bail!(
+                        "config contract: --switch-p must be in (0, 1], got {switch_p}"
+                    );
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Materialize the trace: one [`TraceRequest`] per arrival, sorted by
+    /// arrival time by construction. Deterministic in `seed` — two calls
+    /// yield identical traces.
+    pub fn generate(&self) -> Result<Vec<TraceRequest>> {
+        self.validate()?;
+        let mut rng = SplitMix64::new(self.seed ^ 0x7ACE);
+        let mut out = Vec::with_capacity(self.requests);
+        let mut now_ms = 0.0f64;
+        // bursty state: false = calm, true = burst
+        let mut burst = false;
+        for i in 0..self.requests {
+            let rate = match self.kind {
+                ArrivalKind::Poisson { rate_rps } => rate_rps,
+                ArrivalKind::Bursty { rate_lo_rps, rate_hi_rps, switch_p } => {
+                    if rng.f64_unit() < switch_p {
+                        burst = !burst;
+                    }
+                    if burst {
+                        rate_hi_rps
+                    } else {
+                        rate_lo_rps
+                    }
+                }
+            };
+            // exponential inter-arrival, in virtual milliseconds
+            let gap_ms = -(1.0 - rng.f64_unit()).ln() / rate * 1000.0;
+            now_ms += gap_ms;
+            // mixed prompt set: alternate HumanEval-style code and
+            // MT-Bench-style chat grammars
+            let profile = if i % 2 == 0 { Profile::Code } else { Profile::Chat };
+            let lo = ((self.prompt_mean as f64 * 0.6) as u64).max(4);
+            let hi = ((self.prompt_mean as f64 * 1.5) as u64).max(lo + 1);
+            let len = rng.range(lo, hi) as usize;
+            let prompt = Grammar::new(profile).sample_sequence(len, rng.next_u64(), None);
+            let max_new =
+                rng.range((self.max_new as u64 / 2).max(1), self.max_new as u64 + 1) as usize;
+            out.push(TraceRequest { id: i as u64, arrival_ms: now_ms, prompt, max_new, profile });
+        }
+        Ok(out)
+    }
+}
+
+/// One request of a materialized trace.
+#[derive(Clone, Debug)]
+pub struct TraceRequest {
+    /// Trace-order request id (also the submission id at replay).
+    pub id: u64,
+    /// Arrival time in virtual milliseconds from trace start.
+    pub arrival_ms: f64,
+    /// Prompt tokens (grammar-sampled, profile-mixed).
+    pub prompt: Vec<i32>,
+    /// Output-token deadline of the request.
+    pub max_new: usize,
+    /// Benchmark-family profile the prompt was sampled from.
+    pub profile: Profile,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_trace_is_deterministic_in_seed() {
+        let a = TraceSpec::smoke_poisson(7).generate().unwrap();
+        let b = TraceSpec::smoke_poisson(7).generate().unwrap();
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.arrival_ms, y.arrival_ms, "arrival schedule must be bit-identical");
+            assert_eq!(x.prompt, y.prompt);
+            assert_eq!(x.max_new, y.max_new);
+        }
+        let c = TraceSpec::smoke_poisson(8).generate().unwrap();
+        assert!(
+            a.iter().zip(&c).any(|(x, y)| x.arrival_ms != y.arrival_ms),
+            "a different seed must move the arrivals"
+        );
+    }
+
+    #[test]
+    fn arrivals_are_sorted_and_positive() {
+        for trace in [
+            TraceSpec::smoke_poisson(3).generate().unwrap(),
+            TraceSpec::smoke_bursty(3).generate().unwrap(),
+        ] {
+            let mut prev = 0.0;
+            for r in &trace {
+                assert!(r.arrival_ms > prev || (prev == 0.0 && r.arrival_ms > 0.0));
+                assert!(r.arrival_ms.is_finite());
+                prev = r.arrival_ms;
+                assert!(r.prompt.len() >= 4);
+                assert!(r.max_new >= 1);
+            }
+        }
+    }
+
+    #[test]
+    fn bursty_trace_mixes_two_rates() {
+        // burst gaps must be visibly shorter than calm gaps: compare the
+        // spread of inter-arrival gaps against a fixed-rate trace
+        let t = TraceSpec::smoke_bursty(11).generate().unwrap();
+        let gaps: Vec<f64> = t
+            .windows(2)
+            .map(|w| w[1].arrival_ms - w[0].arrival_ms)
+            .collect();
+        let min = gaps.iter().cloned().fold(f64::INFINITY, f64::min);
+        let max = gaps.iter().cloned().fold(0.0f64, f64::max);
+        assert!(
+            max / min.max(1e-9) > 4.0,
+            "bursty gaps should span the two rates: min {min}, max {max}"
+        );
+    }
+
+    #[test]
+    fn degenerate_specs_are_rejected_by_name() {
+        let mut s = TraceSpec::smoke_poisson(0);
+        s.requests = 0;
+        assert!(s.validate().unwrap_err().to_string().contains("--requests"));
+
+        let mut s = TraceSpec::smoke_poisson(0);
+        s.kind = ArrivalKind::Poisson { rate_rps: 0.0 };
+        assert!(s.validate().unwrap_err().to_string().contains("--rate"));
+
+        let mut s = TraceSpec::smoke_bursty(0);
+        s.kind = ArrivalKind::Bursty { rate_lo_rps: 10.0, rate_hi_rps: 5.0, switch_p: 0.2 };
+        assert!(s.validate().unwrap_err().to_string().contains("--rate-hi"));
+
+        let mut s = TraceSpec::smoke_bursty(0);
+        s.kind = ArrivalKind::Bursty { rate_lo_rps: 10.0, rate_hi_rps: 50.0, switch_p: 0.0 };
+        assert!(s.validate().unwrap_err().to_string().contains("--switch-p"));
+
+        let mut s = TraceSpec::smoke_poisson(0);
+        s.max_new = 0;
+        assert!(s.validate().unwrap_err().to_string().contains("--max-new"));
+    }
+
+    #[test]
+    fn profiles_are_mixed() {
+        let t = TraceSpec::smoke_poisson(1).generate().unwrap();
+        assert!(t.iter().any(|r| r.profile == Profile::Code));
+        assert!(t.iter().any(|r| r.profile == Profile::Chat));
+    }
+}

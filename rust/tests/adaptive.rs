@@ -1,0 +1,227 @@
+//! Load-adaptive speculation properties (the `--adaptive-occupancy`
+//! contract, `docs/ARCHITECTURE.md` §13):
+//!
+//! 1. **Bounds** — under arbitrary interleavings of utilization
+//!    observations and occupancy signals, the effective budget never
+//!    escapes `[min_budget, max_budget]`, in either controller mode.
+//! 2. **Monotonicity** — at a fixed utilization history, the effective
+//!    budget is monotone non-increasing in the occupancy fraction (more
+//!    live slot-mates can only shrink the tree, never grow it).
+//! 3. **Off-path bit-identity** — with `adaptive_occupancy off` (the
+//!    default), the occupancy signal is inert: the controller ignores it,
+//!    and a scheduler drive (which feeds occupancy every tick) decodes
+//!    token-for-token like a dedicated sequential engine, in every CI
+//!    matrix cell (`EA_CACHE_LAYOUT` x `EA_PIPELINE`).
+//! 4. **Output stability** — occupancy mode reshapes *budgets*, never
+//!    tokens: decoded output stays exactly teacher-greedy.
+
+use eagle_pangu::backend::sim::SimBackend;
+use eagle_pangu::backend::ModelBackend;
+use eagle_pangu::config::{CacheLayout, RunConfig};
+use eagle_pangu::coordinator::{Completion, ContinuousScheduler, Disposition, SlotRequest};
+use eagle_pangu::engine::{Engine, GenOut};
+use eagle_pangu::spec::AdaptiveBudget;
+use eagle_pangu::util::prop;
+use eagle_pangu::util::SplitMix64;
+
+/// Base config of the CI feature matrix (mirrors `tests/continuous.rs`):
+/// every adaptive property must hold identically in every cell.
+fn base_cfg() -> RunConfig {
+    let mut cfg = RunConfig::default();
+    if let Ok(v) = std::env::var("EA_CACHE_LAYOUT") {
+        cfg.cache_layout = CacheLayout::parse(&v).expect("EA_CACHE_LAYOUT must be flat|paged");
+    }
+    if let Ok(v) = std::env::var("EA_PIPELINE") {
+        cfg.pipelining = match v.as_str() {
+            "on" => true,
+            "off" => false,
+            _ => panic!("EA_PIPELINE must be on|off"),
+        };
+    }
+    cfg
+}
+
+fn prompt(n: usize, seed: u64) -> Vec<i32> {
+    let mut rng = SplitMix64::new(seed);
+    let mut p = vec![1i32]; // BOS
+    for _ in 1..n.max(2) {
+        p.push(rng.range(2, 512) as i32);
+    }
+    p
+}
+
+#[test]
+fn property_budget_stays_in_bounds_under_arbitrary_signals() {
+    prop::for_cases(40, 0xADA_901, |g| {
+        let min = g.usize_in(1, 9);
+        let max = min + g.usize_in(0, 64);
+        let init = g.usize_in(0, 100);
+        let slots = g.usize_in(1, 17);
+        let mut occ = AdaptiveBudget::new(init, min, max).with_occupancy();
+        let mut plain = AdaptiveBudget::new(init, min, max);
+        for _ in 0..g.usize_in(1, 200) {
+            if g.bool_p(0.3) {
+                let live = g.usize_in(0, slots + 1);
+                occ.observe_occupancy(live, slots);
+                plain.observe_occupancy(live, slots);
+            }
+            // accept_len may even exceed the offer (defensive input)
+            let offered = occ.budget().max(1);
+            let accept = g.usize_in(0, offered + 2);
+            occ.observe(accept, offered);
+            plain.observe(accept, offered);
+            for (tag, b) in [("occupancy", occ.budget()), ("plain", plain.budget())] {
+                assert!(
+                    (min..=max).contains(&b),
+                    "{tag} budget {b} escaped [{min}, {max}]"
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn property_budget_is_monotone_non_increasing_in_occupancy() {
+    prop::for_cases(40, 0xADA_902, |g| {
+        let mut a = AdaptiveBudget::new(g.usize_in(4, 65), 4, 64).with_occupancy();
+        // drive the MIMD operating point somewhere arbitrary first
+        for _ in 0..g.usize_in(0, 64) {
+            let offered = a.budget().max(1);
+            a.observe(g.usize_in(0, offered + 1), offered);
+        }
+        // then sweep occupancy upward at that fixed utilization history
+        let slots = g.usize_in(2, 17);
+        let mut prev = usize::MAX;
+        for live in 1..=slots {
+            a.observe_occupancy(live, slots);
+            let b = a.budget();
+            assert!(
+                b <= prev,
+                "budget must be monotone non-increasing in occupancy: \
+                 live {live}/{slots} gave {b} after {prev}"
+            );
+            prev = b;
+        }
+        // a full batch pins the operating point at the floor
+        assert_eq!(prev, 4, "full occupancy must pin the budget at min_budget");
+    });
+}
+
+#[test]
+fn property_occupancy_signal_is_inert_when_mode_is_off() {
+    // `adaptive_occupancy off` (the default) must be bit-identical to the
+    // plain adaptive controller no matter how the scheduler feeds it.
+    prop::for_cases(30, 0xADA_903, |g| {
+        let mut plain = AdaptiveBudget::new(16, 4, 64);
+        let mut fed = AdaptiveBudget::new(16, 4, 64);
+        for _ in 0..g.usize_in(1, 120) {
+            if g.bool_p(0.5) {
+                fed.observe_occupancy(g.usize_in(0, 9), 8);
+            }
+            let accept = g.usize_in(0, 20);
+            let offered = g.usize_in(1, 65);
+            plain.observe(accept, offered);
+            fed.observe(accept, offered);
+            assert_eq!(
+                plain.budget(),
+                fed.budget(),
+                "occupancy feed must be a no-op with the mode off"
+            );
+        }
+        assert!(!fed.occupancy_aware());
+    });
+}
+
+/// Drive `reqs` through a continuous scheduler (which feeds the live-slot
+/// occupancy signal to every engine each tick) and return the outputs.
+fn drive(
+    agree: u64,
+    slots: usize,
+    cfg: &RunConfig,
+    prompts: &[Vec<i32>],
+    max_new: usize,
+) -> Vec<GenOut> {
+    let mut bk = SimBackend::new(agree);
+    let mut engines: Vec<Engine> =
+        (0..slots).map(|_| Engine::new(&bk, cfg.clone())).collect();
+    let cap = bk.contract().cache_cap;
+    let mut sched = ContinuousScheduler::new(slots, cap);
+    sched.set_pipelining(cfg.pipelining);
+    for (i, p) in prompts.iter().enumerate() {
+        sched.submit(SlotRequest {
+            id: i as u64,
+            prompt: p.clone(),
+            max_new,
+            cfg: Some(cfg.clone()),
+            slo: None,
+        });
+    }
+    let mut outs: Vec<Option<GenOut>> = (0..prompts.len()).map(|_| None).collect();
+    sched
+        .run_to_idle(&mut bk, &mut engines, &mut |c: Completion| {
+            outs[c.id as usize] = Some(c.out);
+            Disposition::Release
+        })
+        .unwrap();
+    outs.into_iter().map(|o| o.expect("request completed")).collect()
+}
+
+#[test]
+fn adaptive_without_occupancy_is_bit_identical_to_sequential_in_every_cell() {
+    // The off-path contract behind the `adaptive_occupancy` default: the
+    // scheduler feeds occupancy every tick, but with the mode off the
+    // feed is inert, so a scheduled adaptive decode equals the dedicated
+    // sequential adaptive decode token-for-token, round-for-round.
+    let agree = 85u64;
+    let mut cfg = base_cfg();
+    cfg.adaptive_budget = true;
+    assert!(!cfg.adaptive_occupancy, "occupancy mode must default off");
+    cfg.validate().unwrap();
+    let prompts: Vec<Vec<i32>> = (0..6).map(|i| prompt(8 + i * 3, 6100 + i as u64)).collect();
+
+    let seq: Vec<GenOut> = prompts
+        .iter()
+        .map(|p| {
+            let mut b = SimBackend::new(agree);
+            let mut e = Engine::new(&b, cfg.clone());
+            e.generate_speculative(&mut b, p, 14).unwrap()
+        })
+        .collect();
+    let outs = drive(agree, 3, &cfg, &prompts, 14);
+    for (i, (got, want)) in outs.iter().zip(&seq).enumerate() {
+        assert_eq!(got.tokens, want.tokens, "request {i} tokens diverged with occupancy off");
+        assert_eq!(got.accept_lens, want.accept_lens, "request {i} acceptance diverged");
+        assert_eq!(got.rounds, want.rounds, "request {i} round count diverged");
+    }
+}
+
+#[test]
+fn occupancy_mode_reshapes_budgets_never_tokens() {
+    // With `adaptive_occupancy on`, a full batch shrinks per-slot tree
+    // budgets — but acceptance is teacher-greedy, so the decoded tokens
+    // must still equal the plain adaptive sequential reference exactly.
+    let agree = 85u64;
+    let mut on_cfg = base_cfg();
+    on_cfg.adaptive_budget = true;
+    on_cfg.adaptive_occupancy = true;
+    on_cfg.validate().unwrap();
+    let mut off_cfg = base_cfg();
+    off_cfg.adaptive_budget = true;
+    let prompts: Vec<Vec<i32>> = (0..8).map(|i| prompt(10, 6400 + i as u64)).collect();
+
+    let seq: Vec<GenOut> = prompts
+        .iter()
+        .map(|p| {
+            let mut b = SimBackend::new(agree);
+            let mut e = Engine::new(&b, off_cfg.clone());
+            e.generate_speculative(&mut b, p, 16).unwrap()
+        })
+        .collect();
+    let outs = drive(agree, 4, &on_cfg, &prompts, 16);
+    for (i, (got, want)) in outs.iter().zip(&seq).enumerate() {
+        assert_eq!(
+            got.tokens, want.tokens,
+            "request {i}: occupancy-adaptive budgets changed decoded tokens"
+        );
+    }
+}

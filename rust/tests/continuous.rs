@@ -17,7 +17,9 @@
 use eagle_pangu::backend::sim::SimBackend;
 use eagle_pangu::backend::ModelBackend;
 use eagle_pangu::config::{CacheLayout, CacheStrategy, CommitMode, RunConfig};
-use eagle_pangu::coordinator::{Completion, ContinuousScheduler, Disposition, SlotRequest};
+use eagle_pangu::coordinator::{
+    Completion, ContinuousScheduler, Disposition, SloAction, SloPolicy, SlotRequest,
+};
 use eagle_pangu::engine::{Engine, GenOut};
 use eagle_pangu::util::prop;
 use eagle_pangu::util::SplitMix64;
@@ -120,6 +122,7 @@ fn drive_schedule(
                 prompt: reqs[i].prompt.clone(),
                 max_new: reqs[i].max_new,
                 cfg: Some(reqs[i].cfg.clone()),
+                slo: None,
             });
             next += 1;
         }
@@ -282,7 +285,13 @@ fn multi_turn_continuation_on_slots_matches_sequential() {
     let cap = bk.contract().cache_cap;
     let mut sched = ContinuousScheduler::new(2, cap);
     for (i, p) in p1.iter().enumerate() {
-        sched.submit(SlotRequest { id: i as u64, prompt: p.clone(), max_new: 14, cfg: None });
+        sched.submit(SlotRequest {
+            id: i as u64,
+            prompt: p.clone(),
+            max_new: 14,
+            cfg: None,
+            slo: None,
+        });
     }
     let mut turn_of = [0usize; 3];
     let mut got: Vec<(Vec<i32>, Vec<i32>)> = vec![(Vec::new(), Vec::new()); 3];
@@ -337,6 +346,7 @@ fn continuous_admission_amortizes_launches_on_straggler_traffic() {
                     prompt: prompts[i].clone(),
                     max_new: deadline(i),
                     cfg: None,
+                    slo: None,
                 });
             }
             sched
@@ -409,6 +419,7 @@ fn property_pipelined_serving_is_bit_identical_to_synchronous() {
                         prompt: reqs[i].prompt.clone(),
                         max_new: reqs[i].max_new,
                         cfg: Some(reqs[i].cfg.clone()),
+                        slo: None,
                     });
                     next += 1;
                 }
@@ -503,7 +514,13 @@ fn pipelined_split_launches_preserve_tokens_and_width_cap() {
     sched.set_pipelining(true);
     let mut outs: Vec<Option<Vec<i32>>> = (0..n).map(|_| None).collect();
     for (i, p) in prompts.iter().enumerate() {
-        sched.submit(SlotRequest { id: i as u64, prompt: p.clone(), max_new: 16, cfg: None });
+        sched.submit(SlotRequest {
+            id: i as u64,
+            prompt: p.clone(),
+            max_new: 16,
+            cfg: None,
+            slo: None,
+        });
     }
     sched
         .run_to_idle(&mut bk, &mut engines, &mut |c: Completion| {
@@ -558,6 +575,7 @@ fn pipelined_serving_overlaps_host_work_with_inflight_launches() {
                 prompt: prompt(12, 7000 + i as u64),
                 max_new: 8,
                 cfg: None,
+                slo: None,
             });
         }
         sched
@@ -641,4 +659,197 @@ fn matrix_cell_serving_is_token_identical_to_sequential() {
     }
     let _ = std::fs::remove_dir_all(&seq_cfg.trace_dir);
     let _ = std::fs::remove_dir_all(&cell_cfg.trace_dir);
+}
+
+// ----------------------------------------------------------------------
+// SLO admission under overload (`--slo-ms` / `--slo-action`)
+// ----------------------------------------------------------------------
+
+#[test]
+fn shed_action_drops_exactly_the_over_deadline_requests() {
+    // One slot, sustained overload (everything queued at once), a 25 ms
+    // shed deadline, 10 virtual ms per tick. The contract has two sides:
+    // every shed notice shows a wait strictly over the deadline, and
+    // every completed request was admitted while still inside it (the
+    // sweep runs before admission each tick, so nothing expired can slip
+    // into a slot).
+    let target_ms = 25.0;
+    let slo = SloPolicy { target_ms, action: SloAction::Shed };
+    let mut bk = SimBackend::new(90);
+    let mut engines = vec![Engine::new(&bk, base_cfg())];
+    let cap = bk.contract().cache_cap;
+    let mut sched = ContinuousScheduler::new(1, cap);
+    sched.set_pipelining(base_cfg().pipelining);
+    let n = 10u64;
+    for i in 0..n {
+        sched.submit(SlotRequest {
+            id: i,
+            prompt: prompt(8, 500 + i),
+            max_new: 2,
+            cfg: None,
+            slo: Some(slo),
+        });
+    }
+    // pre-tick virtual clock by tick number (all requests arrived at 0 ms,
+    // so the clock at a tick IS the queue wait any request admitted or
+    // swept on that tick had accumulated)
+    let mut clock_before: Vec<(u64, f64)> = Vec::new();
+    let mut completions: Vec<(u64, u64)> = Vec::new(); // (id, admitted_tick)
+    let mut notices = Vec::new();
+    let mut safety = 0u32;
+    while !sched.is_idle() {
+        clock_before.push((sched.current_tick(), sched.now_ms()));
+        sched
+            .tick(&mut bk, &mut engines, &mut |c: Completion| {
+                assert_eq!(c.slo, Some(slo), "completions must echo the submitted SLO");
+                completions.push((c.id, c.admitted_tick));
+                Disposition::Release
+            })
+            .unwrap();
+        sched.advance_clock(10.0);
+        notices.extend(sched.drain_shed());
+        safety += 1;
+        assert!(safety < 10_000, "overload drive failed to converge");
+    }
+    assert!(!notices.is_empty(), "sustained overload past the deadline must shed");
+    assert!(!completions.is_empty(), "requests inside the deadline must complete");
+    assert_eq!(
+        completions.len() + notices.len(),
+        n as usize,
+        "every request completes or sheds, never vanishes"
+    );
+    assert_eq!(sched.stats.shed, notices.len() as u64);
+    let wait_at = |tick: u64| -> f64 {
+        clock_before
+            .iter()
+            .find(|&&(t, _)| t == tick)
+            .map(|&(_, ms)| ms)
+            .expect("tick was driven")
+    };
+    for nt in &notices {
+        assert_eq!(nt.target_ms, target_ms);
+        assert!(
+            nt.waited_ms > target_ms,
+            "request {} shed at {:.1} ms — inside its {target_ms} ms deadline",
+            nt.id,
+            nt.waited_ms
+        );
+    }
+    for &(id, admitted_tick) in &completions {
+        let wait_ms = wait_at(admitted_tick);
+        assert!(
+            wait_ms <= target_ms,
+            "request {id} was admitted {wait_ms:.1} ms after submission — the \
+             pre-admission sweep should have shed it at {target_ms} ms"
+        );
+    }
+}
+
+#[test]
+fn queue_action_preserves_bounded_wait_under_sustained_overload() {
+    // 2x sustained arrival rate (two submissions per tick against ~one
+    // retirement), `SloAction::Queue`: deadlines expire on the virtual
+    // clock but are observational — nothing sheds, FIFO holds, and every
+    // wait stays inside the 2x-scaled pipelined bound of the fairness
+    // property above.
+    let slo = SloPolicy { target_ms: 5.0, action: SloAction::Queue };
+    let slots = 2usize;
+    let n = 16u64;
+    let max_new_max = 6usize;
+    let mut bk = SimBackend::new(90);
+    let mut engines: Vec<Engine> =
+        (0..slots).map(|_| Engine::new(&bk, base_cfg())).collect();
+    let cap = bk.contract().cache_cap;
+    let mut sched = ContinuousScheduler::new(slots, cap);
+    sched.set_pipelining(base_cfg().pipelining);
+    let mut next = 0u64;
+    let mut waited: Vec<u64> = Vec::new();
+    let mut safety = 0u32;
+    while waited.len() < n as usize {
+        // 2x the drain rate: two fresh submissions per tick until spent
+        for _ in 0..2 {
+            if next < n {
+                sched.submit(SlotRequest {
+                    id: next,
+                    prompt: prompt(8, 700 + next),
+                    max_new: 1 + (next as usize % max_new_max),
+                    cfg: None,
+                    slo: Some(slo),
+                });
+                next += 1;
+            }
+        }
+        sched
+            .tick(&mut bk, &mut engines, &mut |c: Completion| {
+                waited.push(c.waited_ticks);
+                Disposition::Release
+            })
+            .unwrap();
+        sched.advance_clock(10.0); // every queued deadline is long expired
+        safety += 1;
+        assert!(safety < 10_000, "queue-overload drive failed to converge");
+    }
+    assert_eq!(sched.stats.shed, 0, "queue-action deadlines must never shed");
+    assert!(sched.drain_shed().is_empty());
+    let bound = ((n / slots as u64) + 2) * 2 * (max_new_max as u64 + 2);
+    for (i, w) in waited.iter().enumerate() {
+        assert!(*w <= bound, "completion {i} waited {w} ticks (> bound {bound})");
+    }
+}
+
+#[test]
+fn abort_all_recovers_mid_overload() {
+    // Abort a shedding, overloaded scheduler mid-flight: the queue, the
+    // slots, and the per-slot SLO table must all clear, and a fresh
+    // submission afterwards must decode exactly like a sequential engine.
+    let slo = SloPolicy { target_ms: 15.0, action: SloAction::Shed };
+    let mut bk = SimBackend::new(90);
+    let mut engines: Vec<Engine> =
+        (0..2).map(|_| Engine::new(&bk, base_cfg())).collect();
+    let cap = bk.contract().cache_cap;
+    let mut sched = ContinuousScheduler::new(2, cap);
+    sched.set_pipelining(base_cfg().pipelining);
+    for i in 0..12u64 {
+        sched.submit(SlotRequest {
+            id: i,
+            prompt: prompt(8, 800 + i),
+            max_new: 8,
+            cfg: None,
+            slo: Some(slo),
+        });
+    }
+    // a few overloaded ticks: some shed, some decode, some still in flight
+    for _ in 0..3 {
+        sched
+            .tick(&mut bk, &mut engines, &mut |_c: Completion| Disposition::Release)
+            .unwrap();
+        sched.advance_clock(10.0);
+    }
+    sched.abort_all();
+    for e in engines.iter_mut() {
+        e.reset();
+    }
+    assert!(sched.is_idle(), "abort_all must leave the scheduler idle");
+
+    // recovery: a fresh post-abort request decodes bit-identically to a
+    // dedicated sequential engine, unburdened by any stale SLO state
+    let p = prompt(12, 901);
+    let want = {
+        let mut b = SimBackend::new(90);
+        let mut e = Engine::new(&b, base_cfg());
+        e.generate_speculative(&mut b, &p, 10).unwrap().tokens
+    };
+    sched.submit(SlotRequest { id: 99, prompt: p, max_new: 10, cfg: None, slo: None });
+    let mut got: Option<Vec<i32>> = None;
+    sched
+        .run_to_idle(&mut bk, &mut engines, &mut |c: Completion| {
+            assert_eq!(c.id, 99);
+            assert_eq!(c.slo, None, "aborted SLOs must not leak onto new requests");
+            got = Some(c.out.tokens);
+            Disposition::Release
+        })
+        .unwrap();
+    assert_eq!(got.as_deref(), Some(&want[..]), "post-abort decode diverged");
+    // the frozen clock afterwards keeps the no-SLO path untouched
+    assert_eq!(sched.drain_shed().len(), 0);
 }

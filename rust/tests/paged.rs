@@ -339,7 +339,7 @@ fn scheduler_park_and_resume_matches_dedicated_engine() {
         let mut engines = vec![Engine::new(&bk, cfg.clone())];
         let cap = bk.contract().cache_cap;
         let mut sched = ContinuousScheduler::new(1, cap);
-        sched.submit(SlotRequest { id: 0, prompt: p1.clone(), max_new: 10, cfg: None });
+        sched.submit(SlotRequest { id: 0, prompt: p1.clone(), max_new: 10, cfg: None, slo: None });
         let mut turn1: Option<GenOut> = None;
         sched
             .run_to_idle(&mut bk, &mut engines, &mut |c: Completion| {
@@ -351,7 +351,13 @@ fn scheduler_park_and_resume_matches_dedicated_engine() {
         assert_eq!(sched.stats.parked, 1);
 
         // the freed slot serves someone else while 0 is parked
-        sched.submit(SlotRequest { id: 1, prompt: other.clone(), max_new: 8, cfg: None });
+        sched.submit(SlotRequest {
+            id: 1,
+            prompt: other.clone(),
+            max_new: 8,
+            cfg: None,
+            slo: None,
+        });
         let mut got_other: Option<GenOut> = None;
         sched
             .run_to_idle(&mut bk, &mut engines, &mut |c: Completion| {
