@@ -76,6 +76,16 @@
 //! speedup, and this is the regression tripwire for it. An `overload_*`
 //! point replays a 10x-sustainable rate with a shed-action SLO so the
 //! deterministic shed rate of SLO admission is gated against creep.
+//!
+//! # CoW prefix sharing (`sharing`)
+//!
+//! A timing-free section runs the shared-prefix workload (8
+//! conversations extending one 160-token system prompt) through a
+//! 4-slot continuous scheduler with `--prefix-sharing` off and on,
+//! parking every retired conversation, and records prefill
+//! teacher-calls per admitted conversation plus the pools' referenced
+//! KV bytes at full residency. Both numbers are machine-independent;
+//! `bench_gate` requires sharing-on to beat sharing-off on both.
 
 use eagle_pangu::backend::sim::SimBackend;
 use eagle_pangu::backend::ModelBackend;
@@ -91,7 +101,7 @@ use eagle_pangu::json::Json;
 use eagle_pangu::runtime::PjrtBackend;
 use eagle_pangu::util::alloc_count::CountingAlloc;
 use eagle_pangu::util::bench::{bench, black_box};
-use eagle_pangu::workload::{ArrivalKind, Grammar, TraceSpec};
+use eagle_pangu::workload::{ArrivalKind, Grammar, PromptFamily, SharedPrefixSpec, TraceSpec};
 use std::time::{Duration, Instant};
 
 // # KV-session upload traffic (`upload`)
@@ -474,6 +484,68 @@ fn main() {
     strag_json.push("row_cost_ns", row_cost_ns);
     strag_json.push("cache_layout", strag_cfg.cache_layout.as_str());
 
+    // ---- CoW prefix sharing: prefill work + KV residency ----
+    // Deterministic (no timing): the shared-prefix workload (8
+    // conversations extending one 160-token system prompt) runs through
+    // a 4-slot continuous scheduler with `--prefix-sharing` off and on,
+    // parking every retired conversation so the final residency is the
+    // full resident set — the serving regime prefix sharing targets.
+    // Two metrics per side: prefill teacher-calls per admitted
+    // conversation (sharing-on admissions adopt the resident frozen run
+    // and skip its prefill launches) and the pools' referenced KV bytes
+    // with all conversations parked (shared blocks count once). Both are
+    // machine-independent; `bench_gate` requires sharing-on to beat
+    // sharing-off on both at B = 4, and tokens are bit-identical by the
+    // CoW contract (enforced by `tests/prefix_sharing.rs`).
+    let share_spec = SharedPrefixSpec::default();
+    let share_prompts = share_spec.prompts();
+    let share_slots = 4usize;
+    let mut share_json = Json::obj();
+    let mut share_metrics = [[0.0f64; 2]; 2]; // [off, on] x [calls/conv, bytes]
+    for (si, sharing) in [false, true].into_iter().enumerate() {
+        let mut sim = SimBackend::new(85);
+        let mut scfg = cfg.clone();
+        scfg.cache_layout = CacheLayout::Paged;
+        scfg.prefix_sharing = sharing;
+        let pools = CachePools::new(sim.contract());
+        let mut engines: Vec<Engine> = (0..share_slots)
+            .map(|_| Engine::with_pools(&sim, scfg.clone(), &pools))
+            .collect();
+        let cap = sim.contract().cache_cap;
+        let mut sched = ContinuousScheduler::new(share_slots, cap);
+        for (i, p) in share_prompts.iter().enumerate() {
+            sched.submit(SlotRequest {
+                id: i as u64,
+                prompt: p.clone(),
+                max_new: 8,
+                cfg: None,
+                slo: None,
+            });
+        }
+        sched
+            .run_to_idle(&mut sim, &mut engines, &mut |_c: Completion| Disposition::Park)
+            .unwrap();
+        let admitted = share_prompts.len() as f64;
+        let calls_per_conv = sched.stats.prefill_teacher_calls as f64 / admitted;
+        let resident = pools.referenced_bytes() as f64;
+        let tag = if sharing { "sharing_on" } else { "sharing_off" };
+        println!(
+            "prefix sharing B={share_slots} {tag}: {calls_per_conv:.2} prefill \
+             teacher-calls/conv, {resident:.0} KV bytes resident ({admitted} parked)"
+        );
+        share_json
+            .push(&format!("{tag}_b4_prefill_teacher_calls_per_conv"), calls_per_conv)
+            .push(&format!("{tag}_b4_kv_bytes_resident"), resident);
+        share_metrics[si] = [calls_per_conv, resident];
+    }
+    share_json
+        .push("conversations", share_spec.conversations)
+        .push("prefix_len", share_spec.prefix_len);
+    println!(
+        "prefix sharing: prefill calls/conv {:.2} -> {:.2}, resident bytes {:.0} -> {:.0}",
+        share_metrics[0][0], share_metrics[1][0], share_metrics[0][1], share_metrics[1][1]
+    );
+
     // ---- trace-replay latency distribution (deterministic) ----
     // Replays seeded Poisson and bursty arrival traces through the
     // continuous scheduler under the virtual device-clock model
@@ -489,6 +561,7 @@ fn main() {
     let lat_spec = |kind: ArrivalKind| TraceSpec {
         requests: 48,
         kind,
+        family: PromptFamily::Mixed,
         prompt_mean: 16,
         max_new: 6,
         seed: 11,
@@ -554,6 +627,7 @@ fn main() {
         .push("upload", upload_json)
         .push("straggler", strag_json)
         .push("straggler_continuous_speedup", strag_speedup)
+        .push("sharing", share_json)
         .push("latency", lat_json);
     std::fs::write("BENCH_hotpath.json", j.to_string_pretty()).unwrap();
     println!("wrote BENCH_hotpath.json");

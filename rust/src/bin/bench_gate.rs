@@ -38,6 +38,13 @@
 //!   `latency.slo_ms` — every `*_p99_ms` leaf of the *current* `latency`
 //!   section must sit at or below that SLO (a hard p99 floor: virtual
 //!   clocks don't flake, so the ceiling is absolute, not relative);
+//! * CoW prefix sharing (`sharing.sharing_on_*`): deterministic prefill
+//!   teacher-calls per admitted conversation and resident KV bytes;
+//!   gated `<= 1.15 * baseline`, and — when the baseline pins a
+//!   `sharing` section — the *current* file must show sharing-on
+//!   `<=` sharing-off on both metrics at B = 4 (adoption must keep
+//!   skipping prefill work and deduplicating resident blocks;
+//!   `sharing_off_*` entries are the comparator, not gated themselves);
 //! * shed rate (`*_shed_rate`): deterministic admission-layer outcome;
 //!   current must be `<= baseline + 0.05` (absolute slack — shedding a
 //!   few more requests under the pinned overload trace is creep, not
@@ -126,6 +133,15 @@ fn rule_for(leaf: &str) -> Option<Rule> {
         // session_off_* entries are the comparator for the 0.25x cross
         // rule, not gated themselves (full upload is a constant of the
         // contract geometry).
+        return Some(Rule::Memory);
+    }
+    if leaf.starts_with("sharing_on_")
+        && (leaf.ends_with("_kv_bytes_resident")
+            || leaf.ends_with("_prefill_teacher_calls_per_conv"))
+    {
+        // sharing_off_* entries are the comparator for the on-vs-off
+        // cross rule, not gated themselves (the unshared cost is a
+        // constant of the pinned workload).
         return Some(Rule::Memory);
     }
     if leaf.ends_with("_p50_ms") || leaf.ends_with("_p95_ms") || leaf.ends_with("_p99_ms") {
@@ -254,6 +270,39 @@ fn gate_upload_cross(baseline: &Json, current: &Json, out: &mut Vec<Finding>) {
 /// Resident-session upload budget: session-on <= 0.25x session-off.
 const UPLOAD_RATIO: f64 = 0.25;
 
+/// CoW prefix-sharing rule, read from the *current* file (both sides
+/// come from the same deterministic bench section): at B = 4 the
+/// sharing-on path must spend no more prefill teacher calls per admitted
+/// conversation and hold no more KV bytes resident than sharing-off —
+/// otherwise adoption stopped paying for itself. Applied only when the
+/// baseline pins a `sharing` section (baseline defines the contract,
+/// like every other rule).
+fn gate_sharing_cross(baseline: &Json, current: &Json, out: &mut Vec<Finding>) {
+    if baseline.get("sharing").is_none() {
+        return;
+    }
+    let cur = current.get("sharing");
+    for (metric, unit) in
+        [("prefill_teacher_calls_per_conv", "calls/conv"), ("kv_bytes_resident", "B")]
+    {
+        let path = format!("sharing.on_vs_off_b4_{metric}");
+        let on = cur
+            .and_then(|s| s.get(&format!("sharing_on_b4_{metric}")))
+            .and_then(Json::as_f64);
+        let off = cur
+            .and_then(|s| s.get(&format!("sharing_off_b4_{metric}")))
+            .and_then(Json::as_f64);
+        let (ok, detail) = match (on, off) {
+            (Some(on), Some(off)) => (
+                on <= off,
+                format!("sharing-on {on:.2} {unit} vs sharing-off {off:.2} {unit} at B=4"),
+            ),
+            _ => (false, "sharing entries missing from current output at B=4".to_string()),
+        };
+        out.push(Finding { path, ok, detail });
+    }
+}
+
 /// Hard p99 SLO floor over the *current* file's `latency` section: every
 /// `*_p99_ms` leaf must sit at or below the baseline's pinned
 /// `latency.slo_ms`. The percentiles are virtual-clock and deterministic,
@@ -302,6 +351,7 @@ fn run_gate(baseline: &Json, current: &Json, tol: f64) -> Vec<Finding> {
     gate(baseline, current, tol, "", &mut out);
     gate_kv_cross(baseline, current, &mut out);
     gate_upload_cross(baseline, current, &mut out);
+    gate_sharing_cross(baseline, current, &mut out);
     gate_latency_slo(baseline, current, &mut out);
     out
 }
@@ -499,6 +549,61 @@ mod tests {
         let legacy = bench_json(1000.0, 2000.0, 1.3, 100.0);
         let findings = run_gate(&legacy, &good, 0.85);
         assert!(!findings.iter().any(|f| f.path.starts_with("upload.")));
+    }
+
+    fn sharing_json(on_calls: f64, on_bytes: f64, off_calls: f64, off_bytes: f64) -> Json {
+        let mut sh = Json::obj();
+        sh.push("sharing_off_b4_prefill_teacher_calls_per_conv", off_calls)
+            .push("sharing_on_b4_prefill_teacher_calls_per_conv", on_calls)
+            .push("sharing_off_b4_kv_bytes_resident", off_bytes)
+            .push("sharing_on_b4_kv_bytes_resident", on_bytes)
+            .push("prefix_len", 160.0); // contract constant: never a gated leaf
+        let mut j = bench_json(1000.0, 2000.0, 1.3, 100.0);
+        j.push("sharing", sh);
+        j
+    }
+
+    #[test]
+    fn sharing_on_must_not_lose_to_sharing_off() {
+        let base = sharing_json(2.1, 900_000.0, 3.0, 2_000_000.0);
+        let findings = run_gate(&base, &base, 0.85);
+        for metric in ["prefill_teacher_calls_per_conv", "kv_bytes_resident"] {
+            let f = findings
+                .iter()
+                .find(|f| f.path == format!("sharing.on_vs_off_b4_{metric}"))
+                .unwrap();
+            assert!(f.ok, "{}", f.detail);
+        }
+        // sharing_on leaves are baseline-gated (deterministic numbers);
+        // sharing_off is the comparator, never gated per-leaf — and the
+        // workload constants are not leaves at all
+        assert!(findings.iter().any(|f| f.path == "sharing.sharing_on_b4_kv_bytes_resident"));
+        assert!(findings
+            .iter()
+            .any(|f| f.path == "sharing.sharing_on_b4_prefill_teacher_calls_per_conv"));
+        assert!(!findings.iter().any(|f| f.path == "sharing.sharing_off_b4_kv_bytes_resident"));
+        assert!(!findings.iter().any(|f| f.path == "sharing.prefix_len"));
+        // an inverted run (sharing-on costing more than off on either
+        // metric) fails the cross rule even with loose per-leaf ceilings
+        let base_loose = sharing_json(4.0, 3_000_000.0, 3.0, 2_000_000.0);
+        let bad = sharing_json(3.2, 2_100_000.0, 3.0, 2_000_000.0);
+        let findings = run_gate(&base_loose, &bad, 0.85);
+        for metric in ["prefill_teacher_calls_per_conv", "kv_bytes_resident"] {
+            let f = findings
+                .iter()
+                .find(|f| f.path == format!("sharing.on_vs_off_b4_{metric}"))
+                .unwrap();
+            assert!(!f.ok, "sharing-on above sharing-off must fail at B=4: {}", f.detail);
+        }
+        // a legacy baseline without a sharing section skips the rule
+        let legacy = bench_json(1000.0, 2000.0, 1.3, 100.0);
+        let findings = run_gate(&legacy, &base, 0.85);
+        assert!(!findings.iter().any(|f| f.path.starts_with("sharing.")));
+        // ... and a current file that dropped the section fails coverage
+        let findings = run_gate(&base, &legacy, 0.85);
+        assert!(findings
+            .iter()
+            .any(|f| f.path == "sharing.on_vs_off_b4_kv_bytes_resident" && !f.ok));
     }
 
     fn latency_json(p99: f64, shed: f64, slo: f64) -> Json {

@@ -54,6 +54,14 @@ pub struct CacheStats {
     pub fast_fallbacks: u64,
     /// Full-gather path-index commits.
     pub full_reorders: u64,
+    /// Shared blocks privatized by copy-on-write before a divergent
+    /// write (paged layout under prefix sharing; always 0 for flat).
+    pub cow_copies: u64,
+    /// Bytes copied by those copy-on-write privatizations.
+    pub cow_bytes: u64,
+    /// Committed rows adopted from shared frozen prefix blocks instead
+    /// of being prefilled (paged layout under prefix sharing).
+    pub adopted_rows: u64,
 }
 
 /// One KV cache (teacher or draft side) with branch/commit semantics.

@@ -18,11 +18,11 @@ pub mod paged;
 
 use crate::backend::KvView;
 use crate::config::CacheStrategy;
-use anyhow::Result;
+use anyhow::{bail, Result};
 use std::cell::Ref;
 
 pub use manager::{CacheStats, ManagedCache};
-pub use paged::{CachePools, PagePool, PagedCache, BLOCK_ROWS};
+pub use paged::{CachePools, PagePool, PagedCache, PrefixIndex, PrefixMatch, BLOCK_ROWS};
 
 /// A live borrow of a store's readable KV state, held for the duration of
 /// one backend step (or one fused launch across many requests).
@@ -160,4 +160,34 @@ pub trait KvStore {
     /// (+ any open replica) for flat stores, mapped blocks for paged
     /// ones. The CI memory gate sums this across resident slots.
     fn bytes_resident(&self) -> u64;
+
+    // ------------------------------------------------------------------
+    // Prefix sharing (block-structured layouts only; flat stores keep
+    // the defaults — there is no block table to share)
+    // ------------------------------------------------------------------
+
+    /// Rows per block for block-structured layouts; `None` for flat
+    /// stores. Prefix-sharing registration aligns frozen runs to this.
+    fn block_size(&self) -> Option<usize> {
+        None
+    }
+
+    /// Physical block ids covering committed rows `[0, rows)`, for a
+    /// block-aligned `rows <= len()` with no branch open — what the
+    /// prefix index freezes at registration. `None` for flat stores, an
+    /// unaligned request, or an open branch.
+    fn committed_block_run(&self, rows: usize) -> Option<Vec<u32>> {
+        let _ = rows;
+        None
+    }
+
+    /// Map `blocks` (a frozen run from the prefix index, covering exactly
+    /// `rows` block-aligned rows) as this store's committed prefix,
+    /// taking one new reference per block. The store must be empty. Any
+    /// later divergent write privatizes the touched block (copy-on-write)
+    /// — the shared run itself is immutable. Errors for flat stores.
+    fn adopt_shared_blocks(&mut self, blocks: &[u32], rows: usize) -> Result<()> {
+        let _ = (blocks, rows);
+        bail!("adopt_shared_blocks: this cache layout has no shareable blocks")
+    }
 }

@@ -68,6 +68,13 @@ pub struct PagePool {
     v: Vec<f32>,
     /// LIFO free list of block ids.
     free: Vec<u32>,
+    /// Per-block reference count (copy-on-write prefix sharing): 0 = on
+    /// the free list, 1 = uniquely mapped, > 1 = shared between block
+    /// tables and/or the worker's prefix index. A block returns to the
+    /// free list only when its last reference is released, and any write
+    /// through a table into a block with `refs > 1` must clone it first
+    /// ([`PagedCache`]'s CoW paths).
+    refs: Vec<u32>,
 }
 
 impl PagePool {
@@ -75,7 +82,15 @@ impl PagePool {
     /// storage grows on demand and within reserved capacity).
     pub fn new(dims: Dims, block_size: usize) -> Self {
         assert!(block_size >= 1, "block_size must be >= 1");
-        Self { dims, block_size, blocks: 0, k: Vec::new(), v: Vec::new(), free: Vec::new() }
+        Self {
+            dims,
+            block_size,
+            blocks: 0,
+            k: Vec::new(),
+            v: Vec::new(),
+            free: Vec::new(),
+            refs: Vec::new(),
+        }
     }
 
     /// Rows per block.
@@ -91,6 +106,40 @@ impl PagePool {
     /// Blocks currently on the free list.
     pub fn free_blocks(&self) -> usize {
         self.free.len()
+    }
+
+    /// Blocks with at least one live reference (uniquely mapped or
+    /// shared). The refcounted free-list invariant is
+    /// `blocks == free_blocks + referenced_blocks` after every operation
+    /// — shared blocks count **once**, however many tables map them.
+    pub fn referenced_blocks(&self) -> usize {
+        self.refs.iter().filter(|r| **r > 0).count()
+    }
+
+    /// Current reference count of block `b` (0 = free).
+    pub fn ref_count(&self, b: u32) -> u32 {
+        self.refs[b as usize]
+    }
+
+    /// Add a reference to a live block (prefix sharing: a second block
+    /// table, or the worker's prefix index, now maps it).
+    ///
+    /// # Panics
+    ///
+    /// Panics if `b` is free — sharing a dead block is a use-after-free.
+    pub fn share_block(&mut self, b: u32) {
+        assert!(
+            self.refs[b as usize] > 0,
+            "share_block on free block {b} (use-after-free)"
+        );
+        self.refs[b as usize] += 1;
+    }
+
+    /// Bytes of KV storage held by referenced blocks (k + v) — the
+    /// pool-level residency under prefix sharing, where per-conversation
+    /// [`KvStore::bytes_resident`] sums would double-count shared blocks.
+    pub fn referenced_bytes(&self) -> u64 {
+        (2 * self.referenced_blocks() * self.block_elems() * 4) as u64
     }
 
     /// Elements of one block across all layers (`L * bs * H * Dh`).
@@ -136,11 +185,15 @@ impl PagePool {
             self.v.reserve(extra);
         }
         self.free.reserve(need);
+        self.refs.reserve(need);
     }
 
     /// Take a block from the free list, growing storage if none is free.
+    /// The block starts uniquely referenced (`refs == 1`).
     fn alloc_block(&mut self) -> u32 {
         if let Some(b) = self.free.pop() {
+            debug_assert_eq!(self.refs[b as usize], 0, "free block {b} still referenced");
+            self.refs[b as usize] = 1;
             return b;
         }
         let b = self.blocks as u32;
@@ -148,14 +201,21 @@ impl PagePool {
         let n = self.blocks * self.block_elems();
         self.k.resize(n, 0.0);
         self.v.resize(n, 0.0);
+        self.refs.push(1);
         b
     }
 
-    /// Return a block to the free list.
+    /// Drop one reference to a block; the last release returns it to the
+    /// free list. Shared blocks survive their earlier releasers (a donor
+    /// conversation retiring leaves the frozen prefix resident for the
+    /// index and its adopters).
     fn release_block(&mut self, b: u32) {
         debug_assert!((b as usize) < self.blocks, "release of unbacked block {b}");
-        debug_assert!(!self.free.contains(&b), "double free of block {b}");
-        self.free.push(b);
+        debug_assert!(self.refs[b as usize] > 0, "double free of block {b}");
+        self.refs[b as usize] -= 1;
+        if self.refs[b as usize] == 0 {
+            self.free.push(b);
+        }
     }
 
     /// Element offset of `(block, layer, in-block row)` in the storage.
@@ -166,15 +226,71 @@ impl PagePool {
     }
 }
 
-/// The per-worker pool pair (teacher + draft roles). Cloning shares the
-/// pools (`Rc`): a worker creates one `CachePools` and hands it to every
-/// slot engine so all resident conversations draw from the same arenas.
+/// Most frozen prefix runs the per-worker [`PrefixIndex`] retains; the
+/// oldest entry is evicted (its block references released) past this.
+pub const PREFIX_INDEX_CAP: usize = 32;
+
+/// One frozen, block-aligned run of committed prefix rows registered for
+/// sharing: the exact token sequence, the teacher- and draft-pool blocks
+/// holding its KV rows (the index owns one reference per block, so the
+/// run stays resident after its donor retires), and the donor's teacher
+/// feature at every block end — the chain-feature a partial prefill
+/// resumes from ([`crate::engine::Engine`]'s EAGLE input contract).
+struct PrefixEntry {
+    tokens: Vec<i32>,
+    t_blocks: Vec<u32>,
+    d_blocks: Vec<u32>,
+    /// `feats[j]` = teacher feature of row `(j + 1) * block_size - 1`.
+    feats: Vec<Vec<f32>>,
+}
+
+/// Per-worker index of frozen prefix runs, keyed on committed block
+/// *content* (the token sequence the blocks hold — exact compare, no
+/// hash-collision risk). Admission of a conversation whose prompt prefix
+/// matches a resident run adopts the matched blocks directly and skips
+/// prefill for the shared run ([`CachePools::lookup_prefix`]). Matches
+/// may cover a block-aligned *prefix* of an entry, so conversations
+/// diverging mid-run still share everything up to the divergent block.
+#[derive(Default)]
+pub struct PrefixIndex {
+    entries: Vec<PrefixEntry>,
+}
+
+impl PrefixIndex {
+    /// Registered runs currently resident.
+    pub fn entries(&self) -> usize {
+        self.entries.len()
+    }
+}
+
+/// A prefix-index hit: the shared run to adopt. Block vectors are clones
+/// of the index entry's tables (the adopter takes its own references via
+/// [`crate::cache::KvStore::adopt_shared_blocks`]).
+pub struct PrefixMatch {
+    /// Matched rows (block-aligned, `> 0`).
+    pub rows: usize,
+    /// Teacher-pool blocks covering the run.
+    pub t_blocks: Vec<u32>,
+    /// Draft-pool blocks covering the run.
+    pub d_blocks: Vec<u32>,
+    /// Donor teacher feature at every block end of the run
+    /// (`feats.last()` is the chain feature prefill resumes from).
+    pub feats: Vec<Vec<f32>>,
+}
+
+/// The per-worker pool pair (teacher + draft roles) plus the shared
+/// prefix index. Cloning shares all three (`Rc`): a worker creates one
+/// `CachePools` and hands it to every slot engine so all resident
+/// conversations draw from the same arenas.
 #[derive(Clone)]
 pub struct CachePools {
     /// Teacher-role block pool.
     pub teacher: Rc<RefCell<PagePool>>,
     /// Draft-role block pool.
     pub draft: Rc<RefCell<PagePool>>,
+    /// Frozen prefix runs shared across this worker's conversations
+    /// (`--prefix-sharing`; empty and inert when sharing is off).
+    pub prefix: Rc<RefCell<PrefixIndex>>,
 }
 
 impl CachePools {
@@ -183,12 +299,138 @@ impl CachePools {
         Self {
             teacher: Rc::new(RefCell::new(PagePool::new(contract.teacher, BLOCK_ROWS))),
             draft: Rc::new(RefCell::new(PagePool::new(contract.draft, BLOCK_ROWS))),
+            prefix: Rc::new(RefCell::new(PrefixIndex::default())),
         }
     }
 
     /// Combined pool storage footprint in bytes (k + v, both roles).
     pub fn bytes_resident(&self) -> u64 {
         self.teacher.borrow().bytes_resident() + self.draft.borrow().bytes_resident()
+    }
+
+    /// Combined bytes of *referenced* blocks (both roles) — the honest
+    /// residency under prefix sharing, where per-conversation sums would
+    /// count a shared block once per mapper.
+    pub fn referenced_bytes(&self) -> u64 {
+        self.teacher.borrow().referenced_bytes() + self.draft.borrow().referenced_bytes()
+    }
+
+    /// Register a frozen run for sharing: `tokens` are the committed
+    /// tokens of rows `[0, tokens.len())`, `t_blocks`/`d_blocks` the
+    /// teacher/draft blocks covering them (block-aligned), and `feats`
+    /// the donor's teacher feature at every block end. The index takes
+    /// one reference per block so the run survives its donor. Runs
+    /// already covered by a resident entry are skipped; a run extending
+    /// a resident entry replaces it (releasing the shorter one); past
+    /// [`PREFIX_INDEX_CAP`] the oldest entry is evicted.
+    pub fn register_prefix(
+        &self,
+        tokens: &[i32],
+        t_blocks: &[u32],
+        d_blocks: &[u32],
+        feats: &[Vec<f32>],
+    ) {
+        let bs = self.teacher.borrow().block_size();
+        let rows = tokens.len();
+        debug_assert!(rows > 0 && rows % bs == 0, "prefix run must be block-aligned");
+        debug_assert_eq!(t_blocks.len(), rows / bs);
+        debug_assert_eq!(d_blocks.len(), rows / bs);
+        debug_assert_eq!(feats.len(), rows / bs);
+        let mut index = self.prefix.borrow_mut();
+        // already covered by a resident entry (same tokens or a longer
+        // run starting with them): nothing new to share
+        if index
+            .entries
+            .iter()
+            .any(|e| e.tokens.len() >= rows && e.tokens[..rows] == *tokens)
+        {
+            return;
+        }
+        // this run extends one or more resident entries: replace them
+        let mut i = 0;
+        while i < index.entries.len() {
+            if tokens.starts_with(&index.entries[i].tokens) {
+                let old = index.entries.remove(i);
+                self.release_entry(&old);
+            } else {
+                i += 1;
+            }
+        }
+        while index.entries.len() >= PREFIX_INDEX_CAP {
+            let old = index.entries.remove(0);
+            self.release_entry(&old);
+        }
+        {
+            let mut tp = self.teacher.borrow_mut();
+            for &b in t_blocks {
+                tp.share_block(b);
+            }
+        }
+        {
+            let mut dp = self.draft.borrow_mut();
+            for &b in d_blocks {
+                dp.share_block(b);
+            }
+        }
+        index.entries.push(PrefixEntry {
+            tokens: tokens.to_vec(),
+            t_blocks: t_blocks.to_vec(),
+            d_blocks: d_blocks.to_vec(),
+            feats: feats.to_vec(),
+        });
+    }
+
+    /// Longest block-aligned shared run matching a prefix of `prompt`,
+    /// capped at `max_rows` (callers pass `prompt.len() - 1` so at least
+    /// one tail token remains to regenerate the pending logits). Returns
+    /// `None` when no resident run shares at least one whole block.
+    pub fn lookup_prefix(&self, prompt: &[i32], max_rows: usize) -> Option<PrefixMatch> {
+        let bs = self.teacher.borrow().block_size();
+        let index = self.prefix.borrow();
+        let mut best: Option<(usize, &PrefixEntry)> = None;
+        for e in &index.entries {
+            let lim = e.tokens.len().min(prompt.len()).min(max_rows);
+            let common = e
+                .tokens
+                .iter()
+                .zip(prompt)
+                .take(lim)
+                .take_while(|(a, b)| a == b)
+                .count();
+            let blocks = common / bs;
+            if blocks > 0 && best.as_ref().map_or(true, |(br, _)| blocks * bs > *br) {
+                best = Some((blocks * bs, e));
+            }
+        }
+        best.map(|(rows, e)| {
+            let nb = rows / bs;
+            PrefixMatch {
+                rows,
+                t_blocks: e.t_blocks[..nb].to_vec(),
+                d_blocks: e.d_blocks[..nb].to_vec(),
+                feats: e.feats[..nb].to_vec(),
+            }
+        })
+    }
+
+    /// Drop every registered run, releasing the index's block references.
+    pub fn clear_prefix_index(&self) {
+        let entries = std::mem::take(&mut self.prefix.borrow_mut().entries);
+        for e in &entries {
+            self.release_entry(e);
+        }
+    }
+
+    fn release_entry(&self, e: &PrefixEntry) {
+        let mut tp = self.teacher.borrow_mut();
+        for &b in &e.t_blocks {
+            tp.release_block(b);
+        }
+        drop(tp);
+        let mut dp = self.draft.borrow_mut();
+        for &b in &e.d_blocks {
+            dp.release_block(b);
+        }
     }
 }
 
@@ -311,6 +553,43 @@ impl PagedCache {
         }
     }
 
+    /// Copy-on-write guard for logical rows `[lo, hi)` of `table`: any
+    /// covered block with more than one reference (shared with another
+    /// conversation's table or the prefix index) is cloned into a private
+    /// block first, and the table remapped to the clone. Every in-pool
+    /// write path calls this before touching storage, so shared frozen
+    /// prefix blocks are immutable by construction — a divergent append
+    /// at the boundary block privatizes exactly that block. No-op (and
+    /// allocation-free) when nothing is shared.
+    fn cow_rows(
+        pool: &mut PagePool,
+        table: &mut [u32],
+        lo: usize,
+        hi: usize,
+        stats: &mut CacheStats,
+    ) {
+        if hi <= lo {
+            return;
+        }
+        let bs = pool.block_size();
+        let be = pool.block_elems();
+        for bi in (lo / bs)..=((hi - 1) / bs) {
+            let b = table[bi];
+            if pool.ref_count(b) <= 1 {
+                continue;
+            }
+            let nb = pool.alloc_block();
+            let s_off = (b as usize) * be;
+            let d_off = (nb as usize) * be;
+            pool.k.copy_within(s_off..s_off + be, d_off);
+            pool.v.copy_within(s_off..s_off + be, d_off);
+            pool.release_block(b); // drop this table's reference only
+            table[bi] = nb;
+            stats.cow_copies += 1;
+            stats.cow_bytes += (2 * be * 4) as u64;
+        }
+    }
+
     /// Copy `count` rows of a `[L, s, H, Dh]` step-output block into the
     /// chosen table at logical offset `at`, mapping blocks as needed.
     fn write_rows(
@@ -331,6 +610,7 @@ impl PagedCache {
             &mut self.table
         };
         Self::map_rows(&mut pool, table, at + count);
+        Self::cow_rows(&mut pool, table, at, at + count, &mut self.stats);
         let bs = pool.block_size();
         for l in 0..self.dims.layers {
             for r in 0..count {
@@ -405,6 +685,7 @@ impl PagedCache {
         let rs = self.rstride();
         let mut pool = self.pool.borrow_mut();
         Self::map_rows(&mut pool, &mut self.table, at + n);
+        Self::cow_rows(&mut pool, &mut self.table, at, at + n, &mut self.stats);
         let bs = pool.block_size();
         for l in 0..self.dims.layers {
             for i in 0..n {
@@ -541,9 +822,13 @@ impl KvStore for PagedCache {
             let boundary = len.div_ceil(bs) * bs; // first whole-block row
             let mut moved_rows = 0usize;
             {
+                let hi = (len + a).min(boundary);
                 let mut pool = self.pool.borrow_mut();
-                for row in len..(len + a).min(boundary) {
-                    Self::map_rows(&mut pool, &mut self.table, row + 1);
+                if hi > len {
+                    Self::map_rows(&mut pool, &mut self.table, hi);
+                    Self::cow_rows(&mut pool, &mut self.table, len, hi, &mut self.stats);
+                }
+                for row in len..hi {
                     Self::copy_row(&mut pool, &rep, row, &self.table, row, self.dims.layers);
                     moved_rows += 1;
                 }
@@ -665,8 +950,17 @@ impl KvStore for PagedCache {
                 // DeepCopy: copy accepted rows from the replica into the
                 // main table (disjoint blocks — plain copies).
                 let mut pool = self.pool.borrow_mut();
+                if !tail_offsets.is_empty() {
+                    Self::map_rows(&mut pool, &mut self.table, len + tail_offsets.len());
+                    Self::cow_rows(
+                        &mut pool,
+                        &mut self.table,
+                        len,
+                        len + tail_offsets.len(),
+                        &mut self.stats,
+                    );
+                }
                 for (i, &o) in tail_offsets.iter().enumerate() {
-                    Self::map_rows(&mut pool, &mut self.table, len + i + 1);
                     Self::copy_row(&mut pool, &rep, len + o, &self.table, len + i, layers);
                     moved_rows += 1;
                 }
@@ -679,8 +973,17 @@ impl KvStore for PagedCache {
                 // table. Strictly increasing offsets give `o >= i`, so a
                 // source row is never overwritten before it is read —
                 // the same argument as the flat layout, independent of
-                // which physical blocks the rows land in.
+                // which physical blocks the rows land in. CoW first: a
+                // cloned destination block preserves its contents, so
+                // sources that happen to live in it still read correctly.
                 let mut pool = self.pool.borrow_mut();
+                Self::cow_rows(
+                    &mut pool,
+                    &mut self.table,
+                    len,
+                    len + tail_offsets.len(),
+                    &mut self.stats,
+                );
                 for (i, &o) in tail_offsets.iter().enumerate() {
                     if o == i {
                         continue;
@@ -757,6 +1060,45 @@ impl KvStore for PagedCache {
     fn mark_synced(&mut self) {
         self.dirty_lo = usize::MAX;
     }
+
+    fn block_size(&self) -> Option<usize> {
+        Some(self.block_size)
+    }
+
+    fn committed_block_run(&self, rows: usize) -> Option<Vec<u32>> {
+        if self.branch_open || rows == 0 || rows > self.len || rows % self.block_size != 0 {
+            return None;
+        }
+        Some(self.table[..rows / self.block_size].to_vec())
+    }
+
+    fn adopt_shared_blocks(&mut self, blocks: &[u32], rows: usize) -> Result<()> {
+        if self.branch_open || self.len != 0 || !self.table.is_empty() {
+            bail!("adopt_shared_blocks requires an empty cache with no open branch");
+        }
+        if rows != blocks.len() * self.block_size {
+            bail!(
+                "adopt_shared_blocks: {rows} rows do not cover {} blocks of {} rows",
+                blocks.len(),
+                self.block_size
+            );
+        }
+        if rows > self.cap {
+            bail!("adopt_shared_blocks: {rows} rows exceed capacity {}", self.cap);
+        }
+        {
+            let mut pool = self.pool.borrow_mut();
+            for &b in blocks {
+                pool.share_block(b);
+                self.table.push(b);
+            }
+        }
+        self.len = rows;
+        // the adopted rows are new content for any bound session mirror
+        self.taint(0);
+        self.stats.adopted_rows += rows as u64;
+        Ok(())
+    }
 }
 
 impl Drop for PagedCache {
@@ -803,15 +1145,18 @@ mod tests {
 
     fn pool_invariant(p: &Rc<RefCell<PagePool>>, caches: &[&PagedCache]) {
         let pl = p.borrow();
-        let mapped: usize = caches.iter().map(|c| c.mapped_blocks()).sum();
         assert_eq!(
             pl.blocks(),
-            pl.free_blocks() + mapped,
-            "pool invariant broken: {} blocks != {} free + {} mapped",
+            pl.free_blocks() + pl.referenced_blocks(),
+            "pool invariant broken: {} blocks != {} free + {} referenced",
             pl.blocks(),
             pl.free_blocks(),
-            mapped
+            pl.referenced_blocks()
         );
+        // these tests don't share blocks, so every referenced block is
+        // mapped by exactly one table
+        let mapped: usize = caches.iter().map(|c| c.mapped_blocks()).sum();
+        assert_eq!(pl.referenced_blocks(), mapped, "unshared pools map 1:1");
     }
 
     #[test]
@@ -913,6 +1258,150 @@ mod tests {
         c.append_committed(&block(8, 5.0), &block(8, 5.0), 8, 4).unwrap();
         assert_eq!(p.borrow().blocks(), blocks_before);
         pool_invariant(&p, &[&b, &c]);
+    }
+
+    #[test]
+    fn adopted_blocks_are_shared_then_copied_on_write() {
+        let p = pool();
+        let mut a = mk(CacheStrategy::SegmentShare, &p);
+        a.append_committed(&block(8, 10.0), &block(8, 10.0), 8, 8).unwrap();
+        let run = a.committed_block_run(8).expect("8 rows over bs=4 are block-aligned");
+        assert_eq!(run.len(), 2);
+        assert!(a.committed_block_run(6).is_none(), "unaligned runs are not shareable");
+
+        // adopter maps the same physical blocks, refcounted once each
+        let mut b = PagedCache::new(DIMS, CAP, CacheStrategy::SegmentShare, false, p.clone());
+        b.adopt_shared_blocks(&run, 8).unwrap();
+        assert_eq!(b.len(), 8);
+        assert_eq!(row_value(&b, 3), 13.0, "adopter reads the donor's rows");
+        {
+            let pl = p.borrow();
+            assert_eq!(pl.ref_count(run[0]), 2);
+            assert_eq!(pl.referenced_blocks(), 2, "shared blocks count once");
+            assert_eq!(pl.blocks(), pl.free_blocks() + pl.referenced_blocks());
+        }
+
+        // appends past the shared run never touch it (no copy)
+        b.append_committed(&block(4, 80.0), &block(4, 80.0), 4, 2).unwrap();
+        assert_eq!(b.stats.cow_copies, 0);
+        assert_eq!(row_value(&a, 7), 17.0);
+
+        // a full-reorder commit rewrites b from row 0 — the divergent
+        // write must privatize the shared blocks, leaving a untouched
+        b.begin_branch().unwrap();
+        b.append_branch(&block(4, 90.0), &block(4, 90.0), 4, 2).unwrap();
+        let keep: Vec<usize> = (0..11).collect();
+        b.commit_path(&keep).unwrap(); // fast_reorder=false -> full reorder
+        assert!(b.stats.cow_copies >= 2, "divergent write must clone the shared blocks");
+        assert!(b.stats.cow_bytes > 0);
+        assert_eq!(b.len(), 11);
+        assert_eq!(row_value(&b, 3), 13.0, "cloned block preserved its contents");
+        assert_eq!(row_value(&b, 10), 90.0);
+        assert_eq!(row_value(&a, 3), 13.0, "donor rows must survive the divergence");
+        assert_eq!(a.committed_block_run(8).unwrap(), run, "donor still maps its blocks");
+        {
+            let pl = p.borrow();
+            assert_eq!(pl.ref_count(run[0]), 1, "only the donor references the old block");
+            assert_eq!(pl.blocks(), pl.free_blocks() + pl.referenced_blocks());
+        }
+        drop(b);
+        drop(a);
+        let pl = p.borrow();
+        assert_eq!(pl.free_blocks(), pl.blocks(), "all blocks return to the free list");
+    }
+
+    #[test]
+    fn prefix_index_shares_dedups_and_evicts() {
+        let pools = CachePools {
+            teacher: Rc::new(RefCell::new(PagePool::new(DIMS, 4))),
+            draft: Rc::new(RefCell::new(PagePool::new(DIMS, 4))),
+            prefix: Rc::new(RefCell::new(PrefixIndex::default())),
+        };
+        let mk2 = |pools: &CachePools| {
+            (
+                PagedCache::new(DIMS, CAP, CacheStrategy::SegmentShare, true,
+                                pools.teacher.clone()),
+                PagedCache::new(DIMS, CAP, CacheStrategy::SegmentShare, true,
+                                pools.draft.clone()),
+            )
+        };
+        let (mut t, mut d) = mk2(&pools);
+        t.append_committed(&block(8, 10.0), &block(8, 10.0), 8, 8).unwrap();
+        d.append_committed(&block(8, 20.0), &block(8, 20.0), 8, 8).unwrap();
+        let tokens: Vec<i32> = (0..8).collect();
+        let (tb, db) = (t.committed_block_run(8).unwrap(), d.committed_block_run(8).unwrap());
+        let feats = vec![vec![1.0; 4], vec![2.0; 4]];
+        pools.register_prefix(&tokens, &tb, &db, &feats);
+        assert_eq!(pools.prefix.borrow().entries(), 1);
+        // re-registering a covered run is a no-op
+        pools.register_prefix(&tokens, &tb, &db, &feats);
+        assert_eq!(pools.prefix.borrow().entries(), 1);
+        assert_eq!(pools.teacher.borrow().ref_count(tb[0]), 2, "table + index");
+
+        // the index owns its references: the run survives its donor
+        drop(t);
+        drop(d);
+        assert_eq!(pools.teacher.borrow().referenced_blocks(), 2);
+        assert!(pools.referenced_bytes() > 0);
+
+        // longest block-aligned match over the full prompt
+        let mut prompt = tokens.clone();
+        prompt.push(99);
+        let hit = pools.lookup_prefix(&prompt, prompt.len() - 1).unwrap();
+        assert_eq!(hit.rows, 8);
+        assert_eq!(hit.t_blocks, tb);
+        assert_eq!(hit.d_blocks, db);
+        assert_eq!(hit.feats, feats);
+        // divergence inside the second block still shares the first
+        let hit = pools.lookup_prefix(&[0, 1, 2, 3, 4, 99], 5).unwrap();
+        assert_eq!(hit.rows, 4);
+        assert_eq!(hit.t_blocks, &tb[..1]);
+        assert_eq!(hit.feats.len(), 1);
+        // a sub-block match shares nothing
+        assert!(pools.lookup_prefix(&[0, 1, 99], 2).is_none());
+        // the max_rows cap always leaves a tail row to prefill
+        let hit = pools.lookup_prefix(&tokens, tokens.len() - 1).unwrap();
+        assert_eq!(hit.rows, 4);
+
+        // an extending run replaces the shorter entry
+        let (mut t2, mut d2) = mk2(&pools);
+        t2.append_committed(&block(12, 30.0), &block(12, 30.0), 12, 12).unwrap();
+        d2.append_committed(&block(12, 40.0), &block(12, 40.0), 12, 12).unwrap();
+        let long: Vec<i32> = (0..12).collect();
+        let (tb2, db2) =
+            (t2.committed_block_run(12).unwrap(), d2.committed_block_run(12).unwrap());
+        pools.register_prefix(&long, &tb2, &db2, &[vec![0.0], vec![0.0], vec![0.0]]);
+        assert_eq!(pools.prefix.borrow().entries(), 1, "extension replaces the shorter run");
+        let hit = pools.lookup_prefix(&[0, 1, 2, 3, 4, 5, 6, 7, 8, 99], 9).unwrap();
+        assert_eq!(hit.rows, 8, "the shorter prefix still matches through the longer run");
+        drop(t2);
+        drop(d2);
+
+        // FIFO eviction past the cap releases the oldest run's blocks
+        for i in 0..PREFIX_INDEX_CAP {
+            let (mut t3, mut d3) = mk2(&pools);
+            t3.append_committed(&block(4, 50.0), &block(4, 50.0), 4, 4).unwrap();
+            d3.append_committed(&block(4, 60.0), &block(4, 60.0), 4, 4).unwrap();
+            let toks = vec![1000 + i as i32, -1, -2, -3];
+            pools.register_prefix(
+                &toks,
+                &t3.committed_block_run(4).unwrap(),
+                &d3.committed_block_run(4).unwrap(),
+                &[vec![0.0]],
+            );
+        }
+        assert_eq!(pools.prefix.borrow().entries(), PREFIX_INDEX_CAP);
+        assert!(pools.lookup_prefix(&long, 11).is_none(), "the oldest entry was evicted");
+        {
+            let pl = pools.teacher.borrow();
+            assert_eq!(pl.blocks(), pl.free_blocks() + pl.referenced_blocks());
+        }
+        pools.clear_prefix_index();
+        assert_eq!(pools.prefix.borrow().entries(), 0);
+        let pl = pools.teacher.borrow();
+        assert_eq!(pl.free_blocks(), pl.blocks(), "clearing releases every reference");
+        let pd = pools.draft.borrow();
+        assert_eq!(pd.free_blocks(), pd.blocks());
     }
 
     #[test]

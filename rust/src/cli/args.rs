@@ -17,12 +17,12 @@ pub struct Args {
 /// Flags that take a value (everything else starting with `--` is a switch).
 const VALUED: &[&str] = &[
     "mode", "budget", "depth", "topk", "cache-strategy", "cache-layout", "commit-mode",
-    "kv-sessions", "pipelining", "draft-window", "max-new", "workers", "batch",
+    "kv-sessions", "pipelining", "prefix-sharing", "draft-window", "max-new", "workers", "batch",
     "scheduling", "seed",
     "out-dir", "artifacts", "backend", "agree", "temperature", "trace-dir", "prompt-len",
     "turns", "conversations", "profile", "requests", "rate", "servers",
     "adaptive-occupancy", "slo-ms", "slo-action", "arrivals", "rate-hi", "switch-p",
-    "slots", "prompt-mean",
+    "slots", "prompt-mean", "shared-prefix",
 ];
 
 impl Args {
@@ -146,8 +146,12 @@ mod tests {
     fn space_separated_value_flags_are_valued_not_switches() {
         // regression: a VALUED omission silently turns `--flag value` into
         // a switch plus a stray positional
-        let a = parse("serve --pipelining off --slo-ms 40 --arrivals bursty --switch-p 0.3");
+        let a = parse(
+            "serve --pipelining off --prefix-sharing on --slo-ms 40 \
+             --arrivals bursty --switch-p 0.3",
+        );
         assert_eq!(a.get("pipelining"), Some("off"));
+        assert_eq!(a.get("prefix-sharing"), Some("on"));
         assert_eq!(a.get_f64("slo-ms").unwrap(), Some(40.0));
         assert_eq!(a.get("arrivals"), Some("bursty"));
         assert_eq!(a.get_f64("switch-p").unwrap(), Some(0.3));

@@ -11,7 +11,7 @@ use crate::metrics::{pair_turns, ThroughputReport};
 use crate::runtime::golden::{load_goldens, verify_golden};
 use crate::runtime::PjrtBackend;
 use crate::trace::merge_rank_files;
-use crate::workload::{ArrivalKind, Grammar, Profile, TraceSpec, WorkloadSpec};
+use crate::workload::{ArrivalKind, Grammar, Profile, PromptFamily, TraceSpec, WorkloadSpec};
 use anyhow::{bail, Context, Result};
 use std::path::PathBuf;
 
@@ -54,6 +54,12 @@ COMMON FLAGS
                           still in flight (begin/await half-ticks); off keeps the
                           depth-synchronous reference path — outputs are bit-identical
                           either way, this is a wall-clock A/B axis only
+  --prefix-sharing on|off copy-on-write prefix sharing (default off; requires
+                          --cache-layout paged): conversations whose prompt prefix
+                          matches a resident frozen block run adopt those KV blocks
+                          refcounted and skip prefill for the shared run; divergent
+                          writes privatize the touched block (copy-on-write);
+                          emitted tokens are bit-identical to sharing off
   --no-fast-reorder       disable the prefix-sharing fast reorder
   --unsafe-indexing       skip §3.2 invariant checks (ablation)
   --adaptive              adaptive tree-budget policy (E2 takeaway)
@@ -72,6 +78,10 @@ COMMON FLAGS
                           --rate-hi high state, --switch-p per-arrival flip chance)
   --slots B               trace-replay engine slots (serving batch width, default 4)
   --prompt-mean N         trace-replay mean prompt length (default 16)
+  --shared-prefix N       trace-replay shared-prefix prompt family: every request
+                          extends one common N-token system prompt with its own
+                          grammar continuation (--prompt-mean becomes the mean
+                          suffix length); the workload --prefix-sharing exploits
   --draft-window W        truncate drafter context (E4)
   --max-new N             tokens per turn
   --temperature T         0 = greedy (default)
@@ -87,11 +97,11 @@ COMMON FLAGS
 const RUN_FLAGS: &[&str] = &[
     "backend", "artifacts", "agree", "mode", "budget", "depth", "topk",
     "cache-strategy", "cache-layout", "commit-mode", "kv-sessions", "pipelining",
-    "draft-window", "max-new",
+    "prefix-sharing", "draft-window", "max-new",
     "temperature", "workers", "batch", "scheduling", "seed", "out-dir", "trace-dir",
     "prompt-len", "conversations", "profile", "turns", "requests", "rate", "servers",
     "adaptive-occupancy", "slo-ms", "slo-action", "arrivals", "rate-hi", "switch-p",
-    "slots", "prompt-mean",
+    "slots", "prompt-mean", "shared-prefix",
 ];
 const RUN_SWITCHES: &[&str] = &[
     "quick", "verbose", "no-fast-reorder", "unsafe-indexing", "attention-stats",
@@ -181,6 +191,13 @@ pub fn run_config(args: &Args) -> Result<RunConfig> {
             "on" => true,
             "off" => false,
             other => bail!("unknown --pipelining value '{other}' (expected on|off)"),
+        };
+    }
+    if let Some(ps) = args.get("prefix-sharing") {
+        cfg.prefix_sharing = match ps {
+            "on" => true,
+            "off" => false,
+            other => bail!("unknown --prefix-sharing value '{other}' (expected on|off)"),
         };
     }
     cfg.fast_reorder = !args.has("no-fast-reorder");
@@ -377,9 +394,14 @@ fn cmd_trace_replay(args: &Args) -> Result<()> {
         },
         other => bail!("unknown --arrivals value '{other}' (expected poisson|bursty)"),
     };
+    let family = match args.get_usize("shared-prefix")? {
+        Some(prefix_len) => PromptFamily::SharedPrefix { prefix_len },
+        None => PromptFamily::Mixed,
+    };
     let spec = TraceSpec {
         requests: args.get_usize("requests")?.unwrap_or(48),
         kind,
+        family,
         prompt_mean: args.get_usize("prompt-mean")?.unwrap_or(16),
         max_new: args.get_usize("max-new")?.unwrap_or(6),
         seed: run.seed,
@@ -515,6 +537,27 @@ mod tests {
     }
 
     #[test]
+    fn prefix_sharing_flag_parses_and_requires_paged_layout() {
+        assert!(
+            !run_config(&parse("serve")).unwrap().prefix_sharing,
+            "prefix sharing defaults off"
+        );
+        let c = run_config(&parse("serve --cache-layout paged --prefix-sharing on")).unwrap();
+        assert!(c.prefix_sharing);
+        assert!(
+            !run_config(&parse("serve --cache-layout paged --prefix-sharing off"))
+                .unwrap()
+                .prefix_sharing
+        );
+        let err = run_config(&parse("serve --prefix-sharing on")).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("--prefix-sharing"),
+            "error must name the flag: {err:#}"
+        );
+        assert!(run_config(&parse("serve --cache-layout paged --prefix-sharing maybe")).is_err());
+    }
+
+    #[test]
     fn pipelining_flag_parses() {
         assert!(run_config(&parse("serve")).unwrap().pipelining, "pipelining default on");
         assert!(!run_config(&parse("serve --pipelining off")).unwrap().pipelining);
@@ -580,6 +623,11 @@ mod tests {
              --slo-ms 40 --slo-action shed --seed 7",
         );
         dispatch(&a).unwrap();
+        let a = parse(
+            "trace-replay --requests 6 --rate 50 --slots 2 --max-new 4 \
+             --shared-prefix 24 --cache-layout paged --prefix-sharing on --seed 7",
+        );
+        dispatch(&a).unwrap();
     }
 
     #[test]
@@ -593,6 +641,7 @@ mod tests {
             ("trace-replay --arrivals bursty --rate 50 --rate-hi 10", "--rate-hi"),
             ("trace-replay --arrivals bursty --switch-p 0", "--switch-p"),
             ("trace-replay --slo-action shed", "--slo-action"),
+            ("trace-replay --shared-prefix 4", "--shared-prefix"),
         ] {
             let err = dispatch(&parse(cli)).unwrap_err();
             assert!(

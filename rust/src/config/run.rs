@@ -180,6 +180,15 @@ pub struct RunConfig {
     /// way (acceptance and commits never cross requests), so this is a
     /// pure wall-clock A/B axis.
     pub pipelining: bool,
+    /// Copy-on-write prefix sharing (`--prefix-sharing`): freeze each
+    /// conversation's committed, block-aligned prompt prefix into a
+    /// per-worker [`crate::cache::PrefixIndex`] so a later admission whose
+    /// prompt starts with a resident run adopts those blocks directly —
+    /// refcounted, copy-on-write on divergence — and skips prefill for the
+    /// shared run entirely. Requires the paged cache layout (flat buffers
+    /// have no block table to share). Off by default; the off path is
+    /// bit-identical to builds without the feature.
+    pub prefix_sharing: bool,
     /// §3.2 structural invariant checks before every launch.
     pub check_invariants: bool,
     /// Adaptive tree-budget policy (paper E2 takeaway / future work):
@@ -219,6 +228,7 @@ impl Default for RunConfig {
             fast_reorder: true,
             kv_sessions: true,
             pipelining: true,
+            prefix_sharing: false,
             check_invariants: true,
             adaptive_budget: false,
             adaptive_occupancy: false,
@@ -247,6 +257,13 @@ impl RunConfig {
         if !(0.0..=2.0).contains(&self.temperature) {
             bail!("temperature out of range: {}", self.temperature);
         }
+        if self.prefix_sharing && self.cache_layout != CacheLayout::Paged {
+            bail!(
+                "config contract: --prefix-sharing requires --cache-layout paged \
+                 (sharing maps pool blocks through block tables; flat buffers \
+                 have no blocks to share)"
+            );
+        }
         if self.adaptive_occupancy && !self.adaptive_budget {
             bail!(
                 "config contract: --adaptive-occupancy requires --adaptive \
@@ -270,6 +287,7 @@ impl RunConfig {
             .push("fast_reorder", self.fast_reorder)
             .push("kv_sessions", self.kv_sessions)
             .push("pipelining", self.pipelining)
+            .push("prefix_sharing", self.prefix_sharing)
             .push("check_invariants", self.check_invariants)
             .push("adaptive_budget", self.adaptive_budget)
             .push("adaptive_occupancy", self.adaptive_occupancy)
@@ -342,6 +360,18 @@ mod tests {
         c.adaptive_budget = true;
         assert!(c.validate().is_ok());
         assert!(!RunConfig::default().adaptive_occupancy, "occupancy must default off");
+    }
+
+    #[test]
+    fn prefix_sharing_requires_the_paged_layout() {
+        let mut c = RunConfig::default();
+        c.prefix_sharing = true;
+        let err = c.validate().unwrap_err().to_string();
+        assert!(err.contains("--prefix-sharing"), "error must name the flag: {err}");
+        c.cache_layout = CacheLayout::Paged;
+        assert!(c.validate().is_ok());
+        assert!(!RunConfig::default().prefix_sharing, "sharing must default off");
+        assert!(RunConfig::default().to_json().get("prefix_sharing").is_some());
     }
 
     #[test]

@@ -628,6 +628,13 @@ pub struct SchedulerStats {
     pub max_wait_ticks: u64,
     /// Requests shed pre-admission by their [`SloAction::Shed`] policy.
     pub shed: u64,
+    /// Prefill-phase teacher calls summed over retired turns (each turn
+    /// contributes `teacher_calls - rounds`, since every decode round is
+    /// exactly one teacher call). Under `--prefix-sharing`, admissions
+    /// that adopt a resident frozen run skip the shared rows' prefill
+    /// chunks, so this drops relative to sharing-off on the same trace —
+    /// the shared-prefix bench gates on it per admitted conversation.
+    pub prefill_teacher_calls: u64,
 }
 
 /// Slot-based continuous-batching scheduler (see the module docs for the
@@ -950,6 +957,7 @@ impl ContinuousScheduler {
             );
             let out = engines[si].take_output()?;
             self.stats.retired += 1;
+            self.stats.prefill_teacher_calls += out.teacher_calls.saturating_sub(out.rounds);
             let comp = Completion {
                 id,
                 slot: si,

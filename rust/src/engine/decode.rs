@@ -79,7 +79,7 @@ use crate::backend::{
     argmax, log_softmax_at, topk, KvSession, KvView, ModelBackend, ModuleRole, PlanError,
     SessionTicket, StepArgs,
 };
-use crate::cache::{CachePools, KvGuard, KvStore, ManagedCache, PagedCache};
+use crate::cache::{CachePools, KvGuard, KvStore, ManagedCache, PagedCache, PrefixMatch};
 use crate::config::contract::NEG_INF;
 use crate::config::{CacheLayout, CacheStrategy, CommitMode, Contract, Dims, ExecMode, RunConfig};
 use crate::engine::output::{attention_distance_buckets, GenOut};
@@ -183,6 +183,8 @@ pub struct ParkedConversation {
     adaptive: Option<AdaptiveBudget>,
     attn_hist: Histogram,
     d_cur: usize,
+    history: Vec<i32>,
+    block_feats: Vec<Vec<f32>>,
 }
 
 impl ParkedConversation {
@@ -243,6 +245,16 @@ pub struct Engine {
     t_session: Option<KvSession>,
     /// Backend-resident draft KV session bound to this slot.
     d_session: Option<KvSession>,
+    /// Committed token at every logical row (prefix-sharing bookkeeping:
+    /// the prefix index is keyed on this exact sequence). Maintained only
+    /// while [`Engine::sharing_active`]; empty otherwise.
+    history: Vec<i32>,
+    /// Teacher feature at every committed block-end row
+    /// (`block_feats[j]` = feature of row `(j + 1) * block_size - 1`) —
+    /// the chain feature a partial prefill resumes from after adopting
+    /// `j + 1` shared blocks. Maintained only while
+    /// [`Engine::sharing_active`].
+    block_feats: Vec<Vec<f32>>,
     /// The bound sessions mirror a *previous* conversation's cache (set
     /// by reset/park/resume/config changes): the next prefill re-syncs
     /// them wholesale before any step ships a delta ticket.
@@ -391,9 +403,20 @@ impl Engine {
             adaptive,
             t_session: None,
             d_session: None,
+            history: Vec::new(),
+            block_feats: Vec::new(),
             sessions_stale: true,
             inflight: None,
         }
+    }
+
+    /// Whether this engine tracks prefix-sharing state (token history,
+    /// block-end features, index registration/adoption): sharing
+    /// configured on, a speculative run, and no drafter-window truncation
+    /// (a windowed drafter's cache rows depend on the window, so they are
+    /// not safely shareable across configs).
+    fn sharing_active(&self) -> bool {
+        self.cfg.prefix_sharing && self.use_draft && self.cfg.draft_window.is_none()
     }
 
     /// Session ticket for the next step through `cache`: the bound
@@ -582,6 +605,8 @@ impl Engine {
         self.pending_logits.clear();
         self.feat_last.clear();
         self.uncharted.clear();
+        self.history.clear();
+        self.block_feats.clear();
         self.attn_hist = attention_distance_buckets();
         self.rng = SplitMix64::new(self.cfg.seed ^ 0xE151);
         self.timers = StageTimer::new(self.cfg.instrument);
@@ -718,6 +743,8 @@ impl Engine {
             adaptive: self.adaptive.clone(),
             attn_hist: self.attn_hist.clone(),
             d_cur: self.d_cur,
+            history: std::mem::take(&mut self.history),
+            block_feats: std::mem::take(&mut self.block_feats),
         };
         self.reset();
         Ok(parked)
@@ -744,6 +771,8 @@ impl Engine {
             adaptive,
             attn_hist,
             d_cur,
+            history,
+            block_feats,
         } = parked;
         self.cfg = cfg;
         self.t_cache = t_cache;
@@ -755,6 +784,8 @@ impl Engine {
         self.adaptive = adaptive;
         self.attn_hist = attn_hist;
         self.d_cur = d_cur;
+        self.history = history;
+        self.block_feats = block_feats;
         self.timers = StageTimer::new(self.cfg.instrument);
         // the restored caches are a different conversation than the
         // bound session mirrors — resync at the next prefill
@@ -772,6 +803,20 @@ impl Engine {
     /// teacher features. Leaves `pending_logits` predicting the next
     /// token. Works both for a fresh conversation and for appending a
     /// later chat turn to existing context.
+    ///
+    /// Under `--prefix-sharing` a fresh conversation first consults the
+    /// worker's prefix index: when a resident frozen run matches a
+    /// block-aligned prefix of `prompt`, both caches adopt those blocks
+    /// directly (refcounted, copy-on-write on divergence) and the chunk
+    /// loop runs only over the unmatched tail — prefill for the shared
+    /// run is skipped entirely, dropping its teacher calls. Teacher-step
+    /// outputs are chunk-partition-invariant (the chain mask opens
+    /// `[0, t+i]` per row regardless of how rows were grouped into
+    /// calls), so the partial prefill is bit-identical to a full one.
+    /// At the end, the conversation's own committed block-aligned prefix
+    /// is registered back into the index so later admissions (and its
+    /// own park/resume or multi-turn continuations on a different slot)
+    /// can share it.
     fn prefill(
         &mut self,
         backend: &mut dyn ModelBackend,
@@ -790,7 +835,26 @@ impl Engine {
             self.feat_last.resize(f, 0.0);
         }
         let t0 = Instant::now();
-        for chunk in prompt.chunks(chunk_max) {
+        let share_bs = if self.sharing_active() { self.t_cache.block_size() } else { None };
+        let mut rest = prompt;
+        if share_bs.is_some() && self.t_cache.is_empty() {
+            if let Some(hit) = self.pools.lookup_prefix(prompt, prompt.len() - 1) {
+                let PrefixMatch { rows, t_blocks, d_blocks, feats } = hit;
+                self.t_cache.adopt_shared_blocks(&t_blocks, rows)?;
+                self.d_cache.adopt_shared_blocks(&d_blocks, rows)?;
+                self.history.clear();
+                self.history.extend_from_slice(&prompt[..rows]);
+                self.block_feats = feats;
+                // the boundary feature: feat of row `rows - 1`, which the
+                // first tail token chains from (EAGLE input contract)
+                copy_into(
+                    &mut self.feat_last,
+                    self.block_feats.last().expect("a match covers >= 1 block"),
+                );
+                rest = &prompt[rows..];
+            }
+        }
+        for chunk in rest.chunks(chunk_max) {
             let n = chunk.len();
             let s = self.contract.teacher_variant(n)?;
             let t = self.t_cache.len();
@@ -829,11 +893,39 @@ impl Engine {
                     }
                 }
             }
+            if let Some(bs) = share_bs {
+                for (i, tok) in chunk.iter().enumerate() {
+                    self.history.push(*tok);
+                    if (t + i + 1) % bs == 0 {
+                        self.block_feats.push(self.t_scratch.feat_row(i).to_vec());
+                    }
+                }
+            }
             copy_into(&mut self.feat_last, self.t_scratch.feat_row(n - 1));
             copy_into(&mut self.pending_logits, self.t_scratch.logits_row(n - 1));
         }
         if self.use_draft {
             self.drain_uncharted(backend, stats)?;
+        }
+        if let Some(bs) = share_bs {
+            // Freeze this conversation's committed block-aligned prefix
+            // into the worker index. The history-length check skips runs
+            // whose early rows were committed without sharing bookkeeping
+            // (e.g. a baseline turn on the same engine).
+            let run = self.block_feats.len() * bs;
+            if run > 0 && self.history.len() == self.t_cache.len() {
+                if let (Some(tb), Some(db)) = (
+                    self.t_cache.committed_block_run(run),
+                    self.d_cache.committed_block_run(run),
+                ) {
+                    self.pools.register_prefix(
+                        &self.history[..run],
+                        &tb,
+                        &db,
+                        &self.block_feats[..run / bs],
+                    );
+                }
+            }
         }
         self.timers.add("prefill", t0.elapsed().as_secs_f64());
         Ok(())
@@ -1338,11 +1430,28 @@ impl Engine {
             }
         }
         // Features of newly committed tokens feed the next chain refresh.
+        // Prefix-sharing bookkeeping rides along: committed row `t_len`
+        // holds r0 (its own teacher feature is scratch row 0), and row
+        // `t_len + 1 + i` holds the i-th accepted path token (feature at
+        // its tree slot); block-end features feed later partial prefills.
+        let share_bs = if self.sharing_active() { self.t_cache.block_size() } else { None };
+        if let Some(bs) = share_bs {
+            self.history.push(r0);
+            if (t_len + 1) % bs == 0 {
+                self.block_feats.push(self.t_scratch.feat_row(0).to_vec());
+            }
+        }
         fl.out_tokens.push(r0);
         let mut prev_slot = 0usize;
-        for &slot in &acc.path {
+        for (i, &slot) in acc.path.iter().enumerate() {
             let tok = tree.slots()[slot].token;
             self.uncharted.push(tok, self.t_scratch.feat_row(prev_slot));
+            if let Some(bs) = share_bs {
+                self.history.push(tok);
+                if (t_len + 2 + i) % bs == 0 {
+                    self.block_feats.push(self.t_scratch.feat_row(slot).to_vec());
+                }
+            }
             fl.out_tokens.push(tok);
             prev_slot = slot;
         }

@@ -7,5 +7,5 @@ pub mod prompts;
 pub mod trace;
 
 pub use grammar::{Grammar, Profile};
-pub use prompts::{ConversationSpec, WorkloadSpec};
-pub use trace::{ArrivalKind, TraceRequest, TraceSpec};
+pub use prompts::{ConversationSpec, SharedPrefixSpec, WorkloadSpec};
+pub use trace::{ArrivalKind, PromptFamily, TraceRequest, TraceSpec};

@@ -133,6 +133,69 @@ impl ConversationSpec {
     }
 }
 
+/// Shared-prefix prompt family — the production traffic shape prefix
+/// sharing targets: every conversation's prompt is one common
+/// grammar-sampled "system prompt" prefix followed by a per-conversation
+/// grammar continuation suffix, so admissions after the first share a
+/// long block-aligned run of identical KV rows (`--prefix-sharing`
+/// adopts it; the sharing bench and `bench_gate` rule replay exactly
+/// this family).
+#[derive(Clone, Debug)]
+pub struct SharedPrefixSpec {
+    /// Number of conversations drawing on the common prefix.
+    pub conversations: usize,
+    /// Length of the common system-prompt prefix (tokens, incl. BOS).
+    pub prefix_len: usize,
+    /// Mean per-conversation suffix length; actual lengths jitter ±~40%
+    /// like [`WorkloadSpec`].
+    pub suffix_mean: usize,
+    /// Grammar family of the prefix and every suffix.
+    pub profile: Profile,
+    /// Sampling seed (prefix contents + every suffix).
+    pub seed: u64,
+}
+
+impl Default for SharedPrefixSpec {
+    fn default() -> Self {
+        // Prefix sized past one 128-token prefill chunk so adopting it
+        // provably drops teacher calls; suffixes stay short so B
+        // conversations + generation fit the C=1024 cache.
+        Self { conversations: 8, prefix_len: 160, suffix_mean: 24, profile: Profile::Chat, seed: 0 }
+    }
+}
+
+impl SharedPrefixSpec {
+    /// The common system-prompt prefix (`[BOS, topic, ...]`),
+    /// deterministic in the seed.
+    pub fn prefix(&self) -> Vec<i32> {
+        assert!(self.prefix_len >= 2, "prefix needs BOS + topic");
+        Grammar::new(self.profile).sample_sequence(self.prefix_len, self.seed ^ 0x51F1, None)
+    }
+
+    /// Materialize every conversation's full prompt (common prefix +
+    /// per-conversation suffix). Suffixes are grammar-valid
+    /// continuations of the prefix, so the whole prompt stays
+    /// in-distribution for the trained checkpoint.
+    pub fn prompts(&self) -> Vec<Vec<i32>> {
+        let prefix = self.prefix();
+        let g = Grammar::new(self.profile);
+        let topic = prefix[1];
+        let (a, b) = (prefix[prefix.len() - 2], prefix[prefix.len() - 1]);
+        let mut rng = SplitMix64::new(self.seed ^ 0x5F5F);
+        (0..self.conversations)
+            .map(|i| {
+                let lo = ((self.suffix_mean as f64 * 0.6) as u64).max(2);
+                let hi = ((self.suffix_mean as f64 * 1.5) as u64).max(lo + 1);
+                let n = rng.range(lo, hi) as usize;
+                let suffix = g.continue_from(a, b, topic, n, self.seed ^ (0x5FF1 + i as u64));
+                let mut p = prefix.clone();
+                p.extend_from_slice(&suffix);
+                p
+            })
+            .collect()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -168,6 +231,37 @@ mod tests {
         assert!((mean - w.prompt_mean as f64).abs() < w.prompt_mean as f64 * 0.25,
                 "mean {mean}");
         assert!(lens.iter().any(|l| *l != lens[0]), "lengths must vary");
+    }
+
+    #[test]
+    fn shared_prefix_family_shares_exactly_the_prefix() {
+        let spec = SharedPrefixSpec::default();
+        let prompts = spec.prompts();
+        assert_eq!(prompts.len(), spec.conversations);
+        let prefix = spec.prefix();
+        assert_eq!(prefix.len(), spec.prefix_len);
+        for p in &prompts {
+            assert_eq!(&p[..spec.prefix_len], &prefix[..], "every prompt starts with the prefix");
+            assert!(p.len() > spec.prefix_len, "every prompt carries its own suffix");
+        }
+        // suffixes diverge across conversations (not all identical)
+        assert!(
+            prompts.iter().any(|p| p[spec.prefix_len..] != prompts[0][spec.prefix_len..]),
+            "per-conversation suffixes must differ"
+        );
+        // deterministic in the seed
+        assert_eq!(SharedPrefixSpec::default().prompts(), prompts);
+        // suffixes are grammar-valid continuations
+        let g = Grammar::new(spec.profile);
+        let tid = Grammar::topic_of(prefix[1]);
+        for p in &prompts {
+            let (mut a, mut b) = (p[spec.prefix_len - 2], p[spec.prefix_len - 1]);
+            for &t in &p[spec.prefix_len..] {
+                assert!(g.dist(a, b, tid).0.contains(&t));
+                a = b;
+                b = t;
+            }
+        }
     }
 
     #[test]

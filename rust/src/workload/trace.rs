@@ -34,6 +34,22 @@ pub enum ArrivalKind {
     },
 }
 
+/// Which prompt family a trace synthesizes its requests from.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PromptFamily {
+    /// Alternate HumanEval-style code and MT-Bench-style chat grammar
+    /// prompts (the paper's §5.1 workload mix).
+    Mixed,
+    /// Every request extends one common grammar-sampled system-prompt
+    /// prefix of the given length with a per-request continuation suffix
+    /// (the [`super::prompts::SharedPrefixSpec`] shape — what
+    /// `--prefix-sharing` exploits; `--shared-prefix N` selects it).
+    SharedPrefix {
+        /// Common-prefix length in tokens (incl. BOS).
+        prefix_len: usize,
+    },
+}
+
 /// A seeded arrival-trace specification (see the module docs).
 #[derive(Clone, Debug)]
 pub struct TraceSpec {
@@ -41,8 +57,12 @@ pub struct TraceSpec {
     pub requests: usize,
     /// Arrival-process shape and rate(s).
     pub kind: ArrivalKind,
+    /// Prompt synthesis family (mixed grammars, or shared-prefix).
+    pub family: PromptFamily,
     /// Mean prompt length in tokens (lengths jitter ±~40% like
-    /// [`super::prompts::WorkloadSpec`]).
+    /// [`super::prompts::WorkloadSpec`]); under
+    /// [`PromptFamily::SharedPrefix`] this is the mean *suffix* length
+    /// past the common prefix.
     pub prompt_mean: usize,
     /// Output-token deadline ceiling; per-request deadlines jitter in
     /// `[max(1, max_new/2), max_new]`.
@@ -57,6 +77,7 @@ impl TraceSpec {
         Self {
             requests: 24,
             kind: ArrivalKind::Poisson { rate_rps: 40.0 },
+            family: PromptFamily::Mixed,
             prompt_mean: 16,
             max_new: 6,
             seed,
@@ -68,6 +89,7 @@ impl TraceSpec {
         Self {
             requests: 24,
             kind: ArrivalKind::Bursty { rate_lo_rps: 10.0, rate_hi_rps: 120.0, switch_p: 0.25 },
+            family: PromptFamily::Mixed,
             prompt_mean: 16,
             max_new: 6,
             seed,
@@ -85,6 +107,14 @@ impl TraceSpec {
         }
         if self.max_new == 0 {
             bail!("config contract: --max-new must be >= 1, got 0");
+        }
+        if let PromptFamily::SharedPrefix { prefix_len } = self.family {
+            if prefix_len < 8 {
+                bail!(
+                    "config contract: --shared-prefix must be >= 8 tokens \
+                     (shorter shares less than one KV block), got {prefix_len}"
+                );
+            }
         }
         match self.kind {
             ArrivalKind::Poisson { rate_rps } => {
@@ -128,6 +158,13 @@ impl TraceSpec {
         let mut now_ms = 0.0f64;
         // bursty state: false = calm, true = burst
         let mut burst = false;
+        // shared-prefix family: the common system prompt, sampled once
+        let prefix = match self.family {
+            PromptFamily::Mixed => None,
+            PromptFamily::SharedPrefix { prefix_len } => Some(
+                Grammar::new(Profile::Chat).sample_sequence(prefix_len, self.seed ^ 0x51F1, None),
+            ),
+        };
         for i in 0..self.requests {
             let rate = match self.kind {
                 ArrivalKind::Poisson { rate_rps } => rate_rps,
@@ -145,13 +182,32 @@ impl TraceSpec {
             // exponential inter-arrival, in virtual milliseconds
             let gap_ms = -(1.0 - rng.f64_unit()).ln() / rate * 1000.0;
             now_ms += gap_ms;
-            // mixed prompt set: alternate HumanEval-style code and
-            // MT-Bench-style chat grammars
-            let profile = if i % 2 == 0 { Profile::Code } else { Profile::Chat };
             let lo = ((self.prompt_mean as f64 * 0.6) as u64).max(4);
             let hi = ((self.prompt_mean as f64 * 1.5) as u64).max(lo + 1);
             let len = rng.range(lo, hi) as usize;
-            let prompt = Grammar::new(profile).sample_sequence(len, rng.next_u64(), None);
+            let (profile, prompt) = match &prefix {
+                // mixed prompt set: alternate HumanEval-style code and
+                // MT-Bench-style chat grammars
+                None => {
+                    let profile = if i % 2 == 0 { Profile::Code } else { Profile::Chat };
+                    (profile, Grammar::new(profile).sample_sequence(len, rng.next_u64(), None))
+                }
+                // shared-prefix set: the common prefix plus a grammar
+                // continuation suffix of the jittered length
+                Some(pre) => {
+                    let g = Grammar::new(Profile::Chat);
+                    let suffix = g.continue_from(
+                        pre[pre.len() - 2],
+                        pre[pre.len() - 1],
+                        pre[1],
+                        len,
+                        rng.next_u64(),
+                    );
+                    let mut p = pre.clone();
+                    p.extend_from_slice(&suffix);
+                    (Profile::Chat, p)
+                }
+            };
             let max_new =
                 rng.range((self.max_new as u64 / 2).max(1), self.max_new as u64 + 1) as usize;
             out.push(TraceRequest { id: i as u64, arrival_ms: now_ms, prompt, max_new, profile });
@@ -251,6 +307,29 @@ mod tests {
         let mut s = TraceSpec::smoke_poisson(0);
         s.max_new = 0;
         assert!(s.validate().unwrap_err().to_string().contains("--max-new"));
+    }
+
+    #[test]
+    fn shared_prefix_traces_share_exactly_the_prefix() {
+        let mut s = TraceSpec::smoke_poisson(5);
+        s.family = PromptFamily::SharedPrefix { prefix_len: 32 };
+        let t = s.generate().unwrap();
+        let prefix = t[0].prompt[..32].to_vec();
+        for r in &t {
+            assert_eq!(&r.prompt[..32], &prefix[..], "every request starts with the prefix");
+            assert!(r.prompt.len() > 32, "every request carries its own suffix");
+            assert_eq!(r.profile, Profile::Chat);
+        }
+        assert!(
+            t.iter().any(|r| r.prompt[32..] != t[0].prompt[32..]),
+            "per-request suffixes must differ"
+        );
+        // deterministic in the seed, like the mixed family
+        let u = s.generate().unwrap();
+        assert!(t.iter().zip(&u).all(|(a, b)| a.prompt == b.prompt));
+
+        s.family = PromptFamily::SharedPrefix { prefix_len: 4 };
+        assert!(s.validate().unwrap_err().to_string().contains("--shared-prefix"));
     }
 
     #[test]

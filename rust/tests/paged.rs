@@ -163,14 +163,18 @@ impl Twin {
 
 fn pool_invariant(pool: &Rc<RefCell<PagePool>>, caches: &[&PagedCache]) {
     let p = pool.borrow();
-    let mapped: usize = caches.iter().map(|c| c.mapped_blocks()).sum();
+    // refcounted form: shared blocks count once however many tables map
+    // them; without sharing, referenced == Σ mapped (checked both ways)
     assert_eq!(
         p.blocks(),
-        p.free_blocks() + mapped,
-        "free-list invariant broken: {} blocks != {} free + {mapped} mapped",
+        p.free_blocks() + p.referenced_blocks(),
+        "free-list invariant broken: {} blocks != {} free + {} referenced",
         p.blocks(),
-        p.free_blocks()
+        p.free_blocks(),
+        p.referenced_blocks()
     );
+    let mapped: usize = caches.iter().map(|c| c.mapped_blocks()).sum();
+    assert_eq!(p.referenced_blocks(), mapped, "unshared caches must map blocks 1:1");
 }
 
 #[test]

@@ -1,0 +1,361 @@
+//! Copy-on-write prefix sharing: the acceptance properties of
+//! `--prefix-sharing` (cache adoption through the worker prefix index).
+//!
+//! 1. **Refcounted free-list invariant** — with a donor's blocks adopted
+//!    by a second conversation, `pool.blocks == free + referenced` holds
+//!    after every random operation (shared blocks count once), the donor
+//!    is never corrupted by the adopter's writes (copy-on-write), and
+//!    dropping everything returns every block.
+//! 2. **Bit-identity** — sharing-on emits exactly the tokens of
+//!    sharing-off (and of the flat layout) for every conversation of a
+//!    shared-prefix workload, across strategies and the full-reorder
+//!    ablation, while spending strictly fewer prefill teacher calls from
+//!    the second admission on.
+//! 3. **Divergence at the boundary under churn** — the full-reorder
+//!    ablation writes into adopted blocks on its first commit; the copy
+//!    must privatize them without touching the frozen run, while
+//!    park/resume recycles the slot between turns.
+//! 4. **Scheduler admission** — on a `B = 4` slot group, sharing-on
+//!    strictly reduces both `prefill_teacher_calls` and the referenced
+//!    KV bytes of the parked residents, with bit-identical tokens.
+
+use eagle_pangu::backend::sim::SimBackend;
+use eagle_pangu::backend::ModelBackend;
+use eagle_pangu::cache::{CachePools, KvStore, PagePool, PagedCache};
+use eagle_pangu::config::{CacheLayout, CacheStrategy, CommitMode, Dims, RunConfig};
+use eagle_pangu::coordinator::{Completion, ContinuousScheduler, Disposition, SlotRequest};
+use eagle_pangu::engine::Engine;
+use eagle_pangu::util::prop;
+use eagle_pangu::workload::SharedPrefixSpec;
+use std::cell::RefCell;
+use std::rc::Rc;
+
+const DIMS: Dims = Dims { layers: 2, d_model: 8, heads: 2, d_head: 2 };
+const CAP: usize = 48;
+const BS: usize = 4;
+
+/// `[L, s, H, Dh]` step block whose row r carries `base + r` everywhere.
+fn block(s: usize, base: f32) -> Vec<f32> {
+    let rs = DIMS.heads * DIMS.d_head;
+    let mut out = vec![0.0; DIMS.layers * s * rs];
+    for l in 0..DIMS.layers {
+        for r in 0..s {
+            for e in 0..rs {
+                out[(l * s + r) * rs + e] = base + r as f32;
+            }
+        }
+    }
+    out
+}
+
+/// Apply one random cache operation, ignoring contract errors (the
+/// invariant must hold whether or not the op was legal).
+fn random_op(g: &mut prop::Gen, c: &mut PagedCache, val: &mut f32) {
+    *val += 3.0;
+    let v = *val;
+    match g.usize_in(0, 7) {
+        0 => {
+            let n = g.usize_in(1, 7);
+            let _ = c.append_committed(&block(8, v), &block(8, v), 8, n);
+        }
+        1 => {
+            let _ = c.begin_branch();
+        }
+        2 => {
+            let n = g.usize_in(1, 9);
+            let _ = c.append_branch(&block(16, v), &block(16, v), 16, n);
+        }
+        3 => c.rollback(),
+        4 => {
+            let take = g.usize_in(0, c.branch_rows() + 1);
+            let _ = c.commit_length(take);
+        }
+        5 => {
+            let rows = c.branch_rows();
+            let mut tail = Vec::new();
+            for i in 0..rows {
+                if g.bool_p(0.5) {
+                    tail.push(i);
+                }
+            }
+            let _ = c.commit_path_tail(&tail);
+        }
+        _ => {
+            let view = c.len() + c.branch_rows();
+            if view == 0 {
+                return;
+            }
+            // forward keep or a reversing full reorder — the reorder
+            // scatters from row 0, writing into any adopted blocks
+            let path: Vec<usize> = if g.bool_p(0.5) {
+                (0..view).collect()
+            } else {
+                (0..view).rev().collect()
+            };
+            let _ = c.commit_path(&path);
+        }
+    }
+}
+
+fn refcount_invariant(pool: &Rc<RefCell<PagePool>>) {
+    let p = pool.borrow();
+    assert_eq!(
+        p.blocks(),
+        p.free_blocks() + p.referenced_blocks(),
+        "refcounted free-list invariant broken: {} blocks != {} free + {} referenced",
+        p.blocks(),
+        p.free_blocks(),
+        p.referenced_blocks()
+    );
+}
+
+#[test]
+fn property_refcounted_invariant_survives_shared_random_ops() {
+    prop::for_cases(40, 0x51F1_D0, |g| {
+        let pool = Rc::new(RefCell::new(PagePool::new(DIMS, BS)));
+        // donor commits a block-aligned run and stays frozen
+        let mut donor =
+            PagedCache::new(DIMS, CAP, CacheStrategy::SegmentShare, true, pool.clone());
+        let nblocks = g.usize_in(1, 4);
+        donor
+            .append_committed(&block(16, 1.0), &block(16, 1.0), 16, nblocks * BS)
+            .unwrap();
+        let run = donor.committed_block_run(nblocks * BS).unwrap();
+        let donor_sum = donor.committed_checksum();
+
+        // adopter maps the same blocks, then random ops diverge it
+        let strategy = *g.choose(&[CacheStrategy::SegmentShare, CacheStrategy::DeepCopy]);
+        let fast = g.bool_p(0.5);
+        let mut adopter = PagedCache::new(DIMS, CAP, strategy, fast, pool.clone());
+        adopter.adopt_shared_blocks(&run, nblocks * BS).unwrap();
+        assert_eq!(pool.borrow().ref_count(run[0]), 2);
+        refcount_invariant(&pool);
+
+        let mut val = 100.0f32;
+        for _ in 0..g.usize_in(3, 25) {
+            random_op(g, &mut adopter, &mut val);
+            refcount_invariant(&pool);
+            assert_eq!(
+                donor.committed_checksum(),
+                donor_sum,
+                "adopter writes leaked into the donor's frozen blocks"
+            );
+        }
+        drop(adopter);
+        refcount_invariant(&pool);
+        assert_eq!(donor.committed_checksum(), donor_sum);
+        drop(donor);
+        let p = pool.borrow();
+        assert_eq!(p.free_blocks(), p.blocks(), "a dropped pair must free every block");
+    });
+}
+
+// ---------------------------------------------------------------------
+// Engine-level: prefill skip + bit-identity
+// ---------------------------------------------------------------------
+
+fn cfg_with(layout: CacheLayout, strategy: CacheStrategy, sharing: bool) -> RunConfig {
+    let mut cfg = RunConfig::default();
+    cfg.cache_layout = layout;
+    cfg.cache_strategy = strategy;
+    cfg.prefix_sharing = sharing;
+    cfg
+}
+
+#[test]
+fn sharing_skips_shared_prefill_with_bit_identical_tokens() {
+    let spec = SharedPrefixSpec::default();
+    let prompts = spec.prompts();
+    for strategy in [CacheStrategy::SegmentShare, CacheStrategy::DeepCopy] {
+        // flat reference (sharing is a paged-only axis; flat is ground truth)
+        let mut b_flat = SimBackend::new(85);
+        let flat: Vec<_> = prompts
+            .iter()
+            .map(|p| {
+                let cfg = cfg_with(CacheLayout::Flat, strategy, false);
+                let mut e = Engine::new(&b_flat, cfg);
+                e.generate_speculative(&mut b_flat, p, 8).unwrap()
+            })
+            .collect();
+        // paged, sharing off
+        let mut b_off = SimBackend::new(85);
+        let pools_off = CachePools::new(b_off.contract());
+        let off: Vec<_> = prompts
+            .iter()
+            .map(|p| {
+                let cfg = cfg_with(CacheLayout::Paged, strategy, false);
+                let mut e = Engine::with_pools(&b_off, cfg, &pools_off);
+                e.generate_speculative(&mut b_off, p, 8).unwrap()
+            })
+            .collect();
+        // paged, sharing on — all conversations draw from one pool set
+        let mut b_on = SimBackend::new(85);
+        let pools_on = CachePools::new(b_on.contract());
+        let on: Vec<_> = prompts
+            .iter()
+            .map(|p| {
+                let cfg = cfg_with(CacheLayout::Paged, strategy, true);
+                let mut e = Engine::with_pools(&b_on, cfg, &pools_on);
+                e.generate_speculative(&mut b_on, p, 8).unwrap()
+            })
+            .collect();
+
+        for i in 0..prompts.len() {
+            assert_eq!(on[i].tokens, off[i].tokens, "sharing changed tokens ({strategy:?}, conv {i})");
+            assert_eq!(on[i].tokens, flat[i].tokens, "paged diverged from flat ({strategy:?}, conv {i})");
+            assert_eq!(on[i].accept_lens, off[i].accept_lens, "acceptance diverged ({strategy:?})");
+            assert_eq!(on[i].rounds, off[i].rounds, "round count diverged ({strategy:?})");
+        }
+        // the first conversation seeds the index and pays full prefill
+        assert_eq!(on[0].teacher_calls, off[0].teacher_calls);
+        assert_eq!(on[0].teacher_cache.adopted_rows, 0);
+        // every later admission adopts the resident 160-token run and
+        // skips its prefill chunk: strictly fewer teacher calls
+        for i in 1..prompts.len() {
+            assert!(
+                on[i].teacher_calls < off[i].teacher_calls,
+                "conv {i} must spend fewer teacher calls sharing-on \
+                 ({} vs {}, {strategy:?})",
+                on[i].teacher_calls,
+                off[i].teacher_calls
+            );
+            assert!(
+                on[i].teacher_cache.adopted_rows >= spec.prefix_len as u64,
+                "conv {i} must adopt at least the shared prefix ({strategy:?})"
+            );
+            assert_eq!(on[i].teacher_cache.adopted_rows, on[i].draft_cache.adopted_rows);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Divergence at the boundary block under park/resume churn
+// ---------------------------------------------------------------------
+
+#[test]
+fn full_reorder_divergence_is_private_under_park_resume_churn() {
+    // fast_reorder=false + path-index commits: every commit rewrites the
+    // sequence from row 0, so an adopter's first commit writes straight
+    // into its adopted blocks — the CoW divergence vector. A parked
+    // donor must survive two such siblings recycling its slot, then
+    // resume its second turn bit-identically.
+    let mk_cfg = |sharing: bool| {
+        let mut cfg = cfg_with(CacheLayout::Paged, CacheStrategy::SegmentShare, sharing);
+        cfg.commit_mode = CommitMode::PathIndex;
+        cfg.fast_reorder = false;
+        cfg
+    };
+    let spec = SharedPrefixSpec { conversations: 3, ..SharedPrefixSpec::default() };
+    let prompts = spec.prompts();
+    let turn2: Vec<i32> = (2..14).collect();
+
+    // sharing-off references: dedicated engine per conversation, plus a
+    // dedicated two-turn engine for conversation 0
+    let mut b_ref = SimBackend::new(85);
+    let want: Vec<_> = prompts
+        .iter()
+        .map(|p| {
+            let mut e = Engine::new(&b_ref, mk_cfg(false));
+            e.generate_speculative(&mut b_ref, p, 8).unwrap()
+        })
+        .collect();
+    let mut b2 = SimBackend::new(85);
+    let mut e2 = Engine::new(&b2, mk_cfg(false));
+    let w1 = e2.generate_speculative(&mut b2, &prompts[0], 8).unwrap();
+    let w2 = e2.generate_speculative(&mut b2, &turn2, 8).unwrap();
+    assert_eq!(w1.tokens, want[0].tokens);
+
+    // sharing-on: one slot engine serves everything
+    let mut bk = SimBackend::new(85);
+    let pools = CachePools::new(bk.contract());
+    let mut slot = Engine::with_pools(&bk, mk_cfg(true), &pools);
+    let g1 = slot.generate_speculative(&mut bk, &prompts[0], 8).unwrap();
+    assert_eq!(g1.tokens, w1.tokens, "donor turn 1 diverged");
+    let parked = slot.park().unwrap();
+
+    // churn: siblings adopt the frozen run on the freed slot and
+    // immediately diverge into it via full reorders
+    for i in 1..prompts.len() {
+        let g = slot.generate_speculative(&mut bk, &prompts[i], 8).unwrap();
+        assert_eq!(g.tokens, want[i].tokens, "sibling {i} diverged");
+        assert!(
+            g.teacher_cache.adopted_rows >= spec.prefix_len as u64,
+            "sibling {i} must adopt the shared run"
+        );
+        assert!(
+            g.teacher_cache.cow_copies > 0,
+            "a full reorder into adopted blocks must copy-on-write"
+        );
+        slot.reset();
+    }
+    refcount_invariant(&pools.teacher);
+    refcount_invariant(&pools.draft);
+
+    // the donor resumes turn 2 on its preserved context
+    slot.resume(parked).unwrap();
+    let g2 = slot.generate_speculative(&mut bk, &turn2, 8).unwrap();
+    assert_eq!(g2.tokens, w2.tokens, "resumed donor turn diverged after sibling churn");
+    assert_eq!(
+        g2.teacher_calls, w2.teacher_calls,
+        "resume must not re-prefill the parked context"
+    );
+}
+
+// ---------------------------------------------------------------------
+// Scheduler admission at B = 4
+// ---------------------------------------------------------------------
+
+#[test]
+fn scheduler_admission_shares_prefill_and_residency_at_b4() {
+    let spec = SharedPrefixSpec::default();
+    let prompts = spec.prompts();
+    // run the workload through a 4-slot group, parking every retired
+    // conversation so the final residency is the full resident set
+    let run = |sharing: bool| -> (Vec<Vec<i32>>, u64, u64, u64) {
+        let mut bk = SimBackend::new(85);
+        let pools = CachePools::new(bk.contract());
+        let cap = bk.contract().cache_cap;
+        let cfg = cfg_with(CacheLayout::Paged, CacheStrategy::SegmentShare, sharing);
+        let mut engines: Vec<Engine> =
+            (0..4).map(|_| Engine::with_pools(&bk, cfg.clone(), &pools)).collect();
+        let mut sched = ContinuousScheduler::new(4, cap);
+        for (i, p) in prompts.iter().enumerate() {
+            sched.submit(SlotRequest {
+                id: i as u64,
+                prompt: p.clone(),
+                max_new: 6,
+                cfg: None,
+                slo: None,
+            });
+        }
+        let mut outs = vec![Vec::new(); prompts.len()];
+        let mut adopted = 0u64;
+        sched
+            .run_to_idle(&mut bk, &mut engines, &mut |c: Completion| {
+                outs[c.id as usize] = c.out.tokens.clone();
+                adopted += c.out.teacher_cache.adopted_rows;
+                Disposition::Park
+            })
+            .unwrap();
+        assert_eq!(sched.parked_count(), prompts.len());
+        refcount_invariant(&pools.teacher);
+        refcount_invariant(&pools.draft);
+        (outs, sched.stats.prefill_teacher_calls, pools.referenced_bytes(), adopted)
+    };
+    let (on_toks, on_calls, on_bytes, on_adopted) = run(true);
+    let (off_toks, off_calls, off_bytes, off_adopted) = run(false);
+    assert_eq!(on_toks, off_toks, "sharing must not change any conversation's tokens");
+    assert!(
+        on_calls < off_calls,
+        "sharing-on must spend fewer prefill teacher calls ({on_calls} vs {off_calls})"
+    );
+    assert!(
+        on_bytes < off_bytes,
+        "sharing-on must keep fewer KV bytes resident ({on_bytes} vs {off_bytes})"
+    );
+    assert_eq!(off_adopted, 0, "sharing-off must adopt nothing");
+    assert!(
+        on_adopted >= (prompts.len() as u64 - 1) * spec.prefix_len as u64,
+        "every admission after the first must adopt the shared run"
+    );
+}

@@ -6,7 +6,7 @@
 
 use eagle_pangu::coordinator::{SloAction, SloPolicy};
 use eagle_pangu::harness::{replay, ReplayConfig};
-use eagle_pangu::workload::{ArrivalKind, TraceSpec};
+use eagle_pangu::workload::{ArrivalKind, PromptFamily, TraceSpec};
 
 #[test]
 fn same_seed_gives_identical_arrivals_and_percentiles() {
@@ -53,6 +53,7 @@ fn overload_spec(seed: u64) -> TraceSpec {
     TraceSpec {
         requests: 32,
         kind: ArrivalKind::Poisson { rate_rps: 400.0 },
+        family: PromptFamily::Mixed,
         prompt_mean: 16,
         max_new: 6,
         seed,
