@@ -8,11 +8,11 @@
 //! Uses the real teacher cache geometry (L=4, C from the default
 //! contract, H=4, Dh=32) so byte counts match production.
 
-use eagle_pangu::cache::{KvStore, ManagedCache, PagePool, PagedCache, BLOCK_ROWS};
+use eagle_pangu::cache::{pool_write, KvStore, ManagedCache, PagePool, PagedCache, BLOCK_ROWS};
 use eagle_pangu::config::{CacheStrategy, Contract};
 use eagle_pangu::util::bench::{bench, black_box};
-use std::cell::RefCell;
-use std::rc::Rc;
+use std::sync::RwLock;
+use std::sync::Arc;
 
 fn rows(dims: eagle_pangu::config::Dims, s: usize, base: f32) -> Vec<f32> {
     let rs = dims.heads * dims.d_head;
@@ -94,8 +94,8 @@ fn main() {
     // trim, so compare against round_segment_path_commit_tail above —
     // and note the resident footprint next to the flat buffers.
     println!("== paged layout (block size {BLOCK_ROWS}) ==");
-    let pool = Rc::new(RefCell::new(PagePool::new(dims, BLOCK_ROWS)));
-    pool.borrow_mut().ensure_headroom(cap);
+    let pool = Arc::new(RwLock::new(PagePool::new(dims, BLOCK_ROWS)));
+    pool_write(&pool).ensure_headroom(cap);
     let mut paged = PagedCache::new(dims, cap, CacheStrategy::SegmentShare, true, pool.clone());
     paged.append_committed(&rows(dims, 128, 1.0), &rows(dims, 128, 2.0), 128, 128).unwrap();
     paged.append_committed(&rows(dims, 128, 3.0), &rows(dims, 128, 4.0), 128, 128).unwrap();

@@ -86,6 +86,20 @@
 //! teacher-calls per admitted conversation plus the pools' referenced
 //! KV bytes at full residency. Both numbers are machine-independent;
 //! `bench_gate` requires sharing-on to beat sharing-off on both.
+//!
+//! # Multi-worker sharding (`multiworker`)
+//!
+//! The `multiworker` section replays the latency section's Poisson
+//! trace through the coordinator/worker split at worker counts
+//! {1, 2, 4} (4 slots per worker; `harness::replay` routes every replay
+//! through a `Coordinator`, so workers = 1 exercises the same channel
+//! RPC). The p99 percentiles run on each worker's virtual clock and are
+//! bit-identical across machines; `bench_gate` holds workers=4 p99
+//! `<=` workers=1 p99 — sharding a fixed arrival rate across more
+//! workers must never inflate the tail. Fused rounds per wall-clock
+//! second (summed across ranks) is recorded alongside but tracked
+//! unpinned: it carries real channel and thread overhead and is
+//! machine-dependent.
 
 use eagle_pangu::backend::sim::SimBackend;
 use eagle_pangu::backend::ModelBackend;
@@ -606,6 +620,39 @@ fn main() {
     }
     lat_json.push("slo_ms", latency_slo_ms);
 
+    // ---- multi-worker serving sweep (deterministic p99) ----
+    // Replays the latency section's Poisson trace through the
+    // coordinator/worker split (`harness::replay` routes every replay
+    // through a Coordinator) at worker counts {1, 2, 4}, 4 slots per
+    // worker. The percentiles run on each worker's virtual clock, so
+    // they are bit-identical across machines — and `workers1_p99_ms`
+    // equals the latency section's `poisson_b4_p99_ms` by construction
+    // (one worker over channel RPC replays the identical protocol).
+    // `bench_gate` requires workers=4 p99 <= workers=1 p99: sharding a
+    // fixed arrival rate across more workers must never inflate the
+    // virtual tail. Rounds/sec is wall-clock (fused launches retired
+    // per second summed across ranks, channel and thread overhead
+    // included) and is tracked unpinned — it is machine-dependent.
+    let mut mw_json = Json::obj();
+    let mw_trace = lat_spec(ArrivalKind::Poisson { rate_rps: 40.0 }).generate().unwrap();
+    for workers in [1usize, 2, 4] {
+        let mut rcfg = ReplayConfig::new(4);
+        rcfg.workers = workers;
+        let t0 = Instant::now();
+        let rep = replay(&mw_trace, &rcfg).unwrap();
+        let secs = t0.elapsed().as_secs_f64();
+        let launches: u64 = rep.stats.iter().map(|s| s.fused_launches).sum();
+        let mw_rps = launches as f64 / secs.max(1e-9);
+        println!(
+            "multiworker W={workers}: p99 {:.2} virtual ms, {mw_rps:.0} fused \
+             rounds/s wall ({} completed)",
+            rep.p99_ms, rep.completed
+        );
+        mw_json
+            .push(&format!("workers{workers}_p99_ms"), rep.p99_ms)
+            .push(&format!("workers{workers}_rounds_per_sec"), mw_rps);
+    }
+
     let mut j = Json::obj();
     j.push("bench", "end_to_end_hotpath")
         .push("backend", backend_name)
@@ -628,7 +675,8 @@ fn main() {
         .push("straggler", strag_json)
         .push("straggler_continuous_speedup", strag_speedup)
         .push("sharing", share_json)
-        .push("latency", lat_json);
+        .push("latency", lat_json)
+        .push("multiworker", mw_json);
     std::fs::write("BENCH_hotpath.json", j.to_string_pretty()).unwrap();
     println!("wrote BENCH_hotpath.json");
 

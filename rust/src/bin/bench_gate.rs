@@ -45,6 +45,14 @@
 //!   `<=` sharing-off on both metrics at B = 4 (adoption must keep
 //!   skipping prefill work and deduplicating resident blocks;
 //!   `sharing_off_*` entries are the comparator, not gated themselves);
+//! * multi-worker sharding (`multiworker.workers*_p99_ms`):
+//!   deterministic virtual-clock percentiles, gated `<= 1.15 * baseline`
+//!   per leaf like every latency metric, and — when the baseline pins a
+//!   `multiworker` section — the *current* file must show workers=4 p99
+//!   `<=` workers=1 p99 (sharding a fixed arrival rate across more
+//!   workers must never inflate the tail; exact ties pass, since
+//!   worker-count invisibility makes the percentiles coincide whenever
+//!   no queueing occurs);
 //! * shed rate (`*_shed_rate`): deterministic admission-layer outcome;
 //!   current must be `<= baseline + 0.05` (absolute slack — shedding a
 //!   few more requests under the pinned overload trace is creep, not
@@ -303,6 +311,33 @@ fn gate_sharing_cross(baseline: &Json, current: &Json, out: &mut Vec<Finding>) {
     }
 }
 
+/// Multi-worker sharding rule, read from the *current* file (every
+/// worker count replays the same trace on the same virtual clock, so
+/// both percentiles come out of one deterministic bench run): the
+/// workers=4 replay must never show a higher virtual p99 than the
+/// workers=1 replay — otherwise the coordinator split inflated tail
+/// latency instead of dividing load. Exact ties pass: worker-count
+/// invisibility makes the percentiles coincide whenever no queueing
+/// occurs. Applied only when the baseline pins a `multiworker` section
+/// (baseline defines the contract, like every other rule).
+fn gate_multiworker_cross(baseline: &Json, current: &Json, out: &mut Vec<Finding>) {
+    if baseline.get("multiworker").is_none() {
+        return;
+    }
+    let cur = current.get("multiworker");
+    let path = "multiworker.workers4_vs_workers1_p99".to_string();
+    let w1 = cur.and_then(|m| m.get("workers1_p99_ms")).and_then(Json::as_f64);
+    let w4 = cur.and_then(|m| m.get("workers4_p99_ms")).and_then(Json::as_f64);
+    let (ok, detail) = match (w1, w4) {
+        (Some(w1), Some(w4)) => (
+            w4 <= w1 + 1e-9,
+            format!("workers=4 p99 {w4:.2} ms vs workers=1 p99 {w1:.2} ms"),
+        ),
+        _ => (false, "multiworker entries missing from current output".to_string()),
+    };
+    out.push(Finding { path, ok, detail });
+}
+
 /// Hard p99 SLO floor over the *current* file's `latency` section: every
 /// `*_p99_ms` leaf must sit at or below the baseline's pinned
 /// `latency.slo_ms`. The percentiles are virtual-clock and deterministic,
@@ -352,6 +387,7 @@ fn run_gate(baseline: &Json, current: &Json, tol: f64) -> Vec<Finding> {
     gate_kv_cross(baseline, current, &mut out);
     gate_upload_cross(baseline, current, &mut out);
     gate_sharing_cross(baseline, current, &mut out);
+    gate_multiworker_cross(baseline, current, &mut out);
     gate_latency_slo(baseline, current, &mut out);
     out
 }
@@ -604,6 +640,55 @@ mod tests {
         assert!(findings
             .iter()
             .any(|f| f.path == "sharing.on_vs_off_b4_kv_bytes_resident" && !f.ok));
+    }
+
+    fn multiworker_json(w1: f64, w4: f64) -> Json {
+        let mut mw = Json::obj();
+        mw.push("workers1_p99_ms", w1)
+            .push("workers1_rounds_per_sec", 900.0)
+            .push("workers2_p99_ms", (w1 + w4) / 2.0)
+            .push("workers2_rounds_per_sec", 900.0)
+            .push("workers4_p99_ms", w4)
+            .push("workers4_rounds_per_sec", 900.0);
+        let mut j = bench_json(1000.0, 2000.0, 1.3, 100.0);
+        j.push("multiworker", mw);
+        j
+    }
+
+    #[test]
+    fn workers4_p99_must_not_exceed_workers1() {
+        let base = multiworker_json(80.0, 80.0);
+        // exact ties pass: worker-count invisibility makes the
+        // percentiles coincide whenever no queueing occurs
+        let findings = run_gate(&base, &base, 0.85);
+        let f = findings
+            .iter()
+            .find(|f| f.path == "multiworker.workers4_vs_workers1_p99")
+            .unwrap();
+        assert!(f.ok, "{}", f.detail);
+        // per-leaf gating covers the multiworker section too: the
+        // percentiles under Latency, rounds/s under Throughput
+        assert!(findings.iter().any(|f| f.path == "multiworker.workers4_p99_ms"));
+        assert!(findings.iter().any(|f| f.path == "multiworker.workers1_rounds_per_sec"));
+        // an inverted run (sharding inflating the tail) fails the cross
+        // rule even when loose per-leaf ceilings would let it through
+        let base_loose = multiworker_json(80.0, 120.0);
+        let bad = multiworker_json(80.0, 90.0);
+        let findings = run_gate(&base_loose, &bad, 0.85);
+        let f = findings
+            .iter()
+            .find(|f| f.path == "multiworker.workers4_vs_workers1_p99")
+            .unwrap();
+        assert!(!f.ok, "workers=4 p99 above workers=1 must fail: {}", f.detail);
+        // a legacy baseline without a multiworker section skips the rule
+        let legacy = bench_json(1000.0, 2000.0, 1.3, 100.0);
+        let findings = run_gate(&legacy, &base, 0.85);
+        assert!(!findings.iter().any(|f| f.path.starts_with("multiworker.")));
+        // ... and a current file that dropped the section fails coverage
+        let findings = run_gate(&base, &legacy, 0.85);
+        assert!(findings
+            .iter()
+            .any(|f| f.path == "multiworker.workers4_vs_workers1_p99" && !f.ok));
     }
 
     fn latency_json(p99: f64, shed: f64, slo: f64) -> Json {

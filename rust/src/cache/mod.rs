@@ -19,20 +19,23 @@ pub mod paged;
 use crate::backend::KvView;
 use crate::config::CacheStrategy;
 use anyhow::{bail, Result};
-use std::cell::Ref;
+use std::sync::RwLockReadGuard;
 
 pub use manager::{CacheStats, ManagedCache};
-pub use paged::{CachePools, PagePool, PagedCache, PrefixIndex, PrefixMatch, BLOCK_ROWS};
+pub use paged::{
+    pool_read, pool_write, prefix_lock, CachePools, PagePool, PagedCache, PrefixIndex,
+    PrefixMatch, SharedPool, BLOCK_ROWS,
+};
 
 /// A live borrow of a store's readable KV state, held for the duration of
 /// one backend step (or one fused launch across many requests).
 ///
 /// Flat stores lend their buffers directly; paged stores hold a shared
-/// [`Ref`] on the worker's [`PagePool`] — many guards may be alive at
+/// read guard on the worker's [`PagePool`] — many guards may be alive at
 /// once (a fused launch borrows every group member's cache), but **no
 /// cache mutation on the same pool may happen while any guard lives**
-/// (enforced by `RefCell` at runtime). The engine and scheduler scope
-/// guards strictly around backend calls.
+/// (enforced by the pool's `RwLock`: readers exclude the writer). The
+/// engine and scheduler scope guards strictly around backend calls.
 pub enum KvGuard<'a> {
     /// Borrowed flat buffers (`rows` physical rows per layer).
     Flat {
@@ -45,8 +48,8 @@ pub enum KvGuard<'a> {
     },
     /// Shared pool borrow plus this conversation's block table.
     Paged {
-        /// The pool borrow keeping the storage alive.
-        pool: Ref<'a, PagePool>,
+        /// The pool read guard keeping the storage alive.
+        pool: RwLockReadGuard<'a, PagePool>,
         /// Logical-block → physical-block table of the branch view.
         table: &'a [u32],
         /// Rows per block.
@@ -71,7 +74,12 @@ impl KvGuard<'_> {
 /// implements. Semantics are defined by [`ManagedCache`] (the reference
 /// implementation, documented there); [`PagedCache`] must match it
 /// bit-for-bit on committed state for identical operation sequences.
-pub trait KvStore {
+///
+/// `Send` is part of the contract: an engine (and therefore its caches)
+/// must be movable onto a worker thread — the coordinator/worker split
+/// runs one `EngineWorker` per thread. Paged stores satisfy this because
+/// [`SharedPool`] is `Arc<RwLock<…>>`, not `Rc<RefCell<…>>`.
+pub trait KvStore: Send {
     /// Committed sequence length `t` (logical rows — never a physical
     /// pool coordinate; mask prefix intervals derive from this).
     fn len(&self) -> usize;

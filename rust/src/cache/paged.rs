@@ -42,8 +42,37 @@
 use crate::cache::{CacheStats, KvGuard, KvStore};
 use crate::config::{CacheStrategy, Contract, Dims};
 use anyhow::{bail, Result};
-use std::cell::RefCell;
-use std::rc::Rc;
+use std::sync::{Arc, Mutex, RwLock};
+
+/// The shared handle to a per-worker [`PagePool`]: every slot engine of
+/// one worker clones this handle, so all resident conversations draw
+/// blocks from the same arena. `RwLock` (not `Mutex`) because a fused
+/// verification launch holds one read guard per participating
+/// conversation over the *same* pool concurrently
+/// ([`crate::cache::KvGuard::Paged`]); writes (block mapping, commits)
+/// are exclusive. `Send + Sync`, so an `EngineWorker` owning its pools
+/// can run on its own thread.
+pub type SharedPool = Arc<RwLock<PagePool>>;
+
+/// Acquire shared read access to a pool. A poisoned lock means a
+/// sibling engine panicked mid-mutation — pool storage may be torn, so
+/// propagating the panic to the whole worker is the only safe option
+/// (the coordinator surfaces the worker's death; it is never absorbed).
+pub fn pool_read(pool: &SharedPool) -> std::sync::RwLockReadGuard<'_, PagePool> {
+    pool.read().expect("pool lock poisoned")
+}
+
+/// Acquire exclusive write access to a pool (see [`pool_read`] for the
+/// poisoning policy).
+pub fn pool_write(pool: &SharedPool) -> std::sync::RwLockWriteGuard<'_, PagePool> {
+    pool.write().expect("pool lock poisoned")
+}
+
+/// Lock a worker's prefix index (see [`pool_read`] for the poisoning
+/// policy).
+pub fn prefix_lock(index: &Arc<Mutex<PrefixIndex>>) -> std::sync::MutexGuard<'_, PrefixIndex> {
+    index.lock().expect("prefix index lock poisoned")
+}
 
 /// Rows per KV block. 16 keeps the partial-boundary-block copy small
 /// (a commit moves < bs rows) while keeping tables short (cap/16 entries).
@@ -279,40 +308,45 @@ pub struct PrefixMatch {
 }
 
 /// The per-worker pool pair (teacher + draft roles) plus the shared
-/// prefix index. Cloning shares all three (`Rc`): a worker creates one
+/// prefix index. Cloning shares all three (`Arc`): a worker creates one
 /// `CachePools` and hands it to every slot engine so all resident
-/// conversations draw from the same arenas.
+/// conversations draw from the same arenas. The handles are `Send +
+/// Sync` — pools are guarded by `RwLock` (concurrent fused-launch
+/// readers, exclusive writers) and the prefix index by a `Mutex` — so a
+/// whole worker (engines + scheduler + pools) can move to its own
+/// thread. Pools are still *per worker*: workers never share arenas,
+/// the locks exist so one worker's slots can.
 #[derive(Clone)]
 pub struct CachePools {
     /// Teacher-role block pool.
-    pub teacher: Rc<RefCell<PagePool>>,
+    pub teacher: SharedPool,
     /// Draft-role block pool.
-    pub draft: Rc<RefCell<PagePool>>,
+    pub draft: SharedPool,
     /// Frozen prefix runs shared across this worker's conversations
     /// (`--prefix-sharing`; empty and inert when sharing is off).
-    pub prefix: Rc<RefCell<PrefixIndex>>,
+    pub prefix: Arc<Mutex<PrefixIndex>>,
 }
 
 impl CachePools {
     /// Fresh (empty) pools for a backend contract.
     pub fn new(contract: &Contract) -> Self {
         Self {
-            teacher: Rc::new(RefCell::new(PagePool::new(contract.teacher, BLOCK_ROWS))),
-            draft: Rc::new(RefCell::new(PagePool::new(contract.draft, BLOCK_ROWS))),
-            prefix: Rc::new(RefCell::new(PrefixIndex::default())),
+            teacher: Arc::new(RwLock::new(PagePool::new(contract.teacher, BLOCK_ROWS))),
+            draft: Arc::new(RwLock::new(PagePool::new(contract.draft, BLOCK_ROWS))),
+            prefix: Arc::new(Mutex::new(PrefixIndex::default())),
         }
     }
 
     /// Combined pool storage footprint in bytes (k + v, both roles).
     pub fn bytes_resident(&self) -> u64 {
-        self.teacher.borrow().bytes_resident() + self.draft.borrow().bytes_resident()
+        pool_read(&self.teacher).bytes_resident() + pool_read(&self.draft).bytes_resident()
     }
 
     /// Combined bytes of *referenced* blocks (both roles) — the honest
     /// residency under prefix sharing, where per-conversation sums would
     /// count a shared block once per mapper.
     pub fn referenced_bytes(&self) -> u64 {
-        self.teacher.borrow().referenced_bytes() + self.draft.borrow().referenced_bytes()
+        pool_read(&self.teacher).referenced_bytes() + pool_read(&self.draft).referenced_bytes()
     }
 
     /// Register a frozen run for sharing: `tokens` are the committed
@@ -330,13 +364,13 @@ impl CachePools {
         d_blocks: &[u32],
         feats: &[Vec<f32>],
     ) {
-        let bs = self.teacher.borrow().block_size();
+        let bs = pool_read(&self.teacher).block_size();
         let rows = tokens.len();
         debug_assert!(rows > 0 && rows % bs == 0, "prefix run must be block-aligned");
         debug_assert_eq!(t_blocks.len(), rows / bs);
         debug_assert_eq!(d_blocks.len(), rows / bs);
         debug_assert_eq!(feats.len(), rows / bs);
-        let mut index = self.prefix.borrow_mut();
+        let mut index = prefix_lock(&self.prefix);
         // already covered by a resident entry (same tokens or a longer
         // run starting with them): nothing new to share
         if index
@@ -361,13 +395,13 @@ impl CachePools {
             self.release_entry(&old);
         }
         {
-            let mut tp = self.teacher.borrow_mut();
+            let mut tp = pool_write(&self.teacher);
             for &b in t_blocks {
                 tp.share_block(b);
             }
         }
         {
-            let mut dp = self.draft.borrow_mut();
+            let mut dp = pool_write(&self.draft);
             for &b in d_blocks {
                 dp.share_block(b);
             }
@@ -385,8 +419,8 @@ impl CachePools {
     /// one tail token remains to regenerate the pending logits). Returns
     /// `None` when no resident run shares at least one whole block.
     pub fn lookup_prefix(&self, prompt: &[i32], max_rows: usize) -> Option<PrefixMatch> {
-        let bs = self.teacher.borrow().block_size();
-        let index = self.prefix.borrow();
+        let bs = pool_read(&self.teacher).block_size();
+        let index = prefix_lock(&self.prefix);
         let mut best: Option<(usize, &PrefixEntry)> = None;
         for e in &index.entries {
             let lim = e.tokens.len().min(prompt.len()).min(max_rows);
@@ -415,19 +449,19 @@ impl CachePools {
 
     /// Drop every registered run, releasing the index's block references.
     pub fn clear_prefix_index(&self) {
-        let entries = std::mem::take(&mut self.prefix.borrow_mut().entries);
+        let entries = std::mem::take(&mut prefix_lock(&self.prefix).entries);
         for e in &entries {
             self.release_entry(e);
         }
     }
 
     fn release_entry(&self, e: &PrefixEntry) {
-        let mut tp = self.teacher.borrow_mut();
+        let mut tp = pool_write(&self.teacher);
         for &b in &e.t_blocks {
             tp.release_block(b);
         }
         drop(tp);
-        let mut dp = self.draft.borrow_mut();
+        let mut dp = pool_write(&self.draft);
         for &b in &e.d_blocks {
             dp.release_block(b);
         }
@@ -443,7 +477,7 @@ pub struct PagedCache {
     strategy: CacheStrategy,
     fast_reorder: bool,
     block_size: usize,
-    pool: Rc<RefCell<PagePool>>,
+    pool: SharedPool,
     /// Main block table: committed rows `[0, len)` plus (SegmentShare)
     /// the open branch's speculative rows.
     table: Vec<u32>,
@@ -477,10 +511,10 @@ impl PagedCache {
         cap: usize,
         strategy: CacheStrategy,
         fast_reorder: bool,
-        pool: Rc<RefCell<PagePool>>,
+        pool: SharedPool,
     ) -> Self {
         let block_size = {
-            let p = pool.borrow();
+            let p = pool_read(&pool);
             debug_assert_eq!(p.dims, dims, "pool role dimensions mismatch");
             p.block_size()
         };
@@ -536,7 +570,7 @@ impl PagedCache {
     /// blocks.
     fn trim_table(&mut self, rows: usize) {
         let keep = rows.div_ceil(self.block_size);
-        let mut pool = self.pool.borrow_mut();
+        let mut pool = pool_write(&self.pool);
         while self.table.len() > keep {
             let b = self.table.pop().expect("table longer than keep");
             pool.release_block(b);
@@ -546,7 +580,7 @@ impl PagedCache {
     /// Release every replica block (branch close).
     fn drop_replica(&mut self) {
         if let Some(rep) = self.replica.take() {
-            let mut pool = self.pool.borrow_mut();
+            let mut pool = pool_write(&self.pool);
             for b in rep {
                 pool.release_block(b);
             }
@@ -603,7 +637,7 @@ impl PagedCache {
     ) {
         let rs = self.rstride();
         debug_assert_eq!(k_rows.len(), self.dims.layers * s * rs);
-        let mut pool = self.pool.borrow_mut();
+        let mut pool = pool_write(&self.pool);
         let table = if into_replica {
             self.replica.as_mut().expect("replica table missing")
         } else {
@@ -663,7 +697,7 @@ impl PagedCache {
         let n = self.dims.layers * rows.len() * rs;
         self.gather_k.resize(n, 0.0);
         self.gather_v.resize(n, 0.0);
-        let pool = self.pool.borrow();
+        let pool = pool_read(&self.pool);
         let table = match &self.replica {
             Some(rep) => rep.as_slice(),
             None => self.table.as_slice(),
@@ -683,7 +717,7 @@ impl PagedCache {
     /// the main table.
     fn scatter_gathered(&mut self, at: usize, n: usize) {
         let rs = self.rstride();
-        let mut pool = self.pool.borrow_mut();
+        let mut pool = pool_write(&self.pool);
         Self::map_rows(&mut pool, &mut self.table, at + n);
         Self::cow_rows(&mut pool, &mut self.table, at, at + n, &mut self.stats);
         let bs = pool.block_size();
@@ -758,7 +792,7 @@ impl KvStore for PagedCache {
         if self.strategy == CacheStrategy::DeepCopy {
             // Replicate the *mapped* blocks (not full capacity — the
             // honest paged cost of the paper's conservative mode).
-            let mut pool = self.pool.borrow_mut();
+            let mut pool = pool_write(&self.pool);
             let be = pool.block_elems();
             let mut rep = Vec::with_capacity(self.table.len());
             for &src in &self.table {
@@ -823,7 +857,7 @@ impl KvStore for PagedCache {
             let mut moved_rows = 0usize;
             {
                 let hi = (len + a).min(boundary);
-                let mut pool = self.pool.borrow_mut();
+                let mut pool = pool_write(&self.pool);
                 if hi > len {
                     Self::map_rows(&mut pool, &mut self.table, hi);
                     Self::cow_rows(&mut pool, &mut self.table, len, hi, &mut self.stats);
@@ -850,7 +884,7 @@ impl KvStore for PagedCache {
             }
             // release the replica blocks not adopted
             {
-                let mut pool = self.pool.borrow_mut();
+                let mut pool = pool_write(&self.pool);
                 for b in rep {
                     if b != u32::MAX {
                         pool.release_block(b);
@@ -949,7 +983,7 @@ impl KvStore for PagedCache {
             Some(rep) => {
                 // DeepCopy: copy accepted rows from the replica into the
                 // main table (disjoint blocks — plain copies).
-                let mut pool = self.pool.borrow_mut();
+                let mut pool = pool_write(&self.pool);
                 if !tail_offsets.is_empty() {
                     Self::map_rows(&mut pool, &mut self.table, len + tail_offsets.len());
                     Self::cow_rows(
@@ -976,7 +1010,7 @@ impl KvStore for PagedCache {
                 // which physical blocks the rows land in. CoW first: a
                 // cloned destination block preserves its contents, so
                 // sources that happen to live in it still read correctly.
-                let mut pool = self.pool.borrow_mut();
+                let mut pool = pool_write(&self.pool);
                 Self::cow_rows(
                     &mut pool,
                     &mut self.table,
@@ -1006,7 +1040,7 @@ impl KvStore for PagedCache {
 
     fn kv_guard(&self) -> KvGuard<'_> {
         KvGuard::Paged {
-            pool: self.pool.borrow(),
+            pool: pool_read(&self.pool),
             table: self.view_table(),
             block_size: self.block_size,
         }
@@ -1015,7 +1049,7 @@ impl KvStore for PagedCache {
     fn committed_row_k(&self, row: usize) -> Vec<f32> {
         assert!(row < self.len);
         let rs = self.rstride();
-        let pool = self.pool.borrow();
+        let pool = pool_read(&self.pool);
         let bs = pool.block_size();
         let mut out = Vec::with_capacity(self.dims.layers * rs);
         for l in 0..self.dims.layers {
@@ -1027,7 +1061,7 @@ impl KvStore for PagedCache {
 
     fn committed_checksum(&self) -> f64 {
         let rs = self.rstride();
-        let pool = self.pool.borrow();
+        let pool = pool_read(&self.pool);
         let bs = pool.block_size();
         let mut acc = 0.0f64;
         for l in 0..self.dims.layers {
@@ -1049,7 +1083,7 @@ impl KvStore for PagedCache {
     }
 
     fn bytes_resident(&self) -> u64 {
-        let be = self.pool.borrow().block_elems();
+        let be = pool_read(&self.pool).block_elems();
         (2 * self.mapped_blocks() * be * 4) as u64
     }
 
@@ -1087,7 +1121,7 @@ impl KvStore for PagedCache {
             bail!("adopt_shared_blocks: {rows} rows exceed capacity {}", self.cap);
         }
         {
-            let mut pool = self.pool.borrow_mut();
+            let mut pool = pool_write(&self.pool);
             for &b in blocks {
                 pool.share_block(b);
                 self.table.push(b);
@@ -1117,11 +1151,11 @@ mod tests {
     const DIMS: Dims = Dims { layers: 2, d_model: 8, heads: 2, d_head: 2 };
     const CAP: usize = 32;
 
-    fn pool() -> Rc<RefCell<PagePool>> {
-        Rc::new(RefCell::new(PagePool::new(DIMS, 4)))
+    fn pool() -> SharedPool {
+        Arc::new(RwLock::new(PagePool::new(DIMS, 4)))
     }
 
-    fn mk(strategy: CacheStrategy, p: &Rc<RefCell<PagePool>>) -> PagedCache {
+    fn mk(strategy: CacheStrategy, p: &SharedPool) -> PagedCache {
         PagedCache::new(DIMS, CAP, strategy, true, p.clone())
     }
 
@@ -1143,8 +1177,8 @@ mod tests {
         c.committed_row_k(row)[0]
     }
 
-    fn pool_invariant(p: &Rc<RefCell<PagePool>>, caches: &[&PagedCache]) {
-        let pl = p.borrow();
+    fn pool_invariant(p: &SharedPool, caches: &[&PagedCache]) {
+        let pl = pool_read(p);
         assert_eq!(
             pl.blocks(),
             pl.free_blocks() + pl.referenced_blocks(),
@@ -1249,14 +1283,14 @@ mod tests {
         assert_eq!(row_value(&b, 3), 70.0);
         pool_invariant(&p, &[&a, &b]);
         // dropping one resident returns its blocks
-        let blocks_before = p.borrow().blocks();
+        let blocks_before = pool_read(&p).blocks();
         drop(a);
         pool_invariant(&p, &[&b]);
-        assert_eq!(p.borrow().blocks(), blocks_before, "drop must not create blocks");
+        assert_eq!(pool_read(&p).blocks(), blocks_before, "drop must not create blocks");
         // freed blocks are reused, not regrown
         let mut c = mk(CacheStrategy::SegmentShare, &p);
         c.append_committed(&block(8, 5.0), &block(8, 5.0), 8, 4).unwrap();
-        assert_eq!(p.borrow().blocks(), blocks_before);
+        assert_eq!(pool_read(&p).blocks(), blocks_before);
         pool_invariant(&p, &[&b, &c]);
     }
 
@@ -1275,7 +1309,7 @@ mod tests {
         assert_eq!(b.len(), 8);
         assert_eq!(row_value(&b, 3), 13.0, "adopter reads the donor's rows");
         {
-            let pl = p.borrow();
+            let pl = pool_read(&p);
             assert_eq!(pl.ref_count(run[0]), 2);
             assert_eq!(pl.referenced_blocks(), 2, "shared blocks count once");
             assert_eq!(pl.blocks(), pl.free_blocks() + pl.referenced_blocks());
@@ -1300,22 +1334,22 @@ mod tests {
         assert_eq!(row_value(&a, 3), 13.0, "donor rows must survive the divergence");
         assert_eq!(a.committed_block_run(8).unwrap(), run, "donor still maps its blocks");
         {
-            let pl = p.borrow();
+            let pl = pool_read(&p);
             assert_eq!(pl.ref_count(run[0]), 1, "only the donor references the old block");
             assert_eq!(pl.blocks(), pl.free_blocks() + pl.referenced_blocks());
         }
         drop(b);
         drop(a);
-        let pl = p.borrow();
+        let pl = pool_read(&p);
         assert_eq!(pl.free_blocks(), pl.blocks(), "all blocks return to the free list");
     }
 
     #[test]
     fn prefix_index_shares_dedups_and_evicts() {
         let pools = CachePools {
-            teacher: Rc::new(RefCell::new(PagePool::new(DIMS, 4))),
-            draft: Rc::new(RefCell::new(PagePool::new(DIMS, 4))),
-            prefix: Rc::new(RefCell::new(PrefixIndex::default())),
+            teacher: Arc::new(RwLock::new(PagePool::new(DIMS, 4))),
+            draft: Arc::new(RwLock::new(PagePool::new(DIMS, 4))),
+            prefix: Arc::new(Mutex::new(PrefixIndex::default())),
         };
         let mk2 = |pools: &CachePools| {
             (
@@ -1332,16 +1366,16 @@ mod tests {
         let (tb, db) = (t.committed_block_run(8).unwrap(), d.committed_block_run(8).unwrap());
         let feats = vec![vec![1.0; 4], vec![2.0; 4]];
         pools.register_prefix(&tokens, &tb, &db, &feats);
-        assert_eq!(pools.prefix.borrow().entries(), 1);
+        assert_eq!(prefix_lock(&pools.prefix).entries(), 1);
         // re-registering a covered run is a no-op
         pools.register_prefix(&tokens, &tb, &db, &feats);
-        assert_eq!(pools.prefix.borrow().entries(), 1);
-        assert_eq!(pools.teacher.borrow().ref_count(tb[0]), 2, "table + index");
+        assert_eq!(prefix_lock(&pools.prefix).entries(), 1);
+        assert_eq!(pool_read(&pools.teacher).ref_count(tb[0]), 2, "table + index");
 
         // the index owns its references: the run survives its donor
         drop(t);
         drop(d);
-        assert_eq!(pools.teacher.borrow().referenced_blocks(), 2);
+        assert_eq!(pool_read(&pools.teacher).referenced_blocks(), 2);
         assert!(pools.referenced_bytes() > 0);
 
         // longest block-aligned match over the full prompt
@@ -1371,7 +1405,7 @@ mod tests {
         let (tb2, db2) =
             (t2.committed_block_run(12).unwrap(), d2.committed_block_run(12).unwrap());
         pools.register_prefix(&long, &tb2, &db2, &[vec![0.0], vec![0.0], vec![0.0]]);
-        assert_eq!(pools.prefix.borrow().entries(), 1, "extension replaces the shorter run");
+        assert_eq!(prefix_lock(&pools.prefix).entries(), 1, "extension replaces the shorter run");
         let hit = pools.lookup_prefix(&[0, 1, 2, 3, 4, 5, 6, 7, 8, 99], 9).unwrap();
         assert_eq!(hit.rows, 8, "the shorter prefix still matches through the longer run");
         drop(t2);
@@ -1390,39 +1424,39 @@ mod tests {
                 &[vec![0.0]],
             );
         }
-        assert_eq!(pools.prefix.borrow().entries(), PREFIX_INDEX_CAP);
+        assert_eq!(prefix_lock(&pools.prefix).entries(), PREFIX_INDEX_CAP);
         assert!(pools.lookup_prefix(&long, 11).is_none(), "the oldest entry was evicted");
         {
-            let pl = pools.teacher.borrow();
+            let pl = pool_read(&pools.teacher);
             assert_eq!(pl.blocks(), pl.free_blocks() + pl.referenced_blocks());
         }
         pools.clear_prefix_index();
-        assert_eq!(pools.prefix.borrow().entries(), 0);
-        let pl = pools.teacher.borrow();
+        assert_eq!(prefix_lock(&pools.prefix).entries(), 0);
+        let pl = pool_read(&pools.teacher);
         assert_eq!(pl.free_blocks(), pl.blocks(), "clearing releases every reference");
-        let pd = pools.draft.borrow();
+        let pd = pool_read(&pools.draft);
         assert_eq!(pd.free_blocks(), pd.blocks());
     }
 
     #[test]
     fn ensure_headroom_prevents_storage_growth() {
         let p = pool();
-        p.borrow_mut().ensure_headroom(CAP);
-        let cap_before = p.borrow().k.capacity();
-        assert!(cap_before >= CAP.div_ceil(4) * p.borrow().block_elems());
+        pool_write(&p).ensure_headroom(CAP);
+        let cap_before = pool_read(&p).k.capacity();
+        assert!(cap_before >= CAP.div_ceil(4) * pool_read(&p).block_elems());
         let mut c = mk(CacheStrategy::SegmentShare, &p);
         c.append_committed(&block(8, 1.0), &block(8, 1.0), 8, 8).unwrap();
         c.begin_branch().unwrap();
         c.append_branch(&block(8, 2.0), &block(8, 2.0), 8, 8).unwrap();
         c.commit_length(8).unwrap();
         assert_eq!(
-            p.borrow().k.capacity(),
+            pool_read(&p).k.capacity(),
             cap_before,
             "mapping within reserved headroom must not reallocate the pool"
         );
         // headroom already satisfied -> idempotent
-        p.borrow_mut().ensure_headroom(CAP - 16);
-        assert_eq!(p.borrow().k.capacity(), cap_before);
+        pool_write(&p).ensure_headroom(CAP - 16);
+        assert_eq!(pool_read(&p).k.capacity(), cap_before);
     }
 
     #[test]
@@ -1436,12 +1470,12 @@ mod tests {
         // organic growth, one block at a time
         c.append_committed(&block(8, 1.0), &block(8, 1.0), 8, 8).unwrap(); // 2 blocks
         c.append_committed(&block(4, 2.0), &block(4, 2.0), 4, 4).unwrap(); // 3rd block
-        p.borrow_mut().ensure_headroom(8); // promise 2 more blocks
-        let cap_before = p.borrow().k.capacity();
+        pool_write(&p).ensure_headroom(8); // promise 2 more blocks
+        let cap_before = pool_read(&p).k.capacity();
         c.begin_branch().unwrap();
         c.append_branch(&block(8, 3.0), &block(8, 3.0), 8, 8).unwrap(); // maps 2 blocks
         assert_eq!(
-            p.borrow().k.capacity(),
+            pool_read(&p).k.capacity(),
             cap_before,
             "reserved headroom must cover the mapped blocks without reallocating"
         );

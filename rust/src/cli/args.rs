@@ -1,7 +1,15 @@
 //! Minimal argument parser: positional args, `--key value` flags and
 //! `--switch` booleans. Unknown-flag detection is done per-command via
 //! [`Args::ensure_known`] so typos fail fast instead of being ignored.
+//!
+//! On/off flags are **typed**: they are declared once in
+//! [`TOGGLE_FLAGS`], which both registers them as value-taking (so
+//! `--pipelining off` can never silently parse as a switch plus a stray
+//! positional — the historical failure mode) and routes them through
+//! [`Args::get_toggle`] / [`Toggle`], whose rejection error is the
+//! typed [`ConfigError::BadToggle`].
 
+use crate::config::ConfigError;
 use anyhow::{bail, Result};
 use std::collections::BTreeMap;
 
@@ -14,16 +22,63 @@ pub struct Args {
     switches: Vec<String>,
 }
 
-/// Flags that take a value (everything else starting with `--` is a switch).
+/// Every typed `on|off` flag, declared exactly once. Listing a flag
+/// here is what makes it value-taking — [`is_valued`] consults this
+/// list — so a toggle cannot be forgotten in the valued registry by
+/// construction (the regression test below enumerates this list).
+pub const TOGGLE_FLAGS: &[&str] =
+    &["adaptive-occupancy", "kv-sessions", "pipelining", "prefix-sharing"];
+
+/// Non-toggle flags that take a value (everything starting with `--`
+/// and in neither this list nor [`TOGGLE_FLAGS`] is a switch).
 const VALUED: &[&str] = &[
     "mode", "budget", "depth", "topk", "cache-strategy", "cache-layout", "commit-mode",
-    "kv-sessions", "pipelining", "prefix-sharing", "draft-window", "max-new", "workers", "batch",
+    "draft-window", "max-new", "workers", "batch",
     "scheduling", "seed",
     "out-dir", "artifacts", "backend", "agree", "temperature", "trace-dir", "prompt-len",
     "turns", "conversations", "profile", "requests", "rate", "servers",
-    "adaptive-occupancy", "slo-ms", "slo-action", "arrivals", "rate-hi", "switch-p",
+    "slo-ms", "slo-action", "arrivals", "rate-hi", "switch-p",
     "slots", "prompt-mean", "shared-prefix",
 ];
+
+/// Whether `--name` takes a value (toggles are valued by construction).
+fn is_valued(name: &str) -> bool {
+    TOGGLE_FLAGS.contains(&name) || VALUED.contains(&name)
+}
+
+/// A typed `on|off` flag value.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Toggle {
+    /// The feature is enabled.
+    On,
+    /// The feature is disabled.
+    Off,
+}
+
+impl Toggle {
+    /// Parse a flag's value; anything but `on`/`off` is a typed
+    /// [`ConfigError::BadToggle`] naming the flag.
+    pub fn parse(flag: &'static str, value: &str) -> Result<Self, ConfigError> {
+        match value {
+            "on" => Ok(Toggle::On),
+            "off" => Ok(Toggle::Off),
+            other => Err(ConfigError::BadToggle { flag, got: other.to_string() }),
+        }
+    }
+
+    /// `on` is `true`.
+    pub fn as_bool(self) -> bool {
+        matches!(self, Toggle::On)
+    }
+
+    /// Stable string form.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Toggle::On => "on",
+            Toggle::Off => "off",
+        }
+    }
+}
 
 impl Args {
     /// Parse an argv iterator (without the program name).
@@ -34,7 +89,7 @@ impl Args {
             if let Some(name) = a.strip_prefix("--") {
                 if let Some((k, v)) = name.split_once('=') {
                     out.flags.insert(k.to_string(), v.to_string());
-                } else if VALUED.contains(&name) {
+                } else if is_valued(name) {
                     match argv.next() {
                         Some(v) if !v.starts_with("--") => {
                             out.flags.insert(name.to_string(), v);
@@ -75,6 +130,17 @@ impl Args {
         self.get(key)
             .map(|v| v.parse().map_err(|e| anyhow::anyhow!("--{key} {v}: {e}")))
             .transpose()
+    }
+
+    /// Typed value of an `on|off` flag from [`TOGGLE_FLAGS`]: `None`
+    /// when absent, [`ConfigError::BadToggle`] when the value is
+    /// anything else.
+    pub fn get_toggle(&self, flag: &'static str) -> Result<Option<Toggle>> {
+        debug_assert!(
+            TOGGLE_FLAGS.contains(&flag),
+            "--{flag} is not declared in TOGGLE_FLAGS"
+        );
+        Ok(self.get(flag).map(|v| Toggle::parse(flag, v)).transpose()?)
     }
 
     /// Whether a boolean `--switch` was passed.
@@ -162,5 +228,37 @@ mod tests {
     fn negative_values_are_consumed_by_valued_flags() {
         let a = parse("cmd --slo-ms -5");
         assert_eq!(a.get_f64("slo-ms").unwrap(), Some(-5.0));
+    }
+
+    #[test]
+    fn every_toggle_flag_is_valued_and_typed() {
+        // Enumerates TOGGLE_FLAGS: each flag must consume its value (not
+        // degrade into a switch + stray positional), parse on/off into a
+        // typed Toggle, and reject anything else with a typed
+        // ConfigError naming the flag.
+        for &flag in TOGGLE_FLAGS {
+            let a = parse(&format!("cmd --{flag} on"));
+            assert_eq!(a.positional, vec!["cmd"], "--{flag} must consume its value");
+            assert_eq!(a.get_toggle(flag).unwrap(), Some(Toggle::On));
+            assert!(a.get_toggle(flag).unwrap().unwrap().as_bool());
+
+            let a = parse(&format!("cmd --{flag} off"));
+            assert_eq!(a.get_toggle(flag).unwrap(), Some(Toggle::Off));
+            assert!(!a.get_toggle(flag).unwrap().unwrap().as_bool());
+
+            assert_eq!(parse("cmd").get_toggle(flag).unwrap(), None);
+
+            let err = parse(&format!("cmd --{flag} maybe")).get_toggle(flag).unwrap_err();
+            assert_eq!(
+                err.downcast_ref::<ConfigError>(),
+                Some(&ConfigError::BadToggle { flag, got: "maybe".to_string() }),
+                "--{flag} must reject non on|off values with the typed error"
+            );
+            let msg = err.to_string();
+            assert!(
+                msg.contains(&format!("--{flag}")) && msg.contains("on|off"),
+                "--{flag} rejection must name the flag and the domain: {msg}"
+            );
+        }
     }
 }

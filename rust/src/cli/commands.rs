@@ -27,9 +27,11 @@ COMMANDS
   bench-e3    Fig 5                  — instrumented stage breakdown
   bench-e4    Table 3 + Fig 6/7      — drafter context truncation
   load        serving-like load evaluation: --requests N --rate R --servers K
-  trace-replay  deterministic load replay through the scheduler: seeded Poisson or
-              bursty arrivals over mixed grammar prompts, virtual-clock latency
-              p50/p95/p99 + shed rate (--arrivals, --rate, --slots, --slo-ms)
+  trace-replay  deterministic load replay through the coordinator/worker serving
+              split: seeded Poisson or bursty arrivals over mixed grammar prompts,
+              consistent-hash sharded across --workers engine workers (typed
+              channel RPC), virtual-clock latency p50/p95/p99 + shed rate
+              (--arrivals, --rate, --slots, --workers, --turns, --slo-ms)
   goldens     verify rust PJRT execution against python golden fixtures
   traces      merge + report rank trace files: traces <dir>
 
@@ -76,7 +78,12 @@ COMMON FLAGS
   --arrivals poisson|bursty  trace-replay arrival process (default poisson); bursty
                           is a 2-state Markov-modulated Poisson (--rate low state,
                           --rate-hi high state, --switch-p per-arrival flip chance)
-  --slots B               trace-replay engine slots (serving batch width, default 4)
+  --slots B               trace-replay engine slots per worker (serving batch width,
+                          default 4)
+  --turns T               trace-replay turns per conversation (default 1): above 1,
+                          conversations park after each non-final turn and resume
+                          with a deterministic follow-up prompt (multi-turn
+                          park/resume churn across the channel RPC)
   --prompt-mean N         trace-replay mean prompt length (default 16)
   --shared-prefix N       trace-replay shared-prefix prompt family: every request
                           extends one common N-token system prompt with its own
@@ -85,7 +92,11 @@ COMMON FLAGS
   --draft-window W        truncate drafter context (E4)
   --max-new N             tokens per turn
   --temperature T         0 = greedy (default)
-  --workers N             world size (default 2)
+  --workers N             world size: serve worker threads (default 2), or
+                          trace-replay engine workers behind the channel-RPC
+                          coordinator (default 1 — workers 1 is bit-identical to
+                          single-scheduler replay; any N streams each conversation's
+                          tokens identically, only latency shifts)
   --batch B               engine slots (fused launch width) per worker (serve; default 1;
                           0 is rejected — the config contract requires B >= 1)
   --scheduling P          serve group formation: continuous (default; retired conversations
@@ -179,26 +190,14 @@ pub fn run_config(args: &Args) -> Result<RunConfig> {
     if let Some(c) = args.get("commit-mode") {
         cfg.commit_mode = CommitMode::parse(c)?;
     }
-    if let Some(ks) = args.get("kv-sessions") {
-        cfg.kv_sessions = match ks {
-            "on" => true,
-            "off" => false,
-            other => bail!("unknown --kv-sessions value '{other}' (expected on|off)"),
-        };
+    if let Some(t) = args.get_toggle("kv-sessions")? {
+        cfg.kv_sessions = t.as_bool();
     }
-    if let Some(p) = args.get("pipelining") {
-        cfg.pipelining = match p {
-            "on" => true,
-            "off" => false,
-            other => bail!("unknown --pipelining value '{other}' (expected on|off)"),
-        };
+    if let Some(t) = args.get_toggle("pipelining")? {
+        cfg.pipelining = t.as_bool();
     }
-    if let Some(ps) = args.get("prefix-sharing") {
-        cfg.prefix_sharing = match ps {
-            "on" => true,
-            "off" => false,
-            other => bail!("unknown --prefix-sharing value '{other}' (expected on|off)"),
-        };
+    if let Some(t) = args.get_toggle("prefix-sharing")? {
+        cfg.prefix_sharing = t.as_bool();
     }
     cfg.fast_reorder = !args.has("no-fast-reorder");
     cfg.check_invariants = !args.has("unsafe-indexing");
@@ -217,12 +216,8 @@ pub fn run_config(args: &Args) -> Result<RunConfig> {
     cfg.instrument = args.has("instrument");
     cfg.attention_stats = args.has("attention-stats");
     cfg.adaptive_budget = args.has("adaptive");
-    if let Some(o) = args.get("adaptive-occupancy") {
-        cfg.adaptive_occupancy = match o {
-            "on" => true,
-            "off" => false,
-            other => bail!("unknown --adaptive-occupancy value '{other}' (expected on|off)"),
-        };
+    if let Some(t) = args.get_toggle("adaptive-occupancy")? {
+        cfg.adaptive_occupancy = t.as_bool();
     }
     cfg.validate()?;
     Ok(cfg)
@@ -365,10 +360,7 @@ fn cmd_load(args: &Args) -> Result<()> {
 fn slo_from_args(args: &Args) -> Result<Option<SloPolicy>> {
     let Some(target_ms) = args.get_f64("slo-ms")? else {
         if args.get("slo-action").is_some() {
-            bail!(
-                "config contract: --slo-action requires --slo-ms \
-                 (an action without a deadline does nothing)"
-            );
+            return Err(crate::config::ConfigError::SloActionWithoutDeadline.into());
         }
         return Ok(None);
     };
@@ -407,6 +399,8 @@ fn cmd_trace_replay(args: &Args) -> Result<()> {
         seed: run.seed,
     };
     let mut cfg = ReplayConfig::new(args.get_usize("slots")?.unwrap_or(4));
+    cfg.workers = args.get_usize("workers")?.unwrap_or(1);
+    cfg.turns = args.get_usize("turns")?.unwrap_or(1);
     cfg.agree_pct = args.get_u64("agree")?.unwrap_or(90);
     cfg.slo = slo_from_args(args)?;
     cfg.run = run;
@@ -418,9 +412,11 @@ fn cmd_trace_replay(args: &Args) -> Result<()> {
         None => "none".to_string(),
     };
     println!(
-        "trace-replay: {} requests, {} slots, pipelining {}, SLO {}",
+        "trace-replay: {} requests, {} workers x {} slots, {} turn(s), pipelining {}, SLO {}",
         report.total,
+        cfg.workers,
         cfg.slots,
+        cfg.turns,
         if cfg.run.pipelining { "on" } else { "off" },
         slo_desc,
     );
@@ -617,6 +613,12 @@ mod tests {
     fn trace_replay_smoke_runs_on_sim() {
         let a = parse("trace-replay --requests 8 --rate 50 --slots 2 --max-new 4 --seed 7");
         dispatch(&a).unwrap();
+        // multi-worker + multi-turn park/resume over the channel RPC
+        let a = parse(
+            "trace-replay --requests 8 --rate 50 --slots 2 --workers 3 --turns 2 \
+             --max-new 4 --seed 7",
+        );
+        dispatch(&a).unwrap();
         let a = parse(
             "trace-replay --requests 8 --arrivals bursty --rate 20 --rate-hi 200 \
              --switch-p 0.3 --slots 2 --max-new 4 --pipelining off \
@@ -642,6 +644,8 @@ mod tests {
             ("trace-replay --arrivals bursty --switch-p 0", "--switch-p"),
             ("trace-replay --slo-action shed", "--slo-action"),
             ("trace-replay --shared-prefix 4", "--shared-prefix"),
+            ("trace-replay --workers 0", "--workers"),
+            ("trace-replay --turns 0", "--turns"),
         ] {
             let err = dispatch(&parse(cli)).unwrap_err();
             assert!(
@@ -651,6 +655,31 @@ mod tests {
         }
         assert!(dispatch(&parse("trace-replay --arrivals chaotic")).is_err());
         assert!(dispatch(&parse("trace-replay --slo-ms 40 --slo-action drop")).is_err());
+    }
+
+    #[test]
+    fn contract_errors_are_typed_variants() {
+        use crate::config::ConfigError;
+        let err = run_config(&parse("serve --prefix-sharing on")).unwrap_err();
+        assert_eq!(
+            err.downcast_ref::<ConfigError>(),
+            Some(&ConfigError::PrefixSharingRequiresPaged)
+        );
+        let err = run_config(&parse("serve --adaptive-occupancy on")).unwrap_err();
+        assert_eq!(
+            err.downcast_ref::<ConfigError>(),
+            Some(&ConfigError::OccupancyRequiresAdaptive)
+        );
+        let err = run_config(&parse("serve --pipelining maybe")).unwrap_err();
+        assert_eq!(
+            err.downcast_ref::<ConfigError>(),
+            Some(&ConfigError::BadToggle { flag: "pipelining", got: "maybe".to_string() })
+        );
+        let err = dispatch(&parse("trace-replay --slo-action shed")).unwrap_err();
+        assert_eq!(
+            err.downcast_ref::<ConfigError>(),
+            Some(&ConfigError::SloActionWithoutDeadline)
+        );
     }
 
     #[test]

@@ -3,5 +3,5 @@
 pub mod args;
 pub mod commands;
 
-pub use args::Args;
+pub use args::{Args, Toggle, TOGGLE_FLAGS};
 pub use commands::main_entry;

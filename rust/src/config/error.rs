@@ -1,0 +1,137 @@
+//! Typed configuration-contract errors.
+//!
+//! Every config-contract violation the CLI can produce used to be a
+//! stringly `anyhow::bail!`; callers could only match on substrings.
+//! [`ConfigError`] gives each contract a variant — tests match on the
+//! variant, humans read the same message text as before (the `Display`
+//! impl preserves the exact historical strings, which the flag-naming
+//! regression tests in `cli::commands` pin down).
+//!
+//! The enum converts into `anyhow::Error` through `std::error::Error`,
+//! so existing `?`-based plumbing is unchanged.
+
+/// A configuration contract violation (see module docs).
+#[derive(Clone, Debug, PartialEq)]
+pub enum ConfigError {
+    /// The speculative tree shape is out of range (budget, depth or
+    /// branching); carries the specific message.
+    Tree(String),
+    /// `max_new_tokens` was 0.
+    ZeroMaxNew,
+    /// `--draft-window` below the 4-token grammar-context minimum.
+    DraftWindowTooSmall {
+        /// The rejected window.
+        window: usize,
+    },
+    /// `--temperature` outside `0.0..=2.0`.
+    TemperatureOutOfRange {
+        /// The rejected temperature.
+        temperature: f64,
+    },
+    /// `--prefix-sharing on` without `--cache-layout paged`.
+    PrefixSharingRequiresPaged,
+    /// `--adaptive-occupancy on` without `--adaptive`.
+    OccupancyRequiresAdaptive,
+    /// `--slo-action` given without `--slo-ms`.
+    SloActionWithoutDeadline,
+    /// An `on|off` toggle flag received something else.
+    BadToggle {
+        /// Flag name without the leading dashes (e.g. `pipelining`).
+        flag: &'static str,
+        /// The rejected value.
+        got: String,
+    },
+    /// `--workers 0` (a topology needs at least one engine worker).
+    ZeroWorkers,
+    /// `--turns 0` (a conversation has at least one turn).
+    ZeroTurns,
+}
+
+impl std::fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ConfigError::Tree(msg) => write!(f, "{msg}"),
+            ConfigError::ZeroMaxNew => write!(f, "max_new_tokens must be > 0"),
+            ConfigError::DraftWindowTooSmall { .. } => {
+                write!(f, "draft window below 4 tokens cannot carry grammar context")
+            }
+            ConfigError::TemperatureOutOfRange { temperature } => {
+                write!(f, "temperature out of range: {temperature}")
+            }
+            ConfigError::PrefixSharingRequiresPaged => write!(
+                f,
+                "config contract: --prefix-sharing requires --cache-layout paged \
+                 (sharing maps pool blocks through block tables; flat buffers \
+                 have no blocks to share)"
+            ),
+            ConfigError::OccupancyRequiresAdaptive => write!(
+                f,
+                "config contract: --adaptive-occupancy requires --adaptive \
+                 (occupancy caps the adaptive controller; there is no \
+                 controller to cap without it)"
+            ),
+            ConfigError::SloActionWithoutDeadline => write!(
+                f,
+                "config contract: --slo-action requires --slo-ms \
+                 (an action without a deadline does nothing)"
+            ),
+            ConfigError::BadToggle { flag, got } => {
+                write!(f, "unknown --{flag} value '{got}' (expected on|off)")
+            }
+            ConfigError::ZeroWorkers => write!(
+                f,
+                "config contract: --workers must be >= 1 (got 0) — \
+                 one worker is the single-engine serving path"
+            ),
+            ConfigError::ZeroTurns => write!(
+                f,
+                "config contract: --turns must be >= 1 (got 0) — \
+                 a conversation has at least one turn"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for ConfigError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_preserves_flag_naming_contracts() {
+        // Flag-naming substrings are API: scripts and the CLI regression
+        // tests grep for them.
+        let cases: &[(ConfigError, &str)] = &[
+            (ConfigError::PrefixSharingRequiresPaged, "--prefix-sharing"),
+            (ConfigError::OccupancyRequiresAdaptive, "--adaptive-occupancy"),
+            (ConfigError::SloActionWithoutDeadline, "--slo-action"),
+            (ConfigError::SloActionWithoutDeadline, "--slo-ms"),
+            (ConfigError::ZeroWorkers, "--workers"),
+            (ConfigError::ZeroTurns, "--turns"),
+            (
+                ConfigError::BadToggle { flag: "pipelining", got: "maybe".into() },
+                "--pipelining",
+            ),
+        ];
+        for (err, needle) in cases {
+            assert!(
+                err.to_string().contains(needle),
+                "{err:?} must name {needle}: {err}"
+            );
+        }
+    }
+
+    #[test]
+    fn converts_into_anyhow() {
+        fn takes_anyhow() -> anyhow::Result<()> {
+            Err(ConfigError::ZeroMaxNew.into())
+        }
+        let err = takes_anyhow().unwrap_err();
+        assert!(err.downcast_ref::<ConfigError>().is_some());
+        assert_eq!(
+            *err.downcast_ref::<ConfigError>().unwrap(),
+            ConfigError::ZeroMaxNew
+        );
+    }
+}

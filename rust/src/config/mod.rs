@@ -4,9 +4,11 @@
 //! time so a stale artifact set fails fast instead of miscomputing.
 
 pub mod contract;
+pub mod error;
 pub mod modules;
 pub mod run;
 
 pub use contract::{Contract, Dims, ExecMode};
+pub use error::ConfigError;
 pub use modules::{Capabilities, ModuleKey, ModuleLayout, ModuleRole};
 pub use run::{CacheLayout, CacheStrategy, CommitMode, RunConfig, TreeConfig};

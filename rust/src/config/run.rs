@@ -10,6 +10,7 @@
 //!   * `check_invariants` — §3.2 structural invariant enforcement.
 
 use super::contract::ExecMode;
+use super::error::ConfigError;
 use crate::json::Json;
 use anyhow::{bail, Result};
 
@@ -243,33 +244,30 @@ impl Default for RunConfig {
 }
 
 impl RunConfig {
-    /// Reject invalid combinations before any decoding starts.
-    pub fn validate(&self) -> Result<()> {
-        self.tree.validate()?;
+    /// Reject invalid combinations before any decoding starts. Each
+    /// contract gets a typed [`ConfigError`] variant (the `Display`
+    /// strings are unchanged — callers matching on text keep working,
+    /// callers matching on variants no longer have to).
+    pub fn validate(&self) -> Result<(), ConfigError> {
+        if let Err(e) = self.tree.validate() {
+            return Err(ConfigError::Tree(format!("{e:#}")));
+        }
         if self.max_new_tokens == 0 {
-            bail!("max_new_tokens must be > 0");
+            return Err(ConfigError::ZeroMaxNew);
         }
         if let Some(w) = self.draft_window {
             if w < 4 {
-                bail!("draft window below 4 tokens cannot carry grammar context");
+                return Err(ConfigError::DraftWindowTooSmall { window: w });
             }
         }
         if !(0.0..=2.0).contains(&self.temperature) {
-            bail!("temperature out of range: {}", self.temperature);
+            return Err(ConfigError::TemperatureOutOfRange { temperature: self.temperature });
         }
         if self.prefix_sharing && self.cache_layout != CacheLayout::Paged {
-            bail!(
-                "config contract: --prefix-sharing requires --cache-layout paged \
-                 (sharing maps pool blocks through block tables; flat buffers \
-                 have no blocks to share)"
-            );
+            return Err(ConfigError::PrefixSharingRequiresPaged);
         }
         if self.adaptive_occupancy && !self.adaptive_budget {
-            bail!(
-                "config contract: --adaptive-occupancy requires --adaptive \
-                 (occupancy caps the adaptive controller; there is no \
-                 controller to cap without it)"
-            );
+            return Err(ConfigError::OccupancyRequiresAdaptive);
         }
         Ok(())
     }
@@ -349,6 +347,32 @@ mod tests {
     #[test]
     fn pipelining_defaults_on() {
         assert!(RunConfig::default().pipelining, "pipelining must default on");
+    }
+
+    #[test]
+    fn validate_errors_are_typed_variants() {
+        // Tests (and callers) match on the variant, not the message.
+        let mut c = RunConfig::default();
+        c.max_new_tokens = 0;
+        assert_eq!(c.validate().unwrap_err(), ConfigError::ZeroMaxNew);
+        let mut c = RunConfig::default();
+        c.draft_window = Some(2);
+        assert_eq!(c.validate().unwrap_err(), ConfigError::DraftWindowTooSmall { window: 2 });
+        let mut c = RunConfig::default();
+        c.temperature = 3.5;
+        assert_eq!(
+            c.validate().unwrap_err(),
+            ConfigError::TemperatureOutOfRange { temperature: 3.5 }
+        );
+        let mut c = RunConfig::default();
+        c.prefix_sharing = true;
+        assert_eq!(c.validate().unwrap_err(), ConfigError::PrefixSharingRequiresPaged);
+        let mut c = RunConfig::default();
+        c.adaptive_occupancy = true;
+        assert_eq!(c.validate().unwrap_err(), ConfigError::OccupancyRequiresAdaptive);
+        let mut c = RunConfig::default();
+        c.tree.budget = 0;
+        assert!(matches!(c.validate().unwrap_err(), ConfigError::Tree(_)));
     }
 
     #[test]

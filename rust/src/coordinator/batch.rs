@@ -825,6 +825,21 @@ impl ContinuousScheduler {
         self.slots.iter().filter(|s| matches!(s, Slot::Active { .. })).count()
     }
 
+    /// `(slot index, conversation id)` of every active slot, in slot
+    /// order. The worker's per-tick streaming loop uses this to map
+    /// slot engines back to the conversation ids it reports
+    /// `TokenDelta`s under.
+    pub fn active_ids(&self) -> Vec<(usize, u64)> {
+        self.slots
+            .iter()
+            .enumerate()
+            .filter_map(|(i, s)| match s {
+                Slot::Active { id, .. } => Some((i, *id)),
+                Slot::Free => None,
+            })
+            .collect()
+    }
+
     /// Whether the scheduler has nothing queued, nothing active and
     /// nothing in flight on the device. Parked conversations do **not**
     /// block idleness — they are dormant until the caller resumes them
@@ -850,20 +865,26 @@ impl ContinuousScheduler {
     /// (its token is dropped un-awaited — the backend keeps the pending
     /// entry, which a reused backend tolerates; outputs are discarded
     /// along with the conversations that wanted them). Undrained shed
-    /// notices are dropped with the epoch they describe — a post-abort
+    /// notices are **returned**, not dropped — sheds are externally
+    /// visible accounting (a request was refused service) and must
+    /// survive the teardown of the epoch that raised them; a worker
+    /// folds them into its final `WorkerStats` so a shed raised after
+    /// the coordinator stopped reading per-tick events still lands in
+    /// the aggregated report. A post-abort
     /// [`ContinuousScheduler::drain_shed`] starts empty.
-    pub fn abort_all(&mut self) {
+    #[must_use = "returned shed notices are externally visible accounting; dropping them loses sheds"]
+    pub fn abort_all(&mut self) -> Vec<ShedNotice> {
         self.queue.clear();
         self.parked.clear();
         self.inflight = None;
         self.inflight_members.clear();
-        self.shed_notices.clear();
         for s in self.slots.iter_mut() {
             *s = Slot::Free;
         }
         for s in self.slot_slo.iter_mut() {
             *s = None;
         }
+        std::mem::take(&mut self.shed_notices)
     }
 
     fn ensure_slots(&mut self, n: usize) -> Result<()> {

@@ -1,0 +1,538 @@
+//! The coordinator front end: admission, consistent-hash routing and
+//! event aggregation over N engine workers.
+//!
+//! This is the other half of the serving split whose worker side lives
+//! in [`crate::coordinator::worker`]: a [`Coordinator`] owns one
+//! command channel per worker plus a single merged event channel, all
+//! typed [`crate::rpc`] channels whose codec is a type parameter
+//! (default [`JsonCodec`]). It shares no memory with its workers —
+//! conversations go out as [`wire::Submit`]/[`wire::Resume`] commands,
+//! tokens come back as [`wire::TokenDelta`] streams.
+//!
+//! # Routing
+//!
+//! Conversations shard by **consistent hash** of the conversation id
+//! over a [`HashRing`] with virtual replicas — not `id % workers` — so
+//! a conversation's home worker is a stable function of its id alone,
+//! and changing the worker count moves only `~1/N` of the id space.
+//! Both the channel-RPC path here and the direct-drive workload runner
+//! ([`crate::coordinator::run_workload`]) route through the same ring,
+//! so a conversation lands on the same shard in either serving mode.
+//!
+//! # Shutdown and drain
+//!
+//! [`Coordinator::shutdown`] drops every command sender — channel
+//! hangup **is** the shutdown signal; there is no poison message to
+//! race with — then keeps draining events until each worker's final
+//! [`wire::WorkerStats`] (`is_final: true`) arrives, and only then
+//! joins the threads. The final stats carry whatever shed notices the
+//! worker's scheduler still held when it aborted, so sheds raised after
+//! the coordinator stopped reading per-tick events still reach the
+//! aggregated [`ShutdownReport`] instead of vanishing with the worker.
+
+use crate::coordinator::batch::{SchedulerStats, ShedNotice as SchedShedNotice, SloPolicy};
+use crate::coordinator::runner::BackendSpec;
+use crate::coordinator::worker::{run_worker, WorkerConfig};
+use crate::config::RunConfig;
+use crate::rpc::envelope as wire;
+use crate::rpc::{wire_channel, ChannelError, Codec, Envelope, JsonCodec, WireReceiver, WireSender};
+use crate::util::rng::{splitmix64, SplitMix64};
+use crate::workload::TraceRequest;
+use anyhow::{bail, ensure, Context, Result};
+use std::collections::{HashMap, VecDeque};
+use std::thread::JoinHandle;
+
+/// Virtual replicas per worker on the [`HashRing`]. More replicas
+/// smooth the shard sizes; 64 keeps the spread within a few percent at
+/// the worker counts this crate serves (1–16).
+const RING_REPLICAS: usize = 64;
+
+/// A consistent-hash ring: each worker owns [`RING_REPLICAS`] pseudo-
+/// random points on the `u64` circle, and an id routes to the owner of
+/// the first point at or after its hash (wrapping). Deterministic —
+/// the points depend only on the worker count.
+#[derive(Clone, Debug)]
+pub struct HashRing {
+    /// `(point, rank)` pairs sorted by point.
+    points: Vec<(u64, usize)>,
+}
+
+impl HashRing {
+    /// Build the ring for `workers` ranks (`workers >= 1`).
+    pub fn new(workers: usize) -> Self {
+        assert!(workers >= 1, "a hash ring needs at least one worker");
+        let mut points = Vec::with_capacity(workers * RING_REPLICAS);
+        for rank in 0..workers {
+            let mut rng = SplitMix64::new(0x9e37_79b9_7f4a_7c15 ^ rank as u64);
+            for _ in 0..RING_REPLICAS {
+                points.push((rng.next_u64(), rank));
+            }
+        }
+        points.sort_unstable();
+        Self { points }
+    }
+
+    /// The rank serving conversation `id`.
+    pub fn route(&self, id: u64) -> usize {
+        let h = splitmix64(id);
+        let i = self.points.partition_point(|&(p, _)| p < h);
+        if i < self.points.len() {
+            self.points[i].1
+        } else {
+            self.points[0].1
+        }
+    }
+
+    /// Number of ranks on the ring.
+    pub fn workers(&self) -> usize {
+        self.points.iter().map(|&(_, r)| r).max().map_or(0, |r| r + 1)
+    }
+}
+
+/// Configuration of a coordinator/worker serving topology.
+#[derive(Clone, Debug)]
+pub struct FrontConfig {
+    /// Number of engine workers (threads). `1` reproduces the
+    /// single-worker path bit-identically.
+    pub workers: usize,
+    /// Engine slots (fused launch width) per worker.
+    pub slots: usize,
+    /// Backend each worker builds in-thread.
+    pub backend: BackendSpec,
+    /// Per-slot engine configuration.
+    pub run: RunConfig,
+    /// Virtual milliseconds charged per scheduler tick.
+    pub tick_host_ms: f64,
+    /// Virtual milliseconds charged per fused launch.
+    pub launch_ms: f64,
+    /// Command-channel depth per worker (backpressure bound).
+    pub cmd_depth: usize,
+    /// Merged event-channel depth (backpressure bound).
+    pub event_depth: usize,
+}
+
+impl FrontConfig {
+    /// A topology with the replay harness's default virtual-cost model
+    /// and channel depths.
+    pub fn new(workers: usize, slots: usize, backend: BackendSpec, run: RunConfig) -> Self {
+        Self {
+            workers,
+            slots,
+            backend,
+            run,
+            tick_host_ms: 1.0,
+            launch_ms: 2.0,
+            cmd_depth: 64,
+            event_depth: 256,
+        }
+    }
+
+    /// Reject degenerate topologies before any thread spawns.
+    pub fn validate(&self) -> Result<()> {
+        if self.workers == 0 {
+            bail!(
+                "config contract: --workers must be >= 1 (got 0) — \
+                 one worker is the single-engine serving path"
+            );
+        }
+        if self.slots == 0 {
+            bail!("config contract: --slots must be >= 1 (got 0) — one slot is sequential replay");
+        }
+        if self.cmd_depth == 0 || self.event_depth == 0 {
+            bail!("config contract: channel depths must be >= 1 (a zero-depth channel deadlocks)");
+        }
+        self.run.validate()?;
+        Ok(())
+    }
+}
+
+/// Everything one conversation produced across its turns.
+#[derive(Clone, Debug)]
+pub struct ConversationOutcome {
+    /// Conversation id from the trace.
+    pub id: u64,
+    /// The worker rank that served it (consistent-hash routed).
+    pub rank: usize,
+    /// All generated tokens, turns concatenated in order — the stream
+    /// the client saw, reassembled from [`wire::TokenDelta`]s and
+    /// verified against each turn's completion record.
+    pub tokens: Vec<i32>,
+    /// Per-turn completion records.
+    pub turns: Vec<wire::TurnDone>,
+    /// Present when the conversation was shed pre-admission instead of
+    /// served.
+    pub shed: Option<SchedShedNotice>,
+}
+
+/// Aggregated result of [`Coordinator::run_trace`].
+#[derive(Clone, Debug)]
+pub struct TraceOutcome {
+    /// One outcome per trace request, in trace order.
+    pub outcomes: Vec<ConversationOutcome>,
+    /// Per-rank scheduler counters at the end of the batch (default for
+    /// ranks the ring gave no conversations).
+    pub stats: Vec<SchedulerStats>,
+}
+
+/// Aggregated result of [`Coordinator::shutdown`].
+#[derive(Clone, Debug)]
+pub struct ShutdownReport {
+    /// Final per-rank scheduler counters (from the drain handshake).
+    pub stats: Vec<SchedulerStats>,
+    /// Shed notices still undrained when workers aborted — raised after
+    /// the coordinator stopped reading per-tick events, surfaced here
+    /// instead of being dropped (`(rank, notice)` pairs).
+    pub undrained_shed: Vec<(usize, SchedShedNotice)>,
+    /// Per-rank failure message, if the worker exited with an error.
+    pub errors: Vec<Option<String>>,
+}
+
+impl ShutdownReport {
+    /// Total sheds across ranks, served batches and undrained remainder
+    /// alike.
+    pub fn total_shed(&self) -> u64 {
+        self.stats.iter().map(|s| s.shed).sum()
+    }
+}
+
+/// Per-conversation bookkeeping during [`Coordinator::run_trace`].
+struct ConvState {
+    rank: usize,
+    max_new: usize,
+    /// Tokens reassembled from deltas, per turn index.
+    streamed: Vec<Vec<i32>>,
+    turns: Vec<wire::TurnDone>,
+    shed: Option<SchedShedNotice>,
+    released: bool,
+}
+
+/// The routing front end over N engine workers (see module docs). The
+/// codec type parameter picks the wire format of every channel in the
+/// topology; [`JsonCodec`] is the default.
+pub struct Coordinator<C: Codec = JsonCodec> {
+    cmd: Vec<WireSender<Envelope, C>>,
+    events: WireReceiver<Envelope, C>,
+    handles: Vec<JoinHandle<()>>,
+    ring: HashRing,
+    /// Events drained by [`Coordinator::pump`] while a command send was
+    /// waiting for channel capacity, replayed before live receives.
+    buffered: VecDeque<Envelope>,
+}
+
+impl<C: Codec> Coordinator<C> {
+    /// Validate the topology, spawn its worker threads and connect the
+    /// channels. Workers build their backends lazily on their own
+    /// threads; a backend that fails to build reports through its final
+    /// stats message, not a panic.
+    pub fn start(cfg: &FrontConfig) -> Result<Self> {
+        cfg.validate()?;
+        let (event_tx, events) = wire_channel::<Envelope, C>(cfg.event_depth);
+        let mut cmd = Vec::with_capacity(cfg.workers);
+        let mut handles = Vec::with_capacity(cfg.workers);
+        for rank in 0..cfg.workers {
+            let (cmd_tx, cmd_rx) = wire_channel::<Envelope, C>(cfg.cmd_depth);
+            let wcfg = WorkerConfig {
+                rank,
+                slots: cfg.slots,
+                backend: cfg.backend.clone(),
+                run: cfg.run.clone(),
+                tick_host_ms: cfg.tick_host_ms,
+                launch_ms: cfg.launch_ms,
+            };
+            let worker_events = event_tx.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("engine-worker-{rank}"))
+                .spawn(move || run_worker::<C>(wcfg, cmd_rx, worker_events))
+                .with_context(|| format!("spawning engine worker {rank}"))?;
+            cmd.push(cmd_tx);
+            handles.push(handle);
+        }
+        // The coordinator holds no event sender: once every worker
+        // exits, `events.recv()` reports hangup instead of blocking.
+        drop(event_tx);
+        Ok(Self { cmd, events, handles, ring: HashRing::new(cfg.workers), buffered: VecDeque::new() })
+    }
+
+    /// Number of workers in the topology.
+    pub fn world_size(&self) -> usize {
+        self.cmd.len()
+    }
+
+    /// The rank that serves conversation `id` (consistent hash).
+    pub fn route(&self, id: u64) -> usize {
+        self.ring.route(id)
+    }
+
+    /// Serve one trace as a batch: route every request to its shard,
+    /// drive `turns` turns per conversation (deterministic follow-up
+    /// prompts, park/resume across turns), and reassemble each
+    /// conversation's token stream. Returns outcomes in trace order.
+    ///
+    /// The token stream of every conversation is a function of the
+    /// trace alone — independent of the worker count — because each
+    /// conversation decodes on exactly one worker and the per-worker
+    /// replay protocol is deterministic (see `coordinator::worker`).
+    pub fn run_trace(
+        &mut self,
+        trace: &[TraceRequest],
+        slo: Option<SloPolicy>,
+        turns: usize,
+    ) -> Result<TraceOutcome> {
+        ensure!(
+            turns >= 1,
+            "config contract: --turns must be >= 1 (got 0) — a conversation has at least one turn"
+        );
+        ensure!(!trace.is_empty(), "config contract: --requests must be >= 1 (an empty trace replays nothing)");
+        let world = self.world_size();
+        // Shard in trace order; per-rank arrival order is inherited.
+        let mut per_rank: Vec<Vec<wire::Submit>> = vec![Vec::new(); world];
+        let mut st: HashMap<u64, ConvState> = HashMap::new();
+        for r in trace {
+            let rank = self.ring.route(r.id);
+            ensure!(
+                st.insert(
+                    r.id,
+                    ConvState {
+                        rank,
+                        max_new: r.max_new,
+                        streamed: Vec::new(),
+                        turns: Vec::new(),
+                        shed: None,
+                        released: false,
+                    },
+                )
+                .is_none(),
+                "duplicate conversation id {} in trace",
+                r.id
+            );
+            per_rank[rank].push(wire::Submit {
+                id: r.id,
+                prompt: r.prompt.clone(),
+                max_new: r.max_new,
+                arrival_ms: r.arrival_ms,
+                kind: wire::RequestKind::Ea,
+                park_on_complete: turns > 1,
+                slo,
+                last: false,
+                isolated: false,
+            });
+        }
+        let mut participants = 0usize;
+        for shard in per_rank.iter_mut() {
+            if let Some(last) = shard.last_mut() {
+                last.last = true;
+                participants += 1;
+            }
+        }
+        // Submit every shard. Workers buffer until their `last` marker,
+        // so cross-rank interleaving is irrelevant to the outcome; the
+        // pump inside `send_cmd` keeps draining events so a worker that
+        // already started replaying cannot deadlock us.
+        for (rank, shard) in per_rank.iter().enumerate() {
+            for s in shard {
+                self.send_cmd(rank, &Envelope::Submit(s.clone()))?;
+            }
+        }
+        // Event loop: a batch is over when every participating rank has
+        // sent its end-of-batch (non-final) stats report, which each
+        // worker emits strictly after its last completion and shed
+        // notice of the batch.
+        let mut stats: Vec<Option<SchedulerStats>> = vec![None; world];
+        let mut pending = participants;
+        while pending > 0 {
+            match self.next_event()? {
+                Envelope::TokenDelta(d) => {
+                    let c = st
+                        .get_mut(&d.id)
+                        .with_context(|| format!("token delta for unknown conversation {}", d.id))?;
+                    while c.streamed.len() <= d.turn {
+                        c.streamed.push(Vec::new());
+                    }
+                    c.streamed[d.turn].extend_from_slice(&d.tokens);
+                }
+                Envelope::Park(p) => {
+                    let id = p.done.id;
+                    let next_turn = p.done.turn + 1;
+                    let (rank, prompt, max_new) = {
+                        let c = st
+                            .get_mut(&id)
+                            .with_context(|| format!("park for unknown conversation {id}"))?;
+                        Self::record_turn(c, p.done)?;
+                        let ctx: Vec<i32> =
+                            c.turns.iter().flat_map(|t| t.out.tokens.iter().copied()).collect();
+                        (c.rank, followup_prompt(&ctx), c.max_new)
+                    };
+                    ensure!(next_turn < turns, "conversation {id} parked after its final turn");
+                    let resume = wire::Resume {
+                        id,
+                        prompt,
+                        max_new,
+                        park_on_complete: next_turn < turns - 1,
+                    };
+                    self.send_cmd(rank, &Envelope::Resume(resume))?;
+                }
+                Envelope::Completion(cm) => {
+                    let id = cm.done.id;
+                    let c = st
+                        .get_mut(&id)
+                        .with_context(|| format!("completion for unknown conversation {id}"))?;
+                    Self::record_turn(c, cm.done)?;
+                    c.released = true;
+                }
+                Envelope::ShedNotice(sn) => {
+                    let c = st.get_mut(&sn.notice.id).with_context(|| {
+                        format!("shed notice for unknown conversation {}", sn.notice.id)
+                    })?;
+                    c.shed = Some(sn.notice);
+                }
+                Envelope::WorkerStats(ws) if !ws.is_final => {
+                    stats[ws.rank] = Some(ws.stats);
+                    pending -= 1;
+                }
+                Envelope::WorkerStats(ws) => {
+                    bail!(
+                        "worker {} exited mid-batch: {}",
+                        ws.rank,
+                        ws.error.as_deref().unwrap_or("shutdown")
+                    );
+                }
+                other => bail!("protocol violation: '{}' on the event channel", other.kind_str()),
+            }
+        }
+        let outcomes = trace
+            .iter()
+            .map(|r| {
+                let c = st.remove(&r.id).expect("every trace id was registered");
+                ensure!(
+                    c.released || c.shed.is_some(),
+                    "conversation {} reached no terminal state (batch reported complete)",
+                    r.id
+                );
+                ensure!(
+                    c.shed.is_none() || c.turns.is_empty(),
+                    "conversation {} both served and shed",
+                    r.id
+                );
+                Ok(ConversationOutcome {
+                    id: r.id,
+                    rank: c.rank,
+                    tokens: c.turns.iter().flat_map(|t| t.out.tokens.iter().copied()).collect(),
+                    turns: c.turns,
+                    shed: c.shed,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(TraceOutcome {
+            outcomes,
+            stats: stats.into_iter().map(Option::unwrap_or_default).collect(),
+        })
+    }
+
+    /// Drop the command channels (hangup is the shutdown signal), drain
+    /// events until every worker's final stats handshake arrives, then
+    /// join the threads.
+    pub fn shutdown(mut self) -> Result<ShutdownReport> {
+        self.cmd.clear();
+        let world = self.handles.len();
+        let mut stats = vec![SchedulerStats::default(); world];
+        let mut errors: Vec<Option<String>> = vec![None; world];
+        let mut undrained: Vec<(usize, SchedShedNotice)> = Vec::new();
+        let mut finals = 0usize;
+        while finals < world {
+            let env = match self.buffered.pop_front() {
+                Some(e) => e,
+                None => match self.events.recv() {
+                    Ok(e) => e,
+                    Err(ChannelError::Disconnected) => break,
+                    Err(e) => return Err(e).context("draining events during shutdown"),
+                },
+            };
+            match env {
+                Envelope::WorkerStats(ws) if ws.is_final => {
+                    undrained.extend(ws.shed.into_iter().map(|n| (ws.rank, n)));
+                    stats[ws.rank] = ws.stats;
+                    errors[ws.rank] = ws.error;
+                    finals += 1;
+                }
+                Envelope::ShedNotice(sn) => undrained.push((sn.rank, sn.notice)),
+                // Late deltas/completions of an interrupted batch: the
+                // run that wanted them already returned.
+                _ => {}
+            }
+        }
+        for h in self.handles.drain(..) {
+            h.join().map_err(|_| anyhow::anyhow!("an engine worker panicked"))?;
+        }
+        ensure!(
+            finals == world,
+            "only {finals}/{world} workers completed the shutdown handshake"
+        );
+        Ok(ShutdownReport { stats, undrained_shed: undrained, errors })
+    }
+
+    /// Verify a turn's reassembled delta stream against its completion
+    /// record, then file the record.
+    fn record_turn(c: &mut ConvState, td: wire::TurnDone) -> Result<()> {
+        ensure!(
+            td.turn == c.turns.len(),
+            "conversation {}: turn {} completed out of order (expected {})",
+            td.id,
+            td.turn,
+            c.turns.len()
+        );
+        let streamed = c.streamed.get(td.turn).map_or(&[][..], Vec::as_slice);
+        ensure!(
+            streamed == td.out.tokens.as_slice(),
+            "conversation {}: turn {} token stream diverged from its completion record",
+            td.id,
+            td.turn
+        );
+        c.turns.push(td);
+        Ok(())
+    }
+
+    /// Send a command, pumping the event channel while the command
+    /// channel is at capacity (a blocking send from both ends of two
+    /// bounded channels is the classic two-party deadlock).
+    fn send_cmd(&mut self, rank: usize, env: &Envelope) -> Result<()> {
+        loop {
+            match self.cmd[rank].try_send(env) {
+                Ok(true) => return Ok(()),
+                Ok(false) => {
+                    self.pump()?;
+                    std::thread::yield_now();
+                }
+                Err(e) => {
+                    return Err(e).with_context(|| format!("command channel to worker {rank}"))
+                }
+            }
+        }
+    }
+
+    /// Drain every queued event into the replay buffer without blocking.
+    fn pump(&mut self) -> Result<()> {
+        while let Some(e) = self.events.try_recv()? {
+            self.buffered.push_back(e);
+        }
+        Ok(())
+    }
+
+    /// Next event: replay the pump buffer first, then receive live.
+    fn next_event(&mut self) -> Result<Envelope> {
+        if let Some(e) = self.buffered.pop_front() {
+            return Ok(e);
+        }
+        self.events.recv().context("waiting for worker events")
+    }
+}
+
+/// The deterministic follow-up prompt of a multi-turn conversation: a
+/// pure function of the tokens generated so far, so every topology
+/// (and the sequential reference) asks the same questions.
+pub fn followup_prompt(generated: &[i32]) -> Vec<i32> {
+    match generated {
+        [] => vec![1],
+        [only] => vec![*only, *only],
+        [.., a, b] => vec![*b, *a],
+    }
+}

@@ -1,15 +1,25 @@
-//! The serving coordinator (paper §4.4): deterministic prompt sharding
-//! across worker threads, continuous cross-request batched verification
-//! ([`ContinuousScheduler`]), per-rank trace files, rank-0 merge.
+//! The serving coordinator (paper §4.4): continuous cross-request
+//! batched verification ([`ContinuousScheduler`]), consistent-hash
+//! prompt sharding, per-rank trace files, rank-0 merge — and the
+//! multi-worker serving split: a routing [`Coordinator`] front end
+//! ([`front`]) driving N per-thread engine workers ([`worker`]) over
+//! typed channel RPC ([`crate::rpc`]).
 
 pub mod batch;
+pub mod front;
 pub mod load;
 pub mod runner;
+pub mod worker;
 
 pub use batch::{
     decode_speculative_batch, Completion, ContinuousScheduler, Disposition, FusedVerifier,
     InFlightLaunch, SchedulerStats, ShedNotice, SloAction, SloPolicy, SlotRequest, StageOutcome,
     StagedLaunch,
 };
+pub use front::{
+    followup_prompt, ConversationOutcome, Coordinator, FrontConfig, HashRing, ShutdownReport,
+    TraceOutcome,
+};
 pub use load::{run_load, LoadReport, LoadSpec};
 pub use runner::{run_workload, AdmissionPolicy, BackendSpec, CoordinatorConfig};
+pub use worker::{run_worker, EngineWorker, WorkerConfig};

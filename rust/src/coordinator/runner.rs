@@ -1,9 +1,11 @@
 //! Multi-worker workload runner.
 //!
 //! Mirrors the paper's distributed evaluation protocol (§4.4):
-//! * conversations are sharded deterministically by
-//!   `conversation_id % world_size` (the paper's `prompt_id mod
-//!   world_size` on 8 NPUs — here: worker threads, each owning its own
+//! * conversations are sharded deterministically by **consistent hash**
+//!   of the conversation id (the same [`crate::coordinator::HashRing`]
+//!   the channel-RPC front end routes with, so both serving modes agree
+//!   on every conversation's home rank — the paper shards `prompt_id`
+//!   across 8 NPUs; here ranks are worker threads, each owning its own
 //!   PJRT client/executables, since PJRT handles are not Send);
 //! * each rank writes an independent `trace_rank{r}.jsonl`;
 //! * rank 0 merges them into a globally sorted `trace_merged.jsonl`.
@@ -183,12 +185,17 @@ pub fn run_workload(cfg: &CoordinatorConfig) -> Result<Vec<TurnRecord>> {
     let done = AtomicUsize::new(0);
     let total = conversations.len();
 
+    // Same consistent-hash ring as the channel-RPC front end
+    // (`coordinator::front`): a conversation's home rank is a stable
+    // function of its id alone, for any world size.
+    let ring = crate::coordinator::front::HashRing::new(cfg.world_size);
+
     std::thread::scope(|scope| -> Result<()> {
         let mut handles = Vec::new();
         for rank in 0..cfg.world_size {
             let convs: Vec<ConversationSpec> = conversations
                 .iter()
-                .filter(|c| c.id % cfg.world_size == rank)
+                .filter(|c| ring.route(c.id as u64) == rank)
                 .cloned()
                 .collect();
             let cfg_ref = &*cfg;
@@ -423,7 +430,16 @@ fn run_group_ea(
         // records yet in isolation on the sequential path (its own
         // errors dump only itself). Conversations with partial records
         // cannot be replayed without duplicating turns — dump those.
-        sched.abort_all();
+        for shed in sched.abort_all() {
+            // Sheds are externally visible accounting even when the
+            // epoch that raised them is being torn down — surface them
+            // instead of dropping them with the aborted group.
+            eprintln!(
+                "rank {rank}: conversation {} shed before group abort \
+                 (waited {:.2} virtual ms past a {:.0} ms target)",
+                shed.id, shed.waited_ms, shed.target_ms
+            );
+        }
         for eng in engines.iter_mut() {
             eng.reset();
         }

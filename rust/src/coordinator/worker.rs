@@ -1,0 +1,470 @@
+//! The engine worker: one serving thread owning a backend, its engine
+//! slots, the per-worker cache pools and a [`ContinuousScheduler`],
+//! driven entirely through typed channel RPC ([`crate::rpc`]).
+//!
+//! A worker is spawned by the coordinator front end
+//! ([`crate::coordinator::front::Coordinator`]) with a command receiver
+//! and an event sender; it never shares memory with the coordinator —
+//! every message crosses as serialized bytes. The worker serves
+//! *batches*: it buffers [`wire::Submit`] commands until one arrives
+//! with `last: true`, then replays the buffered arrivals on its own
+//! virtual clock (the exact protocol of `harness::replay`, per shard),
+//! streaming [`wire::TokenDelta`]s after every tick and reporting each
+//! finished turn as a [`wire::Park`] or [`wire::Completion`].
+//!
+//! # Determinism
+//!
+//! Two rules make a worker's behavior a pure function of its command
+//! sequence, independent of thread scheduling and channel timing:
+//!
+//! 1. **Batch buffering** — no tick runs until the batch is complete,
+//!    so the virtual clock never observes *when* commands arrived, only
+//!    the `arrival_ms` they carry.
+//! 2. **Synchronous park resolution** — after any tick that parked
+//!    conversations, the worker blocks until every park's
+//!    [`wire::Resume`] has arrived before ticking again, so the tick at
+//!    which a resumed conversation re-enters the queue is fixed by the
+//!    protocol, not by how fast the coordinator answered.
+//!
+//! This is what makes `--workers N` token streams bit-identical to
+//! `--workers 1` per conversation (property-tested in
+//! `tests/multiworker.rs`).
+//!
+//! # Shutdown
+//!
+//! Command-channel hangup is the shutdown signal. The worker stops
+//! where it is, aborts in-flight work, and sends one final
+//! [`wire::WorkerStats`] (`is_final: true`) carrying its cumulative
+//! counters and — the part that used to be silently lost — every shed
+//! notice still undrained at abort time
+//! ([`ContinuousScheduler::abort_all`] returns them since the
+//! multi-worker split; see the regression test in
+//! `tests/multiworker.rs`).
+
+use crate::cache::CachePools;
+use crate::config::RunConfig;
+use crate::coordinator::batch::{Completion, ContinuousScheduler, Disposition, SlotRequest};
+use crate::coordinator::runner::BackendSpec;
+use crate::engine::Engine;
+use crate::rpc::envelope as wire;
+use crate::rpc::{ChannelError, Codec, Envelope, WireReceiver, WireSender};
+use anyhow::{bail, Context, Result};
+use std::collections::{HashMap, HashSet};
+
+/// Everything a worker thread needs to build itself (the coordinator
+/// passes this by value — workers share no construction state).
+#[derive(Clone, Debug)]
+pub struct WorkerConfig {
+    /// This worker's rank in `0..workers`.
+    pub rank: usize,
+    /// Engine slots (fused launch width) of this worker's scheduler.
+    pub slots: usize,
+    /// Backend to build in-thread (PJRT handles are `!Send` — the spec
+    /// crosses the thread boundary, the backend never does).
+    pub backend: BackendSpec,
+    /// Per-slot engine configuration.
+    pub run: RunConfig,
+    /// Virtual milliseconds charged per scheduler tick (host half).
+    pub tick_host_ms: f64,
+    /// Virtual milliseconds charged per fused launch (device half).
+    pub launch_ms: f64,
+}
+
+/// How a batch replay ended.
+enum BatchEnd {
+    /// Every buffered conversation completed or shed.
+    Done,
+    /// The command channel hung up mid-batch (coordinator shutdown).
+    Hangup,
+}
+
+/// One serving thread's owned state: backend, slot engines, a
+/// sequential retry/baseline engine, shared per-worker cache pools and
+/// the continuous scheduler. Built and driven entirely on the worker
+/// thread by [`run_worker`]; the `Send` bound on
+/// [`crate::cache::KvStore`] (and `Arc`-based [`crate::cache::SharedPool`])
+/// is what lets the pieces be assembled here at all.
+pub struct EngineWorker {
+    rank: usize,
+    backend: Box<dyn crate::backend::ModelBackend>,
+    engines: Vec<Engine>,
+    /// Dedicated engine for synchronous service: baseline-kind requests
+    /// and `isolated` retries never touch the scheduler's slot engines.
+    seq_engine: Engine,
+    sched: ContinuousScheduler,
+    tick_host_ms: f64,
+    launch_ms: f64,
+    /// Whether each conversation's *current* turn parks on completion
+    /// (set by its `Submit`, refreshed by every `Resume`).
+    park_next: HashMap<u64, bool>,
+    /// Zero-based index of each conversation's current turn.
+    turn_of: HashMap<u64, usize>,
+    /// Tokens of the current turn already streamed as deltas.
+    sent: HashMap<u64, usize>,
+}
+
+impl EngineWorker {
+    /// Build the worker's full serving stack (backend, warmed engines,
+    /// pools, scheduler) in the calling thread.
+    pub fn build(cfg: &WorkerConfig) -> Result<Self> {
+        anyhow::ensure!(cfg.slots >= 1, "worker {}: slots must be >= 1", cfg.rank);
+        let mut backend =
+            cfg.backend.build_boxed().with_context(|| format!("worker {} backend", cfg.rank))?;
+        let pools = CachePools::new(backend.contract());
+        let mut engines: Vec<Engine> = (0..cfg.slots)
+            .map(|_| Engine::with_pools(&*backend, cfg.run.clone(), &pools))
+            .collect();
+        let mut seq_engine = Engine::with_pools(&*backend, cfg.run.clone(), &pools);
+        for e in engines.iter_mut() {
+            e.warmup(&mut *backend)?;
+        }
+        seq_engine.warmup(&mut *backend)?;
+        let mut sched = ContinuousScheduler::new(cfg.slots, backend.contract().cache_cap);
+        sched.set_pipelining(cfg.run.pipelining);
+        Ok(Self {
+            rank: cfg.rank,
+            backend,
+            engines,
+            seq_engine,
+            sched,
+            tick_host_ms: cfg.tick_host_ms,
+            launch_ms: cfg.launch_ms,
+            park_next: HashMap::new(),
+            turn_of: HashMap::new(),
+            sent: HashMap::new(),
+        })
+    }
+
+    /// Serve command batches until hangup (clean shutdown). `Ok(())`
+    /// means shutdown; `Err` is a protocol or engine failure the caller
+    /// reports in the final stats message.
+    fn serve<C: Codec>(
+        &mut self,
+        commands: &WireReceiver<Envelope, C>,
+        events: &WireSender<Envelope, C>,
+    ) -> Result<()> {
+        loop {
+            // Phase A: buffer one batch of submissions.
+            let mut batch: Vec<wire::Submit> = Vec::new();
+            loop {
+                match commands.recv() {
+                    Ok(Envelope::Submit(s)) => {
+                        let last = s.last;
+                        batch.push(s);
+                        if last {
+                            break;
+                        }
+                    }
+                    Ok(Envelope::Abort(wire::Abort { id: None })) => batch.clear(),
+                    Ok(Envelope::Abort(wire::Abort { id: Some(id) })) => {
+                        batch.retain(|s| s.id != id)
+                    }
+                    Ok(other) => bail!(
+                        "worker {}: unexpected '{}' command outside a batch",
+                        self.rank,
+                        other.kind_str()
+                    ),
+                    // Hangup between batches: clean shutdown. A partial
+                    // batch (no `last` marker yet) was never fully
+                    // submitted — the coordinator contract is to flush
+                    // before shutting down — so it is dropped, not run.
+                    Err(ChannelError::Disconnected) => return Ok(()),
+                    Err(e) => return Err(e.into()),
+                }
+            }
+            match self.replay_batch(batch, commands, events)? {
+                BatchEnd::Done => {}
+                BatchEnd::Hangup => return Ok(()),
+            }
+        }
+    }
+
+    /// Replay one buffered batch on the virtual clock — the worker-side
+    /// replica of the single-threaded `harness::replay` loop, tick for
+    /// tick, plus event streaming and synchronous park resolution.
+    fn replay_batch<C: Codec>(
+        &mut self,
+        batch: Vec<wire::Submit>,
+        commands: &WireReceiver<Envelope, C>,
+        events: &WireSender<Envelope, C>,
+    ) -> Result<BatchEnd> {
+        debug_assert!(
+            batch.windows(2).all(|w| w[0].arrival_ms <= w[1].arrival_ms),
+            "batch arrivals must be in trace order"
+        );
+        let n = batch.len();
+        let mut next = 0usize;
+        let mut done = 0usize;
+        let mut releases: Vec<Completion> = Vec::new();
+        let mut parks: Vec<Completion> = Vec::new();
+        let mut safety = 0u32;
+        while done < n {
+            // Admit every arrival due at the current virtual time.
+            while next < n && batch[next].arrival_ms <= self.sched.now_ms() {
+                let s = &batch[next];
+                if s.kind == wire::RequestKind::Baseline || s.isolated {
+                    if self.serve_sequential(s, events)? {
+                        done += 1;
+                    } else {
+                        return Ok(BatchEnd::Hangup);
+                    }
+                } else {
+                    self.park_next.insert(s.id, s.park_on_complete);
+                    self.turn_of.insert(s.id, 0);
+                    self.sent.insert(s.id, 0);
+                    self.sched.submit(SlotRequest {
+                        id: s.id,
+                        prompt: s.prompt.clone(),
+                        max_new: s.max_new,
+                        cfg: None,
+                        slo: s.slo,
+                    });
+                }
+                next += 1;
+            }
+            if done >= n {
+                break;
+            }
+            // Drained before the next arrival: jump the clock to it.
+            if self.sched.is_idle() && next < n {
+                let gap = batch[next].arrival_ms - self.sched.now_ms();
+                self.sched.advance_clock(gap.max(0.0) + 1e-9);
+                continue;
+            }
+            if self.sched.is_idle() {
+                bail!("worker {}: scheduler idle with {} terminals pending", self.rank, n - done);
+            }
+            let launches_before = self.sched.stats.fused_launches;
+            let shed_before = self.sched.stats.shed;
+            releases.clear();
+            parks.clear();
+            let park_next = &self.park_next;
+            self.sched.tick(&mut *self.backend, &mut self.engines, &mut |c: Completion| {
+                if park_next.get(&c.id).copied().unwrap_or(false) {
+                    parks.push(c);
+                    Disposition::Park
+                } else {
+                    releases.push(c);
+                    Disposition::Release
+                }
+            })?;
+            let launches = self.sched.stats.fused_launches - launches_before;
+            self.sched
+                .advance_clock(self.tick_host_ms + launches as f64 * self.launch_ms);
+            done += (self.sched.stats.shed - shed_before) as usize;
+            done += releases.len();
+            if !self.stream_deltas(events)? {
+                return Ok(BatchEnd::Hangup);
+            }
+            for c in releases.drain(..) {
+                let turn = self.finish_turn(&c, events)?;
+                match turn {
+                    Some(td) => {
+                        if events.send(&Envelope::Completion(wire::Completion { done: td })).is_err()
+                        {
+                            return Ok(BatchEnd::Hangup);
+                        }
+                    }
+                    None => return Ok(BatchEnd::Hangup),
+                }
+            }
+            let mut awaiting: HashSet<u64> = HashSet::new();
+            for c in parks.drain(..) {
+                let id = c.id;
+                match self.finish_turn(&c, events)? {
+                    Some(td) => {
+                        if events.send(&Envelope::Park(wire::Park { done: td })).is_err() {
+                            return Ok(BatchEnd::Hangup);
+                        }
+                        awaiting.insert(id);
+                    }
+                    None => return Ok(BatchEnd::Hangup),
+                }
+            }
+            // Block until every park is answered: the resume tick is
+            // part of the protocol, never a race (see module docs).
+            while !awaiting.is_empty() {
+                match commands.recv() {
+                    Ok(Envelope::Resume(r)) => {
+                        anyhow::ensure!(
+                            awaiting.remove(&r.id),
+                            "worker {}: resume for conversation {} which is not awaiting one",
+                            self.rank,
+                            r.id
+                        );
+                        self.park_next.insert(r.id, r.park_on_complete);
+                        *self.turn_of.entry(r.id).or_insert(0) += 1;
+                        self.sent.insert(r.id, 0);
+                        self.sched.resume(r.id, r.prompt, r.max_new)?;
+                    }
+                    Ok(other) => bail!(
+                        "worker {}: unexpected '{}' command while awaiting resumes",
+                        self.rank,
+                        other.kind_str()
+                    ),
+                    Err(ChannelError::Disconnected) => return Ok(BatchEnd::Hangup),
+                    Err(e) => return Err(e.into()),
+                }
+            }
+            safety += 1;
+            if safety >= 1_000_000 {
+                bail!("worker {}: batch replay failed to converge after {safety} ticks", self.rank);
+            }
+        }
+        // Surface the batch's shed outcomes and cumulative counters.
+        for notice in self.sched.drain_shed() {
+            if events
+                .send(&Envelope::ShedNotice(wire::ShedNotice { rank: self.rank, notice }))
+                .is_err()
+            {
+                return Ok(BatchEnd::Hangup);
+            }
+        }
+        let stats = wire::WorkerStats {
+            rank: self.rank,
+            stats: self.sched.stats,
+            shed: Vec::new(),
+            is_final: false,
+            error: None,
+        };
+        if events.send(&Envelope::WorkerStats(stats)).is_err() {
+            return Ok(BatchEnd::Hangup);
+        }
+        Ok(BatchEnd::Done)
+    }
+
+    /// Serve a baseline-kind or isolated request synchronously on the
+    /// dedicated sequential engine, charging the virtual clock one tick
+    /// plus one launch per teacher call. Returns `Ok(false)` on event
+    /// hangup.
+    fn serve_sequential<C: Codec>(
+        &mut self,
+        s: &wire::Submit,
+        events: &WireSender<Envelope, C>,
+    ) -> Result<bool> {
+        anyhow::ensure!(
+            !s.park_on_complete,
+            "worker {}: sequential request {} cannot park (single-turn lane)",
+            self.rank,
+            s.id
+        );
+        self.seq_engine.reset();
+        let out = match s.kind {
+            wire::RequestKind::Baseline => {
+                self.seq_engine.generate_baseline(&mut *self.backend, &s.prompt, s.max_new)?
+            }
+            wire::RequestKind::Ea => {
+                self.seq_engine.generate_speculative(&mut *self.backend, &s.prompt, s.max_new)?
+            }
+        };
+        let tick = self.sched.current_tick();
+        self.sched
+            .advance_clock(self.tick_host_ms + out.teacher_calls as f64 * self.launch_ms);
+        let delta = wire::TokenDelta { id: s.id, turn: 0, tokens: out.tokens.clone() };
+        if events.send(&Envelope::TokenDelta(delta)).is_err() {
+            return Ok(false);
+        }
+        let td = wire::TurnDone {
+            id: s.id,
+            rank: self.rank,
+            turn: 0,
+            out,
+            submitted_tick: tick,
+            admitted_tick: tick,
+            finished_tick: tick,
+            waited_ticks: 0,
+            finished_ms: self.sched.now_ms(),
+        };
+        Ok(events.send(&Envelope::Completion(wire::Completion { done: td })).is_ok())
+    }
+
+    /// Stream the tokens every active conversation committed this tick.
+    /// Returns `Ok(false)` on event-channel hangup.
+    fn stream_deltas<C: Codec>(&mut self, events: &WireSender<Envelope, C>) -> Result<bool> {
+        for (slot, id) in self.sched.active_ids() {
+            let Some(toks) = self.engines[slot].inflight_tokens() else { continue };
+            let sent = self.sent.entry(id).or_insert(0);
+            if toks.len() > *sent {
+                let delta = wire::TokenDelta {
+                    id,
+                    turn: self.turn_of.get(&id).copied().unwrap_or(0),
+                    tokens: toks[*sent..].to_vec(),
+                };
+                *sent = toks.len();
+                if events.send(&Envelope::TokenDelta(delta)).is_err() {
+                    return Ok(false);
+                }
+            }
+        }
+        Ok(true)
+    }
+
+    /// Close out a retired turn: flush its tail token delta and build
+    /// the [`wire::TurnDone`] record. `Ok(None)` on event hangup.
+    fn finish_turn<C: Codec>(
+        &mut self,
+        c: &Completion,
+        events: &WireSender<Envelope, C>,
+    ) -> Result<Option<wire::TurnDone>> {
+        let turn = self.turn_of.get(&c.id).copied().unwrap_or(0);
+        let sent = self.sent.get(&c.id).copied().unwrap_or(0);
+        if c.out.tokens.len() > sent {
+            let delta = wire::TokenDelta {
+                id: c.id,
+                turn,
+                tokens: c.out.tokens[sent..].to_vec(),
+            };
+            if events.send(&Envelope::TokenDelta(delta)).is_err() {
+                return Ok(None);
+            }
+        }
+        Ok(Some(wire::TurnDone {
+            id: c.id,
+            rank: self.rank,
+            turn,
+            out: c.out.clone(),
+            submitted_tick: c.submitted_tick,
+            admitted_tick: c.admitted_tick,
+            finished_tick: c.finished_tick,
+            waited_ticks: c.waited_ticks,
+            finished_ms: self.sched.now_ms(),
+        }))
+    }
+}
+
+/// Thread entry point: build the worker, serve until shutdown or
+/// failure, and always attempt one final [`wire::WorkerStats`]
+/// (`is_final: true`) — the coordinator's drain barrier. The final
+/// message carries the shed notices [`ContinuousScheduler::abort_all`]
+/// returned, so sheds raised after the coordinator stopped reading
+/// per-tick events are surfaced in aggregated stats instead of being
+/// dropped with the epoch that raised them.
+pub fn run_worker<C: Codec>(
+    cfg: WorkerConfig,
+    commands: WireReceiver<Envelope, C>,
+    events: WireSender<Envelope, C>,
+) {
+    let rank = cfg.rank;
+    let final_stats = match EngineWorker::build(&cfg) {
+        Err(e) => wire::WorkerStats {
+            rank,
+            stats: Default::default(),
+            shed: Vec::new(),
+            is_final: true,
+            error: Some(format!("{e:#}")),
+        },
+        Ok(mut w) => {
+            let error = w.serve(&commands, &events).err().map(|e| format!("{e:#}"));
+            wire::WorkerStats {
+                rank,
+                stats: w.sched.stats,
+                shed: w.sched.abort_all(),
+                is_final: true,
+                error,
+            }
+        }
+    };
+    // Best effort: if the coordinator is gone entirely, there is no one
+    // left to report to.
+    let _ = events.send(&Envelope::WorkerStats(final_stats));
+}

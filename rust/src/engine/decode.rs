@@ -79,7 +79,7 @@ use crate::backend::{
     argmax, log_softmax_at, topk, KvSession, KvView, ModelBackend, ModuleRole, PlanError,
     SessionTicket, StepArgs,
 };
-use crate::cache::{CachePools, KvGuard, KvStore, ManagedCache, PagedCache, PrefixMatch};
+use crate::cache::{pool_write, CachePools, KvGuard, KvStore, ManagedCache, PagedCache, PrefixMatch};
 use crate::config::contract::NEG_INF;
 use crate::config::{CacheLayout, CacheStrategy, CommitMode, Contract, Dims, ExecMode, RunConfig};
 use crate::engine::output::{attention_distance_buckets, GenOut};
@@ -277,7 +277,7 @@ fn build_cache(
     cap: usize,
     strategy: CacheStrategy,
     fast_reorder: bool,
-    pool: &std::rc::Rc<std::cell::RefCell<crate::cache::PagePool>>,
+    pool: &crate::cache::SharedPool,
 ) -> Box<dyn KvStore> {
     match layout {
         CacheLayout::Flat => Box::new(ManagedCache::new(dims, cap, strategy, fast_reorder)),
@@ -521,8 +521,8 @@ impl Engine {
         // first time peak load is reached, then stays allocation-free —
         // the warm-to-peak behaviour of every other arena.
         if self.cfg.cache_layout == CacheLayout::Paged {
-            self.pools.teacher.borrow_mut().ensure_headroom(c.cache_cap);
-            self.pools.draft.borrow_mut().ensure_headroom(c.cache_cap);
+            pool_write(&self.pools.teacher).ensure_headroom(c.cache_cap);
+            pool_write(&self.pools.draft).ensure_headroom(c.cache_cap);
         }
         let kzero = vec![0.0f32; c.teacher.cache_elems(c.cache_cap)];
         // Any variant <= prefill_chunk can appear (prompt-tail chunks),
@@ -1460,6 +1460,15 @@ impl Engine {
         self.d_cache.rollback();
         self.timers.add("commit", tc.elapsed().as_secs_f64());
         Ok(())
+    }
+
+    /// Tokens committed so far by the in-flight generation (`None` when
+    /// no generation is open). The worker's token-streaming surface:
+    /// after each scheduler tick it diffs this against what it already
+    /// sent and emits the suffix as a `TokenDelta` — without closing the
+    /// generation the way [`Engine::take_output`] does.
+    pub fn inflight_tokens(&self) -> Option<&[i32]> {
+        self.inflight.as_ref().map(|fl| fl.out_tokens.as_slice())
     }
 
     /// Close the in-flight generation and return its [`GenOut`]. Call

@@ -1,17 +1,25 @@
 //! Deterministic trace-replay load driver: replays a seeded arrival
-//! trace ([`crate::workload::TraceSpec`]) through the
-//! [`ContinuousScheduler`] under a modeled device clock, and reports the
-//! per-request latency distribution (p50/p95/p99) plus the shed rate.
+//! trace ([`crate::workload::TraceSpec`]) through the multi-worker
+//! serving stack — a [`Coordinator`] front end routing each request to
+//! its consistent-hash home worker over typed channel RPC — under a
+//! modeled device clock, and reports the per-request latency
+//! distribution (p50/p95/p99) plus the shed rate.
+//!
+//! `--workers 1` is not a special case in the code, but it reproduces
+//! the pre-split single-scheduler replay bit for bit: one worker
+//! receives the whole trace and replays it on the identical virtual
+//! clock protocol (property-tested in `tests/multiworker.rs`).
 //!
 //! # The virtual clock
 //!
-//! Latency here is *virtual* milliseconds: each scheduler tick advances
-//! the clock by a fixed host cost plus a per-fused-launch device cost
-//! ([`ReplayConfig::tick_host_ms`] / [`ReplayConfig::launch_ms`] — the
-//! sim backend's device-clock model, scaled into milliseconds), and when
-//! the scheduler drains before the next arrival the clock jumps straight
-//! to that arrival. No wall-clock reading ever enters a latency or a
-//! shed decision, so the same trace replayed twice produces bit-identical
+//! Latency here is *virtual* milliseconds, charged per worker: each
+//! scheduler tick advances that worker's clock by a fixed host cost
+//! plus a per-fused-launch device cost ([`ReplayConfig::tick_host_ms`]
+//! / [`ReplayConfig::launch_ms`] — the sim backend's device-clock
+//! model, scaled into milliseconds), and when a worker's scheduler
+//! drains before its next arrival the clock jumps straight to that
+//! arrival. No wall-clock reading ever enters a latency or a shed
+//! decision, so the same trace replayed twice produces bit-identical
 //! percentiles — which is what lets `bench_gate` hold a p99 SLO floor
 //! without flaking (the paper's headline metric is a p99 speedup).
 //!
@@ -23,11 +31,10 @@
 //! next-token fallback), so the first output token lands on the
 //! admission tick by construction.
 
-use crate::backend::sim::SimBackend;
-use crate::backend::ModelBackend;
+use crate::coordinator::{
+    BackendSpec, Coordinator, FrontConfig, SchedulerStats, SloPolicy,
+};
 use crate::config::RunConfig;
-use crate::coordinator::{Completion, ContinuousScheduler, Disposition, SloPolicy, SlotRequest};
-use crate::engine::Engine;
 use crate::util::stats::percentile_sorted;
 use crate::workload::TraceRequest;
 use anyhow::{bail, Result};
@@ -35,8 +42,15 @@ use anyhow::{bail, Result};
 /// Replay-driver configuration.
 #[derive(Clone, Debug)]
 pub struct ReplayConfig {
-    /// Engine slots (the serving batch width B).
+    /// Engine slots per worker (the serving batch width B).
     pub slots: usize,
+    /// Engine workers the coordinator shards the trace across (`1` =
+    /// the single-engine path, bit-identical to pre-split replay).
+    pub workers: usize,
+    /// Turns per conversation: above `1`, every conversation parks
+    /// after each non-final turn and is resumed with a deterministic
+    /// follow-up prompt ([`crate::coordinator::followup_prompt`]).
+    pub turns: usize,
     /// Sim-backend draft/teacher agreement percentage.
     pub agree_pct: u64,
     /// SLO attached to every replayed request (`None` = no deadlines).
@@ -52,10 +66,13 @@ pub struct ReplayConfig {
 }
 
 impl ReplayConfig {
-    /// A replay at batch width `slots` with the default cost model.
+    /// A single-worker replay at batch width `slots` with the default
+    /// cost model.
     pub fn new(slots: usize) -> Self {
         Self {
             slots,
+            workers: 1,
+            turns: 1,
             agree_pct: 90,
             slo: None,
             tick_host_ms: 1.0,
@@ -69,6 +86,18 @@ impl ReplayConfig {
     pub fn validate(&self) -> Result<()> {
         if self.slots == 0 {
             bail!("config contract: --slots must be >= 1 (got 0) — one slot is sequential replay");
+        }
+        if self.workers == 0 {
+            bail!(
+                "config contract: --workers must be >= 1 (got 0) — \
+                 one worker is the single-engine serving path"
+            );
+        }
+        if self.turns == 0 {
+            bail!(
+                "config contract: --turns must be >= 1 (got 0) — \
+                 a conversation has at least one turn"
+            );
         }
         if let Some(slo) = &self.slo {
             slo.validate()?;
@@ -84,20 +113,25 @@ impl ReplayConfig {
 pub struct RequestRecord {
     /// Trace request id.
     pub id: u64,
-    /// Tick the request was submitted on.
+    /// Tick the request was submitted on (its home worker's clock).
     pub submitted_tick: u64,
     /// Tick the request was admitted on (`None` if shed pre-admission).
     pub admitted_tick: Option<u64>,
     /// Tick the first output token landed (== admitted tick; see the
     /// module docs). `None` if shed.
     pub first_token_tick: Option<u64>,
-    /// Tick the request finished on (`None` if shed).
+    /// Tick the request finished on — last turn's (`None` if shed).
     pub finished_tick: Option<u64>,
-    /// End-to-end virtual latency, arrival → completion (`None` if shed).
+    /// End-to-end virtual latency, arrival → completion of the final
+    /// turn (`None` if shed).
     pub latency_ms: Option<f64>,
     /// Whether the request was shed by its SLO policy (typed outcome —
     /// shed requests are counted, never silently dropped).
     pub shed: bool,
+    /// Every token the conversation generated, turns concatenated —
+    /// the reassembled [`crate::rpc::TokenDelta`] stream, verified
+    /// against the per-turn completion records by the coordinator.
+    pub tokens: Vec<i32>,
 }
 
 /// Aggregate replay result.
@@ -121,94 +155,74 @@ pub struct ReplayReport {
     pub p99_ms: f64,
     /// Per-request timeline records, in trace order.
     pub records: Vec<RequestRecord>,
+    /// Per-worker scheduler counters at the end of the replay.
+    pub stats: Vec<SchedulerStats>,
 }
 
-/// Replay `trace` through a fresh scheduler + sim backend under the
-/// virtual-clock model. Deterministic: same trace + same config =
-/// bit-identical report (property-tested in `tests/trace_replay.rs`).
+/// Replay `trace` through a coordinator with `cfg.workers` engine
+/// workers (sim backend) under the virtual-clock model. Deterministic:
+/// same trace + same config = bit-identical report, and each
+/// conversation's token stream is independent of the worker count
+/// (property-tested in `tests/trace_replay.rs` and
+/// `tests/multiworker.rs`).
 pub fn replay(trace: &[TraceRequest], cfg: &ReplayConfig) -> Result<ReplayReport> {
     cfg.validate()?;
     if trace.is_empty() {
         bail!("config contract: --requests must be >= 1 (an empty trace replays nothing)");
     }
-    let mut bk = SimBackend::new(cfg.agree_pct);
-    let mut engines: Vec<Engine> =
-        (0..cfg.slots).map(|_| Engine::new(&bk, cfg.run.clone())).collect();
-    let cap = bk.contract().cache_cap;
-    let mut sched = ContinuousScheduler::new(cfg.slots, cap);
-    sched.set_pipelining(cfg.run.pipelining);
+    let front = FrontConfig {
+        workers: cfg.workers,
+        slots: cfg.slots,
+        backend: BackendSpec::Sim { agree_pct: cfg.agree_pct },
+        run: cfg.run.clone(),
+        tick_host_ms: cfg.tick_host_ms,
+        launch_ms: cfg.launch_ms,
+        cmd_depth: 64,
+        event_depth: 256,
+    };
+    let mut coord: Coordinator = Coordinator::start(&front)?;
+    let run_result = coord.run_trace(trace, cfg.slo, cfg.turns);
+    let shutdown_result = coord.shutdown();
+    let outcome = run_result?;
+    let shutdown = shutdown_result?;
+    for (rank, err) in shutdown.errors.iter().enumerate() {
+        if let Some(msg) = err {
+            bail!("engine worker {rank} failed: {msg}");
+        }
+    }
+    debug_assert!(
+        shutdown.undrained_shed.is_empty(),
+        "a fully drained replay leaves no undrained sheds behind"
+    );
 
     let n = trace.len();
-    let mut records: Vec<RequestRecord> = trace
-        .iter()
-        .map(|r| RequestRecord {
-            id: r.id,
-            submitted_tick: 0,
-            admitted_tick: None,
-            first_token_tick: None,
-            finished_tick: None,
-            latency_ms: None,
-            shed: false,
-        })
-        .collect();
-    let mut next = 0usize;
-    let mut done = 0usize;
-    let mut finished_this_tick: Vec<(usize, u64, u64, u64)> = Vec::new();
-    let mut safety = 0u32;
-    while done < n {
-        // submit every arrival due at the current virtual time
-        while next < n && trace[next].arrival_ms <= sched.now_ms() {
-            let r = &trace[next];
-            records[next].submitted_tick = sched.current_tick();
-            sched.submit(SlotRequest {
+    let mut records: Vec<RequestRecord> = Vec::with_capacity(n);
+    for (r, oc) in trace.iter().zip(outcome.outcomes) {
+        debug_assert_eq!(r.id, oc.id, "outcomes arrive in trace order");
+        if let Some(notice) = oc.shed {
+            records.push(RequestRecord {
                 id: r.id,
-                prompt: r.prompt.clone(),
-                max_new: r.max_new,
-                cfg: None,
-                slo: cfg.slo,
+                submitted_tick: notice.submitted_tick,
+                admitted_tick: None,
+                first_token_tick: None,
+                finished_tick: None,
+                latency_ms: None,
+                shed: true,
+                tokens: Vec::new(),
             });
-            next += 1;
-        }
-        // drained before the next arrival: jump the clock to it instead
-        // of burning empty ticks
-        if sched.is_idle() && next < n {
-            let gap = trace[next].arrival_ms - sched.now_ms();
-            sched.advance_clock(gap.max(0.0) + 1e-9);
-            continue;
-        }
-        let launches_before = sched.stats.fused_launches;
-        finished_this_tick.clear();
-        sched.tick(&mut bk, &mut engines, &mut |c: Completion| {
-            finished_this_tick.push((
-                c.id as usize,
-                c.submitted_tick,
-                c.admitted_tick,
-                c.finished_tick,
-            ));
-            Disposition::Release
-        })?;
-        // charge the tick: host half + every fused launch it issued
-        let launches = sched.stats.fused_launches - launches_before;
-        sched.advance_clock(cfg.tick_host_ms + launches as f64 * cfg.launch_ms);
-        // stamp completions at the post-tick clock (the tick's work is
-        // what produced them)
-        for &(idx, submitted_tick, admitted_tick, finished_tick) in &finished_this_tick {
-            let rec = &mut records[idx];
-            rec.submitted_tick = submitted_tick;
-            rec.admitted_tick = Some(admitted_tick);
-            rec.first_token_tick = Some(admitted_tick);
-            rec.finished_tick = Some(finished_tick);
-            rec.latency_ms = Some(sched.now_ms() - trace[idx].arrival_ms);
-            done += 1;
-        }
-        for s in sched.drain_shed() {
-            let rec = &mut records[s.id as usize];
-            rec.shed = true;
-            done += 1;
-        }
-        safety += 1;
-        if safety >= 1_000_000 {
-            bail!("trace replay failed to converge after {safety} ticks");
+        } else {
+            let first = oc.turns.first().expect("a served conversation has turns");
+            let last = oc.turns.last().expect("a served conversation has turns");
+            records.push(RequestRecord {
+                id: r.id,
+                submitted_tick: first.submitted_tick,
+                admitted_tick: Some(first.admitted_tick),
+                first_token_tick: Some(first.admitted_tick),
+                finished_tick: Some(last.finished_tick),
+                latency_ms: Some(last.finished_ms - r.arrival_ms),
+                shed: false,
+                tokens: oc.tokens,
+            });
         }
     }
     let mut lats: Vec<f64> = records.iter().filter_map(|r| r.latency_ms).collect();
@@ -228,6 +242,7 @@ pub fn replay(trace: &[TraceRequest], cfg: &ReplayConfig) -> Result<ReplayReport
         p95_ms: percentile_sorted(&lats, 0.95),
         p99_ms: percentile_sorted(&lats, 0.99),
         records,
+        stats: outcome.stats,
     })
 }
 
@@ -245,10 +260,13 @@ mod tests {
         assert_eq!(rep.shed, 0);
         assert_eq!(rep.shed_rate, 0.0);
         assert!(rep.p50_ms > 0.0 && rep.p99_ms >= rep.p95_ms && rep.p95_ms >= rep.p50_ms);
+        assert_eq!(rep.stats.len(), 1);
+        assert_eq!(rep.stats[0].retired as usize, trace.len());
         for r in &rep.records {
             assert!(!r.shed);
             assert_eq!(r.first_token_tick, r.admitted_tick);
             assert!(r.finished_tick.unwrap() >= r.admitted_tick.unwrap());
+            assert!(!r.tokens.is_empty(), "a completed request streamed tokens");
         }
     }
 
@@ -261,5 +279,12 @@ mod tests {
         cfg.slots = 2;
         let err = replay(&[], &cfg).unwrap_err().to_string();
         assert!(err.contains("--requests"), "error must name the flag: {err}");
+        cfg.workers = 0;
+        let err = replay(&trace, &cfg).unwrap_err().to_string();
+        assert!(err.contains("--workers"), "error must name the flag: {err}");
+        cfg.workers = 2;
+        cfg.turns = 0;
+        let err = replay(&trace, &cfg).unwrap_err().to_string();
+        assert!(err.contains("--turns"), "error must name the flag: {err}");
     }
 }

@@ -63,6 +63,7 @@ pub mod engine;
 pub mod harness;
 pub mod json;
 pub mod metrics;
+pub mod rpc;
 pub mod runtime;
 pub mod spec;
 pub mod trace;

@@ -1,0 +1,112 @@
+//! Typed, codec-parameterized channels over `std::sync::mpsc`.
+//!
+//! A [`WireSender`]/[`WireReceiver`] pair moves exactly one message type
+//! `T: Wire`, serialized through a codec `C: Codec` into a `Vec<u8>` per
+//! message — every value crossing threads passes through real bytes, so
+//! swapping the `mpsc` transport for a socket later changes only this
+//! file. Channels are **bounded** ([`wire_channel`] takes a depth):
+//! `send` blocks when the peer lags, which is the backpressure story —
+//! a slow coordinator throttles its workers instead of buffering
+//! unboundedly.
+//!
+//! The codec is a zero-sized type parameter (remoc-style), so the
+//! channel's wire format is part of its type: a
+//! `WireSender<Envelope, JsonCodec>` cannot be connected to a
+//! `FramedJsonCodec` receiver by accident.
+
+use crate::rpc::codec::{Codec, Wire};
+use std::marker::PhantomData;
+use std::sync::mpsc;
+
+/// Why a channel operation failed.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ChannelError {
+    /// The peer end was dropped; no further messages can flow.
+    Disconnected,
+    /// The codec rejected a message (serialize or deserialize).
+    Codec(String),
+}
+
+impl std::fmt::Display for ChannelError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ChannelError::Disconnected => write!(f, "channel disconnected"),
+            ChannelError::Codec(msg) => write!(f, "channel codec error: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for ChannelError {}
+
+/// The sending half of a typed channel: serializes each `T` through `C`
+/// and hands the bytes to a bounded `mpsc` queue (blocking when full).
+pub struct WireSender<T: Wire, C: Codec> {
+    tx: mpsc::SyncSender<Vec<u8>>,
+    _marker: PhantomData<fn(T, C)>,
+}
+
+// `fn(T, C)` (not `(T, C)`) in the marker: the sender owns no T or C,
+// so it is Send + Sync regardless of what T holds.
+impl<T: Wire, C: Codec> Clone for WireSender<T, C> {
+    fn clone(&self) -> Self {
+        Self { tx: self.tx.clone(), _marker: PhantomData }
+    }
+}
+
+impl<T: Wire, C: Codec> WireSender<T, C> {
+    /// Serialize `item` and enqueue it, blocking while the channel is at
+    /// capacity (backpressure).
+    pub fn send(&self, item: &T) -> Result<(), ChannelError> {
+        let mut bytes = Vec::new();
+        C::serialize(&mut bytes, item).map_err(|e| ChannelError::Codec(e.to_string()))?;
+        self.tx.send(bytes).map_err(|_| ChannelError::Disconnected)
+    }
+
+    /// Serialize `item` and enqueue it only if the channel has capacity:
+    /// `Ok(true)` when enqueued, `Ok(false)` when the queue is full. The
+    /// coordinator uses this while it must keep draining events — a
+    /// blocking `send` from both sides of a bounded pair can deadlock.
+    pub fn try_send(&self, item: &T) -> Result<bool, ChannelError> {
+        let mut bytes = Vec::new();
+        C::serialize(&mut bytes, item).map_err(|e| ChannelError::Codec(e.to_string()))?;
+        match self.tx.try_send(bytes) {
+            Ok(()) => Ok(true),
+            Err(mpsc::TrySendError::Full(_)) => Ok(false),
+            Err(mpsc::TrySendError::Disconnected(_)) => Err(ChannelError::Disconnected),
+        }
+    }
+}
+
+/// The receiving half of a typed channel: decodes each `Vec<u8>` back
+/// into a `T` through `C`.
+pub struct WireReceiver<T: Wire, C: Codec> {
+    rx: mpsc::Receiver<Vec<u8>>,
+    _marker: PhantomData<fn(T, C)>,
+}
+
+impl<T: Wire, C: Codec> WireReceiver<T, C> {
+    /// Block until a message arrives (or the sender side is gone).
+    pub fn recv(&self) -> Result<T, ChannelError> {
+        let bytes = self.rx.recv().map_err(|_| ChannelError::Disconnected)?;
+        C::deserialize(bytes.as_slice()).map_err(|e| ChannelError::Codec(e.to_string()))
+    }
+
+    /// Take a message if one is queued; `Ok(None)` when the channel is
+    /// empty but senders remain.
+    pub fn try_recv(&self) -> Result<Option<T>, ChannelError> {
+        match self.rx.try_recv() {
+            Ok(bytes) => C::deserialize(bytes.as_slice())
+                .map(Some)
+                .map_err(|e| ChannelError::Codec(e.to_string())),
+            Err(mpsc::TryRecvError::Empty) => Ok(None),
+            Err(mpsc::TryRecvError::Disconnected) => Err(ChannelError::Disconnected),
+        }
+    }
+}
+
+/// Create a connected typed channel of the given depth (messages the
+/// queue holds before `send` blocks).
+pub fn wire_channel<T: Wire, C: Codec>(depth: usize) -> (WireSender<T, C>, WireReceiver<T, C>) {
+    let (tx, rx) = mpsc::sync_channel(depth);
+    (WireSender { tx, _marker: PhantomData }, WireReceiver { rx, _marker: PhantomData })
+}

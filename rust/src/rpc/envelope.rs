@@ -1,0 +1,662 @@
+//! The typed message envelopes of the coordinator/worker protocol.
+//!
+//! Direction and roles:
+//!
+//! * **Commands** (coordinator → worker): [`Submit`] a conversation
+//!   turn, [`Resume`] a parked conversation with its follow-up prompt,
+//!   [`Abort`] one conversation or everything in flight.
+//! * **Events** (worker → coordinator): [`TokenDelta`] streams tokens
+//!   committed since the last tick, [`Park`] reports a finished turn of
+//!   a conversation kept resident for a later [`Resume`], [`Completion`]
+//!   reports a finished final turn (slot released), [`ShedNotice`]
+//!   reports an admission-queue shed, [`WorkerStats`] carries the
+//!   worker's scheduler counters (and, flagged `is_final`, doubles as
+//!   the drain handshake on shutdown — see `coordinator::front`).
+//!
+//! Everything crosses the channel through [`Wire`]/[`Codec`] — actual
+//! serialized bytes, not shared memory — so the protocol would survive
+//! relocating a worker behind a socket. [`Envelope`] is the tagged
+//! union carried by both channel directions.
+
+use crate::cache::CacheStats;
+use crate::coordinator::{SchedulerStats, ShedNotice as SchedShedNotice, SloAction, SloPolicy};
+use crate::engine::GenOut;
+use crate::json::Json;
+use crate::rpc::codec::{
+    req, req_bool, req_f64, req_f64s, req_i32s, req_str, req_u64, req_u64s, req_usize,
+    DeserializationError, Wire,
+};
+use crate::util::stats::{AcceptPos, Histogram};
+use crate::util::StageTimer;
+
+/// Which decoding path serves a submitted conversation turn.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RequestKind {
+    /// Speculative (EAGLE) decoding through the scheduler.
+    Ea,
+    /// Autoregressive baseline decoding.
+    Baseline,
+}
+
+impl RequestKind {
+    /// Stable string form.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            RequestKind::Ea => "ea",
+            RequestKind::Baseline => "baseline",
+        }
+    }
+
+    fn parse(s: &str) -> Result<Self, DeserializationError> {
+        match s {
+            "ea" => Ok(RequestKind::Ea),
+            "baseline" => Ok(RequestKind::Baseline),
+            other => Err(DeserializationError(format!("unknown request kind '{other}'"))),
+        }
+    }
+}
+
+/// Command: admit a conversation's first turn on the receiving worker.
+#[derive(Clone, Debug)]
+pub struct Submit {
+    /// Global conversation id (consistent-hash routed; unique per run).
+    pub id: u64,
+    /// Prompt tokens of this turn.
+    pub prompt: Vec<i32>,
+    /// Output-token budget of this turn.
+    pub max_new: usize,
+    /// Trace arrival time (virtual ms); drives replay-mode admission.
+    pub arrival_ms: f64,
+    /// Decoding path for this conversation.
+    pub kind: RequestKind,
+    /// Keep the conversation resident after this turn finishes (a
+    /// [`Resume`] will follow); emits [`Park`] instead of [`Completion`].
+    pub park_on_complete: bool,
+    /// Per-request latency SLO, if any.
+    pub slo: Option<SloPolicy>,
+    /// Marks the end of the initial submission batch: a replay-mode
+    /// worker buffers arrivals until it sees `last`, then runs its shard
+    /// on the virtual clock (deterministic regardless of channel timing).
+    pub last: bool,
+    /// Serve this turn on the sequential (slot-0, non-scheduler) path —
+    /// the coordinator's retry lane for conversations that previously
+    /// failed inside a scheduler group.
+    pub isolated: bool,
+}
+
+/// Command: hand a parked conversation its next turn's prompt.
+#[derive(Clone, Debug)]
+pub struct Resume {
+    /// Conversation id (must be parked on the receiving worker).
+    pub id: u64,
+    /// Follow-up prompt tokens.
+    pub prompt: Vec<i32>,
+    /// Output-token budget of this turn.
+    pub max_new: usize,
+    /// Keep resident again after this turn (another [`Resume`] follows).
+    pub park_on_complete: bool,
+}
+
+/// Command: abandon one conversation (`id: Some`) or everything the
+/// worker holds (`id: None` — queue, parked and in-flight state alike).
+#[derive(Clone, Debug)]
+pub struct Abort {
+    /// The conversation to abort, or `None` for all.
+    pub id: Option<u64>,
+}
+
+/// Event: tokens the conversation committed since the previous delta —
+/// the per-request streaming surface. Deltas for one id concatenate to
+/// exactly the turn's final `GenOut::tokens` (asserted in tests).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TokenDelta {
+    /// Conversation id.
+    pub id: u64,
+    /// Zero-based turn index the tokens belong to.
+    pub turn: usize,
+    /// Newly committed tokens, in order.
+    pub tokens: Vec<i32>,
+}
+
+/// The shared body of [`Park`] and [`Completion`]: one finished turn
+/// with its output and admission timeline.
+#[derive(Clone, Debug)]
+pub struct TurnDone {
+    /// Conversation id.
+    pub id: u64,
+    /// Rank of the worker that served the turn.
+    pub rank: usize,
+    /// Zero-based turn index.
+    pub turn: usize,
+    /// The turn's full generation output.
+    pub out: GenOut,
+    /// Scheduler tick the request was submitted on.
+    pub submitted_tick: u64,
+    /// Scheduler tick the request was admitted to a slot.
+    pub admitted_tick: u64,
+    /// Scheduler tick the turn retired.
+    pub finished_tick: u64,
+    /// Ticks spent waiting in the admission queue.
+    pub waited_ticks: u64,
+    /// Worker virtual-clock time at retirement (ms) — the coordinator
+    /// computes latency as `finished_ms - arrival_ms` without ever
+    /// seeing the worker's clock object.
+    pub finished_ms: f64,
+}
+
+/// Event: a turn finished and the conversation stays resident (parked
+/// block tables + chain feature) awaiting [`Resume`].
+#[derive(Clone, Debug)]
+pub struct Park {
+    /// The finished turn.
+    pub done: TurnDone,
+}
+
+/// Event: a turn finished and the conversation is released.
+#[derive(Clone, Debug)]
+pub struct Completion {
+    /// The finished turn.
+    pub done: TurnDone,
+}
+
+/// Event: the worker's scheduler shed a queued request past its SLO
+/// deadline. Wraps the scheduler-level notice with the worker's rank so
+/// the coordinator can aggregate shed accounting per worker.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ShedNotice {
+    /// Rank of the shedding worker.
+    pub rank: usize,
+    /// The scheduler's shed record.
+    pub notice: SchedShedNotice,
+}
+
+/// Event: a worker's cumulative scheduler counters. Sent with
+/// `is_final: true` exactly once, as the last message before the worker
+/// thread exits — the coordinator's drain barrier. A worker that dies
+/// on an engine error still sends it, with `error: Some(..)`, so
+/// failures surface instead of hanging the drain. Shed notices raised
+/// *after* the coordinator stopped reading per-tick events ride along
+/// in `shed` (the regression test for the silently-dropped-shed bug).
+#[derive(Clone, Debug)]
+pub struct WorkerStats {
+    /// Worker rank.
+    pub rank: usize,
+    /// Cumulative scheduler counters.
+    pub stats: SchedulerStats,
+    /// Shed notices not yet surfaced through [`ShedNotice`] events.
+    pub shed: Vec<SchedShedNotice>,
+    /// True on the worker's last message (drain handshake).
+    pub is_final: bool,
+    /// Present when the worker is reporting a fatal error.
+    pub error: Option<String>,
+}
+
+/// The tagged union both RPC directions carry: commands flow
+/// coordinator → worker, events worker → coordinator. One type for both
+/// keeps the channel layer simple; direction is enforced by which end
+/// sends what (debug-asserted in `coordinator::worker`).
+#[derive(Clone, Debug)]
+pub enum Envelope {
+    /// Admit a conversation turn.
+    Submit(Submit),
+    /// Resume a parked conversation.
+    Resume(Resume),
+    /// Abort one or all conversations.
+    Abort(Abort),
+    /// Stream newly committed tokens.
+    TokenDelta(TokenDelta),
+    /// A turn finished; conversation stays resident.
+    Park(Park),
+    /// A turn finished; conversation released.
+    Completion(Completion),
+    /// A queued request was shed past its SLO deadline.
+    ShedNotice(ShedNotice),
+    /// Worker scheduler counters (final = drain handshake).
+    WorkerStats(WorkerStats),
+}
+
+impl Envelope {
+    /// The stable tag string of this envelope's variant.
+    pub fn kind_str(&self) -> &'static str {
+        match self {
+            Envelope::Submit(_) => "submit",
+            Envelope::Resume(_) => "resume",
+            Envelope::Abort(_) => "abort",
+            Envelope::TokenDelta(_) => "token_delta",
+            Envelope::Park(_) => "park",
+            Envelope::Completion(_) => "completion",
+            Envelope::ShedNotice(_) => "shed_notice",
+            Envelope::WorkerStats(_) => "worker_stats",
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Wire impls — building blocks first, envelopes after.
+// ---------------------------------------------------------------------
+
+impl Wire for SloPolicy {
+    fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.push("target_ms", self.target_ms).push("action", self.action.as_str());
+        o
+    }
+
+    fn from_json(j: &Json) -> Result<Self, DeserializationError> {
+        let action = SloAction::parse(&req_str(j, "SloPolicy", "action")?)
+            .map_err(|e| DeserializationError(format!("{e:#}")))?;
+        Ok(Self { target_ms: req_f64(j, "SloPolicy", "target_ms")?, action })
+    }
+}
+
+impl Wire for SchedShedNotice {
+    fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.push("id", self.id)
+            .push("submitted_tick", self.submitted_tick)
+            .push("shed_tick", self.shed_tick)
+            .push("waited_ms", self.waited_ms)
+            .push("target_ms", self.target_ms);
+        o
+    }
+
+    fn from_json(j: &Json) -> Result<Self, DeserializationError> {
+        const TY: &str = "ShedNotice";
+        Ok(Self {
+            id: req_u64(j, TY, "id")?,
+            submitted_tick: req_u64(j, TY, "submitted_tick")?,
+            shed_tick: req_u64(j, TY, "shed_tick")?,
+            waited_ms: req_f64(j, TY, "waited_ms")?,
+            target_ms: req_f64(j, TY, "target_ms")?,
+        })
+    }
+}
+
+impl Wire for SchedulerStats {
+    fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.push("submitted", self.submitted)
+            .push("admitted", self.admitted)
+            .push("retired", self.retired)
+            .push("parked", self.parked)
+            .push("resumed", self.resumed)
+            .push("ticks", self.ticks)
+            .push("fused_launches", self.fused_launches)
+            .push("max_wait_ticks", self.max_wait_ticks)
+            .push("shed", self.shed)
+            .push("prefill_teacher_calls", self.prefill_teacher_calls);
+        o
+    }
+
+    fn from_json(j: &Json) -> Result<Self, DeserializationError> {
+        const TY: &str = "SchedulerStats";
+        Ok(Self {
+            submitted: req_u64(j, TY, "submitted")?,
+            admitted: req_u64(j, TY, "admitted")?,
+            retired: req_u64(j, TY, "retired")?,
+            parked: req_u64(j, TY, "parked")?,
+            resumed: req_u64(j, TY, "resumed")?,
+            ticks: req_u64(j, TY, "ticks")?,
+            fused_launches: req_u64(j, TY, "fused_launches")?,
+            max_wait_ticks: req_u64(j, TY, "max_wait_ticks")?,
+            shed: req_u64(j, TY, "shed")?,
+            prefill_teacher_calls: req_u64(j, TY, "prefill_teacher_calls")?,
+        })
+    }
+}
+
+impl Wire for CacheStats {
+    fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.push("branches", self.branches)
+            .push("commits", self.commits)
+            .push("rollbacks", self.rollbacks)
+            .push("replicate_bytes", self.replicate_bytes)
+            .push("append_bytes", self.append_bytes)
+            .push("commit_bytes", self.commit_bytes)
+            .push("fast_reorders", self.fast_reorders)
+            .push("fast_fallbacks", self.fast_fallbacks)
+            .push("full_reorders", self.full_reorders)
+            .push("cow_copies", self.cow_copies)
+            .push("cow_bytes", self.cow_bytes)
+            .push("adopted_rows", self.adopted_rows);
+        o
+    }
+
+    fn from_json(j: &Json) -> Result<Self, DeserializationError> {
+        const TY: &str = "CacheStats";
+        Ok(Self {
+            branches: req_u64(j, TY, "branches")?,
+            commits: req_u64(j, TY, "commits")?,
+            rollbacks: req_u64(j, TY, "rollbacks")?,
+            replicate_bytes: req_u64(j, TY, "replicate_bytes")?,
+            append_bytes: req_u64(j, TY, "append_bytes")?,
+            commit_bytes: req_u64(j, TY, "commit_bytes")?,
+            fast_reorders: req_u64(j, TY, "fast_reorders")?,
+            fast_fallbacks: req_u64(j, TY, "fast_fallbacks")?,
+            full_reorders: req_u64(j, TY, "full_reorders")?,
+            cow_copies: req_u64(j, TY, "cow_copies")?,
+            cow_bytes: req_u64(j, TY, "cow_bytes")?,
+            adopted_rows: req_u64(j, TY, "adopted_rows")?,
+        })
+    }
+}
+
+impl Wire for GenOut {
+    fn to_json(&self) -> Json {
+        let mut timers = Json::obj();
+        timers
+            .push("seconds", Json::from_str_map(&self.timers.seconds))
+            .push(
+                "calls",
+                Json::Obj(
+                    self.timers
+                        .calls
+                        .iter()
+                        .map(|(k, v)| (k.clone(), Json::Num(*v as f64)))
+                        .collect(),
+                ),
+            );
+        let mut hist = Json::obj();
+        hist.push("edges", Json::from_f64_slice(&self.attn_hist.edges))
+            .push("counts", Json::from_u64_slice(&self.attn_hist.counts))
+            .push("total", self.attn_hist.total);
+        let mut pos = Json::obj();
+        pos.push("offered", Json::from_u64_slice(&self.accept_pos.offered))
+            .push("accepted", Json::from_u64_slice(&self.accept_pos.accepted));
+        let mut o = Json::obj();
+        o.push("tokens", Json::Arr(self.tokens.iter().map(|t| Json::Num(*t as f64)).collect()))
+            .push("wall_secs", self.wall_secs)
+            .push("teacher_calls", self.teacher_calls)
+            .push("draft_calls", self.draft_calls)
+            .push("rounds", self.rounds)
+            .push(
+                "accept_lens",
+                Json::Arr(self.accept_lens.iter().map(|a| Json::Num(*a as f64)).collect()),
+            )
+            .push("accept_pos", pos)
+            .push("timers", timers)
+            .push("attn_hist", hist)
+            .push("teacher_cache", self.teacher_cache.to_json())
+            .push("draft_cache", self.draft_cache.to_json())
+            .push("prompt_len", self.prompt_len);
+        o
+    }
+
+    fn from_json(j: &Json) -> Result<Self, DeserializationError> {
+        const TY: &str = "GenOut";
+        let pos = req(j, TY, "accept_pos")?;
+        let accept_pos = AcceptPos {
+            offered: req_u64s(pos, TY, "offered")?,
+            accepted: req_u64s(pos, TY, "accepted")?,
+        };
+        let tj = req(j, TY, "timers")?;
+        // A deserialized timer never times anything again — it is a
+        // record of the worker-side run, so it rebuilds disabled with
+        // the accumulated maps assigned directly.
+        let mut timers = StageTimer::new(false);
+        if let Some(pairs) = req(tj, TY, "seconds")?.as_obj() {
+            for (k, v) in pairs {
+                let x = v.as_f64().ok_or_else(|| DeserializationError::field(TY, "seconds"))?;
+                timers.seconds.insert(k.clone(), x);
+            }
+        }
+        if let Some(pairs) = req(tj, TY, "calls")?.as_obj() {
+            for (k, v) in pairs {
+                let x = v.as_f64().ok_or_else(|| DeserializationError::field(TY, "calls"))?;
+                timers.calls.insert(k.clone(), x as u64);
+            }
+        }
+        let hj = req(j, TY, "attn_hist")?;
+        let attn_hist = Histogram {
+            edges: req_f64s(hj, TY, "edges")?,
+            counts: req_u64s(hj, TY, "counts")?,
+            total: req_u64(hj, TY, "total")?,
+        };
+        Ok(Self {
+            tokens: req_i32s(j, TY, "tokens")?,
+            wall_secs: req_f64(j, TY, "wall_secs")?,
+            teacher_calls: req_u64(j, TY, "teacher_calls")?,
+            draft_calls: req_u64(j, TY, "draft_calls")?,
+            rounds: req_u64(j, TY, "rounds")?,
+            accept_lens: req_u64s(j, TY, "accept_lens")?
+                .into_iter()
+                .map(|x| x as usize)
+                .collect(),
+            accept_pos,
+            timers,
+            attn_hist,
+            teacher_cache: CacheStats::from_json(req(j, TY, "teacher_cache")?)?,
+            draft_cache: CacheStats::from_json(req(j, TY, "draft_cache")?)?,
+            prompt_len: req_usize(j, TY, "prompt_len")?,
+        })
+    }
+}
+
+impl Wire for Submit {
+    fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.push("id", self.id)
+            .push("prompt", Json::Arr(self.prompt.iter().map(|t| Json::Num(*t as f64)).collect()))
+            .push("max_new", self.max_new)
+            .push("arrival_ms", self.arrival_ms)
+            .push("kind", self.kind.as_str())
+            .push("park_on_complete", self.park_on_complete)
+            .push("slo", self.slo.as_ref().map_or(Json::Null, |s| s.to_json()))
+            .push("last", self.last)
+            .push("isolated", self.isolated);
+        o
+    }
+
+    fn from_json(j: &Json) -> Result<Self, DeserializationError> {
+        const TY: &str = "Submit";
+        let slo = match req(j, TY, "slo")? {
+            Json::Null => None,
+            s => Some(SloPolicy::from_json(s)?),
+        };
+        Ok(Self {
+            id: req_u64(j, TY, "id")?,
+            prompt: req_i32s(j, TY, "prompt")?,
+            max_new: req_usize(j, TY, "max_new")?,
+            arrival_ms: req_f64(j, TY, "arrival_ms")?,
+            kind: RequestKind::parse(&req_str(j, TY, "kind")?)?,
+            park_on_complete: req_bool(j, TY, "park_on_complete")?,
+            slo,
+            last: req_bool(j, TY, "last")?,
+            isolated: req_bool(j, TY, "isolated")?,
+        })
+    }
+}
+
+impl Wire for Resume {
+    fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.push("id", self.id)
+            .push("prompt", Json::Arr(self.prompt.iter().map(|t| Json::Num(*t as f64)).collect()))
+            .push("max_new", self.max_new)
+            .push("park_on_complete", self.park_on_complete);
+        o
+    }
+
+    fn from_json(j: &Json) -> Result<Self, DeserializationError> {
+        const TY: &str = "Resume";
+        Ok(Self {
+            id: req_u64(j, TY, "id")?,
+            prompt: req_i32s(j, TY, "prompt")?,
+            max_new: req_usize(j, TY, "max_new")?,
+            park_on_complete: req_bool(j, TY, "park_on_complete")?,
+        })
+    }
+}
+
+impl Wire for Abort {
+    fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.push("id", self.id.map_or(Json::Null, |id| Json::Num(id as f64)));
+        o
+    }
+
+    fn from_json(j: &Json) -> Result<Self, DeserializationError> {
+        let id = match req(j, "Abort", "id")? {
+            Json::Null => None,
+            v => Some(v.as_f64().ok_or_else(|| DeserializationError::field("Abort", "id"))? as u64),
+        };
+        Ok(Self { id })
+    }
+}
+
+impl Wire for TokenDelta {
+    fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.push("id", self.id)
+            .push("turn", self.turn)
+            .push("tokens", Json::Arr(self.tokens.iter().map(|t| Json::Num(*t as f64)).collect()));
+        o
+    }
+
+    fn from_json(j: &Json) -> Result<Self, DeserializationError> {
+        const TY: &str = "TokenDelta";
+        Ok(Self {
+            id: req_u64(j, TY, "id")?,
+            turn: req_usize(j, TY, "turn")?,
+            tokens: req_i32s(j, TY, "tokens")?,
+        })
+    }
+}
+
+impl Wire for TurnDone {
+    fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.push("id", self.id)
+            .push("rank", self.rank)
+            .push("turn", self.turn)
+            .push("out", self.out.to_json())
+            .push("submitted_tick", self.submitted_tick)
+            .push("admitted_tick", self.admitted_tick)
+            .push("finished_tick", self.finished_tick)
+            .push("waited_ticks", self.waited_ticks)
+            .push("finished_ms", self.finished_ms);
+        o
+    }
+
+    fn from_json(j: &Json) -> Result<Self, DeserializationError> {
+        const TY: &str = "TurnDone";
+        Ok(Self {
+            id: req_u64(j, TY, "id")?,
+            rank: req_usize(j, TY, "rank")?,
+            turn: req_usize(j, TY, "turn")?,
+            out: GenOut::from_json(req(j, TY, "out")?)?,
+            submitted_tick: req_u64(j, TY, "submitted_tick")?,
+            admitted_tick: req_u64(j, TY, "admitted_tick")?,
+            finished_tick: req_u64(j, TY, "finished_tick")?,
+            waited_ticks: req_u64(j, TY, "waited_ticks")?,
+            finished_ms: req_f64(j, TY, "finished_ms")?,
+        })
+    }
+}
+
+impl Wire for Park {
+    fn to_json(&self) -> Json {
+        self.done.to_json()
+    }
+
+    fn from_json(j: &Json) -> Result<Self, DeserializationError> {
+        TurnDone::from_json(j).map(|done| Park { done })
+    }
+}
+
+impl Wire for Completion {
+    fn to_json(&self) -> Json {
+        self.done.to_json()
+    }
+
+    fn from_json(j: &Json) -> Result<Self, DeserializationError> {
+        TurnDone::from_json(j).map(|done| Completion { done })
+    }
+}
+
+impl Wire for ShedNotice {
+    fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.push("rank", self.rank).push("notice", self.notice.to_json());
+        o
+    }
+
+    fn from_json(j: &Json) -> Result<Self, DeserializationError> {
+        const TY: &str = "ShedNotice";
+        Ok(Self {
+            rank: req_usize(j, TY, "rank")?,
+            notice: SchedShedNotice::from_json(req(j, TY, "notice")?)?,
+        })
+    }
+}
+
+impl Wire for WorkerStats {
+    fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.push("rank", self.rank)
+            .push("stats", self.stats.to_json())
+            .push("shed", Json::Arr(self.shed.iter().map(Wire::to_json).collect()))
+            .push("is_final", self.is_final)
+            .push("error", self.error.as_deref().map_or(Json::Null, Json::from));
+        o
+    }
+
+    fn from_json(j: &Json) -> Result<Self, DeserializationError> {
+        const TY: &str = "WorkerStats";
+        let shed = req(j, TY, "shed")?
+            .as_arr()
+            .ok_or_else(|| DeserializationError::field(TY, "shed"))?
+            .iter()
+            .map(SchedShedNotice::from_json)
+            .collect::<Result<Vec<_>, _>>()?;
+        let error = match req(j, TY, "error")? {
+            Json::Null => None,
+            v => Some(
+                v.as_str().ok_or_else(|| DeserializationError::field(TY, "error"))?.to_string(),
+            ),
+        };
+        Ok(Self {
+            rank: req_usize(j, TY, "rank")?,
+            stats: SchedulerStats::from_json(req(j, TY, "stats")?)?,
+            shed,
+            is_final: req_bool(j, TY, "is_final")?,
+            error,
+        })
+    }
+}
+
+impl Wire for Envelope {
+    fn to_json(&self) -> Json {
+        let body = match self {
+            Envelope::Submit(x) => x.to_json(),
+            Envelope::Resume(x) => x.to_json(),
+            Envelope::Abort(x) => x.to_json(),
+            Envelope::TokenDelta(x) => x.to_json(),
+            Envelope::Park(x) => x.to_json(),
+            Envelope::Completion(x) => x.to_json(),
+            Envelope::ShedNotice(x) => x.to_json(),
+            Envelope::WorkerStats(x) => x.to_json(),
+        };
+        let mut o = Json::obj();
+        o.push("type", self.kind_str()).push("body", body);
+        o
+    }
+
+    fn from_json(j: &Json) -> Result<Self, DeserializationError> {
+        const TY: &str = "Envelope";
+        let tag = req_str(j, TY, "type")?;
+        let body = req(j, TY, "body")?;
+        match tag.as_str() {
+            "submit" => Submit::from_json(body).map(Envelope::Submit),
+            "resume" => Resume::from_json(body).map(Envelope::Resume),
+            "abort" => Abort::from_json(body).map(Envelope::Abort),
+            "token_delta" => TokenDelta::from_json(body).map(Envelope::TokenDelta),
+            "park" => Park::from_json(body).map(Envelope::Park),
+            "completion" => Completion::from_json(body).map(Envelope::Completion),
+            "shed_notice" => ShedNotice::from_json(body).map(Envelope::ShedNotice),
+            "worker_stats" => WorkerStats::from_json(body).map(Envelope::WorkerStats),
+            other => Err(DeserializationError(format!("unknown envelope type '{other}'"))),
+        }
+    }
+}

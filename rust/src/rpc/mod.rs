@@ -1,0 +1,29 @@
+//! Typed channel RPC between the serving coordinator and its engine
+//! workers (remoc's model — multiplexed typed channels with built-in
+//! backpressure — rebuilt on `std::thread` + `std::sync::mpsc`).
+//!
+//! Three layers, outermost first:
+//!
+//! * [`channel`] — [`WireSender`]/[`WireReceiver`]: bounded typed
+//!   channels whose every message crosses as serialized bytes, codec
+//!   chosen by type parameter.
+//! * [`envelope`] — the protocol itself: [`Envelope`] and its command
+//!   (coordinator → worker) and event (worker → coordinator) payloads.
+//! * [`codec`] — the pluggable byte format: [`Wire`] (structure ↔ JSON)
+//!   and [`Codec`] (JSON ↔ bytes), with [`JsonCodec`] as the default and
+//!   [`FramedJsonCodec`] proving the seam.
+//!
+//! The serving split that uses these lives in `coordinator::front`
+//! (routing front end) and `coordinator::worker` (per-thread engine
+//! worker).
+
+pub mod channel;
+pub mod codec;
+pub mod envelope;
+
+pub use channel::{wire_channel, ChannelError, WireReceiver, WireSender};
+pub use codec::{Codec, DeserializationError, FramedJsonCodec, JsonCodec, SerializationError, Wire};
+pub use envelope::{
+    Abort, Completion, Envelope, Park, RequestKind, Resume, ShedNotice, Submit, TokenDelta,
+    TurnDone, WorkerStats,
+};

@@ -825,11 +825,23 @@ fn abort_all_recovers_mid_overload() {
             .unwrap();
         sched.advance_clock(10.0);
     }
-    sched.abort_all();
+    let aborted_shed = sched.abort_all();
     for e in engines.iter_mut() {
         e.reset();
     }
     assert!(sched.is_idle(), "abort_all must leave the scheduler idle");
+    // abort_all hands back the undrained shed notices instead of
+    // discarding them: every shed the stats counted is accounted for,
+    // and the internal drain buffer is left empty.
+    assert_eq!(
+        aborted_shed.len() as u64,
+        sched.stats.shed,
+        "abort_all must surface exactly the sheds the stats counted"
+    );
+    assert!(
+        sched.drain_shed().is_empty(),
+        "abort_all must leave no shed notices behind for a later drain"
+    );
 
     // recovery: a fresh post-abort request decodes bit-identically to a
     // dedicated sequential engine, unburdened by any stale SLO state

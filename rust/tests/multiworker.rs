@@ -1,0 +1,254 @@
+//! Acceptance properties of the multi-worker serving split
+//! (coordinator front end + N engine workers over typed channel RPC):
+//!
+//! 1. **Worker-count invisibility** — every conversation's token stream
+//!    is a function of the trace alone: `--workers N` for N ∈ {1, 2, 4}
+//!    produces bit-identical per-conversation tokens, all equal to a
+//!    dedicated sequential engine decoding the same turns (park/resume
+//!    churn included).
+//! 2. **Determinism** — a multi-worker replay of the same trace twice
+//!    yields bit-identical records and percentiles.
+//! 3. **Consistent-hash routing** — the ring is deterministic, covers
+//!    every rank, and growing the worker count remaps only part of the
+//!    id space.
+//! 4. **Shed accounting across shutdown** — shed notices raised after
+//!    the coordinator stopped reading per-tick events ride the final
+//!    `WorkerStats` drain handshake instead of being silently dropped
+//!    (the `abort_all` regression).
+//!
+//! The `EA_WORKERS` environment variable (CI axis) adds one more worker
+//! count to the identity sweep, so the whole suite exercises the
+//! topology CI selects.
+
+use eagle_pangu::backend::sim::SimBackend;
+use eagle_pangu::config::RunConfig;
+use eagle_pangu::coordinator::{
+    followup_prompt, run_worker, BackendSpec, HashRing, SloAction, SloPolicy, WorkerConfig,
+};
+use eagle_pangu::engine::Engine;
+use eagle_pangu::harness::{replay, ReplayConfig};
+use eagle_pangu::rpc::{wire_channel, Envelope, JsonCodec, RequestKind, Submit};
+use eagle_pangu::util::SplitMix64;
+use eagle_pangu::workload::{ArrivalKind, PromptFamily, TraceSpec};
+use std::collections::BTreeSet;
+
+/// The CI topology axis: `EA_WORKERS` adds a worker count to the sweep.
+fn env_workers() -> Option<usize> {
+    std::env::var("EA_WORKERS").ok().and_then(|v| v.parse().ok())
+}
+
+#[test]
+fn worker_count_is_invisible_in_token_streams() {
+    // Two-turn conversations with park/resume churn, replayed at every
+    // worker count: per-conversation tokens must match each other and
+    // the dedicated sequential reference (one fresh backend + engine
+    // per conversation, turn 2 decoded on the same engine — residency).
+    let trace = TraceSpec::smoke_poisson(33).generate().unwrap();
+    let turns = 2;
+    let mut cfg = ReplayConfig::new(3);
+    cfg.turns = turns;
+
+    let reference: Vec<Vec<i32>> = trace
+        .iter()
+        .map(|r| {
+            let mut b = SimBackend::new(cfg.agree_pct);
+            let mut e = Engine::new(&b, RunConfig::default());
+            let mut all: Vec<i32> = Vec::new();
+            for turn in 0..turns {
+                let prompt =
+                    if turn == 0 { r.prompt.clone() } else { followup_prompt(&all) };
+                let out = e.generate_speculative(&mut b, &prompt, r.max_new).unwrap();
+                all.extend(out.tokens);
+            }
+            all
+        })
+        .collect();
+
+    let mut counts: BTreeSet<usize> = [1, 2, 4].into();
+    counts.extend(env_workers().filter(|&w| w >= 1));
+    for workers in counts {
+        cfg.workers = workers;
+        let rep = replay(&trace, &cfg).unwrap();
+        assert_eq!(rep.completed, trace.len(), "workers={workers} must complete everything");
+        assert_eq!(rep.shed, 0);
+        assert_eq!(rep.stats.len(), workers);
+        for ((r, rec), want) in trace.iter().zip(&rep.records).zip(&reference) {
+            assert_eq!(
+                &rec.tokens, want,
+                "conversation {} tokens diverged at workers={workers} \
+                 (the stream must be a function of the trace alone)",
+                r.id
+            );
+        }
+        // Multi-turn accounting reaches the aggregated stats.
+        let parked: u64 = rep.stats.iter().map(|s| s.parked).sum();
+        let resumed: u64 = rep.stats.iter().map(|s| s.resumed).sum();
+        assert_eq!(parked as usize, trace.len() * (turns - 1));
+        assert_eq!(resumed, parked, "every park was resumed");
+    }
+}
+
+#[test]
+fn multi_worker_replay_is_deterministic() {
+    let trace = TraceSpec::smoke_poisson(5).generate().unwrap();
+    let mut cfg = ReplayConfig::new(2);
+    cfg.workers = 4;
+    cfg.turns = 2;
+    let r1 = replay(&trace, &cfg).unwrap();
+    let r2 = replay(&trace, &cfg).unwrap();
+    assert_eq!(r1.records, r2.records, "multi-worker replay must be bit-deterministic");
+    assert_eq!(r1.p50_ms.to_bits(), r2.p50_ms.to_bits());
+    assert_eq!(r1.p99_ms.to_bits(), r2.p99_ms.to_bits());
+}
+
+#[test]
+fn hash_ring_is_stable_and_covers_every_rank() {
+    let ring = HashRing::new(4);
+    assert_eq!(ring.workers(), 4);
+    // Deterministic: an independently built ring routes identically.
+    let again = HashRing::new(4);
+    let mut per_rank = vec![0usize; 4];
+    for id in 0..1000u64 {
+        let r = ring.route(id);
+        assert_eq!(r, again.route(id), "routing must be a pure function of (workers, id)");
+        assert!(r < 4);
+        per_rank[r] += 1;
+    }
+    for (rank, n) in per_rank.iter().enumerate() {
+        assert!(
+            *n > 50,
+            "rank {rank} owns only {n}/1000 ids — the ring spread collapsed"
+        );
+    }
+    // Consistent hashing: growing 4 -> 5 workers remaps only part of
+    // the id space (modulo sharding would remap ~80%).
+    let grown = HashRing::new(5);
+    let moved = (0..1000u64).filter(|&id| ring.route(id) != grown.route(id)).count();
+    assert!(moved > 0, "a fifth worker must take over some ids");
+    assert!(
+        moved < 500,
+        "consistent hashing moved {moved}/1000 ids on +1 worker (expected ~1/5)"
+    );
+}
+
+#[test]
+fn shard_stats_aggregate_per_rank_under_shed() {
+    // Overload with a tight shed SLO across 3 workers: the per-rank
+    // scheduler counters in the report must account for every shed and
+    // every completion, summed across ranks.
+    // The rate is sized so every shard is overloaded on its own: a
+    // single queue sheds at ~10x capacity, and 2000 rps split three
+    // ways still leaves each worker far past what 2 slots sustain.
+    let trace = TraceSpec {
+        requests: 48,
+        kind: ArrivalKind::Poisson { rate_rps: 2000.0 },
+        family: PromptFamily::Mixed,
+        prompt_mean: 16,
+        max_new: 6,
+        seed: 9,
+    }
+    .generate()
+    .unwrap();
+    let mut cfg = ReplayConfig::new(2);
+    cfg.workers = 3;
+    cfg.slo = Some(SloPolicy { target_ms: 10.0, action: SloAction::Shed });
+    let rep = replay(&trace, &cfg).unwrap();
+    assert_eq!(rep.stats.len(), 3);
+    assert!(rep.shed > 0, "overload far beyond capacity must shed something");
+    let shed: u64 = rep.stats.iter().map(|s| s.shed).sum();
+    let retired: u64 = rep.stats.iter().map(|s| s.retired).sum();
+    assert_eq!(shed as usize, rep.shed, "per-rank shed counters must sum to the shed count");
+    assert_eq!(retired as usize, rep.completed, "per-rank retire counters must sum up");
+    for rec in &rep.records {
+        assert_eq!(rec.tokens.is_empty(), rec.shed, "served iff it streamed tokens");
+    }
+}
+
+fn prompt(n: usize, seed: u64) -> Vec<i32> {
+    let mut rng = SplitMix64::new(seed);
+    let mut p = vec![1i32];
+    for _ in 1..n.max(2) {
+        p.push(rng.range(2, 512) as i32);
+    }
+    p
+}
+
+#[test]
+fn sheds_raised_after_shutdown_surface_in_final_stats() {
+    // The abort_all regression, end to end: a worker whose coordinator
+    // hangs up mid-batch still holds shed notices its scheduler raised
+    // but never got to drain (batch-end shed events were never reached).
+    // They must arrive in the final WorkerStats drain handshake — the
+    // old code path dropped them with the scheduler epoch.
+    let (cmd_tx, cmd_rx) = wire_channel::<Envelope, JsonCodec>(64);
+    let (event_tx, event_rx) = wire_channel::<Envelope, JsonCodec>(256);
+    let cfg = WorkerConfig {
+        rank: 0,
+        slots: 2,
+        backend: BackendSpec::Sim { agree_pct: 90 },
+        run: RunConfig::default(),
+        tick_host_ms: 1.0,
+        launch_ms: 2.0,
+    };
+    let handle = std::thread::spawn(move || run_worker::<JsonCodec>(cfg, cmd_rx, event_tx));
+
+    // 12 simultaneous arrivals onto 2 slots. FIFO admission seats the
+    // two long park-on-complete conversations; the other ten queue with
+    // a 1 ms shed deadline no later tick can meet, so they all shed
+    // well before the first park (a 24-token turn runs many ticks).
+    let n = 12u64;
+    for i in 0..n {
+        let long = i < 2;
+        let s = Submit {
+            id: i,
+            prompt: prompt(6 + i as usize % 3, 4000 + i),
+            max_new: if long { 24 } else { 4 },
+            arrival_ms: 0.0,
+            kind: RequestKind::Ea,
+            park_on_complete: long,
+            slo: if long {
+                None
+            } else {
+                Some(SloPolicy { target_ms: 1.0, action: SloAction::Shed })
+            },
+            last: i == n - 1,
+            isolated: false,
+        };
+        cmd_tx.send(&Envelope::Submit(s)).unwrap();
+    }
+
+    // Wait for the first Park — the worker now blocks on a Resume that
+    // will never come. No shed may have been *streamed* yet: mid-batch,
+    // notices only accumulate in the scheduler.
+    loop {
+        match event_rx.recv().unwrap() {
+            Envelope::Park(_) => break,
+            Envelope::TokenDelta(_) => {}
+            Envelope::ShedNotice(sn) => {
+                panic!("mid-batch shed notice for {} streamed early", sn.notice.id)
+            }
+            other => panic!("unexpected '{}' before the first park", other.kind_str()),
+        }
+    }
+    // Hang up instead of resuming: the worker aborts its epoch and must
+    // fold the ten undrained sheds into its final stats message.
+    drop(cmd_tx);
+    let ws = loop {
+        match event_rx.recv().unwrap() {
+            Envelope::WorkerStats(ws) => break ws,
+            Envelope::Park(_) | Envelope::TokenDelta(_) => {}
+            other => panic!("unexpected '{}' while draining", other.kind_str()),
+        }
+    };
+    handle.join().unwrap();
+    assert!(ws.is_final, "the drain handshake is flagged final");
+    assert_eq!(ws.error, None, "hangup is a clean shutdown, not a failure");
+    assert_eq!(ws.stats.shed, 10, "all ten deadlined requests shed");
+    assert_eq!(
+        ws.shed.len() as u64,
+        ws.stats.shed,
+        "every counted shed must surface in the final stats (the abort_all regression)"
+    );
+    let ids: BTreeSet<u64> = ws.shed.iter().map(|s| s.id).collect();
+    assert_eq!(ids, (2..12).collect::<BTreeSet<u64>>(), "exactly the queued ten shed");
+}

@@ -20,14 +20,14 @@
 
 use eagle_pangu::backend::sim::SimBackend;
 use eagle_pangu::backend::ModelBackend;
-use eagle_pangu::cache::{KvStore, ManagedCache, PagePool, PagedCache};
+use eagle_pangu::cache::{pool_read, KvStore, ManagedCache, PagePool, PagedCache, SharedPool};
 use eagle_pangu::config::{CacheLayout, CacheStrategy, CommitMode, Dims, RunConfig};
 use eagle_pangu::coordinator::{Completion, ContinuousScheduler, Disposition, SlotRequest};
 use eagle_pangu::engine::{Engine, GenOut};
 use eagle_pangu::util::prop;
 use eagle_pangu::util::SplitMix64;
-use std::cell::RefCell;
-use std::rc::Rc;
+use std::sync::RwLock;
+use std::sync::Arc;
 
 const DIMS: Dims = Dims { layers: 2, d_model: 8, heads: 2, d_head: 2 };
 const CAP: usize = 48;
@@ -55,7 +55,7 @@ struct Twin {
 }
 
 impl Twin {
-    fn new(strategy: CacheStrategy, fast: bool, pool: &Rc<RefCell<PagePool>>) -> Self {
+    fn new(strategy: CacheStrategy, fast: bool, pool: &SharedPool) -> Self {
         Twin {
             flat: ManagedCache::new(DIMS, CAP, strategy, fast),
             paged: PagedCache::new(DIMS, CAP, strategy, fast, pool.clone()),
@@ -161,8 +161,8 @@ impl Twin {
     }
 }
 
-fn pool_invariant(pool: &Rc<RefCell<PagePool>>, caches: &[&PagedCache]) {
-    let p = pool.borrow();
+fn pool_invariant(pool: &SharedPool, caches: &[&PagedCache]) {
+    let p = pool_read(pool);
     // refcounted form: shared blocks count once however many tables map
     // them; without sharing, referenced == Σ mapped (checked both ways)
     assert_eq!(
@@ -180,7 +180,7 @@ fn pool_invariant(pool: &Rc<RefCell<PagePool>>, caches: &[&PagedCache]) {
 #[test]
 fn property_paged_cache_is_bit_identical_to_flat() {
     prop::for_cases(60, 0x9A6E_D0, |g| {
-        let pool = Rc::new(RefCell::new(PagePool::new(DIMS, BS)));
+        let pool = Arc::new(RwLock::new(PagePool::new(DIMS, BS)));
         let strategy = *g.choose(&[CacheStrategy::SegmentShare, CacheStrategy::DeepCopy]);
         let fast = g.bool_p(0.7);
         let mut twin = Twin::new(strategy, fast, &pool);
@@ -206,7 +206,7 @@ fn property_parked_resident_survives_sibling_traffic() {
     // resume with bit-identical committed state, and the pool must
     // account every block throughout.
     prop::for_cases(40, 0x9A6E_D1, |g| {
-        let pool = Rc::new(RefCell::new(PagePool::new(DIMS, BS)));
+        let pool = Arc::new(RwLock::new(PagePool::new(DIMS, BS)));
         let strategy = *g.choose(&[CacheStrategy::SegmentShare, CacheStrategy::DeepCopy]);
         let mut a = Twin::new(strategy, true, &pool);
         let mut b = Twin::new(strategy, true, &pool);

@@ -21,14 +21,14 @@
 
 use eagle_pangu::backend::sim::SimBackend;
 use eagle_pangu::backend::ModelBackend;
-use eagle_pangu::cache::{CachePools, KvStore, PagePool, PagedCache};
+use eagle_pangu::cache::{pool_read, CachePools, KvStore, PagePool, PagedCache, SharedPool};
 use eagle_pangu::config::{CacheLayout, CacheStrategy, CommitMode, Dims, RunConfig};
 use eagle_pangu::coordinator::{Completion, ContinuousScheduler, Disposition, SlotRequest};
 use eagle_pangu::engine::Engine;
 use eagle_pangu::util::prop;
 use eagle_pangu::workload::SharedPrefixSpec;
-use std::cell::RefCell;
-use std::rc::Rc;
+use std::sync::RwLock;
+use std::sync::Arc;
 
 const DIMS: Dims = Dims { layers: 2, d_model: 8, heads: 2, d_head: 2 };
 const CAP: usize = 48;
@@ -97,8 +97,8 @@ fn random_op(g: &mut prop::Gen, c: &mut PagedCache, val: &mut f32) {
     }
 }
 
-fn refcount_invariant(pool: &Rc<RefCell<PagePool>>) {
-    let p = pool.borrow();
+fn refcount_invariant(pool: &SharedPool) {
+    let p = pool_read(pool);
     assert_eq!(
         p.blocks(),
         p.free_blocks() + p.referenced_blocks(),
@@ -112,7 +112,7 @@ fn refcount_invariant(pool: &Rc<RefCell<PagePool>>) {
 #[test]
 fn property_refcounted_invariant_survives_shared_random_ops() {
     prop::for_cases(40, 0x51F1_D0, |g| {
-        let pool = Rc::new(RefCell::new(PagePool::new(DIMS, BS)));
+        let pool = Arc::new(RwLock::new(PagePool::new(DIMS, BS)));
         // donor commits a block-aligned run and stays frozen
         let mut donor =
             PagedCache::new(DIMS, CAP, CacheStrategy::SegmentShare, true, pool.clone());
@@ -128,7 +128,7 @@ fn property_refcounted_invariant_survives_shared_random_ops() {
         let fast = g.bool_p(0.5);
         let mut adopter = PagedCache::new(DIMS, CAP, strategy, fast, pool.clone());
         adopter.adopt_shared_blocks(&run, nblocks * BS).unwrap();
-        assert_eq!(pool.borrow().ref_count(run[0]), 2);
+        assert_eq!(pool_read(&pool).ref_count(run[0]), 2);
         refcount_invariant(&pool);
 
         let mut val = 100.0f32;
@@ -145,7 +145,7 @@ fn property_refcounted_invariant_survives_shared_random_ops() {
         refcount_invariant(&pool);
         assert_eq!(donor.committed_checksum(), donor_sum);
         drop(donor);
-        let p = pool.borrow();
+        let p = pool_read(&pool);
         assert_eq!(p.free_blocks(), p.blocks(), "a dropped pair must free every block");
     });
 }

@@ -1,0 +1,369 @@
+//! Property tests of the coordinator/worker RPC layer (satellite of the
+//! multi-worker split):
+//!
+//! 1. **Round-trip totality** — every [`Envelope`] variant, filled with
+//!    randomized payloads (including the option-heavy corners: SLO
+//!    present/absent, abort-one vs abort-all, final vs streaming stats),
+//!    survives serialize → deserialize through *both* codecs with its
+//!    JSON form bit-identical.
+//! 2. **Truncation honesty** — the framed codec names exactly what went
+//!    wrong on cut-off or corrupted input instead of failing obscurely
+//!    inside the JSON parser.
+//! 3. **Channel semantics** — typed channels move real bytes, report
+//!    `Disconnected` on peer drop, and `try_send` distinguishes a full
+//!    queue from a dead one (the coordinator's deadlock-avoidance
+//!    contract).
+
+use eagle_pangu::cache::CacheStats;
+use eagle_pangu::coordinator::{SchedulerStats, ShedNotice as SchedShedNotice, SloAction, SloPolicy};
+use eagle_pangu::engine::GenOut;
+use eagle_pangu::json;
+use eagle_pangu::rpc::{
+    wire_channel, Abort, ChannelError, Codec, Completion, Envelope, FramedJsonCodec, JsonCodec,
+    Park, RequestKind, Resume, ShedNotice, Submit, TokenDelta, TurnDone, Wire, WorkerStats,
+};
+use eagle_pangu::util::stats::{AcceptPos, Histogram};
+use eagle_pangu::util::{SplitMix64, StageTimer};
+
+// -------------------------------------------------------------------
+// Randomized payload builders. All numeric fields stay in ranges that
+// are exact in f64 (the JSON value model is f64-backed): u64 < 2^32,
+// f64 dyadic rationals.
+// -------------------------------------------------------------------
+
+fn rand_u64(rng: &mut SplitMix64) -> u64 {
+    rng.next_u64() % 1_000_000
+}
+
+fn rand_f64(rng: &mut SplitMix64) -> f64 {
+    (rng.next_u64() % 100_000) as f64 / 8.0
+}
+
+fn rand_tokens(rng: &mut SplitMix64, n: usize) -> Vec<i32> {
+    (0..n).map(|_| (rng.next_u64() % 50_000) as i32 - 10_000).collect()
+}
+
+fn rand_shed(rng: &mut SplitMix64) -> SchedShedNotice {
+    SchedShedNotice {
+        id: rand_u64(rng),
+        submitted_tick: rand_u64(rng),
+        shed_tick: rand_u64(rng),
+        waited_ms: rand_f64(rng),
+        target_ms: rand_f64(rng),
+    }
+}
+
+fn rand_stats(rng: &mut SplitMix64) -> SchedulerStats {
+    SchedulerStats {
+        submitted: rand_u64(rng),
+        admitted: rand_u64(rng),
+        retired: rand_u64(rng),
+        parked: rand_u64(rng),
+        resumed: rand_u64(rng),
+        ticks: rand_u64(rng),
+        fused_launches: rand_u64(rng),
+        max_wait_ticks: rand_u64(rng),
+        shed: rand_u64(rng),
+        prefill_teacher_calls: rand_u64(rng),
+    }
+}
+
+fn rand_cache_stats(rng: &mut SplitMix64) -> CacheStats {
+    CacheStats {
+        branches: rand_u64(rng),
+        commits: rand_u64(rng),
+        rollbacks: rand_u64(rng),
+        replicate_bytes: rand_u64(rng),
+        append_bytes: rand_u64(rng),
+        commit_bytes: rand_u64(rng),
+        fast_reorders: rand_u64(rng),
+        fast_fallbacks: rand_u64(rng),
+        full_reorders: rand_u64(rng),
+        cow_copies: rand_u64(rng),
+        cow_bytes: rand_u64(rng),
+        adopted_rows: rand_u64(rng),
+    }
+}
+
+fn rand_genout(rng: &mut SplitMix64) -> GenOut {
+    let mut timers = StageTimer::new(false);
+    timers.seconds.insert("draft".into(), rand_f64(rng));
+    timers.seconds.insert("verify".into(), rand_f64(rng));
+    timers.calls.insert("draft".into(), rand_u64(rng));
+    timers.calls.insert("verify".into(), rand_u64(rng));
+    let mut attn_hist = Histogram::new(vec![1.0, 2.0, 4.0, 8.0]);
+    for _ in 0..8 {
+        attn_hist.add((rng.next_u64() % 12) as f64);
+    }
+    let mut accept_pos = AcceptPos::default();
+    for _ in 0..5 {
+        let offered = 1 + (rng.next_u64() % 4) as usize;
+        accept_pos.record((rng.next_u64() as usize) % (offered + 1), offered);
+    }
+    GenOut {
+        tokens: rand_tokens(rng, 1 + (rng.next_u64() % 12) as usize),
+        wall_secs: rand_f64(rng),
+        teacher_calls: rand_u64(rng),
+        draft_calls: rand_u64(rng),
+        rounds: rand_u64(rng),
+        accept_lens: (0..4).map(|_| (rng.next_u64() % 6) as usize).collect(),
+        accept_pos,
+        timers,
+        attn_hist,
+        teacher_cache: rand_cache_stats(rng),
+        draft_cache: rand_cache_stats(rng),
+        prompt_len: (rng.next_u64() % 64) as usize,
+    }
+}
+
+fn rand_turn_done(rng: &mut SplitMix64) -> TurnDone {
+    TurnDone {
+        id: rand_u64(rng),
+        rank: (rng.next_u64() % 8) as usize,
+        turn: (rng.next_u64() % 4) as usize,
+        out: rand_genout(rng),
+        submitted_tick: rand_u64(rng),
+        admitted_tick: rand_u64(rng),
+        finished_tick: rand_u64(rng),
+        waited_ticks: rand_u64(rng),
+        finished_ms: rand_f64(rng),
+    }
+}
+
+/// Every envelope variant, covering the optional/enum corners: SLO
+/// present and absent, both request kinds, abort-one and abort-all,
+/// streaming and final worker stats, error present and absent.
+fn all_envelopes(rng: &mut SplitMix64) -> Vec<Envelope> {
+    vec![
+        Envelope::Submit(Submit {
+            id: rand_u64(rng),
+            prompt: rand_tokens(rng, 6),
+            max_new: 1 + (rng.next_u64() % 16) as usize,
+            arrival_ms: rand_f64(rng),
+            kind: RequestKind::Ea,
+            park_on_complete: true,
+            slo: Some(SloPolicy { target_ms: rand_f64(rng), action: SloAction::Shed }),
+            last: false,
+            isolated: false,
+        }),
+        Envelope::Submit(Submit {
+            id: rand_u64(rng),
+            prompt: rand_tokens(rng, 1),
+            max_new: 4,
+            arrival_ms: rand_f64(rng),
+            kind: RequestKind::Baseline,
+            park_on_complete: false,
+            slo: None,
+            last: true,
+            isolated: true,
+        }),
+        Envelope::Submit(Submit {
+            id: rand_u64(rng),
+            prompt: rand_tokens(rng, 3),
+            max_new: 2,
+            arrival_ms: rand_f64(rng),
+            kind: RequestKind::Ea,
+            park_on_complete: false,
+            slo: Some(SloPolicy { target_ms: rand_f64(rng), action: SloAction::Queue }),
+            last: true,
+            isolated: false,
+        }),
+        Envelope::Resume(Resume {
+            id: rand_u64(rng),
+            prompt: rand_tokens(rng, 2),
+            max_new: 1 + (rng.next_u64() % 8) as usize,
+            park_on_complete: rng.next_u64() % 2 == 0,
+        }),
+        Envelope::Abort(Abort { id: Some(rand_u64(rng)) }),
+        Envelope::Abort(Abort { id: None }),
+        Envelope::TokenDelta(TokenDelta {
+            id: rand_u64(rng),
+            turn: (rng.next_u64() % 4) as usize,
+            tokens: rand_tokens(rng, 1 + (rng.next_u64() % 5) as usize),
+        }),
+        Envelope::Park(Park { done: rand_turn_done(rng) }),
+        Envelope::Completion(Completion { done: rand_turn_done(rng) }),
+        Envelope::ShedNotice(ShedNotice { rank: (rng.next_u64() % 8) as usize, notice: rand_shed(rng) }),
+        Envelope::WorkerStats(WorkerStats {
+            rank: (rng.next_u64() % 8) as usize,
+            stats: rand_stats(rng),
+            shed: vec![rand_shed(rng), rand_shed(rng)],
+            is_final: true,
+            error: Some("engine exploded".into()),
+        }),
+        Envelope::WorkerStats(WorkerStats {
+            rank: (rng.next_u64() % 8) as usize,
+            stats: rand_stats(rng),
+            shed: Vec::new(),
+            is_final: false,
+            error: None,
+        }),
+    ]
+}
+
+/// Serialize through `C`, deserialize, and require the rebuilt value's
+/// JSON form to be bit-identical text (the lossless round-trip
+/// contract of [`Wire`]).
+fn assert_roundtrip<C: Codec>(env: &Envelope, codec_name: &str) {
+    let mut bytes = Vec::new();
+    C::serialize(&mut bytes, env).unwrap_or_else(|e| {
+        panic!("{codec_name} failed to serialize {}: {e}", env.kind_str())
+    });
+    let back: Envelope = C::deserialize(bytes.as_slice()).unwrap_or_else(|e| {
+        panic!("{codec_name} failed to deserialize {}: {e}", env.kind_str())
+    });
+    assert_eq!(back.kind_str(), env.kind_str(), "{codec_name} changed the variant tag");
+    assert_eq!(
+        back.to_json().to_string(),
+        env.to_json().to_string(),
+        "{codec_name} round trip of {} is not lossless",
+        env.kind_str()
+    );
+}
+
+#[test]
+fn every_envelope_roundtrips_through_both_codecs() {
+    for seed in 0..8u64 {
+        let mut rng = SplitMix64::new(0xE11E ^ seed);
+        for env in all_envelopes(&mut rng) {
+            assert_roundtrip::<JsonCodec>(&env, "JsonCodec");
+            assert_roundtrip::<FramedJsonCodec>(&env, "FramedJsonCodec");
+        }
+    }
+}
+
+#[test]
+fn envelope_tags_are_stable_on_the_wire() {
+    // The serialized form is a tagged union whose "type" field equals
+    // kind_str() — the cross-process compatibility surface.
+    let mut rng = SplitMix64::new(7);
+    let expected = [
+        "submit", "submit", "submit", "resume", "abort", "abort", "token_delta", "park",
+        "completion", "shed_notice", "worker_stats", "worker_stats",
+    ];
+    let envs = all_envelopes(&mut rng);
+    assert_eq!(envs.len(), expected.len());
+    for (env, want) in envs.iter().zip(expected) {
+        assert_eq!(env.kind_str(), want);
+        let mut bytes = Vec::new();
+        JsonCodec::serialize(&mut bytes, env).unwrap();
+        let doc = json::parse(std::str::from_utf8(&bytes).unwrap()).unwrap();
+        assert_eq!(doc.get("type").and_then(|t| t.as_str()), Some(want));
+        assert!(doc.get("body").is_some(), "{want} envelope must carry a body");
+    }
+}
+
+#[test]
+fn json_codec_rejects_garbage_and_unknown_tags() {
+    let err = JsonCodec::deserialize::<_, Envelope>(&b"not json at all"[..]).unwrap_err();
+    assert!(!err.to_string().is_empty());
+
+    // Valid JSON, unknown tag: the error names the tag.
+    let err = JsonCodec::deserialize::<_, Envelope>(&br#"{"type": "warp", "body": {}}"#[..])
+        .unwrap_err();
+    assert!(
+        err.to_string().contains("unknown envelope type 'warp'"),
+        "unexpected error: {err}"
+    );
+
+    // Valid JSON, right tag, hollow body: the error names the missing field.
+    let err = JsonCodec::deserialize::<_, Envelope>(&br#"{"type": "abort", "body": {}}"#[..])
+        .unwrap_err();
+    assert!(err.to_string().contains("Abort"), "unexpected error: {err}");
+
+    // A truncated JSON document fails the parse rather than yielding a value.
+    let mut bytes = Vec::new();
+    let env = Envelope::Abort(Abort { id: Some(3) });
+    JsonCodec::serialize(&mut bytes, &env).unwrap();
+    assert!(JsonCodec::deserialize::<_, Envelope>(&bytes[..bytes.len() - 2]).is_err());
+}
+
+#[test]
+fn framed_codec_names_every_truncation() {
+    let env = Envelope::TokenDelta(TokenDelta { id: 9, turn: 0, tokens: vec![1, 2, 3] });
+    let mut bytes = Vec::new();
+    FramedJsonCodec::serialize(&mut bytes, &env).unwrap();
+    assert!(bytes.len() > 9, "framed form is header + body");
+
+    // Whole-frame round trip works.
+    let back: Envelope = FramedJsonCodec::deserialize(bytes.as_slice()).unwrap();
+    assert_eq!(back.to_json().to_string(), env.to_json().to_string());
+
+    let msg = |cut: &[u8]| {
+        FramedJsonCodec::deserialize::<_, Envelope>(cut).unwrap_err().to_string()
+    };
+    // Cut inside the header (including the empty input).
+    assert!(msg(&[]).contains("truncated frame header"));
+    assert!(msg(&bytes[..5]).contains("truncated frame header"));
+    // Header intact, body cut short (or absent): the error names the
+    // byte count the frame promised.
+    let want = format!("want {} bytes", bytes.len() - 9);
+    assert!(msg(&bytes[..9]).contains("truncated frame body"));
+    let cut_body = msg(&bytes[..bytes.len() - 3]);
+    assert!(cut_body.contains(&want), "got: {cut_body}");
+    // Corrupted headers are distinguished from truncated ones.
+    assert!(msg(b"000000010").contains("malformed frame header"), "missing newline");
+    assert!(msg(&[0xFF; 9]).contains("malformed frame header"), "non-UTF-8 digits");
+    assert!(msg(b"zzzzzzzz\n").contains("malformed frame length"), "non-hex digits");
+    // Frame intact but the body is not UTF-8.
+    let mut bad = b"00000002\n".to_vec();
+    bad.extend_from_slice(&[0xFF, 0xFE]);
+    assert!(msg(&bad).contains("frame body not UTF-8"));
+}
+
+#[test]
+fn wire_channel_moves_envelopes_and_reports_disconnects() {
+    let (tx, rx) = wire_channel::<Envelope, JsonCodec>(8);
+    let mut rng = SplitMix64::new(21);
+    let sent = all_envelopes(&mut rng);
+    for env in &sent {
+        tx.send(env).unwrap();
+    }
+    for env in &sent {
+        let got = rx.recv().unwrap();
+        assert_eq!(got.to_json().to_string(), env.to_json().to_string());
+    }
+    // Empty but connected: try_recv yields None, not an error.
+    assert_eq!(rx.try_recv().unwrap().map(|e| e.kind_str()), None);
+    // Sender gone: the receiver learns, both blocking and polling.
+    drop(tx);
+    assert_eq!(rx.recv().unwrap_err(), ChannelError::Disconnected);
+    assert_eq!(rx.try_recv().unwrap_err(), ChannelError::Disconnected);
+}
+
+#[test]
+fn try_send_distinguishes_full_from_dead() {
+    let (tx, rx) = wire_channel::<Envelope, FramedJsonCodec>(1);
+    let env = Envelope::Abort(Abort { id: None });
+    // Capacity 1: first enqueue fits, second reports Full as Ok(false).
+    assert!(tx.try_send(&env).unwrap());
+    assert!(!tx.try_send(&env).unwrap());
+    // Draining one message frees the slot again.
+    rx.recv().unwrap();
+    assert!(tx.try_send(&env).unwrap());
+    // A dead peer is an error, not backpressure.
+    drop(rx);
+    assert_eq!(tx.try_send(&env).unwrap_err(), ChannelError::Disconnected);
+    assert_eq!(tx.send(&env).unwrap_err(), ChannelError::Disconnected);
+}
+
+#[test]
+fn cloned_senders_feed_one_receiver() {
+    let (tx, rx) = wire_channel::<Envelope, JsonCodec>(4);
+    let tx2 = tx.clone();
+    tx.send(&Envelope::Abort(Abort { id: Some(1) })).unwrap();
+    tx2.send(&Envelope::Abort(Abort { id: Some(2) })).unwrap();
+    let mut ids = Vec::new();
+    for _ in 0..2 {
+        match rx.recv().unwrap() {
+            Envelope::Abort(a) => ids.push(a.id.unwrap()),
+            other => panic!("unexpected envelope {}", other.kind_str()),
+        }
+    }
+    assert_eq!(ids, vec![1, 2]);
+    // The channel dies only when *every* sender clone is gone.
+    drop(tx);
+    assert_eq!(rx.try_recv().unwrap().map(|e| e.kind_str()), None);
+    drop(tx2);
+    assert_eq!(rx.recv().unwrap_err(), ChannelError::Disconnected);
+}

@@ -8,6 +8,22 @@ use eagle_pangu::coordinator::{SloAction, SloPolicy};
 use eagle_pangu::harness::{replay, ReplayConfig};
 use eagle_pangu::workload::{ArrivalKind, PromptFamily, TraceSpec};
 
+/// CI topology axis (mirrors `EA_CACHE_LAYOUT`/`EA_PIPELINE` in
+/// `tests/continuous.rs`): `EA_WORKERS` selects the coordinator's
+/// worker count — the determinism properties must hold at any world
+/// size. Default 1. The overload tests below deliberately ignore it:
+/// their "must shed" thresholds are calibrated to a single admission
+/// queue, and sharding the same arrival rate across N workers changes
+/// the load each queue sees (multi-worker shed accounting is covered in
+/// `tests/multiworker.rs`).
+fn replay_cfg(slots: usize) -> ReplayConfig {
+    let mut cfg = ReplayConfig::new(slots);
+    if let Ok(v) = std::env::var("EA_WORKERS") {
+        cfg.workers = v.parse().expect("EA_WORKERS must be a positive integer");
+    }
+    cfg
+}
+
 #[test]
 fn same_seed_gives_identical_arrivals_and_percentiles() {
     for spec in [TraceSpec::smoke_poisson(42), TraceSpec::smoke_bursty(42)] {
@@ -26,9 +42,9 @@ fn same_seed_gives_identical_arrivals_and_percentiles() {
         // two full replays: identical percentiles to the last bit, and
         // identical per-request timelines (no wall-clock ever enters a
         // latency — the driver runs on the virtual device clock only)
-        let r1 = replay(&t1, &ReplayConfig::new(4)).unwrap();
+        let r1 = replay(&t1, &replay_cfg(4)).unwrap();
         std::thread::sleep(std::time::Duration::from_millis(25));
-        let r2 = replay(&t2, &ReplayConfig::new(4)).unwrap();
+        let r2 = replay(&t2, &replay_cfg(4)).unwrap();
         assert_eq!(r1.p50_ms.to_bits(), r2.p50_ms.to_bits(), "p50 must be deterministic");
         assert_eq!(r1.p95_ms.to_bits(), r2.p95_ms.to_bits(), "p95 must be deterministic");
         assert_eq!(r1.p99_ms.to_bits(), r2.p99_ms.to_bits(), "p99 must be deterministic");
