@@ -113,10 +113,17 @@ use eagle_pangu::engine::Engine;
 use eagle_pangu::harness::{replay, ReplayConfig};
 use eagle_pangu::json::Json;
 use eagle_pangu::runtime::PjrtBackend;
-use eagle_pangu::util::alloc_count::CountingAlloc;
 use eagle_pangu::util::bench::{bench, black_box};
 use eagle_pangu::workload::{ArrivalKind, Grammar, PromptFamily, SharedPrefixSpec, TraceSpec};
 use std::time::{Duration, Instant};
+
+// Shared with tests/alloc_regression.rs by path: the counting
+// allocator's `unsafe impl GlobalAlloc` cannot live in the library
+// (crate-root `#![forbid(unsafe_code)]`), and the counting rule must
+// not drift between the bench and the regression test.
+#[path = "../tests/support/alloc_count.rs"]
+mod alloc_count;
+use alloc_count::CountingAlloc;
 
 // # KV-session upload traffic (`upload`)
 //

@@ -1,0 +1,445 @@
+//! A dependency-free, lexer-level scanner for the `static_check` driver.
+//!
+//! The rules in [`crate::analysis::rules`] match on *sanitized* source:
+//! comment bodies and string/char-literal contents are blanked so that a
+//! doc comment mentioning `Instant::now` or a log message containing
+//! `.unwrap()` can never produce a finding. The scanner is a small
+//! state machine — not a parser — which is exactly the level the rules
+//! need (token presence, brace depth, attribute adjacency) and keeps
+//! the checker free of `syn`/`proc-macro2` (the image vendors no such
+//! crates; see ISSUE/ROADMAP).
+//!
+//! Beyond sanitizing, the scanner tracks two pieces of line-level
+//! context the rules depend on:
+//!
+//! * **test spans** — brace spans introduced by a `#[cfg(test)]` or
+//!   `#[test]` attribute are flagged `in_test`, so rules can exempt
+//!   test code without path heuristics;
+//! * **pragmas** — audited waivers of the form
+//!   `// lint: allow(RULE_ID) — <reason>` (or `# lint: ...` in Python),
+//!   attached to the same line and the line immediately after, so a
+//!   pragma can sit on its own line above the finding it waives.
+
+/// One audited `lint: allow(...)` waiver extracted from a comment.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Pragma {
+    /// 1-based line the pragma comment sits on.
+    pub line: usize,
+    /// Rule id being waived, e.g. `wall-clock`.
+    pub rule: String,
+    /// The justification after the rule id; `None` when the author
+    /// omitted it (which is itself a `bad-pragma` finding).
+    pub reason: Option<String>,
+}
+
+/// One source line after sanitizing.
+#[derive(Clone, Debug)]
+pub struct ScannedLine {
+    /// The line with comment bodies and literal contents blanked.
+    /// Byte offsets are *not* preserved (blanked spans collapse), but
+    /// token adjacency is.
+    pub code: String,
+    /// Whether the line sits inside a `#[cfg(test)]` / `#[test]` span.
+    pub in_test: bool,
+}
+
+/// A scanned source file: sanitized lines plus extracted pragmas.
+#[derive(Clone, Debug)]
+pub struct ScannedFile {
+    /// Repo-relative path, `/`-separated.
+    pub path: String,
+    /// Sanitized lines, index 0 = line 1.
+    pub lines: Vec<ScannedLine>,
+    /// All pragmas found in comments, in line order.
+    pub pragmas: Vec<Pragma>,
+}
+
+impl ScannedFile {
+    /// The pragma (if any) waiving `rule` at 1-based `line`: same-line
+    /// or immediately-preceding-line pragmas apply.
+    pub fn pragma_for(&self, rule: &str, line: usize) -> Option<&Pragma> {
+        self.pragmas
+            .iter()
+            .find(|p| p.rule == rule && (p.line == line || p.line + 1 == line))
+    }
+}
+
+/// Parse a comment body (text after `//` or `#`) as a lint pragma.
+/// Accepts `lint: allow(rule-id) — reason`, with `-`, `--` or `—` as
+/// the reason separator; returns `(rule, reason)`.
+pub fn parse_pragma(comment: &str) -> Option<(String, Option<String>)> {
+    let t = comment.trim();
+    let rest = t.strip_prefix("lint:")?.trim_start();
+    let rest = rest.strip_prefix("allow")?.trim_start();
+    let rest = rest.strip_prefix('(')?;
+    let close = rest.find(')')?;
+    let rule = rest[..close].trim().to_string();
+    if rule.is_empty() {
+        return None;
+    }
+    let tail = rest[close + 1..].trim();
+    let reason = ["—", "--", "-"]
+        .iter()
+        .find_map(|sep| tail.strip_prefix(sep))
+        .map(|r| r.trim())
+        .filter(|r| !r.is_empty())
+        .map(|r| r.to_string());
+    Some((rule, reason))
+}
+
+/// Lexer states for the Rust scanner.
+enum St {
+    Code,
+    /// Inside `/* ... */`, with nesting depth.
+    Block(u32),
+    /// Inside `"..."`.
+    Str,
+    /// Inside `r##"..."##` with the given hash count.
+    RawStr(u32),
+}
+
+/// Scan Rust source: strip comments and literals, track test spans,
+/// collect pragmas. `path` is recorded verbatim in the result.
+pub fn scan_rust(path: &str, src: &str) -> ScannedFile {
+    let mut lines: Vec<ScannedLine> = Vec::new();
+    let mut pragmas: Vec<Pragma> = Vec::new();
+    let mut st = St::Code;
+
+    // Test-span tracking: brace depth, and the stack of depths at which
+    // a test-attributed item opened. `pending_test` is set when a
+    // `#[cfg(test)]` / `#[test]` attribute is seen and consumed by the
+    // next `{` at the then-current depth.
+    let mut depth: i64 = 0;
+    let mut test_open_depths: Vec<i64> = Vec::new();
+    let mut pending_test = false;
+
+    for (i, raw) in src.lines().enumerate() {
+        let lineno = i + 1;
+        let mut code = String::with_capacity(raw.len());
+        let mut comment_text = String::new();
+        let in_test_at_start = !test_open_depths.is_empty();
+
+        // An attribute at line start must arm `pending_test` *before*
+        // brace processing, so `#[cfg(test)] mod tests {` on one line
+        // still opens a test span. `line_test` latches if the line was
+        // inside a test span at *any* point (a span that opens and
+        // closes within the line still marks it).
+        let lead = raw.trim_start();
+        if lead.starts_with("#[cfg(test)]") || lead.starts_with("#[test]") {
+            pending_test = true;
+        }
+        let mut line_test = in_test_at_start;
+
+        let b = raw.as_bytes();
+        let mut j = 0;
+        while j < b.len() {
+            match st {
+                St::Block(ref mut d) => {
+                    if b[j] == b'/' && j + 1 < b.len() && b[j + 1] == b'*' {
+                        *d += 1;
+                        j += 2;
+                    } else if b[j] == b'*' && j + 1 < b.len() && b[j + 1] == b'/' {
+                        *d -= 1;
+                        j += 2;
+                        if *d == 0 {
+                            st = St::Code;
+                            code.push(' ');
+                        }
+                    } else {
+                        j += 1;
+                    }
+                }
+                St::Str => {
+                    if b[j] == b'\\' {
+                        j += 2;
+                    } else if b[j] == b'"' {
+                        st = St::Code;
+                        code.push('"');
+                        j += 1;
+                    } else {
+                        j += 1;
+                    }
+                }
+                St::RawStr(h) => {
+                    if b[j] == b'"' {
+                        let hs = b[j + 1..].iter().take_while(|&&c| c == b'#').count();
+                        if hs as u32 >= h {
+                            st = St::Code;
+                            code.push('"');
+                            j += 1 + h as usize;
+                        } else {
+                            j += 1;
+                        }
+                    } else {
+                        j += 1;
+                    }
+                }
+                St::Code => {
+                    let c = b[j];
+                    if c == b'/' && j + 1 < b.len() && b[j + 1] == b'/' {
+                        comment_text.push_str(&raw[j + 2..]);
+                        break; // rest of line is a comment
+                    } else if c == b'/' && j + 1 < b.len() && b[j + 1] == b'*' {
+                        st = St::Block(1);
+                        j += 2;
+                    } else if c == b'"' {
+                        // maybe a raw string start already consumed `r#*`?
+                        code.push('"');
+                        st = St::Str;
+                        j += 1;
+                    } else if (c == b'r' || c == b'b')
+                        && !prev_is_ident(&code)
+                        && raw_str_hashes(&b[j..]).is_some()
+                    {
+                        let (skip, h) = raw_str_hashes(&b[j..]).expect("checked above");
+                        code.push('"');
+                        st = St::RawStr(h);
+                        j += skip;
+                    } else if c == b'\'' {
+                        // char literal vs lifetime
+                        if let Some(adv) = char_literal_len(&b[j..]) {
+                            code.push('\'');
+                            code.push('\'');
+                            j += adv;
+                        } else {
+                            code.push('\'');
+                            j += 1;
+                        }
+                    } else {
+                        if c == b'{' {
+                            if pending_test {
+                                test_open_depths.push(depth);
+                                pending_test = false;
+                                line_test = true;
+                            }
+                            depth += 1;
+                        } else if c == b'}' {
+                            depth -= 1;
+                            if test_open_depths.last() == Some(&depth) {
+                                test_open_depths.pop();
+                            }
+                        } else if c == b';' && pending_test && depth_clear(&code) {
+                            // attribute applied to a braceless item
+                            pending_test = false;
+                        }
+                        code.push(c as char);
+                        j += 1;
+                    }
+                }
+            }
+        }
+
+        let trimmed = code.trim();
+        if trimmed.contains("#[cfg(test)]") || trimmed.contains("#[test]") {
+            pending_test = true;
+        }
+
+        if let Some((rule, reason)) = parse_pragma(&comment_text) {
+            pragmas.push(Pragma { line: lineno, rule, reason });
+        }
+
+        let in_test = line_test || !test_open_depths.is_empty();
+        lines.push(ScannedLine { code, in_test });
+    }
+
+    ScannedFile { path: path.to_string(), lines, pragmas }
+}
+
+/// Scan Python source. Single-line string literals keep their contents
+/// (the `artifact-drift` rule reads f-string text), but triple-quoted
+/// docstrings are blanked — prose about the naming schema must not be
+/// mistaken for a module-name literal. `# lint: ...` pragmas are
+/// collected from comments that are genuinely comments (not `#` inside
+/// a string).
+pub fn scan_python(path: &str, src: &str) -> ScannedFile {
+    let mut lines = Vec::new();
+    let mut pragmas = Vec::new();
+    let mut in_triple = false;
+    for (i, raw) in src.lines().enumerate() {
+        let lineno = i + 1;
+        let mut code = String::with_capacity(raw.len());
+        let mut in_str: Option<u8> = None;
+        let b = raw.as_bytes();
+        let mut comment = None;
+        let mut j = 0;
+        while j < b.len() {
+            if in_triple {
+                if raw[j..].starts_with("\"\"\"") {
+                    in_triple = false;
+                    j += 3;
+                } else {
+                    j += 1;
+                }
+                continue;
+            }
+            let c = b[j];
+            match in_str {
+                Some(q) => {
+                    code.push(c as char);
+                    if c == b'\\' && j + 1 < b.len() {
+                        code.push(b[j + 1] as char);
+                        j += 1;
+                    } else if c == q {
+                        in_str = None;
+                    }
+                }
+                None => {
+                    if raw[j..].starts_with("\"\"\"") {
+                        in_triple = true;
+                        j += 2; // plus the shared increment below
+                    } else if c == b'"' || c == b'\'' {
+                        in_str = Some(c);
+                        code.push(c as char);
+                    } else if c == b'#' {
+                        comment = Some(&raw[j + 1..]);
+                        break;
+                    } else {
+                        code.push(c as char);
+                    }
+                }
+            }
+            j += 1;
+        }
+        if let Some((rule, reason)) = comment.and_then(parse_pragma) {
+            pragmas.push(Pragma { line: lineno, rule, reason });
+        }
+        lines.push(ScannedLine { code, in_test: false });
+    }
+    ScannedFile { path: path.to_string(), lines, pragmas }
+}
+
+/// Whether the sanitized text so far ends in an identifier character
+/// (so a following `r"` is part of an ident like `for r` — not a raw
+/// string — only when the `r` itself starts a fresh token).
+fn prev_is_ident(code: &str) -> bool {
+    code.chars().last().is_some_and(|c| c.is_ascii_alphanumeric() || c == '_')
+}
+
+/// If `b` starts a raw (byte) string `r#*"` / `br#*"`, return
+/// `(bytes to skip through the opening quote, hash count)`.
+fn raw_str_hashes(b: &[u8]) -> Option<(usize, u32)> {
+    let mut k = 0;
+    if b[k] == b'b' {
+        k += 1;
+    }
+    if k >= b.len() || b[k] != b'r' {
+        return None;
+    }
+    k += 1;
+    let h = b[k..].iter().take_while(|&&c| c == b'#').count();
+    k += h;
+    if k < b.len() && b[k] == b'"' {
+        Some((k + 1, h as u32))
+    } else {
+        None
+    }
+}
+
+/// If `b` (starting at `'`) is a char literal, return its byte length;
+/// `None` means it is a lifetime. Handles `'x'`, `'\n'`, `'\u{1F600}'`.
+fn char_literal_len(b: &[u8]) -> Option<usize> {
+    debug_assert_eq!(b[0], b'\'');
+    if b.len() < 3 {
+        return None;
+    }
+    if b[1] == b'\\' {
+        // escape: scan to the closing quote
+        let mut k = 2;
+        while k < b.len() {
+            if b[k] == b'\\' {
+                k += 2;
+                continue;
+            }
+            if b[k] == b'\'' {
+                return Some(k + 1);
+            }
+            k += 1;
+        }
+        None
+    } else if b[1] != b'\'' {
+        // `'X'` (any single non-quote byte, incl. UTF-8 lead — a
+        // multibyte char still ends with a `'` within a few bytes)
+        let mut k = 2;
+        while k < b.len() && k <= 5 {
+            if b[k] == b'\'' {
+                return Some(k + 1);
+            }
+            k += 1;
+        }
+        None
+    } else {
+        None
+    }
+}
+
+/// Whether the attribute's item has not yet opened a brace on this line
+/// prefix (used to clear `pending_test` on braceless items like
+/// `#[test] use ...;` — rare, but keeps depth bookkeeping honest).
+fn depth_clear(code: &str) -> bool {
+    !code.contains('{')
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strips_line_and_block_comments() {
+        let s = scan_rust("x.rs", "let a = 1; // Instant::now()\n/* SystemTime::now */ let b;");
+        assert!(!s.lines[0].code.contains("Instant"));
+        assert!(!s.lines[1].code.contains("SystemTime"));
+        assert!(s.lines[1].code.contains("let b;"));
+    }
+
+    #[test]
+    fn strips_string_contents_but_not_code() {
+        let s = scan_rust("x.rs", r#"let m = "call .unwrap() now"; x.unwrap();"#);
+        let code = &s.lines[0].code;
+        assert_eq!(code.matches(".unwrap()").count(), 1);
+        assert!(code.contains(r#"let m = "";"#));
+    }
+
+    #[test]
+    fn raw_strings_and_char_literals() {
+        let s = scan_rust(
+            "x.rs",
+            "let r = r#\"as usize\"#; let c = '{'; let lt: &'static str = \"}\";",
+        );
+        let code = &s.lines[0].code;
+        assert!(!code.contains("as usize"));
+        // the brace inside the char literal must not skew depth
+        let s2 = scan_rust("x.rs", "#[cfg(test)]\nmod t {\n let c = '{';\n}\nfn live() {}");
+        assert!(s2.lines[2].in_test);
+        assert!(!s2.lines[4].in_test);
+    }
+
+    #[test]
+    fn cfg_test_spans_flag_lines() {
+        let src = "fn a() {}\n#[cfg(test)]\nmod tests {\n  fn b() { x.unwrap(); }\n}\nfn c() {}";
+        let s = scan_rust("x.rs", src);
+        assert!(!s.lines[0].in_test);
+        assert!(s.lines[3].in_test);
+        assert!(!s.lines[5].in_test);
+    }
+
+    #[test]
+    fn pragma_parsing_and_attachment() {
+        let src = "// lint: allow(wall-clock) — bench harness measures real time\nlet t = x;\nlet u = y; // lint: allow(hot-unwrap)";
+        let s = scan_rust("x.rs", src);
+        assert_eq!(s.pragmas.len(), 2);
+        let p = s.pragma_for("wall-clock", 2).expect("preceding-line pragma applies");
+        assert!(p.reason.as_deref().unwrap().contains("bench"));
+        let q = s.pragma_for("hot-unwrap", 3).expect("same-line pragma applies");
+        assert!(q.reason.is_none(), "missing reason is preserved as None");
+        assert!(s.pragma_for("wall-clock", 4).is_none());
+    }
+
+    #[test]
+    fn python_scan_finds_hash_pragmas_not_in_strings() {
+        let src = "name = f\"teacher_fused_s{s}\"  # lint: allow(artifact-drift) — probe only\nx = \"# not a comment\"";
+        let s = scan_python("aot.py", src);
+        assert_eq!(s.pragmas.len(), 1);
+        assert_eq!(s.pragmas[0].rule, "artifact-drift");
+        assert!(s.lines[1].code.contains("# not a comment"));
+    }
+}

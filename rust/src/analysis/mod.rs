@@ -1,0 +1,388 @@
+//! `static_check`: a repo-specific, dependency-free static-analysis
+//! driver that enforces the invariants this codebase's correctness
+//! arguments lean on — at the source level, where they erode.
+//!
+//! The paper's determinism and accelerator-safety claims are carried by
+//! conventions no compiler checks: scheduler/replay code must stay on
+//! the virtual clock (PR 7/9's bit-identical replay contract), index
+//! paths must not smuggle sentinels through `as usize`, the serve path
+//! must not panic, and sibling artifacts (the Python AOT exporter, the
+//! RPC wire-tag test, the README flag tables) must not drift from the
+//! Rust schemas they mirror. Each rule here turns one such convention
+//! into a build-gating check; `docs/STATIC_ANALYSIS.md` is the rule
+//! catalog with rationale and worked examples.
+//!
+//! Deliberate exceptions are *audited*, not silent: a
+//! `// lint: allow(rule-id) — reason` pragma on (or directly above)
+//! the offending line waives the finding, and a pragma without a
+//! reason is itself a finding (`bad-pragma`). The driver exits
+//! non-zero on any unwaived finding, so CI gates on it (the
+//! `static-analysis` job).
+//!
+//! Everything is lexer-level — see [`lexer`] — because the image
+//! vendors no `syn`/`proc-macro2`; rules in [`rules`] take in-memory
+//! scanned inputs so the fixture suite can drive each one directly.
+
+pub mod lexer;
+pub mod rules;
+
+use crate::json::Json;
+use anyhow::{Context, Result};
+use lexer::ScannedFile;
+use std::collections::BTreeMap;
+use std::fs;
+use std::path::Path;
+
+/// How bad a finding is. Both severities gate the exit code — `Warn`
+/// marks rules where the fix is documentation, not code.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Severity {
+    /// Violates a correctness/determinism invariant.
+    Error,
+    /// Violates a documentation-parity invariant.
+    Warn,
+}
+
+impl Severity {
+    /// Stable lower-case name used in text and JSON output.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Severity::Error => "error",
+            Severity::Warn => "warn",
+        }
+    }
+}
+
+/// One rule violation at a source location.
+#[derive(Clone, Debug)]
+pub struct Finding {
+    /// Repo-relative, `/`-separated path.
+    pub file: String,
+    /// 1-based line.
+    pub line: usize,
+    /// Rule id from [`RULES`].
+    pub rule: &'static str,
+    /// Severity (from the rule).
+    pub severity: Severity,
+    /// Human-readable explanation, one line.
+    pub message: String,
+    /// Whether an audited pragma waives this finding.
+    pub allowed: bool,
+    /// The pragma's reason, when waived.
+    pub reason: Option<String>,
+}
+
+impl Finding {
+    /// The driver's one-line text rendering:
+    /// `file:line  RULE_ID  severity  message`.
+    pub fn render(&self) -> String {
+        let allowed = if self.allowed { "  [allowed]" } else { "" };
+        format!(
+            "{}:{}  {}  {}  {}{}",
+            self.file,
+            self.line,
+            self.rule,
+            self.severity.as_str(),
+            self.message,
+            allowed
+        )
+    }
+}
+
+/// Catalog entry for one rule.
+#[derive(Clone, Copy, Debug)]
+pub struct RuleInfo {
+    /// Stable id, used in pragmas and output.
+    pub id: &'static str,
+    /// Severity of this rule's findings.
+    pub severity: Severity,
+    /// One-line summary (mirrored in `docs/STATIC_ANALYSIS.md`).
+    pub summary: &'static str,
+}
+
+/// The rule catalog. Ids are stable: pragmas, CI logs and the docs all
+/// key on them.
+pub const RULES: &[RuleInfo] = &[
+    RuleInfo {
+        id: "wall-clock",
+        severity: Severity::Error,
+        summary: "Instant::now/SystemTime::now outside the audited timing modules",
+    },
+    RuleInfo {
+        id: "signed-cast",
+        severity: Severity::Error,
+        summary: "raw `as usize` in index paths (tree/, cache/); use util::idx",
+    },
+    RuleInfo {
+        id: "hot-unwrap",
+        severity: Severity::Error,
+        summary: ".unwrap()/.expect( in non-test serve-path modules",
+    },
+    RuleInfo {
+        id: "unsafe-code",
+        severity: Severity::Error,
+        summary: "unsafe blocks/impls in the library (crate forbids unsafe_code)",
+    },
+    RuleInfo {
+        id: "artifact-drift",
+        severity: Severity::Error,
+        summary: "aot.py module-name strings that break the ModuleKey round-trip",
+    },
+    RuleInfo {
+        id: "wire-tag",
+        severity: Severity::Error,
+        summary: "Envelope variants whose wire tag is not pinned in tests/rpc.rs",
+    },
+    RuleInfo {
+        id: "flag-doc",
+        severity: Severity::Warn,
+        summary: "CLI flags registered in args.rs but absent from README tables",
+    },
+    RuleInfo {
+        id: "bad-pragma",
+        severity: Severity::Error,
+        summary: "lint pragma with no reason, or naming an unknown rule",
+    },
+];
+
+/// Look up a rule's catalog entry.
+pub fn rule_info(id: &str) -> Option<&'static RuleInfo> {
+    RULES.iter().find(|r| r.id == id)
+}
+
+/// Files where wall-clock reads are legitimate: the stage timer, the
+/// bench harness, and the device runtime (launch timestamps).
+pub const WALL_CLOCK_ALLOW: &[&str] =
+    &["rust/src/util/timer.rs", "rust/src/util/bench.rs", "rust/src/runtime/pjrt.rs"];
+
+/// Index-path scope for `signed-cast`: modules whose `usize` values
+/// index tensors/pools and historically smuggled `-1` sentinels.
+pub const SIGNED_CAST_SCOPE: &[&str] = &["rust/src/tree/", "rust/src/cache/"];
+
+/// Serve-path scope for `hot-unwrap`: everything a request traverses
+/// between submit and completion.
+pub const HOT_UNWRAP_SCOPE: &[&str] = &[
+    "rust/src/engine/",
+    "rust/src/coordinator/",
+    "rust/src/cache/",
+    "rust/src/tree/",
+    "rust/src/backend/",
+    "rust/src/rpc/",
+];
+
+/// A completed check run: every finding (waived or not) plus scan
+/// statistics, renderable as text lines or the JSON report.
+#[derive(Debug, Default)]
+pub struct Report {
+    /// All findings, file/line ordered.
+    pub findings: Vec<Finding>,
+    /// Number of source files scanned.
+    pub files_scanned: usize,
+}
+
+impl Report {
+    /// Findings not waived by a pragma — the exit-code gate.
+    pub fn active(&self) -> usize {
+        self.findings.iter().filter(|f| !f.allowed).count()
+    }
+
+    /// Findings waived by an audited pragma.
+    pub fn allowed(&self) -> usize {
+        self.findings.iter().filter(|f| f.allowed).count()
+    }
+
+    /// The machine-readable report (schema documented in
+    /// `docs/STATIC_ANALYSIS.md`; shape-checked by `tests/static_check.rs`).
+    pub fn to_json(&self) -> Json {
+        let rules = Json::Arr(
+            RULES
+                .iter()
+                .map(|r| {
+                    let mut o = Json::obj();
+                    o.push("id", r.id)
+                        .push("severity", r.severity.as_str())
+                        .push("summary", r.summary);
+                    o
+                })
+                .collect(),
+        );
+        let findings = Json::Arr(
+            self.findings
+                .iter()
+                .map(|f| {
+                    let mut o = Json::obj();
+                    o.push("file", f.file.clone())
+                        .push("line", f.line)
+                        .push("rule", f.rule)
+                        .push("severity", f.severity.as_str())
+                        .push("message", f.message.clone())
+                        .push("allowed", f.allowed)
+                        .push("reason", f.reason.clone().map(Json::Str).unwrap_or(Json::Null));
+                    o
+                })
+                .collect(),
+        );
+        let mut counts: BTreeMap<&'static str, (usize, usize)> = BTreeMap::new();
+        for f in &self.findings {
+            let e = counts.entry(f.rule).or_insert((0, 0));
+            if f.allowed {
+                e.1 += 1;
+            } else {
+                e.0 += 1;
+            }
+        }
+        let mut per_rule = Json::obj();
+        for (rule, (active, allowed)) in counts {
+            let mut o = Json::obj();
+            o.push("active", active).push("allowed", allowed);
+            per_rule.push(rule, o);
+        }
+        let mut summary = Json::obj();
+        summary
+            .push("files_scanned", self.files_scanned)
+            .push("total", self.findings.len())
+            .push("allowed", self.allowed())
+            .push("active", self.active())
+            .push("per_rule", per_rule);
+        let mut root = Json::obj();
+        root.push("tool", "static_check")
+            .push("rules", rules)
+            .push("findings", findings)
+            .push("summary", summary);
+        root
+    }
+}
+
+/// Run every rule against the repo rooted at `root` (the directory
+/// holding `rust/`, `python/`, `README.md`). Missing sibling artifacts
+/// (e.g. no `python/` checkout) skip their rules rather than failing:
+/// the checker gates what exists.
+pub fn run(root: &Path) -> Result<Report> {
+    let mut files: Vec<(String, String)> = Vec::new();
+    collect_rust_sources(root, Path::new("rust/src"), &mut files)?;
+    files.sort_by(|a, b| a.0.cmp(&b.0));
+
+    let mut scans: Vec<ScannedFile> = Vec::new();
+    for (rel, src) in &files {
+        scans.push(lexer::scan_rust(rel, src));
+    }
+
+    let mut findings: Vec<Finding> = Vec::new();
+    for scan in &scans {
+        if !WALL_CLOCK_ALLOW.contains(&scan.path.as_str()) {
+            findings.extend(rules::wall_clock(scan));
+        }
+        if SIGNED_CAST_SCOPE.iter().any(|p| scan.path.starts_with(p)) {
+            findings.extend(rules::signed_cast(scan));
+        }
+        if HOT_UNWRAP_SCOPE.iter().any(|p| scan.path.starts_with(p)) {
+            findings.extend(rules::hot_unwrap(scan));
+        }
+        findings.extend(rules::unsafe_code(scan));
+    }
+    if let Some(lib) = scans.iter().find(|s| s.path == "rust/src/lib.rs") {
+        findings.extend(rules::forbid_attr_present(lib));
+    }
+
+    // Cross-artifact rules: each needs the raw text of its sibling
+    // (string literals survive only in raw text).
+    let aot_path = root.join("python/compile/aot.py");
+    let aot_scan = match fs::read_to_string(&aot_path) {
+        Ok(src) => {
+            let scan = lexer::scan_python("python/compile/aot.py", &src);
+            findings.extend(rules::artifact_drift(&scan));
+            Some(scan)
+        }
+        Err(_) => None,
+    };
+    if let Some((rel, raw)) = files.iter().find(|(r, _)| r == "rust/src/rpc/envelope.rs") {
+        let tests = fs::read_to_string(root.join("rust/tests/rpc.rs")).unwrap_or_default();
+        findings.extend(rules::wire_tag(rel, raw, &tests));
+    }
+    if let Some((rel, raw)) = files.iter().find(|(r, _)| r == "rust/src/cli/args.rs") {
+        let readme = fs::read_to_string(root.join("README.md")).unwrap_or_default();
+        findings.extend(rules::flag_doc(rel, raw, &readme));
+    }
+
+    // Pragma application + audit. A pragma waives findings of its rule
+    // on its own line or the next; a reasonless or unknown-rule pragma
+    // is a finding in its own right.
+    let mut all_scans: Vec<&ScannedFile> = scans.iter().collect();
+    if let Some(s) = aot_scan.as_ref() {
+        all_scans.push(s);
+    }
+    for f in findings.iter_mut() {
+        if let Some(scan) = all_scans.iter().find(|s| s.path == f.file) {
+            if let Some(p) = scan.pragma_for(f.rule, f.line) {
+                if p.reason.is_some() {
+                    f.allowed = true;
+                    f.reason = p.reason.clone();
+                }
+            }
+        }
+    }
+    for scan in &all_scans {
+        findings.extend(rules::audit_pragmas(scan));
+    }
+
+    findings.sort_by(|a, b| (a.file.as_str(), a.line, a.rule).cmp(&(b.file.as_str(), b.line, b.rule)));
+    Ok(Report { findings, files_scanned: scans.len() })
+}
+
+/// Recursively collect `.rs` files under `root/sub` as
+/// `(repo-relative path, contents)`.
+fn collect_rust_sources(
+    root: &Path,
+    sub: &Path,
+    out: &mut Vec<(String, String)>,
+) -> Result<()> {
+    let dir = root.join(sub);
+    let entries =
+        fs::read_dir(&dir).with_context(|| format!("scanning {}", dir.display()))?;
+    for entry in entries {
+        let entry = entry?;
+        let path = entry.path();
+        let rel = sub.join(entry.file_name());
+        if path.is_dir() {
+            collect_rust_sources(root, &rel, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            let src = fs::read_to_string(&path)
+                .with_context(|| format!("reading {}", path.display()))?;
+            let rel_str = rel
+                .to_string_lossy()
+                .replace(std::path::MAIN_SEPARATOR, "/");
+            out.push((rel_str, src));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn catalog_ids_are_unique_and_known() {
+        let mut ids: Vec<_> = RULES.iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        let n = ids.len();
+        ids.dedup();
+        assert_eq!(ids.len(), n, "duplicate rule id in catalog");
+        assert!(rule_info("wall-clock").is_some());
+        assert!(rule_info("nope").is_none());
+    }
+
+    #[test]
+    fn render_is_the_documented_line_format() {
+        let f = Finding {
+            file: "rust/src/x.rs".into(),
+            line: 7,
+            rule: "wall-clock",
+            severity: Severity::Error,
+            message: "m".into(),
+            allowed: false,
+            reason: None,
+        };
+        assert_eq!(f.render(), "rust/src/x.rs:7  wall-clock  error  m");
+    }
+}

@@ -1,0 +1,522 @@
+//! The rule implementations behind `static_check`. Each rule is a pure
+//! function over in-memory scanned input (see [`crate::analysis::lexer`])
+//! so the fixture suite can drive every rule directly, without touching
+//! the real tree. Scoping (which files a rule sees) lives in the driver
+//! ([`crate::analysis::run`]); the rules themselves only match.
+//!
+//! Rationale, worked examples and the waiver policy for every rule are
+//! in `docs/STATIC_ANALYSIS.md`.
+
+use super::lexer::ScannedFile;
+use super::{rule_info, Finding};
+use crate::config::modules::ModuleKey;
+
+/// Build a finding for `rule` (severity comes from the catalog).
+fn mk(file: &str, line: usize, rule: &'static str, message: String) -> Finding {
+    let info = rule_info(rule).unwrap_or_else(|| panic!("rule {rule} missing from catalog"));
+    Finding {
+        file: file.to_string(),
+        line,
+        rule,
+        severity: info.severity,
+        message,
+        allowed: false,
+        reason: None,
+    }
+}
+
+/// `wall-clock`: `Instant::now` / `SystemTime::now` anywhere outside
+/// the audited timing modules. Scheduler, replay and worker logic must
+/// stay on the virtual clock ([`ContinuousScheduler::advance_clock`])
+/// or measure via [`crate::util::timer::Stopwatch`]; a raw wall-clock
+/// read is how bit-identical replay (PR 9) silently breaks.
+///
+/// [`ContinuousScheduler::advance_clock`]: crate::coordinator::ContinuousScheduler::advance_clock
+pub fn wall_clock(f: &ScannedFile) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for (i, line) in f.lines.iter().enumerate() {
+        if line.in_test {
+            continue;
+        }
+        for pat in ["Instant::now", "SystemTime::now"] {
+            if line.code.contains(pat) {
+                out.push(mk(
+                    &f.path,
+                    i + 1,
+                    "wall-clock",
+                    format!(
+                        "{pat} outside the audited timing modules; measure with \
+                         util::timer::Stopwatch or stay on the virtual clock"
+                    ),
+                ));
+            }
+        }
+    }
+    out
+}
+
+/// `signed-cast`: raw `as usize` in index paths. A widening `u32 ->
+/// usize` is fine but indistinguishable at a glance from an `i64 ->
+/// usize` that wraps a `-1` sentinel into `2^64-1`; `util::idx` gives
+/// both shapes a name (`udx` proves the source unsigned,
+/// `checked_row`/`checked_col` fail typed at external boundaries).
+pub fn signed_cast(f: &ScannedFile) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for (i, line) in f.lines.iter().enumerate() {
+        if line.in_test {
+            continue;
+        }
+        if line.code.contains("as usize") {
+            out.push(mk(
+                &f.path,
+                i + 1,
+                "signed-cast",
+                "raw `as usize` in an index path; use util::idx::udx (unsigned \
+                 widening) or checked_row/checked_col (fallible boundary)"
+                    .to_string(),
+            ));
+        }
+    }
+    out
+}
+
+/// `hot-unwrap`: `.unwrap()` / `.expect(` in non-test serve-path
+/// modules. A panic mid-request poisons locks and kills the worker;
+/// serve-path code returns typed errors. Lock-poisoning `.expect`s and
+/// other deliberate panic policies carry a reasoned pragma.
+pub fn hot_unwrap(f: &ScannedFile) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for (i, line) in f.lines.iter().enumerate() {
+        if line.in_test {
+            continue;
+        }
+        for pat in [".unwrap()", ".expect("] {
+            if line.code.contains(pat) {
+                out.push(mk(
+                    &f.path,
+                    i + 1,
+                    "hot-unwrap",
+                    format!(
+                        "{pat} on the serve path; return a typed error (deliberate \
+                         panic policies need a reasoned pragma)"
+                    ),
+                ));
+            }
+        }
+    }
+    out
+}
+
+/// `unsafe-code`: any `unsafe` token in library source. The crate root
+/// carries `#![forbid(unsafe_code)]`, so this can only trip in code the
+/// compiler has not seen yet (a new bin/test crate wired outside the
+/// lib) — the rule keeps the invariant visible at review time.
+pub fn unsafe_code(f: &ScannedFile) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for (i, line) in f.lines.iter().enumerate() {
+        if line.in_test {
+            continue;
+        }
+        let has_unsafe_token = line
+            .code
+            .split(|c: char| !(c.is_ascii_alphanumeric() || c == '_'))
+            .any(|tok| tok == "unsafe");
+        if has_unsafe_token {
+            out.push(mk(
+                &f.path,
+                i + 1,
+                "unsafe-code",
+                "`unsafe` in library source; the crate forbids unsafe_code (move \
+                 allocator-style shims to tests/support/)"
+                    .to_string(),
+            ));
+        }
+    }
+    out
+}
+
+/// `unsafe-code` (companion): the crate root must carry
+/// `#![forbid(unsafe_code)]` — `forbid`, not `deny`, so no inner
+/// `#[allow]` can reopen it.
+pub fn forbid_attr_present(lib: &ScannedFile) -> Vec<Finding> {
+    let present = lib
+        .lines
+        .iter()
+        .any(|l| l.code.replace(' ', "").contains("#![forbid(unsafe_code)]"));
+    if present {
+        Vec::new()
+    } else {
+        vec![mk(
+            &lib.path,
+            1,
+            "unsafe-code",
+            "crate root is missing #![forbid(unsafe_code)]".to_string(),
+        )]
+    }
+}
+
+/// `artifact-drift`: every module-name string the Python AOT exporter
+/// builds must round-trip through the `ModuleKey` schema
+/// (`rust/src/config/modules.rs`) — the Rust loader resolves artifacts
+/// by parsing exactly these names, so an unparseable f-string is a
+/// module that compiles on the Python side and silently never loads.
+pub fn artifact_drift(aot: &ScannedFile) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for (i, line) in aot.lines.iter().enumerate() {
+        for s in extract_quoted(&line.code) {
+            let name = subst_placeholders(&s);
+            if !is_module_name_candidate(&name) {
+                continue;
+            }
+            if !valid_module_name(&name) {
+                out.push(mk(
+                    &aot.path,
+                    i + 1,
+                    "artifact-drift",
+                    format!(
+                        "module-name string \"{s}\" does not round-trip through the \
+                         ModuleKey schema (rust/src/config/modules.rs)"
+                    ),
+                ));
+            }
+        }
+    }
+    out
+}
+
+/// All single-line quoted string contents in a line of Python code.
+fn extract_quoted(code: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let b = code.as_bytes();
+    let mut j = 0;
+    while j < b.len() {
+        let q = b[j];
+        if q == b'"' || q == b'\'' {
+            let mut k = j + 1;
+            let mut s = String::new();
+            let mut closed = false;
+            while k < b.len() {
+                if b[k] == b'\\' && k + 1 < b.len() {
+                    s.push(b[k + 1] as char);
+                    k += 2;
+                    continue;
+                }
+                if b[k] == q {
+                    closed = true;
+                    break;
+                }
+                s.push(b[k] as char);
+                k += 1;
+            }
+            if closed {
+                out.push(s);
+                j = k + 1;
+                continue;
+            }
+        }
+        j += 1;
+    }
+    out
+}
+
+/// Replace every `{placeholder}` in an f-string body with a digit, so
+/// shape validation sees a concrete name (`teacher_fused_s{s}` ->
+/// `teacher_fused_s8`).
+fn subst_placeholders(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    let mut depth = 0u32;
+    for c in s.chars() {
+        match c {
+            '{' => {
+                if depth == 0 {
+                    out.push('8');
+                }
+                depth += 1;
+            }
+            '}' => depth = depth.saturating_sub(1),
+            _ if depth == 0 => out.push(c),
+            _ => {}
+        }
+    }
+    out
+}
+
+/// Whether a (placeholder-substituted) string is shaped like a module
+/// name: schema prefix plus an `_s<digits>` / `_n<digits>` size spec.
+/// Role strings (`"teacher"`), manifest keys (`"teacher_s_variants"`)
+/// and file names (`"weights_teacher.npz"`) all fail this shape test.
+fn is_module_name_candidate(name: &str) -> bool {
+    let prefixed = ["teacher_", "draft_", "kv_append_"]
+        .iter()
+        .any(|p| name.starts_with(p));
+    if !prefixed {
+        return false;
+    }
+    name.as_bytes().windows(3).any(|w| {
+        w[0] == b'_' && (w[1] == b's' || w[1] == b'n') && w[2].is_ascii_digit()
+    })
+}
+
+/// Whether a concrete name belongs to the artifact schema: a step
+/// module (`ModuleKey` round-trip) or a session scatter-update module
+/// (`kv_append_{teacher|draft}_n{N}`, parsed by `Capabilities`).
+fn valid_module_name(name: &str) -> bool {
+    if let Some(rest) = name.strip_prefix("kv_append_") {
+        return ["teacher", "draft"].iter().any(|role| {
+            rest.strip_prefix(role)
+                .and_then(|r| r.strip_prefix("_n"))
+                .is_some_and(|n| !n.is_empty() && n.bytes().all(|b| b.is_ascii_digit()))
+        });
+    }
+    ModuleKey::parse(name).is_some_and(|k| k.artifact_name() == name)
+}
+
+/// `wire-tag`: every `Envelope` variant must map to a distinct wire tag
+/// in `kind_str()`, and every tag must be pinned (appear as a string
+/// literal) in `rust/tests/rpc.rs` — the channel codec is replaceable
+/// (PR 8), so the tags, not the Rust enum, are the compatibility
+/// surface. Works on raw source: string literals are the payload here.
+pub fn wire_tag(envelope_path: &str, envelope_raw: &str, rpc_tests_raw: &str) -> Vec<Finding> {
+    let mut out = Vec::new();
+    let lines: Vec<&str> = envelope_raw.lines().collect();
+
+    // Variants of `pub enum Envelope { ... }`.
+    let mut variants: Vec<(String, usize)> = Vec::new();
+    if let Some(start) = lines.iter().position(|l| l.contains("pub enum Envelope")) {
+        for (off, l) in lines[start + 1..].iter().enumerate() {
+            let t = l.trim();
+            if t == "}" {
+                break;
+            }
+            if t.starts_with("//") || t.starts_with('#') || t.is_empty() {
+                continue;
+            }
+            if t.chars().next().is_some_and(|c| c.is_ascii_uppercase()) {
+                let name: String = t
+                    .chars()
+                    .take_while(|c| c.is_ascii_alphanumeric() || *c == '_')
+                    .collect();
+                variants.push((name, start + 2 + off));
+            }
+        }
+    } else {
+        out.push(mk(
+            envelope_path,
+            1,
+            "wire-tag",
+            "no `pub enum Envelope` found to check".to_string(),
+        ));
+        return out;
+    }
+
+    // `Envelope::Variant(..) => "tag"` arms (in kind_str).
+    let mut arms: Vec<(String, String, usize)> = Vec::new();
+    for (i, l) in lines.iter().enumerate() {
+        if let Some(pos) = l.find("Envelope::") {
+            let rest = &l[pos + "Envelope::".len()..];
+            let name: String = rest
+                .chars()
+                .take_while(|c| c.is_ascii_alphanumeric() || *c == '_')
+                .collect();
+            if let Some(arrow) = rest.find("=>") {
+                let after = &rest[arrow + 2..];
+                if let Some(q0) = after.find('"') {
+                    if let Some(q1) = after[q0 + 1..].find('"') {
+                        let tag = after[q0 + 1..q0 + 1 + q1].to_string();
+                        arms.push((name, tag, i + 1));
+                    }
+                }
+            }
+        }
+    }
+
+    for (variant, vline) in &variants {
+        let arm = arms.iter().find(|(v, _, _)| v == variant);
+        match arm {
+            None => out.push(mk(
+                envelope_path,
+                *vline,
+                "wire-tag",
+                format!("Envelope::{variant} has no wire tag in kind_str()"),
+            )),
+            Some((_, tag, aline)) => {
+                if arms.iter().filter(|(_, t, _)| t == tag).count() > 1 {
+                    out.push(mk(
+                        envelope_path,
+                        *aline,
+                        "wire-tag",
+                        format!("wire tag \"{tag}\" is assigned to more than one variant"),
+                    ));
+                }
+                if !rpc_tests_raw.contains(&format!("\"{tag}\"")) {
+                    out.push(mk(
+                        envelope_path,
+                        *aline,
+                        "wire-tag",
+                        format!(
+                            "wire tag \"{tag}\" (Envelope::{variant}) is not pinned in \
+                             rust/tests/rpc.rs"
+                        ),
+                    ));
+                }
+            }
+        }
+    }
+    out
+}
+
+/// `flag-doc`: every flag registered in the `args.rs` registries
+/// (`TOGGLE_FLAGS`, `VALUED`) must appear as `--flag` somewhere in the
+/// README — an undocumented flag is a contract users can only discover
+/// by reading source. Works on raw source (the registry is literals).
+pub fn flag_doc(args_path: &str, args_raw: &str, readme: &str) -> Vec<Finding> {
+    let mut out = Vec::new();
+    let mut in_registry = false;
+    for (i, l) in args_raw.lines().enumerate() {
+        let t = l.trim();
+        if t.starts_with("pub const TOGGLE_FLAGS") || t.starts_with("const VALUED") {
+            in_registry = true;
+        }
+        if in_registry {
+            for flag in extract_quoted(l) {
+                if !readme.contains(&format!("--{flag}")) {
+                    out.push(mk(
+                        args_path,
+                        i + 1,
+                        "flag-doc",
+                        format!(
+                            "flag --{flag} is registered in cli/args.rs but missing \
+                             from the README flag tables"
+                        ),
+                    ));
+                }
+            }
+            if t.contains("];") {
+                in_registry = false;
+            }
+        }
+    }
+    out
+}
+
+/// `bad-pragma`: every waiver must be audited — a reason is mandatory,
+/// and the rule id must exist (a typo'd id would otherwise waive
+/// nothing *silently*).
+pub fn audit_pragmas(f: &ScannedFile) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for p in &f.pragmas {
+        if rule_info(&p.rule).is_none() {
+            out.push(mk(
+                &f.path,
+                p.line,
+                "bad-pragma",
+                format!("pragma names unknown rule \"{}\"", p.rule),
+            ));
+        } else if p.reason.is_none() {
+            out.push(mk(
+                &f.path,
+                p.line,
+                "bad-pragma",
+                format!(
+                    "pragma allow({}) carries no reason; write `lint: allow({}) — <why>`",
+                    p.rule, p.rule
+                ),
+            ));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::lexer::{scan_python, scan_rust};
+
+    #[test]
+    fn wall_clock_flags_reads_not_mentions() {
+        let src = "use std::time::Instant;\nlet t = Instant::now();\n// Instant::now in prose\n#[cfg(test)]\nmod t { fn f() { let x = Instant::now(); } }";
+        let f = scan_rust("rust/src/x.rs", src);
+        let got = wall_clock(&f);
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0].line, 2);
+    }
+
+    #[test]
+    fn signed_cast_ignores_strings_and_tests() {
+        let src = "let i = j as usize;\nlet s = \"as usize\";";
+        let f = scan_rust("rust/src/tree/x.rs", src);
+        let got = signed_cast(&f);
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0].line, 1);
+    }
+
+    #[test]
+    fn hot_unwrap_distinguishes_unwrap_or() {
+        let src = "let a = x.unwrap_or(0);\nlet b = y.unwrap();\nlet c = z.expect(\"m\");";
+        let f = scan_rust("rust/src/engine/x.rs", src);
+        let got = hot_unwrap(&f);
+        assert_eq!(got.len(), 2);
+        assert_eq!((got[0].line, got[1].line), (2, 3));
+    }
+
+    #[test]
+    fn unsafe_token_matches_word_not_ident() {
+        let src = "#![forbid(unsafe_code)]\nunsafe impl Send for X {}";
+        let f = scan_rust("rust/src/x.rs", src);
+        let got = unsafe_code(&f);
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0].line, 2);
+        assert!(forbid_attr_present(&f).is_empty());
+        let g = scan_rust("rust/src/lib.rs", "pub mod x;");
+        assert_eq!(forbid_attr_present(&g).len(), 1);
+    }
+
+    #[test]
+    fn artifact_drift_validates_module_shapes() {
+        let src = "\n".to_string()
+            + "m[f\"teacher_fused_s{s}\"] = 1\n"
+            + "m[f\"teacher_fused_b{b}_s{s}\"] = 1\n"
+            + "m[f\"kv_append_draft_n{N}\"] = 1\n"
+            + "role = \"teacher\"\n"
+            + "key = \"teacher_s_variants\"\n"
+            + "path = f\"{name}.hlo.txt\"\n"
+            + "bad = f\"teacher_fussed_s{s}\"\n"
+            + "bad2 = f\"kv_append_coach_n{N}\"\n";
+        let f = scan_python("python/compile/aot.py", &src);
+        let got = artifact_drift(&f);
+        let lines: Vec<usize> = got.iter().map(|g| g.line).collect();
+        assert_eq!(lines, vec![8, 9], "only the two drifted names: {got:?}");
+    }
+
+    #[test]
+    fn wire_tag_checks_pinning_and_uniqueness() {
+        let envelope = "pub enum Envelope {\n    Submit(S),\n    Abort(A),\n}\nimpl Envelope {\n    pub fn kind_str(&self) -> &'static str {\n        match self {\n            Envelope::Submit(_) => \"submit\",\n            Envelope::Abort(_) => \"abort\",\n        }\n    }\n}";
+        let ok = wire_tag("e.rs", envelope, "let t = [\"submit\", \"abort\"];");
+        assert!(ok.is_empty(), "{ok:?}");
+        let missing = wire_tag("e.rs", envelope, "let t = [\"submit\"];");
+        assert_eq!(missing.len(), 1);
+        assert!(missing[0].message.contains("\"abort\""));
+        let dup = envelope.replace("\"abort\"", "\"submit\"");
+        let dupped = wire_tag("e.rs", &dup, "let t = [\"submit\"];");
+        assert!(dupped.iter().any(|f| f.message.contains("more than one")));
+    }
+
+    #[test]
+    fn flag_doc_reports_undocumented_flags() {
+        let args = "pub const TOGGLE_FLAGS: &[&str] = &[\"pipelining\"];\nconst VALUED: &[&str] = &[\n    \"seed\", \"workers\",\n];\nfn other() { let x = \"not-a-flag\"; }";
+        let readme = "Use `--pipelining on` and `--seed 7`.";
+        let got = flag_doc("a.rs", args, readme);
+        assert_eq!(got.len(), 1);
+        assert!(got[0].message.contains("--workers"));
+    }
+
+    #[test]
+    fn pragma_audit_requires_reason_and_known_rule() {
+        let src = "fn f() {}\n// lint: allow(wall-clock)\n// lint: allow(not-a-rule) — because\n// lint: allow(hot-unwrap) — lock poisoning is fatal here\n";
+        let f = scan_rust("rust/src/x.rs", src);
+        let got = audit_pragmas(&f);
+        assert_eq!(got.len(), 2);
+        assert!(got[0].message.contains("no reason"));
+        assert!(got[1].message.contains("unknown rule"));
+    }
+}

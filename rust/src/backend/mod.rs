@@ -559,6 +559,7 @@ pub fn topk(row: &[f32], k: usize) -> Vec<(usize, f32)> {
     // (index i, value v) ranks above (oi, ov): higher value, ties by
     // lower index. Total order; panics on NaN like the old sort did.
     fn beats(i: usize, v: f32, oi: usize, ov: f32) -> bool {
+        // lint: allow(hot-unwrap) — NaN here is backend numeric corruption; the documented policy (see the doc comment above) is to panic loudly rather than silently degrade the speculation tree
         match v.partial_cmp(&ov).expect("NaN in logits row") {
             std::cmp::Ordering::Greater => true,
             std::cmp::Ordering::Equal => i < oi,

@@ -121,6 +121,7 @@ use super::{
 use crate::config::contract::{FIRST_TOKEN, VOCAB};
 use crate::config::{Capabilities, Contract, Dims};
 use crate::util::rng::splitmix64;
+use crate::util::timer::Stopwatch;
 use anyhow::Result;
 use std::collections::HashMap;
 use std::time::{Duration, Instant};
@@ -337,6 +338,7 @@ impl SimBackend {
         }
         self.launches_by_width[width] += 1;
         let cost = self.teacher_launch + self.teacher_row_cost * rows as u32;
+        // lint: allow(wall-clock) — the sim *is* the modeled device clock: deadlines are future Instants the Stopwatch API deliberately cannot express
         let now = Instant::now();
         let start = self.device_free_at.map_or(now, |free| free.max(now));
         let deadline = start + cost;
@@ -356,6 +358,7 @@ impl SimBackend {
 
     /// Busy-wait until the device-clock deadline.
     fn spin_until(deadline: Instant) {
+        // lint: allow(wall-clock) — spinning to a future device-clock deadline; elapsed-only timers cannot model this
         while Instant::now() < deadline {
             std::hint::spin_loop();
         }
@@ -618,8 +621,9 @@ impl ModelBackend for SimBackend {
             // draft dispatch is host-side work under the overlap model:
             // spin on the host clock, never on the device clock
             if !self.draft_launch.is_zero() {
-                let t0 = Instant::now();
-                while t0.elapsed() < self.draft_launch {
+                let t0 = Stopwatch::start();
+                let budget = self.draft_launch.as_secs_f64();
+                while t0.elapsed_secs() < budget {
                     std::hint::spin_loop();
                 }
             }
@@ -685,6 +689,7 @@ impl ModelBackend for SimBackend {
             .position(|(id, _, _)| *id == token.id)
             .ok_or_else(|| anyhow::anyhow!("await_batch: unknown sim launch token {}", token.id))?;
         let (_, deadline, cost) = self.pending.swap_remove(idx);
+        // lint: allow(wall-clock) — overlap accounting against a future device-clock deadline (see schedule_launch)
         let waited = deadline.saturating_duration_since(Instant::now());
         self.overlap_saved_secs += cost.saturating_sub(waited).as_secs_f64();
         Self::spin_until(deadline);

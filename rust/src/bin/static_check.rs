@@ -1,0 +1,61 @@
+//! `static_check` — the repo's own lint driver (see
+//! `docs/STATIC_ANALYSIS.md` for the rule catalog).
+//!
+//! ```text
+//! static_check [--root DIR] [--json FILE] [--list-rules]
+//! ```
+//!
+//! Scans `rust/src/**/*.rs` plus the sibling artifacts each rule
+//! cross-checks (`python/compile/aot.py`, `rust/tests/rpc.rs`,
+//! `README.md`), prints one `file:line  RULE_ID  severity  message`
+//! line per finding, and exits non-zero if any finding is not waived
+//! by an audited `lint: allow(...)` pragma. `--json` additionally
+//! writes the machine-readable report (consumed by CI's
+//! `static-analysis` job artifact).
+
+use anyhow::{bail, Result};
+use eagle_pangu::analysis::{self, RULES};
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+fn main() -> Result<ExitCode> {
+    let mut root = PathBuf::from(".");
+    let mut json_out: Option<PathBuf> = None;
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--root" => match args.next() {
+                Some(v) => root = PathBuf::from(v),
+                None => bail!("--root needs a directory"),
+            },
+            "--json" => match args.next() {
+                Some(v) => json_out = Some(PathBuf::from(v)),
+                None => bail!("--json needs a file path"),
+            },
+            "--list-rules" => {
+                for r in RULES {
+                    println!("{:<16} {:<6} {}", r.id, r.severity.as_str(), r.summary);
+                }
+                return Ok(ExitCode::SUCCESS);
+            }
+            other => bail!("unknown argument '{other}' (try --root, --json, --list-rules)"),
+        }
+    }
+
+    let report = analysis::run(&root)?;
+    for f in &report.findings {
+        println!("{}", f.render());
+    }
+    if let Some(path) = json_out {
+        std::fs::write(&path, report.to_json().to_string_pretty())?;
+    }
+    let (active, allowed) = (report.active(), report.allowed());
+    println!(
+        "static_check: {} files scanned, {} findings ({} active, {} allowed)",
+        report.files_scanned,
+        report.findings.len(),
+        active,
+        allowed
+    );
+    Ok(if active == 0 { ExitCode::SUCCESS } else { ExitCode::FAILURE })
+}

@@ -330,8 +330,9 @@ impl ManagedCache {
                 let at = self.len;
                 let n = a * self.rstride();
                 let ls = self.lstride();
-                let bk = self.branch_k.take().unwrap();
-                let bv = self.branch_v.take().unwrap();
+                let (Some(bk), Some(bv)) = (self.branch_k.take(), self.branch_v.take()) else {
+                    bail!("DeepCopy branch is open but the replica buffers are missing");
+                };
                 for l in 0..self.dims.layers {
                     let off = l * ls + at * self.rstride();
                     self.k[off..off + n].copy_from_slice(&bk[off..off + n]);

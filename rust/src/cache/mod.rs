@@ -23,8 +23,8 @@ use std::sync::RwLockReadGuard;
 
 pub use manager::{CacheStats, ManagedCache};
 pub use paged::{
-    pool_read, pool_write, prefix_lock, CachePools, PagePool, PagedCache, PrefixIndex,
-    PrefixMatch, SharedPool, BLOCK_ROWS,
+    pool_read, pool_write, prefix_lock, CachePools, PageError, PagePool, PagedCache,
+    PrefixIndex, PrefixMatch, SharedPool, BLOCK_ROWS,
 };
 
 /// A live borrow of a store's readable KV state, held for the duration of

@@ -41,7 +41,9 @@
 
 use crate::cache::{CacheStats, KvGuard, KvStore};
 use crate::config::{CacheStrategy, Contract, Dims};
+use crate::util::idx::udx;
 use anyhow::{bail, Result};
+use std::fmt;
 use std::sync::{Arc, Mutex, RwLock};
 
 /// The shared handle to a per-worker [`PagePool`]: every slot engine of
@@ -59,19 +61,89 @@ pub type SharedPool = Arc<RwLock<PagePool>>;
 /// propagating the panic to the whole worker is the only safe option
 /// (the coordinator surfaces the worker's death; it is never absorbed).
 pub fn pool_read(pool: &SharedPool) -> std::sync::RwLockReadGuard<'_, PagePool> {
+    // lint: allow(hot-unwrap) — poisoning means a sibling panicked mid-mutation; torn pool storage must take the worker down, not be absorbed
     pool.read().expect("pool lock poisoned")
 }
 
 /// Acquire exclusive write access to a pool (see [`pool_read`] for the
 /// poisoning policy).
 pub fn pool_write(pool: &SharedPool) -> std::sync::RwLockWriteGuard<'_, PagePool> {
+    // lint: allow(hot-unwrap) — same poisoning policy as pool_read: propagate the sibling's panic worker-wide
     pool.write().expect("pool lock poisoned")
 }
 
 /// Lock a worker's prefix index (see [`pool_read`] for the poisoning
 /// policy).
 pub fn prefix_lock(index: &Arc<Mutex<PrefixIndex>>) -> std::sync::MutexGuard<'_, PrefixIndex> {
+    // lint: allow(hot-unwrap) — same poisoning policy as pool_read: a torn index must not be absorbed
     index.lock().expect("prefix index lock poisoned")
+}
+
+/// Pool-bookkeeping corruption detected by a refcount/free-list check.
+///
+/// These checks were `debug_assert!`s; they now run in release builds
+/// too — each is O(1) on a counter the operation already loads — because
+/// a violation means physical KV rows are about to be aliased or leaked
+/// *across conversations*, the one failure mode the shared arena must
+/// never let through silently. Fallible call chains surface them as
+/// typed errors; infallible cleanup paths (`reset`, `rollback`, drop)
+/// escalate through [`pool_corrupt`] under the same policy as lock
+/// poisoning.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PageError {
+    /// A block popped off the free list still carried live references —
+    /// the free list and the refcounts disagree.
+    FreeListCorrupt {
+        /// The corrupt block id.
+        block: u32,
+        /// Its (non-zero) reference count.
+        refs: u32,
+    },
+    /// `release_block` on a block id the pool never created.
+    ReleaseUnbacked {
+        /// The out-of-range block id.
+        block: u32,
+    },
+    /// `release_block` on a block with no live references (double free).
+    DoubleFree {
+        /// The already-free block id.
+        block: u32,
+    },
+    /// [`PagePool::share_block`] on a free or unbacked block — sharing a
+    /// dead block is a use-after-free.
+    ShareFree {
+        /// The dead block id.
+        block: u32,
+    },
+}
+
+impl fmt::Display for PageError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            PageError::FreeListCorrupt { block, refs } => write!(
+                f,
+                "free list corrupt: block {block} is on the free list but holds {refs} references"
+            ),
+            PageError::ReleaseUnbacked { block } => {
+                write!(f, "release of unbacked block {block}")
+            }
+            PageError::DoubleFree { block } => write!(f, "double free of block {block}"),
+            PageError::ShareFree { block } => {
+                write!(f, "share_block on free block {block} (use-after-free)")
+            }
+        }
+    }
+}
+
+impl std::error::Error for PageError {}
+
+/// Escalate pool corruption found on an infallible cleanup path
+/// (`reset`, `rollback`, drop). The arena is shared: continuing past a
+/// refcount/free-list violation would hand aliased blocks to sibling
+/// conversations, so the whole worker comes down — the same policy as a
+/// poisoned pool lock ([`pool_read`]).
+fn pool_corrupt(e: PageError) -> ! {
+    panic!("paged pool corrupted: {e}")
 }
 
 /// Rows per KV block. 16 keeps the partial-boundary-block copy small
@@ -147,21 +219,19 @@ impl PagePool {
 
     /// Current reference count of block `b` (0 = free).
     pub fn ref_count(&self, b: u32) -> u32 {
-        self.refs[b as usize]
+        self.refs[udx(b)]
     }
 
     /// Add a reference to a live block (prefix sharing: a second block
-    /// table, or the worker's prefix index, now maps it).
-    ///
-    /// # Panics
-    ///
-    /// Panics if `b` is free — sharing a dead block is a use-after-free.
-    pub fn share_block(&mut self, b: u32) {
-        assert!(
-            self.refs[b as usize] > 0,
-            "share_block on free block {b} (use-after-free)"
-        );
-        self.refs[b as usize] += 1;
+    /// table, or the worker's prefix index, now maps it). Sharing a free
+    /// or unbacked block is a use-after-free and is rejected as
+    /// [`PageError::ShareFree`].
+    pub fn share_block(&mut self, b: u32) -> std::result::Result<(), PageError> {
+        if udx(b) >= self.blocks || self.refs[udx(b)] == 0 {
+            return Err(PageError::ShareFree { block: b });
+        }
+        self.refs[udx(b)] += 1;
+        Ok(())
     }
 
     /// Bytes of KV storage held by referenced blocks (k + v) — the
@@ -218,12 +288,17 @@ impl PagePool {
     }
 
     /// Take a block from the free list, growing storage if none is free.
-    /// The block starts uniquely referenced (`refs == 1`).
-    fn alloc_block(&mut self) -> u32 {
+    /// The block starts uniquely referenced (`refs == 1`). A free-list
+    /// entry that still carries references means the bookkeeping is torn
+    /// ([`PageError::FreeListCorrupt`]).
+    fn alloc_block(&mut self) -> std::result::Result<u32, PageError> {
         if let Some(b) = self.free.pop() {
-            debug_assert_eq!(self.refs[b as usize], 0, "free block {b} still referenced");
-            self.refs[b as usize] = 1;
-            return b;
+            let refs = self.refs[udx(b)];
+            if refs != 0 {
+                return Err(PageError::FreeListCorrupt { block: b, refs });
+            }
+            self.refs[udx(b)] = 1;
+            return Ok(b);
         }
         let b = self.blocks as u32;
         self.blocks += 1;
@@ -231,27 +306,34 @@ impl PagePool {
         self.k.resize(n, 0.0);
         self.v.resize(n, 0.0);
         self.refs.push(1);
-        b
+        Ok(b)
     }
 
     /// Drop one reference to a block; the last release returns it to the
     /// free list. Shared blocks survive their earlier releasers (a donor
     /// conversation retiring leaves the frozen prefix resident for the
-    /// index and its adopters).
-    fn release_block(&mut self, b: u32) {
-        debug_assert!((b as usize) < self.blocks, "release of unbacked block {b}");
-        debug_assert!(self.refs[b as usize] > 0, "double free of block {b}");
-        self.refs[b as usize] -= 1;
-        if self.refs[b as usize] == 0 {
+    /// index and its adopters). Releasing an unbacked or already-free
+    /// block is rejected ([`PageError::ReleaseUnbacked`] /
+    /// [`PageError::DoubleFree`]).
+    fn release_block(&mut self, b: u32) -> std::result::Result<(), PageError> {
+        if udx(b) >= self.blocks {
+            return Err(PageError::ReleaseUnbacked { block: b });
+        }
+        if self.refs[udx(b)] == 0 {
+            return Err(PageError::DoubleFree { block: b });
+        }
+        self.refs[udx(b)] -= 1;
+        if self.refs[udx(b)] == 0 {
             self.free.push(b);
         }
+        Ok(())
     }
 
     /// Element offset of `(block, layer, in-block row)` in the storage.
     #[inline]
     fn row_off(&self, b: u32, layer: usize, within: usize) -> usize {
         let rs = self.dims.heads * self.dims.d_head;
-        (b as usize) * self.block_elems() + (layer * self.block_size + within) * rs
+        udx(b) * self.block_elems() + (layer * self.block_size + within) * rs
     }
 }
 
@@ -356,14 +438,15 @@ impl CachePools {
     /// one reference per block so the run survives its donor. Runs
     /// already covered by a resident entry are skipped; a run extending
     /// a resident entry replaces it (releasing the shorter one); past
-    /// [`PREFIX_INDEX_CAP`] the oldest entry is evicted.
+    /// [`PREFIX_INDEX_CAP`] the oldest entry is evicted. Errs only on
+    /// pool corruption ([`PageError`]).
     pub fn register_prefix(
         &self,
         tokens: &[i32],
         t_blocks: &[u32],
         d_blocks: &[u32],
         feats: &[Vec<f32>],
-    ) {
+    ) -> std::result::Result<(), PageError> {
         let bs = pool_read(&self.teacher).block_size();
         let rows = tokens.len();
         debug_assert!(rows > 0 && rows % bs == 0, "prefix run must be block-aligned");
@@ -378,32 +461,32 @@ impl CachePools {
             .iter()
             .any(|e| e.tokens.len() >= rows && e.tokens[..rows] == *tokens)
         {
-            return;
+            return Ok(());
         }
         // this run extends one or more resident entries: replace them
         let mut i = 0;
         while i < index.entries.len() {
             if tokens.starts_with(&index.entries[i].tokens) {
                 let old = index.entries.remove(i);
-                self.release_entry(&old);
+                self.release_entry(&old)?;
             } else {
                 i += 1;
             }
         }
         while index.entries.len() >= PREFIX_INDEX_CAP {
             let old = index.entries.remove(0);
-            self.release_entry(&old);
+            self.release_entry(&old)?;
         }
         {
             let mut tp = pool_write(&self.teacher);
             for &b in t_blocks {
-                tp.share_block(b);
+                tp.share_block(b)?;
             }
         }
         {
             let mut dp = pool_write(&self.draft);
             for &b in d_blocks {
-                dp.share_block(b);
+                dp.share_block(b)?;
             }
         }
         index.entries.push(PrefixEntry {
@@ -412,6 +495,7 @@ impl CachePools {
             d_blocks: d_blocks.to_vec(),
             feats: feats.to_vec(),
         });
+        Ok(())
     }
 
     /// Longest block-aligned shared run matching a prefix of `prompt`,
@@ -448,23 +532,26 @@ impl CachePools {
     }
 
     /// Drop every registered run, releasing the index's block references.
-    pub fn clear_prefix_index(&self) {
+    /// Errs only on pool corruption ([`PageError`]).
+    pub fn clear_prefix_index(&self) -> std::result::Result<(), PageError> {
         let entries = std::mem::take(&mut prefix_lock(&self.prefix).entries);
         for e in &entries {
-            self.release_entry(e);
+            self.release_entry(e)?;
         }
+        Ok(())
     }
 
-    fn release_entry(&self, e: &PrefixEntry) {
+    fn release_entry(&self, e: &PrefixEntry) -> std::result::Result<(), PageError> {
         let mut tp = pool_write(&self.teacher);
         for &b in &e.t_blocks {
-            tp.release_block(b);
+            tp.release_block(b)?;
         }
         drop(tp);
         let mut dp = pool_write(&self.draft);
         for &b in &e.d_blocks {
-            dp.release_block(b);
+            dp.release_block(b)?;
         }
+        Ok(())
     }
 }
 
@@ -558,33 +645,40 @@ impl PagedCache {
     }
 
     /// Grow `table` (in `pool`) until it maps at least `rows` rows.
-    fn map_rows(pool: &mut PagePool, table: &mut Vec<u32>, rows: usize) {
+    fn map_rows(
+        pool: &mut PagePool,
+        table: &mut Vec<u32>,
+        rows: usize,
+    ) -> std::result::Result<(), PageError> {
         let bs = pool.block_size();
         while table.len() * bs < rows {
-            let b = pool.alloc_block();
+            let b = pool.alloc_block()?;
             table.push(b);
         }
+        Ok(())
     }
 
     /// Shrink the main table to exactly cover `rows`, releasing trimmed
     /// blocks.
-    fn trim_table(&mut self, rows: usize) {
+    fn trim_table(&mut self, rows: usize) -> std::result::Result<(), PageError> {
         let keep = rows.div_ceil(self.block_size);
         let mut pool = pool_write(&self.pool);
         while self.table.len() > keep {
-            let b = self.table.pop().expect("table longer than keep");
-            pool.release_block(b);
+            let Some(b) = self.table.pop() else { break };
+            pool.release_block(b)?;
         }
+        Ok(())
     }
 
     /// Release every replica block (branch close).
-    fn drop_replica(&mut self) {
+    fn drop_replica(&mut self) -> std::result::Result<(), PageError> {
         if let Some(rep) = self.replica.take() {
             let mut pool = pool_write(&self.pool);
             for b in rep {
-                pool.release_block(b);
+                pool.release_block(b)?;
             }
         }
+        Ok(())
     }
 
     /// Copy-on-write guard for logical rows `[lo, hi)` of `table`: any
@@ -601,9 +695,9 @@ impl PagedCache {
         lo: usize,
         hi: usize,
         stats: &mut CacheStats,
-    ) {
+    ) -> std::result::Result<(), PageError> {
         if hi <= lo {
-            return;
+            return Ok(());
         }
         let bs = pool.block_size();
         let be = pool.block_elems();
@@ -612,16 +706,17 @@ impl PagedCache {
             if pool.ref_count(b) <= 1 {
                 continue;
             }
-            let nb = pool.alloc_block();
-            let s_off = (b as usize) * be;
-            let d_off = (nb as usize) * be;
+            let nb = pool.alloc_block()?;
+            let s_off = udx(b) * be;
+            let d_off = udx(nb) * be;
             pool.k.copy_within(s_off..s_off + be, d_off);
             pool.v.copy_within(s_off..s_off + be, d_off);
-            pool.release_block(b); // drop this table's reference only
+            pool.release_block(b)?; // drop this table's reference only
             table[bi] = nb;
             stats.cow_copies += 1;
             stats.cow_bytes += (2 * be * 4) as u64;
         }
+        Ok(())
     }
 
     /// Copy `count` rows of a `[L, s, H, Dh]` step-output block into the
@@ -634,17 +729,20 @@ impl PagedCache {
         v_rows: &[f32],
         s: usize,
         count: usize,
-    ) {
+    ) -> Result<()> {
         let rs = self.rstride();
         debug_assert_eq!(k_rows.len(), self.dims.layers * s * rs);
         let mut pool = pool_write(&self.pool);
         let table = if into_replica {
-            self.replica.as_mut().expect("replica table missing")
+            let Some(rep) = self.replica.as_mut() else {
+                bail!("DeepCopy branch write with no replica table");
+            };
+            rep
         } else {
             &mut self.table
         };
-        Self::map_rows(&mut pool, table, at + count);
-        Self::cow_rows(&mut pool, table, at, at + count, &mut self.stats);
+        Self::map_rows(&mut pool, table, at + count)?;
+        Self::cow_rows(&mut pool, table, at, at + count, &mut self.stats)?;
         let bs = pool.block_size();
         for l in 0..self.dims.layers {
             for r in 0..count {
@@ -656,6 +754,7 @@ impl PagedCache {
                 pool.v[dst..dst + rs].copy_from_slice(&v_rows[src..src + rs]);
             }
         }
+        Ok(())
     }
 
     /// In-pool row copy: logical `src_row` of `src_table` → logical
@@ -675,10 +774,10 @@ impl PagedCache {
     }
 
     /// Close the branch state after a commit/rollback.
-    fn close_branch(&mut self) {
+    fn close_branch(&mut self) -> std::result::Result<(), PageError> {
         self.branch_open = false;
         self.branch_rows = 0;
-        self.drop_replica();
+        self.drop_replica()
     }
 
     /// The table a branch-view read goes through (replica when DeepCopy
@@ -715,11 +814,11 @@ impl PagedCache {
 
     /// Write the gathered scratch back as committed rows `[at, at+n)` of
     /// the main table.
-    fn scatter_gathered(&mut self, at: usize, n: usize) {
+    fn scatter_gathered(&mut self, at: usize, n: usize) -> std::result::Result<(), PageError> {
         let rs = self.rstride();
         let mut pool = pool_write(&self.pool);
-        Self::map_rows(&mut pool, &mut self.table, at + n);
-        Self::cow_rows(&mut pool, &mut self.table, at, at + n, &mut self.stats);
+        Self::map_rows(&mut pool, &mut self.table, at + n)?;
+        Self::cow_rows(&mut pool, &mut self.table, at, at + n, &mut self.stats)?;
         let bs = pool.block_size();
         for l in 0..self.dims.layers {
             for i in 0..n {
@@ -730,6 +829,7 @@ impl PagedCache {
                 pool.v[dst..dst + rs].copy_from_slice(&self.gather_v[src..src + rs]);
             }
         }
+        Ok(())
     }
 }
 
@@ -752,8 +852,11 @@ impl KvStore for PagedCache {
 
     fn reset(&mut self) {
         self.taint(0);
-        self.drop_replica();
-        self.trim_table(0);
+        // infallible by contract — corruption here escalates like lock
+        // poisoning (see `pool_corrupt`)
+        if let Err(e) = self.drop_replica().and_then(|()| self.trim_table(0)) {
+            pool_corrupt(e);
+        }
         self.len = 0;
         self.branch_rows = 0;
         self.branch_open = false;
@@ -776,7 +879,7 @@ impl KvStore for PagedCache {
         }
         let at = self.len;
         self.taint(at);
-        self.write_rows(false, at, k_rows, v_rows, s, count);
+        self.write_rows(false, at, k_rows, v_rows, s, count)?;
         self.len += count;
         self.stats.append_bytes += (2 * count * self.rstride() * self.dims.layers * 4) as u64;
         Ok(())
@@ -796,9 +899,9 @@ impl KvStore for PagedCache {
             let be = pool.block_elems();
             let mut rep = Vec::with_capacity(self.table.len());
             for &src in &self.table {
-                let dst = pool.alloc_block();
-                let s_off = (src as usize) * be;
-                let d_off = (dst as usize) * be;
+                let dst = pool.alloc_block()?;
+                let s_off = udx(src) * be;
+                let d_off = udx(dst) * be;
                 pool.k.copy_within(s_off..s_off + be, d_off);
                 pool.v.copy_within(s_off..s_off + be, d_off);
                 rep.push(dst);
@@ -820,7 +923,7 @@ impl KvStore for PagedCache {
         }
         self.taint(at);
         let into_replica = self.replica.is_some();
-        self.write_rows(into_replica, at, k_rows, v_rows, s, count);
+        self.write_rows(into_replica, at, k_rows, v_rows, s, count)?;
         self.branch_rows += count;
         self.stats.append_bytes += (2 * count * self.rstride() * self.dims.layers * 4) as u64;
         Ok(())
@@ -829,11 +932,17 @@ impl KvStore for PagedCache {
     fn rollback(&mut self) {
         if self.branch_open {
             self.taint(self.len);
-            self.close_branch();
+            // infallible by contract — corruption escalates like lock
+            // poisoning (see `pool_corrupt`)
+            if let Err(e) = self.close_branch() {
+                pool_corrupt(e);
+            }
             // SegmentShare spec rows may have grown the main table past
             // the committed boundary — give those blocks back.
             let len = self.len;
-            self.trim_table(len);
+            if let Err(e) = self.trim_table(len) {
+                pool_corrupt(e);
+            }
             self.stats.rollbacks += 1;
         }
     }
@@ -859,8 +968,8 @@ impl KvStore for PagedCache {
                 let hi = (len + a).min(boundary);
                 let mut pool = pool_write(&self.pool);
                 if hi > len {
-                    Self::map_rows(&mut pool, &mut self.table, hi);
-                    Self::cow_rows(&mut pool, &mut self.table, len, hi, &mut self.stats);
+                    Self::map_rows(&mut pool, &mut self.table, hi)?;
+                    Self::cow_rows(&mut pool, &mut self.table, len, hi, &mut self.stats)?;
                 }
                 for row in len..hi {
                     Self::copy_row(&mut pool, &rep, row, &self.table, row, self.dims.layers);
@@ -887,7 +996,7 @@ impl KvStore for PagedCache {
                 let mut pool = pool_write(&self.pool);
                 for b in rep {
                     if b != u32::MAX {
-                        pool.release_block(b);
+                        pool.release_block(b)?;
                     }
                 }
             }
@@ -899,7 +1008,7 @@ impl KvStore for PagedCache {
             self.len += a;
         }
         let len = self.len;
-        self.trim_table(len);
+        self.trim_table(len)?;
         self.branch_open = false;
         self.branch_rows = 0;
         self.stats.commits += 1;
@@ -932,8 +1041,8 @@ impl KvStore for PagedCache {
             let tail: Vec<usize> = path_indices[self.len..].to_vec();
             self.gather_rows(&tail);
             let at = self.len;
-            self.drop_replica();
-            self.scatter_gathered(at, tail.len());
+            self.drop_replica()?;
+            self.scatter_gathered(at, tail.len())?;
             self.stats.commit_bytes +=
                 (4 * self.dims.layers * tail.len() * self.rstride() * 4) as u64;
             self.stats.fast_reorders += 1;
@@ -944,8 +1053,8 @@ impl KvStore for PagedCache {
             // Full reorder (ablation path): gather every accepted row,
             // then rewrite the committed sequence from row 0.
             self.gather_rows(path_indices);
-            self.drop_replica();
-            self.scatter_gathered(0, path_indices.len());
+            self.drop_replica()?;
+            self.scatter_gathered(0, path_indices.len())?;
             self.stats.commit_bytes +=
                 (4 * self.dims.layers * path_indices.len() * self.rstride() * 4) as u64;
             self.stats.full_reorders += 1;
@@ -954,7 +1063,7 @@ impl KvStore for PagedCache {
         let len = self.len;
         self.branch_open = false;
         self.branch_rows = 0;
-        self.trim_table(len);
+        self.trim_table(len)?;
         self.stats.commits += 1;
         Ok(())
     }
@@ -985,21 +1094,21 @@ impl KvStore for PagedCache {
                 // main table (disjoint blocks — plain copies).
                 let mut pool = pool_write(&self.pool);
                 if !tail_offsets.is_empty() {
-                    Self::map_rows(&mut pool, &mut self.table, len + tail_offsets.len());
+                    Self::map_rows(&mut pool, &mut self.table, len + tail_offsets.len())?;
                     Self::cow_rows(
                         &mut pool,
                         &mut self.table,
                         len,
                         len + tail_offsets.len(),
                         &mut self.stats,
-                    );
+                    )?;
                 }
                 for (i, &o) in tail_offsets.iter().enumerate() {
                     Self::copy_row(&mut pool, &rep, len + o, &self.table, len + i, layers);
                     moved_rows += 1;
                 }
                 for b in rep {
-                    pool.release_block(b);
+                    pool.release_block(b)?;
                 }
             }
             None => {
@@ -1017,7 +1126,7 @@ impl KvStore for PagedCache {
                     len,
                     len + tail_offsets.len(),
                     &mut self.stats,
-                );
+                )?;
                 for (i, &o) in tail_offsets.iter().enumerate() {
                     if o == i {
                         continue;
@@ -1033,7 +1142,7 @@ impl KvStore for PagedCache {
         let new_len = self.len;
         self.branch_open = false;
         self.branch_rows = 0;
-        self.trim_table(new_len);
+        self.trim_table(new_len)?;
         self.stats.commits += 1;
         Ok(())
     }
@@ -1123,7 +1232,7 @@ impl KvStore for PagedCache {
         {
             let mut pool = pool_write(&self.pool);
             for &b in blocks {
-                pool.share_block(b);
+                pool.share_block(b)?;
                 self.table.push(b);
             }
         }
@@ -1137,10 +1246,17 @@ impl KvStore for PagedCache {
 
 impl Drop for PagedCache {
     /// Return every mapped block to the pool — a dropped conversation
-    /// must not leak blocks (the free-list invariant).
+    /// must not leak blocks (the free-list invariant). Corruption found
+    /// here escalates like lock poisoning, *unless* the thread is
+    /// already unwinding — a second panic would abort the process
+    /// before the original failure is reported.
     fn drop(&mut self) {
-        self.drop_replica();
-        self.trim_table(0);
+        let res = self.drop_replica().and_then(|()| self.trim_table(0));
+        if let Err(e) = res {
+            if !std::thread::panicking() {
+                pool_corrupt(e);
+            }
+        }
     }
 }
 
@@ -1365,10 +1481,10 @@ mod tests {
         let tokens: Vec<i32> = (0..8).collect();
         let (tb, db) = (t.committed_block_run(8).unwrap(), d.committed_block_run(8).unwrap());
         let feats = vec![vec![1.0; 4], vec![2.0; 4]];
-        pools.register_prefix(&tokens, &tb, &db, &feats);
+        pools.register_prefix(&tokens, &tb, &db, &feats).unwrap();
         assert_eq!(prefix_lock(&pools.prefix).entries(), 1);
         // re-registering a covered run is a no-op
-        pools.register_prefix(&tokens, &tb, &db, &feats);
+        pools.register_prefix(&tokens, &tb, &db, &feats).unwrap();
         assert_eq!(prefix_lock(&pools.prefix).entries(), 1);
         assert_eq!(pool_read(&pools.teacher).ref_count(tb[0]), 2, "table + index");
 
@@ -1404,7 +1520,7 @@ mod tests {
         let long: Vec<i32> = (0..12).collect();
         let (tb2, db2) =
             (t2.committed_block_run(12).unwrap(), d2.committed_block_run(12).unwrap());
-        pools.register_prefix(&long, &tb2, &db2, &[vec![0.0], vec![0.0], vec![0.0]]);
+        pools.register_prefix(&long, &tb2, &db2, &[vec![0.0], vec![0.0], vec![0.0]]).unwrap();
         assert_eq!(prefix_lock(&pools.prefix).entries(), 1, "extension replaces the shorter run");
         let hit = pools.lookup_prefix(&[0, 1, 2, 3, 4, 5, 6, 7, 8, 99], 9).unwrap();
         assert_eq!(hit.rows, 8, "the shorter prefix still matches through the longer run");
@@ -1422,7 +1538,8 @@ mod tests {
                 &t3.committed_block_run(4).unwrap(),
                 &d3.committed_block_run(4).unwrap(),
                 &[vec![0.0]],
-            );
+            )
+            .unwrap();
         }
         assert_eq!(prefix_lock(&pools.prefix).entries(), PREFIX_INDEX_CAP);
         assert!(pools.lookup_prefix(&long, 11).is_none(), "the oldest entry was evicted");
@@ -1430,12 +1547,57 @@ mod tests {
             let pl = pool_read(&pools.teacher);
             assert_eq!(pl.blocks(), pl.free_blocks() + pl.referenced_blocks());
         }
-        pools.clear_prefix_index();
+        pools.clear_prefix_index().unwrap();
         assert_eq!(prefix_lock(&pools.prefix).entries(), 0);
         let pl = pool_read(&pools.teacher);
         assert_eq!(pl.free_blocks(), pl.blocks(), "clearing releases every reference");
         let pd = pool_read(&pools.draft);
         assert_eq!(pd.free_blocks(), pd.blocks());
+    }
+
+    #[test]
+    fn refcount_violations_are_typed_errors_in_release_builds() {
+        // These guards used to be debug_assert!s; they must now fire in
+        // every build profile and name the exact violation.
+        let p = pool();
+        let mut pl = pool_write(&p);
+        assert_eq!(
+            pl.share_block(0),
+            Err(PageError::ShareFree { block: 0 }),
+            "sharing an unbacked block is a use-after-free"
+        );
+        let b = pl.alloc_block().unwrap();
+        pl.share_block(b).unwrap();
+        pl.release_block(b).unwrap();
+        pl.release_block(b).unwrap();
+        assert_eq!(pl.ref_count(b), 0);
+        assert_eq!(
+            pl.release_block(b),
+            Err(PageError::DoubleFree { block: b }),
+            "a third release of a twice-referenced block is a double free"
+        );
+        assert_eq!(
+            pl.release_block(99),
+            Err(PageError::ReleaseUnbacked { block: 99 }),
+            "releasing a block the pool never created"
+        );
+        assert_eq!(
+            pl.share_block(b),
+            Err(PageError::ShareFree { block: b }),
+            "sharing a freed block is a use-after-free"
+        );
+        // free-list corruption: hand-tear the bookkeeping, then alloc
+        pl.refs[udx(b)] = 1; // b is still on the free list
+        assert_eq!(pl.alloc_block(), Err(PageError::FreeListCorrupt { block: b, refs: 1 }));
+        // every variant renders a message naming the block
+        for e in [
+            PageError::FreeListCorrupt { block: 7, refs: 2 },
+            PageError::ReleaseUnbacked { block: 7 },
+            PageError::DoubleFree { block: 7 },
+            PageError::ShareFree { block: 7 },
+        ] {
+            assert!(e.to_string().contains('7'), "{e} should name the block");
+        }
     }
 
     #[test]

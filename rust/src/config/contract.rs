@@ -145,6 +145,14 @@ impl Contract {
             draft_s: usizes("draft_s_variants")?,
             neg_inf: c.get("neg_inf").and_then(Json::as_f64).context("neg_inf")? as f32,
         };
+        if got.teacher_s.is_empty() || got.draft_s.is_empty() {
+            bail!(
+                "manifest contract must list at least one compiled S variant per role \
+                 (teacher_s_variants: {:?}, draft_s_variants: {:?})",
+                got.teacher_s,
+                got.draft_s
+            );
+        }
         // cache capacity is a build-time knob carried by the manifest
         // (EAGLE_CACHE_CAP); everything else must match this crate.
         if got.cache_cap < 256 || got.cache_cap % 128 != 0 {
@@ -202,6 +210,22 @@ impl Contract {
     /// Smallest compiled draft variant holding `n` tokens.
     pub fn draft_variant(&self, n: usize) -> Result<usize> {
         self.pick_s(&self.draft_s, n)
+    }
+
+    /// Largest compiled draft block size — the widest chunk one draft
+    /// launch can refresh. Variant lists are ascending and validated
+    /// non-empty ([`Contract::from_manifest`]; the compiled-in default
+    /// is non-empty too), so this is total; the fallback only covers a
+    /// hand-built empty contract.
+    pub fn max_draft_s(&self) -> usize {
+        self.draft_s.last().copied().unwrap_or(DRAFT_S_VARIANTS[0])
+    }
+
+    /// Smallest compiled teacher block size — the baseline (one token
+    /// per call) step width. Total for the same reason as
+    /// [`Contract::max_draft_s`].
+    pub fn min_teacher_s(&self) -> usize {
+        self.teacher_s.first().copied().unwrap_or(TEACHER_S_VARIANTS[0])
     }
 
     /// Largest teacher block = prefill chunk size.

@@ -58,8 +58,8 @@
 //! A conversation admitted at tick `T` joins tick `T`'s fused launch —
 //! the group is re-padded every tick ([`BatchMask::begin`] closes the
 //! whole block before requests are copied in), so membership changes
-//! mid-flight never leak padding (checked by
-//! [`BatchMask::padding_closed`] in debug builds).
+//! mid-flight never leak padding (checked every tick, in release builds
+//! too, by [`BatchMask::check_padding_closed`]).
 //!
 //! Acceptance and cache commits never cross requests, so continuous
 //! batched decoding is **bit-identical** to sequential decoding no matter
@@ -104,7 +104,7 @@ use crate::engine::{Engine, GenOut, ParkedConversation};
 use crate::tree::BatchMask;
 use anyhow::{Context, Result};
 use std::collections::{HashMap, VecDeque};
-use std::time::Instant;
+use crate::util::timer::Stopwatch;
 
 /// One ping-pong staging buffer of the verifier: the fused input block
 /// (tokens/positions/mask), the output scratch its launch lands in, and
@@ -165,7 +165,7 @@ pub struct InFlightLaunch {
     buf: usize,
     token: LaunchToken,
     begin_secs: f64,
-    launched_at: Instant,
+    launched_at: Stopwatch,
     b: usize,
 }
 
@@ -236,9 +236,9 @@ impl FusedVerifier {
     /// within the pass. Requests beyond the group
     /// (`plan.key.b > group.len()`) are padding: zero tokens, fully
     /// closed mask rows, an empty cache view, and no live rows to
-    /// scatter back ([`BatchMask::padding_closed`] is asserted after the
-    /// gather, so interleaved membership changes can never leak an open
-    /// padding row).
+    /// scatter back ([`BatchMask::check_padding_closed`] runs after the
+    /// gather — in release builds too — so interleaved membership changes
+    /// can never leak an open padding row).
     pub fn stage(
         &mut self,
         backend: &dyn ModelBackend,
@@ -304,11 +304,13 @@ impl FusedVerifier {
         }
         // membership changed or shrank since last round? re-padding must
         // still leave every padding row/column closed ("padding is never
-        // attended" — the invariant continuous admission leans on)
-        debug_assert!(
-            buf.mask.padding_closed(&buf.s_reqs),
-            "fused mask block leaked an open padding row/column"
-        );
+        // attended" — the invariant continuous admission leans on). Checked
+        // in release builds too: the scan cost scales with the padded
+        // region only (zero for homogeneous groups), and a leak here would
+        // silently corrupt a co-batched conversation.
+        buf.mask
+            .check_padding_closed(&buf.s_reqs)
+            .map_err(|leak| anyhow::anyhow!("fused mask block leaked open padding: {leak}"))?;
         Ok(StageOutcome::Staged(StagedLaunch { buf: self.cur, plan, b }))
     }
 
@@ -349,7 +351,7 @@ impl FusedVerifier {
             let kv = KvView::flat(EMPTY_KV, EMPTY_KV, 0);
             reqs.push(BatchRequest { kv, live: 0, session: None });
         }
-        let launched_at = Instant::now();
+        let launched_at = Stopwatch::start();
         let token = backend.begin_execute_batch(
             &plan,
             BatchStepArgs {
@@ -362,7 +364,7 @@ impl FusedVerifier {
             &mut buf.out,
         )?;
         self.launches += 1;
-        let begin_secs = launched_at.elapsed().as_secs_f64();
+        let begin_secs = launched_at.elapsed_secs();
         drop(reqs);
         drop(guards);
         Ok(InFlightLaunch { buf: which, token, begin_secs, launched_at, b })
@@ -387,11 +389,11 @@ impl FusedVerifier {
         let InFlightLaunch { buf: which, token, begin_secs, launched_at, b } = launch;
         let overlapped = !token.is_completed();
         let buf = &mut self.bufs[which];
-        let await_start = Instant::now();
+        let await_start = Stopwatch::start();
         backend.await_batch(token, &mut buf.out)?;
-        let await_secs = await_start.elapsed().as_secs_f64();
+        let await_secs = await_start.elapsed_secs();
         let busy = (begin_secs + await_secs) / b as f64;
-        let hidden = (await_start.duration_since(launched_at).as_secs_f64() - begin_secs)
+        let hidden = (await_start.secs_since(&launched_at) - begin_secs)
             .max(0.0)
             / b as f64;
         for (bi, &i) in buf.group.iter().enumerate() {
@@ -915,19 +917,21 @@ impl ContinuousScheduler {
         let had = self.queue.len();
         let q = std::mem::take(&mut self.queue);
         for p in q {
-            let expired = matches!(
-                p.slo,
+            let expired_target = match p.slo {
                 Some(SloPolicy { target_ms, action: SloAction::Shed })
-                    if self.now_ms - p.arrived_ms > target_ms
-            );
-            if expired {
-                let slo = p.slo.expect("matched Some above");
+                    if self.now_ms - p.arrived_ms > target_ms =>
+                {
+                    Some(target_ms)
+                }
+                _ => None,
+            };
+            if let Some(target_ms) = expired_target {
                 self.shed_notices.push(ShedNotice {
                     id: p.id,
                     submitted_tick: p.arrived_tick,
                     shed_tick: self.tick_now,
                     waited_ms: self.now_ms - p.arrived_ms,
-                    target_ms: slo.target_ms,
+                    target_ms,
                 });
                 self.stats.shed += 1;
             } else {
@@ -1023,7 +1027,9 @@ impl ContinuousScheduler {
             if self.slots[si] != Slot::Free {
                 continue;
             }
-            let mut p = self.queue.pop_front().expect("queue checked non-empty");
+            let Some(mut p) = self.queue.pop_front() else {
+                break;
+            };
             match (p.parked.take(), p.cfg.take()) {
                 // resumed turn: restore the parked state wholesale (no
                 // reset, no config application — the conversation brings

@@ -402,7 +402,9 @@ impl<C: Codec> Coordinator<C> {
         let outcomes = trace
             .iter()
             .map(|r| {
-                let c = st.remove(&r.id).expect("every trace id was registered");
+                let Some(c) = st.remove(&r.id) else {
+                    bail!("trace id {} was never registered", r.id);
+                };
                 ensure!(
                     c.released || c.shed.is_some(),
                     "conversation {} reached no terminal state (batch reported complete)",

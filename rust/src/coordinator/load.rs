@@ -132,12 +132,13 @@ pub fn run_load(backend: &BackendSpec, run: &RunConfig, spec: &LoadSpec) -> Resu
     let mut busy = 0.0f64;
     let mut makespan: f64 = 0.0;
     for s in &served {
-        // earliest-free server
-        let (idx, _) = free_at
+        // earliest-free server (free_at is never empty: servers.max(1);
+        // total_cmp keeps the comparator total even for NaN timings)
+        let idx = free_at
             .iter()
             .enumerate()
-            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-            .unwrap();
+            .min_by(|a, b| a.1.total_cmp(b.1))
+            .map_or(0, |(i, _)| i);
         let start = s.arrival.max(free_at[idx]);
         let wait = start - s.arrival;
         free_at[idx] = start + s.service;

@@ -205,7 +205,7 @@ pub fn run_workload(cfg: &CoordinatorConfig) -> Result<Vec<TurnRecord>> {
             }));
         }
         for h in handles {
-            h.join().expect("worker panicked")?;
+            h.join().map_err(|_| anyhow::anyhow!("worker thread panicked"))??;
         }
         Ok(())
     })?;

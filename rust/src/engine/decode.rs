@@ -89,7 +89,7 @@ use crate::util::arena::{FeatRing, StepScratch};
 use crate::util::stats::{AcceptPos, Histogram};
 use crate::util::{SplitMix64, StageTimer};
 use anyhow::{bail, Context, Result};
-use std::time::Instant;
+use crate::util::timer::Stopwatch;
 
 /// Largest draft frontier evaluated in one call.
 const FRONTIER_CAP: usize = 64;
@@ -130,7 +130,7 @@ struct InFlight {
     stats: RunStats,
     out_tokens: Vec<i32>,
     prompt_len: usize,
-    wall0: Instant,
+    wall0: Stopwatch,
     max_new: usize,
     round: Option<RoundState>,
 }
@@ -569,7 +569,7 @@ impl Engine {
         }
         // Bring the second (ping-pong) draft scratch to capacity too.
         let d = c.draft;
-        let s_max = *c.draft_s.last().unwrap();
+        let s_max = c.max_draft_s();
         self.d_scratch[1].prepare(s_max, c.vocab, c.feat_dim, d.layers, d.heads, d.d_head, false);
         // Pre-create every incremental mask slot this config can reach and
         // pre-size the staging buffers: a rarer S variant appearing for
@@ -834,7 +834,7 @@ impl Engine {
             self.feat_last.clear();
             self.feat_last.resize(f, 0.0);
         }
-        let t0 = Instant::now();
+        let t0 = Stopwatch::start();
         let share_bs = if self.sharing_active() { self.t_cache.block_size() } else { None };
         let mut rest = prompt;
         if share_bs.is_some() && self.t_cache.is_empty() {
@@ -847,10 +847,10 @@ impl Engine {
                 self.block_feats = feats;
                 // the boundary feature: feat of row `rows - 1`, which the
                 // first tail token chains from (EAGLE input contract)
-                copy_into(
-                    &mut self.feat_last,
-                    self.block_feats.last().expect("a match covers >= 1 block"),
-                );
+                let Some(boundary) = self.block_feats.last() else {
+                    bail!("prefix match covered {rows} rows but carried no block features");
+                };
+                copy_into(&mut self.feat_last, boundary);
                 rest = &prompt[rows..];
             }
         }
@@ -923,11 +923,11 @@ impl Engine {
                         &tb,
                         &db,
                         &self.block_feats[..run / bs],
-                    );
+                    )?;
                 }
             }
         }
-        self.timers.add("prefill", t0.elapsed().as_secs_f64());
+        self.timers.add("prefill", t0.elapsed_secs());
         Ok(())
     }
 
@@ -944,7 +944,7 @@ impl Engine {
         stats: &mut RunStats,
     ) -> Result<Option<usize>> {
         let mut last = None;
-        let max_take = *self.contract.draft_s.last().unwrap();
+        let max_take = self.contract.max_draft_s();
         while !self.uncharted.is_empty() {
             let take = self.uncharted.len().min(max_take);
             let s = self.contract.draft_variant(take)?;
@@ -958,7 +958,9 @@ impl Engine {
             self.feats_buf.clear();
             self.feats_buf.resize(s * f, 0.0);
             for i in 0..take {
-                let (tok, feat) = self.uncharted.pop_front().expect("ring drained early");
+                let Some((tok, feat)) = self.uncharted.pop_front() else {
+                    bail!("draft ring drained early at {i}/{take}");
+                };
                 self.tok_buf[i] = tok;
                 self.feats_buf[i * f..(i + 1) * f].copy_from_slice(feat);
             }
@@ -1037,11 +1039,11 @@ impl Engine {
     ) -> Result<GenOut> {
         anyhow::ensure!(self.inflight.is_none(), "a generation is already in flight");
         self.use_draft = false;
-        let wall0 = Instant::now();
+        let wall0 = Stopwatch::start();
         let mut stats = RunStats::default();
         self.prefill(backend, prompt, &mut stats)?;
         let mut out_tokens = Vec::with_capacity(max_new);
-        let s = *self.contract.teacher_s.first().unwrap();
+        let s = self.contract.min_teacher_s();
         while out_tokens.len() < max_new && self.t_cache.headroom() > s {
             let r0 = argmax(&self.pending_logits) as i32;
             let t = self.t_cache.len();
@@ -1050,10 +1052,10 @@ impl Engine {
             self.tok_buf[0] = r0;
             self.pos_buf.clear();
             self.pos_buf.resize(s, t as i32);
-            let tm = Instant::now();
+            let tm = Stopwatch::start();
             let mask = self.mb.chain_incremental(MaskStream::TeacherChain, s, 1, t, None);
-            self.timers.add("mask_build", tm.elapsed().as_secs_f64());
-            let tv = Instant::now();
+            self.timers.add("mask_build", tm.elapsed_secs());
+            let tv = Stopwatch::start();
             let session = Self::ticket(self.t_cache.as_ref(), &self.t_session);
             let guard = self.t_cache.kv_guard();
             backend.teacher_step(self.cfg.mode, StepArgs {
@@ -1069,12 +1071,12 @@ impl Engine {
             if session.is_some() {
                 self.t_cache.mark_synced();
             }
-            self.timers.add("verify", tv.elapsed().as_secs_f64());
+            self.timers.add("verify", tv.elapsed_secs());
             stats.teacher_calls += 1;
             stats.rounds += 1;
-            let tc = Instant::now();
+            let tc = Stopwatch::start();
             self.t_cache.append_committed(&self.t_scratch.k_new, &self.t_scratch.v_new, s, 1)?;
-            self.timers.add("commit", tc.elapsed().as_secs_f64());
+            self.timers.add("commit", tc.elapsed_secs());
             copy_into(&mut self.pending_logits, self.t_scratch.logits_row(0));
             copy_into(&mut self.feat_last, self.t_scratch.feat_row(0));
             out_tokens.push(r0);
@@ -1122,7 +1124,7 @@ impl Engine {
         anyhow::ensure!(self.inflight.is_none(), "a generation is already in flight");
         self.use_draft = true;
         self.cfg.validate()?;
-        let wall0 = Instant::now();
+        let wall0 = Stopwatch::start();
         let mut stats = RunStats::default();
         self.prefill(backend, prompt, &mut stats)?;
         self.inflight = Some(InFlight {
@@ -1172,7 +1174,7 @@ impl Engine {
         // 1. Pending root token + draft chain refresh.
         let r0 = argmax(&self.pending_logits) as i32;
         self.uncharted.push(r0, &self.feat_last);
-        let td = Instant::now();
+        let td = Stopwatch::start();
         let root_row = self
             .drain_uncharted(backend, &mut fl.stats)?
             .context("drain_uncharted returned nothing despite pending root")?;
@@ -1233,22 +1235,22 @@ impl Engine {
             frontier.clear();
             frontier.extend(new_slots.iter().enumerate().map(|(i, &slot)| (slot, i)));
         }
-        self.timers.add("draft_expand", td.elapsed().as_secs_f64());
+        self.timers.add("draft_expand", td.elapsed_secs());
 
         // 3. Tensorize + §3.2 invariants.
-        let tt = Instant::now();
+        let tt = Stopwatch::start();
         let s_pad = self.contract.teacher_variant(tree.num_slots())?;
         let tens = Tensorized::from_tree(&tree, s_pad, self.cfg.check_invariants)
             .map_err(|e| anyhow::anyhow!("tree invariant violation: {e}"))?;
-        self.timers.add("tensorize", tt.elapsed().as_secs_f64());
+        self.timers.add("tensorize", tt.elapsed_secs());
 
         // 4. Tree mask (incremental: prefix delta + spec block rewrite),
         // built into the persistent (TeacherTree, s_pad) slot that
         // `verify_payload` re-borrows.
-        let tm = Instant::now();
+        let tm = Stopwatch::start();
         let t_len = self.t_cache.len();
         let _ = self.mb.tree_incremental(MaskStream::TeacherTree, &tens, t_len, None);
-        self.timers.add("mask_build", tm.elapsed().as_secs_f64());
+        self.timers.add("mask_build", tm.elapsed_secs());
 
         // 5. Stage positions + open the teacher branch; verification may
         // now run (fused or single) against `verify_payload`.
@@ -1292,7 +1294,7 @@ impl Engine {
     /// Single-request verification: one teacher call on the pending
     /// round's payload, outputs into the engine's own scratch.
     fn verify_own(&mut self, backend: &mut dyn ModelBackend) -> Result<()> {
-        let tv = Instant::now();
+        let tv = Stopwatch::start();
         let session = Self::ticket(self.t_cache.as_ref(), &self.t_session);
         {
             let fl = self.inflight.as_ref().context("no generation in flight")?;
@@ -1316,7 +1318,7 @@ impl Engine {
         if session.is_some() {
             self.t_cache.mark_synced();
         }
-        self.timers.add("verify", tv.elapsed().as_secs_f64());
+        self.timers.add("verify", tv.elapsed_secs());
         if let Some(fl) = self.inflight.as_mut() {
             if let Some(r) = fl.round.as_mut() {
                 r.verified = true;
@@ -1373,16 +1375,20 @@ impl Engine {
                 "finish_verify before verification outputs were written"
             );
         }
-        let round = fl.round.take().expect("round presence just checked");
+        // The round stays in place on the error paths above; from here
+        // on it is consumed.
+        let Some(round) = fl.round.take() else {
+            bail!("round state lost between check and take");
+        };
         let RoundState { r0, tree, tens, s_pad, t_len, round_budget, .. } = round;
         fl.stats.teacher_calls += 1;
 
-        let tv = Instant::now();
+        let tv = Stopwatch::start();
         self.t_cache.append_branch(&self.t_scratch.k_new, &self.t_scratch.v_new, s_pad, tens.live)?;
-        self.timers.add("verify", tv.elapsed().as_secs_f64());
+        self.timers.add("verify", tv.elapsed_secs());
 
         // 6. Acceptance (over borrowed scratch rows — no cloning).
-        let ta = Instant::now();
+        let ta = Stopwatch::start();
         let acc = {
             let scratch = &self.t_scratch;
             let logits_of = |slot: usize| scratch.logits_row(slot);
@@ -1397,10 +1403,10 @@ impl Engine {
         if let Some(adaptive) = &mut self.adaptive {
             adaptive.observe(acc.accept_len(), round_budget);
         }
-        self.timers.add("accept", ta.elapsed().as_secs_f64());
+        self.timers.add("accept", ta.elapsed_secs());
 
         // 7. Commit.
-        let tc = Instant::now();
+        let tc = Stopwatch::start();
         let a = acc.accept_len();
         let contiguous = acc.path.iter().enumerate().all(|(i, s)| *s == i + 1);
         match self.cfg.commit_mode {
@@ -1458,7 +1464,7 @@ impl Engine {
         copy_into(&mut self.feat_last, self.t_scratch.feat_row(acc.bonus_slot));
         copy_into(&mut self.pending_logits, self.t_scratch.logits_row(acc.bonus_slot));
         self.d_cache.rollback();
-        self.timers.add("commit", tc.elapsed().as_secs_f64());
+        self.timers.add("commit", tc.elapsed_secs());
         Ok(())
     }
 
@@ -1581,10 +1587,10 @@ impl Engine {
     }
 
     fn finish(&mut self, tokens: Vec<i32>, prompt_len: usize, stats: RunStats,
-              wall0: Instant) -> GenOut {
+              wall0: Stopwatch) -> GenOut {
         GenOut {
             tokens,
-            wall_secs: wall0.elapsed().as_secs_f64(),
+            wall_secs: wall0.elapsed_secs(),
             teacher_calls: stats.teacher_calls,
             draft_calls: stats.draft_calls,
             rounds: stats.rounds,

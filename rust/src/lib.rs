@@ -52,8 +52,15 @@
 //!   [`cache::PagePool`]) decode bit-identically; `--cache-layout`
 //!   selects.
 
+// Checked invariant: the entire library is safe Rust. `forbid` (not
+// `deny`) so no module can locally reopen it; the one unavoidable
+// `unsafe impl GlobalAlloc` (the allocation-counting shim) lives in
+// `tests/support/alloc_count.rs`, outside the library crate. The
+// `unsafe-code` static-analysis rule keeps this attribute present.
+#![forbid(unsafe_code)]
 #![warn(missing_docs)]
 
+pub mod analysis;
 pub mod backend;
 pub mod cache;
 pub mod cli;

@@ -62,8 +62,10 @@
 //!   the per-request masks.
 
 use super::tensorize::Tensorized;
+use crate::util::idx::udx;
 use crate::config::contract::NEG_INF;
 use std::collections::HashMap;
+use std::fmt;
 
 /// Independent incremental-state streams. Masks for different purposes
 /// (teacher vs draft, chain vs tree vs custom frontier rows) evolve
@@ -175,11 +177,11 @@ impl IncrementalMask {
         self.spec_rows = 0;
         self.spec_sig = None;
         for &(k, j) in &self.spec_opens {
-            self.buf[k as usize * self.w + self.cap + j as usize] = NEG_INF;
+            self.buf[udx(k) * self.w + self.cap + udx(j)] = NEG_INF;
         }
         self.spec_opens.clear();
         for &(k, col) in &self.extra_opens {
-            self.buf[k as usize * self.w + col as usize] = NEG_INF;
+            self.buf[udx(k) * self.w + udx(col)] = NEG_INF;
         }
         self.extra_opens.clear();
     }
@@ -242,7 +244,7 @@ impl IncrementalMask {
                 if cur == 0 {
                     break;
                 }
-                cur = tens.parent[cur] as usize;
+                cur = udx(tens.parent[cur]);
             }
         }
         self.spec_rows = tens.live;
@@ -307,32 +309,43 @@ impl BatchMask {
     /// padding row `[s_reqs[b], s_max)` and every padding column
     /// `[cap + s_reqs[b], cap + s_max)` of request `b`'s block must be
     /// fully closed. Continuous batching re-pads the block every tick as
-    /// group membership changes; the fused verifier asserts this in debug
-    /// builds so a stale open from a previous (larger) round can never
-    /// survive a [`BatchMask::begin`].
-    pub fn padding_closed(&self, s_reqs: &[usize]) -> bool {
+    /// group membership changes; the fused verifier runs this check in
+    /// release builds too (it is cheap: cost scales with the *padded*
+    /// region, which is empty for a homogeneous group) so a stale open
+    /// from a previous, larger round can never survive a
+    /// [`BatchMask::begin`] — the first leak is reported as a typed
+    /// [`PaddingLeak`] instead of corrupting a fused launch.
+    pub fn check_padding_closed(&self, s_reqs: &[usize]) -> Result<(), PaddingLeak> {
         if s_reqs.len() != self.batch {
-            return false;
+            return Err(PaddingLeak::BatchMismatch { expected: self.batch, got: s_reqs.len() });
         }
         let w = self.cap + self.s_max;
         for (b, &sr) in s_reqs.iter().enumerate() {
             if sr > self.s_max {
-                return false;
+                return Err(PaddingLeak::WidthOverflow { b, s_req: sr, s_max: self.s_max });
             }
             for k in 0..self.s_max {
                 let row = &self.buf[(b * self.s_max + k) * w..(b * self.s_max + k + 1) * w];
-                if k >= sr {
-                    // padding row: fully closed in both directions
-                    if row.iter().any(|x| *x != NEG_INF) {
-                        return false;
-                    }
-                } else if row[self.cap + sr..].iter().any(|x| *x != NEG_INF) {
-                    // live row: padded spec columns stay closed
-                    return false;
+                // padding rows must be fully closed in both directions;
+                // live rows only in their padded spec columns
+                let (check, base) =
+                    if k >= sr { (row, 0) } else { (&row[self.cap + sr..], self.cap + sr) };
+                if let Some(j) = check.iter().position(|x| *x != NEG_INF) {
+                    return Err(PaddingLeak::OpenCell {
+                        b,
+                        row: k,
+                        col: base + j,
+                        live_row: k < sr,
+                    });
                 }
             }
         }
-        true
+        Ok(())
+    }
+
+    /// Boolean form of [`BatchMask::check_padding_closed`].
+    pub fn padding_closed(&self, s_reqs: &[usize]) -> bool {
+        self.check_padding_closed(s_reqs).is_ok()
     }
 
     /// Fused row width `cap + s_max` of the current round.
@@ -340,6 +353,64 @@ impl BatchMask {
         self.cap + self.s_max
     }
 }
+
+/// A violated "padding is never attended" invariant
+/// ([`BatchMask::check_padding_closed`]), located precisely enough to
+/// debug the staging bug that caused it. Promoted from a debug-only
+/// assert: an open padding cell in a fused launch corrupts *another
+/// request's* logits, which is exactly the class of failure that must
+/// not ship silently in release builds.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PaddingLeak {
+    /// The live-width list does not match the block's batch size.
+    BatchMismatch {
+        /// Batch size the block was begun with.
+        expected: usize,
+        /// Length of the `s_reqs` list handed to the check.
+        got: usize,
+    },
+    /// A request claims more live slots than the block's padded width.
+    WidthOverflow {
+        /// Request index within the fused block.
+        b: usize,
+        /// The request's claimed live padded variant.
+        s_req: usize,
+        /// The block's padded width.
+        s_max: usize,
+    },
+    /// A cell that must stay closed is open.
+    OpenCell {
+        /// Request index within the fused block.
+        b: usize,
+        /// Row within the request's `[s_max, cap + s_max]` block.
+        row: usize,
+        /// Column within that row (flat, `0..cap + s_max`).
+        col: usize,
+        /// Whether the row itself is live (leak in its padded spec
+        /// columns) or a padding row (must be fully closed).
+        live_row: bool,
+    },
+}
+
+impl fmt::Display for PaddingLeak {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            PaddingLeak::BatchMismatch { expected, got } => {
+                write!(f, "s_reqs lists {got} requests but the block was begun with {expected}")
+            }
+            PaddingLeak::WidthOverflow { b, s_req, s_max } => {
+                write!(f, "request {b} claims {s_req} live slots in a {s_max}-wide block")
+            }
+            PaddingLeak::OpenCell { b, row, col, live_row } => write!(
+                f,
+                "request {b} {} row {row} has an open cell at column {col}",
+                if *live_row { "live" } else { "padding" }
+            ),
+        }
+    }
+}
+
+impl std::error::Error for PaddingLeak {}
 
 /// Reusable mask buffers + build strategies.
 pub struct MaskBuilder {
@@ -408,7 +479,7 @@ impl MaskBuilder {
                 if cur == 0 {
                     break;
                 }
-                cur = tens.parent[cur] as usize;
+                cur = udx(tens.parent[cur]);
             }
         }
     }
@@ -429,7 +500,7 @@ impl MaskBuilder {
         let mut vis = vec![0u64; tens.live * words];
         for k in 0..tens.live {
             if k > 0 {
-                let p = tens.parent[k] as usize;
+                let p = udx(tens.parent[k]);
                 let (lo, rest) = vis.split_at_mut(k * words);
                 rest[..words].copy_from_slice(&lo[p * words..p * words + words]);
             }
@@ -445,7 +516,7 @@ impl MaskBuilder {
             for wd in 0..words {
                 let mut bits = vis[k * words + wd];
                 while bits != 0 {
-                    let b = bits.trailing_zeros() as usize;
+                    let b = udx(bits.trailing_zeros());
                     let j = wd * 64 + b;
                     if tens.valid[j] {
                         row[j] = 0.0;

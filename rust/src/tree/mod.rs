@@ -15,5 +15,5 @@ pub mod mask;
 pub mod tensorize;
 
 pub use build::{SpecNode, SpecTree};
-pub use mask::{BatchMask, IncrementalMask, MaskBuilder, MaskStream};
+pub use mask::{BatchMask, IncrementalMask, MaskBuilder, MaskStream, PaddingLeak};
 pub use tensorize::{InvariantViolation, Tensorized};

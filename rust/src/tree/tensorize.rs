@@ -17,6 +17,7 @@
 
 use super::build::SpecTree;
 use crate::config::contract::PAD_ID;
+use crate::util::idx::udx;
 use std::fmt;
 
 /// Structured §3.2 invariant violations (unit-testable, dump-friendly).
@@ -115,7 +116,7 @@ impl Tensorized {
         }
         for l in 0..dmax {
             for k in 0..s_pad {
-                let up = ancestors[l * s_pad + k] as usize;
+                let up = udx(ancestors[l * s_pad + k]);
                 ancestors[(l + 1) * s_pad + k] = parent[up.min(s_pad - 1)];
             }
         }
@@ -133,7 +134,7 @@ impl Tensorized {
             return Err(InvariantViolation::BadRoot);
         }
         for k in 0..self.s {
-            let p = self.parent[k] as usize;
+            let p = udx(self.parent[k]);
             // 1. Range: every parent pointer in-bounds (live region).
             if p >= self.live.max(1) {
                 return Err(InvariantViolation::Range { slot: k, parent: p, live: self.live });
@@ -155,16 +156,16 @@ impl Tensorized {
             if self.depth[p] >= self.depth[k] {
                 return Err(InvariantViolation::DepthOrder {
                     slot: k,
-                    depth: self.depth[k] as usize,
-                    parent_depth: self.depth[p] as usize,
+                    depth: udx(self.depth[k]),
+                    parent_depth: udx(self.depth[p]),
                 });
             }
             let mut cur = k;
             let mut steps = 0usize;
             while cur != 0 {
-                cur = self.parent[cur] as usize;
+                cur = udx(self.parent[cur]);
                 steps += 1;
-                if steps > self.depth[k] as usize {
+                if steps > udx(self.depth[k]) {
                     return Err(InvariantViolation::Unrooted { slot: k });
                 }
             }
@@ -180,7 +181,7 @@ impl Tensorized {
     /// (including `j == k`)? Mirrors the paper's Anc(j, k) definition.
     pub fn is_ancestor(&self, j: usize, k: usize) -> bool {
         for l in 0..=self.dmax {
-            if self.ancestors[l * self.s + k] as usize == j {
+            if udx(self.ancestors[l * self.s + k]) == j {
                 return true;
             }
         }
@@ -202,7 +203,7 @@ impl Tensorized {
         out.clear();
         out.extend((0..self.s).map(|k| {
             if self.valid[k] {
-                (t + self.depth[k] as usize) as i32
+                (t + udx(self.depth[k])) as i32
             } else {
                 t as i32
             }

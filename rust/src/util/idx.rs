@@ -1,0 +1,112 @@
+//! Checked index conversions — the typed face of the paper's
+//! "negative indices removed by construction" claim (§3.2).
+//!
+//! The tree/cache index paths store slot and block coordinates as `u32`
+//! precisely so a sentinel `-1` cannot exist. A raw `as usize` cast
+//! erases that guarantee from the reader's view (and would silently
+//! wrap if a signed value ever leaked in), so the `signed-cast`
+//! static-analysis rule bans bare `as usize` in those modules
+//! (`docs/STATIC_ANALYSIS.md`). These helpers are the blessed
+//! replacements:
+//!
+//! * [`udx`] — infallible widening from an **unsigned** source. The
+//!   signature is the proof: a signed argument does not compile, so
+//!   every `udx` call site is a machine-checked "this index cannot be
+//!   negative".
+//! * [`checked_row`] / [`checked_col`] — fallible conversions for
+//!   signed values arriving from outside the invariant boundary
+//!   (wire payloads, artifact manifests, device outputs), returning a
+//!   typed [`IndexError`] instead of wrapping.
+
+use std::fmt;
+
+/// A signed value failed conversion into an index.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum IndexError {
+    /// The value was negative — the §3.2 invariants exclude this by
+    /// construction, so seeing one means corrupt external input.
+    Negative {
+        /// What the index addresses ("row", "col", ...).
+        what: &'static str,
+        /// The offending value.
+        got: i64,
+    },
+    /// The value exceeds the platform's `usize` range (32-bit targets).
+    Overflow {
+        /// What the index addresses.
+        what: &'static str,
+        /// The offending value.
+        got: i64,
+    },
+}
+
+impl fmt::Display for IndexError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Self::Negative { what, got } => {
+                write!(f, "negative {what} index {got} (§3.2 invariant violation)")
+            }
+            Self::Overflow { what, got } => {
+                write!(f, "{what} index {got} exceeds the platform index range")
+            }
+        }
+    }
+}
+
+impl std::error::Error for IndexError {}
+
+/// Infallible widening of an unsigned index to `usize`. Taking `u32`
+/// (never a signed type) is the point: the compiler rejects any call
+/// site that could smuggle a negative value into an index path.
+#[inline(always)]
+pub fn udx(u: u32) -> usize {
+    u as usize // lint: allow(signed-cast) — u32 source, widening is lossless
+}
+
+/// Fallible conversion of a signed row index arriving from outside the
+/// invariant boundary (wire payloads, manifests, device outputs).
+#[inline]
+pub fn checked_row(i: i64) -> Result<usize, IndexError> {
+    checked("row", i)
+}
+
+/// Fallible conversion of a signed column index (see [`checked_row`]).
+#[inline]
+pub fn checked_col(i: i64) -> Result<usize, IndexError> {
+    checked("col", i)
+}
+
+/// Shared implementation: negative → [`IndexError::Negative`], beyond
+/// `usize` → [`IndexError::Overflow`].
+#[inline]
+pub fn checked(what: &'static str, i: i64) -> Result<usize, IndexError> {
+    if i < 0 {
+        return Err(IndexError::Negative { what, got: i });
+    }
+    usize::try_from(i).map_err(|_| IndexError::Overflow { what, got: i })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn udx_widens() {
+        assert_eq!(udx(0), 0);
+        assert_eq!(udx(u32::MAX), u32::MAX as usize);
+    }
+
+    #[test]
+    fn checked_accepts_non_negative() {
+        assert_eq!(checked_row(0), Ok(0));
+        assert_eq!(checked_col(17), Ok(17));
+    }
+
+    #[test]
+    fn checked_rejects_negative_with_typed_error() {
+        let e = checked_row(-1).unwrap_err();
+        assert_eq!(e, IndexError::Negative { what: "row", got: -1 });
+        assert!(e.to_string().contains("negative row index -1"), "{e}");
+        assert!(matches!(checked_col(-7), Err(IndexError::Negative { what: "col", got: -7 })));
+    }
+}

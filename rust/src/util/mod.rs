@@ -2,9 +2,9 @@
 //! stage timers, and a seed-reporting randomized-testing helper
 //! (the image has no `rand`/`proptest`/`criterion`).
 
-pub mod alloc_count;
 pub mod arena;
 pub mod bench;
+pub mod idx;
 pub mod prop;
 pub mod rng;
 pub mod stats;

@@ -1,9 +1,43 @@
 //! Per-stage wall-clock timers — the instrumentation behind the paper's E3
 //! overhead breakdown (Fig 5). Stage names are stable identifiers that flow
 //! into the structured traces.
+//!
+//! This module is one of the three audited homes of wall-clock reads
+//! (`util/timer.rs`, `util/bench.rs`, `runtime/pjrt.rs`): the
+//! `wall-clock` static-analysis rule bans `Instant::now` everywhere
+//! else so scheduler/replay/worker logic stays on the virtual clock
+//! (`docs/STATIC_ANALYSIS.md`). Code that needs to *measure* elapsed
+//! wall time (never to make scheduling decisions) uses [`Stopwatch`].
 
 use std::collections::BTreeMap;
 use std::time::Instant;
+
+/// An elapsed-time measurement anchored at [`Stopwatch::start`] — the
+/// only way non-allowlisted modules read the wall clock. Deliberately
+/// minimal: it can report durations (instrumentation) but cannot be
+/// compared against a future deadline, so it cannot leak wall-clock
+/// *decisions* into scheduler/replay code (which must stay on the
+/// virtual clock — see `coordinator::ContinuousScheduler::advance_clock`).
+#[derive(Clone, Copy, Debug)]
+pub struct Stopwatch(Instant);
+
+impl Stopwatch {
+    /// Anchor a measurement at the current instant.
+    pub fn start() -> Self {
+        Self(Instant::now())
+    }
+
+    /// Seconds elapsed since [`Stopwatch::start`].
+    pub fn elapsed_secs(&self) -> f64 {
+        self.0.elapsed().as_secs_f64()
+    }
+
+    /// Seconds between an `earlier` stopwatch's anchor and this one's
+    /// (0 if `earlier` was actually started later).
+    pub fn secs_since(&self, earlier: &Stopwatch) -> f64 {
+        self.0.saturating_duration_since(earlier.0).as_secs_f64()
+    }
+}
 
 /// The decode-loop stages the paper's E3 experiment attributes time to.
 /// `verify` is the host-blocked share of a fused launch (begin + await);
@@ -109,6 +143,15 @@ mod tests {
         assert_eq!(t.calls["commit"], 2);
         assert!((t.seconds["commit"] - 1.0).abs() < 1e-12);
         assert!((t.mean("commit") - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn stopwatch_measures_forward_time() {
+        let a = Stopwatch::start();
+        let b = Stopwatch::start();
+        assert!(a.elapsed_secs() >= 0.0);
+        assert!(b.secs_since(&a) >= 0.0);
+        assert_eq!(a.secs_since(&b), 0.0, "earlier-than-anchor saturates to 0");
     }
 
     #[test]

@@ -17,8 +17,15 @@ use eagle_pangu::backend::ModelBackend;
 use eagle_pangu::config::RunConfig;
 use eagle_pangu::coordinator::{decode_speculative_batch, ContinuousScheduler};
 use eagle_pangu::engine::Engine;
-use eagle_pangu::util::alloc_count::CountingAlloc;
 use eagle_pangu::util::SplitMix64;
+
+// The counting allocator lives outside the library crate: its
+// `unsafe impl GlobalAlloc` is incompatible with the crate-root
+// `#![forbid(unsafe_code)]` invariant, and only binary/test crates can
+// install a global allocator anyway. One definition, shared by path.
+#[path = "support/alloc_count.rs"]
+mod alloc_count;
+use alloc_count::CountingAlloc;
 
 /// Vocab row = 512 * 4 B = 2048 B; cap-sized = 1024 elements >= 4096 B.
 const BIG: usize = 2048;

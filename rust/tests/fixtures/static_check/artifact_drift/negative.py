@@ -1,0 +1,12 @@
+# Fixture: valid schema names plus non-candidate strings.
+"""Docstring mentioning teacher_fussed_s8 must not trip the rule."""
+def export(s, b, n):
+    modules[f"teacher_fused_s{s}"] = 1
+    modules[f"teacher_fused_b{b}_s{s}"] = 1
+    modules[f"draft_s{s}"] = 1
+    modules[f"draft_probe_s{s}"] = 1
+    modules[f"kv_append_draft_n{n}"] = 1
+    role = "teacher"
+    key = "teacher_s_variants"
+    weights = "weights_teacher.npz"
+    return role, key, weights

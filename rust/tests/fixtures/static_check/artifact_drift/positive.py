@@ -1,0 +1,4 @@
+# Fixture: a module-name f-string that does not round-trip ModuleKey.
+def export(s):
+    modules["teacher_fussed_s{s}".format(s=s)] = 1
+    modules[f"kv_append_coach_n{s}"] = 1

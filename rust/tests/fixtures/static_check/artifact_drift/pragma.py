@@ -1,0 +1,4 @@
+# Fixture: a deliberately off-schema name with an audited reason.
+def export(s):
+    # lint: allow(artifact-drift) — experimental module, loader support lands next PR
+    modules[f"teacher_fussed_s{s}"] = 1

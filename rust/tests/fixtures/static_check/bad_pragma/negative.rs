@@ -1,0 +1,3 @@
+//! Fixture: a well-formed waiver (waiving nothing is not an error).
+pub fn f() {}
+// lint: allow(hot-unwrap) — documented panic policy

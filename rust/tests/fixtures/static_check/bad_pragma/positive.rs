@@ -1,0 +1,4 @@
+//! Fixture: malformed waivers — reasonless, and an unknown rule id.
+pub fn f() {}
+// lint: allow(wall-clock)
+// lint: allow(not-a-rule) — a reason cannot save an unknown id

@@ -1,0 +1,8 @@
+//! Fixture: a flag registry.
+pub const TOGGLE_FLAGS: &[&str] = &["pipelining"];
+const VALUED: &[&str] = &[
+    "seed", "workers",
+];
+pub fn not_a_registry() -> &'static str {
+    "not-a-flag"
+}

@@ -1,0 +1,6 @@
+//! Fixture: an undocumented flag waived with an audited reason.
+pub const TOGGLE_FLAGS: &[&str] = &["pipelining"];
+const VALUED: &[&str] = &[
+    "seed",
+    "workers", // lint: allow(flag-doc) — internal debugging flag, deliberately undocumented
+];

@@ -1,0 +1,18 @@
+//! Fixture: typed-error shapes; unwrap-family combinators are fine.
+pub fn take(opt: Option<u32>) -> Result<u32, String> {
+    let a = opt.unwrap_or(0);
+    let Some(b) = opt else {
+        return Err("empty".to_string());
+    };
+    let s = ".unwrap() in a string";
+    let _ = s;
+    Ok(a + b)
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn unwrap_ok_in_tests() {
+        assert_eq!(Some(1).unwrap(), 1);
+    }
+}

@@ -1,0 +1,6 @@
+//! Fixture: panicking extraction on the serve path.
+pub fn take(opt: Option<u32>, res: Result<u32, String>) -> u32 {
+    let a = opt.unwrap();
+    let b = res.expect("boom");
+    a + b
+}

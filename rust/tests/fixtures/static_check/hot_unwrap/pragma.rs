@@ -1,0 +1,7 @@
+//! Fixture: a waived lock-poisoning expect with an audited reason.
+use std::sync::{Mutex, MutexGuard};
+
+pub fn lock(m: &Mutex<u32>) -> MutexGuard<'_, u32> {
+    // lint: allow(hot-unwrap) — poisoning means a sibling panicked mid-mutation; propagate it
+    m.lock().expect("lock poisoned")
+}

@@ -1,0 +1,18 @@
+//! Fixture: named casts only; `as usize` survives in strings and tests.
+use crate::util::idx::udx;
+
+pub fn pick(v: &[f32], idx: u32) -> f32 {
+    let label = "idx as usize";
+    let _ = label;
+    v[udx(idx)]
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn raw_cast_ok_in_tests() {
+        let v = [1.0f32];
+        let i: u32 = 0;
+        assert_eq!(v[i as usize], 1.0);
+    }
+}

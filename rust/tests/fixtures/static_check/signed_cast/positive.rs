@@ -1,0 +1,4 @@
+//! Fixture: a raw `as usize` on an index path.
+pub fn pick(v: &[f32], idx: i64) -> f32 {
+    v[idx as usize]
+}

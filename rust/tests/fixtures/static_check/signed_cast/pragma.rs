@@ -1,0 +1,4 @@
+//! Fixture: a waived cast with an audited reason.
+pub fn pick(v: &[f32], idx: u32) -> f32 {
+    v[idx as usize] // lint: allow(signed-cast) — u32 source, widening is lossless
+}

@@ -1,0 +1,6 @@
+//! Fixture: `unsafe` as an identifier fragment or string is not the token.
+#![forbid(unsafe_code)]
+
+pub fn unsafe_code_rule_name() -> &'static str {
+    "unsafe in a string"
+}

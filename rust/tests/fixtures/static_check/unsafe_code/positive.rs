@@ -1,0 +1,3 @@
+//! Fixture: an unsafe impl in library source.
+pub struct X(*mut u8);
+unsafe impl Send for X {}

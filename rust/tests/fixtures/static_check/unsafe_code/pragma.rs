@@ -1,0 +1,4 @@
+//! Fixture: a waived unsafe token with an audited reason.
+// lint: allow(unsafe-code) — alloc-shim fixture; real shims live in tests/support/
+unsafe impl Send for Y {}
+pub struct Y(*mut u8);

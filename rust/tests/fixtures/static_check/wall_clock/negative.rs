@@ -1,0 +1,20 @@
+//! Fixture: the clean shape — Stopwatch for measurement, wall-clock
+//! reads only mentioned in prose, strings, and test code.
+use crate::util::timer::Stopwatch;
+
+/// Mentions Instant::now in a doc comment only.
+pub fn tick() -> f64 {
+    let t0 = Stopwatch::start();
+    let s = "Instant::now is just a string here";
+    let _ = s;
+    t0.elapsed_secs()
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn bench_like() {
+        let t0 = std::time::Instant::now();
+        let _ = t0.elapsed();
+    }
+}

@@ -1,0 +1,7 @@
+//! Fixture: a raw wall-clock read in scheduler-adjacent code.
+use std::time::Instant;
+
+pub fn tick() -> f64 {
+    let t0 = Instant::now();
+    t0.elapsed().as_secs_f64()
+}

@@ -1,0 +1,9 @@
+//! Fixture: a waived wall-clock read with an audited reason.
+use std::time::Instant;
+
+pub fn deadline_spin(deadline: Instant) {
+    // lint: allow(wall-clock) — modeled device clock needs future-deadline comparison
+    while Instant::now() < deadline {
+        std::hint::spin_loop();
+    }
+}

@@ -1,0 +1,14 @@
+//! Fixture: a two-variant envelope with distinct tags.
+pub enum Envelope {
+    Submit(u32),
+    Abort(u32),
+}
+
+impl Envelope {
+    pub fn kind_str(&self) -> &'static str {
+        match self {
+            Envelope::Submit(_) => "submit",
+            Envelope::Abort(_) => "abort",
+        }
+    }
+}

@@ -1,0 +1,15 @@
+//! Fixture: an unpinned tag waived with an audited reason.
+pub enum Envelope {
+    Submit(u32),
+    Abort(u32),
+}
+
+impl Envelope {
+    pub fn kind_str(&self) -> &'static str {
+        match self {
+            Envelope::Submit(_) => "submit",
+            // lint: allow(wire-tag) — tag lands in tests/rpc.rs with the codec PR
+            Envelope::Abort(_) => "abort",
+        }
+    }
+}

@@ -1,0 +1,2 @@
+//! Fixture: the tag-pinning test file with "abort" missing.
+const TAGS: &[&str] = &["submit"];

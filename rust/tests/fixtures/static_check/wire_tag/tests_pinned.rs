@@ -1,0 +1,2 @@
+//! Fixture: the tag-pinning test file — both tags appear as literals.
+const TAGS: &[&str] = &["submit", "abort"];

@@ -1,0 +1,291 @@
+//! Fixture suite for the `static_check` analysis driver.
+//!
+//! Every rule gets the same three-way exercise against files under
+//! `tests/fixtures/static_check/<rule>/`:
+//!
+//!   * **positive** — the violation fires, at the expected line;
+//!   * **negative** — the clean shape (plus the classic false-positive
+//!     bait: strings, comments, `#[cfg(test)]` code) stays silent;
+//!   * **pragma** — a reasoned `lint: allow(...)` waiver flips the
+//!     finding to `allowed` without deleting it from the report.
+//!
+//! Fixtures are real files (not inline strings) so they double as
+//! documentation of what each rule means, and so the lexer runs over
+//! content laid out exactly the way rustfmt would lay it out.
+//!
+//! The suite ends with the JSON-report schema test and a whole-repo
+//! smoke run of [`analysis::run`] (shape and self-consistency only —
+//! the zero-active gate lives in CI, where `static_check` itself runs).
+
+use eagle_pangu::analysis::lexer::{scan_python, scan_rust, ScannedFile};
+use eagle_pangu::analysis::{rules, Finding, Report, Severity, RULES};
+use eagle_pangu::{analysis, json};
+use std::path::Path;
+
+/// Load a fixture by repo-relative name under the fixture root.
+fn fixture(name: &str) -> String {
+    let path =
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures/static_check").join(name);
+    std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("fixture {} unreadable: {e}", path.display()))
+}
+
+/// Mirror of the driver's pragma-application step ([`analysis::run`]):
+/// a reasoned pragma on the finding's line (or the line above) waives
+/// it; a reasonless pragma waives nothing.
+fn apply_pragmas(scan: &ScannedFile, mut findings: Vec<Finding>) -> Vec<Finding> {
+    for f in &mut findings {
+        if let Some(p) = scan.pragma_for(f.rule, f.line) {
+            if p.reason.is_some() {
+                f.allowed = true;
+                f.reason = p.reason.clone();
+            }
+        }
+    }
+    findings
+}
+
+/// Run one scanned-input rule over a fixture and apply pragmas.
+fn drive(
+    rule: fn(&ScannedFile) -> Vec<Finding>,
+    path: &str,
+    fixture_name: &str,
+) -> Vec<Finding> {
+    let scan = scan_rust(path, &fixture(fixture_name));
+    let found = rule(&scan);
+    apply_pragmas(&scan, found)
+}
+
+// ---------------------------------------------------------------- rules
+
+#[test]
+fn wall_clock_positive_negative_pragma() {
+    let pos = drive(rules::wall_clock, "rust/src/coordinator/x.rs", "wall_clock/positive.rs");
+    assert_eq!(pos.len(), 1, "{pos:?}");
+    assert_eq!((pos[0].line, pos[0].rule), (5, "wall-clock"));
+    assert!(!pos[0].allowed);
+
+    let neg = drive(rules::wall_clock, "rust/src/coordinator/x.rs", "wall_clock/negative.rs");
+    assert!(neg.is_empty(), "strings/comments/tests must not trip: {neg:?}");
+
+    let prag = drive(rules::wall_clock, "rust/src/backend/x.rs", "wall_clock/pragma.rs");
+    assert_eq!(prag.len(), 1, "waived findings stay in the report: {prag:?}");
+    assert!(prag[0].allowed);
+    assert!(prag[0].reason.as_deref().unwrap().contains("device clock"));
+}
+
+#[test]
+fn signed_cast_positive_negative_pragma() {
+    let pos = drive(rules::signed_cast, "rust/src/tree/x.rs", "signed_cast/positive.rs");
+    assert_eq!(pos.len(), 1, "{pos:?}");
+    assert_eq!(pos[0].line, 3);
+
+    let neg = drive(rules::signed_cast, "rust/src/tree/x.rs", "signed_cast/negative.rs");
+    assert!(neg.is_empty(), "udx/string/test casts must not trip: {neg:?}");
+
+    let prag = drive(rules::signed_cast, "rust/src/cache/x.rs", "signed_cast/pragma.rs");
+    assert_eq!(prag.len(), 1);
+    assert!(prag[0].allowed, "same-line pragma must waive: {prag:?}");
+}
+
+#[test]
+fn hot_unwrap_positive_negative_pragma() {
+    let pos = drive(rules::hot_unwrap, "rust/src/engine/x.rs", "hot_unwrap/positive.rs");
+    assert_eq!(pos.len(), 2, "{pos:?}");
+    assert_eq!((pos[0].line, pos[1].line), (3, 4));
+
+    let neg = drive(rules::hot_unwrap, "rust/src/engine/x.rs", "hot_unwrap/negative.rs");
+    assert!(neg.is_empty(), "unwrap_or/let-else/strings/tests must not trip: {neg:?}");
+
+    let prag = drive(rules::hot_unwrap, "rust/src/cache/x.rs", "hot_unwrap/pragma.rs");
+    assert_eq!(prag.len(), 1);
+    assert!(prag[0].allowed);
+    assert!(prag[0].reason.as_deref().unwrap().contains("poisoning"));
+}
+
+#[test]
+fn unsafe_code_positive_negative_pragma() {
+    let pos = drive(rules::unsafe_code, "rust/src/x.rs", "unsafe_code/positive.rs");
+    assert_eq!(pos.len(), 1, "{pos:?}");
+    assert_eq!(pos[0].line, 3);
+
+    let neg_scan = scan_rust("rust/src/lib.rs", &fixture("unsafe_code/negative.rs"));
+    assert!(rules::unsafe_code(&neg_scan).is_empty(), "ident fragments must not trip");
+    assert!(
+        rules::forbid_attr_present(&neg_scan).is_empty(),
+        "the forbid attr is present in the negative fixture"
+    );
+    // a lib.rs without the attr is itself a finding
+    let bare = scan_rust("rust/src/lib.rs", "pub mod x;\n");
+    assert_eq!(rules::forbid_attr_present(&bare).len(), 1);
+
+    let prag = drive(rules::unsafe_code, "rust/src/x.rs", "unsafe_code/pragma.rs");
+    assert_eq!(prag.len(), 1);
+    assert!(prag[0].allowed, "preceding-line pragma must waive: {prag:?}");
+}
+
+#[test]
+fn artifact_drift_positive_negative_pragma() {
+    let pos = scan_python("python/compile/aot.py", &fixture("artifact_drift/positive.py"));
+    let found = rules::artifact_drift(&pos);
+    let lines: Vec<usize> = found.iter().map(|f| f.line).collect();
+    assert_eq!(lines, vec![3, 4], "both drifted names fire: {found:?}");
+
+    let neg = scan_python("python/compile/aot.py", &fixture("artifact_drift/negative.py"));
+    let found = rules::artifact_drift(&neg);
+    assert!(found.is_empty(), "schema names, role strings and docstrings are clean: {found:?}");
+
+    let prag = scan_python("python/compile/aot.py", &fixture("artifact_drift/pragma.py"));
+    let found = apply_pragmas(&prag, rules::artifact_drift(&prag));
+    assert_eq!(found.len(), 1);
+    assert!(found[0].allowed, "# pragma on the preceding line must waive: {found:?}");
+}
+
+#[test]
+fn wire_tag_positive_negative_pragma() {
+    let envelope = fixture("wire_tag/envelope.rs");
+    let pinned = fixture("wire_tag/tests_pinned.rs");
+    let missing = fixture("wire_tag/tests_missing.rs");
+
+    let neg = rules::wire_tag("rust/src/rpc/envelope.rs", &envelope, &pinned);
+    assert!(neg.is_empty(), "fully pinned tags are clean: {neg:?}");
+
+    let pos = rules::wire_tag("rust/src/rpc/envelope.rs", &envelope, &missing);
+    assert_eq!(pos.len(), 1, "{pos:?}");
+    assert!(pos[0].message.contains("\"abort\""));
+    assert!(pos[0].message.contains("not pinned"));
+
+    let env_pragma = fixture("wire_tag/envelope_pragma.rs");
+    let scan = scan_rust("rust/src/rpc/envelope.rs", &env_pragma);
+    let found = apply_pragmas(
+        &scan,
+        rules::wire_tag("rust/src/rpc/envelope.rs", &env_pragma, &missing),
+    );
+    assert_eq!(found.len(), 1);
+    assert!(found[0].allowed, "pragma above the arm must waive: {found:?}");
+
+    // a file with no Envelope enum is one loud finding, not silence
+    let none = rules::wire_tag("rust/src/rpc/envelope.rs", "pub struct NotAnEnum;", &pinned);
+    assert_eq!(none.len(), 1);
+}
+
+#[test]
+fn flag_doc_positive_negative_pragma() {
+    let args = fixture("flag_doc/args.rs");
+    let full = fixture("flag_doc/readme_full.md");
+    let missing = fixture("flag_doc/readme_missing.md");
+
+    let neg = rules::flag_doc("rust/src/cli/args.rs", &args, &full);
+    assert!(neg.is_empty(), "documented flags are clean: {neg:?}");
+
+    let pos = rules::flag_doc("rust/src/cli/args.rs", &args, &missing);
+    assert_eq!(pos.len(), 1, "{pos:?}");
+    assert!(pos[0].message.contains("--workers"));
+    assert_eq!(pos[0].severity, Severity::Warn, "flag-doc is the one Warn rule");
+
+    let args_pragma = fixture("flag_doc/args_pragma.rs");
+    let scan = scan_rust("rust/src/cli/args.rs", &args_pragma);
+    let found =
+        apply_pragmas(&scan, rules::flag_doc("rust/src/cli/args.rs", &args_pragma, &missing));
+    assert_eq!(found.len(), 1);
+    assert!(found[0].allowed, "same-line pragma must waive: {found:?}");
+}
+
+#[test]
+fn bad_pragma_positive_negative() {
+    let pos = scan_rust("rust/src/x.rs", &fixture("bad_pragma/positive.rs"));
+    let found = rules::audit_pragmas(&pos);
+    assert_eq!(found.len(), 2, "{found:?}");
+    assert!(found[0].message.contains("no reason"));
+    assert!(found[1].message.contains("unknown rule"));
+
+    let neg = scan_rust("rust/src/x.rs", &fixture("bad_pragma/negative.rs"));
+    assert!(rules::audit_pragmas(&neg).is_empty(), "a reasoned pragma audits clean");
+}
+
+// ---------------------------------------------------------- JSON report
+
+#[test]
+fn json_report_schema() {
+    // Build a report with one active and one waived finding.
+    let scan = scan_rust("rust/src/engine/x.rs", &fixture("hot_unwrap/positive.rs"));
+    let mut findings = rules::hot_unwrap(&scan);
+    findings[0].allowed = true;
+    findings[0].reason = Some("fixture waiver".to_string());
+    let report = Report { findings, files_scanned: 1 };
+
+    let text = report.to_json().to_string_pretty();
+    let doc = json::parse(&text).expect("report must be valid JSON");
+
+    assert_eq!(doc.get("tool").and_then(|t| t.as_str()), Some("static_check"));
+    let rules_arr = doc.get("rules").and_then(|r| r.as_arr()).expect("rules array");
+    assert_eq!(rules_arr.len(), RULES.len(), "every catalog rule is listed");
+    for r in rules_arr {
+        assert!(r.get("id").and_then(|v| v.as_str()).is_some());
+        let sev = r.get("severity").and_then(|v| v.as_str()).expect("severity");
+        assert!(sev == "error" || sev == "warn");
+        assert!(r.get("summary").and_then(|v| v.as_str()).is_some());
+    }
+
+    let findings = doc.get("findings").and_then(|f| f.as_arr()).expect("findings array");
+    assert_eq!(findings.len(), 2);
+    for f in findings {
+        assert!(f.get("file").and_then(|v| v.as_str()).is_some());
+        assert!(f.get("line").and_then(|v| v.as_usize()).is_some());
+        assert!(f.get("rule").and_then(|v| v.as_str()).is_some());
+        assert!(f.get("allowed").and_then(|v| v.as_bool()).is_some());
+        // reason: string when waived, null otherwise — always present
+        assert!(f.get("reason").is_some());
+    }
+    let waived = findings.iter().filter(|f| f.get("allowed").unwrap().as_bool() == Some(true));
+    assert_eq!(waived.count(), 1);
+
+    let summary = doc.get("summary").expect("summary object");
+    assert_eq!(summary.get("files_scanned").and_then(|v| v.as_usize()), Some(1));
+    assert_eq!(summary.get("total").and_then(|v| v.as_usize()), Some(2));
+    assert_eq!(summary.get("allowed").and_then(|v| v.as_usize()), Some(1));
+    assert_eq!(summary.get("active").and_then(|v| v.as_usize()), Some(1));
+    let per_rule = summary.get("per_rule").expect("per_rule object");
+    let hu = per_rule.get("hot-unwrap").expect("per-rule bucket");
+    assert_eq!(hu.get("active").and_then(|v| v.as_usize()), Some(1));
+    assert_eq!(hu.get("allowed").and_then(|v| v.as_usize()), Some(1));
+}
+
+// ------------------------------------------------------- whole-repo run
+
+#[test]
+fn repo_run_is_self_consistent() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).parent().expect("repo root").to_path_buf();
+    let report = analysis::run(&root).expect("driver must run over the real tree");
+    assert!(report.files_scanned > 20, "the walker must find the source tree");
+    assert_eq!(
+        report.findings.len(),
+        report.active() + report.allowed(),
+        "every finding is exactly one of active/allowed"
+    );
+    for f in &report.findings {
+        assert!(
+            RULES.iter().any(|r| r.id == f.rule),
+            "finding carries a cataloged rule id: {}",
+            f.render()
+        );
+        assert!(
+            f.allowed == f.reason.is_some(),
+            "waived findings carry the pragma reason (and only those): {}",
+            f.render()
+        );
+        assert!(f.line >= 1, "lines are 1-based: {}", f.render());
+    }
+    // waivers in the real tree are audited: every one carries a reason,
+    // and none of them is a bad-pragma finding
+    assert!(
+        report.findings.iter().all(|f| f.rule != "bad-pragma"),
+        "the real tree has no malformed pragmas"
+    );
+    // findings arrive file/line sorted (stable CI diffs)
+    let keys: Vec<_> =
+        report.findings.iter().map(|f| (f.file.clone(), f.line, f.rule)).collect();
+    let mut sorted = keys.clone();
+    sorted.sort();
+    assert_eq!(keys, sorted, "findings are file/line ordered");
+}

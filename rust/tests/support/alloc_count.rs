@@ -1,6 +1,10 @@
 //! Counting global-allocator shim shared by the allocation-regression
 //! test and the hot-path bench (one definition, two thresholds — the
-//! counting rule must not drift between them).
+//! counting rule must not drift between them). It lives under
+//! `tests/support/` (included via `#[path]`) rather than in the library
+//! because its `unsafe impl GlobalAlloc` is incompatible with the
+//! crate-root `#![forbid(unsafe_code)]` invariant (see
+//! `docs/STATIC_ANALYSIS.md`, rule `unsafe-code`).
 //!
 //! Install in a binary/test crate with:
 //!
